@@ -1,0 +1,172 @@
+//! Ablations of the runtime's design choices (DESIGN.md §5):
+//!
+//! 1. element-wise fusion on/off (ArBB's main JIT optimisation);
+//! 2. the `u` unroll of arbb_mxm2b (the paper's ×2 tuning knob);
+//! 3. in-place buffer donation on/off (accumulation chains);
+//! 4. parallel grain size (chunking of the O3 engine);
+//! 5. CSE on/off on a shared-subexpression program;
+//! 6. O2 vs O3-with-1-worker (pure runtime overhead of threading).
+//!
+//! `cargo bench --bench ablations -- [--full]`
+
+use arbb_rs::bench::{mflops, render_table, time_best, Series};
+use arbb_rs::coordinator::{Context, Options, OptLevel};
+use arbb_rs::euroben::mod2am::arbb_mxm2b;
+use arbb_rs::kernels::gemm_flops;
+use arbb_rs::util::XorShift64;
+
+fn full() -> bool {
+    std::env::args().any(|a| a == "--full")
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = XorShift64::new(seed);
+    (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+}
+
+fn main() {
+    let bench_t = if full() { 0.4 } else { 0.15 };
+    println!("# Ablations — DSL runtime design choices\n");
+
+    // ---------- 1. fusion on/off: element-wise chain ----------
+    {
+        let n = 1 << 20;
+        let xs = rand_vec(n, 1);
+        let chain = |ctx: &Context| {
+            let a = ctx.bind1(&xs);
+            // 6-op element-wise chain: fused = 1 memory pass, unfused = 6
+            let r = (&(&(&a + &a) * &a) - &a).abs().sqrt();
+            r.eval();
+        };
+        let mut s = Series::new("elementwise chain (1M)");
+        for (label, fusion) in [("fusion ON", true), ("fusion OFF", false)] {
+            let ctx = Context::with_options(Options { fusion, ..Default::default() });
+            let t = time_best(|| chain(&ctx), bench_t, 3);
+            println!("  {label:<12} {:>8.2} ms  ({:.1} GB/s effective)", t * 1e3, 5.0 * 8.0 * n as f64 / t * 1e-9);
+            s.push(if fusion { 1.0 } else { 0.0 }, t * 1e3);
+        }
+        println!();
+    }
+
+    // ---------- 2. u sweep for arbb_mxm2b ----------
+    {
+        let n = if full() { 512 } else { 256 };
+        let a = rand_vec(n * n, 2);
+        let b = rand_vec(n * n, 3);
+        let fl = gemm_flops(n, n, n);
+        let mut s = Series::new(format!("mxm2b n={n}"));
+        println!("  arbb_mxm2b unroll sweep (n={n}):");
+        for u in [1usize, 2, 4, 8, 16, 32, 64] {
+            let ctx = Context::serial();
+            let am = ctx.bind2(&a, n, n);
+            let bm = ctx.bind2(&b, n, n);
+            let t = time_best(|| drop(arbb_mxm2b(&ctx, &am, &bm, u).to_vec()), bench_t, 2);
+            println!("    u={u:<3} {:>10.1} MFlop/s", mflops(fl, t));
+            s.push(u as f64, mflops(fl, t));
+        }
+        print!("{}", render_table("Ablation: mxm2b u-sweep", "u", "MFlop/s", &[s]));
+    }
+
+    // ---------- 3. in-place donation ----------
+    {
+        let n = 1 << 18;
+        let steps = 32;
+        let xs = rand_vec(n, 4);
+        let run = |in_place: bool| {
+            let ctx = Context::with_options(Options { in_place, ..Default::default() });
+            let x = ctx.bind1(&xs);
+            let mut c = ctx.zeros1(n);
+            for _ in 0..steps {
+                c = &c + &x;
+                c.eval();
+            }
+            c
+        };
+        println!("\n  in-place donation ({} accumulations of 256k):", steps);
+        for (label, ip) in [("in-place ON", true), ("in-place OFF", false)] {
+            let t = time_best(|| drop(run(ip).to_vec()), bench_t, 2);
+            println!("    {label:<14} {:>8.2} ms", t * 1e3);
+        }
+    }
+
+    // ---------- 4. grain sweep (O3 engine chunking) ----------
+    {
+        let n = 1 << 20;
+        let xs = rand_vec(n, 5);
+        println!("\n  parallel grain sweep (4 workers, 1M elements):");
+        for grain in [512usize, 4096, 32768, 262144] {
+            let ctx = Context::with_options(Options {
+                opt_level: OptLevel::O3,
+                num_workers: 4,
+                grain,
+                ..Default::default()
+            });
+            let a = ctx.bind1(&xs);
+            let t = time_best(
+                || {
+                    let r = (&a * &a) + &a;
+                    r.eval();
+                },
+                bench_t,
+                3,
+            );
+            println!("    grain={grain:<7} {:>8.3} ms", t * 1e3);
+        }
+    }
+
+    // ---------- 5. CSE ----------
+    {
+        let n = 1 << 18;
+        let xs = rand_vec(n, 6);
+        let run = |cse: bool| {
+            let ctx = Context::with_options(Options { cse, ..Default::default() });
+            let a = ctx.bind1(&xs);
+            let b = ctx.bind1(&xs);
+            // (a*b) appears 4 times; CSE shares one materialisation when
+            // the planner would otherwise materialise multi-consumer temps
+            let t1 = &a * &b;
+            let t2 = &a * &b;
+            let t3 = &a * &b;
+            let t4 = &a * &b;
+            let r = &(&t1 + &t2) * &(&t3 + &t4);
+            let _ = r.to_vec();
+        };
+        println!("\n  CSE on shared subexpressions (4× a*b):");
+        for (label, cse) in [("CSE ON", true), ("CSE OFF", false)] {
+            let t = time_best(|| run(cse), bench_t, 3);
+            println!("    {label:<8} {:>8.3} ms", t * 1e3);
+        }
+    }
+
+    // ---------- 6. O2 vs O3(1 worker) ----------
+    {
+        let n = 4096;
+        let xs = rand_vec(n, 7);
+        println!("\n  dispatch overhead: O2 vs O3 with 1 worker (small input):");
+        for (label, opts) in [
+            ("O2", Options::default()),
+            (
+                "O3 P=1",
+                Options { opt_level: OptLevel::O3, num_workers: 1, ..Default::default() },
+            ),
+            (
+                "O3 P=4",
+                Options { opt_level: OptLevel::O3, num_workers: 4, ..Default::default() },
+            ),
+        ] {
+            let ctx = Context::with_options(opts);
+            let a = ctx.bind1(&xs);
+            let t = time_best(
+                || {
+                    let r = &a + &a;
+                    r.eval();
+                },
+                bench_t,
+                5,
+            );
+            println!("    {label:<8} {:>8.2} µs per dispatch", t * 1e6);
+        }
+    }
+
+    println!("\n# ablations done");
+}

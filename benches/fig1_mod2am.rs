@@ -1,0 +1,213 @@
+//! Fig 1 — mod2am (dense matrix–matrix multiply), §3.1.
+//!
+//! (a) single-core MFlop/s vs n: arbb_mxm0/1/2a/2b, MKL-analog, naive
+//!     serial (the OMP code on one thread);
+//! (b) 40-thread MFlop/s vs n (virtual-time simulation, see DESIGN.md §2);
+//! (c) scaling of arbb_mxm2b with thread count, several sizes;
+//! (d) scaling of the OpenMP port, several sizes.
+//!
+//! `cargo bench --bench fig1_mod2am -- [--figure a|b|c|d|all] [--full]`
+//! Quick mode caps n (mxm0 is per-element-dispatch slow by design).
+
+use arbb_rs::bench::{calibrate, mflops, render_table, time_best, workloads, Series};
+use arbb_rs::coordinator::{Context, Options};
+use arbb_rs::euroben::mod2am::*;
+use arbb_rs::kernels::{dgemm, dgemm_naive, gemm_flops};
+use arbb_rs::util::XorShift64;
+
+struct Args {
+    figure: String,
+    full: bool,
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut figure = "all".to_string();
+    let mut full = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--figure" => {
+                figure = argv.get(i + 1).cloned().unwrap_or_default();
+                i += 1;
+            }
+            "--full" => full = true,
+            _ => {}
+        }
+        i += 1;
+    }
+    Args { figure, full }
+}
+
+fn rand_mat(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = XorShift64::new(seed);
+    (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+}
+
+/// Memory-traffic estimate per multiply for the simple-loop scaling model.
+fn naive_bytes(n: usize) -> f64 {
+    // naive triple loop streams b rows n times + c rows n times
+    8.0 * (n as f64).powi(3) / 4.0
+}
+fn blocked_bytes(n: usize) -> f64 {
+    // packed panels: each of a,b re-read ~n/KC times
+    3.0 * 8.0 * (n as f64) * (n as f64) * (n as f64 / 256.0).max(1.0)
+}
+
+fn main() {
+    let args = parse_args();
+    let cal = calibrate();
+    let model = cal.node_model();
+    println!("# Fig 1 — mod2am | calibration: {}", cal.summary());
+    println!(
+        "# paper peak ref: 9.6 GF/s/core (WSM-EX); this box: {:.2} GF/s",
+        cal.peak_flops * 1e-9
+    );
+
+    let sizes: Vec<usize> = workloads::mod2am_sizes()
+        .into_iter()
+        .filter(|&n| args.full || n <= 576)
+        .collect();
+    let mxm0_cap = if args.full { 200 } else { 100 };
+    let bench_t = if args.full { 0.4 } else { 0.15 };
+
+    // ---------- (a) + (b): perf vs n ----------
+    if args.figure == "a" || args.figure == "b" || args.figure == "all" {
+        let mut s_mkl = Series::new("MKL~");
+        let mut s_omp1t = Series::new("OMP(1T)");
+        let mut s0 = Series::new("arbb_mxm0");
+        let mut s1 = Series::new("arbb_mxm1");
+        let mut s2a = Series::new("arbb_mxm2a");
+        let mut s2b = Series::new("arbb_mxm2b");
+        // 40-thread series (figure b)
+        let mut b_mkl = Series::new("MKL~ 40T");
+        let mut b_omp = Series::new("OMP 40T");
+        let mut b0 = Series::new("arbb_mxm0 40T");
+        let mut b2b = Series::new("arbb_mxm2b 40T");
+
+        for &n in &sizes {
+            let fl = gemm_flops(n, n, n);
+            let a = rand_mat(n, n as u64);
+            let b = rand_mat(n, n as u64 + 1);
+            let mut c = vec![0.0; n * n];
+
+            let t_mkl = time_best(|| dgemm(n, n, n, &a, &b, &mut c), bench_t, 2);
+            s_mkl.push(n as f64, mflops(fl, t_mkl));
+            b_mkl.push(n as f64, mflops(fl, model.simple_loop(t_mkl, blocked_bytes(n), 40)));
+
+            let t_omp = time_best(|| dgemm_naive(n, n, n, &a, &b, &mut c), bench_t, 2);
+            s_omp1t.push(n as f64, mflops(fl, t_omp));
+            b_omp.push(n as f64, mflops(fl, model.simple_loop(t_omp, naive_bytes(n), 40)));
+
+            // DSL variants: measure serially; record once for the simulator.
+            let ctx = Context::serial();
+            let am = ctx.bind2(&a, n, n);
+            let bm = ctx.bind2(&b, n, n);
+
+            let t1 = time_best(|| drop(arbb_mxm1(&ctx, &am, &bm).to_vec()), bench_t, 2);
+            s1.push(n as f64, mflops(fl, t1));
+            let t2a = time_best(|| drop(arbb_mxm2a(&ctx, &am, &bm).to_vec()), bench_t, 2);
+            s2a.push(n as f64, mflops(fl, t2a));
+            let t2b = time_best(|| drop(arbb_mxm2b(&ctx, &am, &bm, 8).to_vec()), bench_t, 2);
+            s2b.push(n as f64, mflops(fl, t2b));
+
+            // simulated 40T for mxm2b
+            let rctx = Context::with_options(Options { record: true, ..Default::default() });
+            let am2 = rctx.bind2(&a, n, n);
+            let bm2 = rctx.bind2(&b, n, n);
+            let _ = arbb_mxm2b(&rctx, &am2, &bm2, 8).to_vec();
+            let (recs, forces) = rctx.take_records();
+            let t40 = model.simulate(&recs, forces, 40).total_secs;
+            b2b.push(n as f64, mflops(fl, t40));
+
+            if n <= mxm0_cap {
+                let t0 = time_best(|| drop(arbb_mxm0(&ctx, &am, &bm).to_vec()), bench_t, 1);
+                s0.push(n as f64, mflops(fl, t0));
+                // mxm0 never parallelises (paper: "always runs
+                // single-threaded") — same number at 40T.
+                b0.push(n as f64, mflops(fl, t0));
+            }
+        }
+        if args.figure == "a" || args.figure == "all" {
+            print!(
+                "{}",
+                render_table(
+                    "Fig 1(a): mod2am single core",
+                    "n",
+                    "MFlop/s",
+                    &[s_mkl, s_omp1t, s0, s1, s2a, s2b],
+                )
+            );
+        }
+        if args.figure == "b" || args.figure == "all" {
+            print!(
+                "{}",
+                render_table(
+                    "Fig 1(b): mod2am 40 threads (simulated node)",
+                    "n",
+                    "MFlop/s",
+                    &[b_mkl, b_omp, b0, b2b],
+                )
+            );
+        }
+    }
+
+    // ---------- (c): arbb_mxm2b scaling ----------
+    if args.figure == "c" || args.figure == "all" {
+        let ns: Vec<usize> = if args.full { vec![512, 1024, 2048] } else { vec![128, 256, 512] };
+        let mut series = Vec::new();
+        for &n in &ns {
+            let a = rand_mat(n, 7);
+            let b = rand_mat(n, 8);
+            let rctx = Context::with_options(Options { record: true, ..Default::default() });
+            let am = rctx.bind2(&a, n, n);
+            let bm = rctx.bind2(&b, n, n);
+            let _ = arbb_mxm2b(&rctx, &am, &bm, 8).to_vec();
+            let (recs, forces) = rctx.take_records();
+            let fl = gemm_flops(n, n, n);
+            let mut s = Series::new(format!("n={n}"));
+            for &p in &workloads::thread_sweep() {
+                let t = model.simulate(&recs, forces, p).total_secs;
+                s.push(p as f64, mflops(fl, t));
+            }
+            series.push(s);
+        }
+        print!(
+            "{}",
+            render_table(
+                "Fig 1(c): arbb_mxm2b thread scaling (simulated)",
+                "threads",
+                "MFlop/s",
+                &series
+            )
+        );
+    }
+
+    // ---------- (d): OpenMP scaling ----------
+    if args.figure == "d" || args.figure == "all" {
+        let ns: Vec<usize> = if args.full { vec![512, 1024, 2048] } else { vec![128, 256, 512] };
+        let mut series = Vec::new();
+        for &n in &ns {
+            let a = rand_mat(n, 9);
+            let b = rand_mat(n, 10);
+            let mut c = vec![0.0; n * n];
+            let t1 = time_best(|| dgemm_naive(n, n, n, &a, &b, &mut c), bench_t, 2);
+            let fl = gemm_flops(n, n, n);
+            let mut s = Series::new(format!("n={n}"));
+            for &p in &workloads::thread_sweep() {
+                s.push(p as f64, mflops(fl, model.simple_loop(t1, naive_bytes(n), p)));
+            }
+            series.push(s);
+        }
+        print!(
+            "{}",
+            render_table(
+                "Fig 1(d): OpenMP thread scaling (simulated)",
+                "threads",
+                "MFlop/s",
+                &series
+            )
+        );
+    }
+    println!("\n# fig1_mod2am done");
+}

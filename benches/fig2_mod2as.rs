@@ -1,0 +1,178 @@
+//! Fig 2 + Table 1 — mod2as (sparse matrix–vector multiply), §3.2.
+//!
+//! (a) single-core MFlop/s vs n: arbb_spmv1/2, MKL-analog, OMP1, OMP2;
+//! (b) 40-thread MFlop/s (simulated node);
+//! (c) scaling of arbb_spmv2 with threads;
+//! (d) scaling of OMP2 with threads.
+//!
+//! `cargo bench --bench fig2_mod2as -- [--figure a|b|c|d|all] [--full]`
+
+use arbb_rs::bench::{calibrate, mflops, render_table, time_best, workloads, Series};
+use arbb_rs::coordinator::{Context, Options};
+use arbb_rs::euroben::mod2as::*;
+use arbb_rs::kernels::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt};
+use arbb_rs::sparse::random_csr;
+
+fn parse_args() -> (String, bool) {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut figure = "all".to_string();
+    let mut full = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--figure" => {
+                figure = argv.get(i + 1).cloned().unwrap_or_default();
+                i += 1;
+            }
+            "--full" => full = true,
+            _ => {}
+        }
+        i += 1;
+    }
+    (figure, full)
+}
+
+/// Bytes per spmv for the scaling model: vals 8B + indx 8B + gather 8B
+/// per nnz, plus in/out vectors.
+fn spmv_bytes(nnz: usize, n: usize) -> f64 {
+    24.0 * nnz as f64 + 16.0 * n as f64
+}
+
+fn main() {
+    let (figure, full) = parse_args();
+    let cal = calibrate();
+    let model = cal.node_model();
+    println!("# Fig 2 — mod2as | calibration: {}", cal.summary());
+
+    // Table 1 grid (quick mode: n ≤ 2000)
+    let inputs: Vec<(usize, f64)> = workloads::mod2as_inputs()
+        .into_iter()
+        .filter(|&(n, _)| full || n <= 2000)
+        .collect();
+    let bench_t = if full { 0.3 } else { 0.1 };
+
+    if figure == "a" || figure == "b" || figure == "all" {
+        let mut s_mkl = Series::new("MKL~");
+        let mut s_o1 = Series::new("OMP1(1T)");
+        let mut s_o2 = Series::new("OMP2(1T)");
+        let mut s_a1 = Series::new("arbb_spmv1");
+        let mut s_a2 = Series::new("arbb_spmv2");
+        let mut b_mkl = Series::new("MKL~ 40T");
+        let mut b_o2 = Series::new("OMP2 40T");
+        let mut b_a2 = Series::new("arbb_spmv2 40T");
+
+        for &(n, fill) in &inputs {
+            let m = random_csr(n, fill, n as u64);
+            let x = m.random_x(3);
+            let fl = spmv_flops(&m);
+            let mut out = vec![0.0; n];
+
+            let t = time_best(|| spmv_opt(&m, &x, &mut out), bench_t, 3);
+            s_mkl.push(n as f64, mflops(fl, t));
+            b_mkl.push(n as f64, mflops(fl, model.simple_loop(t, spmv_bytes(m.nnz(), n), 40)));
+
+            let t = time_best(|| spmv_omp1_body(&m, &x, &mut out), bench_t, 3);
+            s_o1.push(n as f64, mflops(fl, t));
+            let t2 = time_best(|| spmv_omp2_body(&m, &x, &mut out), bench_t, 3);
+            s_o2.push(n as f64, mflops(fl, t2));
+            b_o2.push(n as f64, mflops(fl, model.simple_loop(t2, spmv_bytes(m.nnz(), n), 40)));
+
+            let ctx = Context::serial();
+            let a = bind_csr(&ctx, &m);
+            let xv = ctx.bind1(&x);
+            let t = time_best(|| drop(arbb_spmv1(&ctx, &a, &xv).to_vec()), bench_t, 3);
+            s_a1.push(n as f64, mflops(fl, t));
+            let t = time_best(|| drop(arbb_spmv2(&ctx, &a, &xv).to_vec()), bench_t, 3);
+            s_a2.push(n as f64, mflops(fl, t));
+
+            let rctx = Context::with_options(Options { record: true, ..Default::default() });
+            let ar = bind_csr(&rctx, &m);
+            let xr = rctx.bind1(&x);
+            let _ = arbb_spmv2(&rctx, &ar, &xr).to_vec();
+            let (recs, forces) = rctx.take_records();
+            let t40 = model.simulate(&recs, forces, 40).total_secs;
+            b_a2.push(n as f64, mflops(fl, t40));
+        }
+        if figure == "a" || figure == "all" {
+            print!(
+                "{}",
+                render_table(
+                    "Fig 2(a): mod2as single core (Table 1 inputs)",
+                    "n",
+                    "MFlop/s",
+                    &[s_mkl, s_o1, s_o2, s_a1, s_a2],
+                )
+            );
+        }
+        if figure == "b" || figure == "all" {
+            print!(
+                "{}",
+                render_table(
+                    "Fig 2(b): mod2as 40 threads (simulated node)",
+                    "n",
+                    "MFlop/s",
+                    &[b_mkl, b_o2, b_a2],
+                )
+            );
+        }
+    }
+
+    if figure == "c" || figure == "all" {
+        let grid: Vec<(usize, f64)> = if full {
+            vec![(1000, 5.0), (4096, 3.5), (10000, 5.0), (10240, 5.72)]
+        } else {
+            vec![(512, 4.0), (1024, 5.5), (2000, 7.5)]
+        };
+        let mut series = Vec::new();
+        for &(n, fill) in &grid {
+            let m = random_csr(n, fill, 7);
+            let x = m.random_x(9);
+            let rctx = Context::with_options(Options { record: true, ..Default::default() });
+            let a = bind_csr(&rctx, &m);
+            let xv = rctx.bind1(&x);
+            let _ = arbb_spmv2(&rctx, &a, &xv).to_vec();
+            let (recs, forces) = rctx.take_records();
+            let fl = spmv_flops(&m);
+            let mut s = Series::new(format!("n={n}"));
+            for &p in &workloads::thread_sweep() {
+                s.push(p as f64, mflops(fl, model.simulate(&recs, forces, p).total_secs));
+            }
+            series.push(s);
+        }
+        print!(
+            "{}",
+            render_table(
+                "Fig 2(c): arbb_spmv2 thread scaling (simulated)",
+                "threads",
+                "MFlop/s",
+                &series
+            )
+        );
+    }
+
+    if figure == "d" || figure == "all" {
+        let grid: Vec<(usize, f64)> = if full {
+            vec![(1000, 5.0), (4096, 3.5), (10000, 5.0)]
+        } else {
+            vec![(512, 4.0), (1024, 5.5), (2000, 7.5)]
+        };
+        let mut series = Vec::new();
+        for &(n, fill) in &grid {
+            let m = random_csr(n, fill, 7);
+            let x = m.random_x(9);
+            let mut out = vec![0.0; n];
+            let t1 = time_best(|| spmv_omp2_body(&m, &x, &mut out), bench_t, 3);
+            let fl = spmv_flops(&m);
+            let mut s = Series::new(format!("n={n}"));
+            for &p in &workloads::thread_sweep() {
+                s.push(p as f64, mflops(fl, model.simple_loop(t1, spmv_bytes(m.nnz(), n), p)));
+            }
+            series.push(s);
+        }
+        print!(
+            "{}",
+            render_table("Fig 2(d): OMP2 thread scaling (simulated)", "threads", "MFlop/s", &series)
+        );
+    }
+    println!("\n# fig2_mod2as done");
+}

@@ -1,0 +1,131 @@
+//! Fig 5 — mod2f (1-D complex FFT), §3.3.
+//!
+//! (a) single-core MFlop/s vs n: MKL-analog (planned), CFFT4-analog
+//!     (radix-4+2), simple radix-2, serial split-stream, ArBB (DSL)
+//!     split-stream;
+//! (b) scaling of the ArBB port with thread count (simulated): the
+//!     paper's signature result is that performance *drops* with more
+//!     threads except at the largest sizes.
+//!
+//! `cargo bench --bench fig5_fft -- [--figure a|b|all] [--full]`
+
+use arbb_rs::bench::{calibrate, mflops, render_table, time_best, workloads, Series};
+use arbb_rs::coordinator::{Context, CplxV, Options};
+use arbb_rs::euroben::mod2f;
+use arbb_rs::fftlib::{fft_flops, radix2, radix4, splitstream};
+use arbb_rs::kernels::fft_planned;
+use arbb_rs::util::XorShift64;
+
+fn parse_args() -> (String, bool) {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut figure = "all".to_string();
+    let mut full = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--figure" => {
+                figure = argv.get(i + 1).cloned().unwrap_or_default();
+                i += 1;
+            }
+            "--full" => full = true,
+            _ => {}
+        }
+        i += 1;
+    }
+    (figure, full)
+}
+
+fn rand_sig(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift64::new(seed);
+    ((0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect(), (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+}
+
+fn main() {
+    let (figure, full) = parse_args();
+    let cal = calibrate();
+    let model = cal.node_model();
+    println!("# Fig 5 — mod2f | calibration: {}", cal.summary());
+
+    let sizes: Vec<usize> = workloads::mod2f_sizes()
+        .into_iter()
+        .filter(|&n| full || n <= (1 << 16))
+        .collect();
+    let bench_t = if full { 0.3 } else { 0.1 };
+
+    if figure == "a" || figure == "all" {
+        let mut s_mkl = Series::new("MKL~ planned");
+        let mut s_r4 = Series::new("CFFT4~");
+        let mut s_r2 = Series::new("radix-2");
+        let mut s_ss = Series::new("splitstream");
+        let mut s_arbb = Series::new("arbb (DSL)");
+        for &n in &sizes {
+            let (re, im) = rand_sig(n, n as u64);
+            let fl = fft_flops(n);
+            let t = time_best(|| drop(fft_planned(&re, &im)), bench_t, 2);
+            s_mkl.push(n as f64, mflops(fl, t));
+            let t = time_best(|| drop(radix4::fft(&re, &im)), bench_t, 2);
+            s_r4.push(n as f64, mflops(fl, t));
+            let t = time_best(|| drop(radix2::fft(&re, &im)), bench_t, 2);
+            s_r2.push(n as f64, mflops(fl, t));
+            let t = time_best(|| drop(splitstream::fft(&re, &im)), bench_t, 2);
+            s_ss.push(n as f64, mflops(fl, t));
+
+            let ctx = Context::serial();
+            let plan = mod2f::plan(&ctx, n);
+            let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+            let t = time_best(
+                || {
+                    let o = mod2f::arbb_fft(&ctx, &plan, &data);
+                    o.re.eval();
+                },
+                bench_t,
+                2,
+            );
+            s_arbb.push(n as f64, mflops(fl, t));
+        }
+        print!(
+            "{}",
+            render_table(
+                "Fig 5(a): mod2f single core",
+                "n",
+                "MFlop/s",
+                &[s_mkl, s_r4, s_r2, s_ss, s_arbb],
+            )
+        );
+    }
+
+    if figure == "b" || figure == "all" {
+        let ns: Vec<usize> = if full {
+            vec![1 << 10, 1 << 14, 1 << 18, 1 << 20]
+        } else {
+            vec![1 << 10, 1 << 13, 1 << 16]
+        };
+        let mut series = Vec::new();
+        for &n in &ns {
+            let (re, im) = rand_sig(n, 3);
+            let rctx = Context::with_options(Options { record: true, ..Default::default() });
+            let plan = mod2f::plan(&rctx, n);
+            let data = CplxV { re: rctx.bind1(&re), im: rctx.bind1(&im) };
+            let o = mod2f::arbb_fft(&rctx, &plan, &data);
+            o.re.eval();
+            o.im.eval();
+            let (recs, forces) = rctx.take_records();
+            let fl = fft_flops(n);
+            let mut s = Series::new(format!("n=2^{}", n.trailing_zeros()));
+            for &p in &workloads::thread_sweep() {
+                s.push(p as f64, mflops(fl, model.simulate(&recs, forces, p).total_secs));
+            }
+            series.push(s);
+        }
+        print!(
+            "{}",
+            render_table(
+                "Fig 5(b): arbb mod2f thread scaling (simulated)",
+                "threads",
+                "MFlop/s",
+                &series
+            )
+        );
+    }
+    println!("\n# fig5_fft done");
+}

@@ -1,0 +1,129 @@
+//! Fig 7 + Table 2 — conjugate gradients on banded SPD systems, §3.4.
+//!
+//! (a) single-core performance per configuration (Table 2's 18 (n, bw)
+//!     pairs): serial CG, CG+MKL-analog spmv, CG+arbb_spmv1, CG+arbb_spmv2;
+//! (b) thread scaling of CG+arbb_spmv2 for configurations 13–18
+//!     (n = 1024, bw ∈ {3, 31, 63, 127, 255, 511}) — the paper sees
+//!     scaling only for the larger bandwidths (up to ~7 threads).
+//!
+//! `cargo bench --bench fig7_cg -- [--figure a|b|all] [--full]`
+
+use arbb_rs::bench::{calibrate, mflops, render_table, time_best, workloads, Series};
+use arbb_rs::coordinator::{Context, Options};
+use arbb_rs::euroben::cg::{arbb_cg, SpmvVariant};
+use arbb_rs::euroben::mod2as::bind_csr;
+use arbb_rs::solvers::{cg_mkl, cg_serial};
+use arbb_rs::sparse::banded_spd;
+use arbb_rs::util::XorShift64;
+
+fn parse_args() -> (String, bool) {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut figure = "all".to_string();
+    let mut full = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--figure" => {
+                figure = argv.get(i + 1).cloned().unwrap_or_default();
+                i += 1;
+            }
+            "--full" => full = true,
+            _ => {}
+        }
+        i += 1;
+    }
+    (figure, full)
+}
+
+const STOP: f64 = 1e-14;
+
+fn cg_flops(iters: usize, nnz: usize, n: usize) -> f64 {
+    iters as f64 * (2.0 * nnz as f64 + 10.0 * n as f64)
+}
+
+fn main() {
+    let (figure, full) = parse_args();
+    let cal = calibrate();
+    let model = cal.node_model();
+    println!("# Fig 7 — CG on banded SPD (Table 2) | calibration: {}", cal.summary());
+    let bench_t = if full { 0.3 } else { 0.1 };
+
+    if figure == "a" || figure == "all" {
+        let mut s_ser = Series::new("serial CG");
+        let mut s_mkl = Series::new("CG+MKL~");
+        let mut s_v1 = Series::new("CG+arbb_spmv1");
+        let mut s_v2 = Series::new("CG+arbb_spmv2");
+        for &(conf, n, bw) in &workloads::cg_configs() {
+            let m = banded_spd(n, bw, (n * 31 + bw) as u64);
+            let mut rng = XorShift64::new(conf as u64);
+            let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let max_it = 4 * n;
+
+            let res = cg_serial(&m, &b, STOP, max_it);
+            let fl = cg_flops(res.iterations, m.nnz(), n);
+            let t = time_best(|| drop(cg_serial(&m, &b, STOP, max_it)), bench_t, 2);
+            s_ser.push(conf as f64, mflops(fl, t));
+
+            let t = time_best(|| drop(cg_mkl(&m, &b, STOP, max_it)), bench_t, 2);
+            s_mkl.push(conf as f64, mflops(fl, t));
+
+            let ctx = Context::serial();
+            let a = bind_csr(&ctx, &m);
+            let t = time_best(
+                || drop(arbb_cg(&ctx, &a, &b, STOP, max_it, SpmvVariant::V1)),
+                bench_t,
+                1,
+            );
+            s_v1.push(conf as f64, mflops(fl, t));
+            let t = time_best(
+                || drop(arbb_cg(&ctx, &a, &b, STOP, max_it, SpmvVariant::V2)),
+                bench_t,
+                1,
+            );
+            s_v2.push(conf as f64, mflops(fl, t));
+        }
+        print!(
+            "{}",
+            render_table(
+                "Fig 7(a): CG single core per Table-2 configuration",
+                "conf",
+                "MFlop/s",
+                &[s_ser, s_mkl, s_v1, s_v2],
+            )
+        );
+    }
+
+    if figure == "b" || figure == "all" {
+        // configurations 13–18: n=1024, growing bandwidth
+        let confs: Vec<(usize, usize, usize)> = workloads::cg_configs()
+            .into_iter()
+            .filter(|&(c, _, _)| (13..=18).contains(&c))
+            .collect();
+        let mut series = Vec::new();
+        for &(conf, n, bw) in &confs {
+            let m = banded_spd(n, bw, (n * 31 + bw) as u64);
+            let mut rng = XorShift64::new(conf as u64);
+            let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let rctx = Context::with_options(Options { record: true, ..Default::default() });
+            let a = bind_csr(&rctx, &m);
+            let res = arbb_cg(&rctx, &a, &b, STOP, 4 * n, SpmvVariant::V2);
+            let (recs, forces) = rctx.take_records();
+            let fl = cg_flops(res.iterations, m.nnz(), n);
+            let mut s = Series::new(format!("bw={bw}"));
+            for &p in &workloads::thread_sweep() {
+                s.push(p as f64, mflops(fl, model.simulate(&recs, forces, p).total_secs));
+            }
+            series.push(s);
+        }
+        print!(
+            "{}",
+            render_table(
+                "Fig 7(b): CG+arbb_spmv2 thread scaling, conf 13-18 (simulated)",
+                "threads",
+                "MFlop/s",
+                &series
+            )
+        );
+    }
+    println!("\n# fig7_cg done");
+}

@@ -1,0 +1,277 @@
+//! END-TO-END driver: the full three-layer system on a real small
+//! workload.
+//!
+//! Proves all layers compose (DESIGN.md §4, row E2E):
+//!
+//!  1. machine calibration (peak / bandwidth / dispatch);
+//!  2. all four EuroBen kernels through the **DSL** (L3), serial and
+//!     threaded, verified against the native references;
+//!  3. the same four kernels through the **AOT path** — JAX/Pallas
+//!     artifacts loaded and executed via the XLA **PJRT** client (L2+L1,
+//!     built by `make artifacts`) — cross-checked against the DSL
+//!     results;
+//!  4. a paper-style summary table: MFlop/s and % of calibrated peak per
+//!     kernel per path.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_euroben
+//! ```
+
+use arbb_rs::bench::{calibrate, mflops, time_best};
+use arbb_rs::coordinator::{Context, CplxV};
+use arbb_rs::euroben::{cg as acg, mod2am, mod2as, mod2f};
+use arbb_rs::fftlib::{fft_flops, splitstream::tangle_indices};
+use arbb_rs::kernels::gemm_flops;
+use arbb_rs::runtime::{Input, XlaRuntime};
+use arbb_rs::sparse::{banded_spd, random_csr, Csr};
+use arbb_rs::util::{assert_allclose, XorShift64};
+
+struct Row {
+    kernel: &'static str,
+    path: &'static str,
+    mflops: f64,
+    pct_peak: f64,
+    checked: &'static str,
+}
+
+fn csr_to_ell(m: &Csr, k_pad: usize) -> (Vec<f64>, Vec<i32>) {
+    let n = m.nrows;
+    let mut vals = vec![0.0; n * k_pad];
+    let mut cols = vec![0i32; n * k_pad];
+    for r in 0..n {
+        let (s, e) = (m.rowp[r] as usize, m.rowp[r + 1] as usize);
+        for (slot, k) in (s..e).enumerate() {
+            vals[r * k_pad + slot] = m.vals[k];
+            cols[r * k_pad + slot] = m.indx[k] as i32;
+        }
+    }
+    (vals, cols)
+}
+
+fn main() {
+    println!("=== e2e_euroben: full-stack EuroBen run ===\n");
+    println!("[1/4] calibrating machine …");
+    let cal = calibrate();
+    println!("      {}\n", cal.summary());
+    let peak = cal.peak_flops;
+    let mut rows: Vec<Row> = Vec::new();
+
+    // ---------------- mod2am ----------------
+    println!("[2/4] DSL path (L3 coordinator) …");
+    let n = 256;
+    let mut rng = XorShift64::new(1);
+    let ah: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let bh: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let want_mxm = mod2am::reference(&ah, &bh, n);
+    let ctx = Context::serial();
+    let (a, b) = (ctx.bind2(&ah, n, n), ctx.bind2(&bh, n, n));
+    let got = mod2am::arbb_mxm2b(&ctx, &a, &b, 8).to_vec();
+    assert_allclose(&got, &want_mxm, 1e-9, 1e-10, "e2e mxm dsl");
+    let t = time_best(|| drop(mod2am::arbb_mxm2b(&ctx, &a, &b, 8).to_vec()), 0.3, 2);
+    let mf = mflops(gemm_flops(n, n, n), t);
+    rows.push(Row {
+        kernel: "mod2am n=256",
+        path: "DSL arbb_mxm2b",
+        mflops: mf,
+        pct_peak: 100.0 * mf * 1e6 / peak,
+        checked: "vs blocked dgemm",
+    });
+
+    // ---------------- mod2as ----------------
+    let sn = 512;
+    let sm = random_csr(sn, 100.0 * 16.0 / sn as f64, 11); // ~16 nnz/row
+    let x = sm.random_x(3);
+    let want_spmv = sm.spmv_alloc(&x);
+    let ac = mod2as::bind_csr(&ctx, &sm);
+    let xv = ctx.bind1(&x);
+    let got = mod2as::arbb_spmv2(&ctx, &ac, &xv).to_vec();
+    assert_allclose(&got, &want_spmv, 1e-11, 1e-12, "e2e spmv dsl");
+    let t = time_best(|| drop(mod2as::arbb_spmv2(&ctx, &ac, &xv).to_vec()), 0.2, 3);
+    let mf = mflops(2.0 * sm.nnz() as f64, t);
+    rows.push(Row {
+        kernel: "mod2as n=512",
+        path: "DSL arbb_spmv2",
+        mflops: mf,
+        pct_peak: 100.0 * mf * 1e6 / peak,
+        checked: "vs serial CSR",
+    });
+
+    // ---------------- mod2f ----------------
+    let fn_ = 1024;
+    let re: Vec<f64> = (0..fn_).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let im: Vec<f64> = (0..fn_).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let (wre, wim) = arbb_rs::kernels::fft_planned(&re, &im);
+    let plan = mod2f::plan(&ctx, fn_);
+    let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+    let out = mod2f::arbb_fft(&ctx, &plan, &data);
+    assert_allclose(&out.re.to_vec(), &wre, 1e-8, 1e-8, "e2e fft dsl");
+    let t = time_best(
+        || {
+            let o = mod2f::arbb_fft(&ctx, &plan, &data);
+            o.re.eval();
+        },
+        0.2,
+        3,
+    );
+    let mf = mflops(fft_flops(fn_), t);
+    rows.push(Row {
+        kernel: "mod2f n=1024",
+        path: "DSL split-stream",
+        mflops: mf,
+        pct_peak: 100.0 * mf * 1e6 / peak,
+        checked: "vs planned FFT",
+    });
+
+    // ---------------- cg ----------------
+    let cn = 256;
+    let cbw = 7; // fits the artifact pad k=16
+    let cm = banded_spd(cn, cbw, 5);
+    let cb: Vec<f64> = (0..cn).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let native = arbb_rs::solvers::cg_serial(&cm, &cb, 1e-16, 4 * cn);
+    let acm = mod2as::bind_csr(&ctx, &cm);
+    let dsl = acg::arbb_cg(&ctx, &acm, &cb, 1e-16, 4 * cn, acg::SpmvVariant::V2);
+    assert!(dsl.converged);
+    assert_allclose(&dsl.x, &native.x, 1e-8, 1e-10, "e2e cg dsl");
+    let t = time_best(
+        || drop(acg::arbb_cg(&ctx, &acm, &cb, 1e-16, 4 * cn, acg::SpmvVariant::V2)),
+        0.3,
+        2,
+    );
+    let cg_flops = (dsl.iterations as f64) * (2.0 * cm.nnz() as f64 + 10.0 * cn as f64);
+    let mf = mflops(cg_flops, t);
+    rows.push(Row {
+        kernel: "cg n=256 bw=7",
+        path: "DSL CG+spmv2",
+        mflops: mf,
+        pct_peak: 100.0 * mf * 1e6 / peak,
+        checked: "vs serial CG",
+    });
+    println!("      4 kernels verified on the DSL path\n");
+
+    // ---------------- AOT / PJRT path ----------------
+    println!("[3/4] AOT path (JAX/Pallas → HLO → PJRT) …");
+    match XlaRuntime::open_default() {
+        Err(e) => {
+            println!("      !! artifacts unavailable ({e}) — run `make artifacts`.");
+            println!("      Skipping the PJRT half of the e2e (DSL half verified).");
+        }
+        Ok(rt) => {
+            println!("      platform: {}", rt.platform());
+            // mxm
+            let l = rt.load("mxm_n256").expect("mxm artifact");
+            let out = l.run_f64(&[(&ah, &[n, n]), (&bh, &[n, n])]).expect("mxm run");
+            assert_allclose(&out[0], &want_mxm, 1e-9, 1e-10, "e2e mxm pjrt");
+            let t = time_best(|| drop(l.run_f64(&[(&ah, &[n, n]), (&bh, &[n, n])])), 0.3, 2);
+            let mf = mflops(gemm_flops(n, n, n), t);
+            rows.push(Row {
+                kernel: "mod2am n=256",
+                path: "PJRT pallas mxm",
+                mflops: mf,
+                pct_peak: 100.0 * mf * 1e6 / peak,
+                checked: "vs DSL result",
+            });
+
+            // spmv (pad rows to k=32)
+            let l = rt.load("spmv_n512_k32").expect("spmv artifact");
+            let k = l.artifact.param_usize("k").unwrap();
+            let (vals, cols) = csr_to_ell(&sm, k);
+            let out = l
+                .run(&[
+                    Input::F64(&vals, &[sn, k]),
+                    Input::I32(&cols, &[sn, k]),
+                    Input::F64(&x, &[sn]),
+                ])
+                .expect("spmv run");
+            assert_allclose(&out[0], &want_spmv, 1e-11, 1e-12, "e2e spmv pjrt");
+            let t = time_best(
+                || {
+                    drop(l.run(&[
+                        Input::F64(&vals, &[sn, k]),
+                        Input::I32(&cols, &[sn, k]),
+                        Input::F64(&x, &[sn]),
+                    ]))
+                },
+                0.2,
+                3,
+            );
+            let mf = mflops(2.0 * sm.nnz() as f64, t);
+            rows.push(Row {
+                kernel: "mod2as n=512",
+                path: "PJRT pallas spmv",
+                mflops: mf,
+                pct_peak: 100.0 * mf * 1e6 / peak,
+                checked: "vs DSL result",
+            });
+
+            // fft
+            let l = rt.load("fft_n1024").expect("fft artifact");
+            let idx = tangle_indices(fn_);
+            let tre: Vec<f64> = idx.iter().map(|&i| re[i]).collect();
+            let tim: Vec<f64> = idx.iter().map(|&i| im[i]).collect();
+            let out = l.run_f64(&[(&tre, &[fn_]), (&tim, &[fn_])]).expect("fft run");
+            assert_allclose(&out[0], &wre, 1e-8, 1e-8, "e2e fft pjrt");
+            assert_allclose(&out[1], &wim, 1e-8, 1e-8, "e2e fft pjrt im");
+            let t = time_best(|| drop(l.run_f64(&[(&tre, &[fn_]), (&tim, &[fn_])])), 0.2, 3);
+            let mf = mflops(fft_flops(fn_), t);
+            rows.push(Row {
+                kernel: "mod2f n=1024",
+                path: "PJRT pallas fft",
+                mflops: mf,
+                pct_peak: 100.0 * mf * 1e6 / peak,
+                checked: "vs DSL result",
+            });
+
+            // cg (20 fixed iterations)
+            let l = rt.load("cg_n256_k16_i20").expect("cg artifact");
+            let k = l.artifact.param_usize("k").unwrap();
+            let (vals, cols) = csr_to_ell(&cm, k);
+            let out = l
+                .run(&[
+                    Input::F64(&vals, &[cn, k]),
+                    Input::I32(&cols, &[cn, k]),
+                    Input::F64(&cb, &[cn]),
+                ])
+                .expect("cg run");
+            let r2 = out[1][0];
+            assert!(r2 < 1e-10, "pjrt cg residual {r2}");
+            let resid = arbb_rs::solvers::residual_norm(&cm, &out[0], &cb);
+            assert!(resid < 1e-5, "pjrt cg |Ax-b| {resid}");
+            let t = time_best(
+                || {
+                    drop(l.run(&[
+                        Input::F64(&vals, &[cn, k]),
+                        Input::I32(&cols, &[cn, k]),
+                        Input::F64(&cb, &[cn]),
+                    ]))
+                },
+                0.3,
+                2,
+            );
+            let flops20 = 20.0 * (2.0 * cm.nnz() as f64 + 10.0 * cn as f64);
+            let mf = mflops(flops20, t);
+            rows.push(Row {
+                kernel: "cg n=256 (20it)",
+                path: "PJRT jax cg",
+                mflops: mf,
+                pct_peak: 100.0 * mf * 1e6 / peak,
+                checked: "residual<1e-10",
+            });
+            println!("      4 artifacts verified on the PJRT path\n");
+        }
+    }
+
+    // ---------------- summary ----------------
+    println!("[4/4] summary (calibrated peak = {:.2} GFlop/s)\n", peak * 1e-9);
+    println!(
+        "  {:<16} {:<18} {:>12} {:>8}  {}",
+        "kernel", "path", "MFlop/s", "%peak", "verification"
+    );
+    println!("  {}", "-".repeat(72));
+    for r in &rows {
+        println!(
+            "  {:<16} {:<18} {:>12.1} {:>7.2}%  {}",
+            r.kernel, r.path, r.mflops, r.pct_peak, r.checked
+        );
+    }
+    println!("\ne2e_euroben OK — record these rows in EXPERIMENTS.md (E2E)");
+}

@@ -1,0 +1,71 @@
+//! mod2am — dense matrix–matrix multiply (§3.1): all four DSL versions
+//! vs the MKL-analog and the naive serial loop, on one size.
+//!
+//! ```sh
+//! cargo run --release --example mod2am -- [n]
+//! ```
+
+use arbb_rs::bench::{mflops, time_best};
+use arbb_rs::coordinator::Context;
+use arbb_rs::euroben::mod2am::*;
+use arbb_rs::kernels::{dgemm, dgemm_naive, gemm_flops};
+use arbb_rs::util::{assert_allclose, XorShift64};
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let mut rng = XorShift64::new(42);
+    let ah: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let bh: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let flops = gemm_flops(n, n, n);
+
+    println!("mod2am n={n} ({} MFlop per multiply)\n", (flops * 1e-6) as u64);
+
+    // references
+    let mut want = vec![0.0; n * n];
+    let t_mkl = time_best(|| dgemm(n, n, n, &ah, &bh, &mut want), 0.3, 2);
+    let mut naive = vec![0.0; n * n];
+    let t_omp = time_best(|| dgemm_naive(n, n, n, &ah, &bh, &mut naive), 0.3, 2);
+    assert_allclose(&naive, &want, 1e-10, 1e-11, "naive vs blocked");
+
+    println!("  {:<22} {:>10.1} MFlop/s", "native blocked (MKL~)", mflops(flops, t_mkl));
+    println!("  {:<22} {:>10.1} MFlop/s", "naive serial (OMP 1T)", mflops(flops, t_omp));
+
+    let ctx = Context::serial();
+    let a = ctx.bind2(&ah, n, n);
+    let b = ctx.bind2(&bh, n, n);
+
+    let variants: Vec<(&str, Box<dyn Fn() -> Vec<f64>>)> = vec![
+        ("arbb_mxm1", Box::new(|| arbb_mxm1(&ctx, &a, &b).to_vec())),
+        ("arbb_mxm2a", Box::new(|| arbb_mxm2a(&ctx, &a, &b).to_vec())),
+        ("arbb_mxm2b(u=8)", Box::new(|| arbb_mxm2b(&ctx, &a, &b, 8).to_vec())),
+    ];
+    for (name, f) in &variants {
+        let got = f();
+        assert_allclose(&got, &want, 1e-9, 1e-10, name);
+        let t = time_best(
+            || {
+                let _ = f();
+            },
+            0.3,
+            2,
+        );
+        println!("  {:<22} {:>10.1} MFlop/s", name, mflops(flops, t));
+    }
+
+    // mxm0 only for small n (per-element dispatch, like the paper's slow curve)
+    if n <= 128 {
+        let got = arbb_mxm0(&ctx, &a, &b).to_vec();
+        assert_allclose(&got, &want, 1e-9, 1e-10, "arbb_mxm0");
+        let t = time_best(
+            || {
+                let _ = arbb_mxm0(&ctx, &a, &b).to_vec();
+            },
+            0.3,
+            1,
+        );
+        println!("  {:<22} {:>10.1} MFlop/s", "arbb_mxm0", mflops(flops, t));
+    } else {
+        println!("  {:<22} {:>10}", "arbb_mxm0", "(skipped, n>128)");
+    }
+    println!("\nmod2am OK — see `cargo bench --bench fig1_mod2am` for the full figure");
+}

@@ -1,0 +1,66 @@
+//! mod2as — sparse matrix–vector multiply (§3.2): arbb_spmv1/2 vs the
+//! MKL-analog and both OpenMP loop bodies.
+//!
+//! ```sh
+//! cargo run --release --example mod2as -- [n] [fill%]
+//! ```
+
+use arbb_rs::bench::{mflops, time_best};
+use arbb_rs::coordinator::Context;
+use arbb_rs::euroben::mod2as::*;
+use arbb_rs::kernels::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt};
+use arbb_rs::sparse::random_csr;
+use arbb_rs::util::assert_allclose;
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
+    let fill: f64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(4.5);
+    let m = random_csr(n, fill, 42);
+    let x = m.random_x(7);
+    let flops = spmv_flops(&m);
+    println!(
+        "mod2as n={n} fill={:.2}% nnz={} contiguity(≥2)={:.1}%\n",
+        m.fill_percent(),
+        m.nnz(),
+        100.0 * m.contiguity(2)
+    );
+
+    let want = m.spmv_alloc(&x);
+    let mut out = vec![0.0; n];
+
+    let t = time_best(|| spmv_opt(&m, &x, &mut out), 0.2, 3);
+    assert_allclose(&out, &want, 1e-12, 1e-13, "mkl");
+    println!("  {:<16} {:>10.1} MFlop/s", "mkl_dcsrmv~", mflops(flops, t));
+
+    let t = time_best(|| spmv_omp1_body(&m, &x, &mut out), 0.2, 3);
+    println!("  {:<16} {:>10.1} MFlop/s", "OMP1 body", mflops(flops, t));
+    let t = time_best(|| spmv_omp2_body(&m, &x, &mut out), 0.2, 3);
+    println!("  {:<16} {:>10.1} MFlop/s", "OMP2 body", mflops(flops, t));
+
+    let ctx = Context::serial();
+    let a = bind_csr(&ctx, &m);
+    let xv = ctx.bind1(&x);
+    let got = arbb_spmv1(&ctx, &a, &xv).to_vec();
+    assert_allclose(&got, &want, 1e-12, 1e-13, "spmv1");
+    let t = time_best(
+        || {
+            let _ = arbb_spmv1(&ctx, &a, &xv).to_vec();
+        },
+        0.2,
+        3,
+    );
+    println!("  {:<16} {:>10.1} MFlop/s", "arbb_spmv1", mflops(flops, t));
+
+    let got = arbb_spmv2(&ctx, &a, &xv).to_vec();
+    assert_allclose(&got, &want, 1e-12, 1e-13, "spmv2");
+    let t = time_best(
+        || {
+            let _ = arbb_spmv2(&ctx, &a, &xv).to_vec();
+        },
+        0.2,
+        3,
+    );
+    println!("  {:<16} {:>10.1} MFlop/s", "arbb_spmv2", mflops(flops, t));
+
+    println!("\nmod2as OK — see `cargo bench --bench fig2_mod2as` for the full figure");
+}

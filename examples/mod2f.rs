@@ -1,0 +1,82 @@
+//! mod2f — 1-D complex FFT (§3.3): the split-stream DSL port vs the
+//! serial radix-2, serial split-stream, CFFT4-analog and the planned
+//! (MKL-analog) FFT.
+//!
+//! ```sh
+//! cargo run --release --example mod2f -- [log2n]
+//! ```
+
+use arbb_rs::bench::{mflops, time_best};
+use arbb_rs::coordinator::{Context, CplxV};
+use arbb_rs::euroben::mod2f;
+use arbb_rs::fftlib::{fft_flops, radix2, radix4, splitstream};
+use arbb_rs::kernels::fft_planned;
+use arbb_rs::util::{assert_allclose, XorShift64};
+
+fn main() {
+    let logn: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(14);
+    let n = 1usize << logn;
+    let mut rng = XorShift64::new(42);
+    let re: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let im: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let flops = fft_flops(n);
+    println!("mod2f n={n} (2^{logn})\n");
+
+    let (wre, wim) = fft_planned(&re, &im);
+
+    let t = time_best(
+        || {
+            let _ = fft_planned(&re, &im);
+        },
+        0.2,
+        3,
+    );
+    println!("  {:<20} {:>10.1} MFlop/s", "MKL~ (planned)", mflops(flops, t));
+
+    let (r4re, _) = radix4::fft(&re, &im);
+    assert_allclose(&r4re, &wre, 1e-8, 1e-8, "radix4");
+    let t = time_best(
+        || {
+            let _ = radix4::fft(&re, &im);
+        },
+        0.2,
+        3,
+    );
+    println!("  {:<20} {:>10.1} MFlop/s", "CFFT4~ (radix-4+2)", mflops(flops, t));
+
+    let t = time_best(
+        || {
+            let _ = radix2::fft(&re, &im);
+        },
+        0.2,
+        3,
+    );
+    println!("  {:<20} {:>10.1} MFlop/s", "simple radix-2", mflops(flops, t));
+
+    let t = time_best(
+        || {
+            let _ = splitstream::fft(&re, &im);
+        },
+        0.2,
+        3,
+    );
+    println!("  {:<20} {:>10.1} MFlop/s", "serial split-stream", mflops(flops, t));
+
+    let ctx = Context::serial();
+    let plan = mod2f::plan(&ctx, n);
+    let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+    let out = mod2f::arbb_fft(&ctx, &plan, &data);
+    assert_allclose(&out.re.to_vec(), &wre, 1e-8, 1e-8, "dsl re");
+    assert_allclose(&out.im.to_vec(), &wim, 1e-8, 1e-8, "dsl im");
+    let t = time_best(
+        || {
+            let out = mod2f::arbb_fft(&ctx, &plan, &data);
+            out.re.eval();
+        },
+        0.2,
+        3,
+    );
+    println!("  {:<20} {:>10.1} MFlop/s", "arbb split-stream", mflops(flops, t));
+
+    println!("\nmod2f OK — see `cargo bench --bench fig5_fft` for the full figure");
+}

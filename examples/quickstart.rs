@@ -1,0 +1,65 @@
+//! Quickstart: the DSL in five minutes.
+//!
+//! Mirrors §2/§3.1 of the paper: bind host data into containers, express
+//! the computation with serial semantics, read back. Run with:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use arbb_rs::coordinator::{Context, Options, OptLevel};
+
+fn main() {
+    // 1. a context — the ArBB runtime handle (O2 = vectorised serial).
+    let ctx = Context::new();
+
+    // 2. bind host data into "ArBB space" (dense containers).
+    let a = ctx.bind1(&[1.0, 2.0, 3.0, 4.0]);
+    let b = ctx.bind1(&[10.0, 20.0, 30.0, 40.0]);
+
+    // 3. math-like expressions build a captured IR; nothing executes yet.
+    let c = (&a + &b).scale(0.5); // (a+b)/2
+    let norm = c.dot(&c).sqrt(); // scalar reduction
+
+    // 4. reading forces the optimiser + engine.
+    println!("c     = {:?}", c.to_vec());
+    println!("‖c‖   = {:.4}", norm.value());
+
+    // 5. matrices: the paper's mxm1 formulation on a 4×4 example.
+    let n = 4;
+    let m = ctx.bind2(&(0..16).map(|x| x as f64).collect::<Vec<_>>(), n, n);
+    let eye = {
+        let mut e = vec![0.0; n * n];
+        for i in 0..n {
+            e[i * n + i] = 1.0;
+        }
+        ctx.bind2(&e, n, n)
+    };
+    let mut prod = ctx.zeros2(n, n);
+    for i in 0..n {
+        let t = eye.col(i).repeat_row(n);
+        let d = &m * &t;
+        prod = prod.replace_col(i, &d.add_reduce_rows());
+    }
+    println!("M·I row 2 = {:?}", &prod.to_vec()[2 * n..3 * n]);
+
+    // 6. switch to the threaded engine (O3 + ARBB_NUM_CORES analog).
+    let par = Context::with_options(Options {
+        opt_level: OptLevel::O3,
+        num_workers: 4,
+        ..Default::default()
+    });
+    let big: Vec<f64> = (0..1_000_000).map(|x| x as f64 * 1e-6).collect();
+    let v = par.bind1(&big);
+    let s = ((&v * &v) - &v).add_reduce().value();
+    println!("Σ v²-v    = {s:.3} (threaded engine)");
+
+    // 7. engine statistics — dispatches, steps, fused flops.
+    par.stats(|st| {
+        println!(
+            "stats: forces={} steps={} elements={} flops={:.1e}",
+            st.forces, st.steps, st.elements, st.flops
+        );
+    });
+    println!("quickstart OK");
+}

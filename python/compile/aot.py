@@ -1,0 +1,135 @@
+"""AOT lowering: JAX/L2 models (calling L1 Pallas kernels) → HLO text +
+manifest.tsv for the rust runtime.
+
+HLO *text* is the interchange format (NOT `HloModuleProto.serialize()`):
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the published
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md). Lowered with `return_tuple=True`; the
+rust side unwraps the tuple.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Artifact set — small shapes (interpret-mode Pallas is slow to trace, and
+# the e2e example only needs one size per kernel plus a sweep for mxm).
+MXM_SIZES = [128, 256]
+SPMV_CONFIGS = [(512, 32)]  # (n, K_pad)
+FFT_SIZES = [256, 1024]
+CG_CONFIGS = [(256, 16, 20)]  # (n, K_pad, iters)
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default elides big
+    # literals as `constant({...})`, which the xla_extension 0.5.1 text
+    # parser silently reads back as zeros (baked twiddle tables vanish).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def shapes_str(shapes):
+    def one(s):
+        if len(s) == 0:
+            return "scalar"
+        return "x".join(str(d) for d in s)
+
+    return ";".join(one(s) for s in shapes) if shapes else "-"
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.rows = []
+
+    def emit(self, name, kind, params, fn, example_args, const_args=()):
+        """Lower fn(*example_args, *const_args) treating const_args as
+        baked-in constants (closed over)."""
+        lowered = jax.jit(lambda *xs: fn(*xs, *const_args)).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        in_shapes = [tuple(a.shape) for a in example_args]
+        outs = lowered.out_info
+        out_shapes = [tuple(o.shape) for o in jax.tree_util.tree_leaves(outs)]
+        params_s = ",".join(f"{k}={v}" for k, v in params.items()) or "-"
+        self.rows.append(
+            "\t".join(
+                [name, fname, kind, params_s, shapes_str(in_shapes), shapes_str(out_shapes)]
+            )
+        )
+        print(f"  {name}: {len(text)} chars")
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.tsv")
+        with open(path, "w") as f:
+            f.write("# name\tfile\tkind\tparams\tinputs\toutputs\n")
+            f.write("\n".join(self.rows) + "\n")
+        print(f"wrote {path} ({len(self.rows)} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out)
+
+    f64 = np.float64
+    for n in MXM_SIZES:
+        spec = jax.ShapeDtypeStruct((n, n), f64)
+        em.emit(f"mxm_n{n}", "mxm", {"n": n}, model.mod2am, (spec, spec))
+
+    for n, k in SPMV_CONFIGS:
+        vals = jax.ShapeDtypeStruct((n, k), f64)
+        cols = jax.ShapeDtypeStruct((n, k), np.int32)
+        x = jax.ShapeDtypeStruct((n,), f64)
+        em.emit(
+            f"spmv_n{n}_k{k}", "spmv", {"n": n, "k": k}, model.mod2as, (vals, cols, x)
+        )
+
+    for n in FFT_SIZES:
+        twre, twim = model.fft_stage_tables(n)
+        re = jax.ShapeDtypeStruct((n,), f64)
+        im = jax.ShapeDtypeStruct((n,), f64)
+        em.emit(
+            f"fft_n{n}",
+            "fft",
+            {"n": n},
+            model.mod2f,
+            (re, im),
+            const_args=(twre, twim),
+        )
+
+    for n, k, iters in CG_CONFIGS:
+        vals = jax.ShapeDtypeStruct((n, k), f64)
+        cols = jax.ShapeDtypeStruct((n, k), np.int32)
+        b = jax.ShapeDtypeStruct((n,), f64)
+        em.emit(
+            f"cg_n{n}_k{k}_i{iters}",
+            "cg",
+            {"n": n, "k": k, "iters": iters},
+            model.cg,
+            (vals, cols, b),
+            const_args=(iters,),
+        )
+
+    em.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#
+# All kernels run under interpret=True (the CPU PJRT plugin cannot execute
+# Mosaic custom-calls); BlockSpecs are nevertheless chosen for the MXU/VMEM
+# geometry a real TPU would want — see DESIGN.md §Hardware-Adaptation.
+
+from . import fft_stage, matmul, spmv  # noqa: F401

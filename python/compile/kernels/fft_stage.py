@@ -1,0 +1,74 @@
+"""Split-stream FFT stage Pallas kernel — the `mod2f` hot-spot.
+
+One butterfly stage of the Jansen et al. split-stream algorithm (§3.3
+Fig 4): even/odd deinterleave, up = even+odd, down = (even−odd)·tw,
+output = cat(up, down). The paper's point — "the same operations are
+performed in each recursion step" — is exactly what makes the stage a
+single reusable kernel; L2 (`model.py`) composes log2(n) calls with the
+per-stage twiddle vector already materialised (bit-reversal-ordered
+table, prefix section, cyclic repeat — see rust/src/fftlib/splitstream.rs
+for the derivation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stage_kernel(re_ref, im_ref, twre_ref, twim_ref, ore_ref, oim_ref):
+    re = re_ref[...]
+    im = im_ref[...]
+    n = re.shape[0]
+    h = n // 2
+    ere, ore_ = re[0::2], re[1::2]
+    eim, oim_ = im[0::2], im[1::2]
+    up_re = ere + ore_
+    up_im = eim + oim_
+    sre = ere - ore_
+    sim = eim - oim_
+    twre = twre_ref[...]
+    twim = twim_ref[...]
+    dn_re = sre * twre - sim * twim
+    dn_im = sre * twim + sim * twre
+    ore_ref[0:h] = up_re
+    ore_ref[h:n] = dn_re
+    oim_ref[0:h] = up_im
+    oim_ref[h:n] = dn_im
+
+
+@jax.jit
+def fft_stage(re, im, twre, twim):
+    """One split-stream stage. `twre/twim` have length n/2 (already
+    sectioned + repeated for the stage)."""
+    n = re.shape[0]
+    return pl.pallas_call(
+        _stage_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), re.dtype),
+            jax.ShapeDtypeStruct((n,), im.dtype),
+        ),
+        interpret=True,
+    )(re, im, twre, twim)
+
+
+def stage_twiddles(n):
+    """Bit-reversal-ordered twiddle table (numpy), length n/2."""
+    import numpy as np
+
+    half = max(n, 2) // 2
+    bits = half.bit_length() - 1
+    ks = np.arange(half)
+    if bits > 0:
+        rev = np.array(
+            [int(format(k, f"0{bits}b")[::-1], 2) for k in ks], dtype=np.int64
+        )
+    else:
+        rev = ks
+    ang = -2.0 * np.pi * rev / n
+    return np.cos(ang), np.sin(ang)
+
+
+def tangle_indices(n):
+    """Bit-reversal input permutation."""
+    bits = n.bit_length() - 1
+    return [int(format(i, f"0{bits}b")[::-1], 2) for i in range(n)]

@@ -1,0 +1,69 @@
+"""Tiled matmul Pallas kernel — the `mod2am` hot-spot on TPU terms.
+
+The paper's best ArBB formulation (`arbb_mxm2b`) is a u-unrolled sequence
+of rank-1 updates; the TPU-idiomatic translation is an accumulating K-loop
+over (TM, TK)x(TK, TN) VMEM tiles feeding the MXU (DESIGN.md
+§Hardware-Adaptation). The grid walks (M/TM, N/TN, K/TK); the K axis is
+the reduction axis, accumulated in the output tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tiles (f32/bf16 native is 128x128; for f64 interpret runs we
+# keep the same logical shape — the BlockSpec geometry is what the VMEM
+# estimate in DESIGN.md §Perf is computed from).
+TM = 128
+TN = 128
+TK = 128
+
+
+def _mxm_kernel(a_ref, b_ref, o_ref):
+    """One (TM, TN) output tile; K-step accumulation."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def mxm(a, b, *, tm=TM, tn=TN, tk=TK):
+    """`a @ b` via the Pallas tile kernel (interpret mode).
+
+    Shapes must tile evenly; `aot.py` only emits evenly tiling sizes and
+    the tests sweep ragged sizes against the reference with padding.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    tm = min(tm, m)
+    tn = min(tn, n)
+    tk = min(tk, k)
+    assert m % tm == 0 and n % tn == 0 and k % tk == 0, (
+        f"shape ({m},{k})x({k},{n}) does not tile by ({tm},{tn},{tk})"
+    )
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _mxm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(tm=TM, tn=TN, tk=TK, dtype_bytes=8):
+    """VMEM footprint estimate of one grid step (A, B and O tiles)."""
+    return (tm * tk + tk * tn + tm * tn) * dtype_bytes

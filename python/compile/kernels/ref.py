@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (the pytest ground truth)."""
+
+import jax.numpy as jnp
+
+
+def mxm_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def spmv_ell_ref(vals, cols, x):
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def fft_ref(re, im):
+    out = jnp.fft.fft(re + 1j * im)
+    return jnp.real(out), jnp.imag(out)
+
+
+def fft_stage_ref(re, im, twre, twim):
+    """One split-stream stage, straight jnp."""
+    h = re.shape[0] // 2
+    ere, ore = re[0::2], re[1::2]
+    eim, oim = im[0::2], im[1::2]
+    up_re, up_im = ere + ore, eim + oim
+    sre, sim = ere - ore, eim - oim
+    dn_re = sre * twre - sim * twim
+    dn_im = sre * twim + sim * twre
+    return (
+        jnp.concatenate([up_re, dn_re]),
+        jnp.concatenate([up_im, dn_im]),
+    )
+
+
+def cg_step_ref(vals, cols, x, r, p, r2):
+    """One CG iteration (textbook), spmv via the ELL oracle."""
+    ap = spmv_ell_ref(vals, cols, p)
+    alpha = r2 / jnp.dot(p, ap)
+    x = x + alpha * p
+    r = r - alpha * ap
+    r2_new = jnp.dot(r, r)
+    beta = r2_new / r2
+    p = r + beta * p
+    return x, r, p, r2_new

@@ -1,0 +1,69 @@
+"""Padded-CSR (ELL) spmv Pallas kernel — the `mod2as` hot-spot on TPU
+terms.
+
+The paper's `arbb_spmv1` maps a scalar row-reduce over CSR rows; TPUs
+want rectangular tiles, so the TPU-idiomatic layout is ELL: every row
+padded to K slots (`vals[n, K]`, `cols[n, K]`, pad value 0 with column 0).
+The kernel processes a (TR, K) row block per grid step: gather `x[cols]`,
+multiply, reduce along the slot axis (DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TR = 128  # rows per grid step
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    vals = vals_ref[...]            # (TR, K)
+    cols = cols_ref[...]            # (TR, K) int32
+    x = x_ref[...]                  # (n,)
+    gathered = x[cols]              # (TR, K) gather
+    o_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tr",))
+def spmv_ell(vals, cols, x, *, tr=TR):
+    """`out[r] = Σ_k vals[r,k] * x[cols[r,k]]` (padded slots contribute 0)."""
+    n, _k = vals.shape
+    tr = min(tr, n)
+    assert n % tr == 0, f"rows {n} do not tile by {tr}"
+    grid = (n // tr,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, vals.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((tr, cols.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),  # whole x resident
+        ],
+        out_specs=pl.BlockSpec((tr,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)
+
+
+def csr_to_ell(vals, indx, rowp, n, k_pad=None):
+    """Convert 3-array CSR to padded ELL (numpy, build-time only)."""
+    vals = np.asarray(vals)
+    indx = np.asarray(indx)
+    rowp = np.asarray(rowp)
+    widths = rowp[1:] - rowp[:-1]
+    k = int(widths.max()) if k_pad is None else int(k_pad)
+    assert k >= int(widths.max()), "k_pad smaller than widest row"
+    evals = np.zeros((n, k), dtype=np.float64)
+    ecols = np.zeros((n, k), dtype=np.int32)
+    for r in range(n):
+        s, e = int(rowp[r]), int(rowp[r + 1])
+        evals[r, : e - s] = vals[s:e]
+        ecols[r, : e - s] = indx[s:e]
+    return evals, ecols
+
+
+def vmem_bytes(tr=TR, k=64, n=4096, dtype_bytes=8):
+    """VMEM per grid step: row block of vals+cols plus resident x."""
+    return tr * k * (dtype_bytes + 4) + n * dtype_bytes + tr * dtype_bytes

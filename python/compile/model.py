@@ -1,0 +1,80 @@
+"""L2: the paper's kernels as JAX computations calling the L1 Pallas
+kernels. These are the functions `aot.py` lowers to HLO text for the rust
+runtime — the "backend-independent captured closures" of the ArBB story.
+
+Everything is f64 (the paper measures double precision throughout).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import fft_stage, matmul, spmv  # noqa: E402
+from .kernels.ref import spmv_ell_ref  # noqa: E402
+
+
+def mod2am(a, b):
+    """Dense matmul via the Pallas tile kernel."""
+    return (matmul.mxm(a, b),)
+
+
+def mod2as(vals, cols, x):
+    """Padded-CSR spmv via the Pallas row-block kernel."""
+    return (spmv.spmv_ell(vals, cols, x),)
+
+
+def mod2f(re, im, twre_stages, twim_stages):
+    """Full split-stream FFT: log2(n) Pallas stage calls.
+
+    `tw*_stages` is a (stages, n/2) matrix of per-stage twiddle vectors
+    (section+repeat already applied — built by `fft_stage_tables`).
+    The input must already be tangled (bit-reversed); the rust caller
+    applies the gather, mirroring the ArBB port where tangling is a
+    separate gather op.
+    """
+    stages = twre_stages.shape[0]
+    for s in range(stages):  # static unroll: shapes are fixed per artifact
+        re, im = fft_stage.fft_stage(re, im, twre_stages[s], twim_stages[s])
+    return (re, im)
+
+
+def fft_stage_tables(n):
+    """(stages, n/2) twiddle matrices for `mod2f` (numpy)."""
+    import numpy as np
+
+    twre, twim = fft_stage.stage_twiddles(n)
+    h = n // 2
+    stages = n.bit_length() - 1
+    res, ims = [], []
+    m = h
+    i = 1
+    for _ in range(stages):
+        idx = (np.arange(h) % m)  # repeat(section(tw, 0, m), i)
+        res.append(twre[idx])
+        ims.append(twim[idx])
+        m //= 2
+        i *= 2
+    return np.stack(res), np.stack(ims)
+
+
+def cg(vals, cols, b, iters):
+    """`iters` CG iterations on the ELL operand (fixed trip count so the
+    artifact has static shape; the rust driver picks the artifact whose
+    `iters` matches its budget and loops artifacts for longer solves)."""
+
+    def step(state, _):
+        x, r, p, r2 = state
+        ap = spmv_ell_ref(vals, cols, p)
+        alpha = r2 / jnp.dot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        r2n = jnp.dot(r, r)
+        beta = r2n / r2
+        p = r + beta * p
+        return (x, r, p, r2n), None
+
+    x0 = jnp.zeros_like(b)
+    r2 = jnp.dot(b, b)
+    (x, r, p, r2), _ = jax.lax.scan(step, (x0, b, b, r2), None, length=iters)
+    return (x, r2)

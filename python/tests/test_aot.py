@@ -1,0 +1,65 @@
+"""AOT pipeline smoke tests: lowering produces parseable HLO text and a
+well-formed manifest."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model  # noqa: E402
+
+
+def test_to_hlo_text_roundtrip():
+    spec = jax.ShapeDtypeStruct((8, 8), np.float64)
+    lowered = jax.jit(model.mod2am).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # f64 appears in the module signature
+    assert "f64" in text
+
+
+def test_shapes_str():
+    assert aot.shapes_str([(2, 3), (4,)]) == "2x3;4"
+    assert aot.shapes_str([()]) == "scalar"
+    assert aot.shapes_str([]) == "-"
+
+
+def test_emitter_writes_manifest(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    spec = jax.ShapeDtypeStruct((8, 8), np.float64)
+    em.emit("mxm_n8", "mxm", {"n": 8}, model.mod2am, (spec, spec))
+    em.write_manifest()
+    man = (tmp_path / "manifest.tsv").read_text()
+    lines = [l for l in man.splitlines() if l and not l.startswith("#")]
+    assert len(lines) == 1
+    cols = lines[0].split("\t")
+    assert cols[0] == "mxm_n8"
+    assert cols[2] == "mxm"
+    assert cols[4] == "8x8;8x8"
+    assert (tmp_path / "mxm_n8.hlo.txt").exists()
+
+
+def test_large_constants_not_elided():
+    """Regression: default as_hlo_text elides big literals as
+    `constant({...})`, which xla_extension 0.5.1 parses back as ZEROS —
+    the baked twiddle tables silently vanish on the rust side."""
+    n = 256
+    twre, twim = model.fft_stage_tables(n)
+    re = jax.ShapeDtypeStruct((n,), np.float64)
+    lowered = jax.jit(lambda r, i: model.mod2f(r, i, twre, twim)).lower(re, re)
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text, "large constants must be printed in full"
+
+
+def test_fft_artifact_lowers(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    n = 16
+    twre, twim = model.fft_stage_tables(n)
+    re = jax.ShapeDtypeStruct((n,), np.float64)
+    em.emit("fft_n16", "fft", {"n": n}, model.mod2f, (re, re), const_args=(twre, twim))
+    text = (tmp_path / "fft_n16.hlo.txt").read_text()
+    assert "HloModule" in text

@@ -1,0 +1,72 @@
+"""Pallas split-stream FFT stage + full pipeline vs jnp.fft oracle."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels import fft_stage  # noqa: E402
+from compile.kernels.ref import fft_ref, fft_stage_ref  # noqa: E402
+
+
+def rand_sig(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-1, 1, n), rng.uniform(-1, 1, n)
+
+
+@pytest.mark.parametrize("n", [4, 16, 64, 256])
+def test_single_stage_matches_ref(n):
+    re, im = rand_sig(n, n)
+    twre, twim = fft_stage.stage_twiddles(n)
+    h = n // 2
+    gre, gim = fft_stage.fft_stage(re, im, twre[:h], twim[:h])
+    wre, wim = fft_stage_ref(re, im, twre[:h], twim[:h])
+    np.testing.assert_allclose(np.asarray(gre), np.asarray(wre), rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(gim), np.asarray(wim), rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [4, 16, 128, 1024])
+def test_full_pipeline_matches_fft(n):
+    re, im = rand_sig(n, n + 7)
+    # tangle on the host (the rust caller gathers too)
+    idx = fft_stage.tangle_indices(n)
+    tre, tim = re[idx], im[idx]
+    twre, twim = model.fft_stage_tables(n)
+    gre, gim = model.mod2f(tre, tim, twre, twim)
+    wre, wim = fft_ref(re, im)
+    np.testing.assert_allclose(np.asarray(gre), np.asarray(wre), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(gim), np.asarray(wim), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=8, deadline=None)
+@given(logn=st.integers(1, 9), seed=st.integers(0, 2**31))
+def test_hypothesis_sizes(logn, seed):
+    n = 2**logn
+    re, im = rand_sig(n, seed)
+    idx = fft_stage.tangle_indices(n)
+    twre, twim = model.fft_stage_tables(n)
+    gre, gim = model.mod2f(re[idx], im[idx], twre, twim)
+    wre, wim = fft_ref(re, im)
+    np.testing.assert_allclose(np.asarray(gre), np.asarray(wre), rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(gim), np.asarray(wim), rtol=1e-8, atol=1e-8)
+
+
+def test_impulse():
+    n = 32
+    re = np.zeros(n)
+    re[0] = 1.0
+    im = np.zeros(n)
+    idx = fft_stage.tangle_indices(n)
+    twre, twim = model.fft_stage_tables(n)
+    gre, gim = model.mod2f(re[idx], im[idx], twre, twim)
+    np.testing.assert_allclose(np.asarray(gre), np.ones(n), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(gim), np.zeros(n), atol=1e-12)
+
+
+def test_tangle_is_involution_composed_with_itself():
+    idx = np.array(fft_stage.tangle_indices(64))
+    # bit reversal is an involution
+    assert (idx[idx] == np.arange(64)).all()

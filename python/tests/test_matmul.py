@@ -1,0 +1,77 @@
+"""Pallas matmul kernel vs pure-jnp oracle."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import matmul  # noqa: E402
+from compile.kernels.ref import mxm_ref  # noqa: E402
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(-1.0, 1.0, shape)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 64, 128])
+def test_square_matches_ref(n):
+    a = rand((n, n), n)
+    b = rand((n, n), n + 1)
+    got = matmul.mxm(a, b, tm=min(128, n), tn=min(128, n), tk=min(128, n))
+    want = mxm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize(
+    "m,k,n,tm,tk,tn",
+    [
+        (8, 16, 4, 4, 8, 2),
+        (32, 8, 64, 16, 4, 32),
+        (128, 128, 128, 64, 64, 64),
+        (256, 64, 32, 128, 64, 32),
+    ],
+)
+def test_rectangular_tiles(m, k, n, tm, tk, tn):
+    a = rand((m, k), m * 31 + k)
+    b = rand((k, n), k * 17 + n)
+    got = matmul.mxm(a, b, tm=tm, tn=tn, tk=tk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(mxm_ref(a, b)), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logm=st.integers(1, 5),
+    logk=st.integers(1, 5),
+    logn=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_pow2_shapes(logm, logk, logn, seed):
+    m, k, n = 2**logm, 2**logk, 2**logn
+    a = rand((m, k), seed)
+    b = rand((k, n), seed + 1)
+    got = matmul.mxm(a, b, tm=min(8, m), tn=min(8, n), tk=min(8, k))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(mxm_ref(a, b)), rtol=1e-11, atol=1e-12)
+
+
+def test_dtype_f32_also_works():
+    a = rand((16, 16), 3).astype(np.float32)
+    b = rand((16, 16), 4).astype(np.float32)
+    got = matmul.mxm(a, b, tm=8, tn=8, tk=8)
+    assert np.asarray(got).dtype == np.float32
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(mxm_ref(a, b)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_rejects_ragged_tiles():
+    a = rand((10, 10), 1)
+    with pytest.raises(AssertionError):
+        matmul.mxm(a, a, tm=4, tn=4, tk=4)
+
+
+def test_vmem_budget():
+    # default tiles must fit a 16 MiB VMEM comfortably
+    assert matmul.vmem_bytes() <= 16 * 1024 * 1024 / 2

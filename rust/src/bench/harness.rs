@@ -1,0 +1,155 @@
+//! Timing harness and paper-style series reporting.
+//!
+//! Each figure bench produces [`Series`] (name → (x, y) points) that are
+//! printed as aligned Markdown-ish tables, mirroring the curves of the
+//! paper's figures. `y` is MFlop/s unless stated otherwise, matching the
+//! paper's axes.
+
+use std::time::Instant;
+
+/// Run `f` repeatedly until `min_time` elapsed (at least `min_reps`),
+/// returning the *best* wall time per rep (standard min-time estimator —
+/// robust against preemption on a busy box).
+pub fn time_best<F: FnMut()>(mut f: F, min_time_s: f64, min_reps: usize) -> f64 {
+    // warm-up
+    f();
+    let mut best = f64::INFINITY;
+    let start = Instant::now();
+    let mut reps = 0usize;
+    while reps < min_reps || start.elapsed().as_secs_f64() < min_time_s {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best {
+            best = dt;
+        }
+        reps += 1;
+        if reps > 1_000_000 {
+            break;
+        }
+    }
+    best
+}
+
+/// One curve of a figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    /// (x, y) points, x typically the size axis, y MFlop/s.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render a set of series sharing an x-axis as an aligned table.
+pub fn render_table(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    use std::collections::BTreeMap;
+    let mut out = String::new();
+    out.push_str(&format!("\n## {title}\n   ({ylabel})\n\n"));
+    // collect the x grid
+    let mut xs: Vec<f64> = series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    // header
+    out.push_str(&format!("| {xlabel:>9} |"));
+    for s in series {
+        out.push_str(&format!(" {:>14} |", truncate(&s.name, 14)));
+    }
+    out.push('\n');
+    out.push_str(&format!("|{}|", "-".repeat(11)));
+    for _ in series {
+        out.push_str(&format!("{}|", "-".repeat(16)));
+    }
+    out.push('\n');
+    // index series points
+    let maps: Vec<BTreeMap<u64, f64>> = series
+        .iter()
+        .map(|s| s.points.iter().map(|&(x, y)| (x.to_bits(), y)).collect())
+        .collect();
+    for x in xs {
+        out.push_str(&format!("| {:>9} |", fmt_x(x)));
+        for m in &maps {
+            match m.get(&x.to_bits()) {
+                Some(y) => out.push_str(&format!(" {:>14} |", fmt_y(*y))),
+                None => out.push_str(&format!(" {:>14} |", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        s[..n].to_string()
+    }
+}
+
+fn fmt_x(x: f64) -> String {
+    if x == x.trunc() {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+fn fmt_y(y: f64) -> String {
+    if y.abs() >= 1000.0 {
+        format!("{y:.0}")
+    } else if y.abs() >= 10.0 {
+        format!("{y:.1}")
+    } else {
+        format!("{y:.3}")
+    }
+}
+
+/// MFlop/s from a flop count and seconds.
+pub fn mflops(flops: f64, secs: f64) -> f64 {
+    flops / secs * 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_best_is_positive() {
+        let t = time_best(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            0.01,
+            3,
+        );
+        assert!(t > 0.0 && t < 1.0);
+    }
+
+    #[test]
+    fn table_rendering() {
+        let mut s1 = Series::new("alpha");
+        s1.push(10.0, 1.0);
+        s1.push(20.0, 2.0);
+        let mut s2 = Series::new("beta");
+        s2.push(10.0, 1234.0);
+        let t = render_table("Fig X", "n", "MFlop/s", &[s1, s2]);
+        assert!(t.contains("alpha"));
+        assert!(t.contains("1234"));
+        assert!(t.contains("- |"), "missing point shown as dash:\n{t}");
+    }
+
+    #[test]
+    fn mflops_math() {
+        assert_eq!(mflops(2e6, 1.0), 2.0);
+        assert_eq!(mflops(1e6, 0.5), 2.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Machine calibration: single-core peak FLOP/s, stream bandwidth and
+//! runtime dispatch overhead.
+//!
+//! The paper normalises everything to the Westmere-EX double-precision
+//! peak (9.6 GFlop/s per core at 2.4 GHz). This testbed has different
+//! silicon (and a scalar-rust instruction mix), so the harness measures
+//! its own roofline once and reports "% of calibrated peak" — the same
+//! methodology, portable numbers. The results also parameterise the
+//! scaling simulator's [`crate::coordinator::MachineModel`].
+
+use std::time::Instant;
+
+use crate::coordinator::{Context, MachineModel};
+
+/// Calibration results (all single-core).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Peak achievable f64 FLOP/s (fused multiply-add loop).
+    pub peak_flops: f64,
+    /// Stream (triad) bandwidth, bytes/s.
+    pub stream_bw: f64,
+    /// DSL dispatch overhead per `force()` (seconds).
+    pub dispatch_secs: f64,
+}
+
+/// FMA-chain micro-benchmark: 8 independent accumulator chains of
+/// `acc = acc * s + x` — the densest f64 arithmetic scalar rust emits.
+fn measure_peak() -> f64 {
+    let mut acc = [1.0f64, 1.1, 1.2, 1.3, 1.4, 1.5, 1.6, 1.7];
+    let s = 0.999999;
+    let x = 1e-9;
+    let iters: u64 = 20_000_000;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for a in acc.iter_mut() {
+            *a = *a * s + x;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    // keep the result alive
+    let sink: f64 = acc.iter().sum();
+    std::hint::black_box(sink);
+    // 2 flops per element per iteration
+    (iters as f64 * acc.len() as f64 * 2.0) / dt
+}
+
+/// Stream triad `a[i] = b[i] + s*c[i]` over a cache-busting footprint.
+fn measure_bw() -> f64 {
+    let n = 4 << 20; // 3 × 32 MiB of f64 traffic
+    let b = vec![1.0f64; n];
+    let c = vec![2.0f64; n];
+    let mut a = vec![0.0f64; n];
+    let reps = 5;
+    let t0 = Instant::now();
+    for r in 0..reps {
+        let s = 1.0 + r as f64 * 1e-6;
+        for i in 0..n {
+            a[i] = b[i] + s * c[i];
+        }
+        std::hint::black_box(&a);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    // 3 arrays × 8 bytes per element per rep
+    (reps * n * 24) as f64 / dt
+}
+
+/// Round-trip cost of a minimal `force()` (tiny element-wise op).
+fn measure_dispatch() -> f64 {
+    let ctx = Context::new();
+    let a = ctx.bind1(&[1.0, 2.0, 3.0, 4.0]);
+    // warm up
+    for _ in 0..100 {
+        let _ = (&a + &a).to_vec();
+    }
+    let reps = 2000;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = (&a + &a).to_vec();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Run the full calibration (a few seconds).
+pub fn calibrate() -> Calibration {
+    Calibration {
+        peak_flops: measure_peak(),
+        stream_bw: measure_bw(),
+        dispatch_secs: measure_dispatch(),
+    }
+}
+
+impl Calibration {
+    /// Build the Westmere-EX-like node model from this box's single-core
+    /// numbers (DESIGN.md §2): 40 cores, node bandwidth saturating at 12×
+    /// a single core's stream bandwidth (a 4-socket HX5 blade delivers
+    /// roughly that aggregate-to-single-core stream ratio).
+    pub fn node_model(&self) -> MachineModel {
+        MachineModel {
+            cores: 40,
+            bw_core_gbs: self.stream_bw * 1e-9,
+            bw_node_gbs: self.stream_bw * 12.0 * 1e-9,
+            fork_join_s: 4e-6,
+            fork_join_per_worker_s: 0.25e-6,
+            dispatch_s: self.dispatch_secs,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "peak={:.2} GFlop/s  stream={:.2} GB/s  dispatch={:.1} µs",
+            self.peak_flops * 1e-9,
+            self.stream_bw * 1e-9,
+            self.dispatch_secs * 1e6
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_is_measurable() {
+        let d = measure_dispatch();
+        assert!(d > 0.0 && d < 1e-2, "dispatch {d}s out of range");
+    }
+
+    #[test]
+    fn node_model_ratios() {
+        let c = Calibration { peak_flops: 2e9, stream_bw: 5e9, dispatch_secs: 10e-6 };
+        let m = c.node_model();
+        assert_eq!(m.cores, 40);
+        assert!((m.bw_node_gbs / m.bw_core_gbs - 12.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark substrate: machine calibration, the paper's workload grids,
+//! timing/reporting helpers. The per-figure harnesses live in `benches/`
+//! (one per paper figure, see DESIGN.md §4).
+
+pub mod harness;
+pub mod machine;
+pub mod workloads;
+
+pub use harness::{mflops, render_table, time_best, Series};
+pub use machine::{calibrate, Calibration};

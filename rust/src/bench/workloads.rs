@@ -1,0 +1,83 @@
+//! The paper's exact evaluation parameter grids.
+
+/// §3.1: mod2am square matrix sizes.
+pub fn mod2am_sizes() -> Vec<usize> {
+    vec![10, 20, 50, 100, 192, 200, 500, 512, 576, 1000, 1024, 2000, 2048]
+}
+
+/// Table 1: mod2as (n, fill %) pairs.
+pub fn mod2as_inputs() -> Vec<(usize, f64)> {
+    vec![
+        (100, 3.50),
+        (200, 3.75),
+        (256, 5.0),
+        (400, 4.38),
+        (500, 5.00),
+        (512, 4.00),
+        (960, 4.50),
+        (1000, 5.00),
+        (1024, 5.50),
+        (2000, 7.50),
+        (4096, 3.50),
+        (4992, 4.00),
+        (5000, 4.00),
+        (9984, 4.50),
+        (10000, 5.00),
+        (10240, 5.72),
+    ]
+}
+
+/// §3.3: mod2f FFT sizes (2^8 … 2^20).
+pub fn mod2f_sizes() -> Vec<usize> {
+    (8..=20).map(|p| 1usize << p).collect()
+}
+
+/// Table 2: CG configurations (#conf, n, half-bandwidth).
+pub fn cg_configs() -> Vec<(usize, usize, usize)> {
+    vec![
+        (1, 128, 3),
+        (2, 128, 31),
+        (3, 128, 63),
+        (4, 256, 3),
+        (5, 256, 31),
+        (6, 256, 63),
+        (7, 256, 127),
+        (8, 512, 3),
+        (9, 512, 31),
+        (10, 512, 63),
+        (11, 512, 127),
+        (12, 512, 255),
+        (13, 1024, 3),
+        (14, 1024, 31),
+        (15, 1024, 63),
+        (16, 1024, 127),
+        (17, 1024, 255),
+        (18, 1024, 511),
+    ]
+}
+
+/// Thread counts for the scaling figures (1..40 on the paper's node).
+pub fn thread_sweep() -> Vec<usize> {
+    vec![1, 2, 4, 8, 12, 16, 20, 24, 30, 32, 40]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_match_paper() {
+        assert_eq!(mod2am_sizes().len(), 13);
+        assert_eq!(*mod2am_sizes().last().unwrap(), 2048);
+        assert_eq!(mod2as_inputs().len(), 16);
+        assert_eq!(mod2as_inputs()[0], (100, 3.50));
+        assert_eq!(mod2as_inputs()[15], (10240, 5.72));
+        assert_eq!(mod2f_sizes().first().copied(), Some(256));
+        assert_eq!(mod2f_sizes().last().copied(), Some(1 << 20));
+        let cg = cg_configs();
+        assert_eq!(cg.len(), 18);
+        assert_eq!(cg[12], (13, 1024, 3));
+        assert_eq!(cg[17], (18, 1024, 511));
+        assert!(thread_sweep().contains(&40));
+    }
+}

@@ -1,0 +1,981 @@
+//! Public container types and operators — the user-facing DSL.
+//!
+//! Mirrors the ArBB C++ API used in the paper's listings:
+//!
+//! | paper (ArBB C++)                  | here                          |
+//! |-----------------------------------|-------------------------------|
+//! | `dense<f64,2> A(n,n); bind(A,..)` | `ctx.bind2(&a, n, n)`         |
+//! | `a.row(i)`, `b.col(j)`            | `a.row(i)`, `b.col(j)`        |
+//! | `add_reduce(v)`                   | `v.add_reduce()`              |
+//! | `add_reduce(d, 0)`                | `d.add_reduce_rows()`         |
+//! | `repeat_row(v, n)`                | `v.repeat_row(n)`             |
+//! | `repeat_col(v, n)`                | `v.repeat_col(n)`             |
+//! | `section(v, s, l)` / strided      | `v.section(s, l)` / `_strided`|
+//! | `cat(a, b)`                       | `a.cat(&b)`                   |
+//! | `replace_col(c, i, v)`            | `c.replace_col(i, &v)`        |
+//! | `map(f)(out, ...)`                | `ctx.map(...)`                |
+//! | `_for` / `_while`                 | rust `for` / `while` + `Scal::value()` |
+//!
+//! ArBB's `_for`/`_while` describe *serial* control flow whose body is
+//! captured; in this reproduction plain rust loops play that role — each
+//! iteration extends the pending DAG, and data-dependent conditions
+//! (`_while (r2 > stop)`) force a sync exactly like ArBB's dynamic-data
+//! loops do. The per-iteration dispatch cost that the paper's CG results
+//! expose (§3.4) is therefore reproduced faithfully.
+
+
+use std::sync::Arc;
+
+use super::map::{Elemental, MapFn};
+use super::node::{Data, Node, NodeRef, Op};
+use super::ops::{BinOp, RedOp, UnOp};
+use super::passes::constfold;
+use super::shape::{DType, Shape};
+use super::Context;
+
+/// 1-D dense container of `f64` (the paper's `dense<f64>`).
+#[derive(Clone)]
+pub struct Vec1 {
+    pub(crate) ctx: Context,
+    pub(crate) node: NodeRef,
+}
+
+/// 2-D dense container of `f64`, row-major (the paper's `dense<f64,2>`).
+#[derive(Clone)]
+pub struct Mat2 {
+    pub(crate) ctx: Context,
+    pub(crate) node: NodeRef,
+}
+
+/// Scalar value living in "ArBB space" (result of a full reduction, loop
+/// counters, `alpha`/`beta` of the CG solver, …).
+#[derive(Clone)]
+pub struct Scal {
+    pub(crate) ctx: Context,
+    pub(crate) node: NodeRef,
+}
+
+/// 1-D dense container of `i64` (the paper's `dense<i64>`, used for the
+/// CSR `indx`/`rowp` arrays). Index containers are sources only: they are
+/// captured by `map()` and `gather()`.
+#[derive(Clone)]
+pub struct VecI64 {
+    pub(crate) ctx: Context,
+    pub(crate) node: NodeRef,
+}
+
+/// Split-complex vector (re/im planes) for the FFT kernels. ArBB stores
+/// `std::complex` containers; a structure-of-arrays split is the
+/// data-parallel equivalent and fuses better.
+#[derive(Clone)]
+pub struct CplxV {
+    pub re: Vec1,
+    pub im: Vec1,
+}
+
+// ---------------------------------------------------------------------
+// constructors
+// ---------------------------------------------------------------------
+
+impl Context {
+    /// Bind a host slice into a 1-D container (copies, like ArBB `bind`).
+    pub fn bind1(&self, host: &[f64]) -> Vec1 {
+        let data = Data::F64(Arc::new(host.to_vec()));
+        Vec1 { ctx: self.clone(), node: Node::new_source(Shape::D1(host.len()), data) }
+    }
+
+    /// Bind a host slice as a `rows x cols` row-major matrix.
+    pub fn bind2(&self, host: &[f64], rows: usize, cols: usize) -> Mat2 {
+        assert_eq!(host.len(), rows * cols, "bind2: host length != rows*cols");
+        let data = Data::F64(Arc::new(host.to_vec()));
+        Mat2 { ctx: self.clone(), node: Node::new_source(Shape::D2 { rows, cols }, data) }
+    }
+
+    /// Bind an i64 index container.
+    pub fn bind_i64(&self, host: &[i64]) -> VecI64 {
+        let data = Data::I64(Arc::new(host.to_vec()));
+        VecI64 { ctx: self.clone(), node: Node::new_source(Shape::D1(host.len()), data) }
+    }
+
+    /// Zero-filled vector.
+    pub fn zeros1(&self, n: usize) -> Vec1 {
+        self.fill1(n, 0.0)
+    }
+
+    /// Constant-filled vector.
+    pub fn fill1(&self, n: usize, v: f64) -> Vec1 {
+        let data = Data::F64(Arc::new(vec![v; n]));
+        Vec1 { ctx: self.clone(), node: Node::new_source(Shape::D1(n), data) }
+    }
+
+    /// Zero-filled matrix.
+    pub fn zeros2(&self, rows: usize, cols: usize) -> Mat2 {
+        let data = Data::F64(Arc::new(vec![0.0; rows * cols]));
+        Mat2 { ctx: self.clone(), node: Node::new_source(Shape::D2 { rows, cols }, data) }
+    }
+
+    /// `0, 1, …, n-1`.
+    pub fn iota(&self, n: usize) -> Vec1 {
+        let data = Data::F64(Arc::new((0..n).map(|x| x as f64).collect()));
+        Vec1 { ctx: self.clone(), node: Node::new_source(Shape::D1(n), data) }
+    }
+
+    /// Scalar constant in ArBB space.
+    pub fn scalar(&self, v: f64) -> Scal {
+        Scal { ctx: self.clone(), node: Node::new(Op::ConstF64(v), Shape::Scalar, DType::F64) }
+    }
+
+    /// Complex vector from interleaved host data `[re0, im0, re1, im1, …]`.
+    pub fn bind_cplx_interleaved(&self, host: &[f64]) -> CplxV {
+        assert!(host.len() % 2 == 0);
+        let re: Vec<f64> = host.iter().step_by(2).copied().collect();
+        let im: Vec<f64> = host.iter().skip(1).step_by(2).copied().collect();
+        CplxV { re: self.bind1(&re), im: self.bind1(&im) }
+    }
+
+    /// ArBB `map()`: apply elemental `f` across `len` output elements.
+    ///
+    /// `captures` are resolved to slices positionally, split by dtype:
+    /// inside `f`, `args.f(k)` is the k-th f64 capture, `args.i(k)` the
+    /// k-th i64 capture.
+    ///
+    /// `flops_per_elem` / `bytes_per_elem` are cost hints for the scaling
+    /// simulator (irregular kernels pass averages).
+    pub fn map(
+        &self,
+        len: usize,
+        captures: MapCaptures<'_>,
+        f: Arc<Elemental>,
+        flops_per_elem: f64,
+        bytes_per_elem: f64,
+        label: &'static str,
+    ) -> Vec1 {
+        let nodes: Vec<NodeRef> = captures.nodes;
+        let mf = MapFn { captures: nodes, f, flops_per_elem, bytes_per_elem, label };
+        Vec1 { ctx: self.clone(), node: Node::new(Op::Map(mf), Shape::D1(len), DType::F64) }
+    }
+}
+
+/// Ordered capture list for [`Context::map`]. f64 and i64 captures keep
+/// independent positional indices (matching [`super::map::MapArgs`]).
+#[derive(Default)]
+pub struct MapCaptures<'a> {
+    nodes: Vec<NodeRef>,
+    _marker: std::marker::PhantomData<&'a ()>,
+}
+
+impl<'a> MapCaptures<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn f64(mut self, v: &'a Vec1) -> Self {
+        self.nodes.push(v.node.clone());
+        self
+    }
+
+    pub fn i64(mut self, v: &'a VecI64) -> Self {
+        self.nodes.push(v.node.clone());
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------
+
+fn bin_any(ctx: &Context, op: BinOp, l: &NodeRef, r: &NodeRef, shape: Shape) -> NodeRef {
+    if let Some(folded) = constfold::fold_bin(op, l, r) {
+        return folded;
+    }
+    if let Some(kept) = constfold::identity_elide(op, l, r) {
+        return kept;
+    }
+    let _ = ctx;
+    Node::new(Op::Bin(op, l.clone(), r.clone()), shape, DType::F64)
+}
+
+fn ew_shape(l: &NodeRef, r: &NodeRef) -> Shape {
+    match (l.shape, r.shape) {
+        (Shape::Scalar, s) => s,
+        (s, Shape::Scalar) => s,
+        (a, b) => {
+            assert_eq!(a, b, "element-wise operands must have equal shape");
+            a
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Vec1
+// ---------------------------------------------------------------------
+
+impl Vec1 {
+    pub fn len(&self) -> usize {
+        self.node.shape.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn ew(&self, op: BinOp, rhs: &NodeRef) -> Vec1 {
+        let shape = ew_shape(&self.node, rhs);
+        Vec1 { ctx: self.ctx.clone(), node: bin_any(&self.ctx, op, &self.node, rhs, shape) }
+    }
+
+    fn un(&self, op: UnOp) -> Vec1 {
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(Op::Un(op, self.node.clone()), self.node.shape, DType::F64),
+        }
+    }
+
+    /// Multiply by a host scalar.
+    pub fn scale(&self, s: f64) -> Vec1 {
+        let c = Node::new(Op::ConstF64(s), Shape::Scalar, DType::F64);
+        self.ew(BinOp::Mul, &c)
+    }
+
+    /// Add a host scalar.
+    pub fn offset(&self, s: f64) -> Vec1 {
+        let c = Node::new(Op::ConstF64(s), Shape::Scalar, DType::F64);
+        self.ew(BinOp::Add, &c)
+    }
+
+    pub fn sqrt(&self) -> Vec1 {
+        self.un(UnOp::Sqrt)
+    }
+
+    pub fn abs(&self) -> Vec1 {
+        self.un(UnOp::Abs)
+    }
+
+    pub fn neg(&self) -> Vec1 {
+        self.un(UnOp::Neg)
+    }
+
+    pub fn exp(&self) -> Vec1 {
+        self.un(UnOp::Exp)
+    }
+
+    pub fn min_ew(&self, other: &Vec1) -> Vec1 {
+        self.ew(BinOp::Min, &other.node)
+    }
+
+    pub fn max_ew(&self, other: &Vec1) -> Vec1 {
+        self.ew(BinOp::Max, &other.node)
+    }
+
+    /// `section(v, start, len)` — contiguous slice (virtual).
+    pub fn section(&self, start: usize, len: usize) -> Vec1 {
+        self.section_strided(start, len, 1)
+    }
+
+    /// `section(v, start, len, stride)` — strided slice (virtual). The
+    /// FFT's even/odd splits use stride 2.
+    pub fn section_strided(&self, start: usize, len: usize, stride: usize) -> Vec1 {
+        assert!(len == 0 || start + (len - 1) * stride < self.len(), "section out of range");
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::Section { v: self.node.clone(), start, len, stride },
+                Shape::D1(len),
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Cyclic tile: `repeat(v, times)` (virtual).
+    pub fn repeat(&self, times: usize) -> Vec1 {
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::Repeat { v: self.node.clone(), times },
+                Shape::D1(self.len() * times),
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Matrix whose every row is `self` (virtual): `t(m,k) = v(k)`.
+    pub fn repeat_row(&self, rows: usize) -> Mat2 {
+        Mat2 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::RepeatRow { v: self.node.clone(), rows },
+                Shape::D2 { rows, cols: self.len() },
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Matrix whose every column is `self` (virtual): `t(m,k) = v(m)`.
+    pub fn repeat_col(&self, cols: usize) -> Mat2 {
+        Mat2 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::RepeatCol { v: self.node.clone(), cols },
+                Shape::D2 { rows: self.len(), cols },
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Concatenation (materialising — the FFT's `cat(up, down)`).
+    pub fn cat(&self, other: &Vec1) -> Vec1 {
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::Cat(self.node.clone(), other.node.clone()),
+                Shape::D1(self.len() + other.len()),
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Gather: `out[k] = self[idx[k]]`.
+    pub fn gather(&self, idx: &VecI64) -> Vec1 {
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::Gather { src: self.node.clone(), idx: idx.node.clone() },
+                Shape::D1(idx.node.shape.len()),
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Full sum reduction → scalar (the paper's `add_reduce(v)`).
+    pub fn add_reduce(&self) -> Scal {
+        Scal {
+            ctx: self.ctx.clone(),
+            node: Node::new(Op::ReduceAll(RedOp::Sum, self.node.clone()), Shape::Scalar, DType::F64),
+        }
+    }
+
+    pub fn max_reduce(&self) -> Scal {
+        Scal {
+            ctx: self.ctx.clone(),
+            node: Node::new(Op::ReduceAll(RedOp::Max, self.node.clone()), Shape::Scalar, DType::F64),
+        }
+    }
+
+    pub fn min_reduce(&self) -> Scal {
+        Scal {
+            ctx: self.ctx.clone(),
+            node: Node::new(Op::ReduceAll(RedOp::Min, self.node.clone()), Shape::Scalar, DType::F64),
+        }
+    }
+
+    /// Dot product `Σ self·other` (fuses into a single pass).
+    pub fn dot(&self, other: &Vec1) -> Scal {
+        (self * other).add_reduce()
+    }
+
+    /// Force evaluation and copy out (the paper's `read_only_range`).
+    pub fn to_vec(&self) -> Vec<f64> {
+        self.ctx.force(&self.node);
+        self.node.data().expect("forced").as_f64().as_ref().clone()
+    }
+
+    /// Force evaluation and copy into a host buffer.
+    pub fn read_to(&self, out: &mut [f64]) {
+        self.ctx.force(&self.node);
+        let d = self.node.data().expect("forced");
+        out.copy_from_slice(d.as_f64());
+    }
+
+    /// Force evaluation without reading (ArBB sync).
+    pub fn eval(&self) {
+        self.ctx.force(&self.node);
+    }
+}
+
+macro_rules! impl_vec_binop {
+    ($trait:ident, $method:ident, $op:expr, $lhs:ty, $rhs:ty) => {
+        impl std::ops::$trait<$rhs> for $lhs {
+            type Output = Vec1;
+            fn $method(self, rhs: $rhs) -> Vec1 {
+                self.ew($op, &rhs.node)
+            }
+        }
+    };
+}
+
+impl_vec_binop!(Add, add, BinOp::Add, &Vec1, &Vec1);
+impl_vec_binop!(Sub, sub, BinOp::Sub, &Vec1, &Vec1);
+impl_vec_binop!(Mul, mul, BinOp::Mul, &Vec1, &Vec1);
+impl_vec_binop!(Div, div, BinOp::Div, &Vec1, &Vec1);
+impl_vec_binop!(Add, add, BinOp::Add, &Vec1, &Scal);
+impl_vec_binop!(Sub, sub, BinOp::Sub, &Vec1, &Scal);
+impl_vec_binop!(Mul, mul, BinOp::Mul, &Vec1, &Scal);
+impl_vec_binop!(Div, div, BinOp::Div, &Vec1, &Scal);
+
+impl std::ops::Add<&Vec1> for Vec1 {
+    type Output = Vec1;
+    fn add(self, rhs: &Vec1) -> Vec1 {
+        (&self).add(rhs)
+    }
+}
+impl std::ops::Sub<&Vec1> for Vec1 {
+    type Output = Vec1;
+    fn sub(self, rhs: &Vec1) -> Vec1 {
+        (&self).sub(rhs)
+    }
+}
+impl std::ops::Mul<&Vec1> for Vec1 {
+    type Output = Vec1;
+    fn mul(self, rhs: &Vec1) -> Vec1 {
+        (&self).mul(rhs)
+    }
+}
+impl std::ops::Add<Vec1> for Vec1 {
+    type Output = Vec1;
+    fn add(self, rhs: Vec1) -> Vec1 {
+        (&self).add(&rhs)
+    }
+}
+impl std::ops::Sub<Vec1> for Vec1 {
+    type Output = Vec1;
+    fn sub(self, rhs: Vec1) -> Vec1 {
+        (&self).sub(&rhs)
+    }
+}
+impl std::ops::Mul<Vec1> for Vec1 {
+    type Output = Vec1;
+    fn mul(self, rhs: Vec1) -> Vec1 {
+        (&self).mul(&rhs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mat2
+// ---------------------------------------------------------------------
+
+impl Mat2 {
+    pub fn rows(&self) -> usize {
+        self.node.shape.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.node.shape.cols()
+    }
+
+    fn ew(&self, op: BinOp, rhs: &NodeRef) -> Mat2 {
+        let shape = ew_shape(&self.node, rhs);
+        Mat2 { ctx: self.ctx.clone(), node: bin_any(&self.ctx, op, &self.node, rhs, shape) }
+    }
+
+    /// Row `i` (virtual).
+    pub fn row(&self, i: usize) -> Vec1 {
+        assert!(i < self.rows(), "row out of range");
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(Op::Row(self.node.clone(), i), Shape::D1(self.cols()), DType::F64),
+        }
+    }
+
+    /// Column `j` (virtual).
+    pub fn col(&self, j: usize) -> Vec1 {
+        assert!(j < self.cols(), "col out of range");
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(Op::Col(self.node.clone(), j), Shape::D1(self.rows()), DType::F64),
+        }
+    }
+
+    /// `replace_col(c, i, v)` — functional column update.
+    pub fn replace_col(&self, col: usize, v: &Vec1) -> Mat2 {
+        assert!(col < self.cols());
+        assert_eq!(v.len(), self.rows(), "replace_col length mismatch");
+        Mat2 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::ReplaceCol { m: self.node.clone(), col, v: v.node.clone() },
+                self.node.shape,
+                DType::F64,
+            ),
+        }
+    }
+
+    /// `replace_row(c, i, v)` — functional row update.
+    pub fn replace_row(&self, row: usize, v: &Vec1) -> Mat2 {
+        assert!(row < self.rows());
+        assert_eq!(v.len(), self.cols(), "replace_row length mismatch");
+        Mat2 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::ReplaceRow { m: self.node.clone(), row, v: v.node.clone() },
+                self.node.shape,
+                DType::F64,
+            ),
+        }
+    }
+
+    /// `c(i,j) = s` — functional element store (the `arbb_mxm0` pattern).
+    ///
+    /// Forces eagerly: per-element stores are individual dispatches in
+    /// ArBB too, which is exactly why `arbb_mxm0` is slow and serial.
+    pub fn set_elem(&self, i: usize, j: usize, s: &Scal) -> Mat2 {
+        assert!(i < self.rows() && j < self.cols());
+        // The scalar must be materialised before the store executes.
+        self.ctx.force(&s.node);
+        let out = Mat2 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::SetElem { m: self.node.clone(), i, j, s: s.node.clone() },
+                self.node.shape,
+                DType::F64,
+            ),
+        };
+        self.ctx.force(&out.node);
+        out
+    }
+
+    /// Reduce along dimension 0 (within each row): the paper's
+    /// `add_reduce(d, 0)`, producing `v(m) = Σ_k d(m,k)`.
+    pub fn add_reduce_rows(&self) -> Vec1 {
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::ReduceRows(RedOp::Sum, self.node.clone()),
+                Shape::D1(self.rows()),
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Reduce along dimension 1 (within each column): `v(k) = Σ_m d(m,k)`.
+    pub fn add_reduce_cols(&self) -> Vec1 {
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::ReduceCols(RedOp::Sum, self.node.clone()),
+                Shape::D1(self.cols()),
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Full reduction to a scalar.
+    pub fn add_reduce_all(&self) -> Scal {
+        Scal {
+            ctx: self.ctx.clone(),
+            node: Node::new(Op::ReduceAll(RedOp::Sum, self.node.clone()), Shape::Scalar, DType::F64),
+        }
+    }
+
+    /// Flatten to a vector (virtual reshape).
+    pub fn flatten(&self) -> Vec1 {
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::Reshape(self.node.clone(), Shape::D1(self.rows() * self.cols())),
+                Shape::D1(self.rows() * self.cols()),
+                DType::F64,
+            ),
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<f64> {
+        self.ctx.force(&self.node);
+        self.node.data().expect("forced").as_f64().as_ref().clone()
+    }
+
+    pub fn read_to(&self, out: &mut [f64]) {
+        self.ctx.force(&self.node);
+        out.copy_from_slice(self.node.data().expect("forced").as_f64());
+    }
+
+    pub fn eval(&self) {
+        self.ctx.force(&self.node);
+    }
+}
+
+macro_rules! impl_mat_binop {
+    ($trait:ident, $method:ident, $op:expr, $rhs:ty) => {
+        impl std::ops::$trait<$rhs> for &Mat2 {
+            type Output = Mat2;
+            fn $method(self, rhs: $rhs) -> Mat2 {
+                self.ew($op, &rhs.node)
+            }
+        }
+    };
+}
+
+impl_mat_binop!(Add, add, BinOp::Add, &Mat2);
+impl_mat_binop!(Sub, sub, BinOp::Sub, &Mat2);
+impl_mat_binop!(Mul, mul, BinOp::Mul, &Mat2);
+impl_mat_binop!(Div, div, BinOp::Div, &Mat2);
+impl_mat_binop!(Add, add, BinOp::Add, &Scal);
+impl_mat_binop!(Mul, mul, BinOp::Mul, &Scal);
+
+impl std::ops::Add<Mat2> for Mat2 {
+    type Output = Mat2;
+    fn add(self, rhs: Mat2) -> Mat2 {
+        (&self).add(&rhs)
+    }
+}
+impl std::ops::Add<&Mat2> for Mat2 {
+    type Output = Mat2;
+    fn add(self, rhs: &Mat2) -> Mat2 {
+        (&self).add(rhs)
+    }
+}
+impl std::ops::Mul<&Mat2> for Mat2 {
+    type Output = Mat2;
+    fn mul(self, rhs: &Mat2) -> Mat2 {
+        (&self).mul(rhs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scal
+// ---------------------------------------------------------------------
+
+impl Scal {
+    fn ew(&self, op: BinOp, rhs: &NodeRef) -> Scal {
+        Scal { ctx: self.ctx.clone(), node: bin_any(&self.ctx, op, &self.node, rhs, Shape::Scalar) }
+    }
+
+    pub fn sqrt(&self) -> Scal {
+        if let Some(f) = constfold::fold_un(UnOp::Sqrt, &self.node) {
+            return Scal { ctx: self.ctx.clone(), node: f };
+        }
+        Scal {
+            ctx: self.ctx.clone(),
+            node: Node::new(Op::Un(UnOp::Sqrt, self.node.clone()), Shape::Scalar, DType::F64),
+        }
+    }
+
+    /// Force evaluation and read the value (a `_while` condition read —
+    /// the per-iteration sync point of the CG driver).
+    pub fn value(&self) -> f64 {
+        self.ctx.force(&self.node);
+        if let Some(c) = super::plan::const_value(&self.node) {
+            return c;
+        }
+        self.node.data().expect("forced scalar").as_f64()[0]
+    }
+}
+
+macro_rules! impl_scal_binop {
+    ($trait:ident, $method:ident, $op:expr) => {
+        impl std::ops::$trait<&Scal> for &Scal {
+            type Output = Scal;
+            fn $method(self, rhs: &Scal) -> Scal {
+                self.ew($op, &rhs.node)
+            }
+        }
+        impl std::ops::$trait<f64> for &Scal {
+            type Output = Scal;
+            fn $method(self, rhs: f64) -> Scal {
+                let c = Node::new(Op::ConstF64(rhs), Shape::Scalar, DType::F64);
+                self.ew($op, &c)
+            }
+        }
+    };
+}
+
+impl_scal_binop!(Add, add, BinOp::Add);
+impl_scal_binop!(Sub, sub, BinOp::Sub);
+impl_scal_binop!(Mul, mul, BinOp::Mul);
+impl_scal_binop!(Div, div, BinOp::Div);
+
+// ---------------------------------------------------------------------
+// VecI64
+// ---------------------------------------------------------------------
+
+impl VecI64 {
+    pub fn len(&self) -> usize {
+        self.node.shape.len()
+    }
+
+    /// Owning context (index containers participate in `map` captures of
+    /// the same context).
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_vec(&self) -> Vec<i64> {
+        // i64 containers are sources; no forcing machinery needed.
+        self.node.data().expect("i64 source").as_i64().as_ref().clone()
+    }
+}
+
+// ---------------------------------------------------------------------
+// CplxV — split-complex helpers for the FFT port
+// ---------------------------------------------------------------------
+
+impl CplxV {
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    pub fn add(&self, o: &CplxV) -> CplxV {
+        CplxV { re: &self.re + &o.re, im: &self.im + &o.im }
+    }
+
+    pub fn sub(&self, o: &CplxV) -> CplxV {
+        CplxV { re: &self.re - &o.re, im: &self.im - &o.im }
+    }
+
+    /// Complex element-wise multiply (the twiddle application):
+    /// `(a+bi)(c+di) = (ac-bd) + (ad+bc)i`.
+    pub fn mul(&self, o: &CplxV) -> CplxV {
+        let re = (&self.re * &o.re) - (&self.im * &o.im);
+        let im = (&self.re * &o.im) + (&self.im * &o.re);
+        CplxV { re, im }
+    }
+
+    pub fn section_strided(&self, start: usize, len: usize, stride: usize) -> CplxV {
+        CplxV {
+            re: self.re.section_strided(start, len, stride),
+            im: self.im.section_strided(start, len, stride),
+        }
+    }
+
+    pub fn cat(&self, o: &CplxV) -> CplxV {
+        CplxV { re: self.re.cat(&o.re), im: self.im.cat(&o.im) }
+    }
+
+    pub fn repeat(&self, times: usize) -> CplxV {
+        CplxV { re: self.re.repeat(times), im: self.im.repeat(times) }
+    }
+
+    pub fn section(&self, start: usize, len: usize) -> CplxV {
+        self.section_strided(start, len, 1)
+    }
+
+    /// Force both planes and return interleaved `[re0, im0, …]`.
+    pub fn to_interleaved(&self) -> Vec<f64> {
+        let re = self.re.to_vec();
+        let im = self.im.to_vec();
+        let mut out = Vec::with_capacity(re.len() * 2);
+        for i in 0..re.len() {
+            out.push(re[i]);
+            out.push(im[i]);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::new()
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let c = ctx();
+        let a = c.bind1(&[1.0, 2.0, 3.0]);
+        let b = c.bind1(&[4.0, 5.0, 6.0]);
+        assert_eq!((&a + &b).to_vec(), vec![5.0, 7.0, 9.0]);
+        assert_eq!((&a - &b).to_vec(), vec![-3.0, -3.0, -3.0]);
+        assert_eq!((&a * &b).to_vec(), vec![4.0, 10.0, 18.0]);
+        assert_eq!((&b / &a).to_vec(), vec![4.0, 2.5, 2.0]);
+        assert_eq!(a.scale(2.0).to_vec(), vec![2.0, 4.0, 6.0]);
+        assert_eq!(a.neg().to_vec(), vec![-1.0, -2.0, -3.0]);
+    }
+
+    #[test]
+    fn reductions_and_dot() {
+        let c = ctx();
+        let a = c.bind1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.add_reduce().value(), 10.0);
+        assert_eq!(a.max_reduce().value(), 4.0);
+        assert_eq!(a.min_reduce().value(), 1.0);
+        let b = c.bind1(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.dot(&b).value(), 10.0);
+    }
+
+    #[test]
+    fn sections_and_repeats() {
+        let c = ctx();
+        let a = c.bind1(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(a.section(2, 3).to_vec(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(a.section_strided(0, 4, 2).to_vec(), vec![0.0, 2.0, 4.0, 6.0]);
+        assert_eq!(a.section_strided(1, 4, 2).to_vec(), vec![1.0, 3.0, 5.0, 7.0]);
+        let t = c.bind1(&[9.0, 8.0]);
+        assert_eq!(t.repeat(3).to_vec(), vec![9.0, 8.0, 9.0, 8.0, 9.0, 8.0]);
+    }
+
+    #[test]
+    fn matrix_row_col_and_reduce() {
+        let c = ctx();
+        // 2x3: [1 2 3; 4 5 6]
+        let m = c.bind2(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(m.row(1).to_vec(), vec![4.0, 5.0, 6.0]);
+        assert_eq!(m.col(2).to_vec(), vec![3.0, 6.0]);
+        assert_eq!(m.add_reduce_rows().to_vec(), vec![6.0, 15.0]);
+        assert_eq!(m.add_reduce_cols().to_vec(), vec![5.0, 7.0, 9.0]);
+        assert_eq!(m.add_reduce_all().value(), 21.0);
+    }
+
+    #[test]
+    fn repeat_row_col_matrices() {
+        let c = ctx();
+        let v = c.bind1(&[1.0, 2.0, 3.0]);
+        // every row is v
+        assert_eq!(
+            v.repeat_row(2).to_vec(),
+            vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0],
+        );
+        // every column is v
+        assert_eq!(
+            v.repeat_col(2).to_vec(),
+            vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0],
+        );
+    }
+
+    #[test]
+    fn replace_col_and_set_elem() {
+        let c = ctx();
+        let m = c.zeros2(2, 2);
+        let v = c.bind1(&[7.0, 8.0]);
+        let m2 = m.replace_col(1, &v);
+        assert_eq!(m2.to_vec(), vec![0.0, 7.0, 0.0, 8.0]);
+        let s = c.scalar(5.0);
+        let m3 = m2.set_elem(0, 0, &s);
+        assert_eq!(m3.to_vec(), vec![5.0, 7.0, 0.0, 8.0]);
+    }
+
+    #[test]
+    fn cat_and_gather() {
+        let c = ctx();
+        let a = c.bind1(&[1.0, 2.0]);
+        let b = c.bind1(&[3.0, 4.0, 5.0]);
+        assert_eq!(a.cat(&b).to_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let src = c.bind1(&[10.0, 20.0, 30.0]);
+        let idx = c.bind_i64(&[2, 0, 1, 2]);
+        assert_eq!(src.gather(&idx).to_vec(), vec![30.0, 10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn scalar_arithmetic_and_folding() {
+        let c = ctx();
+        let a = c.scalar(3.0);
+        let b = c.scalar(4.0);
+        let d = &(&a * &b) + 2.0;
+        // fully folded at capture: no engine dispatch needed
+        assert_eq!(d.value(), 14.0);
+        assert_eq!(c.stats(|s| s.steps), 0, "const chain should fold at capture");
+    }
+
+    #[test]
+    fn scalar_broadcast_over_vector() {
+        let c = ctx();
+        let a = c.bind1(&[1.0, 2.0, 3.0]);
+        let s = a.add_reduce(); // 6.0
+        let scaled = (&a * &s).to_vec();
+        assert_eq!(scaled, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn mxm1_pattern() {
+        // c_mi = Σ_n a_mn b_ni  via repeat_row + elementwise + reduce.
+        let c = ctx();
+        let n = 3;
+        let a_host = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let b_host = [9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        let a = c.bind2(&a_host, n, n);
+        let b = c.bind2(&b_host, n, n);
+        let mut cm = c.zeros2(n, n);
+        for i in 0..n {
+            let t = b.col(i).repeat_row(n);
+            let d = &a * &t;
+            cm = cm.replace_col(i, &d.add_reduce_rows());
+        }
+        let got = cm.to_vec();
+        // reference
+        let mut want = vec![0.0; n * n];
+        for m in 0..n {
+            for i in 0..n {
+                for k in 0..n {
+                    want[m * n + i] += a_host[m * n + k] * b_host[k * n + i];
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mxm2a_pattern() {
+        // c += repeat_col(a.col(i), n) * repeat_row(b.row(i), n)
+        let c = ctx();
+        let n = 3;
+        let a_host: Vec<f64> = (1..=9).map(|x| x as f64).collect();
+        let b_host: Vec<f64> = (1..=9).rev().map(|x| x as f64).collect();
+        let a = c.bind2(&a_host, n, n);
+        let b = c.bind2(&b_host, n, n);
+        let mut cm = a.col(0).repeat_col(n) * &b.row(0).repeat_row(n);
+        for i in 1..n {
+            cm = cm + (a.col(i).repeat_col(n) * &b.row(i).repeat_row(n));
+        }
+        let got = cm.to_vec();
+        let mut want = vec![0.0; n * n];
+        for m in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    want[m * n + j] += a_host[m * n + k] * b_host[k * n + j];
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cplx_mul() {
+        let c = ctx();
+        // (1+2i)(3+4i) = -5 + 10i
+        let x = CplxV { re: c.bind1(&[1.0]), im: c.bind1(&[2.0]) };
+        let y = CplxV { re: c.bind1(&[3.0]), im: c.bind1(&[4.0]) };
+        let z = x.mul(&y);
+        assert_eq!(z.re.to_vec(), vec![-5.0]);
+        assert_eq!(z.im.to_vec(), vec![10.0]);
+    }
+
+    #[test]
+    fn map_spmv_style() {
+        use std::sync::Arc;
+        let c = ctx();
+        // 2x2 matrix [[1,2],[0,3]] in CSR
+        let vals = c.bind1(&[1.0, 2.0, 3.0]);
+        let invec = c.bind1(&[10.0, 100.0]);
+        let indx = c.bind_i64(&[0, 1, 1]);
+        let rowp = c.bind_i64(&[0, 2, 3]);
+        let out = c.map(
+            2,
+            MapCaptures::new().f64(&vals).f64(&invec).i64(&indx).i64(&rowp),
+            Arc::new(|args, row| {
+                let (vals, invec) = (args.f(0), args.f(1));
+                let (indx, rowp) = (args.i(0), args.i(1));
+                let mut acc = 0.0;
+                for k in rowp[row]..rowp[row + 1] {
+                    acc += vals[k as usize] * invec[indx[k as usize] as usize];
+                }
+                acc
+            }),
+            4.0,
+            48.0,
+            "spmv_test",
+        );
+        assert_eq!(out.to_vec(), vec![210.0, 300.0]);
+    }
+}

@@ -1,0 +1,441 @@
+//! Block-wise evaluator for fused expression trees.
+//!
+//! A lowered [`FExec`] tree is evaluated over a range of flat output
+//! indices in cache-resident blocks: each operator processes one block
+//! (`BLOCK` elements) at a time, so fused chains make a single pass over
+//! main memory regardless of chain length — the optimisation ArBB's JIT
+//! performs when it compiles a captured closure.
+
+use std::sync::Arc;
+
+use crate::coordinator::ops::{BinOp, UnOp};
+use crate::coordinator::plan::FTree;
+use crate::coordinator::shape::View;
+
+/// Elements per evaluation block (16 KiB of f64 — comfortably L1-resident
+/// together with a few scratch blocks).
+pub const BLOCK: usize = 2048;
+
+/// Execution-side fused tree: leaves are resolved to concrete buffers.
+/// `Send + Sync` so parallel workers can share it.
+#[derive(Debug, Clone)]
+pub enum FExec {
+    Leaf { data: Arc<Vec<f64>>, view: View },
+    Const(f64),
+    Iota,
+    /// In-place accumulation marker: the output block already holds the
+    /// base values; evaluating `Acc` is a no-op. Only valid as the
+    /// left-most leaf (validated at lowering).
+    Acc,
+    Bin(BinOp, Box<FExec>, Box<FExec>),
+    Un(UnOp, Box<FExec>),
+}
+
+impl FExec {
+    /// Validate the `Acc` placement invariant: `Acc` may only appear on
+    /// the left spine (so left-first evaluation never overwrites the base
+    /// values before they are consumed).
+    pub fn acc_placement_ok(&self) -> bool {
+        fn scan(t: &FExec, leftmost: bool) -> bool {
+            match t {
+                FExec::Acc => leftmost,
+                FExec::Bin(_, l, r) => scan(l, leftmost) && scan(r, false),
+                FExec::Un(_, a) => scan(a, leftmost),
+                _ => true,
+            }
+        }
+        scan(self, true)
+    }
+}
+
+/// Resolve an [`FTree`] into an executable [`FExec`], reading leaf
+/// storages (all dependencies have been materialised by earlier steps).
+pub fn lower(tree: &FTree) -> FExec {
+    let fx = lower_inner(tree);
+    debug_assert!(fx.acc_placement_ok(), "Acc leaf must be on the left spine");
+    fx
+}
+
+fn lower_inner(tree: &FTree) -> FExec {
+    match tree {
+        FTree::Leaf { node, view } => {
+            let data = node
+                .data()
+                .unwrap_or_else(|| panic!("leaf {} not materialised at lowering", node.id));
+            FExec::Leaf { data: data.as_f64().clone(), view: *view }
+        }
+        FTree::ScalarLeaf { node } => {
+            let data = node
+                .data()
+                .unwrap_or_else(|| panic!("scalar leaf {} not materialised", node.id));
+            FExec::Const(data.as_f64()[0])
+        }
+        FTree::Const(c) => FExec::Const(*c),
+        FTree::Iota => FExec::Iota,
+        FTree::Acc => FExec::Acc,
+        FTree::Bin(op, a, b) => FExec::Bin(*op, Box::new(lower_inner(a)), Box::new(lower_inner(b))),
+        FTree::Un(op, a) => FExec::Un(*op, Box::new(lower_inner(a))),
+    }
+}
+
+/// Scratch block pool: one per worker; blocks are recycled across
+/// operators and evaluation calls.
+#[derive(Default)]
+pub struct Scratch {
+    free: Vec<Vec<f64>>,
+}
+
+impl Scratch {
+    pub fn take(&mut self) -> Vec<f64> {
+        self.free.pop().unwrap_or_else(|| vec![0.0; BLOCK])
+    }
+
+    pub fn put(&mut self, b: Vec<f64>) {
+        if self.free.len() < 64 {
+            self.free.push(b);
+        }
+    }
+}
+
+thread_local! {
+    static TLS_SCRATCH: std::cell::RefCell<Scratch> =
+        std::cell::RefCell::new(Scratch::default());
+}
+
+/// Run `f` with this thread's persistent scratch pool (blocks survive
+/// across steps and chunks — allocating per chunk showed up in profiles;
+/// EXPERIMENTS.md §Perf iteration 2).
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    TLS_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Evaluate `fx` for flat output indices `[start, start+out.len())`.
+///
+/// The caller supplies arbitrary ranges (chunks); evaluation proceeds in
+/// `BLOCK`-sized sub-blocks internally.
+pub fn eval_range(fx: &FExec, start: usize, out: &mut [f64], scratch: &mut Scratch) {
+    let mut off = 0;
+    while off < out.len() {
+        let len = BLOCK.min(out.len() - off);
+        eval_block(fx, start + off, &mut out[off..off + len], scratch);
+        off += len;
+    }
+}
+
+/// Evaluate one block (`out.len() <= BLOCK`).
+fn eval_block(fx: &FExec, start: usize, out: &mut [f64], scratch: &mut Scratch) {
+    match fx {
+        FExec::Const(c) => out.fill(*c),
+        FExec::Iota => {
+            for (k, o) in out.iter_mut().enumerate() {
+                *o = (start + k) as f64;
+            }
+        }
+        FExec::Acc => {
+            // The output block already holds the accumulation base.
+        }
+        FExec::Leaf { data, view } => fill_view(data, view, start, out),
+        FExec::Un(op, a) => {
+            eval_block(a, start, out, scratch);
+            // apply in place
+            match op {
+                UnOp::Neg => out.iter_mut().for_each(|x| *x = -*x),
+                UnOp::Abs => out.iter_mut().for_each(|x| *x = x.abs()),
+                UnOp::Sqrt => out.iter_mut().for_each(|x| *x = x.sqrt()),
+                UnOp::Exp => out.iter_mut().for_each(|x| *x = x.exp()),
+                UnOp::Ln => out.iter_mut().for_each(|x| *x = x.ln()),
+                UnOp::Recip => out.iter_mut().for_each(|x| *x = 1.0 / *x),
+            }
+        }
+        FExec::Bin(op, l, r) => {
+            // Left into `out`, right into scratch, combine in place.
+            eval_block(l, start, out, scratch);
+            match &**r {
+                FExec::Const(c) => op.apply_slice_scalar_inplace(out, *c),
+                // Rank-1-update pattern (the arbb_mxm2a/2b hot loop):
+                // out ±= colbcast(a) * rowleaf(b) — one fused pass, no
+                // temporaries (EXPERIMENTS.md §Perf iteration 3).
+                FExec::Bin(BinOp::Mul, p, q)
+                    if matches!(op, BinOp::Add | BinOp::Sub)
+                        && axpy_operands(p, q).is_some() =>
+                {
+                    let (da, va, db, vb) = axpy_operands(p, q).unwrap();
+                    axpy_pattern(*op, da, va, db, vb, start, out);
+                }
+                _ => {
+                    let mut tmp = scratch.take();
+                    let t = &mut tmp[..out.len()];
+                    eval_block(r, start, t, scratch);
+                    op.apply_slices_inplace(out, t);
+                    scratch.put(tmp);
+                }
+            }
+        }
+    }
+}
+
+/// Match the `colbcast(a) * rowleaf(b)` operand pair of a rank-1 update:
+/// `p` broadcasts along columns (`col_stride == 0`, no modulo), `q` is a
+/// unit-stride row view (possibly cyclic — `repeat_row` composes to a
+/// modulo view). Returns the leaves in (bcast, row) order, commuting if
+/// needed.
+#[allow(clippy::type_complexity)]
+fn axpy_operands<'a>(
+    p: &'a FExec,
+    q: &'a FExec,
+) -> Option<(&'a [f64], &'a View, &'a [f64], &'a View)> {
+    let classify = |t: &'a FExec| match t {
+        FExec::Leaf { data, view } => Some((data.as_slice(), view)),
+        _ => None,
+    };
+    let (pa, pv) = classify(p)?;
+    let (qa, qv) = classify(q)?;
+    let is_bcast = |v: &View| v.col_stride == 0 && v.modulo.is_none();
+    let is_row = |v: &View| v.col_stride == 1;
+    if is_bcast(pv) && is_row(qv) {
+        Some((pa, pv, qa, qv))
+    } else if is_bcast(qv) && is_row(pv) {
+        Some((qa, qv, pa, pv))
+    } else {
+        None
+    }
+}
+
+/// `out[seg] op= a_r * b[seg]` per output-row segment.
+fn axpy_pattern(
+    op: BinOp,
+    da: &[f64],
+    va: &View,
+    db: &[f64],
+    vb: &View,
+    start: usize,
+    out: &mut [f64],
+) {
+    let oc = va.out_cols.max(1);
+    let len = out.len();
+    let mut pos = 0usize;
+    let mut r = start / oc;
+    let mut c = start % oc;
+    while pos < len {
+        let seg = (oc - c).min(len - pos);
+        let f = da[va.base + r * va.row_stride];
+        let f = if op == BinOp::Sub { -f } else { f };
+        // source segment through vb (cs == 1), splitting at cyclic wraps
+        let mut done = 0usize;
+        while done < seg {
+            let lin = r * vb.row_stride + (c + done);
+            let (off, room) = match vb.modulo {
+                Some(m) => (lin % m, m - lin % m),
+                None => (lin, usize::MAX),
+            };
+            let take = room.min(seg - done);
+            let src = &db[vb.base + off..vb.base + off + take];
+            let dst = &mut out[pos + done..pos + done + take];
+            for i in 0..take {
+                dst[i] += f * src[i];
+            }
+            done += take;
+        }
+        pos += seg;
+        r += 1;
+        c = 0;
+    }
+}
+
+/// Gather a block through an affine view.
+///
+/// Decomposed into *row segments* of the output space so each segment is
+/// one of four specialised inner loops (memcpy, broadcast fill, strided
+/// gather, cyclic copy) — the per-element `(r, c)` bookkeeping of the
+/// naive formulation was the single hottest path of the whole engine
+/// (EXPERIMENTS.md §Perf, iteration 1).
+fn fill_view(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
+    let len = out.len();
+    // Fully contiguous: one memcpy.
+    if view.is_contiguous() {
+        let s = view.base + start;
+        out.copy_from_slice(&data[s..s + len]);
+        return;
+    }
+    let oc = view.out_cols.max(1);
+    let mut pos = 0usize;
+    let mut r = start / oc;
+    let mut c = start % oc;
+    while pos < len {
+        let seg = (oc - c).min(len - pos);
+        fill_segment(data, view, r, c, &mut out[pos..pos + seg]);
+        pos += seg;
+        r += 1;
+        c = 0;
+    }
+}
+
+/// Fill one output-row segment (constant `r`, columns `c0..c0+seg`).
+#[inline]
+fn fill_segment(data: &[f64], view: &View, r: usize, c0: usize, out: &mut [f64]) {
+    let lin0 = r * view.row_stride + c0 * view.col_stride;
+    match view.modulo {
+        None => {
+            let s0 = view.base + lin0;
+            if view.col_stride == 0 {
+                // row broadcast (repeat_col leaves): constant segment
+                out.fill(data[s0]);
+            } else if view.col_stride == 1 {
+                // unit stride within the row (repeat_row / row views)
+                out.copy_from_slice(&data[s0..s0 + out.len()]);
+            } else {
+                // strided gather (column views, strided sections)
+                let cs = view.col_stride;
+                let mut s = s0;
+                for o in out.iter_mut() {
+                    *o = data[s];
+                    s += cs;
+                }
+            }
+        }
+        Some(m) => {
+            // cyclic view (repeat): wrap by subtraction — col_stride never
+            // exceeds the period by construction (compose scales both).
+            let cs = view.col_stride;
+            let mut lin = lin0 % m;
+            for o in out.iter_mut() {
+                *o = data[view.base + lin];
+                lin += cs;
+                if lin >= m {
+                    lin %= m;
+                }
+            }
+        }
+    }
+}
+
+impl BinOp {
+    /// `out[i] = op(out[i], s)` — scalar right operand, in place.
+    #[inline]
+    pub fn apply_slice_scalar_inplace(self, out: &mut [f64], s: f64) {
+        match self {
+            BinOp::Add => out.iter_mut().for_each(|x| *x += s),
+            BinOp::Sub => out.iter_mut().for_each(|x| *x -= s),
+            BinOp::Mul => out.iter_mut().for_each(|x| *x *= s),
+            BinOp::Div => {
+                let inv = 1.0 / s;
+                out.iter_mut().for_each(|x| *x *= inv)
+            }
+            BinOp::Min => out.iter_mut().for_each(|x| *x = x.min(s)),
+            BinOp::Max => out.iter_mut().for_each(|x| *x = x.max(s)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(data: Vec<f64>, view: View) -> FExec {
+        FExec::Leaf { data: Arc::new(data), view }
+    }
+
+    #[test]
+    fn eval_contiguous_add() {
+        let a = leaf(vec![1.0, 2.0, 3.0, 4.0], View::identity(4));
+        let b = leaf(vec![10.0, 20.0, 30.0, 40.0], View::identity(4));
+        let fx = FExec::Bin(BinOp::Add, Box::new(a), Box::new(b));
+        let mut out = vec![0.0; 4];
+        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn eval_scalar_rhs() {
+        let a = leaf(vec![1.0, 2.0], View::identity(2));
+        let fx = FExec::Bin(BinOp::Mul, Box::new(a), Box::new(FExec::Const(3.0)));
+        let mut out = vec![0.0; 2];
+        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        assert_eq!(out, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn eval_strided_view() {
+        // even elements of an 8-vector
+        let v = View { base: 0, row_stride: 0, col_stride: 2, out_cols: 4, modulo: None };
+        let fx = leaf((0..8).map(|x| x as f64).collect(), v);
+        let mut out = vec![0.0; 4];
+        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        assert_eq!(out, vec![0.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn eval_modulo_view() {
+        let v = View { base: 0, row_stride: 4, col_stride: 1, out_cols: 4, modulo: Some(2) };
+        let fx = leaf(vec![7.0, 9.0], v);
+        let mut out = vec![0.0; 8];
+        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        assert_eq!(out, vec![7.0, 9.0, 7.0, 9.0, 7.0, 9.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn eval_range_with_offset() {
+        // Evaluating a sub-range must agree with evaluating the whole.
+        let n = 100;
+        let data: Vec<f64> = (0..n).map(|x| (x * x) as f64).collect();
+        let fx = FExec::Un(
+            UnOp::Sqrt,
+            Box::new(leaf(data.clone(), View::identity(10))),
+        );
+        let mut full = vec![0.0; n];
+        eval_range(&fx, 0, &mut full, &mut Scratch::default());
+        let mut part = vec![0.0; 30];
+        eval_range(&fx, 25, &mut part, &mut Scratch::default());
+        assert_eq!(&full[25..55], part.as_slice());
+    }
+
+    #[test]
+    fn eval_iota() {
+        let fx = FExec::Iota;
+        let mut out = vec![0.0; 5];
+        eval_range(&fx, 10, &mut out, &mut Scratch::default());
+        assert_eq!(out, vec![10.0, 11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn acc_placement() {
+        let ok = FExec::Bin(
+            BinOp::Add,
+            Box::new(FExec::Acc),
+            Box::new(FExec::Const(1.0)),
+        );
+        assert!(ok.acc_placement_ok());
+        let bad = FExec::Bin(
+            BinOp::Add,
+            Box::new(FExec::Const(1.0)),
+            Box::new(FExec::Acc),
+        );
+        assert!(!bad.acc_placement_ok());
+    }
+
+    #[test]
+    fn eval_accumulate_inplace() {
+        // out starts as base; fx = Acc + leaf
+        let addend = leaf(vec![1.0, 2.0, 3.0], View::identity(3));
+        let fx = FExec::Bin(BinOp::Add, Box::new(FExec::Acc), Box::new(addend));
+        let mut out = vec![10.0, 20.0, 30.0];
+        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        assert_eq!(out, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn blocks_cross_boundaries() {
+        let n = BLOCK * 3 + 17;
+        let data: Vec<f64> = (0..n).map(|x| x as f64).collect();
+        let fx = FExec::Bin(
+            BinOp::Add,
+            Box::new(leaf(data.clone(), View::identity(n))),
+            Box::new(FExec::Const(0.5)),
+        );
+        let mut out = vec![0.0; n];
+        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        for i in [0, 1, BLOCK - 1, BLOCK, 2 * BLOCK + 5, n - 1] {
+            assert_eq!(out[i], i as f64 + 0.5);
+        }
+    }
+}

@@ -1,0 +1,611 @@
+//! Execution engines: run a [`Plan`] step by step.
+//!
+//! Three modes, mirroring the paper's knobs:
+//!  * **Serial** (`ARBB_OPT_LEVEL=O2`): vectorised single-core execution.
+//!  * **Parallel** (`ARBB_OPT_LEVEL=O3` + `ARBB_NUM_CORES=P`): each step's
+//!    chunks are distributed over a fork-join worker pool with a barrier
+//!    between steps (ArBB uses pthreads/TBB the same way).
+//!  * **Recording**: serial execution that also measures per-chunk cost,
+//!    feeding the [`sim`] virtual-time model that reproduces the paper's
+//!    40-core scaling figures on this 1-core testbed (see DESIGN.md §2).
+
+pub mod eval;
+pub mod pool;
+pub mod sim;
+
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use self::eval::{eval_range, lower, FExec, BLOCK};
+use self::pool::ThreadPool;
+use super::map::MapArgs;
+use super::node::{Data, NodeRef, Op};
+use super::ops::RedOp;
+use super::plan::{Plan, Step};
+
+/// Execution mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Serial,
+    Parallel,
+}
+
+/// Engine configuration (derived from [`super::Options`]).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineCfg {
+    pub mode: Mode,
+    /// Minimum elements per chunk.
+    pub grain: usize,
+    /// Target chunks per worker (load-balancing slack).
+    pub chunks_per_worker: usize,
+    /// Record per-chunk timings for the scaling simulator.
+    pub record: bool,
+    /// Allow in-place buffer donation.
+    pub in_place: bool,
+}
+
+impl Default for EngineCfg {
+    fn default() -> Self {
+        EngineCfg {
+            mode: Mode::Serial,
+            grain: 4096,
+            chunks_per_worker: 4,
+            record: false,
+            in_place: true,
+        }
+    }
+}
+
+/// Per-step record for the scaling simulator.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub kind: &'static str,
+    pub elems: usize,
+    /// Estimated arithmetic work of the step.
+    pub flops: f64,
+    /// Estimated bytes moved to/from memory.
+    pub bytes: f64,
+    /// Measured wall seconds per chunk (serial recording run).
+    pub chunk_secs: Vec<f64>,
+    /// Whether the step's chunks may execute concurrently.
+    pub parallelizable: bool,
+}
+
+/// Aggregate execution statistics of a [`super::Context`].
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    /// Number of `force()` round-trips (≈ ArBB `call()` dispatches).
+    pub forces: u64,
+    pub steps: u64,
+    pub elements: u64,
+    pub flops: f64,
+    pub bytes: f64,
+    /// Wall time spent inside the engine.
+    pub exec_secs: f64,
+    /// Wall time spent planning (capture → IR → plan).
+    pub plan_secs: f64,
+    /// Step records (only when recording).
+    pub records: Vec<StepRecord>,
+}
+
+impl ExecStats {
+    pub fn clear(&mut self) {
+        *self = ExecStats::default();
+    }
+}
+
+/// Execute a plan. Steps run in order; each step materialises its node.
+pub fn execute_plan(
+    plan: &Plan,
+    cfg: &EngineCfg,
+    pool: Option<&ThreadPool>,
+    stats: &mut ExecStats,
+) {
+    let t0 = Instant::now();
+    for step in &plan.steps {
+        exec_step(step, cfg, pool, stats);
+    }
+    stats.exec_secs += t0.elapsed().as_secs_f64();
+}
+
+/// A chunk of a step's output index space.
+#[derive(Debug, Clone, Copy)]
+struct Chunk {
+    start: usize,
+    len: usize,
+}
+
+fn make_chunks(total: usize, cfg: &EngineCfg, workers: usize) -> Vec<Chunk> {
+    if total == 0 {
+        return vec![];
+    }
+    let target = workers * cfg.chunks_per_worker;
+    let mut size = (total + target - 1) / target.max(1);
+    if size < cfg.grain {
+        size = cfg.grain;
+    }
+    let mut chunks = Vec::with_capacity((total + size - 1) / size);
+    let mut s = 0;
+    while s < total {
+        let l = size.min(total - s);
+        chunks.push(Chunk { start: s, len: l });
+        s += l;
+    }
+    chunks
+}
+
+/// Wrapper making a raw output pointer shareable across workers writing
+/// disjoint ranges.
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f64);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl OutPtr {
+    /// SAFETY: caller guarantees [start, start+len) ranges are disjoint
+    /// across concurrent users.
+    unsafe fn slice(&self, start: usize, len: usize) -> &mut [f64] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+/// Try to steal `node`'s buffer for in-place mutation; fall back to a copy.
+///
+/// Eligible when: no user handle or other consumer holds the node
+/// (`Rc::strong_count <= 2`: the consumer op edge + the step's own clone),
+/// and the buffer `Arc` itself is unique.
+fn take_or_clone(node: &NodeRef, allow: bool) -> Vec<f64> {
+    let arc = node
+        .data()
+        .unwrap_or_else(|| panic!("node {} not materialised", node.id))
+        .as_f64()
+        .clone();
+    if allow && Rc::strong_count(node) <= 2 && !node.donated.get() {
+        // Drop the storage's own Arc so ours can be unique.
+        let taken = node.storage.borrow_mut().take();
+        drop(taken);
+        match Arc::try_unwrap(arc) {
+            Ok(v) => {
+                node.donated.set(true);
+                return v;
+            }
+            Err(arc) => {
+                // Restore and copy.
+                *node.storage.borrow_mut() = Some(Data::F64(arc.clone()));
+                return (*arc).clone();
+            }
+        }
+    }
+    (*arc).clone()
+}
+
+fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mut ExecStats) {
+    let out_node = step.out().clone();
+    let out_len = out_node.shape.len();
+    stats.steps += 1;
+    stats.elements += out_len as u64;
+    let workers = pool.map(|p| p.size).unwrap_or(1);
+
+    // ---- lower + execute per step kind ----
+    let (result, record): (Vec<f64>, Option<StepRecord>) = match step {
+        Step::Fused { tree, .. } => {
+            let fx = lower(tree);
+            let mut out = vec![0.0f64; out_len];
+            let chunks = make_chunks(out_len, cfg, workers);
+            let fpe = tree.flops_per_elem();
+            let bpe = tree.bytes_per_elem() + 8.0;
+            let rec = run_elementwise(&fx, &mut out, &chunks, cfg, pool);
+            stats.flops += fpe * out_len as f64;
+            stats.bytes += bpe * out_len as f64;
+            (out, rec.map(|cs| StepRecord {
+                kind: step.kind(),
+                elems: out_len,
+                flops: fpe * out_len as f64,
+                bytes: bpe * out_len as f64,
+                chunk_secs: cs,
+                parallelizable: chunks.len() > 1,
+            }))
+        }
+        Step::Accumulate { base, tree, .. } => {
+            let fx = lower(tree);
+            let mut out = take_or_clone(base, cfg.in_place);
+            debug_assert_eq!(out.len(), out_len);
+            let chunks = make_chunks(out_len, cfg, workers);
+            let fpe = tree.flops_per_elem();
+            let bpe = tree.bytes_per_elem() + 8.0; // Acc read counted in tree
+            let rec = run_elementwise(&fx, &mut out, &chunks, cfg, pool);
+            stats.flops += fpe * out_len as f64;
+            stats.bytes += bpe * out_len as f64;
+            (out, rec.map(|cs| StepRecord {
+                kind: step.kind(),
+                elems: out_len,
+                flops: fpe * out_len as f64,
+                bytes: bpe * out_len as f64,
+                chunk_secs: cs,
+                parallelizable: chunks.len() > 1,
+            }))
+        }
+        Step::ReduceRows { red, tree, rows, cols, .. } => {
+            let fx = lower(tree);
+            let mut out = vec![0.0f64; *rows];
+            // chunk over output rows
+            let row_grain = (cfg.grain / cols.max(&1)).max(1);
+            let chunks = make_row_chunks(*rows, row_grain, cfg, workers);
+            let fpe = tree.flops_per_elem() + 1.0;
+            let work_elems = rows * cols;
+            let rec = run_reduce_rows(&fx, *red, &mut out, *cols, &chunks, cfg, pool);
+            stats.flops += fpe * work_elems as f64;
+            stats.bytes += (tree.bytes_per_elem()) * work_elems as f64 + 8.0 * *rows as f64;
+            (out, rec.map(|cs| StepRecord {
+                kind: step.kind(),
+                elems: work_elems,
+                flops: fpe * work_elems as f64,
+                bytes: tree.bytes_per_elem() * work_elems as f64,
+                chunk_secs: cs,
+                parallelizable: chunks.len() > 1,
+            }))
+        }
+        Step::ReduceCols { red, tree, rows, cols, .. } => {
+            let fx = lower(tree);
+            let mut out = vec![red.identity(); *cols];
+            let col_grain = cfg.grain.min(*cols).max(1);
+            let chunks = make_row_chunks(*cols, col_grain, cfg, workers);
+            let fpe = tree.flops_per_elem() + 1.0;
+            let work_elems = rows * cols;
+            let rec = run_reduce_cols(&fx, *red, &mut out, *rows, *cols, &chunks, cfg, pool);
+            stats.flops += fpe * work_elems as f64;
+            stats.bytes += tree.bytes_per_elem() * work_elems as f64 + 8.0 * *cols as f64;
+            (out, rec.map(|cs| StepRecord {
+                kind: step.kind(),
+                elems: work_elems,
+                flops: fpe * work_elems as f64,
+                bytes: tree.bytes_per_elem() * work_elems as f64,
+                chunk_secs: cs,
+                parallelizable: chunks.len() > 1,
+            }))
+        }
+        Step::ReduceAll { red, tree, len, .. } => {
+            let fx = lower(tree);
+            let chunks = make_chunks(*len, cfg, workers);
+            let fpe = tree.flops_per_elem() + 1.0;
+            let (v, rec) = run_reduce_all(&fx, *red, *len, &chunks, cfg, pool);
+            stats.flops += fpe * *len as f64;
+            stats.bytes += tree.bytes_per_elem() * *len as f64;
+            (vec![v], rec.map(|cs| StepRecord {
+                kind: step.kind(),
+                elems: *len,
+                flops: fpe * *len as f64,
+                bytes: tree.bytes_per_elem() * *len as f64,
+                chunk_secs: cs,
+                parallelizable: chunks.len() > 1,
+            }))
+        }
+        Step::Cat { a, la, b, lb, .. } => {
+            let fa = lower(a);
+            let fb = lower(b);
+            let mut out = vec![0.0f64; la + lb];
+            let mut chunk_secs = Vec::new();
+            // Two element-wise sub-kernels into disjoint halves.
+            {
+                let (ha, hb) = out.split_at_mut(*la);
+                let ca = make_chunks(*la, cfg, workers);
+                let cb = make_chunks(*lb, cfg, workers);
+                if let Some(cs) = run_elementwise(&fa, ha, &ca, cfg, pool) {
+                    chunk_secs.extend(cs);
+                }
+                if let Some(cs) = run_elementwise(&fb, hb, &cb, cfg, pool) {
+                    chunk_secs.extend(cs);
+                }
+            }
+            let fl = a.flops_per_elem() * *la as f64 + b.flops_per_elem() * *lb as f64;
+            let by = (a.bytes_per_elem() + 8.0) * *la as f64 + (b.bytes_per_elem() + 8.0) * *lb as f64;
+            stats.flops += fl;
+            stats.bytes += by;
+            let rec = cfg.record.then(|| StepRecord {
+                kind: step.kind(),
+                elems: la + lb,
+                flops: fl,
+                bytes: by,
+                chunk_secs,
+                parallelizable: la + lb > cfg.grain,
+            });
+            (out, rec)
+        }
+        Step::ReplaceCol { m, col, vtree, .. } => {
+            let fx = lower(vtree);
+            let (rows, cols) = (out_node.shape.rows(), out_node.shape.cols());
+            let mut out = take_or_clone(m, cfg.in_place);
+            let t0 = Instant::now();
+            let mut tmp = vec![0.0f64; rows];
+            eval::with_scratch(|scratch| eval_range(&fx, 0, &mut tmp, scratch));
+            for r in 0..rows {
+                out[r * cols + col] = tmp[r];
+            }
+            stats.bytes += 16.0 * rows as f64;
+            let rec = cfg.record.then(|| StepRecord {
+                kind: step.kind(),
+                elems: rows,
+                flops: vtree.flops_per_elem() * rows as f64,
+                bytes: 16.0 * rows as f64,
+                chunk_secs: vec![t0.elapsed().as_secs_f64()],
+                parallelizable: false,
+            });
+            (out, rec)
+        }
+        Step::ReplaceRow { m, row, vtree, .. } => {
+            let fx = lower(vtree);
+            let cols = out_node.shape.cols();
+            let mut out = take_or_clone(m, cfg.in_place);
+            let t0 = Instant::now();
+            eval::with_scratch(|scratch| {
+                eval_range(&fx, 0, &mut out[row * cols..(row + 1) * cols], scratch)
+            });
+            stats.bytes += 16.0 * cols as f64;
+            let rec = cfg.record.then(|| StepRecord {
+                kind: step.kind(),
+                elems: cols,
+                flops: vtree.flops_per_elem() * cols as f64,
+                bytes: 16.0 * cols as f64,
+                chunk_secs: vec![t0.elapsed().as_secs_f64()],
+                parallelizable: false,
+            });
+            (out, rec)
+        }
+        Step::SetElem { m, i, j, s, .. } => {
+            let cols = out_node.shape.cols();
+            let mut out = take_or_clone(m, cfg.in_place);
+            let sval = s.data().expect("scalar operand").as_f64()[0];
+            out[i * cols + j] = sval;
+            let rec = cfg.record.then(|| StepRecord {
+                kind: step.kind(),
+                elems: 1,
+                flops: 0.0,
+                bytes: 16.0,
+                chunk_secs: vec![1e-8],
+                parallelizable: false,
+            });
+            (out, rec)
+        }
+        Step::Gather { src, idx, .. } => {
+            let s = src.data().expect("gather src").as_f64().clone();
+            let ix = idx.data().expect("gather idx").as_i64().clone();
+            let mut out = vec![0.0f64; out_len];
+            let chunks = make_chunks(out_len, cfg, workers);
+            let t0 = Instant::now();
+            let optr = OutPtr(out.as_mut_ptr());
+            let body = |c: &Chunk| {
+                let o = unsafe { optr.slice(c.start, c.len) };
+                for (k, ov) in o.iter_mut().enumerate() {
+                    *ov = s[ix[c.start + k] as usize];
+                }
+            };
+            let times = run_chunked(&chunks, cfg, pool, &body);
+            let _ = t0;
+            stats.bytes += 24.0 * out_len as f64;
+            let rec = cfg.record.then(|| StepRecord {
+                kind: step.kind(),
+                elems: out_len,
+                flops: 0.0,
+                bytes: 24.0 * out_len as f64,
+                chunk_secs: times,
+                parallelizable: chunks.len() > 1,
+            });
+            (out, rec)
+        }
+        Step::Map { out } => {
+            let op = out.op.borrow();
+            let mf = match &*op {
+                Op::Map(f) => f,
+                _ => unreachable!("Map step on non-map node"),
+            };
+            // Resolve captures in order, split by dtype.
+            let mut f64s: Vec<Arc<Vec<f64>>> = Vec::new();
+            let mut i64s: Vec<Arc<Vec<i64>>> = Vec::new();
+            for c in &mf.captures {
+                match c.data().expect("map capture materialised") {
+                    Data::F64(v) => f64s.push(v),
+                    Data::I64(v) => i64s.push(v),
+                }
+            }
+            let f = mf.f.clone();
+            let fpe = mf.flops_per_elem;
+            let bpe = mf.bytes_per_elem;
+            drop(op);
+            let mut outv = vec![0.0f64; out_len];
+            // map grain: elemental calls are much heavier than stream ops
+            let map_cfg = EngineCfg { grain: (cfg.grain / 16).max(64), ..*cfg };
+            let chunks = make_chunks(out_len, &map_cfg, workers);
+            let optr = OutPtr(outv.as_mut_ptr());
+            let f64refs: Vec<&[f64]> = f64s.iter().map(|a| a.as_slice()).collect();
+            let i64refs: Vec<&[i64]> = i64s.iter().map(|a| a.as_slice()).collect();
+            let body = |c: &Chunk| {
+                let o = unsafe { optr.slice(c.start, c.len) };
+                let args = MapArgs { f64s: f64refs.clone(), i64s: i64refs.clone() };
+                for (k, ov) in o.iter_mut().enumerate() {
+                    *ov = f(&args, c.start + k);
+                }
+            };
+            let times = run_chunked(&chunks, cfg, pool, &body);
+            stats.flops += fpe * out_len as f64;
+            stats.bytes += bpe * out_len as f64;
+            let rec = cfg.record.then(|| StepRecord {
+                kind: step.kind(),
+                elems: out_len,
+                flops: fpe * out_len as f64,
+                bytes: bpe * out_len as f64,
+                chunk_secs: times,
+                parallelizable: chunks.len() > 1,
+            });
+            (outv, rec)
+        }
+    };
+
+    out_node.materialize(Data::F64(Arc::new(result)));
+    if let Some(r) = record {
+        stats.records.push(r);
+    }
+}
+
+fn make_row_chunks(total: usize, grain: usize, cfg: &EngineCfg, workers: usize) -> Vec<Chunk> {
+    let sub = EngineCfg { grain, ..*cfg };
+    make_chunks(total, &sub, workers)
+}
+
+/// Run chunks serially or on the pool, optionally timing each chunk.
+/// Returns per-chunk seconds when recording.
+fn run_chunked(
+    chunks: &[Chunk],
+    cfg: &EngineCfg,
+    pool: Option<&ThreadPool>,
+    body: &(dyn Fn(&Chunk) + Sync),
+) -> Vec<f64> {
+    let use_pool = matches!(cfg.mode, Mode::Parallel) && chunks.len() > 1 && pool.is_some();
+    if cfg.record {
+        let slots: Vec<AtomicU64> = (0..chunks.len()).map(|_| AtomicU64::new(0)).collect();
+        let timed = |i: usize| {
+            let t0 = Instant::now();
+            body(&chunks[i]);
+            slots[i].store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        };
+        if use_pool {
+            pool.unwrap().run_chunks(chunks.len(), &timed);
+        } else {
+            for i in 0..chunks.len() {
+                timed(i);
+            }
+        }
+        slots.iter().map(|s| s.load(Ordering::Relaxed) as f64 * 1e-9).collect()
+    } else {
+        if use_pool {
+            pool.unwrap().run_chunks(chunks.len(), &|i| body(&chunks[i]));
+        } else {
+            for c in chunks {
+                body(c);
+            }
+        }
+        vec![]
+    }
+}
+
+fn run_elementwise(
+    fx: &FExec,
+    out: &mut [f64],
+    chunks: &[Chunk],
+    cfg: &EngineCfg,
+    pool: Option<&ThreadPool>,
+) -> Option<Vec<f64>> {
+    let optr = OutPtr(out.as_mut_ptr());
+    let body = |c: &Chunk| {
+        let o = unsafe { optr.slice(c.start, c.len) };
+        eval::with_scratch(|scratch| eval_range(fx, c.start, o, scratch));
+    };
+    let times = run_chunked(chunks, cfg, pool, &body);
+    cfg.record.then_some(times)
+}
+
+fn run_reduce_rows(
+    fx: &FExec,
+    red: RedOp,
+    out: &mut [f64],
+    cols: usize,
+    chunks: &[Chunk],
+    cfg: &EngineCfg,
+    pool: Option<&ThreadPool>,
+) -> Option<Vec<f64>> {
+    let optr = OutPtr(out.as_mut_ptr());
+    let body = |c: &Chunk| {
+        let o = unsafe { optr.slice(c.start, c.len) };
+        eval::with_scratch(|scratch| {
+            let mut buf = scratch.take();
+            for (k, ov) in o.iter_mut().enumerate() {
+                let r = c.start + k;
+                let mut acc = red.identity();
+                let mut off = 0;
+                while off < cols {
+                    let len = BLOCK.min(cols - off);
+                    eval_range(fx, r * cols + off, &mut buf[..len], scratch);
+                    acc = red.fold(acc, red.fold_slice(&buf[..len]));
+                    off += len;
+                }
+                *ov = acc;
+            }
+            scratch.put(buf);
+        });
+    };
+    let times = run_chunked(chunks, cfg, pool, &body);
+    cfg.record.then_some(times)
+}
+
+fn run_reduce_cols(
+    fx: &FExec,
+    red: RedOp,
+    out: &mut [f64],
+    rows: usize,
+    cols: usize,
+    chunks: &[Chunk],
+    cfg: &EngineCfg,
+    pool: Option<&ThreadPool>,
+) -> Option<Vec<f64>> {
+    let optr = OutPtr(out.as_mut_ptr());
+    let body = |c: &Chunk| {
+        // Columns [c.start, c.start+c.len): stream rows, fold element-wise.
+        let o = unsafe { optr.slice(c.start, c.len) };
+        eval::with_scratch(|scratch| {
+            let mut buf = scratch.take();
+            for r in 0..rows {
+                let mut off = 0;
+                while off < c.len {
+                    let len = BLOCK.min(c.len - off);
+                    eval_range(fx, r * cols + c.start + off, &mut buf[..len], scratch);
+                    for k in 0..len {
+                        o[off + k] = red.fold(o[off + k], buf[k]);
+                    }
+                    off += len;
+                }
+            }
+            scratch.put(buf);
+        });
+    };
+    let times = run_chunked(chunks, cfg, pool, &body);
+    cfg.record.then_some(times)
+}
+
+fn run_reduce_all(
+    fx: &FExec,
+    red: RedOp,
+    len: usize,
+    chunks: &[Chunk],
+    cfg: &EngineCfg,
+    pool: Option<&ThreadPool>,
+) -> (f64, Option<Vec<f64>>) {
+    if chunks.is_empty() {
+        return (red.identity(), cfg.record.then_some(vec![]));
+    }
+    let partials: Vec<AtomicU64> =
+        (0..chunks.len()).map(|_| AtomicU64::new(red.identity().to_bits())).collect();
+    let body = |c: &Chunk| {
+        let idx = chunks.iter().position(|x| x.start == c.start).unwrap();
+        eval::with_scratch(|scratch| {
+            let mut buf = scratch.take();
+            let mut acc = red.identity();
+            let mut off = 0;
+            while off < c.len {
+                let l = BLOCK.min(c.len - off);
+                eval_range(fx, c.start + off, &mut buf[..l], scratch);
+                acc = red.fold(acc, red.fold_slice(&buf[..l]));
+                off += l;
+            }
+            partials[idx].store(acc.to_bits(), Ordering::Relaxed);
+            scratch.put(buf);
+        });
+    };
+    let times = run_chunked(chunks, cfg, pool, &body);
+    let mut acc = red.identity();
+    for p in &partials {
+        acc = red.fold(acc, f64::from_bits(p.load(Ordering::Relaxed)));
+    }
+    let _ = len;
+    (acc, cfg.record.then_some(times))
+}

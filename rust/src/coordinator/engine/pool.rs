@@ -1,0 +1,235 @@
+//! A fork-join worker pool.
+//!
+//! ArBB's runtime (pthreads/TBB underneath, §4 of the paper) executes each
+//! vector operation as a parallel loop over chunks with a barrier before
+//! the next operation — exactly the `run_chunks` shape below. Workers park
+//! between jobs; the calling thread participates in chunk execution (so
+//! `num_workers = 1` degenerates to the serial engine plus bookkeeping,
+//! which is the measurable "O3 overhead" the paper's small-input results
+//! show).
+//!
+//! Safety: jobs borrow stack data (`&dyn Fn`). `run_chunks` erases the
+//! lifetime to publish the job to workers, and blocks until every chunk
+//! completed — the borrow outlives all uses. This is the classic scoped-
+//! thread-pool pattern.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A chunk-level task: `f(chunk_index)`.
+type JobFn = dyn Fn(usize) + Sync;
+
+struct Job {
+    /// Lifetime-erased pointer to the caller's closure.
+    f: *const JobFn,
+    n_chunks: usize,
+}
+// SAFETY: the closure is Sync; the raw pointer is only dereferenced while
+// `run_chunks` blocks on completion.
+unsafe impl Send for Job {}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    next_chunk: AtomicUsize,
+    done_chunks: AtomicUsize,
+}
+
+struct State {
+    /// Monotonic job counter; workers watch it change.
+    epoch: u64,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+/// Fork-join thread pool with a fixed worker count.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Total workers *including* the calling thread.
+    pub size: usize,
+}
+
+impl ThreadPool {
+    /// `size` counts the calling thread: `new(4)` spawns 3 helpers.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_chunk: AtomicUsize::new(0),
+            done_chunks: AtomicUsize::new(0),
+        });
+        let workers = (1..size)
+            .map(|w| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("arbb-worker-{w}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Execute `f(0..n_chunks)` across the pool; blocks until complete.
+    /// (`'a`: the closure may borrow stack data — see module docs.)
+    pub fn run_chunks<'a>(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync + 'a)) {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.size == 1 || n_chunks == 1 {
+            for i in 0..n_chunks {
+                f(i);
+            }
+            return;
+        }
+        // SAFETY: see module docs — we block until all chunks are done.
+        let erased: *const JobFn = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync + 'a), &'static JobFn>(f)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none(), "run_chunks is not reentrant");
+            self.shared.next_chunk.store(0, Ordering::SeqCst);
+            self.shared.done_chunks.store(0, Ordering::SeqCst);
+            st.job = Some(Job { f: erased, n_chunks });
+            st.epoch += 1;
+            self.shared.work_cv.notify_all();
+        }
+        // The caller participates.
+        loop {
+            let i = self.shared.next_chunk.fetch_add(1, Ordering::SeqCst);
+            if i >= n_chunks {
+                break;
+            }
+            f(i);
+            self.shared.done_chunks.fetch_add(1, Ordering::SeqCst);
+        }
+        // Wait for stragglers.
+        let mut st = self.shared.state.lock().unwrap();
+        while self.shared.done_chunks.load(Ordering::SeqCst) < n_chunks {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    let mut seen_epoch = 0u64;
+    loop {
+        // Wait for a new job (or shutdown).
+        let (f, n_chunks) = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    if let Some(job) = &st.job {
+                        seen_epoch = st.epoch;
+                        break (job.f, job.n_chunks);
+                    }
+                }
+                st = sh.work_cv.wait(st).unwrap();
+            }
+        };
+        // Pull chunks.
+        loop {
+            let i = sh.next_chunk.fetch_add(1, Ordering::SeqCst);
+            if i >= n_chunks {
+                break;
+            }
+            // SAFETY: run_chunks keeps the closure alive until done.
+            unsafe { (*f)(i) };
+            let done = sh.done_chunks.fetch_add(1, Ordering::SeqCst) + 1;
+            if done >= n_chunks {
+                let _g = sh.state.lock().unwrap();
+                sh.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_chunks_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        pool.run_chunks(100, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn disjoint_writes() {
+        let pool = ThreadPool::new(3);
+        let n = 10_000usize;
+        let mut out = vec![0.0f64; n];
+        let chunk = 1000;
+        let ptr = SendPtr(out.as_mut_ptr());
+        let body = move |i: usize| {
+            let ptr = ptr; // capture the SendPtr wrapper, not the raw field
+            // SAFETY: disjoint ranges per chunk.
+            let s = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * chunk), chunk) };
+            for (k, x) in s.iter_mut().enumerate() {
+                *x = (i * chunk + k) as f64;
+            }
+        };
+        pool.run_chunks(n / chunk, &body);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i as f64);
+        }
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_pool() {
+        let pool = ThreadPool::new(2);
+        let counter = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run_chunks(8, &|_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn single_worker_inline() {
+        let pool = ThreadPool::new(1);
+        let counter = AtomicU64::new(0);
+        pool.run_chunks(5, &|_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
+    }
+
+    /// Helper to smuggle a raw pointer into a Sync closure.
+    #[derive(Clone, Copy)]
+    struct SendPtr(*mut f64);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+}

@@ -1,0 +1,90 @@
+//! ArBB `map()`: elemental functions applied across container elements.
+//!
+//! The paper's `arbb_spmv1` kernel (§3.2) maps a scalar elemental function
+//! — "loop over one row of the input matrix, accumulate `matvals[i] *
+//! invec[indx[i]]`" — across all `nrows` elements of the output vector.
+//! `map()` may only occur inside a captured closure, and the elemental
+//! function has random (gather) access to whole captured containers.
+//!
+//! We reproduce the same construct: the elemental function is a rust
+//! closure over immutable slices of the captured containers, invoked with
+//! the output element index. The engines chunk the output space across
+//! workers; each invocation is independent, which is what makes `map`
+//! ArBB's general escape hatch for irregular data access.
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::node::NodeRef;
+
+/// Resolved argument slices handed to an elemental function.
+///
+/// Index order matches the order of `captures` at map creation.
+pub struct MapArgs<'a> {
+    pub f64s: Vec<&'a [f64]>,
+    pub i64s: Vec<&'a [i64]>,
+}
+
+impl<'a> MapArgs<'a> {
+    /// The `k`-th captured f64 container.
+    #[inline(always)]
+    pub fn f(&self, k: usize) -> &'a [f64] {
+        self.f64s[k]
+    }
+
+    /// The `k`-th captured i64 container.
+    #[inline(always)]
+    pub fn i(&self, k: usize) -> &'a [i64] {
+        self.i64s[k]
+    }
+}
+
+/// Type of an elemental function: `(args, element_index) -> value`.
+pub type Elemental = dyn Fn(&MapArgs<'_>, usize) -> f64 + Send + Sync;
+
+/// A captured `map()` invocation.
+pub struct MapFn {
+    /// Captured containers (resolved to slices before execution).
+    pub captures: Vec<NodeRef>,
+    /// The elemental function.
+    pub f: Arc<Elemental>,
+    /// Estimated FLOPs per output element (for the scaling simulator);
+    /// irregular kernels pass the *average* row cost.
+    pub flops_per_elem: f64,
+    /// Estimated bytes touched per output element.
+    pub bytes_per_elem: f64,
+    /// Debug label (shows up in engine stats).
+    pub label: &'static str,
+}
+
+impl fmt::Debug for MapFn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MapFn")
+            .field("label", &self.label)
+            .field("captures", &self.captures.len())
+            .field("flops_per_elem", &self.flops_per_elem)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_args_access() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3i64, 4];
+        let args = MapArgs { f64s: vec![&a], i64s: vec![&b] };
+        assert_eq!(args.f(0)[1], 2.0);
+        assert_eq!(args.i(0)[0], 3);
+    }
+
+    #[test]
+    fn elemental_is_callable() {
+        let f: Arc<Elemental> = Arc::new(|args, i| args.f(0)[i] * 2.0);
+        let a = vec![1.0, 2.0, 3.0];
+        let args = MapArgs { f64s: vec![&a], i64s: vec![] };
+        assert_eq!(f(&args, 2), 6.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! The ArBB-like data-parallel runtime — the system the paper evaluates.
+//!
+//! Layer 3 of the reproduction: a rust embedded DSL with dense containers,
+//! element-wise / reduction / permutation operators and serial-semantics
+//! control flow, backed by a capture → optimise → plan → execute pipeline
+//! ("the JIT") and pluggable engines:
+//!
+//! * `O2` — vectorised serial execution (the paper's single-core runs);
+//! * `O3` — fork-join threaded execution over `num_workers` workers
+//!   (the paper's `ARBB_NUM_CORES`);
+//! * a recording mode feeding the calibrated virtual-time scaling
+//!   simulator ([`engine::sim`]) that stands in for the 40-core node.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath; the same snippet is
+//! // exercised by unit tests and examples/quickstart.rs)
+//! use arbb_rs::coordinator::Context;
+//!
+//! let ctx = Context::new();
+//! let a = ctx.bind1(&[1.0, 2.0, 3.0, 4.0]);
+//! let b = ctx.bind1(&[10.0, 20.0, 30.0, 40.0]);
+//! let c = (&a + &b).scale(0.5);
+//! assert_eq!(c.to_vec(), vec![5.5, 11.0, 16.5, 22.0]);
+//! ```
+
+pub mod api;
+pub mod engine;
+pub mod map;
+pub mod node;
+pub mod ops;
+pub mod passes;
+pub mod plan;
+pub mod shape;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+pub use api::{CplxV, Mat2, Scal, Vec1, VecI64};
+pub use engine::sim::{MachineModel, SimResult};
+pub use engine::{ExecStats, Mode, StepRecord};
+pub use shape::{DType, Shape};
+
+use engine::pool::ThreadPool;
+use engine::EngineCfg;
+use node::NodeRef;
+use plan::PlanOptions;
+
+/// Optimisation level, mirroring `ARBB_OPT_LEVEL` (§3 of the paper):
+/// `O2` vectorises on a single core, `O3` additionally uses multiple
+/// cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptLevel {
+    O2,
+    O3,
+}
+
+/// Engine selection (exposed for diagnostics and the e2e driver).
+pub use engine::Mode as Engine;
+
+/// Runtime options — the environment knobs of §3 plus the optimiser
+/// toggles the ablation benches sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct Options {
+    /// `ARBB_OPT_LEVEL`: O2 = serial vectorised, O3 = threaded.
+    pub opt_level: OptLevel,
+    /// `ARBB_NUM_CORES`: worker count for O3.
+    pub num_workers: usize,
+    /// Element-wise fusion (ArBB's main JIT optimisation).
+    pub fusion: bool,
+    /// In-place buffer donation for accumulations / structural updates.
+    pub in_place: bool,
+    /// Structural CSE over each pending region before planning.
+    pub cse: bool,
+    /// Minimum elements per parallel chunk.
+    pub grain: usize,
+    /// Record per-chunk timings for the scaling simulator.
+    pub record: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options {
+            opt_level: OptLevel::O2,
+            num_workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            fusion: true,
+            in_place: true,
+            cse: false,
+            grain: 4096,
+            record: false,
+        }
+    }
+}
+
+struct CtxInner {
+    opts: RefCell<Options>,
+    pool: RefCell<Option<Rc<ThreadPool>>>,
+    stats: RefCell<ExecStats>,
+}
+
+/// An ArBB-style execution context: owns the options, the worker pool and
+/// the execution statistics. Cheap to clone (shared handle).
+#[derive(Clone)]
+pub struct Context {
+    inner: Rc<CtxInner>,
+}
+
+impl Default for Context {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Context {
+    /// Context with default options (serial `O2`).
+    pub fn new() -> Self {
+        Self::with_options(Options::default())
+    }
+
+    /// Context with explicit options.
+    pub fn with_options(opts: Options) -> Self {
+        Context {
+            inner: Rc::new(CtxInner {
+                opts: RefCell::new(opts),
+                pool: RefCell::new(None),
+                stats: RefCell::new(ExecStats::default()),
+            }),
+        }
+    }
+
+    /// Serial context (O2) — the paper's single-core configuration.
+    pub fn serial() -> Self {
+        Self::with_options(Options { opt_level: OptLevel::O2, ..Default::default() })
+    }
+
+    /// Threaded context (O3) with `workers` workers.
+    pub fn parallel(workers: usize) -> Self {
+        Self::with_options(Options {
+            opt_level: OptLevel::O3,
+            num_workers: workers.max(1),
+            ..Default::default()
+        })
+    }
+
+    /// Recording context: serial execution + per-chunk timings for the
+    /// scaling simulator.
+    pub fn recording() -> Self {
+        Self::with_options(Options { record: true, ..Default::default() })
+    }
+
+    pub fn options(&self) -> Options {
+        *self.inner.opts.borrow()
+    }
+
+    pub fn set_options(&self, opts: Options) {
+        // Worker-count or level changes invalidate the pool.
+        *self.inner.pool.borrow_mut() = None;
+        *self.inner.opts.borrow_mut() = opts;
+    }
+
+    pub fn set_num_workers(&self, n: usize) {
+        let mut o = self.options();
+        o.num_workers = n.max(1);
+        self.set_options(o);
+    }
+
+    pub fn set_fusion(&self, on: bool) {
+        let mut o = self.options();
+        o.fusion = on;
+        self.set_options(o);
+    }
+
+    /// Execution statistics accumulated since the last [`Self::reset_stats`].
+    pub fn stats<R>(&self, f: impl FnOnce(&ExecStats) -> R) -> R {
+        f(&self.inner.stats.borrow())
+    }
+
+    pub fn reset_stats(&self) {
+        self.inner.stats.borrow_mut().clear();
+    }
+
+    /// Take the recorded step log (for the scaling simulator).
+    pub fn take_records(&self) -> (Vec<StepRecord>, u64) {
+        let mut st = self.inner.stats.borrow_mut();
+        let recs = std::mem::take(&mut st.records);
+        let forces = st.forces;
+        (recs, forces)
+    }
+
+    /// Force materialisation of `node` (the ArBB `call()` + sync
+    /// boundary). No-op when already materialised.
+    pub(crate) fn force(&self, node: &NodeRef) {
+        if node.is_materialized() {
+            return;
+        }
+        let opts = self.options();
+        let t0 = Instant::now();
+        if opts.cse {
+            passes::cse::cse(node);
+        }
+        let p = plan::plan(node, PlanOptions { fusion: opts.fusion, in_place: opts.in_place });
+        let plan_secs = t0.elapsed().as_secs_f64();
+
+        let cfg = EngineCfg {
+            mode: match opts.opt_level {
+                OptLevel::O2 => Mode::Serial,
+                OptLevel::O3 => Mode::Parallel,
+            },
+            grain: opts.grain,
+            chunks_per_worker: 4,
+            record: opts.record,
+            in_place: opts.in_place,
+        };
+        // Lazily build the pool for O3.
+        if cfg.mode == Mode::Parallel && self.inner.pool.borrow().is_none() {
+            *self.inner.pool.borrow_mut() = Some(Rc::new(ThreadPool::new(opts.num_workers)));
+        }
+        let pool = self.inner.pool.borrow().clone();
+        let mut stats = self.inner.stats.borrow_mut();
+        stats.forces += 1;
+        stats.plan_secs += plan_secs;
+        engine::execute_plan(&p, &cfg, pool.as_deref(), &mut stats);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_roundtrip() {
+        let ctx = Context::new();
+        let a = ctx.bind1(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.to_vec(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn stats_count_forces() {
+        let ctx = Context::new();
+        let a = ctx.bind1(&[1.0, 2.0]);
+        let b = (&a + &a).to_vec();
+        assert_eq!(b, vec![2.0, 4.0]);
+        assert_eq!(ctx.stats(|s| s.forces), 1);
+        ctx.reset_stats();
+        assert_eq!(ctx.stats(|s| s.forces), 0);
+    }
+
+    #[test]
+    fn parallel_context_matches_serial() {
+        let xs: Vec<f64> = (0..10_000).map(|i| i as f64 * 0.25).collect();
+        let serial = {
+            let ctx = Context::serial();
+            let a = ctx.bind1(&xs);
+            ((&a * &a) + &a).to_vec()
+        };
+        let par = {
+            let ctx = Context::parallel(4);
+            // Small grain to force multiple chunks even at this size.
+            let mut o = ctx.options();
+            o.grain = 256;
+            ctx.set_options(o);
+            let a = ctx.bind1(&xs);
+            ((&a * &a) + &a).to_vec()
+        };
+        assert_eq!(serial, par);
+    }
+}

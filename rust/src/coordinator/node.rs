@@ -1,0 +1,459 @@
+//! The expression IR: a reference-counted DAG of captured array operations.
+//!
+//! ArBB records the operations a "closure" performs on dense containers
+//! into an intermediate representation which its JIT then optimises and
+//! executes. We reproduce the same capture model with a lazily evaluated
+//! DAG: every DSL operator allocates a [`Node`]; nothing executes until a
+//! value is *needed* (a host read, a scalar extraction feeding control
+//! flow, or an explicit sync), at which point the pending subgraph is
+//! optimised, planned and run by the configured engine.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::map::MapFn;
+use super::ops::{BinOp, RedOp, UnOp};
+use super::shape::{DType, Shape};
+
+/// Materialised container data. Buffers are `Arc`ed so execution plans
+/// (which may cross threads) can hold references without copying.
+#[derive(Debug, Clone)]
+pub enum Data {
+    F64(Arc<Vec<f64>>),
+    I64(Arc<Vec<i64>>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F64(v) => v.len(),
+            Data::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Data::F64(_) => DType::F64,
+            Data::I64(_) => DType::I64,
+        }
+    }
+
+    pub fn as_f64(&self) -> &Arc<Vec<f64>> {
+        match self {
+            Data::F64(v) => v,
+            Data::I64(_) => panic!("expected f64 container, found i64"),
+        }
+    }
+
+    pub fn as_i64(&self) -> &Arc<Vec<i64>> {
+        match self {
+            Data::I64(v) => v,
+            Data::F64(_) => panic!("expected i64 container, found f64"),
+        }
+    }
+}
+
+/// Reference to an IR node.
+pub type NodeRef = Rc<Node>;
+
+/// Operations of the vector IR.
+///
+/// The "virtual" structural operators (`Row`, `Col`, `Section`,
+/// `RepeatRow`, `RepeatCol`, `Repeat`, `Reshape`) are pure index
+/// transforms — the fusion pass lowers them to [`super::shape::View`]s
+/// instead of materialising temporaries, which is exactly the optimisation
+/// the paper leans on in `arbb_mxm1`/`arbb_mxm2a` (`repeat_row` /
+/// `repeat_col` feeding element-wise multiplies).
+#[derive(Debug)]
+pub enum Op {
+    /// Bound/owned host data copied into "ArBB space" (the paper's `bind`).
+    Source(Data),
+    /// Scalar constant.
+    ConstF64(f64),
+    /// `iota(n)`: 0,1,2,…,n-1.
+    Iota(usize),
+
+    /// Element-wise binary op; operands have equal shape, or one is Scalar.
+    Bin(BinOp, NodeRef, NodeRef),
+    /// Element-wise unary op.
+    Un(UnOp, NodeRef),
+
+    /// Row `i` of a matrix (virtual).
+    Row(NodeRef, usize),
+    /// Column `j` of a matrix (virtual).
+    Col(NodeRef, usize),
+    /// `section(v, start, len, stride)` of a vector (virtual).
+    Section { v: NodeRef, start: usize, len: usize, stride: usize },
+    /// Matrix whose every row is `v` (virtual): `t(m,k) = v(k)`.
+    RepeatRow { v: NodeRef, rows: usize },
+    /// Matrix whose every column is `v` (virtual): `t(m,k) = v(m)`.
+    RepeatCol { v: NodeRef, cols: usize },
+    /// Cyclic tile of a vector, `times` repetitions (virtual).
+    Repeat { v: NodeRef, times: usize },
+    /// Reinterpret a container with a new shape of identical length
+    /// (virtual).
+    Reshape(NodeRef, Shape),
+
+    /// Concatenate two vectors (materialising).
+    Cat(NodeRef, NodeRef),
+    /// Functional column replacement: copy of `m` with column `col` = `v`.
+    /// Executes in place when `m`'s buffer is uniquely owned.
+    ReplaceCol { m: NodeRef, col: usize, v: NodeRef },
+    /// Functional row replacement.
+    ReplaceRow { m: NodeRef, row: usize, v: NodeRef },
+    /// Functional element store `m(i,j) = s` (the slow path `arbb_mxm0`
+    /// exercises).
+    SetElem { m: NodeRef, i: usize, j: usize, s: NodeRef },
+    /// Gather: `out[k] = src[idx[k]]` with `idx` an i64 container.
+    Gather { src: NodeRef, idx: NodeRef },
+
+    /// Reduce along dimension 0 (within each row): `out[m] = red_k in(m,k)`.
+    ReduceRows(RedOp, NodeRef),
+    /// Reduce along dimension 1 (within each column): `out[k] = red_m in(m,k)`.
+    ReduceCols(RedOp, NodeRef),
+    /// Full reduction to a scalar.
+    ReduceAll(RedOp, NodeRef),
+
+    /// ArBB `map()`: an elemental function invoked across all elements of
+    /// the output, with random access to captured containers (the spmv
+    /// kernels are built on this).
+    Map(MapFn),
+}
+
+impl Op {
+    /// Structural opcode id used for plan-cache signatures.
+    pub fn opcode(&self) -> u32 {
+        match self {
+            Op::Source(_) => 0,
+            Op::ConstF64(_) => 1,
+            Op::Iota(_) => 2,
+            Op::Bin(..) => 3,
+            Op::Un(..) => 4,
+            Op::Row(..) => 5,
+            Op::Col(..) => 6,
+            Op::Section { .. } => 7,
+            Op::RepeatRow { .. } => 8,
+            Op::RepeatCol { .. } => 9,
+            Op::Repeat { .. } => 10,
+            Op::Reshape(..) => 11,
+            Op::Cat(..) => 12,
+            Op::ReplaceCol { .. } => 13,
+            Op::ReplaceRow { .. } => 14,
+            Op::SetElem { .. } => 15,
+            Op::Gather { .. } => 16,
+            Op::ReduceRows(..) => 17,
+            Op::ReduceCols(..) => 18,
+            Op::ReduceAll(..) => 19,
+            Op::Map(_) => 20,
+        }
+    }
+
+    /// Children in evaluation order (cloned handles).
+    pub fn children(&self) -> Vec<NodeRef> {
+        match self {
+            Op::Source(_) | Op::ConstF64(_) | Op::Iota(_) => vec![],
+            Op::Bin(_, a, b) | Op::Cat(a, b) | Op::Gather { src: a, idx: b } => {
+                vec![a.clone(), b.clone()]
+            }
+            Op::Un(_, a)
+            | Op::Row(a, _)
+            | Op::Col(a, _)
+            | Op::Section { v: a, .. }
+            | Op::RepeatRow { v: a, .. }
+            | Op::RepeatCol { v: a, .. }
+            | Op::Repeat { v: a, .. }
+            | Op::Reshape(a, _)
+            | Op::ReduceRows(_, a)
+            | Op::ReduceCols(_, a)
+            | Op::ReduceAll(_, a) => vec![a.clone()],
+            Op::ReplaceCol { m, v, .. } | Op::ReplaceRow { m, v, .. } => {
+                vec![m.clone(), v.clone()]
+            }
+            Op::SetElem { m, s, .. } => vec![m.clone(), s.clone()],
+            Op::Map(f) => f.captures.clone(),
+        }
+    }
+
+    /// Children moved out (used by the iterative `Drop`).
+    fn take_children(self) -> Vec<NodeRef> {
+        match self {
+            Op::Source(_) | Op::ConstF64(_) | Op::Iota(_) => vec![],
+            Op::Bin(_, a, b) | Op::Cat(a, b) | Op::Gather { src: a, idx: b } => vec![a, b],
+            Op::Un(_, a)
+            | Op::Row(a, _)
+            | Op::Col(a, _)
+            | Op::Section { v: a, .. }
+            | Op::RepeatRow { v: a, .. }
+            | Op::RepeatCol { v: a, .. }
+            | Op::Repeat { v: a, .. }
+            | Op::Reshape(a, _)
+            | Op::ReduceRows(_, a)
+            | Op::ReduceCols(_, a)
+            | Op::ReduceAll(_, a) => vec![a],
+            Op::ReplaceCol { m, v, .. } | Op::ReplaceRow { m, v, .. } => vec![m, v],
+            Op::SetElem { m, s, .. } => vec![m, s],
+            Op::Map(f) => f.captures,
+        }
+    }
+
+    /// Whether this op is a pure index transform the fusion pass can
+    /// absorb into a `View`.
+    pub fn is_virtual_view(&self) -> bool {
+        matches!(
+            self,
+            Op::Row(..)
+                | Op::Col(..)
+                | Op::Section { .. }
+                | Op::RepeatRow { .. }
+                | Op::RepeatCol { .. }
+                | Op::Repeat { .. }
+                | Op::Reshape(..)
+        )
+    }
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A node of the captured expression DAG.
+#[derive(Debug)]
+pub struct Node {
+    pub id: u64,
+    /// The captured operation. Inside a `RefCell` so that, once the node
+    /// is materialised, its children can be *released* (replaced by a
+    /// `Source` of the result), freeing temporaries and breaking deep
+    /// reference chains.
+    pub op: RefCell<Op>,
+    pub shape: Shape,
+    pub dtype: DType,
+    /// Materialised result cache (filled by the engine).
+    pub storage: RefCell<Option<Data>>,
+    /// Marker set when this node's buffer was donated to an in-place
+    /// update (accumulation optimisation) — its storage is gone for good.
+    pub donated: Cell<bool>,
+}
+
+impl Node {
+    pub fn new(op: Op, shape: Shape, dtype: DType) -> NodeRef {
+        Rc::new(Node {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            op: RefCell::new(op),
+            shape,
+            dtype,
+            storage: RefCell::new(None),
+            donated: Cell::new(false),
+        })
+    }
+
+    /// A node that is already materialised (sources bound from host
+    /// memory).
+    pub fn new_source(shape: Shape, data: Data) -> NodeRef {
+        let dtype = data.dtype();
+        Rc::new(Node {
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+            op: RefCell::new(Op::Source(data.clone())),
+            shape,
+            dtype,
+            storage: RefCell::new(Some(data)),
+            donated: Cell::new(false),
+        })
+    }
+
+    pub fn is_materialized(&self) -> bool {
+        self.storage.borrow().is_some()
+    }
+
+    /// Clone of the materialised data (cheap: `Arc` bump).
+    pub fn data(&self) -> Option<Data> {
+        self.storage.borrow().clone()
+    }
+
+    /// Children handles.
+    pub fn children(&self) -> Vec<NodeRef> {
+        self.op.borrow().children()
+    }
+
+    pub fn opcode(&self) -> u32 {
+        self.op.borrow().opcode()
+    }
+
+    /// Store the engine-produced result and drop the child references:
+    /// a materialised node behaves exactly like a source from then on.
+    pub fn materialize(&self, data: Data) {
+        debug_assert_eq!(data.len(), self.shape.len(), "materialize length mismatch");
+        *self.storage.borrow_mut() = Some(data.clone());
+        // Release captured inputs: frees temporaries eagerly and keeps
+        // Drop chains shallow.
+        let old = std::mem::replace(&mut *self.op.borrow_mut(), Op::Source(data));
+        // Drop the old op's children iteratively via the same machinery
+        // as Node::drop.
+        drop_children_iteratively(old.take_children());
+    }
+}
+
+/// Iteratively tear down a forest of node references without recursing.
+///
+/// (`Node` has a custom `Drop`, so fields cannot be moved out of an
+/// unwrapped value; instead, detach children through the `RefCell` while
+/// we hold the last reference, leaving a trivial drop.)
+fn drop_children_iteratively(mut stack: Vec<NodeRef>) {
+    while let Some(c) = stack.pop() {
+        if Rc::strong_count(&c) == 1 {
+            let op = std::mem::replace(&mut *c.op.borrow_mut(), Op::ConstF64(0.0));
+            stack.extend(op.take_children());
+            // `c` drops here with no children attached.
+        }
+    }
+}
+
+impl Drop for Node {
+    fn drop(&mut self) {
+        // Replace our op with a leaf and tear the detached subtree down
+        // iteratively — a deep chain (e.g. thousands of chained
+        // accumulations that were never forced) must not overflow the
+        // stack through recursive `Rc` drops.
+        let op = std::mem::replace(&mut *self.op.borrow_mut(), Op::ConstF64(0.0));
+        drop_children_iteratively(op.take_children());
+    }
+}
+
+/// Structural signature of a pending subgraph, used as the plan-cache key.
+///
+/// Two DAGs receive the same signature iff they have the same topology,
+/// opcodes, shapes and static parameters — buffer *contents* are excluded,
+/// so the rank-1-update DAG built by every iteration of `arbb_mxm2a/b`'s
+/// `_for` loop hits the cache after the first iteration (this models ArBB
+/// capturing the loop body once and replaying the compiled closure).
+pub fn structural_signature(root: &NodeRef) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::collections::HashMap;
+    use std::hash::{Hash, Hasher};
+
+    let mut local: HashMap<u64, u64> = HashMap::new();
+    let mut hasher = DefaultHasher::new();
+    let mut stack: Vec<(NodeRef, bool)> = vec![(root.clone(), false)];
+    while let Some((n, expanded)) = stack.pop() {
+        if !expanded && local.contains_key(&n.id) {
+            continue;
+        }
+        if n.is_materialized() && n.id != root.id {
+            let ln = local.len() as u64;
+            local.insert(n.id, ln);
+            (100u32, n.shape.len() as u64, n.dtype as u8 as u64).hash(&mut hasher);
+            continue;
+        }
+        if !expanded {
+            stack.push((n.clone(), true));
+            for c in n.children() {
+                if !local.contains_key(&c.id) {
+                    stack.push((c, false));
+                }
+            }
+        } else {
+            if local.contains_key(&n.id) {
+                continue;
+            }
+            let ln = local.len() as u64;
+            local.insert(n.id, ln);
+            n.opcode().hash(&mut hasher);
+            n.shape.hash(&mut hasher);
+            for c in n.children() {
+                local.get(&c.id).copied().unwrap_or(u64::MAX).hash(&mut hasher);
+            }
+            match &*n.op.borrow() {
+                Op::Bin(b, ..) => (*b as u8).hash(&mut hasher),
+                Op::Un(u, ..) => (*u as u8).hash(&mut hasher),
+                Op::ReduceRows(r, _) | Op::ReduceCols(r, _) | Op::ReduceAll(r, _) => {
+                    (*r as u8).hash(&mut hasher)
+                }
+                Op::Section { start, len, stride, .. } => (start, len, stride).hash(&mut hasher),
+                Op::ConstF64(c) => c.to_bits().hash(&mut hasher),
+                Op::Row(_, i) | Op::Col(_, i) => i.hash(&mut hasher),
+                Op::SetElem { i, j, .. } => (i, j).hash(&mut hasher),
+                Op::ReplaceCol { col, .. } => col.hash(&mut hasher),
+                Op::ReplaceRow { row, .. } => row.hash(&mut hasher),
+                _ => {}
+            }
+        }
+    }
+    hasher.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ops::BinOp;
+
+    fn src(n: usize) -> NodeRef {
+        Node::new_source(Shape::D1(n), Data::F64(Arc::new(vec![0.0; n])))
+    }
+
+    fn add(a: &NodeRef, b: &NodeRef) -> NodeRef {
+        Node::new(Op::Bin(BinOp::Add, a.clone(), b.clone()), a.shape, DType::F64)
+    }
+
+    #[test]
+    fn children_and_opcode() {
+        let a = src(4);
+        let b = src(4);
+        let c = add(&a, &b);
+        assert_eq!(c.children().len(), 2);
+        assert_eq!(c.opcode(), 3);
+        assert!(!c.is_materialized());
+        assert!(a.is_materialized());
+    }
+
+    #[test]
+    fn signature_is_structural() {
+        let a = src(8);
+        let b = src(8);
+        let e1 = add(&a, &b);
+        let e2 = add(&src(8), &src(8));
+        assert_eq!(structural_signature(&e1), structural_signature(&e2));
+        let e3 = Node::new(Op::Bin(BinOp::Mul, a, b), Shape::D1(8), DType::F64);
+        assert_ne!(structural_signature(&e1), structural_signature(&e3));
+        let e4 = add(&src(16), &src(16));
+        assert_ne!(structural_signature(&e1), structural_signature(&e4));
+    }
+
+    #[test]
+    fn materialize_releases_children() {
+        let a = src(4);
+        let b = src(4);
+        let c = add(&a, &b);
+        assert_eq!(c.children().len(), 2);
+        c.materialize(Data::F64(Arc::new(vec![1.0; 4])));
+        assert!(c.is_materialized());
+        assert_eq!(c.children().len(), 0, "children released after materialize");
+    }
+
+    #[test]
+    fn deep_chain_drop_does_not_overflow() {
+        let a = src(8);
+        let mut cur = add(&a, &a);
+        for _ in 0..300_000 {
+            cur = add(&cur, &a);
+        }
+        drop(cur); // must not blow the stack
+    }
+
+    #[test]
+    fn virtual_views_flagged() {
+        let a = src(16);
+        let m = Node::new(
+            Op::Reshape(a.clone(), Shape::D2 { rows: 4, cols: 4 }),
+            Shape::D2 { rows: 4, cols: 4 },
+            DType::F64,
+        );
+        assert!(m.op.borrow().is_virtual_view());
+        let r = Node::new(Op::Row(m.clone(), 1), Shape::D1(4), DType::F64);
+        assert!(r.op.borrow().is_virtual_view());
+        let red = Node::new(Op::ReduceAll(RedOp::Sum, r), Shape::Scalar, DType::F64);
+        assert!(!red.op.borrow().is_virtual_view());
+    }
+}

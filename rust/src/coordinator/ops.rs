@@ -1,0 +1,330 @@
+//! Scalar operator vocabulary of the expression IR.
+//!
+//! These are the element-wise operators ArBB overloads on its dense
+//! containers (§2 of the paper: "a wide variety of special operators for
+//! e.g. element-wise operations, vector-scalar operations, collectives and
+//! permutations").
+
+/// Binary element-wise operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+impl BinOp {
+    #[inline(always)]
+    pub fn apply(self, a: f64, b: f64) -> f64 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Min => a.min(b),
+            BinOp::Max => a.max(b),
+        }
+    }
+
+    /// Apply over slices: `out[i] = op(a[i], b[i])`.
+    ///
+    /// Monomorphised per operator so the inner loop vectorises; this is the
+    /// innermost loop of every fused element-wise kernel.
+    #[inline]
+    pub fn apply_slices(self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert_eq!(a.len(), out.len());
+        match self {
+            BinOp::Add => {
+                for i in 0..out.len() {
+                    out[i] = a[i] + b[i];
+                }
+            }
+            BinOp::Sub => {
+                for i in 0..out.len() {
+                    out[i] = a[i] - b[i];
+                }
+            }
+            BinOp::Mul => {
+                for i in 0..out.len() {
+                    out[i] = a[i] * b[i];
+                }
+            }
+            BinOp::Div => {
+                for i in 0..out.len() {
+                    out[i] = a[i] / b[i];
+                }
+            }
+            BinOp::Min => {
+                for i in 0..out.len() {
+                    out[i] = a[i].min(b[i]);
+                }
+            }
+            BinOp::Max => {
+                for i in 0..out.len() {
+                    out[i] = a[i].max(b[i]);
+                }
+            }
+        }
+    }
+
+    /// In-place variant: `acc[i] = op(acc[i], b[i])`.
+    #[inline]
+    pub fn apply_slices_inplace(self, acc: &mut [f64], b: &[f64]) {
+        debug_assert_eq!(acc.len(), b.len());
+        match self {
+            BinOp::Add => {
+                for i in 0..acc.len() {
+                    acc[i] += b[i];
+                }
+            }
+            BinOp::Sub => {
+                for i in 0..acc.len() {
+                    acc[i] -= b[i];
+                }
+            }
+            BinOp::Mul => {
+                for i in 0..acc.len() {
+                    acc[i] *= b[i];
+                }
+            }
+            BinOp::Div => {
+                for i in 0..acc.len() {
+                    acc[i] /= b[i];
+                }
+            }
+            BinOp::Min => {
+                for i in 0..acc.len() {
+                    acc[i] = acc[i].min(b[i]);
+                }
+            }
+            BinOp::Max => {
+                for i in 0..acc.len() {
+                    acc[i] = acc[i].max(b[i]);
+                }
+            }
+        }
+    }
+
+    /// Scalar-on-the-right variant: `out[i] = op(a[i], s)`.
+    #[inline]
+    pub fn apply_slice_scalar(self, a: &[f64], s: f64, out: &mut [f64]) {
+        debug_assert_eq!(a.len(), out.len());
+        match self {
+            BinOp::Add => {
+                for i in 0..out.len() {
+                    out[i] = a[i] + s;
+                }
+            }
+            BinOp::Sub => {
+                for i in 0..out.len() {
+                    out[i] = a[i] - s;
+                }
+            }
+            BinOp::Mul => {
+                for i in 0..out.len() {
+                    out[i] = a[i] * s;
+                }
+            }
+            BinOp::Div => {
+                for i in 0..out.len() {
+                    out[i] = a[i] / s;
+                }
+            }
+            BinOp::Min => {
+                for i in 0..out.len() {
+                    out[i] = a[i].min(s);
+                }
+            }
+            BinOp::Max => {
+                for i in 0..out.len() {
+                    out[i] = a[i].max(s);
+                }
+            }
+        }
+    }
+
+    /// Estimated FLOPs per element (for the virtual-time simulator).
+    pub fn flops(self) -> f64 {
+        match self {
+            BinOp::Div => 4.0, // div is several times an add/mul on WSM-EX
+            _ => 1.0,
+        }
+    }
+}
+
+/// Unary element-wise operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Abs,
+    Sqrt,
+    Exp,
+    Ln,
+    Recip,
+}
+
+impl UnOp {
+    #[inline(always)]
+    pub fn apply(self, a: f64) -> f64 {
+        match self {
+            UnOp::Neg => -a,
+            UnOp::Abs => a.abs(),
+            UnOp::Sqrt => a.sqrt(),
+            UnOp::Exp => a.exp(),
+            UnOp::Ln => a.ln(),
+            UnOp::Recip => 1.0 / a,
+        }
+    }
+
+    #[inline]
+    pub fn apply_slices(self, a: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(a.len(), out.len());
+        match self {
+            UnOp::Neg => {
+                for i in 0..out.len() {
+                    out[i] = -a[i];
+                }
+            }
+            UnOp::Abs => {
+                for i in 0..out.len() {
+                    out[i] = a[i].abs();
+                }
+            }
+            UnOp::Sqrt => {
+                for i in 0..out.len() {
+                    out[i] = a[i].sqrt();
+                }
+            }
+            UnOp::Exp => {
+                for i in 0..out.len() {
+                    out[i] = a[i].exp();
+                }
+            }
+            UnOp::Ln => {
+                for i in 0..out.len() {
+                    out[i] = a[i].ln();
+                }
+            }
+            UnOp::Recip => {
+                for i in 0..out.len() {
+                    out[i] = 1.0 / a[i];
+                }
+            }
+        }
+    }
+
+    pub fn flops(self) -> f64 {
+        match self {
+            UnOp::Neg | UnOp::Abs => 1.0,
+            UnOp::Sqrt | UnOp::Recip => 8.0,
+            UnOp::Exp | UnOp::Ln => 20.0,
+        }
+    }
+}
+
+/// Reduction operators (collectives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RedOp {
+    Sum,
+    Prod,
+    Min,
+    Max,
+}
+
+impl RedOp {
+    #[inline(always)]
+    pub fn identity(self) -> f64 {
+        match self {
+            RedOp::Sum => 0.0,
+            RedOp::Prod => 1.0,
+            RedOp::Min => f64::INFINITY,
+            RedOp::Max => f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline(always)]
+    pub fn fold(self, acc: f64, x: f64) -> f64 {
+        match self {
+            RedOp::Sum => acc + x,
+            RedOp::Prod => acc * x,
+            RedOp::Min => acc.min(x),
+            RedOp::Max => acc.max(x),
+        }
+    }
+
+    /// Reduce a slice.
+    #[inline]
+    pub fn fold_slice(self, xs: &[f64]) -> f64 {
+        match self {
+            // 4-way unrolled sum: breaks the serial FP dependence chain so
+            // the loop can keep multiple adds in flight (and autovectorise).
+            RedOp::Sum => {
+                let mut acc = [0.0f64; 4];
+                let chunks = xs.chunks_exact(4);
+                let rem = chunks.remainder();
+                for c in chunks {
+                    acc[0] += c[0];
+                    acc[1] += c[1];
+                    acc[2] += c[2];
+                    acc[3] += c[3];
+                }
+                let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+                for &x in rem {
+                    s += x;
+                }
+                s
+            }
+            _ => xs.iter().copied().fold(self.identity(), |a, x| self.fold(a, x)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binop_apply_matches_slices() {
+        let a = [1.0, 2.0, -3.0, 0.5];
+        let b = [4.0, -1.0, 2.0, 0.25];
+        for op in [BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Div, BinOp::Min, BinOp::Max] {
+            let mut out = [0.0; 4];
+            op.apply_slices(&a, &b, &mut out);
+            for i in 0..4 {
+                assert_eq!(out[i], op.apply(a[i], b[i]), "{op:?} elem {i}");
+            }
+            let mut acc = a;
+            op.apply_slices_inplace(&mut acc, &b);
+            assert_eq!(acc, out, "{op:?} inplace");
+        }
+    }
+
+    #[test]
+    fn unop_apply_matches_slices() {
+        let a = [1.0, 4.0, 0.25, 9.0];
+        for op in [UnOp::Neg, UnOp::Abs, UnOp::Sqrt, UnOp::Exp, UnOp::Ln, UnOp::Recip] {
+            let mut out = [0.0; 4];
+            op.apply_slices(&a, &mut out);
+            for i in 0..4 {
+                assert_eq!(out[i], op.apply(a[i]), "{op:?} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn reductions() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(RedOp::Sum.fold_slice(&xs), 15.0);
+        assert_eq!(RedOp::Prod.fold_slice(&xs), 120.0);
+        assert_eq!(RedOp::Min.fold_slice(&xs), 1.0);
+        assert_eq!(RedOp::Max.fold_slice(&xs), 5.0);
+        assert_eq!(RedOp::Sum.fold_slice(&[]), 0.0);
+        // unrolled sum handles remainders
+        let ys: Vec<f64> = (1..=11).map(|x| x as f64).collect();
+        assert_eq!(RedOp::Sum.fold_slice(&ys), 66.0);
+    }
+}

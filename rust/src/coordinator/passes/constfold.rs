@@ -1,0 +1,85 @@
+//! Scalar constant folding.
+//!
+//! Applied at capture time: when a scalar operator's operands are both
+//! compile-time constants, the DSL emits a folded constant node instead of
+//! deferring the arithmetic to the engine. ArBB's JIT performs the same
+//! folding on its intermediate representation; doing it at capture keeps
+//! pending graphs (and per-`call()` dispatch cost) smaller, which matters
+//! for the scalar-heavy CG driver loop (§3.4).
+
+use crate::coordinator::node::{Node, NodeRef, Op};
+use crate::coordinator::ops::{BinOp, UnOp};
+use crate::coordinator::plan::const_value;
+use crate::coordinator::shape::{DType, Shape};
+
+/// Fold `l op r` for scalar nodes when both are constants.
+/// Returns the folded node or `None` when not foldable.
+pub fn fold_bin(op: BinOp, l: &NodeRef, r: &NodeRef) -> Option<NodeRef> {
+    if !l.shape.is_scalar() || !r.shape.is_scalar() {
+        return None;
+    }
+    let (lv, rv) = (const_value(l)?, const_value(r)?);
+    Some(Node::new(Op::ConstF64(op.apply(lv, rv)), Shape::Scalar, DType::F64))
+}
+
+/// Fold `op x` for a scalar constant operand.
+pub fn fold_un(op: UnOp, x: &NodeRef) -> Option<NodeRef> {
+    if !x.shape.is_scalar() {
+        return None;
+    }
+    let xv = const_value(x)?;
+    Some(Node::new(Op::ConstF64(op.apply(xv)), Shape::Scalar, DType::F64))
+}
+
+/// Algebraic identities on vector ops with constant scalar operands:
+/// `x * 1`, `x + 0`, `x - 0`, `x / 1` → `x`.
+pub fn identity_elide(op: BinOp, l: &NodeRef, r: &NodeRef) -> Option<NodeRef> {
+    let rv = const_value(r)?;
+    let keep_left = match op {
+        BinOp::Mul | BinOp::Div => rv == 1.0,
+        BinOp::Add | BinOp::Sub => rv == 0.0,
+        _ => false,
+    };
+    if keep_left && !l.shape.is_scalar() {
+        Some(l.clone())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::node::Data;
+    use std::sync::Arc;
+
+    fn c(v: f64) -> NodeRef {
+        Node::new(Op::ConstF64(v), Shape::Scalar, DType::F64)
+    }
+
+    #[test]
+    fn folds_scalar_chain() {
+        let a = fold_bin(BinOp::Add, &c(2.0), &c(3.0)).unwrap();
+        assert_eq!(const_value(&a), Some(5.0));
+        let b = fold_bin(BinOp::Mul, &a, &c(4.0)).unwrap();
+        assert_eq!(const_value(&b), Some(20.0));
+        let s = fold_un(UnOp::Sqrt, &b).unwrap();
+        assert!((const_value(&s).unwrap() - 20.0f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn does_not_fold_vectors() {
+        let v = Node::new_source(Shape::D1(4), Data::F64(Arc::new(vec![1.0; 4])));
+        assert!(fold_bin(BinOp::Add, &v, &c(1.0)).is_none());
+    }
+
+    #[test]
+    fn identity_elision() {
+        let v = Node::new_source(Shape::D1(4), Data::F64(Arc::new(vec![2.0; 4])));
+        let kept = identity_elide(BinOp::Mul, &v, &c(1.0)).unwrap();
+        assert_eq!(kept.id, v.id);
+        assert!(identity_elide(BinOp::Mul, &v, &c(2.0)).is_none());
+        assert!(identity_elide(BinOp::Add, &v, &c(0.0)).is_some());
+        assert!(identity_elide(BinOp::Min, &v, &c(0.0)).is_none());
+    }
+}

@@ -1,0 +1,170 @@
+//! Structural common-subexpression elimination.
+//!
+//! Scans a pending region bottom-up, keying each node on
+//! `(opcode, static params, child identities)`; structurally identical
+//! pending nodes are rewritten to share a single representative, so the
+//! planner emits one step instead of N.
+//!
+//! ArBB's JIT performs CSE on captured closures. In the paper's kernels
+//! the effect is small (the hot loops are already hand-deduplicated), and
+//! the pass costs a hash-map walk per dispatch — it is therefore *off* by
+//! default and measured by the `ablations` bench, mirroring the paper's
+//! observation that the runtime optimiser, not the programmer, should be
+//! responsible for such rewrites (§4).
+
+use std::collections::HashMap;
+
+use crate::coordinator::node::{NodeRef, Op};
+use crate::coordinator::passes::analyze::analyze;
+
+/// Key describing a node structurally (children by identity).
+#[derive(Hash, PartialEq, Eq)]
+struct Key {
+    opcode: u32,
+    params: Vec<u64>,
+    children: Vec<u64>,
+}
+
+fn key_of(n: &NodeRef, rep: &HashMap<u64, NodeRef>) -> Key {
+    let op = n.op.borrow();
+    let params: Vec<u64> = match &*op {
+        Op::ConstF64(c) => vec![c.to_bits()],
+        Op::Iota(n) => vec![*n as u64],
+        Op::Bin(b, ..) => vec![*b as u64],
+        Op::Un(u, ..) => vec![*u as u64],
+        Op::Row(_, i) | Op::Col(_, i) => vec![*i as u64],
+        Op::Section { start, len, stride, .. } => vec![*start as u64, *len as u64, *stride as u64],
+        Op::RepeatRow { rows, .. } => vec![*rows as u64],
+        Op::RepeatCol { cols, .. } => vec![*cols as u64],
+        Op::Repeat { times, .. } => vec![*times as u64],
+        Op::ReduceRows(r, _) | Op::ReduceCols(r, _) | Op::ReduceAll(r, _) => vec![*r as u64],
+        Op::ReplaceCol { col, .. } => vec![*col as u64],
+        Op::ReplaceRow { row, .. } => vec![*row as u64],
+        Op::SetElem { i, j, .. } => vec![*i as u64, *j as u64],
+        // Sources/maps are identified by node id (never merged).
+        Op::Source(_) | Op::Map(_) => vec![n.id],
+        _ => vec![],
+    };
+    let children = op
+        .children()
+        .iter()
+        .map(|c| rep.get(&c.id).map(|r| r.id).unwrap_or(c.id))
+        .collect();
+    Key { opcode: op.opcode(), params, children }
+}
+
+/// Rewrite children of `n` to their representatives.
+fn rewrite_children(n: &NodeRef, rep: &HashMap<u64, NodeRef>) {
+    let mut op = n.op.borrow_mut();
+    let replace = |c: &mut NodeRef| {
+        if let Some(r) = rep.get(&c.id) {
+            if r.id != c.id {
+                *c = r.clone();
+            }
+        }
+    };
+    match &mut *op {
+        Op::Bin(_, a, b) | Op::Cat(a, b) | Op::Gather { src: a, idx: b } => {
+            replace(a);
+            replace(b);
+        }
+        Op::Un(_, a)
+        | Op::Row(a, _)
+        | Op::Col(a, _)
+        | Op::Section { v: a, .. }
+        | Op::RepeatRow { v: a, .. }
+        | Op::RepeatCol { v: a, .. }
+        | Op::Repeat { v: a, .. }
+        | Op::Reshape(a, _)
+        | Op::ReduceRows(_, a)
+        | Op::ReduceCols(_, a)
+        | Op::ReduceAll(_, a) => replace(a),
+        Op::ReplaceCol { m, v, .. } | Op::ReplaceRow { m, v, .. } => {
+            replace(m);
+            replace(v);
+        }
+        Op::SetElem { m, s, .. } => {
+            replace(m);
+            replace(s);
+        }
+        Op::Map(f) => {
+            for c in &mut f.captures {
+                replace(c);
+            }
+        }
+        Op::Source(_) | Op::ConstF64(_) | Op::Iota(_) => {}
+    }
+}
+
+/// Run CSE over the pending region rooted at `root`.
+/// Returns the number of nodes eliminated.
+pub fn cse(root: &NodeRef) -> usize {
+    let an = analyze(root);
+    let mut rep: HashMap<u64, NodeRef> = HashMap::new();
+    let mut seen: HashMap<Key, NodeRef> = HashMap::new();
+    let mut merged = 0;
+    for n in &an.topo {
+        rewrite_children(n, &rep);
+        let k = key_of(n, &rep);
+        match seen.get(&k) {
+            Some(existing) if existing.id != n.id => {
+                rep.insert(n.id, existing.clone());
+                merged += 1;
+            }
+            Some(_) => {}
+            None => {
+                seen.insert(k, n.clone());
+            }
+        }
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::node::{Data, Node};
+    use crate::coordinator::ops::BinOp;
+    use crate::coordinator::shape::{DType, Shape};
+    use std::sync::Arc;
+
+    fn src(n: usize) -> NodeRef {
+        Node::new_source(Shape::D1(n), Data::F64(Arc::new(vec![1.0; n])))
+    }
+
+    fn add(a: &NodeRef, b: &NodeRef) -> NodeRef {
+        Node::new(Op::Bin(BinOp::Add, a.clone(), b.clone()), a.shape, DType::F64)
+    }
+
+    #[test]
+    fn merges_identical_subtrees() {
+        let a = src(4);
+        let b = src(4);
+        let t1 = add(&a, &b);
+        let t2 = add(&a, &b); // structurally identical
+        let root = Node::new(Op::Bin(BinOp::Mul, t1, t2), Shape::D1(4), DType::F64);
+        let merged = cse(&root);
+        assert_eq!(merged, 1);
+        // both children now point at the same node
+        let ch = root.children();
+        assert_eq!(ch[0].id, ch[1].id);
+    }
+
+    #[test]
+    fn distinct_sources_not_merged() {
+        let t1 = add(&src(4), &src(4));
+        let t2 = add(&src(4), &src(4)); // different source nodes
+        let root = Node::new(Op::Bin(BinOp::Mul, t1, t2), Shape::D1(4), DType::F64);
+        assert_eq!(cse(&root), 0);
+    }
+
+    #[test]
+    fn different_params_not_merged() {
+        let a = src(4);
+        let b = src(4);
+        let t1 = add(&a, &b);
+        let t2 = Node::new(Op::Bin(BinOp::Sub, a.clone(), b.clone()), Shape::D1(4), DType::F64);
+        let root = Node::new(Op::Bin(BinOp::Mul, t1, t2), Shape::D1(4), DType::F64);
+        assert_eq!(cse(&root), 0);
+    }
+}

@@ -1,0 +1,246 @@
+//! View-composition rules for the fusion pass.
+//!
+//! ArBB's JIT avoids materialising the temporaries a naïvely-executed
+//! data-parallel program would create: `repeat_row(b.col(i), n)` in
+//! `arbb_mxm1` never becomes an n×n matrix — it is an index transform the
+//! generated loop applies while streaming. We reproduce that with affine
+//! [`View`]s: walking from a fused kernel's output space down through
+//! virtual structural operators, each operator composes onto the view.
+//! When a composition is not representable (rare corner cases, e.g. a
+//! `repeat_col` under a non-identity view), the planner falls back to
+//! materialising the operand — correctness never depends on fusability.
+
+use crate::coordinator::node::Op;
+use crate::coordinator::shape::{Shape, View};
+
+/// Compose the view `v` (mapping the kernel's output flat index into the
+/// *current* node's flat index space) through the virtual operator `op`,
+/// yielding the view into the operator's input.
+///
+/// Returns `None` when the composition is not affine-representable; the
+/// planner then materialises the input instead.
+pub fn compose(op: &Op, v: &View) -> Option<View> {
+    match op {
+        // row i of an (rows × cols) matrix: input_flat = i*cols + cur_flat
+        Op::Row(m, i) => {
+            let cols = m.shape.cols();
+            Some(offset(scale(v, 1), i * cols))
+        }
+        // col j: input_flat = cur_flat * cols + j
+        Op::Col(m, j) => {
+            let cols = m.shape.cols();
+            Some(offset(scale(v, cols), *j))
+        }
+        // section(v, start, len, stride): input_flat = start + cur*stride
+        Op::Section { start, stride, .. } => Some(offset(scale(v, *stride), *start)),
+        // reshape: flat index unchanged
+        Op::Reshape(..) => Some(*v),
+        // repeat_row(x, rows): out(r,c) = x(c)  ⇒ input = cur_flat % len(x)
+        Op::RepeatRow { v: x, .. } => {
+            let len = x.shape.len();
+            modulo(v, len)
+        }
+        // repeat(x, times): cyclic tile ⇒ input = cur_flat % len(x)
+        Op::Repeat { v: x, .. } => {
+            let len = x.shape.len();
+            modulo(v, len)
+        }
+        // repeat_col(x, cols): out(r,c) = x(r) ⇒ input = cur_flat / cols.
+        // Division is only representable when the incoming view is the
+        // identity over this node's own (rows × cols) space: then the
+        // output row index r is just idx / out_cols, i.e. a view with
+        // row_stride 1 and col_stride 0.
+        Op::RepeatCol { cols, .. } => {
+            if v.base == 0
+                && v.modulo.is_none()
+                && v.col_stride == 1
+                && v.row_stride == v.out_cols
+                && v.out_cols == *cols
+            {
+                Some(View {
+                    base: 0,
+                    row_stride: 1,
+                    col_stride: 0,
+                    out_cols: v.out_cols,
+                    modulo: None,
+                })
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Multiply all strides (and the modulo) of a view by `s`.
+/// `(x mod m) * s == (x*s) mod (m*s)` for positive integers, so modulo
+/// composes through scaling.
+fn scale(v: &View, s: usize) -> View {
+    View {
+        base: v.base * s,
+        row_stride: v.row_stride * s,
+        col_stride: v.col_stride * s,
+        out_cols: v.out_cols,
+        modulo: v.modulo.map(|m| m * s),
+    }
+}
+
+/// Add a constant offset to the final index. (`View::map` applies the
+/// modulo to the linear part only and adds `base` afterwards, so a base
+/// shift composes unconditionally.)
+fn offset(v: View, off: usize) -> View {
+    View { base: v.base + off, ..v }
+}
+
+/// Apply `% len` to the final index. Representable only when no base
+/// offset or previous modulo interferes.
+fn modulo(v: &View, len: usize) -> Option<View> {
+    if v.base == 0 && v.modulo.is_none() {
+        Some(View { modulo: Some(len), ..*v })
+    } else if v.base == 0 && v.modulo == Some(len) {
+        Some(*v)
+    } else {
+        None
+    }
+}
+
+/// Size-aware fusability: an op with multiple pending consumers is still
+/// worth recomputing inside each consumer when it is a zero-cost view;
+/// element-wise work is materialised instead.
+pub fn recompute_ok(op: &Op) -> bool {
+    op.is_virtual_view() || matches!(op, Op::ConstF64(_) | Op::Iota(_))
+}
+
+/// Shape of the output index space a fused kernel evaluates under.
+pub fn kernel_space(shape: &Shape) -> View {
+    View::identity(shape.cols().max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::node::{Data, Node, NodeRef};
+    use std::sync::Arc;
+
+    fn mat(rows: usize, cols: usize) -> NodeRef {
+        Node::new_source(
+            Shape::D2 { rows, cols },
+            Data::F64(Arc::new((0..rows * cols).map(|x| x as f64).collect())),
+        )
+    }
+
+    fn vecn(n: usize) -> NodeRef {
+        Node::new_source(Shape::D1(n), Data::F64(Arc::new((0..n).map(|x| x as f64).collect())))
+    }
+
+    /// mxm1's `repeat_row(b.col(i), n)` pattern: output space n×n,
+    /// t(m,k) = b(k,i).
+    #[test]
+    fn repeat_row_of_col() {
+        let n = 4;
+        let b = mat(n, n);
+        let col_i = Op::Col(b.clone(), 2);
+        let rep = Op::RepeatRow { v: vecn(n), rows: n };
+
+        let out = View::identity(n); // output space n×n
+        let v1 = compose(&rep, &out).expect("repeat_row composes under identity");
+        let v2 = compose(&col_i, &v1).expect("col composes");
+        // t(m,k) = b[k][2] → flat = k*n + 2
+        for m in 0..n {
+            for k in 0..n {
+                assert_eq!(v2.map(m * n + k), k * n + 2, "(m={m},k={k})");
+            }
+        }
+    }
+
+    /// mxm2a's `repeat_col(a.col(i), n)` pattern: t(m,k) = a(m,i).
+    #[test]
+    fn repeat_col_of_col() {
+        let n = 4;
+        let a = mat(n, n);
+        let col_i = Op::Col(a.clone(), 1);
+        let rep = Op::RepeatCol { v: vecn(n), cols: n };
+
+        let out = View::identity(n);
+        let v1 = compose(&rep, &out).expect("repeat_col composes under identity");
+        let v2 = compose(&col_i, &v1).expect("col composes");
+        for m in 0..n {
+            for k in 0..n {
+                assert_eq!(v2.map(m * n + k), m * n + 1, "(m={m},k={k})");
+            }
+        }
+    }
+
+    /// mxm2b also uses `repeat_row(b.row(k), n)`: t(m,j) = b(k,j).
+    #[test]
+    fn repeat_row_of_row() {
+        let n = 4;
+        let b = mat(n, n);
+        let row_k = Op::Row(b.clone(), 3);
+        let rep = Op::RepeatRow { v: vecn(n), rows: n };
+        let out = View::identity(n);
+        let v1 = compose(&rep, &out).unwrap();
+        let v2 = compose(&row_k, &v1).unwrap();
+        for m in 0..n {
+            for j in 0..n {
+                assert_eq!(v2.map(m * n + j), 3 * n + j);
+            }
+        }
+    }
+
+    /// FFT's `repeat(section(twiddles, 0, m), i)` pattern.
+    #[test]
+    fn repeat_of_section() {
+        let tw = vecn(8);
+        let m = 4;
+        let sec = Op::Section { v: tw.clone(), start: 0, len: m, stride: 1 };
+        let rep = Op::Repeat { v: vecn(m), times: 2 };
+        let out = View::identity(8); // output length 8 vector
+        let v1 = compose(&rep, &out).unwrap();
+        let v2 = compose(&sec, &v1).unwrap();
+        let got: Vec<usize> = (0..8).map(|i| v2.map(i)).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    /// FFT's strided even/odd sections.
+    #[test]
+    fn strided_section() {
+        let data = vecn(8);
+        let even = Op::Section { v: data.clone(), start: 0, len: 4, stride: 2 };
+        let odd = Op::Section { v: data.clone(), start: 1, len: 4, stride: 2 };
+        let out = View::identity(4);
+        let ve = compose(&even, &out).unwrap();
+        let vo = compose(&odd, &out).unwrap();
+        assert_eq!((0..4).map(|i| ve.map(i)).collect::<Vec<_>>(), vec![0, 2, 4, 6]);
+        assert_eq!((0..4).map(|i| vo.map(i)).collect::<Vec<_>>(), vec![1, 3, 5, 7]);
+    }
+
+    /// repeat_col under a non-identity view must refuse (fallback path).
+    #[test]
+    fn repeat_col_refuses_non_identity() {
+        let n = 4;
+        let rep = Op::RepeatCol { v: vecn(n), cols: n };
+        let shifted = View { base: 5, ..View::identity(n) };
+        assert!(compose(&rep, &shifted).is_none());
+    }
+
+    /// modulo after an offset must refuse.
+    #[test]
+    fn modulo_after_offset_refuses() {
+        let rep = Op::RepeatRow { v: vecn(4), rows: 4 };
+        let shifted = View { base: 2, ..View::identity(4) };
+        assert!(compose(&rep, &shifted).is_none());
+    }
+
+    #[test]
+    fn section_of_section_composes() {
+        let data = vecn(16);
+        let s1 = Op::Section { v: data.clone(), start: 2, len: 8, stride: 1 };
+        // section(s1, 1, 4, 2): indices 1,3,5,7 of s1 = 3,5,7,9 of data
+        let s2 = Op::Section { v: vecn(8), start: 1, len: 4, stride: 2 };
+        let out = View::identity(4);
+        let v2 = compose(&s2, &out).unwrap();
+        let v1 = compose(&s1, &v2).unwrap();
+        assert_eq!((0..4).map(|i| v1.map(i)).collect::<Vec<_>>(), vec![3, 5, 7, 9]);
+    }
+}

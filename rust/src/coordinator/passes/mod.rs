@@ -1,0 +1,15 @@
+//! Optimisation passes of the capture→optimise→execute pipeline.
+//!
+//! * [`analyze`] — pending-region reachability, consumer counts, topo order
+//!   (drives fusion and dead-code elimination: unreachable pending nodes
+//!   are simply never planned, and dropped handles free their subgraphs).
+//! * [`fusion`] — affine view composition for virtual structural
+//!   operators, and the recompute-vs-materialise policy.
+//! * [`constfold`] — scalar constant folding applied at capture time.
+//! * [`cse`] — structural common-subexpression elimination over a pending
+//!   region (optional; ablated in `benches/ablations.rs`).
+
+pub mod analyze;
+pub mod constfold;
+pub mod cse;
+pub mod fusion;

@@ -1,0 +1,642 @@
+//! Lowering: pending expression DAG → execution plan.
+//!
+//! This is the optimiser half of the "JIT": given the pending subgraph
+//! rooted at a forced value, decide which nodes materialise (steps) and
+//! which fuse into their consumer's loop (element-wise chains and virtual
+//! views), detect in-place accumulation opportunities, and emit a
+//! topologically ordered list of [`Step`]s for the engine.
+//!
+//! The optimisations modelled after ArBB's JIT:
+//!  * **element-wise fusion** — private temporaries never hit memory;
+//!  * **view absorption** — `row/col/section/repeat_*` become index
+//!    transforms ([`super::passes::fusion`]);
+//!  * **reduction fusion** — a reduction evaluates its fused operand
+//!    row-block-wise (the `add_reduce(a.row(i) * b.col(j))` pattern);
+//!  * **in-place accumulation** — `c = c + x` donates `c`'s buffer when
+//!    provably dead (the `c += outer-product` loop of `arbb_mxm2a/b`);
+//!  * **in-place structural update** — `replace_col`/`set_elem` mutate
+//!    instead of copy when the operand is uniquely owned.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use super::node::{Node, NodeRef, Op};
+use super::ops::{BinOp, RedOp, UnOp};
+use super::passes::analyze::{analyze, Analysis};
+use super::passes::fusion::{compose, kernel_space};
+use super::shape::{DType, View};
+
+/// Upper bound on the number of operators fused into a single kernel.
+/// Long un-forced accumulation chains (building `c = c + x_k` for every
+/// `k` before any read) are split into segments of this size, bounding
+/// scratch usage while still amortising memory traffic.
+pub const MAX_FUSE_OPS: usize = 96;
+
+/// A fused element-wise expression tree evaluated block-wise.
+#[derive(Debug)]
+pub enum FTree {
+    /// Materialised input read through an affine view.
+    Leaf { node: NodeRef, view: View },
+    /// Scalar constant.
+    Const(f64),
+    /// Broadcast of a (materialised-by-then) scalar node.
+    ScalarLeaf { node: NodeRef },
+    /// Flat output index as a value (iota).
+    Iota,
+    /// The current value of the output buffer (in-place accumulation).
+    Acc,
+    Bin(BinOp, Box<FTree>, Box<FTree>),
+    Un(UnOp, Box<FTree>),
+}
+
+impl FTree {
+    /// FLOPs per produced element (for stats and the scaling simulator).
+    pub fn flops_per_elem(&self) -> f64 {
+        match self {
+            FTree::Bin(op, a, b) => op.flops() + a.flops_per_elem() + b.flops_per_elem(),
+            FTree::Un(op, a) => op.flops() + a.flops_per_elem(),
+            _ => 0.0,
+        }
+    }
+
+    /// Bytes of *input* traffic per produced element (8 per distinct leaf;
+    /// broadcast leaves are counted once and amortise to ~0, but we keep
+    /// the pessimistic estimate simple).
+    pub fn bytes_per_elem(&self) -> f64 {
+        match self {
+            FTree::Leaf { view, .. } => {
+                // Broadcast leaves (stride 0 in both dims) stay in register.
+                if view.row_stride == 0 && view.col_stride == 0 {
+                    0.0
+                } else {
+                    8.0
+                }
+            }
+            FTree::ScalarLeaf { .. } | FTree::Const(_) | FTree::Iota => 0.0,
+            FTree::Acc => 8.0,
+            FTree::Bin(_, a, b) => a.bytes_per_elem() + b.bytes_per_elem(),
+            FTree::Un(_, a) => a.bytes_per_elem(),
+        }
+    }
+
+    fn count_ops(&self) -> usize {
+        match self {
+            FTree::Bin(_, a, b) => 1 + a.count_ops() + b.count_ops(),
+            FTree::Un(_, a) => 1 + a.count_ops(),
+            _ => 0,
+        }
+    }
+}
+
+/// One unit of engine work, materialising exactly one node.
+#[derive(Debug)]
+pub enum Step {
+    /// Evaluate `tree` over the flat index space of `out`.
+    Fused { out: NodeRef, tree: FTree },
+    /// In-place: `out` takes `base`'s donated buffer (already holding the
+    /// starting values); `tree` contains an [`FTree::Acc`] leaf.
+    Accumulate { out: NodeRef, base: NodeRef, tree: FTree },
+    /// Row-wise reduction of a fused operand: `out[m] = red_k tree(m,k)`.
+    ReduceRows { out: NodeRef, red: RedOp, tree: FTree, rows: usize, cols: usize },
+    /// Column-wise reduction: `out[k] = red_m tree(m,k)`.
+    ReduceCols { out: NodeRef, red: RedOp, tree: FTree, rows: usize, cols: usize },
+    /// Full reduction to a scalar.
+    ReduceAll { out: NodeRef, red: RedOp, tree: FTree, len: usize },
+    /// Vector concatenation; both halves are fused trees.
+    Cat { out: NodeRef, a: FTree, la: usize, b: FTree, lb: usize },
+    /// Column replacement (in place when donatable).
+    ReplaceCol { out: NodeRef, m: NodeRef, col: usize, vtree: FTree },
+    /// Row replacement.
+    ReplaceRow { out: NodeRef, m: NodeRef, row: usize, vtree: FTree },
+    /// Single element store.
+    SetElem { out: NodeRef, m: NodeRef, i: usize, j: usize, s: NodeRef },
+    /// Gather through an i64 index container.
+    Gather { out: NodeRef, src: NodeRef, idx: NodeRef },
+    /// ArBB `map()` over the output elements.
+    Map { out: NodeRef },
+}
+
+impl Step {
+    pub fn out(&self) -> &NodeRef {
+        match self {
+            Step::Fused { out, .. }
+            | Step::Accumulate { out, .. }
+            | Step::ReduceRows { out, .. }
+            | Step::ReduceCols { out, .. }
+            | Step::ReduceAll { out, .. }
+            | Step::Cat { out, .. }
+            | Step::ReplaceCol { out, .. }
+            | Step::ReplaceRow { out, .. }
+            | Step::SetElem { out, .. }
+            | Step::Gather { out, .. }
+            | Step::Map { out } => out,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Step::Fused { .. } => "fused",
+            Step::Accumulate { .. } => "accumulate",
+            Step::ReduceRows { .. } => "reduce_rows",
+            Step::ReduceCols { .. } => "reduce_cols",
+            Step::ReduceAll { .. } => "reduce_all",
+            Step::Cat { .. } => "cat",
+            Step::ReplaceCol { .. } => "replace_col",
+            Step::ReplaceRow { .. } => "replace_row",
+            Step::SetElem { .. } => "set_elem",
+            Step::Gather { .. } => "gather",
+            Step::Map { .. } => "map",
+        }
+    }
+}
+
+/// An executable plan: steps in dependency order.
+#[derive(Debug, Default)]
+pub struct Plan {
+    pub steps: Vec<Step>,
+}
+
+/// Planner options (a subset of [`super::Options`] relevant to lowering).
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    /// Element-wise fusion on/off (the paper's headline optimisation;
+    /// ablated by `benches/ablations.rs`).
+    pub fusion: bool,
+    /// Allow in-place buffer donation.
+    pub in_place: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { fusion: true, in_place: true }
+    }
+}
+
+/// Plan the pending subgraph rooted at `root`.
+pub fn plan(root: &NodeRef, opts: PlanOptions) -> Plan {
+    let mut planner = Planner {
+        an: analyze(root),
+        opts,
+        plan: Plan::default(),
+        planned: HashSet::new(),
+    };
+    if root.is_materialized() {
+        return planner.plan;
+    }
+    planner.run(root);
+    planner.plan
+}
+
+struct Planner {
+    an: Analysis,
+    opts: PlanOptions,
+    plan: Plan,
+    planned: HashSet<u64>,
+}
+
+impl Planner {
+    fn run(&mut self, root: &NodeRef) {
+        // Pass 1: decide the initial set of materialisation roots.
+        // Alongside the structural rules, track the *fused-region size*
+        // bottom-up and cut at MAX_FUSE_OPS: an un-forced 50k-deep
+        // accumulation chain must become ~500 bounded steps, not one
+        // planner recursion 50k frames deep.
+        let mut roots: HashSet<u64> = HashSet::new();
+        roots.insert(root.id);
+        let topo = std::mem::take(&mut self.an.topo);
+        let mut fdepth: std::collections::HashMap<u64, usize> =
+            std::collections::HashMap::new();
+        for n in &topo {
+            if self.must_materialize(n) {
+                roots.insert(n.id);
+                fdepth.insert(n.id, 0);
+                continue;
+            }
+            let d = {
+                let op = n.op.borrow();
+                let child_d = |c: &NodeRef| {
+                    if roots.contains(&c.id) {
+                        0
+                    } else {
+                        fdepth.get(&c.id).copied().unwrap_or(0)
+                    }
+                };
+                match &*op {
+                    Op::Bin(_, a, b) => 1 + child_d(a) + child_d(b),
+                    Op::Un(_, a) => 1 + child_d(a),
+                    o if o.is_virtual_view() => {
+                        o.children().first().map(&child_d).unwrap_or(0)
+                    }
+                    _ => 0,
+                }
+            };
+            if d > MAX_FUSE_OPS {
+                roots.insert(n.id);
+                fdepth.insert(n.id, 0);
+            } else {
+                fdepth.insert(n.id, d);
+            }
+        }
+        // Pass 2: emit steps in topo order. Tree building may promote
+        // additional nodes (failed view compositions, fusion-cap cuts);
+        // `emit` recurses on those first — promotion chains are shallow.
+        for n in &topo {
+            if roots.contains(&n.id) {
+                self.emit(n);
+            }
+        }
+        self.an.topo = topo;
+        // The forced root is always last; make sure it was emitted even if
+        // topo missed it (single-node graphs).
+        if !self.planned.contains(&root.id) {
+            self.emit(root);
+        }
+    }
+
+    /// Ops that can never be absorbed into a consumer's loop.
+    fn must_materialize(&self, n: &NodeRef) -> bool {
+        if n.is_materialized() {
+            return false;
+        }
+        let op = n.op.borrow();
+        match &*op {
+            Op::Bin(..) | Op::Un(..) => {
+                // Element-wise: materialise when shared or when fusion is
+                // disabled (the "every operator writes a temporary" mode).
+                !self.opts.fusion || !self.an.is_private_temp(n)
+            }
+            op if op.is_virtual_view() => false, // views recompute for free
+            Op::Source(_) | Op::ConstF64(_) => false,
+            Op::Iota(_) => false,
+            _ => true, // reductions, cat, replace, set, gather, map
+        }
+    }
+
+    /// Emit the step materialising `n` (dependencies first).
+    fn emit(&mut self, n: &NodeRef) {
+        if n.is_materialized() || self.planned.contains(&n.id) {
+            return;
+        }
+        self.planned.insert(n.id);
+        let op = n.op.borrow();
+        let step = match &*op {
+            Op::Source(_) => None,
+            Op::ConstF64(c) => {
+                // Forcing a constant scalar: materialise directly.
+                let c = *c;
+                drop(op);
+                n.materialize(super::node::Data::F64(std::sync::Arc::new(vec![c])));
+                self.planned.remove(&n.id);
+                return;
+            }
+            Op::Iota(_) => Some(Step::Fused { out: n.clone(), tree: FTree::Iota }),
+            Op::Bin(..) | Op::Un(..) => {
+                drop(op);
+                return self.emit_elementwise(n);
+            }
+            Op::ReduceRows(red, input) => {
+                let (red, input) = (*red, input.clone());
+                drop(op);
+                let (rows, cols) = (input.shape.rows(), input.shape.cols());
+                let tree = self.build_tree(&input, kernel_space(&input.shape), &mut 0, false);
+                Some(Step::ReduceRows { out: n.clone(), red, tree, rows, cols })
+            }
+            Op::ReduceCols(red, input) => {
+                let (red, input) = (*red, input.clone());
+                drop(op);
+                let (rows, cols) = (input.shape.rows(), input.shape.cols());
+                let tree = self.build_tree(&input, kernel_space(&input.shape), &mut 0, false);
+                Some(Step::ReduceCols { out: n.clone(), red, tree, rows, cols })
+            }
+            Op::ReduceAll(red, input) => {
+                let (red, input) = (*red, input.clone());
+                drop(op);
+                let len = input.shape.len();
+                let tree = self.build_tree(&input, kernel_space(&input.shape), &mut 0, false);
+                Some(Step::ReduceAll { out: n.clone(), red, tree, len })
+            }
+            Op::Cat(a, b) => {
+                let (a, b) = (a.clone(), b.clone());
+                drop(op);
+                let (la, lb) = (a.shape.len(), b.shape.len());
+                let ta = self.build_tree(&a, kernel_space(&a.shape), &mut 0, false);
+                let tb = self.build_tree(&b, kernel_space(&b.shape), &mut 0, false);
+                Some(Step::Cat { out: n.clone(), a: ta, la, b: tb, lb })
+            }
+            Op::ReplaceCol { m, col, v } => {
+                let (m, col, v) = (m.clone(), *col, v.clone());
+                drop(op);
+                self.ensure(&m);
+                let vtree = self.build_tree(&v, kernel_space(&v.shape), &mut 0, false);
+                Some(Step::ReplaceCol { out: n.clone(), m, col, vtree })
+            }
+            Op::ReplaceRow { m, row, v } => {
+                let (m, row, v) = (m.clone(), *row, v.clone());
+                drop(op);
+                self.ensure(&m);
+                let vtree = self.build_tree(&v, kernel_space(&v.shape), &mut 0, false);
+                Some(Step::ReplaceRow { out: n.clone(), m, row, vtree })
+            }
+            Op::SetElem { m, i, j, s } => {
+                let (m, i, j, s) = (m.clone(), *i, *j, s.clone());
+                drop(op);
+                self.ensure(&m);
+                self.ensure(&s);
+                Some(Step::SetElem { out: n.clone(), m, i, j, s })
+            }
+            Op::Gather { src, idx } => {
+                let (src, idx) = (src.clone(), idx.clone());
+                drop(op);
+                self.ensure(&src);
+                self.ensure(&idx);
+                Some(Step::Gather { out: n.clone(), src, idx })
+            }
+            Op::Map(f) => {
+                let captures = f.captures.clone();
+                drop(op);
+                for c in &captures {
+                    self.ensure(c);
+                }
+                Some(Step::Map { out: n.clone() })
+            }
+            // Remaining ops are the virtual views (Row/Col/Section/
+            // Repeat*/Reshape), promoted to materialisation: copy the
+            // child through the composed view. From an identity space
+            // every view operator composes (refusals only arise under
+            // already-transformed views), so `compose` cannot fail here.
+            other => {
+                debug_assert!(other.is_virtual_view(), "unhandled op in planner");
+                let space = kernel_space(&n.shape);
+                let composed =
+                    compose(&op, &space).expect("virtual view must compose from identity space");
+                let child = op.children().pop().expect("view has one child");
+                drop(op);
+                let tree = self.build_tree(&child, composed, &mut 0, false);
+                return self.push(Step::Fused { out: n.clone(), tree });
+            }
+        };
+        if let Some(s) = step {
+            self.plan.steps.push(s);
+        } else {
+            // Source/Const: nothing to do (treated as materialised).
+            self.planned.remove(&n.id);
+        }
+    }
+
+    fn push(&mut self, s: Step) {
+        self.plan.steps.push(s);
+    }
+
+    /// Make sure `n` is materialised before the step being built.
+    fn ensure(&mut self, n: &NodeRef) {
+        if !n.is_materialized() && !self.planned.contains(&n.id) {
+            self.emit(n);
+        }
+    }
+
+    /// Element-wise root: try the in-place accumulation pattern first.
+    fn emit_elementwise(&mut self, n: &NodeRef) {
+        if self.opts.in_place {
+            if let Some(step) = self.try_accumulate(n) {
+                return self.push(step);
+            }
+        }
+        let tree = self.build_tree_children(n, kernel_space(&n.shape), &mut 0);
+        self.push(Step::Fused { out: n.clone(), tree });
+    }
+
+    /// Detect `c = ((c ⊕ x₁) ⊕ x₂) …` with a dead, uniquely-owned `c`:
+    /// replace the leftmost leaf by `Acc` and donate the buffer.
+    fn try_accumulate(&mut self, n: &NodeRef) -> Option<Step> {
+        // Walk the left spine of private Add/Sub temps.
+        let mut spine: Vec<NodeRef> = vec![n.clone()];
+        loop {
+            let cur = spine.last().unwrap().clone();
+            let op = cur.op.borrow();
+            match &*op {
+                Op::Bin(BinOp::Add, l, _) | Op::Bin(BinOp::Sub, l, _) => {
+                    let l = l.clone();
+                    drop(op);
+                    if l.is_materialized() {
+                        // Candidate base.
+                        if l.dtype == DType::F64
+                            && l.shape == n.shape
+                            && !l.shape.is_scalar()
+                            && Rc::strong_count(&l) <= 2
+                        {
+                            // base: held by its parent op edge (1) and at
+                            // most our transient clone — no user handle,
+                            // no other consumer.
+                            let mut ops = 0usize;
+                            let tree =
+                                self.build_tree_children_acc(n, kernel_space(&n.shape), &l, &mut ops);
+                            return Some(Step::Accumulate { out: n.clone(), base: l, tree });
+                        }
+                        return None;
+                    } else if self.an.is_private_temp(&l)
+                        && !self.planned.contains(&l.id)
+                        && matches!(&*l.op.borrow(), Op::Bin(BinOp::Add, ..) | Op::Bin(BinOp::Sub, ..))
+                    {
+                        spine.push(l);
+                        // bounded: MAX_FUSE_OPS guards tree size later;
+                        // spine depth only costs this walk.
+                        if spine.len() > MAX_FUSE_OPS {
+                            return None;
+                        }
+                        continue;
+                    }
+                    return None;
+                }
+                _ => return None,
+            }
+        }
+    }
+
+    /// Fused tree for `n`'s children combined by `n`'s element-wise op.
+    fn build_tree_children(&mut self, n: &NodeRef, v: View, ops: &mut usize) -> FTree {
+        let op = n.op.borrow();
+        match &*op {
+            Op::Bin(b, l, r) => {
+                let (b, l, r) = (*b, l.clone(), r.clone());
+                drop(op);
+                *ops += 1;
+                let lt = self.build_tree(&l, v, ops, false);
+                let rt = self.build_tree(&r, v, ops, false);
+                FTree::Bin(b, Box::new(lt), Box::new(rt))
+            }
+            Op::Un(u, c) => {
+                let (u, c) = (*u, c.clone());
+                drop(op);
+                *ops += 1;
+                let ct = self.build_tree(&c, v, ops, false);
+                FTree::Un(u, Box::new(ct))
+            }
+            _ => {
+                drop(op);
+                self.build_tree(n, v, ops, true)
+            }
+        }
+    }
+
+    /// Like [`build_tree_children`] but replacing the base leaf with `Acc`.
+    fn build_tree_children_acc(
+        &mut self,
+        n: &NodeRef,
+        v: View,
+        base: &NodeRef,
+        ops: &mut usize,
+    ) -> FTree {
+        if n.id == base.id {
+            return FTree::Acc;
+        }
+        let op = n.op.borrow();
+        match &*op {
+            Op::Bin(b, l, r) => {
+                let (b, l, r) = (*b, l.clone(), r.clone());
+                drop(op);
+                *ops += 1;
+                let lt = if l.id == base.id {
+                    FTree::Acc
+                } else if !l.is_materialized()
+                    && self.an.is_private_temp(&l)
+                    && !self.planned.contains(&l.id)
+                {
+                    self.build_tree_children_acc(&l, v, base, ops)
+                } else {
+                    self.build_tree(&l, v, ops, false)
+                };
+                let rt = self.build_tree(&r, v, ops, false);
+                FTree::Bin(b, Box::new(lt), Box::new(rt))
+            }
+            _ => {
+                drop(op);
+                self.build_tree(n, v, ops, false)
+            }
+        }
+    }
+
+    /// Build the fused tree for operand `n` viewed through `v`.
+    ///
+    /// `force_copy`: build an identity-copy tree even if `n` itself is a
+    /// view (used when a view is promoted to a materialisation root).
+    fn build_tree(&mut self, n: &NodeRef, v: View, ops: &mut usize, force_copy: bool) -> FTree {
+        // Scalars broadcast.
+        if n.shape.is_scalar() {
+            if let Some(c) = const_value(n) {
+                return FTree::Const(c);
+            }
+            self.ensure(n);
+            return FTree::ScalarLeaf { node: n.clone() };
+        }
+        if n.is_materialized() {
+            return FTree::Leaf { node: n.clone(), view: v };
+        }
+        let op = n.op.borrow();
+        match &*op {
+            Op::Source(_) => {
+                drop(op);
+                FTree::Leaf { node: n.clone(), view: v }
+            }
+            Op::Iota(_) => {
+                drop(op);
+                if v.is_contiguous() && v.base == 0 {
+                    FTree::Iota
+                } else {
+                    self.ensure(n);
+                    FTree::Leaf { node: n.clone(), view: v }
+                }
+            }
+            Op::Bin(..) | Op::Un(..) => {
+                let fusable = self.opts.fusion
+                    && self.an.is_private_temp(n)
+                    && !self.planned.contains(&n.id)
+                    && *ops < MAX_FUSE_OPS;
+                drop(op);
+                if fusable && !force_copy {
+                    // Only fuse through non-reshaping views: an element-wise
+                    // op evaluated under view `v` computes op(children@v),
+                    // which is sound for any affine v.
+                    self.build_tree_children_viewed(n, v, ops)
+                } else {
+                    self.ensure(n);
+                    FTree::Leaf { node: n.clone(), view: v }
+                }
+            }
+            _ if op.is_virtual_view() && !force_copy => {
+                let composed = compose(&op, &v);
+                let child = op.children().pop();
+                drop(op);
+                match (composed, child) {
+                    (Some(cv), Some(c)) => {
+                        let mut cv = cv;
+                        // The child is indexed in its own flat space; keep
+                        // the output-space geometry of `v`.
+                        cv.out_cols = v.out_cols;
+                        self.build_tree(&c, cv, ops, false)
+                    }
+                    _ => {
+                        // Unrepresentable composition: materialise `n`.
+                        self.ensure(n);
+                        FTree::Leaf { node: n.clone(), view: v }
+                    }
+                }
+            }
+            _ => {
+                drop(op);
+                self.ensure(n);
+                FTree::Leaf { node: n.clone(), view: v }
+            }
+        }
+    }
+
+    /// Element-wise node evaluated under an arbitrary affine view: fuse
+    /// children under the same view.
+    fn build_tree_children_viewed(&mut self, n: &NodeRef, v: View, ops: &mut usize) -> FTree {
+        let op = n.op.borrow();
+        match &*op {
+            Op::Bin(b, l, r) => {
+                let (b, l, r) = (*b, l.clone(), r.clone());
+                drop(op);
+                *ops += 1;
+                let lt = self.build_tree(&l, v, ops, false);
+                let rt = self.build_tree(&r, v, ops, false);
+                FTree::Bin(b, Box::new(lt), Box::new(rt))
+            }
+            Op::Un(u, c) => {
+                let (u, c) = (*u, c.clone());
+                drop(op);
+                *ops += 1;
+                let ct = self.build_tree(&c, v, ops, false);
+                FTree::Un(u, Box::new(ct))
+            }
+            _ => unreachable!("caller checked Bin/Un"),
+        }
+    }
+}
+
+/// Constant value of a node if it is a (possibly folded) scalar constant.
+pub fn const_value(n: &Node) -> Option<f64> {
+    match &*n.op.borrow() {
+        Op::ConstF64(c) => Some(*c),
+        Op::Source(d) if n.shape.is_scalar() => match d {
+            super::node::Data::F64(v) => v.first().copied(),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Count fused-op statistics of a plan (used by tests and ablations).
+pub fn plan_fused_ops(p: &Plan) -> usize {
+    p.steps
+        .iter()
+        .map(|s| match s {
+            Step::Fused { tree, .. } | Step::Accumulate { tree, .. } => tree.count_ops(),
+            Step::ReduceRows { tree, .. }
+            | Step::ReduceCols { tree, .. }
+            | Step::ReduceAll { tree, .. } => tree.count_ops(),
+            Step::Cat { a, b, .. } => a.count_ops() + b.count_ops(),
+            _ => 0,
+        })
+        .sum()
+}

@@ -1,0 +1,172 @@
+//! Shapes, element types and affine views for the expression IR.
+//!
+//! ArBB dense containers have up to three dimensions; the paper's kernels
+//! only exercise 1-D and 2-D containers (plus scalars extracted from full
+//! reductions), so that is what the IR models. All 2-D containers are
+//! stored row-major, matching the C bindings in the paper's listings.
+
+/// Element type of a container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// `f64` — the paper's `ARBBFLOAT` (all measurements are double).
+    F64,
+    /// `i64` — the paper's `ARBBINT` (CSR index arrays).
+    I64,
+}
+
+/// Shape of a container: scalar, vector or (row-major) matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// A single element (result of a full reduction).
+    Scalar,
+    /// A 1-D dense container of length `n`.
+    D1(usize),
+    /// A 2-D dense container, row-major.
+    D2 { rows: usize, cols: usize },
+}
+
+impl Shape {
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        match *self {
+            Shape::Scalar => 1,
+            Shape::D1(n) => n,
+            Shape::D2 { rows, cols } => rows * cols,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of columns when interpreted as a 2-D index space
+    /// (vectors are a single row).
+    pub fn cols(&self) -> usize {
+        match *self {
+            Shape::Scalar => 1,
+            Shape::D1(n) => n,
+            Shape::D2 { cols, .. } => cols,
+        }
+    }
+
+    /// Number of rows when interpreted as a 2-D index space.
+    pub fn rows(&self) -> usize {
+        match *self {
+            Shape::Scalar => 1,
+            Shape::D1(_) => 1,
+            Shape::D2 { rows, .. } => rows,
+        }
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        matches!(self, Shape::Scalar)
+    }
+}
+
+/// An affine view mapping a *flat output index* of shape `out` into a flat
+/// index of a source buffer.
+///
+/// For output element at `(r, c) = (idx / out_cols, idx % out_cols)` the
+/// source index is `base + r*row_stride + c*col_stride`, optionally reduced
+/// `mod modulo` (used by `repeat`, the cyclic tile operator the split-stream
+/// FFT applies to its twiddle table).
+///
+/// This single formula covers every "virtual" structural operator of the
+/// DSL — `row`, `col`, `section`, `repeat_row`, `repeat_col`, `repeat` —
+/// which is what lets the fusion pass treat them as zero-cost index
+/// transforms instead of materialising temporaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct View {
+    pub base: usize,
+    pub row_stride: usize,
+    pub col_stride: usize,
+    /// Columns of the *output* index space this view is evaluated under.
+    pub out_cols: usize,
+    /// Optional cyclic wrap of the source index (for `repeat`).
+    pub modulo: Option<usize>,
+}
+
+impl View {
+    /// Identity view over a contiguous buffer interpreted with `out_cols`.
+    pub fn identity(out_cols: usize) -> Self {
+        View { base: 0, row_stride: out_cols, col_stride: 1, out_cols, modulo: None }
+    }
+
+    /// Map a flat output index to the source index.
+    #[inline(always)]
+    pub fn map(&self, idx: usize) -> usize {
+        let r = idx / self.out_cols;
+        let c = idx % self.out_cols;
+        let s = self.base + r * self.row_stride + c * self.col_stride;
+        match self.modulo {
+            Some(m) => self.base + (s - self.base) % m,
+            None => s,
+        }
+    }
+
+    /// True when mapping flat indices `[start, start+len)` is itself
+    /// contiguous (enables memcpy fast paths).
+    pub fn is_contiguous(&self) -> bool {
+        self.modulo.is_none() && self.col_stride == 1 && self.row_stride == self.out_cols
+    }
+
+    /// Compose: apply `self` after interpreting the output space of `inner`.
+    /// Used when stacking virtual ops (e.g. `section` of a `col`).
+    pub fn compose_base_offset(&self, offset: usize) -> Self {
+        View { base: self.base + offset, ..*self }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_len() {
+        assert_eq!(Shape::Scalar.len(), 1);
+        assert_eq!(Shape::D1(7).len(), 7);
+        assert_eq!(Shape::D2 { rows: 3, cols: 4 }.len(), 12);
+        assert_eq!(Shape::D2 { rows: 3, cols: 4 }.rows(), 3);
+        assert_eq!(Shape::D2 { rows: 3, cols: 4 }.cols(), 4);
+    }
+
+    #[test]
+    fn identity_view_is_contiguous() {
+        let v = View::identity(5);
+        assert!(v.is_contiguous());
+        for i in 0..20 {
+            assert_eq!(v.map(i), i);
+        }
+    }
+
+    #[test]
+    fn column_view() {
+        // col j of a row-major rows x cols matrix: base=j, row_stride=cols,
+        // col_stride=0, out_cols=1 (output is a vector = single column space).
+        let cols = 4;
+        let j = 2;
+        let v = View { base: j, row_stride: cols, col_stride: 0, out_cols: 1, modulo: None };
+        assert_eq!(v.map(0), 2);
+        assert_eq!(v.map(1), 6);
+        assert_eq!(v.map(3), 14);
+        assert!(!v.is_contiguous());
+    }
+
+    #[test]
+    fn repeat_row_view() {
+        // repeat_row(v, rows): out (r,c) -> v[c]
+        let v = View { base: 0, row_stride: 0, col_stride: 1, out_cols: 6, modulo: None };
+        assert_eq!(v.map(0), 0);
+        assert_eq!(v.map(5), 5);
+        assert_eq!(v.map(6), 0); // second row back to v[0]
+        assert_eq!(v.map(8), 2);
+    }
+
+    #[test]
+    fn modulo_tile_view() {
+        // repeat(v, times) with v of len 3 over an output of len 9.
+        let v = View { base: 0, row_stride: 3, col_stride: 1, out_cols: 3, modulo: Some(3) };
+        let got: Vec<usize> = (0..9).map(|i| v.map(i)).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+    }
+}

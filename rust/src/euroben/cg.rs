@@ -1,0 +1,123 @@
+//! Conjugate gradients in DSL syntax — §3.4's listing, "almost literally
+//! rewritten in ArBB syntax":
+//!
+//! ```text
+//! r2 = add_reduce(b*b);
+//! _while (r2 > stop && k < max_iters) {
+//!     arbb_spmv(Ap, csrVals, csrColPtr, csrRowPtr, p);
+//!     alpha = r2 / add_reduce(p*Ap);
+//!     r2_old = r2;
+//!     r = r - alpha*Ap;
+//!     r2 = add_reduce(r*r);
+//!     beta = r2 / r2_old;
+//!     x = x + alpha*p;
+//!     p = r + beta*p;
+//! }
+//! ```
+//!
+//! The `_while` condition reads a scalar computed from container data —
+//! a per-iteration sync, which is where the dispatch overhead the paper
+//! measures for small bandwidths (Fig 7a, conf 1/4/8/13) comes from.
+
+use crate::coordinator::{Context, Vec1};
+
+use super::mod2as::{arbb_spmv1, arbb_spmv2, ArbbCsr};
+
+/// Which spmv variant the solver calls (the paper compares both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpmvVariant {
+    V1,
+    V2,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArbbCgResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub residual2: f64,
+    pub converged: bool,
+}
+
+/// Solve `A x = b` with the DSL CG driver.
+pub fn arbb_cg(
+    ctx: &Context,
+    a: &ArbbCsr,
+    b_host: &[f64],
+    stop: f64,
+    max_iters: usize,
+    variant: SpmvVariant,
+) -> ArbbCgResult {
+    let n = a.nrows;
+    assert_eq!(b_host.len(), n);
+    let spmv = |p: &Vec1| -> Vec1 {
+        match variant {
+            SpmvVariant::V1 => arbb_spmv1(ctx, a, p),
+            SpmvVariant::V2 => arbb_spmv2(ctx, a, p),
+        }
+    };
+
+    let b = ctx.bind1(b_host);
+    let mut x = ctx.zeros1(n);
+    let mut r = b.clone();
+    let mut p = b.clone();
+    let mut r2 = (&b * &b).add_reduce().value(); // host scalar: _while cond
+    let mut k = 0usize;
+    while r2 > stop && k < max_iters {
+        let ap = spmv(&p);
+        let p_ap = (&p * &ap).add_reduce();
+        let alpha_s = p_ap.value();
+        let alpha = ctx.scalar(r2 / alpha_s);
+        let r2_old = r2;
+        r = &r - &(&ap * &alpha);
+        r2 = (&r * &r).add_reduce().value(); // per-iteration sync
+        let beta = ctx.scalar(r2 / r2_old);
+        x = &x + &(&p * &alpha);
+        p = &r + &(&p * &beta);
+        k += 1;
+    }
+    ArbbCgResult { x: x.to_vec(), iterations: k, residual2: r2, converged: r2 <= stop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::euroben::mod2as::bind_csr;
+    use crate::solvers::cg::{cg_serial, residual_norm};
+    use crate::sparse::banded_spd;
+    use crate::util::{assert_allclose, XorShift64};
+
+    fn rand_b(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn matches_native_cg() {
+        for &(n, bw) in &[(64usize, 3usize), (128, 31)] {
+            let m = banded_spd(n, bw, n as u64);
+            let b = rand_b(n, 3);
+            let want = cg_serial(&m, &b, 1e-18, 1000);
+
+            let ctx = Context::new();
+            let a = bind_csr(&ctx, &m);
+            for variant in [SpmvVariant::V1, SpmvVariant::V2] {
+                let got = arbb_cg(&ctx, &a, &b, 1e-18, 1000, variant);
+                assert!(got.converged, "n={n} bw={bw} {variant:?}");
+                assert_eq!(got.iterations, want.iterations, "{variant:?}");
+                assert_allclose(&got.x, &want.x, 1e-9, 1e-11, "cg x");
+                assert!(residual_norm(&m, &got.x, &b) < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rhs_converges_immediately() {
+        let m = banded_spd(32, 3, 1);
+        let ctx = Context::new();
+        let a = bind_csr(&ctx, &m);
+        let b = vec![0.0; 32];
+        let got = arbb_cg(&ctx, &a, &b, 1e-18, 100, SpmvVariant::V1);
+        assert!(got.converged);
+        assert_eq!(got.iterations, 0);
+    }
+}

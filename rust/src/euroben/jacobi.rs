@@ -1,0 +1,157 @@
+//! Jacobi solver in DSL syntax — §1 lists Jacobi among the linear
+//! solvers ported to ArBB alongside CG and Gauss–Seidel.
+//!
+//! The Jacobi sweep is naturally data-parallel (every unknown updates
+//! independently from the *previous* iterate):
+//!
+//! ```text
+//! x' = (b − (A − D)·x) / diag(A)
+//! ```
+//!
+//! expressed with the spmv map kernel plus element-wise container ops.
+//! Gauss–Seidel, by contrast, is inherently serial (each unknown wants
+//! already-updated neighbours), which is why the paper's data-parallel
+//! ports stop at Jacobi — the native serial version lives in
+//! [`crate::solvers::gauss_seidel`].
+
+use crate::coordinator::{Context, Vec1};
+use crate::sparse::Csr;
+
+use super::mod2as::{arbb_spmv1, bind_csr, ArbbCsr};
+
+#[derive(Debug, Clone)]
+pub struct ArbbJacobiResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub residual2: f64,
+    pub converged: bool,
+}
+
+/// DSL-space operand bundle: the off-diagonal matrix and the diagonal.
+pub struct ArbbJacobiOp {
+    pub offdiag: ArbbCsr,
+    pub inv_diag: Vec1,
+    pub n: usize,
+}
+
+/// Split `A = D + R` and bind both parts (build-time, like `bind_csr`).
+pub fn bind_jacobi(ctx: &Context, a: &Csr) -> ArbbJacobiOp {
+    let n = a.nrows;
+    let mut diag = vec![0.0; n];
+    // R = A with the diagonal removed
+    let mut vals = Vec::new();
+    let mut indx = Vec::new();
+    let mut rowp = Vec::with_capacity(n + 1);
+    rowp.push(0i64);
+    for r in 0..n {
+        for k in a.rowp[r]..a.rowp[r + 1] {
+            let c = a.indx[k as usize] as usize;
+            let v = a.vals[k as usize];
+            if c == r {
+                diag[r] = v;
+            } else {
+                vals.push(v);
+                indx.push(c as i64);
+            }
+        }
+        rowp.push(vals.len() as i64);
+    }
+    let inv: Vec<f64> = diag
+        .iter()
+        .map(|&d| {
+            assert!(d != 0.0, "jacobi: zero diagonal");
+            1.0 / d
+        })
+        .collect();
+    let r = Csr { nrows: n, ncols: n, vals, indx, rowp };
+    ArbbJacobiOp { offdiag: bind_csr(ctx, &r), inv_diag: ctx.bind1(&inv), n }
+}
+
+/// Jacobi iteration in the DSL: `x' = (b − R·x) ⊙ D⁻¹`, with the
+/// `_while` condition reading `‖b − A·x‖²` each sweep (a per-iteration
+/// sync, same dispatch profile as the CG driver).
+pub fn arbb_jacobi(
+    ctx: &Context,
+    op: &ArbbJacobiOp,
+    b_host: &[f64],
+    stop: f64,
+    max_iters: usize,
+) -> ArbbJacobiResult {
+    let n = op.n;
+    assert_eq!(b_host.len(), n);
+    let b = ctx.bind1(b_host);
+    let mut x = ctx.zeros1(n);
+    let mut k = 0usize;
+    let mut r2 = f64::INFINITY;
+    while k < max_iters {
+        let rx = arbb_spmv1(ctx, &op.offdiag, &x); // R·x
+        let xn = (&b - &rx) * &op.inv_diag;
+        // residual of the *new* iterate: r = b − A·x' = b − R·x' − D·x'
+        let rxn = arbb_spmv1(ctx, &op.offdiag, &xn);
+        let dxn = &xn / &op.inv_diag; // D·x'
+        let res = &(&b - &rxn) - &dxn;
+        r2 = (&res * &res).add_reduce().value(); // _while condition sync
+        x = xn;
+        k += 1;
+        if r2 <= stop {
+            break;
+        }
+    }
+    ArbbJacobiResult { x: x.to_vec(), iterations: k, residual2: r2, converged: r2 <= stop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::cg::residual_norm;
+    use crate::solvers::jacobi::jacobi;
+    use crate::sparse::banded_spd;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn matches_native_jacobi() {
+        let n = 96;
+        let a = banded_spd(n, 4, 11);
+        let mut rng = XorShift64::new(2);
+        let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let native = jacobi(&a, &b, 1e-18, 20_000);
+        assert!(native.converged);
+
+        let ctx = Context::new();
+        let op = bind_jacobi(&ctx, &a);
+        let dsl = arbb_jacobi(&ctx, &op, &b, 1e-18, 20_000);
+        assert!(dsl.converged, "r2={}", dsl.residual2);
+        assert!(residual_norm(&a, &dsl.x, &b) < 1e-7);
+        crate::util::assert_allclose(&dsl.x, &native.x, 1e-7, 1e-9, "jacobi x");
+    }
+
+    #[test]
+    fn diagonal_system_single_sweep() {
+        let n = 16;
+        let mut d = vec![0.0; n * n];
+        for i in 0..n {
+            d[i * n + i] = 4.0;
+        }
+        let a = crate::sparse::Csr::from_dense(&d, n, n);
+        let ctx = Context::new();
+        let op = bind_jacobi(&ctx, &a);
+        let b = vec![8.0; n];
+        let res = arbb_jacobi(&ctx, &op, &b, 1e-20, 5);
+        assert!(res.converged);
+        assert_eq!(res.iterations, 1);
+        for x in &res.x {
+            assert!((x - 2.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn respects_iteration_budget() {
+        let a = banded_spd(64, 3, 9);
+        let ctx = Context::new();
+        let op = bind_jacobi(&ctx, &a);
+        let b = vec![1.0; 64];
+        let res = arbb_jacobi(&ctx, &op, &b, 1e-30, 3);
+        assert_eq!(res.iterations, 3);
+        assert!(!res.converged);
+    }
+}

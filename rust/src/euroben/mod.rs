@@ -1,0 +1,29 @@
+//! The paper's kernel ports, §3.1–§3.4, expressed in the DSL.
+//!
+//! Each submodule mirrors one EuroBen kernel and carries every variant
+//! the paper measures:
+//!
+//! * [`mod2am`] — dense matrix–matrix multiply: `arbb_mxm0`, `arbb_mxm1`,
+//!   `arbb_mxm2a`, `arbb_mxm2b` (§3.1 listings, reproduced operator for
+//!   operator).
+//! * [`mod2as`] — sparse matrix–vector multiply: `arbb_spmv1` (map over
+//!   rows, after Bell & Garland) and `arbb_spmv2` (contiguity-exploiting).
+//! * [`mod2f`] — 1-D complex FFT: the split-stream ArBB port.
+//! * [`cg`] — the conjugate-gradients driver written in DSL syntax
+//!   (§3.4 listing) over either spmv variant.
+//!
+//! A note on `_for` semantics: ArBB `_for` loops are *captured* — the
+//! body is recorded once and replayed per iteration, with an implicit
+//! scheduling boundary between iterations. We mark that boundary with an
+//! explicit `.eval()` per iteration. The distinction the paper draws
+//! between `arbb_mxm2a` and `arbb_mxm2b` (a regular C++ `for` *inside*
+//! the `_for`, unrolling `u` rank-1 updates into one captured block) maps
+//! to issuing `u` updates between `.eval()` boundaries — fusion then
+//! compiles them into a single pass, which is precisely the ×2 the paper
+//! reports Intel's restructuring bought.
+
+pub mod cg;
+pub mod jacobi;
+pub mod mod2am;
+pub mod mod2as;
+pub mod mod2f;

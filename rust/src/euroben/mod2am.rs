@@ -1,0 +1,164 @@
+//! `mod2am` — dense matrix–matrix multiplication, §3.1.
+//!
+//! Four DSL formulations, reproduced from the paper's listings. All
+//! compute `c = a·b` for square n×n row-major matrices.
+
+use crate::coordinator::{Context, Mat2};
+
+/// The naïve 3-loop port (`arbb_mxm0`): per-element
+/// `c(i,j) = add_reduce(a.row(i) * b.col(j))`.
+///
+/// Every element store is its own dispatch — ArBB never parallelises
+/// this version (Fig 1b) and it crawls at a few percent of peak.
+pub fn arbb_mxm0(ctx: &Context, a: &Mat2, b: &Mat2) -> Mat2 {
+    let n = a.rows();
+    let mut c = ctx.zeros2(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let s = (a.row(i) * b.col(j)).add_reduce();
+            c = c.set_elem(i, j, &s); // eager: one dispatch per element
+        }
+    }
+    c
+}
+
+/// `arbb_mxm1`: one `_for` over columns; each iteration broadcasts
+/// `b.col(i)` across rows, multiplies element-wise with `a` and reduces
+/// along rows into column `i` of `c`.
+pub fn arbb_mxm1(ctx: &Context, a: &Mat2, b: &Mat2) -> Mat2 {
+    let n = a.rows();
+    let mut c = ctx.zeros2(n, n);
+    for i in 0..n {
+        let t = b.col(i).repeat_row(n); // t(m,k) = b(k,i)
+        let d = a * &t; // d(m,k) = a(m,k)·b(k,i)
+        c = c.replace_col(i, &d.add_reduce_rows());
+        c.eval(); // _for iteration boundary
+    }
+    c
+}
+
+/// `arbb_mxm2a`: rank-1 updates,
+/// `c += repeat_col(a.col(i), n) * repeat_row(b.row(i), n)`.
+pub fn arbb_mxm2a(ctx: &Context, a: &Mat2, b: &Mat2) -> Mat2 {
+    let n = a.rows();
+    let _ = ctx;
+    let mut c = a.col(0).repeat_col(n) * &b.row(0).repeat_row(n);
+    c.eval();
+    for i in 1..n {
+        c = c + (a.col(i).repeat_col(n) * &b.row(i).repeat_row(n));
+        c.eval(); // _for iteration boundary: one rank-1 per dispatch
+    }
+    c
+}
+
+/// `arbb_mxm2b`: Intel's restructured version — a regular C++ loop of
+/// `u` rank-1 updates *inside* each `_for` iteration, so `u` updates fuse
+/// into one captured block ("by tuning the size of u the performance of
+/// arbb_mxm2a could be increased by a factor of two").
+pub fn arbb_mxm2b(ctx: &Context, a: &Mat2, b: &Mat2, u: usize) -> Mat2 {
+    let n = a.rows();
+    let _ = ctx;
+    let u = u.max(1).min(n);
+    // initial block: i in [0, u)
+    let mut c = a.col(0).repeat_col(n) * &b.row(0).repeat_row(n);
+    for j in 1..u {
+        c = c + (a.col(j).repeat_col(n) * &b.row(j).repeat_row(n));
+    }
+    c.eval();
+    // bulk blocks
+    let size = n / u;
+    for i in 1..size {
+        let base = i * u;
+        for j in 0..u {
+            let k = base + j;
+            c = c + (a.col(k).repeat_col(n) * &b.row(k).repeat_row(n));
+        }
+        c.eval(); // _for boundary after u fused updates
+    }
+    // remainder
+    for k in (size * u)..n {
+        c = c + (a.col(k).repeat_col(n) * &b.row(k).repeat_row(n));
+        c.eval();
+    }
+    c
+}
+
+/// Host-side reference for verification.
+pub fn reference(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; n * n];
+    crate::kernels::dgemm(n, n, n, a, b, &mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{assert_allclose, XorShift64};
+
+    fn setup(n: usize) -> (Context, Mat2, Mat2, Vec<f64>) {
+        let mut rng = XorShift64::new(n as u64 + 1);
+        let ah: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let bh: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let ctx = Context::new();
+        let a = ctx.bind2(&ah, n, n);
+        let b = ctx.bind2(&bh, n, n);
+        let want = reference(&ah, &bh, n);
+        (ctx, a, b, want)
+    }
+
+    #[test]
+    fn mxm0_correct() {
+        let n = 12;
+        let (ctx, a, b, want) = setup(n);
+        let got = arbb_mxm0(&ctx, &a, &b).to_vec();
+        assert_allclose(&got, &want, 1e-11, 1e-12, "mxm0");
+    }
+
+    #[test]
+    fn mxm1_correct() {
+        for n in [4, 17, 32] {
+            let (ctx, a, b, want) = setup(n);
+            let got = arbb_mxm1(&ctx, &a, &b).to_vec();
+            assert_allclose(&got, &want, 1e-11, 1e-12, "mxm1");
+        }
+    }
+
+    #[test]
+    fn mxm2a_correct() {
+        for n in [4, 17, 32] {
+            let (ctx, a, b, want) = setup(n);
+            let got = arbb_mxm2a(&ctx, &a, &b).to_vec();
+            assert_allclose(&got, &want, 1e-11, 1e-12, "mxm2a");
+        }
+    }
+
+    #[test]
+    fn mxm2b_correct_various_u() {
+        for n in [16, 33] {
+            for u in [1, 2, 8, 16, 40] {
+                let (ctx, a, b, want) = setup(n);
+                let got = arbb_mxm2b(&ctx, &a, &b, u).to_vec();
+                assert_allclose(&got, &want, 1e-11, 1e-12, &format!("mxm2b n={n} u={u}"));
+            }
+        }
+    }
+
+    #[test]
+    fn mxm2b_fuses_u_updates() {
+        // With u=8, the bulk blocks should fuse ~8 rank-1 updates into one
+        // accumulate step: far fewer steps than mxm2a's n dispatches.
+        let n = 32;
+        let (ctx, a, b, _) = setup(n);
+        ctx.reset_stats();
+        let _ = arbb_mxm2a(&ctx, &a, &b).to_vec();
+        let steps_2a = ctx.stats(|s| s.steps);
+        let (ctx2, a2, b2, _) = setup(n);
+        ctx2.reset_stats();
+        let _ = arbb_mxm2b(&ctx2, &a2, &b2, 8).to_vec();
+        let steps_2b = ctx2.stats(|s| s.steps);
+        assert!(
+            steps_2b * 4 < steps_2a,
+            "2b should dispatch ≫ fewer steps: 2a={steps_2a} 2b={steps_2b}"
+        );
+    }
+}

@@ -1,0 +1,186 @@
+//! `mod2as` — sparse matrix–vector multiplication, §3.2.
+//!
+//! `arbb_spmv1` follows Bell & Garland's scalar-CSR kernel: an elemental
+//! function mapped across output rows, each walking its row segment with
+//! gathers through `indx`. `arbb_spmv2` exploits contiguity: runs of
+//! consecutive columns are precomputed so the inner loop streams
+//! `vals[k++] * invec[col++]` without the index gather.
+
+use std::sync::Arc;
+
+use crate::coordinator::api::MapCaptures;
+use crate::coordinator::{Context, Vec1, VecI64};
+use crate::sparse::Csr;
+
+/// DSL-space CSR operand bundle (bind once, multiply many times — the CG
+/// driver reuses it every iteration).
+pub struct ArbbCsr {
+    pub nrows: usize,
+    pub vals: Vec1,
+    pub indx: VecI64,
+    pub rowp: VecI64,
+    /// average nnz/row (cost hint for the scaling simulator)
+    pub avg_row_nnz: f64,
+    /// contiguity runs for spmv2: per-run (start k, start col, len),
+    /// flattened, plus per-row run pointers.
+    pub run_ptr: VecI64,
+    pub run_k: VecI64,
+    pub run_col: VecI64,
+    pub run_len: VecI64,
+}
+
+/// Bind a CSR matrix into DSL containers (the paper's lines 1–6 of the
+/// §3.2 listing), including the spmv2 run preprocessing.
+pub fn bind_csr(ctx: &Context, m: &Csr) -> ArbbCsr {
+    // run detection
+    let mut run_ptr = Vec::with_capacity(m.nrows + 1);
+    let mut run_k = Vec::new();
+    let mut run_col = Vec::new();
+    let mut run_len = Vec::new();
+    run_ptr.push(0i64);
+    for r in 0..m.nrows {
+        let (s, e) = (m.rowp[r] as usize, m.rowp[r + 1] as usize);
+        let mut k = s;
+        while k < e {
+            let col = m.indx[k];
+            let mut len = 1usize;
+            while k + len < e && m.indx[k + len] == col + len as i64 {
+                len += 1;
+            }
+            run_k.push(k as i64);
+            run_col.push(col);
+            run_len.push(len as i64);
+            k += len;
+        }
+        run_ptr.push(run_k.len() as i64);
+    }
+    ArbbCsr {
+        nrows: m.nrows,
+        vals: ctx.bind1(&m.vals),
+        indx: ctx.bind_i64(&m.indx),
+        rowp: ctx.bind_i64(&m.rowp),
+        avg_row_nnz: m.nnz() as f64 / m.nrows.max(1) as f64,
+        run_ptr: ctx.bind_i64(&run_ptr),
+        run_k: ctx.bind_i64(&run_k),
+        run_col: ctx.bind_i64(&run_col),
+        run_len: ctx.bind_i64(&run_len),
+    }
+}
+
+/// `arbb_spmv1` (§3.2 listing): map an elemental row-reduce across
+/// `outvec`, gathering `invec[indx[i]]` per non-zero.
+pub fn arbb_spmv1(ctx: &Context, a: &ArbbCsr, invec: &Vec1) -> Vec1 {
+    ctx.map(
+        a.nrows,
+        MapCaptures::new().f64(&a.vals).f64(invec).i64(&a.indx).i64(&a.rowp),
+        Arc::new(|args, row| {
+            let vals = args.f(0);
+            let invec = args.f(1);
+            let indx = args.i(0);
+            let rowp = args.i(1);
+            let mut acc = 0.0;
+            for k in rowp[row]..rowp[row + 1] {
+                acc += vals[k as usize] * invec[indx[k as usize] as usize];
+            }
+            acc
+        }),
+        2.0 * a.avg_row_nnz,
+        20.0 * a.avg_row_nnz + 16.0,
+        "arbb_spmv1",
+    )
+}
+
+/// `arbb_spmv2`: the contiguity-aware variant — within a run of
+/// consecutive columns the inner loop is `result += values[i++] *
+/// invec[k++]` (paper §3.2), skipping the index gather.
+pub fn arbb_spmv2(ctx: &Context, a: &ArbbCsr, invec: &Vec1) -> Vec1 {
+    ctx.map(
+        a.nrows,
+        MapCaptures::new()
+            .f64(&a.vals)
+            .f64(invec)
+            .i64(&a.run_ptr)
+            .i64(&a.run_k)
+            .i64(&a.run_col)
+            .i64(&a.run_len),
+        Arc::new(|args, row| {
+            let vals = args.f(0);
+            let invec = args.f(1);
+            let run_ptr = args.i(0);
+            let run_k = args.i(1);
+            let run_col = args.i(2);
+            let run_len = args.i(3);
+            let mut acc = 0.0;
+            for t in run_ptr[row]..run_ptr[row + 1] {
+                let t = t as usize;
+                let mut k = run_k[t] as usize;
+                let mut c = run_col[t] as usize;
+                // contiguous section: stream without the indx gather
+                for _ in 0..run_len[t] {
+                    acc += vals[k] * invec[c];
+                    k += 1;
+                    c += 1;
+                }
+            }
+            acc
+        }),
+        2.0 * a.avg_row_nnz,
+        16.0 * a.avg_row_nnz + 24.0,
+        "arbb_spmv2",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{banded_spd, random_csr};
+    use crate::util::assert_allclose;
+
+    fn check(m: &Csr, seed: u64) {
+        let ctx = Context::new();
+        let a = bind_csr(&ctx, m);
+        let x = m.random_x(seed);
+        let want = m.spmv_alloc(&x);
+        let xv = ctx.bind1(&x);
+        let got1 = arbb_spmv1(&ctx, &a, &xv).to_vec();
+        let got2 = arbb_spmv2(&ctx, &a, &xv).to_vec();
+        assert_allclose(&got1, &want, 1e-12, 1e-14, "spmv1");
+        assert_allclose(&got2, &want, 1e-12, 1e-14, "spmv2");
+    }
+
+    #[test]
+    fn random_matrices() {
+        for &(n, fill) in &[(50usize, 10.0f64), (200, 3.75), (512, 4.0)] {
+            check(&random_csr(n, fill, n as u64), 3);
+        }
+    }
+
+    #[test]
+    fn banded_matrices() {
+        for &(n, bw) in &[(128usize, 3usize), (128, 31), (256, 63)] {
+            check(&banded_spd(n, bw, 7), 5);
+        }
+    }
+
+    #[test]
+    fn empty_and_dense_rows() {
+        let dense = vec![
+            0.0, 0.0, 0.0, //
+            1.0, 2.0, 3.0, //
+            0.0, 5.0, 0.0, //
+        ];
+        check(&Csr::from_dense(&dense, 3, 3), 11);
+    }
+
+    #[test]
+    fn run_preprocessing_counts() {
+        // banded rows are one run each (plus edge rows)
+        let m = banded_spd(64, 4, 2);
+        let ctx = Context::new();
+        let a = bind_csr(&ctx, &m);
+        let ptr = a.run_ptr.to_vec();
+        // interior rows: a single contiguous run
+        let runs_row_10 = ptr[11] - ptr[10];
+        assert_eq!(runs_row_10, 1);
+    }
+}

@@ -1,0 +1,110 @@
+//! `mod2f` — 1-D complex FFT, §3.3: the split-stream ArBB port.
+//!
+//! Reproduces the paper's stage loop:
+//!
+//! ```text
+//! _for (i = 1, i < n, i <<= 1) {
+//!     even = section(data, 0, n/2, 2);
+//!     odd  = section(data, 1, n/2, 2);
+//!     up   = even + odd;
+//!     down = (even - odd) * repeat(section(twiddles, 0, m), i);
+//!     data = cat(up, down);
+//!     m >>= 1;
+//! }
+//! ```
+//!
+//! with the initial "tangling" gather and split re/im planes. Each stage
+//! materialises through `cat` — exactly the data movement that keeps the
+//! ArBB port at simple-radix-2 speed in Fig 5(a).
+
+use crate::coordinator::{Context, CplxV};
+use crate::fftlib::splitstream::tangle_indices;
+use crate::fftlib::twiddle::twiddles_bitrev;
+
+/// Twiddle table + tangle indices bound into DSL space (bind once per
+/// size, like the ArBB sample codes do).
+pub struct ArbbFftPlan {
+    pub n: usize,
+    tangle: crate::coordinator::VecI64,
+    tw: CplxV,
+}
+
+pub fn plan(ctx: &Context, n: usize) -> ArbbFftPlan {
+    assert!(crate::fftlib::is_pow2(n), "mod2f: n={n} not a power of two");
+    let idx: Vec<i64> = tangle_indices(n).into_iter().map(|i| i as i64).collect();
+    // bit-reversal-ordered table — see fftlib::twiddle::twiddles_bitrev
+    let (twre, twim) = twiddles_bitrev(n);
+    ArbbFftPlan {
+        n,
+        tangle: ctx.bind_i64(&idx),
+        tw: CplxV { re: ctx.bind1(&twre), im: ctx.bind1(&twim) },
+    }
+}
+
+/// Forward FFT of `data` (length n) through the DSL.
+pub fn arbb_fft(ctx: &Context, p: &ArbbFftPlan, data: &CplxV) -> CplxV {
+    let n = p.n;
+    let _ = ctx;
+    if n == 1 {
+        return data.clone();
+    }
+    // initial tangling (gather)
+    let mut d = CplxV { re: data.re.gather(&p.tangle), im: data.im.gather(&p.tangle) };
+    let h = n / 2;
+    let mut m = h; // twiddle section length
+    let mut i = 1; // repeat count (and twiddle stride)
+    while i < n {
+        let even = d.section_strided(0, h, 2);
+        let odd = d.section_strided(1, h, 2);
+        let up = even.add(&odd);
+        // repeat(section(twiddles, 0, m), i) — the paper's line 6
+        let tw = p.tw.section(0, m).repeat(i);
+        let down = even.sub(&odd).mul(&tw);
+        d = up.cat(&down);
+        // _for iteration boundary: each FFT step is scheduled as a unit
+        d.re.eval();
+        d.im.eval();
+        m >>= 1;
+        i <<= 1;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftlib::dft_ref;
+    use crate::util::{assert_allclose, XorShift64};
+
+    #[test]
+    fn matches_dft() {
+        for &n in &[2usize, 4, 8, 32, 128, 512] {
+            let mut rng = XorShift64::new(n as u64);
+            let re: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let (wre, wim) = dft_ref::dft(&re, &im);
+
+            let ctx = Context::new();
+            let plan = plan(&ctx, n);
+            let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+            let out = arbb_fft(&ctx, &plan, &data);
+            assert_allclose(&out.re.to_vec(), &wre, 1e-9, 1e-9, &format!("re n={n}"));
+            assert_allclose(&out.im.to_vec(), &wim, 1e-9, 1e-9, &format!("im n={n}"));
+        }
+    }
+
+    #[test]
+    fn matches_serial_splitstream() {
+        let n = 256;
+        let mut rng = XorShift64::new(9);
+        let re: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let (wre, wim) = crate::fftlib::splitstream::fft(&re, &im);
+        let ctx = Context::new();
+        let plan = plan(&ctx, n);
+        let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+        let out = arbb_fft(&ctx, &plan, &data);
+        assert_allclose(&out.re.to_vec(), &wre, 1e-10, 1e-12, "re");
+        assert_allclose(&out.im.to_vec(), &wim, 1e-10, 1e-12, "im");
+    }
+}

@@ -1,0 +1,50 @@
+//! Direct O(n²) DFT — correctness oracle (eq. (1) of the paper):
+//! `F(k) = Σ_n f(n) exp(-2πikn/N)`.
+
+/// Forward DFT on split planes.
+pub fn dft(re: &[f64], im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    let mut ore = vec![0.0; n];
+    let mut oim = vec![0.0; n];
+    let w = -2.0 * std::f64::consts::PI / n as f64;
+    for k in 0..n {
+        let mut sre = 0.0;
+        let mut sim = 0.0;
+        for t in 0..n {
+            let a = w * (k * t % n) as f64;
+            let (c, s) = (a.cos(), a.sin());
+            sre += re[t] * c - im[t] * s;
+            sim += re[t] * s + im[t] * c;
+        }
+        ore[k] = sre;
+        oim[k] = sim;
+    }
+    (ore, oim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dc_signal() {
+        let re = vec![1.0; 4];
+        let im = vec![0.0; 4];
+        let (ore, oim) = dft(&re, &im);
+        assert!((ore[0] - 4.0).abs() < 1e-12);
+        for k in 1..4 {
+            assert!(ore[k].abs() < 1e-12 && oim[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let re = vec![1.0, 2.0, -1.0, 0.5];
+        let im = vec![0.0, -1.0, 0.25, 2.0];
+        let (ore, oim) = dft(&re, &im);
+        let e_t: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum();
+        let e_f: f64 = ore.iter().zip(&oim).map(|(r, i)| r * r + i * i).sum();
+        assert!((e_f - 4.0 * e_t).abs() < 1e-9);
+    }
+}

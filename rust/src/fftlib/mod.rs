@@ -1,0 +1,80 @@
+//! FFT substrate for `mod2f` (§3.3): 1-D complex transforms.
+//!
+//! * [`dft_ref`] — O(n²) direct DFT, the correctness oracle.
+//! * [`radix2`] — the "simple serial radix-2" Cooley–Tukey DIF comparator.
+//! * [`splitstream`] — the Jansen et al. split-stream formulation the
+//!   paper's ArBB port uses (serial comparator version).
+//! * [`radix4`] — combined radix-4 + radix-2 implementation standing in
+//!   for the EuroBen CFFT4 optimised serial code.
+//!
+//! All operate on split re/im planes (structure-of-arrays), the layout
+//! the data-parallel ports use.
+
+pub mod dft_ref;
+pub mod radix2;
+pub mod radix4;
+pub mod splitstream;
+pub mod twiddle;
+
+/// FLOP count convention for an n-point complex FFT: `5 n log2 n`
+/// (the standard convention the paper's MFlop/s numbers use).
+pub fn fft_flops(n: usize) -> f64 {
+    5.0 * n as f64 * (n as f64).log2()
+}
+
+/// `true` when `n` is a power of two (all mod2f sizes are).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{assert_allclose, XorShift64};
+
+    fn rand_signal(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = XorShift64::new(seed);
+        let re = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let im = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        (re, im)
+    }
+
+    #[test]
+    fn all_ffts_match_dft() {
+        for &n in &[2usize, 4, 8, 16, 64, 256] {
+            let (re, im) = rand_signal(n, n as u64);
+            let (wre, wim) = dft_ref::dft(&re, &im);
+
+            let (r2re, r2im) = radix2::fft(&re, &im);
+            assert_allclose(&r2re, &wre, 1e-9, 1e-9, "radix2 re");
+            assert_allclose(&r2im, &wim, 1e-9, 1e-9, "radix2 im");
+
+            let (ssre, ssim) = splitstream::fft(&re, &im);
+            assert_allclose(&ssre, &wre, 1e-9, 1e-9, "splitstream re");
+            assert_allclose(&ssim, &wim, 1e-9, 1e-9, "splitstream im");
+
+            let (r4re, r4im) = radix4::fft(&re, &im);
+            assert_allclose(&r4re, &wre, 1e-9, 1e-9, "radix4 re");
+            assert_allclose(&r4im, &wim, 1e-9, 1e-9, "radix4 im");
+        }
+    }
+
+    #[test]
+    fn pow2_helper() {
+        assert!(is_pow2(1) && is_pow2(1024));
+        assert!(!is_pow2(0) && !is_pow2(24));
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let n = 16;
+        let mut re = vec![0.0; n];
+        re[0] = 1.0;
+        let im = vec![0.0; n];
+        let (ore, oim) = radix2::fft(&re, &im);
+        for k in 0..n {
+            assert!((ore[k] - 1.0).abs() < 1e-12);
+            assert!(oim[k].abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Simple recursive radix-2 DIT FFT — the paper's "simple serial radix-2
+//! Cooley-Tukey implementation" comparator (Fig 5a). Deliberately
+//! straightforward: recursive decimation-in-time reading strided views of
+//! the input, twiddles computed per level.
+
+use super::twiddle::twiddles;
+
+/// Forward FFT on split planes. `n` must be a power of two.
+pub fn fft(re: &[f64], im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = re.len();
+    assert!(super::is_pow2(n), "radix2: n={n} not a power of two");
+    assert_eq!(n, im.len());
+    let mut ore = vec![0.0; n];
+    let mut oim = vec![0.0; n];
+    let (twre, twim) = twiddles(n, n / 2);
+    rec(re, im, &mut ore, &mut oim, n, 0, 1, &twre, &twim);
+    (ore, oim)
+}
+
+/// Recursive DIT: transform `x[offset + k*stride]` for `k in 0..n` into
+/// `out[0..n]`. Twiddle index scale is `stride` (table built for the root
+/// size).
+#[allow(clippy::too_many_arguments)]
+fn rec(
+    xre: &[f64],
+    xim: &[f64],
+    ore: &mut [f64],
+    oim: &mut [f64],
+    n: usize,
+    offset: usize,
+    stride: usize,
+    twre: &[f64],
+    twim: &[f64],
+) {
+    if n == 1 {
+        ore[0] = xre[offset];
+        oim[0] = xim[offset];
+        return;
+    }
+    let h = n / 2;
+    {
+        let (ore_a, ore_b) = ore.split_at_mut(h);
+        let (oim_a, oim_b) = oim.split_at_mut(h);
+        rec(xre, xim, ore_a, oim_a, h, offset, stride * 2, twre, twim);
+        rec(xre, xim, ore_b, oim_b, h, offset + stride, stride * 2, twre, twim);
+    }
+    for k in 0..h {
+        let t = k * stride; // w_n^(k*stride) = w_(n_sub*2)^k
+        let (wr, wi) = (twre[t], twim[t]);
+        let (br, bi) = (ore[h + k], oim[h + k]);
+        let (tr, ti) = (wr * br - wi * bi, wr * bi + wi * br);
+        let (ar, ai) = (ore[k], oim[k]);
+        ore[k] = ar + tr;
+        oim[k] = ai + ti;
+        ore[h + k] = ar - tr;
+        oim[h + k] = ai - ti;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftlib::dft_ref;
+    use crate::util::assert_allclose;
+
+    #[test]
+    fn matches_dft_small() {
+        let re = vec![1.0, 2.0, 3.0, 4.0, -1.0, 0.5, 0.0, 2.5];
+        let im = vec![0.0, 1.0, -1.0, 0.0, 2.0, 0.0, 1.5, -0.5];
+        let (wre, wim) = dft_ref::dft(&re, &im);
+        let (gre, gim) = fft(&re, &im);
+        assert_allclose(&gre, &wre, 1e-10, 1e-10, "re");
+        assert_allclose(&gim, &wim, 1e-10, 1e-10, "im");
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        let _ = fft(&[1.0; 6], &[0.0; 6]);
+    }
+}

@@ -1,0 +1,165 @@
+//! Combined radix-4 + radix-2 FFT — stand-in for the optimised EuroBen
+//! `CFFT4` serial code the paper compares against (Fig 5a).
+//!
+//! Recursive decimation-in-time with radix-4 butterflies (radix-2 at
+//! levels where 4 ∤ n), twiddles from one precomputed table. Radix-4
+//! performs ~25% fewer multiplies than radix-2 and halves the recursion
+//! depth, which is where CFFT4's advantage over the simple code comes
+//! from.
+
+use super::twiddle::twiddles;
+
+/// Forward FFT on split planes. `n` must be a power of two.
+pub fn fft(re: &[f64], im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = re.len();
+    assert!(super::is_pow2(n), "radix4: n={n} not a power of two");
+    assert_eq!(n, im.len());
+    let mut ore = vec![0.0; n];
+    let mut oim = vec![0.0; n];
+    let (twre, twim) = twiddles(n, n.max(2) / 2);
+    rec(re, im, &mut ore, &mut oim, n, 0, 1, &twre, &twim);
+    (ore, oim)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rec(
+    xre: &[f64],
+    xim: &[f64],
+    ore: &mut [f64],
+    oim: &mut [f64],
+    n: usize,
+    offset: usize,
+    stride: usize,
+    twre: &[f64],
+    twim: &[f64],
+) {
+    match n {
+        1 => {
+            ore[0] = xre[offset];
+            oim[0] = xim[offset];
+            return;
+        }
+        2 => {
+            let (ar, ai) = (xre[offset], xim[offset]);
+            let (br, bi) = (xre[offset + stride], xim[offset + stride]);
+            ore[0] = ar + br;
+            oim[0] = ai + bi;
+            ore[1] = ar - br;
+            oim[1] = ai - bi;
+            return;
+        }
+        _ => {}
+    }
+    if n % 4 == 0 {
+        let q = n / 4;
+        {
+            let (o0, rest) = ore.split_at_mut(q);
+            let (o1, rest2) = rest.split_at_mut(q);
+            let (o2, o3) = rest2.split_at_mut(q);
+            let (i0, irest) = oim.split_at_mut(q);
+            let (i1, irest2) = irest.split_at_mut(q);
+            let (i2, i3) = irest2.split_at_mut(q);
+            rec(xre, xim, o0, i0, q, offset, stride * 4, twre, twim);
+            rec(xre, xim, o1, i1, q, offset + stride, stride * 4, twre, twim);
+            rec(xre, xim, o2, i2, q, offset + 2 * stride, stride * 4, twre, twim);
+            rec(xre, xim, o3, i3, q, offset + 3 * stride, stride * 4, twre, twim);
+        }
+        // Combine: F[k + j*q] from A,B,C,D with twiddles w^k, w^2k, w^3k.
+        for k in 0..q {
+            let t1 = k * stride;
+            let t2 = 2 * k * stride;
+            let t3 = 3 * k * stride;
+            // twiddle table covers exponents < n_root/2; fold larger
+            // exponents via w^(e+n/2) = -w^e.
+            let (w1r, w1i) = tw(twre, twim, t1);
+            let (w2r, w2i) = tw(twre, twim, t2);
+            let (w3r, w3i) = tw(twre, twim, t3);
+            let (ar, ai) = (ore[k], oim[k]);
+            let (br0, bi0) = (ore[q + k], oim[q + k]);
+            let (cr0, ci0) = (ore[2 * q + k], oim[2 * q + k]);
+            let (dr0, di0) = (ore[3 * q + k], oim[3 * q + k]);
+            let (br, bi) = (w1r * br0 - w1i * bi0, w1r * bi0 + w1i * br0);
+            let (cr, ci) = (w2r * cr0 - w2i * ci0, w2r * ci0 + w2i * cr0);
+            let (dr, di) = (w3r * dr0 - w3i * di0, w3r * di0 + w3i * dr0);
+            // radix-4 butterfly (forward: multiply-by-(-i) = (im, -re))
+            let (s0r, s0i) = (ar + cr, ai + ci);
+            let (s1r, s1i) = (ar - cr, ai - ci);
+            let (s2r, s2i) = (br + dr, bi + di);
+            let (s3r, s3i) = (br - dr, bi - di);
+            // -i * s3
+            let (m3r, m3i) = (s3i, -s3r);
+            ore[k] = s0r + s2r;
+            oim[k] = s0i + s2i;
+            ore[q + k] = s1r + m3r;
+            oim[q + k] = s1i + m3i;
+            ore[2 * q + k] = s0r - s2r;
+            oim[2 * q + k] = s0i - s2i;
+            ore[3 * q + k] = s1r - m3r;
+            oim[3 * q + k] = s1i - m3i;
+        }
+    } else {
+        // radix-2 level (n ≡ 2 mod 4)
+        let h = n / 2;
+        {
+            let (oa, ob) = ore.split_at_mut(h);
+            let (ia, ib) = oim.split_at_mut(h);
+            rec(xre, xim, oa, ia, h, offset, stride * 2, twre, twim);
+            rec(xre, xim, ob, ib, h, offset + stride, stride * 2, twre, twim);
+        }
+        for k in 0..h {
+            let (wr, wi) = tw(twre, twim, k * stride);
+            let (br0, bi0) = (ore[h + k], oim[h + k]);
+            let (br, bi) = (wr * br0 - wi * bi0, wr * bi0 + wi * br0);
+            let (ar, ai) = (ore[k], oim[k]);
+            ore[k] = ar + br;
+            oim[k] = ai + bi;
+            ore[h + k] = ar - br;
+            oim[h + k] = ai - bi;
+        }
+    }
+}
+
+/// Twiddle lookup with the w^(e + n/2) = -w^e fold (table holds n/2
+/// entries).
+#[inline(always)]
+fn tw(twre: &[f64], twim: &[f64], e: usize) -> (f64, f64) {
+    let half = twre.len();
+    let n = half * 2;
+    let e = e % n;
+    if e < half {
+        (twre[e], twim[e])
+    } else {
+        (-twre[e - half], -twim[e - half])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftlib::dft_ref;
+    use crate::util::assert_allclose;
+
+    #[test]
+    fn matches_dft_mixed_sizes() {
+        // 8 = 4·2 exercises the mixed radix path; 64 is pure radix-4.
+        for &n in &[2usize, 4, 8, 16, 32, 64, 128] {
+            let re: Vec<f64> = (0..n).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+            let im: Vec<f64> = (0..n).map(|i| ((i * 5 % 11) as f64) * 0.5).collect();
+            let (wre, wim) = dft_ref::dft(&re, &im);
+            let (gre, gim) = fft(&re, &im);
+            assert_allclose(&gre, &wre, 1e-9, 1e-9, &format!("re n={n}"));
+            assert_allclose(&gim, &wim, 1e-9, 1e-9, &format!("im n={n}"));
+        }
+    }
+
+    #[test]
+    fn twiddle_fold() {
+        let (twre, twim) = crate::fftlib::twiddle::twiddles(8, 4);
+        // w^4 = -w^0 = -1
+        let (r, i) = tw(&twre, &twim, 4);
+        assert!((r + 1.0).abs() < 1e-12 && i.abs() < 1e-12);
+        // w^6 = -w^2 = i·... : w^2 = -i, so w^6 = i
+        let (r, i) = tw(&twre, &twim, 6);
+        assert!(r.abs() < 1e-12 && (i - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,105 @@
+//! Split-stream FFT (Jansen et al., VMV 2004) — the formulation the
+//! paper's ArBB port of `mod2f` uses (§3.3, Fig 4).
+//!
+//! The input is "tangled" (bit-reversal reorder) once; every subsequent
+//! stage applies identical data-parallel operations:
+//!
+//! ```text
+//! even = section(data, 0, n/2, 2)       // stride-2 gather
+//! odd  = section(data, 1, n/2, 2)
+//! up   = even + odd
+//! down = (even - odd) * repeat(section(tw, 0, m), i)
+//! data = cat(up, down)
+//! ```
+//!
+//! with `m` halving and the repeat count `i` doubling per stage — the
+//! output emerges in natural order, which is the algorithm's GPU-stream
+//! selling point. The twiddle table is *bit-reversal ordered*
+//! ([`super::twiddle::twiddles_bitrev`]): that is what lets every stage
+//! use a plain prefix `section` of one table, exactly as the paper's
+//! listing does. This module is the *serial comparator*; the DSL port
+//! lives in [`crate::euroben::mod2f`].
+
+use super::twiddle::twiddles_bitrev;
+
+/// Bit-reversal permutation ("tangling").
+pub fn tangle_indices(n: usize) -> Vec<usize> {
+    let bits = n.trailing_zeros();
+    (0..n).map(|i| (i.reverse_bits() >> (usize::BITS - bits)) as usize).collect()
+}
+
+/// Forward FFT on split planes. `n` must be a power of two.
+pub fn fft(re: &[f64], im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = re.len();
+    assert!(super::is_pow2(n), "splitstream: n={n} not a power of two");
+    assert_eq!(n, im.len());
+    if n == 1 {
+        return (re.to_vec(), im.to_vec());
+    }
+    let idx = tangle_indices(n);
+    let mut dre: Vec<f64> = idx.iter().map(|&i| re[i]).collect();
+    let mut dim: Vec<f64> = idx.iter().map(|&i| im[i]).collect();
+    let (twre, twim) = twiddles_bitrev(n);
+
+    let h = n / 2;
+    let mut upre = vec![0.0; h];
+    let mut upim = vec![0.0; h];
+    let mut dnre = vec![0.0; h];
+    let mut dnim = vec![0.0; h];
+
+    let mut m = h; // twiddle section length
+    while m >= 1 {
+        for j in 0..h {
+            let (er, ei) = (dre[2 * j], dim[2 * j]);
+            let (or_, oi) = (dre[2 * j + 1], dim[2 * j + 1]);
+            upre[j] = er + or_;
+            upim[j] = ei + oi;
+            // twiddle = repeat(section(tw, 0, m), i)[j] = tw[j mod m]
+            let t = j % m;
+            let (wr, wi) = (twre[t], twim[t]);
+            let (sr, si) = (er - or_, ei - oi);
+            dnre[j] = sr * wr - si * wi;
+            dnim[j] = sr * wi + si * wr;
+        }
+        // data = cat(up, down)
+        dre[..h].copy_from_slice(&upre);
+        dre[h..].copy_from_slice(&dnre);
+        dim[..h].copy_from_slice(&upim);
+        dim[h..].copy_from_slice(&dnim);
+        m >>= 1;
+    }
+    (dre, dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftlib::dft_ref;
+    use crate::util::assert_allclose;
+
+    #[test]
+    fn tangle_is_bit_reversal() {
+        assert_eq!(tangle_indices(8), vec![0, 4, 2, 6, 1, 5, 3, 7]);
+        assert_eq!(tangle_indices(4), vec![0, 2, 1, 3]);
+        assert_eq!(tangle_indices(2), vec![0, 1]);
+    }
+
+    #[test]
+    fn matches_dft() {
+        for &n in &[2usize, 4, 8, 32, 128] {
+            let re: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+            let im: Vec<f64> = (0..n).map(|i| (i as f64 * 1.3).cos()).collect();
+            let (wre, wim) = dft_ref::dft(&re, &im);
+            let (gre, gim) = fft(&re, &im);
+            assert_allclose(&gre, &wre, 1e-9, 1e-9, "re");
+            assert_allclose(&gim, &wim, 1e-9, 1e-9, "im");
+        }
+    }
+
+    #[test]
+    fn stage_count_is_log2() {
+        // structural: after log2(n) stages m reaches 0 — implicitly
+        // covered by correctness, but assert the tangle length too.
+        assert_eq!(tangle_indices(16).len(), 16);
+    }
+}

@@ -1,0 +1,66 @@
+//! Twiddle-factor tables: `w_n^k = exp(-2πik/n)`.
+
+/// Twiddle factors `exp(-2πik/n)` for `k in 0..count`, split planes.
+pub fn twiddles(n: usize, count: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut re = Vec::with_capacity(count);
+    let mut im = Vec::with_capacity(count);
+    let w = -2.0 * std::f64::consts::PI / n as f64;
+    for k in 0..count {
+        let a = w * k as f64;
+        re.push(a.cos());
+        im.push(a.sin());
+    }
+    (re, im)
+}
+
+/// Split-stream twiddle table: `tw[k] = w_n^{bitrev(k)}` over `n/2`
+/// entries.
+///
+/// With the input tangled into bit-reversed order, the DIF butterfly for
+/// pair `j` at the first stage needs exponent `bitrev_{n/2}(j)`; ordering
+/// the *table* by bit-reversed exponent makes every stage's factor vector
+/// exactly `repeat(section(tw, 0, m), i)` — the paper's listing, with no
+/// strided access.
+pub fn twiddles_bitrev(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let half = n.max(2) / 2;
+    let bits = half.trailing_zeros();
+    let mut re = Vec::with_capacity(half);
+    let mut im = Vec::with_capacity(half);
+    let w = -2.0 * std::f64::consts::PI / n as f64;
+    for k in 0..half {
+        let e = if bits == 0 { 0 } else { (k.reverse_bits() >> (usize::BITS - bits)) as usize };
+        let a = w * e as f64;
+        re.push(a.cos());
+        im.push(a.sin());
+    }
+    (re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitrev_table_order() {
+        // n=8: exponents in table order are br_4 = [0, 2, 1, 3]
+        let (re, im) = twiddles_bitrev(8);
+        let (lre, lim) = twiddles(8, 4);
+        let order = [0usize, 2, 1, 3];
+        for (k, &e) in order.iter().enumerate() {
+            assert!((re[k] - lre[e]).abs() < 1e-15);
+            assert!((im[k] - lim[e]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn unit_circle() {
+        let (re, im) = twiddles(8, 8);
+        for k in 0..8 {
+            let m = (re[k] * re[k] + im[k] * im[k]).sqrt();
+            assert!((m - 1.0).abs() < 1e-12);
+        }
+        // w^0 = 1, w^(n/4) = -i for the forward transform
+        assert!((re[0] - 1.0).abs() < 1e-12 && im[0].abs() < 1e-12);
+        assert!(re[2].abs() < 1e-12 && (im[2] + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,72 @@
+//! Level-1 BLAS kernels (dot, axpy, norms) — used by the native CG
+//! comparator and the machine-calibration harness.
+
+/// `Σ x·y` with 4-way unrolled accumulators.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 4];
+    let n4 = x.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    while i < x.len() {
+        s += x[i] * y[i];
+        i += 1;
+    }
+    s
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y = x + beta * y` (the CG search-direction update).
+pub fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] = x[i] + beta * y[i];
+    }
+}
+
+/// Squared 2-norm.
+pub fn nrm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..13).map(|i| i as f64).collect();
+        let y: Vec<f64> = (0..13).map(|i| (i * 2) as f64).collect();
+        let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert_eq!(dot(&x, &y), want);
+    }
+
+    #[test]
+    fn axpy_and_xpby() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        xpby(&x, 0.5, &mut y);
+        assert_eq!(y, vec![7.0, 14.0, 21.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(nrm2_sq(&[3.0, 4.0]), 25.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Planned iterative FFT — the MKL DFTI stand-in.
+//!
+//! Like MKL's `DftiComputeForward`, the transform is split into a *plan*
+//! (twiddle tables + bit-reversal permutation, built once per size and
+//! cached) and an *execute* phase (iterative in-place radix-2 DIT over
+//! split planes with per-stage table slices). Amortising the plan is the
+//! main structural advantage a vendor FFT has over the one-shot serial
+//! codes in [`crate::fftlib`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::fftlib::{is_pow2, splitstream::tangle_indices};
+
+/// A reusable transform plan for size `n`.
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    n: usize,
+    bitrev: Vec<u32>,
+    /// Per-stage twiddles: stage s (half-size h=2^s) holds h factors.
+    stage_re: Vec<Vec<f64>>,
+    stage_im: Vec<Vec<f64>>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        assert!(is_pow2(n), "FftPlan: n={n} not a power of two");
+        let bitrev = tangle_indices(n).into_iter().map(|i| i as u32).collect();
+        let stages = n.trailing_zeros() as usize;
+        let mut stage_re = Vec::with_capacity(stages);
+        let mut stage_im = Vec::with_capacity(stages);
+        for s in 0..stages {
+            let h = 1usize << s; // butterfly half-width at this stage
+            let step = -2.0 * std::f64::consts::PI / (2 * h) as f64;
+            let re: Vec<f64> = (0..h).map(|k| (step * k as f64).cos()).collect();
+            let im: Vec<f64> = (0..h).map(|k| (step * k as f64).sin()).collect();
+            stage_re.push(re);
+            stage_im.push(im);
+        }
+        FftPlan { n, bitrev, stage_re, stage_im }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Execute in place on split planes.
+    pub fn execute(&self, re: &mut [f64], im: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(re.len(), n);
+        assert_eq!(im.len(), n);
+        // bit-reversal permutation (swap once per pair)
+        for i in 0..n {
+            let j = self.bitrev[i] as usize;
+            if j > i {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        // iterative DIT stages
+        for (s, (twr, twi)) in self.stage_re.iter().zip(&self.stage_im).enumerate() {
+            let h = 1usize << s;
+            let span = h << 1;
+            let mut base = 0;
+            while base < n {
+                for k in 0..h {
+                    let (wr, wi) = (twr[k], twi[k]);
+                    let i0 = base + k;
+                    let i1 = i0 + h;
+                    let (br, bi) = (re[i1], im[i1]);
+                    let (tr, ti) = (wr * br - wi * bi, wr * bi + wi * br);
+                    let (ar, ai) = (re[i0], im[i0]);
+                    re[i0] = ar + tr;
+                    im[i0] = ai + ti;
+                    re[i1] = ar - tr;
+                    im[i1] = ai - ti;
+                }
+                base += span;
+            }
+        }
+    }
+}
+
+thread_local! {
+    static PLAN_CACHE: RefCell<HashMap<usize, std::rc::Rc<FftPlan>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Cached-plan forward FFT (allocating convenience wrapper).
+pub fn fft_planned(re: &[f64], im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let plan = plan_for(re.len());
+    let mut ore = re.to_vec();
+    let mut oim = im.to_vec();
+    plan.execute(&mut ore, &mut oim);
+    (ore, oim)
+}
+
+/// Fetch (or build) the cached plan for size `n`.
+pub fn plan_for(n: usize) -> std::rc::Rc<FftPlan> {
+    PLAN_CACHE.with(|c| {
+        c.borrow_mut().entry(n).or_insert_with(|| std::rc::Rc::new(FftPlan::new(n))).clone()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fftlib::dft_ref;
+    use crate::util::assert_allclose;
+
+    #[test]
+    fn matches_dft() {
+        for &n in &[2usize, 8, 64, 512] {
+            let re: Vec<f64> = (0..n).map(|i| ((i * 3 % 17) as f64) - 8.0).collect();
+            let im: Vec<f64> = (0..n).map(|i| ((i * 11 % 23) as f64) * 0.25).collect();
+            let (wre, wim) = dft_ref::dft(&re, &im);
+            let (gre, gim) = fft_planned(&re, &im);
+            assert_allclose(&gre, &wre, 1e-9, 1e-9, &format!("re n={n}"));
+            assert_allclose(&gim, &wim, 1e-9, 1e-9, &format!("im n={n}"));
+        }
+    }
+
+    #[test]
+    fn plan_reuse_same_results() {
+        let n = 128;
+        let re: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let im = vec![0.0; n];
+        let a = fft_planned(&re, &im);
+        let b = fft_planned(&re, &im);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn plan_cache_caches() {
+        let p1 = plan_for(256);
+        let p2 = plan_for(256);
+        assert!(std::rc::Rc::ptr_eq(&p1, &p2));
+    }
+}

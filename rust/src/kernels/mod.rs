@@ -1,0 +1,20 @@
+//! Hand-optimised native kernels — the "MKL" comparator of the paper's
+//! figures, rebuilt in rust (see DESIGN.md §2 substitutions):
+//!
+//! * [`dgemm`] — blocked/packed matmul with a register micro-kernel
+//!   (`cblas_dgemm` stand-in, Fig 1) + the naive triple loop the OpenMP
+//!   comparator parallelises.
+//! * [`spmv`] — unrolled CSR spmv (`mkl_dcsrmv` stand-in, Fig 2/7) + the
+//!   paper's OMP1/OMP2 loop bodies.
+//! * [`fft`] — planned iterative FFT (`DftiComputeForward` stand-in,
+//!   Fig 5).
+//! * [`blas1`] — dot/axpy/norm primitives for the CG comparator.
+
+pub mod blas1;
+pub mod dgemm;
+pub mod fft;
+pub mod spmv;
+
+pub use dgemm::{dgemm, dgemm_naive, gemm_flops};
+pub use fft::{fft_planned, plan_for, FftPlan};
+pub use spmv::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt};

@@ -1,0 +1,72 @@
+//! # arbb-rs
+//!
+//! A reproduction of *“Data-parallel programming with Intel Array Building
+//! Blocks (ArBB)”* (V. Weinberg, PRACE whitepaper, 2012).
+//!
+//! The paper evaluates Intel ArBB — a C++ embedded data-parallel array DSL
+//! with a closure-capturing JIT runtime — on four mathematical kernels
+//! (dense matrix–matrix multiply `mod2am`, sparse matrix–vector multiply
+//! `mod2as`, a 1-D complex split-stream FFT `mod2f`, and a conjugate-
+//! gradients solver) against MKL and OpenMP on a 40-core Westmere-EX node.
+//!
+//! This crate rebuilds the *system* under evaluation plus every substrate
+//! the evaluation needs:
+//!
+//! * [`coordinator`] — the ArBB-like runtime: dense containers bound to
+//!   host memory, element-wise / reduction / permutation operators with
+//!   serial semantics, lazy capture of expression DAGs, an optimiser
+//!   (fusion, CSE, constant folding, dead-code elimination), and three
+//!   execution engines (serial `O2`, threaded `O3`, and a calibrated
+//!   virtual-time scaling simulator standing in for the 40-core node).
+//! * [`runtime`] — the AOT/PJRT backend: loads HLO artifacts produced by
+//!   the build-time JAX/Pallas pipeline (`python/compile/`) and executes
+//!   them through the XLA PJRT CPU client.
+//! * [`sparse`] — CSR sparse matrices, random-fill and banded-SPD
+//!   generators (Tables 1 and 2 of the paper).
+//! * [`fftlib`] — radix-2 DIF, split-stream (Jansen et al.), and
+//!   radix-4+2 (EuroBen CFFT4 analog) FFTs plus a naive-DFT oracle.
+//! * [`kernels`] — hand-optimised native kernels standing in for MKL
+//!   (blocked dgemm, unrolled CSR spmv, optimised FFT, dot/axpy).
+//! * [`solvers`] — conjugate gradients, Jacobi and Gauss–Seidel, generic
+//!   over the spmv backend.
+//! * [`bench`] — machine calibration (peak FLOP/s, stream bandwidth,
+//!   dispatch overhead), workload generators for the paper's parameter
+//!   grids, timing/statistics, and paper-style series reporting.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod euroben;
+pub mod fftlib;
+pub mod kernels;
+pub mod runtime;
+pub mod solvers;
+pub mod sparse;
+pub mod util;
+
+pub use coordinator::{Context, Engine, MachineModel, Options, OptLevel};
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+    #[error("runtime artifact error: {0}")]
+    Artifact(String),
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,202 @@
+//! `arbb-rs` CLI — leader entrypoint.
+//!
+//! ```text
+//! arbb-rs info                      runtime + artifact inventory
+//! arbb-rs calibrate                 machine calibration (peak/BW/dispatch)
+//! arbb-rs e2e                       full-stack end-to-end check (short)
+//! arbb-rs run <kernel> [args…]      run one kernel through the DSL
+//!     mxm  [n] [u]                  mod2am via arbb_mxm2b
+//!     spmv [n] [fill%]              mod2as via arbb_spmv2
+//!     fft  [log2n]                  mod2f split-stream
+//!     cg   [n] [bw]                 CG + arbb_spmv2
+//! arbb-rs sim <kernel> [args…]      thread-scaling simulation of a kernel
+//! ```
+//!
+//! The figure benches live under `cargo bench --bench fig…` (see
+//! DESIGN.md §4); examples under `cargo run --example …`.
+
+use arbb_rs::bench::{calibrate, mflops, time_best, workloads};
+use arbb_rs::coordinator::{Context, CplxV, Options};
+use arbb_rs::euroben::{cg as acg, mod2am, mod2as, mod2f};
+use arbb_rs::kernels::gemm_flops;
+use arbb_rs::runtime::XlaRuntime;
+use arbb_rs::sparse::{banded_spd, random_csr};
+use arbb_rs::util::XorShift64;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "calibrate" => {
+            let c = calibrate();
+            println!("{}", c.summary());
+            let m = c.node_model();
+            println!(
+                "node model: {} cores, bw {:.1}→{:.1} GB/s, fork-join {:.1} µs, dispatch {:.1} µs",
+                m.cores,
+                m.bw_core_gbs,
+                m.bw_node_gbs,
+                m.fork_join_s * 1e6,
+                m.dispatch_s * 1e6
+            );
+        }
+        "e2e" => e2e(),
+        "run" => run_kernel(&args[1..], false),
+        "sim" => run_kernel(&args[1..], true),
+        _ => {
+            println!(
+                "arbb-rs — reproduction of 'Data-parallel programming with Intel ArBB' (PRACE 2012)\n\n\
+                 usage: arbb-rs <info|calibrate|e2e|run|sim> [args]\n\
+                 - run mxm [n] [u] | spmv [n] [fill%] | fft [log2n] | cg [n] [bw]\n\
+                 - sim <same>   (adds a 1..40-thread virtual-node sweep)\n\
+                 benches: cargo bench --bench fig1_mod2am|fig2_mod2as|fig5_fft|fig7_cg|ablations"
+            );
+        }
+    }
+}
+
+fn info() {
+    println!("arbb-rs {} — see DESIGN.md / EXPERIMENTS.md", env!("CARGO_PKG_VERSION"));
+    println!(
+        "workload grids: mod2am {} sizes, mod2as {} inputs, mod2f {} sizes, cg {} configs",
+        workloads::mod2am_sizes().len(),
+        workloads::mod2as_inputs().len(),
+        workloads::mod2f_sizes().len(),
+        workloads::cg_configs().len()
+    );
+    match XlaRuntime::open_default() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts ({}):", rt.names().len());
+            for n in rt.names() {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+}
+
+fn e2e() {
+    println!("running the short end-to-end check (full version: cargo run --release --example e2e_euroben)");
+    // DSL path
+    let n = 64;
+    let mut rng = XorShift64::new(1);
+    let a: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let b: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let ctx = Context::serial();
+    let (am, bm) = (ctx.bind2(&a, n, n), ctx.bind2(&b, n, n));
+    let got = mod2am::arbb_mxm2b(&ctx, &am, &bm, 8).to_vec();
+    let want = mod2am::reference(&a, &b, n);
+    arbb_rs::util::assert_allclose(&got, &want, 1e-9, 1e-10, "e2e mxm");
+    println!("  DSL mod2am OK");
+    // PJRT path
+    match XlaRuntime::open_default() {
+        Ok(rt) => {
+            let l = rt.load("mxm_n128").expect("artifact");
+            let n = 128;
+            let a: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let b: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let out = l.run_f64(&[(&a, &[n, n]), (&b, &[n, n])]).expect("run");
+            let want = mod2am::reference(&a, &b, n);
+            arbb_rs::util::assert_allclose(&out[0], &want, 1e-9, 1e-10, "e2e pjrt");
+            println!("  PJRT mod2am OK (platform {})", rt.platform());
+        }
+        Err(e) => println!("  PJRT skipped: {e}"),
+    }
+    println!("e2e OK");
+}
+
+fn run_kernel(args: &[String], sim: bool) {
+    let kernel = args.first().map(|s| s.as_str()).unwrap_or("mxm");
+    let p1 = args.get(1).and_then(|s| s.parse::<usize>().ok());
+    let p2 = args.get(2).and_then(|s| s.parse::<usize>().ok());
+    let opts = Options { record: sim, ..Default::default() };
+    let ctx = Context::with_options(opts);
+    let (flops, label): (f64, String) = match kernel {
+        "mxm" => {
+            let n = p1.unwrap_or(256);
+            let u = p2.unwrap_or(8);
+            let mut rng = XorShift64::new(1);
+            let a: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let b: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let (am, bm) = (ctx.bind2(&a, n, n), ctx.bind2(&b, n, n));
+            let t = time_best(|| drop(mod2am::arbb_mxm2b(&ctx, &am, &bm, u).to_vec()), 0.3, 2);
+            println!("mxm n={n} u={u}: {:.1} MFlop/s", mflops(gemm_flops(n, n, n), t));
+            (gemm_flops(n, n, n), format!("mxm n={n}"))
+        }
+        "spmv" => {
+            let n = p1.unwrap_or(4096);
+            let fill = p2.unwrap_or(5) as f64;
+            let m = random_csr(n, fill, 42);
+            let x = m.random_x(3);
+            let a = mod2as::bind_csr(&ctx, &m);
+            let xv = ctx.bind1(&x);
+            let fl = 2.0 * m.nnz() as f64;
+            let t = time_best(|| drop(mod2as::arbb_spmv2(&ctx, &a, &xv).to_vec()), 0.2, 3);
+            println!("spmv n={n} fill={fill}%: {:.1} MFlop/s", mflops(fl, t));
+            (fl, format!("spmv n={n}"))
+        }
+        "fft" => {
+            let logn = p1.unwrap_or(14);
+            let n = 1usize << logn;
+            let mut rng = XorShift64::new(1);
+            let re: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let plan = mod2f::plan(&ctx, n);
+            let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+            let fl = arbb_rs::fftlib::fft_flops(n);
+            let t = time_best(
+                || {
+                    let o = mod2f::arbb_fft(&ctx, &plan, &data);
+                    o.re.eval();
+                },
+                0.2,
+                2,
+            );
+            println!("fft n=2^{logn}: {:.1} MFlop/s", mflops(fl, t));
+            (fl, format!("fft 2^{logn}"))
+        }
+        "cg" => {
+            let n = p1.unwrap_or(1024);
+            let bw = p2.unwrap_or(63);
+            let m = banded_spd(n, bw, 42);
+            let mut rng = XorShift64::new(7);
+            let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let a = mod2as::bind_csr(&ctx, &m);
+            let res = acg::arbb_cg(&ctx, &a, &b, 1e-14, 4 * n, acg::SpmvVariant::V2);
+            let fl = res.iterations as f64 * (2.0 * m.nnz() as f64 + 10.0 * n as f64);
+            let t = time_best(
+                || drop(acg::arbb_cg(&ctx, &a, &b, 1e-14, 4 * n, acg::SpmvVariant::V2)),
+                0.3,
+                2,
+            );
+            println!(
+                "cg n={n} bw={bw}: {} iters, {:.2} ms/solve, {:.1} MFlop/s",
+                res.iterations,
+                t * 1e3,
+                mflops(fl, t)
+            );
+            (fl, format!("cg n={n} bw={bw}"))
+        }
+        other => {
+            println!("unknown kernel '{other}' (mxm|spmv|fft|cg)");
+            return;
+        }
+    };
+    if sim {
+        let cal = calibrate();
+        let model = cal.node_model();
+        let (recs, forces) = ctx.take_records();
+        println!("\nvirtual-node scaling for {label} ({} recorded steps):", recs.len());
+        for &p in &workloads::thread_sweep() {
+            let r = model.simulate(&recs, forces, p);
+            println!(
+                "  P={p:<3} {:>10.1} MFlop/s  (barrier {:.1}%, bw-limited {:.1}%)",
+                mflops(flops, r.total_secs),
+                100.0 * r.barrier_secs / r.total_secs,
+                100.0 * r.bw_limited_secs / r.total_secs
+            );
+        }
+    }
+}

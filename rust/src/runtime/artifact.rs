@@ -1,0 +1,169 @@
+//! Artifact manifest: a TSV file written by `python/compile/aot.py`
+//! describing every lowered HLO module.
+//!
+//! Format (tab-separated, one artifact per line, `#` comments):
+//!
+//! ```text
+//! name<TAB>file<TAB>kind<TAB>params(k=v,…)<TAB>inputs(shape;…)<TAB>outputs(shape;…)
+//! mxm_n256  mxm_n256.hlo.txt  mxm  n=256  256x256;256x256  256x256
+//! ```
+//!
+//! (Deliberately not JSON: the offline crate set has no serde; a TSV
+//! keeps the build-time contract trivially parseable on both sides.)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// One lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub params: BTreeMap<String, String>,
+    /// Input shapes, e.g. `[[256,256],[256,256]]`.
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl Artifact {
+    /// Integer parameter accessor (`n`, `nnz`, …).
+    pub fn param_usize(&self, key: &str) -> Option<usize> {
+        self.params.get(key)?.parse().ok()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    arts: BTreeMap<String, Artifact>,
+}
+
+fn parse_shape_list(s: &str) -> Vec<Vec<usize>> {
+    if s == "-" || s.is_empty() {
+        return vec![];
+    }
+    s.split(';')
+        .map(|one| {
+            if one == "scalar" {
+                vec![]
+            } else {
+                one.split('x').map(|d| d.parse().unwrap_or(0)).collect()
+            }
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read manifest {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut arts = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() < 6 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 6 tab-separated columns, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let mut params = BTreeMap::new();
+            if cols[3] != "-" {
+                for kv in cols[3].split(',') {
+                    if let Some((k, v)) = kv.split_once('=') {
+                        params.insert(k.to_string(), v.to_string());
+                    }
+                }
+            }
+            let art = Artifact {
+                name: cols[0].to_string(),
+                file: cols[1].to_string(),
+                kind: cols[2].to_string(),
+                params,
+                inputs: parse_shape_list(cols[4]),
+                outputs: parse_shape_list(cols[5]),
+            };
+            arts.insert(art.name.clone(), art);
+        }
+        Ok(Manifest { arts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.arts.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.arts.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.arts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arts.is_empty()
+    }
+
+    /// All artifacts of a given kind (e.g. every `mxm` size).
+    pub fn of_kind(&self, kind: &str) -> Vec<&Artifact> {
+        self.arts.values().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+mxm_n256\tmxm_n256.hlo.txt\tmxm\tn=256\t256x256;256x256\t256x256
+fft_n1024\tfft_n1024.hlo.txt\tfft\tn=1024\t1024;1024\t1024;1024
+dot_n64\tdot.hlo.txt\tdot\t-\t64;64\tscalar
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        let a = m.get("mxm_n256").unwrap();
+        assert_eq!(a.kind, "mxm");
+        assert_eq!(a.param_usize("n"), Some(256));
+        assert_eq!(a.inputs, vec![vec![256, 256], vec![256, 256]]);
+        let d = m.get("dot_n64").unwrap();
+        assert!(d.params.is_empty());
+        assert_eq!(d.outputs, vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn of_kind_filters() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.of_kind("mxm").len(), 1);
+        assert_eq!(m.of_kind("nope").len(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Manifest::parse("just\tthree\tcols").is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        let m = Manifest::parse("# nothing\n").unwrap();
+        assert!(m.is_empty());
+    }
+}

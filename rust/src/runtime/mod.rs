@@ -1,0 +1,131 @@
+//! AOT/PJRT runtime — the DSL's second backend.
+//!
+//! ArBB's key architectural claim is that the captured IR is independent
+//! of the execution backend (the same closure ran on SSE, AVX and — under
+//! NDA — MIC). This module demonstrates the same property for our stack:
+//! the four EuroBen kernels are ALSO lowered, at build time, from
+//! JAX/Pallas (`python/compile/`) to HLO text, and executed from the rust
+//! hot path through the XLA PJRT CPU client. Python never runs at
+//! request time.
+//!
+//! Interchange is **HLO text** (not serialized `HloModuleProto`): jax ≥
+//! 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! `/opt/xla-example/README.md`).
+
+pub mod artifact;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::{Error, Result};
+pub use artifact::{Artifact, Manifest};
+
+/// A compiled, executable artifact.
+pub struct Loaded {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// One runtime input buffer (jax lowers the ELL column indices as i32).
+pub enum Input<'a> {
+    F64(&'a [f64], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl Loaded {
+    /// Execute; returns the flattened f64 outputs.
+    ///
+    /// The jax side lowers with `return_tuple=True`, so the single result
+    /// is a tuple whose elements we flatten back out.
+    pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f64>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let lit = match input {
+                Input::F64(data, dims) => {
+                    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims_i64)?
+                }
+                Input::I32(data, dims) => {
+                    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data).reshape(&dims_i64)?
+                }
+            };
+            lits.push(lit);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(t.to_vec::<f64>()?);
+        }
+        Ok(out)
+    }
+
+    /// Convenience for all-f64 inputs.
+    pub fn run_f64(&self, inputs: &[(&[f64], &[usize])]) -> Result<Vec<Vec<f64>>> {
+        let wrapped: Vec<Input<'_>> = inputs.iter().map(|(d, s)| Input::F64(d, s)).collect();
+        self.run(&wrapped)
+    }
+}
+
+/// The PJRT runtime: loads `artifacts/` produced by `make artifacts`,
+/// compiles on the CPU client, caches executables per artifact name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Loaded>>>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (reads `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.tsv"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaRuntime { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifact location (`$ARBB_ARTIFACTS` or `./artifacts`).
+    pub fn open_default() -> Result<XlaRuntime> {
+        let dir = std::env::var("ARBB_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (compile + cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Rc<Loaded>> {
+        if let Some(l) = self.cache.borrow().get(name) {
+            return Ok(l.clone());
+        }
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("artifact '{name}' not in manifest")))?
+            .clone();
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded = Rc::new(Loaded { artifact: art, exe });
+        self.cache.borrow_mut().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn names(&self) -> Vec<String> {
+        self.manifest.names()
+    }
+}

@@ -1,0 +1,125 @@
+//! Conjugate gradients (§3.4, Fig 6 textbook version from Golub & van
+//! Loan), generic over the spmv backend so the bench harness can swap
+//! serial / MKL-analog / DSL spmv implementations exactly like the paper
+//! swaps `arbb_spmv1`/`arbb_spmv2`/`mkl_dcsrmv`.
+
+use crate::kernels::blas1::{axpy, dot, xpby};
+use crate::sparse::Csr;
+
+/// Outcome of a CG solve.
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub residual2: f64,
+    pub converged: bool,
+}
+
+/// Solve `A x = b` with plain CG; `spmv(x, out)` computes `A·x`.
+///
+/// Initialisation follows the paper's listing: `x0 = 0`, `r0 = p0 = b`,
+/// loop while `|r|² > stop` up to `max_iters`.
+pub fn cg_with<F>(n: usize, b: &[f64], stop: f64, max_iters: usize, mut spmv: F) -> CgResult
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = b.to_vec();
+    let mut ap = vec![0.0; n];
+    let mut r2 = dot(&r, &r);
+    let mut k = 0;
+    while r2 > stop && k < max_iters {
+        spmv(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        let alpha = r2 / pap;
+        let r2_old = r2;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        r2 = dot(&r, &r);
+        let beta = r2 / r2_old;
+        xpby(&r, beta, &mut p);
+        k += 1;
+    }
+    CgResult { x, iterations: k, residual2: r2, converged: r2 <= stop }
+}
+
+/// CG with the reference serial CSR spmv.
+pub fn cg_serial(a: &Csr, b: &[f64], stop: f64, max_iters: usize) -> CgResult {
+    cg_with(a.nrows, b, stop, max_iters, |x, out| a.spmv(x, out))
+}
+
+/// CG with the optimised (MKL-analog) spmv.
+pub fn cg_mkl(a: &Csr, b: &[f64], stop: f64, max_iters: usize) -> CgResult {
+    cg_with(a.nrows, b, stop, max_iters, |x, out| crate::kernels::spmv_opt(a, x, out))
+}
+
+/// Residual `‖A x − b‖₂` (verification helper).
+pub fn residual_norm(a: &Csr, x: &[f64], b: &[f64]) -> f64 {
+    let mut ax = vec![0.0; a.nrows];
+    a.spmv(x, &mut ax);
+    ax.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::banded_spd;
+    use crate::util::XorShift64;
+
+    fn rand_b(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn solves_banded_systems() {
+        for &(n, bw) in &[(64usize, 3usize), (128, 31), (256, 15)] {
+            let a = banded_spd(n, bw, n as u64);
+            let b = rand_b(n, 17);
+            let res = cg_serial(&a, &b, 1e-20, 10 * n);
+            assert!(res.converged, "n={n} bw={bw} r2={}", res.residual2);
+            assert!(
+                residual_norm(&a, &res.x, &b) < 1e-8,
+                "n={n} bw={bw} |Ax-b|={}",
+                residual_norm(&a, &res.x, &b)
+            );
+        }
+    }
+
+    #[test]
+    fn mkl_and_serial_agree() {
+        let n = 128;
+        let a = banded_spd(n, 7, 5);
+        let b = rand_b(n, 23);
+        let r1 = cg_serial(&a, &b, 1e-18, 1000);
+        let r2 = cg_mkl(&a, &b, 1e-18, 1000);
+        assert_eq!(r1.iterations, r2.iterations);
+        crate::util::assert_allclose(&r1.x, &r2.x, 1e-10, 1e-12, "cg x");
+    }
+
+    #[test]
+    fn identity_solves_in_one_iteration() {
+        let n = 32;
+        let mut eye = vec![0.0; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let a = crate::sparse::Csr::from_dense(&eye, n, n);
+        let b = rand_b(n, 3);
+        let res = cg_serial(&a, &b, 1e-24, 10);
+        assert!(res.converged);
+        assert_eq!(res.iterations, 1);
+        crate::util::assert_allclose(&res.x, &b, 1e-12, 1e-14, "x=b");
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let a = banded_spd(64, 3, 9);
+        let b = rand_b(64, 4);
+        let res = cg_serial(&a, &b, 1e-30, 2);
+        assert_eq!(res.iterations, 2);
+        assert!(!res.converged);
+    }
+}

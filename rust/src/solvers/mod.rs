@@ -1,0 +1,12 @@
+//! Linear solvers: conjugate gradients (§3.4) plus the Jacobi and
+//! Gauss–Seidel solvers the paper also ported (§1). CG is generic over
+//! the spmv backend so the benches can swap serial / MKL-analog / DSL
+//! implementations.
+
+pub mod cg;
+pub mod gauss_seidel;
+pub mod jacobi;
+
+pub use cg::{cg_mkl, cg_serial, cg_with, residual_norm, CgResult};
+pub use gauss_seidel::gauss_seidel;
+pub use jacobi::{jacobi, IterResult};

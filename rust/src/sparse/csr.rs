@@ -1,0 +1,201 @@
+//! CSR (compressed sparse row) matrices — the 3-array variation the paper
+//! uses for `mod2as` (§3.2): `vals` holds the non-zeros, `indx[i]` the
+//! column of `vals[i]`, and `rowp[j]` the index in `vals` of the first
+//! non-zero of row `j` (with `rowp[nrows]` = nnz).
+
+use crate::util::XorShift64;
+
+/// A CSR sparse matrix (f64 values, i64 indices to match the DSL's
+/// `dense<i64>` containers).
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub vals: Vec<f64>,
+    pub indx: Vec<i64>,
+    pub rowp: Vec<i64>,
+}
+
+impl Csr {
+    /// Build from dense row-major data, keeping entries with |x| > 0.
+    pub fn from_dense(a: &[f64], nrows: usize, ncols: usize) -> Csr {
+        assert_eq!(a.len(), nrows * ncols);
+        let mut vals = Vec::new();
+        let mut indx = Vec::new();
+        let mut rowp = Vec::with_capacity(nrows + 1);
+        rowp.push(0i64);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                let x = a[r * ncols + c];
+                if x != 0.0 {
+                    vals.push(x);
+                    indx.push(c as i64);
+                }
+            }
+            rowp.push(vals.len() as i64);
+        }
+        Csr { nrows, ncols, vals, indx, rowp }
+    }
+
+    /// Expand to dense row-major.
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.nrows * self.ncols];
+        for r in 0..self.nrows {
+            for k in self.rowp[r]..self.rowp[r + 1] {
+                out[r * self.ncols + self.indx[k as usize] as usize] = self.vals[k as usize];
+            }
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fill fraction in percent (the paper's Table 1 metric).
+    pub fn fill_percent(&self) -> f64 {
+        100.0 * self.nnz() as f64 / (self.nrows * self.ncols) as f64
+    }
+
+    /// Reference serial spmv: `out = A x`.
+    pub fn spmv(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(out.len(), self.nrows);
+        for r in 0..self.nrows {
+            let mut acc = 0.0;
+            for k in self.rowp[r]..self.rowp[r + 1] {
+                acc += self.vals[k as usize] * x[self.indx[k as usize] as usize];
+            }
+            out[r] = acc;
+        }
+    }
+
+    /// Convenience allocating spmv.
+    pub fn spmv_alloc(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.nrows];
+        self.spmv(x, &mut out);
+        out
+    }
+
+    /// Fraction of nnz that sit in runs of consecutive columns (length ≥
+    /// `min_run`). The paper's `arbb_spmv2` exploits contiguity; this
+    /// statistic drives the expectation that it pays off on banded
+    /// matrices (§3.4) more than on uniformly random ones.
+    pub fn contiguity(&self, min_run: usize) -> f64 {
+        if self.nnz() == 0 {
+            return 0.0;
+        }
+        let mut in_runs = 0usize;
+        for r in 0..self.nrows {
+            let (s, e) = (self.rowp[r] as usize, self.rowp[r + 1] as usize);
+            let mut run = 1;
+            for k in s + 1..=e {
+                if k < e && self.indx[k] == self.indx[k - 1] + 1 {
+                    run += 1;
+                } else {
+                    if run >= min_run {
+                        in_runs += run;
+                    }
+                    run = 1;
+                }
+            }
+        }
+        in_runs as f64 / self.nnz() as f64
+    }
+
+    /// Check structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowp.len() != self.nrows + 1 {
+            return Err(format!("rowp len {} != nrows+1", self.rowp.len()));
+        }
+        if self.rowp[0] != 0 {
+            return Err("rowp[0] != 0".into());
+        }
+        if *self.rowp.last().unwrap() as usize != self.nnz() {
+            return Err("rowp[last] != nnz".into());
+        }
+        for r in 0..self.nrows {
+            if self.rowp[r] > self.rowp[r + 1] {
+                return Err(format!("rowp not monotone at {r}"));
+            }
+            for k in self.rowp[r]..self.rowp[r + 1] {
+                let c = self.indx[k as usize];
+                if c < 0 || c as usize >= self.ncols {
+                    return Err(format!("col {c} out of range at nz {k}"));
+                }
+                if k > self.rowp[r] && self.indx[k as usize] < self.indx[k as usize - 1] {
+                    return Err(format!("cols not sorted in row {r}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Random vector compatible with this matrix (deterministic).
+    pub fn random_x(&self, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift64::new(seed);
+        (0..self.ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let a = vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 5.0];
+        let m = Csr::from_dense(&a, 3, 3);
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.to_dense(), a);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 5.0];
+        let m = Csr::from_dense(&a, 3, 3);
+        let x = vec![1.0, 2.0, 3.0];
+        let got = m.spmv_alloc(&x);
+        // dense reference
+        let mut want = vec![0.0; 3];
+        for r in 0..3 {
+            for c in 0..3 {
+                want[r] += a[r * 3 + c] * x[c];
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let a = vec![0.0, 0.0, 1.0, 0.0];
+        let m = Csr::from_dense(&a, 2, 2);
+        assert_eq!(m.nnz(), 1);
+        let got = m.spmv_alloc(&[5.0, 7.0]);
+        assert_eq!(got, vec![0.0, 5.0]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn contiguity_detects_bands() {
+        // fully dense rows are fully contiguous
+        let a = vec![1.0; 16];
+        let m = Csr::from_dense(&a, 4, 4);
+        assert!(m.contiguity(2) > 0.99);
+        // diagonal has no runs
+        let mut d = vec![0.0; 16];
+        for i in 0..4 {
+            d[i * 4 + i] = 1.0;
+        }
+        let md = Csr::from_dense(&d, 4, 4);
+        assert_eq!(md.contiguity(2), 0.0);
+    }
+
+    #[test]
+    fn fill_percent() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let m = Csr::from_dense(&a, 2, 2);
+        assert!((m.fill_percent() - 50.0).abs() < 1e-12);
+    }
+}

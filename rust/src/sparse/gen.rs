@@ -1,0 +1,187 @@
+//! Sparse-matrix workload generators for the paper's parameter grids.
+//!
+//! * `random_csr(n, fill%)` — the `mod2as` inputs of Table 1: uniformly
+//!   random structure at a given fill fraction (the EuroBen generator
+//!   draws uniform random positions the same way).
+//! * `banded_spd(n, bw)` — the CG inputs of Table 2: symmetric positive-
+//!   definite banded matrices with half-bandwidth `bw`, diagonally
+//!   dominant so CG converges.
+
+use super::csr::Csr;
+use crate::util::XorShift64;
+
+/// Random CSR matrix with approximately `fill_percent`% non-zeros,
+/// values in [-1, 1). Deterministic per seed. Column indices are sorted
+/// within each row (CSR canonical form).
+pub fn random_csr(n: usize, fill_percent: f64, seed: u64) -> Csr {
+    let mut rng = XorShift64::new(seed ^ 0x5eed);
+    let p = fill_percent / 100.0;
+    let mut vals = Vec::new();
+    let mut indx = Vec::new();
+    let mut rowp = Vec::with_capacity(n + 1);
+    rowp.push(0i64);
+    // Per-row expected nnz = p * n; draw a Bernoulli per position for
+    // small n (exact distribution), or sample positions for large n.
+    for _r in 0..n {
+        if p > 0.2 || n <= 512 {
+            for c in 0..n {
+                if rng.next_f64() < p {
+                    vals.push(rng.range_f64(-1.0, 1.0));
+                    indx.push(c as i64);
+                }
+            }
+        } else {
+            // sample k ~ Binomial(n, p) approximately via expected count
+            // with +-sqrt jitter, then draw distinct sorted columns.
+            let mean = p * n as f64;
+            let jitter = (mean.sqrt()) * (2.0 * rng.next_f64() - 1.0);
+            let k = ((mean + jitter).round().max(0.0) as usize).min(n);
+            let mut cols: Vec<usize> = Vec::with_capacity(k);
+            while cols.len() < k {
+                let c = rng.below(n);
+                if !cols.contains(&c) {
+                    cols.push(c);
+                }
+            }
+            cols.sort_unstable();
+            for c in cols {
+                vals.push(rng.range_f64(-1.0, 1.0));
+                indx.push(c as i64);
+            }
+        }
+        rowp.push(vals.len() as i64);
+    }
+    Csr { nrows: n, ncols: n, vals, indx, rowp }
+}
+
+/// Symmetric positive-definite banded matrix with half-bandwidth `bw`
+/// (total bandwidth `2*bw+1`), stored in CSR. Off-diagonal entries are
+/// random in [-1, 1); the diagonal is set to (row sum of |offdiag|) + 1
+/// so the matrix is strictly diagonally dominant ⇒ SPD.
+pub fn banded_spd(n: usize, bw: usize, seed: u64) -> Csr {
+    let mut rng = XorShift64::new(seed ^ 0xBA4D);
+    // Build the upper triangle band, mirror for symmetry.
+    // off[r][d] for d in 1..=bw is A[r][r+d].
+    let mut off = vec![vec![0.0f64; bw + 1]; n];
+    for r in 0..n {
+        for d in 1..=bw {
+            if r + d < n {
+                off[r][d] = rng.range_f64(-1.0, 1.0);
+            }
+        }
+    }
+    let mut vals = Vec::new();
+    let mut indx = Vec::new();
+    let mut rowp = Vec::with_capacity(n + 1);
+    rowp.push(0i64);
+    for r in 0..n {
+        // row sum of |offdiag| for diagonal dominance
+        let mut s = 0.0;
+        for d in 1..=bw {
+            if r + d < n {
+                s += off[r][d].abs();
+            }
+            if r >= d {
+                s += off[r - d][d].abs();
+            }
+        }
+        // lower part: A[r][r-d] = off[r-d][d]
+        for d in (1..=bw).rev() {
+            if r >= d {
+                vals.push(off[r - d][d]);
+                indx.push((r - d) as i64);
+            }
+        }
+        vals.push(s + 1.0);
+        indx.push(r as i64);
+        for d in 1..=bw {
+            if r + d < n {
+                vals.push(off[r][d]);
+                indx.push((r + d) as i64);
+            }
+        }
+        rowp.push(vals.len() as i64);
+    }
+    Csr { nrows: n, ncols: n, vals, indx, rowp }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_fill_close_to_target() {
+        for &(n, f) in &[(100usize, 3.5f64), (512, 4.0), (1000, 5.0)] {
+            let m = random_csr(n, f, 1);
+            m.validate().unwrap();
+            let got = m.fill_percent();
+            assert!(
+                (got - f).abs() < f * 0.35 + 0.5,
+                "n={n} want {f}% got {got}%"
+            );
+        }
+    }
+
+    #[test]
+    fn random_deterministic() {
+        let a = random_csr(64, 5.0, 9);
+        let b = random_csr(64, 5.0, 9);
+        assert_eq!(a.vals, b.vals);
+        assert_eq!(a.indx, b.indx);
+    }
+
+    #[test]
+    fn banded_is_symmetric() {
+        let m = banded_spd(64, 5, 3);
+        m.validate().unwrap();
+        let d = m.to_dense();
+        for r in 0..64 {
+            for c in 0..64 {
+                assert!(
+                    (d[r * 64 + c] - d[c * 64 + r]).abs() < 1e-14,
+                    "asym at ({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn banded_is_diagonally_dominant() {
+        let n = 128;
+        let m = banded_spd(n, 31, 7);
+        let d = m.to_dense();
+        for r in 0..n {
+            let diag = d[r * n + r];
+            let off: f64 =
+                (0..n).filter(|&c| c != r).map(|c| d[r * n + c].abs()).sum();
+            assert!(diag > off, "row {r}: diag {diag} <= off {off}");
+        }
+    }
+
+    #[test]
+    fn banded_bandwidth_respected() {
+        let n = 32;
+        let bw = 3;
+        let m = banded_spd(n, bw, 1);
+        let d = m.to_dense();
+        for r in 0..n {
+            for c in 0..n {
+                if (r as i64 - c as i64).unsigned_abs() as usize > bw {
+                    assert_eq!(d[r * n + c], 0.0, "outside band at ({r},{c})");
+                }
+            }
+        }
+        // band is contiguous → spmv2's contiguity exploit applies
+        assert!(m.contiguity(2) > 0.8);
+    }
+
+    #[test]
+    fn banded_nnz_count() {
+        // interior rows have 2*bw+1 entries
+        let n = 64;
+        let bw = 2;
+        let m = banded_spd(n, bw, 1);
+        let interior = m.rowp[bw + 2] - m.rowp[bw + 1];
+        assert_eq!(interior as usize, 2 * bw + 1);
+    }
+}

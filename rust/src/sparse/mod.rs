@@ -1,0 +1,9 @@
+//! Sparse-matrix substrate: CSR storage (§3.2's 3-array variant) and the
+//! paper's workload generators (random fill for Table 1, banded SPD for
+//! Table 2).
+
+pub mod csr;
+pub mod gen;
+
+pub use csr::Csr;
+pub use gen::{banded_spd, random_csr};

@@ -1,0 +1,101 @@
+//! Small shared utilities: deterministic RNG and float comparison.
+
+/// xorshift64* — deterministic, dependency-free PRNG for workload
+/// generation and property-style tests (reproducible across runs).
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        XorShift64 { state: seed.max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// Relative-or-absolute closeness (like numpy's `allclose` for one pair).
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Assert two slices are element-wise close; panics with the first
+/// offending index.
+pub fn assert_allclose(got: &[f64], want: &[f64], rtol: f64, atol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for i in 0..got.len() {
+        assert!(
+            close(got[i], want[i], rtol, atol),
+            "{what}: mismatch at {i}: got {} want {} (rtol={rtol}, atol={atol})",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// Maximum absolute difference between two slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_uniform_range() {
+        let mut r = XorShift64::new(7);
+        let mut mean = 0.0;
+        let n = 10_000;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            mean += x;
+        }
+        mean /= n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn close_and_allclose() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!close(1.0, 1.1, 1e-9, 0.0));
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-13], 1e-9, 0.0, "t");
+    }
+}

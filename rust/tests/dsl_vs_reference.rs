@@ -1,0 +1,128 @@
+//! Cross-module integration: the DSL (“ArBB”) ports, the native
+//! (“MKL-analog”) kernels and the plain serial references must agree on
+//! realistic workloads from the paper's parameter grids.
+
+use arbb_rs::coordinator::{Context, CplxV, Options, OptLevel};
+use arbb_rs::euroben::{cg as acg, mod2am, mod2as, mod2f};
+use arbb_rs::kernels;
+use arbb_rs::solvers;
+use arbb_rs::sparse::{banded_spd, random_csr};
+use arbb_rs::util::{assert_allclose, XorShift64};
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = XorShift64::new(seed);
+    (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+}
+
+#[test]
+fn mod2am_all_versions_agree_serial_and_parallel() {
+    let n = 64;
+    let ah = rand_vec(n * n, 1);
+    let bh = rand_vec(n * n, 2);
+    let want = mod2am::reference(&ah, &bh, n);
+
+    for (label, ctx) in [
+        ("O2", Context::serial()),
+        ("O3", Context::parallel(4)),
+        ("O2-nofusion", {
+            let c = Context::serial();
+            c.set_fusion(false);
+            c
+        }),
+    ] {
+        let a = ctx.bind2(&ah, n, n);
+        let b = ctx.bind2(&bh, n, n);
+        let g1 = mod2am::arbb_mxm1(&ctx, &a, &b).to_vec();
+        let g2a = mod2am::arbb_mxm2a(&ctx, &a, &b).to_vec();
+        let g2b = mod2am::arbb_mxm2b(&ctx, &a, &b, 8).to_vec();
+        assert_allclose(&g1, &want, 1e-10, 1e-11, &format!("mxm1 {label}"));
+        assert_allclose(&g2a, &want, 1e-10, 1e-11, &format!("mxm2a {label}"));
+        assert_allclose(&g2b, &want, 1e-10, 1e-11, &format!("mxm2b {label}"));
+    }
+}
+
+#[test]
+fn mod2as_table1_small_sizes() {
+    // the first Table 1 configurations (larger ones covered in benches)
+    for &(n, fill) in &[(100usize, 3.50f64), (200, 3.75), (256, 5.0), (512, 4.0)] {
+        let m = random_csr(n, fill, n as u64);
+        let x = m.random_x(3);
+        let want = m.spmv_alloc(&x);
+        let mut opt = vec![0.0; n];
+        kernels::spmv_opt(&m, &x, &mut opt);
+        assert_allclose(&opt, &want, 1e-12, 1e-13, "mkl-analog");
+
+        let ctx = Context::parallel(2);
+        let a = mod2as::bind_csr(&ctx, &m);
+        let xv = ctx.bind1(&x);
+        let g1 = mod2as::arbb_spmv1(&ctx, &a, &xv).to_vec();
+        let g2 = mod2as::arbb_spmv2(&ctx, &a, &xv).to_vec();
+        assert_allclose(&g1, &want, 1e-12, 1e-13, "spmv1");
+        assert_allclose(&g2, &want, 1e-12, 1e-13, "spmv2");
+    }
+}
+
+#[test]
+fn mod2f_dsl_vs_all_serial_ffts() {
+    for &n in &[256usize, 1024] {
+        let re = rand_vec(n, n as u64);
+        let im = rand_vec(n, n as u64 + 1);
+        let (wre, wim) = arbb_rs::fftlib::radix4::fft(&re, &im);
+        let (pre, pim) = kernels::fft_planned(&re, &im);
+        assert_allclose(&pre, &wre, 1e-9, 1e-9, "planned vs radix4 re");
+        assert_allclose(&pim, &wim, 1e-9, 1e-9, "planned vs radix4 im");
+
+        let ctx = Context::serial();
+        let plan = mod2f::plan(&ctx, n);
+        let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+        let out = mod2f::arbb_fft(&ctx, &plan, &data);
+        assert_allclose(&out.re.to_vec(), &wre, 1e-9, 1e-9, "dsl fft re");
+        assert_allclose(&out.im.to_vec(), &wim, 1e-9, 1e-9, "dsl fft im");
+    }
+}
+
+#[test]
+fn cg_configs_subset_agree() {
+    // Table 2 configs 1, 2, 5 (small enough for a quick integration run)
+    for &(n, bw) in &[(128usize, 3usize), (128, 31), (256, 31)] {
+        let m = banded_spd(n, bw, (n + bw) as u64);
+        let b = rand_vec(n, 13);
+        let native = solvers::cg_serial(&m, &b, 1e-16, 4 * n);
+        let mkl = solvers::cg_mkl(&m, &b, 1e-16, 4 * n);
+        assert_eq!(native.iterations, mkl.iterations);
+
+        let ctx = Context::serial();
+        let a = mod2as::bind_csr(&ctx, &m);
+        let dsl =
+            acg::arbb_cg(&ctx, &a, &b, 1e-16, 4 * n, acg::SpmvVariant::V2);
+        assert!(dsl.converged);
+        assert_allclose(&dsl.x, &native.x, 1e-8, 1e-10, &format!("cg x n={n} bw={bw}"));
+    }
+}
+
+#[test]
+fn engines_equivalent_on_long_program() {
+    // a longer mixed program: normalize columns then do a rank-2 update
+    let n = 48;
+    let run = |opts: Options| {
+        let ctx = Context::with_options(opts);
+        let a = ctx.bind2(&rand_vec(n * n, 77), n, n);
+        let v = ctx.bind1(&rand_vec(n, 78));
+        let col_sums = a.add_reduce_cols();
+        let total = col_sums.add_reduce();
+        let scaled = &a * &(&ctx.scalar(1.0) / &total);
+        let r1 = v.repeat_col(n) * &v.repeat_row(n);
+        let out = &scaled + &r1;
+        out.to_vec()
+    };
+    let serial = run(Options { opt_level: OptLevel::O2, ..Default::default() });
+    let par = run(Options {
+        opt_level: OptLevel::O3,
+        num_workers: 3,
+        grain: 128,
+        ..Default::default()
+    });
+    let nofuse = run(Options { fusion: false, ..Default::default() });
+    assert_allclose(&par, &serial, 1e-13, 1e-14, "parallel");
+    assert_allclose(&nofuse, &serial, 1e-13, 1e-14, "nofusion");
+}

@@ -1,0 +1,201 @@
+//! Adversarial edge cases and failure injection for the DSL runtime.
+
+use arbb_rs::coordinator::{Context, Options, OptLevel};
+use arbb_rs::sparse::Csr;
+use arbb_rs::util::assert_allclose;
+
+#[test]
+fn empty_and_single_element_containers() {
+    let ctx = Context::new();
+    let a = ctx.bind1(&[42.0]);
+    assert_eq!((&a + &a).to_vec(), vec![84.0]);
+    assert_eq!(a.add_reduce().value(), 42.0);
+    let e = ctx.zeros1(0);
+    assert_eq!(e.to_vec(), Vec::<f64>::new());
+    assert_eq!(e.add_reduce().value(), 0.0);
+}
+
+#[test]
+fn reduce_identities() {
+    let ctx = Context::new();
+    let e = ctx.zeros1(0);
+    assert_eq!(e.max_reduce().value(), f64::NEG_INFINITY);
+    assert_eq!(e.min_reduce().value(), f64::INFINITY);
+}
+
+#[test]
+fn nan_and_inf_propagate() {
+    let ctx = Context::new();
+    let a = ctx.bind1(&[1.0, f64::NAN, f64::INFINITY]);
+    let out = (&a * &a).to_vec();
+    assert_eq!(out[0], 1.0);
+    assert!(out[1].is_nan());
+    assert_eq!(out[2], f64::INFINITY);
+}
+
+#[test]
+fn repeated_force_is_idempotent() {
+    let ctx = Context::new();
+    let a = ctx.bind1(&[1.0, 2.0]);
+    let c = &a + &a;
+    let v1 = c.to_vec();
+    let v2 = c.to_vec();
+    let v3 = c.to_vec();
+    assert_eq!(v1, v2);
+    assert_eq!(v2, v3);
+    // exactly one force did work
+    assert_eq!(ctx.stats(|s| s.forces), 1);
+}
+
+#[test]
+fn diamond_sharing_evaluates_once_per_force() {
+    let ctx = Context::new();
+    let a = ctx.bind1(&vec![1.5; 1000]);
+    let t = &a * &a; // shared
+    let l = &t + &a;
+    let r = &t - &a;
+    let out = &l * &r;
+    let got = out.to_vec();
+    let want: Vec<f64> =
+        (0..1000).map(|_| (2.25 + 1.5) * (2.25 - 1.5)).collect();
+    assert_allclose(&got, &want, 1e-14, 1e-15, "diamond");
+}
+
+#[test]
+fn deep_unforced_chain_survives() {
+    // 50k chained updates without a single force: planner must split by
+    // the fusion cap without blowing the stack, and drop cleanly.
+    let ctx = Context::new();
+    let x = ctx.bind1(&vec![0.001; 64]);
+    let mut c = ctx.zeros1(64);
+    for _ in 0..50_000 {
+        c = &c + &x;
+    }
+    let got = c.to_vec();
+    for v in got {
+        assert!((v - 50.0).abs() < 1e-9, "{v}");
+    }
+}
+
+#[test]
+fn mixed_views_of_same_buffer() {
+    let ctx = Context::new();
+    let m = ctx.bind2(&(0..36).map(|x| x as f64).collect::<Vec<_>>(), 6, 6);
+    // row + col of the same matrix combined
+    let s = (&m.row(2) + &m.col(3)).to_vec();
+    let want: Vec<f64> = (0..6).map(|k| (12 + k) as f64 + (k * 6 + 3) as f64).collect();
+    assert_eq!(s, want);
+    // overlapping sections
+    let v = ctx.bind1(&(0..10).map(|x| x as f64).collect::<Vec<_>>());
+    let s1 = v.section(0, 8);
+    let s2 = v.section(2, 8);
+    assert_eq!((&s1 + &s2).to_vec(), vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0]);
+}
+
+#[test]
+fn donation_does_not_corrupt_shared_data() {
+    // two consumers of the same materialised intermediate: donation must
+    // refuse (Arc shared) and both reads stay correct.
+    let ctx = Context::new();
+    let a = ctx.bind1(&[1.0, 2.0, 3.0]);
+    let base = (&a + &a).clone();
+    base.eval(); // materialise
+    let c1 = &base + &a; // candidate for donation of base
+    let c2 = &base - &a; // second consumer
+    let v1 = c1.to_vec();
+    let v2 = c2.to_vec();
+    assert_eq!(v1, vec![3.0, 6.0, 9.0]);
+    assert_eq!(v2, vec![1.0, 2.0, 3.0]);
+    assert_eq!(base.to_vec(), vec![2.0, 4.0, 6.0]);
+}
+
+#[test]
+#[should_panic(expected = "equal shape")]
+fn shape_mismatch_panics() {
+    let ctx = Context::new();
+    let a = ctx.bind1(&[1.0, 2.0]);
+    let b = ctx.bind1(&[1.0, 2.0, 3.0]);
+    let _ = (&a + &b).to_vec();
+}
+
+#[test]
+#[should_panic(expected = "section out of range")]
+fn section_bounds_checked() {
+    let ctx = Context::new();
+    let a = ctx.bind1(&[1.0, 2.0, 3.0]);
+    let _ = a.section(2, 5);
+}
+
+#[test]
+fn csr_degenerate_matrices() {
+    // all-zero matrix
+    let z = Csr::from_dense(&[0.0; 9], 3, 3);
+    z.validate().unwrap();
+    assert_eq!(z.spmv_alloc(&[1.0, 2.0, 3.0]), vec![0.0; 3]);
+    // 1x1
+    let one = Csr::from_dense(&[5.0], 1, 1);
+    assert_eq!(one.spmv_alloc(&[2.0]), vec![10.0]);
+}
+
+#[test]
+fn runtime_missing_artifacts_is_clean_error() {
+    let err = arbb_rs::runtime::XlaRuntime::open("/nonexistent/dir");
+    assert!(err.is_err());
+    let msg = format!("{}", err.err().unwrap());
+    assert!(msg.contains("make artifacts"), "actionable message: {msg}");
+}
+
+#[test]
+fn manifest_rejects_malformed_rows() {
+    use arbb_rs::runtime::Manifest;
+    assert!(Manifest::parse("name_only").is_err());
+    assert!(Manifest::parse("a\tb\tc\td").is_err());
+    // unknown artifact lookup is None, not a panic
+    let m = Manifest::parse("x\tx.hlo\tmxm\tn=4\t4x4;4x4\t4x4\n").unwrap();
+    assert!(m.get("nope").is_none());
+}
+
+#[test]
+fn many_contexts_coexist() {
+    // contexts are independent: options on one don't leak to another
+    let a = Context::with_options(Options { fusion: false, ..Default::default() });
+    let b = Context::with_options(Options {
+        opt_level: OptLevel::O3,
+        num_workers: 2,
+        ..Default::default()
+    });
+    let xs = vec![1.0; 100];
+    let va = a.bind1(&xs);
+    let vb = b.bind1(&xs);
+    assert_eq!((&va + &va).to_vec(), (&vb + &vb).to_vec());
+    assert!(!a.options().fusion);
+    assert!(b.options().fusion);
+}
+
+#[test]
+fn scalar_chain_through_control_flow() {
+    // data-dependent loop bound (the _while pattern): terminates by value
+    let ctx = Context::new();
+    let mut s = ctx.scalar(1.0);
+    let mut iters = 0;
+    while s.value() < 100.0 {
+        s = &s * 2.0;
+        iters += 1;
+        assert!(iters < 64, "runaway loop");
+    }
+    assert_eq!(s.value(), 128.0);
+    assert_eq!(iters, 7);
+}
+
+#[test]
+fn gather_full_permutation_roundtrip() {
+    let ctx = Context::new();
+    let n = 257; // non-power-of-two
+    let data: Vec<f64> = (0..n).map(|x| (x * x) as f64).collect();
+    let perm: Vec<i64> = (0..n as i64).rev().collect();
+    let v = ctx.bind1(&data);
+    let p = ctx.bind_i64(&perm);
+    let g = v.gather(&p);
+    let back = g.gather(&p); // reverse twice = identity
+    assert_eq!(back.to_vec(), data);
+}

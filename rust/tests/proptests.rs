@@ -1,0 +1,281 @@
+//! Property-based tests: randomly generated DSL programs executed against
+//! a straightforward host-side interpreter, across engine configurations.
+//!
+//! (The offline crate set has no proptest; this is a compact in-house
+//! generator — deterministic seeds, shrink-free but wide. Invariants
+//! covered: engine equivalence (O2 = O3 = no-fusion = CSE), fusion
+//! soundness across virtual views, in-place donation correctness, CSR
+//! structure preservation, FFT linearity.)
+
+use arbb_rs::coordinator::{Context, Options, OptLevel, Vec1};
+use arbb_rs::sparse::random_csr;
+use arbb_rs::util::{assert_allclose, XorShift64};
+
+/// Host-side mirror of a generated program.
+#[derive(Clone, Debug)]
+enum ProgOp {
+    Add(usize, usize),
+    Sub(usize, usize),
+    Mul(usize, usize),
+    Scale(usize, f64),
+    Sqrt(usize),
+    SectionHalf(usize),
+    RepeatTwice(usize),
+    CatSelf(usize),
+    DotBroadcast(usize, usize), // v * (x·y as scalar)
+}
+
+struct Generated {
+    inputs: Vec<Vec<f64>>,
+    ops: Vec<ProgOp>,
+}
+
+fn gen_program(rng: &mut XorShift64, n_inputs: usize, len: usize, width: usize) -> Generated {
+    let inputs: Vec<Vec<f64>> = (0..n_inputs)
+        .map(|i| {
+            (0..width)
+                .map(|_| {
+                    let v = rng.range_f64(0.1, 2.0); // positive: sqrt-safe
+                    let _ = i;
+                    v
+                })
+                .collect()
+        })
+        .collect();
+    let mut ops = Vec::new();
+    let mut sizes: Vec<usize> = vec![width; n_inputs]; // value sizes
+    for _ in 0..len {
+        // pick operands among equal-sized values
+        let k = sizes.len();
+        let a = rng.below(k);
+        let choice = rng.below(9);
+        let op = match choice {
+            0 | 1 => {
+                // binary needs same-size partner
+                let partners: Vec<usize> =
+                    (0..k).filter(|&j| sizes[j] == sizes[a]).collect();
+                let b = partners[rng.below(partners.len())];
+                match choice {
+                    0 => ProgOp::Add(a, b),
+                    _ => ProgOp::Mul(a, b),
+                }
+            }
+            2 => {
+                let partners: Vec<usize> =
+                    (0..k).filter(|&j| sizes[j] == sizes[a]).collect();
+                let b = partners[rng.below(partners.len())];
+                ProgOp::Sub(a, b)
+            }
+            3 => ProgOp::Scale(a, rng.range_f64(0.5, 1.5)),
+            4 => ProgOp::Sqrt(a),
+            5 if sizes[a] >= 2 && sizes[a] % 2 == 0 => ProgOp::SectionHalf(a),
+            6 => ProgOp::RepeatTwice(a),
+            7 => ProgOp::CatSelf(a),
+            _ => {
+                let partners: Vec<usize> =
+                    (0..k).filter(|&j| sizes[j] == sizes[a]).collect();
+                let b = partners[rng.below(partners.len())];
+                ProgOp::DotBroadcast(a, b)
+            }
+        };
+        let out_size = match &op {
+            ProgOp::SectionHalf(x) => sizes[*x] / 2,
+            ProgOp::RepeatTwice(x) | ProgOp::CatSelf(x) => sizes[*x] * 2,
+            ProgOp::Add(x, _)
+            | ProgOp::Sub(x, _)
+            | ProgOp::Mul(x, _)
+            | ProgOp::Scale(x, _)
+            | ProgOp::Sqrt(x)
+            | ProgOp::DotBroadcast(x, _) => sizes[*x],
+        };
+        if out_size == 0 || out_size > 1 << 14 {
+            continue;
+        }
+        sizes.push(out_size);
+        ops.push(op);
+    }
+    Generated { inputs, ops }
+}
+
+/// Host interpreter.
+fn eval_host(g: &Generated) -> Vec<f64> {
+    let mut vals: Vec<Vec<f64>> = g.inputs.clone();
+    for op in &g.ops {
+        let out = match op {
+            ProgOp::Add(a, b) => {
+                vals[*a].iter().zip(&vals[*b]).map(|(x, y)| x + y).collect()
+            }
+            ProgOp::Sub(a, b) => {
+                vals[*a].iter().zip(&vals[*b]).map(|(x, y)| x - y).collect()
+            }
+            ProgOp::Mul(a, b) => {
+                vals[*a].iter().zip(&vals[*b]).map(|(x, y)| x * y).collect()
+            }
+            ProgOp::Scale(a, s) => vals[*a].iter().map(|x| x * s).collect(),
+            ProgOp::Sqrt(a) => vals[*a].iter().map(|x| x.abs().sqrt()).collect(),
+            ProgOp::SectionHalf(a) => vals[*a][..vals[*a].len() / 2].to_vec(),
+            ProgOp::RepeatTwice(a) => {
+                let mut v = vals[*a].clone();
+                v.extend_from_slice(&vals[*a]);
+                v
+            }
+            ProgOp::CatSelf(a) => {
+                let mut v = vals[*a].clone();
+                v.extend_from_slice(&vals[*a]);
+                v
+            }
+            ProgOp::DotBroadcast(a, b) => {
+                let s: f64 = vals[*a].iter().zip(&vals[*b]).map(|(x, y)| x * y).sum();
+                vals[*a].iter().map(|x| x * s).collect()
+            }
+        };
+        vals.push(out);
+    }
+    vals.pop().unwrap_or_default()
+}
+
+/// DSL evaluation under a configuration.
+fn eval_dsl(g: &Generated, opts: Options) -> Vec<f64> {
+    let ctx = Context::with_options(opts);
+    let mut vals: Vec<Vec1> = g.inputs.iter().map(|v| ctx.bind1(v)).collect();
+    for op in &g.ops {
+        let out = match op {
+            ProgOp::Add(a, b) => &vals[*a] + &vals[*b],
+            ProgOp::Sub(a, b) => &vals[*a] - &vals[*b],
+            ProgOp::Mul(a, b) => &vals[*a] * &vals[*b],
+            ProgOp::Scale(a, s) => vals[*a].scale(*s),
+            ProgOp::Sqrt(a) => vals[*a].abs().sqrt(),
+            ProgOp::SectionHalf(a) => vals[*a].section(0, vals[*a].len() / 2),
+            ProgOp::RepeatTwice(a) => vals[*a].repeat(2),
+            ProgOp::CatSelf(a) => vals[*a].cat(&vals[*a]),
+            ProgOp::DotBroadcast(a, b) => {
+                let s = vals[*a].dot(&vals[*b]);
+                &vals[*a] * &s
+            }
+        };
+        vals.push(out);
+    }
+    vals.last().unwrap().to_vec()
+}
+
+#[test]
+fn engines_agree_on_random_programs() {
+    let mut rng = XorShift64::new(0xA11CE);
+    for case in 0..60 {
+        let n_inputs = 1 + rng.below(3);
+        let len = 1 + rng.below(12);
+        let width = [4usize, 16, 64, 130][rng.below(4)];
+        let g = gen_program(&mut rng, n_inputs, len, width);
+        let want = eval_host(&g);
+        let configs = [
+            Options { opt_level: OptLevel::O2, ..Default::default() },
+            Options { opt_level: OptLevel::O3, num_workers: 3, grain: 16, ..Default::default() },
+            Options { fusion: false, ..Default::default() },
+            Options { in_place: false, ..Default::default() },
+            Options { cse: true, ..Default::default() },
+            Options { record: true, ..Default::default() },
+        ];
+        for (ci, opts) in configs.iter().enumerate() {
+            let got = eval_dsl(&g, *opts);
+            assert_allclose(
+                &got,
+                &want,
+                1e-11,
+                1e-12,
+                &format!("case {case} config {ci} ops={:?}", g.ops),
+            );
+        }
+    }
+}
+
+#[test]
+fn inputs_survive_reuse_after_force() {
+    // reading a derived value must not corrupt (donate away) an input
+    // that is still referenced by a user handle.
+    let ctx = Context::new();
+    let host = vec![1.0, 2.0, 3.0, 4.0];
+    let a = ctx.bind1(&host);
+    let b = (&a + &a).to_vec();
+    assert_eq!(b, vec![2.0, 4.0, 6.0, 8.0]);
+    // `a` must still be intact and reusable
+    let c = (&a.scale(10.0)).to_vec();
+    assert_eq!(c, vec![10.0, 20.0, 30.0, 40.0]);
+    assert_eq!(a.to_vec(), host);
+}
+
+#[test]
+fn accumulation_chain_randomized() {
+    // c = c + x_k repeatedly, random chain lengths and force points; the
+    // in-place donation path must stay correct under every interleaving.
+    let mut rng = XorShift64::new(0xACC);
+    for _case in 0..30 {
+        let n = 32 + rng.below(64);
+        let steps = 1 + rng.below(40);
+        let ctx = Context::new();
+        let mut want = vec![0.0f64; n];
+        let mut c = ctx.zeros1(n);
+        for _s in 0..steps {
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            for i in 0..n {
+                want[i] += x[i];
+            }
+            c = &c + &ctx.bind1(&x);
+            if rng.below(3) == 0 {
+                c.eval(); // random force points
+            }
+        }
+        assert_allclose(&c.to_vec(), &want, 1e-12, 1e-13, "acc chain");
+    }
+}
+
+#[test]
+fn csr_structure_invariants_random() {
+    let mut rng = XorShift64::new(0xC52);
+    for _ in 0..40 {
+        let n = 1 + rng.below(300);
+        let fill = rng.range_f64(0.5, 20.0);
+        let m = random_csr(n, fill, rng.next_u64());
+        m.validate().expect("CSR invariants");
+        // spmv against dense reference
+        let x = m.random_x(rng.next_u64());
+        let d = m.to_dense();
+        let mut want = vec![0.0; n];
+        for r in 0..n {
+            for c in 0..n {
+                want[r] += d[r * n + c] * x[c];
+            }
+        }
+        assert_allclose(&m.spmv_alloc(&x), &want, 1e-11, 1e-12, "spmv dense");
+    }
+}
+
+#[test]
+fn fft_linearity_property() {
+    // FFT(a·x + y) = a·FFT(x) + FFT(y) for all implementations
+    let mut rng = XorShift64::new(0xFF7);
+    for _ in 0..10 {
+        let n = 1usize << (3 + rng.below(6));
+        let alpha = rng.range_f64(-2.0, 2.0);
+        let xre: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let xim: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let yre: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let yim: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let zre: Vec<f64> = (0..n).map(|i| alpha * xre[i] + yre[i]).collect();
+        let zim: Vec<f64> = (0..n).map(|i| alpha * xim[i] + yim[i]).collect();
+        for f in [
+            arbb_rs::fftlib::radix2::fft,
+            arbb_rs::fftlib::radix4::fft,
+            arbb_rs::fftlib::splitstream::fft,
+        ] {
+            let (fx_re, fx_im) = f(&xre, &xim);
+            let (fy_re, fy_im) = f(&yre, &yim);
+            let (fz_re, fz_im) = f(&zre, &zim);
+            let want_re: Vec<f64> =
+                (0..n).map(|i| alpha * fx_re[i] + fy_re[i]).collect();
+            let want_im: Vec<f64> =
+                (0..n).map(|i| alpha * fx_im[i] + fy_im[i]).collect();
+            assert_allclose(&fz_re, &want_re, 1e-9, 1e-9, "linearity re");
+            assert_allclose(&fz_im, &want_im, 1e-9, 1e-9, "linearity im");
+        }
+    }
+}

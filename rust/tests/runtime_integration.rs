@@ -1,0 +1,134 @@
+//! Integration: AOT artifacts (JAX/Pallas → HLO text) executed through
+//! the PJRT runtime must agree with the native rust implementations.
+//!
+//! Requires `make artifacts` (skips with a message when absent, so
+//! `cargo test` stays green on a fresh checkout).
+
+use arbb_rs::fftlib::splitstream::tangle_indices;
+use arbb_rs::runtime::{Input, XlaRuntime};
+use arbb_rs::sparse::{banded_spd, random_csr};
+use arbb_rs::util::{assert_allclose, XorShift64};
+
+fn runtime() -> Option<XlaRuntime> {
+    match XlaRuntime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime integration ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// CSR → padded ELL, mirroring python/compile/kernels/spmv.py.
+fn csr_to_ell(m: &arbb_rs::sparse::Csr, k_pad: usize) -> (Vec<f64>, Vec<i32>) {
+    let n = m.nrows;
+    let mut vals = vec![0.0; n * k_pad];
+    let mut cols = vec![0i32; n * k_pad];
+    for r in 0..n {
+        let (s, e) = (m.rowp[r] as usize, m.rowp[r + 1] as usize);
+        assert!(e - s <= k_pad, "row {r} wider than pad {k_pad}");
+        for (slot, k) in (s..e).enumerate() {
+            vals[r * k_pad + slot] = m.vals[k];
+            cols[r * k_pad + slot] = m.indx[k] as i32;
+        }
+    }
+    (vals, cols)
+}
+
+#[test]
+fn mxm_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for n in [128usize, 256] {
+        let name = format!("mxm_n{n}");
+        let loaded = rt.load(&name).expect("load mxm");
+        let mut rng = XorShift64::new(n as u64);
+        let a: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let b: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let out = loaded
+            .run_f64(&[(&a, &[n, n]), (&b, &[n, n])])
+            .expect("execute mxm");
+        let mut want = vec![0.0; n * n];
+        arbb_rs::kernels::dgemm(n, n, n, &a, &b, &mut want);
+        assert_allclose(&out[0], &want, 1e-10, 1e-11, &name);
+    }
+}
+
+#[test]
+fn spmv_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let loaded = rt.load("spmv_n512_k32").expect("load spmv");
+    let n = loaded.artifact.param_usize("n").unwrap();
+    let k = loaded.artifact.param_usize("k").unwrap();
+    // random matrix with rows that fit the pad
+    let m = random_csr(n, 100.0 * (k as f64 / 2.0) / n as f64, 42);
+    let (vals, cols) = csr_to_ell(&m, k);
+    let x = m.random_x(7);
+    let out = loaded
+        .run(&[
+            Input::F64(&vals, &[n, k]),
+            Input::I32(&cols, &[n, k]),
+            Input::F64(&x, &[n]),
+        ])
+        .expect("execute spmv");
+    let want = m.spmv_alloc(&x);
+    assert_allclose(&out[0], &want, 1e-11, 1e-12, "spmv artifact");
+}
+
+#[test]
+fn fft_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for n in [256usize, 1024] {
+        let name = format!("fft_n{n}");
+        let loaded = rt.load(&name).expect("load fft");
+        let mut rng = XorShift64::new(n as u64);
+        let re: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let im: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        // tangle on the host (the artifact expects bit-reversed input)
+        let idx = tangle_indices(n);
+        let tre: Vec<f64> = idx.iter().map(|&i| re[i]).collect();
+        let tim: Vec<f64> = idx.iter().map(|&i| im[i]).collect();
+        let out = loaded
+            .run_f64(&[(&tre, &[n]), (&tim, &[n])])
+            .expect("execute fft");
+        let (wre, wim) = arbb_rs::fftlib::radix2::fft(&re, &im);
+        assert_allclose(&out[0], &wre, 1e-9, 1e-9, &format!("{name} re"));
+        assert_allclose(&out[1], &wim, 1e-9, 1e-9, &format!("{name} im"));
+    }
+}
+
+#[test]
+fn cg_artifact_reduces_residual() {
+    let Some(rt) = runtime() else { return };
+    let loaded = rt.load("cg_n256_k16_i20").expect("load cg");
+    let n = loaded.artifact.param_usize("n").unwrap();
+    let k = loaded.artifact.param_usize("k").unwrap();
+    // banded SPD with bandwidth fitting the pad: 2*bw+1 <= k
+    let bw = (k - 1) / 2;
+    let m = banded_spd(n, bw, 9);
+    let (vals, cols) = csr_to_ell(&m, k);
+    let mut rng = XorShift64::new(5);
+    let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let out = loaded
+        .run(&[
+            Input::F64(&vals, &[n, k]),
+            Input::I32(&cols, &[n, k]),
+            Input::F64(&b, &[n]),
+        ])
+        .expect("execute cg");
+    let x = &out[0];
+    let r2 = out[1][0];
+    // after 20 iterations on a well-conditioned system, the residual is tiny
+    assert!(r2 < 1e-12, "r2 = {r2}");
+    let resid = arbb_rs::solvers::residual_norm(&m, x, &b);
+    assert!(resid < 1e-6, "|Ax-b| = {resid}");
+}
+
+#[test]
+fn manifest_lists_all_kinds() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest();
+    for kind in ["mxm", "spmv", "fft", "cg"] {
+        assert!(!m.of_kind(kind).is_empty(), "missing artifact kind {kind}");
+    }
+    assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+}

@@ -1,0 +1,101 @@
+//! Integration tests of the virtual-time scaling simulator against the
+//! paper's qualitative claims (the *shape* expectations of DESIGN.md §4).
+
+use arbb_rs::coordinator::{Context, MachineModel, Options};
+use arbb_rs::euroben::{mod2am, mod2as};
+use arbb_rs::util::XorShift64;
+
+fn recording_ctx() -> Context {
+    Context::with_options(Options { record: true, grain: 1024, ..Default::default() })
+}
+
+fn model() -> MachineModel {
+    MachineModel::default()
+}
+
+#[test]
+fn mxm2b_scales_then_flattens() {
+    let n = 256;
+    let mut rng = XorShift64::new(1);
+    let ah: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let bh: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let ctx = recording_ctx();
+    let a = ctx.bind2(&ah, n, n);
+    let b = ctx.bind2(&bh, n, n);
+    let _ = mod2am::arbb_mxm2b(&ctx, &a, &b, 8).to_vec();
+    let (recs, forces) = ctx.take_records();
+    assert!(!recs.is_empty());
+    let m = model();
+    let t1 = m.simulate(&recs, forces, 1).total_secs;
+    let t8 = m.simulate(&recs, forces, 8).total_secs;
+    let t40 = m.simulate(&recs, forces, 40).total_secs;
+    // some speedup at 8 threads…
+    assert!(t1 / t8 > 1.5, "speedup(8) = {}", t1 / t8);
+    // …but nowhere near linear at 40 (rank-1 updates are BW-bound —
+    // the paper sees scaling stop around 15 threads, Fig 1c)
+    assert!(t1 / t40 < 30.0, "speedup(40) = {}", t1 / t40);
+    // and 40 threads not slower than 8 by much (plateau, not cliff)
+    assert!(t40 < t8 * 2.0);
+}
+
+#[test]
+fn mxm0_never_parallelises() {
+    let n = 24; // tiny: mxm0 is per-element dispatches
+    let mut rng = XorShift64::new(2);
+    let ah: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let bh: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let ctx = recording_ctx();
+    let a = ctx.bind2(&ah, n, n);
+    let b = ctx.bind2(&bh, n, n);
+    let _ = mod2am::arbb_mxm0(&ctx, &a, &b).to_vec();
+    let (recs, forces) = ctx.take_records();
+    // every step of mxm0 is sub-grain → serial
+    assert!(recs.iter().all(|r| !r.parallelizable || r.chunk_secs.len() <= 1));
+    let m = model();
+    let t1 = m.simulate(&recs, forces, 1).total_secs;
+    let t40 = m.simulate(&recs, forces, 40).total_secs;
+    assert!((t1 - t40).abs() / t1 < 1e-9, "mxm0 must not scale: {t1} vs {t40}");
+}
+
+#[test]
+fn spmv_scaling_stops_at_bandwidth_roof() {
+    let n = 4096;
+    let m = arbb_rs::sparse::random_csr(n, 4.5, 7);
+    let ctx = recording_ctx();
+    let a = mod2as::bind_csr(&ctx, &m);
+    let x = m.random_x(3);
+    let xv = ctx.bind1(&x);
+    let _ = mod2as::arbb_spmv2(&ctx, &a, &xv).to_vec();
+    let (recs, forces) = ctx.take_records();
+    let mm = model();
+    let t1 = mm.simulate(&recs, forces, 1).total_secs;
+    let t30 = mm.simulate(&recs, forces, 30).total_secs;
+    let t40 = mm.simulate(&recs, forces, 40).total_secs;
+    // spmv is memory-bound: speedup well below linear at 30–40 threads
+    let s30 = t1 / t30;
+    let s40 = t1 / t40;
+    assert!(s30 < 30.0, "spmv speedup(30)={s30}");
+    // beyond the roof extra threads add barrier cost, not speed
+    assert!(s40 <= s30 * 1.25, "s30={s30} s40={s40}");
+}
+
+#[test]
+fn dispatch_dominates_tiny_work() {
+    // CG with bw=3 at n=128 (conf 1): dispatch overhead per iteration
+    // exceeds the vector work — ArBB slower than serial (Fig 7a).
+    let mm = model();
+    // 100 forces of ~1 µs of work each
+    let recs: Vec<arbb_rs::coordinator::StepRecord> = (0..100)
+        .map(|_| arbb_rs::coordinator::StepRecord {
+            kind: "fused",
+            elems: 128,
+            flops: 256.0,
+            bytes: 2048.0,
+            chunk_secs: vec![1e-6],
+            parallelizable: false,
+        })
+        .collect();
+    let t = mm.simulate(&recs, 100, 1).total_secs;
+    let work: f64 = 100.0 * 1e-6;
+    assert!(t > 2.0 * work, "dispatch should dominate: t={t} work={work}");
+}
