@@ -1,0 +1,221 @@
+//! Serving throughput: per-dispatch re-capture vs the `serve` subsystem
+//! (plan cache + persistent shared pool + request batching).
+//!
+//! The per-dispatch baseline is what the interactive DSL path does for
+//! every request — rebuild the expression DAG, re-analyse, re-plan,
+//! execute — which is also exactly what ArBB charges for a closure's
+//! *first* call. The serving path pays that once per (kernel, shape)
+//! and thereafter only replays the compiled plan, with same-plan
+//! requests coalesced into one fork-join sweep on the shared pool.
+//!
+//! Acceptance target (ISSUE 1): batching + persistent pool sustains
+//! ≥ 2× the requests/sec of the per-dispatch baseline.
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput            # quick (~10 s)
+//! cargo bench --bench serve_throughput -- --secs 3
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use arbb_rs::bench::Series;
+use arbb_rs::coordinator::{Context, Mat2, Vec1};
+use arbb_rs::serve::{Arg, ServeConfig, Server, Value};
+use arbb_rs::util::XorShift64;
+
+const TRIAD_N: usize = 4096;
+const MXM_N: usize = 32;
+const CLIENTS: usize = 8;
+
+/// Kernel bodies shared between the baseline (rebuilt per request) and
+/// the server (captured once per shape).
+fn triad_expr(x: &Vec1, y: &Vec1) -> Vec1 {
+    &x.scale(3.0) + &y.sqrt()
+}
+
+fn mxm_expr(a: &Mat2, b: &Mat2) -> Mat2 {
+    let n = a.rows();
+    let mut c = a.col(0).repeat_col(n) * &b.row(0).repeat_row(n);
+    for i in 1..n {
+        c = c + (a.col(i).repeat_col(n) * &b.row(i).repeat_row(n));
+    }
+    c
+}
+
+fn parse_secs() -> f64 {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut secs = 1.0;
+    for i in 0..argv.len() {
+        if argv[i] == "--secs" {
+            if let Some(v) = argv.get(i + 1).and_then(|s| s.parse().ok()) {
+                secs = v;
+            }
+        }
+    }
+    secs
+}
+
+/// Run per-thread bodies from CLIENTS threads for `secs`; returns total
+/// completed requests per second. `make(t)` builds thread `t`'s body on
+/// the main thread (clients are `Send` but not `Sync` — each thread
+/// gets its own handle).
+fn hammer<F>(secs: f64, make: impl Fn(usize) -> F) -> f64
+where
+    F: FnMut(u64) + Send,
+{
+    let done = AtomicU64::new(0);
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let mut body = make(t);
+            let done = &done;
+            scope.spawn(move || {
+                let mut i = 0u64;
+                while start.elapsed().as_secs_f64() < secs {
+                    body(i);
+                    i += 1;
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    done.load(Ordering::Relaxed) as f64 / start.elapsed().as_secs_f64()
+}
+
+fn triad_inputs(seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift64::new(seed + 1);
+    let x: Vec<f64> = (0..TRIAD_N).map(|_| rng.range_f64(0.1, 1.0)).collect();
+    let y: Vec<f64> = (0..TRIAD_N).map(|_| rng.range_f64(0.1, 1.0)).collect();
+    (x, y)
+}
+
+fn mxm_inputs(seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift64::new(seed + 9);
+    let a: Vec<f64> = (0..MXM_N * MXM_N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let b: Vec<f64> = (0..MXM_N * MXM_N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    (a, b)
+}
+
+fn serve_config(workers: usize, max_batch: usize) -> ServeConfig {
+    ServeConfig { workers, max_batch, queue_capacity: 256, ..ServeConfig::default() }
+}
+
+fn start_server(cfg: ServeConfig) -> Server {
+    Server::builder(cfg)
+        .kernel("triad", |_ctx, p| Value::Vec(triad_expr(&p[0].vec1(), &p[1].vec1())))
+        .kernel("mxm", |_ctx, p| Value::Mat(mxm_expr(&p[0].mat2(), &p[1].mat2())))
+        .start()
+}
+
+fn main() {
+    let secs = parse_secs();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8);
+    println!("# serve_throughput — {CLIENTS} client threads, {secs:.1}s per config");
+    println!("  per-dispatch baseline: fresh capture+plan per request (the interactive path)\n");
+
+    let mut triad_series = Series::new("triad req/s");
+    let mut mxm_series = Series::new("mxm req/s");
+    let mut labels: Vec<&str> = Vec::new();
+
+    // ---- 1. per-dispatch baseline: one serial Context per client,
+    //         DAG rebuilt and re-planned for every request ----
+    let base_triad = hammer(secs, |t| {
+        move |i: u64| {
+            let ctx = Context::new();
+            let (x, y) = triad_inputs((t as u64) << 32 | i % 4);
+            let xv = ctx.bind1(&x);
+            let yv = ctx.bind1(&y);
+            std::hint::black_box(triad_expr(&xv, &yv).to_vec());
+        }
+    });
+    let base_mxm = hammer(secs, |t| {
+        move |i: u64| {
+            let ctx = Context::new();
+            let (a, b) = mxm_inputs((t as u64) << 32 | i % 4);
+            let am = ctx.bind2(&a, MXM_N, MXM_N);
+            let bm = ctx.bind2(&b, MXM_N, MXM_N);
+            std::hint::black_box(mxm_expr(&am, &bm).to_vec());
+        }
+    });
+    labels.push("per-dispatch");
+    triad_series.push(1.0, base_triad);
+    mxm_series.push(1.0, base_mxm);
+    println!("  [1/3] per-dispatch baseline: triad {base_triad:>10.0} req/s   mxm {base_mxm:>8.0} req/s");
+
+    // ---- 2. serve, single worker, no batching: isolates the plan
+    //         cache win ----
+    let (cached_triad, cached_mxm) = {
+        let server = start_server(serve_config(1, 1));
+        let t = hammer(secs, |tid| {
+            let client = server.client();
+            move |i: u64| {
+                let (x, y) = triad_inputs((tid as u64) << 32 | i % 4);
+                std::hint::black_box(client.call("triad", vec![Arg::vec(x), Arg::vec(y)]).unwrap());
+            }
+        });
+        let m = hammer(secs, |tid| {
+            let client = server.client();
+            move |i: u64| {
+                let (a, b) = mxm_inputs((tid as u64) << 32 | i % 4);
+                std::hint::black_box(
+                    client
+                        .call("mxm", vec![Arg::mat(a, MXM_N, MXM_N), Arg::mat(b, MXM_N, MXM_N)])
+                        .unwrap(),
+                );
+            }
+        });
+        (t, m)
+    };
+    labels.push("plan-cache");
+    triad_series.push(2.0, cached_triad);
+    mxm_series.push(2.0, cached_mxm);
+    println!("  [2/3] serve (1 worker, batch=1):  triad {cached_triad:>10.0} req/s   mxm {cached_mxm:>8.0} req/s");
+
+    // ---- 3. full subsystem: plan cache + batching + persistent pool ----
+    let (served_triad, served_mxm, report) = {
+        let server = start_server(serve_config(workers, 32));
+        let t = hammer(secs, |tid| {
+            let client = server.client();
+            move |i: u64| {
+                let (x, y) = triad_inputs((tid as u64) << 32 | i % 4);
+                std::hint::black_box(client.call("triad", vec![Arg::vec(x), Arg::vec(y)]).unwrap());
+            }
+        });
+        let m = hammer(secs, |tid| {
+            let client = server.client();
+            move |i: u64| {
+                let (a, b) = mxm_inputs((tid as u64) << 32 | i % 4);
+                std::hint::black_box(
+                    client
+                        .call("mxm", vec![Arg::mat(a, MXM_N, MXM_N), Arg::mat(b, MXM_N, MXM_N)])
+                        .unwrap(),
+                );
+            }
+        });
+        (t, m, server.report())
+    };
+    labels.push("batched+pool");
+    triad_series.push(3.0, served_triad);
+    mxm_series.push(3.0, served_mxm);
+    println!("  [3/3] serve ({workers} workers, batch≤32): triad {served_triad:>8.0} req/s   mxm {served_mxm:>8.0} req/s");
+    println!("{report}");
+
+    // ---- summary ----
+    println!("## speedup vs per-dispatch baseline\n");
+    println!("| {:<14} | {:>12} | {:>12} |", "config", "triad", "mxm");
+    println!("|{}|{}|{}|", "-".repeat(16), "-".repeat(14), "-".repeat(14));
+    for (i, label) in labels.iter().enumerate() {
+        let tv = triad_series.points[i].1 / base_triad;
+        let mv = mxm_series.points[i].1 / base_mxm;
+        println!("| {label:<14} | {tv:>11.2}x | {mv:>11.2}x |");
+    }
+    let t_speedup = served_triad / base_triad;
+    let m_speedup = served_mxm / base_mxm;
+    let best = t_speedup.max(m_speedup);
+    println!(
+        "\nACCEPTANCE (≥2x sustained req/s with batching+persistent pool vs per-dispatch): \
+         triad {t_speedup:.2}x, mxm {m_speedup:.2}x → {}",
+        if best >= 2.0 { "PASS" } else { "BELOW TARGET (machine-dependent; see report above)" }
+    );
+}

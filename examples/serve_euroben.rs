@@ -1,0 +1,243 @@
+//! Serving driver: the four EuroBen kernels behind the `serve`
+//! subsystem, hammered concurrently by client threads.
+//!
+//! Demonstrates the capture-once / call-many serving model end to end:
+//!
+//!  * **mod2am** — dense matmul via rank-1 updates (mxm2a formulation,
+//!    capture-pure: no per-iteration forces; the plan fuses the update
+//!    chain once and every request replays it);
+//!  * **mod2as** — CSR spmv (`map` elemental) with the matrix structure
+//!    *baked* into the plan and the input vector as the parameter;
+//!  * **mod2f**  — split-stream FFT, twiddles + tangling baked;
+//!  * **cg8**    — 8 fixed conjugate-gradient iterations with
+//!    alpha/beta kept in ArBB space (no host syncs → capturable).
+//!
+//! Each kernel is verified against its native reference, then client
+//! threads flood the bounded queue (QueueFull → retry) and the serving
+//! report is printed: throughput, p50/p99 latency, batch sizes and plan
+//! cache hit rates.
+//!
+//! ```sh
+//! cargo run --release --example serve_euroben
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use arbb_rs::coordinator::{Context, Vec1};
+use arbb_rs::euroben::{mod2am, mod2as};
+use arbb_rs::fftlib::dft_ref;
+use arbb_rs::serve::{Arg, ServeConfig, Server, SubmitError, Value};
+use arbb_rs::sparse::{banded_spd, random_csr};
+use arbb_rs::util::{assert_allclose, XorShift64};
+
+const MXM_N: usize = 48;
+const SPMV_N: usize = 1024;
+const FFT_N: usize = 256;
+const CG_N: usize = 256;
+const CG_ITERS: usize = 8;
+
+/// Capture-pure rank-1-update matmul (mxm2a without the `_for` forces).
+fn mxm_kernel(params: &[Value]) -> Value {
+    let a = params[0].mat2();
+    let b = params[1].mat2();
+    let n = a.rows();
+    let mut c = a.col(0).repeat_col(n) * &b.row(0).repeat_row(n);
+    for i in 1..n {
+        c = c + (a.col(i).repeat_col(n) * &b.row(i).repeat_row(n));
+    }
+    Value::Mat(c)
+}
+
+/// Fixed-iteration CG: everything stays in ArBB space, so the whole
+/// solver captures as one plan.
+fn cg_fixed(ctx: &Context, a: &mod2as::ArbbCsr, b: &Vec1, iters: usize) -> Vec1 {
+    let n = b.len();
+    let mut x = ctx.zeros1(n);
+    let mut r = b.clone();
+    let mut p = b.clone();
+    let mut r2 = r.dot(&r);
+    for _ in 0..iters {
+        let ap = mod2as::arbb_spmv1(ctx, a, &p);
+        let pap = p.dot(&ap);
+        let alpha = &r2 / &pap;
+        x = &x + &(&p * &alpha);
+        let rn = &r - &(&ap * &alpha);
+        let r2n = rn.dot(&rn);
+        let beta = &r2n / &r2;
+        p = &rn + &(&p * &beta);
+        r = rn;
+        r2 = r2n;
+    }
+    x
+}
+
+fn main() {
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8);
+    println!("=== serve_euroben: EuroBen kernels behind the serving subsystem ===");
+    println!("    workers={workers}, bounded queue, batching dispatcher\n");
+
+    // Host-side fixtures baked into the kernels.
+    let spmv_m = Arc::new(random_csr(SPMV_N, 100.0 * 16.0 / SPMV_N as f64, 11));
+    let cg_m = Arc::new(banded_spd(CG_N, 7, 5));
+    let spmv_m2 = spmv_m.clone();
+    let cg_m2 = cg_m.clone();
+
+    let server = Server::builder(ServeConfig {
+        workers,
+        queue_capacity: 128,
+        max_batch: 16,
+        ..ServeConfig::default()
+    })
+    .kernel("mod2am", |_ctx, params| mxm_kernel(params))
+    .kernel("mod2as", move |ctx, params| {
+        let a = mod2as::bind_csr(ctx, &spmv_m2);
+        Value::Vec(mod2as::arbb_spmv1(ctx, &a, &params[0].vec1()))
+    })
+    .kernel("mod2f", |ctx, params| {
+        let re = params[0].vec1();
+        let im = params[1].vec1();
+        let n = re.len();
+        // split-stream stage loop, capture-pure (no per-stage forces);
+        // tangle indices + twiddle tables are baked into the plan
+        let tg = tangle(ctx, n);
+        let mut d = arbb_rs::coordinator::CplxV { re: re.gather(&tg), im: im.gather(&tg) };
+        let (twre, twim) = twiddles(ctx, n);
+        let h = n / 2;
+        let mut m = h;
+        let mut i = 1;
+        while i < n {
+            let even = d.section_strided(0, h, 2);
+            let odd = d.section_strided(1, h, 2);
+            let up = even.add(&odd);
+            let tw = arbb_rs::coordinator::CplxV {
+                re: twre.section(0, m).repeat(i),
+                im: twim.section(0, m).repeat(i),
+            };
+            let down = even.sub(&odd).mul(&tw);
+            d = up.cat(&down);
+            m >>= 1;
+            i <<= 1;
+        }
+        Value::Vec(d.re.cat(&d.im))
+    })
+    .kernel("cg8", move |ctx, params| {
+        let a = mod2as::bind_csr(ctx, &cg_m2);
+        Value::Vec(cg_fixed(ctx, &a, &params[0].vec1(), CG_ITERS))
+    })
+    .start();
+
+    let client = server.client();
+
+    // ---- verify one response per kernel against the references ----
+    println!("[1/3] verifying served results against native references …");
+    let mut rng = XorShift64::new(1);
+
+    let ah: Vec<f64> = (0..MXM_N * MXM_N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let bh: Vec<f64> = (0..MXM_N * MXM_N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let got = client
+        .call("mod2am", vec![Arg::mat(ah.clone(), MXM_N, MXM_N), Arg::mat(bh.clone(), MXM_N, MXM_N)])
+        .expect("mod2am");
+    assert_allclose(&got, &mod2am::reference(&ah, &bh, MXM_N), 1e-10, 1e-11, "serve mod2am");
+
+    let xs = spmv_m.random_x(3);
+    let got = client.call("mod2as", vec![Arg::vec(xs.clone())]).expect("mod2as");
+    assert_allclose(&got, &spmv_m.spmv_alloc(&xs), 1e-11, 1e-12, "serve mod2as");
+
+    let fre: Vec<f64> = (0..FFT_N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let fim: Vec<f64> = (0..FFT_N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let got = client
+        .call("mod2f", vec![Arg::vec(fre.clone()), Arg::vec(fim.clone())])
+        .expect("mod2f");
+    let (wre, wim) = dft_ref::dft(&fre, &fim);
+    assert_allclose(&got[..FFT_N], &wre, 1e-8, 1e-8, "serve fft re");
+    assert_allclose(&got[FFT_N..], &wim, 1e-8, 1e-8, "serve fft im");
+
+    let cb: Vec<f64> = (0..CG_N).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let got = client.call("cg8", vec![Arg::vec(cb.clone())]).expect("cg8");
+    let native = arbb_rs::solvers::cg_fixed_iters(&cg_m, &cb, CG_ITERS);
+    assert_allclose(&got, &native, 1e-8, 1e-9, "serve cg8");
+    println!("      all four kernels verified\n");
+
+    // ---- concurrent hammer ----
+    println!("[2/3] hammering all four kernels from {} client threads …", 2 * 4);
+    let run_secs = 2.0;
+    let mut handles = Vec::new();
+    for t in 0..8usize {
+        let client = server.client();
+        let spmv_m = spmv_m.clone();
+        let (ah, bh) = (ah.clone(), bh.clone());
+        let (fre, fim) = (fre.clone(), fim.clone());
+        let cb = cb.clone();
+        handles.push(std::thread::spawn(move || {
+            let kernel = ["mod2am", "mod2as", "mod2f", "cg8"][t % 4];
+            let start = Instant::now();
+            let mut sent = 0u64;
+            let mut retries = 0u64;
+            while start.elapsed().as_secs_f64() < run_secs {
+                let mut args = match kernel {
+                    "mod2am" => vec![
+                        Arg::mat(ah.clone(), MXM_N, MXM_N),
+                        Arg::mat(bh.clone(), MXM_N, MXM_N),
+                    ],
+                    "mod2as" => vec![Arg::vec(spmv_m.random_x(sent))],
+                    "mod2f" => vec![Arg::vec(fre.clone()), Arg::vec(fim.clone())],
+                    _ => vec![Arg::vec(cb.clone())],
+                };
+                let ticket = loop {
+                    match client.try_submit(kernel, std::mem::take(&mut args)) {
+                        Ok(tk) => break tk,
+                        Err(SubmitError::QueueFull(back)) => {
+                            retries += 1;
+                            args = back;
+                            std::thread::yield_now();
+                        }
+                        Err(e) => panic!("submit: {e}"),
+                    }
+                };
+                ticket.wait().expect("response");
+                sent += 1;
+            }
+            (sent, retries)
+        }));
+    }
+    let mut total = 0u64;
+    let mut retries = 0u64;
+    for h in handles {
+        let (s, r) = h.join().unwrap();
+        total += s;
+        retries += r;
+    }
+    println!("      {total} requests served ({retries} QueueFull retries)\n");
+
+    // ---- report ----
+    println!("[3/3] serving report");
+    println!("{}", client.report());
+    if let Some(pool) = arbb_rs::serve::pool::for_workers(workers) {
+        let ps = arbb_rs::serve::pool::stats_of(&pool);
+        println!(
+            "shared pool: {} workers (persistent, process-wide), {} fork-join sweeps, {} chunk tasks",
+            ps.workers, ps.sweeps, ps.chunks
+        );
+    }
+    let cs = client.cache_stats();
+    assert!(cs.hits > cs.misses, "steady-state traffic must be cache hits");
+    println!(
+        "capture happened {} times; {} invocations replayed cached plans.",
+        cs.misses, cs.hits
+    );
+    println!("\nserve_euroben OK");
+}
+
+// ---- small host helpers for the FFT builder ----
+
+fn tangle(ctx: &Context, n: usize) -> arbb_rs::coordinator::VecI64 {
+    let idx: Vec<i64> =
+        arbb_rs::fftlib::splitstream::tangle_indices(n).into_iter().map(|i| i as i64).collect();
+    ctx.bind_i64(&idx)
+}
+
+fn twiddles(ctx: &Context, n: usize) -> (Vec1, Vec1) {
+    let (re, im) = arbb_rs::fftlib::twiddle::twiddles_bitrev(n);
+    (ctx.bind1(&re), ctx.bind1(&im))
+}

@@ -89,10 +89,14 @@ pub fn render_table(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) 
 
 fn truncate(s: &str, n: usize) -> String {
     if s.len() <= n {
-        s.to_string()
-    } else {
-        s[..n].to_string()
+        return s.to_string();
     }
+    // Back off to a char boundary: byte-slicing a multi-byte name panics.
+    let mut end = n;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    s[..end].to_string()
 }
 
 fn fmt_x(x: f64) -> String {

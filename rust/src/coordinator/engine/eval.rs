@@ -50,32 +50,48 @@ impl FExec {
 
 /// Resolve an [`FTree`] into an executable [`FExec`], reading leaf
 /// storages (all dependencies have been materialised by earlier steps).
-pub fn lower(tree: &FTree) -> FExec {
-    let fx = lower_inner(tree);
-    debug_assert!(fx.acc_placement_ok(), "Acc leaf must be on the left spine");
-    fx
+///
+/// A malformed plan — a leaf whose producing step is missing, or an
+/// `Acc` marker off the left spine — is an [`crate::Error::Invalid`],
+/// not a panic: a serving worker must survive a bad plan.
+pub fn lower(tree: &FTree) -> crate::Result<FExec> {
+    let fx = lower_inner(tree)?;
+    if !fx.acc_placement_ok() {
+        return Err(crate::Error::Invalid(
+            "malformed plan: Acc leaf off the left spine".into(),
+        ));
+    }
+    Ok(fx)
 }
 
-fn lower_inner(tree: &FTree) -> FExec {
-    match tree {
+fn lower_inner(tree: &FTree) -> crate::Result<FExec> {
+    Ok(match tree {
         FTree::Leaf { node, view } => {
-            let data = node
-                .data()
-                .unwrap_or_else(|| panic!("leaf {} not materialised at lowering", node.id));
+            let data = node.data().ok_or_else(|| {
+                crate::Error::Invalid(format!(
+                    "malformed plan: leaf {} not materialised at lowering",
+                    node.id
+                ))
+            })?;
             FExec::Leaf { data: data.as_f64().clone(), view: *view }
         }
         FTree::ScalarLeaf { node } => {
-            let data = node
-                .data()
-                .unwrap_or_else(|| panic!("scalar leaf {} not materialised", node.id));
+            let data = node.data().ok_or_else(|| {
+                crate::Error::Invalid(format!(
+                    "malformed plan: scalar leaf {} not materialised",
+                    node.id
+                ))
+            })?;
             FExec::Const(data.as_f64()[0])
         }
         FTree::Const(c) => FExec::Const(*c),
         FTree::Iota => FExec::Iota,
         FTree::Acc => FExec::Acc,
-        FTree::Bin(op, a, b) => FExec::Bin(*op, Box::new(lower_inner(a)), Box::new(lower_inner(b))),
-        FTree::Un(op, a) => FExec::Un(*op, Box::new(lower_inner(a))),
-    }
+        FTree::Bin(op, a, b) => {
+            FExec::Bin(*op, Box::new(lower_inner(a)?), Box::new(lower_inner(b)?))
+        }
+        FTree::Un(op, a) => FExec::Un(*op, Box::new(lower_inner(a)?)),
+    })
 }
 
 /// Scratch block pool: one per worker; blocks are recycled across
@@ -421,6 +437,32 @@ mod tests {
         let mut out = vec![10.0, 20.0, 30.0];
         eval_range(&fx, 0, &mut out, &mut Scratch::default());
         assert_eq!(out, vec![11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn lower_unmaterialised_leaf_is_error_not_panic() {
+        use crate::coordinator::node::{Node, Op};
+        use crate::coordinator::shape::{DType, Shape};
+        // A pending node with no storage: lowering a plan that references
+        // it must produce Error::Invalid (a serving worker must survive).
+        let pending = Node::new(Op::Iota(4), Shape::D1(4), DType::F64);
+        let tree = FTree::Leaf { node: pending, view: View::identity(4) };
+        match lower(&tree) {
+            Err(crate::Error::Invalid(msg)) => {
+                assert!(msg.contains("not materialised"), "{msg}")
+            }
+            other => panic!("expected Error::Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lower_rejects_acc_off_left_spine() {
+        let bad = FTree::Bin(
+            BinOp::Add,
+            Box::new(FTree::Const(1.0)),
+            Box::new(FTree::Acc),
+        );
+        assert!(lower(&bad).is_err());
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use self::eval::{eval_range, lower, FExec, BLOCK};
-use self::pool::ThreadPool;
+use self::pool::SharedPool;
 use super::map::MapArgs;
 use super::node::{Data, NodeRef, Op};
 use super::ops::RedOp;
@@ -97,17 +97,26 @@ impl ExecStats {
 }
 
 /// Execute a plan. Steps run in order; each step materialises its node.
+///
+/// Malformed plans (references to nodes no step materialises) surface as
+/// [`crate::Error::Invalid`] instead of panicking, so a serving worker
+/// can reject the request and keep running.
 pub fn execute_plan(
     plan: &Plan,
     cfg: &EngineCfg,
-    pool: Option<&ThreadPool>,
+    pool: Option<&SharedPool>,
     stats: &mut ExecStats,
-) {
+) -> crate::Result<()> {
     let t0 = Instant::now();
+    let mut result = Ok(());
     for step in &plan.steps {
-        exec_step(step, cfg, pool, stats);
+        if let Err(e) = exec_step(step, cfg, pool, stats) {
+            result = Err(e);
+            break;
+        }
     }
     stats.exec_secs += t0.elapsed().as_secs_f64();
+    result
 }
 
 /// A chunk of a step's output index space.
@@ -156,10 +165,15 @@ impl OutPtr {
 /// Eligible when: no user handle or other consumer holds the node
 /// (`Rc::strong_count <= 2`: the consumer op edge + the step's own clone),
 /// and the buffer `Arc` itself is unique.
-fn take_or_clone(node: &NodeRef, allow: bool) -> Vec<f64> {
+///
+/// A node with no storage means the plan is malformed (its producing
+/// step is missing): [`crate::Error::Invalid`], never a panic.
+fn take_or_clone(node: &NodeRef, allow: bool) -> crate::Result<Vec<f64>> {
     let arc = node
         .data()
-        .unwrap_or_else(|| panic!("node {} not materialised", node.id))
+        .ok_or_else(|| {
+            crate::Error::Invalid(format!("malformed plan: node {} not materialised", node.id))
+        })?
         .as_f64()
         .clone();
     if allow && Rc::strong_count(node) <= 2 && !node.donated.get() {
@@ -169,29 +183,34 @@ fn take_or_clone(node: &NodeRef, allow: bool) -> Vec<f64> {
         match Arc::try_unwrap(arc) {
             Ok(v) => {
                 node.donated.set(true);
-                return v;
+                return Ok(v);
             }
             Err(arc) => {
                 // Restore and copy.
                 *node.storage.borrow_mut() = Some(Data::F64(arc.clone()));
-                return (*arc).clone();
+                return Ok((*arc).clone());
             }
         }
     }
-    (*arc).clone()
+    Ok((*arc).clone())
 }
 
-fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mut ExecStats) {
+fn exec_step(
+    step: &Step,
+    cfg: &EngineCfg,
+    pool: Option<&SharedPool>,
+    stats: &mut ExecStats,
+) -> crate::Result<()> {
     let out_node = step.out().clone();
     let out_len = out_node.shape.len();
     stats.steps += 1;
     stats.elements += out_len as u64;
-    let workers = pool.map(|p| p.size).unwrap_or(1);
+    let workers = pool.map(|p| p.size()).unwrap_or(1);
 
     // ---- lower + execute per step kind ----
     let (result, record): (Vec<f64>, Option<StepRecord>) = match step {
         Step::Fused { tree, .. } => {
-            let fx = lower(tree);
+            let fx = lower(tree)?;
             let mut out = vec![0.0f64; out_len];
             let chunks = make_chunks(out_len, cfg, workers);
             let fpe = tree.flops_per_elem();
@@ -209,8 +228,8 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             }))
         }
         Step::Accumulate { base, tree, .. } => {
-            let fx = lower(tree);
-            let mut out = take_or_clone(base, cfg.in_place);
+            let fx = lower(tree)?;
+            let mut out = take_or_clone(base, cfg.in_place)?;
             debug_assert_eq!(out.len(), out_len);
             let chunks = make_chunks(out_len, cfg, workers);
             let fpe = tree.flops_per_elem();
@@ -228,7 +247,7 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             }))
         }
         Step::ReduceRows { red, tree, rows, cols, .. } => {
-            let fx = lower(tree);
+            let fx = lower(tree)?;
             let mut out = vec![0.0f64; *rows];
             // chunk over output rows
             let row_grain = (cfg.grain / cols.max(&1)).max(1);
@@ -248,7 +267,7 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             }))
         }
         Step::ReduceCols { red, tree, rows, cols, .. } => {
-            let fx = lower(tree);
+            let fx = lower(tree)?;
             let mut out = vec![red.identity(); *cols];
             let col_grain = cfg.grain.min(*cols).max(1);
             let chunks = make_row_chunks(*cols, col_grain, cfg, workers);
@@ -267,7 +286,7 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             }))
         }
         Step::ReduceAll { red, tree, len, .. } => {
-            let fx = lower(tree);
+            let fx = lower(tree)?;
             let chunks = make_chunks(*len, cfg, workers);
             let fpe = tree.flops_per_elem() + 1.0;
             let (v, rec) = run_reduce_all(&fx, *red, *len, &chunks, cfg, pool);
@@ -283,8 +302,8 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             }))
         }
         Step::Cat { a, la, b, lb, .. } => {
-            let fa = lower(a);
-            let fb = lower(b);
+            let fa = lower(a)?;
+            let fb = lower(b)?;
             let mut out = vec![0.0f64; la + lb];
             let mut chunk_secs = Vec::new();
             // Two element-wise sub-kernels into disjoint halves.
@@ -314,9 +333,9 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             (out, rec)
         }
         Step::ReplaceCol { m, col, vtree, .. } => {
-            let fx = lower(vtree);
+            let fx = lower(vtree)?;
             let (rows, cols) = (out_node.shape.rows(), out_node.shape.cols());
-            let mut out = take_or_clone(m, cfg.in_place);
+            let mut out = take_or_clone(m, cfg.in_place)?;
             let t0 = Instant::now();
             let mut tmp = vec![0.0f64; rows];
             eval::with_scratch(|scratch| eval_range(&fx, 0, &mut tmp, scratch));
@@ -335,9 +354,9 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             (out, rec)
         }
         Step::ReplaceRow { m, row, vtree, .. } => {
-            let fx = lower(vtree);
+            let fx = lower(vtree)?;
             let cols = out_node.shape.cols();
-            let mut out = take_or_clone(m, cfg.in_place);
+            let mut out = take_or_clone(m, cfg.in_place)?;
             let t0 = Instant::now();
             eval::with_scratch(|scratch| {
                 eval_range(&fx, 0, &mut out[row * cols..(row + 1) * cols], scratch)
@@ -355,8 +374,13 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
         }
         Step::SetElem { m, i, j, s, .. } => {
             let cols = out_node.shape.cols();
-            let mut out = take_or_clone(m, cfg.in_place);
-            let sval = s.data().expect("scalar operand").as_f64()[0];
+            let mut out = take_or_clone(m, cfg.in_place)?;
+            let sval = s
+                .data()
+                .ok_or_else(|| {
+                    crate::Error::Invalid("malformed plan: set_elem scalar not materialised".into())
+                })?
+                .as_f64()[0];
             out[i * cols + j] = sval;
             let rec = cfg.record.then(|| StepRecord {
                 kind: step.kind(),
@@ -369,8 +393,33 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             (out, rec)
         }
         Step::Gather { src, idx, .. } => {
-            let s = src.data().expect("gather src").as_f64().clone();
-            let ix = idx.data().expect("gather idx").as_i64().clone();
+            let s = src
+                .data()
+                .ok_or_else(|| {
+                    crate::Error::Invalid("malformed plan: gather src not materialised".into())
+                })?
+                .as_f64()
+                .clone();
+            let ix = idx
+                .data()
+                .ok_or_else(|| {
+                    crate::Error::Invalid("malformed plan: gather idx not materialised".into())
+                })?
+                .as_i64()
+                .clone();
+            // Validate indices up front: an out-of-range gather must be
+            // a clean error, not a panic inside a shared pool worker.
+            if ix.len() < out_len {
+                return Err(crate::Error::Invalid(
+                    "gather: index container shorter than output".into(),
+                ));
+            }
+            if let Some(bad) = ix[..out_len].iter().find(|&&v| v < 0 || v as usize >= s.len()) {
+                return Err(crate::Error::Invalid(format!(
+                    "gather index {bad} out of range (source length {})",
+                    s.len()
+                )));
+            }
             let mut out = vec![0.0f64; out_len];
             let chunks = make_chunks(out_len, cfg, workers);
             let t0 = Instant::now();
@@ -398,13 +447,21 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
             let op = out.op.borrow();
             let mf = match &*op {
                 Op::Map(f) => f,
-                _ => unreachable!("Map step on non-map node"),
+                _ => {
+                    return Err(crate::Error::Invalid(
+                        "malformed plan: Map step on non-map node".into(),
+                    ))
+                }
             };
             // Resolve captures in order, split by dtype.
             let mut f64s: Vec<Arc<Vec<f64>>> = Vec::new();
             let mut i64s: Vec<Arc<Vec<i64>>> = Vec::new();
             for c in &mf.captures {
-                match c.data().expect("map capture materialised") {
+                match c.data().ok_or_else(|| {
+                    crate::Error::Invalid(
+                        "malformed plan: map capture not materialised".into(),
+                    )
+                })? {
                     Data::F64(v) => f64s.push(v),
                     Data::I64(v) => i64s.push(v),
                 }
@@ -446,6 +503,7 @@ fn exec_step(step: &Step, cfg: &EngineCfg, pool: Option<&ThreadPool>, stats: &mu
     if let Some(r) = record {
         stats.records.push(r);
     }
+    Ok(())
 }
 
 fn make_row_chunks(total: usize, grain: usize, cfg: &EngineCfg, workers: usize) -> Vec<Chunk> {
@@ -458,7 +516,7 @@ fn make_row_chunks(total: usize, grain: usize, cfg: &EngineCfg, workers: usize) 
 fn run_chunked(
     chunks: &[Chunk],
     cfg: &EngineCfg,
-    pool: Option<&ThreadPool>,
+    pool: Option<&SharedPool>,
     body: &(dyn Fn(&Chunk) + Sync),
 ) -> Vec<f64> {
     let use_pool = matches!(cfg.mode, Mode::Parallel) && chunks.len() > 1 && pool.is_some();
@@ -494,7 +552,7 @@ fn run_elementwise(
     out: &mut [f64],
     chunks: &[Chunk],
     cfg: &EngineCfg,
-    pool: Option<&ThreadPool>,
+    pool: Option<&SharedPool>,
 ) -> Option<Vec<f64>> {
     let optr = OutPtr(out.as_mut_ptr());
     let body = |c: &Chunk| {
@@ -512,7 +570,7 @@ fn run_reduce_rows(
     cols: usize,
     chunks: &[Chunk],
     cfg: &EngineCfg,
-    pool: Option<&ThreadPool>,
+    pool: Option<&SharedPool>,
 ) -> Option<Vec<f64>> {
     let optr = OutPtr(out.as_mut_ptr());
     let body = |c: &Chunk| {
@@ -546,7 +604,7 @@ fn run_reduce_cols(
     cols: usize,
     chunks: &[Chunk],
     cfg: &EngineCfg,
-    pool: Option<&ThreadPool>,
+    pool: Option<&SharedPool>,
 ) -> Option<Vec<f64>> {
     let optr = OutPtr(out.as_mut_ptr());
     let body = |c: &Chunk| {
@@ -578,7 +636,7 @@ fn run_reduce_all(
     len: usize,
     chunks: &[Chunk],
     cfg: &EngineCfg,
-    pool: Option<&ThreadPool>,
+    pool: Option<&SharedPool>,
 ) -> (f64, Option<Vec<f64>>) {
     if chunks.is_empty() {
         return (red.identity(), cfg.record.then_some(vec![]));

@@ -13,8 +13,10 @@
 //! completed — the borrow outlives all uses. This is the classic scoped-
 //! thread-pool pattern.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 /// A chunk-level task: `f(chunk_index)`.
@@ -33,12 +35,48 @@ struct Shared {
     state: Mutex<State>,
     work_cv: Condvar,
     done_cv: Condvar,
-    next_chunk: AtomicUsize,
+    /// Chunk claim word, epoch-tagged: `(epoch & 0xFFFF_FFFF) << 32 |
+    /// next_index`. Tagging closes a straggler race: a worker whose
+    /// final claim attempt lands *after* the next job has been
+    /// published must see a different tag and back off, instead of
+    /// claiming chunk 0 of the new job against the old (dead) closure.
+    claim: AtomicU64,
     done_chunks: AtomicUsize,
+    /// Set when any chunk body of the current job panicked; the
+    /// submitting thread re-raises after the barrier so a panicking
+    /// body cannot kill a (process-shared) worker thread or wedge the
+    /// barrier.
+    job_panicked: AtomicBool,
+}
+
+impl Shared {
+    /// Claim the next chunk of the job tagged `tag`, or `None` when the
+    /// job is exhausted or superseded.
+    fn claim_chunk(&self, tag: u64, n_chunks: usize) -> Option<usize> {
+        loop {
+            let cur = self.claim.load(Ordering::SeqCst);
+            if cur >> 32 != tag {
+                return None; // a different job owns the claim word
+            }
+            let idx = (cur & 0xFFFF_FFFF) as usize;
+            if idx >= n_chunks {
+                return None;
+            }
+            if self
+                .claim
+                .compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return Some(idx);
+            }
+        }
+    }
 }
 
 struct State {
-    /// Monotonic job counter; workers watch it change.
+    /// Monotonic job counter; workers watch it change. (The claim tag
+    /// is its low 32 bits — a straggler would need to sleep through
+    /// 2^32 jobs to alias.)
     epoch: u64,
     job: Option<Job>,
     shutdown: bool,
@@ -60,8 +98,9 @@ impl ThreadPool {
             state: Mutex::new(State { epoch: 0, job: None, shutdown: false }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
-            next_chunk: AtomicUsize::new(0),
+            claim: AtomicU64::new(u64::MAX), // tag no job ever uses
             done_chunks: AtomicUsize::new(0),
+            job_panicked: AtomicBool::new(false),
         });
         let workers = (1..size)
             .map(|w| {
@@ -77,36 +116,45 @@ impl ThreadPool {
 
     /// Execute `f(0..n_chunks)` across the pool; blocks until complete.
     /// (`'a`: the closure may borrow stack data — see module docs.)
+    ///
+    /// A panic in a chunk body is contained (the worker survives, the
+    /// barrier completes) and re-raised on the calling thread after the
+    /// job — with a process-shared pool, a bad gather index or user
+    /// elemental must not kill a worker every engine depends on.
     pub fn run_chunks<'a>(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync + 'a)) {
         if n_chunks == 0 {
             return;
         }
         if self.size == 1 || n_chunks == 1 {
+            // Inline: no shared state at risk, panics propagate as-is.
             for i in 0..n_chunks {
                 f(i);
             }
             return;
         }
-        // SAFETY: see module docs — we block until all chunks are done.
+        // SAFETY: see module docs — we block until all chunks are done,
+        // and chunk claims are epoch-tagged so no worker can call this
+        // closure after the job's barrier has completed.
         let erased: *const JobFn = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync + 'a), &'static JobFn>(f)
         };
+        let tag;
         {
             let mut st = self.shared.state.lock().unwrap();
             debug_assert!(st.job.is_none(), "run_chunks is not reentrant");
-            self.shared.next_chunk.store(0, Ordering::SeqCst);
-            self.shared.done_chunks.store(0, Ordering::SeqCst);
-            st.job = Some(Job { f: erased, n_chunks });
             st.epoch += 1;
+            tag = st.epoch & 0xFFFF_FFFF;
+            self.shared.done_chunks.store(0, Ordering::SeqCst);
+            self.shared.job_panicked.store(false, Ordering::SeqCst);
+            self.shared.claim.store(tag << 32, Ordering::SeqCst);
+            st.job = Some(Job { f: erased, n_chunks });
             self.shared.work_cv.notify_all();
         }
         // The caller participates.
-        loop {
-            let i = self.shared.next_chunk.fetch_add(1, Ordering::SeqCst);
-            if i >= n_chunks {
-                break;
+        while let Some(i) = self.shared.claim_chunk(tag, n_chunks) {
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                self.shared.job_panicked.store(true, Ordering::SeqCst);
             }
-            f(i);
             self.shared.done_chunks.fetch_add(1, Ordering::SeqCst);
         }
         // Wait for stragglers.
@@ -115,6 +163,10 @@ impl ThreadPool {
             st = self.shared.done_cv.wait(st).unwrap();
         }
         st.job = None;
+        drop(st);
+        if self.shared.job_panicked.swap(false, Ordering::SeqCst) {
+            panic!("arbb: a worker-pool chunk body panicked (original message on stderr)");
+        }
     }
 }
 
@@ -122,7 +174,7 @@ fn worker_loop(sh: Arc<Shared>) {
     let mut seen_epoch = 0u64;
     loop {
         // Wait for a new job (or shutdown).
-        let (f, n_chunks) = {
+        let (f, n_chunks, tag) = {
             let mut st = sh.state.lock().unwrap();
             loop {
                 if st.shutdown {
@@ -131,20 +183,22 @@ fn worker_loop(sh: Arc<Shared>) {
                 if st.epoch != seen_epoch {
                     if let Some(job) = &st.job {
                         seen_epoch = st.epoch;
-                        break (job.f, job.n_chunks);
+                        break (job.f, job.n_chunks, st.epoch & 0xFFFF_FFFF);
                     }
                 }
                 st = sh.work_cv.wait(st).unwrap();
             }
         };
-        // Pull chunks.
-        loop {
-            let i = sh.next_chunk.fetch_add(1, Ordering::SeqCst);
-            if i >= n_chunks {
-                break;
+        // Pull chunks (epoch-tagged: a stale claim attempt after this
+        // job's barrier completed sees a different tag and backs off).
+        while let Some(i) = sh.claim_chunk(tag, n_chunks) {
+            // SAFETY: run_chunks keeps the closure alive until every
+            // claimed chunk completed; claims stop at the tag change.
+            // A panicking body is contained so this shared worker
+            // survives and the barrier still completes.
+            if catch_unwind(AssertUnwindSafe(|| unsafe { (*f)(i) })).is_err() {
+                sh.job_panicked.store(true, Ordering::SeqCst);
             }
-            // SAFETY: run_chunks keeps the closure alive until done.
-            unsafe { (*f)(i) };
             let done = sh.done_chunks.fetch_add(1, Ordering::SeqCst) + 1;
             if done >= n_chunks {
                 let _g = sh.state.lock().unwrap();
@@ -152,6 +206,80 @@ fn worker_loop(sh: Arc<Shared>) {
             }
         }
     }
+}
+
+/// A persistent, process-shared worker pool.
+///
+/// Wraps a [`ThreadPool`] behind a submission lock so that *multiple*
+/// engines (every O3 [`super::super::Context`] plus the serving
+/// dispatcher in [`crate::serve`]) can share one set of long-lived
+/// worker threads instead of each spinning up its own. `run_chunks` is
+/// not reentrant on the underlying pool; the lock serialises whole
+/// fork-join sweeps, which is exactly the barrier semantics ArBB's
+/// runtime exhibits (one vector operation in flight at a time).
+///
+/// Workers park between jobs, so an idle shared pool costs nothing but
+/// memory. Pools are interned per worker count by [`shared`] and live
+/// for the rest of the process.
+pub struct SharedPool {
+    inner: ThreadPool,
+    submit: Mutex<()>,
+    jobs: AtomicU64,
+    chunks: AtomicU64,
+}
+
+impl SharedPool {
+    pub fn new(size: usize) -> Self {
+        SharedPool {
+            inner: ThreadPool::new(size),
+            submit: Mutex::new(()),
+            jobs: AtomicU64::new(0),
+            chunks: AtomicU64::new(0),
+        }
+    }
+
+    /// Total workers including the calling thread.
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+
+    /// Execute `f(0..n_chunks)` as one fork-join sweep; blocks until
+    /// complete. Sweeps from concurrent submitters are serialised.
+    pub fn run_chunks<'a>(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync + 'a)) {
+        if n_chunks == 0 {
+            return;
+        }
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.chunks.fetch_add(n_chunks as u64, Ordering::Relaxed);
+        // A job whose body panicked re-raises on the submitting thread
+        // and may poison this lock mid-unwind; the pool state itself is
+        // already consistent by then, so poisoning is ignorable.
+        let _guard = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        self.inner.run_chunks(n_chunks, f);
+    }
+
+    /// Fork-join sweeps dispatched since creation.
+    pub fn jobs_dispatched(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Chunk tasks executed since creation.
+    pub fn chunks_run(&self) -> u64 {
+        self.chunks.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of shared pools, interned by worker count.
+static POOLS: OnceLock<Mutex<HashMap<usize, Arc<SharedPool>>>> = OnceLock::new();
+
+/// The process-wide shared pool for `size` workers. The first caller
+/// spawns the threads; everyone after that reuses them — per-dispatch
+/// pool spawn/join is gone entirely.
+pub fn shared(size: usize) -> Arc<SharedPool> {
+    let size = size.max(1);
+    let pools = POOLS.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = pools.lock().unwrap();
+    map.entry(size).or_insert_with(|| Arc::new(SharedPool::new(size))).clone()
 }
 
 impl Drop for ThreadPool {
@@ -225,6 +353,61 @@ mod tests {
             counter.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(counter.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn shared_pool_serialises_concurrent_sweeps() {
+        let pool = Arc::new(SharedPool::new(3));
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = pool.clone();
+            let c = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    p.run_chunks(8, &|_| {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 4 * 25 * 8);
+        assert_eq!(pool.jobs_dispatched(), 100);
+        assert_eq!(pool.chunks_run(), 800);
+    }
+
+    #[test]
+    fn panicking_chunk_body_does_not_wedge_the_pool() {
+        let pool = SharedPool::new(3);
+        // The panic is contained on the worker, re-raised on the
+        // submitting thread after the barrier…
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_chunks(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must be re-raised to the submitter");
+        // …and the pool (workers, barrier, submit lock) stays usable.
+        let c = AtomicU64::new(0);
+        pool.run_chunks(8, &|_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn shared_registry_interns_by_size() {
+        let a = shared(2);
+        let b = shared(2);
+        assert!(Arc::ptr_eq(&a, &b), "same size must intern to the same pool");
+        let c = shared(3);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(shared(0).size(), 1, "size clamps to at least 1");
     }
 
     /// Helper to smuggle a raw pointer into a Sync closure.

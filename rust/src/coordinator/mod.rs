@@ -34,6 +34,7 @@ pub mod shape;
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub use api::{CplxV, Mat2, Scal, Vec1, VecI64};
@@ -41,7 +42,7 @@ pub use engine::sim::{MachineModel, SimResult};
 pub use engine::{ExecStats, Mode, StepRecord};
 pub use shape::{DType, Shape};
 
-use engine::pool::ThreadPool;
+use engine::pool::SharedPool;
 use engine::EngineCfg;
 use node::NodeRef;
 use plan::PlanOptions;
@@ -49,7 +50,7 @@ use plan::PlanOptions;
 /// Optimisation level, mirroring `ARBB_OPT_LEVEL` (§3 of the paper):
 /// `O2` vectorises on a single core, `O3` additionally uses multiple
 /// cores.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OptLevel {
     O2,
     O3,
@@ -94,7 +95,10 @@ impl Default for Options {
 
 struct CtxInner {
     opts: RefCell<Options>,
-    pool: RefCell<Option<Rc<ThreadPool>>>,
+    /// Handle into the process-wide shared worker pool (O3 only). All
+    /// contexts with the same worker count share one set of long-lived
+    /// threads — per-dispatch pool spawn/join is gone.
+    pool: RefCell<Option<Arc<SharedPool>>>,
     stats: RefCell<ExecStats>,
 }
 
@@ -189,9 +193,20 @@ impl Context {
 
     /// Force materialisation of `node` (the ArBB `call()` + sync
     /// boundary). No-op when already materialised.
+    ///
+    /// Engine errors at this host-API boundary are programming errors
+    /// (malformed plans) and panic; the serving path ([`crate::serve`])
+    /// uses fallible execution end to end instead.
     pub(crate) fn force(&self, node: &NodeRef) {
+        if let Err(e) = self.try_force(node) {
+            panic!("arbb: execution failed: {e}");
+        }
+    }
+
+    /// Fallible variant of [`Self::force`].
+    pub(crate) fn try_force(&self, node: &NodeRef) -> crate::Result<()> {
         if node.is_materialized() {
-            return;
+            return Ok(());
         }
         let opts = self.options();
         let t0 = Instant::now();
@@ -211,15 +226,16 @@ impl Context {
             record: opts.record,
             in_place: opts.in_place,
         };
-        // Lazily build the pool for O3.
+        // Attach to the shared pool for O3 (interned per worker count;
+        // threads persist across dispatches and across contexts).
         if cfg.mode == Mode::Parallel && self.inner.pool.borrow().is_none() {
-            *self.inner.pool.borrow_mut() = Some(Rc::new(ThreadPool::new(opts.num_workers)));
+            *self.inner.pool.borrow_mut() = Some(engine::pool::shared(opts.num_workers));
         }
         let pool = self.inner.pool.borrow().clone();
         let mut stats = self.inner.stats.borrow_mut();
         stats.forces += 1;
         stats.plan_secs += plan_secs;
-        engine::execute_plan(&p, &cfg, pool.as_deref(), &mut stats);
+        engine::execute_plan(&p, &cfg, pool.as_deref(), &mut stats)
     }
 }
 

@@ -18,9 +18,18 @@
 //!   (fusion, CSE, constant folding, dead-code elimination), and three
 //!   execution engines (serial `O2`, threaded `O3`, and a calibrated
 //!   virtual-time scaling simulator standing in for the 40-core node).
+//! * [`serve`] — the production serving path: kernels are registered
+//!   once, captured+optimised plans are cached per argument signature
+//!   (capture-once / call-many, the paper's §4 cost model), and requests
+//!   flow through a bounded queue with batching onto a persistent
+//!   process-shared worker pool, with per-kernel throughput/latency/
+//!   cache-hit statistics.
 //! * [`runtime`] — the AOT/PJRT backend: loads HLO artifacts produced by
 //!   the build-time JAX/Pallas pipeline (`python/compile/`) and executes
-//!   them through the XLA PJRT CPU client.
+//!   them through the XLA PJRT CPU client. The PJRT client is gated
+//!   behind the default-off `pjrt` cargo feature; without it the module
+//!   keeps its API (and the artifact manifest tooling) but reports the
+//!   backend as unavailable.
 //! * [`sparse`] — CSR sparse matrices, random-fill and banded-SPD
 //!   generators (Tables 1 and 2 of the paper).
 //! * [`fftlib`] — radix-2 DIF, split-stream (Jansen et al.), and
@@ -42,6 +51,7 @@ pub mod euroben;
 pub mod fftlib;
 pub mod kernels;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod sparse;
 pub mod util;
@@ -49,20 +59,46 @@ pub mod util;
 pub use coordinator::{Context, Engine, MachineModel, Options, OptLevel};
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// (Hand-rolled `Display`/`Error` impls: the crate builds offline with
+/// zero external dependencies by default.)
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-    #[error("invalid argument: {0}")]
     Invalid(String),
-    #[error("runtime artifact error: {0}")]
     Artifact(String),
-    #[error("xla/pjrt error: {0}")]
     Xla(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Invalid(s) => write!(f, "invalid argument: {s}"),
+            Error::Artifact(s) => write!(f, "runtime artifact error: {s}"),
+            Error::Xla(s) => write!(f, "xla/pjrt error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

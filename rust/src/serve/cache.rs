@@ -1,0 +1,368 @@
+//! The plan cache: capture once, serve many.
+//!
+//! ArBB's headline cost model (§4 of the paper) is that a closure is
+//! JIT-captured and optimised a single time; every later call pays only
+//! dispatch. This module reproduces that contract for the serving
+//! subsystem: optimised [`CompiledPlan`]s are cached under a
+//! [`PlanKey`] — `(kernel id, argument dtypes+shapes, OptLevel)` — with
+//! LRU eviction and hit/miss/eviction counters. A cache hit performs
+//! **zero** capture or optimiser-pass work; only [`super::exec::execute`]
+//! runs.
+//!
+//! Capture runs the registered builder against *placeholder* parameter
+//! containers (deterministic pseudo-random f64 data, zero i64 indices),
+//! plans and compiles the resulting DAG, and then **verifies** the
+//! compiled replay against the regular engine on those same
+//! placeholders. Builders that force evaluation mid-capture (via
+//! `to_vec`/`value()`/`eval()`/`set_elem`) would bake placeholder values
+//! into the plan; that is detected and rejected with a clear error.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::node::{Data, Node, NodeRef, Op};
+use crate::coordinator::ops::RedOp;
+use crate::coordinator::passes;
+use crate::coordinator::plan::{plan, PlanOptions};
+use crate::coordinator::shape::{DType, Shape};
+use crate::coordinator::{Context, OptLevel};
+use crate::util::{close, XorShift64};
+use crate::{Error, Result};
+
+use super::exec::{self, CompiledPlan};
+use super::{KernelFn, Value};
+
+/// Cache key: which kernel, called with which argument signature, under
+/// which optimisation level.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Registered kernel index.
+    pub kernel: usize,
+    /// Per-argument (dtype, shape). Different shapes capture different
+    /// plans (loop bounds are baked in), so they must key separately.
+    pub args: Vec<(DType, Shape)>,
+    pub opt: OptLevel,
+}
+
+/// Counter snapshot for reporting and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served without capture work.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    plan: Arc<CompiledPlan>,
+    last_used: u64,
+}
+
+/// LRU cache of compiled plans.
+///
+/// Holds only `Send + Sync` [`CompiledPlan`]s, so the cache itself can
+/// sit behind a `Mutex` shared between the dispatcher and stats
+/// readers. Eviction scans for the least-recently-used entry — O(n) at
+/// capacity, which is irrelevant at realistic kernel counts.
+pub struct PlanCache {
+    cap: usize,
+    stamp: u64,
+    entries: HashMap<PlanKey, Entry>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> Self {
+        PlanCache {
+            cap: capacity.max(1),
+            stamp: 0,
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up a plan, counting a hit or a miss.
+    pub fn get(&mut self, key: &PlanKey) -> Option<Arc<CompiledPlan>> {
+        self.stamp += 1;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.stamp;
+                self.hits += 1;
+                Some(e.plan.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly captured plan, evicting the LRU entry at
+    /// capacity.
+    pub fn insert(&mut self, key: PlanKey, plan: Arc<CompiledPlan>) {
+        self.stamp += 1;
+        if !self.entries.contains_key(&key) && self.entries.len() >= self.cap {
+            if let Some(victim) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&victim);
+                self.evictions += 1;
+            }
+        }
+        self.entries.insert(key, Entry { plan, last_used: self.stamp });
+    }
+
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            len: self.entries.len(),
+            capacity: self.cap,
+        }
+    }
+}
+
+/// Build placeholder containers for a parameter signature.
+///
+/// f64 params get deterministic pseudo-random values in `[0.5, 1.5)`
+/// (safe under div/ln/sqrt); i64 params get zeros, which is the only
+/// generically in-bounds choice for index containers feeding
+/// `gather`/`map`. Structural index data (CSR layout, permutations)
+/// should be *baked* — bound inside the builder — not passed as
+/// parameters.
+fn placeholders(key: &PlanKey) -> Vec<Data> {
+    let mut rng = XorShift64::new(0x5eed_0001 ^ (key.kernel as u64).wrapping_mul(0x9e37_79b9));
+    key.args
+        .iter()
+        .map(|(dtype, shape)| match dtype {
+            DType::F64 => Data::F64(Arc::new(
+                (0..shape.len()).map(|_| rng.range_f64(0.5, 1.5)).collect(),
+            )),
+            DType::I64 => Data::I64(Arc::new(vec![0; shape.len()])),
+        })
+        .collect()
+}
+
+/// Build the parameter node + the builder-facing [`Value`] for one
+/// declared argument. Returns `(param_node, value)` — the param node is
+/// what requests rebind.
+///
+/// Scalar f64 params need care: the planner const-folds *materialised
+/// scalar sources* (see [`crate::coordinator::plan::const_value`]),
+/// which would bake the placeholder value into the plan. A scalar
+/// parameter is therefore a `D1(1)` source wrapped in a 1-element
+/// `ReduceAll(Sum)` — semantically the identity, but opaque to constant
+/// folding, so the plan re-reads it on every request.
+fn make_param(ctx: &Context, data: Data, dtype: DType, shape: Shape) -> (NodeRef, Value) {
+    match (dtype, shape) {
+        (DType::I64, _) => {
+            let node = Node::new_source(shape, data);
+            (node.clone(), Value::Ints(crate::coordinator::VecI64 { ctx: ctx.clone(), node }))
+        }
+        (DType::F64, Shape::Scalar) => {
+            let src = Node::new_source(Shape::D1(1), data);
+            let node =
+                Node::new(Op::ReduceAll(RedOp::Sum, src.clone()), Shape::Scalar, DType::F64);
+            (src, Value::Scalar(crate::coordinator::Scal { ctx: ctx.clone(), node }))
+        }
+        (DType::F64, Shape::D2 { .. }) => {
+            let node = Node::new_source(shape, data);
+            (node.clone(), Value::Mat(crate::coordinator::Mat2 { ctx: ctx.clone(), node }))
+        }
+        (DType::F64, Shape::D1(_)) => {
+            let node = Node::new_source(shape, data);
+            (node.clone(), Value::Vec(crate::coordinator::Vec1 { ctx: ctx.clone(), node }))
+        }
+    }
+}
+
+/// Capture, optimise, compile and verify one kernel for one signature.
+///
+/// This is the entire "JIT" cost of a cache miss; hits skip all of it.
+pub fn capture(ctx: &Context, builder: &KernelFn, key: &PlanKey) -> Result<Arc<CompiledPlan>> {
+    let t0 = Instant::now();
+    let args = placeholders(key);
+    let mut params: Vec<NodeRef> = Vec::with_capacity(key.args.len());
+    let mut values: Vec<Value> = Vec::with_capacity(key.args.len());
+    for ((dtype, shape), data) in key.args.iter().zip(&args) {
+        let (param, value) = make_param(ctx, data.clone(), *dtype, *shape);
+        params.push(param);
+        values.push(value);
+    }
+
+    let forces_before = ctx.stats(|s| s.forces);
+    let out = builder(ctx, &values);
+    let root = out.node().clone();
+    if ctx.stats(|s| s.forces) != forces_before {
+        return Err(Error::Invalid(
+            "kernel builder forced evaluation during capture; serving builders must stay \
+             lazy (no to_vec/read_to/value()/eval()/set_elem) so the plan is input-independent"
+                .into(),
+        ));
+    }
+
+    let opts = ctx.options();
+    if opts.cse {
+        passes::cse::cse(&root);
+    }
+    let p = plan(&root, PlanOptions { fusion: opts.fusion, in_place: opts.in_place });
+    let mut cp = exec::compile(&p, &params, &root)?;
+
+    // Verify the compiled replay against the regular engine on the
+    // placeholder inputs — catches compile bugs and any capture
+    // impurity the force-counter missed.
+    let replay = exec::execute(&cp, &args)?;
+    ctx.try_force(&root)?;
+    let want = root
+        .data()
+        .ok_or_else(|| Error::Invalid("capture verification: root did not materialise".into()))?;
+    let want = want.as_f64();
+    if replay.len() != want.len()
+        || replay.iter().zip(want.iter()).any(|(a, b)| !close(*a, *b, 1e-12, 1e-300))
+    {
+        return Err(Error::Invalid(
+            "capture verification failed: compiled replay disagrees with the engine \
+             (is the kernel builder deterministic and capture-pure?)"
+                .into(),
+        ));
+    }
+
+    cp.build_secs = t0.elapsed().as_secs_f64();
+    Ok(Arc::new(cp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(kernel: usize, n: usize) -> PlanKey {
+        PlanKey { kernel, args: vec![(DType::F64, Shape::D1(n))], opt: OptLevel::O2 }
+    }
+
+    fn dummy_plan() -> Arc<CompiledPlan> {
+        // A real (tiny) compiled plan: y = x * 2.
+        let ctx = Context::new();
+        let x = ctx.bind1(&[0.0; 2]);
+        let y = x.scale(2.0);
+        let p = plan(&y.node, PlanOptions::default());
+        Arc::new(exec::compile(&p, &[x.node.clone()], &y.node).unwrap())
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = PlanCache::new(4);
+        let k = key(0, 8);
+        assert!(c.get(&k).is_none());
+        c.insert(k.clone(), dummy_plan());
+        assert!(c.get(&k).is_some());
+        assert!(c.get(&k).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 1, 0));
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = PlanCache::new(2);
+        let (ka, kb, kc) = (key(0, 1), key(1, 1), key(2, 1));
+        c.insert(ka.clone(), dummy_plan());
+        c.insert(kb.clone(), dummy_plan());
+        // touch A so B becomes the LRU victim
+        assert!(c.get(&ka).is_some());
+        c.insert(kc.clone(), dummy_plan());
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(&ka), "recently used survives");
+        assert!(!c.contains(&kb), "LRU entry evicted");
+        assert!(c.contains(&kc));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn distinct_shapes_are_distinct_keys() {
+        let mut c = PlanCache::new(8);
+        c.insert(key(0, 8), dummy_plan());
+        assert!(c.get(&key(0, 16)).is_none(), "shape is part of the key");
+        assert!(c.get(&key(0, 8)).is_some());
+        // dtype and opt level key separately too
+        let ik = PlanKey { kernel: 0, args: vec![(DType::I64, Shape::D1(8))], opt: OptLevel::O2 };
+        assert!(c.get(&ik).is_none());
+        let o3 = PlanKey { kernel: 0, args: vec![(DType::F64, Shape::D1(8))], opt: OptLevel::O3 };
+        assert!(c.get(&o3).is_none());
+    }
+
+    #[test]
+    fn capture_rejects_forcing_builders() {
+        let ctx = Context::new();
+        let builder: Box<KernelFn> = Box::new(|_ctx, vals| {
+            let x = vals[0].vec1();
+            let y = x.scale(3.0);
+            let _ = y.to_vec(); // illegal: forces during capture
+            Value::Vec(y)
+        });
+        let err = capture(&ctx, &builder, &key(0, 4));
+        match err {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("forced evaluation"), "{msg}"),
+            other => panic!("expected capture-purity rejection, got ok={}", other.is_ok()),
+        }
+    }
+
+    #[test]
+    fn capture_produces_replayable_plan() {
+        let ctx = Context::new();
+        let builder: Box<KernelFn> = Box::new(|_ctx, vals| {
+            let x = vals[0].vec1();
+            let y = vals[1].vec1();
+            Value::Vec((&x + &y).scale(0.5))
+        });
+        let k = PlanKey {
+            kernel: 7,
+            args: vec![(DType::F64, Shape::D1(3)), (DType::F64, Shape::D1(3))],
+            opt: OptLevel::O2,
+        };
+        let cp = capture(&ctx, &builder, &k).unwrap();
+        let got = exec::execute(
+            &cp,
+            &[
+                Data::F64(Arc::new(vec![1.0, 2.0, 3.0])),
+                Data::F64(Arc::new(vec![3.0, 2.0, 1.0])),
+            ],
+        )
+        .unwrap();
+        assert_eq!(got, vec![2.0, 2.0, 2.0]);
+        assert!(cp.build_secs() > 0.0);
+    }
+}

@@ -1,0 +1,575 @@
+//! Compiled, replayable execution plans — the artifact the plan cache
+//! stores.
+//!
+//! [`crate::coordinator::plan::Plan`] is tied to the capture-time node
+//! graph: its steps hold `Rc` node references and execution materialises
+//! results *into* those nodes, which makes a plan single-shot and
+//! thread-bound. Serving needs the opposite: capture once, then replay
+//! the optimised plan many times, concurrently, against fresh inputs.
+//!
+//! [`compile`] severs the plan from the graph. Every node reference is
+//! classified into one of three [`CSrc`] kinds:
+//!
+//!  * **Param(i)** — the i-th kernel parameter, rebound per request;
+//!  * **Temp(i)**  — an intermediate produced by an earlier step of the
+//!    same plan, held in a per-request slot vector;
+//!  * **Baked** — a capture-time constant (bound tables, twiddle
+//!    factors, `zeros` seeds), shared read-only via `Arc`.
+//!
+//! The result is a self-contained, `Send + Sync` [`CompiledPlan`]:
+//! replaying it touches no `Rc`, no `RefCell` and no node storage, so
+//! any number of pool workers can execute the same cached plan on
+//! different requests at once. All fused-loop machinery is reused from
+//! [`crate::coordinator::engine::eval`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::engine::eval::{eval_range, with_scratch, FExec, BLOCK};
+use crate::coordinator::map::{Elemental, MapArgs};
+use crate::coordinator::node::{Data, NodeRef, Op};
+use crate::coordinator::ops::{BinOp, RedOp, UnOp};
+use crate::coordinator::plan::{FTree, Plan, Step};
+use crate::coordinator::shape::{DType, Shape, View};
+use crate::{Error, Result};
+
+/// Declared parameter of a compiled kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub dtype: DType,
+    pub shape: Shape,
+}
+
+/// Where a compiled step reads a buffer from.
+#[derive(Debug, Clone)]
+pub enum CSrc {
+    /// Kernel parameter, rebound on every request.
+    Param(usize),
+    /// Intermediate produced by an earlier step (per-request slot).
+    Temp(usize),
+    /// Capture-time constant, shared read-only.
+    Baked(Data),
+}
+
+/// A fused expression tree with graph-free leaves.
+#[derive(Debug, Clone)]
+pub enum CTree {
+    Leaf { src: CSrc, view: View },
+    /// Broadcast scalar (reads element 0 of the resolved buffer).
+    Scalar { src: CSrc },
+    Const(f64),
+    Iota,
+    Acc,
+    Bin(BinOp, Box<CTree>, Box<CTree>),
+    Un(UnOp, Box<CTree>),
+}
+
+/// One compiled step. Mirrors [`Step`] with node references replaced by
+/// [`CSrc`]/slot indices and all geometry captured by value.
+#[derive(Debug, Clone)]
+pub enum CStep {
+    Fused { out: usize, len: usize, tree: CTree },
+    Accumulate { out: usize, len: usize, base: CSrc, tree: CTree },
+    ReduceRows { out: usize, red: RedOp, tree: CTree, rows: usize, cols: usize },
+    ReduceCols { out: usize, red: RedOp, tree: CTree, rows: usize, cols: usize },
+    ReduceAll { out: usize, red: RedOp, tree: CTree, len: usize },
+    Cat { out: usize, a: CTree, la: usize, b: CTree, lb: usize },
+    ReplaceCol { out: usize, m: CSrc, rows: usize, cols: usize, col: usize, vtree: CTree },
+    ReplaceRow { out: usize, m: CSrc, cols: usize, row: usize, vtree: CTree },
+    SetElem { out: usize, m: CSrc, cols: usize, i: usize, j: usize, s: CSrc },
+    Gather { out: usize, len: usize, src: CSrc, idx: CSrc },
+    Map { out: usize, len: usize, f: Arc<Elemental>, captures: Vec<CSrc> },
+}
+
+/// A capture-once / call-many execution plan: fully owned, `Send + Sync`.
+pub struct CompiledPlan {
+    pub(crate) params: Vec<ParamSpec>,
+    pub(crate) steps: Vec<CStep>,
+    pub(crate) n_temps: usize,
+    pub(crate) root: CSrc,
+    pub(crate) out_len: usize,
+    /// Wall seconds spent capturing + optimising + compiling (paid once
+    /// per cache miss; repeat invocations pay zero of this).
+    pub(crate) build_secs: f64,
+}
+
+impl CompiledPlan {
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn build_secs(&self) -> f64 {
+        self.build_secs
+    }
+}
+
+// CompiledPlan must stay shareable across pool workers.
+#[allow(dead_code)]
+fn _assert_send_sync() {
+    fn ok<T: Send + Sync>() {}
+    ok::<CompiledPlan>();
+}
+
+fn invalid(msg: impl Into<String>) -> Error {
+    Error::Invalid(msg.into())
+}
+
+fn f64_buf(d: &Data) -> Result<&Arc<Vec<f64>>> {
+    match d {
+        Data::F64(v) => Ok(v),
+        Data::I64(_) => Err(invalid("compiled plan: expected f64 buffer, found i64")),
+    }
+}
+
+fn i64_buf(d: &Data) -> Result<&Arc<Vec<i64>>> {
+    match d {
+        Data::I64(v) => Ok(v),
+        Data::F64(_) => Err(invalid("compiled plan: expected i64 buffer, found f64")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// compile: Plan (graph-bound) → CompiledPlan (free-standing)
+// ---------------------------------------------------------------------
+
+struct Compiler {
+    param_ix: HashMap<u64, usize>,
+    temp_ix: HashMap<u64, usize>,
+}
+
+impl Compiler {
+    fn classify(&self, n: &NodeRef) -> Result<CSrc> {
+        if let Some(&i) = self.param_ix.get(&n.id) {
+            return Ok(CSrc::Param(i));
+        }
+        if let Some(&i) = self.temp_ix.get(&n.id) {
+            return Ok(CSrc::Temp(i));
+        }
+        if let Some(d) = n.data() {
+            return Ok(CSrc::Baked(d));
+        }
+        Err(invalid(format!(
+            "malformed plan: node {} is neither a parameter, an earlier step's \
+             output, nor a capture-time constant",
+            n.id
+        )))
+    }
+
+    fn tree(&self, t: &FTree) -> Result<CTree> {
+        Ok(match t {
+            FTree::Leaf { node, view } => CTree::Leaf { src: self.classify(node)?, view: *view },
+            FTree::ScalarLeaf { node } => CTree::Scalar { src: self.classify(node)? },
+            FTree::Const(c) => CTree::Const(*c),
+            FTree::Iota => CTree::Iota,
+            FTree::Acc => CTree::Acc,
+            FTree::Bin(op, a, b) => CTree::Bin(*op, Box::new(self.tree(a)?), Box::new(self.tree(b)?)),
+            FTree::Un(op, a) => CTree::Un(*op, Box::new(self.tree(a)?)),
+        })
+    }
+}
+
+/// Compile `plan` (produced for the DAG rooted at `root`, with the given
+/// parameter placeholder nodes) into a free-standing [`CompiledPlan`].
+pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<CompiledPlan> {
+    let mut c = Compiler {
+        param_ix: params.iter().enumerate().map(|(i, p)| (p.id, i)).collect(),
+        temp_ix: HashMap::new(),
+    };
+    let mut steps = Vec::with_capacity(plan.steps.len());
+    for step in &plan.steps {
+        let out_node = step.out();
+        let out_len = out_node.shape.len();
+        // Compile the body against *earlier* slots, then allocate this
+        // step's slot (a step never reads its own output; in-place
+        // accumulation is expressed through the CTree::Acc marker).
+        let slot = c.temp_ix.len();
+        let cstep = match step {
+            Step::Fused { tree, .. } => {
+                CStep::Fused { out: slot, len: out_len, tree: c.tree(tree)? }
+            }
+            Step::Accumulate { base, tree, .. } => CStep::Accumulate {
+                out: slot,
+                len: out_len,
+                base: c.classify(base)?,
+                tree: c.tree(tree)?,
+            },
+            Step::ReduceRows { red, tree, rows, cols, .. } => CStep::ReduceRows {
+                out: slot,
+                red: *red,
+                tree: c.tree(tree)?,
+                rows: *rows,
+                cols: *cols,
+            },
+            Step::ReduceCols { red, tree, rows, cols, .. } => CStep::ReduceCols {
+                out: slot,
+                red: *red,
+                tree: c.tree(tree)?,
+                rows: *rows,
+                cols: *cols,
+            },
+            Step::ReduceAll { red, tree, len, .. } => {
+                CStep::ReduceAll { out: slot, red: *red, tree: c.tree(tree)?, len: *len }
+            }
+            Step::Cat { a, la, b, lb, .. } => CStep::Cat {
+                out: slot,
+                a: c.tree(a)?,
+                la: *la,
+                b: c.tree(b)?,
+                lb: *lb,
+            },
+            Step::ReplaceCol { m, col, vtree, .. } => CStep::ReplaceCol {
+                out: slot,
+                m: c.classify(m)?,
+                rows: out_node.shape.rows(),
+                cols: out_node.shape.cols(),
+                col: *col,
+                vtree: c.tree(vtree)?,
+            },
+            Step::ReplaceRow { m, row, vtree, .. } => CStep::ReplaceRow {
+                out: slot,
+                m: c.classify(m)?,
+                cols: out_node.shape.cols(),
+                row: *row,
+                vtree: c.tree(vtree)?,
+            },
+            Step::SetElem { m, i, j, s, .. } => CStep::SetElem {
+                out: slot,
+                m: c.classify(m)?,
+                cols: out_node.shape.cols(),
+                i: *i,
+                j: *j,
+                s: c.classify(s)?,
+            },
+            Step::Gather { src, idx, .. } => CStep::Gather {
+                out: slot,
+                len: out_len,
+                src: c.classify(src)?,
+                idx: c.classify(idx)?,
+            },
+            Step::Map { out } => {
+                let op = out.op.borrow();
+                let mf = match &*op {
+                    Op::Map(f) => f,
+                    _ => return Err(invalid("malformed plan: Map step on non-map node")),
+                };
+                let captures =
+                    mf.captures.iter().map(|n| c.classify(n)).collect::<Result<Vec<_>>>()?;
+                CStep::Map { out: slot, len: out_len, f: mf.f.clone(), captures }
+            }
+        };
+        c.temp_ix.insert(out_node.id, slot);
+        steps.push(cstep);
+    }
+    let root_src = c.classify(root)?;
+    Ok(CompiledPlan {
+        params: params.iter().map(|p| ParamSpec { dtype: p.dtype, shape: p.shape }).collect(),
+        n_temps: c.temp_ix.len(),
+        steps,
+        root: root_src,
+        out_len: root.shape.len(),
+        build_secs: 0.0,
+    })
+}
+
+// ---------------------------------------------------------------------
+// execute: replay a compiled plan against fresh inputs
+// ---------------------------------------------------------------------
+
+fn resolve<'a>(src: &'a CSrc, args: &'a [Data], temps: &'a [Option<Data>]) -> Result<&'a Data> {
+    match src {
+        CSrc::Param(i) => {
+            args.get(*i).ok_or_else(|| invalid("compiled plan: parameter index out of range"))
+        }
+        CSrc::Temp(i) => temps
+            .get(*i)
+            .and_then(|t| t.as_ref())
+            .ok_or_else(|| invalid("malformed plan: temp slot read before it was written")),
+        CSrc::Baked(d) => Ok(d),
+    }
+}
+
+fn lower_ctree(t: &CTree, args: &[Data], temps: &[Option<Data>]) -> Result<FExec> {
+    Ok(match t {
+        CTree::Leaf { src, view } => {
+            FExec::Leaf { data: f64_buf(resolve(src, args, temps)?)?.clone(), view: *view }
+        }
+        CTree::Scalar { src } => {
+            let buf = f64_buf(resolve(src, args, temps)?)?;
+            let v = buf.first().copied().ok_or_else(|| invalid("empty scalar buffer"))?;
+            FExec::Const(v)
+        }
+        CTree::Const(c) => FExec::Const(*c),
+        CTree::Iota => FExec::Iota,
+        CTree::Acc => FExec::Acc,
+        CTree::Bin(op, a, b) => FExec::Bin(
+            *op,
+            Box::new(lower_ctree(a, args, temps)?),
+            Box::new(lower_ctree(b, args, temps)?),
+        ),
+        CTree::Un(op, a) => FExec::Un(*op, Box::new(lower_ctree(a, args, temps)?)),
+    })
+}
+
+/// Execute one compiled plan against `args` (one [`Data`] per declared
+/// parameter, shapes already validated against the cache key).
+///
+/// Pure with respect to the plan: all mutable state lives in the local
+/// temp slots, so any number of threads may call this concurrently on
+/// the same `CompiledPlan`.
+pub fn execute(cp: &CompiledPlan, args: &[Data]) -> Result<Vec<f64>> {
+    if args.len() != cp.params.len() {
+        return Err(invalid(format!(
+            "kernel expects {} arguments, got {}",
+            cp.params.len(),
+            args.len()
+        )));
+    }
+    for (k, (a, spec)) in args.iter().zip(&cp.params).enumerate() {
+        if a.dtype() != spec.dtype || a.len() != spec.shape.len() {
+            return Err(invalid(format!(
+                "argument {k}: expected {:?} x {}, got {:?} x {}",
+                spec.dtype,
+                spec.shape.len(),
+                a.dtype(),
+                a.len()
+            )));
+        }
+    }
+    let mut temps: Vec<Option<Data>> = vec![None; cp.n_temps];
+    for step in &cp.steps {
+        run_step(step, args, &mut temps)?;
+    }
+    let out = f64_buf(resolve(&cp.root, args, &temps)?)?;
+    Ok((**out).clone())
+}
+
+fn store(temps: &mut [Option<Data>], slot: usize, v: Vec<f64>) -> Result<()> {
+    let cell = temps
+        .get_mut(slot)
+        .ok_or_else(|| invalid("malformed plan: temp slot index out of range"))?;
+    *cell = Some(Data::F64(Arc::new(v)));
+    Ok(())
+}
+
+fn run_step(step: &CStep, args: &[Data], temps: &mut Vec<Option<Data>>) -> Result<()> {
+    match step {
+        CStep::Fused { out, len, tree } => {
+            let fx = lower_ctree(tree, args, temps)?;
+            let mut v = vec![0.0f64; *len];
+            with_scratch(|s| eval_range(&fx, 0, &mut v, s));
+            store(temps, *out, v)
+        }
+        CStep::Accumulate { out, len, base, tree } => {
+            let fx = lower_ctree(tree, args, temps)?;
+            let mut v: Vec<f64> = (**f64_buf(resolve(base, args, temps)?)?).clone();
+            if v.len() != *len {
+                return Err(invalid("malformed plan: accumulate base length mismatch"));
+            }
+            with_scratch(|s| eval_range(&fx, 0, &mut v, s));
+            store(temps, *out, v)
+        }
+        CStep::ReduceRows { out, red, tree, rows, cols } => {
+            let fx = lower_ctree(tree, args, temps)?;
+            let mut v = vec![0.0f64; *rows];
+            with_scratch(|scratch| {
+                let mut buf = scratch.take();
+                for (r, ov) in v.iter_mut().enumerate() {
+                    let mut acc = red.identity();
+                    let mut off = 0;
+                    while off < *cols {
+                        let l = BLOCK.min(*cols - off);
+                        eval_range(&fx, r * *cols + off, &mut buf[..l], scratch);
+                        acc = red.fold(acc, red.fold_slice(&buf[..l]));
+                        off += l;
+                    }
+                    *ov = acc;
+                }
+                scratch.put(buf);
+            });
+            store(temps, *out, v)
+        }
+        CStep::ReduceCols { out, red, tree, rows, cols } => {
+            let fx = lower_ctree(tree, args, temps)?;
+            let mut v = vec![red.identity(); *cols];
+            with_scratch(|scratch| {
+                let mut buf = scratch.take();
+                for r in 0..*rows {
+                    let mut off = 0;
+                    while off < *cols {
+                        let l = BLOCK.min(*cols - off);
+                        eval_range(&fx, r * *cols + off, &mut buf[..l], scratch);
+                        for k in 0..l {
+                            v[off + k] = red.fold(v[off + k], buf[k]);
+                        }
+                        off += l;
+                    }
+                }
+                scratch.put(buf);
+            });
+            store(temps, *out, v)
+        }
+        CStep::ReduceAll { out, red, tree, len } => {
+            let fx = lower_ctree(tree, args, temps)?;
+            let mut acc = red.identity();
+            with_scratch(|scratch| {
+                let mut buf = scratch.take();
+                let mut off = 0;
+                while off < *len {
+                    let l = BLOCK.min(*len - off);
+                    eval_range(&fx, off, &mut buf[..l], scratch);
+                    acc = red.fold(acc, red.fold_slice(&buf[..l]));
+                    off += l;
+                }
+                scratch.put(buf);
+            });
+            store(temps, *out, vec![acc])
+        }
+        CStep::Cat { out, a, la, b, lb } => {
+            let fa = lower_ctree(a, args, temps)?;
+            let fb = lower_ctree(b, args, temps)?;
+            let mut v = vec![0.0f64; la + lb];
+            with_scratch(|s| {
+                let (ha, hb) = v.split_at_mut(*la);
+                eval_range(&fa, 0, ha, s);
+                eval_range(&fb, 0, hb, s);
+            });
+            store(temps, *out, v)
+        }
+        CStep::ReplaceCol { out, m, rows, cols, col, vtree } => {
+            let fx = lower_ctree(vtree, args, temps)?;
+            let mut v: Vec<f64> = (**f64_buf(resolve(m, args, temps)?)?).clone();
+            let mut tmp = vec![0.0f64; *rows];
+            with_scratch(|s| eval_range(&fx, 0, &mut tmp, s));
+            for (r, t) in tmp.iter().enumerate() {
+                v[r * *cols + *col] = *t;
+            }
+            store(temps, *out, v)
+        }
+        CStep::ReplaceRow { out, m, cols, row, vtree } => {
+            let fx = lower_ctree(vtree, args, temps)?;
+            let mut v: Vec<f64> = (**f64_buf(resolve(m, args, temps)?)?).clone();
+            with_scratch(|s| eval_range(&fx, 0, &mut v[row * cols..(row + 1) * cols], s));
+            store(temps, *out, v)
+        }
+        CStep::SetElem { out, m, cols, i, j, s } => {
+            let mut v: Vec<f64> = (**f64_buf(resolve(m, args, temps)?)?).clone();
+            let sv = f64_buf(resolve(s, args, temps)?)?
+                .first()
+                .copied()
+                .ok_or_else(|| invalid("empty set_elem scalar"))?;
+            v[i * cols + j] = sv;
+            store(temps, *out, v)
+        }
+        CStep::Gather { out, len, src, idx } => {
+            let sd = f64_buf(resolve(src, args, temps)?)?.clone();
+            let ix = i64_buf(resolve(idx, args, temps)?)?.clone();
+            if ix.len() < *len {
+                return Err(invalid("gather index container shorter than output"));
+            }
+            let mut v = vec![0.0f64; *len];
+            for (k, ov) in v.iter_mut().enumerate() {
+                let i = ix[k] as usize;
+                *ov = *sd
+                    .get(i)
+                    .ok_or_else(|| invalid(format!("gather index {} out of range", ix[k])))?;
+            }
+            store(temps, *out, v)
+        }
+        CStep::Map { out, len, f, captures } => {
+            let mut f64s: Vec<Arc<Vec<f64>>> = Vec::new();
+            let mut i64s: Vec<Arc<Vec<i64>>> = Vec::new();
+            for cap in captures {
+                match resolve(cap, args, temps)? {
+                    Data::F64(v) => f64s.push(v.clone()),
+                    Data::I64(v) => i64s.push(v.clone()),
+                }
+            }
+            let f64refs: Vec<&[f64]> = f64s.iter().map(|a| a.as_slice()).collect();
+            let i64refs: Vec<&[i64]> = i64s.iter().map(|a| a.as_slice()).collect();
+            let margs = MapArgs { f64s: f64refs, i64s: i64refs };
+            let mut v = vec![0.0f64; *len];
+            for (k, ov) in v.iter_mut().enumerate() {
+                *ov = f(&margs, k);
+            }
+            store(temps, *out, v)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::{plan, PlanOptions};
+    use crate::coordinator::Context;
+
+    /// Capture `y = (a + b) * a` with placeholder params, compile it,
+    /// then replay against fresh inputs and check against the host.
+    #[test]
+    fn compile_and_replay_elementwise() {
+        let ctx = Context::new();
+        let a = ctx.bind1(&[0.0; 4]);
+        let b = ctx.bind1(&[0.0; 4]);
+        let y = (&a + &b) * &a;
+        let p = plan(&y.node, PlanOptions::default());
+        let cp = compile(&p, &[a.node.clone(), b.node.clone()], &y.node).unwrap();
+        assert_eq!(cp.out_len(), 4);
+
+        let av = vec![1.0, 2.0, 3.0, 4.0];
+        let bv = vec![10.0, 20.0, 30.0, 40.0];
+        let want: Vec<f64> = av.iter().zip(&bv).map(|(x, y)| (x + y) * x).collect();
+        for _ in 0..3 {
+            let got = execute(
+                &cp,
+                &[
+                    Data::F64(Arc::new(av.clone())),
+                    Data::F64(Arc::new(bv.clone())),
+                ],
+            )
+            .unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn replay_reduction_and_views() {
+        // dot(a, section(b, 0, n)) exercised through reduce + view fusion.
+        let n = 1000;
+        let ctx = Context::new();
+        let a = ctx.bind1(&vec![0.0; n]);
+        let b = ctx.bind1(&vec![0.0; n]);
+        let y = a.dot(&b);
+        let p = plan(&y.node, PlanOptions::default());
+        let cp = compile(&p, &[a.node.clone(), b.node.clone()], &y.node).unwrap();
+        let av: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let bv: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+        let want: f64 = av.iter().zip(&bv).map(|(x, y)| x * y).sum();
+        let got = execute(
+            &cp,
+            &[Data::F64(Arc::new(av)), Data::F64(Arc::new(bv))],
+        )
+        .unwrap();
+        assert_eq!(got.len(), 1);
+        assert!((got[0] - want).abs() < 1e-9 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn argument_shape_mismatch_is_error() {
+        let ctx = Context::new();
+        let a = ctx.bind1(&[0.0; 4]);
+        let y = a.scale(2.0);
+        let p = plan(&y.node, PlanOptions::default());
+        let cp = compile(&p, &[a.node.clone()], &y.node).unwrap();
+        let bad = execute(&cp, &[Data::F64(Arc::new(vec![1.0; 5]))]);
+        assert!(bad.is_err());
+        let none = execute(&cp, &[]);
+        assert!(none.is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! `serve` — a plan-caching, batching kernel-serving subsystem on a
+//! persistent worker pool.
+//!
+//! # The capture-once / call-many serving model
+//!
+//! ArBB's central performance claim (§4 of the paper) is that a closure
+//! is JIT-captured and optimised **once**; every later invocation pays
+//! only dispatch cost. The interactive DSL path in [`crate::coordinator`]
+//! re-captures and re-plans on every `force()` — faithful to the paper's
+//! measurements, but wrong for a server. This module provides the
+//! serving path:
+//!
+//! 1. **Kernels are registered, not evaluated.** A kernel is a *builder*
+//!    closure that constructs the expression DAG from placeholder
+//!    parameters. It runs once per distinct argument signature.
+//! 2. **Plans are cached.** The captured DAG is optimised, lowered and
+//!    compiled into a graph-free, `Send + Sync`
+//!    [`exec::CompiledPlan`], cached under
+//!    `(kernel id, argument shapes, OptLevel)` with LRU eviction
+//!    ([`cache::PlanCache`]). A cache hit performs zero capture and
+//!    zero optimiser-pass work.
+//! 3. **Requests are queued, batched and swept.** A bounded MPSC queue
+//!    feeds a dispatcher that coalesces same-plan requests and executes
+//!    each group as a single fork-join sweep on the persistent shared
+//!    worker pool ([`pool`]) — one barrier per batch instead of one per
+//!    step per request. [`Client::try_submit`] returns
+//!    [`SubmitError::QueueFull`] under backpressure.
+//! 4. **Serving stats are first-class.** Throughput, p50/p99 latency,
+//!    batch sizes and cache hit rates per kernel ([`stats`]), rendered
+//!    in the same style as [`crate::bench::harness`] reports.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use arbb_rs::serve::{Arg, ServeConfig, Server, Value};
+//!
+//! // Register once: a saxpy-like kernel over two vectors.
+//! let server = Server::builder(ServeConfig::default())
+//!     .kernel("saxpy", |_ctx, params| {
+//!         let x = params[0].vec1();
+//!         let y = params[1].vec1();
+//!         Value::Vec(&x.scale(2.0) + &y)
+//!     })
+//!     .start();
+//!
+//! // Call many: the first call captures + compiles, every later call
+//! // with the same shapes replays the cached plan.
+//! let client = server.client();
+//! let out = client
+//!     .call("saxpy", vec![Arg::vec(vec![1.0, 2.0]), Arg::vec(vec![10.0, 20.0])])
+//!     .unwrap();
+//! assert_eq!(out, vec![12.0, 24.0]);
+//! println!("{}", client.report());
+//! ```
+//!
+//! Builders must stay **lazy**: no `to_vec()`, `value()`, `eval()` or
+//! `set_elem()` inside a builder (those force evaluation mid-capture and
+//! would bake placeholder data into the plan). Capture detects and
+//! rejects this. Host-side constants — CSR structure, twiddle tables —
+//! should be bound inside the builder; they are baked into the compiled
+//! plan and shared read-only across requests.
+
+pub mod cache;
+pub mod exec;
+pub mod pool;
+pub mod scheduler;
+pub mod stats;
+
+use std::sync::Arc;
+
+use crate::coordinator::node::{Data, NodeRef};
+use crate::coordinator::shape::{DType, Shape};
+use crate::coordinator::{Context, Mat2, OptLevel, Scal, Vec1, VecI64};
+
+pub use cache::{CacheStats, PlanCache, PlanKey};
+pub use exec::CompiledPlan;
+pub use scheduler::{Client, Server, ServerBuilder, SubmitError, Ticket};
+pub use stats::{KernelStats, ServeStats};
+
+/// A kernel builder: constructs the expression DAG for one request
+/// signature from placeholder parameter containers. Runs on the
+/// dispatcher thread; must be capture-pure (lazy).
+pub type KernelFn = dyn Fn(&Context, &[Value]) -> Value + Send;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads in the shared pool that batch sweeps fan out
+    /// over (1 = run requests inline on the dispatcher).
+    pub workers: usize,
+    /// Optimisation level recorded in plan-cache keys and used for
+    /// capture-time verification runs.
+    pub opt_level: OptLevel,
+    /// Bound of the submission queue; beyond it `try_submit` reports
+    /// [`SubmitError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Maximum requests coalesced into one dispatch round.
+    pub max_batch: usize,
+    /// Plan-cache capacity (entries), LRU beyond that.
+    pub plan_cache_capacity: usize,
+    /// Element-wise fusion during capture (ArBB's main optimisation).
+    pub fusion: bool,
+    /// Structural CSE during capture.
+    pub cse: bool,
+    /// Minimum elements per parallel chunk (capture verification runs).
+    pub grain: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: pool::default_workers(),
+            opt_level: OptLevel::O3,
+            queue_capacity: 256,
+            max_batch: 32,
+            plan_cache_capacity: 64,
+            fusion: true,
+            cse: false,
+            grain: 4096,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Single-worker, serial configuration (useful for tests and as the
+    /// no-batching comparison point in benches).
+    pub fn serial() -> Self {
+        ServeConfig { workers: 1, opt_level: OptLevel::O2, ..Default::default() }
+    }
+}
+
+/// A request argument: host data plus its container shape.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F64 { data: Vec<f64>, shape: Shape },
+    I64 { data: Vec<i64>, shape: Shape },
+}
+
+impl Arg {
+    /// 1-D f64 container.
+    pub fn vec(data: Vec<f64>) -> Arg {
+        let n = data.len();
+        Arg::F64 { data, shape: Shape::D1(n) }
+    }
+
+    /// Row-major 2-D f64 container.
+    pub fn mat(data: Vec<f64>, rows: usize, cols: usize) -> Arg {
+        Arg::F64 { data, shape: Shape::D2 { rows, cols } }
+    }
+
+    /// Scalar in ArBB space.
+    pub fn scalar(v: f64) -> Arg {
+        Arg::F64 { data: vec![v], shape: Shape::Scalar }
+    }
+
+    /// 1-D i64 index container.
+    pub fn ints(data: Vec<i64>) -> Arg {
+        let n = data.len();
+        Arg::I64 { data, shape: Shape::D1(n) }
+    }
+
+    pub fn shape(&self) -> Shape {
+        match self {
+            Arg::F64 { shape, .. } | Arg::I64 { shape, .. } => *shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Arg::F64 { .. } => DType::F64,
+            Arg::I64 { .. } => DType::I64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Arg::F64 { data, .. } => data.len(),
+            Arg::I64 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub(crate) fn into_data(self) -> Data {
+        match self {
+            Arg::F64 { data, .. } => Data::F64(Arc::new(data)),
+            Arg::I64 { data, .. } => Data::I64(Arc::new(data)),
+        }
+    }
+}
+
+/// A DSL value crossing the kernel-builder boundary: parameters arrive
+/// as `Value`s and the builder returns one.
+pub enum Value {
+    Vec(Vec1),
+    Mat(Mat2),
+    Scalar(Scal),
+    Ints(VecI64),
+}
+
+impl Value {
+    pub(crate) fn node(&self) -> &NodeRef {
+        match self {
+            Value::Vec(v) => &v.node,
+            Value::Mat(m) => &m.node,
+            Value::Scalar(s) => &s.node,
+            Value::Ints(v) => &v.node,
+        }
+    }
+
+    /// The parameter as a 1-D f64 container (panics otherwise — builder
+    /// panics are caught and turned into request errors).
+    pub fn vec1(&self) -> Vec1 {
+        match self {
+            Value::Vec(v) => v.clone(),
+            _ => panic!("kernel parameter is not a 1-D f64 container"),
+        }
+    }
+
+    /// The parameter as a 2-D f64 container.
+    pub fn mat2(&self) -> Mat2 {
+        match self {
+            Value::Mat(m) => m.clone(),
+            _ => panic!("kernel parameter is not a 2-D f64 container"),
+        }
+    }
+
+    /// The parameter as an ArBB-space scalar.
+    pub fn scal(&self) -> Scal {
+        match self {
+            Value::Scalar(s) => s.clone(),
+            _ => panic!("kernel parameter is not a scalar"),
+        }
+    }
+
+    /// The parameter as an i64 index container.
+    pub fn ints(&self) -> VecI64 {
+        match self {
+            Value::Ints(v) => v.clone(),
+            _ => panic!("kernel parameter is not an i64 container"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_constructors() {
+        let a = Arg::vec(vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.shape(), Shape::D1(3));
+        assert_eq!(a.dtype(), DType::F64);
+        let m = Arg::mat(vec![0.0; 6], 2, 3);
+        assert_eq!(m.shape(), Shape::D2 { rows: 2, cols: 3 });
+        assert_eq!(m.len(), 6);
+        let s = Arg::scalar(4.0);
+        assert_eq!(s.shape(), Shape::Scalar);
+        let i = Arg::ints(vec![1, 2]);
+        assert_eq!(i.dtype(), DType::I64);
+    }
+
+    #[test]
+    fn serve_end_to_end_single_worker() {
+        let server = Server::builder(ServeConfig::serial())
+            .kernel("axpby", |_ctx, params| {
+                let x = params[0].vec1();
+                let y = params[1].vec1();
+                Value::Vec(&x.scale(2.0) + &y)
+            })
+            .start();
+        let client = server.client();
+        let out = client
+            .call("axpby", vec![Arg::vec(vec![1.0, 2.0]), Arg::vec(vec![10.0, 20.0])])
+            .unwrap();
+        assert_eq!(out, vec![12.0, 24.0]);
+        // Second call with the same shapes: cache hit, no recapture.
+        let out2 = client
+            .call("axpby", vec![Arg::vec(vec![3.0, 4.0]), Arg::vec(vec![1.0, 1.0])])
+            .unwrap();
+        assert_eq!(out2, vec![7.0, 9.0]);
+        let cs = client.cache_stats();
+        assert_eq!((cs.hits, cs.misses), (1, 1));
+        assert!(client.call("no_such_kernel", vec![]).is_err());
+    }
+}

@@ -1,0 +1,64 @@
+//! Serving view of the persistent shared worker pool.
+//!
+//! The pool itself lives in [`crate::coordinator::engine::pool`] (it is
+//! an engine facility: O3 contexts use it for chunk-parallel steps).
+//! The serving layer attaches to the same interned pools, so a server's
+//! batch sweeps and every O3 context in the process share one set of
+//! long-lived threads — there is no per-dispatch spawn/join anywhere.
+
+pub use crate::coordinator::engine::pool::{shared, SharedPool};
+
+use std::sync::Arc;
+
+/// Snapshot of a shared pool's activity counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Workers including the submitting thread.
+    pub workers: usize,
+    /// Fork-join sweeps dispatched since the pool was created.
+    pub sweeps: u64,
+    /// Chunk tasks executed since the pool was created.
+    pub chunks: u64,
+}
+
+/// Read a pool's counters.
+pub fn stats_of(pool: &SharedPool) -> PoolStats {
+    PoolStats { workers: pool.size(), sweeps: pool.jobs_dispatched(), chunks: pool.chunks_run() }
+}
+
+/// The pool a server with `workers` workers executes batches on
+/// (`None` for a single-worker server, which runs inline).
+pub fn for_workers(workers: usize) -> Option<Arc<SharedPool>> {
+    if workers > 1 {
+        Some(shared(workers))
+    } else {
+        None
+    }
+}
+
+/// Default worker count: one per available hardware thread.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_has_no_pool() {
+        assert!(for_workers(1).is_none());
+        assert!(for_workers(0).is_none());
+    }
+
+    #[test]
+    fn stats_snapshot() {
+        let p = shared(2);
+        let before = stats_of(&p);
+        p.run_chunks(4, &|_| {});
+        let after = stats_of(&p);
+        assert_eq!(after.workers, 2);
+        assert!(after.sweeps >= before.sweeps + 1);
+        assert!(after.chunks >= before.chunks + 4);
+    }
+}

@@ -1,0 +1,478 @@
+//! Request scheduler: bounded submission queue, batching dispatcher,
+//! backpressure.
+//!
+//! Clients submit through a bounded MPSC channel ([`Client::try_submit`]
+//! returns [`SubmitError::QueueFull`] when the queue is at capacity —
+//! callers shed or retry). A single dispatcher thread owns the capture
+//! context and the registered builders; it drains up to
+//! `max_batch` queued requests at a time, groups them by
+//! `(kernel, signature)`, resolves each group's [`CompiledPlan`] through
+//! the plan cache, and executes the whole group as **one fork-join
+//! sweep** on the shared worker pool — request `r` is chunk `r` of the
+//! sweep. Coalescing same-plan requests this way amortises both the
+//! dispatch round-trip and the fork-join barrier across the batch,
+//! which is where the serving throughput win over per-dispatch
+//! evaluation comes from (see `benches/serve_throughput.rs`).
+//!
+//! Failures are contained: builder panics, capture rejections, engine
+//! errors and elemental panics all turn into per-request `Err`
+//! responses; the dispatcher and the pool workers keep running.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::node::Data;
+use crate::coordinator::shape::{DType, Shape};
+use crate::coordinator::{Context, Options, OptLevel};
+use crate::{Error, Result};
+
+use super::cache::{self, CacheStats, PlanCache, PlanKey};
+use super::exec::{self, CompiledPlan};
+use super::pool::{self, SharedPool};
+use super::stats::{KernelStats, ServeStats};
+use super::{Arg, KernelFn, ServeConfig, Value};
+
+/// Submission failure modes surfaced to clients.
+pub enum SubmitError {
+    /// The bounded queue is at capacity (backpressure). The request's
+    /// arguments are handed back so the caller can retry without
+    /// copies.
+    QueueFull(Vec<Arg>),
+    /// The server has shut down.
+    Closed,
+    /// The request itself is malformed (unknown kernel, bad argument).
+    Rejected(Error),
+}
+
+impl fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull(args) => {
+                write!(f, "QueueFull({} args held back)", args.len())
+            }
+            SubmitError::Closed => write!(f, "Closed"),
+            SubmitError::Rejected(e) => write!(f, "Rejected({e})"),
+        }
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull(_) => write!(f, "submission queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "server shut down"),
+            SubmitError::Rejected(e) => write!(f, "request rejected: {e}"),
+        }
+    }
+}
+
+struct Request {
+    kernel: usize,
+    sig: Vec<(DType, Shape)>,
+    args: Vec<Arg>,
+    enqueued: Instant,
+    resp: SyncSender<Result<Vec<f64>>>,
+}
+
+enum Msg {
+    Call(Request),
+    Shutdown,
+}
+
+/// State shared between clients and the dispatcher.
+struct Shared {
+    names: HashMap<String, usize>,
+    stats: Mutex<ServeStats>,
+    cache: Mutex<PlanCache>,
+    opt: OptLevel,
+}
+
+/// Handle for submitting requests; cheap to clone, `Send`.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Msg>,
+    shared: Arc<Shared>,
+}
+
+/// A pending response.
+pub struct Ticket {
+    rx: Receiver<Result<Vec<f64>>>,
+}
+
+impl Ticket {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Vec<f64>> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Invalid("serve: server shut down before responding".into()))?
+    }
+}
+
+impl Client {
+    fn build_request(
+        &self,
+        kernel: &str,
+        args: Vec<Arg>,
+    ) -> std::result::Result<(Request, Ticket), SubmitError> {
+        let Some(&kid) = self.shared.names.get(kernel) else {
+            return Err(SubmitError::Rejected(Error::Invalid(format!(
+                "serve: unknown kernel '{kernel}'"
+            ))));
+        };
+        for (i, a) in args.iter().enumerate() {
+            if a.len() != a.shape().len() {
+                return Err(SubmitError::Rejected(Error::Invalid(format!(
+                    "serve: argument {i} data length {} != shape length {}",
+                    a.len(),
+                    a.shape().len()
+                ))));
+            }
+        }
+        let sig = args.iter().map(|a| (a.dtype(), a.shape())).collect();
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        let req =
+            Request { kernel: kid, sig, args, enqueued: Instant::now(), resp: resp_tx };
+        Ok((req, Ticket { rx: resp_rx }))
+    }
+
+    /// Non-blocking submit; `QueueFull` is the backpressure signal.
+    pub fn try_submit(
+        &self,
+        kernel: &str,
+        args: Vec<Arg>,
+    ) -> std::result::Result<Ticket, SubmitError> {
+        let (req, ticket) = self.build_request(kernel, args)?;
+        match self.tx.try_send(Msg::Call(req)) {
+            Ok(()) => Ok(ticket),
+            Err(TrySendError::Full(Msg::Call(r))) => {
+                self.shared.stats.lock().unwrap().rejected += 1;
+                Err(SubmitError::QueueFull(r.args))
+            }
+            Err(TrySendError::Full(Msg::Shutdown)) => unreachable!("we only queue Call here"),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Blocking submit (waits for queue space).
+    pub fn submit(&self, kernel: &str, args: Vec<Arg>) -> Result<Ticket> {
+        let (req, ticket) = self.build_request(kernel, args).map_err(|e| match e {
+            SubmitError::Rejected(err) => err,
+            other => Error::Invalid(other.to_string()),
+        })?;
+        self.tx
+            .send(Msg::Call(req))
+            .map_err(|_| Error::Invalid("serve: server shut down".into()))?;
+        Ok(ticket)
+    }
+
+    /// Submit and wait: the one-line serving call.
+    pub fn call(&self, kernel: &str, args: Vec<Arg>) -> Result<Vec<f64>> {
+        self.submit(kernel, args)?.wait()
+    }
+
+    /// Plan-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.cache.lock().unwrap().stats()
+    }
+
+    /// Read a kernel's serving stats under the lock.
+    pub fn kernel_stats<R>(&self, kernel: &str, f: impl FnOnce(&KernelStats) -> R) -> Option<R> {
+        let &kid = self.shared.names.get(kernel)?;
+        let stats = self.shared.stats.lock().unwrap();
+        stats.kernel(kid).map(f)
+    }
+
+    /// Sustained server throughput (requests/second since start).
+    pub fn throughput(&self) -> f64 {
+        self.shared.stats.lock().unwrap().throughput()
+    }
+
+    /// Render the serving report (per-kernel table + cache line).
+    pub fn report(&self) -> String {
+        let cache = self.cache_stats();
+        self.shared.stats.lock().unwrap().report(&cache)
+    }
+}
+
+/// Registration-time kernel list.
+pub struct ServerBuilder {
+    config: ServeConfig,
+    kernels: Vec<(String, Box<KernelFn>)>,
+}
+
+impl ServerBuilder {
+    pub fn new(config: ServeConfig) -> Self {
+        ServerBuilder { config, kernels: Vec::new() }
+    }
+
+    /// Register a kernel builder under `name`. The builder runs on the
+    /// dispatcher thread, once per distinct argument signature, against
+    /// placeholder containers; it must stay lazy (capture-pure).
+    pub fn kernel(
+        mut self,
+        name: &str,
+        f: impl Fn(&Context, &[Value]) -> Value + Send + 'static,
+    ) -> Self {
+        self.kernels.push((name.to_string(), Box::new(f)));
+        self
+    }
+
+    /// Spawn the dispatcher and return the running server.
+    pub fn start(self) -> Server {
+        let (tx, rx) = mpsc::sync_channel(self.config.queue_capacity.max(1));
+        let names: HashMap<String, usize> =
+            self.kernels.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
+        let kernel_names: Vec<String> = self.kernels.iter().map(|(n, _)| n.clone()).collect();
+        let shared = Arc::new(Shared {
+            names,
+            stats: Mutex::new(ServeStats::new(&kernel_names)),
+            cache: Mutex::new(PlanCache::new(self.config.plan_cache_capacity)),
+            opt: self.config.opt_level,
+        });
+        let builders: Vec<Box<KernelFn>> = self.kernels.into_iter().map(|(_, f)| f).collect();
+        let cfg = self.config;
+        let shared2 = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("arbb-serve-dispatcher".into())
+            .spawn(move || dispatcher(rx, builders, cfg, shared2))
+            .expect("spawn serve dispatcher");
+        Server { client: Client { tx, shared }, handle: Some(handle) }
+    }
+}
+
+/// A running kernel server. Dropping it shuts the dispatcher down
+/// (queued requests are still answered first).
+pub struct Server {
+    client: Client,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn builder(config: ServeConfig) -> ServerBuilder {
+        ServerBuilder::new(config)
+    }
+
+    /// A cloneable, `Send` submission handle.
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+}
+
+impl std::ops::Deref for Server {
+    type Target = Client;
+    fn deref(&self) -> &Client {
+        &self.client
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.client.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// dispatcher
+// ---------------------------------------------------------------------
+
+fn dispatcher(rx: Receiver<Msg>, builders: Vec<Box<KernelFn>>, cfg: ServeConfig, shared: Arc<Shared>) {
+    // The capture context lives on this thread (the DAG is Rc-based);
+    // compiled plans that leave it are graph-free and thread-safe.
+    let ctx = Context::with_options(Options {
+        opt_level: cfg.opt_level,
+        num_workers: cfg.workers,
+        fusion: cfg.fusion,
+        in_place: true,
+        cse: cfg.cse,
+        grain: cfg.grain,
+        record: false,
+    });
+    let pool = pool::for_workers(cfg.workers);
+    let max_batch = cfg.max_batch.max(1);
+
+    loop {
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break, // every client handle dropped
+        };
+        let mut shutdown = false;
+        let mut batch: Vec<Request> = Vec::new();
+        match first {
+            Msg::Shutdown => shutdown = true,
+            Msg::Call(r) => batch.push(r),
+        }
+        // Coalesce whatever else is already queued, up to max_batch.
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Call(r)) => batch.push(r),
+                Ok(Msg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        if !batch.is_empty() {
+            process_batch(batch, &builders, &ctx, pool.as_deref(), &shared);
+        }
+        if shutdown {
+            // Drain and answer everything still queued, then exit.
+            loop {
+                let mut rest: Vec<Request> = Vec::new();
+                while rest.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(Msg::Call(r)) => rest.push(r),
+                        Ok(Msg::Shutdown) => {}
+                        Err(_) => break,
+                    }
+                }
+                if rest.is_empty() {
+                    break;
+                }
+                process_batch(rest, &builders, &ctx, pool.as_deref(), &shared);
+            }
+            break;
+        }
+    }
+}
+
+fn process_batch(
+    batch: Vec<Request>,
+    builders: &[Box<KernelFn>],
+    ctx: &Context,
+    pool: Option<&SharedPool>,
+    shared: &Arc<Shared>,
+) {
+    // Group by (kernel, signature): every group replays one plan.
+    let mut groups: HashMap<PlanKey, Vec<Request>> = HashMap::new();
+    for r in batch {
+        let key = PlanKey { kernel: r.kernel, args: r.sig.clone(), opt: shared.opt };
+        groups.entry(key).or_default().push(r);
+    }
+    for (key, reqs) in groups {
+        let plan = resolve_plan(&key, builders, ctx, shared);
+        match plan {
+            Err(e) => {
+                let msg = e.to_string();
+                for r in reqs {
+                    respond(r, Err(Error::Invalid(msg.clone())), shared);
+                }
+            }
+            Ok(p) => {
+                shared.stats.lock().unwrap().record_batch(key.kernel);
+                execute_group(p, reqs, pool, shared);
+            }
+        }
+    }
+}
+
+/// Cache lookup; on a miss, capture + compile + verify and insert.
+fn resolve_plan(
+    key: &PlanKey,
+    builders: &[Box<KernelFn>],
+    ctx: &Context,
+    shared: &Arc<Shared>,
+) -> Result<Arc<CompiledPlan>> {
+    if let Some(p) = shared.cache.lock().unwrap().get(key) {
+        return Ok(p);
+    }
+    let builder = builders
+        .get(key.kernel)
+        .ok_or_else(|| Error::Invalid(format!("serve: kernel {} not registered", key.kernel)))?;
+    // A panicking builder must not take the dispatcher down.
+    let captured = catch_unwind(AssertUnwindSafe(|| cache::capture(ctx, builder, key)));
+    let plan = match captured {
+        Ok(r) => r?,
+        Err(payload) => {
+            return Err(Error::Invalid(format!(
+                "serve: kernel builder panicked during capture: {}",
+                panic_message(&payload)
+            )))
+        }
+    };
+    shared.cache.lock().unwrap().insert(key.clone(), plan.clone());
+    Ok(plan)
+}
+
+/// Execute one same-plan group as a single fork-join sweep: request `r`
+/// is chunk `r`. With one worker (or one request) this degenerates to
+/// inline execution with no barrier at all.
+fn execute_group(
+    plan: Arc<CompiledPlan>,
+    reqs: Vec<Request>,
+    pool: Option<&SharedPool>,
+    shared: &Arc<Shared>,
+) {
+    // Split the requests into Send-able argument sets and response ends.
+    let mut metas: Vec<(usize, Instant, SyncSender<Result<Vec<f64>>>)> = Vec::new();
+    let mut argsets: Vec<Vec<Data>> = Vec::new();
+    for r in reqs {
+        metas.push((r.kernel, r.enqueued, r.resp));
+        argsets.push(r.args.into_iter().map(Arg::into_data).collect());
+    }
+    let n = argsets.len();
+    let results: Vec<Mutex<Option<Result<Vec<f64>>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let body = |i: usize| {
+        // An elemental that panics (bad index data) must not kill a
+        // pool worker mid-sweep — that would stall the barrier.
+        let out = match catch_unwind(AssertUnwindSafe(|| exec::execute(&plan, &argsets[i]))) {
+            Ok(r) => r,
+            Err(payload) => Err(Error::Invalid(format!(
+                "serve: kernel panicked during execution: {}",
+                panic_message(&payload)
+            ))),
+        };
+        *results[i].lock().unwrap() = Some(out);
+    };
+    match pool {
+        Some(p) if n > 1 => p.run_chunks(n, &body),
+        _ => {
+            for i in 0..n {
+                body(i);
+            }
+        }
+    }
+    for ((kernel, enqueued, resp), cell) in metas.into_iter().zip(results) {
+        let out = cell
+            .into_inner()
+            .unwrap()
+            .unwrap_or_else(|| Err(Error::Invalid("serve: batch sweep lost a result".into())));
+        finish(kernel, enqueued, resp, out, shared);
+    }
+}
+
+fn respond(r: Request, out: Result<Vec<f64>>, shared: &Arc<Shared>) {
+    finish(r.kernel, r.enqueued, r.resp, out, shared);
+}
+
+fn finish(
+    kernel: usize,
+    enqueued: Instant,
+    resp: SyncSender<Result<Vec<f64>>>,
+    out: Result<Vec<f64>>,
+    shared: &Arc<Shared>,
+) {
+    let ok = out.is_ok();
+    let latency = enqueued.elapsed().as_secs_f64();
+    // The receiver may have given up; stats still count the completion.
+    let _ = resp.try_send(out);
+    shared.stats.lock().unwrap().record_request(kernel, latency, ok);
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}

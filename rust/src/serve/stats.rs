@@ -1,0 +1,254 @@
+//! Per-kernel serving statistics: throughput, latency percentiles,
+//! batching behaviour and cache effectiveness.
+//!
+//! The dispatcher records one sample per completed request (latency is
+//! measured from submission to response, so queueing delay is
+//! included). Latencies are kept in a bounded ring per kernel; p50/p99
+//! are computed over that window on demand. Reports render in the same
+//! aligned-table style as [`crate::bench::harness`].
+
+use std::time::Instant;
+
+/// Samples kept per kernel for percentile estimation.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Running statistics for one registered kernel.
+#[derive(Debug, Clone)]
+pub struct KernelStats {
+    pub name: String,
+    /// Completed requests (including errors).
+    pub requests: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Seconds spent executing this kernel (per-request, so batched
+    /// execution attributes wall time to every member).
+    pub busy_secs: f64,
+    /// Number of batch sweeps that included this kernel.
+    pub batches: u64,
+    /// Latency ring (seconds), newest overwrite oldest past the window.
+    lat: Vec<f64>,
+    lat_next: usize,
+}
+
+impl KernelStats {
+    fn new(name: &str) -> Self {
+        KernelStats {
+            name: name.to_string(),
+            requests: 0,
+            errors: 0,
+            busy_secs: 0.0,
+            batches: 0,
+            lat: Vec::new(),
+            lat_next: 0,
+        }
+    }
+
+    fn record(&mut self, latency_s: f64, ok: bool) {
+        self.requests += 1;
+        if !ok {
+            self.errors += 1;
+        }
+        self.busy_secs += latency_s;
+        if self.lat.len() < LATENCY_WINDOW {
+            self.lat.push(latency_s);
+        } else {
+            self.lat[self.lat_next] = latency_s;
+            self.lat_next = (self.lat_next + 1) % LATENCY_WINDOW;
+        }
+    }
+
+    /// Latency percentile (0.0..=1.0) over the sample window, seconds.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.lat.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.lat.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let ix = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        v[ix]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    /// Mean requests per batch sweep.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Registry of all kernels' stats plus server-wide counters.
+#[derive(Debug)]
+pub struct ServeStats {
+    started: Instant,
+    kernels: Vec<KernelStats>,
+    /// Total requests that were rejected at submission (queue full).
+    pub rejected: u64,
+}
+
+impl ServeStats {
+    pub fn new(kernel_names: &[String]) -> Self {
+        ServeStats {
+            started: Instant::now(),
+            kernels: kernel_names.iter().map(|n| KernelStats::new(n)).collect(),
+            rejected: 0,
+        }
+    }
+
+    pub fn record_request(&mut self, kernel: usize, latency_s: f64, ok: bool) {
+        if let Some(k) = self.kernels.get_mut(kernel) {
+            k.record(latency_s, ok);
+        }
+    }
+
+    pub fn record_batch(&mut self, kernel: usize) {
+        if let Some(k) = self.kernels.get_mut(kernel) {
+            k.batches += 1;
+        }
+    }
+
+    pub fn kernel(&self, ix: usize) -> Option<&KernelStats> {
+        self.kernels.get(ix)
+    }
+
+    pub fn kernels(&self) -> &[KernelStats] {
+        &self.kernels
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Total completed requests across kernels.
+    pub fn total_requests(&self) -> u64 {
+        self.kernels.iter().map(|k| k.requests).sum()
+    }
+
+    /// Sustained throughput since the server started, requests/second.
+    pub fn throughput(&self) -> f64 {
+        let up = self.uptime_secs();
+        if up <= 0.0 {
+            0.0
+        } else {
+            self.total_requests() as f64 / up
+        }
+    }
+
+    /// Render an aligned per-kernel report (bench-harness style).
+    pub fn report(&self, cache: &super::cache::CacheStats) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "\n## serve stats — {:.1} req/s sustained, {} served, {} rejected, uptime {:.2}s\n",
+            self.throughput(),
+            self.total_requests(),
+            self.rejected,
+            self.uptime_secs()
+        ));
+        out.push_str(&format!(
+            "   plan cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {}/{} entries\n\n",
+            cache.hits,
+            cache.misses,
+            100.0 * cache.hit_rate(),
+            cache.evictions,
+            cache.len,
+            cache.capacity
+        ));
+        out.push_str(&format!(
+            "| {:<16} | {:>8} | {:>6} | {:>10} | {:>9} | {:>9} | {:>7} |\n",
+            "kernel", "reqs", "errs", "req/s", "p50 ms", "p99 ms", "batch"
+        ));
+        out.push_str(&format!(
+            "|{}|{}|{}|{}|{}|{}|{}|\n",
+            "-".repeat(18),
+            "-".repeat(10),
+            "-".repeat(8),
+            "-".repeat(12),
+            "-".repeat(11),
+            "-".repeat(11),
+            "-".repeat(9)
+        ));
+        let up = self.uptime_secs().max(1e-9);
+        for k in &self.kernels {
+            out.push_str(&format!(
+                "| {:<16} | {:>8} | {:>6} | {:>10.1} | {:>9.3} | {:>9.3} | {:>7.2} |\n",
+                truncate(&k.name, 16),
+                k.requests,
+                k.errors,
+                k.requests as f64 / up,
+                k.p50() * 1e3,
+                k.p99() * 1e3,
+                k.mean_batch()
+            ));
+        }
+        out
+    }
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        return s.to_string();
+    }
+    // Back off to a char boundary: byte-slicing a multi-byte name panics.
+    let mut end = n;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    s[..end].to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_percentiles() {
+        let mut s = ServeStats::new(&["k0".into(), "k1".into()]);
+        for i in 0..100 {
+            s.record_request(0, (i + 1) as f64 * 1e-3, true);
+        }
+        s.record_request(1, 0.5, false);
+        s.record_batch(0);
+        let k0 = s.kernel(0).unwrap();
+        assert_eq!(k0.requests, 100);
+        assert_eq!(k0.errors, 0);
+        assert!((k0.p50() - 0.050).abs() < 2e-3, "{}", k0.p50());
+        assert!((k0.p99() - 0.100).abs() < 2e-3, "{}", k0.p99());
+        assert_eq!(k0.mean_batch(), 100.0);
+        let k1 = s.kernel(1).unwrap();
+        assert_eq!((k1.requests, k1.errors), (1, 1));
+        assert_eq!(s.total_requests(), 101);
+    }
+
+    #[test]
+    fn latency_window_bounded() {
+        let mut s = ServeStats::new(&["k".into()]);
+        for _ in 0..(LATENCY_WINDOW + 500) {
+            s.record_request(0, 1e-3, true);
+        }
+        assert_eq!(s.kernel(0).unwrap().lat.len(), LATENCY_WINDOW);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut s = ServeStats::new(&["mxm".into()]);
+        s.record_request(0, 2e-3, true);
+        let r = s.report(&super::super::cache::CacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 0,
+            len: 1,
+            capacity: 16,
+        });
+        assert!(r.contains("mxm"));
+        assert!(r.contains("75.0% hit rate"));
+    }
+}

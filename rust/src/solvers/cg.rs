@@ -55,6 +55,37 @@ pub fn cg_mkl(a: &Csr, b: &[f64], stop: f64, max_iters: usize) -> CgResult {
     cg_with(a.nrows, b, stop, max_iters, |x, out| crate::kernels::spmv_opt(a, x, out))
 }
 
+/// Exactly `iters` CG iterations with no convergence test — the host
+/// reference for *captured* fixed-iteration solvers (the serving path
+/// and the AOT artifacts keep alpha/beta in kernel space, so they
+/// cannot early-exit on a data-dependent residual).
+pub fn cg_fixed_iters(a: &Csr, b: &[f64], iters: usize) -> Vec<f64> {
+    let n = a.nrows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = b.to_vec();
+    let mut ap = vec![0.0; n];
+    let mut r2 = dot(&r, &r);
+    for _ in 0..iters {
+        a.spmv(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if r2 == 0.0 || pap == 0.0 {
+            // Exact convergence (e.g. b = 0) before the fixed count:
+            // continuing would produce alpha = 0/0 = NaN.
+            break;
+        }
+        let alpha = r2 / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let r2n = dot(&r, &r);
+        let beta = r2n / r2;
+        xpby(&r, beta, &mut p);
+        r2 = r2n;
+    }
+    x
+}
+
 /// Residual `‖A x − b‖₂` (verification helper).
 pub fn residual_norm(a: &Csr, x: &[f64], b: &[f64]) -> f64 {
     let mut ax = vec![0.0; a.nrows];

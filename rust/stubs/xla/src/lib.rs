@@ -1,0 +1,136 @@
+//! Offline **stub** of the `xla` (xla_extension 0.5.x) PJRT bindings.
+//!
+//! The build environment has no network and no XLA shared library, so
+//! the real bindings cannot be vendored. This stub reproduces exactly
+//! the API surface `arbb-rs`'s runtime module uses; every constructor
+//! returns an error, so code paths compile and fail cleanly at runtime
+//! with an actionable message.
+//!
+//! To run real AOT artifacts, point cargo at the actual bindings:
+//!
+//! ```toml
+//! [patch.crates-io]  # or a [patch."..."] for this path
+//! xla = { path = "/opt/xla-example/xla-rs" }
+//! ```
+
+use std::fmt;
+
+/// Error type matching the real crate's `xla::Error` role.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stubbed<T>() -> Result<T> {
+    Err(Error(
+        "xla stub: PJRT unavailable in this build (link the real xla_extension bindings)"
+            .to_string(),
+    ))
+}
+
+/// Element types the runtime moves across the boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (stub: holds nothing).
+#[derive(Debug, Default, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stubbed()
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        stubbed()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stubbed()
+    }
+}
+
+/// Device-side buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stubbed()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stubbed()
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stubbed()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stubbed()
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stubbed()
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_fails_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::vec1(&[1.0f64]).reshape(&[1]).is_err());
+    }
+}
