@@ -5,11 +5,18 @@
 //! 3. in-place buffer donation on/off (accumulation chains);
 //! 4. parallel grain size (chunking of the O3 engine);
 //! 5. CSE on/off on a shared-subexpression program;
-//! 6. O2 vs O3-with-1-worker (pure runtime overhead of threading).
+//! 6. O2 vs O3-with-1-worker (pure runtime overhead of threading);
+//! 7. tape VM vs reference tree interpreter (the register-tape
+//!    executor; also emits `BENCH_eval.json` so the perf trajectory is
+//!    tracked across PRs).
 //!
-//! `cargo bench --bench ablations -- [--full]`
+//! `cargo bench --bench ablations -- [--full | --smoke]`
+//!
+//! `--smoke` runs only the tape-vs-tree section with short timings and
+//! writes `BENCH_eval.json` — the CI perf-tracking mode.
 
-use arbb_rs::bench::{mflops, render_table, time_best, Series};
+use arbb_rs::bench::{mflops, render_table, time_best, workloads, Series};
+use arbb_rs::coordinator::engine::eval::{eval_range, Scratch, Tape};
 use arbb_rs::coordinator::{Context, Options, OptLevel};
 use arbb_rs::euroben::mod2am::arbb_mxm2b;
 use arbb_rs::kernels::gemm_flops;
@@ -19,6 +26,39 @@ fn full() -> bool {
     std::env::args().any(|a| a == "--full")
 }
 
+fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Section 7: tape VM vs tree interpreter on the depth-12 fused chain.
+/// Returns (tree_ns_per_elem, tape_ns_per_elem).
+fn tape_vs_tree(bench_t: f64) -> (f64, f64) {
+    let n: usize = 1 << 16;
+    let fx = workloads::eval_chain(n, 42);
+    let tape = Tape::compile(&fx).expect("chain must compile");
+    let mut out = vec![0.0; n];
+    let mut scratch = Scratch::default();
+    let t_tree = time_best(|| eval_range(&fx, 0, &mut out, &mut scratch), bench_t, 3);
+    let t_tape = time_best(|| tape.run_range(0, &mut out, &mut scratch), bench_t, 3);
+    let (tree_ns, tape_ns) = (t_tree * 1e9 / n as f64, t_tape * 1e9 / n as f64);
+    println!("  tape VM vs tree interpreter (depth-12 chain, {n} elems):");
+    println!("    tree  {tree_ns:>8.3} ns/elem");
+    println!("    tape  {tape_ns:>8.3} ns/elem   ({:.2}x)", t_tree / t_tape);
+    let json = format!(
+        "{{\"bench\":\"eval_tape_vs_tree\",\"n\":{n},\"tree_ns_per_elem\":{tree_ns:.4},\
+         \"tape_ns_per_elem\":{tape_ns:.4},\"speedup\":{:.4}}}\n",
+        t_tree / t_tape
+    );
+    // Anchor to the repository root (cargo runs bench binaries with the
+    // *package* dir as cwd, which is rust/ in this workspace).
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_eval.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("    wrote {path}"),
+        Err(e) => println!("    could not write {path}: {e}"),
+    }
+    (tree_ns, tape_ns)
+}
+
 fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
     let mut rng = XorShift64::new(seed);
     (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
@@ -26,6 +66,12 @@ fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
 
 fn main() {
     let bench_t = if full() { 0.4 } else { 0.15 };
+    if smoke() {
+        println!("# Ablations (smoke) — tape VM perf tracking\n");
+        tape_vs_tree(0.1);
+        println!("\n# ablations smoke done");
+        return;
+    }
     println!("# Ablations — DSL runtime design choices\n");
 
     // ---------- 1. fusion on/off: element-wise chain ----------
@@ -166,6 +212,12 @@ fn main() {
             );
             println!("    {label:<8} {:>8.2} µs per dispatch", t * 1e6);
         }
+    }
+
+    // ---------- 7. tape VM vs tree interpreter ----------
+    {
+        println!();
+        tape_vs_tree(bench_t);
     }
 
     println!("\n# ablations done");

@@ -1,0 +1,63 @@
+//! Tape VM vs reference tree interpreter on a deep fused element-wise
+//! chain — the acceptance microbench for the register-tape executor.
+//!
+//! The chain (see `bench::workloads::eval_chain`) interleaves scalar
+//! scale/offset pairs with multiply-accumulate terms, the planner-shaped
+//! hot path where the tape's `ScaleAddConst` and `MulAdd`
+//! superinstructions remove whole block passes. Acceptance target:
+//! tape ≥ 1.3× the tree interpreter on a depth-≥6 chain.
+//!
+//! `cargo bench --bench eval_tape -- [--full]`
+
+use arbb_rs::bench::{time_best, workloads};
+use arbb_rs::coordinator::engine::eval::{eval_range, Scratch, Tape};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    // L2/L3-resident working set: the comparison targets executor
+    // overhead and pass counts, not DRAM bandwidth.
+    let n: usize = if full { 1 << 18 } else { 1 << 16 };
+    let bench_t = if full { 0.6 } else { 0.25 };
+
+    let fx = workloads::eval_chain(n, 42);
+    let tape = Tape::compile(&fx).expect("chain must compile");
+    println!("# eval_tape — tape VM vs tree interpreter");
+    println!(
+        "# n = {n}, tape: {} instrs, {} scratch regs, {} leaves",
+        tape.program().n_instrs(),
+        tape.program().n_scratch_regs(),
+        tape.program().n_leaves()
+    );
+
+    // Correctness first: bit-identical output.
+    let mut tree_out = vec![0.0; n];
+    let mut tape_out = vec![0.0; n];
+    let mut scratch = Scratch::default();
+    eval_range(&fx, 0, &mut tree_out, &mut scratch);
+    tape.run_range(0, &mut tape_out, &mut scratch);
+    assert!(
+        tree_out
+            .iter()
+            .zip(&tape_out)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "tape VM diverges from the tree interpreter"
+    );
+
+    let t_tree = time_best(
+        || eval_range(&fx, 0, &mut tree_out, &mut scratch),
+        bench_t,
+        3,
+    );
+    let t_tape = time_best(|| tape.run_range(0, &mut tape_out, &mut scratch), bench_t, 3);
+
+    let tree_ns = t_tree * 1e9 / n as f64;
+    let tape_ns = t_tape * 1e9 / n as f64;
+    let speedup = t_tree / t_tape;
+    println!("  tree interpreter  {tree_ns:>8.3} ns/elem");
+    println!("  tape VM           {tape_ns:>8.3} ns/elem");
+    println!("  speedup           {speedup:>8.2}x  (target >= 1.30x)");
+    if speedup < 1.3 {
+        println!("  !! below the 1.3x acceptance target");
+    }
+    println!("\n# eval_tape done");
+}

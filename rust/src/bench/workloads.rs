@@ -61,6 +61,55 @@ pub fn thread_sweep() -> Vec<usize> {
     vec![1, 2, 4, 8, 12, 16, 20, 24, 30, 32, 40]
 }
 
+/// Depth-12 fused element-wise chain for the tape-vs-tree microbench
+/// (`benches/eval_tape.rs`, `benches/ablations.rs --smoke`):
+///
+/// ```text
+/// ((((((a·c1 + c2) + x1·y1)·c3 + c4) + x2·y2)·c5 + c6) + x3·y3)
+/// ```
+///
+/// The shape is chosen to be representative of planner output on the
+/// euroben kernels — scalar scale/offset pairs interleaved with
+/// multiply-accumulate terms — which is exactly where the tape VM's
+/// `ScaleAddConst` and `MulAdd` superinstructions collapse block passes
+/// the tree interpreter cannot. Leaf buffers are owned by the returned
+/// tree (`Arc`s inside the leaves).
+pub fn eval_chain(n: usize, seed: u64) -> crate::coordinator::engine::eval::FExec {
+    use crate::coordinator::engine::eval::FExec;
+    use crate::coordinator::ops::BinOp;
+    use crate::coordinator::shape::View;
+    use crate::util::XorShift64;
+    use std::sync::Arc;
+
+    let mut rng = XorShift64::new(seed);
+    let mut mk = || {
+        let data: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 1.5)).collect();
+        FExec::Leaf { data: Arc::new(data), view: View::identity(n) }
+    };
+    let a = mk();
+    let terms = [(mk(), mk()), (mk(), mk()), (mk(), mk())];
+    let consts = [(1.0001, 0.5), (0.999, -0.25), (1.001, 0.125)];
+    let mut t = a;
+    for ((x, y), (c1, c2)) in terms.into_iter().zip(consts) {
+        // t = (t * c1 + c2) + x * y
+        t = FExec::Bin(
+            BinOp::Add,
+            Box::new(FExec::Bin(
+                BinOp::Mul,
+                Box::new(t),
+                Box::new(FExec::Const(c1)),
+            )),
+            Box::new(FExec::Const(c2)),
+        );
+        t = FExec::Bin(
+            BinOp::Add,
+            Box::new(t),
+            Box::new(FExec::Bin(BinOp::Mul, Box::new(x), Box::new(y))),
+        );
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

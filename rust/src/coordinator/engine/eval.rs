@@ -1,10 +1,31 @@
-//! Block-wise evaluator for fused expression trees.
+//! Block-wise evaluation of fused expression trees: a reference tree
+//! interpreter plus the production tape compiler + register VM.
 //!
 //! A lowered [`FExec`] tree is evaluated over a range of flat output
 //! indices in cache-resident blocks: each operator processes one block
 //! (`BLOCK` elements) at a time, so fused chains make a single pass over
 //! main memory regardless of chain length — the optimisation ArBB's JIT
 //! performs when it compiles a captured closure.
+//!
+//! Two executors share that blocking discipline:
+//!
+//!  * [`eval_range`] — the original recursive **tree interpreter**. It
+//!    re-walks the boxed tree for every block; retained as the reference
+//!    semantics (the property tests compare the tape VM against it
+//!    bit-for-bit) and as the ablation baseline.
+//!  * [`Tape`] — the **tape compiler + register VM**. The tree is
+//!    lowered post-order, once, into a flat `Vec<Instr>` over virtual
+//!    block registers; a free-list register allocator reuses registers
+//!    as their live ranges end, so the peak register count is the depth
+//!    of the deepest right spine, not the operator count. Leaf loads
+//!    are monomorphised per view shape ([`Instr::LoadContiguous`] /
+//!    `LoadBroadcast` / `LoadStrided` / `LoadModulo` / `LoadSplat`)
+//!    replacing the generic dispatch of `fill_view`, and the hot
+//!    operator shapes collapse into fused superinstructions
+//!    ([`Instr::MulAdd`], [`Instr::Axpy`], [`Instr::ScaleAddConst`])
+//!    that subsume the tree interpreter's hand-matched rank-1-update
+//!    special case and remove whole block passes. See EXPERIMENTS.md
+//!    §"Tape VM" for the design notes and microbenchmark results.
 
 use std::sync::Arc;
 
@@ -12,8 +33,17 @@ use crate::coordinator::ops::{BinOp, UnOp};
 use crate::coordinator::plan::FTree;
 use crate::coordinator::shape::View;
 
-/// Elements per evaluation block (16 KiB of f64 — comfortably L1-resident
-/// together with a few scratch blocks).
+/// Elements per evaluation block (16 KiB of f64).
+///
+/// Tuning rationale (EXPERIMENTS.md §"Tape VM"): the block must be small
+/// enough that the output block plus the tape's live registers (typically
+/// 1–3, worst case the right-spine depth of the fused tree) stay
+/// L1/L2-resident — at 2048 elements four live blocks occupy 64 KiB —
+/// yet large enough that per-block dispatch (one linear scan of the
+/// instruction tape, or one tree walk for the reference interpreter)
+/// amortises to noise against the ~2048-iteration inner loops. Halving
+/// it doubles dispatch overhead with no locality gain; doubling it
+/// spills deep chains' register files out of L1.
 pub const BLOCK: usize = 2048;
 
 /// Execution-side fused tree: leaves are resolved to concrete buffers.
@@ -99,6 +129,10 @@ fn lower_inner(tree: &FTree) -> crate::Result<FExec> {
 #[derive(Default)]
 pub struct Scratch {
     free: Vec<Vec<f64>>,
+    /// Cached tape register file (tapes never nest on one thread, so a
+    /// single cached file suffices; it grows to the largest request and
+    /// is reused allocation-free from then on).
+    file: Option<Vec<f64>>,
 }
 
 impl Scratch {
@@ -109,6 +143,24 @@ impl Scratch {
     pub fn put(&mut self, b: Vec<f64>) {
         if self.free.len() < 64 {
             self.free.push(b);
+        }
+    }
+
+    /// Take the thread-cached tape register file, grown to at least
+    /// `len` elements. Steady state performs no allocation.
+    pub fn take_file(&mut self, len: usize) -> Vec<f64> {
+        let mut f = self.file.take().unwrap_or_default();
+        if f.len() < len {
+            f.resize(len, 0.0);
+        }
+        f
+    }
+
+    /// Return a register file; the largest seen so far is kept.
+    pub fn put_file(&mut self, f: Vec<f64>) {
+        match &self.file {
+            Some(cur) if cur.len() >= f.len() => {}
+            _ => self.file = Some(f),
         }
     }
 }
@@ -124,6 +176,10 @@ thread_local! {
 pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
     TLS_SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
+
+// ---------------------------------------------------------------------
+// Reference tree interpreter
+// ---------------------------------------------------------------------
 
 /// Evaluate `fx` for flat output indices `[start, start+out.len())`.
 ///
@@ -153,15 +209,7 @@ fn eval_block(fx: &FExec, start: usize, out: &mut [f64], scratch: &mut Scratch) 
         FExec::Leaf { data, view } => fill_view(data, view, start, out),
         FExec::Un(op, a) => {
             eval_block(a, start, out, scratch);
-            // apply in place
-            match op {
-                UnOp::Neg => out.iter_mut().for_each(|x| *x = -*x),
-                UnOp::Abs => out.iter_mut().for_each(|x| *x = x.abs()),
-                UnOp::Sqrt => out.iter_mut().for_each(|x| *x = x.sqrt()),
-                UnOp::Exp => out.iter_mut().for_each(|x| *x = x.exp()),
-                UnOp::Ln => out.iter_mut().for_each(|x| *x = x.ln()),
-                UnOp::Recip => out.iter_mut().for_each(|x| *x = 1.0 / *x),
-            }
+            op.apply_slice_inplace(out);
         }
         FExec::Bin(op, l, r) => {
             // Left into `out`, right into scratch, combine in place.
@@ -258,70 +306,109 @@ fn axpy_pattern(
     }
 }
 
-/// Gather a block through an affine view.
-///
-/// Decomposed into *row segments* of the output space so each segment is
-/// one of four specialised inner loops (memcpy, broadcast fill, strided
-/// gather, cyclic copy) — the per-element `(r, c)` bookkeeping of the
-/// naive formulation was the single hottest path of the whole engine
-/// (EXPERIMENTS.md §Perf, iteration 1).
-fn fill_view(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
-    let len = out.len();
-    // Fully contiguous: one memcpy.
-    if view.is_contiguous() {
-        let s = view.base + start;
-        out.copy_from_slice(&data[s..s + len]);
-        return;
-    }
+// ---------------------------------------------------------------------
+// Monomorphised leaf loaders
+// ---------------------------------------------------------------------
+//
+// One function per view shape, classified once at tape-compile time
+// (the reference interpreter's `fill_view` re-classifies per block and
+// dispatches to the same loaders, keeping the two executors bit-exact).
+
+/// Contiguous leaf: a single memcpy.
+#[inline]
+fn load_contiguous(data: &[f64], base: usize, start: usize, out: &mut [f64]) {
+    let s = base + start;
+    out.copy_from_slice(&data[s..s + out.len()]);
+}
+
+/// Column-broadcast leaf (`col_stride == 0`, no modulo): one constant
+/// fill per output-row segment.
+#[inline]
+fn load_broadcast(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
     let oc = view.out_cols.max(1);
+    let len = out.len();
     let mut pos = 0usize;
     let mut r = start / oc;
     let mut c = start % oc;
     while pos < len {
         let seg = (oc - c).min(len - pos);
-        fill_segment(data, view, r, c, &mut out[pos..pos + seg]);
+        out[pos..pos + seg].fill(data[view.base + r * view.row_stride]);
         pos += seg;
         r += 1;
         c = 0;
     }
 }
 
-/// Fill one output-row segment (constant `r`, columns `c0..c0+seg`).
+/// Strided leaf (`col_stride >= 1`, no modulo): unit-stride row segments
+/// memcpy, otherwise a strided gather per segment.
 #[inline]
-fn fill_segment(data: &[f64], view: &View, r: usize, c0: usize, out: &mut [f64]) {
-    let lin0 = r * view.row_stride + c0 * view.col_stride;
-    match view.modulo {
-        None => {
-            let s0 = view.base + lin0;
-            if view.col_stride == 0 {
-                // row broadcast (repeat_col leaves): constant segment
-                out.fill(data[s0]);
-            } else if view.col_stride == 1 {
-                // unit stride within the row (repeat_row / row views)
-                out.copy_from_slice(&data[s0..s0 + out.len()]);
-            } else {
-                // strided gather (column views, strided sections)
-                let cs = view.col_stride;
-                let mut s = s0;
-                for o in out.iter_mut() {
-                    *o = data[s];
-                    s += cs;
-                }
+fn load_strided(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
+    let oc = view.out_cols.max(1);
+    let len = out.len();
+    let cs = view.col_stride;
+    let mut pos = 0usize;
+    let mut r = start / oc;
+    let mut c = start % oc;
+    while pos < len {
+        let seg = (oc - c).min(len - pos);
+        let s0 = view.base + r * view.row_stride + c * cs;
+        let o = &mut out[pos..pos + seg];
+        if cs == 1 {
+            o.copy_from_slice(&data[s0..s0 + seg]);
+        } else {
+            let mut s = s0;
+            for x in o.iter_mut() {
+                *x = data[s];
+                s += cs;
             }
         }
-        Some(m) => {
-            // cyclic view (repeat): wrap by subtraction — col_stride never
-            // exceeds the period by construction (compose scales both).
-            let cs = view.col_stride;
-            let mut lin = lin0 % m;
-            for o in out.iter_mut() {
-                *o = data[view.base + lin];
-                lin += cs;
-                if lin >= m {
-                    lin %= m;
-                }
+        pos += seg;
+        r += 1;
+        c = 0;
+    }
+}
+
+/// Cyclic leaf (`repeat` views): wrap by subtraction — col_stride never
+/// exceeds the period by construction (compose scales both).
+#[inline]
+fn load_modulo(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
+    let oc = view.out_cols.max(1);
+    let len = out.len();
+    let cs = view.col_stride;
+    let m = match view.modulo {
+        Some(m) => m,
+        None => return,
+    };
+    let mut pos = 0usize;
+    let mut r = start / oc;
+    let mut c = start % oc;
+    while pos < len {
+        let seg = (oc - c).min(len - pos);
+        let mut lin = (r * view.row_stride + c * cs) % m;
+        for x in out[pos..pos + seg].iter_mut() {
+            *x = data[view.base + lin];
+            lin += cs;
+            if lin >= m {
+                lin %= m;
             }
         }
+        pos += seg;
+        r += 1;
+        c = 0;
+    }
+}
+
+/// Gather a block through an affine view: classify the view shape and
+/// dispatch to the matching monomorphised loader.
+fn fill_view(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
+    if view.is_contiguous() {
+        load_contiguous(data, view.base, start, out);
+    } else if view.modulo.is_some() {
+        load_modulo(data, view, start, out);
+    } else if view.col_stride == 0 {
+        load_broadcast(data, view, start, out);
+    } else {
+        load_strided(data, view, start, out);
     }
 }
 
@@ -343,6 +430,548 @@ impl BinOp {
     }
 }
 
+// ---------------------------------------------------------------------
+// Tape compiler + register VM
+// ---------------------------------------------------------------------
+
+/// Virtual block-register index. Register 0 is the output block; higher
+/// registers are `BLOCK`-sized lanes of a per-thread scratch file.
+pub type Reg = u16;
+
+/// Hard cap on virtual registers per tape. The free-list allocator keeps
+/// the peak at the right-spine depth of the fused tree, which the
+/// planner bounds at [`crate::coordinator::plan::MAX_FUSE_OPS`]; the cap
+/// only guards hand-built trees.
+const MAX_REGS: usize = 4096;
+
+/// A raw leaf binding (`ptr`, `len`), the allocation-free way to hand a
+/// resolved buffer set to [`TapeProgram::run_range_raw`].
+pub type LeafBind = (*const f64, usize);
+
+/// Leaf-indexed fused tree: the tape compiler's input. Both the engine's
+/// [`FExec`] (Arc-resolved leaves) and the serving layer's graph-free
+/// trees lower into this, keeping buffer resolution out of the compiler.
+#[derive(Debug, Clone)]
+pub enum KTree {
+    Leaf { leaf: u16, view: View },
+    /// Broadcast of the single element `leaves[leaf][idx]`, bound at
+    /// run time (serving scalar parameters resolve here).
+    Splat { leaf: u16, idx: usize },
+    Const(f64),
+    Iota,
+    Acc,
+    Bin(BinOp, Box<KTree>, Box<KTree>),
+    Un(UnOp, Box<KTree>),
+}
+
+/// One tape instruction. All instructions operate on the current block:
+/// loads materialise a leaf segment into a register, operator
+/// instructions mutate their `dst` register in place, and the fused
+/// superinstructions (`MulAdd`/`MulSub`/`ScaleAddConst`/`Axpy`) combine
+/// what the tree interpreter needs several block passes for into one.
+#[derive(Debug, Clone, Copy)]
+pub enum Instr {
+    /// `dst <- leaf[base + i]` (contiguous view: one memcpy).
+    LoadContiguous { dst: Reg, leaf: u16, base: usize },
+    /// `dst <- broadcast(leaf[idx])`.
+    LoadSplat { dst: Reg, leaf: u16, idx: usize },
+    /// `dst <- leaf` through a column-broadcast view.
+    LoadBroadcast { dst: Reg, leaf: u16, view: View },
+    /// `dst <- leaf` through a strided (modulo-free) view.
+    LoadStrided { dst: Reg, leaf: u16, view: View },
+    /// `dst <- leaf` through a cyclic view.
+    LoadModulo { dst: Reg, leaf: u16, view: View },
+    /// `dst <- broadcast(val)`.
+    LoadConst { dst: Reg, val: f64 },
+    /// `dst[k] <- (start + k) as f64`.
+    LoadIota { dst: Reg },
+    /// `dst <- op(dst, rhs)`.
+    Bin { op: BinOp, dst: Reg, rhs: Reg },
+    /// `dst <- op(dst, val)`.
+    BinConst { op: BinOp, dst: Reg, val: f64 },
+    /// `dst <- op(dst, leaf[idx])` — runtime-bound scalar operand.
+    BinSplat { op: BinOp, dst: Reg, leaf: u16, idx: usize },
+    /// `dst <- op(dst)`.
+    Un { op: UnOp, dst: Reg },
+    /// `dst[i] += a[i] * b[i]` — one pass instead of mul-into-scratch
+    /// plus add-from-scratch.
+    MulAdd { dst: Reg, a: Reg, b: Reg },
+    /// `dst[i] -= a[i] * b[i]`.
+    MulSub { dst: Reg, a: Reg, b: Reg },
+    /// `dst[i] = dst[i] * mul + add` — peephole of adjacent scalar
+    /// multiply and add/subtract.
+    ScaleAddConst { dst: Reg, mul: f64, add: f64 },
+    /// Rank-1 update: `dst[seg] ±= a_row * b[seg]` with `a` a
+    /// column-broadcast leaf and `b` a unit-stride row leaf — subsumes
+    /// the tree interpreter's hand-matched special case.
+    Axpy { dst: Reg, sub: bool, a: u16, av: View, b: u16, bv: View },
+}
+
+/// A compiled, leaf-abstract tape: the instruction stream plus register
+/// and leaf counts. `Send + Sync`; bind leaves per run.
+#[derive(Debug)]
+pub struct TapeProgram {
+    instrs: Vec<Instr>,
+    /// Scratch registers beyond the output register (peak liveness after
+    /// free-list reuse).
+    n_scratch: usize,
+    n_leaves: usize,
+}
+
+impl TapeProgram {
+    /// Lower a leaf-indexed fused tree post-order into a flat tape.
+    pub fn compile(tree: &KTree) -> crate::Result<TapeProgram> {
+        let mut b = TapeBuilder {
+            instrs: Vec::new(),
+            free: Vec::new(),
+            next: 1,
+            high: 1,
+            n_leaves: 0,
+        };
+        b.lower(tree, 0)?;
+        let instrs = peephole(b.instrs);
+        Ok(TapeProgram { instrs, n_scratch: b.high - 1, n_leaves: b.n_leaves })
+    }
+
+    pub fn n_instrs(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Scratch registers beyond the output register (peak liveness).
+    pub fn n_scratch_regs(&self) -> usize {
+        self.n_scratch
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.n_leaves
+    }
+
+    pub fn instrs(&self) -> &[Instr] {
+        &self.instrs
+    }
+
+    /// Execute over output indices `[start, start + out.len())` with
+    /// `leaves[i]` bound to the i-th leaf buffer.
+    pub fn run_range(
+        &self,
+        leaves: &[&[f64]],
+        start: usize,
+        out: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        let raw: Vec<LeafBind> = leaves.iter().map(|s| (s.as_ptr(), s.len())).collect();
+        // SAFETY: `raw` points into `leaves`, which outlive this call.
+        unsafe { self.run_range_raw(&raw, start, out, scratch) }
+    }
+
+    /// Allocation-free entry: leaves are pre-resolved raw bindings (the
+    /// serving replay arena recycles the binding vector across calls).
+    ///
+    /// # Safety
+    ///
+    /// Every `(ptr, len)` in `leaves` must describe a live, initialised
+    /// f64 buffer for the duration of the call, none of which overlaps
+    /// `out`.
+    pub unsafe fn run_range_raw(
+        &self,
+        leaves: &[LeafBind],
+        start: usize,
+        out: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        debug_assert!(leaves.len() >= self.n_leaves, "tape run with too few leaf bindings");
+        let mut file = scratch.take_file(self.n_scratch * BLOCK);
+        let mut off = 0;
+        while off < out.len() {
+            let len = BLOCK.min(out.len() - off);
+            self.run_block(leaves, start + off, &mut out[off..off + len], &mut file);
+            off += len;
+        }
+        scratch.put_file(file);
+    }
+
+    /// Execute one block (`out.len() <= BLOCK`).
+    unsafe fn run_block(
+        &self,
+        leaves: &[LeafBind],
+        start: usize,
+        out: &mut [f64],
+        file: &mut [f64],
+    ) {
+        let len = out.len();
+        let out_ptr = out.as_mut_ptr();
+        let file_ptr = file.as_mut_ptr();
+        // SAFETY (whole loop): the compiler guarantees the registers of
+        // one instruction are pairwise distinct (an operand register is
+        // allocated while `dst` is live, and register 0 never doubles as
+        // an operand), so the mutable `dst` slice never aliases a source
+        // slice; leaf buffers are caller-guaranteed live and disjoint
+        // from the output and the register file.
+        for ins in &self.instrs {
+            match *ins {
+                Instr::LoadContiguous { dst, leaf, base } => {
+                    let o = reg_mut(out_ptr, file_ptr, dst, len);
+                    load_contiguous(leaf_slice(leaves, leaf), base, start, o);
+                }
+                Instr::LoadSplat { dst, leaf, idx } => {
+                    reg_mut(out_ptr, file_ptr, dst, len).fill(leaf_slice(leaves, leaf)[idx]);
+                }
+                Instr::LoadBroadcast { dst, leaf, view } => {
+                    let o = reg_mut(out_ptr, file_ptr, dst, len);
+                    load_broadcast(leaf_slice(leaves, leaf), &view, start, o);
+                }
+                Instr::LoadStrided { dst, leaf, view } => {
+                    let o = reg_mut(out_ptr, file_ptr, dst, len);
+                    load_strided(leaf_slice(leaves, leaf), &view, start, o);
+                }
+                Instr::LoadModulo { dst, leaf, view } => {
+                    let o = reg_mut(out_ptr, file_ptr, dst, len);
+                    load_modulo(leaf_slice(leaves, leaf), &view, start, o);
+                }
+                Instr::LoadConst { dst, val } => {
+                    reg_mut(out_ptr, file_ptr, dst, len).fill(val);
+                }
+                Instr::LoadIota { dst } => {
+                    let o = reg_mut(out_ptr, file_ptr, dst, len);
+                    for (k, x) in o.iter_mut().enumerate() {
+                        *x = (start + k) as f64;
+                    }
+                }
+                Instr::Bin { op, dst, rhs } => {
+                    let d = reg_mut(out_ptr, file_ptr, dst, len);
+                    let s = reg_ref(out_ptr, file_ptr, rhs, len);
+                    op.apply_slices_inplace(d, s);
+                }
+                Instr::BinConst { op, dst, val } => {
+                    op.apply_slice_scalar_inplace(reg_mut(out_ptr, file_ptr, dst, len), val);
+                }
+                Instr::BinSplat { op, dst, leaf, idx } => {
+                    let s = leaf_slice(leaves, leaf)[idx];
+                    op.apply_slice_scalar_inplace(reg_mut(out_ptr, file_ptr, dst, len), s);
+                }
+                Instr::Un { op, dst } => {
+                    op.apply_slice_inplace(reg_mut(out_ptr, file_ptr, dst, len));
+                }
+                Instr::MulAdd { dst, a, b } => {
+                    let d = reg_mut(out_ptr, file_ptr, dst, len);
+                    let x = reg_ref(out_ptr, file_ptr, a, len);
+                    let y = reg_ref(out_ptr, file_ptr, b, len);
+                    for i in 0..len {
+                        d[i] += x[i] * y[i];
+                    }
+                }
+                Instr::MulSub { dst, a, b } => {
+                    let d = reg_mut(out_ptr, file_ptr, dst, len);
+                    let x = reg_ref(out_ptr, file_ptr, a, len);
+                    let y = reg_ref(out_ptr, file_ptr, b, len);
+                    for i in 0..len {
+                        d[i] -= x[i] * y[i];
+                    }
+                }
+                Instr::ScaleAddConst { dst, mul, add } => {
+                    for x in reg_mut(out_ptr, file_ptr, dst, len).iter_mut() {
+                        *x = *x * mul + add;
+                    }
+                }
+                Instr::Axpy { dst, sub, a, av, b, bv } => {
+                    let op = if sub { BinOp::Sub } else { BinOp::Add };
+                    let d = reg_mut(out_ptr, file_ptr, dst, len);
+                    axpy_pattern(
+                        op,
+                        leaf_slice(leaves, a),
+                        &av,
+                        leaf_slice(leaves, b),
+                        &bv,
+                        start,
+                        d,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Mutable view of register `r` for the current block.
+///
+/// # Safety
+/// Caller guarantees `r` is in range and not simultaneously borrowed.
+#[inline(always)]
+unsafe fn reg_mut<'a>(out_ptr: *mut f64, file_ptr: *mut f64, r: Reg, len: usize) -> &'a mut [f64] {
+    if r == 0 {
+        std::slice::from_raw_parts_mut(out_ptr, len)
+    } else {
+        std::slice::from_raw_parts_mut(file_ptr.add((r as usize - 1) * BLOCK), len)
+    }
+}
+
+/// Shared view of register `r` for the current block.
+///
+/// # Safety
+/// Caller guarantees `r` is in range and not mutably borrowed.
+#[inline(always)]
+unsafe fn reg_ref<'a>(out_ptr: *mut f64, file_ptr: *mut f64, r: Reg, len: usize) -> &'a [f64] {
+    if r == 0 {
+        std::slice::from_raw_parts(out_ptr as *const f64, len)
+    } else {
+        std::slice::from_raw_parts(file_ptr.add((r as usize - 1) * BLOCK) as *const f64, len)
+    }
+}
+
+/// Resolve a raw leaf binding to a slice.
+///
+/// # Safety
+/// Caller guarantees the binding points at a live buffer.
+#[inline(always)]
+unsafe fn leaf_slice<'a>(leaves: &[LeafBind], l: u16) -> &'a [f64] {
+    let (p, n) = leaves[l as usize];
+    std::slice::from_raw_parts(p, n)
+}
+
+struct TapeBuilder {
+    instrs: Vec<Instr>,
+    /// Free-list of released registers (the liveness pass): a register is
+    /// released the moment its consumer is emitted, so sibling subtrees
+    /// reuse the same lanes and peak usage equals right-spine depth.
+    free: Vec<Reg>,
+    /// Next never-used register (1-based; 0 is the output register).
+    next: usize,
+    /// High-water mark: 1 + peak scratch registers in use.
+    high: usize,
+    n_leaves: usize,
+}
+
+impl TapeBuilder {
+    fn alloc(&mut self) -> crate::Result<Reg> {
+        if let Some(r) = self.free.pop() {
+            return Ok(r);
+        }
+        if self.next >= MAX_REGS {
+            return Err(crate::Error::Invalid(
+                "fused tree too deep for the tape register file".into(),
+            ));
+        }
+        let r = self.next as Reg;
+        self.next += 1;
+        self.high = self.high.max(self.next);
+        Ok(r)
+    }
+
+    fn release(&mut self, r: Reg) {
+        self.free.push(r);
+    }
+
+    fn saw_leaf(&mut self, l: u16) {
+        self.n_leaves = self.n_leaves.max(l as usize + 1);
+    }
+
+    /// Emit code leaving the value of `t` in register `dst`.
+    fn lower(&mut self, t: &KTree, dst: Reg) -> crate::Result<()> {
+        match t {
+            KTree::Const(c) => self.instrs.push(Instr::LoadConst { dst, val: *c }),
+            KTree::Iota => self.instrs.push(Instr::LoadIota { dst }),
+            KTree::Splat { leaf, idx } => {
+                self.saw_leaf(*leaf);
+                self.instrs.push(Instr::LoadSplat { dst, leaf: *leaf, idx: *idx });
+            }
+            KTree::Leaf { leaf, view } => {
+                self.saw_leaf(*leaf);
+                let ins = load_instr(dst, *leaf, view);
+                self.instrs.push(ins);
+            }
+            KTree::Acc => {
+                if dst != 0 {
+                    return Err(crate::Error::Invalid(
+                        "malformed plan: Acc leaf off the left spine".into(),
+                    ));
+                }
+                // Register 0 already holds the accumulation base: no code.
+            }
+            KTree::Un(op, a) => {
+                self.lower(a, dst)?;
+                self.instrs.push(Instr::Un { op: *op, dst });
+            }
+            KTree::Bin(op, l, r) => {
+                self.lower(l, dst)?;
+                match &**r {
+                    KTree::Const(c) => {
+                        self.instrs.push(Instr::BinConst { op: *op, dst, val: *c })
+                    }
+                    KTree::Splat { leaf, idx } => {
+                        self.saw_leaf(*leaf);
+                        self.instrs.push(Instr::BinSplat {
+                            op: *op,
+                            dst,
+                            leaf: *leaf,
+                            idx: *idx,
+                        });
+                    }
+                    KTree::Bin(BinOp::Mul, p, q)
+                        if matches!(op, BinOp::Add | BinOp::Sub) =>
+                    {
+                        if let Some((al, av, bl, bv)) = axpy_leaves(p, q) {
+                            self.saw_leaf(al);
+                            self.saw_leaf(bl);
+                            self.instrs.push(Instr::Axpy {
+                                dst,
+                                sub: *op == BinOp::Sub,
+                                a: al,
+                                av,
+                                b: bl,
+                                bv,
+                            });
+                        } else {
+                            let ra = self.alloc()?;
+                            self.lower(p, ra)?;
+                            let rb = self.alloc()?;
+                            self.lower(q, rb)?;
+                            self.instrs.push(if *op == BinOp::Add {
+                                Instr::MulAdd { dst, a: ra, b: rb }
+                            } else {
+                                Instr::MulSub { dst, a: ra, b: rb }
+                            });
+                            self.release(rb);
+                            self.release(ra);
+                        }
+                    }
+                    _ => {
+                        let rr = self.alloc()?;
+                        self.lower(r, rr)?;
+                        self.instrs.push(Instr::Bin { op: *op, dst, rhs: rr });
+                        self.release(rr);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Classify a leaf view into its monomorphised load instruction.
+fn load_instr(dst: Reg, leaf: u16, view: &View) -> Instr {
+    if view.is_contiguous() {
+        Instr::LoadContiguous { dst, leaf, base: view.base }
+    } else if view.modulo.is_some() {
+        Instr::LoadModulo { dst, leaf, view: *view }
+    } else if view.col_stride == 0 && view.row_stride == 0 {
+        Instr::LoadSplat { dst, leaf, idx: view.base }
+    } else if view.col_stride == 0 {
+        Instr::LoadBroadcast { dst, leaf, view: *view }
+    } else {
+        Instr::LoadStrided { dst, leaf, view: *view }
+    }
+}
+
+/// Rank-1-update operand match on leaf-indexed trees (the tape analogue
+/// of [`axpy_operands`]; the conditions are kept identical so both
+/// executors special-case exactly the same trees).
+fn axpy_leaves(p: &KTree, q: &KTree) -> Option<(u16, View, u16, View)> {
+    let classify = |t: &KTree| match t {
+        KTree::Leaf { leaf, view } => Some((*leaf, *view)),
+        _ => None,
+    };
+    let (pl, pv) = classify(p)?;
+    let (ql, qv) = classify(q)?;
+    let is_bcast = |v: &View| v.col_stride == 0 && v.modulo.is_none();
+    let is_row = |v: &View| v.col_stride == 1;
+    if is_bcast(&pv) && is_row(&qv) {
+        Some((pl, pv, ql, qv))
+    } else if is_bcast(&qv) && is_row(&pv) {
+        Some((ql, qv, pl, pv))
+    } else {
+        None
+    }
+}
+
+/// Post-pass peepholes: merge `dst *= m; dst += c` (and the `-= c`
+/// form) into one [`Instr::ScaleAddConst`] pass. The arithmetic is the
+/// same two rounded operations, just one block traversal.
+fn peephole(instrs: Vec<Instr>) -> Vec<Instr> {
+    let mut out: Vec<Instr> = Vec::with_capacity(instrs.len());
+    for ins in instrs {
+        let last = out.last().copied();
+        match (last, ins) {
+            (
+                Some(Instr::BinConst { op: BinOp::Mul, dst: d1, val: mul }),
+                Instr::BinConst { op: op2, dst: d2, val: c },
+            ) if d1 == d2 && matches!(op2, BinOp::Add | BinOp::Sub) => {
+                let add = if op2 == BinOp::Sub { -c } else { c };
+                out.pop();
+                out.push(Instr::ScaleAddConst { dst: d2, mul, add });
+            }
+            (_, ins) => out.push(ins),
+        }
+    }
+    out
+}
+
+/// A compiled fused kernel with its leaf buffers bound: the engine-side
+/// tape (the serving layer binds leaves per request instead, through
+/// [`TapeProgram::run_range_raw`]).
+pub struct Tape {
+    prog: TapeProgram,
+    /// Keeps the leaf buffers alive; `raw` below points into them.
+    _leaves: Vec<Arc<Vec<f64>>>,
+    raw: Vec<LeafBind>,
+}
+
+// SAFETY: the raw bindings point into the heap buffers of the
+// `Arc<Vec<f64>>`s held by `_leaves`, which live (and never move) as
+// long as the Tape; all access through them is read-only.
+unsafe impl Send for Tape {}
+unsafe impl Sync for Tape {}
+
+impl Tape {
+    /// Compile an executable fused tree into a tape.
+    pub fn compile(fx: &FExec) -> crate::Result<Tape> {
+        let mut leaves: Vec<Arc<Vec<f64>>> = Vec::new();
+        let kt = fexec_to_ktree(fx, &mut leaves)?;
+        let prog = TapeProgram::compile(&kt)?;
+        let raw = leaves.iter().map(|a| (a.as_ptr(), a.len())).collect();
+        Ok(Tape { prog, _leaves: leaves, raw })
+    }
+
+    /// Lower an [`FTree`] and compile it — the engine's per-step entry
+    /// (one compile, then every chunk of every block replays the tape).
+    pub fn from_ftree(tree: &FTree) -> crate::Result<Tape> {
+        Tape::compile(&lower(tree)?)
+    }
+
+    /// Execute over output indices `[start, start + out.len())`.
+    pub fn run_range(&self, start: usize, out: &mut [f64], scratch: &mut Scratch) {
+        // SAFETY: `raw` points into buffers owned by `self._leaves`,
+        // alive for the duration of the call and disjoint from `out`
+        // (the engine writes steps into freshly allocated buffers).
+        unsafe { self.prog.run_range_raw(&self.raw, start, out, scratch) }
+    }
+
+    pub fn program(&self) -> &TapeProgram {
+        &self.prog
+    }
+}
+
+fn fexec_to_ktree(fx: &FExec, leaves: &mut Vec<Arc<Vec<f64>>>) -> crate::Result<KTree> {
+    Ok(match fx {
+        FExec::Leaf { data, view } => {
+            if leaves.len() >= u16::MAX as usize {
+                return Err(crate::Error::Invalid(
+                    "fused tree has too many leaves for the tape VM".into(),
+                ));
+            }
+            leaves.push(data.clone());
+            KTree::Leaf { leaf: (leaves.len() - 1) as u16, view: *view }
+        }
+        FExec::Const(c) => KTree::Const(*c),
+        FExec::Iota => KTree::Iota,
+        FExec::Acc => KTree::Acc,
+        FExec::Bin(op, a, b) => KTree::Bin(
+            *op,
+            Box::new(fexec_to_ktree(a, leaves)?),
+            Box::new(fexec_to_ktree(b, leaves)?),
+        ),
+        FExec::Un(op, a) => KTree::Un(*op, Box::new(fexec_to_ktree(a, leaves)?)),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,13 +980,29 @@ mod tests {
         FExec::Leaf { data: Arc::new(data), view }
     }
 
+    /// Evaluate through both executors and require bit-identical output.
+    fn eval_both(fx: &FExec, start: usize, init: &[f64]) -> Vec<f64> {
+        let mut tree_out = init.to_vec();
+        eval_range(fx, start, &mut tree_out, &mut Scratch::default());
+        let tape = Tape::compile(fx).unwrap();
+        let mut tape_out = init.to_vec();
+        tape.run_range(start, &mut tape_out, &mut Scratch::default());
+        assert_eq!(tree_out.len(), tape_out.len());
+        for (i, (a, b)) in tree_out.iter().zip(&tape_out).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "tape diverges from tree at {i}: {a:?} vs {b:?}"
+            );
+        }
+        tree_out
+    }
+
     #[test]
     fn eval_contiguous_add() {
         let a = leaf(vec![1.0, 2.0, 3.0, 4.0], View::identity(4));
         let b = leaf(vec![10.0, 20.0, 30.0, 40.0], View::identity(4));
         let fx = FExec::Bin(BinOp::Add, Box::new(a), Box::new(b));
-        let mut out = vec![0.0; 4];
-        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        let out = eval_both(&fx, 0, &[0.0; 4]);
         assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0]);
     }
 
@@ -365,8 +1010,7 @@ mod tests {
     fn eval_scalar_rhs() {
         let a = leaf(vec![1.0, 2.0], View::identity(2));
         let fx = FExec::Bin(BinOp::Mul, Box::new(a), Box::new(FExec::Const(3.0)));
-        let mut out = vec![0.0; 2];
-        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        let out = eval_both(&fx, 0, &[0.0; 2]);
         assert_eq!(out, vec![3.0, 6.0]);
     }
 
@@ -375,8 +1019,7 @@ mod tests {
         // even elements of an 8-vector
         let v = View { base: 0, row_stride: 0, col_stride: 2, out_cols: 4, modulo: None };
         let fx = leaf((0..8).map(|x| x as f64).collect(), v);
-        let mut out = vec![0.0; 4];
-        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        let out = eval_both(&fx, 0, &[0.0; 4]);
         assert_eq!(out, vec![0.0, 2.0, 4.0, 6.0]);
     }
 
@@ -384,8 +1027,7 @@ mod tests {
     fn eval_modulo_view() {
         let v = View { base: 0, row_stride: 4, col_stride: 1, out_cols: 4, modulo: Some(2) };
         let fx = leaf(vec![7.0, 9.0], v);
-        let mut out = vec![0.0; 8];
-        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        let out = eval_both(&fx, 0, &[0.0; 8]);
         assert_eq!(out, vec![7.0, 9.0, 7.0, 9.0, 7.0, 9.0, 7.0, 9.0]);
     }
 
@@ -398,18 +1040,16 @@ mod tests {
             UnOp::Sqrt,
             Box::new(leaf(data.clone(), View::identity(10))),
         );
-        let mut full = vec![0.0; n];
-        eval_range(&fx, 0, &mut full, &mut Scratch::default());
-        let mut part = vec![0.0; 30];
-        eval_range(&fx, 25, &mut part, &mut Scratch::default());
+        let init = vec![0.0; n];
+        let full = eval_both(&fx, 0, &init);
+        let part = eval_both(&fx, 25, &[0.0; 30]);
         assert_eq!(&full[25..55], part.as_slice());
     }
 
     #[test]
     fn eval_iota() {
         let fx = FExec::Iota;
-        let mut out = vec![0.0; 5];
-        eval_range(&fx, 10, &mut out, &mut Scratch::default());
+        let out = eval_both(&fx, 10, &[0.0; 5]);
         assert_eq!(out, vec![10.0, 11.0, 12.0, 13.0, 14.0]);
     }
 
@@ -434,8 +1074,7 @@ mod tests {
         // out starts as base; fx = Acc + leaf
         let addend = leaf(vec![1.0, 2.0, 3.0], View::identity(3));
         let fx = FExec::Bin(BinOp::Add, Box::new(FExec::Acc), Box::new(addend));
-        let mut out = vec![10.0, 20.0, 30.0];
-        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        let out = eval_both(&fx, 0, &[10.0, 20.0, 30.0]);
         assert_eq!(out, vec![11.0, 22.0, 33.0]);
     }
 
@@ -466,6 +1105,16 @@ mod tests {
     }
 
     #[test]
+    fn tape_rejects_acc_off_left_spine() {
+        let bad = FExec::Bin(
+            BinOp::Add,
+            Box::new(FExec::Const(1.0)),
+            Box::new(FExec::Acc),
+        );
+        assert!(Tape::compile(&bad).is_err());
+    }
+
+    #[test]
     fn blocks_cross_boundaries() {
         let n = BLOCK * 3 + 17;
         let data: Vec<f64> = (0..n).map(|x| x as f64).collect();
@@ -474,10 +1123,117 @@ mod tests {
             Box::new(leaf(data.clone(), View::identity(n))),
             Box::new(FExec::Const(0.5)),
         );
-        let mut out = vec![0.0; n];
-        eval_range(&fx, 0, &mut out, &mut Scratch::default());
+        let init = vec![0.0; n];
+        let out = eval_both(&fx, 0, &init);
         for i in [0, 1, BLOCK - 1, BLOCK, 2 * BLOCK + 5, n - 1] {
             assert_eq!(out[i], i as f64 + 0.5);
+        }
+    }
+
+    #[test]
+    fn tape_left_deep_chain_reuses_one_register() {
+        // ((((a + b) + c) + d) + e): every rhs leaf is released before
+        // the next is lowered, so one scratch register suffices.
+        let n = 8;
+        let mk = |s: f64| leaf(vec![s; n], View::identity(n));
+        let mut fx = mk(1.0);
+        for k in 2..=5 {
+            fx = FExec::Bin(BinOp::Add, Box::new(fx), Box::new(mk(k as f64)));
+        }
+        let tape = Tape::compile(&fx).unwrap();
+        assert_eq!(tape.program().n_scratch_regs(), 1, "free-list must reuse registers");
+        let out = eval_both(&fx, 0, &[0.0; 8]);
+        assert_eq!(out[0], 15.0);
+    }
+
+    #[test]
+    fn tape_emits_scale_add_const_peephole() {
+        // a * 2 + 1  →  Load; ScaleAddConst
+        let fx = FExec::Bin(
+            BinOp::Add,
+            Box::new(FExec::Bin(
+                BinOp::Mul,
+                Box::new(leaf(vec![1.0, 2.0, 3.0], View::identity(3))),
+                Box::new(FExec::Const(2.0)),
+            )),
+            Box::new(FExec::Const(1.0)),
+        );
+        let tape = Tape::compile(&fx).unwrap();
+        assert_eq!(tape.program().n_instrs(), 2, "{:?}", tape.program().instrs());
+        assert!(matches!(tape.program().instrs()[1], Instr::ScaleAddConst { .. }));
+        let out = eval_both(&fx, 0, &[0.0; 3]);
+        assert_eq!(out, vec![3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn tape_emits_mul_add_superinstruction() {
+        // acc + x*y with non-axpy views → MulAdd, not Mul + Add.
+        let n = 6;
+        let x = leaf((0..n).map(|v| v as f64).collect(), View::identity(n));
+        let y = leaf((0..n).map(|v| (v * 2) as f64).collect(), View::identity(n));
+        let base = leaf(vec![1.0; n], View::identity(n));
+        let fx = FExec::Bin(
+            BinOp::Add,
+            Box::new(base),
+            Box::new(FExec::Bin(BinOp::Mul, Box::new(x), Box::new(y))),
+        );
+        let tape = Tape::compile(&fx).unwrap();
+        assert!(
+            tape.program()
+                .instrs()
+                .iter()
+                .any(|i| matches!(i, Instr::MulAdd { .. })),
+            "{:?}",
+            tape.program().instrs()
+        );
+        let out = eval_both(&fx, 0, &[0.0; 6]);
+        assert_eq!(out[3], 1.0 + 3.0 * 6.0);
+    }
+
+    #[test]
+    fn tape_emits_axpy_superinstruction() {
+        // colbcast(a) * row(b) under Add → the rank-1-update instruction.
+        let oc = 8;
+        let a = leaf(
+            vec![2.0, 3.0],
+            View { base: 0, row_stride: 1, col_stride: 0, out_cols: oc, modulo: None },
+        );
+        let b = leaf(
+            (0..16).map(|v| v as f64).collect(),
+            View { base: 0, row_stride: 8, col_stride: 1, out_cols: oc, modulo: None },
+        );
+        let fx = FExec::Bin(
+            BinOp::Add,
+            Box::new(FExec::Const(0.0)),
+            Box::new(FExec::Bin(BinOp::Mul, Box::new(a), Box::new(b))),
+        );
+        let tape = Tape::compile(&fx).unwrap();
+        assert!(
+            tape.program().instrs().iter().any(|i| matches!(i, Instr::Axpy { .. })),
+            "{:?}",
+            tape.program().instrs()
+        );
+        let out = eval_both(&fx, 0, &[0.0; 16]);
+        assert_eq!(out[1], 2.0); // row 0: 2.0 * b[1]
+        assert_eq!(out[9], 3.0 * 9.0); // row 1: 3.0 * b[9]
+    }
+
+    #[test]
+    fn tape_program_run_with_bound_leaves() {
+        // The leaf-abstract entry: same program, rebound buffers.
+        let kt = KTree::Bin(
+            BinOp::Mul,
+            Box::new(KTree::Leaf { leaf: 0, view: View::identity(4) }),
+            Box::new(KTree::Splat { leaf: 1, idx: 0 }),
+        );
+        let prog = TapeProgram::compile(&kt).unwrap();
+        assert_eq!(prog.n_leaves(), 2);
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let mut out = [0.0; 4];
+        for s in [2.0, 10.0] {
+            let scale = [s];
+            prog.run_range(&[xs.as_slice(), scale.as_slice()], 0, &mut out, &mut Scratch::default());
+            assert_eq!(out, [1.0 * s, 2.0 * s, 3.0 * s, 4.0 * s]);
         }
     }
 }

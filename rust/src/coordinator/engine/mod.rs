@@ -18,7 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use self::eval::{eval_range, lower, FExec, BLOCK};
+use self::eval::{Tape, BLOCK};
 use self::pool::SharedPool;
 use super::map::MapArgs;
 use super::node::{Data, NodeRef, Op};
@@ -210,7 +210,7 @@ fn exec_step(
     // ---- lower + execute per step kind ----
     let (result, record): (Vec<f64>, Option<StepRecord>) = match step {
         Step::Fused { tree, .. } => {
-            let fx = lower(tree)?;
+            let fx = Tape::from_ftree(tree)?;
             let mut out = vec![0.0f64; out_len];
             let chunks = make_chunks(out_len, cfg, workers);
             let fpe = tree.flops_per_elem();
@@ -228,7 +228,7 @@ fn exec_step(
             }))
         }
         Step::Accumulate { base, tree, .. } => {
-            let fx = lower(tree)?;
+            let fx = Tape::from_ftree(tree)?;
             let mut out = take_or_clone(base, cfg.in_place)?;
             debug_assert_eq!(out.len(), out_len);
             let chunks = make_chunks(out_len, cfg, workers);
@@ -247,7 +247,7 @@ fn exec_step(
             }))
         }
         Step::ReduceRows { red, tree, rows, cols, .. } => {
-            let fx = lower(tree)?;
+            let fx = Tape::from_ftree(tree)?;
             let mut out = vec![0.0f64; *rows];
             // chunk over output rows
             let row_grain = (cfg.grain / cols.max(&1)).max(1);
@@ -267,7 +267,7 @@ fn exec_step(
             }))
         }
         Step::ReduceCols { red, tree, rows, cols, .. } => {
-            let fx = lower(tree)?;
+            let fx = Tape::from_ftree(tree)?;
             let mut out = vec![red.identity(); *cols];
             let col_grain = cfg.grain.min(*cols).max(1);
             let chunks = make_row_chunks(*cols, col_grain, cfg, workers);
@@ -286,7 +286,7 @@ fn exec_step(
             }))
         }
         Step::ReduceAll { red, tree, len, .. } => {
-            let fx = lower(tree)?;
+            let fx = Tape::from_ftree(tree)?;
             let chunks = make_chunks(*len, cfg, workers);
             let fpe = tree.flops_per_elem() + 1.0;
             let (v, rec) = run_reduce_all(&fx, *red, *len, &chunks, cfg, pool);
@@ -302,8 +302,8 @@ fn exec_step(
             }))
         }
         Step::Cat { a, la, b, lb, .. } => {
-            let fa = lower(a)?;
-            let fb = lower(b)?;
+            let fa = Tape::from_ftree(a)?;
+            let fb = Tape::from_ftree(b)?;
             let mut out = vec![0.0f64; la + lb];
             let mut chunk_secs = Vec::new();
             // Two element-wise sub-kernels into disjoint halves.
@@ -333,12 +333,12 @@ fn exec_step(
             (out, rec)
         }
         Step::ReplaceCol { m, col, vtree, .. } => {
-            let fx = lower(vtree)?;
+            let fx = Tape::from_ftree(vtree)?;
             let (rows, cols) = (out_node.shape.rows(), out_node.shape.cols());
             let mut out = take_or_clone(m, cfg.in_place)?;
             let t0 = Instant::now();
             let mut tmp = vec![0.0f64; rows];
-            eval::with_scratch(|scratch| eval_range(&fx, 0, &mut tmp, scratch));
+            eval::with_scratch(|scratch| fx.run_range(0, &mut tmp, scratch));
             for r in 0..rows {
                 out[r * cols + col] = tmp[r];
             }
@@ -354,12 +354,12 @@ fn exec_step(
             (out, rec)
         }
         Step::ReplaceRow { m, row, vtree, .. } => {
-            let fx = lower(vtree)?;
+            let fx = Tape::from_ftree(vtree)?;
             let cols = out_node.shape.cols();
             let mut out = take_or_clone(m, cfg.in_place)?;
             let t0 = Instant::now();
             eval::with_scratch(|scratch| {
-                eval_range(&fx, 0, &mut out[row * cols..(row + 1) * cols], scratch)
+                fx.run_range(0, &mut out[row * cols..(row + 1) * cols], scratch)
             });
             stats.bytes += 16.0 * cols as f64;
             let rec = cfg.record.then(|| StepRecord {
@@ -548,7 +548,7 @@ fn run_chunked(
 }
 
 fn run_elementwise(
-    fx: &FExec,
+    fx: &Tape,
     out: &mut [f64],
     chunks: &[Chunk],
     cfg: &EngineCfg,
@@ -557,14 +557,14 @@ fn run_elementwise(
     let optr = OutPtr(out.as_mut_ptr());
     let body = |c: &Chunk| {
         let o = unsafe { optr.slice(c.start, c.len) };
-        eval::with_scratch(|scratch| eval_range(fx, c.start, o, scratch));
+        eval::with_scratch(|scratch| fx.run_range(c.start, o, scratch));
     };
     let times = run_chunked(chunks, cfg, pool, &body);
     cfg.record.then_some(times)
 }
 
 fn run_reduce_rows(
-    fx: &FExec,
+    fx: &Tape,
     red: RedOp,
     out: &mut [f64],
     cols: usize,
@@ -579,11 +579,14 @@ fn run_reduce_rows(
             let mut buf = scratch.take();
             for (k, ov) in o.iter_mut().enumerate() {
                 let r = c.start + k;
+                // Per-register tree-combine: the tape fills a register
+                // block, the reduction folds it — no tree re-walk per
+                // row block.
                 let mut acc = red.identity();
                 let mut off = 0;
                 while off < cols {
                     let len = BLOCK.min(cols - off);
-                    eval_range(fx, r * cols + off, &mut buf[..len], scratch);
+                    fx.run_range(r * cols + off, &mut buf[..len], scratch);
                     acc = red.fold(acc, red.fold_slice(&buf[..len]));
                     off += len;
                 }
@@ -597,7 +600,7 @@ fn run_reduce_rows(
 }
 
 fn run_reduce_cols(
-    fx: &FExec,
+    fx: &Tape,
     red: RedOp,
     out: &mut [f64],
     rows: usize,
@@ -616,7 +619,7 @@ fn run_reduce_cols(
                 let mut off = 0;
                 while off < c.len {
                     let len = BLOCK.min(c.len - off);
-                    eval_range(fx, r * cols + c.start + off, &mut buf[..len], scratch);
+                    fx.run_range(r * cols + c.start + off, &mut buf[..len], scratch);
                     for k in 0..len {
                         o[off + k] = red.fold(o[off + k], buf[k]);
                     }
@@ -631,7 +634,7 @@ fn run_reduce_cols(
 }
 
 fn run_reduce_all(
-    fx: &FExec,
+    fx: &Tape,
     red: RedOp,
     len: usize,
     chunks: &[Chunk],
@@ -651,7 +654,7 @@ fn run_reduce_all(
             let mut off = 0;
             while off < c.len {
                 let l = BLOCK.min(c.len - off);
-                eval_range(fx, c.start + off, &mut buf[..l], scratch);
+                fx.run_range(c.start + off, &mut buf[..l], scratch);
                 acc = red.fold(acc, red.fold_slice(&buf[..l]));
                 off += l;
             }

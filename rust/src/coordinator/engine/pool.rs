@@ -220,7 +220,9 @@ fn worker_loop(sh: Arc<Shared>) {
 ///
 /// Workers park between jobs, so an idle shared pool costs nothing but
 /// memory. Pools are interned per worker count by [`shared`] and live
-/// for the rest of the process.
+/// for the rest of the process. Besides the engines, the blocked
+/// [`crate::kernels::dgemm_pooled`] comparator fans its row-panel loop
+/// out over the same interned pools.
 pub struct SharedPool {
     inner: ThreadPool,
     submit: Mutex<()>,

@@ -217,6 +217,20 @@ impl UnOp {
         }
     }
 
+    /// In-place variant: `out[i] = op(out[i])` — the form both the tree
+    /// interpreter and the tape VM apply to a register block.
+    #[inline]
+    pub fn apply_slice_inplace(self, out: &mut [f64]) {
+        match self {
+            UnOp::Neg => out.iter_mut().for_each(|x| *x = -*x),
+            UnOp::Abs => out.iter_mut().for_each(|x| *x = x.abs()),
+            UnOp::Sqrt => out.iter_mut().for_each(|x| *x = x.sqrt()),
+            UnOp::Exp => out.iter_mut().for_each(|x| *x = x.exp()),
+            UnOp::Ln => out.iter_mut().for_each(|x| *x = x.ln()),
+            UnOp::Recip => out.iter_mut().for_each(|x| *x = 1.0 / *x),
+        }
+    }
+
     pub fn flops(self) -> f64 {
         match self {
             UnOp::Neg | UnOp::Abs => 1.0,

@@ -6,6 +6,11 @@
 //! views), detect in-place accumulation opportunities, and emit a
 //! topologically ordered list of [`Step`]s for the engine.
 //!
+//! The emitted [`FTree`]s are compiled once per step into flat
+//! instruction tapes by [`super::engine::eval::Tape`] — the planner
+//! decides *what* fuses, the tape compiler decides *how* the fused loop
+//! runs (register allocation, monomorphised loads, superinstructions).
+//!
 //! The optimisations modelled after ArBB's JIT:
 //!  * **element-wise fusion** — private temporaries never hit memory;
 //!  * **view absorption** — `row/col/section/repeat_*` become index
@@ -79,7 +84,9 @@ impl FTree {
         }
     }
 
-    fn count_ops(&self) -> usize {
+    /// Operator count of the fused tree (fusion-depth statistics for
+    /// tests, ablations and the tape compiler's sizing heuristics).
+    pub fn count_ops(&self) -> usize {
         match self {
             FTree::Bin(_, a, b) => 1 + a.count_ops() + b.count_ops(),
             FTree::Un(_, a) => 1 + a.count_ops(),

@@ -6,6 +6,17 @@
 //! sit far above every DSL formulation on a single core, as MKL does in
 //! the paper (94% of peak there; scalar rust lands lower — the calibrated
 //! peak in EXPERIMENTS.md is the reference point).
+//!
+//! Two entry points beyond the classic overwrite form:
+//!
+//!  * [`dgemm_accumulate`] — `C += A·B` (beta = 1), so CG-style callers
+//!    that accumulate into a live matrix need no temporary;
+//!  * [`dgemm_pooled`] — the same kernel parallelised over `ic`
+//!    row-panels on a shared [`SharedPool`]: the packed B panel is
+//!    packed once per `(jc, pc)` block and read by every worker, each
+//!    worker packs its own A panel and owns a disjoint row range of C.
+
+use crate::coordinator::engine::pool::SharedPool;
 
 /// Cache block sizes (bytes: MC*KC*8 ≈ 256 KiB A-panel, fits L2).
 const MC: usize = 128;
@@ -18,13 +29,63 @@ const NR: usize = 8;
 /// `c = a · b` for row-major square/rectangular inputs:
 /// a is m×k, b is k×n, c is m×n (overwritten).
 pub fn dgemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    dgemm_with(m, k, n, a, b, c, false, None)
+}
+
+/// `c += a · b` (beta-accumulate): skips the zeroing pass, so callers
+/// updating a live matrix don't need a temporary plus an add.
+pub fn dgemm_accumulate(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    dgemm_with(m, k, n, a, b, c, true, None)
+}
+
+/// `c = a · b` with the `ic` row-panel loop fanned out over `pool`.
+pub fn dgemm_pooled(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    pool: &SharedPool,
+) {
+    dgemm_with(m, k, n, a, b, c, false, Some(pool))
+}
+
+/// Wrapper making the output pointer shareable across workers that own
+/// disjoint row-panel ranges of C.
+#[derive(Clone, Copy)]
+struct CPtr(*mut f64);
+unsafe impl Send for CPtr {}
+unsafe impl Sync for CPtr {}
+
+/// Full-control entry: overwrite or accumulate, serial or pooled.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_with(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    accumulate: bool,
+    pool: Option<&SharedPool>,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    // packed panels (reused across blocks)
-    let mut ap = vec![0.0f64; MC * KC];
+    if !accumulate {
+        c.fill(0.0);
+    }
+    // packed B panel: shared read-only by every ic-panel worker
     let mut bp = vec![0.0f64; KC * NC];
+    let ic_panels = (m + MC - 1) / MC;
+    let pooled = matches!(pool, Some(_) if ic_panels > 1);
+    // A panels, allocated once per call: one for the serial path, one
+    // per row-panel lane for the pooled path (pack_a fully overwrites a
+    // lane, so lanes are reused across every (jc, pc) block).
+    let mut ap = vec![0.0f64; if pooled { ic_panels * MC * KC } else { MC * KC }];
+    let cptr = CPtr(c.as_mut_ptr());
+    let aptr = CPtr(ap.as_mut_ptr());
 
     let mut jc = 0;
     while jc < n {
@@ -32,13 +93,36 @@ pub fn dgemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) 
         let mut pc = 0;
         while pc < k {
             let kc = KC.min(k - pc);
-            pack_b(&mut bp, b, k, n, pc, jc, kc, nc);
-            let mut ic = 0;
-            while ic < m {
-                let mc = MC.min(m - ic);
-                pack_a(&mut ap, a, k, ic, pc, mc, kc);
-                macro_kernel(&ap, &bp, c, n, ic, jc, mc, nc, kc);
-                ic += MC;
+            pack_b(&mut bp, b, n, pc, jc, kc, nc);
+            match pool {
+                Some(p) if pooled => {
+                    let bp_ref: &[f64] = &bp;
+                    p.run_chunks(ic_panels, &|pi| {
+                        let ic = pi * MC;
+                        let mc = MC.min(m - ic);
+                        // SAFETY: lane `pi` of the A-panel buffer and
+                        // rows [ic, ic+mc) of C are owned exclusively by
+                        // this chunk — lanes/panels are disjoint and the
+                        // sweep barrier completes before `bp` repacks.
+                        let wap = unsafe {
+                            std::slice::from_raw_parts_mut(aptr.0.add(pi * MC * KC), MC * KC)
+                        };
+                        pack_a(wap, a, k, ic, pc, mc, kc);
+                        let crows = unsafe {
+                            std::slice::from_raw_parts_mut(cptr.0.add(ic * n), mc * n)
+                        };
+                        macro_kernel(wap, bp_ref, crows, n, 0, jc, mc, nc, kc);
+                    });
+                }
+                _ => {
+                    let mut ic = 0;
+                    while ic < m {
+                        let mc = MC.min(m - ic);
+                        pack_a(&mut ap, a, k, ic, pc, mc, kc);
+                        macro_kernel(&ap, &bp, c, n, ic, jc, mc, nc, kc);
+                        ic += MC;
+                    }
+                }
             }
             pc += KC;
         }
@@ -68,7 +152,6 @@ fn pack_a(ap: &mut [f64], a: &[f64], lda: usize, ic: usize, pc: usize, mc: usize
 fn pack_b(
     bp: &mut [f64],
     b: &[f64],
-    _ldbk: usize,
     ldb: usize,
     pc: usize,
     jc: usize,
@@ -220,6 +303,37 @@ mod tests {
         assert_allclose(&c, &a, 1e-14, 1e-14, "A·I");
         dgemm(n, n, n, &eye, &a, &mut c);
         assert_allclose(&c, &a, 1e-14, 1e-14, "I·A");
+    }
+
+    #[test]
+    fn accumulate_adds_into_live_c() {
+        let (m, k, n) = (37, 23, 41);
+        let a = rand_mat(m, k, 11);
+        let b = rand_mat(k, n, 12);
+        let c0 = rand_mat(m, n, 13);
+        // C += A·B must equal C0 + (A·B computed separately).
+        let mut prod = vec![0.0; m * n];
+        dgemm(m, k, n, &a, &b, &mut prod);
+        let want: Vec<f64> = c0.iter().zip(&prod).map(|(x, y)| x + y).collect();
+        let mut c = c0.clone();
+        dgemm_accumulate(m, k, n, &a, &b, &mut c);
+        assert_allclose(&c, &want, 1e-12, 1e-12, "beta accumulate");
+    }
+
+    #[test]
+    fn pooled_matches_serial() {
+        use crate::coordinator::engine::pool::shared;
+        let pool = shared(3);
+        // several row-panel counts, incl. a ragged last panel
+        for &(m, k, n) in &[(MC * 2 + 9, 100usize, 130usize), (300, 64, 257), (50, 30, 40)] {
+            let a = rand_mat(m, k, 21);
+            let b = rand_mat(k, n, 22);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            dgemm(m, k, n, &a, &b, &mut c1);
+            dgemm_pooled(m, k, n, &a, &b, &mut c2, &pool);
+            assert_allclose(&c1, &c2, 0.0, 0.0, &format!("pooled {m}x{k}x{n}"));
+        }
     }
 
     #[test]

@@ -154,6 +154,16 @@ impl PlanCache {
             capacity: self.cap,
         }
     }
+
+    /// Aggregate `(replays, arenas_created)` over every cached plan. A
+    /// healthy steady state replays many times per arena created (the
+    /// arena count plateaus at the peak number of concurrent replays).
+    pub fn arena_totals(&self) -> (u64, u64) {
+        self.entries.values().fold((0, 0), |(r, a), e| {
+            let s = e.plan.arena_stats();
+            (r + s.replays, a + s.arenas_created)
+        })
+    }
 }
 
 /// Build placeholder containers for a parameter signature.
@@ -244,8 +254,11 @@ pub fn capture(ctx: &Context, builder: &KernelFn, key: &PlanKey) -> Result<Arc<C
 
     // Verify the compiled replay against the regular engine on the
     // placeholder inputs — catches compile bugs and any capture
-    // impurity the force-counter missed.
-    let replay = exec::execute(&cp, &args)?;
+    // impurity the force-counter missed. Running through
+    // `execute_into` also warms one replay arena, so the first real
+    // dispatch is already allocation-free.
+    let mut replay = Vec::new();
+    exec::execute_into(&cp, &args, &mut replay)?;
     ctx.try_force(&root)?;
     let want = root
         .data()

@@ -12,20 +12,30 @@
 //!
 //!  * **Param(i)** — the i-th kernel parameter, rebound per request;
 //!  * **Temp(i)**  — an intermediate produced by an earlier step of the
-//!    same plan, held in a per-request slot vector;
+//!    same plan, held in a per-replay arena slot;
 //!  * **Baked** — a capture-time constant (bound tables, twiddle
 //!    factors, `zeros` seeds), shared read-only via `Arc`.
 //!
-//! The result is a self-contained, `Send + Sync` [`CompiledPlan`]:
-//! replaying it touches no `Rc`, no `RefCell` and no node storage, so
-//! any number of pool workers can execute the same cached plan on
-//! different requests at once. All fused-loop machinery is reused from
-//! [`crate::coordinator::engine::eval`].
+//! Each step's fused tree is then compiled **once, at capture time**,
+//! into a [`TapeProgram`] (see [`crate::coordinator::engine::eval`]):
+//! the instruction stream, register allocation and superinstruction
+//! selection are all fixed in the cached plan; a replay only rebinds
+//! leaf buffers. Replays draw their state from a [`ReplayArena`] —
+//! step-output slot buffers sized at capture time, plus the raw
+//! leaf-binding scratch — recycled through a per-plan stash, so a
+//! steady-state cache-hit dispatch through [`execute_into`] performs
+//! **zero heap allocations** (asserted by `tests/serve_alloc.rs`; the
+//! `map()` step is the documented exception, as user elementals take
+//! `Arc` captures). The result is a self-contained, `Send + Sync`
+//! [`CompiledPlan`]: replaying it touches no `Rc`, no `RefCell` and no
+//! node storage, so any number of pool workers can execute the same
+//! cached plan on different requests at once.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
-use crate::coordinator::engine::eval::{eval_range, with_scratch, FExec, BLOCK};
+use crate::coordinator::engine::eval::{with_scratch, KTree, LeafBind, Scratch, TapeProgram, BLOCK};
 use crate::coordinator::map::{Elemental, MapArgs};
 use crate::coordinator::node::{Data, NodeRef, Op};
 use crate::coordinator::ops::{BinOp, RedOp, UnOp};
@@ -45,13 +55,14 @@ pub struct ParamSpec {
 pub enum CSrc {
     /// Kernel parameter, rebound on every request.
     Param(usize),
-    /// Intermediate produced by an earlier step (per-request slot).
+    /// Intermediate produced by an earlier step (per-replay arena slot).
     Temp(usize),
     /// Capture-time constant, shared read-only.
     Baked(Data),
 }
 
-/// A fused expression tree with graph-free leaves.
+/// A fused expression tree with graph-free leaves (compile-time
+/// intermediate; the stored artifact is the [`CKernel`] tape).
 #[derive(Debug, Clone)]
 pub enum CTree {
     Leaf { src: CSrc, view: View },
@@ -64,21 +75,116 @@ pub enum CTree {
     Un(UnOp, Box<CTree>),
 }
 
+/// Where a tape leaf reads its buffer from at replay time.
+#[derive(Debug)]
+enum CBind {
+    Param(usize),
+    Temp(usize),
+    Baked(Arc<Vec<f64>>),
+}
+
+/// A fused tree compiled to a tape template: the instruction stream is
+/// fixed at capture; only the leaf buffers are rebound per replay.
+#[derive(Debug)]
+pub struct CKernel {
+    prog: TapeProgram,
+    binds: Vec<CBind>,
+}
+
+impl CKernel {
+    fn compile(tree: &CTree) -> Result<CKernel> {
+        let mut binds = Vec::new();
+        let kt = ctree_to_ktree(tree, &mut binds)?;
+        Ok(CKernel { prog: TapeProgram::compile(&kt)?, binds })
+    }
+}
+
+fn bind_src(src: &CSrc, binds: &mut Vec<CBind>) -> Result<u16> {
+    if binds.len() >= u16::MAX as usize {
+        return Err(invalid("compiled plan: too many leaves in fused tree"));
+    }
+    let b = match src {
+        CSrc::Param(i) => CBind::Param(*i),
+        CSrc::Temp(i) => CBind::Temp(*i),
+        CSrc::Baked(d) => CBind::Baked(f64_buf(d)?.clone()),
+    };
+    binds.push(b);
+    Ok((binds.len() - 1) as u16)
+}
+
+fn ctree_to_ktree(t: &CTree, binds: &mut Vec<CBind>) -> Result<KTree> {
+    Ok(match t {
+        CTree::Leaf { src, view } => KTree::Leaf { leaf: bind_src(src, binds)?, view: *view },
+        CTree::Scalar { src } => KTree::Splat { leaf: bind_src(src, binds)?, idx: 0 },
+        CTree::Const(c) => KTree::Const(*c),
+        CTree::Iota => KTree::Iota,
+        CTree::Acc => KTree::Acc,
+        CTree::Bin(op, a, b) => KTree::Bin(
+            *op,
+            Box::new(ctree_to_ktree(a, binds)?),
+            Box::new(ctree_to_ktree(b, binds)?),
+        ),
+        CTree::Un(op, a) => KTree::Un(*op, Box::new(ctree_to_ktree(a, binds)?)),
+    })
+}
+
 /// One compiled step. Mirrors [`Step`] with node references replaced by
-/// [`CSrc`]/slot indices and all geometry captured by value.
-#[derive(Debug, Clone)]
+/// [`CSrc`]/slot indices, fused trees by tape templates, and all
+/// geometry captured by value.
+#[derive(Debug)]
 pub enum CStep {
-    Fused { out: usize, len: usize, tree: CTree },
-    Accumulate { out: usize, len: usize, base: CSrc, tree: CTree },
-    ReduceRows { out: usize, red: RedOp, tree: CTree, rows: usize, cols: usize },
-    ReduceCols { out: usize, red: RedOp, tree: CTree, rows: usize, cols: usize },
-    ReduceAll { out: usize, red: RedOp, tree: CTree, len: usize },
-    Cat { out: usize, a: CTree, la: usize, b: CTree, lb: usize },
-    ReplaceCol { out: usize, m: CSrc, rows: usize, cols: usize, col: usize, vtree: CTree },
-    ReplaceRow { out: usize, m: CSrc, cols: usize, row: usize, vtree: CTree },
+    Fused { out: usize, len: usize, kern: CKernel },
+    Accumulate { out: usize, len: usize, base: CSrc, kern: CKernel },
+    ReduceRows { out: usize, red: RedOp, kern: CKernel, rows: usize, cols: usize },
+    ReduceCols { out: usize, red: RedOp, kern: CKernel, rows: usize, cols: usize },
+    ReduceAll { out: usize, red: RedOp, kern: CKernel, len: usize },
+    Cat { out: usize, a: CKernel, la: usize, b: CKernel, lb: usize },
+    ReplaceCol { out: usize, m: CSrc, rows: usize, cols: usize, col: usize, kern: CKernel },
+    ReplaceRow { out: usize, m: CSrc, cols: usize, row: usize, kern: CKernel },
     SetElem { out: usize, m: CSrc, cols: usize, i: usize, j: usize, s: CSrc },
     Gather { out: usize, len: usize, src: CSrc, idx: CSrc },
     Map { out: usize, len: usize, f: Arc<Elemental>, captures: Vec<CSrc> },
+}
+
+/// Per-worker replay state: step-output slot buffers sized at capture
+/// time plus the raw leaf-binding scratch, recycled across replays
+/// through the plan's arena stash so a steady-state dispatch allocates
+/// nothing.
+#[derive(Default)]
+struct ReplayArena {
+    slots: Vec<Vec<f64>>,
+    leafbuf: Vec<LeafBind>,
+    tmp: Vec<f64>,
+}
+
+// SAFETY: `leafbuf` holds transient pointers that are only dereferenced
+// inside the `run_step` that wrote them; it is cleared before the arena
+// returns to the stash, so nothing dangling crosses threads.
+unsafe impl Send for ReplayArena {}
+
+impl ReplayArena {
+    /// Size the slot buffers to the plan's capture-time lengths. Warm
+    /// arenas are already sized: no allocation.
+    fn prepare(&mut self, lens: &[usize]) {
+        if self.slots.len() != lens.len() {
+            self.slots.resize_with(lens.len(), Vec::new);
+        }
+        for (s, &l) in self.slots.iter_mut().zip(lens) {
+            if s.len() != l {
+                s.resize(l, 0.0);
+            }
+        }
+    }
+}
+
+/// Replay/arena counters of one compiled plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Total replays (cache-hit executions) of this plan.
+    pub replays: u64,
+    /// Arenas ever created; plateaus at the peak number of concurrent
+    /// replays, so `replays >> arenas_created` in steady state.
+    pub arenas_created: u64,
 }
 
 /// A capture-once / call-many execution plan: fully owned, `Send + Sync`.
@@ -86,11 +192,18 @@ pub struct CompiledPlan {
     pub(crate) params: Vec<ParamSpec>,
     pub(crate) steps: Vec<CStep>,
     pub(crate) n_temps: usize,
+    /// Output length of each temp slot, fixed at capture; arenas
+    /// pre-size their slot buffers from this.
+    pub(crate) slot_lens: Vec<usize>,
     pub(crate) root: CSrc,
     pub(crate) out_len: usize,
     /// Wall seconds spent capturing + optimising + compiling (paid once
     /// per cache miss; repeat invocations pay zero of this).
     pub(crate) build_secs: f64,
+    /// Recycled replay arenas (pop on replay start, push back at end).
+    arenas: Mutex<Vec<ReplayArena>>,
+    replays: AtomicU64,
+    arenas_created: AtomicU64,
 }
 
 impl CompiledPlan {
@@ -106,8 +219,20 @@ impl CompiledPlan {
         self.steps.len()
     }
 
+    /// Intermediate slots a replay arena carries for this plan.
+    pub fn n_temps(&self) -> usize {
+        self.n_temps
+    }
+
     pub fn build_secs(&self) -> f64 {
         self.build_secs
+    }
+
+    pub fn arena_stats(&self) -> ArenaStats {
+        ArenaStats {
+            replays: self.replays.load(Ordering::Relaxed),
+            arenas_created: self.arenas_created.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -174,6 +299,11 @@ impl Compiler {
             FTree::Un(op, a) => CTree::Un(*op, Box::new(self.tree(a)?)),
         })
     }
+
+    /// Compile a fused tree straight to its tape template.
+    fn kern(&self, t: &FTree) -> Result<CKernel> {
+        CKernel::compile(&self.tree(t)?)
+    }
 }
 
 /// Compile `plan` (produced for the DAG rooted at `root`, with the given
@@ -184,45 +314,46 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
         temp_ix: HashMap::new(),
     };
     let mut steps = Vec::with_capacity(plan.steps.len());
+    let mut slot_lens = Vec::with_capacity(plan.steps.len());
     for step in &plan.steps {
         let out_node = step.out();
         let out_len = out_node.shape.len();
         // Compile the body against *earlier* slots, then allocate this
         // step's slot (a step never reads its own output; in-place
-        // accumulation is expressed through the CTree::Acc marker).
+        // accumulation is expressed through the `Acc` marker).
         let slot = c.temp_ix.len();
         let cstep = match step {
             Step::Fused { tree, .. } => {
-                CStep::Fused { out: slot, len: out_len, tree: c.tree(tree)? }
+                CStep::Fused { out: slot, len: out_len, kern: c.kern(tree)? }
             }
             Step::Accumulate { base, tree, .. } => CStep::Accumulate {
                 out: slot,
                 len: out_len,
                 base: c.classify(base)?,
-                tree: c.tree(tree)?,
+                kern: c.kern(tree)?,
             },
             Step::ReduceRows { red, tree, rows, cols, .. } => CStep::ReduceRows {
                 out: slot,
                 red: *red,
-                tree: c.tree(tree)?,
+                kern: c.kern(tree)?,
                 rows: *rows,
                 cols: *cols,
             },
             Step::ReduceCols { red, tree, rows, cols, .. } => CStep::ReduceCols {
                 out: slot,
                 red: *red,
-                tree: c.tree(tree)?,
+                kern: c.kern(tree)?,
                 rows: *rows,
                 cols: *cols,
             },
             Step::ReduceAll { red, tree, len, .. } => {
-                CStep::ReduceAll { out: slot, red: *red, tree: c.tree(tree)?, len: *len }
+                CStep::ReduceAll { out: slot, red: *red, kern: c.kern(tree)?, len: *len }
             }
             Step::Cat { a, la, b, lb, .. } => CStep::Cat {
                 out: slot,
-                a: c.tree(a)?,
+                a: c.kern(a)?,
                 la: *la,
-                b: c.tree(b)?,
+                b: c.kern(b)?,
                 lb: *lb,
             },
             Step::ReplaceCol { m, col, vtree, .. } => CStep::ReplaceCol {
@@ -231,14 +362,14 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
                 rows: out_node.shape.rows(),
                 cols: out_node.shape.cols(),
                 col: *col,
-                vtree: c.tree(vtree)?,
+                kern: c.kern(vtree)?,
             },
             Step::ReplaceRow { m, row, vtree, .. } => CStep::ReplaceRow {
                 out: slot,
                 m: c.classify(m)?,
                 cols: out_node.shape.cols(),
                 row: *row,
-                vtree: c.tree(vtree)?,
+                kern: c.kern(vtree)?,
             },
             Step::SetElem { m, i, j, s, .. } => CStep::SetElem {
                 out: slot,
@@ -265,66 +396,112 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
                 CStep::Map { out: slot, len: out_len, f: mf.f.clone(), captures }
             }
         };
+        validate_step_reads(&cstep, slot)?;
         c.temp_ix.insert(out_node.id, slot);
         steps.push(cstep);
+        slot_lens.push(out_len);
     }
     let root_src = c.classify(root)?;
     Ok(CompiledPlan {
         params: params.iter().map(|p| ParamSpec { dtype: p.dtype, shape: p.shape }).collect(),
         n_temps: c.temp_ix.len(),
+        slot_lens,
         steps,
         root: root_src,
         out_len: root.shape.len(),
         build_secs: 0.0,
+        arenas: Mutex::new(Vec::new()),
+        replays: AtomicU64::new(0),
+        arenas_created: AtomicU64::new(0),
     })
+}
+
+/// A step may only read parameters, baked constants, and slots written
+/// by *earlier* steps — reading its own (or a later) slot would hand a
+/// replay the recycled arena buffer's stale contents from a previous
+/// request. Enforced once at compile time so the replay path stays
+/// branch-free (this replaces the old per-replay "temp slot read before
+/// it was written" check).
+fn validate_step_reads(step: &CStep, slot: usize) -> Result<()> {
+    let bad = || invalid("malformed plan: step reads a temp slot before it is written");
+    let check_src = |s: &CSrc| match s {
+        CSrc::Temp(i) if *i >= slot => Err(bad()),
+        _ => Ok(()),
+    };
+    let check_kern = |k: &CKernel| {
+        k.binds.iter().try_for_each(|b| match b {
+            CBind::Temp(i) if *i >= slot => Err(bad()),
+            _ => Ok(()),
+        })
+    };
+    match step {
+        CStep::Fused { kern, .. } => check_kern(kern),
+        CStep::Accumulate { base, kern, .. } => check_src(base).and_then(|_| check_kern(kern)),
+        CStep::ReduceRows { kern, .. }
+        | CStep::ReduceCols { kern, .. }
+        | CStep::ReduceAll { kern, .. } => check_kern(kern),
+        CStep::Cat { a, b, .. } => check_kern(a).and_then(|_| check_kern(b)),
+        CStep::ReplaceCol { m, kern, .. } | CStep::ReplaceRow { m, kern, .. } => {
+            check_src(m).and_then(|_| check_kern(kern))
+        }
+        CStep::SetElem { m, s, .. } => check_src(m).and_then(|_| check_src(s)),
+        CStep::Gather { src, idx, .. } => check_src(src).and_then(|_| check_src(idx)),
+        CStep::Map { captures, .. } => captures.iter().try_for_each(check_src),
+    }
 }
 
 // ---------------------------------------------------------------------
 // execute: replay a compiled plan against fresh inputs
 // ---------------------------------------------------------------------
 
-fn resolve<'a>(src: &'a CSrc, args: &'a [Data], temps: &'a [Option<Data>]) -> Result<&'a Data> {
+/// Resolve a source to its f64 buffer for this replay.
+fn resolve_f64<'a>(src: &'a CSrc, args: &'a [Data], slots: &'a [Vec<f64>]) -> Result<&'a [f64]> {
     match src {
-        CSrc::Param(i) => {
-            args.get(*i).ok_or_else(|| invalid("compiled plan: parameter index out of range"))
-        }
-        CSrc::Temp(i) => temps
+        CSrc::Param(i) => Ok(f64_buf(
+            args.get(*i)
+                .ok_or_else(|| invalid("compiled plan: parameter index out of range"))?,
+        )?
+        .as_slice()),
+        CSrc::Temp(i) => slots
             .get(*i)
-            .and_then(|t| t.as_ref())
-            .ok_or_else(|| invalid("malformed plan: temp slot read before it was written")),
-        CSrc::Baked(d) => Ok(d),
+            .map(|v| v.as_slice())
+            .ok_or_else(|| invalid("malformed plan: temp slot index out of range")),
+        CSrc::Baked(d) => Ok(f64_buf(d)?.as_slice()),
     }
 }
 
-fn lower_ctree(t: &CTree, args: &[Data], temps: &[Option<Data>]) -> Result<FExec> {
-    Ok(match t {
-        CTree::Leaf { src, view } => {
-            FExec::Leaf { data: f64_buf(resolve(src, args, temps)?)?.clone(), view: *view }
-        }
-        CTree::Scalar { src } => {
-            let buf = f64_buf(resolve(src, args, temps)?)?;
-            let v = buf.first().copied().ok_or_else(|| invalid("empty scalar buffer"))?;
-            FExec::Const(v)
-        }
-        CTree::Const(c) => FExec::Const(*c),
-        CTree::Iota => FExec::Iota,
-        CTree::Acc => FExec::Acc,
-        CTree::Bin(op, a, b) => FExec::Bin(
-            *op,
-            Box::new(lower_ctree(a, args, temps)?),
-            Box::new(lower_ctree(b, args, temps)?),
-        ),
-        CTree::Un(op, a) => FExec::Un(*op, Box::new(lower_ctree(a, args, temps)?)),
-    })
+/// Resolve a source that must be request data or baked (index
+/// containers; temp slots are always f64 step outputs).
+fn resolve_data<'a>(src: &'a CSrc, args: &'a [Data]) -> Result<&'a Data> {
+    match src {
+        CSrc::Param(i) => args
+            .get(*i)
+            .ok_or_else(|| invalid("compiled plan: parameter index out of range")),
+        CSrc::Baked(d) => Ok(d),
+        CSrc::Temp(_) => Err(invalid(
+            "malformed plan: index container cannot be a step output",
+        )),
+    }
+}
+
+/// Execute one compiled plan against `args` and return a fresh output
+/// vector. See [`execute_into`] for the allocation-free form.
+pub fn execute(cp: &CompiledPlan, args: &[Data]) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    execute_into(cp, args, &mut out)?;
+    Ok(out)
 }
 
 /// Execute one compiled plan against `args` (one [`Data`] per declared
-/// parameter, shapes already validated against the cache key).
+/// parameter), writing the result into `out` (cleared and refilled;
+/// its capacity is reused).
 ///
-/// Pure with respect to the plan: all mutable state lives in the local
-/// temp slots, so any number of threads may call this concurrently on
-/// the same `CompiledPlan`.
-pub fn execute(cp: &CompiledPlan, args: &[Data]) -> Result<Vec<f64>> {
+/// Pure with respect to the plan: all mutable state lives in the replay
+/// arena popped from the plan's stash, so any number of threads may call
+/// this concurrently on the same `CompiledPlan`. In steady state — warm
+/// arena, warm thread scratch, `out` at capacity — a replay performs
+/// zero heap allocations (`map()` steps excepted).
+pub fn execute_into(cp: &CompiledPlan, args: &[Data], out: &mut Vec<f64>) -> Result<()> {
     if args.len() != cp.params.len() {
         return Err(invalid(format!(
             "kernel expects {} arguments, got {}",
@@ -343,163 +520,287 @@ pub fn execute(cp: &CompiledPlan, args: &[Data]) -> Result<Vec<f64>> {
             )));
         }
     }
-    let mut temps: Vec<Option<Data>> = vec![None; cp.n_temps];
-    for step in &cp.steps {
-        run_step(step, args, &mut temps)?;
-    }
-    let out = f64_buf(resolve(&cp.root, args, &temps)?)?;
-    Ok((**out).clone())
+    cp.replays.fetch_add(1, Ordering::Relaxed);
+    let mut arena = match cp.arenas.lock().unwrap().pop() {
+        Some(a) => a,
+        None => {
+            cp.arenas_created.fetch_add(1, Ordering::Relaxed);
+            ReplayArena::default()
+        }
+    };
+    arena.prepare(&cp.slot_lens);
+    let result = with_scratch(|scratch| -> Result<()> {
+        for step in &cp.steps {
+            run_step(step, args, &mut arena, scratch)?;
+        }
+        let root = resolve_f64(&cp.root, args, &arena.slots)?;
+        out.clear();
+        out.extend_from_slice(root);
+        Ok(())
+    });
+    arena.leafbuf.clear();
+    cp.arenas.lock().unwrap().push(arena);
+    result
 }
 
-fn store(temps: &mut [Option<Data>], slot: usize, v: Vec<f64>) -> Result<()> {
-    let cell = temps
-        .get_mut(slot)
-        .ok_or_else(|| invalid("malformed plan: temp slot index out of range"))?;
-    *cell = Some(Data::F64(Arc::new(v)));
+/// Resolve a tape template's leaf bindings into the arena's raw binding
+/// buffer (no allocation once the buffer's capacity is warm).
+fn bind_leaves(
+    kern: &CKernel,
+    args: &[Data],
+    slots: &[Vec<f64>],
+    leafbuf: &mut Vec<LeafBind>,
+) -> Result<()> {
+    leafbuf.clear();
+    for b in &kern.binds {
+        let s: &[f64] = match b {
+            CBind::Param(i) => f64_buf(
+                args.get(*i)
+                    .ok_or_else(|| invalid("compiled plan: parameter index out of range"))?,
+            )?
+            .as_slice(),
+            CBind::Temp(i) => slots
+                .get(*i)
+                .ok_or_else(|| invalid("malformed plan: temp slot index out of range"))?
+                .as_slice(),
+            CBind::Baked(a) => a.as_slice(),
+        };
+        leafbuf.push((s.as_ptr(), s.len()));
+    }
     Ok(())
 }
 
-fn run_step(step: &CStep, args: &[Data], temps: &mut Vec<Option<Data>>) -> Result<()> {
+/// Move a step's output buffer out of the arena (restored by the caller
+/// after the step body; the compiler guarantees a step never reads its
+/// own output slot, so the remaining slots stay consistent).
+fn take_slot(slots: &mut [Vec<f64>], i: usize) -> Result<Vec<f64>> {
+    slots
+        .get_mut(i)
+        .map(std::mem::take)
+        .ok_or_else(|| invalid("malformed plan: temp slot index out of range"))
+}
+
+fn run_step(
+    step: &CStep,
+    args: &[Data],
+    arena: &mut ReplayArena,
+    scratch: &mut Scratch,
+) -> Result<()> {
+    let ReplayArena { slots, leafbuf, tmp } = arena;
     match step {
-        CStep::Fused { out, len, tree } => {
-            let fx = lower_ctree(tree, args, temps)?;
-            let mut v = vec![0.0f64; *len];
-            with_scratch(|s| eval_range(&fx, 0, &mut v, s));
-            store(temps, *out, v)
+        CStep::Fused { out, len, kern } => {
+            let mut ob = take_slot(slots, *out)?;
+            debug_assert_eq!(ob.len(), *len);
+            bind_leaves(kern, args, slots, leafbuf)?;
+            // SAFETY: the bindings point into `args`, earlier slots and
+            // baked buffers, all alive across the call; the output slot
+            // was moved out of `slots`, so no binding aliases `ob`.
+            unsafe { kern.prog.run_range_raw(leafbuf, 0, &mut ob, scratch) };
+            slots[*out] = ob;
+            Ok(())
         }
-        CStep::Accumulate { out, len, base, tree } => {
-            let fx = lower_ctree(tree, args, temps)?;
-            let mut v: Vec<f64> = (**f64_buf(resolve(base, args, temps)?)?).clone();
-            if v.len() != *len {
+        CStep::Accumulate { out, len, base, kern } => {
+            let mut ob = take_slot(slots, *out)?;
+            let b = resolve_f64(base, args, slots)?;
+            if b.len() != *len || ob.len() != *len {
+                slots[*out] = ob;
                 return Err(invalid("malformed plan: accumulate base length mismatch"));
             }
-            with_scratch(|s| eval_range(&fx, 0, &mut v, s));
-            store(temps, *out, v)
+            ob.copy_from_slice(b);
+            bind_leaves(kern, args, slots, leafbuf)?;
+            // SAFETY: as in `Fused`; the base slice borrow ended above.
+            unsafe { kern.prog.run_range_raw(leafbuf, 0, &mut ob, scratch) };
+            slots[*out] = ob;
+            Ok(())
         }
-        CStep::ReduceRows { out, red, tree, rows, cols } => {
-            let fx = lower_ctree(tree, args, temps)?;
-            let mut v = vec![0.0f64; *rows];
-            with_scratch(|scratch| {
-                let mut buf = scratch.take();
-                for (r, ov) in v.iter_mut().enumerate() {
-                    let mut acc = red.identity();
-                    let mut off = 0;
-                    while off < *cols {
-                        let l = BLOCK.min(*cols - off);
-                        eval_range(&fx, r * *cols + off, &mut buf[..l], scratch);
-                        acc = red.fold(acc, red.fold_slice(&buf[..l]));
-                        off += l;
-                    }
-                    *ov = acc;
-                }
-                scratch.put(buf);
-            });
-            store(temps, *out, v)
-        }
-        CStep::ReduceCols { out, red, tree, rows, cols } => {
-            let fx = lower_ctree(tree, args, temps)?;
-            let mut v = vec![red.identity(); *cols];
-            with_scratch(|scratch| {
-                let mut buf = scratch.take();
-                for r in 0..*rows {
-                    let mut off = 0;
-                    while off < *cols {
-                        let l = BLOCK.min(*cols - off);
-                        eval_range(&fx, r * *cols + off, &mut buf[..l], scratch);
-                        for k in 0..l {
-                            v[off + k] = red.fold(v[off + k], buf[k]);
-                        }
-                        off += l;
-                    }
-                }
-                scratch.put(buf);
-            });
-            store(temps, *out, v)
-        }
-        CStep::ReduceAll { out, red, tree, len } => {
-            let fx = lower_ctree(tree, args, temps)?;
-            let mut acc = red.identity();
-            with_scratch(|scratch| {
-                let mut buf = scratch.take();
+        CStep::ReduceRows { out, red, kern, rows, cols } => {
+            let mut ob = take_slot(slots, *out)?;
+            debug_assert_eq!(ob.len(), *rows);
+            bind_leaves(kern, args, slots, leafbuf)?;
+            let mut buf = scratch.take();
+            for (r, ov) in ob.iter_mut().enumerate() {
+                let mut acc = red.identity();
                 let mut off = 0;
-                while off < *len {
-                    let l = BLOCK.min(*len - off);
-                    eval_range(&fx, off, &mut buf[..l], scratch);
+                while off < *cols {
+                    let l = BLOCK.min(*cols - off);
+                    // SAFETY: as in `Fused`; `buf` is owned scratch,
+                    // disjoint from every binding.
+                    unsafe {
+                        kern.prog.run_range_raw(leafbuf, r * *cols + off, &mut buf[..l], scratch)
+                    };
                     acc = red.fold(acc, red.fold_slice(&buf[..l]));
                     off += l;
                 }
-                scratch.put(buf);
-            });
-            store(temps, *out, vec![acc])
-        }
-        CStep::Cat { out, a, la, b, lb } => {
-            let fa = lower_ctree(a, args, temps)?;
-            let fb = lower_ctree(b, args, temps)?;
-            let mut v = vec![0.0f64; la + lb];
-            with_scratch(|s| {
-                let (ha, hb) = v.split_at_mut(*la);
-                eval_range(&fa, 0, ha, s);
-                eval_range(&fb, 0, hb, s);
-            });
-            store(temps, *out, v)
-        }
-        CStep::ReplaceCol { out, m, rows, cols, col, vtree } => {
-            let fx = lower_ctree(vtree, args, temps)?;
-            let mut v: Vec<f64> = (**f64_buf(resolve(m, args, temps)?)?).clone();
-            let mut tmp = vec![0.0f64; *rows];
-            with_scratch(|s| eval_range(&fx, 0, &mut tmp, s));
-            for (r, t) in tmp.iter().enumerate() {
-                v[r * *cols + *col] = *t;
+                *ov = acc;
             }
-            store(temps, *out, v)
+            scratch.put(buf);
+            slots[*out] = ob;
+            Ok(())
         }
-        CStep::ReplaceRow { out, m, cols, row, vtree } => {
-            let fx = lower_ctree(vtree, args, temps)?;
-            let mut v: Vec<f64> = (**f64_buf(resolve(m, args, temps)?)?).clone();
-            with_scratch(|s| eval_range(&fx, 0, &mut v[row * cols..(row + 1) * cols], s));
-            store(temps, *out, v)
-        }
-        CStep::SetElem { out, m, cols, i, j, s } => {
-            let mut v: Vec<f64> = (**f64_buf(resolve(m, args, temps)?)?).clone();
-            let sv = f64_buf(resolve(s, args, temps)?)?
-                .first()
-                .copied()
-                .ok_or_else(|| invalid("empty set_elem scalar"))?;
-            v[i * cols + j] = sv;
-            store(temps, *out, v)
-        }
-        CStep::Gather { out, len, src, idx } => {
-            let sd = f64_buf(resolve(src, args, temps)?)?.clone();
-            let ix = i64_buf(resolve(idx, args, temps)?)?.clone();
-            if ix.len() < *len {
-                return Err(invalid("gather index container shorter than output"));
-            }
-            let mut v = vec![0.0f64; *len];
-            for (k, ov) in v.iter_mut().enumerate() {
-                let i = ix[k] as usize;
-                *ov = *sd
-                    .get(i)
-                    .ok_or_else(|| invalid(format!("gather index {} out of range", ix[k])))?;
-            }
-            store(temps, *out, v)
-        }
-        CStep::Map { out, len, f, captures } => {
-            let mut f64s: Vec<Arc<Vec<f64>>> = Vec::new();
-            let mut i64s: Vec<Arc<Vec<i64>>> = Vec::new();
-            for cap in captures {
-                match resolve(cap, args, temps)? {
-                    Data::F64(v) => f64s.push(v.clone()),
-                    Data::I64(v) => i64s.push(v.clone()),
+        CStep::ReduceCols { out, red, kern, rows, cols } => {
+            let mut ob = take_slot(slots, *out)?;
+            debug_assert_eq!(ob.len(), *cols);
+            ob.fill(red.identity());
+            bind_leaves(kern, args, slots, leafbuf)?;
+            let mut buf = scratch.take();
+            for r in 0..*rows {
+                let mut off = 0;
+                while off < *cols {
+                    let l = BLOCK.min(*cols - off);
+                    // SAFETY: as in `ReduceRows`.
+                    unsafe {
+                        kern.prog.run_range_raw(leafbuf, r * *cols + off, &mut buf[..l], scratch)
+                    };
+                    for k in 0..l {
+                        ob[off + k] = red.fold(ob[off + k], buf[k]);
+                    }
+                    off += l;
                 }
             }
-            let f64refs: Vec<&[f64]> = f64s.iter().map(|a| a.as_slice()).collect();
-            let i64refs: Vec<&[i64]> = i64s.iter().map(|a| a.as_slice()).collect();
-            let margs = MapArgs { f64s: f64refs, i64s: i64refs };
-            let mut v = vec![0.0f64; *len];
-            for (k, ov) in v.iter_mut().enumerate() {
-                *ov = f(&margs, k);
+            scratch.put(buf);
+            slots[*out] = ob;
+            Ok(())
+        }
+        CStep::ReduceAll { out, red, kern, len } => {
+            let mut ob = take_slot(slots, *out)?;
+            debug_assert_eq!(ob.len(), 1);
+            bind_leaves(kern, args, slots, leafbuf)?;
+            let mut buf = scratch.take();
+            let mut acc = red.identity();
+            let mut off = 0;
+            while off < *len {
+                let l = BLOCK.min(*len - off);
+                // SAFETY: as in `ReduceRows`.
+                unsafe { kern.prog.run_range_raw(leafbuf, off, &mut buf[..l], scratch) };
+                acc = red.fold(acc, red.fold_slice(&buf[..l]));
+                off += l;
             }
-            store(temps, *out, v)
+            scratch.put(buf);
+            ob[0] = acc;
+            slots[*out] = ob;
+            Ok(())
+        }
+        CStep::Cat { out, a, la, b, lb } => {
+            let mut ob = take_slot(slots, *out)?;
+            debug_assert_eq!(ob.len(), la + lb);
+            {
+                let (ha, hb) = ob.split_at_mut(*la);
+                bind_leaves(a, args, slots, leafbuf)?;
+                // SAFETY: as in `Fused`.
+                unsafe { a.prog.run_range_raw(leafbuf, 0, ha, scratch) };
+                bind_leaves(b, args, slots, leafbuf)?;
+                // SAFETY: as in `Fused`.
+                unsafe { b.prog.run_range_raw(leafbuf, 0, hb, scratch) };
+            }
+            slots[*out] = ob;
+            Ok(())
+        }
+        CStep::ReplaceCol { out, m, rows, cols, col, kern } => {
+            let mut ob = take_slot(slots, *out)?;
+            let mb = resolve_f64(m, args, slots)?;
+            if mb.len() != ob.len() {
+                slots[*out] = ob;
+                return Err(invalid("malformed plan: replace_col operand length mismatch"));
+            }
+            ob.copy_from_slice(mb);
+            bind_leaves(kern, args, slots, leafbuf)?;
+            tmp.clear();
+            tmp.resize(*rows, 0.0);
+            // SAFETY: as in `Fused`; `tmp` is arena scratch, never bound.
+            unsafe { kern.prog.run_range_raw(leafbuf, 0, &mut tmp[..], scratch) };
+            for (r, t) in tmp.iter().enumerate() {
+                ob[r * *cols + *col] = *t;
+            }
+            slots[*out] = ob;
+            Ok(())
+        }
+        CStep::ReplaceRow { out, m, cols, row, kern } => {
+            let mut ob = take_slot(slots, *out)?;
+            let mb = resolve_f64(m, args, slots)?;
+            if mb.len() != ob.len() || (row + 1) * cols > ob.len() {
+                slots[*out] = ob;
+                return Err(invalid("malformed plan: replace_row operand length mismatch"));
+            }
+            ob.copy_from_slice(mb);
+            bind_leaves(kern, args, slots, leafbuf)?;
+            // SAFETY: as in `Fused`.
+            unsafe {
+                kern.prog.run_range_raw(leafbuf, 0, &mut ob[row * cols..(row + 1) * cols], scratch)
+            };
+            slots[*out] = ob;
+            Ok(())
+        }
+        CStep::SetElem { out, m, cols, i, j, s } => {
+            let mut ob = take_slot(slots, *out)?;
+            let r = (|| {
+                let mb = resolve_f64(m, args, slots)?;
+                if mb.len() != ob.len() || i * cols + j >= ob.len() {
+                    return Err(invalid("malformed plan: set_elem operand out of range"));
+                }
+                let sv = resolve_f64(s, args, slots)?
+                    .first()
+                    .copied()
+                    .ok_or_else(|| invalid("empty set_elem scalar"))?;
+                ob.copy_from_slice(mb);
+                ob[i * cols + j] = sv;
+                Ok(())
+            })();
+            slots[*out] = ob;
+            r
+        }
+        CStep::Gather { out, len, src, idx } => {
+            let mut ob = take_slot(slots, *out)?;
+            let r = (|| {
+                let sd = resolve_f64(src, args, slots)?;
+                let ix = i64_buf(resolve_data(idx, args)?)?;
+                if ix.len() < *len {
+                    return Err(invalid("gather index container shorter than output"));
+                }
+                for (k, ov) in ob.iter_mut().enumerate() {
+                    let i = ix[k] as usize;
+                    *ov = *sd.get(i).ok_or_else(|| {
+                        invalid(format!("gather index {} out of range", ix[k]))
+                    })?;
+                }
+                Ok(())
+            })();
+            slots[*out] = ob;
+            r
+        }
+        CStep::Map { out, len, f, captures } => {
+            let mut ob = take_slot(slots, *out)?;
+            let r = (|| {
+                // The documented allocation exception: elementals take
+                // Arc'd captures, so temp captures are copied out.
+                let mut f64s: Vec<Arc<Vec<f64>>> = Vec::new();
+                let mut i64s: Vec<Arc<Vec<i64>>> = Vec::new();
+                for cap in captures {
+                    match cap {
+                        CSrc::Temp(i) => f64s.push(Arc::new(
+                            slots
+                                .get(*i)
+                                .ok_or_else(|| {
+                                    invalid("malformed plan: temp slot index out of range")
+                                })?
+                                .clone(),
+                        )),
+                        other => match resolve_data(other, args)? {
+                            Data::F64(v) => f64s.push(v.clone()),
+                            Data::I64(v) => i64s.push(v.clone()),
+                        },
+                    }
+                }
+                let f64refs: Vec<&[f64]> = f64s.iter().map(|a| a.as_slice()).collect();
+                let i64refs: Vec<&[i64]> = i64s.iter().map(|a| a.as_slice()).collect();
+                let margs = MapArgs { f64s: f64refs, i64s: i64refs };
+                let _ = len;
+                for (k, ov) in ob.iter_mut().enumerate() {
+                    *ov = f(&margs, k);
+                }
+                Ok(())
+            })();
+            slots[*out] = ob;
+            r
         }
     }
 }
@@ -536,6 +837,9 @@ mod tests {
             .unwrap();
             assert_eq!(got, want);
         }
+        let st = cp.arena_stats();
+        assert_eq!(st.replays, 3);
+        assert_eq!(st.arenas_created, 1, "sequential replays must share one arena");
     }
 
     #[test]
@@ -571,5 +875,24 @@ mod tests {
         assert!(bad.is_err());
         let none = execute(&cp, &[]);
         assert!(none.is_err());
+    }
+
+    #[test]
+    fn execute_into_reuses_output_buffer() {
+        let ctx = Context::new();
+        let a = ctx.bind1(&[0.0; 8]);
+        let y = a.scale(3.0);
+        let p = plan(&y.node, PlanOptions::default());
+        let cp = compile(&p, &[a.node.clone()], &y.node).unwrap();
+        let args = [Data::F64(Arc::new((0..8).map(|i| i as f64).collect::<Vec<_>>()))];
+        let mut out = Vec::new();
+        execute_into(&cp, &args, &mut out).unwrap();
+        assert_eq!(out[5], 15.0);
+        let cap = out.capacity();
+        let ptr = out.as_ptr();
+        execute_into(&cp, &args, &mut out).unwrap();
+        assert_eq!(out[7], 21.0);
+        assert_eq!(out.capacity(), cap);
+        assert_eq!(out.as_ptr(), ptr, "steady-state output buffer must be reused");
     }
 }

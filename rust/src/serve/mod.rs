@@ -73,7 +73,7 @@ use crate::coordinator::shape::{DType, Shape};
 use crate::coordinator::{Context, Mat2, OptLevel, Scal, Vec1, VecI64};
 
 pub use cache::{CacheStats, PlanCache, PlanKey};
-pub use exec::CompiledPlan;
+pub use exec::{ArenaStats, CompiledPlan};
 pub use scheduler::{Client, Server, ServerBuilder, SubmitError, Ticket};
 pub use stats::{KernelStats, ServeStats};
 

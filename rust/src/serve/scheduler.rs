@@ -180,6 +180,16 @@ impl Client {
         self.shared.cache.lock().unwrap().stats()
     }
 
+    /// Aggregate `(replays, arenas_created)` over the cached plans: the
+    /// steady-state allocation health of the serving path. Arena counts
+    /// plateau at the peak number of concurrent replays per plan, so a
+    /// warmed server shows `replays` growing while `arenas_created`
+    /// stays flat (every cache-hit dispatch recycles an arena instead
+    /// of allocating step outputs).
+    pub fn arena_totals(&self) -> (u64, u64) {
+        self.shared.cache.lock().unwrap().arena_totals()
+    }
+
     /// Read a kernel's serving stats under the lock.
     pub fn kernel_stats<R>(&self, kernel: &str, f: impl FnOnce(&KernelStats) -> R) -> Option<R> {
         let &kid = self.shared.names.get(kernel)?;
@@ -404,7 +414,10 @@ fn resolve_plan(
 
 /// Execute one same-plan group as a single fork-join sweep: request `r`
 /// is chunk `r`. With one worker (or one request) this degenerates to
-/// inline execution with no barrier at all.
+/// inline execution with no barrier at all. Each worker's replay pops a
+/// recycled arena from the plan's stash ([`exec::execute`] →
+/// `execute_into`), so steady-state sweeps allocate only the response
+/// vectors handed back to clients.
 fn execute_group(
     plan: Arc<CompiledPlan>,
     reqs: Vec<Request>,

@@ -1,0 +1,152 @@
+//! Steady-state serve replay must be allocation-free.
+//!
+//! This binary installs a counting global allocator (per-thread
+//! counters, so concurrently running test threads don't interfere) and
+//! asserts that a warmed [`arbb_rs::serve::exec::execute_into`] replay —
+//! warm arena, warm thread scratch, output buffer at capacity — performs
+//! **zero** heap allocations, for both a deep fused element-wise chain
+//! and a reduction kernel. Plans are captured through the public
+//! [`arbb_rs::serve::cache::capture`] path (exactly what a cache miss
+//! runs), on this thread, so the counters see the whole replay.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use arbb_rs::coordinator::node::Data;
+use arbb_rs::coordinator::{Context, DType, OptLevel, Shape};
+use arbb_rs::serve::{cache, exec, KernelFn, PlanKey, Value};
+use arbb_rs::util::XorShift64;
+
+struct CountingAlloc;
+
+thread_local! {
+    // const-initialised Cell<u64>: no lazy init, no destructor, so the
+    // allocator itself never allocates through TLS access.
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+fn allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = XorShift64::new(seed);
+    (0..n).map(|_| rng.range_f64(0.5, 1.5)).collect()
+}
+
+fn key2(n: usize) -> PlanKey {
+    PlanKey {
+        kernel: 0,
+        args: vec![(DType::F64, Shape::D1(n)), (DType::F64, Shape::D1(n))],
+        opt: OptLevel::O2,
+    }
+}
+
+#[test]
+fn steady_state_elementwise_replay_is_allocation_free() {
+    // Deep fused chain spanning multiple evaluation blocks.
+    let n = 5000;
+    let ctx = Context::new();
+    let builder: Box<KernelFn> = Box::new(|_ctx, vals| {
+        let a = vals[0].vec1();
+        let b = vals[1].vec1();
+        Value::Vec((&(&(&a + &b) * &a) - &b).abs().sqrt())
+    });
+    let cp = cache::capture(&ctx, &builder, &key2(n)).unwrap();
+
+    let av = rand_vec(n, 1);
+    let bv = rand_vec(n, 2);
+    let want: Vec<f64> = av
+        .iter()
+        .zip(&bv)
+        .map(|(x, y)| (((x + y) * x) - y).abs().sqrt())
+        .collect();
+    let args = [Data::F64(Arc::new(av)), Data::F64(Arc::new(bv))];
+
+    let mut out = Vec::new();
+    // Warm-up: capture verification warmed the arena; these warm the
+    // thread scratch and the output buffer's capacity.
+    for _ in 0..3 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    assert_eq!(out, want);
+
+    let before = allocs();
+    for _ in 0..10 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state cache-hit replay must not touch the heap allocator"
+    );
+    assert_eq!(out, want);
+    let st = cp.arena_stats();
+    // 1 capture-verification replay + 3 warm-ups + 10 measured.
+    assert_eq!(st.replays, 14);
+    assert_eq!(st.arenas_created, 1, "replays must recycle one arena");
+}
+
+#[test]
+fn steady_state_reduction_replay_is_allocation_free() {
+    // dot product: ReduceAll over a fused multiply (scalar temp slot).
+    let n = 4096 + 77;
+    let ctx = Context::new();
+    let builder: Box<KernelFn> = Box::new(|_ctx, vals| {
+        let a = vals[0].vec1();
+        let b = vals[1].vec1();
+        Value::Scalar(a.dot(&b))
+    });
+    let cp = cache::capture(&ctx, &builder, &key2(n)).unwrap();
+
+    let av = rand_vec(n, 3);
+    let bv = rand_vec(n, 4);
+    let want: f64 = av.iter().zip(&bv).map(|(x, y)| x * y).sum();
+    let args = [Data::F64(Arc::new(av)), Data::F64(Arc::new(bv))];
+
+    let mut out = Vec::new();
+    for _ in 0..3 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    let before = allocs();
+    for _ in 0..10 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "steady-state reduction replay must not touch the heap allocator"
+    );
+    assert_eq!(out.len(), 1);
+    assert!((out[0] - want).abs() < 1e-9 * want.abs().max(1.0));
+}

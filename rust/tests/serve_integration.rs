@@ -323,3 +323,31 @@ fn shared_pool_coexists_with_interactive_contexts() {
     }
     handle.join().unwrap();
 }
+
+/// Steady-state dispatches must recycle replay arenas: the arena count
+/// plateaus immediately (capture verification warms the first arena)
+/// while the replay count keeps growing with traffic.
+#[test]
+fn steady_state_dispatches_reuse_replay_arenas() {
+    let server = Server::builder(serial_config())
+        .kernel("saxpy", |_ctx, params| {
+            let x = params[0].vec1();
+            let y = params[1].vec1();
+            Value::Vec(&x.scale(2.0) + &y)
+        })
+        .start();
+    let client = server.client();
+    for round in 0..20u64 {
+        let x = vec![round as f64; 512];
+        let y = vec![1.0; 512];
+        let got = client.call("saxpy", vec![Arg::vec(x), Arg::vec(y)]).unwrap();
+        assert_eq!(got[0], 2.0 * round as f64 + 1.0);
+    }
+    let (replays, arenas) = client.arena_totals();
+    // 20 dispatches + 1 capture-verification replay.
+    assert_eq!(replays, 21, "every dispatch must replay the cached plan");
+    assert!(
+        arenas <= 2,
+        "steady-state dispatches must recycle replay arenas (created {arenas})"
+    );
+}

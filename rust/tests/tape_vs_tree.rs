@@ -1,0 +1,182 @@
+//! Property test: the tape VM must agree bit-for-bit with the retained
+//! reference tree interpreter on randomised fused trees — random
+//! operators, leaf views (contiguous / strided / broadcast / splat /
+//! cyclic), `Acc` placement — evaluated over uneven chunk boundaries.
+//!
+//! Bitwise comparison is intentional: the tape's superinstructions
+//! (`MulAdd`, `ScaleAddConst`, `Axpy`) are pass-fusions, not arithmetic
+//! reassociations, so every element must round identically.
+
+use std::sync::Arc;
+
+use arbb_rs::coordinator::engine::eval::{eval_range, FExec, Scratch, Tape, BLOCK};
+use arbb_rs::coordinator::ops::{BinOp, UnOp};
+use arbb_rs::coordinator::shape::View;
+use arbb_rs::util::XorShift64;
+
+/// Random leaf: data sized to keep every view access in bounds for `n`
+/// output elements under `oc` output columns.
+fn gen_leaf(rng: &mut XorShift64, n: usize, oc: usize) -> FExec {
+    let rows = (n + oc - 1) / oc;
+    let (view, need) = match rng.below(5) {
+        0 => {
+            // contiguous identity (with a small base offset)
+            let base = rng.below(8);
+            (
+                View { base, row_stride: oc, col_stride: 1, out_cols: oc, modulo: None },
+                base + n,
+            )
+        }
+        1 => {
+            // strided gather
+            let cs = 1 + rng.below(3);
+            let rs = rng.below(4);
+            let base = rng.below(4);
+            let need = base + rows.saturating_sub(1) * rs + (oc - 1) * cs + 1;
+            (
+                View { base, row_stride: rs, col_stride: cs, out_cols: oc, modulo: None },
+                need,
+            )
+        }
+        2 => {
+            // column broadcast (constant per output row)
+            let rs = rng.below(3);
+            let base = rng.below(4);
+            let need = base + rows.saturating_sub(1) * rs + 1;
+            (
+                View { base, row_stride: rs, col_stride: 0, out_cols: oc, modulo: None },
+                need,
+            )
+        }
+        3 => {
+            // full splat (single element broadcast)
+            let base = rng.below(4);
+            (
+                View { base, row_stride: 0, col_stride: 0, out_cols: oc, modulo: None },
+                base + 1,
+            )
+        }
+        _ => {
+            // cyclic view (repeat)
+            let m = 1 + rng.below(97);
+            let cs = 1 + rng.below(2);
+            let rs = rng.below(5);
+            let base = rng.below(3);
+            (
+                View { base, row_stride: rs, col_stride: cs, out_cols: oc, modulo: Some(m) },
+                base + m,
+            )
+        }
+    };
+    let data: Vec<f64> = (0..need).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    FExec::Leaf { data: Arc::new(data), view }
+}
+
+fn gen_tree(rng: &mut XorShift64, depth: usize, n: usize, oc: usize) -> FExec {
+    if depth == 0 || rng.below(4) == 0 {
+        return match rng.below(8) {
+            0 => FExec::Const(rng.range_f64(-2.0, 2.0)),
+            1 => FExec::Iota,
+            _ => gen_leaf(rng, n, oc),
+        };
+    }
+    if rng.below(3) == 0 {
+        let ops = [UnOp::Neg, UnOp::Abs, UnOp::Sqrt, UnOp::Exp, UnOp::Ln, UnOp::Recip];
+        FExec::Un(ops[rng.below(ops.len())], Box::new(gen_tree(rng, depth - 1, n, oc)))
+    } else {
+        let ops = [BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Div, BinOp::Min, BinOp::Max];
+        FExec::Bin(
+            ops[rng.below(ops.len())],
+            Box::new(gen_tree(rng, depth - 1, n, oc)),
+            Box::new(gen_tree(rng, depth - 1, n, oc)),
+        )
+    }
+}
+
+fn bits_equal(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+#[test]
+fn tape_matches_tree_on_random_trees() {
+    for case in 0..80u64 {
+        let mut rng = XorShift64::new(0xface_0000 + case);
+        // Sizes span multiple BLOCKs in a third of the cases.
+        let n = match case % 3 {
+            0 => 1 + rng.below(400),
+            1 => BLOCK - 3 + rng.below(7),
+            _ => 2 * BLOCK + 1 + rng.below(BLOCK + 100),
+        };
+        let oc = 1 + rng.below(n.min(striped_cap(n)));
+        let depth = 1 + rng.below(6);
+        let mut tree = gen_tree(&mut rng, depth, n, oc);
+        // A third of the cases exercise in-place accumulation.
+        if rng.below(3) == 0 {
+            let op = if rng.below(2) == 0 { BinOp::Add } else { BinOp::Sub };
+            tree = FExec::Bin(op, Box::new(FExec::Acc), Box::new(tree));
+        }
+        let base: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+        // Reference: one whole-range pass of the tree interpreter.
+        let mut want = base.clone();
+        eval_range(&tree, 0, &mut want, &mut Scratch::default());
+
+        // Tape VM over uneven chunk boundaries.
+        let tape = Tape::compile(&tree).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let mut got = base.clone();
+        let mut scratch = Scratch::default();
+        let mut s = 0;
+        while s < n {
+            let l = (1 + rng.below(BLOCK + 700)).min(n - s);
+            tape.run_range(s, &mut got[s..s + l], &mut scratch);
+            s += l;
+        }
+
+        for i in 0..n {
+            assert!(
+                bits_equal(got[i], want[i]),
+                "case {case} (n={n}, oc={oc}, depth={depth}) diverges at {i}: \
+                 tape {:?} vs tree {:?}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+/// Keep output-column counts small enough that strided leaves stay
+/// reasonably sized.
+fn striped_cap(n: usize) -> usize {
+    n.min(300).max(1)
+}
+
+#[test]
+fn tape_matches_tree_on_deep_left_spine() {
+    // A planner-shaped chain: long left spine with leaf/const right
+    // operands — the exact shape the serving hot path replays.
+    let n = BLOCK + 123;
+    let mut rng = XorShift64::new(77);
+    let mut tree = gen_leaf(&mut rng, n, n);
+    for k in 0..40 {
+        let rhs = if k % 3 == 0 {
+            FExec::Const(rng.range_f64(0.5, 1.5))
+        } else {
+            gen_leaf(&mut rng, n, n)
+        };
+        let ops = [BinOp::Add, BinOp::Mul, BinOp::Sub];
+        tree = FExec::Bin(ops[k % 3], Box::new(tree), Box::new(rhs));
+    }
+    let mut want = vec![0.0; n];
+    eval_range(&tree, 0, &mut want, &mut Scratch::default());
+    let tape = Tape::compile(&tree).unwrap();
+    assert!(
+        tape.program().n_scratch_regs() <= 2,
+        "left-spine chain must reuse registers, used {}",
+        tape.program().n_scratch_regs()
+    );
+    let mut got = vec![0.0; n];
+    tape.run_range(0, &mut got, &mut Scratch::default());
+    for i in 0..n {
+        assert!(bits_equal(got[i], want[i]), "diverges at {i}");
+    }
+}
