@@ -5,18 +5,23 @@
 //! (c) scaling of arbb_spmv2 with threads;
 //! (d) scaling of OMP2 with threads.
 //!
-//! `cargo bench --bench fig2_mod2as -- [--figure a|b|c|d|all] [--full]`
+//! `cargo bench --bench fig2_mod2as -- [--figure a|b|c|d|all] [--full | --smoke]`
+//!
+//! `--smoke` runs a short pooled-vs-serial spmv comparison and writes
+//! `BENCH_spmv.json` — the CI perf-tracking mode for the sparse path
+//! (companion to `ablations --smoke`'s `BENCH_eval.json`).
 
 use arbb_rs::bench::{calibrate, mflops, render_table, time_best, workloads, Series};
-use arbb_rs::coordinator::{Context, Options};
+use arbb_rs::coordinator::{engine::pool, Context, Options};
 use arbb_rs::euroben::mod2as::*;
-use arbb_rs::kernels::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt};
+use arbb_rs::kernels::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt, spmv_pooled};
 use arbb_rs::sparse::random_csr;
 
-fn parse_args() -> (String, bool) {
+fn parse_args() -> (String, bool, bool) {
     let argv: Vec<String> = std::env::args().collect();
     let mut figure = "all".to_string();
     let mut full = false;
+    let mut smoke = false;
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
@@ -25,11 +30,79 @@ fn parse_args() -> (String, bool) {
                 i += 1;
             }
             "--full" => full = true,
+            "--smoke" => smoke = true,
             _ => {}
         }
         i += 1;
     }
-    (figure, full)
+    (figure, full, smoke)
+}
+
+/// CI smoke mode: serial vs pooled spmv plus the two DSL variants on
+/// one Table-1-sized input; emits `BENCH_spmv.json` so the sparse-path
+/// perf trajectory is tracked across PRs.
+fn smoke_run() {
+    let n = 4000usize;
+    let fill = 5.0f64;
+    let m = random_csr(n, fill, 42);
+    let x = m.random_x(7);
+    let want = m.spmv_alloc(&x);
+    let fl = spmv_flops(&m);
+    let mut out = vec![0.0; n];
+    let bench_t = 0.1;
+
+    let t_opt = time_best(|| spmv_opt(&m, &x, &mut out), bench_t, 3);
+
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let p = pool::shared(workers);
+    let t_pool = time_best(|| spmv_pooled(&m, &x, &mut out, &p), bench_t, 3);
+
+    let ctx = Context::serial();
+    let a = bind_csr(&ctx, &m);
+    let xv = ctx.bind1(&x);
+    let reference = spmv_seg_reference(&m, &x);
+    let g1 = arbb_spmv1(&ctx, &a, &xv).to_vec();
+    let g2 = arbb_spmv2(&ctx, &a, &xv).to_vec();
+    for r in 0..n {
+        assert!(
+            g1[r].to_bits() == reference[r].to_bits() && g2[r].to_bits() == reference[r].to_bits(),
+            "DSL spmv diverges from the tree-interpreter reference at row {r}"
+        );
+        assert!((reference[r] - want[r]).abs() < 1e-11 * want[r].abs().max(1.0));
+    }
+    let t_v1 = time_best(|| drop(arbb_spmv1(&ctx, &a, &xv).to_vec()), bench_t, 3);
+    let t_v2 = time_best(|| drop(arbb_spmv2(&ctx, &a, &xv).to_vec()), bench_t, 3);
+
+    println!("# fig2_mod2as (smoke) — sparse-path perf tracking\n");
+    println!("  n={n} fill={fill}% nnz={} workers={workers}", m.nnz());
+    println!("  serial spmv_opt   {:>10.1} MFlop/s", mflops(fl, t_opt));
+    println!(
+        "  pooled panels     {:>10.1} MFlop/s  ({:.2}x vs serial)",
+        mflops(fl, t_pool),
+        t_opt / t_pool
+    );
+    println!("  arbb_spmv1 (DSL)  {:>10.1} MFlop/s", mflops(fl, t_v1));
+    println!("  arbb_spmv2 (DSL)  {:>10.1} MFlop/s", mflops(fl, t_v2));
+
+    let json = format!(
+        "{{\"bench\":\"spmv_pooled_vs_serial\",\"n\":{n},\"nnz\":{},\"workers\":{workers},\
+         \"serial_mflops\":{:.2},\"pooled_mflops\":{:.2},\"pooled_speedup\":{:.4},\
+         \"arbb_spmv1_mflops\":{:.2},\"arbb_spmv2_mflops\":{:.2}}}\n",
+        m.nnz(),
+        mflops(fl, t_opt),
+        mflops(fl, t_pool),
+        t_opt / t_pool,
+        mflops(fl, t_v1),
+        mflops(fl, t_v2),
+    );
+    // Anchor to the repository root (cargo runs bench binaries with the
+    // *package* dir as cwd, which is rust/ in this workspace).
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_spmv.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n  wrote {path}"),
+        Err(e) => println!("\n  could not write {path}: {e}"),
+    }
+    println!("\n# fig2_mod2as smoke done");
 }
 
 /// Bytes per spmv for the scaling model: vals 8B + indx 8B + gather 8B
@@ -39,7 +112,11 @@ fn spmv_bytes(nnz: usize, n: usize) -> f64 {
 }
 
 fn main() {
-    let (figure, full) = parse_args();
+    let (figure, full, smoke) = parse_args();
+    if smoke {
+        smoke_run();
+        return;
+    }
     let cal = calibrate();
     let model = cal.node_model();
     println!("# Fig 2 — mod2as | calibration: {}", cal.summary());
@@ -53,6 +130,7 @@ fn main() {
 
     if figure == "a" || figure == "b" || figure == "all" {
         let mut s_mkl = Series::new("MKL~");
+        let mut s_pool = Series::new("pooled");
         let mut s_o1 = Series::new("OMP1(1T)");
         let mut s_o2 = Series::new("OMP2(1T)");
         let mut s_a1 = Series::new("arbb_spmv1");
@@ -70,6 +148,12 @@ fn main() {
             let t = time_best(|| spmv_opt(&m, &x, &mut out), bench_t, 3);
             s_mkl.push(n as f64, mflops(fl, t));
             b_mkl.push(n as f64, mflops(fl, model.simple_loop(t, spmv_bytes(m.nnz(), n), 40)));
+
+            let workers =
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+            let p = pool::shared(workers);
+            let t = time_best(|| spmv_pooled(&m, &x, &mut out, &p), bench_t, 3);
+            s_pool.push(n as f64, mflops(fl, t));
 
             let t = time_best(|| spmv_omp1_body(&m, &x, &mut out), bench_t, 3);
             s_o1.push(n as f64, mflops(fl, t));
@@ -97,10 +181,10 @@ fn main() {
             print!(
                 "{}",
                 render_table(
-                    "Fig 2(a): mod2as single core (Table 1 inputs)",
+                    "Fig 2(a): mod2as single core + pooled panels (Table 1 inputs)",
                     "n",
                     "MFlop/s",
-                    &[s_mkl, s_o1, s_o2, s_a1, s_a2],
+                    &[s_mkl, s_pool, s_o1, s_o2, s_a1, s_a2],
                 )
             );
         }

@@ -9,10 +9,10 @@
 //! `cargo bench --bench fig7_cg -- [--figure a|b|all] [--full]`
 
 use arbb_rs::bench::{calibrate, mflops, render_table, time_best, workloads, Series};
-use arbb_rs::coordinator::{Context, Options};
+use arbb_rs::coordinator::{engine::pool, Context, Options};
 use arbb_rs::euroben::cg::{arbb_cg, SpmvVariant};
 use arbb_rs::euroben::mod2as::bind_csr;
-use arbb_rs::solvers::{cg_mkl, cg_serial};
+use arbb_rs::solvers::{cg_mkl, cg_pooled, cg_serial};
 use arbb_rs::sparse::banded_spd;
 use arbb_rs::util::XorShift64;
 
@@ -48,9 +48,30 @@ fn main() {
     println!("# Fig 7 — CG on banded SPD (Table 2) | calibration: {}", cal.summary());
     let bench_t = if full { 0.3 } else { 0.1 };
 
+    // Executor-path bit-exactness through a full solve: the fused-gather
+    // (V1) and contiguity-run (V2) segmented paths must agree on every
+    // component of the solution and on the iteration count.
+    {
+        let m = banded_spd(256, 15, 11);
+        let mut rng = XorShift64::new(99);
+        let b: Vec<f64> = (0..256).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let ctx = Context::serial();
+        let a = bind_csr(&ctx, &m);
+        let r1 = arbb_cg(&ctx, &a, &b, STOP, 1024, SpmvVariant::V1);
+        let r2 = arbb_cg(&ctx, &a, &b, STOP, 1024, SpmvVariant::V2);
+        assert_eq!(r1.iterations, r2.iterations, "V1/V2 iteration counts diverge");
+        for i in 0..256 {
+            assert_eq!(r1.x[i].to_bits(), r2.x[i].to_bits(), "V1/V2 diverge at x[{i}]");
+        }
+        println!("# V1 == V2 bit-exact through a 256x256 solve ✓");
+    }
+
     if figure == "a" || figure == "all" {
+        let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let shared_pool = pool::shared(workers);
         let mut s_ser = Series::new("serial CG");
         let mut s_mkl = Series::new("CG+MKL~");
+        let mut s_pool = Series::new("CG+pooled");
         let mut s_v1 = Series::new("CG+arbb_spmv1");
         let mut s_v2 = Series::new("CG+arbb_spmv2");
         for &(conf, n, bw) in &workloads::cg_configs() {
@@ -66,6 +87,13 @@ fn main() {
 
             let t = time_best(|| drop(cg_mkl(&m, &b, STOP, max_it)), bench_t, 2);
             s_mkl.push(conf as f64, mflops(fl, t));
+
+            let t = time_best(
+                || drop(cg_pooled(&m, &b, STOP, max_it, &shared_pool)),
+                bench_t,
+                2,
+            );
+            s_pool.push(conf as f64, mflops(fl, t));
 
             let ctx = Context::serial();
             let a = bind_csr(&ctx, &m);
@@ -85,10 +113,10 @@ fn main() {
         print!(
             "{}",
             render_table(
-                "Fig 7(a): CG single core per Table-2 configuration",
+                "Fig 7(a): CG per Table-2 configuration (+pooled spmv)",
                 "conf",
                 "MFlop/s",
-                &[s_ser, s_mkl, s_v1, s_v2],
+                &[s_ser, s_mkl, s_pool, s_v1, s_v2],
             )
         );
     }

@@ -1,14 +1,18 @@
-//! mod2as — sparse matrix–vector multiply (§3.2): arbb_spmv1/2 vs the
-//! MKL-analog and both OpenMP loop bodies.
+//! mod2as — sparse matrix–vector multiply (§3.2): arbb_spmv1/2 (now
+//! first-class gather + segmented-sum ops on the tape VM) vs the
+//! MKL-analog (serial and pooled row panels) and both OpenMP loop
+//! bodies. The DSL outputs are asserted bit-identical to the retained
+//! tree-interpreter reference.
 //!
 //! ```sh
 //! cargo run --release --example mod2as -- [n] [fill%]
 //! ```
 
 use arbb_rs::bench::{mflops, time_best};
+use arbb_rs::coordinator::engine::pool;
 use arbb_rs::coordinator::Context;
 use arbb_rs::euroben::mod2as::*;
-use arbb_rs::kernels::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt};
+use arbb_rs::kernels::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt, spmv_pooled};
 use arbb_rs::sparse::random_csr;
 use arbb_rs::util::assert_allclose;
 
@@ -32,16 +36,34 @@ fn main() {
     assert_allclose(&out, &want, 1e-12, 1e-13, "mkl");
     println!("  {:<16} {:>10.1} MFlop/s", "mkl_dcsrmv~", mflops(flops, t));
 
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let p = pool::shared(workers);
+    let t = time_best(|| spmv_pooled(&m, &x, &mut out, &p), 0.2, 3);
+    assert_allclose(&out, &want, 1e-12, 1e-13, "pooled");
+    println!(
+        "  {:<16} {:>10.1} MFlop/s  ({} workers, nnz-balanced panels)",
+        "pooled panels",
+        mflops(flops, t),
+        workers
+    );
+
     let t = time_best(|| spmv_omp1_body(&m, &x, &mut out), 0.2, 3);
     println!("  {:<16} {:>10.1} MFlop/s", "OMP1 body", mflops(flops, t));
     let t = time_best(|| spmv_omp2_body(&m, &x, &mut out), 0.2, 3);
     println!("  {:<16} {:>10.1} MFlop/s", "OMP2 body", mflops(flops, t));
 
+    // The retained tree-interpreter reference: every DSL executor path
+    // must reproduce it bit-for-bit.
+    let reference = spmv_seg_reference(&m, &x);
+    assert_allclose(&reference, &want, 1e-12, 1e-13, "seg reference");
+
     let ctx = Context::serial();
     let a = bind_csr(&ctx, &m);
     let xv = ctx.bind1(&x);
     let got = arbb_spmv1(&ctx, &a, &xv).to_vec();
-    assert_allclose(&got, &want, 1e-12, 1e-13, "spmv1");
+    for r in 0..n {
+        assert_eq!(got[r].to_bits(), reference[r].to_bits(), "spmv1 diverges at row {r}");
+    }
     let t = time_best(
         || {
             let _ = arbb_spmv1(&ctx, &a, &xv).to_vec();
@@ -52,7 +74,9 @@ fn main() {
     println!("  {:<16} {:>10.1} MFlop/s", "arbb_spmv1", mflops(flops, t));
 
     let got = arbb_spmv2(&ctx, &a, &xv).to_vec();
-    assert_allclose(&got, &want, 1e-12, 1e-13, "spmv2");
+    for r in 0..n {
+        assert_eq!(got[r].to_bits(), reference[r].to_bits(), "spmv2 diverges at row {r}");
+    }
     let t = time_best(
         || {
             let _ = arbb_spmv2(&ctx, &a, &xv).to_vec();
@@ -62,5 +86,22 @@ fn main() {
     );
     println!("  {:<16} {:>10.1} MFlop/s", "arbb_spmv2", mflops(flops, t));
 
-    println!("\nmod2as OK — see `cargo bench --bench fig2_mod2as` for the full figure");
+    let pctx = Context::parallel(workers);
+    let pa = bind_csr(&pctx, &m);
+    let px = pctx.bind1(&x);
+    let got = arbb_spmv1(&pctx, &pa, &px).to_vec();
+    for r in 0..n {
+        assert_eq!(got[r].to_bits(), reference[r].to_bits(), "O3 spmv1 diverges at row {r}");
+    }
+    let t = time_best(
+        || {
+            let _ = arbb_spmv1(&pctx, &pa, &px).to_vec();
+        },
+        0.2,
+        3,
+    );
+    println!("  {:<16} {:>10.1} MFlop/s", "arbb_spmv1 O3", mflops(flops, t));
+
+    println!("\nmod2as OK (DSL bit-identical to the tree-interpreter reference)");
+    println!("see `cargo bench --bench fig2_mod2as` for the full figure");
 }

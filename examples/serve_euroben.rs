@@ -6,8 +6,10 @@
 //!  * **mod2am** — dense matmul via rank-1 updates (mxm2a formulation,
 //!    capture-pure: no per-iteration forces; the plan fuses the update
 //!    chain once and every request replays it);
-//!  * **mod2as** — CSR spmv (`map` elemental) with the matrix structure
-//!    *baked* into the plan and the input vector as the parameter;
+//!  * **mod2as** — CSR spmv in first-class ops (gather + segmented sum,
+//!    compiled to the fused `GatherMulSegSum` tape path) with the matrix
+//!    structure *baked* into the plan and the input vector as the
+//!    parameter — a cache-hit replay allocates nothing;
 //!  * **mod2f**  — split-stream FFT, twiddles + tangling baked;
 //!  * **cg8**    — 8 fixed conjugate-gradient iterations with
 //!    alpha/beta kept in ArBB space (no host syncs → capturable).

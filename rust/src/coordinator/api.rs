@@ -346,6 +346,61 @@ impl Vec1 {
         }
     }
 
+    /// Scatter: `out[idx[k]] = self[k]` into a zero-initialised vector of
+    /// length `len` (duplicate indices: the last write wins).
+    pub fn scatter(&self, idx: &VecI64, len: usize) -> Vec1 {
+        assert_eq!(idx.len(), self.len(), "scatter: index container length mismatch");
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::Scatter { src: self.node.clone(), idx: idx.node.clone(), len },
+                Shape::D1(len),
+                DType::F64,
+            ),
+        }
+    }
+
+    /// Segmented reduction with CSR row-pointer semantics:
+    /// `out[r] = red over self[segp[r] .. segp[r+1]]`, with `segp` holding
+    /// `nrows + 1` monotone offsets. Empty segments emit the reduction
+    /// identity. Combined with [`Vec1::gather`] this expresses the §3.2
+    /// spmv entirely in first-class ops:
+    /// `(vals * x.gather(indx)).segmented_sum(rowp)`.
+    pub fn segmented_reduce(&self, red: RedOp, segp: &VecI64) -> Vec1 {
+        self.seg_reduce_inner(red, segp, false)
+    }
+
+    /// `segmented_reduce(Sum, segp)` — the spmv row sum.
+    pub fn segmented_sum(&self, segp: &VecI64) -> Vec1 {
+        self.seg_reduce_inner(RedOp::Sum, segp, false)
+    }
+
+    /// Contiguity-aware segmented sum (the paper's `arbb_spmv2`): asks
+    /// the segmented executor to detect runs of consecutive columns in
+    /// the fused gather's index table and stream them without the
+    /// per-element gather. Bit-identical to [`Vec1::segmented_sum`].
+    pub fn segmented_sum_runs(&self, segp: &VecI64) -> Vec1 {
+        self.seg_reduce_inner(RedOp::Sum, segp, true)
+    }
+
+    fn seg_reduce_inner(&self, red: RedOp, segp: &VecI64, runs_hint: bool) -> Vec1 {
+        assert!(!segp.is_empty(), "segmented_reduce: segp must hold nrows+1 offsets");
+        let rows = segp.len() - 1;
+        Vec1 {
+            ctx: self.ctx.clone(),
+            node: Node::new(
+                Op::SegmentedReduce {
+                    red,
+                    v: self.node.clone(),
+                    segp: segp.node.clone(),
+                    runs_hint,
+                },
+                Shape::D1(rows),
+                DType::F64,
+            ),
+        }
+    }
+
     /// Full sum reduction → scalar (the paper's `add_reduce(v)`).
     pub fn add_reduce(&self) -> Scal {
         Scal {
@@ -865,6 +920,37 @@ mod tests {
         let src = c.bind1(&[10.0, 20.0, 30.0]);
         let idx = c.bind_i64(&[2, 0, 1, 2]);
         assert_eq!(src.gather(&idx).to_vec(), vec![30.0, 10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn scatter_and_segmented_reduce() {
+        let c = ctx();
+        let src = c.bind1(&[5.0, 6.0, 7.0]);
+        let idx = c.bind_i64(&[4, 0, 2]);
+        assert_eq!(src.scatter(&idx, 5).to_vec(), vec![6.0, 0.0, 7.0, 0.0, 5.0]);
+        // segmented sum with an empty middle segment and a trailing
+        // empty segment: identities, not garbage.
+        let v = c.bind1(&[1.0, 2.0, 3.0, 4.0]);
+        let segp = c.bind_i64(&[0, 2, 2, 4, 4]);
+        assert_eq!(v.segmented_sum(&segp).to_vec(), vec![3.0, 0.0, 7.0, 0.0]);
+        // non-sum reduction: per-segment max, empty segment -> -inf.
+        let m = v.segmented_reduce(RedOp::Max, &segp).to_vec();
+        assert_eq!(m[0], 2.0);
+        assert_eq!(m[1], f64::NEG_INFINITY);
+        assert_eq!(m[2], 4.0);
+    }
+
+    #[test]
+    fn segmented_spmv_pattern() {
+        // 2x3 CSR [[1,0,2],[0,3,0]] as gather + segmented sum.
+        let c = ctx();
+        let vals = c.bind1(&[1.0, 2.0, 3.0]);
+        let indx = c.bind_i64(&[0, 2, 1]);
+        let rowp = c.bind_i64(&[0, 2, 3]);
+        let x = c.bind1(&[10.0, 100.0, 1000.0]);
+        let g = x.gather(&indx);
+        let y = (&vals * &g).segmented_sum(&rowp).to_vec();
+        assert_eq!(y, vec![10.0 + 2000.0, 300.0]);
     }
 
     #[test]

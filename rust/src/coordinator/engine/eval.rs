@@ -27,9 +27,9 @@
 //!    special case and remove whole block passes. See EXPERIMENTS.md
 //!    §"Tape VM" for the design notes and microbenchmark results.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
-use crate::coordinator::ops::{BinOp, UnOp};
+use crate::coordinator::ops::{BinOp, RedOp, UnOp};
 use crate::coordinator::plan::FTree;
 use crate::coordinator::shape::View;
 
@@ -51,6 +51,9 @@ pub const BLOCK: usize = 2048;
 #[derive(Debug, Clone)]
 pub enum FExec {
     Leaf { data: Arc<Vec<f64>>, view: View },
+    /// Fused gather leaf: element `k` reads `data[idx[base + k]]` (the
+    /// spmv index traffic, absorbed into the fused pass).
+    Gather { data: Arc<Vec<f64>>, idx: Arc<Vec<i64>>, base: usize },
     Const(f64),
     Iota,
     /// In-place accumulation marker: the output block already holds the
@@ -113,6 +116,21 @@ fn lower_inner(tree: &FTree) -> crate::Result<FExec> {
                 ))
             })?;
             FExec::Const(data.as_f64()[0])
+        }
+        FTree::Gather { src, idx, base } => {
+            let data = src.data().ok_or_else(|| {
+                crate::Error::Invalid(format!(
+                    "malformed plan: gather source {} not materialised at lowering",
+                    src.id
+                ))
+            })?;
+            let ix = idx.data().ok_or_else(|| {
+                crate::Error::Invalid(format!(
+                    "malformed plan: gather index {} not materialised at lowering",
+                    idx.id
+                ))
+            })?;
+            FExec::Gather { data: data.as_f64().clone(), idx: ix.as_i64().clone(), base: *base }
         }
         FTree::Const(c) => FExec::Const(*c),
         FTree::Iota => FExec::Iota,
@@ -207,6 +225,11 @@ fn eval_block(fx: &FExec, start: usize, out: &mut [f64], scratch: &mut Scratch) 
             // The output block already holds the accumulation base.
         }
         FExec::Leaf { data, view } => fill_view(data, view, start, out),
+        FExec::Gather { data, idx, base } => {
+            for (k, o) in out.iter_mut().enumerate() {
+                *o = data[idx[base + start + k] as usize];
+            }
+        }
         FExec::Un(op, a) => {
             eval_block(a, start, out, scratch);
             op.apply_slice_inplace(out);
@@ -448,6 +471,9 @@ const MAX_REGS: usize = 4096;
 /// resolved buffer set to [`TapeProgram::run_range_raw`].
 pub type LeafBind = (*const f64, usize);
 
+/// A raw i64 leaf binding: the index tables gather loaders read through.
+pub type ILeafBind = (*const i64, usize);
+
 /// Leaf-indexed fused tree: the tape compiler's input. Both the engine's
 /// [`FExec`] (Arc-resolved leaves) and the serving layer's graph-free
 /// trees lower into this, keeping buffer resolution out of the compiler.
@@ -457,6 +483,10 @@ pub enum KTree {
     /// Broadcast of the single element `leaves[leaf][idx]`, bound at
     /// run time (serving scalar parameters resolve here).
     Splat { leaf: u16, idx: usize },
+    /// Gather leaf: element `k` reads `leaves[src][ileaves[idx][base + k]]`
+    /// — the i64 index table is a separate binding namespace so index
+    /// containers rebind per run exactly like data leaves.
+    Gather { src: u16, idx: u16, base: usize },
     Const(f64),
     Iota,
     Acc,
@@ -481,6 +511,9 @@ pub enum Instr {
     LoadStrided { dst: Reg, leaf: u16, view: View },
     /// `dst <- leaf` through a cyclic view.
     LoadModulo { dst: Reg, leaf: u16, view: View },
+    /// `dst[k] <- leaf[ileaf_idx[base + start + k]]` — the monomorphised
+    /// gather loader (spmv index traffic inside the fused pass).
+    LoadGather { dst: Reg, leaf: u16, idx: u16, base: usize },
     /// `dst <- broadcast(val)`.
     LoadConst { dst: Reg, val: f64 },
     /// `dst[k] <- (start + k) as f64`.
@@ -516,6 +549,8 @@ pub struct TapeProgram {
     /// free-list reuse).
     n_scratch: usize,
     n_leaves: usize,
+    /// i64 index-table bindings referenced by gather loaders.
+    n_ileaves: usize,
 }
 
 impl TapeProgram {
@@ -527,10 +562,16 @@ impl TapeProgram {
             next: 1,
             high: 1,
             n_leaves: 0,
+            n_ileaves: 0,
         };
         b.lower(tree, 0)?;
         let instrs = peephole(b.instrs);
-        Ok(TapeProgram { instrs, n_scratch: b.high - 1, n_leaves: b.n_leaves })
+        Ok(TapeProgram {
+            instrs,
+            n_scratch: b.high - 1,
+            n_leaves: b.n_leaves,
+            n_ileaves: b.n_ileaves,
+        })
     }
 
     pub fn n_instrs(&self) -> usize {
@@ -546,45 +587,58 @@ impl TapeProgram {
         self.n_leaves
     }
 
+    pub fn n_ileaves(&self) -> usize {
+        self.n_ileaves
+    }
+
     pub fn instrs(&self) -> &[Instr] {
         &self.instrs
     }
 
     /// Execute over output indices `[start, start + out.len())` with
-    /// `leaves[i]` bound to the i-th leaf buffer.
+    /// `leaves[i]` bound to the i-th leaf buffer and `ileaves[i]` to the
+    /// i-th index table.
     pub fn run_range(
         &self,
         leaves: &[&[f64]],
+        ileaves: &[&[i64]],
         start: usize,
         out: &mut [f64],
         scratch: &mut Scratch,
     ) {
         let raw: Vec<LeafBind> = leaves.iter().map(|s| (s.as_ptr(), s.len())).collect();
-        // SAFETY: `raw` points into `leaves`, which outlive this call.
-        unsafe { self.run_range_raw(&raw, start, out, scratch) }
+        let iraw: Vec<ILeafBind> = ileaves.iter().map(|s| (s.as_ptr(), s.len())).collect();
+        // SAFETY: `raw`/`iraw` point into `leaves`/`ileaves`, which
+        // outlive this call.
+        unsafe { self.run_range_raw(&raw, &iraw, start, out, scratch) }
     }
 
     /// Allocation-free entry: leaves are pre-resolved raw bindings (the
-    /// serving replay arena recycles the binding vector across calls).
+    /// serving replay arena recycles the binding vectors across calls).
     ///
     /// # Safety
     ///
-    /// Every `(ptr, len)` in `leaves` must describe a live, initialised
-    /// f64 buffer for the duration of the call, none of which overlaps
-    /// `out`.
+    /// Every `(ptr, len)` in `leaves`/`ileaves` must describe a live,
+    /// initialised buffer for the duration of the call, none of which
+    /// overlaps `out`.
     pub unsafe fn run_range_raw(
         &self,
         leaves: &[LeafBind],
+        ileaves: &[ILeafBind],
         start: usize,
         out: &mut [f64],
         scratch: &mut Scratch,
     ) {
         debug_assert!(leaves.len() >= self.n_leaves, "tape run with too few leaf bindings");
+        debug_assert!(
+            ileaves.len() >= self.n_ileaves,
+            "tape run with too few index-table bindings"
+        );
         let mut file = scratch.take_file(self.n_scratch * BLOCK);
         let mut off = 0;
         while off < out.len() {
             let len = BLOCK.min(out.len() - off);
-            self.run_block(leaves, start + off, &mut out[off..off + len], &mut file);
+            self.run_block(leaves, ileaves, start + off, &mut out[off..off + len], &mut file);
             off += len;
         }
         scratch.put_file(file);
@@ -594,6 +648,7 @@ impl TapeProgram {
     unsafe fn run_block(
         &self,
         leaves: &[LeafBind],
+        ileaves: &[ILeafBind],
         start: usize,
         out: &mut [f64],
         file: &mut [f64],
@@ -627,6 +682,14 @@ impl TapeProgram {
                 Instr::LoadModulo { dst, leaf, view } => {
                     let o = reg_mut(out_ptr, file_ptr, dst, len);
                     load_modulo(leaf_slice(leaves, leaf), &view, start, o);
+                }
+                Instr::LoadGather { dst, leaf, idx, base } => {
+                    let o = reg_mut(out_ptr, file_ptr, dst, len);
+                    let src = leaf_slice(leaves, leaf);
+                    let ix = ileaf_slice(ileaves, idx);
+                    for (k, x) in o.iter_mut().enumerate() {
+                        *x = src[ix[base + start + k] as usize];
+                    }
                 }
                 Instr::LoadConst { dst, val } => {
                     reg_mut(out_ptr, file_ptr, dst, len).fill(val);
@@ -727,6 +790,16 @@ unsafe fn leaf_slice<'a>(leaves: &[LeafBind], l: u16) -> &'a [f64] {
     std::slice::from_raw_parts(p, n)
 }
 
+/// Resolve a raw i64 index-table binding to a slice.
+///
+/// # Safety
+/// Caller guarantees the binding points at a live buffer.
+#[inline(always)]
+unsafe fn ileaf_slice<'a>(ileaves: &[ILeafBind], l: u16) -> &'a [i64] {
+    let (p, n) = ileaves[l as usize];
+    std::slice::from_raw_parts(p, n)
+}
+
 struct TapeBuilder {
     instrs: Vec<Instr>,
     /// Free-list of released registers (the liveness pass): a register is
@@ -738,6 +811,7 @@ struct TapeBuilder {
     /// High-water mark: 1 + peak scratch registers in use.
     high: usize,
     n_leaves: usize,
+    n_ileaves: usize,
 }
 
 impl TapeBuilder {
@@ -764,6 +838,10 @@ impl TapeBuilder {
         self.n_leaves = self.n_leaves.max(l as usize + 1);
     }
 
+    fn saw_ileaf(&mut self, l: u16) {
+        self.n_ileaves = self.n_ileaves.max(l as usize + 1);
+    }
+
     /// Emit code leaving the value of `t` in register `dst`.
     fn lower(&mut self, t: &KTree, dst: Reg) -> crate::Result<()> {
         match t {
@@ -777,6 +855,11 @@ impl TapeBuilder {
                 self.saw_leaf(*leaf);
                 let ins = load_instr(dst, *leaf, view);
                 self.instrs.push(ins);
+            }
+            KTree::Gather { src, idx, base } => {
+                self.saw_leaf(*src);
+                self.saw_ileaf(*idx);
+                self.instrs.push(Instr::LoadGather { dst, leaf: *src, idx: *idx, base: *base });
             }
             KTree::Acc => {
                 if dst != 0 {
@@ -912,11 +995,14 @@ pub struct Tape {
     /// Keeps the leaf buffers alive; `raw` below points into them.
     _leaves: Vec<Arc<Vec<f64>>>,
     raw: Vec<LeafBind>,
+    /// Index tables of fused gather leaves; `iraw` points into them.
+    _ileaves: Vec<Arc<Vec<i64>>>,
+    iraw: Vec<ILeafBind>,
 }
 
-// SAFETY: the raw bindings point into the heap buffers of the
-// `Arc<Vec<f64>>`s held by `_leaves`, which live (and never move) as
-// long as the Tape; all access through them is read-only.
+// SAFETY: the raw bindings point into the heap buffers of the Arcs held
+// by `_leaves`/`_ileaves`, which live (and never move) as long as the
+// Tape; all access through them is read-only.
 unsafe impl Send for Tape {}
 unsafe impl Sync for Tape {}
 
@@ -924,10 +1010,12 @@ impl Tape {
     /// Compile an executable fused tree into a tape.
     pub fn compile(fx: &FExec) -> crate::Result<Tape> {
         let mut leaves: Vec<Arc<Vec<f64>>> = Vec::new();
-        let kt = fexec_to_ktree(fx, &mut leaves)?;
+        let mut ileaves: Vec<Arc<Vec<i64>>> = Vec::new();
+        let kt = fexec_to_ktree(fx, &mut leaves, &mut ileaves)?;
         let prog = TapeProgram::compile(&kt)?;
         let raw = leaves.iter().map(|a| (a.as_ptr(), a.len())).collect();
-        Ok(Tape { prog, _leaves: leaves, raw })
+        let iraw = ileaves.iter().map(|a| (a.as_ptr(), a.len())).collect();
+        Ok(Tape { prog, _leaves: leaves, raw, _ileaves: ileaves, iraw })
     }
 
     /// Lower an [`FTree`] and compile it — the engine's per-step entry
@@ -938,10 +1026,10 @@ impl Tape {
 
     /// Execute over output indices `[start, start + out.len())`.
     pub fn run_range(&self, start: usize, out: &mut [f64], scratch: &mut Scratch) {
-        // SAFETY: `raw` points into buffers owned by `self._leaves`,
+        // SAFETY: `raw`/`iraw` point into buffers owned by this Tape,
         // alive for the duration of the call and disjoint from `out`
         // (the engine writes steps into freshly allocated buffers).
-        unsafe { self.prog.run_range_raw(&self.raw, start, out, scratch) }
+        unsafe { self.prog.run_range_raw(&self.raw, &self.iraw, start, out, scratch) }
     }
 
     pub fn program(&self) -> &TapeProgram {
@@ -949,27 +1037,592 @@ impl Tape {
     }
 }
 
-fn fexec_to_ktree(fx: &FExec, leaves: &mut Vec<Arc<Vec<f64>>>) -> crate::Result<KTree> {
+fn fexec_to_ktree(
+    fx: &FExec,
+    leaves: &mut Vec<Arc<Vec<f64>>>,
+    ileaves: &mut Vec<Arc<Vec<i64>>>,
+) -> crate::Result<KTree> {
+    let push_leaf = |leaves: &mut Vec<Arc<Vec<f64>>>, data: &Arc<Vec<f64>>| -> crate::Result<u16> {
+        if leaves.len() >= u16::MAX as usize {
+            return Err(crate::Error::Invalid(
+                "fused tree has too many leaves for the tape VM".into(),
+            ));
+        }
+        leaves.push(data.clone());
+        Ok((leaves.len() - 1) as u16)
+    };
     Ok(match fx {
         FExec::Leaf { data, view } => {
-            if leaves.len() >= u16::MAX as usize {
+            KTree::Leaf { leaf: push_leaf(leaves, data)?, view: *view }
+        }
+        FExec::Gather { data, idx, base } => {
+            if ileaves.len() >= u16::MAX as usize {
                 return Err(crate::Error::Invalid(
-                    "fused tree has too many leaves for the tape VM".into(),
+                    "fused tree has too many index tables for the tape VM".into(),
                 ));
             }
-            leaves.push(data.clone());
-            KTree::Leaf { leaf: (leaves.len() - 1) as u16, view: *view }
+            // The gather loaders read through raw slices: reject an
+            // out-of-range index table up front so a bad index is a
+            // clean Error::Invalid (exactly what the materialising
+            // Gather step guarantees), never a panic inside a shared
+            // pool worker. The verdict is memoized by buffer identity —
+            // the engine recompiles per force, and re-scanning the same
+            // immutable table every CG iteration would double the
+            // spmv's index traffic.
+            let n = data.len();
+            if !gather_check_lookup(idx, n) {
+                if idx.iter().any(|&v| v < 0 || v as usize >= n) {
+                    return Err(crate::Error::Invalid(format!(
+                        "gather index out of range (source length {n})"
+                    )));
+                }
+                gather_check_insert(idx, n);
+            }
+            let src = push_leaf(leaves, data)?;
+            ileaves.push(idx.clone());
+            KTree::Gather { src, idx: (ileaves.len() - 1) as u16, base: *base }
         }
         FExec::Const(c) => KTree::Const(*c),
         FExec::Iota => KTree::Iota,
         FExec::Acc => KTree::Acc,
         FExec::Bin(op, a, b) => KTree::Bin(
             *op,
-            Box::new(fexec_to_ktree(a, leaves)?),
-            Box::new(fexec_to_ktree(b, leaves)?),
+            Box::new(fexec_to_ktree(a, leaves, ileaves)?),
+            Box::new(fexec_to_ktree(b, leaves, ileaves)?),
         ),
-        FExec::Un(op, a) => KTree::Un(*op, Box::new(fexec_to_ktree(a, leaves)?)),
+        FExec::Un(op, a) => KTree::Un(*op, Box::new(fexec_to_ktree(a, leaves, ileaves)?)),
     })
+}
+
+// ---------------------------------------------------------------------
+// Segmented tape executor (CSR row-pointer semantics)
+// ---------------------------------------------------------------------
+//
+// `out[r] = red over tape(segp[r] .. segp[r+1])`: the fused tree is
+// evaluated over a flat nnz index space and folded per variable-length
+// segment. Three execution paths, all bit-identical (they share the
+// `RedOp::fold_segment_chunk` association contract):
+//
+//  * **blocked** — the general path: the tape fills ≤BLOCK register
+//    blocks of the segment's value stream, the segmented fold consumes
+//    them (`fold_segment_chunk`).
+//  * **fused `GatherMulSegSum`** — when the tree is exactly the spmv
+//    inner loop `Sum(contiguous_vals * gather(x, idx))`, a
+//    superinstruction runs `acc += vals[k] * x[idx[k]]` per row with no
+//    intermediate block at all, replicating `fold_slice`'s 4-lane
+//    association so the result stays bit-identical to the blocked path.
+//  * **contiguity runs** — the `arbb_spmv2` exploit: when the caller
+//    hints it, the index table is scanned once (at compile/capture) for
+//    runs of consecutive columns; the value stream is then produced by
+//    streaming `vals[k..] * x[col..]` without the per-element gather.
+
+/// The fused spmv superinstruction's operands: `vals` and `x` are f64
+/// leaf bindings, `idx` an index-table binding.
+#[derive(Debug, Clone, Copy)]
+struct GatherMulSegSum {
+    vals: u16,
+    vals_base: usize,
+    x: u16,
+    idx: u16,
+    idx_base: usize,
+}
+
+/// Per-row contiguity runs detected in a gather index table: globally
+/// ordered runs `(run_k, run_col, run_len)` with per-row pointers
+/// `run_ptr` (runs never cross row boundaries).
+#[derive(Debug, Default)]
+pub struct RunTable {
+    run_ptr: Vec<i64>,
+    run_k: Vec<i64>,
+    run_col: Vec<i64>,
+    run_len: Vec<i64>,
+}
+
+impl RunTable {
+    /// Number of runs detected.
+    pub fn n_runs(&self) -> usize {
+        self.run_k.len()
+    }
+}
+
+/// A compiled segmented-reduction kernel: the general tape plus the
+/// optional fused/run fast paths selected at compile time. Run tables
+/// are `Arc`ed so the process-wide memo can share one detection across
+/// recompiles of the same bound CSR (the engine re-plans per force).
+#[derive(Debug)]
+pub struct SegTape {
+    prog: TapeProgram,
+    red: RedOp,
+    fused: Option<GatherMulSegSum>,
+    runs: Option<Arc<RunTable>>,
+}
+
+impl SegTape {
+    /// Compile a leaf-indexed fused tree into a segmented kernel,
+    /// pattern-matching the spmv superinstruction.
+    pub fn compile(tree: &KTree, red: RedOp) -> crate::Result<SegTape> {
+        let prog = TapeProgram::compile(tree)?;
+        let fused = if matches!(red, RedOp::Sum) { match_gather_mul(tree) } else { None };
+        Ok(SegTape { prog, red, fused, runs: None })
+    }
+
+    /// The underlying leaf-abstract tape (the blocked path's program).
+    pub fn program(&self) -> &TapeProgram {
+        &self.prog
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.prog.n_leaves()
+    }
+
+    pub fn n_ileaves(&self) -> usize {
+        self.prog.n_ileaves()
+    }
+
+    /// Whether the fused `GatherMulSegSum` superinstruction was matched.
+    pub fn is_fused(&self) -> bool {
+        self.fused.is_some()
+    }
+
+    /// Index-table binding of the fused gather, if matched (callers use
+    /// it to hand [`SegTape::detect_runs`] the right table).
+    pub fn fused_idx(&self) -> Option<u16> {
+        self.fused.map(|f| f.idx)
+    }
+
+    /// Whether the contiguity-run path is active.
+    pub fn has_runs(&self) -> bool {
+        self.runs.is_some()
+    }
+
+    /// Scan the fused gather's index table for runs of consecutive
+    /// columns (the paper's `arbb_spmv2` preprocessing, moved from
+    /// `bind_csr` into the executor so every frontend benefits) and
+    /// switch the run path on. Returns the fraction of elements inside
+    /// runs of length ≥ 2 — the matrix-contiguity statistic of §3.2.
+    /// No-op (returns 0) unless the fused pattern matched. Empty
+    /// segments and trailing empty segments produce no runs and fold to
+    /// the identity.
+    pub fn detect_runs(&mut self, idx: &[i64], segp: &[i64]) -> f64 {
+        let f = match self.fused {
+            Some(f) => f,
+            None => return 0.0,
+        };
+        let rows = segp.len().saturating_sub(1);
+        let mut rt = RunTable::default();
+        rt.run_ptr.reserve(rows + 1);
+        rt.run_ptr.push(0);
+        let mut in_runs = 0usize;
+        let mut total = 0usize;
+        for r in 0..rows {
+            let (s, e) = (segp[r] as usize, segp[r + 1] as usize);
+            total += e - s;
+            let mut k = s;
+            while k < e {
+                let col = idx[f.idx_base + k];
+                let mut len = 1usize;
+                while k + len < e && idx[f.idx_base + k + len] == col + len as i64 {
+                    len += 1;
+                }
+                rt.run_k.push(k as i64);
+                rt.run_col.push(col);
+                rt.run_len.push(len as i64);
+                if len >= 2 {
+                    in_runs += len;
+                }
+                k += len;
+            }
+            rt.run_ptr.push(rt.run_k.len() as i64);
+        }
+        self.runs = Some(Arc::new(rt));
+        if total == 0 {
+            0.0
+        } else {
+            in_runs as f64 / total as f64
+        }
+    }
+
+    /// Attach a previously detected run table (memoized reuse; no-op
+    /// unless the fused pattern matched, since the run path needs its
+    /// operands).
+    pub fn attach_runs(&mut self, rt: Arc<RunTable>) {
+        if self.fused.is_some() {
+            self.runs = Some(rt);
+        }
+    }
+
+    /// The active run table, if any.
+    pub fn runs(&self) -> Option<&Arc<RunTable>> {
+        self.runs.as_ref()
+    }
+
+    /// Reduce segments `[row0, row0 + out.len())`, writing one value per
+    /// segment. Rows are independent, so panel-parallel callers get
+    /// results bit-identical to a serial sweep.
+    ///
+    /// # Safety
+    ///
+    /// As [`TapeProgram::run_range_raw`]; additionally `segp` must be
+    /// monotone with `segp[r+1]` within every bound leaf's gather range.
+    pub unsafe fn run_rows_raw(
+        &self,
+        leaves: &[LeafBind],
+        ileaves: &[ILeafBind],
+        segp: &[i64],
+        row0: usize,
+        out: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        if let Some(f) = self.fused {
+            if let Some(rt) = &self.runs {
+                return self.run_rows_runs(leaves, f, rt, segp, row0, out, scratch);
+            }
+            return self.run_rows_fused(leaves, ileaves, f, segp, row0, out);
+        }
+        self.run_rows_blocked(leaves, ileaves, segp, row0, out, scratch);
+    }
+
+    /// General path: tape-fill ≤BLOCK value blocks, segmented-fold them.
+    unsafe fn run_rows_blocked(
+        &self,
+        leaves: &[LeafBind],
+        ileaves: &[ILeafBind],
+        segp: &[i64],
+        row0: usize,
+        out: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        let mut buf = scratch.take();
+        for (j, ov) in out.iter_mut().enumerate() {
+            let r = row0 + j;
+            let (s, e) = (segp[r] as usize, segp[r + 1] as usize);
+            let mut acc = self.red.identity();
+            let mut k = s;
+            while k < e {
+                let l = BLOCK.min(e - k);
+                self.prog.run_range_raw(leaves, ileaves, k, &mut buf[..l], scratch);
+                acc = self.red.fold_segment_chunk(acc, &buf[..l]);
+                k += l;
+            }
+            *ov = acc;
+        }
+        scratch.put(buf);
+    }
+
+    /// Fused spmv path: `acc += vals[k] * x[idx[k]]` per row, 4-lane
+    /// unrolled exactly like `RedOp::Sum::fold_slice` so the result is
+    /// bit-identical to the blocked path without materialising the
+    /// product stream.
+    unsafe fn run_rows_fused(
+        &self,
+        leaves: &[LeafBind],
+        ileaves: &[ILeafBind],
+        f: GatherMulSegSum,
+        segp: &[i64],
+        row0: usize,
+        out: &mut [f64],
+    ) {
+        let vals = leaf_slice(leaves, f.vals);
+        let x = leaf_slice(leaves, f.x);
+        let ix = ileaf_slice(ileaves, f.idx);
+        for (j, ov) in out.iter_mut().enumerate() {
+            let r = row0 + j;
+            let (s, e) = (segp[r] as usize, segp[r + 1] as usize);
+            let mut acc = self.red.identity();
+            let mut k = s;
+            while k < e {
+                let l = BLOCK.min(e - k);
+                let m4 = l - (l % 4);
+                let mut a = [0.0f64; 4];
+                let mut t = k;
+                while t < k + m4 {
+                    a[0] += vals[f.vals_base + t] * x[ix[f.idx_base + t] as usize];
+                    a[1] += vals[f.vals_base + t + 1] * x[ix[f.idx_base + t + 1] as usize];
+                    a[2] += vals[f.vals_base + t + 2] * x[ix[f.idx_base + t + 2] as usize];
+                    a[3] += vals[f.vals_base + t + 3] * x[ix[f.idx_base + t + 3] as usize];
+                    t += 4;
+                }
+                let mut cs = a[0] + a[1] + a[2] + a[3];
+                while t < k + l {
+                    cs += vals[f.vals_base + t] * x[ix[f.idx_base + t] as usize];
+                    t += 1;
+                }
+                acc += cs;
+                k += l;
+            }
+            *ov = acc;
+        }
+    }
+
+    /// Contiguity-run path (`arbb_spmv2`): the product stream is built
+    /// by streaming `vals[k..] * x[col..]` per run — no index loads —
+    /// then folded exactly like the blocked path.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn run_rows_runs(
+        &self,
+        leaves: &[LeafBind],
+        f: GatherMulSegSum,
+        rt: &RunTable,
+        segp: &[i64],
+        row0: usize,
+        out: &mut [f64],
+        scratch: &mut Scratch,
+    ) {
+        let vals = leaf_slice(leaves, f.vals);
+        let x = leaf_slice(leaves, f.x);
+        let mut buf = scratch.take();
+        for (j, ov) in out.iter_mut().enumerate() {
+            let r = row0 + j;
+            let (s, e) = (segp[r] as usize, segp[r + 1] as usize);
+            let mut t = rt.run_ptr[r] as usize;
+            let mut acc = self.red.identity();
+            let mut k = s;
+            while k < e {
+                let l = BLOCK.min(e - k);
+                let chunk = &mut buf[..l];
+                let mut filled = 0usize;
+                while filled < l {
+                    let rk = rt.run_k[t] as usize;
+                    let rl = rt.run_len[t] as usize;
+                    let rc = rt.run_col[t] as usize;
+                    let off = k + filled - rk;
+                    let take = (rl - off).min(l - filled);
+                    let vs = &vals[f.vals_base + k + filled..f.vals_base + k + filled + take];
+                    let xs = &x[rc + off..rc + off + take];
+                    for i in 0..take {
+                        chunk[filled + i] = vs[i] * xs[i];
+                    }
+                    filled += take;
+                    if off + take == rl {
+                        t += 1;
+                    }
+                }
+                acc = self.red.fold_segment_chunk(acc, chunk);
+                k += l;
+            }
+            *ov = acc;
+        }
+        scratch.put(buf);
+    }
+}
+
+/// Match the spmv inner-loop pattern `contiguous_leaf * gather` (either
+/// operand order — multiplication is bitwise commutative on f64).
+fn match_gather_mul(tree: &KTree) -> Option<GatherMulSegSum> {
+    let (p, q) = match tree {
+        KTree::Bin(BinOp::Mul, p, q) => (&**p, &**q),
+        _ => return None,
+    };
+    let pick = |a: &KTree, b: &KTree| -> Option<GatherMulSegSum> {
+        match (a, b) {
+            (KTree::Leaf { leaf, view }, KTree::Gather { src, idx, base })
+                if view.is_contiguous() =>
+            {
+                Some(GatherMulSegSum {
+                    vals: *leaf,
+                    vals_base: view.base,
+                    x: *src,
+                    idx: *idx,
+                    idx_base: *base,
+                })
+            }
+            _ => None,
+        }
+    };
+    pick(p, q).or_else(|| pick(q, p))
+}
+
+/// Bounded process-wide memo of detected contiguity-run tables, keyed
+/// by buffer identity (`Arc::ptr_eq` against the live index-table and
+/// row-pointer buffers — i64 container buffers are immutable once
+/// bound). The interactive engine re-plans and recompiles on every
+/// force; without this, every `arbb_spmv2`/CG iteration would redo the
+/// O(nnz) run scan that cached serving plans amortise at capture.
+struct RunMemoEntry {
+    idx: Weak<Vec<i64>>,
+    segp: Weak<Vec<i64>>,
+    idx_base: usize,
+    runs: Arc<RunTable>,
+}
+
+const RUN_MEMO_CAP: usize = 16;
+
+fn run_memo() -> &'static Mutex<Vec<RunMemoEntry>> {
+    static MEMO: OnceLock<Mutex<Vec<RunMemoEntry>>> = OnceLock::new();
+    MEMO.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn run_memo_lookup(
+    idx: &Arc<Vec<i64>>,
+    segp: &Arc<Vec<i64>>,
+    idx_base: usize,
+) -> Option<Arc<RunTable>> {
+    let memo = run_memo().lock().unwrap();
+    for e in memo.iter() {
+        if e.idx_base == idx_base {
+            if let (Some(i), Some(s)) = (e.idx.upgrade(), e.segp.upgrade()) {
+                if Arc::ptr_eq(&i, idx) && Arc::ptr_eq(&s, segp) {
+                    return Some(e.runs.clone());
+                }
+            }
+        }
+    }
+    None
+}
+
+fn run_memo_insert(
+    idx: &Arc<Vec<i64>>,
+    segp: &Arc<Vec<i64>>,
+    idx_base: usize,
+    runs: Arc<RunTable>,
+) {
+    let mut memo = run_memo().lock().unwrap();
+    memo.retain(|e| e.idx.strong_count() > 0 && e.segp.strong_count() > 0);
+    if memo.len() >= RUN_MEMO_CAP {
+        memo.remove(0);
+    }
+    memo.push(RunMemoEntry {
+        idx: Arc::downgrade(idx),
+        segp: Arc::downgrade(segp),
+        idx_base,
+        runs,
+    });
+}
+
+/// Memo of gather index tables already range-checked against a source
+/// length (buffer-identity keyed like the run memo; i64 container
+/// buffers are immutable once bound, so a verdict never goes stale).
+struct GatherCheckEntry {
+    idx: Weak<Vec<i64>>,
+    src_len: usize,
+}
+
+const GATHER_CHECK_CAP: usize = 32;
+
+fn gather_check_memo() -> &'static Mutex<Vec<GatherCheckEntry>> {
+    static MEMO: OnceLock<Mutex<Vec<GatherCheckEntry>>> = OnceLock::new();
+    MEMO.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn gather_check_lookup(idx: &Arc<Vec<i64>>, src_len: usize) -> bool {
+    let memo = gather_check_memo().lock().unwrap();
+    memo.iter().any(|e| {
+        e.src_len == src_len
+            && match e.idx.upgrade() {
+                Some(i) => Arc::ptr_eq(&i, idx),
+                None => false,
+            }
+    })
+}
+
+fn gather_check_insert(idx: &Arc<Vec<i64>>, src_len: usize) {
+    let mut memo = gather_check_memo().lock().unwrap();
+    memo.retain(|e| e.idx.strong_count() > 0);
+    if memo.len() >= GATHER_CHECK_CAP {
+        memo.remove(0);
+    }
+    memo.push(GatherCheckEntry { idx: Arc::downgrade(idx), src_len });
+}
+
+/// Engine-side segmented kernel with its buffers bound: compiled once
+/// per step, replayed per row panel (the serving layer rebinds leaves
+/// per request through [`SegTape::run_rows_raw`] instead).
+pub struct BoundSeg {
+    seg: SegTape,
+    _leaves: Vec<Arc<Vec<f64>>>,
+    raw: Vec<LeafBind>,
+    _ileaves: Vec<Arc<Vec<i64>>>,
+    iraw: Vec<ILeafBind>,
+}
+
+// SAFETY: as for `Tape` — the raw bindings point into Arc-held buffers
+// owned by this value, and all access is read-only.
+unsafe impl Send for BoundSeg {}
+unsafe impl Sync for BoundSeg {}
+
+impl BoundSeg {
+    /// Lower and compile a segmented-reduction operand tree. When
+    /// `detect_contiguity` is set and the fused spmv pattern matched,
+    /// the gather index table is scanned for contiguity runs
+    /// (`arbb_spmv2`) — once per bound CSR, via the run-table memo.
+    pub fn from_ftree(
+        tree: &FTree,
+        red: RedOp,
+        segp: &Arc<Vec<i64>>,
+        detect_contiguity: bool,
+    ) -> crate::Result<BoundSeg> {
+        Self::from_fexec(&lower(tree)?, red, segp, detect_contiguity)
+    }
+
+    /// As [`BoundSeg::from_ftree`], from an already-lowered tree.
+    pub fn from_fexec(
+        fx: &FExec,
+        red: RedOp,
+        segp: &Arc<Vec<i64>>,
+        detect_contiguity: bool,
+    ) -> crate::Result<BoundSeg> {
+        let mut leaves: Vec<Arc<Vec<f64>>> = Vec::new();
+        let mut ileaves: Vec<Arc<Vec<i64>>> = Vec::new();
+        let kt = fexec_to_ktree(fx, &mut leaves, &mut ileaves)?;
+        let mut seg = SegTape::compile(&kt, red)?;
+        if detect_contiguity {
+            if let (Some(fi), Some(f)) = (seg.fused_idx(), seg.fused) {
+                let idx = ileaves[fi as usize].clone();
+                match run_memo_lookup(&idx, segp, f.idx_base) {
+                    Some(rt) => seg.attach_runs(rt),
+                    None => {
+                        seg.detect_runs(&idx, segp);
+                        if let Some(rt) = seg.runs() {
+                            run_memo_insert(&idx, segp, f.idx_base, rt.clone());
+                        }
+                    }
+                }
+            }
+        }
+        let raw = leaves.iter().map(|a| (a.as_ptr(), a.len())).collect();
+        let iraw = ileaves.iter().map(|a| (a.as_ptr(), a.len())).collect();
+        Ok(BoundSeg { seg, _leaves: leaves, raw, _ileaves: ileaves, iraw })
+    }
+
+    /// Reduce segments `[row0, row0 + out.len())`.
+    pub fn run_rows(&self, segp: &[i64], row0: usize, out: &mut [f64], scratch: &mut Scratch) {
+        // SAFETY: bindings point into Arc-held buffers owned by self,
+        // disjoint from `out` (a freshly allocated step output).
+        unsafe { self.seg.run_rows_raw(&self.raw, &self.iraw, segp, row0, out, scratch) }
+    }
+
+    pub fn seg(&self) -> &SegTape {
+        &self.seg
+    }
+}
+
+/// Tree-interpreter reference for segmented reduction: the bit-exact
+/// comparator every [`SegTape`] path must reproduce (same blocked
+/// evaluation, same `fold_segment_chunk` association — only the value
+/// production goes through [`eval_range`] instead of the tape VM).
+pub fn seg_reduce_rows_ref(
+    fx: &FExec,
+    red: RedOp,
+    segp: &[i64],
+    row0: usize,
+    out: &mut [f64],
+    scratch: &mut Scratch,
+) {
+    let mut buf = scratch.take();
+    for (j, ov) in out.iter_mut().enumerate() {
+        let r = row0 + j;
+        let (s, e) = (segp[r] as usize, segp[r + 1] as usize);
+        let mut acc = red.identity();
+        let mut k = s;
+        while k < e {
+            let l = BLOCK.min(e - k);
+            eval_range(fx, k, &mut buf[..l], scratch);
+            acc = red.fold_segment_chunk(acc, &buf[..l]);
+            k += l;
+        }
+        *ov = acc;
+    }
+    scratch.put(buf);
 }
 
 #[cfg(test)]
@@ -1232,8 +1885,150 @@ mod tests {
         let mut out = [0.0; 4];
         for s in [2.0, 10.0] {
             let scale = [s];
-            prog.run_range(&[xs.as_slice(), scale.as_slice()], 0, &mut out, &mut Scratch::default());
+            prog.run_range(
+                &[xs.as_slice(), scale.as_slice()],
+                &[],
+                0,
+                &mut out,
+                &mut Scratch::default(),
+            );
             assert_eq!(out, [1.0 * s, 2.0 * s, 3.0 * s, 4.0 * s]);
         }
+    }
+
+    #[test]
+    fn gather_leaf_tape_matches_tree() {
+        // (a * gather(x, idx)): the spmv inner-loop element space.
+        let nnz = BLOCK + 37; // cross a block boundary
+        let a: Vec<f64> = (0..nnz).map(|k| (k % 13) as f64 - 6.0).collect();
+        let x: Vec<f64> = (0..50).map(|k| (k * k) as f64).collect();
+        let idx: Vec<i64> = (0..nnz).map(|k| ((k * 7) % 50) as i64).collect();
+        let fx = FExec::Bin(
+            BinOp::Mul,
+            Box::new(leaf(a.clone(), View::identity(nnz))),
+            Box::new(FExec::Gather {
+                data: Arc::new(x.clone()),
+                idx: Arc::new(idx.clone()),
+                base: 0,
+            }),
+        );
+        let out = eval_both(&fx, 0, &vec![0.0; nnz]);
+        for k in [0usize, 1, BLOCK - 1, BLOCK, nnz - 1] {
+            assert_eq!(out[k], a[k] * x[idx[k] as usize], "elem {k}");
+        }
+    }
+
+    #[test]
+    fn seg_tape_paths_are_bit_identical() {
+        use crate::util::XorShift64;
+        // Random CSR-ish structure with empty rows, a dense row longer
+        // than one evaluation BLOCK (2048) — exercising every path's
+        // intra-segment chunk carry — and a trailing all-zero row.
+        let mut rng = XorShift64::new(42);
+        let ncols = BLOCK + 452; // dense row spans 2 chunks
+        let nrows = 40usize;
+        let mut segp = vec![0i64];
+        let mut idx: Vec<i64> = Vec::new();
+        for r in 0..nrows {
+            let nnz_r = match r {
+                5 | 17 => 0,            // empty rows
+                9 => ncols,             // dense row: one long run
+                r if r == nrows - 1 => 0, // trailing all-zero row
+                _ => rng.below(24),
+            };
+            let mut cols: Vec<i64> = Vec::new();
+            if nnz_r == ncols {
+                cols.extend(0..ncols as i64);
+            } else {
+                while cols.len() < nnz_r {
+                    let c = rng.below(ncols) as i64;
+                    if !cols.contains(&c) {
+                        cols.push(c);
+                    }
+                }
+                cols.sort_unstable();
+            }
+            idx.extend_from_slice(&cols);
+            segp.push(idx.len() as i64);
+        }
+        let segp = Arc::new(segp);
+        let nnz = idx.len();
+        let vals: Vec<f64> = (0..nnz).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let x: Vec<f64> = (0..ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+        let fx = FExec::Bin(
+            BinOp::Mul,
+            Box::new(leaf(vals.clone(), View::identity(nnz))),
+            Box::new(FExec::Gather {
+                data: Arc::new(x.clone()),
+                idx: Arc::new(idx.clone()),
+                base: 0,
+            }),
+        );
+        let mut scratch = Scratch::default();
+        // Reference: tree interpreter + segmented fold.
+        let mut want = vec![0.0; nrows];
+        seg_reduce_rows_ref(&fx, RedOp::Sum, &segp, 0, &mut want, &mut scratch);
+        assert_eq!(want[5], 0.0, "empty row folds to the identity");
+        assert_eq!(want[nrows - 1], 0.0, "trailing zero row folds to the identity");
+
+        // Fused path.
+        let fused = BoundSeg::from_fexec(&fx, RedOp::Sum, &segp, false).unwrap();
+        assert!(fused.seg().is_fused());
+        assert!(!fused.seg().has_runs());
+        let mut got = vec![0.0; nrows];
+        fused.run_rows(&segp, 0, &mut got, &mut scratch);
+        for r in 0..nrows {
+            assert_eq!(got[r].to_bits(), want[r].to_bits(), "fused row {r}");
+        }
+
+        // Run path.
+        let runs = BoundSeg::from_fexec(&fx, RedOp::Sum, &segp, true).unwrap();
+        assert!(runs.seg().has_runs());
+        got.fill(-1.0);
+        runs.run_rows(&segp, 0, &mut got, &mut scratch);
+        for r in 0..nrows {
+            assert_eq!(got[r].to_bits(), want[r].to_bits(), "runs row {r}");
+        }
+
+        // Blocked path (break the fused match with a no-op Add 0.0).
+        let blocked_fx = FExec::Bin(
+            BinOp::Add,
+            Box::new(fx.clone()),
+            Box::new(FExec::Const(0.0)),
+        );
+        let mut want2 = vec![0.0; nrows];
+        seg_reduce_rows_ref(&blocked_fx, RedOp::Sum, &segp, 0, &mut want2, &mut scratch);
+        let blocked = BoundSeg::from_fexec(&blocked_fx, RedOp::Sum, &segp, false).unwrap();
+        assert!(!blocked.seg().is_fused());
+        got.fill(-1.0);
+        blocked.run_rows(&segp, 0, &mut got, &mut scratch);
+        for r in 0..nrows {
+            assert_eq!(got[r].to_bits(), want2[r].to_bits(), "blocked row {r}");
+        }
+
+        // Panel split must not change any row (rows are independent).
+        let mid = nrows / 2;
+        let mut lo = vec![0.0; mid];
+        let mut hi = vec![0.0; nrows - mid];
+        fused.run_rows(&segp, 0, &mut lo, &mut scratch);
+        fused.run_rows(&segp, mid, &mut hi, &mut scratch);
+        for r in 0..nrows {
+            let v = if r < mid { lo[r] } else { hi[r - mid] };
+            assert_eq!(v.to_bits(), want[r].to_bits(), "panelled row {r}");
+        }
+    }
+
+    #[test]
+    fn seg_tape_non_sum_reduction_uses_blocked_path() {
+        // max over segments through the general path.
+        let vals = vec![1.0, 5.0, -2.0, 7.0, 0.5];
+        let segp = Arc::new(vec![0i64, 2, 2, 5]);
+        let fx = leaf(vals, View::identity(5));
+        let b = BoundSeg::from_fexec(&fx, RedOp::Max, &segp, false).unwrap();
+        assert!(!b.seg().is_fused());
+        let mut out = vec![0.0; 3];
+        b.run_rows(&segp, 0, &mut out, &mut Scratch::default());
+        assert_eq!(out, vec![5.0, f64::NEG_INFINITY, 7.0]);
     }
 }

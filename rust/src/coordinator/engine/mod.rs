@@ -301,6 +301,55 @@ fn exec_step(
                 parallelizable: chunks.len() > 1,
             }))
         }
+        Step::SegmentedReduce { red, tree, segp, rows, nnz, runs_hint, .. } => {
+            let segp_arc = segp
+                .data()
+                .ok_or_else(|| {
+                    crate::Error::Invalid(
+                        "malformed plan: segmented-reduce row pointers not materialised".into(),
+                    )
+                })?
+                .as_i64()
+                .clone();
+            validate_segp(&segp_arc, *rows, *nnz)?;
+            // Compile the operand tree once into a segmented tape; the
+            // contiguity hint triggers the one-off run scan (arbb_spmv2).
+            let bound = eval::BoundSeg::from_ftree(tree, *red, &segp_arc, *runs_hint)?;
+            let mut out = vec![0.0f64; *rows];
+            // nnz-balanced row panels: equal-row chunks would let one
+            // dense row serialise the sweep. Recording runs cut finer
+            // panels so the virtual-time simulator can redistribute
+            // them over the full 40-thread node model.
+            let target = if cfg.record {
+                (workers * cfg.chunks_per_worker).max(40)
+            } else {
+                workers * cfg.chunks_per_worker
+            };
+            let chunks: Vec<Chunk> = crate::sparse::nnz_panels(&segp_arc, target, cfg.grain)
+                .into_iter()
+                .map(|(start, len)| Chunk { start, len })
+                .collect();
+            let fpe = tree.flops_per_elem() + 1.0;
+            let bytes = tree.bytes_per_elem() * *nnz as f64 + 16.0 * *rows as f64;
+            let optr = OutPtr(out.as_mut_ptr());
+            let segp_ref: &[i64] = &segp_arc;
+            let body = |c: &Chunk| {
+                let o = unsafe { optr.slice(c.start, c.len) };
+                eval::with_scratch(|scratch| bound.run_rows(segp_ref, c.start, o, scratch));
+            };
+            let times = run_chunked(&chunks, cfg, pool, &body);
+            stats.flops += fpe * *nnz as f64;
+            stats.bytes += bytes;
+            let rec = cfg.record.then(|| StepRecord {
+                kind: step.kind(),
+                elems: *nnz,
+                flops: fpe * *nnz as f64,
+                bytes,
+                chunk_secs: times,
+                parallelizable: chunks.len() > 1,
+            });
+            (out, rec)
+        }
         Step::Cat { a, la, b, lb, .. } => {
             let fa = Tape::from_ftree(a)?;
             let fb = Tape::from_ftree(b)?;
@@ -443,6 +492,50 @@ fn exec_step(
             });
             (out, rec)
         }
+        Step::Scatter { src, idx, .. } => {
+            let s = src
+                .data()
+                .ok_or_else(|| {
+                    crate::Error::Invalid("malformed plan: scatter src not materialised".into())
+                })?
+                .as_f64()
+                .clone();
+            let ix = idx
+                .data()
+                .ok_or_else(|| {
+                    crate::Error::Invalid("malformed plan: scatter idx not materialised".into())
+                })?
+                .as_i64()
+                .clone();
+            if ix.len() != s.len() {
+                return Err(crate::Error::Invalid(
+                    "scatter: index container length does not match source".into(),
+                ));
+            }
+            if let Some(bad) = ix.iter().find(|&&v| v < 0 || v as usize >= out_len) {
+                return Err(crate::Error::Invalid(format!(
+                    "scatter index {bad} out of range (output length {out_len})"
+                )));
+            }
+            // Writes may collide (duplicate indices: last wins), so the
+            // scatter stays serial — it is a materialising permutation,
+            // not a hot loop.
+            let t0 = Instant::now();
+            let mut out = vec![0.0f64; out_len];
+            for (k, &i) in ix.iter().enumerate() {
+                out[i as usize] = s[k];
+            }
+            stats.bytes += 24.0 * s.len() as f64 + 8.0 * out_len as f64;
+            let rec = cfg.record.then(|| StepRecord {
+                kind: step.kind(),
+                elems: out_len,
+                flops: 0.0,
+                bytes: 24.0 * s.len() as f64 + 8.0 * out_len as f64,
+                chunk_secs: vec![t0.elapsed().as_secs_f64()],
+                parallelizable: false,
+            });
+            (out, rec)
+        }
         Step::Map { out } => {
             let op = out.op.borrow();
             let mf = match &*op {
@@ -502,6 +595,35 @@ fn exec_step(
     out_node.materialize(Data::F64(Arc::new(result)));
     if let Some(r) = record {
         stats.records.push(r);
+    }
+    Ok(())
+}
+
+/// Validate a CSR row-pointer array before handing it to the segmented
+/// executor: a malformed `segp` must be a clean [`crate::Error::Invalid`]
+/// (a pool worker survives), never an out-of-bounds panic. Shared with
+/// the serving replay path.
+pub(crate) fn validate_segp(segp: &[i64], rows: usize, nnz: usize) -> crate::Result<()> {
+    if segp.len() != rows + 1 {
+        return Err(crate::Error::Invalid(format!(
+            "segmented reduce: row-pointer length {} != rows+1 ({})",
+            segp.len(),
+            rows + 1
+        )));
+    }
+    let mut prev = 0i64;
+    for &v in segp {
+        if v < prev {
+            return Err(crate::Error::Invalid(
+                "segmented reduce: row pointers not monotone non-negative".into(),
+            ));
+        }
+        prev = v;
+    }
+    if prev as usize > nnz {
+        return Err(crate::Error::Invalid(format!(
+            "segmented reduce: row pointers end at {prev}, beyond the {nnz}-element operand"
+        )));
     }
     Ok(())
 }

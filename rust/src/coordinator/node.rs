@@ -112,6 +112,9 @@ pub enum Op {
     SetElem { m: NodeRef, i: usize, j: usize, s: NodeRef },
     /// Gather: `out[k] = src[idx[k]]` with `idx` an i64 container.
     Gather { src: NodeRef, idx: NodeRef },
+    /// Scatter: `out[idx[k]] = src[k]` into a zero-initialised vector of
+    /// length `len` (duplicate indices: the last write wins).
+    Scatter { src: NodeRef, idx: NodeRef, len: usize },
 
     /// Reduce along dimension 0 (within each row): `out[m] = red_k in(m,k)`.
     ReduceRows(RedOp, NodeRef),
@@ -119,6 +122,15 @@ pub enum Op {
     ReduceCols(RedOp, NodeRef),
     /// Full reduction to a scalar.
     ReduceAll(RedOp, NodeRef),
+    /// Segmented reduction with CSR row-pointer semantics:
+    /// `out[r] = red over v[segp[r] .. segp[r+1]]` with `segp` an i64
+    /// container of `nrows + 1` monotone offsets (empty segments emit the
+    /// reduction identity). The spmv lowering of §3.2 is
+    /// `segmented_reduce(Sum, vals * gather(x, indx), rowp)`.
+    /// `runs_hint` asks the segmented executor to detect contiguous
+    /// column runs in the fused gather's index table and stream them
+    /// without the per-element gather (the paper's `arbb_spmv2`).
+    SegmentedReduce { red: RedOp, v: NodeRef, segp: NodeRef, runs_hint: bool },
 
     /// ArBB `map()`: an elemental function invoked across all elements of
     /// the output, with random access to captured containers (the spmv
@@ -151,6 +163,8 @@ impl Op {
             Op::ReduceCols(..) => 18,
             Op::ReduceAll(..) => 19,
             Op::Map(_) => 20,
+            Op::SegmentedReduce { .. } => 21,
+            Op::Scatter { .. } => 22,
         }
     }
 
@@ -158,7 +172,11 @@ impl Op {
     pub fn children(&self) -> Vec<NodeRef> {
         match self {
             Op::Source(_) | Op::ConstF64(_) | Op::Iota(_) => vec![],
-            Op::Bin(_, a, b) | Op::Cat(a, b) | Op::Gather { src: a, idx: b } => {
+            Op::Bin(_, a, b)
+            | Op::Cat(a, b)
+            | Op::Gather { src: a, idx: b }
+            | Op::Scatter { src: a, idx: b, .. }
+            | Op::SegmentedReduce { v: a, segp: b, .. } => {
                 vec![a.clone(), b.clone()]
             }
             Op::Un(_, a)
@@ -184,7 +202,11 @@ impl Op {
     fn take_children(self) -> Vec<NodeRef> {
         match self {
             Op::Source(_) | Op::ConstF64(_) | Op::Iota(_) => vec![],
-            Op::Bin(_, a, b) | Op::Cat(a, b) | Op::Gather { src: a, idx: b } => vec![a, b],
+            Op::Bin(_, a, b)
+            | Op::Cat(a, b)
+            | Op::Gather { src: a, idx: b }
+            | Op::Scatter { src: a, idx: b, .. }
+            | Op::SegmentedReduce { v: a, segp: b, .. } => vec![a, b],
             Op::Un(_, a)
             | Op::Row(a, _)
             | Op::Col(a, _)
@@ -371,6 +393,10 @@ pub fn structural_signature(root: &NodeRef) -> u64 {
                 Op::ReduceRows(r, _) | Op::ReduceCols(r, _) | Op::ReduceAll(r, _) => {
                     (*r as u8).hash(&mut hasher)
                 }
+                Op::SegmentedReduce { red, runs_hint, .. } => {
+                    (*red as u8, *runs_hint).hash(&mut hasher)
+                }
+                Op::Scatter { len, .. } => len.hash(&mut hasher),
                 Op::Section { start, len, stride, .. } => (start, len, stride).hash(&mut hasher),
                 Op::ConstF64(c) => c.to_bits().hash(&mut hasher),
                 Op::Row(_, i) | Op::Col(_, i) => i.hash(&mut hasher),

@@ -295,6 +295,18 @@ impl RedOp {
             _ => xs.iter().copied().fold(self.identity(), |a, x| self.fold(a, x)),
         }
     }
+
+    /// Merge one ≤BLOCK chunk of segment values into a running segment
+    /// accumulator: the canonical association contract of the segmented
+    /// reducers. Every segmented executor — the tree-interpreter
+    /// reference, the blocked tape path, the fused gather-mul-sum path
+    /// and the contiguity-run path — must produce chunk values
+    /// bit-identical to [`RedOp::fold_slice`] and merge them through
+    /// this, so a segment's result never depends on which executor ran.
+    #[inline]
+    pub fn fold_segment_chunk(self, acc: f64, chunk: &[f64]) -> f64 {
+        self.fold(acc, self.fold_slice(chunk))
+    }
 }
 
 #[cfg(test)]

@@ -38,6 +38,8 @@ fn key_of(n: &NodeRef, rep: &HashMap<u64, NodeRef>) -> Key {
         Op::RepeatCol { cols, .. } => vec![*cols as u64],
         Op::Repeat { times, .. } => vec![*times as u64],
         Op::ReduceRows(r, _) | Op::ReduceCols(r, _) | Op::ReduceAll(r, _) => vec![*r as u64],
+        Op::SegmentedReduce { red, runs_hint, .. } => vec![*red as u64, *runs_hint as u64],
+        Op::Scatter { len, .. } => vec![*len as u64],
         Op::ReplaceCol { col, .. } => vec![*col as u64],
         Op::ReplaceRow { row, .. } => vec![*row as u64],
         Op::SetElem { i, j, .. } => vec![*i as u64, *j as u64],
@@ -64,7 +66,11 @@ fn rewrite_children(n: &NodeRef, rep: &HashMap<u64, NodeRef>) {
         }
     };
     match &mut *op {
-        Op::Bin(_, a, b) | Op::Cat(a, b) | Op::Gather { src: a, idx: b } => {
+        Op::Bin(_, a, b)
+        | Op::Cat(a, b)
+        | Op::Gather { src: a, idx: b }
+        | Op::Scatter { src: a, idx: b, .. }
+        | Op::SegmentedReduce { v: a, segp: b, .. } => {
             replace(a);
             replace(b);
         }

@@ -42,6 +42,11 @@ pub const MAX_FUSE_OPS: usize = 96;
 pub enum FTree {
     /// Materialised input read through an affine view.
     Leaf { node: NodeRef, view: View },
+    /// Fused gather leaf: element `k` of the kernel's output space reads
+    /// `src[idx[base + k]]`. Produced when a `gather` node is absorbed
+    /// into its consumer's loop instead of materialising (the spmv
+    /// lowering); `src` and `idx` are materialised by then.
+    Gather { src: NodeRef, idx: NodeRef, base: usize },
     /// Scalar constant.
     Const(f64),
     /// Broadcast of a (materialised-by-then) scalar node.
@@ -77,6 +82,9 @@ impl FTree {
                     8.0
                 }
             }
+            // Fused gather: 8 bytes of index plus 8 of (randomly
+            // addressed) data per element.
+            FTree::Gather { .. } => 16.0,
             FTree::ScalarLeaf { .. } | FTree::Const(_) | FTree::Iota => 0.0,
             FTree::Acc => 8.0,
             FTree::Bin(_, a, b) => a.bytes_per_elem() + b.bytes_per_elem(),
@@ -109,6 +117,20 @@ pub enum Step {
     ReduceCols { out: NodeRef, red: RedOp, tree: FTree, rows: usize, cols: usize },
     /// Full reduction to a scalar.
     ReduceAll { out: NodeRef, red: RedOp, tree: FTree, len: usize },
+    /// Segmented reduction over CSR row-pointer segments:
+    /// `out[r] = red over tree(segp[r] .. segp[r+1])` with `tree` fused
+    /// over the flat nnz index space. Executed by the segmented tape
+    /// ([`super::engine::eval::SegTape`]) in parallel over nnz-balanced
+    /// row panels; `runs_hint` enables contiguity-run detection.
+    SegmentedReduce {
+        out: NodeRef,
+        red: RedOp,
+        tree: FTree,
+        segp: NodeRef,
+        rows: usize,
+        nnz: usize,
+        runs_hint: bool,
+    },
     /// Vector concatenation; both halves are fused trees.
     Cat { out: NodeRef, a: FTree, la: usize, b: FTree, lb: usize },
     /// Column replacement (in place when donatable).
@@ -119,6 +141,8 @@ pub enum Step {
     SetElem { out: NodeRef, m: NodeRef, i: usize, j: usize, s: NodeRef },
     /// Gather through an i64 index container.
     Gather { out: NodeRef, src: NodeRef, idx: NodeRef },
+    /// Scatter through an i64 index container (zero-filled output).
+    Scatter { out: NodeRef, src: NodeRef, idx: NodeRef },
     /// ArBB `map()` over the output elements.
     Map { out: NodeRef },
 }
@@ -131,11 +155,13 @@ impl Step {
             | Step::ReduceRows { out, .. }
             | Step::ReduceCols { out, .. }
             | Step::ReduceAll { out, .. }
+            | Step::SegmentedReduce { out, .. }
             | Step::Cat { out, .. }
             | Step::ReplaceCol { out, .. }
             | Step::ReplaceRow { out, .. }
             | Step::SetElem { out, .. }
             | Step::Gather { out, .. }
+            | Step::Scatter { out, .. }
             | Step::Map { out } => out,
         }
     }
@@ -147,11 +173,13 @@ impl Step {
             Step::ReduceRows { .. } => "reduce_rows",
             Step::ReduceCols { .. } => "reduce_cols",
             Step::ReduceAll { .. } => "reduce_all",
+            Step::SegmentedReduce { .. } => "segmented_reduce",
             Step::Cat { .. } => "cat",
             Step::ReplaceCol { .. } => "replace_col",
             Step::ReplaceRow { .. } => "replace_row",
             Step::SetElem { .. } => "set_elem",
             Step::Gather { .. } => "gather",
+            Step::Scatter { .. } => "scatter",
             Step::Map { .. } => "map",
         }
     }
@@ -272,6 +300,13 @@ impl Planner {
                 // disabled (the "every operator writes a temporary" mode).
                 !self.opts.fusion || !self.an.is_private_temp(n)
             }
+            Op::Gather { .. } => {
+                // A private gather is absorbed into its consumer's fused
+                // loop (the tape VM's gather loader); `build_tree` falls
+                // back to a materialising Gather step when the consuming
+                // view turns out not to compose.
+                !self.opts.fusion || !self.an.is_private_temp(n)
+            }
             op if op.is_virtual_view() => false, // views recompute for free
             Op::Source(_) | Op::ConstF64(_) => false,
             Op::Iota(_) => false,
@@ -322,6 +357,26 @@ impl Planner {
                 let tree = self.build_tree(&input, kernel_space(&input.shape), &mut 0, false);
                 Some(Step::ReduceAll { out: n.clone(), red, tree, len })
             }
+            Op::SegmentedReduce { red, v, segp, runs_hint } => {
+                let (red, v, segp, runs_hint) = (*red, v.clone(), segp.clone(), *runs_hint);
+                drop(op);
+                self.ensure(&segp);
+                let rows = n.shape.len();
+                let nnz = v.shape.len();
+                // The operand fuses over the flat nnz index space —
+                // element-wise chains and gather leaves are absorbed so
+                // the segmented tape streams them in one pass.
+                let tree = self.build_tree(&v, kernel_space(&v.shape), &mut 0, false);
+                Some(Step::SegmentedReduce {
+                    out: n.clone(),
+                    red,
+                    tree,
+                    segp,
+                    rows,
+                    nnz,
+                    runs_hint,
+                })
+            }
             Op::Cat(a, b) => {
                 let (a, b) = (a.clone(), b.clone());
                 drop(op);
@@ -357,6 +412,13 @@ impl Planner {
                 self.ensure(&src);
                 self.ensure(&idx);
                 Some(Step::Gather { out: n.clone(), src, idx })
+            }
+            Op::Scatter { src, idx, .. } => {
+                let (src, idx) = (src.clone(), idx.clone());
+                drop(op);
+                self.ensure(&src);
+                self.ensure(&idx);
+                Some(Step::Scatter { out: n.clone(), src, idx })
             }
             Op::Map(f) => {
                 let captures = f.captures.clone();
@@ -553,6 +615,29 @@ impl Planner {
                     FTree::Leaf { node: n.clone(), view: v }
                 }
             }
+            // A gather absorbed into its consumer's loop: the tape VM's
+            // monomorphised gather loader reads `src[idx[base + k]]`
+            // directly, so the index traffic happens inside the fused
+            // pass instead of through a materialised temporary. Only
+            // contiguous views compose (the spmv case: the segmented
+            // reduce evaluates its operand over the flat nnz space).
+            Op::Gather { src, idx } => {
+                let fusable = self.opts.fusion
+                    && self.an.is_private_temp(n)
+                    && !self.planned.contains(&n.id)
+                    && v.is_contiguous()
+                    && !force_copy;
+                let (src, idx) = (src.clone(), idx.clone());
+                drop(op);
+                if fusable {
+                    self.ensure(&src);
+                    self.ensure(&idx);
+                    FTree::Gather { src, idx, base: v.base }
+                } else {
+                    self.ensure(n);
+                    FTree::Leaf { node: n.clone(), view: v }
+                }
+            }
             Op::Bin(..) | Op::Un(..) => {
                 let fusable = self.opts.fusion
                     && self.an.is_private_temp(n)
@@ -641,7 +726,8 @@ pub fn plan_fused_ops(p: &Plan) -> usize {
             Step::Fused { tree, .. } | Step::Accumulate { tree, .. } => tree.count_ops(),
             Step::ReduceRows { tree, .. }
             | Step::ReduceCols { tree, .. }
-            | Step::ReduceAll { tree, .. } => tree.count_ops(),
+            | Step::ReduceAll { tree, .. }
+            | Step::SegmentedReduce { tree, .. } => tree.count_ops(),
             Step::Cat { a, b, .. } => a.count_ops() + b.count_ops(),
             _ => 0,
         })

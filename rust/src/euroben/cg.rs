@@ -111,6 +111,24 @@ mod tests {
     }
 
     #[test]
+    fn spmv_variants_agree_bitwise_through_cg() {
+        // V1 (fused gather) and V2 (contiguity runs) are bit-identical
+        // per spmv, so an entire CG solve — every iterate, every scalar
+        // — must match bit-for-bit too.
+        let m = banded_spd(96, 5, 3);
+        let ctx = Context::new();
+        let a = bind_csr(&ctx, &m);
+        let b = rand_b(96, 7);
+        let r1 = arbb_cg(&ctx, &a, &b, 1e-16, 500, SpmvVariant::V1);
+        let r2 = arbb_cg(&ctx, &a, &b, 1e-16, 500, SpmvVariant::V2);
+        assert_eq!(r1.iterations, r2.iterations);
+        assert_eq!(r1.residual2.to_bits(), r2.residual2.to_bits());
+        for i in 0..96 {
+            assert_eq!(r1.x[i].to_bits(), r2.x[i].to_bits(), "x[{i}]");
+        }
+    }
+
+    #[test]
     fn zero_rhs_converges_immediately() {
         let m = banded_spd(32, 3, 1);
         let ctx = Context::new();

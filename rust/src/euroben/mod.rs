@@ -6,8 +6,9 @@
 //! * [`mod2am`] — dense matrix–matrix multiply: `arbb_mxm0`, `arbb_mxm1`,
 //!   `arbb_mxm2a`, `arbb_mxm2b` (§3.1 listings, reproduced operator for
 //!   operator).
-//! * [`mod2as`] — sparse matrix–vector multiply: `arbb_spmv1` (map over
-//!   rows, after Bell & Garland) and `arbb_spmv2` (contiguity-exploiting).
+//! * [`mod2as`] — sparse matrix–vector multiply in first-class ops
+//!   (gather + segmented sum on the tape VM): `arbb_spmv1` (after Bell &
+//!   Garland) and `arbb_spmv2` (contiguity-run-exploiting).
 //! * [`mod2f`] — 1-D complex FFT: the split-stream ArBB port.
 //! * [`cg`] — the conjugate-gradients driver written in DSL syntax
 //!   (§3.4 listing) over either spmv variant.

@@ -1,14 +1,29 @@
 //! `mod2as` — sparse matrix–vector multiplication, §3.2.
 //!
-//! `arbb_spmv1` follows Bell & Garland's scalar-CSR kernel: an elemental
-//! function mapped across output rows, each walking its row segment with
-//! gathers through `indx`. `arbb_spmv2` exploits contiguity: runs of
-//! consecutive columns are precomputed so the inner loop streams
-//! `vals[k++] * invec[col++]` without the index gather.
+//! Both spmv variants are now expressed in **first-class DSL ops** —
+//! `(vals * invec.gather(indx)).segmented_sum(rowp)` — instead of the
+//! opaque `map()` elemental closures the paper's listings transliterate.
+//! The whole stack sees the kernel: the fusion pass absorbs the gather
+//! into the segmented-reduce operand, the tape compiler emits the fused
+//! `GatherMulSegSum` superinstruction, and the engine sweeps nnz-balanced
+//! row panels over the shared worker pool (serial `map()` bodies saw
+//! none of that).
+//!
+//! `arbb_spmv1` follows Bell & Garland's scalar-CSR kernel: per-row
+//! gather-multiply-sum. `arbb_spmv2` exploits contiguity: the segmented
+//! executor scans the index table once for runs of consecutive columns
+//! (detection moved out of `bind_csr` into
+//! [`crate::coordinator::engine::eval::SegTape::detect_runs`], so cached
+//! serving plans pay it once at capture) and streams
+//! `vals[k++] * invec[col++]` without the index gather. Both variants
+//! are bit-identical to each other and to the retained tree-interpreter
+//! reference ([`spmv_seg_reference`]).
 
 use std::sync::Arc;
 
-use crate::coordinator::api::MapCaptures;
+use crate::coordinator::engine::eval::{seg_reduce_rows_ref, with_scratch, FExec};
+use crate::coordinator::ops::{BinOp, RedOp};
+use crate::coordinator::shape::View;
 use crate::coordinator::{Context, Vec1, VecI64};
 use crate::sparse::Csr;
 
@@ -19,115 +34,63 @@ pub struct ArbbCsr {
     pub vals: Vec1,
     pub indx: VecI64,
     pub rowp: VecI64,
-    /// average nnz/row (cost hint for the scaling simulator)
-    pub avg_row_nnz: f64,
-    /// contiguity runs for spmv2: per-run (start k, start col, len),
-    /// flattened, plus per-row run pointers.
-    pub run_ptr: VecI64,
-    pub run_k: VecI64,
-    pub run_col: VecI64,
-    pub run_len: VecI64,
 }
 
 /// Bind a CSR matrix into DSL containers (the paper's lines 1–6 of the
-/// §3.2 listing), including the spmv2 run preprocessing.
+/// §3.2 listing). Run preprocessing for spmv2 no longer happens here:
+/// the segmented executor detects contiguity runs itself, so binding is
+/// a plain copy of the three CSR arrays.
 pub fn bind_csr(ctx: &Context, m: &Csr) -> ArbbCsr {
-    // run detection
-    let mut run_ptr = Vec::with_capacity(m.nrows + 1);
-    let mut run_k = Vec::new();
-    let mut run_col = Vec::new();
-    let mut run_len = Vec::new();
-    run_ptr.push(0i64);
-    for r in 0..m.nrows {
-        let (s, e) = (m.rowp[r] as usize, m.rowp[r + 1] as usize);
-        let mut k = s;
-        while k < e {
-            let col = m.indx[k];
-            let mut len = 1usize;
-            while k + len < e && m.indx[k + len] == col + len as i64 {
-                len += 1;
-            }
-            run_k.push(k as i64);
-            run_col.push(col);
-            run_len.push(len as i64);
-            k += len;
-        }
-        run_ptr.push(run_k.len() as i64);
-    }
     ArbbCsr {
         nrows: m.nrows,
         vals: ctx.bind1(&m.vals),
         indx: ctx.bind_i64(&m.indx),
         rowp: ctx.bind_i64(&m.rowp),
-        avg_row_nnz: m.nnz() as f64 / m.nrows.max(1) as f64,
-        run_ptr: ctx.bind_i64(&run_ptr),
-        run_k: ctx.bind_i64(&run_k),
-        run_col: ctx.bind_i64(&run_col),
-        run_len: ctx.bind_i64(&run_len),
     }
 }
 
-/// `arbb_spmv1` (§3.2 listing): map an elemental row-reduce across
-/// `outvec`, gathering `invec[indx[i]]` per non-zero.
+/// `arbb_spmv1` (§3.2 listing): per-row gather-multiply-sum, written in
+/// first-class ops. The gather fuses into the segmented reduction, which
+/// the tape VM runs as the `GatherMulSegSum` superinstruction over
+/// nnz-balanced row panels.
 pub fn arbb_spmv1(ctx: &Context, a: &ArbbCsr, invec: &Vec1) -> Vec1 {
-    ctx.map(
-        a.nrows,
-        MapCaptures::new().f64(&a.vals).f64(invec).i64(&a.indx).i64(&a.rowp),
-        Arc::new(|args, row| {
-            let vals = args.f(0);
-            let invec = args.f(1);
-            let indx = args.i(0);
-            let rowp = args.i(1);
-            let mut acc = 0.0;
-            for k in rowp[row]..rowp[row + 1] {
-                acc += vals[k as usize] * invec[indx[k as usize] as usize];
-            }
-            acc
-        }),
-        2.0 * a.avg_row_nnz,
-        20.0 * a.avg_row_nnz + 16.0,
-        "arbb_spmv1",
-    )
+    let _ = ctx; // kernels are context-free now; kept for API symmetry
+    let g = invec.gather(&a.indx);
+    (&a.vals * &g).segmented_sum(&a.rowp)
 }
 
 /// `arbb_spmv2`: the contiguity-aware variant — within a run of
 /// consecutive columns the inner loop is `result += values[i++] *
-/// invec[k++]` (paper §3.2), skipping the index gather.
+/// invec[k++]` (paper §3.2), skipping the index gather. Same graph as
+/// `arbb_spmv1` plus the runs hint; bit-identical output.
 pub fn arbb_spmv2(ctx: &Context, a: &ArbbCsr, invec: &Vec1) -> Vec1 {
-    ctx.map(
-        a.nrows,
-        MapCaptures::new()
-            .f64(&a.vals)
-            .f64(invec)
-            .i64(&a.run_ptr)
-            .i64(&a.run_k)
-            .i64(&a.run_col)
-            .i64(&a.run_len),
-        Arc::new(|args, row| {
-            let vals = args.f(0);
-            let invec = args.f(1);
-            let run_ptr = args.i(0);
-            let run_k = args.i(1);
-            let run_col = args.i(2);
-            let run_len = args.i(3);
-            let mut acc = 0.0;
-            for t in run_ptr[row]..run_ptr[row + 1] {
-                let t = t as usize;
-                let mut k = run_k[t] as usize;
-                let mut c = run_col[t] as usize;
-                // contiguous section: stream without the indx gather
-                for _ in 0..run_len[t] {
-                    acc += vals[k] * invec[c];
-                    k += 1;
-                    c += 1;
-                }
-            }
-            acc
+    let _ = ctx;
+    let g = invec.gather(&a.indx);
+    (&a.vals * &g).segmented_sum_runs(&a.rowp)
+}
+
+/// Tree-interpreter reference for the segmented spmv lowering: evaluates
+/// the same `vals * gather(x, indx)` element space through the recursive
+/// tree interpreter and folds rows with the shared segment-association
+/// contract. Every segmented-tape path (fused, runs, blocked) must
+/// reproduce this bit-for-bit — the examples and benches assert it.
+pub fn spmv_seg_reference(m: &Csr, x: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), m.ncols);
+    let nnz = m.nnz();
+    let fx = FExec::Bin(
+        BinOp::Mul,
+        Box::new(FExec::Leaf { data: Arc::new(m.vals.clone()), view: View::identity(nnz) }),
+        Box::new(FExec::Gather {
+            data: Arc::new(x.to_vec()),
+            idx: Arc::new(m.indx.clone()),
+            base: 0,
         }),
-        2.0 * a.avg_row_nnz,
-        16.0 * a.avg_row_nnz + 24.0,
-        "arbb_spmv2",
-    )
+    );
+    let mut out = vec![0.0; m.nrows];
+    with_scratch(|scratch| {
+        seg_reduce_rows_ref(&fx, RedOp::Sum, &m.rowp, 0, &mut out, scratch)
+    });
+    out
 }
 
 #[cfg(test)]
@@ -146,6 +109,14 @@ mod tests {
         let got2 = arbb_spmv2(&ctx, &a, &xv).to_vec();
         assert_allclose(&got1, &want, 1e-12, 1e-14, "spmv1");
         assert_allclose(&got2, &want, 1e-12, 1e-14, "spmv2");
+        // The three executor paths are bit-identical: spmv1 (fused
+        // gather), spmv2 (contiguity runs) and the tree-interpreter
+        // reference.
+        let reference = spmv_seg_reference(m, &x);
+        for r in 0..m.nrows {
+            assert_eq!(got1[r].to_bits(), reference[r].to_bits(), "spmv1 row {r}");
+            assert_eq!(got2[r].to_bits(), reference[r].to_bits(), "spmv2 row {r}");
+        }
     }
 
     #[test]
@@ -173,14 +144,47 @@ mod tests {
     }
 
     #[test]
-    fn run_preprocessing_counts() {
-        // banded rows are one run each (plus edge rows)
-        let m = banded_spd(64, 4, 2);
+    fn trailing_zero_rows_emit_identity() {
+        // Empty leading row, empty trailing rows: run detection and the
+        // segmented fold must emit 0.0, not garbage.
+        let dense = vec![
+            0.0, 0.0, 0.0, 0.0, //
+            1.0, 2.0, 0.0, 0.0, //
+            0.0, 0.0, 0.0, 0.0, //
+            0.0, 0.0, 0.0, 0.0, //
+        ];
+        let m = Csr::from_dense(&dense, 4, 4);
+        check(&m, 13);
         let ctx = Context::new();
         let a = bind_csr(&ctx, &m);
-        let ptr = a.run_ptr.to_vec();
-        // interior rows: a single contiguous run
-        let runs_row_10 = ptr[11] - ptr[10];
-        assert_eq!(runs_row_10, 1);
+        let xv = ctx.bind1(&[1.0, 1.0, 1.0, 1.0]);
+        let y2 = arbb_spmv2(&ctx, &a, &xv).to_vec();
+        assert_eq!(y2, vec![0.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn spmv_parallel_matches_serial_bitwise() {
+        // Rows are independent, so panel-parallel O3 execution must be
+        // bit-identical to O2 at any worker count.
+        let m = random_csr(400, 6.0, 9);
+        let x = m.random_x(21);
+        let serial = {
+            let ctx = Context::serial();
+            let a = bind_csr(&ctx, &m);
+            let xv = ctx.bind1(&x);
+            arbb_spmv1(&ctx, &a, &xv).to_vec()
+        };
+        let par = {
+            let ctx = Context::parallel(4);
+            let mut o = ctx.options();
+            o.grain = 64; // force multiple panels at this size
+            ctx.set_options(o);
+            let a = bind_csr(&ctx, &m);
+            let xv = ctx.bind1(&x);
+            arbb_spmv1(&ctx, &a, &xv).to_vec()
+        };
+        for r in 0..m.nrows {
+            assert_eq!(serial[r].to_bits(), par[r].to_bits(), "row {r}");
+        }
     }
 }

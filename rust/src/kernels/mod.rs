@@ -17,4 +17,4 @@ pub mod spmv;
 
 pub use dgemm::{dgemm, dgemm_accumulate, dgemm_naive, dgemm_pooled, dgemm_with, gemm_flops};
 pub use fft::{fft_planned, plan_for, FftPlan};
-pub use spmv::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt};
+pub use spmv::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt, spmv_pooled};

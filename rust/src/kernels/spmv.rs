@@ -1,17 +1,20 @@
 //! Optimised CSR sparse matrix–vector multiply — the `mkl_dcsrmv`
-//! stand-in, plus the two OpenMP comparator bodies of §3.2.
+//! stand-in (serial and pooled row-panel entry points sharing one body),
+//! plus the two OpenMP comparator bodies of §3.2.
 
-use crate::sparse::Csr;
+use crate::coordinator::engine::pool::SharedPool;
+use crate::sparse::{nnz_panels, Csr};
 
-/// Optimised serial CSR spmv: register accumulator, 4-way unrolled inner
-/// loop over the row's non-zeros (the same structure `mkl_dcsrmv` uses on
-/// one thread — load-balanced row streaming with an unrolled gather-fma).
-pub fn spmv_opt(m: &Csr, x: &[f64], out: &mut [f64]) {
-    assert_eq!(x.len(), m.ncols);
-    assert_eq!(out.len(), m.nrows);
+/// The spmv row body: register accumulator, 4-way unrolled inner loop
+/// over each row's non-zeros (the structure `mkl_dcsrmv` uses — row
+/// streaming with an unrolled gather-fma). Computes rows
+/// `[row0, row0 + out.len())`; both the serial and the pooled entry
+/// points run exactly this, so their results are bit-identical.
+fn spmv_rows(m: &Csr, x: &[f64], out: &mut [f64], row0: usize) {
     let vals = &m.vals;
     let indx = &m.indx;
-    for r in 0..m.nrows {
+    for (j, ov) in out.iter_mut().enumerate() {
+        let r = row0 + j;
         let s = m.rowp[r] as usize;
         let e = m.rowp[r + 1] as usize;
         let mut a0 = 0.0;
@@ -31,8 +34,45 @@ pub fn spmv_opt(m: &Csr, x: &[f64], out: &mut [f64]) {
             acc += vals[k] * x[indx[k] as usize];
             k += 1;
         }
-        out[r] = acc;
+        *ov = acc;
     }
+}
+
+/// Optimised serial CSR spmv (one thread of `mkl_dcsrmv`).
+pub fn spmv_opt(m: &Csr, x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(out.len(), m.nrows);
+    spmv_rows(m, x, out, 0);
+}
+
+/// Wrapper making a raw output pointer shareable across pool workers
+/// writing disjoint row ranges.
+#[derive(Clone, Copy)]
+struct RowsPtr(*mut f64);
+unsafe impl Send for RowsPtr {}
+unsafe impl Sync for RowsPtr {}
+
+/// Pooled CSR spmv: the same row body fanned out over nnz-balanced row
+/// panels on the shared worker pool (equal-row panels would let a few
+/// dense rows serialise the sweep). Bit-identical to [`spmv_opt`] —
+/// rows are independent, so panelling never changes a result.
+pub fn spmv_pooled(m: &Csr, x: &[f64], out: &mut [f64], pool: &SharedPool) {
+    assert_eq!(x.len(), m.ncols);
+    assert_eq!(out.len(), m.nrows);
+    // ~4 panels per worker of load-balancing slack; tiny matrices run
+    // serially (a fork-join barrier costs more than the sweep).
+    let panels = nnz_panels(&m.rowp, pool.size() * 4, 2048);
+    if pool.size() <= 1 || panels.len() <= 1 {
+        return spmv_rows(m, x, out, 0);
+    }
+    let optr = RowsPtr(out.as_mut_ptr());
+    pool.run_chunks(panels.len(), &|i| {
+        let (r0, rl) = panels[i];
+        // SAFETY: panels partition the row space, so workers write
+        // disjoint ranges of `out`.
+        let o = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0), rl) };
+        spmv_rows(m, x, o, r0);
+    });
 }
 
 /// The paper's OMP1 body (§3.2): accumulates directly into `outvec[i]`
@@ -96,6 +136,23 @@ mod tests {
         m.spmv(&x, &mut a);
         spmv_opt(&m, &x, &mut b);
         assert_allclose(&b, &a, 1e-12, 1e-14, "banded");
+    }
+
+    #[test]
+    fn pooled_matches_serial_bitwise() {
+        use crate::coordinator::engine::pool;
+        let p = pool::shared(4);
+        for &(n, fill) in &[(64usize, 10.0f64), (1000, 4.0)] {
+            let m = random_csr(n, fill, 17);
+            let x = m.random_x(5);
+            let mut serial = vec![0.0; n];
+            let mut pooled = vec![0.0; n];
+            spmv_opt(&m, &x, &mut serial);
+            spmv_pooled(&m, &x, &mut pooled, &p);
+            for r in 0..n {
+                assert_eq!(serial[r].to_bits(), pooled[r].to_bits(), "n={n} row {r}");
+            }
+        }
     }
 
     #[test]

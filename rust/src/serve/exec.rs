@@ -35,7 +35,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::engine::eval::{with_scratch, KTree, LeafBind, Scratch, TapeProgram, BLOCK};
+use crate::coordinator::engine::eval::{
+    with_scratch, ILeafBind, Instr, KTree, LeafBind, Scratch, SegTape, TapeProgram, BLOCK,
+};
+use crate::coordinator::engine::validate_segp;
 use crate::coordinator::map::{Elemental, MapArgs};
 use crate::coordinator::node::{Data, NodeRef, Op};
 use crate::coordinator::ops::{BinOp, RedOp, UnOp};
@@ -66,6 +69,9 @@ pub enum CSrc {
 #[derive(Debug, Clone)]
 pub enum CTree {
     Leaf { src: CSrc, view: View },
+    /// Fused gather leaf: element `k` reads `src[idx[base + k]]` with
+    /// `idx` an i64 source rebound per replay like any other leaf.
+    Gather { src: CSrc, idx: CSrc, base: usize },
     /// Broadcast scalar (reads element 0 of the resolved buffer).
     Scalar { src: CSrc },
     Const(f64),
@@ -83,20 +89,53 @@ enum CBind {
     Baked(Arc<Vec<f64>>),
 }
 
+/// Where a gather loader's i64 index table comes from at replay time.
+/// No `Temp`: temp slots are always f64 step outputs.
+#[derive(Debug)]
+enum CIBind {
+    Param(usize),
+    Baked(Arc<Vec<i64>>),
+}
+
 /// A fused tree compiled to a tape template: the instruction stream is
-/// fixed at capture; only the leaf buffers are rebound per replay.
+/// fixed at capture; only the leaf buffers (f64 data and i64 index
+/// tables) are rebound per replay.
 #[derive(Debug)]
 pub struct CKernel {
     prog: TapeProgram,
     binds: Vec<CBind>,
+    ibinds: Vec<CIBind>,
+    /// Gather loaders whose index table is a request parameter, as
+    /// `(src leaf, idx table)` binding pairs: range-checked per replay
+    /// (baked tables are checked once at capture by [`audit_gathers`]).
+    param_gathers: Vec<(u16, u16)>,
 }
 
 impl CKernel {
     fn compile(tree: &CTree) -> Result<CKernel> {
         let mut binds = Vec::new();
-        let kt = ctree_to_ktree(tree, &mut binds)?;
-        Ok(CKernel { prog: TapeProgram::compile(&kt)?, binds })
+        let mut ibinds = Vec::new();
+        let kt = ctree_to_ktree(tree, &mut binds, &mut ibinds)?;
+        Ok(CKernel {
+            prog: TapeProgram::compile(&kt)?,
+            binds,
+            ibinds,
+            param_gathers: Vec::new(),
+        })
     }
+}
+
+/// A fused tree compiled to a segmented-tape template (the sparse spmv
+/// kernel of a cached plan): instruction stream, fused-superinstruction
+/// selection and (for baked index tables) contiguity runs are all fixed
+/// at capture; replays only rebind buffers.
+#[derive(Debug)]
+pub struct CSegKernel {
+    seg: SegTape,
+    binds: Vec<CBind>,
+    ibinds: Vec<CIBind>,
+    /// As [`CKernel::param_gathers`].
+    param_gathers: Vec<(u16, u16)>,
 }
 
 fn bind_src(src: &CSrc, binds: &mut Vec<CBind>) -> Result<u16> {
@@ -112,19 +151,39 @@ fn bind_src(src: &CSrc, binds: &mut Vec<CBind>) -> Result<u16> {
     Ok((binds.len() - 1) as u16)
 }
 
-fn ctree_to_ktree(t: &CTree, binds: &mut Vec<CBind>) -> Result<KTree> {
+fn bind_isrc(src: &CSrc, ibinds: &mut Vec<CIBind>) -> Result<u16> {
+    if ibinds.len() >= u16::MAX as usize {
+        return Err(invalid("compiled plan: too many index tables in fused tree"));
+    }
+    let b = match src {
+        CSrc::Param(i) => CIBind::Param(*i),
+        CSrc::Baked(d) => CIBind::Baked(i64_buf(d)?.clone()),
+        CSrc::Temp(_) => {
+            return Err(invalid("compiled plan: gather index cannot be a step output"))
+        }
+    };
+    ibinds.push(b);
+    Ok((ibinds.len() - 1) as u16)
+}
+
+fn ctree_to_ktree(t: &CTree, binds: &mut Vec<CBind>, ibinds: &mut Vec<CIBind>) -> Result<KTree> {
     Ok(match t {
         CTree::Leaf { src, view } => KTree::Leaf { leaf: bind_src(src, binds)?, view: *view },
+        CTree::Gather { src, idx, base } => KTree::Gather {
+            src: bind_src(src, binds)?,
+            idx: bind_isrc(idx, ibinds)?,
+            base: *base,
+        },
         CTree::Scalar { src } => KTree::Splat { leaf: bind_src(src, binds)?, idx: 0 },
         CTree::Const(c) => KTree::Const(*c),
         CTree::Iota => KTree::Iota,
         CTree::Acc => KTree::Acc,
         CTree::Bin(op, a, b) => KTree::Bin(
             *op,
-            Box::new(ctree_to_ktree(a, binds)?),
-            Box::new(ctree_to_ktree(b, binds)?),
+            Box::new(ctree_to_ktree(a, binds, ibinds)?),
+            Box::new(ctree_to_ktree(b, binds, ibinds)?),
         ),
-        CTree::Un(op, a) => KTree::Un(*op, Box::new(ctree_to_ktree(a, binds)?)),
+        CTree::Un(op, a) => KTree::Un(*op, Box::new(ctree_to_ktree(a, binds, ibinds)?)),
     })
 }
 
@@ -138,11 +197,23 @@ pub enum CStep {
     ReduceRows { out: usize, red: RedOp, kern: CKernel, rows: usize, cols: usize },
     ReduceCols { out: usize, red: RedOp, kern: CKernel, rows: usize, cols: usize },
     ReduceAll { out: usize, red: RedOp, kern: CKernel, len: usize },
+    /// Segmented reduction over CSR row pointers. `segp_checked` records
+    /// that the row pointers were validated at capture (baked tables);
+    /// parameter-supplied pointers are re-validated per replay.
+    SegReduce {
+        out: usize,
+        kern: CSegKernel,
+        segp: CSrc,
+        rows: usize,
+        nnz: usize,
+        segp_checked: bool,
+    },
     Cat { out: usize, a: CKernel, la: usize, b: CKernel, lb: usize },
     ReplaceCol { out: usize, m: CSrc, rows: usize, cols: usize, col: usize, kern: CKernel },
     ReplaceRow { out: usize, m: CSrc, cols: usize, row: usize, kern: CKernel },
     SetElem { out: usize, m: CSrc, cols: usize, i: usize, j: usize, s: CSrc },
     Gather { out: usize, len: usize, src: CSrc, idx: CSrc },
+    Scatter { out: usize, len: usize, src: CSrc, idx: CSrc },
     Map { out: usize, len: usize, f: Arc<Elemental>, captures: Vec<CSrc> },
 }
 
@@ -154,12 +225,14 @@ pub enum CStep {
 struct ReplayArena {
     slots: Vec<Vec<f64>>,
     leafbuf: Vec<LeafBind>,
+    ileafbuf: Vec<ILeafBind>,
     tmp: Vec<f64>,
 }
 
-// SAFETY: `leafbuf` holds transient pointers that are only dereferenced
-// inside the `run_step` that wrote them; it is cleared before the arena
-// returns to the stash, so nothing dangling crosses threads.
+// SAFETY: `leafbuf`/`ileafbuf` hold transient pointers that are only
+// dereferenced inside the `run_step` that wrote them; they are cleared
+// before the arena returns to the stash, so nothing dangling crosses
+// threads.
 unsafe impl Send for ReplayArena {}
 
 impl ReplayArena {
@@ -291,6 +364,11 @@ impl Compiler {
     fn tree(&self, t: &FTree) -> Result<CTree> {
         Ok(match t {
             FTree::Leaf { node, view } => CTree::Leaf { src: self.classify(node)?, view: *view },
+            FTree::Gather { src, idx, base } => CTree::Gather {
+                src: self.classify(src)?,
+                idx: self.classify(idx)?,
+                base: *base,
+            },
             FTree::ScalarLeaf { node } => CTree::Scalar { src: self.classify(node)? },
             FTree::Const(c) => CTree::Const(*c),
             FTree::Iota => CTree::Iota,
@@ -313,6 +391,8 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
         param_ix: params.iter().enumerate().map(|(i, p)| (p.id, i)).collect(),
         temp_ix: HashMap::new(),
     };
+    let param_specs: Vec<ParamSpec> =
+        params.iter().map(|p| ParamSpec { dtype: p.dtype, shape: p.shape }).collect();
     let mut steps = Vec::with_capacity(plan.steps.len());
     let mut slot_lens = Vec::with_capacity(plan.steps.len());
     for step in &plan.steps {
@@ -348,6 +428,39 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
             },
             Step::ReduceAll { red, tree, len, .. } => {
                 CStep::ReduceAll { out: slot, red: *red, kern: c.kern(tree)?, len: *len }
+            }
+            Step::SegmentedReduce { red, tree, segp, rows, nnz, runs_hint, .. } => {
+                let ctree = c.tree(tree)?;
+                let mut binds = Vec::new();
+                let mut ibinds = Vec::new();
+                let kt = ctree_to_ktree(&ctree, &mut binds, &mut ibinds)?;
+                let mut seg = SegTape::compile(&kt, *red)?;
+                let segsrc = c.classify(segp)?;
+                // Validate baked row pointers once at capture; runs can
+                // only be detected when both the index table and the
+                // row pointers are capture-time constants.
+                let mut segp_checked = false;
+                if let CSrc::Baked(sd) = &segsrc {
+                    let sp = i64_buf(sd)?;
+                    validate_segp(sp, *rows, *nnz)?;
+                    segp_checked = true;
+                    if *runs_hint {
+                        if let Some(fi) = seg.fused_idx() {
+                            if let CIBind::Baked(ix) = &ibinds[fi as usize] {
+                                let ix = ix.clone();
+                                seg.detect_runs(&ix, sp);
+                            }
+                        }
+                    }
+                }
+                CStep::SegReduce {
+                    out: slot,
+                    kern: CSegKernel { seg, binds, ibinds, param_gathers: Vec::new() },
+                    segp: segsrc,
+                    rows: *rows,
+                    nnz: *nnz,
+                    segp_checked,
+                }
             }
             Step::Cat { a, la, b, lb, .. } => CStep::Cat {
                 out: slot,
@@ -385,6 +498,12 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
                 src: c.classify(src)?,
                 idx: c.classify(idx)?,
             },
+            Step::Scatter { src, idx, .. } => CStep::Scatter {
+                out: slot,
+                len: out_len,
+                src: c.classify(src)?,
+                idx: c.classify(idx)?,
+            },
             Step::Map { out } => {
                 let op = out.op.borrow();
                 let mf = match &*op {
@@ -396,14 +515,18 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
                 CStep::Map { out: slot, len: out_len, f: mf.f.clone(), captures }
             }
         };
+        let mut cstep = cstep;
         validate_step_reads(&cstep, slot)?;
+        // Range-check baked gather index tables now; record
+        // request-bound ones for the per-replay check.
+        audit_step_gathers(&mut cstep, &param_specs, &slot_lens)?;
         c.temp_ix.insert(out_node.id, slot);
         steps.push(cstep);
         slot_lens.push(out_len);
     }
     let root_src = c.classify(root)?;
     Ok(CompiledPlan {
-        params: params.iter().map(|p| ParamSpec { dtype: p.dtype, shape: p.shape }).collect(),
+        params: param_specs,
         n_temps: c.temp_ix.len(),
         slot_lens,
         steps,
@@ -414,6 +537,93 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
         replays: AtomicU64::new(0),
         arenas_created: AtomicU64::new(0),
     })
+}
+
+/// Audit a compiled tape's gather loaders. Every source length is fixed
+/// at capture (parameters by [`ParamSpec`], temps by slot length, baked
+/// buffers by themselves), so **baked** index tables are range-checked
+/// once here — an out-of-range index is a clean capture error, never a
+/// panic in a replay worker. Tables bound to request parameters cannot
+/// be checked yet; they are returned as `(src, idx)` binding pairs for
+/// the per-replay check in [`bind_buffers`]. The whole table is
+/// checked, not just the evaluated range: a gather index container is
+/// defined to address its source everywhere (CSR semantics).
+fn audit_gathers(
+    prog: &TapeProgram,
+    binds: &[CBind],
+    ibinds: &[CIBind],
+    params: &[ParamSpec],
+    slot_lens: &[usize],
+) -> Result<Vec<(u16, u16)>> {
+    let mut dynamic = Vec::new();
+    for ins in prog.instrs() {
+        if let Instr::LoadGather { leaf, idx, .. } = ins {
+            let src_len = match binds
+                .get(*leaf as usize)
+                .ok_or_else(|| invalid("compiled plan: gather leaf binding out of range"))?
+            {
+                CBind::Param(i) => params
+                    .get(*i)
+                    .ok_or_else(|| invalid("compiled plan: parameter index out of range"))?
+                    .shape
+                    .len(),
+                CBind::Temp(i) => *slot_lens
+                    .get(*i)
+                    .ok_or_else(|| invalid("malformed plan: temp slot index out of range"))?,
+                CBind::Baked(a) => a.len(),
+            };
+            match ibinds
+                .get(*idx as usize)
+                .ok_or_else(|| invalid("compiled plan: gather index table out of range"))?
+            {
+                CIBind::Baked(ix) => {
+                    if ix.iter().any(|&v| v < 0 || v as usize >= src_len) {
+                        return Err(invalid(format!(
+                            "gather index out of range in capture-time index table \
+                             (source length {src_len})"
+                        )));
+                    }
+                }
+                CIBind::Param(_) => dynamic.push((*leaf, *idx)),
+            }
+        }
+    }
+    Ok(dynamic)
+}
+
+/// Run [`audit_gathers`] over every tape of a freshly compiled step,
+/// recording the request-bound tables for per-replay checking.
+fn audit_step_gathers(
+    step: &mut CStep,
+    params: &[ParamSpec],
+    slot_lens: &[usize],
+) -> Result<()> {
+    let mut kern = |k: &mut CKernel| -> Result<()> {
+        k.param_gathers = audit_gathers(&k.prog, &k.binds, &k.ibinds, params, slot_lens)?;
+        Ok(())
+    };
+    match step {
+        CStep::Fused { kern: k, .. }
+        | CStep::Accumulate { kern: k, .. }
+        | CStep::ReduceRows { kern: k, .. }
+        | CStep::ReduceCols { kern: k, .. }
+        | CStep::ReduceAll { kern: k, .. }
+        | CStep::ReplaceCol { kern: k, .. }
+        | CStep::ReplaceRow { kern: k, .. } => kern(k),
+        CStep::SegReduce { kern: k, .. } => {
+            k.param_gathers =
+                audit_gathers(k.seg.program(), &k.binds, &k.ibinds, params, slot_lens)?;
+            Ok(())
+        }
+        CStep::Cat { a, b, .. } => {
+            kern(a)?;
+            kern(b)
+        }
+        CStep::SetElem { .. }
+        | CStep::Gather { .. }
+        | CStep::Scatter { .. }
+        | CStep::Map { .. } => Ok(()),
+    }
 }
 
 /// A step may only read parameters, baked constants, and slots written
@@ -428,24 +638,30 @@ fn validate_step_reads(step: &CStep, slot: usize) -> Result<()> {
         CSrc::Temp(i) if *i >= slot => Err(bad()),
         _ => Ok(()),
     };
-    let check_kern = |k: &CKernel| {
-        k.binds.iter().try_for_each(|b| match b {
+    let check_binds = |binds: &[CBind]| {
+        binds.iter().try_for_each(|b| match b {
             CBind::Temp(i) if *i >= slot => Err(bad()),
             _ => Ok(()),
         })
     };
+    let check_kern = |k: &CKernel| check_binds(&k.binds);
     match step {
         CStep::Fused { kern, .. } => check_kern(kern),
         CStep::Accumulate { base, kern, .. } => check_src(base).and_then(|_| check_kern(kern)),
         CStep::ReduceRows { kern, .. }
         | CStep::ReduceCols { kern, .. }
         | CStep::ReduceAll { kern, .. } => check_kern(kern),
+        CStep::SegReduce { kern, segp, .. } => {
+            check_binds(&kern.binds).and_then(|_| check_src(segp))
+        }
         CStep::Cat { a, b, .. } => check_kern(a).and_then(|_| check_kern(b)),
         CStep::ReplaceCol { m, kern, .. } | CStep::ReplaceRow { m, kern, .. } => {
             check_src(m).and_then(|_| check_kern(kern))
         }
         CStep::SetElem { m, s, .. } => check_src(m).and_then(|_| check_src(s)),
-        CStep::Gather { src, idx, .. } => check_src(src).and_then(|_| check_src(idx)),
+        CStep::Gather { src, idx, .. } | CStep::Scatter { src, idx, .. } => {
+            check_src(src).and_then(|_| check_src(idx))
+        }
         CStep::Map { captures, .. } => captures.iter().try_for_each(check_src),
     }
 }
@@ -539,20 +755,27 @@ pub fn execute_into(cp: &CompiledPlan, args: &[Data], out: &mut Vec<f64>) -> Res
         Ok(())
     });
     arena.leafbuf.clear();
+    arena.ileafbuf.clear();
     cp.arenas.lock().unwrap().push(arena);
     result
 }
 
-/// Resolve a tape template's leaf bindings into the arena's raw binding
-/// buffer (no allocation once the buffer's capacity is warm).
-fn bind_leaves(
-    kern: &CKernel,
+/// Resolve a tape template's leaf and index-table bindings into the
+/// arena's raw binding buffers (no allocation once their capacity is
+/// warm), then range-check any request-supplied gather index tables —
+/// a malformed request must be a clean error, never a panic inside the
+/// unsafe tape loop.
+fn bind_buffers(
+    binds: &[CBind],
+    ibinds: &[CIBind],
+    param_gathers: &[(u16, u16)],
     args: &[Data],
     slots: &[Vec<f64>],
     leafbuf: &mut Vec<LeafBind>,
+    ileafbuf: &mut Vec<ILeafBind>,
 ) -> Result<()> {
     leafbuf.clear();
-    for b in &kern.binds {
+    for b in binds {
         let s: &[f64] = match b {
             CBind::Param(i) => f64_buf(
                 args.get(*i)
@@ -567,7 +790,54 @@ fn bind_leaves(
         };
         leafbuf.push((s.as_ptr(), s.len()));
     }
+    ileafbuf.clear();
+    for b in ibinds {
+        let s: &[i64] = match b {
+            CIBind::Param(i) => i64_buf(
+                args.get(*i)
+                    .ok_or_else(|| invalid("compiled plan: parameter index out of range"))?,
+            )?
+            .as_slice(),
+            CIBind::Baked(a) => a.as_slice(),
+        };
+        ileafbuf.push((s.as_ptr(), s.len()));
+    }
+    for &(src, idx) in param_gathers {
+        let src_len = leafbuf
+            .get(src as usize)
+            .ok_or_else(|| invalid("compiled plan: gather leaf binding out of range"))?
+            .1;
+        let (ip, il) = *ileafbuf
+            .get(idx as usize)
+            .ok_or_else(|| invalid("compiled plan: gather index table out of range"))?;
+        // SAFETY: the binding was just taken from live request data.
+        let ix = unsafe { std::slice::from_raw_parts(ip, il) };
+        if ix.iter().any(|&v| v < 0 || v as usize >= src_len) {
+            return Err(invalid(format!(
+                "gather index out of range in request index table (source length {src_len})"
+            )));
+        }
+    }
     Ok(())
+}
+
+/// [`bind_buffers`] for a dense tape template.
+fn bind_leaves(
+    kern: &CKernel,
+    args: &[Data],
+    slots: &[Vec<f64>],
+    leafbuf: &mut Vec<LeafBind>,
+    ileafbuf: &mut Vec<ILeafBind>,
+) -> Result<()> {
+    bind_buffers(
+        &kern.binds,
+        &kern.ibinds,
+        &kern.param_gathers,
+        args,
+        slots,
+        leafbuf,
+        ileafbuf,
+    )
 }
 
 /// Move a step's output buffer out of the arena (restored by the caller
@@ -586,16 +856,16 @@ fn run_step(
     arena: &mut ReplayArena,
     scratch: &mut Scratch,
 ) -> Result<()> {
-    let ReplayArena { slots, leafbuf, tmp } = arena;
+    let ReplayArena { slots, leafbuf, ileafbuf, tmp } = arena;
     match step {
         CStep::Fused { out, len, kern } => {
             let mut ob = take_slot(slots, *out)?;
             debug_assert_eq!(ob.len(), *len);
-            bind_leaves(kern, args, slots, leafbuf)?;
+            bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             // SAFETY: the bindings point into `args`, earlier slots and
             // baked buffers, all alive across the call; the output slot
             // was moved out of `slots`, so no binding aliases `ob`.
-            unsafe { kern.prog.run_range_raw(leafbuf, 0, &mut ob, scratch) };
+            unsafe { kern.prog.run_range_raw(leafbuf, ileafbuf, 0, &mut ob, scratch) };
             slots[*out] = ob;
             Ok(())
         }
@@ -607,16 +877,16 @@ fn run_step(
                 return Err(invalid("malformed plan: accumulate base length mismatch"));
             }
             ob.copy_from_slice(b);
-            bind_leaves(kern, args, slots, leafbuf)?;
+            bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             // SAFETY: as in `Fused`; the base slice borrow ended above.
-            unsafe { kern.prog.run_range_raw(leafbuf, 0, &mut ob, scratch) };
+            unsafe { kern.prog.run_range_raw(leafbuf, ileafbuf, 0, &mut ob, scratch) };
             slots[*out] = ob;
             Ok(())
         }
         CStep::ReduceRows { out, red, kern, rows, cols } => {
             let mut ob = take_slot(slots, *out)?;
             debug_assert_eq!(ob.len(), *rows);
-            bind_leaves(kern, args, slots, leafbuf)?;
+            bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             let mut buf = scratch.take();
             for (r, ov) in ob.iter_mut().enumerate() {
                 let mut acc = red.identity();
@@ -626,7 +896,8 @@ fn run_step(
                     // SAFETY: as in `Fused`; `buf` is owned scratch,
                     // disjoint from every binding.
                     unsafe {
-                        kern.prog.run_range_raw(leafbuf, r * *cols + off, &mut buf[..l], scratch)
+                        let st = r * *cols + off;
+                        kern.prog.run_range_raw(leafbuf, ileafbuf, st, &mut buf[..l], scratch)
                     };
                     acc = red.fold(acc, red.fold_slice(&buf[..l]));
                     off += l;
@@ -641,7 +912,7 @@ fn run_step(
             let mut ob = take_slot(slots, *out)?;
             debug_assert_eq!(ob.len(), *cols);
             ob.fill(red.identity());
-            bind_leaves(kern, args, slots, leafbuf)?;
+            bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             let mut buf = scratch.take();
             for r in 0..*rows {
                 let mut off = 0;
@@ -649,7 +920,8 @@ fn run_step(
                     let l = BLOCK.min(*cols - off);
                     // SAFETY: as in `ReduceRows`.
                     unsafe {
-                        kern.prog.run_range_raw(leafbuf, r * *cols + off, &mut buf[..l], scratch)
+                        let st = r * *cols + off;
+                        kern.prog.run_range_raw(leafbuf, ileafbuf, st, &mut buf[..l], scratch)
                     };
                     for k in 0..l {
                         ob[off + k] = red.fold(ob[off + k], buf[k]);
@@ -664,14 +936,14 @@ fn run_step(
         CStep::ReduceAll { out, red, kern, len } => {
             let mut ob = take_slot(slots, *out)?;
             debug_assert_eq!(ob.len(), 1);
-            bind_leaves(kern, args, slots, leafbuf)?;
+            bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             let mut buf = scratch.take();
             let mut acc = red.identity();
             let mut off = 0;
             while off < *len {
                 let l = BLOCK.min(*len - off);
                 // SAFETY: as in `ReduceRows`.
-                unsafe { kern.prog.run_range_raw(leafbuf, off, &mut buf[..l], scratch) };
+                unsafe { kern.prog.run_range_raw(leafbuf, ileafbuf, off, &mut buf[..l], scratch) };
                 acc = red.fold(acc, red.fold_slice(&buf[..l]));
                 off += l;
             }
@@ -680,17 +952,45 @@ fn run_step(
             slots[*out] = ob;
             Ok(())
         }
+        CStep::SegReduce { out, kern, segp, rows, nnz, segp_checked } => {
+            let mut ob = take_slot(slots, *out)?;
+            let r = (|| {
+                debug_assert_eq!(ob.len(), *rows);
+                let sp = i64_buf(resolve_data(segp, args)?)?.as_slice();
+                if !segp_checked {
+                    // Request-supplied row pointers: validate per replay
+                    // (baked tables were validated once at capture).
+                    validate_segp(sp, *rows, *nnz)?;
+                }
+                bind_buffers(
+                    &kern.binds,
+                    &kern.ibinds,
+                    &kern.param_gathers,
+                    args,
+                    slots,
+                    leafbuf,
+                    ileafbuf,
+                )?;
+                // SAFETY: as in `Fused` — bindings point into `args`,
+                // earlier slots and baked buffers; the output slot was
+                // moved out of `slots`.
+                unsafe { kern.seg.run_rows_raw(leafbuf, ileafbuf, sp, 0, &mut ob, scratch) };
+                Ok(())
+            })();
+            slots[*out] = ob;
+            r
+        }
         CStep::Cat { out, a, la, b, lb } => {
             let mut ob = take_slot(slots, *out)?;
             debug_assert_eq!(ob.len(), la + lb);
             {
                 let (ha, hb) = ob.split_at_mut(*la);
-                bind_leaves(a, args, slots, leafbuf)?;
+                bind_leaves(a, args, slots, leafbuf, ileafbuf)?;
                 // SAFETY: as in `Fused`.
-                unsafe { a.prog.run_range_raw(leafbuf, 0, ha, scratch) };
-                bind_leaves(b, args, slots, leafbuf)?;
+                unsafe { a.prog.run_range_raw(leafbuf, ileafbuf, 0, ha, scratch) };
+                bind_leaves(b, args, slots, leafbuf, ileafbuf)?;
                 // SAFETY: as in `Fused`.
-                unsafe { b.prog.run_range_raw(leafbuf, 0, hb, scratch) };
+                unsafe { b.prog.run_range_raw(leafbuf, ileafbuf, 0, hb, scratch) };
             }
             slots[*out] = ob;
             Ok(())
@@ -703,11 +1003,11 @@ fn run_step(
                 return Err(invalid("malformed plan: replace_col operand length mismatch"));
             }
             ob.copy_from_slice(mb);
-            bind_leaves(kern, args, slots, leafbuf)?;
+            bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             tmp.clear();
             tmp.resize(*rows, 0.0);
             // SAFETY: as in `Fused`; `tmp` is arena scratch, never bound.
-            unsafe { kern.prog.run_range_raw(leafbuf, 0, &mut tmp[..], scratch) };
+            unsafe { kern.prog.run_range_raw(leafbuf, ileafbuf, 0, &mut tmp[..], scratch) };
             for (r, t) in tmp.iter().enumerate() {
                 ob[r * *cols + *col] = *t;
             }
@@ -722,10 +1022,11 @@ fn run_step(
                 return Err(invalid("malformed plan: replace_row operand length mismatch"));
             }
             ob.copy_from_slice(mb);
-            bind_leaves(kern, args, slots, leafbuf)?;
+            bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             // SAFETY: as in `Fused`.
             unsafe {
-                kern.prog.run_range_raw(leafbuf, 0, &mut ob[row * cols..(row + 1) * cols], scratch)
+                let seg = &mut ob[row * cols..(row + 1) * cols];
+                kern.prog.run_range_raw(leafbuf, ileafbuf, 0, seg, scratch)
             };
             slots[*out] = ob;
             Ok(())
@@ -761,6 +1062,30 @@ fn run_step(
                     *ov = *sd.get(i).ok_or_else(|| {
                         invalid(format!("gather index {} out of range", ix[k]))
                     })?;
+                }
+                Ok(())
+            })();
+            slots[*out] = ob;
+            r
+        }
+        CStep::Scatter { out, len, src, idx } => {
+            let mut ob = take_slot(slots, *out)?;
+            let r = (|| {
+                let sd = resolve_f64(src, args, slots)?;
+                let ix = i64_buf(resolve_data(idx, args)?)?;
+                if ix.len() != sd.len() {
+                    return Err(invalid(
+                        "scatter: index container length does not match source",
+                    ));
+                }
+                ob.fill(0.0);
+                for (k, &i) in ix.iter().enumerate() {
+                    if i < 0 || i as usize >= *len {
+                        return Err(invalid(format!(
+                            "scatter index {i} out of range (output length {len})"
+                        )));
+                    }
+                    ob[i as usize] = sd[k];
                 }
                 Ok(())
             })();

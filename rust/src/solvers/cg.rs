@@ -3,7 +3,9 @@
 //! serial / MKL-analog / DSL spmv implementations exactly like the paper
 //! swaps `arbb_spmv1`/`arbb_spmv2`/`mkl_dcsrmv`.
 
+use crate::coordinator::engine::pool::SharedPool;
 use crate::kernels::blas1::{axpy, dot, xpby};
+use crate::kernels::spmv::spmv_pooled;
 use crate::sparse::Csr;
 
 /// Outcome of a CG solve.
@@ -15,11 +17,17 @@ pub struct CgResult {
     pub converged: bool,
 }
 
-/// Solve `A x = b` with plain CG; `spmv(x, out)` computes `A·x`.
+/// The single CG driver every frontend shares: one residual/alpha/beta
+/// update body, generic over the spmv backend.
 ///
-/// Initialisation follows the paper's listing: `x0 = 0`, `r0 = p0 = b`,
-/// loop while `|r|² > stop` up to `max_iters`.
-pub fn cg_with<F>(n: usize, b: &[f64], stop: f64, max_iters: usize, mut spmv: F) -> CgResult
+/// `stop = Some(s)` is the convergence-tested solve (`while |r|² > s`);
+/// `stop = None` runs exactly `max_iters` iterations — the host
+/// reference for *captured* fixed-iteration solvers (the serving path
+/// and the AOT artifacts keep alpha/beta in kernel space, so they
+/// cannot early-exit on a data-dependent residual). Either way an
+/// exactly-converged system (`r² = 0` or `pᵀAp = 0`, e.g. `b = 0`)
+/// stops early: continuing would produce `alpha = 0/0 = NaN`.
+fn cg_core<F>(n: usize, b: &[f64], stop: Option<f64>, max_iters: usize, mut spmv: F) -> CgResult
 where
     F: FnMut(&[f64], &mut [f64]),
 {
@@ -30,19 +38,38 @@ where
     let mut ap = vec![0.0; n];
     let mut r2 = dot(&r, &r);
     let mut k = 0;
-    while r2 > stop && k < max_iters {
+    while k < max_iters && stop.map_or(true, |s| r2 > s) {
         spmv(&p, &mut ap);
         let pap = dot(&p, &ap);
+        if r2 == 0.0 || pap == 0.0 {
+            break;
+        }
         let alpha = r2 / pap;
-        let r2_old = r2;
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
-        r2 = dot(&r, &r);
-        let beta = r2 / r2_old;
+        let r2n = dot(&r, &r);
+        let beta = r2n / r2;
         xpby(&r, beta, &mut p);
+        r2 = r2n;
         k += 1;
     }
-    CgResult { x, iterations: k, residual2: r2, converged: r2 <= stop }
+    CgResult {
+        x,
+        iterations: k,
+        residual2: r2,
+        converged: stop.map_or(r2 == 0.0, |s| r2 <= s),
+    }
+}
+
+/// Solve `A x = b` with plain CG; `spmv(x, out)` computes `A·x`.
+///
+/// Initialisation follows the paper's listing: `x0 = 0`, `r0 = p0 = b`,
+/// loop while `|r|² > stop` up to `max_iters`.
+pub fn cg_with<F>(n: usize, b: &[f64], stop: f64, max_iters: usize, spmv: F) -> CgResult
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    cg_core(n, b, Some(stop), max_iters, spmv)
 }
 
 /// CG with the reference serial CSR spmv.
@@ -55,35 +82,22 @@ pub fn cg_mkl(a: &Csr, b: &[f64], stop: f64, max_iters: usize) -> CgResult {
     cg_with(a.nrows, b, stop, max_iters, |x, out| crate::kernels::spmv_opt(a, x, out))
 }
 
-/// Exactly `iters` CG iterations with no convergence test — the host
-/// reference for *captured* fixed-iteration solvers (the serving path
-/// and the AOT artifacts keep alpha/beta in kernel space, so they
-/// cannot early-exit on a data-dependent residual).
+/// CG with the pooled row-panel spmv: the matrix sweep fans out over
+/// nnz-balanced panels on the shared worker pool every iteration.
+pub fn cg_pooled(
+    a: &Csr,
+    b: &[f64],
+    stop: f64,
+    max_iters: usize,
+    pool: &SharedPool,
+) -> CgResult {
+    cg_with(a.nrows, b, stop, max_iters, |x, out| spmv_pooled(a, x, out, pool))
+}
+
+/// Exactly `iters` CG iterations with no convergence test (see
+/// [`cg_core`] — this is the captured-solver reference).
 pub fn cg_fixed_iters(a: &Csr, b: &[f64], iters: usize) -> Vec<f64> {
-    let n = a.nrows;
-    assert_eq!(b.len(), n);
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
-    let mut p = b.to_vec();
-    let mut ap = vec![0.0; n];
-    let mut r2 = dot(&r, &r);
-    for _ in 0..iters {
-        a.spmv(&p, &mut ap);
-        let pap = dot(&p, &ap);
-        if r2 == 0.0 || pap == 0.0 {
-            // Exact convergence (e.g. b = 0) before the fixed count:
-            // continuing would produce alpha = 0/0 = NaN.
-            break;
-        }
-        let alpha = r2 / pap;
-        axpy(alpha, &p, &mut x);
-        axpy(-alpha, &ap, &mut r);
-        let r2n = dot(&r, &r);
-        let beta = r2n / r2;
-        xpby(&r, beta, &mut p);
-        r2 = r2n;
-    }
-    x
+    cg_core(a.nrows, b, None, iters, |x, out| a.spmv(x, out)).x
 }
 
 /// Residual `‖A x − b‖₂` (verification helper).

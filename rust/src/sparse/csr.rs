@@ -138,6 +138,36 @@ impl Csr {
     }
 }
 
+/// Partition the rows described by a CSR row-pointer array into
+/// nnz-balanced panels: each panel `(row_start, row_len)` carries at
+/// least `min_nnz` non-zeros (except possibly the last), aiming for
+/// `target_panels` panels overall. Equal-*rows* partitioning is the
+/// classic sparse load-balance trap — a few dense rows serialise the
+/// sweep; balancing on nnz keeps worker finish times level (the
+/// row-partitioning lesson of the many-core SpMM literature).
+pub fn nnz_panels(rowp: &[i64], target_panels: usize, min_nnz: usize) -> Vec<(usize, usize)> {
+    let rows = rowp.len().saturating_sub(1);
+    if rows == 0 {
+        return Vec::new();
+    }
+    let total = (rowp[rows] - rowp[0]).max(0) as usize;
+    let target = target_panels.max(1);
+    let per = ((total + target - 1) / target).max(min_nnz).max(1);
+    let mut panels = Vec::new();
+    let mut start = 0usize;
+    while start < rows {
+        let mut end = start;
+        let mut acc = 0usize;
+        while end < rows && (end == start || acc < per) {
+            acc += (rowp[end + 1] - rowp[end]) as usize;
+            end += 1;
+        }
+        panels.push((start, end - start));
+        start = end;
+    }
+    panels
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +227,28 @@ mod tests {
         let a = vec![1.0, 0.0, 0.0, 1.0];
         let m = Csr::from_dense(&a, 2, 2);
         assert!((m.fill_percent() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nnz_panels_balance_and_cover() {
+        // Rows with wildly uneven nnz: 0, 100, 1, 1, 50, 0, 8.
+        let rowp = vec![0i64, 0, 100, 101, 102, 152, 152, 160];
+        let panels = nnz_panels(&rowp, 4, 1);
+        // Panels cover every row exactly once, in order.
+        let mut r = 0usize;
+        for &(s, l) in &panels {
+            assert_eq!(s, r);
+            assert!(l >= 1);
+            r += l;
+        }
+        assert_eq!(r, 7);
+        // The dense row sits alone-ish: no panel exceeds ~2x the ideal.
+        let per = 160 / 4;
+        for &(s, l) in &panels {
+            let nnz = (rowp[s + l] - rowp[s]) as usize;
+            assert!(nnz <= per + 100, "panel ({s},{l}) carries {nnz}");
+        }
+        assert!(nnz_panels(&[0], 4, 1).is_empty());
+        assert_eq!(nnz_panels(&[0, 0, 0], 4, 1), vec![(0, 2)], "all-empty rows: one panel");
     }
 }

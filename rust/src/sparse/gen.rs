@@ -51,7 +51,12 @@ pub fn random_csr(n: usize, fill_percent: f64, seed: u64) -> Csr {
         }
         rowp.push(vals.len() as i64);
     }
-    Csr { nrows: n, ncols: n, vals, indx, rowp }
+    let m = Csr { nrows: n, ncols: n, vals, indx, rowp };
+    // Generators must emit canonical CSR; a malformed matrix here would
+    // surface as silent wrong answers deep in the segmented executors.
+    #[cfg(debug_assertions)]
+    m.validate().expect("random_csr produced an invalid CSR");
+    m
 }
 
 /// Symmetric positive-definite banded matrix with half-bandwidth `bw`
@@ -102,7 +107,10 @@ pub fn banded_spd(n: usize, bw: usize, seed: u64) -> Csr {
         }
         rowp.push(vals.len() as i64);
     }
-    Csr { nrows: n, ncols: n, vals, indx, rowp }
+    let m = Csr { nrows: n, ncols: n, vals, indx, rowp };
+    #[cfg(debug_assertions)]
+    m.validate().expect("banded_spd produced an invalid CSR");
+    m
 }
 
 #[cfg(test)]

@@ -5,5 +5,5 @@
 pub mod csr;
 pub mod gen;
 
-pub use csr::Csr;
+pub use csr::{nnz_panels, Csr};
 pub use gen::{banded_spd, random_csr};

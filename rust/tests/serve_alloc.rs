@@ -15,7 +15,9 @@ use std::sync::Arc;
 
 use arbb_rs::coordinator::node::Data;
 use arbb_rs::coordinator::{Context, DType, OptLevel, Shape};
+use arbb_rs::euroben::mod2as::{arbb_spmv2, bind_csr};
 use arbb_rs::serve::{cache, exec, KernelFn, PlanKey, Value};
+use arbb_rs::sparse::random_csr;
 use arbb_rs::util::XorShift64;
 
 struct CountingAlloc;
@@ -149,4 +151,54 @@ fn steady_state_reduction_replay_is_allocation_free() {
     );
     assert_eq!(out.len(), 1);
     assert!((out[0] - want).abs() < 1e-9 * want.abs().max(1.0));
+}
+
+#[test]
+fn steady_state_sparse_spmv_replay_is_allocation_free() {
+    // CSR spmv as a cached sparse plan: the matrix structure (vals,
+    // indx, rowp — and the contiguity runs arbb_spmv2 detects from
+    // them) is baked at capture; the input vector is the parameter. A
+    // warm cache-hit replay runs the segmented tape straight out of
+    // the arena: zero heap allocations.
+    let n = 600;
+    let m = random_csr(n, 4.0, 77);
+    let want_m = m.clone();
+    let ctx = Context::new();
+    let builder: Box<KernelFn> = Box::new(move |ctx, vals| {
+        let a = bind_csr(ctx, &m);
+        Value::Vec(arbb_spmv2(ctx, &a, &vals[0].vec1()))
+    });
+    let key = PlanKey {
+        kernel: 3,
+        args: vec![(DType::F64, Shape::D1(n))],
+        opt: OptLevel::O2,
+    };
+    let cp = cache::capture(&ctx, &builder, &key).unwrap();
+
+    let x = want_m.random_x(5);
+    let want = want_m.spmv_alloc(&x);
+    let args = [Data::F64(Arc::new(x))];
+    let mut out = Vec::new();
+    for _ in 0..3 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    for r in 0..n {
+        assert!(
+            (out[r] - want[r]).abs() < 1e-11 * want[r].abs().max(1.0),
+            "row {r}: {} vs {}",
+            out[r],
+            want[r]
+        );
+    }
+    let before = allocs();
+    for _ in 0..10 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "steady-state cache-hit sparse replay must not touch the heap allocator"
+    );
+    let st = cp.arena_stats();
+    assert_eq!(st.arenas_created, 1, "sparse replays must recycle one arena");
 }

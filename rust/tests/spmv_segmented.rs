@@ -1,0 +1,174 @@
+//! Property tests for the segmented-tape spmv lowering (§3.2): the
+//! first-class `(vals * gather(x, indx)).segmented_sum(rowp)` pipeline
+//! against the host `Csr::spmv` reference on randomized matrices —
+//! varying fill fractions, banded structure, empty rows, trailing
+//! all-zero rows and single-run (fully contiguous) rows — plus
+//! bit-exactness across every executor path (fused gather, contiguity
+//! runs, tree-interpreter reference, serial vs pooled panels).
+//!
+//! (Offline crate set has no proptest; deterministic XorShift-driven
+//! generation, shrink-free but wide — same approach as `proptests.rs`.)
+
+use arbb_rs::coordinator::Context;
+use arbb_rs::euroben::mod2as::{arbb_spmv1, arbb_spmv2, bind_csr, spmv_seg_reference};
+use arbb_rs::kernels::{spmv_opt, spmv_pooled};
+use arbb_rs::sparse::{banded_spd, random_csr, Csr};
+use arbb_rs::util::{assert_allclose, XorShift64};
+
+/// Random CSR with structured pathologies mixed in: empty rows, dense
+/// (single-run) rows, short runs, and an all-zero tail.
+fn adversarial_csr(rng: &mut XorShift64, nrows: usize, ncols: usize) -> Csr {
+    let mut vals = Vec::new();
+    let mut indx = Vec::new();
+    let mut rowp = vec![0i64];
+    let zero_tail = rng.below(3); // 0..=2 trailing all-zero rows
+    for r in 0..nrows {
+        let kind = if r + zero_tail >= nrows { 0 } else { rng.below(5) };
+        match kind {
+            0 => {} // empty row
+            1 => {
+                // dense row: one maximal run (spmv2's best case)
+                for c in 0..ncols {
+                    vals.push(rng.range_f64(-1.0, 1.0));
+                    indx.push(c as i64);
+                }
+            }
+            2 => {
+                // one contiguous band of random width/offset
+                let w = 1 + rng.below(ncols.min(17));
+                let s = rng.below(ncols - w + 1);
+                for c in s..s + w {
+                    vals.push(rng.range_f64(-1.0, 1.0));
+                    indx.push(c as i64);
+                }
+            }
+            _ => {
+                // scattered columns, sorted, distinct
+                let k = 1 + rng.below(ncols.min(12));
+                let mut cols: Vec<i64> = Vec::with_capacity(k);
+                while cols.len() < k {
+                    let c = rng.below(ncols) as i64;
+                    if !cols.contains(&c) {
+                        cols.push(c);
+                    }
+                }
+                cols.sort_unstable();
+                for c in cols {
+                    vals.push(rng.range_f64(-1.0, 1.0));
+                    indx.push(c);
+                }
+            }
+        }
+        rowp.push(vals.len() as i64);
+    }
+    let m = Csr { nrows, ncols, vals, indx, rowp };
+    m.validate().expect("generator invariant");
+    m
+}
+
+fn check_all_paths(m: &Csr, seed: u64) {
+    let x = m.random_x(seed);
+    let want = m.spmv_alloc(&x);
+
+    // Host kernels.
+    let mut opt = vec![0.0; m.nrows];
+    spmv_opt(m, &x, &mut opt);
+    assert_allclose(&opt, &want, 1e-12, 1e-14, "spmv_opt");
+    let pool = arbb_rs::coordinator::engine::pool::shared(3);
+    let mut pooled = vec![0.0; m.nrows];
+    spmv_pooled(m, &x, &mut pooled, &pool);
+    for r in 0..m.nrows {
+        assert_eq!(opt[r].to_bits(), pooled[r].to_bits(), "pooled row {r}");
+    }
+
+    // DSL paths vs the tree-interpreter reference: bit-identical.
+    let reference = spmv_seg_reference(m, &x);
+    assert_allclose(&reference, &want, 1e-12, 1e-14, "seg reference");
+    let ctx = Context::new();
+    let a = bind_csr(&ctx, m);
+    let xv = ctx.bind1(&x);
+    let g1 = arbb_spmv1(&ctx, &a, &xv).to_vec();
+    let g2 = arbb_spmv2(&ctx, &a, &xv).to_vec();
+    for r in 0..m.nrows {
+        assert_eq!(g1[r].to_bits(), reference[r].to_bits(), "spmv1 row {r}");
+        assert_eq!(g2[r].to_bits(), reference[r].to_bits(), "spmv2 row {r}");
+    }
+
+    // Parallel panels never change a row.
+    let pctx = Context::parallel(4);
+    let mut o = pctx.options();
+    o.grain = 32;
+    pctx.set_options(o);
+    let pa = bind_csr(&pctx, m);
+    let px = pctx.bind1(&x);
+    let gp = arbb_spmv1(&pctx, &pa, &px).to_vec();
+    for r in 0..m.nrows {
+        assert_eq!(gp[r].to_bits(), reference[r].to_bits(), "parallel row {r}");
+    }
+}
+
+#[test]
+fn random_fill_sweep() {
+    for &(n, fill) in &[(40usize, 2.0f64), (120, 6.0), (300, 12.0), (64, 45.0)] {
+        check_all_paths(&random_csr(n, fill, n as u64 + 1), 3);
+    }
+}
+
+#[test]
+fn banded_matrices() {
+    for &(n, bw) in &[(64usize, 1usize), (200, 9), (128, 33)] {
+        check_all_paths(&banded_spd(n, bw, 5), 7);
+    }
+}
+
+#[test]
+fn adversarial_structures() {
+    let mut rng = XorShift64::new(0xC5A);
+    for round in 0..12 {
+        let nrows = 8 + rng.below(120);
+        let ncols = 8 + rng.below(120);
+        let m = adversarial_csr(&mut rng, nrows, ncols);
+        check_all_paths(&m, 100 + round);
+    }
+}
+
+#[test]
+fn all_zero_matrix() {
+    // nnz = 0: every row folds to the sum identity through every path.
+    let m = Csr { nrows: 9, ncols: 5, vals: vec![], indx: vec![], rowp: vec![0; 10] };
+    m.validate().unwrap();
+    check_all_paths(&m, 1);
+    let ctx = Context::new();
+    let a = bind_csr(&ctx, &m);
+    let xv = ctx.bind1(&[1.0; 5]);
+    assert_eq!(arbb_spmv2(&ctx, &a, &xv).to_vec(), vec![0.0; 9]);
+}
+
+#[test]
+fn row_longer_than_one_block() {
+    // A row with nnz > BLOCK (2048) drives the intra-segment chunk
+    // carry of all three segmented executor paths (fused 4-lane
+    // accumulator merge, run split at the chunk edge, blocked fold).
+    let ncols = 3000usize;
+    let mut dense = vec![0.0; 4 * ncols];
+    for c in 0..ncols {
+        dense[ncols + c] = ((c % 17) as f64) - 8.0; // row 1: fully dense
+        if c % 3 == 0 {
+            dense[3 * ncols + c] = (c as f64).sin(); // row 3: strided
+        }
+    }
+    let m = Csr::from_dense(&dense, 4, ncols);
+    assert!((m.rowp[2] - m.rowp[1]) as usize > 2048);
+    check_all_paths(&m, 31);
+}
+
+#[test]
+fn single_run_contiguity() {
+    // Fully dense rows: arbb_spmv2's run table collapses to one run per
+    // row and must still match spmv1 bit-for-bit.
+    let n = 48;
+    let dense: Vec<f64> = (0..n * n).map(|k| ((k % 11) as f64) - 5.0).collect();
+    let m = Csr::from_dense(&dense, n, n);
+    assert!(m.contiguity(2) > 0.99);
+    check_all_paths(&m, 9);
+}
