@@ -7,7 +7,11 @@
 //!     paper's signature result is that performance *drops* with more
 //!     threads except at the largest sizes.
 //!
-//! `cargo bench --bench fig5_fft -- [--figure a|b|all] [--full]`
+//! `cargo bench --bench fig5_fft -- [--figure a|b|all] [--full | --smoke]`
+//!
+//! `--smoke` runs a short captured-program vs per-stage-eager vs
+//! fftlib-radix-4 comparison and writes `BENCH_fft.json` for the CI
+//! bench-smoke job (companion to `BENCH_eval.json`/`BENCH_spmv.json`).
 
 use arbb_rs::bench::{calibrate, mflops, render_table, time_best, workloads, Series};
 use arbb_rs::coordinator::{Context, CplxV, Options};
@@ -16,10 +20,11 @@ use arbb_rs::fftlib::{fft_flops, radix2, radix4, splitstream};
 use arbb_rs::kernels::fft_planned;
 use arbb_rs::util::XorShift64;
 
-fn parse_args() -> (String, bool) {
+fn parse_args() -> (String, bool, bool) {
     let argv: Vec<String> = std::env::args().collect();
     let mut figure = "all".to_string();
     let mut full = false;
+    let mut smoke = false;
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
@@ -28,11 +33,83 @@ fn parse_args() -> (String, bool) {
                 i += 1;
             }
             "--full" => full = true,
+            "--smoke" => smoke = true,
             _ => {}
         }
         i += 1;
     }
-    (figure, full)
+    (figure, full, smoke)
+}
+
+/// CI smoke mode: whole-kernel captured program vs the per-stage eager
+/// DSL (the cat-elimination measurement) vs the native radix-4
+/// comparator, on one mid-size transform; emits `BENCH_fft.json` so the
+/// FFT-path perf trajectory is tracked across PRs.
+fn smoke_run() {
+    let n = 1usize << 12;
+    let (re, im) = rand_sig(n, 42);
+    let fl = fft_flops(n);
+    let bench_t = 0.1;
+
+    // Correctness gate: captured program bit-identical to the eager
+    // stage loop before any timing.
+    let ctx = Context::serial();
+    let plan = mod2f::plan(&ctx, n);
+    let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+    let eager = mod2f::arbb_fft(&plan, &data);
+    let (ere, eim) = (eager.re.to_vec(), eager.im.to_vec());
+    let fp = mod2f::capture_fft(n);
+    let (cre, cim) = fp.run(&re, &im);
+    for k in 0..n {
+        assert!(
+            cre[k].to_bits() == ere[k].to_bits() && cim[k].to_bits() == eim[k].to_bits(),
+            "captured FFT diverges from the eager stage loop at {k}"
+        );
+    }
+
+    let t_eager = time_best(
+        || {
+            let o = mod2f::arbb_fft(&plan, &data);
+            o.re.eval();
+            o.im.eval();
+        },
+        bench_t,
+        2,
+    );
+    let mut out = Vec::new();
+    let t_captured = time_best(|| fp.run_into(&re, &im, &mut out).unwrap(), bench_t, 2);
+    let t_r4 = time_best(|| drop(radix4::fft(&re, &im)), bench_t, 2);
+
+    let st = fp.program().stats();
+    println!("# fig5_fft (smoke) — captured-program FFT perf tracking\n");
+    println!("  n={n} stages={} slots={}", n.trailing_zeros(), fp.program().n_slots());
+    println!("  eager per-stage   {:>10.1} MFlop/s", mflops(fl, t_eager));
+    println!(
+        "  captured program  {:>10.1} MFlop/s  ({:.2}x vs eager; {} replays, {} state)",
+        mflops(fl, t_captured),
+        t_eager / t_captured,
+        st.replays,
+        st.states_created
+    );
+    println!("  fftlib radix-4    {:>10.1} MFlop/s", mflops(fl, t_r4));
+
+    let json = format!(
+        "{{\"bench\":\"fft_captured_vs_eager\",\"n\":{n},\
+         \"eager_mflops\":{:.2},\"captured_mflops\":{:.2},\"captured_speedup\":{:.4},\
+         \"radix4_mflops\":{:.2}}}\n",
+        mflops(fl, t_eager),
+        mflops(fl, t_captured),
+        t_eager / t_captured,
+        mflops(fl, t_r4),
+    );
+    // Anchor to the repository root (cargo runs bench binaries with the
+    // *package* dir as cwd, which is rust/ in this workspace).
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fft.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n  wrote {path}"),
+        Err(e) => println!("\n  could not write {path}: {e}"),
+    }
+    println!("\n# fig5_fft smoke done");
 }
 
 fn rand_sig(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
@@ -41,7 +118,10 @@ fn rand_sig(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
 }
 
 fn main() {
-    let (figure, full) = parse_args();
+    let (figure, full, smoke) = parse_args();
+    if smoke {
+        return smoke_run();
+    }
     let cal = calibrate();
     let model = cal.node_model();
     println!("# Fig 5 — mod2f | calibration: {}", cal.summary());
@@ -75,7 +155,7 @@ fn main() {
             let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
             let t = time_best(
                 || {
-                    let o = mod2f::arbb_fft(&ctx, &plan, &data);
+                    let o = mod2f::arbb_fft(&plan, &data);
                     o.re.eval();
                 },
                 bench_t,
@@ -106,7 +186,7 @@ fn main() {
             let rctx = Context::with_options(Options { record: true, ..Default::default() });
             let plan = mod2f::plan(&rctx, n);
             let data = CplxV { re: rctx.bind1(&re), im: rctx.bind1(&im) };
-            let o = mod2f::arbb_fft(&rctx, &plan, &data);
+            let o = mod2f::arbb_fft(&plan, &data);
             o.re.eval();
             o.im.eval();
             let (recs, forces) = rctx.take_records();

@@ -103,11 +103,11 @@ fn main() {
     let (wre, wim) = arbb_rs::kernels::fft_planned(&re, &im);
     let plan = mod2f::plan(&ctx, fn_);
     let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
-    let out = mod2f::arbb_fft(&ctx, &plan, &data);
+    let out = mod2f::arbb_fft(&plan, &data);
     assert_allclose(&out.re.to_vec(), &wre, 1e-8, 1e-8, "e2e fft dsl");
     let t = time_best(
         || {
-            let o = mod2f::arbb_fft(&ctx, &plan, &data);
+            let o = mod2f::arbb_fft(&plan, &data);
             o.re.eval();
         },
         0.2,

@@ -65,18 +65,41 @@ fn main() {
     let ctx = Context::serial();
     let plan = mod2f::plan(&ctx, n);
     let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
-    let out = mod2f::arbb_fft(&ctx, &plan, &data);
+    let out = mod2f::arbb_fft(&plan, &data);
     assert_allclose(&out.re.to_vec(), &wre, 1e-8, 1e-8, "dsl re");
     assert_allclose(&out.im.to_vec(), &wim, 1e-8, 1e-8, "dsl im");
     let t = time_best(
         || {
-            let out = mod2f::arbb_fft(&ctx, &plan, &data);
+            let out = mod2f::arbb_fft(&plan, &data);
             out.re.eval();
         },
         0.2,
         3,
     );
     println!("  {:<20} {:>10.1} MFlop/s", "arbb split-stream", mflops(flops, t));
+
+    // Whole-kernel capture (arbb::call): the full stage loop captured
+    // once into a Program — double-buffered planes, no cat
+    // materialisation — then replayed per call from a recycled state.
+    let fp = mod2f::capture_fft(n);
+    let (cre, cim) = fp.run(&re, &im);
+    let eref = (out.re.to_vec(), out.im.to_vec());
+    for k in 0..n {
+        assert!(
+            cre[k].to_bits() == eref.0[k].to_bits() && cim[k].to_bits() == eref.1[k].to_bits(),
+            "captured program diverges from the eager stage loop at {k}"
+        );
+    }
+    let mut buf = Vec::new();
+    let t = time_best(|| fp.run_into(&re, &im, &mut buf).unwrap(), 0.2, 3);
+    println!(
+        "  {:<20} {:>10.1} MFlop/s   ({} slots, {} replays / {} state)",
+        "arbb captured call",
+        mflops(flops, t),
+        fp.program().n_slots(),
+        fp.program().stats().replays,
+        fp.program().stats().states_created
+    );
 
     println!("\nmod2f OK — see `cargo bench --bench fig5_fft` for the full figure");
 }

@@ -14,14 +14,22 @@
 //! | `cat(a, b)`                       | `a.cat(&b)`                   |
 //! | `replace_col(c, i, v)`            | `c.replace_col(i, &v)`        |
 //! | `map(f)(out, ...)`                | `ctx.map(...)`                |
-//! | `_for` / `_while`                 | rust `for` / `while` + `Scal::value()` |
+//! | `_for` / `_while` (eager)         | rust `for` / `while` + `Scal::value()` |
+//! | `arbb::call(closure)`             | [`super::program::ProgramBuilder`] → [`super::program::Program`] |
+//! | `_for` (captured, trip at capture)| [`super::program::ProgramBuilder::repeat`] / [`ProgramBuilder::for_each`](super::program::ProgramBuilder::for_each) |
 //!
 //! ArBB's `_for`/`_while` describe *serial* control flow whose body is
-//! captured; in this reproduction plain rust loops play that role — each
-//! iteration extends the pending DAG, and data-dependent conditions
-//! (`_while (r2 > stop)`) force a sync exactly like ArBB's dynamic-data
-//! loops do. The per-iteration dispatch cost that the paper's CG results
-//! expose (§3.4) is therefore reproduced faithfully.
+//! captured. This reproduction offers both cost models. On the eager
+//! path plain rust loops play that role — each iteration extends the
+//! pending DAG, and data-dependent conditions (`_while (r2 > stop)`)
+//! force a sync exactly like ArBB's dynamic-data loops do; the
+//! per-iteration dispatch cost the paper's CG results expose (§3.4) is
+//! reproduced faithfully. The [`super::program`] subsystem is the
+//! `arbb::call()` model: a whole multi-step computation — `_for` loops
+//! with capture-resolved trip counts included — is captured once into a
+//! replayable [`super::program::Program`] with a double-buffered buffer
+//! plan, which is what the paper's capture-once/call-many cost claims
+//! (§4) actually measure.
 
 
 use std::sync::Arc;

@@ -11,6 +11,7 @@
 
 pub mod eval;
 pub mod pool;
+pub mod program;
 pub mod sim;
 
 use std::rc::Rc;

@@ -1,0 +1,666 @@
+//! The program executor: whole-kernel replay of a captured
+//! [`Program`]'s loop nest.
+//!
+//! The capture half lives in [`crate::coordinator::program`]: the
+//! builder records statements, the buffer planner fixes every value to
+//! an arena slot, and each statement's expression is compiled **once**
+//! into a [`TapeProgram`]. This module owns the replay half:
+//!
+//!  * [`Program::invoke_into`] walks the structured step tree — `_for`
+//!    nodes replay their bodies `trip` times — executing each step's
+//!    pre-compiled tape against per-invocation slot buffers.
+//!  * All mutable state (slot buffers, scalar registers, front/back
+//!    flip bits, raw leaf-binding scratch) lives in a `ProgState`
+//!    recycled through a per-program stash, exactly like the serving
+//!    layer's replay arenas: a steady-state invocation performs **zero
+//!    heap allocations** (`rust/tests/serve_alloc.rs`).
+//!  * [`Program::invoke_pooled`] fans each element-wise step's
+//!    capture-time chunk table and the spmv's row range out over a
+//!    [`SharedPool`] — chunks write disjoint ranges, so pooled replay
+//!    is bit-identical to serial replay. Reductions stay serial to
+//!    preserve the host BLAS association (bit-identity with the eager
+//!    drivers matters more than parallel dots).
+//!
+//! Double-buffered carried vectors resolve their front/back slot at
+//! replay time through the state's flip bits (reset per invocation), so
+//! one compiled step stream serves every iteration parity.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::eval::{with_scratch, ILeafBind, LeafBind, TapeProgram};
+use super::pool::SharedPool;
+use crate::coordinator::node::Data;
+use crate::coordinator::ops::BinOp;
+use crate::kernels::blas1;
+use crate::{Error, Result};
+
+/// Element-wise steps larger than this are split into chunks at capture
+/// so pooled replay has work to distribute.
+const EMIT_GRAIN: usize = 8192;
+
+/// Where a compiled step's tape leaf reads from at replay time.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum PBind {
+    /// Invocation parameter (raw binding filled at invoke entry).
+    Param(usize),
+    /// Fixed arena slot (temporaries, unpaired carried vectors).
+    Slot(usize),
+    /// Front buffer of a double-buffered pair (resolved per replay).
+    Front(usize),
+    /// Baked capture-time constant.
+    Baked(usize),
+    /// The scalar register file (splat reads index it).
+    Sregs,
+}
+
+/// A compiled step's write target.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum PDst {
+    Slot(usize),
+    /// Front buffer of a pair (plain overwrite of a paired vector).
+    Front(usize),
+    /// Back buffer of a pair (staged region writes before a flip).
+    Back(usize),
+}
+
+/// A fused element-wise write of a compiled tape into a slot region.
+#[derive(Debug)]
+pub(crate) struct EmitStep {
+    dst: PDst,
+    off: usize,
+    len: usize,
+    prog: TapeProgram,
+    binds: Vec<PBind>,
+    /// Baked i64 table indices for the tape's gather loaders.
+    ibinds: Vec<usize>,
+    /// Region-relative chunk table for pooled replay.
+    chunks: Vec<(usize, usize)>,
+}
+
+impl EmitStep {
+    pub(crate) fn new(
+        dst: PDst,
+        off: usize,
+        len: usize,
+        prog: TapeProgram,
+        binds: Vec<PBind>,
+        ibinds: Vec<usize>,
+    ) -> EmitStep {
+        let mut chunks = Vec::new();
+        let mut s = 0;
+        while s < len {
+            let l = EMIT_GRAIN.min(len - s);
+            chunks.push((s, l));
+            s += l;
+        }
+        EmitStep { dst, off, len, prog, binds, ibinds, chunks }
+    }
+}
+
+/// One compiled program step.
+#[derive(Debug)]
+pub(crate) enum CStep {
+    Emit(EmitStep),
+    /// Flip a double-buffered pair (O(1) — the `cat` replacement).
+    Flip { pair: usize },
+    /// CSR spmv replicating [`crate::sparse::Csr::spmv`] bit-for-bit.
+    Spmv { dst: PDst, vals: usize, indx: usize, rowp: usize, x: PBind, rows: usize },
+    /// Dot product via [`crate::kernels::blas1::dot`] (host-CG
+    /// association).
+    Dot { dst: usize, a: PBind, b: PBind },
+    SBin { op: BinOp, dst: usize, a: Sreg, b: Sreg },
+    SSet { dst: usize, src: usize },
+}
+
+pub(crate) type Sreg = usize;
+
+/// Structured step tree: the compiled `_for` loop IR.
+#[derive(Debug)]
+pub(crate) enum CNode {
+    Step(usize),
+    /// `uniform` loops replay `bodies[0]` `trip` times; staged loops
+    /// hold one body per iteration (`bodies.len() == trip`).
+    For { trip: usize, uniform: bool, bodies: Vec<Vec<CNode>> },
+}
+
+/// Per-invocation mutable state, recycled through the program's stash.
+#[derive(Default)]
+struct ProgState {
+    slots: Vec<Vec<f64>>,
+    sregs: Vec<f64>,
+    flips: Vec<bool>,
+    parambuf: Vec<LeafBind>,
+    leafbuf: Vec<LeafBind>,
+    ileafbuf: Vec<ILeafBind>,
+}
+
+// SAFETY: the raw bindings in `parambuf`/`leafbuf`/`ileafbuf` are only
+// dereferenced inside the invocation that wrote them and are cleared
+// before the state returns to the stash; nothing dangling crosses
+// threads.
+unsafe impl Send for ProgState {}
+
+impl ProgState {
+    fn prepare(&mut self, prog: &Program) {
+        if self.slots.len() != prog.slot_lens.len() {
+            self.slots.resize_with(prog.slot_lens.len(), Vec::new);
+        }
+        for (s, &l) in self.slots.iter_mut().zip(&prog.slot_lens) {
+            if s.len() != l {
+                s.resize(l, 0.0);
+            }
+        }
+        if self.sregs.len() != prog.n_sregs {
+            self.sregs.resize(prog.n_sregs, 0.0);
+        }
+        self.flips.clear();
+        self.flips.resize(prog.pairs.len(), false);
+    }
+}
+
+/// Replay counters of one captured program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgStats {
+    /// Total invocations (whole-kernel replays).
+    pub replays: u64,
+    /// States ever created; plateaus at the peak number of concurrent
+    /// invocations, so `replays >> states_created` in steady state.
+    pub states_created: u64,
+}
+
+/// A captured, compiled, replay-many program: the `arbb::call()`
+/// artifact. Fully owned and `Send + Sync` — any number of threads can
+/// invoke the same program concurrently, each replay drawing its state
+/// from the recycled stash.
+///
+/// Build one with [`crate::coordinator::program::ProgramBuilder`].
+pub struct Program {
+    param_lens: Vec<usize>,
+    baked_f: Vec<Arc<Vec<f64>>>,
+    baked_i: Vec<Arc<Vec<i64>>>,
+    steps: Vec<CStep>,
+    structure: Vec<CNode>,
+    slot_lens: Vec<usize>,
+    pairs: Vec<(usize, usize)>,
+    n_sregs: usize,
+    outputs: Vec<PBind>,
+    out_len: usize,
+    states: Mutex<Vec<ProgState>>,
+    replays: AtomicU64,
+    states_created: AtomicU64,
+}
+
+#[allow(dead_code)]
+fn _assert_send_sync() {
+    fn ok<T: Send + Sync>() {}
+    ok::<Program>();
+}
+
+impl Program {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        param_lens: Vec<usize>,
+        baked_f: Vec<Arc<Vec<f64>>>,
+        baked_i: Vec<Arc<Vec<i64>>>,
+        steps: Vec<CStep>,
+        structure: Vec<CNode>,
+        slot_lens: Vec<usize>,
+        pairs: Vec<(usize, usize)>,
+        n_sregs: usize,
+        outputs: Vec<PBind>,
+        out_len: usize,
+    ) -> Program {
+        Program {
+            param_lens,
+            baked_f,
+            baked_i,
+            steps,
+            structure,
+            slot_lens,
+            pairs,
+            n_sregs,
+            outputs,
+            out_len,
+            states: Mutex::new(Vec::new()),
+            replays: AtomicU64::new(0),
+            states_created: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_lens.len()
+    }
+
+    /// Declared length of parameter `i`.
+    pub fn param_len(&self, i: usize) -> usize {
+        self.param_lens[i]
+    }
+
+    /// Total invocation output length (outputs concatenated).
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Compiled steps (statements; loop bodies count once).
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Arena slots the buffer plan assigned.
+    pub fn n_slots(&self) -> usize {
+        self.slot_lens.len()
+    }
+
+    /// Double-buffered front/back pairs.
+    pub fn n_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Total f64 elements of arena storage per invocation state.
+    pub fn slot_elems(&self) -> usize {
+        self.slot_lens.iter().sum()
+    }
+
+    /// Trip counts of the program's `_for` nodes, in capture order.
+    pub fn loop_trips(&self) -> Vec<usize> {
+        fn collect(nodes: &[CNode], out: &mut Vec<usize>) {
+            for n in nodes {
+                if let CNode::For { trip, bodies, .. } = n {
+                    out.push(*trip);
+                    for b in bodies {
+                        collect(b, out);
+                    }
+                }
+            }
+        }
+        let mut out = Vec::new();
+        collect(&self.structure, &mut out);
+        out
+    }
+
+    pub fn stats(&self) -> ProgStats {
+        ProgStats {
+            replays: self.replays.load(Ordering::Relaxed),
+            states_created: self.states_created.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Invoke against slice arguments, returning a fresh output vector.
+    pub fn invoke(&self, args: &[&[f64]]) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        self.invoke_into(args, &mut out)?;
+        Ok(out)
+    }
+
+    /// Invoke against slice arguments, writing the concatenated outputs
+    /// into `out` (cleared; capacity reused — steady state allocates
+    /// nothing).
+    pub fn invoke_into(&self, args: &[&[f64]], out: &mut Vec<f64>) -> Result<()> {
+        let mut st = self.take_state(args.len())?;
+        for (i, a) in args.iter().enumerate() {
+            if a.len() != self.param_lens[i] {
+                self.put_state(st);
+                return Err(invalid_arg(i, self.param_lens[i], a.len()));
+            }
+            st.parambuf.push((a.as_ptr(), a.len()));
+        }
+        let r = self.run(&mut st, None, out);
+        self.put_state(st);
+        r
+    }
+
+    /// Invoke against request [`Data`] buffers (the serving path; f64
+    /// parameters only).
+    pub fn invoke_data(&self, args: &[Data], out: &mut Vec<f64>) -> Result<()> {
+        let mut st = self.take_state(args.len())?;
+        for (i, a) in args.iter().enumerate() {
+            let v = match a {
+                Data::F64(v) => v,
+                Data::I64(_) => {
+                    self.put_state(st);
+                    return Err(Error::Invalid(format!(
+                        "program argument {i}: i64 parameters are not supported \
+                         (bake index tables at capture)"
+                    )));
+                }
+            };
+            if v.len() != self.param_lens[i] {
+                self.put_state(st);
+                return Err(invalid_arg(i, self.param_lens[i], v.len()));
+            }
+            st.parambuf.push((v.as_ptr(), v.len()));
+        }
+        let r = self.run(&mut st, None, out);
+        self.put_state(st);
+        r
+    }
+
+    /// Invoke with element-wise steps and the spmv row sweep fanned out
+    /// over `pool` (bit-identical to serial replay — chunks write
+    /// disjoint ranges and reductions stay serial).
+    pub fn invoke_pooled(
+        &self,
+        args: &[&[f64]],
+        out: &mut Vec<f64>,
+        pool: &SharedPool,
+    ) -> Result<()> {
+        let mut st = self.take_state(args.len())?;
+        for (i, a) in args.iter().enumerate() {
+            if a.len() != self.param_lens[i] {
+                self.put_state(st);
+                return Err(invalid_arg(i, self.param_lens[i], a.len()));
+            }
+            st.parambuf.push((a.as_ptr(), a.len()));
+        }
+        let r = self.run(&mut st, Some(pool), out);
+        self.put_state(st);
+        r
+    }
+
+    // -- replay internals ---------------------------------------------
+
+    fn take_state(&self, n_args: usize) -> Result<ProgState> {
+        if n_args != self.param_lens.len() {
+            return Err(Error::Invalid(format!(
+                "program expects {} arguments, got {n_args}",
+                self.param_lens.len()
+            )));
+        }
+        let st = match self.states.lock().unwrap().pop() {
+            Some(s) => s,
+            None => {
+                self.states_created.fetch_add(1, Ordering::Relaxed);
+                ProgState::default()
+            }
+        };
+        Ok(st)
+    }
+
+    fn put_state(&self, mut st: ProgState) {
+        st.parambuf.clear();
+        st.leafbuf.clear();
+        st.ileafbuf.clear();
+        self.states.lock().unwrap().push(st);
+    }
+
+    fn run(&self, st: &mut ProgState, pool: Option<&SharedPool>, out: &mut Vec<f64>) -> Result<()> {
+        self.replays.fetch_add(1, Ordering::Relaxed);
+        st.prepare(self);
+        self.exec_nodes(&self.structure, st, pool)?;
+        out.clear();
+        for o in &self.outputs {
+            // SAFETY: parameter bindings point into the caller's argument
+            // slices, alive for this call.
+            let s = unsafe {
+                rd_slice(o, &st.parambuf, &st.slots, &self.baked_f, &self.pairs, &st.flips)?
+            };
+            out.extend_from_slice(s);
+        }
+        Ok(())
+    }
+
+    fn exec_nodes(
+        &self,
+        nodes: &[CNode],
+        st: &mut ProgState,
+        pool: Option<&SharedPool>,
+    ) -> Result<()> {
+        for n in nodes {
+            match n {
+                CNode::Step(i) => self.exec_step(&self.steps[*i], st, pool)?,
+                CNode::For { trip, uniform, bodies } => {
+                    if *uniform {
+                        for _ in 0..*trip {
+                            self.exec_nodes(&bodies[0], st, pool)?;
+                        }
+                    } else {
+                        for b in bodies {
+                            self.exec_nodes(b, st, pool)?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_step(
+        &self,
+        step: &CStep,
+        st: &mut ProgState,
+        pool: Option<&SharedPool>,
+    ) -> Result<()> {
+        let ProgState { slots, sregs, flips, parambuf, leafbuf, ileafbuf } = st;
+        match step {
+            CStep::Emit(e) => {
+                let di = dst_slot(&self.pairs, flips, e.dst);
+                let mut ob = std::mem::take(&mut slots[di]);
+                leafbuf.clear();
+                for b in &e.binds {
+                    let (p, l): (*const f64, usize) = match b {
+                        PBind::Param(i) => parambuf[*i],
+                        PBind::Slot(s) => {
+                            debug_assert_ne!(*s, di, "bind aliases the output slot");
+                            (slots[*s].as_ptr(), slots[*s].len())
+                        }
+                        PBind::Front(p) => {
+                            let s = front_of(&self.pairs, flips, *p);
+                            debug_assert_ne!(s, di, "front bind aliases the output slot");
+                            (slots[s].as_ptr(), slots[s].len())
+                        }
+                        PBind::Baked(i) => {
+                            (self.baked_f[*i].as_ptr(), self.baked_f[*i].len())
+                        }
+                        PBind::Sregs => (sregs.as_ptr(), sregs.len()),
+                    };
+                    leafbuf.push((p, l));
+                }
+                ileafbuf.clear();
+                for &i in &e.ibinds {
+                    ileafbuf.push((self.baked_i[i].as_ptr(), self.baked_i[i].len()));
+                }
+                let out = &mut ob[e.off..e.off + e.len];
+                match pool {
+                    Some(p) if e.chunks.len() > 1 => {
+                        let share = PooledEmit {
+                            prog: &e.prog,
+                            leaf: leafbuf.as_ptr(),
+                            n_leaf: leafbuf.len(),
+                            ileaf: ileafbuf.as_ptr(),
+                            n_ileaf: ileafbuf.len(),
+                            out: out.as_mut_ptr(),
+                        };
+                        p.run_chunks(e.chunks.len(), &|ci| {
+                            let (c0, cl) = e.chunks[ci];
+                            // SAFETY: chunks cover disjoint output
+                            // ranges; bindings outlive the barrier.
+                            unsafe { share.run(c0, cl) };
+                        });
+                    }
+                    _ => {
+                        // SAFETY: the bindings point into parameters,
+                        // other slots, baked buffers and the scalar
+                        // registers — all alive across the call and
+                        // disjoint from the taken output slot (Acc
+                        // reads register 0, which *is* the output).
+                        // The TLS scratch is taken per step, never held
+                        // across the walk — pooled steps re-enter it on
+                        // the participating calling thread.
+                        with_scratch(|scratch| unsafe {
+                            e.prog.run_range_raw(leafbuf, ileafbuf, 0, out, scratch)
+                        });
+                    }
+                }
+                slots[di] = ob;
+            }
+            CStep::Flip { pair } => flips[*pair] = !flips[*pair],
+            CStep::Spmv { dst, vals, indx, rowp, x, rows } => {
+                let di = dst_slot(&self.pairs, flips, *dst);
+                let mut ob = std::mem::take(&mut slots[di]);
+                {
+                    // SAFETY: parameter bindings are alive for this call.
+                    let xs = unsafe {
+                        rd_slice(x, parambuf, slots, &self.baked_f, &self.pairs, flips)?
+                    };
+                    let vals = &self.baked_f[*vals];
+                    let indx = &self.baked_i[*indx];
+                    let rowp = &self.baked_i[*rowp];
+                    let body = |r0: usize, o: &mut [f64]| {
+                        for (j, ov) in o.iter_mut().enumerate() {
+                            let r = r0 + j;
+                            let mut acc = 0.0;
+                            for k in rowp[r]..rowp[r + 1] {
+                                acc += vals[k as usize] * xs[indx[k as usize] as usize];
+                            }
+                            *ov = acc;
+                        }
+                    };
+                    match pool {
+                        Some(p) if *rows >= 2048 => {
+                            let nchunks = (*rows / 512).clamp(1, 64);
+                            let per = (*rows + nchunks - 1) / nchunks;
+                            let share = PooledRows { out: ob.as_mut_ptr(), rows: *rows, per };
+                            let f = &body;
+                            p.run_chunks(nchunks, &|ci| {
+                                let r0 = ci * share.per;
+                                let r1 = (r0 + share.per).min(share.rows);
+                                if r0 < r1 {
+                                    // SAFETY: disjoint row ranges.
+                                    let o = unsafe {
+                                        std::slice::from_raw_parts_mut(
+                                            share.out.add(r0),
+                                            r1 - r0,
+                                        )
+                                    };
+                                    f(r0, o);
+                                }
+                            });
+                        }
+                        _ => body(0, &mut ob[..*rows]),
+                    }
+                }
+                slots[di] = ob;
+            }
+            CStep::Dot { dst, a, b } => {
+                // SAFETY: as above; dot operands are never the scalar
+                // register file, so writing `sregs` below cannot alias.
+                let v = unsafe {
+                    let av = rd_slice(a, parambuf, slots, &self.baked_f, &self.pairs, flips)?;
+                    let bv = rd_slice(b, parambuf, slots, &self.baked_f, &self.pairs, flips)?;
+                    blas1::dot(av, bv)
+                };
+                sregs[*dst] = v;
+            }
+            CStep::SBin { op, dst, a, b } => {
+                sregs[*dst] = sbin_apply(*op, sregs[*a], sregs[*b]);
+            }
+            CStep::SSet { dst, src } => sregs[*dst] = sregs[*src],
+        }
+        Ok(())
+    }
+}
+
+/// Pooled element-wise chunk sharing (raw pointers behind a Sync
+/// wrapper; the pool barrier bounds every dereference).
+struct PooledEmit<'a> {
+    prog: &'a TapeProgram,
+    leaf: *const LeafBind,
+    n_leaf: usize,
+    ileaf: *const ILeafBind,
+    n_ileaf: usize,
+    out: *mut f64,
+}
+
+// SAFETY: chunk bodies write disjoint output ranges and read the shared
+// immutable bindings; `run_chunks` blocks until every chunk completes.
+unsafe impl Sync for PooledEmit<'_> {}
+
+impl PooledEmit<'_> {
+    /// # Safety
+    /// Caller guarantees `(c0, cl)` ranges are disjoint across
+    /// concurrent calls and in range.
+    unsafe fn run(&self, c0: usize, cl: usize) {
+        let leaves = std::slice::from_raw_parts(self.leaf, self.n_leaf);
+        let ileaves = std::slice::from_raw_parts(self.ileaf, self.n_ileaf);
+        let o = std::slice::from_raw_parts_mut(self.out.add(c0), cl);
+        with_scratch(|s| self.prog.run_range_raw(leaves, ileaves, c0, o, s));
+    }
+}
+
+struct PooledRows {
+    out: *mut f64,
+    rows: usize,
+    per: usize,
+}
+
+// SAFETY: as `PooledEmit` — disjoint row ranges under a pool barrier.
+unsafe impl Sync for PooledRows {}
+
+fn dst_slot(pairs: &[(usize, usize)], flips: &[bool], dst: PDst) -> usize {
+    match dst {
+        PDst::Slot(s) => s,
+        PDst::Front(p) => front_of(pairs, flips, p),
+        PDst::Back(p) => back_of(pairs, flips, p),
+    }
+}
+
+fn front_of(pairs: &[(usize, usize)], flips: &[bool], p: usize) -> usize {
+    if flips[p] {
+        pairs[p].1
+    } else {
+        pairs[p].0
+    }
+}
+
+fn back_of(pairs: &[(usize, usize)], flips: &[bool], p: usize) -> usize {
+    if flips[p] {
+        pairs[p].0
+    } else {
+        pairs[p].1
+    }
+}
+
+/// Resolve a read binding to its slice for this replay.
+///
+/// # Safety
+/// `Param` bindings must point into argument slices alive for the
+/// caller's borrow of the returned slice.
+unsafe fn rd_slice<'a>(
+    bind: &PBind,
+    parambuf: &[LeafBind],
+    slots: &'a [Vec<f64>],
+    baked_f: &'a [Arc<Vec<f64>>],
+    pairs: &[(usize, usize)],
+    flips: &[bool],
+) -> Result<&'a [f64]> {
+    Ok(match bind {
+        PBind::Param(i) => {
+            let (p, l) = parambuf[*i];
+            std::slice::from_raw_parts(p, l)
+        }
+        PBind::Slot(s) => &slots[*s],
+        PBind::Front(p) => &slots[front_of(pairs, flips, *p)],
+        PBind::Baked(i) => baked_f[*i].as_slice(),
+        PBind::Sregs => {
+            return Err(Error::Invalid(
+                "program: scalar register file is not vector-readable".into(),
+            ))
+        }
+    })
+}
+
+fn sbin_apply(op: BinOp, a: f64, b: f64) -> f64 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        BinOp::Min => a.min(b),
+        BinOp::Max => a.max(b),
+    }
+}
+
+fn invalid_arg(i: usize, want: usize, got: usize) -> Error {
+    Error::Invalid(format!("program argument {i}: expected length {want}, got {got}"))
+}

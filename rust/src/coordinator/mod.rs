@@ -30,6 +30,7 @@ pub mod node;
 pub mod ops;
 pub mod passes;
 pub mod plan;
+pub mod program;
 pub mod shape;
 
 use std::cell::RefCell;

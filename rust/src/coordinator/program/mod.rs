@@ -1,0 +1,1052 @@
+//! Program capture: `arbb::call()`-style closure capture with a
+//! structured `_for` loop IR and a double-buffered buffer plan.
+//!
+//! The interactive DSL ([`crate::coordinator::api`]) dispatches one fused
+//! graph per forced expression — faithful to the paper's measurements,
+//! but it re-captures, re-plans and re-allocates on every call, and the
+//! FFT's stage loop pays a full `cat(up, down)` materialisation per
+//! stage. ArBB's real execution model is *whole-function* capture: a
+//! closure (including its `_for` loops, §3.3/§3.4) is JIT-compiled once
+//! and invoked many times. This module is that missing layer:
+//!
+//!  * [`ProgramBuilder`] records a multi-step computation — bound
+//!    parameters, loop-carried vectors, baked constants, and a
+//!    structured `_for` construct ([`ProgramBuilder::repeat`] /
+//!    [`ProgramBuilder::for_each`]) whose trip count is resolved at
+//!    capture — into a [`Program`] IR of planned steps.
+//!  * A buffer planner ([`plan`]) assigns loop-carried and intermediate
+//!    vectors to a small set of arena slots. A carried vector whose
+//!    update reads *itself through a view* (the FFT's even/odd
+//!    sections) gets a **front/back slot pair**: the update becomes
+//!    region writes into the back buffer plus an O(1) flip — the
+//!    per-stage `cat(up, down)` materialisation disappears. A carried
+//!    vector whose update reads itself only element-wise (CG's
+//!    `x += alpha*p`) updates **in place** through the tape's
+//!    [`Acc`](PExpr::acc) register.
+//!  * Each step's expression compiles **once at capture** into a
+//!    [`TapeProgram`](super::engine::eval::TapeProgram); the executor
+//!    ([`super::engine::program`]) replays the whole loop nest per
+//!    invocation from a recycled state arena, so a steady-state replay
+//!    performs **zero heap allocations** (asserted by
+//!    `rust/tests/serve_alloc.rs`).
+//!
+//! # Semantics
+//!
+//! A program is a sequence of statements over three value kinds:
+//! **parameters** (rebound per invocation), **carried** vectors
+//! (persistent slots, the `_for` loop state), and **temporaries**
+//! (slot-recycled intermediates). Statements are recorded by running
+//! ordinary rust code once — exactly like ArBB capture runs the C++
+//! closure once — with `_for` bodies bracketed by
+//! [`ProgramBuilder::repeat`] (body captured once, replayed `trip`
+//! times) or [`ProgramBuilder::for_each`] (per-iteration capture for
+//! stage loops whose geometry changes, like mod2f's twiddle sections).
+//!
+//! Double-buffered updates are staged explicitly: [`stage_region`]
+//! writes into the back buffer while reads still see the front;
+//! [`commit`] validates that the staged regions tile the vector exactly
+//! and flips the pair. [`assign`] auto-stages when the expression reads
+//! the destination; [`update`] is the in-place `Acc` form.
+//!
+//! [`stage_region`]: ProgramBuilder::stage_region
+//! [`commit`]: ProgramBuilder::commit
+//! [`assign`]: ProgramBuilder::assign
+//! [`update`]: ProgramBuilder::update
+//!
+//! # Example: a captured axpy-like update loop
+//!
+//! ```
+//! use arbb_rs::coordinator::program::{PExpr, ProgramBuilder};
+//!
+//! let mut pb = ProgramBuilder::new();
+//! let x0 = pb.param(4);
+//! let acc = pb.carried(4);
+//! pb.assign(acc, PExpr::read(x0));
+//! pb.repeat(3, |pb| {
+//!     // acc *= 3  (element-wise: in-place slot reuse via Acc)
+//!     pb.update(acc, PExpr::acc() * PExpr::lit(3.0));
+//! });
+//! let prog = pb.finish().unwrap();
+//! let out = prog.invoke(&[&[1.0, 2.0, 3.0, 4.0]]).unwrap();
+//! assert_eq!(out, vec![27.0, 54.0, 81.0, 108.0]);
+//! ```
+
+pub mod plan;
+
+use std::sync::Arc;
+
+use super::engine::eval::KTree;
+use super::engine::program::{CNode, CStep, EmitStep, PBind, PDst};
+pub use super::engine::program::{ProgStats, Program};
+use super::ops::{BinOp, UnOp};
+use super::shape::View;
+use crate::sparse::Csr;
+
+/// Handle to a program vector value: a parameter, a loop-carried vector
+/// or a temporary. Copyable capture-time token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Vect(pub(crate) usize);
+
+/// Handle to a program scalar register (reduction results, `alpha`/`beta`
+/// of the CG loop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sval(pub(crate) usize);
+
+/// Handle to a baked (capture-time constant) f64 vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BakedVec(pub(crate) usize);
+
+/// Handle to a baked i64 index table (gather indices, CSR structure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BakedInts(pub(crate) usize);
+
+/// A readable operand: a program value or a baked constant.
+#[derive(Debug, Clone, Copy)]
+pub enum Rd {
+    Val(Vect),
+    Baked(BakedVec),
+}
+
+impl From<Vect> for Rd {
+    fn from(v: Vect) -> Rd {
+        Rd::Val(v)
+    }
+}
+
+impl From<BakedVec> for Rd {
+    fn from(b: BakedVec) -> Rd {
+        Rd::Baked(b)
+    }
+}
+
+/// How a leaf reads its source relative to the statement's output index
+/// space (length `L`): composed into an affine [`View`] at capture, with
+/// the same composition rules as the fusion pass.
+#[derive(Debug, Clone, Copy)]
+enum PView {
+    /// Identity: source length must equal `L`.
+    Full,
+    /// `section(src, start, L, stride)` — the FFT's even/odd splits.
+    Section { start: usize, stride: usize },
+    /// `repeat(section(src, 0, period), ·)` — cyclic tile (twiddles).
+    Tile { period: usize },
+}
+
+impl PView {
+    fn to_view(self, out_len: usize) -> View {
+        match self {
+            PView::Full => View::identity(out_len),
+            PView::Section { start, stride } => View {
+                base: start,
+                row_stride: out_len * stride,
+                col_stride: stride,
+                out_cols: out_len,
+                modulo: None,
+            },
+            PView::Tile { period } => View {
+                base: 0,
+                row_stride: out_len,
+                col_stride: 1,
+                out_cols: out_len,
+                modulo: Some(period),
+            },
+        }
+    }
+
+    /// Largest source index this view can touch for an `out_len` space.
+    fn max_src_index(self, out_len: usize) -> usize {
+        match self {
+            PView::Full => out_len - 1,
+            PView::Section { start, stride } => start + (out_len - 1) * stride,
+            PView::Tile { period } => period - 1,
+        }
+    }
+}
+
+/// A capture-time expression tree over program values. Compiled once per
+/// statement into a tape; cheap to clone while building.
+#[derive(Debug, Clone)]
+pub struct PExpr(PE);
+
+#[derive(Debug, Clone)]
+enum PE {
+    Read { src: Rd, view: PView },
+    Gather { src: Rd, idx: BakedInts },
+    Splat(Sval),
+    Const(f64),
+    Acc,
+    Bin(BinOp, Box<PE>, Box<PE>),
+    Un(UnOp, Box<PE>),
+}
+
+impl PExpr {
+    /// Identity read of a full vector.
+    pub fn read(src: impl Into<Rd>) -> PExpr {
+        PExpr(PE::Read { src: src.into(), view: PView::Full })
+    }
+
+    /// Strided section: element `k` reads `src[start + k*stride]` (the
+    /// FFT's even/odd splits use stride 2).
+    pub fn sec(src: impl Into<Rd>, start: usize, stride: usize) -> PExpr {
+        PExpr(PE::Read { src: src.into(), view: PView::Section { start, stride } })
+    }
+
+    /// Cyclic tile: element `k` reads `src[k mod period]` (the FFT's
+    /// `repeat(section(twiddles, 0, m), i)`).
+    pub fn tile(src: impl Into<Rd>, period: usize) -> PExpr {
+        PExpr(PE::Read { src: src.into(), view: PView::Tile { period } })
+    }
+
+    /// Gather: element `k` reads `src[idx[k]]` through a baked index
+    /// table (the FFT's initial tangling permutation).
+    pub fn gather(src: impl Into<Rd>, idx: BakedInts) -> PExpr {
+        PExpr(PE::Gather { src: src.into(), idx })
+    }
+
+    /// Broadcast of a scalar register (CG's `alpha`/`beta`).
+    pub fn splat(s: Sval) -> PExpr {
+        PExpr(PE::Splat(s))
+    }
+
+    /// Scalar constant.
+    pub fn lit(c: f64) -> PExpr {
+        PExpr(PE::Const(c))
+    }
+
+    /// The destination's current value, read in place (tape `Acc`
+    /// register). Only valid inside [`ProgramBuilder::update`], and only
+    /// on the **left spine** of the expression — the tape evaluates
+    /// left-first into the output register, so a left-spine `Acc` is the
+    /// in-place read-modify-write and anything else would read
+    /// partially-overwritten data (rejected at capture).
+    pub fn acc() -> PExpr {
+        PExpr(PE::Acc)
+    }
+
+    /// Unary operator application.
+    pub fn un(self, op: UnOp) -> PExpr {
+        PExpr(PE::Un(op, Box::new(self.0)))
+    }
+
+    fn bin(op: BinOp, a: PExpr, b: PExpr) -> PExpr {
+        PExpr(PE::Bin(op, Box::new(a.0), Box::new(b.0)))
+    }
+}
+
+macro_rules! impl_pexpr_op {
+    ($trait:ident, $method:ident, $op:expr) => {
+        impl std::ops::$trait<PExpr> for PExpr {
+            type Output = PExpr;
+            fn $method(self, rhs: PExpr) -> PExpr {
+                PExpr::bin($op, self, rhs)
+            }
+        }
+    };
+}
+
+impl_pexpr_op!(Add, add, BinOp::Add);
+impl_pexpr_op!(Sub, sub, BinOp::Sub);
+impl_pexpr_op!(Mul, mul, BinOp::Mul);
+impl_pexpr_op!(Div, div, BinOp::Div);
+
+/// A CSR matrix baked into a program (structure and values are
+/// capture-time constants; see [`ProgramBuilder::bake_csr`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BakedCsr {
+    pub(crate) vals: BakedVec,
+    pub(crate) indx: BakedInts,
+    pub(crate) rowp: BakedInts,
+    pub nrows: usize,
+    pub ncols: usize,
+}
+
+// ---------------------------------------------------------------------
+// capture-time IR
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum VKind {
+    Param(usize),
+    Carried,
+    Temp,
+}
+
+#[derive(Debug)]
+pub(crate) struct ValInfo {
+    pub(crate) len: usize,
+    pub(crate) kind: VKind,
+    pub(crate) written: bool,
+    /// Carried value updated through self-reading views: gets a
+    /// front/back slot pair (double-buffering).
+    pub(crate) paired: bool,
+    /// Regions staged since the last commit (builder-time validation).
+    staged: Vec<(usize, usize)>,
+}
+
+/// One recorded statement (pre-buffer-plan IR).
+#[derive(Debug)]
+pub(crate) enum Stmt {
+    /// Fused element-wise write of `expr` into `dst[off..off+len]`.
+    /// `staged` writes target the back buffer of a pair.
+    Emit { dst: Vect, off: usize, len: usize, expr: PExpr, staged: bool },
+    /// Flip a double-buffered carried vector (recorded by `commit`).
+    Commit { dst: Vect },
+    /// `dst[r] = Σ_k vals[k] · x[indx[k]]` over CSR row `r` — replicates
+    /// [`crate::sparse::Csr::spmv`] bit-for-bit.
+    Spmv { dst: Vect, csr: BakedCsr, x: Rd },
+    /// `dst = Σ a·b` via [`crate::kernels::blas1::dot`] (bit-identical
+    /// to the host CG driver's reductions).
+    Dot { dst: Sval, a: Rd, b: Rd },
+    /// Scalar register arithmetic.
+    SBin { op: BinOp, dst: Sval, a: Sval, b: Sval },
+    /// Scalar register copy (carried-scalar rebind at iteration end).
+    SSet { dst: Sval, src: Sval },
+}
+
+/// Structured statement tree: the `_for` loop IR.
+#[derive(Debug)]
+pub(crate) enum PNode {
+    Stmt(usize),
+    /// `_for` with a capture-resolved trip count. `uniform` bodies hold
+    /// one body replayed `trip` times; staged bodies hold `trip`
+    /// per-iteration bodies (geometry-changing loops).
+    For { trip: usize, uniform: bool, bodies: Vec<Vec<PNode>> },
+}
+
+/// Records a multi-step computation into a [`Program`]. See the module
+/// docs for the capture model; API misuse (reading an unwritten value,
+/// out-of-range views, incomplete staged regions) panics at capture
+/// time like the eager DSL's shape asserts.
+pub struct ProgramBuilder {
+    param_lens: Vec<usize>,
+    baked_f: Vec<Arc<Vec<f64>>>,
+    baked_i: Vec<Arc<Vec<i64>>>,
+    vals: Vec<ValInfo>,
+    n_sregs: usize,
+    stmts: Vec<Stmt>,
+    root: Vec<PNode>,
+    frames: Vec<Vec<PNode>>,
+    outputs: Vec<Rd>,
+}
+
+impl Default for ProgramBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProgramBuilder {
+    pub fn new() -> ProgramBuilder {
+        ProgramBuilder {
+            param_lens: Vec::new(),
+            baked_f: Vec::new(),
+            baked_i: Vec::new(),
+            vals: Vec::new(),
+            n_sregs: 0,
+            stmts: Vec::new(),
+            root: Vec::new(),
+            frames: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    /// Declare an f64 vector parameter of length `len`, rebound on every
+    /// invocation (the ArBB closure's bound argument).
+    pub fn param(&mut self, len: usize) -> Vect {
+        assert!(len > 0, "program: zero-length parameter");
+        let p = self.param_lens.len();
+        self.param_lens.push(len);
+        self.vals.push(ValInfo {
+            len,
+            kind: VKind::Param(p),
+            written: true,
+            paired: false,
+            staged: Vec::new(),
+        });
+        Vect(self.vals.len() - 1)
+    }
+
+    /// Bake a capture-time f64 constant (twiddle tables, CSR values).
+    pub fn bake(&mut self, data: &[f64]) -> BakedVec {
+        self.baked_f.push(Arc::new(data.to_vec()));
+        BakedVec(self.baked_f.len() - 1)
+    }
+
+    /// Bake a capture-time i64 index table (gather indices, row
+    /// pointers).
+    pub fn bake_i64(&mut self, data: &[i64]) -> BakedInts {
+        self.baked_i.push(Arc::new(data.to_vec()));
+        BakedInts(self.baked_i.len() - 1)
+    }
+
+    /// Bake a CSR matrix (values, column indices and row pointers become
+    /// capture-time constants shared read-only across invocations).
+    pub fn bake_csr(&mut self, m: &Csr) -> BakedCsr {
+        assert_eq!(m.rowp.len(), m.nrows + 1, "bake_csr: malformed row pointers");
+        assert_eq!(m.vals.len(), m.indx.len(), "bake_csr: vals/indx length mismatch");
+        assert!(
+            m.indx.iter().all(|&c| c >= 0 && (c as usize) < m.ncols),
+            "bake_csr: column index out of range"
+        );
+        super::engine::validate_segp(&m.rowp, m.nrows, m.vals.len())
+            .expect("bake_csr: malformed row pointers");
+        BakedCsr {
+            vals: self.bake(&m.vals),
+            indx: self.bake_i64(&m.indx),
+            rowp: self.bake_i64(&m.rowp),
+            nrows: m.nrows,
+            ncols: m.ncols,
+        }
+    }
+
+    /// Declare a loop-carried vector of length `len` (persistent slot;
+    /// the `_for` loop state). Must be assigned before it is read.
+    pub fn carried(&mut self, len: usize) -> Vect {
+        assert!(len > 0, "program: zero-length carried vector");
+        self.vals.push(ValInfo {
+            len,
+            kind: VKind::Carried,
+            written: false,
+            paired: false,
+            staged: Vec::new(),
+        });
+        Vect(self.vals.len() - 1)
+    }
+
+    /// Evaluate `expr` into a fresh temporary of length `len`. The
+    /// buffer planner recycles temporary slots by liveness.
+    pub fn compute(&mut self, len: usize, expr: PExpr) -> Vect {
+        assert!(len > 0, "program: zero-length temporary");
+        self.vals.push(ValInfo {
+            len,
+            kind: VKind::Temp,
+            written: true,
+            paired: false,
+            staged: Vec::new(),
+        });
+        let dst = Vect(self.vals.len() - 1);
+        self.check_expr(&expr, len, Some(dst), false);
+        self.push_stmt(Stmt::Emit { dst, off: 0, len, expr, staged: false });
+        dst
+    }
+
+    /// Overwrite a carried vector with `expr`. If the expression reads
+    /// `dst` itself (through any view), the write is automatically
+    /// staged into the back buffer and committed — `dst` becomes
+    /// double-buffered.
+    pub fn assign(&mut self, dst: Vect, expr: PExpr) {
+        let len = self.writable(dst);
+        let self_read = self.reads_val(&expr.0, dst);
+        self.check_expr(&expr, len, if self_read { None } else { Some(dst) }, false);
+        self.vals[dst.0].written = true;
+        if self_read {
+            self.mark_staged(dst, 0, len);
+            self.push_stmt(Stmt::Emit { dst, off: 0, len, expr, staged: true });
+            self.commit(dst);
+        } else {
+            self.push_stmt(Stmt::Emit { dst, off: 0, len, expr, staged: false });
+        }
+    }
+
+    /// In-place update of a carried vector: `expr` must contain
+    /// [`PExpr::acc`] (the destination's current value) on its left
+    /// spine and must not read `dst` any other way — element-wise
+    /// updates like CG's `x += alpha·p` reuse the slot with no copy.
+    pub fn update(&mut self, dst: Vect, expr: PExpr) {
+        let len = self.writable(dst);
+        assert!(contains_acc(&expr.0), "program: update expression must read acc()");
+        assert!(
+            !self.reads_val(&expr.0, dst),
+            "program: update may read the destination only through acc() \
+             (views of the destination need stage_region/commit)"
+        );
+        assert!(self.vals[dst.0].written, "program: update of unwritten vector");
+        self.check_expr(&expr, len, None, true);
+        self.push_stmt(Stmt::Emit { dst, off: 0, len, expr, staged: false });
+    }
+
+    /// Stage a region write `dst[off..off+len] = expr` into the back
+    /// buffer of `dst` (reads of `dst` — including inside `expr` — still
+    /// see the front buffer). The staged regions must tile `dst` exactly
+    /// before [`ProgramBuilder::commit`] flips the pair. This is the
+    /// FFT's `cat(up, down)` replacement: two region writes into the
+    /// back buffer instead of a materialising concat.
+    pub fn stage_region(&mut self, dst: Vect, off: usize, len: usize, expr: PExpr) {
+        let total = self.writable(dst);
+        assert!(len > 0 && off + len <= total, "program: staged region out of range");
+        assert!(
+            self.vals[dst.0].written,
+            "program: staging into an unwritten vector (assign it first)"
+        );
+        self.check_expr(&expr, len, None, false);
+        self.mark_staged(dst, off, len);
+        self.push_stmt(Stmt::Emit { dst, off, len, expr, staged: true });
+    }
+
+    /// Commit the staged regions of `dst`: validates they tile the
+    /// vector exactly, then flips the front/back pair (O(1), no copy).
+    pub fn commit(&mut self, dst: Vect) {
+        let len = self.vals[dst.0].len;
+        let mut regions = std::mem::take(&mut self.vals[dst.0].staged);
+        assert!(!regions.is_empty(), "program: commit with no staged regions");
+        regions.sort_unstable();
+        let mut covered = 0usize;
+        for (off, l) in &regions {
+            assert!(
+                *off == covered,
+                "program: staged regions must tile the vector exactly \
+                 (gap or overlap at offset {covered})"
+            );
+            covered += l;
+        }
+        assert_eq!(covered, len, "program: staged regions do not cover the vector");
+        self.push_stmt(Stmt::Commit { dst });
+    }
+
+    /// Sparse matrix-vector product `dst = A·x` against a baked CSR
+    /// matrix, bit-identical to [`crate::sparse::Csr::spmv`]. Returns a
+    /// fresh temporary of length `nrows`.
+    pub fn spmv(&mut self, a: &BakedCsr, x: impl Into<Rd>) -> Vect {
+        let x = x.into();
+        let xlen = self.rd_len(x);
+        assert_eq!(xlen, a.ncols, "program: spmv input length != matrix columns");
+        self.assert_readable(x);
+        self.vals.push(ValInfo {
+            len: a.nrows,
+            kind: VKind::Temp,
+            written: true,
+            paired: false,
+            staged: Vec::new(),
+        });
+        let dst = Vect(self.vals.len() - 1);
+        self.push_stmt(Stmt::Spmv { dst, csr: *a, x });
+        dst
+    }
+
+    /// Dot product into a fresh scalar register, computed with
+    /// [`crate::kernels::blas1::dot`]'s exact association so captured CG
+    /// reductions match the host driver bit-for-bit.
+    pub fn dot(&mut self, a: impl Into<Rd>, b: impl Into<Rd>) -> Sval {
+        let (a, b) = (a.into(), b.into());
+        assert_eq!(self.rd_len(a), self.rd_len(b), "program: dot length mismatch");
+        self.assert_readable(a);
+        self.assert_readable(b);
+        let dst = Sval(self.n_sregs);
+        self.n_sregs += 1;
+        self.push_stmt(Stmt::Dot { dst, a, b });
+        dst
+    }
+
+    /// Scalar register arithmetic into a fresh register (CG's
+    /// `alpha = r2 / pAp`).
+    pub fn sbin(&mut self, op: BinOp, a: Sval, b: Sval) -> Sval {
+        assert!(a.0 < self.n_sregs && b.0 < self.n_sregs);
+        let dst = Sval(self.n_sregs);
+        self.n_sregs += 1;
+        self.push_stmt(Stmt::SBin { op, dst, a, b });
+        dst
+    }
+
+    /// Copy a scalar register (rebinding a carried scalar at loop-body
+    /// end, e.g. CG's `r2 = r2_new`).
+    pub fn set_scalar(&mut self, dst: Sval, src: Sval) {
+        assert!(dst.0 < self.n_sregs && src.0 < self.n_sregs);
+        self.push_stmt(Stmt::SSet { dst, src });
+    }
+
+    /// `_for` with a uniform body: `body` is captured **once** and the
+    /// recorded steps replay `trip` times per invocation (the CG
+    /// iteration loop). The trip count is resolved at capture.
+    pub fn repeat(&mut self, trip: usize, body: impl FnOnce(&mut ProgramBuilder)) {
+        self.frames.push(Vec::new());
+        body(self);
+        let nodes = self.frames.pop().expect("balanced loop frames");
+        self.push_node(PNode::For { trip, uniform: true, bodies: vec![nodes] });
+    }
+
+    /// `_for` whose body geometry depends on the iteration index (the
+    /// FFT's stage loop: twiddle section lengths halve per stage):
+    /// `body` is captured once per iteration, and the per-iteration step
+    /// lists are recorded under one structured loop node.
+    pub fn for_each(&mut self, trip: usize, mut body: impl FnMut(&mut ProgramBuilder, usize)) {
+        let mut bodies = Vec::with_capacity(trip);
+        for k in 0..trip {
+            self.frames.push(Vec::new());
+            body(self, k);
+            bodies.push(self.frames.pop().expect("balanced loop frames"));
+        }
+        self.push_node(PNode::For { trip, uniform: false, bodies });
+    }
+
+    /// Append a value to the invocation output (outputs are
+    /// concatenated in declaration order).
+    pub fn output(&mut self, v: impl Into<Rd>) {
+        let v = v.into();
+        self.assert_readable(v);
+        self.outputs.push(v);
+    }
+
+    /// Freeze the capture: run the buffer planner, compile every
+    /// statement's expression to a tape, and produce the replayable
+    /// [`Program`].
+    pub fn finish(self) -> crate::Result<Program> {
+        if self.outputs.is_empty() {
+            return Err(crate::Error::Invalid("program: no outputs declared".into()));
+        }
+        for v in &self.vals {
+            if !v.staged.is_empty() {
+                return Err(crate::Error::Invalid(
+                    "program: staged regions never committed".into(),
+                ));
+            }
+        }
+        let bp = plan::plan_buffers(&self.vals, &self.root, &self.stmts, &self.outputs);
+        let mut steps = Vec::with_capacity(self.stmts.len());
+        for stmt in &self.stmts {
+            steps.push(self.compile_stmt(stmt, &bp)?);
+        }
+        let structure = map_nodes(&self.root);
+        let outputs: Vec<PBind> = self.outputs.iter().map(|r| self.bind_rd(*r, &bp)).collect();
+        let out_len = self.outputs.iter().map(|r| self.rd_len(*r)).sum();
+        Ok(Program::new(
+            self.param_lens,
+            self.baked_f,
+            self.baked_i,
+            steps,
+            structure,
+            bp.slot_lens,
+            bp.pairs,
+            self.n_sregs,
+            outputs,
+            out_len,
+        ))
+    }
+
+    // -- capture-time validation helpers ------------------------------
+
+    fn push_stmt(&mut self, s: Stmt) {
+        self.stmts.push(s);
+        let id = self.stmts.len() - 1;
+        self.push_node(PNode::Stmt(id));
+    }
+
+    fn push_node(&mut self, n: PNode) {
+        match self.frames.last_mut() {
+            Some(f) => f.push(n),
+            None => self.root.push(n),
+        }
+    }
+
+    fn writable(&mut self, dst: Vect) -> usize {
+        let v = &self.vals[dst.0];
+        assert!(
+            !matches!(v.kind, VKind::Param(_)),
+            "program: parameters are read-only"
+        );
+        v.len
+    }
+
+    fn mark_staged(&mut self, dst: Vect, off: usize, len: usize) {
+        assert!(
+            self.vals[dst.0].kind == VKind::Carried,
+            "program: only carried vectors can be double-buffered"
+        );
+        self.vals[dst.0].paired = true;
+        self.vals[dst.0].staged.push((off, len));
+    }
+
+    fn rd_len(&self, r: Rd) -> usize {
+        match r {
+            Rd::Val(v) => self.vals[v.0].len,
+            Rd::Baked(b) => self.baked_f[b.0].len(),
+        }
+    }
+
+    fn assert_readable(&self, r: Rd) {
+        if let Rd::Val(v) = r {
+            assert!(self.vals[v.0].written, "program: read of unwritten vector");
+        }
+    }
+
+    fn reads_val(&self, e: &PE, v: Vect) -> bool {
+        match e {
+            PE::Read { src: Rd::Val(s), .. } | PE::Gather { src: Rd::Val(s), .. } => s.0 == v.0,
+            PE::Bin(_, a, b) => self.reads_val(a, v) || self.reads_val(b, v),
+            PE::Un(_, a) => self.reads_val(a, v),
+            _ => false,
+        }
+    }
+
+    /// Validate an expression against the statement's output length:
+    /// every leaf read must be in range, sources must be written, and
+    /// `no_read` (the destination of a non-staged write) must not be
+    /// read at all.
+    fn check_expr(&self, e: &PExpr, out_len: usize, no_read: Option<Vect>, allow_acc: bool) {
+        self.check_pe(&e.0, out_len, no_read, allow_acc);
+    }
+
+    fn check_pe(&self, e: &PE, out_len: usize, no_read: Option<Vect>, allow_acc: bool) {
+        match e {
+            PE::Read { src, view } => {
+                self.assert_readable(*src);
+                if let (Some(d), Rd::Val(s)) = (no_read, src) {
+                    assert!(
+                        s.0 != d.0,
+                        "program: expression reads its own destination; use \
+                         stage_region/commit (views) or update/acc (element-wise)"
+                    );
+                }
+                let src_len = self.rd_len(*src);
+                if let PView::Tile { period } = view {
+                    assert!(
+                        *period > 0 && *period <= src_len,
+                        "program: tile period out of range"
+                    );
+                }
+                assert!(
+                    view.max_src_index(out_len) < src_len,
+                    "program: view reads past the end of its source"
+                );
+            }
+            PE::Gather { src, idx } => {
+                self.assert_readable(*src);
+                if let (Some(d), Rd::Val(s)) = (no_read, src) {
+                    assert!(s.0 != d.0, "program: gather reads its own destination");
+                }
+                let table = &self.baked_i[idx.0];
+                assert!(
+                    table.len() >= out_len,
+                    "program: gather index table shorter than the output region"
+                );
+                let src_len = self.rd_len(*src);
+                assert!(
+                    table[..out_len].iter().all(|&i| i >= 0 && (i as usize) < src_len),
+                    "program: gather index out of range"
+                );
+            }
+            PE::Splat(s) => assert!(s.0 < self.n_sregs, "program: unknown scalar register"),
+            PE::Const(_) => {}
+            PE::Acc => assert!(
+                allow_acc,
+                "program: acc() is only valid on the left spine of an update() expression"
+            ),
+            PE::Bin(_, a, b) => {
+                self.check_pe(a, out_len, no_read, allow_acc);
+                self.check_pe(b, out_len, no_read, false);
+            }
+            PE::Un(_, a) => self.check_pe(a, out_len, no_read, allow_acc),
+        }
+    }
+
+    // -- statement compilation ----------------------------------------
+
+    fn bind_rd(&self, r: Rd, bp: &plan::BufferPlan) -> PBind {
+        match r {
+            Rd::Val(v) => match self.vals[v.0].kind {
+                VKind::Param(p) => PBind::Param(p),
+                _ => match bp.storage[v.0] {
+                    plan::Storage::Single(s) => PBind::Slot(s),
+                    plan::Storage::Pair(p) => PBind::Front(p),
+                    plan::Storage::None => unreachable!("non-param value without storage"),
+                },
+            },
+            Rd::Baked(b) => PBind::Baked(b.0),
+        }
+    }
+
+    fn dst_of(&self, dst: Vect, staged: bool, bp: &plan::BufferPlan) -> PDst {
+        match bp.storage[dst.0] {
+            plan::Storage::Single(s) => {
+                debug_assert!(!staged);
+                PDst::Slot(s)
+            }
+            plan::Storage::Pair(p) => {
+                if staged {
+                    PDst::Back(p)
+                } else {
+                    PDst::Front(p)
+                }
+            }
+            plan::Storage::None => unreachable!("write to a parameter"),
+        }
+    }
+
+    fn lower_pe(
+        &self,
+        e: &PE,
+        out_len: usize,
+        bp: &plan::BufferPlan,
+        binds: &mut Vec<PBind>,
+        ibinds: &mut Vec<usize>,
+    ) -> KTree {
+        match e {
+            PE::Read { src, view } => {
+                binds.push(self.bind_rd(*src, bp));
+                KTree::Leaf { leaf: (binds.len() - 1) as u16, view: view.to_view(out_len) }
+            }
+            PE::Gather { src, idx } => {
+                binds.push(self.bind_rd(*src, bp));
+                let leaf = (binds.len() - 1) as u16;
+                ibinds.push(idx.0);
+                KTree::Gather { src: leaf, idx: (ibinds.len() - 1) as u16, base: 0 }
+            }
+            PE::Splat(s) => {
+                binds.push(PBind::Sregs);
+                KTree::Splat { leaf: (binds.len() - 1) as u16, idx: s.0 }
+            }
+            PE::Const(c) => KTree::Const(*c),
+            PE::Acc => KTree::Acc,
+            PE::Bin(op, a, b) => KTree::Bin(
+                *op,
+                Box::new(self.lower_pe(a, out_len, bp, binds, ibinds)),
+                Box::new(self.lower_pe(b, out_len, bp, binds, ibinds)),
+            ),
+            PE::Un(op, a) => {
+                KTree::Un(*op, Box::new(self.lower_pe(a, out_len, bp, binds, ibinds)))
+            }
+        }
+    }
+
+    fn compile_stmt(&self, stmt: &Stmt, bp: &plan::BufferPlan) -> crate::Result<CStep> {
+        Ok(match stmt {
+            Stmt::Emit { dst, off, len, expr, staged } => {
+                let mut binds = Vec::new();
+                let mut ibinds = Vec::new();
+                let kt = self.lower_pe(&expr.0, *len, bp, &mut binds, &mut ibinds);
+                CStep::Emit(EmitStep::new(
+                    self.dst_of(*dst, *staged, bp),
+                    *off,
+                    *len,
+                    super::engine::eval::TapeProgram::compile(&kt)?,
+                    binds,
+                    ibinds,
+                ))
+            }
+            Stmt::Commit { dst } => match bp.storage[dst.0] {
+                plan::Storage::Pair(p) => CStep::Flip { pair: p },
+                _ => unreachable!("commit of an unpaired vector"),
+            },
+            Stmt::Spmv { dst, csr, x } => CStep::Spmv {
+                dst: self.dst_of(*dst, false, bp),
+                vals: csr.vals.0,
+                indx: csr.indx.0,
+                rowp: csr.rowp.0,
+                x: self.bind_rd(*x, bp),
+                rows: csr.nrows,
+            },
+            Stmt::Dot { dst, a, b } => CStep::Dot {
+                dst: dst.0,
+                a: self.bind_rd(*a, bp),
+                b: self.bind_rd(*b, bp),
+            },
+            Stmt::SBin { op, dst, a, b } => {
+                CStep::SBin { op: *op, dst: dst.0, a: a.0, b: b.0 }
+            }
+            Stmt::SSet { dst, src } => CStep::SSet { dst: dst.0, src: src.0 },
+        })
+    }
+}
+
+fn contains_acc(e: &PE) -> bool {
+    match e {
+        PE::Acc => true,
+        PE::Bin(_, a, b) => contains_acc(a) || contains_acc(b),
+        PE::Un(_, a) => contains_acc(a),
+        _ => false,
+    }
+}
+
+/// Map the capture IR's structure tree onto compiled step indices
+/// (statements and steps are 1:1 and in the same order).
+fn map_nodes(nodes: &[PNode]) -> Vec<CNode> {
+    nodes
+        .iter()
+        .map(|n| match n {
+            PNode::Stmt(i) => CNode::Step(*i),
+            PNode::For { trip, uniform, bodies } => CNode::For {
+                trip: *trip,
+                uniform: *uniform,
+                bodies: bodies.iter().map(|b| map_nodes(b)).collect(),
+            },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carried_copy_and_uniform_loop() {
+        // acc = x; repeat 3 { acc *= 3 } => x * 3^3
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(5);
+        let acc = pb.carried(5);
+        pb.assign(acc, PExpr::read(x));
+        pb.repeat(3, |pb| {
+            pb.update(acc, PExpr::acc() * PExpr::lit(3.0));
+        });
+        pb.output(acc);
+        let prog = pb.finish().unwrap();
+        assert_eq!(prog.loop_trips(), vec![3]);
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let out = prog.invoke(&[&xs]).unwrap();
+        let want: Vec<f64> = xs.iter().map(|v| v * 27.0).collect();
+        assert_eq!(out, want);
+        // replays recycle one state
+        let _ = prog.invoke(&[&xs]).unwrap();
+        assert_eq!(prog.stats().states_created, 1);
+        assert_eq!(prog.stats().replays, 2);
+    }
+
+    #[test]
+    fn double_buffered_reverse_swap() {
+        // d = x; for_each stage: d = [second half | first half] staged —
+        // exercises front/back pairing and region commits.
+        let n = 8;
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(n);
+        let d = pb.carried(n);
+        pb.assign(d, PExpr::read(x));
+        pb.for_each(3, |pb, _| {
+            pb.stage_region(d, 0, n / 2, PExpr::sec(d, n / 2, 1));
+            pb.stage_region(d, n / 2, n / 2, PExpr::sec(d, 0, 1));
+            pb.commit(d);
+        });
+        pb.output(d);
+        let prog = pb.finish().unwrap();
+        assert_eq!(prog.n_pairs(), 1);
+        assert_eq!(prog.n_slots(), 2, "double buffering = exactly two slots");
+        let xs: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let out = prog.invoke(&[&xs]).unwrap();
+        // three half-swaps = one net half-swap
+        let want = vec![4.0, 5.0, 6.0, 7.0, 0.0, 1.0, 2.0, 3.0];
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn assign_with_self_read_auto_stages() {
+        let n = 4;
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(n);
+        let d = pb.carried(n);
+        pb.assign(d, PExpr::read(x));
+        // d = reverse-ish via strided self read: auto double-buffered.
+        pb.assign(d, PExpr::sec(d, 0, 1) + PExpr::sec(d, 0, 1));
+        pb.output(d);
+        let prog = pb.finish().unwrap();
+        assert_eq!(prog.n_pairs(), 1);
+        let out = prog.invoke(&[&[1.0, 2.0, 3.0, 4.0]]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn temp_slots_are_recycled() {
+        // Two disjoint-liveness temps must share one slot.
+        let n = 6;
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(n);
+        let c = pb.carried(n);
+        let t1 = pb.compute(n, PExpr::read(x) * PExpr::lit(2.0));
+        pb.assign(c, PExpr::read(t1)); // t1 dies here
+        let t2 = pb.compute(n, PExpr::read(c) + PExpr::lit(1.0));
+        pb.assign(c, PExpr::read(t2));
+        pb.output(c);
+        let prog = pb.finish().unwrap();
+        // c (1 slot) + one shared temp slot
+        assert_eq!(prog.n_slots(), 2, "temps with disjoint liveness share a slot");
+        let out = prog.invoke(&[&[1.0; 6]]).unwrap();
+        assert_eq!(out, vec![3.0; 6]);
+    }
+
+    #[test]
+    fn scalars_dot_and_sbin() {
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(4);
+        let c = pb.carried(4);
+        pb.assign(c, PExpr::read(x));
+        let d = pb.dot(c, c); // Σ x²
+        let e = pb.sbin(BinOp::Div, d, d); // 1.0
+        pb.update(c, PExpr::acc() * PExpr::splat(e) + PExpr::splat(d));
+        pb.output(c);
+        let prog = pb.finish().unwrap();
+        let out = prog.invoke(&[&[1.0, 2.0, 3.0, 4.0]]).unwrap();
+        let s = 1.0 + 4.0 + 9.0 + 16.0;
+        assert_eq!(out, vec![1.0 + s, 2.0 + s, 3.0 + s, 4.0 + s]);
+    }
+
+    #[test]
+    fn gather_and_tile_views() {
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(4);
+        let idx = pb.bake_i64(&[3, 2, 1, 0]);
+        let tw = pb.bake(&[10.0, 20.0]);
+        let c = pb.carried(4);
+        pb.assign(c, PExpr::gather(x, idx) * PExpr::tile(tw, 2));
+        pb.output(c);
+        let prog = pb.finish().unwrap();
+        let out = prog.invoke(&[&[1.0, 2.0, 3.0, 4.0]]).unwrap();
+        assert_eq!(out, vec![40.0, 60.0, 20.0, 10.0]);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let dense = [1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 5.0, 6.0];
+        let m = Csr::from_dense(&dense, 3, 3);
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(3);
+        let a = pb.bake_csr(&m);
+        let y = pb.spmv(&a, x);
+        pb.output(y);
+        let prog = pb.finish().unwrap();
+        let xs = [1.0, 10.0, 100.0];
+        let out = prog.invoke(&[&xs]).unwrap();
+        let want = m.spmv_alloc(&xs);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn argument_mismatch_is_error() {
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(4);
+        let c = pb.carried(4);
+        pb.assign(c, PExpr::read(x));
+        pb.output(c);
+        let prog = pb.finish().unwrap();
+        assert!(prog.invoke(&[&[1.0; 3]]).is_err(), "length mismatch");
+        assert!(prog.invoke(&[]).is_err(), "arity mismatch");
+    }
+
+    #[test]
+    fn dangling_stage_is_error() {
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(4);
+        let c = pb.carried(4);
+        pb.assign(c, PExpr::read(x));
+        pb.stage_region(c, 0, 4, PExpr::sec(c, 0, 1));
+        pb.output(c);
+        assert!(pb.finish().is_err(), "uncommitted staged regions must fail finish");
+    }
+
+    #[test]
+    #[should_panic(expected = "only through acc()")]
+    fn update_self_view_read_panics() {
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(4);
+        let c = pb.carried(4);
+        pb.assign(c, PExpr::read(x));
+        // a viewed self-read needs stage_region/commit, not update
+        pb.update(c, PExpr::acc() + PExpr::sec(c, 0, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "staged regions must tile")]
+    fn partial_commit_panics() {
+        let mut pb = ProgramBuilder::new();
+        let x = pb.param(4);
+        let c = pb.carried(4);
+        pb.assign(c, PExpr::read(x));
+        pb.stage_region(c, 2, 2, PExpr::sec(c, 0, 1));
+        pb.commit(c);
+    }
+}

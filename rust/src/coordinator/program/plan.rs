@@ -1,0 +1,212 @@
+//! The buffer planner: program values → arena slots.
+//!
+//! Every invocation of a captured [`super::Program`] runs out of a fixed
+//! set of f64 slot buffers sized here, at capture time — the executor
+//! never allocates. Three assignment rules:
+//!
+//!  * **Parameters** get no slot (read straight from request buffers).
+//!  * **Carried vectors** get a dedicated slot for the program's
+//!    lifetime; a carried vector that is ever *staged* (its update reads
+//!    itself through a view) gets a **front/back slot pair** —
+//!    double-buffering. This is what turns the FFT's per-stage
+//!    `cat(up, down)` materialisation (a fresh n-element buffer per
+//!    stage, 2·log₂n allocations per transform) into two fixed slots
+//!    per plane and an O(1) flip per stage.
+//!  * **Temporaries** are assigned by liveness: a slot frees at its
+//!    value's last read and is reused by the next same-length
+//!    temporary. Frees inside a `_for` body are deferred to the loop
+//!    exit when the value was defined before the loop (the back edge
+//!    re-reads it on every trip).
+
+use super::{PE, PNode, Rd, Stmt, VKind, ValInfo, Vect};
+
+/// Where a program value lives at replay time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Storage {
+    /// Parameters: no slot.
+    None,
+    Single(usize),
+    /// Index into the pair table (front/back slots + runtime flip bit).
+    Pair(usize),
+}
+
+#[derive(Debug)]
+pub(crate) struct BufferPlan {
+    /// Per-value storage assignment (indexed by `Vect`).
+    pub(crate) storage: Vec<Storage>,
+    /// Capture-time length of every slot.
+    pub(crate) slot_lens: Vec<usize>,
+    /// Front/back slot pairs of double-buffered carried vectors.
+    pub(crate) pairs: Vec<(usize, usize)>,
+}
+
+/// A value use event at a linear walk position.
+struct Live {
+    def: usize,
+    last: usize,
+}
+
+/// Assign slots to every carried and temporary value.
+pub(crate) fn plan_buffers(
+    vals: &[ValInfo],
+    root: &[PNode],
+    stmts: &[Stmt],
+    outputs: &[Rd],
+) -> BufferPlan {
+    let mut storage = vec![Storage::None; vals.len()];
+    let mut slot_lens: Vec<usize> = Vec::new();
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+
+    // Carried vectors: dedicated slots (pairs when double-buffered).
+    for (i, v) in vals.iter().enumerate() {
+        if v.kind != VKind::Carried {
+            continue;
+        }
+        if v.paired {
+            let a = slot_lens.len();
+            slot_lens.push(v.len);
+            let b = slot_lens.len();
+            slot_lens.push(v.len);
+            pairs.push((a, b));
+            storage[i] = Storage::Pair(pairs.len() - 1);
+        } else {
+            slot_lens.push(v.len);
+            storage[i] = Storage::Single(slot_lens.len() - 1);
+        }
+    }
+
+    // Temporaries: liveness over a linear walk of the structure
+    // (uniform `_for` bodies are walked once; the back-edge extension
+    // below covers replays).
+    let mut pos = 0usize;
+    let mut lives: Vec<Option<Live>> = (0..vals.len()).map(|_| None).collect();
+    let mut loop_spans: Vec<(usize, usize)> = Vec::new();
+    walk(root, stmts, &mut pos, &mut lives, &mut loop_spans);
+    let end = pos;
+    for r in outputs {
+        if let Rd::Val(v) = r {
+            touch(&mut lives, *v, end);
+        }
+    }
+    // Back-edge extension: a value defined before a loop but read inside
+    // it stays live until the loop exits. Loops can nest, so iterate to
+    // a fixpoint (spans are few; this converges immediately in
+    // practice).
+    loop {
+        let mut changed = false;
+        for live in lives.iter_mut().flatten() {
+            for &(s, e) in &loop_spans {
+                if live.def < s && live.last >= s && live.last < e {
+                    live.last = e;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Greedy slot assignment by (position, exact length) with a free
+    // list.
+    let mut events: Vec<(usize, bool, usize)> = Vec::new(); // (pos, is_def, val)
+    for (i, l) in lives.iter().enumerate() {
+        if vals[i].kind != VKind::Temp {
+            continue;
+        }
+        if let Some(l) = l {
+            events.push((l.def, true, i));
+            events.push((l.last, false, i));
+        }
+    }
+    // Frees at a position happen before defs at the same position would
+    // be wrong (a statement reads its sources while writing its output,
+    // and the output slot must not alias a dying source), so defs sort
+    // first at equal positions: sort by (pos, is_def desc? ) — actually
+    // a def at position p must NOT take a slot freed at the same p.
+    events.sort_by_key(|&(p, is_def, v)| (p, !is_def as usize, v));
+    let mut free: Vec<(usize, usize)> = Vec::new(); // (len, slot)
+    for (_, is_def, v) in events {
+        if is_def {
+            let len = vals[v].len;
+            let slot = match free.iter().position(|&(l, _)| l == len) {
+                Some(k) => free.swap_remove(k).1,
+                None => {
+                    slot_lens.push(len);
+                    slot_lens.len() - 1
+                }
+            };
+            storage[v] = Storage::Single(slot);
+        } else if let Storage::Single(s) = storage[v] {
+            free.push((vals[v].len, s));
+        }
+    }
+
+    BufferPlan { storage, slot_lens, pairs }
+}
+
+fn touch(lives: &mut [Option<Live>], v: Vect, pos: usize) {
+    if let Some(l) = lives[v.0].as_mut() {
+        l.last = l.last.max(pos);
+    } else {
+        lives[v.0] = Some(Live { def: pos, last: pos });
+    }
+}
+
+fn touch_rd(lives: &mut [Option<Live>], r: Rd, pos: usize) {
+    if let Rd::Val(v) = r {
+        touch(lives, v, pos);
+    }
+}
+
+fn touch_expr(lives: &mut [Option<Live>], e: &PE, pos: usize) {
+    match e {
+        PE::Read { src, .. } | PE::Gather { src, .. } => touch_rd(lives, *src, pos),
+        PE::Bin(_, a, b) => {
+            touch_expr(lives, a, pos);
+            touch_expr(lives, b, pos);
+        }
+        PE::Un(_, a) => touch_expr(lives, a, pos),
+        PE::Splat(_) | PE::Const(_) | PE::Acc => {}
+    }
+}
+
+fn walk(
+    nodes: &[PNode],
+    stmts: &[Stmt],
+    pos: &mut usize,
+    lives: &mut [Option<Live>],
+    loop_spans: &mut Vec<(usize, usize)>,
+) {
+    for n in nodes {
+        match n {
+            PNode::Stmt(i) => {
+                let p = *pos;
+                *pos += 1;
+                match &stmts[*i] {
+                    Stmt::Emit { dst, expr, .. } => {
+                        touch_expr(lives, &expr.0, p);
+                        touch(lives, *dst, p);
+                    }
+                    Stmt::Commit { dst } => touch(lives, *dst, p),
+                    Stmt::Spmv { dst, x, .. } => {
+                        touch_rd(lives, *x, p);
+                        touch(lives, *dst, p);
+                    }
+                    Stmt::Dot { a, b, .. } => {
+                        touch_rd(lives, *a, p);
+                        touch_rd(lives, *b, p);
+                    }
+                    Stmt::SBin { .. } | Stmt::SSet { .. } => {}
+                }
+            }
+            PNode::For { bodies, .. } => {
+                let start = *pos;
+                for b in bodies {
+                    walk(b, stmts, pos, lives, loop_spans);
+                }
+                loop_spans.push((start, *pos));
+            }
+        }
+    }
+}

@@ -13,10 +13,26 @@
 //! }
 //! ```
 //!
-//! with the initial "tangling" gather and split re/im planes. Each stage
-//! materialises through `cat` — exactly the data movement that keeps the
-//! ArBB port at simple-radix-2 speed in Fig 5(a).
+//! in **two** forms:
+//!
+//!  * [`arbb_fft`] — the retained per-expression eager path: each stage
+//!    is dispatched as its own fused graph and `cat(up, down)`
+//!    materialises a fresh n-element buffer per stage per plane —
+//!    exactly the data movement that keeps the ArBB port at
+//!    simple-radix-2 speed in Fig 5(a). Kept as the bit-exact
+//!    reference.
+//!  * [`capture_fft`] — the whole-kernel captured program
+//!    ([`crate::coordinator::program`]): the full stage loop is ONE
+//!    captured [`Program`] — a structured `_for` over log₂n stages
+//!    whose geometry (twiddle section length `m`) is resolved at
+//!    capture. The buffer plan double-buffers each split-complex plane,
+//!    so every stage is two region writes into the back buffer plus an
+//!    O(1) flip: **no `cat` materialisation, zero allocations per
+//!    replay**. The arithmetic per element is identical to the eager
+//!    path, so outputs are asserted bit-identical (see
+//!    `rust/tests/program_capture.rs`).
 
+use crate::coordinator::program::{PExpr, Program, ProgramBuilder};
 use crate::coordinator::{Context, CplxV};
 use crate::fftlib::splitstream::tangle_indices;
 use crate::fftlib::twiddle::twiddles_bitrev;
@@ -41,10 +57,12 @@ pub fn plan(ctx: &Context, n: usize) -> ArbbFftPlan {
     }
 }
 
-/// Forward FFT of `data` (length n) through the DSL.
-pub fn arbb_fft(ctx: &Context, p: &ArbbFftPlan, data: &CplxV) -> CplxV {
+/// Forward FFT of `data` (length n) through the eager per-expression
+/// DSL: one dispatch and one `cat` materialisation per stage (the
+/// paper-faithful reference the captured program is asserted
+/// bit-identical against).
+pub fn arbb_fft(p: &ArbbFftPlan, data: &CplxV) -> CplxV {
     let n = p.n;
-    let _ = ctx;
     if n == 1 {
         return data.clone();
     }
@@ -70,24 +88,117 @@ pub fn arbb_fft(ctx: &Context, p: &ArbbFftPlan, data: &CplxV) -> CplxV {
     d
 }
 
+/// A whole-kernel captured FFT: capture once per size, replay many.
+pub struct FftProgram {
+    pub n: usize,
+    prog: Program,
+}
+
+/// Capture the full mod2f stage loop into one [`Program`]: tangle
+/// gather, then a `_for` over log₂n stages, each staging `up` into the
+/// front half and `down` into the back half of the plane's back buffer
+/// and flipping — the `cat(up, down)` of the eager path becomes two
+/// region writes.
+///
+/// Expression trees mirror [`arbb_fft`]'s exactly (same operator shapes
+/// and operand order), so the compiled tapes execute the same arithmetic
+/// per element and the output is bit-identical to the eager path.
+pub fn capture_fft(n: usize) -> FftProgram {
+    assert!(crate::fftlib::is_pow2(n) && n >= 2, "mod2f: n={n} must be a power of two >= 2");
+    let mut pb = ProgramBuilder::new();
+    let re_p = pb.param(n);
+    let im_p = pb.param(n);
+    let idx: Vec<i64> = tangle_indices(n).into_iter().map(|i| i as i64).collect();
+    let tangle = pb.bake_i64(&idx);
+    let (twre_h, twim_h) = twiddles_bitrev(n);
+    let twre = pb.bake(&twre_h);
+    let twim = pb.bake(&twim_h);
+
+    // split-complex planes, double-buffered by the planner
+    let dr = pb.carried(n);
+    let di = pb.carried(n);
+    pb.assign(dr, PExpr::gather(re_p, tangle));
+    pb.assign(di, PExpr::gather(im_p, tangle));
+
+    let h = n / 2;
+    let stages = n.trailing_zeros() as usize;
+    pb.for_each(stages, |pb, s| {
+        let m = h >> s; // twiddle section length of this stage
+        let er = || PExpr::sec(dr, 0, 2);
+        let or_ = || PExpr::sec(dr, 1, 2);
+        let ei = || PExpr::sec(di, 0, 2);
+        let oi = || PExpr::sec(di, 1, 2);
+        // up = even + odd → front half of the back buffer
+        pb.stage_region(dr, 0, h, er() + or_());
+        pb.stage_region(di, 0, h, ei() + oi());
+        // down = (even - odd) * repeat(section(tw, 0, m), i)
+        // complex multiply exactly as CplxV::mul: (ac - bd) + (ad + bc)i
+        let ar = || er() - or_();
+        let ai = || ei() - oi();
+        let tr = || PExpr::tile(twre, m);
+        let ti = || PExpr::tile(twim, m);
+        pb.stage_region(dr, h, h, ar() * tr() - ai() * ti());
+        pb.stage_region(di, h, h, ar() * ti() + ai() * tr());
+        pb.commit(dr);
+        pb.commit(di);
+    });
+    pb.output(dr);
+    pb.output(di);
+    let prog = pb.finish().expect("mod2f capture is well-formed");
+    debug_assert_eq!(prog.n_pairs(), 2, "one front/back pair per plane");
+    debug_assert_eq!(prog.n_slots(), 4, "no cat buffers: 2 planes x 2 slots");
+    FftProgram { n, prog }
+}
+
+impl FftProgram {
+    /// Replay the captured transform, returning `(re, im)`.
+    pub fn run(&self, re: &[f64], im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let mut out = Vec::new();
+        self.run_into(re, im, &mut out).expect("captured FFT replay");
+        (out[..self.n].to_vec(), out[self.n..].to_vec())
+    }
+
+    /// Replay into `out` as `[re | im]` (length 2n; `out`'s capacity is
+    /// reused — a warm replay performs zero heap allocations).
+    pub fn run_into(&self, re: &[f64], im: &[f64], out: &mut Vec<f64>) -> crate::Result<()> {
+        self.prog.invoke_into(&[re, im], out)
+    }
+
+    /// The underlying captured program (serving registration, stats).
+    pub fn program(&self) -> &Program {
+        &self.prog
+    }
+
+    /// Consume the plan, handing the program to a server registry.
+    pub fn into_program(self) -> Program {
+        self.prog
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::fftlib::dft_ref;
     use crate::util::{assert_allclose, XorShift64};
 
+    fn rand_sig(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = XorShift64::new(seed);
+        (
+            (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+            (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+        )
+    }
+
     #[test]
     fn matches_dft() {
         for &n in &[2usize, 4, 8, 32, 128, 512] {
-            let mut rng = XorShift64::new(n as u64);
-            let re: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-            let im: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let (re, im) = rand_sig(n, n as u64);
             let (wre, wim) = dft_ref::dft(&re, &im);
 
             let ctx = Context::new();
             let plan = plan(&ctx, n);
             let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
-            let out = arbb_fft(&ctx, &plan, &data);
+            let out = arbb_fft(&plan, &data);
             assert_allclose(&out.re.to_vec(), &wre, 1e-9, 1e-9, &format!("re n={n}"));
             assert_allclose(&out.im.to_vec(), &wim, 1e-9, 1e-9, &format!("im n={n}"));
         }
@@ -96,15 +207,42 @@ mod tests {
     #[test]
     fn matches_serial_splitstream() {
         let n = 256;
-        let mut rng = XorShift64::new(9);
-        let re: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-        let im: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let (re, im) = rand_sig(n, 9);
         let (wre, wim) = crate::fftlib::splitstream::fft(&re, &im);
         let ctx = Context::new();
         let plan = plan(&ctx, n);
         let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
-        let out = arbb_fft(&ctx, &plan, &data);
+        let out = arbb_fft(&plan, &data);
         assert_allclose(&out.re.to_vec(), &wre, 1e-10, 1e-12, "re");
         assert_allclose(&out.im.to_vec(), &wim, 1e-10, 1e-12, "im");
+    }
+
+    #[test]
+    fn captured_matches_eager_bitwise() {
+        for &n in &[2usize, 8, 64, 256] {
+            let (re, im) = rand_sig(n, 1000 + n as u64);
+            let ctx = Context::new();
+            let p = plan(&ctx, n);
+            let data = CplxV { re: ctx.bind1(&re), im: ctx.bind1(&im) };
+            let eager = arbb_fft(&p, &data);
+            let (ere, eim) = (eager.re.to_vec(), eager.im.to_vec());
+
+            let fp = capture_fft(n);
+            let (cre, cim) = fp.run(&re, &im);
+            for k in 0..n {
+                assert_eq!(cre[k].to_bits(), ere[k].to_bits(), "re n={n} k={k}");
+                assert_eq!(cim[k].to_bits(), eim[k].to_bits(), "im n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn captured_program_shape() {
+        let fp = capture_fft(64);
+        let prog = fp.program();
+        assert_eq!(prog.loop_trips(), vec![6], "one _for over log2(n) stages");
+        assert_eq!(prog.n_pairs(), 2, "one double-buffer pair per plane");
+        assert_eq!(prog.n_slots(), 4, "stage loop owns 4 fixed slots, no cat buffers");
+        assert_eq!(prog.out_len(), 128);
     }
 }

@@ -148,7 +148,7 @@ fn run_kernel(args: &[String], sim: bool) {
             let fl = arbb_rs::fftlib::fft_flops(n);
             let t = time_best(
                 || {
-                    let o = mod2f::arbb_fft(&ctx, &plan, &data);
+                    let o = mod2f::arbb_fft(&plan, &data);
                     o.re.eval();
                 },
                 0.2,

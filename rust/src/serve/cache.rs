@@ -31,7 +31,7 @@ use crate::util::{close, XorShift64};
 use crate::{Error, Result};
 
 use super::exec::{self, CompiledPlan};
-use super::{KernelFn, Value};
+use super::{KernelFn, ProgramFn, Value};
 
 /// Cache key: which kernel, called with which argument signature, under
 /// which optimisation level.
@@ -274,6 +274,43 @@ pub fn capture(ctx: &Context, builder: &KernelFn, key: &PlanKey) -> Result<Arc<C
         ));
     }
 
+    cp.build_secs = t0.elapsed().as_secs_f64();
+    Ok(Arc::new(cp))
+}
+
+/// Capture a whole-kernel program plan for one signature: run the
+/// registered [`ProgramFn`] against the request signature, check the
+/// declared parameters match, and warm one replay on placeholder inputs
+/// — runtime errors surface at capture, and the program's state arena
+/// is pre-sized so the first real dispatch is already allocation-free.
+pub fn capture_program(builder: &ProgramFn, key: &PlanKey) -> Result<Arc<CompiledPlan>> {
+    let t0 = Instant::now();
+    let prog = builder(&key.args)?;
+    if prog.n_params() != key.args.len() {
+        return Err(Error::Invalid(format!(
+            "program kernel declares {} parameters, request has {}",
+            prog.n_params(),
+            key.args.len()
+        )));
+    }
+    for (i, (dtype, shape)) in key.args.iter().enumerate() {
+        // Program parameters are 1-D f64 containers: reject a matrix or
+        // scalar argument even when its element count happens to match.
+        if *dtype != DType::F64
+            || !matches!(shape, Shape::D1(_))
+            || shape.len() != prog.param_len(i)
+        {
+            return Err(Error::Invalid(format!(
+                "program kernel parameter {i}: program declares f64 x D1({}), request is \
+                 {dtype:?} x {shape:?}",
+                prog.param_len(i)
+            )));
+        }
+    }
+    let mut cp = exec::compiled_from_program(Arc::new(prog));
+    let args = placeholders(key);
+    let mut out = Vec::new();
+    exec::execute_into(&cp, &args, &mut out)?;
     cp.build_secs = t0.elapsed().as_secs_f64();
     Ok(Arc::new(cp))
 }

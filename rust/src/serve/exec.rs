@@ -20,7 +20,7 @@
 //! into a [`TapeProgram`] (see [`crate::coordinator::engine::eval`]):
 //! the instruction stream, register allocation and superinstruction
 //! selection are all fixed in the cached plan; a replay only rebinds
-//! leaf buffers. Replays draw their state from a [`ReplayArena`] —
+//! leaf buffers. Replays draw their state from a `ReplayArena` —
 //! step-output slot buffers sized at capture time, plus the raw
 //! leaf-binding scratch — recycled through a per-plan stash, so a
 //! steady-state cache-hit dispatch through [`execute_into`] performs
@@ -40,6 +40,7 @@ use crate::coordinator::engine::eval::{
 };
 use crate::coordinator::engine::validate_segp;
 use crate::coordinator::map::{Elemental, MapArgs};
+use crate::coordinator::program::Program;
 use crate::coordinator::node::{Data, NodeRef, Op};
 use crate::coordinator::ops::{BinOp, RedOp, UnOp};
 use crate::coordinator::plan::{FTree, Plan, Step};
@@ -273,6 +274,12 @@ pub struct CompiledPlan {
     /// Wall seconds spent capturing + optimising + compiling (paid once
     /// per cache miss; repeat invocations pay zero of this).
     pub(crate) build_secs: f64,
+    /// Whole-kernel captured program backing this plan, when the kernel
+    /// was registered as a program (`ServerBuilder::program`): a replay
+    /// dispatches the entire loop nest through
+    /// [`crate::coordinator::engine::program`] instead of the step
+    /// list.
+    pub(crate) program: Option<Arc<Program>>,
     /// Recycled replay arenas (pop on replay start, push back at end).
     arenas: Mutex<Vec<ReplayArena>>,
     replays: AtomicU64,
@@ -302,10 +309,45 @@ impl CompiledPlan {
     }
 
     pub fn arena_stats(&self) -> ArenaStats {
+        if let Some(p) = &self.program {
+            let s = p.stats();
+            return ArenaStats { replays: s.replays, arenas_created: s.states_created };
+        }
         ArenaStats {
             replays: self.replays.load(Ordering::Relaxed),
             arenas_created: self.arenas_created.load(Ordering::Relaxed),
         }
+    }
+
+    /// The captured program backing this plan, if it is a
+    /// whole-kernel-program plan.
+    pub fn program(&self) -> Option<&Arc<Program>> {
+        self.program.as_ref()
+    }
+}
+
+/// Wrap a captured whole-kernel [`Program`] as a cacheable plan: the
+/// program's parameters become the plan signature (f64 1-D containers)
+/// and [`execute_into`] dispatches straight to
+/// [`Program::invoke_data`].
+pub(crate) fn compiled_from_program(prog: Arc<Program>) -> CompiledPlan {
+    let params: Vec<ParamSpec> = (0..prog.n_params())
+        .map(|i| ParamSpec { dtype: DType::F64, shape: Shape::D1(prog.param_len(i)) })
+        .collect();
+    let out_len = prog.out_len();
+    CompiledPlan {
+        params,
+        steps: Vec::new(),
+        n_temps: 0,
+        slot_lens: Vec::new(),
+        // Never resolved: execute_into short-circuits to the program.
+        root: CSrc::Baked(Data::F64(Arc::new(Vec::new()))),
+        out_len,
+        build_secs: 0.0,
+        program: Some(prog),
+        arenas: Mutex::new(Vec::new()),
+        replays: AtomicU64::new(0),
+        arenas_created: AtomicU64::new(0),
     }
 }
 
@@ -533,6 +575,7 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
         root: root_src,
         out_len: root.shape.len(),
         build_secs: 0.0,
+        program: None,
         arenas: Mutex::new(Vec::new()),
         replays: AtomicU64::new(0),
         arenas_created: AtomicU64::new(0),
@@ -735,6 +778,11 @@ pub fn execute_into(cp: &CompiledPlan, args: &[Data], out: &mut Vec<f64>) -> Res
                 a.len()
             )));
         }
+    }
+    if let Some(prog) = &cp.program {
+        // Whole-kernel captured plan: the program executor owns the
+        // state recycling (its invoke is the zero-alloc replay).
+        return prog.invoke_data(args, out);
     }
     cp.replays.fetch_add(1, Ordering::Relaxed);
     let mut arena = match cp.arenas.lock().unwrap().pop() {

@@ -28,6 +28,11 @@
 //! 4. **Serving stats are first-class.** Throughput, p50/p99 latency,
 //!    batch sizes and cache hit rates per kernel ([`stats`]), rendered
 //!    in the same style as [`crate::bench::harness`] reports.
+//! 5. **Whole-kernel programs serve too.** [`ServerBuilder::program`]
+//!    registers a captured [`crate::coordinator::program::Program`] —
+//!    an entire `_for` loop nest (FFT stage loop, fixed-iteration CG)
+//!    compiled once per signature — and a cache-hit request replays the
+//!    whole kernel with zero heap allocations.
 //!
 //! # Quickstart
 //!
@@ -81,6 +86,18 @@ pub use stats::{KernelStats, ServeStats};
 /// signature from placeholder parameter containers. Runs on the
 /// dispatcher thread; must be capture-pure (lazy).
 pub type KernelFn = dyn Fn(&Context, &[Value]) -> Value + Send;
+
+/// A whole-kernel program builder ([`ServerBuilder::program`]): given a
+/// request signature, captures a multi-step
+/// [`Program`](crate::coordinator::program::Program) — loop nests,
+/// double-buffered carried state and all — that the plan cache stores
+/// like any compiled plan. A cache-hit request replays the **entire**
+/// kernel (e.g. a full FFT stage loop or a fixed-iteration CG solve)
+/// with zero heap allocations, extending the single-step zero-alloc
+/// guarantee of [`exec::execute_into`] to whole programs. Program
+/// parameters are 1-D f64 containers.
+pub type ProgramFn =
+    dyn Fn(&[(DType, Shape)]) -> crate::Result<crate::coordinator::program::Program> + Send;
 
 /// Server configuration.
 #[derive(Debug, Clone)]

@@ -35,7 +35,14 @@ use super::cache::{self, CacheStats, PlanCache, PlanKey};
 use super::exec::{self, CompiledPlan};
 use super::pool::{self, SharedPool};
 use super::stats::{KernelStats, ServeStats};
-use super::{Arg, KernelFn, ServeConfig, Value};
+use super::{Arg, KernelFn, ProgramFn, ServeConfig, Value};
+
+/// A registered kernel: an expression builder (captured through the
+/// coordinator DSL) or a whole-kernel program builder.
+enum KernelEntry {
+    Expr(Box<KernelFn>),
+    Prog(Box<ProgramFn>),
+}
 
 /// Submission failure modes surfaced to clients.
 pub enum SubmitError {
@@ -212,7 +219,7 @@ impl Client {
 /// Registration-time kernel list.
 pub struct ServerBuilder {
     config: ServeConfig,
-    kernels: Vec<(String, Box<KernelFn>)>,
+    kernels: Vec<(String, KernelEntry)>,
 }
 
 impl ServerBuilder {
@@ -228,7 +235,24 @@ impl ServerBuilder {
         name: &str,
         f: impl Fn(&Context, &[Value]) -> Value + Send + 'static,
     ) -> Self {
-        self.kernels.push((name.to_string(), Box::new(f)));
+        self.kernels.push((name.to_string(), KernelEntry::Expr(Box::new(f))));
+        self
+    }
+
+    /// Register a whole-kernel **program** under `name`: `f` captures a
+    /// [`crate::coordinator::program::Program`] for each distinct
+    /// argument signature (loop nests, double-buffered carried state,
+    /// baked tables). Cache hits replay the entire kernel — a full FFT
+    /// stage loop, a fixed-iteration CG solve — with zero heap
+    /// allocations. Program parameters are 1-D f64 containers.
+    pub fn program(
+        mut self,
+        name: &str,
+        f: impl Fn(&[(DType, Shape)]) -> crate::Result<crate::coordinator::program::Program>
+            + Send
+            + 'static,
+    ) -> Self {
+        self.kernels.push((name.to_string(), KernelEntry::Prog(Box::new(f))));
         self
     }
 
@@ -244,7 +268,7 @@ impl ServerBuilder {
             cache: Mutex::new(PlanCache::new(self.config.plan_cache_capacity)),
             opt: self.config.opt_level,
         });
-        let builders: Vec<Box<KernelFn>> = self.kernels.into_iter().map(|(_, f)| f).collect();
+        let builders: Vec<KernelEntry> = self.kernels.into_iter().map(|(_, f)| f).collect();
         let cfg = self.config;
         let shared2 = shared.clone();
         let handle = std::thread::Builder::new()
@@ -293,7 +317,12 @@ impl Drop for Server {
 // dispatcher
 // ---------------------------------------------------------------------
 
-fn dispatcher(rx: Receiver<Msg>, builders: Vec<Box<KernelFn>>, cfg: ServeConfig, shared: Arc<Shared>) {
+fn dispatcher(
+    rx: Receiver<Msg>,
+    builders: Vec<KernelEntry>,
+    cfg: ServeConfig,
+    shared: Arc<Shared>,
+) {
     // The capture context lives on this thread (the DAG is Rc-based);
     // compiled plans that leave it are graph-free and thread-safe.
     let ctx = Context::with_options(Options {
@@ -356,7 +385,7 @@ fn dispatcher(rx: Receiver<Msg>, builders: Vec<Box<KernelFn>>, cfg: ServeConfig,
 
 fn process_batch(
     batch: Vec<Request>,
-    builders: &[Box<KernelFn>],
+    builders: &[KernelEntry],
     ctx: &Context,
     pool: Option<&SharedPool>,
     shared: &Arc<Shared>,
@@ -387,7 +416,7 @@ fn process_batch(
 /// Cache lookup; on a miss, capture + compile + verify and insert.
 fn resolve_plan(
     key: &PlanKey,
-    builders: &[Box<KernelFn>],
+    builders: &[KernelEntry],
     ctx: &Context,
     shared: &Arc<Shared>,
 ) -> Result<Arc<CompiledPlan>> {
@@ -398,7 +427,10 @@ fn resolve_plan(
         .get(key.kernel)
         .ok_or_else(|| Error::Invalid(format!("serve: kernel {} not registered", key.kernel)))?;
     // A panicking builder must not take the dispatcher down.
-    let captured = catch_unwind(AssertUnwindSafe(|| cache::capture(ctx, builder, key)));
+    let captured = catch_unwind(AssertUnwindSafe(|| match builder {
+        KernelEntry::Expr(b) => cache::capture(ctx, b, key),
+        KernelEntry::Prog(b) => cache::capture_program(b, key),
+    }));
     let plan = match captured {
         Ok(r) => r?,
         Err(payload) => {

@@ -4,6 +4,8 @@
 //! swaps `arbb_spmv1`/`arbb_spmv2`/`mkl_dcsrmv`.
 
 use crate::coordinator::engine::pool::SharedPool;
+use crate::coordinator::ops::BinOp;
+use crate::coordinator::program::{PExpr, Program, ProgramBuilder};
 use crate::kernels::blas1::{axpy, dot, xpby};
 use crate::kernels::spmv::spmv_pooled;
 use crate::sparse::Csr;
@@ -95,9 +97,91 @@ pub fn cg_pooled(
 }
 
 /// Exactly `iters` CG iterations with no convergence test (see
-/// [`cg_core`] — this is the captured-solver reference).
+/// `cg_core` — this is the captured-solver reference).
 pub fn cg_fixed_iters(a: &Csr, b: &[f64], iters: usize) -> Vec<f64> {
     cg_core(a.nrows, b, None, iters, |x, out| a.spmv(x, out)).x
+}
+
+/// A fixed-iteration CG solver captured as one whole-kernel
+/// [`Program`]: the matrix is baked at capture, `b` is the parameter,
+/// and the iteration loop is a uniform `_for` whose body was recorded
+/// once — ArBB's `call()` model for §3.4's solver.
+pub struct CapturedCg {
+    pub n: usize,
+    pub iters: usize,
+    prog: Program,
+}
+
+/// Capture `iters` CG iterations over a baked matrix into a replayable
+/// program.
+///
+/// Bit-identity contract: every vector update runs through the tape VM
+/// with the same per-element arithmetic as [`crate::kernels::blas1`]
+/// (`x += α·p` lowers to a `MulAdd` pass; `p = β·p + r` uses the
+/// bitwise-commutative `(p·β) + r` form), reductions use
+/// [`crate::kernels::blas1::dot`] itself, and the spmv step replicates
+/// [`Csr::spmv`]'s row loop — so a replay matches [`cg_fixed_iters`]
+/// bit-for-bit. The one semantic difference: a captured program has no
+/// data-dependent control flow, so the early break `cg_core` takes on
+/// exactly-converged systems (`r² = 0` or `pᵀAp = 0`) does not exist
+/// here; on such degenerate inputs the replay divides by zero where the
+/// host driver stops (ArBB's fixed-trip `_for` has the same property).
+pub fn cg_capture(a: &Csr, iters: usize) -> CapturedCg {
+    let n = a.nrows;
+    assert_eq!(a.nrows, a.ncols, "cg: matrix must be square");
+    let mut pb = ProgramBuilder::new();
+    let b = pb.param(n);
+    let m = pb.bake_csr(a);
+    let x = pb.carried(n);
+    let r = pb.carried(n);
+    let p = pb.carried(n);
+    // x0 = 0, r0 = p0 = b, r2 = r·r
+    pb.assign(x, PExpr::lit(0.0));
+    pb.assign(r, PExpr::read(b));
+    pb.assign(p, PExpr::read(b));
+    let r2 = pb.dot(r, r);
+    pb.repeat(iters, |pb| {
+        let ap = pb.spmv(&m, p);
+        let pap = pb.dot(p, ap);
+        let alpha = pb.sbin(BinOp::Div, r2, pap);
+        // x += alpha * p ; r -= alpha * ap   (in-place slot reuse)
+        pb.update(x, PExpr::acc() + PExpr::splat(alpha) * PExpr::read(p));
+        pb.update(r, PExpr::acc() - PExpr::splat(alpha) * PExpr::read(ap));
+        let r2n = pb.dot(r, r);
+        let beta = pb.sbin(BinOp::Div, r2n, r2);
+        // p = r + beta * p  (computed as (p*beta) + r; + and * are
+        // bitwise commutative, so this matches blas1::xpby exactly)
+        pb.update(p, PExpr::acc() * PExpr::splat(beta) + PExpr::read(r));
+        pb.set_scalar(r2, r2n);
+    });
+    pb.output(x);
+    let prog = pb.finish().expect("cg capture is well-formed");
+    CapturedCg { n, iters, prog }
+}
+
+impl CapturedCg {
+    /// Replay the captured solve for a fresh right-hand side.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.solve_into(b, &mut out).expect("captured CG replay");
+        out
+    }
+
+    /// Replay into `out` (capacity reused; warm replays allocate
+    /// nothing).
+    pub fn solve_into(&self, b: &[f64], out: &mut Vec<f64>) -> crate::Result<()> {
+        self.prog.invoke_into(&[b], out)
+    }
+
+    /// The underlying captured program (serving registration, stats).
+    pub fn program(&self) -> &Program {
+        &self.prog
+    }
+
+    /// Consume the solver, handing the program to a server registry.
+    pub fn into_program(self) -> Program {
+        self.prog
+    }
 }
 
 /// Residual `‖A x − b‖₂` (verification helper).
@@ -166,5 +250,38 @@ mod tests {
         let res = cg_serial(&a, &b, 1e-30, 2);
         assert_eq!(res.iterations, 2);
         assert!(!res.converged);
+    }
+
+    #[test]
+    fn captured_cg_bit_identical_to_fixed_iters() {
+        for &(n, bw, iters) in &[(64usize, 3usize, 5usize), (128, 7, 12)] {
+            let a = banded_spd(n, bw, 33 + n as u64);
+            let b = rand_b(n, 71 + n as u64);
+            let want = cg_fixed_iters(&a, &b, iters);
+            let cap = cg_capture(&a, iters);
+            let got = cap.solve(&b);
+            for k in 0..n {
+                assert_eq!(
+                    got[k].to_bits(),
+                    want[k].to_bits(),
+                    "n={n} iters={iters} x[{k}]: {} vs {}",
+                    got[k],
+                    want[k]
+                );
+            }
+            // replays recycle one state and stay deterministic
+            let again = cap.solve(&b);
+            assert_eq!(got, again);
+            assert_eq!(cap.program().stats().states_created, 1);
+            assert_eq!(cap.program().loop_trips(), vec![iters]);
+        }
+    }
+
+    #[test]
+    fn captured_cg_zero_iters_returns_zero() {
+        let a = banded_spd(16, 2, 5);
+        let cap = cg_capture(&a, 0);
+        let b = rand_b(16, 8);
+        assert_eq!(cap.solve(&b), vec![0.0; 16]);
     }
 }

@@ -7,6 +7,9 @@ pub mod cg;
 pub mod gauss_seidel;
 pub mod jacobi;
 
-pub use cg::{cg_fixed_iters, cg_mkl, cg_pooled, cg_serial, cg_with, residual_norm, CgResult};
+pub use cg::{
+    cg_capture, cg_fixed_iters, cg_mkl, cg_pooled, cg_serial, cg_with, residual_norm, CapturedCg,
+    CgResult,
+};
 pub use gauss_seidel::gauss_seidel;
 pub use jacobi::{jacobi, IterResult};

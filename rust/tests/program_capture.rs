@@ -1,0 +1,274 @@
+//! Program-capture subsystem property tests.
+//!
+//! The contract under test (ISSUE 4): the mod2f FFT runs as ONE
+//! captured program — single capture, N replays, no `cat`
+//! materialisation in the stage loop — bit-identical to the retained
+//! per-stage eager path and allclose to the O(n²) DFT oracle across
+//! power-of-two sizes; captured fixed-iteration CG is bit-identical to
+//! the host `cg_core` driver; and both replay through the serving
+//! subsystem as whole-kernel program plans.
+
+use arbb_rs::coordinator::{Context, CplxV};
+use arbb_rs::euroben::mod2f;
+use arbb_rs::fftlib::dft_ref;
+use arbb_rs::serve::{Arg, ServeConfig, Server};
+use arbb_rs::solvers::{cg_capture, cg_fixed_iters};
+use arbb_rs::sparse::banded_spd;
+use arbb_rs::util::XorShift64;
+
+fn rand_sig(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift64::new(seed);
+    (
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect(),
+    )
+}
+
+fn eager_fft(n: usize, re: &[f64], im: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let ctx = Context::new();
+    let plan = mod2f::plan(&ctx, n);
+    let data = CplxV { re: ctx.bind1(re), im: ctx.bind1(im) };
+    let out = mod2f::arbb_fft(&plan, &data);
+    (out.re.to_vec(), out.im.to_vec())
+}
+
+/// Captured FFT vs the retained eager path (bit-identical) and the
+/// direct DFT (allclose) across every power of two in 2..=4096.
+#[test]
+fn captured_fft_bitwise_vs_eager_and_allclose_vs_dft() {
+    let mut n = 2usize;
+    while n <= 4096 {
+        let (re, im) = rand_sig(n, 0xF0 + n as u64);
+        let (ere, eim) = eager_fft(n, &re, &im);
+        let fp = mod2f::capture_fft(n);
+        let (cre, cim) = fp.run(&re, &im);
+
+        for k in 0..n {
+            assert_eq!(
+                cre[k].to_bits(),
+                ere[k].to_bits(),
+                "captured re diverges from eager at n={n} k={k}: {} vs {}",
+                cre[k],
+                ere[k]
+            );
+            assert_eq!(
+                cim[k].to_bits(),
+                eim[k].to_bits(),
+                "captured im diverges from eager at n={n} k={k}"
+            );
+        }
+
+        let (wre, wim) = dft_ref::dft(&re, &im);
+        let tol = 1e-9 * (n as f64).sqrt();
+        for k in 0..n {
+            assert!(
+                (cre[k] - wre[k]).abs() <= tol + 1e-9 * wre[k].abs(),
+                "re vs dft n={n} k={k}: {} vs {}",
+                cre[k],
+                wre[k]
+            );
+            assert!(
+                (cim[k] - wim[k]).abs() <= tol + 1e-9 * wim[k].abs(),
+                "im vs dft n={n} k={k}"
+            );
+        }
+        n <<= 1;
+    }
+}
+
+/// Single capture, N replays: repeated invocations are bitwise
+/// deterministic, recycle one state arena, and reuse the output
+/// buffer's capacity.
+#[test]
+fn captured_fft_single_capture_many_replays() {
+    let n = 1024;
+    let fp = mod2f::capture_fft(n);
+    let prog = fp.program();
+    // No cat materialisation: the whole stage loop owns 4 fixed slots
+    // (front/back per split-complex plane) and one _for node.
+    assert_eq!(prog.n_slots(), 4);
+    assert_eq!(prog.n_pairs(), 2);
+    assert_eq!(prog.loop_trips(), vec![10]);
+    assert_eq!(prog.slot_elems(), 4 * n);
+
+    let mut out = Vec::new();
+    let (re, im) = rand_sig(n, 5);
+    fp.run_into(&re, &im, &mut out).unwrap();
+    let first = out.clone();
+    let cap = out.capacity();
+    let ptr = out.as_ptr();
+    for seed in 0..4u64 {
+        let (re2, im2) = rand_sig(n, 5 + 97 * seed);
+        fp.run_into(&re2, &im2, &mut out).unwrap();
+    }
+    fp.run_into(&re, &im, &mut out).unwrap();
+    assert_eq!(out, first, "replay must be bitwise deterministic");
+    assert_eq!(out.capacity(), cap);
+    assert_eq!(out.as_ptr(), ptr, "steady-state output buffer must be reused");
+    let st = prog.stats();
+    assert_eq!(st.replays, 6);
+    assert_eq!(st.states_created, 1, "sequential replays share one state arena");
+}
+
+/// Captured fixed-iteration CG vs the host cg_core driver, bit for bit,
+/// across sizes, bandwidths and trip counts.
+#[test]
+fn captured_cg_bitwise_vs_cg_core() {
+    for &(n, bw, iters) in
+        &[(32usize, 2usize, 3usize), (64, 5, 8), (200, 9, 25), (256, 15, 40)]
+    {
+        let a = banded_spd(n, bw, n as u64 ^ 0xC6);
+        let mut rng = XorShift64::new(n as u64 + 1);
+        let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let want = cg_fixed_iters(&a, &b, iters);
+        let cap = cg_capture(&a, iters);
+        let got = cap.solve(&b);
+        for k in 0..n {
+            assert_eq!(
+                got[k].to_bits(),
+                want[k].to_bits(),
+                "captured CG diverges at n={n} bw={bw} iters={iters} x[{k}]: {} vs {}",
+                got[k],
+                want[k]
+            );
+        }
+    }
+}
+
+/// Pooled whole-program replay (element-wise chunks and spmv row panels
+/// fanned over the shared worker pool) is bit-identical to serial
+/// replay: chunks write disjoint ranges and reductions stay serial.
+#[test]
+fn pooled_replay_is_bit_identical_to_serial() {
+    // FFT large enough that stage regions split into multiple chunks.
+    let n = 1usize << 15;
+    let fp = mod2f::capture_fft(n);
+    let (re, im) = rand_sig(n, 99);
+    let (sre, sim) = fp.run(&re, &im);
+    let pool = arbb_rs::coordinator::engine::pool::shared(4);
+    let mut out = Vec::new();
+    fp.program().invoke_pooled(&[&re, &im], &mut out, &pool).unwrap();
+    for k in 0..n {
+        assert_eq!(out[k].to_bits(), sre[k].to_bits(), "pooled fft re k={k}");
+        assert_eq!(out[n + k].to_bits(), sim[k].to_bits(), "pooled fft im k={k}");
+    }
+
+    // CG large enough that the spmv row sweep splits into panels.
+    let m = 3000usize;
+    let a = banded_spd(m, 5, 7);
+    let cap = cg_capture(&a, 4);
+    let mut rng = XorShift64::new(12);
+    let b: Vec<f64> = (0..m).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let serial = cap.solve(&b);
+    let mut pooled = Vec::new();
+    cap.program().invoke_pooled(&[&b], &mut pooled, &pool).unwrap();
+    for k in 0..m {
+        assert_eq!(pooled[k].to_bits(), serial[k].to_bits(), "pooled cg x[{k}]");
+    }
+}
+
+/// Whole-kernel program plans through the serving subsystem: a
+/// registered FFT program and a registered CG program serve requests
+/// with plan-cache hits on repeat signatures.
+#[test]
+fn serve_program_kernels_end_to_end() {
+    let n = 256usize;
+    let a = banded_spd(n, 4, 9);
+    let a2 = a.clone();
+    let iters = 6usize;
+    let server = Server::builder(ServeConfig::serial())
+        .program("fft", |sig| {
+            if sig.len() != 2 {
+                return Err(arbb_rs::Error::Invalid("fft takes (re, im)".into()));
+            }
+            let n = sig[0].1.len();
+            if !n.is_power_of_two() || n < 2 || sig[1].1.len() != n {
+                return Err(arbb_rs::Error::Invalid(
+                    "fft planes must be equal power-of-two lengths".into(),
+                ));
+            }
+            Ok(mod2f::capture_fft(n).into_program())
+        })
+        .program("cg6", move |sig| {
+            if sig.len() != 1 || sig[0].1.len() != a2.nrows {
+                return Err(arbb_rs::Error::Invalid("cg6 takes one rhs of matrix size".into()));
+            }
+            Ok(cg_capture(&a2, iters).into_program())
+        })
+        .start();
+    let client = server.client();
+
+    // FFT request vs the eager reference.
+    let (re, im) = rand_sig(n, 77);
+    let (ere, eim) = eager_fft(n, &re, &im);
+    let out = client
+        .call("fft", vec![Arg::vec(re.clone()), Arg::vec(im.clone())])
+        .unwrap();
+    assert_eq!(out.len(), 2 * n);
+    for k in 0..n {
+        assert_eq!(out[k].to_bits(), ere[k].to_bits(), "served fft re k={k}");
+        assert_eq!(out[n + k].to_bits(), eim[k].to_bits(), "served fft im k={k}");
+    }
+    // Second call with the same shapes: plan-cache hit.
+    let out2 = client.call("fft", vec![Arg::vec(re), Arg::vec(im)]).unwrap();
+    assert_eq!(out, out2);
+
+    // CG request vs the host fixed-iteration driver.
+    let mut rng = XorShift64::new(3);
+    let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let want = cg_fixed_iters(&a, &b, iters);
+    let x = client.call("cg6", vec![Arg::vec(b.clone())]).unwrap();
+    for k in 0..n {
+        assert_eq!(x[k].to_bits(), want[k].to_bits(), "served cg x[{k}]");
+    }
+    let _ = client.call("cg6", vec![Arg::vec(b)]).unwrap();
+
+    let cs = client.cache_stats();
+    assert_eq!(cs.misses, 2, "one capture per (kernel, signature)");
+    assert_eq!(cs.hits, 2, "repeat signatures replay the cached program");
+
+    // Whole-program replays recycle arenas: replays grow, states don't.
+    let (replays, arenas) = client.arena_totals();
+    assert!(replays >= 4, "replays={replays}");
+    assert!(arenas <= 2, "arenas={arenas}");
+
+    // Malformed program requests are clean errors, not panics.
+    assert!(client.call("fft", vec![Arg::vec(vec![0.0; 3])]).is_err());
+    assert!(
+        client.call("cg6", vec![Arg::ints(vec![0; n])]).is_err(),
+        "i64 arguments to a program kernel must be rejected"
+    );
+    assert!(
+        client
+            .call(
+                "fft",
+                vec![Arg::mat(vec![0.0; 2 * n], 2, n), Arg::vec(vec![0.0; 2 * n])],
+            )
+            .is_err(),
+        "matrix arguments to 1-D program parameters must be rejected even when the \
+         element count matches"
+    );
+}
+
+/// The serving shape/dtype key still separates program plans: different
+/// FFT sizes capture different programs under different cache keys.
+#[test]
+fn serve_program_plans_key_by_shape() {
+    let server = Server::builder(ServeConfig::serial())
+        .program("fft", |sig| {
+            let n = sig[0].1.len();
+            if sig.len() != 2 || sig[1].1.len() != n || !n.is_power_of_two() || n < 2 {
+                return Err(arbb_rs::Error::Invalid("bad fft signature".into()));
+            }
+            Ok(mod2f::capture_fft(n).into_program())
+        })
+        .start();
+    let client = server.client();
+    for &n in &[64usize, 128, 64, 128] {
+        let (re, im) = rand_sig(n, n as u64);
+        let out = client.call("fft", vec![Arg::vec(re), Arg::vec(im)]).unwrap();
+        assert_eq!(out.len(), 2 * n);
+    }
+    let cs = client.cache_stats();
+    assert_eq!((cs.misses, cs.hits), (2, 2));
+}

@@ -16,8 +16,10 @@ use std::sync::Arc;
 use arbb_rs::coordinator::node::Data;
 use arbb_rs::coordinator::{Context, DType, OptLevel, Shape};
 use arbb_rs::euroben::mod2as::{arbb_spmv2, bind_csr};
-use arbb_rs::serve::{cache, exec, KernelFn, PlanKey, Value};
-use arbb_rs::sparse::random_csr;
+use arbb_rs::euroben::mod2f;
+use arbb_rs::serve::{cache, exec, KernelFn, PlanKey, ProgramFn, Value};
+use arbb_rs::solvers::cg_capture;
+use arbb_rs::sparse::{banded_spd, random_csr};
 use arbb_rs::util::XorShift64;
 
 struct CountingAlloc;
@@ -201,4 +203,76 @@ fn steady_state_sparse_spmv_replay_is_allocation_free() {
     );
     let st = cp.arena_stats();
     assert_eq!(st.arenas_created, 1, "sparse replays must recycle one arena");
+}
+
+#[test]
+fn steady_state_whole_program_fft_replay_is_allocation_free() {
+    // The whole mod2f stage loop as ONE captured program plan: a
+    // cache-hit serve replay runs the tangle gather plus log2(n) staged
+    // butterfly stages (double-buffered planes, flip per stage) without
+    // touching the heap — the per-stage cat(up, down) buffer of the
+    // eager path is gone.
+    let n = 2048usize;
+    let builder: Box<ProgramFn> = Box::new(|sig| {
+        let n = sig[0].1.len();
+        Ok(mod2f::capture_fft(n).into_program())
+    });
+    let key = PlanKey {
+        kernel: 5,
+        args: vec![(DType::F64, Shape::D1(n)), (DType::F64, Shape::D1(n))],
+        opt: OptLevel::O2,
+    };
+    let cp = cache::capture_program(&builder, &key).unwrap();
+
+    let re = rand_vec(n, 11);
+    let im = rand_vec(n, 12);
+    let args = [Data::F64(Arc::new(re)), Data::F64(Arc::new(im))];
+    let mut out = Vec::new();
+    for _ in 0..3 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    assert_eq!(out.len(), 2 * n);
+    let before = allocs();
+    for _ in 0..10 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "steady-state whole-program FFT replay must not touch the heap allocator"
+    );
+    let st = cp.arena_stats();
+    // 1 capture warm-up + 3 warm-ups + 10 measured.
+    assert_eq!(st.replays, 14);
+    assert_eq!(st.arenas_created, 1, "program replays must recycle one state");
+}
+
+#[test]
+fn steady_state_whole_program_cg_replay_is_allocation_free() {
+    // A fixed-iteration CG solve as one captured program: spmv + two
+    // dots + three vector updates per iteration, 8 iterations, all out
+    // of the recycled state arena.
+    let n = 500usize;
+    let a = banded_spd(n, 6, 21);
+    let builder: Box<ProgramFn> = Box::new(move |_sig| Ok(cg_capture(&a, 8).into_program()));
+    let key = PlanKey { kernel: 6, args: vec![(DType::F64, Shape::D1(n))], opt: OptLevel::O2 };
+    let cp = cache::capture_program(&builder, &key).unwrap();
+
+    let b = rand_vec(n, 13);
+    let args = [Data::F64(Arc::new(b))];
+    let mut out = Vec::new();
+    for _ in 0..3 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    assert_eq!(out.len(), n);
+    let before = allocs();
+    for _ in 0..10 {
+        exec::execute_into(&cp, &args, &mut out).unwrap();
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "steady-state whole-program CG replay must not touch the heap allocator"
+    );
+    assert_eq!(cp.arena_stats().arenas_created, 1);
 }
