@@ -8,15 +8,20 @@
 //! 6. O2 vs O3-with-1-worker (pure runtime overhead of threading);
 //! 7. tape VM vs reference tree interpreter (the register-tape
 //!    executor; also emits `BENCH_eval.json` so the perf trajectory is
-//!    tracked across PRs).
+//!    tracked across PRs);
+//! 8. kernel backend: scalar reference vs SIMD (AVX2) per block-kernel
+//!    class (the vector half of the paper's "thread-level and
+//!    vector-level parallelism").
 //!
 //! `cargo bench --bench ablations -- [--full | --smoke]`
 //!
-//! `--smoke` runs only the tape-vs-tree section with short timings and
-//! writes `BENCH_eval.json` — the CI perf-tracking mode.
+//! `--smoke` runs the tape-vs-tree and backend sections with short
+//! timings and writes `BENCH_eval.json` — the CI perf-tracking mode.
 
 use arbb_rs::bench::{mflops, render_table, time_best, workloads, Series};
+use arbb_rs::coordinator::engine::backend::{self, Backend};
 use arbb_rs::coordinator::engine::eval::{eval_range, Scratch, Tape};
+use arbb_rs::coordinator::ops::RedOp;
 use arbb_rs::coordinator::{Context, Options, OptLevel};
 use arbb_rs::euroben::mod2am::arbb_mxm2b;
 use arbb_rs::kernels::gemm_flops;
@@ -30,10 +35,14 @@ fn smoke() -> bool {
     std::env::args().any(|a| a == "--smoke")
 }
 
+/// Elements in the tape-vs-tree workload (also recorded as `n` in
+/// `BENCH_eval.json`).
+const EVAL_N: usize = 1 << 16;
+
 /// Section 7: tape VM vs tree interpreter on the depth-12 fused chain.
 /// Returns (tree_ns_per_elem, tape_ns_per_elem).
 fn tape_vs_tree(bench_t: f64) -> (f64, f64) {
-    let n: usize = 1 << 16;
+    let n: usize = EVAL_N;
     let fx = workloads::eval_chain(n, 42);
     let tape = Tape::compile(&fx).expect("chain must compile");
     let mut out = vec![0.0; n];
@@ -44,10 +53,86 @@ fn tape_vs_tree(bench_t: f64) -> (f64, f64) {
     println!("  tape VM vs tree interpreter (depth-12 chain, {n} elems):");
     println!("    tree  {tree_ns:>8.3} ns/elem");
     println!("    tape  {tape_ns:>8.3} ns/elem   ({:.2}x)", t_tree / t_tape);
+    (tree_ns, tape_ns)
+}
+
+/// Time one kernel-class body against two backends.
+fn bench_pair<F: FnMut(&'static dyn Backend)>(
+    mut f: F,
+    scalar: &'static dyn Backend,
+    simd: &'static dyn Backend,
+    bench_t: f64,
+) -> (f64, f64) {
+    let ts = time_best(|| f(scalar), bench_t, 3);
+    let tv = time_best(|| f(simd), bench_t, 3);
+    (ts, tv)
+}
+
+/// Section 8: scalar vs SIMD backend per block-kernel class, on an
+/// L1-resident block (compute-bound, where ISA width shows). Returns
+/// `(class, scalar_ns_per_elem, simd_ns_per_elem)` rows; when no SIMD
+/// ISA is present both columns time the scalar backend.
+fn backend_kernels(bench_t: f64) -> Vec<(&'static str, f64, f64)> {
+    let n = 4096usize;
+    let a = rand_vec(n, 11);
+    let b = rand_vec(n, 12);
+    let mut d = rand_vec(n, 13);
+    let mut rng = XorShift64::new(14);
+    let idx: Vec<i64> = (0..n).map(|_| rng.below(n) as i64).collect();
+    let scalar = backend::scalar();
+    let simd = backend::simd().unwrap_or_else(backend::scalar);
+    let mut sink = 0.0f64;
+
+    let mut rows: Vec<(&'static str, f64, f64)> = Vec::new();
+    let (ts, tv) = bench_pair(|bk| bk.mul_add(&mut d, &a, &b), scalar, simd, bench_t);
+    rows.push(("mul_add", ts, tv));
+    let (ts, tv) =
+        bench_pair(|bk| bk.scale_add_const(&mut d, 0.999_999, 1e-9), scalar, simd, bench_t);
+    rows.push(("scale_add_const", ts, tv));
+    let (ts, tv) = bench_pair(|bk| sink += bk.fold_slice(RedOp::Sum, &a), scalar, simd, bench_t);
+    rows.push(("fold_sum", ts, tv));
+    let (ts, tv) = bench_pair(|bk| sink += bk.gather_mul_sum(&a, &b, &idx), scalar, simd, bench_t);
+    rows.push(("gather_mul_sum", ts, tv));
+    std::hint::black_box(sink);
+    std::hint::black_box(&d);
+
+    println!(
+        "  backend kernel classes, {n}-elem block (scalar vs {}):",
+        simd.name()
+    );
+    for (name, ts, tv) in rows.iter_mut() {
+        *ts = *ts * 1e9 / n as f64;
+        *tv = *tv * 1e9 / n as f64;
+        println!(
+            "    {name:<16} scalar {ts:>7.3} ns/elem   {:<6} {tv:>7.3} ns/elem   ({:.2}x)",
+            simd.name(),
+            *ts / *tv
+        );
+    }
+    rows
+}
+
+/// Write `BENCH_eval.json`: tape-vs-tree plus the per-class backend
+/// timings, stamped with the active backend name.
+fn write_bench_json(tree_ns: f64, tape_ns: f64, kernels: &[(&'static str, f64, f64)]) {
+    let mut kjson = String::new();
+    for (i, (name, ts, tv)) in kernels.iter().enumerate() {
+        if i > 0 {
+            kjson.push(',');
+        }
+        kjson.push_str(&format!(
+            "\"{name}\":{{\"scalar_ns_per_elem\":{ts:.4},\"simd_ns_per_elem\":{tv:.4},\
+             \"speedup\":{:.4}}}",
+            ts / tv
+        ));
+    }
     let json = format!(
-        "{{\"bench\":\"eval_tape_vs_tree\",\"n\":{n},\"tree_ns_per_elem\":{tree_ns:.4},\
-         \"tape_ns_per_elem\":{tape_ns:.4},\"speedup\":{:.4}}}\n",
-        t_tree / t_tape
+        "{{\"bench\":\"eval_tape_vs_tree\",\"n\":{},\"backend\":\"{}\",\
+         \"tree_ns_per_elem\":{tree_ns:.4},\"tape_ns_per_elem\":{tape_ns:.4},\
+         \"speedup\":{:.4},\"backend_kernels\":{{{kjson}}}}}\n",
+        EVAL_N,
+        backend::active().name(),
+        tree_ns / tape_ns
     );
     // Anchor to the repository root (cargo runs bench binaries with the
     // *package* dir as cwd, which is rust/ in this workspace).
@@ -56,7 +141,6 @@ fn tape_vs_tree(bench_t: f64) -> (f64, f64) {
         Ok(()) => println!("    wrote {path}"),
         Err(e) => println!("    could not write {path}: {e}"),
     }
-    (tree_ns, tape_ns)
 }
 
 fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
@@ -67,8 +151,11 @@ fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
 fn main() {
     let bench_t = if full() { 0.4 } else { 0.15 };
     if smoke() {
-        println!("# Ablations (smoke) — tape VM perf tracking\n");
-        tape_vs_tree(0.1);
+        println!("# Ablations (smoke) — tape VM + backend perf tracking\n");
+        let (tree_ns, tape_ns) = tape_vs_tree(0.1);
+        println!();
+        let kernels = backend_kernels(0.1);
+        write_bench_json(tree_ns, tape_ns, &kernels);
         println!("\n# ablations smoke done");
         return;
     }
@@ -106,7 +193,7 @@ fn main() {
             let ctx = Context::serial();
             let am = ctx.bind2(&a, n, n);
             let bm = ctx.bind2(&b, n, n);
-            let t = time_best(|| drop(arbb_mxm2b(&ctx, &am, &bm, u).to_vec()), bench_t, 2);
+            let t = time_best(|| drop(arbb_mxm2b(&am, &bm, u).to_vec()), bench_t, 2);
             println!("    u={u:<3} {:>10.1} MFlop/s", mflops(fl, t));
             s.push(u as f64, mflops(fl, t));
         }
@@ -215,10 +302,17 @@ fn main() {
     }
 
     // ---------- 7. tape VM vs tree interpreter ----------
-    {
+    let (tree_ns, tape_ns) = {
         println!();
-        tape_vs_tree(bench_t);
-    }
+        tape_vs_tree(bench_t)
+    };
+
+    // ---------- 8. kernel backend: scalar vs SIMD ----------
+    let kernels = {
+        println!();
+        backend_kernels(bench_t)
+    };
+    write_bench_json(tree_ns, tape_ns, &kernels);
 
     println!("\n# ablations done");
 }

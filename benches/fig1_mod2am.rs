@@ -6,25 +6,33 @@
 //! (c) scaling of arbb_mxm2b with thread count, several sizes;
 //! (d) scaling of the OpenMP port, several sizes.
 //!
-//! `cargo bench --bench fig1_mod2am -- [--figure a|b|c|d|all] [--full]`
+//! `cargo bench --bench fig1_mod2am -- [--figure a|b|c|d|all] [--full | --smoke]`
 //! Quick mode caps n (mxm0 is per-element-dispatch slow by design).
+//!
+//! `--smoke` runs a short dgemm comparison — serial blocked vs pooled
+//! row-panels vs the DSL rank-1 path through the kernel backend layer
+//! (active backend and forced scalar) — and writes `BENCH_dgemm.json`,
+//! the CI perf-tracking mode for the dense path (companion to the
+//! eval/spmv/fft smokes).
 
 use arbb_rs::bench::{calibrate, mflops, render_table, time_best, workloads, Series};
-use arbb_rs::coordinator::engine::pool;
-use arbb_rs::coordinator::{Context, Options};
+use arbb_rs::coordinator::engine::{backend, pool};
+use arbb_rs::coordinator::{BackendSel, Context, Options};
 use arbb_rs::euroben::mod2am::*;
 use arbb_rs::kernels::{dgemm, dgemm_naive, dgemm_pooled, gemm_flops};
-use arbb_rs::util::XorShift64;
+use arbb_rs::util::{assert_allclose, XorShift64};
 
 struct Args {
     figure: String,
     full: bool,
+    smoke: bool,
 }
 
 fn parse_args() -> Args {
     let argv: Vec<String> = std::env::args().collect();
     let mut figure = "all".to_string();
     let mut full = false;
+    let mut smoke = false;
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
@@ -33,11 +41,94 @@ fn parse_args() -> Args {
                 i += 1;
             }
             "--full" => full = true,
+            "--smoke" => smoke = true,
             _ => {}
         }
         i += 1;
     }
-    Args { figure, full }
+    Args { figure, full, smoke }
+}
+
+/// CI smoke mode: dgemm serial vs pooled vs the backend-routed DSL
+/// rank-1 path on one mid-size multiply; emits `BENCH_dgemm.json` so
+/// the dense-path perf trajectory — and which kernel backend produced
+/// it — is tracked across PRs.
+fn smoke_run() {
+    let n = 384usize;
+    let a = rand_mat(n, 1);
+    let b = rand_mat(n, 2);
+    let mut c = vec![0.0; n * n];
+    let fl = gemm_flops(n, n, n);
+    let bench_t = 0.1;
+
+    let t_serial = time_best(|| dgemm(n, n, n, &a, &b, &mut c), bench_t, 3);
+    let want = c.clone();
+
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let p = pool::shared(workers);
+    let t_pool = time_best(|| dgemm_pooled(n, n, n, &a, &b, &mut c, &p), bench_t, 3);
+
+    // DSL rank-1 path: every inner block loop (Axpy superinstruction,
+    // accumulate passes) routes through the kernel backend.
+    let ctx = Context::serial();
+    let am = ctx.bind2(&a, n, n);
+    let bm = ctx.bind2(&b, n, n);
+    let got = arbb_mxm2b(&am, &bm, 8).to_vec();
+    assert_allclose(&got, &want, 1e-9, 1e-10, "smoke mxm2b vs blocked dgemm");
+    let t_dsl = time_best(|| drop(arbb_mxm2b(&am, &bm, 8).to_vec()), bench_t, 2);
+
+    // Forced-scalar leg of the same path: the backend ablation, and a
+    // bitwise cross-check of the backend contract on a real kernel.
+    let sctx = Context::serial();
+    sctx.set_backend(BackendSel::Scalar);
+    let sam = sctx.bind2(&a, n, n);
+    let sbm = sctx.bind2(&b, n, n);
+    let sgot = arbb_mxm2b(&sam, &sbm, 8).to_vec();
+    for (i, (x, y)) in got.iter().zip(&sgot).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "backend {} diverges from scalar at element {i}",
+            ctx.backend_name()
+        );
+    }
+    let t_dsl_scalar = time_best(|| drop(arbb_mxm2b(&sam, &sbm, 8).to_vec()), bench_t, 2);
+
+    let bk = backend::active().name();
+    println!("# fig1_mod2am (smoke) — dense-path perf tracking\n");
+    println!("  n={n} workers={workers} backend={bk}");
+    println!("  dgemm serial       {:>10.1} MFlop/s", mflops(fl, t_serial));
+    println!(
+        "  dgemm pooled       {:>10.1} MFlop/s  ({:.2}x vs serial)",
+        mflops(fl, t_pool),
+        t_serial / t_pool
+    );
+    println!("  arbb_mxm2b ({bk:<6}) {:>8.1} MFlop/s", mflops(fl, t_dsl));
+    println!(
+        "  arbb_mxm2b (scalar) {:>8.1} MFlop/s  (backend speedup {:.2}x)",
+        mflops(fl, t_dsl_scalar),
+        t_dsl_scalar / t_dsl
+    );
+
+    let json = format!(
+        "{{\"bench\":\"dgemm_serial_vs_pooled_vs_backend\",\"n\":{n},\"workers\":{workers},\
+         \"backend\":\"{bk}\",\"serial_mflops\":{:.2},\"pooled_mflops\":{:.2},\
+         \"pooled_speedup\":{:.4},\"dsl_backend_mflops\":{:.2},\"dsl_scalar_mflops\":{:.2},\
+         \"backend_speedup\":{:.4}}}\n",
+        mflops(fl, t_serial),
+        mflops(fl, t_pool),
+        t_serial / t_pool,
+        mflops(fl, t_dsl),
+        mflops(fl, t_dsl_scalar),
+        t_dsl_scalar / t_dsl,
+    );
+    // Anchor to the repository root (cargo runs bench binaries with the
+    // *package* dir as cwd, which is rust/ in this workspace).
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dgemm.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n  wrote {path}"),
+        Err(e) => println!("\n  could not write {path}: {e}"),
+    }
+    println!("\n# fig1_mod2am smoke done");
 }
 
 fn rand_mat(n: usize, seed: u64) -> Vec<f64> {
@@ -57,6 +148,10 @@ fn blocked_bytes(n: usize) -> f64 {
 
 fn main() {
     let args = parse_args();
+    if args.smoke {
+        smoke_run();
+        return;
+    }
     let cal = calibrate();
     let model = cal.node_model();
     println!("# Fig 1 — mod2am | calibration: {}", cal.summary());
@@ -107,16 +202,16 @@ fn main() {
 
             let t1 = time_best(|| drop(arbb_mxm1(&ctx, &am, &bm).to_vec()), bench_t, 2);
             s1.push(n as f64, mflops(fl, t1));
-            let t2a = time_best(|| drop(arbb_mxm2a(&ctx, &am, &bm).to_vec()), bench_t, 2);
+            let t2a = time_best(|| drop(arbb_mxm2a(&am, &bm).to_vec()), bench_t, 2);
             s2a.push(n as f64, mflops(fl, t2a));
-            let t2b = time_best(|| drop(arbb_mxm2b(&ctx, &am, &bm, 8).to_vec()), bench_t, 2);
+            let t2b = time_best(|| drop(arbb_mxm2b(&am, &bm, 8).to_vec()), bench_t, 2);
             s2b.push(n as f64, mflops(fl, t2b));
 
             // simulated 40T for mxm2b
             let rctx = Context::with_options(Options { record: true, ..Default::default() });
             let am2 = rctx.bind2(&a, n, n);
             let bm2 = rctx.bind2(&b, n, n);
-            let _ = arbb_mxm2b(&rctx, &am2, &bm2, 8).to_vec();
+            let _ = arbb_mxm2b(&am2, &bm2, 8).to_vec();
             let (recs, forces) = rctx.take_records();
             let t40 = model.simulate(&recs, forces, 40).total_secs;
             b2b.push(n as f64, mflops(fl, t40));
@@ -163,7 +258,7 @@ fn main() {
             let rctx = Context::with_options(Options { record: true, ..Default::default() });
             let am = rctx.bind2(&a, n, n);
             let bm = rctx.bind2(&b, n, n);
-            let _ = arbb_mxm2b(&rctx, &am, &bm, 8).to_vec();
+            let _ = arbb_mxm2b(&am, &bm, 8).to_vec();
             let (recs, forces) = rctx.take_records();
             let fl = gemm_flops(n, n, n);
             let mut s = Series::new(format!("n={n}"));

@@ -86,9 +86,11 @@ fn smoke_run() {
 
     let json = format!(
         "{{\"bench\":\"spmv_pooled_vs_serial\",\"n\":{n},\"nnz\":{},\"workers\":{workers},\
+         \"backend\":\"{}\",\
          \"serial_mflops\":{:.2},\"pooled_mflops\":{:.2},\"pooled_speedup\":{:.4},\
          \"arbb_spmv1_mflops\":{:.2},\"arbb_spmv2_mflops\":{:.2}}}\n",
         m.nnz(),
+        arbb_rs::coordinator::engine::backend::active().name(),
         mflops(fl, t_opt),
         mflops(fl, t_pool),
         t_opt / t_pool,

@@ -94,9 +94,10 @@ fn smoke_run() {
     println!("  fftlib radix-4    {:>10.1} MFlop/s", mflops(fl, t_r4));
 
     let json = format!(
-        "{{\"bench\":\"fft_captured_vs_eager\",\"n\":{n},\
+        "{{\"bench\":\"fft_captured_vs_eager\",\"n\":{n},\"backend\":\"{}\",\
          \"eager_mflops\":{:.2},\"captured_mflops\":{:.2},\"captured_speedup\":{:.4},\
          \"radix4_mflops\":{:.2}}}\n",
+        arbb_rs::coordinator::engine::backend::active().name(),
         mflops(fl, t_eager),
         mflops(fl, t_captured),
         t_eager / t_captured,

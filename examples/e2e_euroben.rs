@@ -65,9 +65,9 @@ fn main() {
     let want_mxm = mod2am::reference(&ah, &bh, n);
     let ctx = Context::serial();
     let (a, b) = (ctx.bind2(&ah, n, n), ctx.bind2(&bh, n, n));
-    let got = mod2am::arbb_mxm2b(&ctx, &a, &b, 8).to_vec();
+    let got = mod2am::arbb_mxm2b(&a, &b, 8).to_vec();
     assert_allclose(&got, &want_mxm, 1e-9, 1e-10, "e2e mxm dsl");
-    let t = time_best(|| drop(mod2am::arbb_mxm2b(&ctx, &a, &b, 8).to_vec()), 0.3, 2);
+    let t = time_best(|| drop(mod2am::arbb_mxm2b(&a, &b, 8).to_vec()), 0.3, 2);
     let mf = mflops(gemm_flops(n, n, n), t);
     rows.push(Row {
         kernel: "mod2am n=256",

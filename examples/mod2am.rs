@@ -36,8 +36,8 @@ fn main() {
 
     let variants: Vec<(&str, Box<dyn Fn() -> Vec<f64>>)> = vec![
         ("arbb_mxm1", Box::new(|| arbb_mxm1(&ctx, &a, &b).to_vec())),
-        ("arbb_mxm2a", Box::new(|| arbb_mxm2a(&ctx, &a, &b).to_vec())),
-        ("arbb_mxm2b(u=8)", Box::new(|| arbb_mxm2b(&ctx, &a, &b, 8).to_vec())),
+        ("arbb_mxm2a", Box::new(|| arbb_mxm2a(&a, &b).to_vec())),
+        ("arbb_mxm2b(u=8)", Box::new(|| arbb_mxm2b(&a, &b, 8).to_vec())),
     ];
     for (name, f) in &variants {
         let got = f();

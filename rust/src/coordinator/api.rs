@@ -17,6 +17,7 @@
 //! | `_for` / `_while` (eager)         | rust `for` / `while` + `Scal::value()` |
 //! | `arbb::call(closure)`             | [`super::program::ProgramBuilder`] → [`super::program::Program`] |
 //! | `_for` (captured, trip at capture)| [`super::program::ProgramBuilder::repeat`] / [`ProgramBuilder::for_each`](super::program::ProgramBuilder::for_each) |
+//! | JIT vectorization (SSE/AVX per ISA) | [`super::engine::backend`] dispatch: scalar reference / AVX2, detected at runtime, bit-identical by contract |
 //!
 //! ArBB's `_for`/`_while` describe *serial* control flow whose body is
 //! captured. This reproduction offers both cost models. On the eager

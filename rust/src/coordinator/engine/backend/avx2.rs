@@ -1,0 +1,435 @@
+//! AVX2 `f64x4` kernels (x86-64 only, runtime-detected).
+//!
+//! Every kernel is bit-identical to the scalar reference by
+//! construction:
+//!
+//!  * element-wise kernels perform the same IEEE-754 operations per
+//!    lane — width does not change rounding — and **never** contract
+//!    multiply+add into FMA (one fused rounding would diverge);
+//!  * reductions keep one 4-lane accumulator vector, which is exactly
+//!    the 4-way unroll of [`RedOp::fold_slice`] (lane `j` accumulates
+//!    elements `j, j+4, …`), merged `((l0+l1)+l2)+l3` with a serial
+//!    tail — the canonical association contract;
+//!  * NaN-sensitive `Min`/`Max` (x86 `vminpd` NaN semantics differ from
+//!    `f64::min`) and libm-backed `Exp`/`Ln` delegate to the scalar
+//!    kernels rather than approximate.
+//!
+//! The backend is only handed out by [`super::simd`] after
+//! `is_x86_feature_detected!("avx2")`, which makes the
+//! `#[target_feature(enable = "avx2")]` calls below sound.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+use super::Backend;
+use crate::coordinator::ops::{BinOp, RedOp, UnOp};
+
+/// The AVX2 backend (unit struct; selection is gated by detection).
+#[derive(Debug)]
+pub(super) struct Avx2Backend;
+
+static AVX2: Avx2Backend = Avx2Backend;
+
+/// The shared AVX2 backend instance. Callers must have verified AVX2
+/// support ([`super::simd`] does).
+pub(super) fn backend() -> &'static dyn Backend {
+    &AVX2
+}
+
+impl Backend for Avx2Backend {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn bin_inplace(&self, op: BinOp, acc: &mut [f64], rhs: &[f64]) {
+        // Hard assert, not debug: the vector loops below are bounded by
+        // `acc.len()` with unchecked loads from `rhs` — a short `rhs`
+        // must panic (as the scalar kernel's bounds checks do), never
+        // read out of bounds.
+        assert!(rhs.len() >= acc.len());
+        match op {
+            // SAFETY: construction is gated on AVX2 detection.
+            BinOp::Add => unsafe { bin_add(acc, rhs) },
+            BinOp::Sub => unsafe { bin_sub(acc, rhs) },
+            BinOp::Mul => unsafe { bin_mul(acc, rhs) },
+            BinOp::Div => unsafe { bin_div(acc, rhs) },
+            // `vminpd`/`vmaxpd` NaN handling differs from `f64::min`:
+            // keep the scalar kernel so the bit contract holds.
+            BinOp::Min | BinOp::Max => op.apply_slices_inplace(acc, rhs),
+        }
+    }
+
+    fn bin_scalar_inplace(&self, op: BinOp, out: &mut [f64], s: f64) {
+        match op {
+            // SAFETY: construction is gated on AVX2 detection.
+            BinOp::Add => unsafe { bin_scalar_add(out, s) },
+            // A true subtract, not `x + (-s)`: identical for every
+            // finite s, but a NaN scalar must propagate its own sign
+            // bit exactly as the scalar kernel's `x - s` does.
+            BinOp::Sub => unsafe { bin_scalar_sub(out, s) },
+            BinOp::Mul => unsafe { bin_scalar_mul(out, s) },
+            // The scalar contract multiplies by the reciprocal,
+            // computed once.
+            BinOp::Div => unsafe { bin_scalar_mul(out, 1.0 / s) },
+            BinOp::Min | BinOp::Max => op.apply_slice_scalar_inplace(out, s),
+        }
+    }
+
+    fn un_inplace(&self, op: UnOp, out: &mut [f64]) {
+        match op {
+            // SAFETY: construction is gated on AVX2 detection.
+            UnOp::Neg => unsafe { un_neg(out) },
+            UnOp::Abs => unsafe { un_abs(out) },
+            UnOp::Sqrt => unsafe { un_sqrt(out) },
+            UnOp::Recip => unsafe { un_recip(out) },
+            // libm calls: scalar everywhere, by contract.
+            UnOp::Exp | UnOp::Ln => op.apply_slice_inplace(out),
+        }
+    }
+
+    fn mul_add(&self, dst: &mut [f64], a: &[f64], b: &[f64]) {
+        assert!(a.len() >= dst.len() && b.len() >= dst.len());
+        // SAFETY: construction is gated on AVX2 detection.
+        unsafe { mul_add(dst, a, b) }
+    }
+
+    fn mul_sub(&self, dst: &mut [f64], a: &[f64], b: &[f64]) {
+        assert!(a.len() >= dst.len() && b.len() >= dst.len());
+        // SAFETY: construction is gated on AVX2 detection.
+        unsafe { mul_sub(dst, a, b) }
+    }
+
+    fn mul_streams(&self, out: &mut [f64], a: &[f64], b: &[f64]) {
+        assert!(a.len() >= out.len() && b.len() >= out.len());
+        // SAFETY: construction is gated on AVX2 detection.
+        unsafe { mul_streams(out, a, b) }
+    }
+
+    fn scale_add_const(&self, dst: &mut [f64], mul: f64, add: f64) {
+        // SAFETY: construction is gated on AVX2 detection.
+        unsafe { scale_add_const(dst, mul, add) }
+    }
+
+    fn axpy_update(&self, f: f64, dst: &mut [f64], src: &[f64]) {
+        assert!(src.len() >= dst.len());
+        // SAFETY: construction is gated on AVX2 detection.
+        unsafe { axpy_update(f, dst, src) }
+    }
+
+    fn fold_slice(&self, red: RedOp, xs: &[f64]) -> f64 {
+        match red {
+            // SAFETY: construction is gated on AVX2 detection.
+            RedOp::Sum => unsafe { sum_slice(xs) },
+            // Prod/Min/Max fold serially in the scalar contract; keep
+            // the reference kernel.
+            _ => red.fold_slice(xs),
+        }
+    }
+
+    fn gather_mul_sum(&self, vals: &[f64], x: &[f64], ix: &[i64]) -> f64 {
+        debug_assert_eq!(vals.len(), ix.len());
+        // SAFETY: construction is gated on AVX2 detection.
+        unsafe { gather_mul_sum(vals, x, ix) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernels. Each processes 4-lane vectors with a scalar tail; all loads
+// and stores are unaligned (block buffers carry no alignment promise).
+// ---------------------------------------------------------------------
+
+macro_rules! bin_kernel {
+    ($name:ident, $vop:ident, $assign:tt) => {
+        #[target_feature(enable = "avx2")]
+        unsafe fn $name(acc: &mut [f64], rhs: &[f64]) {
+            let n = acc.len();
+            let n4 = n - (n % 4);
+            let mut i = 0;
+            while i < n4 {
+                let a = _mm256_loadu_pd(acc.as_ptr().add(i));
+                let b = _mm256_loadu_pd(rhs.as_ptr().add(i));
+                _mm256_storeu_pd(acc.as_mut_ptr().add(i), $vop(a, b));
+                i += 4;
+            }
+            while i < n {
+                acc[i] $assign rhs[i];
+                i += 1;
+            }
+        }
+    };
+}
+
+bin_kernel!(bin_add, _mm256_add_pd, +=);
+bin_kernel!(bin_sub, _mm256_sub_pd, -=);
+bin_kernel!(bin_mul, _mm256_mul_pd, *=);
+bin_kernel!(bin_div, _mm256_div_pd, /=);
+
+#[target_feature(enable = "avx2")]
+unsafe fn bin_scalar_add(out: &mut [f64], s: f64) {
+    let n = out.len();
+    let n4 = n - (n % 4);
+    let sv = _mm256_set1_pd(s);
+    let mut i = 0;
+    while i < n4 {
+        let a = _mm256_loadu_pd(out.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_add_pd(a, sv));
+        i += 4;
+    }
+    while i < n {
+        out[i] += s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn bin_scalar_sub(out: &mut [f64], s: f64) {
+    let n = out.len();
+    let n4 = n - (n % 4);
+    let sv = _mm256_set1_pd(s);
+    let mut i = 0;
+    while i < n4 {
+        let a = _mm256_loadu_pd(out.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_sub_pd(a, sv));
+        i += 4;
+    }
+    while i < n {
+        out[i] -= s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn bin_scalar_mul(out: &mut [f64], s: f64) {
+    let n = out.len();
+    let n4 = n - (n % 4);
+    let sv = _mm256_set1_pd(s);
+    let mut i = 0;
+    while i < n4 {
+        let a = _mm256_loadu_pd(out.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_mul_pd(a, sv));
+        i += 4;
+    }
+    while i < n {
+        out[i] *= s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn un_neg(out: &mut [f64]) {
+    let n = out.len();
+    let n4 = n - (n % 4);
+    // Sign-bit flip, exactly what scalar `-x` does (NaN payloads kept).
+    let sign = _mm256_set1_pd(-0.0);
+    let mut i = 0;
+    while i < n4 {
+        let a = _mm256_loadu_pd(out.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_xor_pd(a, sign));
+        i += 4;
+    }
+    while i < n {
+        out[i] = -out[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn un_abs(out: &mut [f64]) {
+    let n = out.len();
+    let n4 = n - (n % 4);
+    // Sign-bit clear, exactly what scalar `f64::abs` does.
+    let sign = _mm256_set1_pd(-0.0);
+    let mut i = 0;
+    while i < n4 {
+        let a = _mm256_loadu_pd(out.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_andnot_pd(sign, a));
+        i += 4;
+    }
+    while i < n {
+        out[i] = out[i].abs();
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn un_sqrt(out: &mut [f64]) {
+    let n = out.len();
+    let n4 = n - (n % 4);
+    let mut i = 0;
+    while i < n4 {
+        let a = _mm256_loadu_pd(out.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_sqrt_pd(a));
+        i += 4;
+    }
+    while i < n {
+        out[i] = out[i].sqrt();
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn un_recip(out: &mut [f64]) {
+    let n = out.len();
+    let n4 = n - (n % 4);
+    // A correctly rounded IEEE divide — never the `vrcpps`-style
+    // approximation, which would break the bit contract.
+    let ones = _mm256_set1_pd(1.0);
+    let mut i = 0;
+    while i < n4 {
+        let a = _mm256_loadu_pd(out.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_div_pd(ones, a));
+        i += 4;
+    }
+    while i < n {
+        out[i] = 1.0 / out[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn mul_add(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    let n = dst.len();
+    let n4 = n - (n % 4);
+    let mut i = 0;
+    while i < n4 {
+        let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+        let x = _mm256_loadu_pd(a.as_ptr().add(i));
+        let y = _mm256_loadu_pd(b.as_ptr().add(i));
+        // mul then add: two roundings, matching the scalar kernel.
+        _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_add_pd(d, _mm256_mul_pd(x, y)));
+        i += 4;
+    }
+    while i < n {
+        dst[i] += a[i] * b[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn mul_sub(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    let n = dst.len();
+    let n4 = n - (n % 4);
+    let mut i = 0;
+    while i < n4 {
+        let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+        let x = _mm256_loadu_pd(a.as_ptr().add(i));
+        let y = _mm256_loadu_pd(b.as_ptr().add(i));
+        _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_sub_pd(d, _mm256_mul_pd(x, y)));
+        i += 4;
+    }
+    while i < n {
+        dst[i] -= a[i] * b[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn mul_streams(out: &mut [f64], a: &[f64], b: &[f64]) {
+    let n = out.len();
+    let n4 = n - (n % 4);
+    let mut i = 0;
+    while i < n4 {
+        let x = _mm256_loadu_pd(a.as_ptr().add(i));
+        let y = _mm256_loadu_pd(b.as_ptr().add(i));
+        _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_mul_pd(x, y));
+        i += 4;
+    }
+    while i < n {
+        out[i] = a[i] * b[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_add_const(dst: &mut [f64], mul: f64, add: f64) {
+    let n = dst.len();
+    let n4 = n - (n % 4);
+    let mv = _mm256_set1_pd(mul);
+    let av = _mm256_set1_pd(add);
+    let mut i = 0;
+    while i < n4 {
+        let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+        _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_add_pd(_mm256_mul_pd(d, mv), av));
+        i += 4;
+    }
+    while i < n {
+        dst[i] = dst[i] * mul + add;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_update(f: f64, dst: &mut [f64], src: &[f64]) {
+    let n = dst.len();
+    let n4 = n - (n % 4);
+    let fv = _mm256_set1_pd(f);
+    let mut i = 0;
+    while i < n4 {
+        let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+        let s = _mm256_loadu_pd(src.as_ptr().add(i));
+        _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_add_pd(d, _mm256_mul_pd(fv, s)));
+        i += 4;
+    }
+    while i < n {
+        dst[i] += f * src[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sum_slice(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    let n4 = n - (n % 4);
+    // One 4-lane accumulator vector == the scalar contract's 4-way
+    // unroll: lane j accumulates elements j, j+4, j+8, …
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0;
+    while i < n4 {
+        acc = _mm256_add_pd(acc, _mm256_loadu_pd(xs.as_ptr().add(i)));
+        i += 4;
+    }
+    let mut s = hsum_contract(acc);
+    while i < n {
+        s += xs[i];
+        i += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gather_mul_sum(vals: &[f64], x: &[f64], ix: &[i64]) -> f64 {
+    let n = vals.len();
+    let n4 = n - (n % 4);
+    let mut acc = _mm256_setzero_pd();
+    let mut t = 0;
+    while t < n4 {
+        // Lane-wise loads rather than `vgatherqpd`: same result, and
+        // scalar f64 gathers are not slower on current cores. Indexing
+        // stays checked — the trait method is safe and the scalar
+        // reference panics on a bad index, so this must too.
+        let xv = _mm256_set_pd(
+            x[ix[t + 3] as usize],
+            x[ix[t + 2] as usize],
+            x[ix[t + 1] as usize],
+            x[ix[t] as usize],
+        );
+        let vv = _mm256_loadu_pd(vals.as_ptr().add(t));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(vv, xv));
+        t += 4;
+    }
+    let mut s = hsum_contract(acc);
+    while t < n {
+        s += vals[t] * x[ix[t] as usize];
+        t += 1;
+    }
+    s
+}
+
+/// Horizontal sum in the contract's lane order: `((l0 + l1) + l2) + l3`.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_contract(v: __m256d) -> f64 {
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), v);
+    lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}

@@ -1,0 +1,541 @@
+//! Backend kernel layer: every per-block compute kernel of the runtime,
+//! behind a runtime-selected [`Backend`].
+//!
+//! ArBB's JIT emits SSE/AVX code per target ISA from one data-parallel
+//! source (§2 of the paper: "the vectorizer generates code for the SIMD
+//! units"). This reproduction's analogue is this module: the block
+//! kernels the tape VM, the segmented executor, the program replayer
+//! and the serving arena replay all share — leaf loaders, element-wise
+//! operator passes, the fused superinstructions (`MulAdd`, `Axpy`,
+//! `ScaleAddConst`), reduction folds and the fused spmv inner loop —
+//! are trait methods dispatched once per ≤[`BLOCK`]-element block, so a
+//! single compiled tape retargets to whatever vector width the backend
+//! provides.
+//!
+//! Two backends ship today:
+//!
+//!  * [`ScalarBackend`] — the trait's default bodies: the reference
+//!    kernels extracted verbatim from the pre-backend executors, so
+//!    scalar results are bit-stable across the refactor.
+//!  * `Avx2Backend` (x86-64 only, behind runtime
+//!    `is_x86_feature_detected!`) — explicit AVX2 `f64x4` kernels with
+//!    scalar tails. No FMA contraction, ever: fusing the rounding step
+//!    would break bit-equality with the scalar reference.
+//!
+//! # The association contract
+//!
+//! Element-wise kernels are trivially bit-identical across backends
+//! (IEEE-754 lane arithmetic does not care about width). Reductions are
+//! bit-identical **by construction**: the canonical order is the 4-lane
+//! unroll of [`RedOp::fold_slice`] — lane `j` accumulates elements
+//! `j, j+4, j+8, …` of a chunk, lanes merge as `((l0+l1)+l2)+l3`, the
+//! remainder folds serially, and per-segment chunks merge through
+//! [`Backend::fold_segment_chunk`]. A SIMD sum that keeps one `f64x4`
+//! accumulator vector *is* that order, so every backend must implement
+//! [`Backend::fold_slice`] and [`Backend::gather_mul_sum`] in exactly
+//! this association (asserted bitwise by `rust/tests/tape_vs_tree.rs`
+//! and the segmented property suite across forced backends).
+//!
+//! Selection happens once per process for [`active`] (the
+//! `PALLAS_BACKEND=scalar|avx2` environment override, else the best
+//! detected ISA) and per [`crate::coordinator::Context`] through
+//! [`BackendSel`] in [`crate::coordinator::Options`].
+//!
+//! [`BLOCK`]: crate::coordinator::engine::eval::BLOCK
+
+use std::fmt;
+use std::sync::OnceLock;
+
+use crate::coordinator::ops::{BinOp, RedOp, UnOp};
+use crate::coordinator::shape::View;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+/// The per-block kernel vocabulary. Default method bodies are the
+/// scalar reference implementations; a SIMD backend overrides the
+/// kernels it accelerates and inherits the rest (NaN-sensitive `Min`/
+/// `Max` and the libm-backed `Exp`/`Ln` stay scalar everywhere so the
+/// bit contract holds without reimplementing libm).
+///
+/// All methods operate on one evaluation block (≤ a few KiB), so the
+/// virtual dispatch amortises to noise against the inner loops.
+pub trait Backend: Send + Sync + fmt::Debug {
+    /// Stable name for stats, bench records and diagnostics.
+    fn name(&self) -> &'static str;
+
+    // ---- element-wise operator kernels ------------------------------
+
+    /// `acc[i] = op(acc[i], rhs[i])`.
+    fn bin_inplace(&self, op: BinOp, acc: &mut [f64], rhs: &[f64]) {
+        op.apply_slices_inplace(acc, rhs);
+    }
+
+    /// `out[i] = op(out[i], s)` (scalar right operand; `Div` multiplies
+    /// by the reciprocal, computed once — part of the bit contract).
+    fn bin_scalar_inplace(&self, op: BinOp, out: &mut [f64], s: f64) {
+        op.apply_slice_scalar_inplace(out, s);
+    }
+
+    /// `out[i] = op(out[i])`.
+    fn un_inplace(&self, op: UnOp, out: &mut [f64]) {
+        op.apply_slice_inplace(out);
+    }
+
+    /// `dst[i] += a[i] * b[i]` — the `MulAdd` superinstruction. One
+    /// multiply rounding, one add rounding per element (no FMA).
+    fn mul_add(&self, dst: &mut [f64], a: &[f64], b: &[f64]) {
+        debug_assert!(a.len() >= dst.len() && b.len() >= dst.len());
+        for i in 0..dst.len() {
+            dst[i] += a[i] * b[i];
+        }
+    }
+
+    /// `dst[i] -= a[i] * b[i]` — the `MulSub` superinstruction.
+    fn mul_sub(&self, dst: &mut [f64], a: &[f64], b: &[f64]) {
+        debug_assert!(a.len() >= dst.len() && b.len() >= dst.len());
+        for i in 0..dst.len() {
+            dst[i] -= a[i] * b[i];
+        }
+    }
+
+    /// `out[i] = a[i] * b[i]` — the product-stream kernel of the
+    /// contiguity-run spmv path.
+    fn mul_streams(&self, out: &mut [f64], a: &[f64], b: &[f64]) {
+        debug_assert!(a.len() >= out.len() && b.len() >= out.len());
+        for i in 0..out.len() {
+            out[i] = a[i] * b[i];
+        }
+    }
+
+    /// `dst[i] = dst[i] * mul + add` — the `ScaleAddConst` peephole.
+    fn scale_add_const(&self, dst: &mut [f64], mul: f64, add: f64) {
+        for x in dst.iter_mut() {
+            *x = *x * mul + add;
+        }
+    }
+
+    /// `dst[i] += f * src[i]` — the per-segment inner op of the rank-1
+    /// `Axpy` superinstruction (`f` carries the sign for subtraction).
+    fn axpy_update(&self, f: f64, dst: &mut [f64], src: &[f64]) {
+        debug_assert!(src.len() >= dst.len());
+        for i in 0..dst.len() {
+            dst[i] += f * src[i];
+        }
+    }
+
+    // ---- loaders ----------------------------------------------------
+
+    /// `out[k] = src[ix[k]]` — the monomorphised gather loader (index
+    /// tables are pre-validated, see `fexec_to_ktree`/`audit_gathers`).
+    fn load_gather(&self, out: &mut [f64], src: &[f64], ix: &[i64]) {
+        debug_assert!(ix.len() >= out.len());
+        for (o, &i) in out.iter_mut().zip(ix) {
+            *o = src[i as usize];
+        }
+    }
+
+    // ---- reductions: the 4-lane association contract ----------------
+
+    /// Reduce one chunk. Must reproduce [`RedOp::fold_slice`] — the
+    /// 4-lane unrolled association for `Sum` — bit for bit.
+    fn fold_slice(&self, red: RedOp, xs: &[f64]) -> f64 {
+        red.fold_slice(xs)
+    }
+
+    /// Merge one ≤BLOCK chunk of segment values into a running segment
+    /// accumulator: the association contract every segmented executor
+    /// shares (see [`RedOp::fold_segment_chunk`]).
+    fn fold_segment_chunk(&self, red: RedOp, acc: f64, chunk: &[f64]) -> f64 {
+        red.fold(acc, self.fold_slice(red, chunk))
+    }
+
+    /// One chunk of the fused spmv inner loop:
+    /// `Σ vals[t] · x[ix[t]]` over the chunk, in exactly the 4-lane
+    /// association of [`RedOp::fold_slice`] for `Sum`, so the fused
+    /// path stays bit-identical to tape-fill + [`Self::fold_slice`].
+    fn gather_mul_sum(&self, vals: &[f64], x: &[f64], ix: &[i64]) -> f64 {
+        debug_assert_eq!(vals.len(), ix.len());
+        let l = vals.len();
+        let m4 = l - (l % 4);
+        let mut a = [0.0f64; 4];
+        let mut t = 0;
+        while t < m4 {
+            a[0] += vals[t] * x[ix[t] as usize];
+            a[1] += vals[t + 1] * x[ix[t + 1] as usize];
+            a[2] += vals[t + 2] * x[ix[t + 2] as usize];
+            a[3] += vals[t + 3] * x[ix[t + 3] as usize];
+            t += 4;
+        }
+        let mut s = a[0] + a[1] + a[2] + a[3];
+        while t < l {
+            s += vals[t] * x[ix[t] as usize];
+            t += 1;
+        }
+        s
+    }
+}
+
+/// The scalar reference backend: every kernel is the trait's default
+/// body — the code extracted verbatim from the pre-backend executors —
+/// so results are bit-stable across the refactor and across ISAs.
+#[derive(Debug)]
+pub struct ScalarBackend;
+
+impl Backend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+}
+
+static SCALAR: ScalarBackend = ScalarBackend;
+
+/// The scalar reference backend (always available).
+pub fn scalar() -> &'static dyn Backend {
+    &SCALAR
+}
+
+/// The SIMD backend for this machine, if the ISA is present: AVX2 on
+/// x86-64 (detected once at first call), `None` elsewhere.
+#[cfg(target_arch = "x86_64")]
+pub fn simd() -> Option<&'static dyn Backend> {
+    static AVX2_OK: OnceLock<bool> = OnceLock::new();
+    if *AVX2_OK.get_or_init(|| std::arch::is_x86_feature_detected!("avx2")) {
+        Some(avx2::backend())
+    } else {
+        None
+    }
+}
+
+/// The SIMD backend for this machine, if the ISA is present (non-x86:
+/// none yet — the seam is where an AVX-512 or NEON backend plugs in).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn simd() -> Option<&'static dyn Backend> {
+    None
+}
+
+/// Per-context backend selection, carried by
+/// [`crate::coordinator::Options`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendSel {
+    /// The process-wide [`active`] backend: `PALLAS_BACKEND` override
+    /// if set, else the best detected ISA.
+    #[default]
+    Auto,
+    /// Force the scalar reference kernels.
+    Scalar,
+    /// Force the SIMD kernels; falls back to scalar when the ISA is
+    /// absent (so a forced-SIMD config is portable).
+    Simd,
+}
+
+/// Resolve a selection to a backend.
+pub fn select(sel: BackendSel) -> &'static dyn Backend {
+    match sel {
+        BackendSel::Auto => active(),
+        BackendSel::Scalar => scalar(),
+        BackendSel::Simd => simd().unwrap_or_else(scalar),
+    }
+}
+
+/// The process-wide active backend, chosen once at first use:
+/// `PALLAS_BACKEND=scalar` forces the reference kernels (the CI
+/// fallback leg), `PALLAS_BACKEND=avx2` (or `simd`) requests the SIMD
+/// kernels, anything else takes the best detected ISA. A requested but
+/// undetected ISA falls back to scalar rather than faulting.
+pub fn active() -> &'static dyn Backend {
+    static ACTIVE: OnceLock<&'static dyn Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("PALLAS_BACKEND").as_deref() {
+        Ok("scalar") => scalar(),
+        Ok("avx2") | Ok("simd") => simd().unwrap_or_else(scalar),
+        _ => simd().unwrap_or_else(scalar),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Shared leaf loaders (memory movement, no float arithmetic)
+// ---------------------------------------------------------------------
+//
+// One function per affine view shape, classified once at tape-compile
+// time; the reference tree interpreter's `fill_view` re-classifies per
+// block and dispatches to the same loaders, keeping every executor
+// bit-exact. Pure data movement reorders nothing, so these are shared
+// across backends rather than trait methods.
+
+/// Contiguous leaf: a single memcpy.
+#[inline]
+pub fn load_contiguous(data: &[f64], base: usize, start: usize, out: &mut [f64]) {
+    let s = base + start;
+    out.copy_from_slice(&data[s..s + out.len()]);
+}
+
+/// Column-broadcast leaf (`col_stride == 0`, no modulo): one constant
+/// fill per output-row segment.
+#[inline]
+pub fn load_broadcast(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
+    let oc = view.out_cols.max(1);
+    let len = out.len();
+    let mut pos = 0usize;
+    let mut r = start / oc;
+    let mut c = start % oc;
+    while pos < len {
+        let seg = (oc - c).min(len - pos);
+        out[pos..pos + seg].fill(data[view.base + r * view.row_stride]);
+        pos += seg;
+        r += 1;
+        c = 0;
+    }
+}
+
+/// Strided leaf (`col_stride >= 1`, no modulo): unit-stride row segments
+/// memcpy, otherwise a strided gather per segment.
+#[inline]
+pub fn load_strided(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
+    let oc = view.out_cols.max(1);
+    let len = out.len();
+    let cs = view.col_stride;
+    let mut pos = 0usize;
+    let mut r = start / oc;
+    let mut c = start % oc;
+    while pos < len {
+        let seg = (oc - c).min(len - pos);
+        let s0 = view.base + r * view.row_stride + c * cs;
+        let o = &mut out[pos..pos + seg];
+        if cs == 1 {
+            o.copy_from_slice(&data[s0..s0 + seg]);
+        } else {
+            let mut s = s0;
+            for x in o.iter_mut() {
+                *x = data[s];
+                s += cs;
+            }
+        }
+        pos += seg;
+        r += 1;
+        c = 0;
+    }
+}
+
+/// Cyclic leaf (`repeat` views): wrap by subtraction — col_stride never
+/// exceeds the period by construction (compose scales both).
+#[inline]
+pub fn load_modulo(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
+    let oc = view.out_cols.max(1);
+    let len = out.len();
+    let cs = view.col_stride;
+    let m = match view.modulo {
+        Some(m) => m,
+        None => return,
+    };
+    let mut pos = 0usize;
+    let mut r = start / oc;
+    let mut c = start % oc;
+    while pos < len {
+        let seg = (oc - c).min(len - pos);
+        let mut lin = (r * view.row_stride + c * cs) % m;
+        for x in out[pos..pos + seg].iter_mut() {
+            *x = data[view.base + lin];
+            lin += cs;
+            if lin >= m {
+                lin %= m;
+            }
+        }
+        pos += seg;
+        r += 1;
+        c = 0;
+    }
+}
+
+/// Gather a block through an affine view: classify the view shape and
+/// dispatch to the matching monomorphised loader.
+pub fn fill_view(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
+    if view.is_contiguous() {
+        load_contiguous(data, view.base, start, out);
+    } else if view.modulo.is_some() {
+        load_modulo(data, view, start, out);
+    } else if view.col_stride == 0 {
+        load_broadcast(data, view, start, out);
+    } else {
+        load_strided(data, view, start, out);
+    }
+}
+
+/// Rank-1 update (`Axpy`): `out[seg] op= a_r * b[seg]` per output-row
+/// segment, with `a` a column-broadcast leaf and `b` a unit-stride row
+/// leaf (possibly cyclic). The segment walk is shared; the inner
+/// per-segment update goes through [`Backend::axpy_update`].
+pub fn axpy_pattern(
+    bk: &dyn Backend,
+    op: BinOp,
+    da: &[f64],
+    va: &View,
+    db: &[f64],
+    vb: &View,
+    start: usize,
+    out: &mut [f64],
+) {
+    let oc = va.out_cols.max(1);
+    let len = out.len();
+    let mut pos = 0usize;
+    let mut r = start / oc;
+    let mut c = start % oc;
+    while pos < len {
+        let seg = (oc - c).min(len - pos);
+        let f = da[va.base + r * va.row_stride];
+        let f = if op == BinOp::Sub { -f } else { f };
+        // source segment through vb (cs == 1), splitting at cyclic wraps
+        let mut done = 0usize;
+        while done < seg {
+            let lin = r * vb.row_stride + (c + done);
+            let (off, room) = match vb.modulo {
+                Some(m) => (lin % m, m - lin % m),
+                None => (lin, usize::MAX),
+            };
+            let take = room.min(seg - done);
+            let src = &db[vb.base + off..vb.base + off + take];
+            let dst = &mut out[pos + done..pos + done + take];
+            bk.axpy_update(f, dst, src);
+            done += take;
+        }
+        pos += seg;
+        r += 1;
+        c = 0;
+    }
+}
+
+/// Serial CSR row dot: `Σ vals[k] · x[indx[k]]` over `k ∈ [s, e)` in
+/// strict left-to-right order — the **host** association contract shared
+/// by [`crate::sparse::Csr::spmv`] and the captured-program spmv step
+/// (which must stay bit-identical to the host solver, not to the tape's
+/// 4-lane contract). Deliberately not a [`Backend`] method: no backend
+/// may reorder it.
+#[inline]
+pub fn spmv_row_serial(vals: &[f64], indx: &[i64], x: &[f64], s: usize, e: usize) -> f64 {
+    let mut acc = 0.0;
+    for k in s..e {
+        acc += vals[k] * x[indx[k] as usize];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+    }
+
+    /// Pairs of backends to cross-check (scalar vs SIMD when present).
+    fn pairs() -> Vec<(&'static dyn Backend, &'static dyn Backend)> {
+        match simd() {
+            Some(s) => vec![(scalar(), s)],
+            None => vec![(scalar(), scalar())],
+        }
+    }
+
+    #[test]
+    fn selection_resolves() {
+        assert_eq!(select(BackendSel::Scalar).name(), "scalar");
+        let auto = select(BackendSel::Auto);
+        let simd_bk = select(BackendSel::Simd);
+        // Auto and Simd agree unless the env override forces scalar.
+        if std::env::var("PALLAS_BACKEND").as_deref() != Ok("scalar") {
+            assert_eq!(auto.name(), simd_bk.name());
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_bit_identical() {
+        // Odd length exercises the SIMD tails.
+        let n = 1027;
+        let a0 = rand_vec(n, 1);
+        let b = rand_vec(n, 2);
+        for (r, s) in pairs() {
+            for op in [BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Div, BinOp::Min, BinOp::Max] {
+                let mut x = a0.clone();
+                let mut y = a0.clone();
+                r.bin_inplace(op, &mut x, &b);
+                s.bin_inplace(op, &mut y, &b);
+                assert!(bits_eq(&x, &y), "bin_inplace {op:?}");
+                let mut x = a0.clone();
+                let mut y = a0.clone();
+                r.bin_scalar_inplace(op, &mut x, 0.37);
+                s.bin_scalar_inplace(op, &mut y, 0.37);
+                assert!(bits_eq(&x, &y), "bin_scalar_inplace {op:?}");
+            }
+            for op in [UnOp::Neg, UnOp::Abs, UnOp::Sqrt, UnOp::Exp, UnOp::Ln, UnOp::Recip] {
+                let mut x = a0.clone();
+                let mut y = a0.clone();
+                r.un_inplace(op, &mut x);
+                s.un_inplace(op, &mut y);
+                assert!(bits_eq(&x, &y), "un_inplace {op:?}");
+            }
+            let (mut x, mut y) = (a0.clone(), a0.clone());
+            r.mul_add(&mut x, &b, &a0);
+            s.mul_add(&mut y, &b, &a0);
+            assert!(bits_eq(&x, &y), "mul_add");
+            let (mut x, mut y) = (a0.clone(), a0.clone());
+            r.mul_sub(&mut x, &b, &a0);
+            s.mul_sub(&mut y, &b, &a0);
+            assert!(bits_eq(&x, &y), "mul_sub");
+            let (mut x, mut y) = (vec![0.0; n], vec![0.0; n]);
+            r.mul_streams(&mut x, &a0, &b);
+            s.mul_streams(&mut y, &a0, &b);
+            assert!(bits_eq(&x, &y), "mul_streams");
+            let (mut x, mut y) = (a0.clone(), a0.clone());
+            r.scale_add_const(&mut x, 1.25, -0.5);
+            s.scale_add_const(&mut y, 1.25, -0.5);
+            assert!(bits_eq(&x, &y), "scale_add_const");
+            let (mut x, mut y) = (a0.clone(), a0.clone());
+            r.axpy_update(-0.75, &mut x, &b);
+            s.axpy_update(-0.75, &mut y, &b);
+            assert!(bits_eq(&x, &y), "axpy_update");
+        }
+    }
+
+    #[test]
+    fn reductions_bit_identical() {
+        for n in [0usize, 1, 3, 4, 5, 257, 2048, 2049] {
+            let xs = rand_vec(n, 90 + n as u64);
+            for (r, s) in pairs() {
+                for red in [RedOp::Sum, RedOp::Prod, RedOp::Min, RedOp::Max] {
+                    let a = r.fold_slice(red, &xs);
+                    let b = s.fold_slice(red, &xs);
+                    assert_eq!(a.to_bits(), b.to_bits(), "fold_slice {red:?} n={n}");
+                    // And both must equal the canonical contract.
+                    assert_eq!(a.to_bits(), red.fold_slice(&xs).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_kernels_bit_identical() {
+        let mut rng = XorShift64::new(7);
+        for n in [0usize, 1, 5, 1023, 4096] {
+            let src = rand_vec(97, n as u64 + 3);
+            let ix: Vec<i64> = (0..n).map(|_| rng.below(97) as i64).collect();
+            let vals = rand_vec(n, n as u64 + 11);
+            for (r, s) in pairs() {
+                let mut x = vec![0.0; n];
+                let mut y = vec![1.0; n];
+                r.load_gather(&mut x, &src, &ix);
+                s.load_gather(&mut y, &src, &ix);
+                assert!(bits_eq(&x, &y), "load_gather n={n}");
+                let a = r.gather_mul_sum(&vals, &src, &ix);
+                let b = s.gather_mul_sum(&vals, &src, &ix);
+                assert_eq!(a.to_bits(), b.to_bits(), "gather_mul_sum n={n}");
+            }
+        }
+    }
+
+    fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan())
+            })
+    }
+}

@@ -26,12 +26,22 @@
 //!    that subsume the tree interpreter's hand-matched rank-1-update
 //!    special case and remove whole block passes. See EXPERIMENTS.md
 //!    §"Tape VM" for the design notes and microbenchmark results.
+//!
+//! The per-block compute kernels themselves live in
+//! [`super::backend`]: a compiled tape carries the [`Backend`] it was
+//! compiled against (scalar reference or runtime-detected SIMD) and
+//! dispatches every operator, superinstruction and reduction fold
+//! through it. The tree interpreter always runs the scalar backend —
+//! it is the bit-exact comparator the property suites hold every
+//! backend to.
 
 use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 use crate::coordinator::ops::{BinOp, RedOp, UnOp};
 use crate::coordinator::plan::FTree;
 use crate::coordinator::shape::View;
+
+use super::backend::{self, Backend};
 
 /// Elements per evaluation block (16 KiB of f64).
 ///
@@ -224,7 +234,7 @@ fn eval_block(fx: &FExec, start: usize, out: &mut [f64], scratch: &mut Scratch) 
         FExec::Acc => {
             // The output block already holds the accumulation base.
         }
-        FExec::Leaf { data, view } => fill_view(data, view, start, out),
+        FExec::Leaf { data, view } => backend::fill_view(data, view, start, out),
         FExec::Gather { data, idx, base } => {
             for (k, o) in out.iter_mut().enumerate() {
                 *o = data[idx[base + start + k] as usize];
@@ -247,7 +257,7 @@ fn eval_block(fx: &FExec, start: usize, out: &mut [f64], scratch: &mut Scratch) 
                         && axpy_operands(p, q).is_some() =>
                 {
                     let (da, va, db, vb) = axpy_operands(p, q).unwrap();
-                    axpy_pattern(*op, da, va, db, vb, start, out);
+                    backend::axpy_pattern(backend::scalar(), *op, da, va, db, vb, start, out);
                 }
                 _ => {
                     let mut tmp = scratch.take();
@@ -288,170 +298,11 @@ fn axpy_operands<'a>(
     }
 }
 
-/// `out[seg] op= a_r * b[seg]` per output-row segment.
-fn axpy_pattern(
-    op: BinOp,
-    da: &[f64],
-    va: &View,
-    db: &[f64],
-    vb: &View,
-    start: usize,
-    out: &mut [f64],
-) {
-    let oc = va.out_cols.max(1);
-    let len = out.len();
-    let mut pos = 0usize;
-    let mut r = start / oc;
-    let mut c = start % oc;
-    while pos < len {
-        let seg = (oc - c).min(len - pos);
-        let f = da[va.base + r * va.row_stride];
-        let f = if op == BinOp::Sub { -f } else { f };
-        // source segment through vb (cs == 1), splitting at cyclic wraps
-        let mut done = 0usize;
-        while done < seg {
-            let lin = r * vb.row_stride + (c + done);
-            let (off, room) = match vb.modulo {
-                Some(m) => (lin % m, m - lin % m),
-                None => (lin, usize::MAX),
-            };
-            let take = room.min(seg - done);
-            let src = &db[vb.base + off..vb.base + off + take];
-            let dst = &mut out[pos + done..pos + done + take];
-            for i in 0..take {
-                dst[i] += f * src[i];
-            }
-            done += take;
-        }
-        pos += seg;
-        r += 1;
-        c = 0;
-    }
-}
-
-// ---------------------------------------------------------------------
-// Monomorphised leaf loaders
-// ---------------------------------------------------------------------
-//
-// One function per view shape, classified once at tape-compile time
-// (the reference interpreter's `fill_view` re-classifies per block and
-// dispatches to the same loaders, keeping the two executors bit-exact).
-
-/// Contiguous leaf: a single memcpy.
-#[inline]
-fn load_contiguous(data: &[f64], base: usize, start: usize, out: &mut [f64]) {
-    let s = base + start;
-    out.copy_from_slice(&data[s..s + out.len()]);
-}
-
-/// Column-broadcast leaf (`col_stride == 0`, no modulo): one constant
-/// fill per output-row segment.
-#[inline]
-fn load_broadcast(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
-    let oc = view.out_cols.max(1);
-    let len = out.len();
-    let mut pos = 0usize;
-    let mut r = start / oc;
-    let mut c = start % oc;
-    while pos < len {
-        let seg = (oc - c).min(len - pos);
-        out[pos..pos + seg].fill(data[view.base + r * view.row_stride]);
-        pos += seg;
-        r += 1;
-        c = 0;
-    }
-}
-
-/// Strided leaf (`col_stride >= 1`, no modulo): unit-stride row segments
-/// memcpy, otherwise a strided gather per segment.
-#[inline]
-fn load_strided(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
-    let oc = view.out_cols.max(1);
-    let len = out.len();
-    let cs = view.col_stride;
-    let mut pos = 0usize;
-    let mut r = start / oc;
-    let mut c = start % oc;
-    while pos < len {
-        let seg = (oc - c).min(len - pos);
-        let s0 = view.base + r * view.row_stride + c * cs;
-        let o = &mut out[pos..pos + seg];
-        if cs == 1 {
-            o.copy_from_slice(&data[s0..s0 + seg]);
-        } else {
-            let mut s = s0;
-            for x in o.iter_mut() {
-                *x = data[s];
-                s += cs;
-            }
-        }
-        pos += seg;
-        r += 1;
-        c = 0;
-    }
-}
-
-/// Cyclic leaf (`repeat` views): wrap by subtraction — col_stride never
-/// exceeds the period by construction (compose scales both).
-#[inline]
-fn load_modulo(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
-    let oc = view.out_cols.max(1);
-    let len = out.len();
-    let cs = view.col_stride;
-    let m = match view.modulo {
-        Some(m) => m,
-        None => return,
-    };
-    let mut pos = 0usize;
-    let mut r = start / oc;
-    let mut c = start % oc;
-    while pos < len {
-        let seg = (oc - c).min(len - pos);
-        let mut lin = (r * view.row_stride + c * cs) % m;
-        for x in out[pos..pos + seg].iter_mut() {
-            *x = data[view.base + lin];
-            lin += cs;
-            if lin >= m {
-                lin %= m;
-            }
-        }
-        pos += seg;
-        r += 1;
-        c = 0;
-    }
-}
-
-/// Gather a block through an affine view: classify the view shape and
-/// dispatch to the matching monomorphised loader.
-fn fill_view(data: &[f64], view: &View, start: usize, out: &mut [f64]) {
-    if view.is_contiguous() {
-        load_contiguous(data, view.base, start, out);
-    } else if view.modulo.is_some() {
-        load_modulo(data, view, start, out);
-    } else if view.col_stride == 0 {
-        load_broadcast(data, view, start, out);
-    } else {
-        load_strided(data, view, start, out);
-    }
-}
-
-impl BinOp {
-    /// `out[i] = op(out[i], s)` — scalar right operand, in place.
-    #[inline]
-    pub fn apply_slice_scalar_inplace(self, out: &mut [f64], s: f64) {
-        match self {
-            BinOp::Add => out.iter_mut().for_each(|x| *x += s),
-            BinOp::Sub => out.iter_mut().for_each(|x| *x -= s),
-            BinOp::Mul => out.iter_mut().for_each(|x| *x *= s),
-            BinOp::Div => {
-                let inv = 1.0 / s;
-                out.iter_mut().for_each(|x| *x *= inv)
-            }
-            BinOp::Min => out.iter_mut().for_each(|x| *x = x.min(s)),
-            BinOp::Max => out.iter_mut().for_each(|x| *x = x.max(s)),
-        }
-    }
-}
+// The monomorphised leaf loaders (`load_contiguous`/`load_broadcast`/
+// `load_strided`/`load_modulo`/`fill_view`), the rank-1 `axpy_pattern`
+// walk and the scalar-operand kernels now live in [`super::backend`] —
+// one implementation shared by the tree interpreter, the tape VM, the
+// segmented executor and the serving replay.
 
 // ---------------------------------------------------------------------
 // Tape compiler + register VM
@@ -541,7 +392,8 @@ pub enum Instr {
 }
 
 /// A compiled, leaf-abstract tape: the instruction stream plus register
-/// and leaf counts. `Send + Sync`; bind leaves per run.
+/// and leaf counts, bound to the [`Backend`] whose kernels execute it.
+/// `Send + Sync`; bind leaves per run.
 #[derive(Debug)]
 pub struct TapeProgram {
     instrs: Vec<Instr>,
@@ -551,11 +403,22 @@ pub struct TapeProgram {
     n_leaves: usize,
     /// i64 index-table bindings referenced by gather loaders.
     n_ileaves: usize,
+    /// Kernel backend every block of this tape runs through (fixed at
+    /// compile; all backends are bit-identical by contract).
+    bk: &'static dyn Backend,
 }
 
 impl TapeProgram {
-    /// Lower a leaf-indexed fused tree post-order into a flat tape.
+    /// Lower a leaf-indexed fused tree post-order into a flat tape,
+    /// executing through the process-wide [`backend::active`] backend.
     pub fn compile(tree: &KTree) -> crate::Result<TapeProgram> {
+        Self::compile_with(tree, backend::active())
+    }
+
+    /// As [`TapeProgram::compile`], against an explicit backend (the
+    /// engine threads its context's selection; tests force scalar vs
+    /// SIMD side by side).
+    pub fn compile_with(tree: &KTree, bk: &'static dyn Backend) -> crate::Result<TapeProgram> {
         let mut b = TapeBuilder {
             instrs: Vec::new(),
             free: Vec::new(),
@@ -571,7 +434,13 @@ impl TapeProgram {
             n_scratch: b.high - 1,
             n_leaves: b.n_leaves,
             n_ileaves: b.n_ileaves,
+            bk,
         })
+    }
+
+    /// The kernel backend this tape was compiled against.
+    pub fn backend(&self) -> &'static dyn Backend {
+        self.bk
     }
 
     pub fn n_instrs(&self) -> usize {
@@ -662,34 +531,34 @@ impl TapeProgram {
         // an operand), so the mutable `dst` slice never aliases a source
         // slice; leaf buffers are caller-guaranteed live and disjoint
         // from the output and the register file.
+        let bk = self.bk;
         for ins in &self.instrs {
             match *ins {
                 Instr::LoadContiguous { dst, leaf, base } => {
                     let o = reg_mut(out_ptr, file_ptr, dst, len);
-                    load_contiguous(leaf_slice(leaves, leaf), base, start, o);
+                    backend::load_contiguous(leaf_slice(leaves, leaf), base, start, o);
                 }
                 Instr::LoadSplat { dst, leaf, idx } => {
                     reg_mut(out_ptr, file_ptr, dst, len).fill(leaf_slice(leaves, leaf)[idx]);
                 }
                 Instr::LoadBroadcast { dst, leaf, view } => {
                     let o = reg_mut(out_ptr, file_ptr, dst, len);
-                    load_broadcast(leaf_slice(leaves, leaf), &view, start, o);
+                    backend::load_broadcast(leaf_slice(leaves, leaf), &view, start, o);
                 }
                 Instr::LoadStrided { dst, leaf, view } => {
                     let o = reg_mut(out_ptr, file_ptr, dst, len);
-                    load_strided(leaf_slice(leaves, leaf), &view, start, o);
+                    backend::load_strided(leaf_slice(leaves, leaf), &view, start, o);
                 }
                 Instr::LoadModulo { dst, leaf, view } => {
                     let o = reg_mut(out_ptr, file_ptr, dst, len);
-                    load_modulo(leaf_slice(leaves, leaf), &view, start, o);
+                    backend::load_modulo(leaf_slice(leaves, leaf), &view, start, o);
                 }
                 Instr::LoadGather { dst, leaf, idx, base } => {
                     let o = reg_mut(out_ptr, file_ptr, dst, len);
                     let src = leaf_slice(leaves, leaf);
                     let ix = ileaf_slice(ileaves, idx);
-                    for (k, x) in o.iter_mut().enumerate() {
-                        *x = src[ix[base + start + k] as usize];
-                    }
+                    let s = base + start;
+                    bk.load_gather(o, src, &ix[s..s + len]);
                 }
                 Instr::LoadConst { dst, val } => {
                     reg_mut(out_ptr, file_ptr, dst, len).fill(val);
@@ -703,43 +572,38 @@ impl TapeProgram {
                 Instr::Bin { op, dst, rhs } => {
                     let d = reg_mut(out_ptr, file_ptr, dst, len);
                     let s = reg_ref(out_ptr, file_ptr, rhs, len);
-                    op.apply_slices_inplace(d, s);
+                    bk.bin_inplace(op, d, s);
                 }
                 Instr::BinConst { op, dst, val } => {
-                    op.apply_slice_scalar_inplace(reg_mut(out_ptr, file_ptr, dst, len), val);
+                    bk.bin_scalar_inplace(op, reg_mut(out_ptr, file_ptr, dst, len), val);
                 }
                 Instr::BinSplat { op, dst, leaf, idx } => {
                     let s = leaf_slice(leaves, leaf)[idx];
-                    op.apply_slice_scalar_inplace(reg_mut(out_ptr, file_ptr, dst, len), s);
+                    bk.bin_scalar_inplace(op, reg_mut(out_ptr, file_ptr, dst, len), s);
                 }
                 Instr::Un { op, dst } => {
-                    op.apply_slice_inplace(reg_mut(out_ptr, file_ptr, dst, len));
+                    bk.un_inplace(op, reg_mut(out_ptr, file_ptr, dst, len));
                 }
                 Instr::MulAdd { dst, a, b } => {
                     let d = reg_mut(out_ptr, file_ptr, dst, len);
                     let x = reg_ref(out_ptr, file_ptr, a, len);
                     let y = reg_ref(out_ptr, file_ptr, b, len);
-                    for i in 0..len {
-                        d[i] += x[i] * y[i];
-                    }
+                    bk.mul_add(d, x, y);
                 }
                 Instr::MulSub { dst, a, b } => {
                     let d = reg_mut(out_ptr, file_ptr, dst, len);
                     let x = reg_ref(out_ptr, file_ptr, a, len);
                     let y = reg_ref(out_ptr, file_ptr, b, len);
-                    for i in 0..len {
-                        d[i] -= x[i] * y[i];
-                    }
+                    bk.mul_sub(d, x, y);
                 }
                 Instr::ScaleAddConst { dst, mul, add } => {
-                    for x in reg_mut(out_ptr, file_ptr, dst, len).iter_mut() {
-                        *x = *x * mul + add;
-                    }
+                    bk.scale_add_const(reg_mut(out_ptr, file_ptr, dst, len), mul, add);
                 }
                 Instr::Axpy { dst, sub, a, av, b, bv } => {
                     let op = if sub { BinOp::Sub } else { BinOp::Add };
                     let d = reg_mut(out_ptr, file_ptr, dst, len);
-                    axpy_pattern(
+                    backend::axpy_pattern(
+                        bk,
                         op,
                         leaf_slice(leaves, a),
                         &av,
@@ -1007,12 +871,18 @@ unsafe impl Send for Tape {}
 unsafe impl Sync for Tape {}
 
 impl Tape {
-    /// Compile an executable fused tree into a tape.
+    /// Compile an executable fused tree into a tape running on the
+    /// process-wide [`backend::active`] backend.
     pub fn compile(fx: &FExec) -> crate::Result<Tape> {
+        Self::compile_with(fx, backend::active())
+    }
+
+    /// As [`Tape::compile`], against an explicit kernel backend.
+    pub fn compile_with(fx: &FExec, bk: &'static dyn Backend) -> crate::Result<Tape> {
         let mut leaves: Vec<Arc<Vec<f64>>> = Vec::new();
         let mut ileaves: Vec<Arc<Vec<i64>>> = Vec::new();
         let kt = fexec_to_ktree(fx, &mut leaves, &mut ileaves)?;
-        let prog = TapeProgram::compile(&kt)?;
+        let prog = TapeProgram::compile_with(&kt, bk)?;
         let raw = leaves.iter().map(|a| (a.as_ptr(), a.len())).collect();
         let iraw = ileaves.iter().map(|a| (a.as_ptr(), a.len())).collect();
         Ok(Tape { prog, _leaves: leaves, raw, _ileaves: ileaves, iraw })
@@ -1022,6 +892,17 @@ impl Tape {
     /// (one compile, then every chunk of every block replays the tape).
     pub fn from_ftree(tree: &FTree) -> crate::Result<Tape> {
         Tape::compile(&lower(tree)?)
+    }
+
+    /// As [`Tape::from_ftree`], against an explicit kernel backend (the
+    /// engine threads its context's selection here).
+    pub fn from_ftree_with(tree: &FTree, bk: &'static dyn Backend) -> crate::Result<Tape> {
+        Tape::compile_with(&lower(tree)?, bk)
+    }
+
+    /// The kernel backend this tape runs through.
+    pub fn backend(&self) -> &'static dyn Backend {
+        self.prog.backend()
     }
 
     /// Execute over output indices `[start, start + out.len())`.
@@ -1159,11 +1040,26 @@ pub struct SegTape {
 
 impl SegTape {
     /// Compile a leaf-indexed fused tree into a segmented kernel,
-    /// pattern-matching the spmv superinstruction.
+    /// pattern-matching the spmv superinstruction; runs on the
+    /// process-wide [`backend::active`] backend.
     pub fn compile(tree: &KTree, red: RedOp) -> crate::Result<SegTape> {
-        let prog = TapeProgram::compile(tree)?;
+        Self::compile_with(tree, red, backend::active())
+    }
+
+    /// As [`SegTape::compile`], against an explicit kernel backend.
+    pub fn compile_with(
+        tree: &KTree,
+        red: RedOp,
+        bk: &'static dyn Backend,
+    ) -> crate::Result<SegTape> {
+        let prog = TapeProgram::compile_with(tree, bk)?;
         let fused = if matches!(red, RedOp::Sum) { match_gather_mul(tree) } else { None };
         Ok(SegTape { prog, red, fused, runs: None })
+    }
+
+    /// The kernel backend this segmented tape runs through.
+    pub fn backend(&self) -> &'static dyn Backend {
+        self.prog.backend()
     }
 
     /// The underlying leaf-abstract tape (the blocked path's program).
@@ -1292,6 +1188,7 @@ impl SegTape {
         out: &mut [f64],
         scratch: &mut Scratch,
     ) {
+        let bk = self.prog.backend();
         let mut buf = scratch.take();
         for (j, ov) in out.iter_mut().enumerate() {
             let r = row0 + j;
@@ -1301,7 +1198,7 @@ impl SegTape {
             while k < e {
                 let l = BLOCK.min(e - k);
                 self.prog.run_range_raw(leaves, ileaves, k, &mut buf[..l], scratch);
-                acc = self.red.fold_segment_chunk(acc, &buf[..l]);
+                acc = bk.fold_segment_chunk(self.red, acc, &buf[..l]);
                 k += l;
             }
             *ov = acc;
@@ -1309,10 +1206,10 @@ impl SegTape {
         scratch.put(buf);
     }
 
-    /// Fused spmv path: `acc += vals[k] * x[idx[k]]` per row, 4-lane
-    /// unrolled exactly like `RedOp::Sum::fold_slice` so the result is
-    /// bit-identical to the blocked path without materialising the
-    /// product stream.
+    /// Fused spmv path: `acc += vals[k] * x[idx[k]]` per row through
+    /// [`Backend::gather_mul_sum`], whose 4-lane association replicates
+    /// `RedOp::Sum::fold_slice` so the result is bit-identical to the
+    /// blocked path without materialising the product stream.
     unsafe fn run_rows_fused(
         &self,
         leaves: &[LeafBind],
@@ -1322,6 +1219,7 @@ impl SegTape {
         row0: usize,
         out: &mut [f64],
     ) {
+        let bk = self.prog.backend();
         let vals = leaf_slice(leaves, f.vals);
         let x = leaf_slice(leaves, f.x);
         let ix = ileaf_slice(ileaves, f.idx);
@@ -1332,22 +1230,11 @@ impl SegTape {
             let mut k = s;
             while k < e {
                 let l = BLOCK.min(e - k);
-                let m4 = l - (l % 4);
-                let mut a = [0.0f64; 4];
-                let mut t = k;
-                while t < k + m4 {
-                    a[0] += vals[f.vals_base + t] * x[ix[f.idx_base + t] as usize];
-                    a[1] += vals[f.vals_base + t + 1] * x[ix[f.idx_base + t + 1] as usize];
-                    a[2] += vals[f.vals_base + t + 2] * x[ix[f.idx_base + t + 2] as usize];
-                    a[3] += vals[f.vals_base + t + 3] * x[ix[f.idx_base + t + 3] as usize];
-                    t += 4;
-                }
-                let mut cs = a[0] + a[1] + a[2] + a[3];
-                while t < k + l {
-                    cs += vals[f.vals_base + t] * x[ix[f.idx_base + t] as usize];
-                    t += 1;
-                }
-                acc += cs;
+                acc += bk.gather_mul_sum(
+                    &vals[f.vals_base + k..f.vals_base + k + l],
+                    x,
+                    &ix[f.idx_base + k..f.idx_base + k + l],
+                );
                 k += l;
             }
             *ov = acc;
@@ -1368,6 +1255,7 @@ impl SegTape {
         out: &mut [f64],
         scratch: &mut Scratch,
     ) {
+        let bk = self.prog.backend();
         let vals = leaf_slice(leaves, f.vals);
         let x = leaf_slice(leaves, f.x);
         let mut buf = scratch.take();
@@ -1389,15 +1277,13 @@ impl SegTape {
                     let take = (rl - off).min(l - filled);
                     let vs = &vals[f.vals_base + k + filled..f.vals_base + k + filled + take];
                     let xs = &x[rc + off..rc + off + take];
-                    for i in 0..take {
-                        chunk[filled + i] = vs[i] * xs[i];
-                    }
+                    bk.mul_streams(&mut chunk[filled..filled + take], vs, xs);
                     filled += take;
                     if off + take == rl {
                         t += 1;
                     }
                 }
-                acc = self.red.fold_segment_chunk(acc, chunk);
+                acc = bk.fold_segment_chunk(self.red, acc, chunk);
                 k += l;
             }
             *ov = acc;
@@ -1554,6 +1440,17 @@ impl BoundSeg {
         Self::from_fexec(&lower(tree)?, red, segp, detect_contiguity)
     }
 
+    /// As [`BoundSeg::from_ftree`], against an explicit kernel backend.
+    pub fn from_ftree_with(
+        tree: &FTree,
+        red: RedOp,
+        segp: &Arc<Vec<i64>>,
+        detect_contiguity: bool,
+        bk: &'static dyn Backend,
+    ) -> crate::Result<BoundSeg> {
+        Self::from_fexec_with(&lower(tree)?, red, segp, detect_contiguity, bk)
+    }
+
     /// As [`BoundSeg::from_ftree`], from an already-lowered tree.
     pub fn from_fexec(
         fx: &FExec,
@@ -1561,10 +1458,21 @@ impl BoundSeg {
         segp: &Arc<Vec<i64>>,
         detect_contiguity: bool,
     ) -> crate::Result<BoundSeg> {
+        Self::from_fexec_with(fx, red, segp, detect_contiguity, backend::active())
+    }
+
+    /// As [`BoundSeg::from_fexec`], against an explicit kernel backend.
+    pub fn from_fexec_with(
+        fx: &FExec,
+        red: RedOp,
+        segp: &Arc<Vec<i64>>,
+        detect_contiguity: bool,
+        bk: &'static dyn Backend,
+    ) -> crate::Result<BoundSeg> {
         let mut leaves: Vec<Arc<Vec<f64>>> = Vec::new();
         let mut ileaves: Vec<Arc<Vec<i64>>> = Vec::new();
         let kt = fexec_to_ktree(fx, &mut leaves, &mut ileaves)?;
-        let mut seg = SegTape::compile(&kt, red)?;
+        let mut seg = SegTape::compile_with(&kt, red, bk)?;
         if detect_contiguity {
             if let (Some(fi), Some(f)) = (seg.fused_idx(), seg.fused) {
                 let idx = ileaves[fi as usize].clone();

@@ -9,6 +9,7 @@
 //!    feeding the [`sim`] virtual-time model that reproduces the paper's
 //!    40-core scaling figures on this 1-core testbed (see DESIGN.md §2).
 
+pub mod backend;
 pub mod eval;
 pub mod pool;
 pub mod program;
@@ -45,6 +46,10 @@ pub struct EngineCfg {
     pub record: bool,
     /// Allow in-place buffer donation.
     pub in_place: bool,
+    /// Kernel backend every step's tape compiles against (resolved from
+    /// [`super::Options::backend`]; all backends are bit-identical by
+    /// contract, see [`backend`]).
+    pub backend: &'static dyn backend::Backend,
 }
 
 impl Default for EngineCfg {
@@ -55,6 +60,7 @@ impl Default for EngineCfg {
             chunks_per_worker: 4,
             record: false,
             in_place: true,
+            backend: backend::active(),
         }
     }
 }
@@ -211,7 +217,7 @@ fn exec_step(
     // ---- lower + execute per step kind ----
     let (result, record): (Vec<f64>, Option<StepRecord>) = match step {
         Step::Fused { tree, .. } => {
-            let fx = Tape::from_ftree(tree)?;
+            let fx = Tape::from_ftree_with(tree, cfg.backend)?;
             let mut out = vec![0.0f64; out_len];
             let chunks = make_chunks(out_len, cfg, workers);
             let fpe = tree.flops_per_elem();
@@ -229,7 +235,7 @@ fn exec_step(
             }))
         }
         Step::Accumulate { base, tree, .. } => {
-            let fx = Tape::from_ftree(tree)?;
+            let fx = Tape::from_ftree_with(tree, cfg.backend)?;
             let mut out = take_or_clone(base, cfg.in_place)?;
             debug_assert_eq!(out.len(), out_len);
             let chunks = make_chunks(out_len, cfg, workers);
@@ -248,7 +254,7 @@ fn exec_step(
             }))
         }
         Step::ReduceRows { red, tree, rows, cols, .. } => {
-            let fx = Tape::from_ftree(tree)?;
+            let fx = Tape::from_ftree_with(tree, cfg.backend)?;
             let mut out = vec![0.0f64; *rows];
             // chunk over output rows
             let row_grain = (cfg.grain / cols.max(&1)).max(1);
@@ -268,7 +274,7 @@ fn exec_step(
             }))
         }
         Step::ReduceCols { red, tree, rows, cols, .. } => {
-            let fx = Tape::from_ftree(tree)?;
+            let fx = Tape::from_ftree_with(tree, cfg.backend)?;
             let mut out = vec![red.identity(); *cols];
             let col_grain = cfg.grain.min(*cols).max(1);
             let chunks = make_row_chunks(*cols, col_grain, cfg, workers);
@@ -287,7 +293,7 @@ fn exec_step(
             }))
         }
         Step::ReduceAll { red, tree, len, .. } => {
-            let fx = Tape::from_ftree(tree)?;
+            let fx = Tape::from_ftree_with(tree, cfg.backend)?;
             let chunks = make_chunks(*len, cfg, workers);
             let fpe = tree.flops_per_elem() + 1.0;
             let (v, rec) = run_reduce_all(&fx, *red, *len, &chunks, cfg, pool);
@@ -315,7 +321,8 @@ fn exec_step(
             validate_segp(&segp_arc, *rows, *nnz)?;
             // Compile the operand tree once into a segmented tape; the
             // contiguity hint triggers the one-off run scan (arbb_spmv2).
-            let bound = eval::BoundSeg::from_ftree(tree, *red, &segp_arc, *runs_hint)?;
+            let bound =
+                eval::BoundSeg::from_ftree_with(tree, *red, &segp_arc, *runs_hint, cfg.backend)?;
             let mut out = vec![0.0f64; *rows];
             // nnz-balanced row panels: equal-row chunks would let one
             // dense row serialise the sweep. Recording runs cut finer
@@ -352,8 +359,8 @@ fn exec_step(
             (out, rec)
         }
         Step::Cat { a, la, b, lb, .. } => {
-            let fa = Tape::from_ftree(a)?;
-            let fb = Tape::from_ftree(b)?;
+            let fa = Tape::from_ftree_with(a, cfg.backend)?;
+            let fb = Tape::from_ftree_with(b, cfg.backend)?;
             let mut out = vec![0.0f64; la + lb];
             let mut chunk_secs = Vec::new();
             // Two element-wise sub-kernels into disjoint halves.
@@ -383,7 +390,7 @@ fn exec_step(
             (out, rec)
         }
         Step::ReplaceCol { m, col, vtree, .. } => {
-            let fx = Tape::from_ftree(vtree)?;
+            let fx = Tape::from_ftree_with(vtree, cfg.backend)?;
             let (rows, cols) = (out_node.shape.rows(), out_node.shape.cols());
             let mut out = take_or_clone(m, cfg.in_place)?;
             let t0 = Instant::now();
@@ -404,7 +411,7 @@ fn exec_step(
             (out, rec)
         }
         Step::ReplaceRow { m, row, vtree, .. } => {
-            let fx = Tape::from_ftree(vtree)?;
+            let fx = Tape::from_ftree_with(vtree, cfg.backend)?;
             let cols = out_node.shape.cols();
             let mut out = take_or_clone(m, cfg.in_place)?;
             let t0 = Instant::now();
@@ -696,6 +703,7 @@ fn run_reduce_rows(
     pool: Option<&SharedPool>,
 ) -> Option<Vec<f64>> {
     let optr = OutPtr(out.as_mut_ptr());
+    let bk = fx.backend();
     let body = |c: &Chunk| {
         let o = unsafe { optr.slice(c.start, c.len) };
         eval::with_scratch(|scratch| {
@@ -710,7 +718,7 @@ fn run_reduce_rows(
                 while off < cols {
                     let len = BLOCK.min(cols - off);
                     fx.run_range(r * cols + off, &mut buf[..len], scratch);
-                    acc = red.fold(acc, red.fold_slice(&buf[..len]));
+                    acc = red.fold(acc, bk.fold_slice(red, &buf[..len]));
                     off += len;
                 }
                 *ov = acc;
@@ -769,6 +777,7 @@ fn run_reduce_all(
     }
     let partials: Vec<AtomicU64> =
         (0..chunks.len()).map(|_| AtomicU64::new(red.identity().to_bits())).collect();
+    let bk = fx.backend();
     let body = |c: &Chunk| {
         let idx = chunks.iter().position(|x| x.start == c.start).unwrap();
         eval::with_scratch(|scratch| {
@@ -778,7 +787,7 @@ fn run_reduce_all(
             while off < c.len {
                 let l = BLOCK.min(c.len - off);
                 fx.run_range(c.start + off, &mut buf[..l], scratch);
-                acc = red.fold(acc, red.fold_slice(&buf[..l]));
+                acc = red.fold(acc, bk.fold_slice(red, &buf[..l]));
                 off += l;
             }
             partials[idx].store(acc.to_bits(), Ordering::Relaxed);

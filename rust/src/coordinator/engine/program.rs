@@ -28,6 +28,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::backend::spmv_row_serial;
 use super::eval::{with_scratch, ILeafBind, LeafBind, TapeProgram};
 use super::pool::SharedPool;
 use crate::coordinator::node::Data;
@@ -509,11 +510,13 @@ impl Program {
                     let body = |r0: usize, o: &mut [f64]| {
                         for (j, ov) in o.iter_mut().enumerate() {
                             let r = r0 + j;
-                            let mut acc = 0.0;
-                            for k in rowp[r]..rowp[r + 1] {
-                                acc += vals[k as usize] * xs[indx[k as usize] as usize];
-                            }
-                            *ov = acc;
+                            *ov = spmv_row_serial(
+                                vals,
+                                indx,
+                                xs,
+                                rowp[r] as usize,
+                                rowp[r + 1] as usize,
+                            );
                         }
                     };
                     match pool {

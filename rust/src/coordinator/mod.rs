@@ -39,6 +39,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 pub use api::{CplxV, Mat2, Scal, Vec1, VecI64};
+pub use engine::backend::BackendSel;
 pub use engine::sim::{MachineModel, SimResult};
 pub use engine::{ExecStats, Mode, StepRecord};
 pub use shape::{DType, Shape};
@@ -78,6 +79,12 @@ pub struct Options {
     pub grain: usize,
     /// Record per-chunk timings for the scaling simulator.
     pub record: bool,
+    /// Kernel backend selection (the vector half of the paper's
+    /// "thread-level and vector-level parallelism"): `Auto` honours the
+    /// `PALLAS_BACKEND` environment override, else takes the best
+    /// detected ISA. Both `O2` and `O3` vectorise — the paper's levels
+    /// differ in threading, not SIMD.
+    pub backend: BackendSel,
 }
 
 impl Default for Options {
@@ -90,6 +97,7 @@ impl Default for Options {
             cse: false,
             grain: 4096,
             record: false,
+            backend: BackendSel::Auto,
         }
     }
 }
@@ -175,6 +183,18 @@ impl Context {
         self.set_options(o);
     }
 
+    /// Select the kernel backend for this context's engine.
+    pub fn set_backend(&self, sel: BackendSel) {
+        let mut o = self.options();
+        o.backend = sel;
+        self.set_options(o);
+    }
+
+    /// Name of the kernel backend this context's engine resolves to.
+    pub fn backend_name(&self) -> &'static str {
+        engine::backend::select(self.options().backend).name()
+    }
+
     /// Execution statistics accumulated since the last [`Self::reset_stats`].
     pub fn stats<R>(&self, f: impl FnOnce(&ExecStats) -> R) -> R {
         f(&self.inner.stats.borrow())
@@ -226,6 +246,7 @@ impl Context {
             chunks_per_worker: 4,
             record: opts.record,
             in_place: opts.in_place,
+            backend: engine::backend::select(opts.backend),
         };
         // Attach to the shared pool for O3 (interned per worker count;
         // threads persist across dispatches and across contexts).

@@ -147,6 +147,25 @@ impl BinOp {
         }
     }
 
+    /// `out[i] = op(out[i], s)` — scalar right operand, in place. `Div`
+    /// multiplies by the reciprocal, computed once; that choice is part
+    /// of the cross-backend bit contract (see
+    /// [`crate::coordinator::engine::backend`]).
+    #[inline]
+    pub fn apply_slice_scalar_inplace(self, out: &mut [f64], s: f64) {
+        match self {
+            BinOp::Add => out.iter_mut().for_each(|x| *x += s),
+            BinOp::Sub => out.iter_mut().for_each(|x| *x -= s),
+            BinOp::Mul => out.iter_mut().for_each(|x| *x *= s),
+            BinOp::Div => {
+                let inv = 1.0 / s;
+                out.iter_mut().for_each(|x| *x *= inv)
+            }
+            BinOp::Min => out.iter_mut().for_each(|x| *x = x.min(s)),
+            BinOp::Max => out.iter_mut().for_each(|x| *x = x.max(s)),
+        }
+    }
+
     /// Estimated FLOPs per element (for the virtual-time simulator).
     pub fn flops(self) -> f64 {
         match self {
@@ -270,7 +289,13 @@ impl RedOp {
         }
     }
 
-    /// Reduce a slice.
+    /// Reduce a slice — the **canonical association contract** of the
+    /// runtime's reductions. For `Sum` the order is the 4-lane unroll
+    /// below (lane `j` accumulates elements `j, j+4, …`, lanes merge
+    /// left-to-right, remainder folds serially); every
+    /// [`crate::coordinator::engine::backend::Backend`] must reproduce
+    /// it bit for bit (a SIMD backend's 4-wide accumulator vector *is*
+    /// this order), so results never depend on the selected backend.
     #[inline]
     pub fn fold_slice(self, xs: &[f64]) -> f64 {
         match self {

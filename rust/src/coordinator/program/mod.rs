@@ -327,6 +327,10 @@ pub struct ProgramBuilder {
     root: Vec<PNode>,
     frames: Vec<Vec<PNode>>,
     outputs: Vec<Rd>,
+    /// Kernel backend every statement tape compiles against at
+    /// [`ProgramBuilder::finish`] (the process-wide active backend by
+    /// default; tests force scalar vs SIMD side by side).
+    backend: &'static dyn super::engine::backend::Backend,
 }
 
 impl Default for ProgramBuilder {
@@ -347,7 +351,15 @@ impl ProgramBuilder {
             root: Vec::new(),
             frames: Vec::new(),
             outputs: Vec::new(),
+            backend: super::engine::backend::active(),
         }
+    }
+
+    /// Force the kernel backend the compiled statement tapes run on
+    /// (all backends are bit-identical by contract; this exists for the
+    /// cross-backend property suites and ablations).
+    pub fn set_backend(&mut self, bk: &'static dyn super::engine::backend::Backend) {
+        self.backend = bk;
     }
 
     /// Declare an f64 vector parameter of length `len`, rebound on every
@@ -817,7 +829,7 @@ impl ProgramBuilder {
                     self.dst_of(*dst, *staged, bp),
                     *off,
                     *len,
-                    super::engine::eval::TapeProgram::compile(&kt)?,
+                    super::engine::eval::TapeProgram::compile_with(&kt, self.backend)?,
                     binds,
                     ibinds,
                 ))

@@ -39,9 +39,11 @@ pub fn arbb_mxm1(ctx: &Context, a: &Mat2, b: &Mat2) -> Mat2 {
 
 /// `arbb_mxm2a`: rank-1 updates,
 /// `c += repeat_col(a.col(i), n) * repeat_row(b.row(i), n)`.
-pub fn arbb_mxm2a(ctx: &Context, a: &Mat2, b: &Mat2) -> Mat2 {
+///
+/// (No context parameter: the operands carry their context, exactly as
+/// ArBB containers carry their runtime binding.)
+pub fn arbb_mxm2a(a: &Mat2, b: &Mat2) -> Mat2 {
     let n = a.rows();
-    let _ = ctx;
     let mut c = a.col(0).repeat_col(n) * &b.row(0).repeat_row(n);
     c.eval();
     for i in 1..n {
@@ -55,9 +57,8 @@ pub fn arbb_mxm2a(ctx: &Context, a: &Mat2, b: &Mat2) -> Mat2 {
 /// `u` rank-1 updates *inside* each `_for` iteration, so `u` updates fuse
 /// into one captured block ("by tuning the size of u the performance of
 /// arbb_mxm2a could be increased by a factor of two").
-pub fn arbb_mxm2b(ctx: &Context, a: &Mat2, b: &Mat2, u: usize) -> Mat2 {
+pub fn arbb_mxm2b(a: &Mat2, b: &Mat2, u: usize) -> Mat2 {
     let n = a.rows();
-    let _ = ctx;
     let u = u.max(1).min(n);
     // initial block: i in [0, u)
     let mut c = a.col(0).repeat_col(n) * &b.row(0).repeat_row(n);
@@ -126,8 +127,8 @@ mod tests {
     #[test]
     fn mxm2a_correct() {
         for n in [4, 17, 32] {
-            let (ctx, a, b, want) = setup(n);
-            let got = arbb_mxm2a(&ctx, &a, &b).to_vec();
+            let (_ctx, a, b, want) = setup(n);
+            let got = arbb_mxm2a(&a, &b).to_vec();
             assert_allclose(&got, &want, 1e-11, 1e-12, "mxm2a");
         }
     }
@@ -136,8 +137,8 @@ mod tests {
     fn mxm2b_correct_various_u() {
         for n in [16, 33] {
             for u in [1, 2, 8, 16, 40] {
-                let (ctx, a, b, want) = setup(n);
-                let got = arbb_mxm2b(&ctx, &a, &b, u).to_vec();
+                let (_ctx, a, b, want) = setup(n);
+                let got = arbb_mxm2b(&a, &b, u).to_vec();
                 assert_allclose(&got, &want, 1e-11, 1e-12, &format!("mxm2b n={n} u={u}"));
             }
         }
@@ -150,11 +151,11 @@ mod tests {
         let n = 32;
         let (ctx, a, b, _) = setup(n);
         ctx.reset_stats();
-        let _ = arbb_mxm2a(&ctx, &a, &b).to_vec();
+        let _ = arbb_mxm2a(&a, &b).to_vec();
         let steps_2a = ctx.stats(|s| s.steps);
         let (ctx2, a2, b2, _) = setup(n);
         ctx2.reset_stats();
-        let _ = arbb_mxm2b(&ctx2, &a2, &b2, 8).to_vec();
+        let _ = arbb_mxm2b(&a2, &b2, 8).to_vec();
         let steps_2b = ctx2.stats(|s| s.steps);
         assert!(
             steps_2b * 4 < steps_2a,

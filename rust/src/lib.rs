@@ -15,9 +15,13 @@
 //! * [`coordinator`] — the ArBB-like runtime: dense containers bound to
 //!   host memory, element-wise / reduction / permutation operators with
 //!   serial semantics, lazy capture of expression DAGs, an optimiser
-//!   (fusion, CSE, constant folding, dead-code elimination), and three
+//!   (fusion, CSE, constant folding, dead-code elimination), three
 //!   execution engines (serial `O2`, threaded `O3`, and a calibrated
-//!   virtual-time scaling simulator standing in for the 40-core node).
+//!   virtual-time scaling simulator standing in for the 40-core node),
+//!   and a runtime-dispatched kernel backend layer
+//!   ([`coordinator::engine::backend`]: scalar reference + AVX2) that
+//!   every executor's block kernels route through — the vector half of
+//!   ArBB's "thread-level and vector-level parallelism".
 //! * [`serve`] — the production serving path: kernels are registered
 //!   once, captured+optimised plans are cached per argument signature
 //!   (capture-once / call-many, the paper's §4 cost model), and requests
@@ -56,7 +60,7 @@ pub mod solvers;
 pub mod sparse;
 pub mod util;
 
-pub use coordinator::{Context, Engine, MachineModel, Options, OptLevel};
+pub use coordinator::{BackendSel, Context, Engine, MachineModel, Options, OptLevel};
 
 /// Crate-wide error type.
 ///

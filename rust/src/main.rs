@@ -86,7 +86,7 @@ fn e2e() {
     let b: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
     let ctx = Context::serial();
     let (am, bm) = (ctx.bind2(&a, n, n), ctx.bind2(&b, n, n));
-    let got = mod2am::arbb_mxm2b(&ctx, &am, &bm, 8).to_vec();
+    let got = mod2am::arbb_mxm2b(&am, &bm, 8).to_vec();
     let want = mod2am::reference(&a, &b, n);
     arbb_rs::util::assert_allclose(&got, &want, 1e-9, 1e-10, "e2e mxm");
     println!("  DSL mod2am OK");
@@ -121,7 +121,7 @@ fn run_kernel(args: &[String], sim: bool) {
             let a: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
             let b: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
             let (am, bm) = (ctx.bind2(&a, n, n), ctx.bind2(&b, n, n));
-            let t = time_best(|| drop(mod2am::arbb_mxm2b(&ctx, &am, &bm, u).to_vec()), 0.3, 2);
+            let t = time_best(|| drop(mod2am::arbb_mxm2b(&am, &bm, u).to_vec()), 0.3, 2);
             println!("mxm n={n} u={u}: {:.1} MFlop/s", mflops(gemm_flops(n, n, n), t));
             (gemm_flops(n, n, n), format!("mxm n={n}"))
         }

@@ -935,6 +935,7 @@ fn run_step(
             let mut ob = take_slot(slots, *out)?;
             debug_assert_eq!(ob.len(), *rows);
             bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
+            let bk = kern.prog.backend();
             let mut buf = scratch.take();
             for (r, ov) in ob.iter_mut().enumerate() {
                 let mut acc = red.identity();
@@ -947,7 +948,7 @@ fn run_step(
                         let st = r * *cols + off;
                         kern.prog.run_range_raw(leafbuf, ileafbuf, st, &mut buf[..l], scratch)
                     };
-                    acc = red.fold(acc, red.fold_slice(&buf[..l]));
+                    acc = red.fold(acc, bk.fold_slice(*red, &buf[..l]));
                     off += l;
                 }
                 *ov = acc;
@@ -985,6 +986,7 @@ fn run_step(
             let mut ob = take_slot(slots, *out)?;
             debug_assert_eq!(ob.len(), 1);
             bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
+            let bk = kern.prog.backend();
             let mut buf = scratch.take();
             let mut acc = red.identity();
             let mut off = 0;
@@ -992,7 +994,7 @@ fn run_step(
                 let l = BLOCK.min(*len - off);
                 // SAFETY: as in `ReduceRows`.
                 unsafe { kern.prog.run_range_raw(leafbuf, ileafbuf, off, &mut buf[..l], scratch) };
-                acc = red.fold(acc, red.fold_slice(&buf[..l]));
+                acc = red.fold(acc, bk.fold_slice(*red, &buf[..l]));
                 off += l;
             }
             scratch.put(buf);

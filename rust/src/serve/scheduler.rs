@@ -209,6 +209,12 @@ impl Client {
         self.shared.stats.lock().unwrap().throughput()
     }
 
+    /// Name of the kernel backend cached plans compile against (the
+    /// process-wide active backend; `PALLAS_BACKEND` overrides it).
+    pub fn backend_name(&self) -> &'static str {
+        crate::coordinator::engine::backend::active().name()
+    }
+
     /// Render the serving report (per-kernel table + cache line).
     pub fn report(&self) -> String {
         let cache = self.cache_stats();
@@ -333,6 +339,9 @@ fn dispatcher(
         cse: cfg.cse,
         grain: cfg.grain,
         record: false,
+        // Serving captures against the process-wide active backend
+        // (PALLAS_BACKEND override included).
+        ..Options::default()
     });
     let pool = pool::for_workers(cfg.workers);
     let max_batch = cfg.max_batch.max(1);

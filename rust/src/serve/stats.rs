@@ -93,6 +93,10 @@ pub struct ServeStats {
     kernels: Vec<KernelStats>,
     /// Total requests that were rejected at submission (queue full).
     pub rejected: u64,
+    /// Active kernel backend name (plans compile against the
+    /// process-wide backend; surfaced so a serving report states which
+    /// ISA path produced its numbers).
+    backend: &'static str,
 }
 
 impl ServeStats {
@@ -101,7 +105,13 @@ impl ServeStats {
             started: Instant::now(),
             kernels: kernel_names.iter().map(|n| KernelStats::new(n)).collect(),
             rejected: 0,
+            backend: crate::coordinator::engine::backend::active().name(),
         }
+    }
+
+    /// Name of the kernel backend serving plans compile against.
+    pub fn backend(&self) -> &'static str {
+        self.backend
     }
 
     pub fn record_request(&mut self, kernel: usize, latency_s: f64, ok: bool) {
@@ -147,11 +157,13 @@ impl ServeStats {
     pub fn report(&self, cache: &super::cache::CacheStats) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "\n## serve stats — {:.1} req/s sustained, {} served, {} rejected, uptime {:.2}s\n",
+            "\n## serve stats — {:.1} req/s sustained, {} served, {} rejected, uptime {:.2}s, \
+             backend {}\n",
             self.throughput(),
             self.total_requests(),
             self.rejected,
-            self.uptime_secs()
+            self.uptime_secs(),
+            self.backend
         ));
         out.push_str(&format!(
             "   plan cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {}/{} entries\n\n",

@@ -57,16 +57,21 @@ impl Csr {
         100.0 * self.nnz() as f64 / (self.nrows * self.ncols) as f64
     }
 
-    /// Reference serial spmv: `out = A x`.
+    /// Reference serial spmv: `out = A x`. The row body is the shared
+    /// strict left-to-right host contract
+    /// ([`crate::coordinator::engine::backend::spmv_row_serial`]), which
+    /// the captured-program spmv step replays bit-for-bit.
     pub fn spmv(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(out.len(), self.nrows);
         for r in 0..self.nrows {
-            let mut acc = 0.0;
-            for k in self.rowp[r]..self.rowp[r + 1] {
-                acc += self.vals[k as usize] * x[self.indx[k as usize] as usize];
-            }
-            out[r] = acc;
+            out[r] = crate::coordinator::engine::backend::spmv_row_serial(
+                &self.vals,
+                &self.indx,
+                x,
+                self.rowp[r] as usize,
+                self.rowp[r + 1] as usize,
+            );
         }
     }
 

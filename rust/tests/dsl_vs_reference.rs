@@ -33,8 +33,8 @@ fn mod2am_all_versions_agree_serial_and_parallel() {
         let a = ctx.bind2(&ah, n, n);
         let b = ctx.bind2(&bh, n, n);
         let g1 = mod2am::arbb_mxm1(&ctx, &a, &b).to_vec();
-        let g2a = mod2am::arbb_mxm2a(&ctx, &a, &b).to_vec();
-        let g2b = mod2am::arbb_mxm2b(&ctx, &a, &b, 8).to_vec();
+        let g2a = mod2am::arbb_mxm2a(&a, &b).to_vec();
+        let g2b = mod2am::arbb_mxm2b(&a, &b, 8).to_vec();
         assert_allclose(&g1, &want, 1e-10, 1e-11, &format!("mxm1 {label}"));
         assert_allclose(&g2a, &want, 1e-10, 1e-11, &format!("mxm2a {label}"));
         assert_allclose(&g2b, &want, 1e-10, 1e-11, &format!("mxm2b {label}"));

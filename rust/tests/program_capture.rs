@@ -112,6 +112,55 @@ fn captured_fft_single_capture_many_replays() {
 
 /// Captured fixed-iteration CG vs the host cg_core driver, bit for bit,
 /// across sizes, bandwidths and trip counts.
+/// Backend equivalence at the whole-program level: the same captured
+/// loop nest compiled against the forced-scalar and the SIMD backend
+/// replays bit-identically — every `Emit` statement tape routes through
+/// the backend kernels, and dots/spmv keep host association by
+/// contract. (When the host has no SIMD ISA both programs run scalar.)
+#[test]
+fn program_backends_bit_identical() {
+    use arbb_rs::coordinator::engine::backend::{self, Backend};
+    use arbb_rs::coordinator::ops::UnOp;
+    use arbb_rs::coordinator::program::{PExpr, ProgramBuilder};
+
+    let n = 1500usize;
+    let build = |bk: &'static dyn Backend| {
+        let mut pb = ProgramBuilder::new();
+        pb.set_backend(bk);
+        let x0 = pb.param(n);
+        let y0 = pb.param(n);
+        let acc = pb.carried(n);
+        pb.assign(acc, PExpr::read(x0));
+        pb.repeat(5, |pb| {
+            pb.update(
+                acc,
+                PExpr::acc() * PExpr::lit(1.0001)
+                    + PExpr::read(y0).un(UnOp::Abs).un(UnOp::Sqrt),
+            );
+        });
+        pb.output(acc);
+        pb.finish().unwrap()
+    };
+    let prog_s = build(backend::scalar());
+    let prog_v = build(backend::simd().unwrap_or_else(backend::scalar));
+
+    let mut rng = XorShift64::new(0xBAC);
+    let xv: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let yv: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let a = prog_s.invoke(&[&xv, &yv]).unwrap();
+    let b = prog_v.invoke(&[&xv, &yv]).unwrap();
+    assert_eq!(a.len(), n);
+    for k in 0..n {
+        assert_eq!(
+            a[k].to_bits(),
+            b[k].to_bits(),
+            "program backend equivalence diverges at {k}: {} vs {}",
+            a[k],
+            b[k]
+        );
+    }
+}
+
 #[test]
 fn captured_cg_bitwise_vs_cg_core() {
     for &(n, bw, iters) in

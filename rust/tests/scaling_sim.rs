@@ -22,7 +22,7 @@ fn mxm2b_scales_then_flattens() {
     let ctx = recording_ctx();
     let a = ctx.bind2(&ah, n, n);
     let b = ctx.bind2(&bh, n, n);
-    let _ = mod2am::arbb_mxm2b(&ctx, &a, &b, 8).to_vec();
+    let _ = mod2am::arbb_mxm2b(&a, &b, 8).to_vec();
     let (recs, forces) = ctx.take_records();
     assert!(!recs.is_empty());
     let m = model();

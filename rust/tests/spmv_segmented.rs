@@ -162,6 +162,77 @@ fn row_longer_than_one_block() {
     check_all_paths(&m, 31);
 }
 
+/// Backend equivalence across the three segmented executor paths: the
+/// same adversarial matrices lowered against the forced-scalar and the
+/// SIMD backend must be bitwise identical to the tree-interpreter
+/// reference — the fused gather-mul 4-lane accumulator, the contiguity
+/// runs' product stream and the blocked fold all share the
+/// `fold_slice` association contract, so no backend may reorder a sum.
+#[test]
+fn backends_bit_identical_on_segmented_paths() {
+    use arbb_rs::coordinator::engine::backend;
+    use arbb_rs::coordinator::engine::eval::{seg_reduce_rows_ref, BoundSeg, FExec, Scratch};
+    use arbb_rs::coordinator::ops::{BinOp, RedOp};
+    use arbb_rs::coordinator::shape::View;
+    use std::sync::Arc;
+
+    let scalar = backend::scalar();
+    let simd = backend::simd().unwrap_or_else(backend::scalar);
+    let mut rng = XorShift64::new(0xB0_CAFE);
+    let mut scratch = Scratch::default();
+    for round in 0..8u64 {
+        let nrows = 8 + rng.below(80);
+        // Wide enough that dense adversarial rows cross one evaluation
+        // BLOCK, driving the intra-segment chunk carry of every path.
+        let ncols = 8 + rng.below(2500);
+        let m = adversarial_csr(&mut rng, nrows, ncols);
+        let x = m.random_x(round + 1);
+        let nnz = m.vals.len();
+        let segp = Arc::new(m.rowp.clone());
+        let fx = FExec::Bin(
+            BinOp::Mul,
+            Box::new(FExec::Leaf {
+                data: Arc::new(m.vals.clone()),
+                view: View::identity(nnz),
+            }),
+            Box::new(FExec::Gather {
+                data: Arc::new(x.clone()),
+                idx: Arc::new(m.indx.clone()),
+                base: 0,
+            }),
+        );
+        // Fused + runs paths, then the blocked path (fused match broken
+        // by a no-op Add 0.0).
+        let blocked =
+            FExec::Bin(BinOp::Add, Box::new(fx.clone()), Box::new(FExec::Const(0.0)));
+        for (tree, detect, label) in
+            [(&fx, false, "fused"), (&fx, true, "runs"), (&blocked, false, "blocked")]
+        {
+            let mut want = vec![0.0; nrows];
+            seg_reduce_rows_ref(tree, RedOp::Sum, &segp, 0, &mut want, &mut scratch);
+            let bs = BoundSeg::from_fexec_with(tree, RedOp::Sum, &segp, detect, scalar).unwrap();
+            let bv = BoundSeg::from_fexec_with(tree, RedOp::Sum, &segp, detect, simd).unwrap();
+            let mut gs = vec![0.0; nrows];
+            let mut gv = vec![0.0; nrows];
+            bs.run_rows(&segp, 0, &mut gs, &mut scratch);
+            bv.run_rows(&segp, 0, &mut gv, &mut scratch);
+            for r in 0..nrows {
+                assert_eq!(
+                    gs[r].to_bits(),
+                    want[r].to_bits(),
+                    "round {round} {label} scalar row {r}"
+                );
+                assert_eq!(
+                    gv[r].to_bits(),
+                    want[r].to_bits(),
+                    "round {round} {label} {} row {r}",
+                    bv.seg().backend().name()
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn single_run_contiguity() {
     // Fully dense rows: arbb_spmv2's run table collapses to one run per

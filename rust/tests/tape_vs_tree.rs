@@ -150,6 +150,67 @@ fn striped_cap(n: usize) -> usize {
     n.min(300).max(1)
 }
 
+/// The backend equivalence sweep: the same randomised trees, compiled
+/// against the forced-scalar and the SIMD backend side by side, must be
+/// bitwise identical to each other *and* to the tree interpreter —
+/// SIMD kernels are reorder-free by the backend contract, so no
+/// tolerance is ever needed. When the host has no SIMD ISA the second
+/// tape also runs scalar and the sweep degenerates to a self-check.
+#[test]
+fn backends_bit_identical_on_random_trees() {
+    use arbb_rs::coordinator::engine::backend;
+    let scalar = backend::scalar();
+    let simd = backend::simd().unwrap_or_else(backend::scalar);
+    for case in 0..60u64 {
+        let mut rng = XorShift64::new(0xbac0_0000 + case);
+        let n = match case % 3 {
+            0 => 1 + rng.below(400),
+            1 => BLOCK - 3 + rng.below(7),
+            _ => 2 * BLOCK + 1 + rng.below(BLOCK + 100),
+        };
+        let oc = 1 + rng.below(n.min(striped_cap(n)));
+        let depth = 1 + rng.below(6);
+        let mut tree = gen_tree(&mut rng, depth, n, oc);
+        if rng.below(3) == 0 {
+            let op = if rng.below(2) == 0 { BinOp::Add } else { BinOp::Sub };
+            tree = FExec::Bin(op, Box::new(FExec::Acc), Box::new(tree));
+        }
+        let base: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+        // Tree-interpreter reference (always scalar kernels).
+        let mut want = base.clone();
+        eval_range(&tree, 0, &mut want, &mut Scratch::default());
+
+        let tape_s = Tape::compile_with(&tree, scalar).unwrap();
+        let tape_v = Tape::compile_with(&tree, simd).unwrap();
+        let mut got_s = base.clone();
+        let mut got_v = base.clone();
+        let mut scratch = Scratch::default();
+        tape_s.run_range(0, &mut got_s, &mut scratch);
+        // Uneven chunk boundaries on the SIMD tape exercise its tails.
+        let mut s = 0;
+        while s < n {
+            let l = (1 + rng.below(BLOCK / 2 + 13)).min(n - s);
+            tape_v.run_range(s, &mut got_v[s..s + l], &mut scratch);
+            s += l;
+        }
+        for i in 0..n {
+            assert!(
+                bits_equal(got_s[i], want[i]),
+                "case {case} (n={n}, oc={oc}): scalar tape diverges from tree at {i}"
+            );
+            assert!(
+                bits_equal(got_v[i], want[i]),
+                "case {case} (n={n}, oc={oc}): {} tape diverges from tree at {i}: \
+                 {:?} vs {:?}",
+                tape_v.backend().name(),
+                got_v[i],
+                want[i]
+            );
+        }
+    }
+}
+
 #[test]
 fn tape_matches_tree_on_deep_left_spine() {
     // A planner-shaped chain: long left spine with leaf/const right
