@@ -14,14 +14,23 @@
 //! ```sh
 //! cargo bench --bench serve_throughput            # quick (~10 s)
 //! cargo bench --bench serve_throughput -- --secs 3
+//! cargo bench --bench serve_throughput -- --smoke # observability cost
 //! ```
+//!
+//! `--smoke` measures the observability layer instead: ns/request with
+//! the obs stack off (twice — the A/B gap is the noise floor), with
+//! metrics only, and with metrics + tracing + tape profiling, plus the
+//! e2e latency decomposition and per-opcode plan profiles, written to
+//! `BENCH_serve_obs.json` — the CI perf-tracking mode.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use arbb_rs::bench::Series;
 use arbb_rs::coordinator::{Context, Mat2, Vec1};
-use arbb_rs::serve::{Arg, ServeConfig, Server, Value};
+use arbb_rs::euroben::{mod2as, mod2f};
+use arbb_rs::serve::{Arg, ObsConfig, ServeConfig, Server, Value};
+use arbb_rs::sparse::banded_spd;
 use arbb_rs::util::XorShift64;
 
 const TRIAD_N: usize = 4096;
@@ -108,7 +117,167 @@ fn start_server(cfg: ServeConfig) -> Server {
         .start()
 }
 
+/// CI smoke mode: the cost of the observability layer on the serve
+/// fast path, plus the artifacts it produces. Emits
+/// `BENCH_serve_obs.json`.
+fn obs_smoke() {
+    const WARM: usize = 200;
+    const REQS: usize = 2000;
+    const ROUNDS: usize = 3;
+
+    let inputs: Vec<(Vec<f64>, Vec<f64>)> = (0..4u64).map(triad_inputs).collect();
+    let lean = |obs: ObsConfig| ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        queue_capacity: 64,
+        obs,
+        ..ServeConfig::default()
+    };
+    // Single client, single worker, batch=1: the leanest dispatch loop,
+    // so per-request obs cost is maximally visible.
+    let run = |server: &Server| -> f64 {
+        let client = server.client();
+        let call = |i: usize| {
+            let (x, y) = &inputs[i % inputs.len()];
+            let args = vec![Arg::vec(x.clone()), Arg::vec(y.clone())];
+            std::hint::black_box(client.call("triad", args).unwrap());
+        };
+        for i in 0..WARM {
+            call(i);
+        }
+        let t0 = Instant::now();
+        for i in 0..REQS {
+            call(i);
+        }
+        t0.elapsed().as_nanos() as f64 / REQS as f64
+    };
+    let triad_server = |obs: ObsConfig| {
+        Server::builder(lean(obs))
+            .kernel("triad", |_ctx, p| Value::Vec(triad_expr(&p[0].vec1(), &p[1].vec1())))
+            .start()
+    };
+
+    println!("# serve_throughput (smoke) — observability-layer cost tracking\n");
+
+    // ---- off vs off vs metrics, interleaved min-of-rounds. Tape
+    //      profiling is process-global once enabled, so the full-stack
+    //      server must not exist yet. ----
+    let off = ObsConfig { metrics: false, trace_capacity: 0, tape_profile: false };
+    let metrics_only = ObsConfig { metrics: true, trace_capacity: 0, tape_profile: false };
+    let (srv_a, srv_b, srv_m) = (triad_server(off), triad_server(off), triad_server(metrics_only));
+    let (mut ns_off, mut ns_off_check, mut ns_metrics) =
+        (f64::INFINITY, f64::INFINITY, f64::INFINITY);
+    for _ in 0..ROUNDS {
+        ns_off = ns_off.min(run(&srv_a));
+        ns_metrics = ns_metrics.min(run(&srv_m));
+        ns_off_check = ns_off_check.min(run(&srv_b));
+    }
+    drop((srv_a, srv_b, srv_m));
+
+    // ---- full stack: metrics + trace ring + tape profiling, with the
+    //      paper's kernel mix registered so the plan profiles cover the
+    //      dense, sparse and captured-program paths. ----
+    let full = ObsConfig { metrics: true, trace_capacity: 4096, tape_profile: true };
+    let spm = banded_spd(512, 5, 3);
+    let spm2 = spm.clone();
+    let fft_n = 1024usize;
+    let server = Server::builder(lean(full))
+        .kernel("triad", |_ctx, p| Value::Vec(triad_expr(&p[0].vec1(), &p[1].vec1())))
+        .kernel("mxm", |_ctx, p| Value::Mat(mxm_expr(&p[0].mat2(), &p[1].mat2())))
+        .kernel("spmv", move |ctx, p| {
+            let a = mod2as::bind_csr(ctx, &spm2);
+            Value::Vec(mod2as::arbb_spmv1(ctx, &a, &p[0].vec1()))
+        })
+        .program("fft", |sig| Ok(mod2f::capture_fft(sig[0].1.len()).into_program()))
+        .start();
+    let mut ns_full = f64::INFINITY;
+    for _ in 0..ROUNDS {
+        ns_full = ns_full.min(run(&server));
+    }
+    // Exercise the other plans so their profiles have samples.
+    let client = server.client();
+    let (ma, mb) = mxm_inputs(3);
+    let sx = spm.random_x(5);
+    let (re, im) = triad_inputs(7);
+    for _ in 0..50 {
+        let args = vec![Arg::mat(ma.clone(), MXM_N, MXM_N), Arg::mat(mb.clone(), MXM_N, MXM_N)];
+        std::hint::black_box(client.call("mxm", args).unwrap());
+        std::hint::black_box(client.call("spmv", vec![Arg::vec(sx.clone())]).unwrap());
+        let args = vec![Arg::vec(re[..fft_n].to_vec()), Arg::vec(im[..fft_n].to_vec())];
+        std::hint::black_box(client.call("fft", args).unwrap());
+    }
+
+    let base = ns_off.min(ns_off_check);
+    let disabled_overhead_pct = (ns_off - ns_off_check).abs() / base * 100.0;
+    let metrics_overhead_pct = (ns_metrics - base) / base * 100.0;
+    let enabled_overhead_pct = (ns_full - base) / base * 100.0;
+
+    // Mean latency decomposition from the histogram sums (cache hit and
+    // miss are one pipeline stage, recorded into separate histograms).
+    let snap = client.metrics_snapshot();
+    let mean = |name: &str| snap.hist(name).map_or(0.0, |h| h.mean());
+    let cache_ns = {
+        let (h, m) = (snap.hist("arbb_serve_cache_hit_ns"), snap.hist("arbb_serve_cache_miss_ns"));
+        let count = h.map_or(0, |h| h.count) + m.map_or(0, |m| m.count);
+        let sum = h.map_or(0, |h| h.sum) + m.map_or(0, |m| m.sum);
+        if count == 0 {
+            0.0
+        } else {
+            sum as f64 / count as f64
+        }
+    };
+    let decomposition = format!(
+        "{{\"queue_wait_ns\":{:.1},\"batch_ns\":{:.1},\"cache_ns\":{cache_ns:.1},\
+         \"exec_ns\":{:.1},\"e2e_ns\":{:.1}}}",
+        mean("arbb_serve_queue_wait_ns"),
+        mean("arbb_serve_batch_form_ns"),
+        mean("arbb_serve_replay_ns"),
+        mean("arbb_serve_e2e_ns"),
+    );
+    let plans = client.plan_profiles();
+    let prof = |prefix: &str| {
+        plans
+            .iter()
+            .find(|(label, _)| label.starts_with(prefix))
+            .map_or_else(|| "[]".to_string(), |(_, p)| p.to_json())
+    };
+
+    let bk = client.backend_name();
+    println!("  backend={bk} reqs={REQS} rounds={ROUNDS} (min)");
+    println!("  obs off          {ns_off:>9.1} ns/req");
+    println!("  obs off (check)  {ns_off_check:>9.1} ns/req  (A/B gap {disabled_overhead_pct:.2}%)");
+    println!("  metrics only     {ns_metrics:>9.1} ns/req  ({metrics_overhead_pct:+.2}%)");
+    println!("  metrics+trace+profile {ns_full:>4.1} ns/req  ({enabled_overhead_pct:+.2}%)");
+    println!("  e2e decomposition: {decomposition}");
+
+    let json = format!(
+        "{{\"bench\":\"serve_observability\",\"backend\":\"{bk}\",\"reqs\":{REQS},\
+         \"triad_n\":{TRIAD_N},\
+         \"ns_per_req_off\":{ns_off:.1},\"ns_per_req_off_check\":{ns_off_check:.1},\
+         \"disabled_overhead_pct\":{disabled_overhead_pct:.3},\
+         \"ns_per_req_metrics\":{ns_metrics:.1},\"metrics_overhead_pct\":{metrics_overhead_pct:.3},\
+         \"ns_per_req_full\":{ns_full:.1},\"enabled_overhead_pct\":{enabled_overhead_pct:.3},\
+         \"decomposition\":{decomposition},\
+         \"profiles\":{{\"mxm\":{},\"spmv\":{},\"fft\":{}}}}}\n",
+        prof("mxm"),
+        prof("spmv"),
+        prof("fft"),
+    );
+    // Anchor to the repository root (cargo runs bench binaries with the
+    // *package* dir as cwd, which is rust/ in this workspace).
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_obs.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n  wrote {path}"),
+        Err(e) => println!("\n  could not write {path}: {e}"),
+    }
+    println!("\n# serve_throughput smoke done");
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        obs_smoke();
+        return;
+    }
     let secs = parse_secs();
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8);
     println!("# serve_throughput — {CLIENTS} client threads, {secs:.1}s per config");

@@ -36,10 +36,12 @@
 //! backend to.
 
 use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::Instant;
 
 use crate::coordinator::ops::{BinOp, RedOp, UnOp};
 use crate::coordinator::plan::FTree;
 use crate::coordinator::shape::View;
+use crate::obs::profile::{self, LocalBlock, OpClass};
 
 use super::backend::{self, Backend};
 
@@ -504,16 +506,47 @@ impl TapeProgram {
             "tape run with too few index-table bindings"
         );
         let mut file = scratch.take_file(self.n_scratch * BLOCK);
-        let mut off = 0;
-        while off < out.len() {
-            let len = BLOCK.min(out.len() - off);
-            self.run_block(leaves, ileaves, start + off, &mut out[off..off + len], &mut file);
-            off += len;
+        // One relaxed load per tape run decides whether blocks carry a
+        // profiling accumulator; the disabled path is branch-identical
+        // to the uninstrumented VM apart from one predictable `Option`
+        // test per instruction.
+        if profile::enabled() {
+            let mut lb = LocalBlock::new();
+            let mut off = 0;
+            while off < out.len() {
+                let len = BLOCK.min(out.len() - off);
+                self.run_block(
+                    leaves,
+                    ileaves,
+                    start + off,
+                    &mut out[off..off + len],
+                    &mut file,
+                    Some(&mut lb),
+                );
+                off += len;
+            }
+            lb.flush();
+        } else {
+            let mut off = 0;
+            while off < out.len() {
+                let len = BLOCK.min(out.len() - off);
+                self.run_block(
+                    leaves,
+                    ileaves,
+                    start + off,
+                    &mut out[off..off + len],
+                    &mut file,
+                    None,
+                );
+                off += len;
+            }
         }
         scratch.put_file(file);
     }
 
-    /// Execute one block (`out.len() <= BLOCK`).
+    /// Execute one block (`out.len() <= BLOCK`). With `prof` set, each
+    /// instruction's wall time and element count accumulate under its
+    /// [`OpClass`] (flushed by the caller once per tape run).
     unsafe fn run_block(
         &self,
         leaves: &[LeafBind],
@@ -521,6 +554,7 @@ impl TapeProgram {
         start: usize,
         out: &mut [f64],
         file: &mut [f64],
+        mut prof: Option<&mut LocalBlock>,
     ) {
         let len = out.len();
         let out_ptr = out.as_mut_ptr();
@@ -533,6 +567,7 @@ impl TapeProgram {
         // from the output and the register file.
         let bk = self.bk;
         for ins in &self.instrs {
+            let t0 = if prof.is_some() { Some(Instant::now()) } else { None };
             match *ins {
                 Instr::LoadContiguous { dst, leaf, base } => {
                     let o = reg_mut(out_ptr, file_ptr, dst, len);
@@ -614,7 +649,33 @@ impl TapeProgram {
                     );
                 }
             }
+            if let (Some(p), Some(t0)) = (prof.as_deref_mut(), t0) {
+                p.add(class_of(ins), len as u64, t0.elapsed().as_nanos() as u64);
+            }
         }
+    }
+}
+
+/// The profiling class of one tape instruction.
+#[inline]
+fn class_of(ins: &Instr) -> OpClass {
+    match ins {
+        Instr::LoadContiguous { .. } => OpClass::LoadContiguous,
+        Instr::LoadSplat { .. } => OpClass::LoadSplat,
+        Instr::LoadBroadcast { .. } => OpClass::LoadBroadcast,
+        Instr::LoadStrided { .. } => OpClass::LoadStrided,
+        Instr::LoadModulo { .. } => OpClass::LoadModulo,
+        Instr::LoadGather { .. } => OpClass::LoadGather,
+        Instr::LoadConst { .. } => OpClass::LoadConst,
+        Instr::LoadIota { .. } => OpClass::LoadIota,
+        Instr::Bin { .. } => OpClass::Bin,
+        Instr::BinConst { .. } => OpClass::BinConst,
+        Instr::BinSplat { .. } => OpClass::BinSplat,
+        Instr::Un { .. } => OpClass::Un,
+        Instr::MulAdd { .. } => OpClass::MulAdd,
+        Instr::MulSub { .. } => OpClass::MulSub,
+        Instr::ScaleAddConst { .. } => OpClass::ScaleAddConst,
+        Instr::Axpy { .. } => OpClass::Axpy,
     }
 }
 
@@ -1169,13 +1230,28 @@ impl SegTape {
         out: &mut [f64],
         scratch: &mut Scratch,
     ) {
-        if let Some(f) = self.fused {
+        // When profiling, one sample per call covering the whole row
+        // panel: class = dispatched path, elems = nnz swept. (On the
+        // blocked path this is inclusive of the inner tape's own
+        // per-instruction samples.)
+        let t0 = profile::enabled().then(Instant::now);
+        let class = if let Some(f) = self.fused {
             if let Some(rt) = &self.runs {
-                return self.run_rows_runs(leaves, f, rt, segp, row0, out, scratch);
+                self.run_rows_runs(leaves, f, rt, segp, row0, out, scratch);
+                OpClass::SegRuns
+            } else {
+                self.run_rows_fused(leaves, ileaves, f, segp, row0, out);
+                OpClass::SegFused
             }
-            return self.run_rows_fused(leaves, ileaves, f, segp, row0, out);
+        } else {
+            self.run_rows_blocked(leaves, ileaves, segp, row0, out, scratch);
+            OpClass::SegBlocked
+        };
+        if let Some(t0) = t0 {
+            let r1 = row0 + out.len();
+            let nnz = segp[r1].saturating_sub(segp[row0]).max(0) as u64;
+            profile::record_sample(class, nnz, t0.elapsed().as_nanos() as u64);
         }
-        self.run_rows_blocked(leaves, ileaves, segp, row0, out, scratch);
     }
 
     /// General path: tape-fill ≤BLOCK value blocks, segmented-fold them.

@@ -27,6 +27,9 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs::profile::{self, OpClass};
 
 use super::backend::spmv_row_serial;
 use super::eval::{with_scratch, ILeafBind, LeafBind, TapeProgram};
@@ -519,6 +522,7 @@ impl Program {
                             );
                         }
                     };
+                    let t0 = profile::enabled().then(Instant::now);
                     match pool {
                         Some(p) if *rows >= 2048 => {
                             let nchunks = (*rows / 512).clamp(1, 64);
@@ -542,17 +546,29 @@ impl Program {
                         }
                         _ => body(0, &mut ob[..*rows]),
                     }
+                    if let Some(t0) = t0 {
+                        let nnz = rowp[*rows].saturating_sub(rowp[0]).max(0) as u64;
+                        profile::record_sample(
+                            OpClass::SpmvSerial,
+                            nnz,
+                            t0.elapsed().as_nanos() as u64,
+                        );
+                    }
                 }
                 slots[di] = ob;
             }
             CStep::Dot { dst, a, b } => {
+                let t0 = profile::enabled().then(Instant::now);
                 // SAFETY: as above; dot operands are never the scalar
                 // register file, so writing `sregs` below cannot alias.
-                let v = unsafe {
+                let (v, n) = unsafe {
                     let av = rd_slice(a, parambuf, slots, &self.baked_f, &self.pairs, flips)?;
                     let bv = rd_slice(b, parambuf, slots, &self.baked_f, &self.pairs, flips)?;
-                    blas1::dot(av, bv)
+                    (blas1::dot(av, bv), av.len())
                 };
+                if let Some(t0) = t0 {
+                    profile::record_sample(OpClass::Dot, n as u64, t0.elapsed().as_nanos() as u64);
+                }
                 sregs[*dst] = v;
             }
             CStep::SBin { op, dst, a, b } => {

@@ -28,6 +28,11 @@
 //!   flow through a bounded queue with batching onto a persistent
 //!   process-shared worker pool, with per-kernel throughput/latency/
 //!   cache-hit statistics.
+//! * [`obs`] — the observability substrate those statistics report
+//!   through: a lock-free metrics registry (log-bucketed histograms,
+//!   Prometheus/JSON snapshots), per-request pipeline trace spans
+//!   dumpable as Chrome trace-event JSON, and opt-in per-opcode tape
+//!   profiling keyed by backend.
 //! * [`runtime`] — the AOT/PJRT backend: loads HLO artifacts produced by
 //!   the build-time JAX/Pallas pipeline (`python/compile/`) and executes
 //!   them through the XLA PJRT CPU client. The PJRT client is gated
@@ -54,6 +59,7 @@ pub mod coordinator;
 pub mod euroben;
 pub mod fftlib;
 pub mod kernels;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod solvers;

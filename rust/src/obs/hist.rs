@@ -1,0 +1,286 @@
+//! Log-bucketed latency histograms with lock-free recording.
+//!
+//! A [`LogHistogram`] covers the full `u64` nanosecond range with O(1)
+//! recording into a fixed table of atomic buckets: values below 16 get
+//! exact unit buckets; every power-of-two octave above is split into 16
+//! logarithmic sub-buckets, so any recorded value lands in a bucket
+//! whose width is at most 1/16 of its lower bound. Percentiles read
+//! from a [`HistSnapshot`] therefore carry a relative error bounded by
+//! [`MAX_REL_ERROR`] — no sample ring, no clone, no sort, no lock
+//! (unlike the 4096-entry clone-and-sort window this replaces in
+//! [`crate::serve::stats`]).
+//!
+//! Recording touches five relaxed atomics and never allocates; the
+//! whole bucket table is allocated once at construction. This is what
+//! lets the serve pipeline keep its zero-allocation cache-hit replay
+//! property with metrics enabled.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: each power-of-two octave is split into
+/// `2^SUB_BITS` logarithmic sub-buckets.
+pub const SUB_BITS: u32 = 4;
+
+/// Sub-buckets per octave (`2^SUB_BITS`).
+const SUBS: u64 = 1 << SUB_BITS;
+
+/// Total buckets covering all of `u64`: 16 exact unit buckets plus
+/// 60 octaves × 16 sub-buckets.
+pub const N_BUCKETS: usize = (SUBS as usize) * (64 - SUB_BITS as usize) + SUBS as usize;
+
+/// Worst-case relative error of a percentile estimate: a bucket's
+/// width is at most `lower_bound / 16`, and the reported midpoint is
+/// within half a width of any sample in the bucket.
+pub const MAX_REL_ERROR: f64 = 1.0 / SUBS as f64;
+
+/// Bucket index for a value. Monotone in `v`; total over `u64`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS {
+        v as usize
+    } else {
+        // msb >= SUB_BITS, so the shift keeps the top SUB_BITS+1 bits:
+        // a value in [16, 32) whose low 4 bits select the sub-bucket.
+        let msb = 63 - v.leading_zeros() as u64;
+        let e = msb - SUB_BITS as u64;
+        let sub = (v >> e) - SUBS;
+        (SUBS + e * SUBS + sub) as usize
+    }
+}
+
+/// Inclusive lower bound and width of a bucket: the bucket holds
+/// values in `[lower, lower + width)`.
+pub fn bucket_bounds(ix: usize) -> (u64, u64) {
+    let ix = ix as u64;
+    if ix < SUBS {
+        (ix, 1)
+    } else {
+        let e = ix / SUBS - 1;
+        let sub = ix % SUBS;
+        ((SUBS + sub) << e, 1u64 << e)
+    }
+}
+
+/// Representative value reported for a bucket (midpoint; exact for the
+/// unit buckets below 16).
+pub fn representative(ix: usize) -> f64 {
+    let (lo, w) = bucket_bounds(ix);
+    if w == 1 {
+        lo as f64
+    } else {
+        lo as f64 + w as f64 / 2.0
+    }
+}
+
+/// Lock-free log-bucketed histogram of `u64` values (nanoseconds by
+/// convention in this crate).
+#[derive(Debug)]
+pub struct LogHistogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: Box<[AtomicU64]>,
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record one value. Five relaxed atomic ops, no allocation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duration given in seconds, rounded to nanoseconds.
+    #[inline]
+    pub fn record_secs(&self, s: f64) {
+        self.record((s.max(0.0) * 1e9).round() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current state out for reading. Not atomic across
+    /// buckets under concurrent recording; totals may be off by the
+    /// few samples in flight.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+
+    /// Zero all state (bench phase boundaries).
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A point-in-time copy of a [`LogHistogram`].
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    /// Samples recorded.
+    pub count: u64,
+    /// Sum of raw values (exact — not bucket-quantised).
+    pub sum: u64,
+    min: u64,
+    max: u64,
+    /// Per-bucket counts, `N_BUCKETS` long.
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean of recorded values (the sum is not quantised).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile (`q` in 0.0..=1.0) with relative error
+    /// bounded by [`MAX_REL_ERROR`]. Returns the representative value
+    /// of the bucket holding the target rank.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut cum = 0u64;
+        for (ix, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > target {
+                return representative(ix);
+            }
+        }
+        representative(self.buckets.len() - 1)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    /// Percentile of a nanosecond histogram, in seconds.
+    pub fn percentile_secs(&self, q: f64) -> f64 {
+        self.percentile(q) * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_is_monotone_and_bounds_contain() {
+        let mut prev = 0usize;
+        let mut v = 1u64;
+        while v < u64::MAX / 3 {
+            let ix = bucket_index(v);
+            assert!(ix >= prev, "index not monotone at {v}");
+            let (lo, w) = bucket_bounds(ix);
+            assert!(lo <= v && v < lo + w, "bucket [{lo}, {}) misses {v}", lo + w);
+            prev = ix;
+            v = v * 3 / 2 + 1;
+        }
+        assert!(bucket_index(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(representative(bucket_index(v)), v as f64);
+        }
+    }
+
+    #[test]
+    fn relative_width_bounded() {
+        for ix in 16..N_BUCKETS {
+            let (lo, w) = bucket_bounds(ix);
+            assert!(w as f64 / lo as f64 <= MAX_REL_ERROR + 1e-15, "bucket {ix} too wide");
+        }
+    }
+
+    #[test]
+    fn percentiles_on_known_data() {
+        let h = LogHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 1000); // 1µs .. 1ms
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.min(), 1000);
+        assert_eq!(s.max(), 1_000_000);
+        let p50 = s.p50();
+        assert!((p50 - 500_000.0).abs() <= 500_000.0 * MAX_REL_ERROR, "{p50}");
+        let p99 = s.p99();
+        assert!((p99 - 990_000.0).abs() <= 990_000.0 * MAX_REL_ERROR, "{p99}");
+        // The sum is exact, not quantised.
+        assert_eq!(s.sum, (1..=1000u64).map(|i| i * 1000).sum::<u64>());
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let s = LogHistogram::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.percentile(0.5), 0.0);
+        assert_eq!((s.min(), s.max()), (0, 0));
+        assert_eq!(s.mean(), 0.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! `obs` — end-to-end observability: lock-free metrics, pipeline
+//! trace spans and per-opcode tape profiling.
+//!
+//! The ArBB paper's entire argument is measured performance; this
+//! module is the measurement substrate the rest of the repo reports
+//! through. Three layers, all compiled in, all cheap when idle:
+//!
+//! 1. **Metrics** ([`registry`]): a [`MetricsRegistry`] of named
+//!    counters, gauges and log-bucketed [`LogHistogram`]s. Recording
+//!    is lock-free and allocation-free; [`MetricsRegistry::snapshot`]
+//!    renders as a Prometheus-style text page or JSON — the artifact a
+//!    future HTTP `/metrics` endpoint and the `BENCH_*.json` smokes
+//!    both consume. The histogram ([`hist`]) replaces the serve layer's
+//!    old clone-and-sort percentile window with bounded relative error
+//!    ([`MAX_REL_ERROR`]).
+//! 2. **Tracing** ([`trace`]): per-request [`SpanEvent`]s decompose
+//!    end-to-end serve latency into queue-wait / batch-formation /
+//!    cache-lookup / replay segments that sum exactly, recorded into a
+//!    bounded [`TraceRing`] and dumpable as Chrome trace-event JSON.
+//! 3. **Tape profiling** ([`profile`]): opt-in per-opcode-class
+//!    counts, elements and nanoseconds from inside the tape VM, keyed
+//!    by backend and surfaced per compiled plan — the raw material for
+//!    cost-based plan exploration.
+
+pub mod hist;
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{HistSnapshot, LogHistogram, MAX_REL_ERROR};
+pub use profile::{LocalBlock, OpClass, PlanProfile, ProfileSnapshot, ProfileTable};
+pub use registry::{Counter, Gauge, MetricsRegistry, MetricsSnapshot, Sample, SampleValue};
+pub use trace::{SpanEvent, TraceRing};

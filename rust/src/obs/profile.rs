@@ -1,0 +1,449 @@
+//! Opt-in per-opcode-class tape profiling.
+//!
+//! When enabled (process-wide switch, [`set_enabled`]), the tape VM
+//! ([`crate::coordinator::engine::eval`]) and the compiled-plan
+//! executor record, per opcode class: invocation count, elements
+//! processed and wall nanoseconds. Samples accumulate in two places:
+//!
+//! - a process-global [`ProfileTable`] (labelled with the active
+//!   backend at snapshot time), and
+//! - the [`PlanProfile`] of whichever [`CompiledPlan`]
+//!   (`crate::serve::exec::CompiledPlan`) is currently replaying on
+//!   this thread, installed via [`install`] — exactly the per-plan
+//!   ns-per-element observations the ROADMAP's cost-based plan
+//!   exploration wants to feed on.
+//!
+//! The hot path is engineered for the serve pipeline's constraints:
+//!
+//! - **Disabled mode** costs one relaxed [`AtomicBool`] load per tape
+//!   run plus one predictable `Option` branch per instruction — no
+//!   timestamps, no TLS access.
+//! - **Enabled mode** stays allocation-free: per-block samples gather
+//!   in a stack-resident [`LocalBlock`] and flush into preallocated
+//!   atomic cells (the global table is inline in a `static`; a plan's
+//!   table is allocated once at capture), so the zero-alloc cache-hit
+//!   replay property holds even while profiling.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Opcode classes the profiler distinguishes: the 16 tape-VM
+/// instruction forms, plus the block-fold reduction loop, the three
+/// segmented-reduce row paths, serial CSR spmv and fused dot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    LoadContiguous,
+    LoadSplat,
+    LoadBroadcast,
+    LoadStrided,
+    LoadModulo,
+    LoadGather,
+    LoadConst,
+    LoadIota,
+    Bin,
+    BinConst,
+    BinSplat,
+    Un,
+    MulAdd,
+    MulSub,
+    ScaleAddConst,
+    Axpy,
+    Fold,
+    SegBlocked,
+    SegFused,
+    SegRuns,
+    SpmvSerial,
+    Dot,
+}
+
+/// Number of [`OpClass`] variants.
+pub const N_CLASSES: usize = 22;
+
+/// Snake-case names, indexed by `OpClass as usize`.
+pub const CLASS_NAMES: [&str; N_CLASSES] = [
+    "load_contiguous",
+    "load_splat",
+    "load_broadcast",
+    "load_strided",
+    "load_modulo",
+    "load_gather",
+    "load_const",
+    "load_iota",
+    "bin",
+    "bin_const",
+    "bin_splat",
+    "un",
+    "mul_add",
+    "mul_sub",
+    "scale_add_const",
+    "axpy",
+    "fold",
+    "seg_blocked",
+    "seg_fused",
+    "seg_runs",
+    "spmv_serial",
+    "dot",
+];
+
+impl OpClass {
+    pub fn name(self) -> &'static str {
+        CLASS_NAMES[self as usize]
+    }
+}
+
+#[derive(Debug, Default)]
+struct ClassCell {
+    calls: AtomicU64,
+    elems: AtomicU64,
+    ns: AtomicU64,
+}
+
+impl ClassCell {
+    fn accum(&self, calls: u64, elems: u64, ns: u64) {
+        self.calls.fetch_add(calls, Ordering::Relaxed);
+        self.elems.fetch_add(elems, Ordering::Relaxed);
+        self.ns.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+/// One atomic accumulator per opcode class; stored inline (no heap).
+#[derive(Debug)]
+pub struct ProfileTable {
+    cells: [ClassCell; N_CLASSES],
+}
+
+impl ProfileTable {
+    pub fn new() -> Self {
+        ProfileTable { cells: std::array::from_fn(|_| ClassCell::default()) }
+    }
+
+    /// Fold pre-aggregated values into class `ix`.
+    #[inline]
+    pub fn accum(&self, ix: usize, calls: u64, elems: u64, ns: u64) {
+        self.cells[ix].accum(calls, elems, ns);
+    }
+
+    /// Record one invocation of `c` over `elems` elements.
+    #[inline]
+    pub fn record(&self, c: OpClass, elems: u64, ns: u64) {
+        self.accum(c as usize, 1, elems, ns);
+    }
+
+    /// Zero every class (bench phase boundaries).
+    pub fn reset(&self) {
+        for c in &self.cells {
+            c.calls.store(0, Ordering::Relaxed);
+            c.elems.store(0, Ordering::Relaxed);
+            c.ns.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Copy the table out, labelled with the backend it profiled.
+    pub fn snapshot(&self, backend: &'static str) -> ProfileSnapshot {
+        ProfileSnapshot {
+            backend,
+            classes: self
+                .cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| ClassStat {
+                    name: CLASS_NAMES[i],
+                    calls: c.calls.load(Ordering::Relaxed),
+                    elems: c.elems.load(Ordering::Relaxed),
+                    ns: c.ns.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+}
+
+impl Default for ProfileTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-plan profile carried by a `CompiledPlan`; allocated once at
+/// capture time, written through the thread-local sink installed by
+/// [`install`] during that plan's replays.
+#[derive(Debug)]
+pub struct PlanProfile {
+    backend: &'static str,
+    table: ProfileTable,
+}
+
+impl PlanProfile {
+    /// A fresh profile for a plan compiled against `backend`.
+    pub fn new(backend: &'static str) -> Self {
+        PlanProfile { backend, table: ProfileTable::new() }
+    }
+
+    pub fn snapshot(&self) -> ProfileSnapshot {
+        self.table.snapshot(self.backend)
+    }
+}
+
+/// Aggregated per-class stats for one opcode class.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassStat {
+    pub name: &'static str,
+    pub calls: u64,
+    pub elems: u64,
+    pub ns: u64,
+}
+
+impl ClassStat {
+    /// Mean cost per element — the unit the ROADMAP's plan-exploration
+    /// item costs candidate plans in.
+    pub fn ns_per_elem(&self) -> f64 {
+        if self.elems == 0 {
+            0.0
+        } else {
+            self.ns as f64 / self.elems as f64
+        }
+    }
+}
+
+/// Point-in-time copy of a [`ProfileTable`], keyed by backend.
+#[derive(Debug, Clone)]
+pub struct ProfileSnapshot {
+    /// Kernel backend the profiled code ran on.
+    pub backend: &'static str,
+    /// All [`N_CLASSES`] classes, in `OpClass` order.
+    pub classes: Vec<ClassStat>,
+}
+
+impl ProfileSnapshot {
+    /// Classes that were actually invoked.
+    pub fn nonzero(&self) -> Vec<ClassStat> {
+        self.classes.iter().copied().filter(|c| c.calls > 0).collect()
+    }
+
+    /// Total profiled nanoseconds across classes.
+    pub fn total_ns(&self) -> u64 {
+        self.classes.iter().map(|c| c.ns).sum()
+    }
+
+    /// JSON array of the nonzero classes:
+    /// `[{"op":...,"calls":...,"elems":...,"ns":...}, ...]`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[");
+        for (i, c) in self.nonzero().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"op\":\"{}\",\"calls\":{},\"elems\":{},\"ns\":{}}}",
+                c.name, c.calls, c.elems, c.ns
+            ));
+        }
+        out.push(']');
+        out
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<ProfileTable> = OnceLock::new();
+
+/// Whether tape profiling is on. One relaxed load; the hot paths call
+/// this once per tape run, not per instruction.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip process-wide tape profiling. Enabling also forces the global
+/// table's one-time initialisation so the hot path never races it.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = global();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The process-global profile table.
+pub fn global() -> &'static ProfileTable {
+    GLOBAL.get_or_init(ProfileTable::new)
+}
+
+thread_local! {
+    // const-initialised raw pointer: reading it never allocates.
+    static CURRENT: Cell<*const PlanProfile> = const { Cell::new(std::ptr::null()) };
+}
+
+/// Restores the previously installed per-plan sink on drop.
+#[derive(Debug)]
+pub struct CurrentGuard<'a> {
+    prev: *const PlanProfile,
+    _plan: PhantomData<&'a PlanProfile>,
+}
+
+impl Drop for CurrentGuard<'_> {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT.with(|c| c.set(prev));
+    }
+}
+
+/// Install `p` as this thread's per-plan profile sink for the
+/// lifetime of the returned guard (which must be dropped, not leaked:
+/// the sink is restored — and the borrow of `p` released — on drop).
+pub fn install(p: &PlanProfile) -> CurrentGuard<'_> {
+    let prev = CURRENT.with(|c| {
+        let prev = c.get();
+        c.set(p as *const PlanProfile);
+        prev
+    });
+    CurrentGuard { prev, _plan: PhantomData }
+}
+
+/// Record one sample directly into the global table and (if installed)
+/// the current thread's per-plan sink. For one-shot superinstruction
+/// sites (segmented-reduce rows, serial spmv, fused dot, block folds)
+/// where a [`LocalBlock`] would be overkill. The caller checks
+/// [`enabled`] first.
+#[inline]
+pub fn record_sample(c: OpClass, elems: u64, ns: u64) {
+    global().record(c, elems, ns);
+    let cur = CURRENT.with(|cell| cell.get());
+    if !cur.is_null() {
+        // SAFETY: a non-null CURRENT was installed by `install`, whose
+        // guard borrows the PlanProfile and restores CURRENT on drop.
+        unsafe { (*cur).table.record(c, elems, ns) };
+    }
+}
+
+/// Stack-resident sample accumulator: the tape VM adds one entry per
+/// instruction per block, then [`LocalBlock::flush`]es once per tape
+/// run — amortising the atomic traffic and keeping the per-instruction
+/// cost to a couple of array writes.
+#[derive(Debug)]
+pub struct LocalBlock {
+    calls: [u64; N_CLASSES],
+    elems: [u64; N_CLASSES],
+    ns: [u64; N_CLASSES],
+    touched: u32,
+}
+
+impl LocalBlock {
+    pub fn new() -> Self {
+        LocalBlock {
+            calls: [0; N_CLASSES],
+            elems: [0; N_CLASSES],
+            ns: [0; N_CLASSES],
+            touched: 0,
+        }
+    }
+
+    /// Add one invocation of `c`.
+    #[inline]
+    pub fn add(&mut self, c: OpClass, elems: u64, ns: u64) {
+        let i = c as usize;
+        self.calls[i] += 1;
+        self.elems[i] += elems;
+        self.ns[i] += ns;
+        self.touched |= 1 << i;
+    }
+
+    /// Drain into the global table and (if installed) the current
+    /// thread's per-plan sink. Touches only the classes actually seen.
+    pub fn flush(&mut self) {
+        if self.touched == 0 {
+            return;
+        }
+        let g = global();
+        let cur = CURRENT.with(|c| c.get());
+        let mut mask = self.touched;
+        while mask != 0 {
+            let i = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            g.accum(i, self.calls[i], self.elems[i], self.ns[i]);
+            if !cur.is_null() {
+                // SAFETY: a non-null CURRENT was installed by
+                // `install`, whose guard borrows the PlanProfile for
+                // its whole lifetime and restores CURRENT on drop.
+                unsafe { (*cur).table.accum(i, self.calls[i], self.elems[i], self.ns[i]) };
+            }
+            self.calls[i] = 0;
+            self.elems[i] = 0;
+            self.ns[i] = 0;
+        }
+        self.touched = 0;
+    }
+}
+
+impl Default for LocalBlock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_names_cover_all_variants() {
+        assert_eq!(OpClass::LoadContiguous as usize, 0);
+        assert_eq!(OpClass::Dot as usize, N_CLASSES - 1);
+        assert_eq!(OpClass::Axpy.name(), "axpy");
+        assert_eq!(OpClass::SegFused.name(), "seg_fused");
+    }
+
+    #[test]
+    fn local_block_flushes_to_plan_and_global() {
+        let plan = PlanProfile::new("test");
+        let before = global().snapshot("test");
+        {
+            let _g = install(&plan);
+            let mut lb = LocalBlock::new();
+            lb.add(OpClass::Bin, 2048, 500);
+            lb.add(OpClass::Bin, 2048, 500);
+            lb.add(OpClass::Axpy, 100, 70);
+            lb.flush();
+            // A second flush with nothing new is a no-op.
+            lb.flush();
+        }
+        let ps = plan.snapshot();
+        let bin = ps.classes[OpClass::Bin as usize];
+        assert_eq!((bin.calls, bin.elems, bin.ns), (2, 4096, 1000));
+        assert_eq!(bin.ns_per_elem(), 1000.0 / 4096.0);
+        let after = global().snapshot("test");
+        let gi = OpClass::Axpy as usize;
+        assert_eq!(after.classes[gi].calls - before.classes[gi].calls, 1);
+        assert_eq!(ps.nonzero().len(), 2);
+        let j = ps.to_json();
+        assert!(j.contains("\"op\":\"bin\""));
+        assert!(j.contains("\"elems\":4096"));
+    }
+
+    #[test]
+    fn install_guard_restores() {
+        let a = PlanProfile::new("a");
+        let b = PlanProfile::new("b");
+        let _ga = install(&a);
+        {
+            let _gb = install(&b);
+            let mut lb = LocalBlock::new();
+            lb.add(OpClass::Un, 10, 1);
+            lb.flush();
+        }
+        // After the inner guard drops, flushes land in `a` again.
+        let mut lb = LocalBlock::new();
+        lb.add(OpClass::Un, 20, 2);
+        lb.flush();
+        assert_eq!(b.snapshot().classes[OpClass::Un as usize].elems, 10);
+        assert_eq!(a.snapshot().classes[OpClass::Un as usize].elems, 20);
+    }
+
+    #[test]
+    fn enable_disable_roundtrip() {
+        // Other tests may flip this too; just exercise the API.
+        let was = enabled();
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(was);
+    }
+}

@@ -1,0 +1,378 @@
+//! Named process metrics — counters, gauges and log-bucketed
+//! histograms — with a snapshot renderable as a Prometheus-style text
+//! page or JSON.
+//!
+//! Registration hands back `Arc` handles; recording through a handle
+//! is lock-free (relaxed atomics) and allocation-free. The registry's
+//! internal mutex is taken only at registration and snapshot time, so
+//! the serve hot path never contends on it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::hist::{HistSnapshot, LogHistogram};
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins floating-point gauge (stored as `f64` bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<LogHistogram>),
+}
+
+#[derive(Debug)]
+struct Entry {
+    name: String,
+    /// Pre-formatted Prometheus label pairs, e.g. `kernel="mxm"`.
+    /// Empty for unlabelled metrics.
+    labels: String,
+    help: String,
+    metric: Metric,
+}
+
+/// A registry of named metrics. Registration is idempotent on
+/// `(name, labels)`: re-registering returns the existing handle.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry { entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Register (or look up) a counter.
+    pub fn counter(&self, name: &str, labels: &str, help: &str) -> Arc<Counter> {
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && e.labels == labels {
+                if let Metric::Counter(c) = &e.metric {
+                    return Arc::clone(c);
+                }
+            }
+        }
+        let c = Arc::new(Counter::new());
+        es.push(Entry {
+            name: name.to_string(),
+            labels: labels.to_string(),
+            help: help.to_string(),
+            metric: Metric::Counter(Arc::clone(&c)),
+        });
+        c
+    }
+
+    /// Register (or look up) a gauge.
+    pub fn gauge(&self, name: &str, labels: &str, help: &str) -> Arc<Gauge> {
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && e.labels == labels {
+                if let Metric::Gauge(g) = &e.metric {
+                    return Arc::clone(g);
+                }
+            }
+        }
+        let g = Arc::new(Gauge::new());
+        es.push(Entry {
+            name: name.to_string(),
+            labels: labels.to_string(),
+            help: help.to_string(),
+            metric: Metric::Gauge(Arc::clone(&g)),
+        });
+        g
+    }
+
+    /// Register (or look up) a log-bucketed histogram.
+    pub fn histogram(&self, name: &str, labels: &str, help: &str) -> Arc<LogHistogram> {
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && e.labels == labels {
+                if let Metric::Hist(h) = &e.metric {
+                    return Arc::clone(h);
+                }
+            }
+        }
+        let h = Arc::new(LogHistogram::new());
+        es.push(Entry {
+            name: name.to_string(),
+            labels: labels.to_string(),
+            help: help.to_string(),
+            metric: Metric::Hist(Arc::clone(&h)),
+        });
+        h
+    }
+
+    /// Copy every metric's current value out.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let es = self.entries.lock().unwrap();
+        let samples = es
+            .iter()
+            .map(|e| Sample {
+                name: e.name.clone(),
+                labels: e.labels.clone(),
+                help: e.help.clone(),
+                value: match &e.metric {
+                    Metric::Counter(c) => SampleValue::Counter(c.get()),
+                    Metric::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Metric::Hist(h) => SampleValue::Histogram(h.snapshot()),
+                },
+            })
+            .collect();
+        MetricsSnapshot { samples }
+    }
+}
+
+/// One metric's value inside a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistSnapshot),
+}
+
+/// A named sample inside a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub labels: String,
+    pub help: String,
+    pub value: SampleValue,
+}
+
+/// Point-in-time copy of a [`MetricsRegistry`], renderable as a
+/// Prometheus text page or a JSON document.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub samples: Vec<Sample>,
+}
+
+impl MetricsSnapshot {
+    /// Find a sample by name (first label set wins).
+    pub fn get(&self, name: &str) -> Option<&Sample> {
+        self.samples.iter().find(|s| s.name == name)
+    }
+
+    /// Find a histogram sample by name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.samples.iter().find_map(|s| {
+            if s.name != name {
+                return None;
+            }
+            match &s.value {
+                SampleValue::Histogram(h) => Some(h),
+                _ => None,
+            }
+        })
+    }
+
+    /// Render a Prometheus exposition-format text page. Histograms
+    /// render as summaries (`quantile` labels plus `_sum`/`_count`),
+    /// in their native unit (nanoseconds for the serve latency
+    /// metrics, which carry a `_ns` name suffix).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut seen: Vec<&str> = Vec::new();
+        for s in &self.samples {
+            if !seen.contains(&s.name.as_str()) {
+                seen.push(&s.name);
+                let ty = match s.value {
+                    SampleValue::Counter(_) => "counter",
+                    SampleValue::Gauge(_) => "gauge",
+                    SampleValue::Histogram(_) => "summary",
+                };
+                out.push_str(&format!("# HELP {} {}\n", s.name, s.help));
+                out.push_str(&format!("# TYPE {} {}\n", s.name, ty));
+            }
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    out.push_str(&format!("{}{} {}\n", s.name, brace(&s.labels), v));
+                }
+                SampleValue::Gauge(v) => {
+                    out.push_str(&format!("{}{} {}\n", s.name, brace(&s.labels), fnum(*v)));
+                }
+                SampleValue::Histogram(h) => {
+                    for (q, qs) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                        let labels = if s.labels.is_empty() {
+                            format!("quantile=\"{qs}\"")
+                        } else {
+                            format!("{},quantile=\"{qs}\"", s.labels)
+                        };
+                        out.push_str(&format!(
+                            "{}{{{}}} {}\n",
+                            s.name,
+                            labels,
+                            fnum(h.percentile(q))
+                        ));
+                    }
+                    out.push_str(&format!("{}_sum{} {}\n", s.name, brace(&s.labels), h.sum));
+                    out.push_str(&format!("{}_count{} {}\n", s.name, brace(&s.labels), h.count));
+                }
+            }
+        }
+        out
+    }
+
+    /// Render the snapshot as a JSON document:
+    /// `{"metrics":[{"name":...,"type":...,...}, ...]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"metrics\":[");
+        for (i, s) in self.samples.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"labels\":\"{}\"",
+                esc(&s.name),
+                esc(&s.labels)
+            ));
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    out.push_str(&format!(",\"type\":\"counter\",\"value\":{v}}}"));
+                }
+                SampleValue::Gauge(v) => {
+                    out.push_str(&format!(",\"type\":\"gauge\",\"value\":{}}}", fnum(*v)));
+                }
+                SampleValue::Histogram(h) => {
+                    out.push_str(&format!(
+                        ",\"type\":\"histogram\",\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\
+                         \"p50\":{},\"p90\":{},\"p99\":{}}}",
+                        h.count,
+                        h.sum,
+                        h.min(),
+                        h.max(),
+                        fnum(h.p50()),
+                        fnum(h.p90()),
+                        fnum(h.p99())
+                    ));
+                }
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Wrap non-empty label pairs in braces.
+fn brace(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+/// Finite-number formatting safe to embed in JSON.
+fn fnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Minimal JSON string escaping (our metric names are plain
+/// identifiers; labels contain quotes).
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_record_snapshot() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("reqs_total", "", "total requests");
+        let g = r.gauge("uptime_secs", "", "uptime");
+        let h = r.histogram("latency_ns", "kernel=\"mxm\"", "request latency");
+        c.inc();
+        c.add(2);
+        g.set(1.5);
+        h.record(1000);
+        h.record(2000);
+        // Idempotent re-registration returns the same handle.
+        let c2 = r.counter("reqs_total", "", "total requests");
+        c2.inc();
+        assert_eq!(c.get(), 4);
+
+        let snap = r.snapshot();
+        assert_eq!(snap.samples.len(), 3);
+        match snap.get("reqs_total").unwrap().value {
+            SampleValue::Counter(v) => assert_eq!(v, 4),
+            _ => panic!("wrong type"),
+        }
+        let hs = snap.hist("latency_ns").unwrap();
+        assert_eq!(hs.count, 2);
+        assert_eq!(hs.sum, 3000);
+    }
+
+    #[test]
+    fn prometheus_rendering() {
+        let r = MetricsRegistry::new();
+        r.counter("reqs_total", "", "total requests").add(7);
+        r.histogram("lat_ns", "kernel=\"k\"", "latency").record(500);
+        let page = r.snapshot().to_prometheus();
+        assert!(page.contains("# TYPE reqs_total counter"));
+        assert!(page.contains("reqs_total 7"));
+        assert!(page.contains("# TYPE lat_ns summary"));
+        assert!(page.contains("lat_ns{kernel=\"k\",quantile=\"0.5\"} 500"));
+        assert!(page.contains("lat_ns_count{kernel=\"k\"} 1"));
+    }
+
+    #[test]
+    fn json_rendering() {
+        let r = MetricsRegistry::new();
+        r.gauge("hit_rate", "", "cache hit rate").set(0.75);
+        r.histogram("lat_ns", "", "latency").record(1234);
+        let j = r.snapshot().to_json();
+        assert!(j.starts_with("{\"metrics\":["));
+        assert!(j.contains("\"name\":\"hit_rate\""));
+        assert!(j.contains("\"value\":0.75"));
+        assert!(j.contains("\"type\":\"histogram\""));
+        assert!(j.contains("\"count\":1"));
+        assert!(j.ends_with("]}"));
+    }
+}

@@ -1,0 +1,311 @@
+//! Pipeline tracing: per-request spans recorded into a bounded,
+//! sharded ring, dumpable as Chrome trace-event JSON.
+//!
+//! Each completed serve request contributes one [`SpanEvent`] carrying
+//! seven timestamps (nanoseconds since the ring's epoch) that decompose
+//! end-to-end latency into contiguous segments:
+//!
+//! ```text
+//! t_enq ── queue-wait ── t_deq ── batch-formation ── t_plan0
+//!       ── cache lookup (hit or capture+compile) ── t_plan1
+//!       ── replay ── t_done
+//! ```
+//!
+//! plus the `[t_exec0, t_exec1]` window in which the request's replay
+//! actually ran on a pool worker (lane `worker`). Segments share their
+//! endpoint stamps, so they sum *exactly* to `t_done - t_enq`.
+//!
+//! The ring is bounded and sharded by worker lane; every shard's
+//! buffer is reserved up front, so recording a span never allocates —
+//! the zero-allocation cache-hit replay guarantee survives with
+//! tracing on. When a shard is full the oldest span is overwritten and
+//! counted in [`TraceRing::dropped`].
+//!
+//! [`TraceRing::chrome_json`] renders the spans in the Chrome
+//! trace-event format (load into `chrome://tracing` or Perfetto):
+//! pipeline segments appear on one lane per kernel, replay execution
+//! windows on one lane per pool worker, so a batch sweep fanned across
+//! `SharedPool` workers can be inspected on a timeline.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One request's span: timestamps are nanoseconds since the owning
+/// ring's epoch, monotone in field order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpanEvent {
+    /// Registered kernel index.
+    pub kernel: u32,
+    /// Completion sequence number (assigned by [`TraceRing::record`]).
+    pub seq: u64,
+    /// Pool-worker lane the replay ran on (see [`worker_lane`]).
+    pub worker: u32,
+    /// Whether the request succeeded.
+    pub ok: bool,
+    /// Whether plan resolution was a cache hit (vs capture+compile).
+    pub cache_hit: bool,
+    /// Submitted to the queue.
+    pub t_enq: u64,
+    /// Pulled off the queue by the dispatcher.
+    pub t_deq: u64,
+    /// Batch formed; plan resolution starts.
+    pub t_plan0: u64,
+    /// Plan resolved (cache hit or capture+compile done).
+    pub t_plan1: u64,
+    /// Replay started on its worker.
+    pub t_exec0: u64,
+    /// Replay finished on its worker.
+    pub t_exec1: u64,
+    /// Response sent; end of span.
+    pub t_done: u64,
+}
+
+#[derive(Debug)]
+struct Shard {
+    buf: Vec<SpanEvent>,
+    next: usize,
+}
+
+/// Bounded, sharded span ring. See the module docs for the format.
+#[derive(Debug)]
+pub struct TraceRing {
+    epoch: Instant,
+    shards: Vec<Mutex<Shard>>,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    /// Kernel names, indexed by `SpanEvent::kernel`, for the dump.
+    names: Vec<String>,
+}
+
+impl TraceRing {
+    /// A ring holding up to `capacity` spans split across `shards`
+    /// shards (one per expected worker lane; clamped to at least 1).
+    /// All buffers are reserved here — recording never allocates.
+    pub fn new(capacity: usize, shards: usize, names: Vec<String>) -> Self {
+        let shards = shards.max(1);
+        let per = capacity.div_ceil(shards).max(1);
+        TraceRing {
+            epoch: Instant::now(),
+            shards: (0..shards)
+                .map(|_| Mutex::new(Shard { buf: Vec::with_capacity(per), next: 0 }))
+                .collect(),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            names,
+        }
+    }
+
+    /// Nanoseconds since the ring's epoch — the clock all span
+    /// timestamps are stamped with.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record a span (its `seq` is assigned here). Allocation-free:
+    /// pushes into a pre-reserved shard buffer, overwriting the oldest
+    /// span when full.
+    pub fn record(&self, mut ev: SpanEvent) {
+        ev.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ix = ev.worker as usize % self.shards.len();
+        let mut s = self.shards[ix].lock().unwrap();
+        if s.buf.len() < s.buf.capacity() {
+            s.buf.push(ev);
+        } else {
+            let at = s.next;
+            s.buf[at] = ev;
+            s.next = (at + 1) % s.buf.capacity();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Spans currently held (may be less than recorded; see
+    /// [`TraceRing::dropped`]).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().buf.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans overwritten because their shard was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Copy all held spans out, ordered by enqueue time.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let mut evs: Vec<SpanEvent> = Vec::new();
+        for s in &self.shards {
+            evs.extend_from_slice(&s.lock().unwrap().buf);
+        }
+        evs.sort_by_key(|e| (e.t_enq, e.seq));
+        evs
+    }
+
+    /// Render every held span as Chrome trace-event JSON. Pipeline
+    /// segments (`queue`, `batch`, `plan[hit]`/`plan[miss]`, `replay`)
+    /// land on process 1 with one lane per kernel; per-worker replay
+    /// execution windows land on process 2 with one lane per pool
+    /// worker. Timestamps are microseconds, as the format requires.
+    pub fn chrome_json(&self) -> String {
+        let evs = self.events();
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, first: &mut bool, ev: String| {
+            if !*first {
+                out.push(',');
+            }
+            *first = false;
+            out.push_str(&ev);
+        };
+        push(
+            &mut out,
+            &mut first,
+            "{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":1,\
+             \"args\":{\"name\":\"serve pipeline (lane = kernel)\"}}"
+                .to_string(),
+        );
+        push(
+            &mut out,
+            &mut first,
+            "{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":2,\
+             \"args\":{\"name\":\"replay exec (lane = pool worker)\"}}"
+                .to_string(),
+        );
+        for (k, name) in self.names.iter().enumerate() {
+            push(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":1,\"tid\":{k},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    name.replace('\\', "\\\\").replace('"', "\\\"")
+                ),
+            );
+        }
+        let dur = |name: &str, pid: u32, tid: u64, t0: u64, t1: u64, ev: &SpanEvent| {
+            format!(
+                "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
+                 \"ts\":{:.3},\"dur\":{:.3},\
+                 \"args\":{{\"seq\":{},\"kernel\":{},\"ok\":{}}}}}",
+                t0 as f64 / 1e3,
+                t1.saturating_sub(t0) as f64 / 1e3,
+                ev.seq,
+                ev.kernel,
+                ev.ok
+            )
+        };
+        for e in &evs {
+            let k = e.kernel as u64;
+            push(&mut out, &mut first, dur("queue", 1, k, e.t_enq, e.t_deq, e));
+            push(&mut out, &mut first, dur("batch", 1, k, e.t_deq, e.t_plan0, e));
+            let plan = if e.cache_hit { "plan[hit]" } else { "plan[miss]" };
+            push(&mut out, &mut first, dur(plan, 1, k, e.t_plan0, e.t_plan1, e));
+            push(&mut out, &mut first, dur("replay", 1, k, e.t_plan1, e.t_done, e));
+            if e.t_exec1 > e.t_exec0 {
+                push(&mut out, &mut first, dur("exec", 2, e.worker as u64, e.t_exec0, e.t_exec1, e));
+            }
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+static NEXT_LANE: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    // const-initialised: reading the lane never allocates, so stamping
+    // exec windows stays safe on the zero-alloc replay path.
+    static LANE: Cell<u32> = const { Cell::new(u32::MAX) };
+}
+
+/// Small dense id for the calling thread, assigned on first use.
+/// Used as the `worker` lane of [`SpanEvent`]s.
+#[inline]
+pub fn worker_lane() -> u32 {
+    LANE.with(|l| {
+        let v = l.get();
+        if v != u32::MAX {
+            v
+        } else {
+            let v = NEXT_LANE.fetch_add(1, Ordering::Relaxed);
+            l.set(v);
+            v
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kernel: u32, t0: u64) -> SpanEvent {
+        SpanEvent {
+            kernel,
+            worker: 0,
+            ok: true,
+            cache_hit: true,
+            t_enq: t0,
+            t_deq: t0 + 10,
+            t_plan0: t0 + 20,
+            t_plan1: t0 + 30,
+            t_exec0: t0 + 32,
+            t_exec1: t0 + 38,
+            t_done: t0 + 40,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ring_bounds_and_overwrites() {
+        let ring = TraceRing::new(4, 1, vec!["k".into()]);
+        for i in 0..10u64 {
+            ring.record(span(0, i * 100));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let evs = ring.events();
+        assert_eq!(evs.len(), 4);
+        // Sequence numbers were assigned in record order.
+        assert!(evs.iter().all(|e| e.seq >= 6));
+    }
+
+    #[test]
+    fn segments_sum_to_span() {
+        let e = span(0, 1000);
+        let total = e.t_done - e.t_enq;
+        let sum = (e.t_deq - e.t_enq)
+            + (e.t_plan0 - e.t_deq)
+            + (e.t_plan1 - e.t_plan0)
+            + (e.t_done - e.t_plan1);
+        assert_eq!(sum, total);
+    }
+
+    #[test]
+    fn chrome_json_renders() {
+        let ring = TraceRing::new(8, 2, vec!["mxm".into(), "triad".into()]);
+        ring.record(span(0, 100));
+        ring.record(span(1, 200));
+        let j = ring.chrome_json();
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.contains("\"name\":\"queue\""));
+        assert!(j.contains("\"name\":\"plan[hit]\""));
+        assert!(j.contains("\"name\":\"replay\""));
+        assert!(j.contains("\"name\":\"exec\""));
+        assert!(j.contains("mxm"));
+        assert!(j.ends_with("]}"));
+    }
+
+    #[test]
+    fn lanes_are_stable_per_thread() {
+        let a = worker_lane();
+        let b = worker_lane();
+        assert_eq!(a, b);
+        let other = std::thread::spawn(worker_lane).join().unwrap();
+        assert_ne!(a, other);
+    }
+}

@@ -155,6 +155,13 @@ impl PlanCache {
         }
     }
 
+    /// Copy out every cached `(key, plan)` pair — the iteration surface
+    /// behind `Client::plan_profiles`, which reads each plan's
+    /// per-opcode tape profile.
+    pub fn entries(&self) -> Vec<(PlanKey, Arc<CompiledPlan>)> {
+        self.entries.iter().map(|(k, e)| (k.clone(), e.plan.clone())).collect()
+    }
+
     /// Aggregate `(replays, arenas_created)` over every cached plan. A
     /// healthy steady state replays many times per arena created (the
     /// arena count plateaus at the peak number of concurrent replays).

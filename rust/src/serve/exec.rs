@@ -34,6 +34,9 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs::profile::{self, LocalBlock, OpClass, PlanProfile};
 
 use crate::coordinator::engine::eval::{
     with_scratch, ILeafBind, Instr, KTree, LeafBind, Scratch, SegTape, TapeProgram, BLOCK,
@@ -284,6 +287,9 @@ pub struct CompiledPlan {
     arenas: Mutex<Vec<ReplayArena>>,
     replays: AtomicU64,
     arenas_created: AtomicU64,
+    /// Per-plan opcode-class profile, written during replays while
+    /// [`profile::enabled`] (allocated once here, at capture).
+    profile: PlanProfile,
 }
 
 impl CompiledPlan {
@@ -324,6 +330,13 @@ impl CompiledPlan {
     pub fn program(&self) -> Option<&Arc<Program>> {
         self.program.as_ref()
     }
+
+    /// This plan's accumulated per-opcode-class tape profile (empty
+    /// unless [`profile::set_enabled`] turned profiling on before its
+    /// replays).
+    pub fn profile_snapshot(&self) -> crate::obs::ProfileSnapshot {
+        self.profile.snapshot()
+    }
 }
 
 /// Wrap a captured whole-kernel [`Program`] as a cacheable plan: the
@@ -348,6 +361,7 @@ pub(crate) fn compiled_from_program(prog: Arc<Program>) -> CompiledPlan {
         arenas: Mutex::new(Vec::new()),
         replays: AtomicU64::new(0),
         arenas_created: AtomicU64::new(0),
+        profile: PlanProfile::new(crate::coordinator::engine::backend::active().name()),
     }
 }
 
@@ -579,6 +593,7 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
         arenas: Mutex::new(Vec::new()),
         replays: AtomicU64::new(0),
         arenas_created: AtomicU64::new(0),
+        profile: PlanProfile::new(crate::coordinator::engine::backend::active().name()),
     })
 }
 
@@ -779,6 +794,10 @@ pub fn execute_into(cp: &CompiledPlan, args: &[Data], out: &mut Vec<f64>) -> Res
             )));
         }
     }
+    // While profiling, route this thread's tape samples into the
+    // plan's own profile for the duration of the replay (program plans
+    // included: the guard covers the whole-kernel dispatch below).
+    let _prof = if profile::enabled() { Some(profile::install(&cp.profile)) } else { None };
     if let Some(prog) = &cp.program {
         // Whole-kernel captured plan: the program executor owns the
         // state recycling (its invoke is the zero-alloc replay).
@@ -898,6 +917,21 @@ fn take_slot(slots: &mut [Vec<f64>], i: usize) -> Result<Vec<f64>> {
         .ok_or_else(|| invalid("malformed plan: temp slot index out of range"))
 }
 
+/// Run `f` under the fold-profiling clock when profiling is on: the
+/// sample covers the backend fold merge of one evaluated block.
+#[inline]
+fn folded<T>(prof: &mut Option<LocalBlock>, elems: usize, f: impl FnOnce() -> T) -> T {
+    match prof {
+        Some(p) => {
+            let t0 = Instant::now();
+            let v = f();
+            p.add(OpClass::Fold, elems as u64, t0.elapsed().as_nanos() as u64);
+            v
+        }
+        None => f(),
+    }
+}
+
 fn run_step(
     step: &CStep,
     args: &[Data],
@@ -936,6 +970,7 @@ fn run_step(
             debug_assert_eq!(ob.len(), *rows);
             bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             let bk = kern.prog.backend();
+            let mut prof = profile::enabled().then(LocalBlock::new);
             let mut buf = scratch.take();
             for (r, ov) in ob.iter_mut().enumerate() {
                 let mut acc = red.identity();
@@ -948,12 +983,15 @@ fn run_step(
                         let st = r * *cols + off;
                         kern.prog.run_range_raw(leafbuf, ileafbuf, st, &mut buf[..l], scratch)
                     };
-                    acc = red.fold(acc, bk.fold_slice(*red, &buf[..l]));
+                    acc = folded(&mut prof, l, || red.fold(acc, bk.fold_slice(*red, &buf[..l])));
                     off += l;
                 }
                 *ov = acc;
             }
             scratch.put(buf);
+            if let Some(p) = prof.as_mut() {
+                p.flush();
+            }
             slots[*out] = ob;
             Ok(())
         }
@@ -962,6 +1000,7 @@ fn run_step(
             debug_assert_eq!(ob.len(), *cols);
             ob.fill(red.identity());
             bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
+            let mut prof = profile::enabled().then(LocalBlock::new);
             let mut buf = scratch.take();
             for r in 0..*rows {
                 let mut off = 0;
@@ -972,13 +1011,18 @@ fn run_step(
                         let st = r * *cols + off;
                         kern.prog.run_range_raw(leafbuf, ileafbuf, st, &mut buf[..l], scratch)
                     };
-                    for k in 0..l {
-                        ob[off + k] = red.fold(ob[off + k], buf[k]);
-                    }
+                    folded(&mut prof, l, || {
+                        for k in 0..l {
+                            ob[off + k] = red.fold(ob[off + k], buf[k]);
+                        }
+                    });
                     off += l;
                 }
             }
             scratch.put(buf);
+            if let Some(p) = prof.as_mut() {
+                p.flush();
+            }
             slots[*out] = ob;
             Ok(())
         }
@@ -987,6 +1031,7 @@ fn run_step(
             debug_assert_eq!(ob.len(), 1);
             bind_leaves(kern, args, slots, leafbuf, ileafbuf)?;
             let bk = kern.prog.backend();
+            let mut prof = profile::enabled().then(LocalBlock::new);
             let mut buf = scratch.take();
             let mut acc = red.identity();
             let mut off = 0;
@@ -994,10 +1039,13 @@ fn run_step(
                 let l = BLOCK.min(*len - off);
                 // SAFETY: as in `ReduceRows`.
                 unsafe { kern.prog.run_range_raw(leafbuf, ileafbuf, off, &mut buf[..l], scratch) };
-                acc = red.fold(acc, bk.fold_slice(*red, &buf[..l]));
+                acc = folded(&mut prof, l, || red.fold(acc, bk.fold_slice(*red, &buf[..l])));
                 off += l;
             }
             scratch.put(buf);
+            if let Some(p) = prof.as_mut() {
+                p.flush();
+            }
             ob[0] = acc;
             slots[*out] = ob;
             Ok(())

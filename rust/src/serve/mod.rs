@@ -27,7 +27,13 @@
 //!    [`SubmitError::QueueFull`] under backpressure.
 //! 4. **Serving stats are first-class.** Throughput, p50/p99 latency,
 //!    batch sizes and cache hit rates per kernel ([`stats`]), rendered
-//!    in the same style as [`crate::bench::harness`] reports.
+//!    in the same style as [`crate::bench::harness`] reports — and
+//!    backed by the [`crate::obs`] layer: a lock-free metrics registry
+//!    ([`Client::metrics_prometheus`]), per-request latency-segment
+//!    spans in a bounded trace ring ([`Client::trace_chrome_json`]),
+//!    and opt-in per-opcode tape profiling
+//!    ([`Client::plan_profiles`]), all configured via
+//!    [`ServeConfig::obs`].
 //! 5. **Whole-kernel programs serve too.** [`ServerBuilder::program`]
 //!    registers a captured [`crate::coordinator::program::Program`] —
 //!    an entire `_for` loop nest (FFT stage loop, fixed-iteration CG)
@@ -80,7 +86,7 @@ use crate::coordinator::{Context, Mat2, OptLevel, Scal, Vec1, VecI64};
 pub use cache::{CacheStats, PlanCache, PlanKey};
 pub use exec::{ArenaStats, CompiledPlan};
 pub use scheduler::{Client, Server, ServerBuilder, SubmitError, Ticket};
-pub use stats::{KernelStats, ServeStats};
+pub use stats::{KernelStats, Segments, ServeStats};
 
 /// A kernel builder: constructs the expression DAG for one request
 /// signature from placeholder parameter containers. Runs on the
@@ -98,6 +104,33 @@ pub type KernelFn = dyn Fn(&Context, &[Value]) -> Value + Send;
 /// parameters are 1-D f64 containers.
 pub type ProgramFn =
     dyn Fn(&[(DType, Shape)]) -> crate::Result<crate::coordinator::program::Program> + Send;
+
+/// Observability configuration (see [`crate::obs`]).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Record per-request latency-segment histograms and per-kernel
+    /// latency distributions into the server's
+    /// [`MetricsRegistry`](crate::obs::MetricsRegistry). Counters and
+    /// gauges are always kept (they are single relaxed atomics); this
+    /// only gates the histogram work — a handful more relaxed atomics
+    /// per request.
+    pub metrics: bool,
+    /// Capacity (spans) of the pipeline trace ring; `0` disables
+    /// tracing entirely (no ring is allocated, requests skip span
+    /// assembly). When tracing, the ring holds the most recent spans
+    /// and [`Client::trace_chrome_json`] dumps them.
+    pub trace_capacity: usize,
+    /// Turn on process-global per-opcode tape profiling
+    /// ([`crate::obs::profile`]) when the server starts. The switch is
+    /// never turned back off by the server (it is process-wide).
+    pub tape_profile: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { metrics: true, trace_capacity: 0, tape_profile: false }
+    }
+}
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -121,6 +154,8 @@ pub struct ServeConfig {
     pub cse: bool,
     /// Minimum elements per parallel chunk (capture verification runs).
     pub grain: usize,
+    /// Observability: metrics histograms, trace ring, tape profiling.
+    pub obs: ObsConfig,
 }
 
 impl Default for ServeConfig {
@@ -134,6 +169,7 @@ impl Default for ServeConfig {
             fusion: true,
             cse: false,
             grain: 4096,
+            obs: ObsConfig::default(),
         }
     }
 }

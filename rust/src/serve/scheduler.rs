@@ -14,6 +14,15 @@
 //! which is where the serving throughput win over per-dispatch
 //! evaluation comes from (see `benches/serve_throughput.rs`).
 //!
+//! Every request is stamped as it crosses each pipeline stage —
+//! enqueue, dequeue, group formation, plan resolution, response — and
+//! the stamps become a [`Segments`] decomposition recorded into the
+//! lock-free [`ServeStats`] (and, when a trace ring is configured, a
+//! [`SpanEvent`] dumpable as Chrome trace JSON via
+//! [`Client::trace_chrome_json`]). The segments share their endpoint
+//! stamps, so queue-wait + batch-formation + cache + replay equals
+//! end-to-end latency exactly.
+//!
 //! Failures are contained: builder panics, capture rejections, engine
 //! errors and elemental panics all turn into per-request `Err`
 //! responses; the dispatcher and the pool workers keep running.
@@ -29,12 +38,14 @@ use std::time::Instant;
 use crate::coordinator::node::Data;
 use crate::coordinator::shape::{DType, Shape};
 use crate::coordinator::{Context, Options, OptLevel};
+use crate::obs::trace::worker_lane;
+use crate::obs::{profile, MetricsSnapshot, ProfileSnapshot, SpanEvent, TraceRing};
 use crate::{Error, Result};
 
 use super::cache::{self, CacheStats, PlanCache, PlanKey};
 use super::exec::{self, CompiledPlan};
 use super::pool::{self, SharedPool};
-use super::stats::{KernelStats, ServeStats};
+use super::stats::{KernelStats, Segments, ServeStats};
 use super::{Arg, KernelFn, ProgramFn, ServeConfig, Value};
 
 /// A registered kernel: an expression builder (captured through the
@@ -86,17 +97,35 @@ struct Request {
     resp: SyncSender<Result<Vec<f64>>>,
 }
 
+/// A request plus the instant the dispatcher pulled it off the queue
+/// (end of its queue-wait segment).
+struct Pending {
+    req: Request,
+    dequeued: Instant,
+}
+
 enum Msg {
     Call(Request),
     Shutdown,
 }
 
+/// Group-level pipeline stamps shared by every request in one
+/// same-plan group: when plan resolution started, when it finished,
+/// and whether it was a cache hit.
+#[derive(Clone, Copy)]
+struct PlanStamps {
+    plan0: Instant,
+    plan1: Instant,
+    cache_hit: bool,
+}
+
 /// State shared between clients and the dispatcher.
 struct Shared {
     names: HashMap<String, usize>,
-    stats: Mutex<ServeStats>,
+    stats: ServeStats,
     cache: Mutex<PlanCache>,
     opt: OptLevel,
+    trace: Option<Arc<TraceRing>>,
 }
 
 /// Handle for submitting requests; cheap to clone, `Send`.
@@ -157,7 +186,7 @@ impl Client {
         match self.tx.try_send(Msg::Call(req)) {
             Ok(()) => Ok(ticket),
             Err(TrySendError::Full(Msg::Call(r))) => {
-                self.shared.stats.lock().unwrap().rejected += 1;
+                self.shared.stats.inc_rejected();
                 Err(SubmitError::QueueFull(r.args))
             }
             Err(TrySendError::Full(Msg::Shutdown)) => unreachable!("we only queue Call here"),
@@ -197,16 +226,16 @@ impl Client {
         self.shared.cache.lock().unwrap().arena_totals()
     }
 
-    /// Read a kernel's serving stats under the lock.
+    /// Read a kernel's serving stats (lock-free; the stats are
+    /// relaxed atomics).
     pub fn kernel_stats<R>(&self, kernel: &str, f: impl FnOnce(&KernelStats) -> R) -> Option<R> {
         let &kid = self.shared.names.get(kernel)?;
-        let stats = self.shared.stats.lock().unwrap();
-        stats.kernel(kid).map(f)
+        self.shared.stats.kernel(kid).map(f)
     }
 
     /// Sustained server throughput (requests/second since start).
     pub fn throughput(&self) -> f64 {
-        self.shared.stats.lock().unwrap().throughput()
+        self.shared.stats.throughput()
     }
 
     /// Name of the kernel backend cached plans compile against (the
@@ -218,7 +247,62 @@ impl Client {
     /// Render the serving report (per-kernel table + cache line).
     pub fn report(&self) -> String {
         let cache = self.cache_stats();
-        self.shared.stats.lock().unwrap().report(&cache)
+        self.shared.stats.report(&cache)
+    }
+
+    /// Snapshot every serve metric (counters, gauges, segment
+    /// histograms) with the cache gauges refreshed.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let cache = self.cache_stats();
+        self.shared.stats.snapshot(&cache)
+    }
+
+    /// The metrics snapshot as a Prometheus-style text page.
+    pub fn metrics_prometheus(&self) -> String {
+        self.metrics_snapshot().to_prometheus()
+    }
+
+    /// The metrics snapshot as a JSON document.
+    pub fn metrics_json(&self) -> String {
+        self.metrics_snapshot().to_json()
+    }
+
+    /// All spans currently held by the trace ring (empty when tracing
+    /// is off — `ObsConfig::trace_capacity` = 0).
+    pub fn trace_spans(&self) -> Vec<SpanEvent> {
+        self.shared.trace.as_ref().map(|r| r.events()).unwrap_or_default()
+    }
+
+    /// Dump the trace ring as Chrome trace-event JSON (viewable in
+    /// `chrome://tracing` / Perfetto); `None` when tracing is off.
+    pub fn trace_chrome_json(&self) -> Option<String> {
+        self.shared.trace.as_ref().map(|r| r.chrome_json())
+    }
+
+    /// The process-global per-opcode tape profile, labelled with the
+    /// active backend. Empty unless `ObsConfig::tape_profile` (or
+    /// [`profile::set_enabled`]) turned profiling on.
+    pub fn tape_profile(&self) -> ProfileSnapshot {
+        profile::global().snapshot(self.backend_name())
+    }
+
+    /// Per-cached-plan tape profiles: one `(kernel signature, profile)`
+    /// row per plan-cache entry. A plan's profile accumulates during
+    /// its replays while profiling is enabled.
+    pub fn plan_profiles(&self) -> Vec<(String, ProfileSnapshot)> {
+        let entries = self.shared.cache.lock().unwrap().entries();
+        entries
+            .into_iter()
+            .map(|(key, plan)| {
+                let name = self
+                    .shared
+                    .names
+                    .iter()
+                    .find_map(|(n, &v)| if v == key.kernel { Some(n.as_str()) } else { None })
+                    .unwrap_or("?");
+                (format!("{name}{:?}", key.args), plan.profile_snapshot())
+            })
+            .collect()
     }
 }
 
@@ -268,11 +352,26 @@ impl ServerBuilder {
         let names: HashMap<String, usize> =
             self.kernels.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
         let kernel_names: Vec<String> = self.kernels.iter().map(|(n, _)| n.clone()).collect();
+        let trace = if self.config.obs.trace_capacity > 0 {
+            Some(Arc::new(TraceRing::new(
+                self.config.obs.trace_capacity,
+                self.config.workers.max(1),
+                kernel_names.clone(),
+            )))
+        } else {
+            None
+        };
+        if self.config.obs.tape_profile {
+            // Process-wide switch: only ever turned on here, never off
+            // (other servers or benches may rely on it staying up).
+            profile::set_enabled(true);
+        }
         let shared = Arc::new(Shared {
             names,
-            stats: Mutex::new(ServeStats::new(&kernel_names)),
+            stats: ServeStats::new(&kernel_names, self.config.obs.metrics),
             cache: Mutex::new(PlanCache::new(self.config.plan_cache_capacity)),
             opt: self.config.opt_level,
+            trace,
         });
         let builders: Vec<KernelEntry> = self.kernels.into_iter().map(|(_, f)| f).collect();
         let cfg = self.config;
@@ -352,15 +451,15 @@ fn dispatcher(
             Err(_) => break, // every client handle dropped
         };
         let mut shutdown = false;
-        let mut batch: Vec<Request> = Vec::new();
+        let mut batch: Vec<Pending> = Vec::new();
         match first {
             Msg::Shutdown => shutdown = true,
-            Msg::Call(r) => batch.push(r),
+            Msg::Call(r) => batch.push(Pending { req: r, dequeued: Instant::now() }),
         }
         // Coalesce whatever else is already queued, up to max_batch.
         while batch.len() < max_batch {
             match rx.try_recv() {
-                Ok(Msg::Call(r)) => batch.push(r),
+                Ok(Msg::Call(r)) => batch.push(Pending { req: r, dequeued: Instant::now() }),
                 Ok(Msg::Shutdown) => {
                     shutdown = true;
                     break;
@@ -374,10 +473,12 @@ fn dispatcher(
         if shutdown {
             // Drain and answer everything still queued, then exit.
             loop {
-                let mut rest: Vec<Request> = Vec::new();
+                let mut rest: Vec<Pending> = Vec::new();
                 while rest.len() < max_batch {
                     match rx.try_recv() {
-                        Ok(Msg::Call(r)) => rest.push(r),
+                        Ok(Msg::Call(r)) => {
+                            rest.push(Pending { req: r, dequeued: Instant::now() })
+                        }
                         Ok(Msg::Shutdown) => {}
                         Err(_) => break,
                     }
@@ -393,44 +494,50 @@ fn dispatcher(
 }
 
 fn process_batch(
-    batch: Vec<Request>,
+    batch: Vec<Pending>,
     builders: &[KernelEntry],
     ctx: &Context,
     pool: Option<&SharedPool>,
     shared: &Arc<Shared>,
 ) {
     // Group by (kernel, signature): every group replays one plan.
-    let mut groups: HashMap<PlanKey, Vec<Request>> = HashMap::new();
-    for r in batch {
-        let key = PlanKey { kernel: r.kernel, args: r.sig.clone(), opt: shared.opt };
-        groups.entry(key).or_default().push(r);
+    let mut groups: HashMap<PlanKey, Vec<Pending>> = HashMap::new();
+    for p in batch {
+        let key = PlanKey { kernel: p.req.kernel, args: p.req.sig.clone(), opt: shared.opt };
+        groups.entry(key).or_default().push(p);
     }
     for (key, reqs) in groups {
+        // Group formed: the batch-formation segment ends, plan
+        // resolution starts.
+        let plan0 = Instant::now();
         let plan = resolve_plan(&key, builders, ctx, shared);
         match plan {
             Err(e) => {
+                let stamps = PlanStamps { plan0, plan1: Instant::now(), cache_hit: false };
                 let msg = e.to_string();
-                for r in reqs {
-                    respond(r, Err(Error::Invalid(msg.clone())), shared);
+                for p in reqs {
+                    finish(p, stamps, None, Err(Error::Invalid(msg.clone())), shared);
                 }
             }
-            Ok(p) => {
-                shared.stats.lock().unwrap().record_batch(key.kernel);
-                execute_group(p, reqs, pool, shared);
+            Ok((plan, cache_hit)) => {
+                let stamps = PlanStamps { plan0, plan1: Instant::now(), cache_hit };
+                shared.stats.record_batch(key.kernel);
+                execute_group(plan, reqs, stamps, pool, shared);
             }
         }
     }
 }
 
 /// Cache lookup; on a miss, capture + compile + verify and insert.
+/// Returns the plan and whether resolution was a cache hit.
 fn resolve_plan(
     key: &PlanKey,
     builders: &[KernelEntry],
     ctx: &Context,
     shared: &Arc<Shared>,
-) -> Result<Arc<CompiledPlan>> {
+) -> Result<(Arc<CompiledPlan>, bool)> {
     if let Some(p) = shared.cache.lock().unwrap().get(key) {
-        return Ok(p);
+        return Ok((p, true));
     }
     let builder = builders
         .get(key.kernel)
@@ -450,7 +557,7 @@ fn resolve_plan(
         }
     };
     shared.cache.lock().unwrap().insert(key.clone(), plan.clone());
-    Ok(plan)
+    Ok((plan, false))
 }
 
 /// Execute one same-plan group as a single fork-join sweep: request `r`
@@ -461,20 +568,29 @@ fn resolve_plan(
 /// vectors handed back to clients.
 fn execute_group(
     plan: Arc<CompiledPlan>,
-    reqs: Vec<Request>,
+    reqs: Vec<Pending>,
+    stamps: PlanStamps,
     pool: Option<&SharedPool>,
     shared: &Arc<Shared>,
 ) {
+    let kernel = reqs.first().map_or(0, |p| p.req.kernel);
     // Split the requests into Send-able argument sets and response ends.
-    let mut metas: Vec<(usize, Instant, SyncSender<Result<Vec<f64>>>)> = Vec::new();
+    let mut metas: Vec<Pending> = Vec::new();
     let mut argsets: Vec<Vec<Data>> = Vec::new();
-    for r in reqs {
-        metas.push((r.kernel, r.enqueued, r.resp));
-        argsets.push(r.args.into_iter().map(Arg::into_data).collect());
+    for mut p in reqs {
+        argsets.push(std::mem::take(&mut p.req.args).into_iter().map(Arg::into_data).collect());
+        metas.push(p);
     }
     let n = argsets.len();
     let results: Vec<Mutex<Option<Result<Vec<f64>>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    // When tracing, each request's replay stamps its execution window
+    // and worker lane (pre-sized cells: the sweep itself must stay
+    // allocation-free).
+    let ring = shared.trace.as_deref();
+    let windows: Option<Vec<Mutex<(u64, u64, u32)>>> =
+        ring.map(|_| (0..n).map(|_| Mutex::new((0, 0, 0))).collect());
     let body = |i: usize| {
+        let t0 = ring.map_or(0, |r| r.now_ns());
         // An elemental that panics (bad index data) must not kill a
         // pool worker mid-sweep — that would stall the barrier.
         let out = match catch_unwind(AssertUnwindSafe(|| exec::execute(&plan, &argsets[i]))) {
@@ -484,8 +600,12 @@ fn execute_group(
                 panic_message(&payload)
             ))),
         };
+        if let (Some(r), Some(w)) = (ring, &windows) {
+            *w[i].lock().unwrap() = (t0, r.now_ns(), worker_lane());
+        }
         *results[i].lock().unwrap() = Some(out);
     };
+    let sweep0 = Instant::now();
     match pool {
         Some(p) if n > 1 => p.run_chunks(n, &body),
         _ => {
@@ -494,31 +614,66 @@ fn execute_group(
             }
         }
     }
-    for ((kernel, enqueued, resp), cell) in metas.into_iter().zip(results) {
+    // True sweep wall time, once per sweep — the per-request
+    // `busy_secs` view books this same wall time for every member.
+    shared.stats.record_sweep(kernel, sweep0.elapsed().as_secs_f64());
+    let windows = windows.unwrap_or_default();
+    for (i, (pending, cell)) in metas.into_iter().zip(results).enumerate() {
         let out = cell
             .into_inner()
             .unwrap()
             .unwrap_or_else(|| Err(Error::Invalid("serve: batch sweep lost a result".into())));
-        finish(kernel, enqueued, resp, out, shared);
+        let exec = windows.get(i).map(|w| *w.lock().unwrap());
+        finish(pending, stamps, exec, out, shared);
     }
 }
 
-fn respond(r: Request, out: Result<Vec<f64>>, shared: &Arc<Shared>) {
-    finish(r.kernel, r.enqueued, r.resp, out, shared);
-}
-
+/// Answer one request and record its span: stats segments always,
+/// trace ring when configured. The segment boundaries share stamps, so
+/// they sum exactly to end-to-end latency.
 fn finish(
-    kernel: usize,
-    enqueued: Instant,
-    resp: SyncSender<Result<Vec<f64>>>,
+    pending: Pending,
+    stamps: PlanStamps,
+    exec: Option<(u64, u64, u32)>,
     out: Result<Vec<f64>>,
     shared: &Arc<Shared>,
 ) {
+    let Pending { req, dequeued } = pending;
+    let done = Instant::now();
     let ok = out.is_ok();
-    let latency = enqueued.elapsed().as_secs_f64();
     // The receiver may have given up; stats still count the completion.
-    let _ = resp.try_send(out);
-    shared.stats.lock().unwrap().record_request(kernel, latency, ok);
+    let _ = req.resp.try_send(out);
+    let seg = Segments {
+        queue_s: dequeued.saturating_duration_since(req.enqueued).as_secs_f64(),
+        batch_s: stamps.plan0.saturating_duration_since(dequeued).as_secs_f64(),
+        cache_s: stamps.plan1.saturating_duration_since(stamps.plan0).as_secs_f64(),
+        cache_hit: stamps.cache_hit,
+        replay_s: done.saturating_duration_since(stamps.plan1).as_secs_f64(),
+    };
+    shared.stats.record_request(req.kernel, &seg, ok);
+    if let Some(ring) = &shared.trace {
+        // Re-express the Instant stamps on the ring's epoch clock by
+        // subtracting each stamp's distance from `done`.
+        let now = ring.now_ns();
+        let since = |t: Instant| {
+            now.saturating_sub(done.saturating_duration_since(t).as_nanos() as u64)
+        };
+        let (t_exec0, t_exec1, worker) = exec.unwrap_or((0, 0, 0));
+        ring.record(SpanEvent {
+            kernel: req.kernel as u32,
+            seq: 0, // assigned by the ring
+            worker,
+            ok,
+            cache_hit: stamps.cache_hit,
+            t_enq: since(req.enqueued),
+            t_deq: since(dequeued),
+            t_plan0: since(stamps.plan0),
+            t_plan1: since(stamps.plan1),
+            t_exec0,
+            t_exec1,
+            t_done: now,
+        });
+    }
 }
 
 fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {

@@ -1,71 +1,134 @@
 //! Per-kernel serving statistics: throughput, latency percentiles,
-//! batching behaviour and cache effectiveness.
+//! batching behaviour and cache effectiveness — lock-free, built on
+//! the [`crate::obs`] metrics layer.
 //!
-//! The dispatcher records one sample per completed request (latency is
-//! measured from submission to response, so queueing delay is
-//! included). Latencies are kept in a bounded ring per kernel; p50/p99
-//! are computed over that window on demand. Reports render in the same
-//! aligned-table style as [`crate::bench::harness`].
+//! The dispatcher records one [`Segments`] decomposition per completed
+//! request: queue-wait, batch-formation, cache-lookup (hit or
+//! capture+compile) and replay, all cut from the same timestamps so
+//! they sum *exactly* to end-to-end latency. Latencies go into
+//! log-bucketed atomic histograms ([`crate::obs::LogHistogram`]) with
+//! relative error bounded by [`crate::obs::MAX_REL_ERROR`] — the old
+//! 4096-sample ring that was cloned and sorted under a lock on every
+//! report is gone, and so is the lock: every record path is relaxed
+//! atomics, so stats no longer serialise the dispatcher against
+//! report readers.
+//!
+//! Reports render in the same aligned-table style as
+//! [`crate::bench::harness`]; [`ServeStats::snapshot`] exports the
+//! whole registry as Prometheus text or JSON.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
-/// Samples kept per kernel for percentile estimation.
-const LATENCY_WINDOW: usize = 4096;
+use crate::obs::{Counter, Gauge, LogHistogram, MetricsRegistry, MetricsSnapshot};
 
-/// Running statistics for one registered kernel.
-#[derive(Debug, Clone)]
+/// Per-request latency decomposition, in seconds. The four segments
+/// are cut from shared timestamps (enqueue → dequeue → batch formed →
+/// plan resolved → response sent), so
+/// `queue_s + batch_s + cache_s + replay_s` reconstructs end-to-end
+/// latency exactly (up to nanosecond rounding).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Segments {
+    /// Submission until the dispatcher pulled the request off the queue.
+    pub queue_s: f64,
+    /// Dequeue until the request's group was formed and plan resolution
+    /// started.
+    pub batch_s: f64,
+    /// Plan resolution: a cache probe on a hit, capture+compile+verify
+    /// on a miss.
+    pub cache_s: f64,
+    /// Whether plan resolution was a cache hit.
+    pub cache_hit: bool,
+    /// Plan resolved until the response was sent (the batch sweep).
+    pub replay_s: f64,
+}
+
+impl Segments {
+    /// End-to-end latency: the exact sum of the four segments.
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.batch_s + self.cache_s + self.replay_s
+    }
+}
+
+/// Running statistics for one registered kernel. All counters are
+/// relaxed atomics; recording takes `&self` and never allocates.
+#[derive(Debug)]
 pub struct KernelStats {
-    pub name: String,
-    /// Completed requests (including errors).
-    pub requests: u64,
-    /// Requests answered with an error.
-    pub errors: u64,
-    /// Seconds spent executing this kernel (per-request, so batched
-    /// execution attributes wall time to every member).
-    pub busy_secs: f64,
-    /// Number of batch sweeps that included this kernel.
-    pub batches: u64,
-    /// Latency ring (seconds), newest overwrite oldest past the window.
-    lat: Vec<f64>,
-    lat_next: usize,
+    name: String,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    /// Nanoseconds of sweep wall time attributed **per member request**
+    /// — a batch of 8 books the same sweep 8 times. Kept deliberately
+    /// (it is the "requests' view" of busyness); see
+    /// [`KernelStats::sweep_secs`] for the un-double-counted truth.
+    busy_ns: AtomicU64,
+    /// True wall nanoseconds of batch sweeps, recorded **once per
+    /// sweep** regardless of how many requests rode it.
+    sweep_ns: AtomicU64,
+    batches: AtomicU64,
+    latency: Arc<LogHistogram>,
 }
 
 impl KernelStats {
-    fn new(name: &str) -> Self {
+    fn new(name: &str, latency: Arc<LogHistogram>) -> Self {
         KernelStats {
             name: name.to_string(),
-            requests: 0,
-            errors: 0,
-            busy_secs: 0.0,
-            batches: 0,
-            lat: Vec::new(),
-            lat_next: 0,
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            sweep_ns: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            latency,
         }
     }
 
-    fn record(&mut self, latency_s: f64, ok: bool) {
-        self.requests += 1;
+    fn record(&self, seg: &Segments, ok: bool, metrics: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
         if !ok {
-            self.errors += 1;
+            self.errors.fetch_add(1, Ordering::Relaxed);
         }
-        self.busy_secs += latency_s;
-        if self.lat.len() < LATENCY_WINDOW {
-            self.lat.push(latency_s);
-        } else {
-            self.lat[self.lat_next] = latency_s;
-            self.lat_next = (self.lat_next + 1) % LATENCY_WINDOW;
+        self.busy_ns.fetch_add((seg.replay_s.max(0.0) * 1e9).round() as u64, Ordering::Relaxed);
+        if metrics {
+            self.latency.record_secs(seg.total_s());
         }
     }
 
-    /// Latency percentile (0.0..=1.0) over the sample window, seconds.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Completed requests (including errors).
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered with an error.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Number of batch sweeps that included this kernel.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Seconds of sweep time booked per member request (documented
+    /// double-count: every request in a batch is charged the whole
+    /// sweep). Contrast with [`KernelStats::sweep_secs`].
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// True seconds spent in batch sweeps for this kernel, counted
+    /// once per sweep.
+    pub fn sweep_secs(&self) -> f64 {
+        self.sweep_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Latency percentile (0.0..=1.0), seconds, from the histogram.
     pub fn percentile(&self, q: f64) -> f64 {
-        if self.lat.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.lat.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let ix = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-        v[ix]
+        self.latency.snapshot().percentile_secs(q)
     }
 
     pub fn p50(&self) -> f64 {
@@ -78,34 +141,137 @@ impl KernelStats {
 
     /// Mean requests per batch sweep.
     pub fn mean_batch(&self) -> f64 {
-        if self.batches == 0 {
+        let b = self.batches();
+        if b == 0 {
             0.0
         } else {
-            self.requests as f64 / self.batches as f64
+            self.requests() as f64 / b as f64
         }
     }
 }
 
-/// Registry of all kernels' stats plus server-wide counters.
+/// Registry of all kernels' stats plus server-wide counters and the
+/// pipeline-segment histograms. Every record path takes `&self`
+/// (relaxed atomics), so the scheduler shares this without a mutex.
 #[derive(Debug)]
 pub struct ServeStats {
     started: Instant,
     kernels: Vec<KernelStats>,
-    /// Total requests that were rejected at submission (queue full).
-    pub rejected: u64,
+    rejected: AtomicU64,
     /// Active kernel backend name (plans compile against the
     /// process-wide backend; surfaced so a serving report states which
     /// ISA path produced its numbers).
     backend: &'static str,
+    /// Record segment histograms? (`ObsConfig::metrics`; counters are
+    /// always kept — they are the serving report's base data.)
+    metrics: bool,
+    registry: MetricsRegistry,
+    requests_total: Arc<Counter>,
+    errors_total: Arc<Counter>,
+    rejected_total: Arc<Counter>,
+    queue_wait: Arc<LogHistogram>,
+    batch_form: Arc<LogHistogram>,
+    cache_hit_ns: Arc<LogHistogram>,
+    cache_miss_ns: Arc<LogHistogram>,
+    replay_ns: Arc<LogHistogram>,
+    e2e_ns: Arc<LogHistogram>,
+    uptime_g: Arc<Gauge>,
+    throughput_g: Arc<Gauge>,
+    cache_hits_g: Arc<Gauge>,
+    cache_misses_g: Arc<Gauge>,
+    cache_hit_rate_g: Arc<Gauge>,
+    cache_evictions_g: Arc<Gauge>,
+    cache_len_g: Arc<Gauge>,
 }
 
 impl ServeStats {
-    pub fn new(kernel_names: &[String]) -> Self {
+    /// Build the stats registry for the given kernels. `metrics`
+    /// controls histogram recording (`false` is the measured
+    /// "instrumentation disabled" serve mode).
+    pub fn new(kernel_names: &[String], metrics: bool) -> Self {
+        let registry = MetricsRegistry::new();
+        let kernels = kernel_names
+            .iter()
+            .map(|n| {
+                let h = registry.histogram(
+                    "arbb_serve_latency_ns",
+                    &format!("kernel=\"{n}\""),
+                    "end-to-end request latency per kernel, nanoseconds",
+                );
+                KernelStats::new(n, h)
+            })
+            .collect();
         ServeStats {
             started: Instant::now(),
-            kernels: kernel_names.iter().map(|n| KernelStats::new(n)).collect(),
-            rejected: 0,
+            kernels,
+            rejected: AtomicU64::new(0),
             backend: crate::coordinator::engine::backend::active().name(),
+            metrics,
+            requests_total: registry.counter(
+                "arbb_serve_requests_total",
+                "",
+                "completed requests (including errors)",
+            ),
+            errors_total: registry.counter(
+                "arbb_serve_errors_total",
+                "",
+                "requests answered with an error",
+            ),
+            rejected_total: registry.counter(
+                "arbb_serve_rejected_total",
+                "",
+                "submissions rejected by queue backpressure",
+            ),
+            queue_wait: registry.histogram(
+                "arbb_serve_queue_wait_ns",
+                "",
+                "submission to dispatcher dequeue, nanoseconds",
+            ),
+            batch_form: registry.histogram(
+                "arbb_serve_batch_form_ns",
+                "",
+                "dequeue to group formation, nanoseconds",
+            ),
+            cache_hit_ns: registry.histogram(
+                "arbb_serve_cache_hit_ns",
+                "",
+                "plan-cache probe time on hits, nanoseconds",
+            ),
+            cache_miss_ns: registry.histogram(
+                "arbb_serve_cache_miss_ns",
+                "",
+                "capture+compile+verify time on misses, nanoseconds",
+            ),
+            replay_ns: registry.histogram(
+                "arbb_serve_replay_ns",
+                "",
+                "plan resolution to response sent (batch sweep), nanoseconds",
+            ),
+            e2e_ns: registry.histogram(
+                "arbb_serve_e2e_ns",
+                "",
+                "end-to-end request latency, nanoseconds",
+            ),
+            uptime_g: registry.gauge("arbb_serve_uptime_secs", "", "seconds since server start"),
+            throughput_g: registry.gauge(
+                "arbb_serve_throughput_rps",
+                "",
+                "sustained requests/second since start",
+            ),
+            cache_hits_g: registry.gauge("arbb_plan_cache_hits", "", "plan-cache hits"),
+            cache_misses_g: registry.gauge("arbb_plan_cache_misses", "", "plan-cache misses"),
+            cache_hit_rate_g: registry.gauge(
+                "arbb_plan_cache_hit_rate",
+                "",
+                "plan-cache hit rate (0..1)",
+            ),
+            cache_evictions_g: registry.gauge(
+                "arbb_plan_cache_evictions",
+                "",
+                "plan-cache LRU evictions",
+            ),
+            cache_len_g: registry.gauge("arbb_plan_cache_entries", "", "cached plans"),
+            registry,
         }
     }
 
@@ -114,16 +280,54 @@ impl ServeStats {
         self.backend
     }
 
-    pub fn record_request(&mut self, kernel: usize, latency_s: f64, ok: bool) {
-        if let Some(k) = self.kernels.get_mut(kernel) {
-            k.record(latency_s, ok);
+    /// Record one completed request's segment decomposition. Lock-free
+    /// and allocation-free (relaxed atomic bumps into preallocated
+    /// histograms).
+    pub fn record_request(&self, kernel: usize, seg: &Segments, ok: bool) {
+        self.requests_total.inc();
+        if !ok {
+            self.errors_total.inc();
+        }
+        if let Some(k) = self.kernels.get(kernel) {
+            k.record(seg, ok, self.metrics);
+        }
+        if self.metrics {
+            self.queue_wait.record_secs(seg.queue_s);
+            self.batch_form.record_secs(seg.batch_s);
+            if seg.cache_hit {
+                self.cache_hit_ns.record_secs(seg.cache_s);
+            } else {
+                self.cache_miss_ns.record_secs(seg.cache_s);
+            }
+            self.replay_ns.record_secs(seg.replay_s);
+            self.e2e_ns.record_secs(seg.total_s());
         }
     }
 
-    pub fn record_batch(&mut self, kernel: usize) {
-        if let Some(k) = self.kernels.get_mut(kernel) {
-            k.batches += 1;
+    /// Count one batch sweep for `kernel`.
+    pub fn record_batch(&self, kernel: usize) {
+        if let Some(k) = self.kernels.get(kernel) {
+            k.batches.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Record a sweep's true wall time, once per sweep (the
+    /// per-request `busy_secs` view double-counts it by design).
+    pub fn record_sweep(&self, kernel: usize, secs: f64) {
+        if let Some(k) = self.kernels.get(kernel) {
+            k.sweep_ns.fetch_add((secs.max(0.0) * 1e9).round() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Count a queue-full rejection.
+    pub fn inc_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.rejected_total.inc();
+    }
+
+    /// Total requests rejected at submission (queue full).
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
     }
 
     pub fn kernel(&self, ix: usize) -> Option<&KernelStats> {
@@ -140,7 +344,7 @@ impl ServeStats {
 
     /// Total completed requests across kernels.
     pub fn total_requests(&self) -> u64 {
-        self.kernels.iter().map(|k| k.requests).sum()
+        self.requests_total.get()
     }
 
     /// Sustained throughput since the server started, requests/second.
@@ -153,7 +357,24 @@ impl ServeStats {
         }
     }
 
+    /// Refresh the derived gauges and snapshot the whole metrics
+    /// registry — render with
+    /// [`MetricsSnapshot::to_prometheus`] or
+    /// [`MetricsSnapshot::to_json`].
+    pub fn snapshot(&self, cache: &super::cache::CacheStats) -> MetricsSnapshot {
+        self.uptime_g.set(self.uptime_secs());
+        self.throughput_g.set(self.throughput());
+        self.cache_hits_g.set(cache.hits as f64);
+        self.cache_misses_g.set(cache.misses as f64);
+        self.cache_hit_rate_g.set(cache.hit_rate());
+        self.cache_evictions_g.set(cache.evictions as f64);
+        self.cache_len_g.set(cache.len as f64);
+        self.registry.snapshot()
+    }
+
     /// Render an aligned per-kernel report (bench-harness style).
+    /// `busy%` is the per-request (double-counted) sweep attribution
+    /// over uptime; `sweep s` is the true once-per-sweep wall time.
     pub fn report(&self, cache: &super::cache::CacheStats) -> String {
         let mut out = String::new();
         out.push_str(&format!(
@@ -161,7 +382,7 @@ impl ServeStats {
              backend {}\n",
             self.throughput(),
             self.total_requests(),
-            self.rejected,
+            self.rejected(),
             self.uptime_secs(),
             self.backend
         ));
@@ -175,30 +396,35 @@ impl ServeStats {
             cache.capacity
         ));
         out.push_str(&format!(
-            "| {:<16} | {:>8} | {:>6} | {:>10} | {:>9} | {:>9} | {:>7} |\n",
-            "kernel", "reqs", "errs", "req/s", "p50 ms", "p99 ms", "batch"
+            "| {:<16} | {:>8} | {:>6} | {:>10} | {:>9} | {:>9} | {:>7} | {:>6} | {:>8} |\n",
+            "kernel", "reqs", "errs", "req/s", "p50 ms", "p99 ms", "batch", "busy%", "sweep s"
         ));
         out.push_str(&format!(
-            "|{}|{}|{}|{}|{}|{}|{}|\n",
+            "|{}|{}|{}|{}|{}|{}|{}|{}|{}|\n",
             "-".repeat(18),
             "-".repeat(10),
             "-".repeat(8),
             "-".repeat(12),
             "-".repeat(11),
             "-".repeat(11),
-            "-".repeat(9)
+            "-".repeat(9),
+            "-".repeat(8),
+            "-".repeat(10)
         ));
         let up = self.uptime_secs().max(1e-9);
         for k in &self.kernels {
             out.push_str(&format!(
-                "| {:<16} | {:>8} | {:>6} | {:>10.1} | {:>9.3} | {:>9.3} | {:>7.2} |\n",
-                truncate(&k.name, 16),
-                k.requests,
-                k.errors,
-                k.requests as f64 / up,
+                "| {:<16} | {:>8} | {:>6} | {:>10.1} | {:>9.3} | {:>9.3} | {:>7.2} | {:>6.1} | \
+                 {:>8.3} |\n",
+                truncate(k.name(), 16),
+                k.requests(),
+                k.errors(),
+                k.requests() as f64 / up,
                 k.p50() * 1e3,
                 k.p99() * 1e3,
-                k.mean_batch()
+                k.mean_batch(),
+                100.0 * k.busy_secs() / up,
+                k.sweep_secs()
             ));
         }
         out
@@ -220,39 +446,117 @@ fn truncate(s: &str, n: usize) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::MAX_REL_ERROR;
+
+    fn seg(latency_s: f64) -> Segments {
+        // Split a latency across all four segments so decomposition
+        // recording is exercised too.
+        Segments {
+            queue_s: latency_s * 0.1,
+            batch_s: latency_s * 0.1,
+            cache_s: latency_s * 0.2,
+            cache_hit: true,
+            replay_s: latency_s * 0.6,
+        }
+    }
 
     #[test]
     fn records_and_percentiles() {
-        let mut s = ServeStats::new(&["k0".into(), "k1".into()]);
+        let s = ServeStats::new(&["k0".into(), "k1".into()], true);
         for i in 0..100 {
-            s.record_request(0, (i + 1) as f64 * 1e-3, true);
+            s.record_request(0, &seg((i + 1) as f64 * 1e-3), true);
         }
-        s.record_request(1, 0.5, false);
+        s.record_request(1, &seg(0.5), false);
         s.record_batch(0);
+        s.record_sweep(0, 0.040);
         let k0 = s.kernel(0).unwrap();
-        assert_eq!(k0.requests, 100);
-        assert_eq!(k0.errors, 0);
-        assert!((k0.p50() - 0.050).abs() < 2e-3, "{}", k0.p50());
-        assert!((k0.p99() - 0.100).abs() < 2e-3, "{}", k0.p99());
+        assert_eq!(k0.requests(), 100);
+        assert_eq!(k0.errors(), 0);
+        // Histogram percentiles carry bounded relative error.
+        assert!((k0.p50() - 0.050).abs() <= 0.050 * MAX_REL_ERROR, "{}", k0.p50());
+        assert!((k0.p99() - 0.100).abs() <= 0.100 * MAX_REL_ERROR, "{}", k0.p99());
         assert_eq!(k0.mean_batch(), 100.0);
+        assert!((k0.sweep_secs() - 0.040).abs() < 1e-9);
+        assert!(k0.busy_secs() > 0.0);
         let k1 = s.kernel(1).unwrap();
-        assert_eq!((k1.requests, k1.errors), (1, 1));
+        assert_eq!((k1.requests(), k1.errors()), (1, 1));
         assert_eq!(s.total_requests(), 101);
     }
 
     #[test]
-    fn latency_window_bounded() {
-        let mut s = ServeStats::new(&["k".into()]);
-        for _ in 0..(LATENCY_WINDOW + 500) {
-            s.record_request(0, 1e-3, true);
+    fn histogram_memory_is_bounded() {
+        // The old 4096-sample ring is gone: any number of samples
+        // lands in the same fixed bucket table.
+        let s = ServeStats::new(&["k".into()], true);
+        for _ in 0..10_000 {
+            s.record_request(0, &seg(1e-3), true);
         }
-        assert_eq!(s.kernel(0).unwrap().lat.len(), LATENCY_WINDOW);
+        let snap = s.snapshot(&super::super::cache::CacheStats {
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            len: 0,
+            capacity: 16,
+        });
+        let h = snap.hist("arbb_serve_e2e_ns").unwrap();
+        assert_eq!(h.count, 10_000);
+        assert_eq!(h.buckets.len(), crate::obs::hist::N_BUCKETS);
+    }
+
+    #[test]
+    fn segments_sum_exactly_in_registry() {
+        let s = ServeStats::new(&["k".into()], true);
+        for i in 0..50 {
+            s.record_request(0, &seg((i + 1) as f64 * 2e-4), i % 7 != 0);
+        }
+        let cache = super::super::cache::CacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 0,
+            len: 1,
+            capacity: 16,
+        };
+        let snap = s.snapshot(&cache);
+        let sum = |n: &str| snap.hist(n).unwrap().sum;
+        let parts = sum("arbb_serve_queue_wait_ns")
+            + sum("arbb_serve_batch_form_ns")
+            + sum("arbb_serve_cache_hit_ns")
+            + sum("arbb_serve_cache_miss_ns")
+            + sum("arbb_serve_replay_ns");
+        let e2e = sum("arbb_serve_e2e_ns");
+        // Each segment is rounded to ns independently: tolerance is
+        // one ns per segment per sample.
+        assert!(parts.abs_diff(e2e) <= 200u64, "{parts} vs {e2e}");
+        // Renders both ways.
+        let page = snap.to_prometheus();
+        assert!(page.contains("arbb_serve_e2e_ns_count 50"));
+        assert!(page.contains("arbb_plan_cache_hit_rate 0.75"));
+        let json = snap.to_json();
+        assert!(json.contains("\"name\":\"arbb_serve_queue_wait_ns\""));
+    }
+
+    #[test]
+    fn metrics_off_keeps_counters_only() {
+        let s = ServeStats::new(&["k".into()], false);
+        s.record_request(0, &seg(1e-3), true);
+        assert_eq!(s.kernel(0).unwrap().requests(), 1);
+        assert_eq!(s.total_requests(), 1);
+        // No histogram samples in disabled mode.
+        let snap = s.snapshot(&super::super::cache::CacheStats {
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            len: 0,
+            capacity: 16,
+        });
+        assert_eq!(snap.hist("arbb_serve_e2e_ns").unwrap().count, 0);
+        assert_eq!(s.kernel(0).unwrap().p50(), 0.0);
     }
 
     #[test]
     fn report_renders() {
-        let mut s = ServeStats::new(&["mxm".into()]);
-        s.record_request(0, 2e-3, true);
+        let s = ServeStats::new(&["mxm".into()], true);
+        s.record_request(0, &seg(2e-3), true);
         let r = s.report(&super::super::cache::CacheStats {
             hits: 3,
             misses: 1,
@@ -262,5 +566,7 @@ mod tests {
         });
         assert!(r.contains("mxm"));
         assert!(r.contains("75.0% hit rate"));
+        assert!(r.contains("busy%"));
+        assert!(r.contains("sweep s"));
     }
 }

@@ -1,0 +1,107 @@
+//! Property tests for the log-bucketed histogram.
+//!
+//! For several sample distributions — uniform, log-normal (the shape
+//! real service latencies take) and point masses — every percentile the
+//! serve layer reports must agree with an exact sort-based
+//! nearest-rank reference to within the histogram's documented bound
+//! [`MAX_REL_ERROR`]. The reference implements the same nearest-rank
+//! rule as [`HistSnapshot::percentile`]: rank `round((n - 1) * q)` of
+//! the sorted samples.
+
+use arbb_rs::obs::hist::{HistSnapshot, LogHistogram, MAX_REL_ERROR};
+use arbb_rs::util::XorShift64;
+
+/// Exact nearest-rank percentile over raw samples, matching the rank
+/// rule used by `HistSnapshot::percentile`.
+fn exact_percentile(sorted: &[u64], q: f64) -> u64 {
+    assert!(!sorted.is_empty());
+    let target = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[target]
+}
+
+/// Record every sample, then check a spread of quantiles against the
+/// sort-based reference. The histogram's answer is the representative
+/// value of the bucket holding the target rank, so it must be within
+/// `MAX_REL_ERROR` of the exact order statistic (plus 1 ns of absolute
+/// slack for the integer-boundary case).
+fn check_against_reference(samples: &[u64], what: &str) -> HistSnapshot {
+    let h = LogHistogram::new();
+    for &v in samples {
+        h.record(v);
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.count, samples.len() as u64, "{what}: count");
+    assert_eq!(snap.sum, samples.iter().sum::<u64>(), "{what}: exact sum");
+
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    assert_eq!(snap.min(), sorted[0], "{what}: min");
+    assert_eq!(snap.max(), *sorted.last().unwrap(), "{what}: max");
+
+    for &q in &[0.0, 0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999, 1.0] {
+        let exact = exact_percentile(&sorted, q) as f64;
+        let got = snap.percentile(q);
+        let tol = exact * MAX_REL_ERROR + 1.0;
+        assert!(
+            (got - exact).abs() <= tol,
+            "{what}: q={q}: histogram {got} vs exact {exact} (tol {tol})"
+        );
+    }
+    snap
+}
+
+#[test]
+fn uniform_samples_match_exact_reference() {
+    let mut rng = XorShift64::new(0x9e37);
+    // Spread over ~3 decades around realistic request latencies.
+    let samples: Vec<u64> =
+        (0..20_000).map(|_| rng.range_f64(1.0e3, 2.0e6).round() as u64).collect();
+    check_against_reference(&samples, "uniform[1µs, 2ms]");
+}
+
+#[test]
+fn log_normal_samples_match_exact_reference() {
+    // Box-Muller on top of the crate's XorShift64: heavy-tailed
+    // latencies spanning several octaves, the case log-bucketing is
+    // built for.
+    let mut rng = XorShift64::new(0xfeed);
+    let mut samples = Vec::with_capacity(20_000);
+    while samples.len() < 20_000 {
+        let u1 = rng.next_f64().max(1e-12);
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+        for z in [r * c, r * s] {
+            // median e^11 ≈ 60µs, sigma one natural octave.
+            samples.push((11.0 + z).exp().round().max(1.0) as u64);
+        }
+    }
+    check_against_reference(&samples, "log-normal");
+}
+
+#[test]
+fn point_mass_samples_are_within_one_bucket() {
+    // All mass on a single value: every percentile must come back as
+    // that value's own bucket representative.
+    for &v in &[0u64, 1, 7, 16, 1_000, 123_456_789] {
+        let samples = vec![v; 5_000];
+        let snap = check_against_reference(&samples, &format!("point mass {v}"));
+        let p50 = snap.p50();
+        assert!(
+            (p50 - v as f64).abs() <= v as f64 * MAX_REL_ERROR + 1.0,
+            "point mass {v}: p50 {p50}"
+        );
+    }
+}
+
+#[test]
+fn mixed_point_masses_split_correctly() {
+    // Two spikes an order of magnitude apart with a 90/10 split: p50
+    // sits on the low spike, p99 on the high one — the shape a cache
+    // hit/miss latency mix produces.
+    let mut samples = vec![10_000u64; 9_000];
+    samples.resize(10_000, 250_000u64);
+    let snap = check_against_reference(&samples, "90/10 mix");
+    assert!((snap.p50() - 10_000.0).abs() <= 10_000.0 * MAX_REL_ERROR + 1.0);
+    assert!((snap.p99() - 250_000.0).abs() <= 250_000.0 * MAX_REL_ERROR + 1.0);
+}

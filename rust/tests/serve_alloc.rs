@@ -8,6 +8,13 @@
 //! and a reduction kernel. Plans are captured through the public
 //! [`arbb_rs::serve::cache::capture`] path (exactly what a cache miss
 //! runs), on this thread, so the counters see the whole replay.
+//!
+//! The observability layer must not break the guarantee: several tests
+//! turn tape profiling on before their measured replays (process-wide,
+//! so every test in this binary then runs with it), and a dedicated
+//! test drives the metrics counters, the latency histogram and the
+//! trace ring directly — all recording paths may allocate only at
+//! registration/construction time, never per sample.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -17,6 +24,7 @@ use arbb_rs::coordinator::node::Data;
 use arbb_rs::coordinator::{Context, DType, OptLevel, Shape};
 use arbb_rs::euroben::mod2as::{arbb_spmv2, bind_csr};
 use arbb_rs::euroben::mod2f;
+use arbb_rs::obs::{profile, MetricsRegistry, SpanEvent, TraceRing};
 use arbb_rs::serve::{cache, exec, KernelFn, PlanKey, ProgramFn, Value};
 use arbb_rs::solvers::cg_capture;
 use arbb_rs::sparse::{banded_spd, random_csr};
@@ -77,6 +85,9 @@ fn key2(n: usize) -> PlanKey {
 
 #[test]
 fn steady_state_elementwise_replay_is_allocation_free() {
+    // Tape profiling active: per-instruction samples must gather in
+    // the stack-local accumulator and flush into preallocated atomics.
+    profile::set_enabled(true);
     // Deep fused chain spanning multiple evaluation blocks.
     let n = 5000;
     let ctx = Context::new();
@@ -119,6 +130,12 @@ fn steady_state_elementwise_replay_is_allocation_free() {
     // 1 capture-verification replay + 3 warm-ups + 10 measured.
     assert_eq!(st.replays, 14);
     assert_eq!(st.arenas_created, 1, "replays must recycle one arena");
+    // The measured replays ran with profiling on: the plan's own
+    // profile saw the tape instructions.
+    assert!(
+        !cp.profile_snapshot().nonzero().is_empty(),
+        "profiled replays must land samples in the plan profile"
+    );
 }
 
 #[test]
@@ -213,6 +230,9 @@ fn steady_state_whole_program_fft_replay_is_allocation_free() {
     // touching the heap — the per-stage cat(up, down) buffer of the
     // eager path is gone.
     let n = 2048usize;
+    // Whole-program replay must stay allocation-free with tape
+    // profiling active too.
+    profile::set_enabled(true);
     let builder: Box<ProgramFn> = Box::new(|sig| {
         let n = sig[0].1.len();
         Ok(mod2f::capture_fft(n).into_program())
@@ -245,6 +265,48 @@ fn steady_state_whole_program_fft_replay_is_allocation_free() {
     // 1 capture warm-up + 3 warm-ups + 10 measured.
     assert_eq!(st.replays, 14);
     assert_eq!(st.arenas_created, 1, "program replays must recycle one state");
+    assert!(
+        !cp.profile_snapshot().nonzero().is_empty(),
+        "profiled program replays must land samples in the plan profile"
+    );
+}
+
+#[test]
+fn metrics_and_trace_recording_are_allocation_free() {
+    // Drive every obs recording path directly: counters, a log-bucket
+    // histogram and the span ring. Registration and ring construction
+    // may allocate; the per-sample paths must not.
+    let reg = MetricsRegistry::new();
+    let reqs = reg.counter("t_requests_total", "", "test counter");
+    let lat = reg.histogram("t_latency_ns", "", "test histogram");
+    let ring = TraceRing::new(256, 2, vec!["k".to_string()]);
+
+    let before = allocs();
+    for i in 0..10_000u64 {
+        reqs.inc();
+        lat.record(i * 37 + 1);
+        ring.record(SpanEvent {
+            worker: (i % 2) as u32,
+            ok: true,
+            cache_hit: true,
+            t_enq: i,
+            t_deq: i + 10,
+            t_plan0: i + 12,
+            t_plan1: i + 20,
+            t_done: i + 100,
+            ..SpanEvent::default()
+        });
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "metrics counters, histogram samples and trace-ring spans must not allocate"
+    );
+    assert_eq!(reqs.get(), 10_000);
+    assert_eq!(lat.count(), 10_000);
+    // The ring stayed bounded: capacity held, the rest overwrote.
+    assert_eq!(ring.len(), 256);
+    assert_eq!(ring.dropped(), 10_000 - 256);
 }
 
 #[test]

@@ -199,7 +199,7 @@ fn multithreaded_submission_under_backpressure() {
         total_retries += h.join().unwrap();
     }
     let client = server.client();
-    let done = client.kernel_stats("affine", |k| (k.requests, k.errors)).unwrap();
+    let done = client.kernel_stats("affine", |k| (k.requests(), k.errors())).unwrap();
     assert_eq!(done.0, (THREADS * PER_THREAD) as u64, "all requests completed");
     assert_eq!(done.1, 0, "no errors");
     let _ = total_retries; // backpressure count is workload-dependent; just exercised
@@ -271,9 +271,9 @@ fn batched_parallel_execution_is_correct() {
     // with 6 threads racing a 16-deep batcher, at least some sweeps
     // should have coalesced >1 request; assert the plumbing recorded them
     let client = server.client();
-    let batches = client.kernel_stats("dot", |k| k.batches).unwrap();
+    let batches = client.kernel_stats("dot", |k| k.batches()).unwrap();
     assert!(batches >= 1);
-    assert_eq!(client.kernel_stats("dot", |k| k.requests).unwrap(), 120);
+    assert_eq!(client.kernel_stats("dot", |k| k.requests()).unwrap(), 120);
 }
 
 /// Shapes flow end-to-end: matrices and scalars as arguments.

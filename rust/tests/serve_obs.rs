@@ -1,0 +1,173 @@
+//! End-to-end observability through a live server: latency
+//! decomposition that sums to the end-to-end histogram, Prometheus and
+//! JSON rendering, pipeline trace spans with Chrome export, and
+//! per-opcode tape profiles for cached plans.
+
+use arbb_rs::obs::SampleValue;
+use arbb_rs::serve::{Arg, ObsConfig, ServeConfig, Server, Value};
+
+/// Serial single-worker server with the full observability stack on.
+fn obs_config() -> ServeConfig {
+    ServeConfig {
+        workers: 1,
+        obs: ObsConfig { metrics: true, trace_capacity: 1024, tape_profile: true },
+        ..ServeConfig::serial()
+    }
+}
+
+fn hist_sum(snap: &arbb_rs::obs::MetricsSnapshot, name: &str) -> u64 {
+    snap.hist(name).map(|h| h.sum).unwrap_or_else(|| panic!("missing histogram {name}"))
+}
+
+/// The four pipeline segments are measured from one shared chain of
+/// instants, so their histogram sums must reassemble the end-to-end
+/// sum up to per-request nanosecond rounding.
+#[test]
+fn segment_histograms_sum_to_end_to_end() {
+    let server = Server::builder(obs_config())
+        .kernel("triad", |_ctx, params| {
+            let a = params[0].vec1();
+            let b = params[1].vec1();
+            Value::Vec(&a.scale(3.0) + &b)
+        })
+        .start();
+    let client = server.client();
+    let n_req = 40u64;
+    for round in 0..n_req {
+        let a = vec![round as f64; 1024];
+        let b = vec![1.0; 1024];
+        let got = client.call("triad", vec![Arg::vec(a), Arg::vec(b)]).unwrap();
+        assert_eq!(got[0], 3.0 * round as f64 + 1.0);
+    }
+
+    let snap = client.metrics_snapshot();
+    let e2e = snap.hist("arbb_serve_e2e_ns").expect("e2e histogram registered");
+    assert_eq!(e2e.count, n_req);
+    let parts = hist_sum(&snap, "arbb_serve_queue_wait_ns")
+        + hist_sum(&snap, "arbb_serve_batch_form_ns")
+        + hist_sum(&snap, "arbb_serve_cache_hit_ns")
+        + hist_sum(&snap, "arbb_serve_cache_miss_ns")
+        + hist_sum(&snap, "arbb_serve_replay_ns");
+    // Each of the five recorded values rounds independently to whole
+    // nanoseconds: allow a few ns of slack per request.
+    assert!(
+        parts.abs_diff(e2e.sum) <= 8 * n_req,
+        "segments {parts} ns must reassemble e2e {e2e:?}"
+    );
+    // Exactly one cache miss (the capture), the rest hits.
+    let hits = snap.hist("arbb_serve_cache_hit_ns").unwrap().count;
+    let misses = snap.hist("arbb_serve_cache_miss_ns").unwrap().count;
+    assert_eq!((misses, hits), (1, n_req - 1));
+
+    match snap.get("arbb_serve_requests_total").expect("requests counter").value {
+        SampleValue::Counter(v) => assert_eq!(v, n_req),
+        ref v => panic!("wrong sample type {v:?}"),
+    }
+}
+
+#[test]
+fn prometheus_and_json_render_from_live_server() {
+    let server = Server::builder(obs_config())
+        .kernel("sq", |_ctx, params| {
+            let x = params[0].vec1();
+            Value::Vec(&x * &x)
+        })
+        .start();
+    let client = server.client();
+    for _ in 0..5 {
+        client.call("sq", vec![Arg::vec(vec![2.0; 64])]).unwrap();
+    }
+
+    let page = client.metrics_prometheus();
+    assert!(page.contains("# TYPE arbb_serve_requests_total counter"), "{page}");
+    assert!(page.contains("arbb_serve_requests_total 5"), "{page}");
+    assert!(page.contains("# TYPE arbb_serve_latency_ns summary"), "{page}");
+    assert!(page.contains("arbb_serve_latency_ns{kernel=\"sq\",quantile=\"0.99\"}"), "{page}");
+    assert!(page.contains("arbb_plan_cache_hit_rate"), "{page}");
+
+    let json = client.metrics_json();
+    assert!(json.starts_with("{\"metrics\":["), "{json}");
+    assert!(json.contains("\"name\":\"arbb_serve_e2e_ns\""), "{json}");
+    assert!(json.contains("\"type\":\"histogram\""), "{json}");
+    assert!(json.ends_with("]}"), "{json}");
+}
+
+/// Every completed request leaves one span in the ring; span
+/// timestamps are monotone, segments telescope to the end-to-end
+/// window, and the Chrome export renders.
+#[test]
+fn trace_ring_captures_request_spans() {
+    let server = Server::builder(obs_config())
+        .kernel("inc", |_ctx, params| Value::Vec(params[0].vec1().offset(1.0)))
+        .start();
+    let client = server.client();
+    for _ in 0..12 {
+        client.call("inc", vec![Arg::vec(vec![1.0; 256])]).unwrap();
+    }
+
+    let spans = client.trace_spans();
+    assert_eq!(spans.len(), 12, "one span per request");
+    let mut hits = 0;
+    for s in &spans {
+        assert!(s.ok);
+        assert!(s.t_enq <= s.t_deq, "{s:?}");
+        assert!(s.t_deq <= s.t_plan0, "{s:?}");
+        assert!(s.t_plan0 <= s.t_plan1, "{s:?}");
+        assert!(s.t_plan1 <= s.t_done, "{s:?}");
+        // The replay execution window is stamped directly on the ring
+        // clock (the pipeline stamps are re-based from `Instant`s, so
+        // they carry a small epoch shift); compare it only against the
+        // directly-stamped span end.
+        if s.t_exec1 > 0 {
+            assert!(s.t_exec0 <= s.t_exec1, "{s:?}");
+            assert!(s.t_exec1 <= s.t_done, "{s:?}");
+        }
+        hits += s.cache_hit as u32;
+    }
+    assert_eq!(hits, 11, "all but the capture are cache hits");
+
+    let j = client.trace_chrome_json().expect("ring configured");
+    assert!(j.starts_with("{\"traceEvents\":["), "{j}");
+    assert!(j.contains("\"name\":\"queue\""), "{j}");
+    assert!(j.contains("\"name\":\"replay\""), "{j}");
+    assert!(j.contains("\"name\":\"plan[miss]\""), "{j}");
+    assert!(j.contains("inc"), "{j}");
+    assert!(j.ends_with("]}"), "{j}");
+}
+
+/// With `tape_profile` on, replays attribute per-opcode-class samples
+/// both globally and to the specific cached plan.
+#[test]
+fn tape_profile_attributes_to_plans() {
+    let server = Server::builder(obs_config())
+        .kernel("fma", |_ctx, params| {
+            let x = params[0].vec1();
+            let y = params[1].vec1();
+            Value::Vec(&(&x * &y) + &x)
+        })
+        .start();
+    let client = server.client();
+    for _ in 0..8 {
+        let args = vec![Arg::vec(vec![2.0; 512]), Arg::vec(vec![3.0; 512])];
+        client.call("fma", args).unwrap();
+    }
+
+    let global = client.tape_profile();
+    assert!(!global.backend.is_empty());
+    assert!(!global.nonzero().is_empty(), "global profile must have samples");
+    assert!(global.total_ns() > 0);
+
+    let plans = client.plan_profiles();
+    assert_eq!(plans.len(), 1, "one cached plan");
+    let (label, prof) = &plans[0];
+    assert!(label.starts_with("fma"), "{label}");
+    let classes = prof.nonzero();
+    assert!(!classes.is_empty(), "plan profile must have samples");
+    // Every class saw at least one call and some elements.
+    for c in &classes {
+        assert!(c.calls > 0, "{c:?}");
+    }
+    // The profile snapshot renders as JSON for the bench artifacts.
+    let j = prof.to_json();
+    assert!(j.starts_with('[') && j.contains("\"op\""), "{j}");
+}
