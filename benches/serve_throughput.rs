@@ -21,7 +21,10 @@
 //! the obs stack off (twice — the A/B gap is the noise floor), with
 //! metrics only, and with metrics + tracing + tape profiling, plus the
 //! e2e latency decomposition and per-opcode plan profiles, written to
-//! `BENCH_serve_obs.json` — the CI perf-tracking mode.
+//! `BENCH_serve_obs.json` — the CI perf-tracking mode. The same flag
+//! then runs the resilience smoke (disarmed-failpoint cost, throughput
+//! and p99 under injected chunk-panic rates, quarantine recovery time),
+//! written to `BENCH_serve_resilience.json`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -273,9 +276,228 @@ fn obs_smoke() {
     println!("\n# serve_throughput smoke done");
 }
 
+/// Resilience smoke (runs with `--smoke`, after the obs pass): the cost
+/// of the fault-injection harness when disarmed, served throughput and
+/// tail latency under injected chunk-panic rates — every surviving
+/// request checked bit-identical against a fault-free reference — and
+/// quarantine-burst recovery time for a poisoned kernel. Emits
+/// `BENCH_serve_resilience.json`.
+fn resilience_smoke() {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use arbb_rs::obs::faults::{self, FaultSpec};
+    use arbb_rs::serve::{ResilienceConfig, ServeError};
+
+    const WARM: usize = 200;
+    const REQS: usize = 2000;
+    const ROUNDS: usize = 3;
+    const SWEEP_REQS: usize = 600;
+
+    println!("\n# serve_throughput (smoke) — resilience-layer cost tracking\n");
+    // Failpoints are process-global; start from a clean slate.
+    faults::clear();
+
+    let inputs: Vec<(Vec<f64>, Vec<f64>)> = (0..4u64).map(triad_inputs).collect();
+    let resilient = |workers: usize, max_batch: usize, spec: Option<FaultSpec>| ServeConfig {
+        workers,
+        max_batch,
+        queue_capacity: 64,
+        resilience: ResilienceConfig {
+            // A panic streak at a 5% rate must never flap into backoff
+            // noise mid-measurement.
+            quarantine_threshold: u32::MAX,
+            faults: spec,
+            ..ResilienceConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let triad_server = |cfg: ServeConfig| {
+        Server::builder(cfg)
+            .kernel("triad", |_ctx, p| Value::Vec(triad_expr(&p[0].vec1(), &p[1].vec1())))
+            .start()
+    };
+    let run = |server: &Server| -> f64 {
+        let client = server.client();
+        let call = |i: usize| {
+            let (x, y) = &inputs[i % inputs.len()];
+            let args = vec![Arg::vec(x.clone()), Arg::vec(y.clone())];
+            std::hint::black_box(client.call("triad", args).unwrap());
+        };
+        for i in 0..WARM {
+            call(i);
+        }
+        let t0 = Instant::now();
+        for i in 0..REQS {
+            call(i);
+        }
+        t0.elapsed().as_nanos() as f64 / REQS as f64
+    };
+
+    // ---- 1. disarmed-harness cost. Every failpoint is one relaxed
+    //      atomic load when no spec is installed; the A/B gap between
+    //      two identical disarmed passes is the noise floor the
+    //      "disabled failpoints are free" claim is judged against.
+    //      Arming the harness at probability 0 then measures the full
+    //      trigger path (site lookup + rng draw) without any fires. ----
+    let server = triad_server(resilient(1, 1, None));
+    let (mut ns_off, mut ns_off_check) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..ROUNDS {
+        ns_off = ns_off.min(run(&server));
+        ns_off_check = ns_off_check.min(run(&server));
+    }
+    let armed_zero = "pool.chunk.panic:0.0,serve.replay.panic:0.0,\
+                      serve.capture.fail:0.0,serve.queue.reject:0.0";
+    faults::install(&FaultSpec::parse(armed_zero, 1).unwrap());
+    let mut ns_armed = f64::INFINITY;
+    for _ in 0..ROUNDS {
+        ns_armed = ns_armed.min(run(&server));
+    }
+    faults::clear();
+    drop(server);
+    let base = ns_off.min(ns_off_check);
+    let disabled_pct = (ns_off - ns_off_check).abs() / base * 100.0;
+    let armed_pct = (ns_armed - base) / base * 100.0;
+
+    // ---- 2. throughput + tail latency under injected chunk-panic
+    //      rates. The client rides out injected failures by resubmitting
+    //      (per-request latency includes those retries), and every
+    //      surviving response is checked bit-identical against the
+    //      fault-free run's response for the same input. ----
+    let mut reference: Option<Vec<f64>> = None;
+    let mut rate_rows: Vec<String> = Vec::new();
+    println!("  chunk-panic rate sweep ({SWEEP_REQS} reqs, latency includes retries):");
+    for &rate in &[0.0f64, 0.01, 0.05] {
+        faults::clear();
+        let spec = (rate > 0.0)
+            .then(|| FaultSpec::parse(&format!("pool.chunk.panic:{rate}"), 42).unwrap());
+        let server = triad_server(resilient(2, 8, spec));
+        let client = server.client();
+        let mut retries = 0u64;
+        let mut call_ok = |i: usize| -> Vec<f64> {
+            let (x, y) = &inputs[i % inputs.len()];
+            loop {
+                let args = vec![Arg::vec(x.clone()), Arg::vec(y.clone())];
+                match client.call("triad", args) {
+                    Ok(v) => return v,
+                    Err(e) if e.is_injected() => retries += 1,
+                    Err(e) => panic!("rate {rate}: unexpected serve error {e}"),
+                }
+            }
+        };
+        for i in 0..50 {
+            call_ok(i);
+        }
+        let mut lat_ms = Vec::with_capacity(SWEEP_REQS);
+        let t0 = Instant::now();
+        for i in 0..SWEEP_REQS {
+            let t = Instant::now();
+            let got = call_ok(i);
+            lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            if i % inputs.len() == 0 {
+                match &reference {
+                    Some(want) => assert_eq!(
+                        &got, want,
+                        "rate {rate}: surviving request skewed vs fault-free reference"
+                    ),
+                    None => reference = Some(got),
+                }
+            }
+        }
+        let req_per_s = SWEEP_REQS as f64 / t0.elapsed().as_secs_f64();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99_ms = lat_ms[((lat_ms.len() as f64 * 0.99) as usize).min(lat_ms.len() - 1)];
+        println!(
+            "    rate {:>4.0}%  {req_per_s:>9.0} req/s   p99 {p99_ms:>7.3} ms   {retries} injected retries",
+            rate * 100.0
+        );
+        rate_rows.push(format!(
+            "{{\"rate\":{rate},\"req_per_s\":{req_per_s:.0},\"p99_ms\":{p99_ms:.4},\
+             \"injected_retries\":{retries}}}"
+        ));
+    }
+    faults::clear();
+
+    // ---- 3. quarantine-burst recovery: poison a kernel until its plan
+    //      quarantines, lift the poison, and time how long the breaker
+    //      takes to probe and re-admit it. ----
+    let poison = Arc::new(AtomicBool::new(true));
+    let poison2 = poison.clone();
+    let qcfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        queue_capacity: 64,
+        resilience: ResilienceConfig {
+            quarantine_threshold: 3,
+            quarantine_backoff: Duration::from_millis(50),
+            ..ResilienceConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let qserver = Server::builder(qcfg)
+        .kernel("flaky", move |_ctx, p| {
+            if poison2.load(Ordering::SeqCst) {
+                panic!("poisoned");
+            }
+            Value::Vec(p[0].vec1().scale(2.0))
+        })
+        .start();
+    let qclient = qserver.client();
+    let qargs = || vec![Arg::vec(vec![1.0, 2.0, 3.0])];
+    let mut failures = 0u64;
+    loop {
+        match qclient.call("flaky", qargs()) {
+            Err(ServeError::Quarantined { .. }) => break,
+            Err(_) => failures += 1,
+            Ok(_) => panic!("poisoned kernel cannot succeed"),
+        }
+        assert!(failures <= 10, "quarantine never tripped");
+    }
+    poison.store(false, Ordering::SeqCst);
+    let t0 = Instant::now();
+    let recovery_s = loop {
+        assert!(t0.elapsed() < Duration::from_secs(10), "probation never re-admitted the plan");
+        match qclient.call("flaky", qargs()) {
+            Ok(v) => {
+                assert_eq!(v, vec![2.0, 4.0, 6.0]);
+                break t0.elapsed().as_secs_f64();
+            }
+            Err(ServeError::Quarantined { .. }) => std::thread::sleep(Duration::from_millis(2)),
+            Err(e) => panic!("unexpected error during recovery: {e}"),
+        }
+    };
+
+    let bk = qclient.backend_name();
+    println!("\n  backend={bk} reqs={REQS} rounds={ROUNDS} (min)");
+    println!("  failpoints disarmed        {ns_off:>9.1} ns/req");
+    println!("  failpoints disarmed (check){ns_off_check:>9.1} ns/req  (A/B gap {disabled_pct:.2}%)");
+    println!("  armed at probability 0     {ns_armed:>9.1} ns/req  ({armed_pct:+.2}%)");
+    println!("  quarantine: tripped after {failures} failures, recovered in {recovery_s:.3}s");
+
+    let json = format!(
+        "{{\"bench\":\"serve_resilience\",\"backend\":\"{bk}\",\"reqs\":{REQS},\
+         \"triad_n\":{TRIAD_N},\
+         \"ns_per_req_disarmed\":{ns_off:.1},\"ns_per_req_disarmed_check\":{ns_off_check:.1},\
+         \"disabled_failpoint_overhead_pct\":{disabled_pct:.3},\
+         \"ns_per_req_armed_zero\":{ns_armed:.1},\"armed_overhead_pct\":{armed_pct:.3},\
+         \"rates\":[{}],\
+         \"quarantine\":{{\"failures_to_trip\":{failures},\"backoff_ms\":50.0,\
+         \"recovery_s\":{recovery_s:.4}}}}}\n",
+        rate_rows.join(","),
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_resilience.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n  wrote {path}"),
+        Err(e) => println!("\n  could not write {path}: {e}"),
+    }
+    println!("\n# serve_throughput resilience smoke done");
+}
+
 fn main() {
     if std::env::args().any(|a| a == "--smoke") {
         obs_smoke();
+        resilience_smoke();
         return;
     }
     let secs = parse_secs();

@@ -19,6 +19,7 @@
 //! | `_for` (captured, trip at capture)| [`super::program::ProgramBuilder::repeat`] / [`ProgramBuilder::for_each`](super::program::ProgramBuilder::for_each) |
 //! | JIT vectorization (SSE/AVX per ISA) | [`super::engine::backend`] dispatch: scalar reference / AVX2, detected at runtime, bit-identical by contract |
 //! | perf instrumentation (VTune timelines in the paper's figures) | [`crate::obs`]: metrics registry + request trace spans ([`crate::obs::TraceRing`]) + per-opcode tape profiles ([`crate::obs::profile`]) |
+//! | C++ exceptions out of `arbb::call` (§2: errors surface at the call site) | typed per-request errors: [`crate::Error`] from eager forces, [`crate::serve::ServeError`] from serving (deadline / panic / quarantine containment), faults injectable via [`crate::obs::faults`] |
 //!
 //! ArBB's `_for`/`_while` describe *serial* control flow whose body is
 //! captured. This reproduction offers both cost models. On the eager

@@ -38,6 +38,7 @@
 use std::sync::{Arc, Mutex, OnceLock, Weak};
 use std::time::Instant;
 
+use crate::coordinator::node::Data;
 use crate::coordinator::ops::{BinOp, RedOp, UnOp};
 use crate::coordinator::plan::FTree;
 use crate::coordinator::shape::View;
@@ -118,7 +119,13 @@ fn lower_inner(tree: &FTree) -> crate::Result<FExec> {
                     node.id
                 ))
             })?;
-            FExec::Leaf { data: data.as_f64().clone(), view: *view }
+            let Data::F64(buf) = data else {
+                return Err(crate::Error::Invalid(format!(
+                    "malformed plan: f64 leaf {} holds an i64 container",
+                    node.id
+                )));
+            };
+            FExec::Leaf { data: buf, view: *view }
         }
         FTree::ScalarLeaf { node } => {
             let data = node.data().ok_or_else(|| {
@@ -127,7 +134,19 @@ fn lower_inner(tree: &FTree) -> crate::Result<FExec> {
                     node.id
                 ))
             })?;
-            FExec::Const(data.as_f64()[0])
+            let Data::F64(buf) = data else {
+                return Err(crate::Error::Invalid(format!(
+                    "malformed plan: scalar leaf {} holds an i64 container",
+                    node.id
+                )));
+            };
+            let c = *buf.first().ok_or_else(|| {
+                crate::Error::Invalid(format!(
+                    "malformed plan: scalar leaf {} is empty",
+                    node.id
+                ))
+            })?;
+            FExec::Const(c)
         }
         FTree::Gather { src, idx, base } => {
             let data = src.data().ok_or_else(|| {
@@ -142,7 +161,16 @@ fn lower_inner(tree: &FTree) -> crate::Result<FExec> {
                     idx.id
                 ))
             })?;
-            FExec::Gather { data: data.as_f64().clone(), idx: ix.as_i64().clone(), base: *base }
+            let (Data::F64(buf), Data::I64(ixbuf)) =
+                (data, ix)
+            else {
+                return Err(crate::Error::Invalid(format!(
+                    "malformed plan: gather {}[{}] has mismatched container types \
+                     (source must be f64, index must be i64)",
+                    src.id, idx.id
+                )));
+            };
+            FExec::Gather { data: buf, idx: ixbuf, base: *base }
         }
         FTree::Const(c) => FExec::Const(*c),
         FTree::Iota => FExec::Iota,
@@ -249,25 +277,30 @@ fn eval_block(fx: &FExec, start: usize, out: &mut [f64], scratch: &mut Scratch) 
         FExec::Bin(op, l, r) => {
             // Left into `out`, right into scratch, combine in place.
             eval_block(l, start, out, scratch);
-            match &**r {
-                FExec::Const(c) => op.apply_slice_scalar_inplace(out, *c),
+            let fused = match &**r {
+                FExec::Const(c) => {
+                    op.apply_slice_scalar_inplace(out, *c);
+                    true
+                }
                 // Rank-1-update pattern (the arbb_mxm2a/2b hot loop):
                 // out ±= colbcast(a) * rowleaf(b) — one fused pass, no
                 // temporaries (EXPERIMENTS.md §Perf iteration 3).
-                FExec::Bin(BinOp::Mul, p, q)
-                    if matches!(op, BinOp::Add | BinOp::Sub)
-                        && axpy_operands(p, q).is_some() =>
-                {
-                    let (da, va, db, vb) = axpy_operands(p, q).unwrap();
-                    backend::axpy_pattern(backend::scalar(), *op, da, va, db, vb, start, out);
+                FExec::Bin(BinOp::Mul, p, q) if matches!(op, BinOp::Add | BinOp::Sub) => {
+                    if let Some((da, va, db, vb)) = axpy_operands(p, q) {
+                        backend::axpy_pattern(backend::scalar(), *op, da, va, db, vb, start, out);
+                        true
+                    } else {
+                        false
+                    }
                 }
-                _ => {
-                    let mut tmp = scratch.take();
-                    let t = &mut tmp[..out.len()];
-                    eval_block(r, start, t, scratch);
-                    op.apply_slices_inplace(out, t);
-                    scratch.put(tmp);
-                }
+                _ => false,
+            };
+            if !fused {
+                let mut tmp = scratch.take();
+                let t = &mut tmp[..out.len()];
+                eval_block(r, start, t, scratch);
+                op.apply_slices_inplace(out, t);
+                scratch.put(tmp);
             }
         }
     }

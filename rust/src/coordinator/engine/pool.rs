@@ -13,11 +13,35 @@
 //! completed — the borrow outlives all uses. This is the classic scoped-
 //! thread-pool pattern.
 
+use std::any::Any;
 use std::collections::HashMap;
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
+
+use crate::obs::faults;
+
+/// A panic payload captured from a chunk body: `(chunk index, payload)`.
+type ChunkPanic = (usize, Box<dyn Any + Send>);
+
+/// Best-effort human-readable text from a panic payload.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Poison-tolerant lock: pool state is always consistent at release
+/// (panics in chunk bodies are caught before they can unwind through a
+/// held guard), so a poisoned mutex carries no torn invariants.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// A chunk-level task: `f(chunk_index)`.
 type JobFn = dyn Fn(usize) + Sync;
@@ -47,6 +71,18 @@ struct Shared {
     /// body cannot kill a (process-shared) worker thread or wedge the
     /// barrier.
     job_panicked: AtomicBool,
+    /// Panic payloads captured from the current job's chunk bodies,
+    /// `(chunk index, payload)`. Drained by the submitter after the
+    /// barrier — either re-raised ([`ThreadPool::run_chunks`]) or
+    /// returned as data ([`ThreadPool::run_chunks_collect`]).
+    panics: Mutex<Vec<ChunkPanic>>,
+    /// Worker threads lost to a panic outside a chunk body and replaced
+    /// by their [`Sentinel`] — the pool self-heals instead of shrinking.
+    respawned: AtomicU64,
+    /// Join handles for live workers. Lives in `Shared` (not the pool
+    /// struct) so a sentinel respawning a dead worker can register the
+    /// replacement for joining at drop.
+    handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Shared {
@@ -71,6 +107,20 @@ impl Shared {
             }
         }
     }
+
+    /// Run chunk `i` of the current job with panic containment: a
+    /// panicking body (or a tripped `pool.chunk.panic` failpoint) marks
+    /// the job failed and parks its payload for the submitter.
+    fn run_contained(&self, f: &JobFn, i: usize) {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            faults::fire_panic("pool.chunk.panic");
+            f(i);
+        }));
+        if let Err(payload) = r {
+            self.job_panicked.store(true, Ordering::SeqCst);
+            relock(&self.panics).push((i, payload));
+        }
+    }
 }
 
 struct State {
@@ -85,9 +135,45 @@ struct State {
 /// Fork-join thread pool with a fixed worker count.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
     /// Total workers *including* the calling thread.
     pub size: usize,
+}
+
+/// Spawn one worker thread and register its handle in `sh.handles`.
+/// The worker carries a [`Sentinel`] so a panic that escapes the chunk
+/// containment (e.g. the `pool.worker.die` failpoint) respawns it.
+fn spawn_worker(sh: &Arc<Shared>, id: usize) {
+    let sh2 = sh.clone();
+    let h = std::thread::Builder::new()
+        .name(format!("arbb-worker-{id}"))
+        .spawn(move || {
+            let _guard = Sentinel { sh: sh2.clone(), id };
+            worker_loop(sh2);
+        })
+        .expect("spawn worker");
+    relock(&sh.handles).push(h);
+}
+
+/// Respawns a worker whose thread died panicking. Chunk-body panics
+/// never get here (they are contained in [`Shared::run_contained`]);
+/// this covers panics in the dispatch loop itself, which would
+/// otherwise permanently shrink a process-shared pool.
+struct Sentinel {
+    sh: Arc<Shared>,
+    id: usize,
+}
+
+impl Drop for Sentinel {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return; // orderly shutdown
+        }
+        if relock(&self.sh.state).shutdown {
+            return;
+        }
+        self.sh.respawned.fetch_add(1, Ordering::SeqCst);
+        spawn_worker(&self.sh, self.id);
+    }
 }
 
 impl ThreadPool {
@@ -101,17 +187,19 @@ impl ThreadPool {
             claim: AtomicU64::new(u64::MAX), // tag no job ever uses
             done_chunks: AtomicUsize::new(0),
             job_panicked: AtomicBool::new(false),
+            panics: Mutex::new(Vec::new()),
+            respawned: AtomicU64::new(0),
+            handles: Mutex::new(Vec::new()),
         });
-        let workers = (1..size)
-            .map(|w| {
-                let sh = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("arbb-worker-{w}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool { shared, workers, size }
+        for w in 1..size {
+            spawn_worker(&shared, w);
+        }
+        ThreadPool { shared, size }
+    }
+
+    /// Workers lost to a non-chunk panic and replaced since creation.
+    pub fn workers_respawned(&self) -> u64 {
+        self.shared.respawned.load(Ordering::SeqCst)
     }
 
     /// Execute `f(0..n_chunks)` across the pool; blocks until complete.
@@ -119,8 +207,9 @@ impl ThreadPool {
     ///
     /// A panic in a chunk body is contained (the worker survives, the
     /// barrier completes) and re-raised on the calling thread after the
-    /// job — with a process-shared pool, a bad gather index or user
-    /// elemental must not kill a worker every engine depends on.
+    /// job *with its original payload* — with a process-shared pool, a
+    /// bad gather index or user elemental must not kill a worker every
+    /// engine depends on, but the caller still sees the real message.
     pub fn run_chunks<'a>(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync + 'a)) {
         if n_chunks == 0 {
             return;
@@ -128,10 +217,55 @@ impl ThreadPool {
         if self.size == 1 || n_chunks == 1 {
             // Inline: no shared state at risk, panics propagate as-is.
             for i in 0..n_chunks {
+                faults::fire_panic("pool.chunk.panic");
                 f(i);
             }
             return;
         }
+        let mut panics = self.sweep(n_chunks, f);
+        if let Some((_, payload)) = panics.drain(..).next() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// [`Self::run_chunks`], but panics are returned as data instead of
+    /// re-raised: `(chunk index, message)` per failed chunk, sorted by
+    /// chunk. The serving dispatcher uses this so one poisoned request
+    /// in a batch sweep fails *that request* without unwinding through
+    /// the dispatcher thread.
+    pub fn run_chunks_collect<'a>(
+        &self,
+        n_chunks: usize,
+        f: &(dyn Fn(usize) + Sync + 'a),
+    ) -> Vec<(usize, String)> {
+        if n_chunks == 0 {
+            return Vec::new();
+        }
+        if self.size == 1 || n_chunks == 1 {
+            let mut failed = Vec::new();
+            for i in 0..n_chunks {
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    faults::fire_panic("pool.chunk.panic");
+                    f(i);
+                }));
+                if let Err(p) = r {
+                    failed.push((i, panic_message(&*p)));
+                }
+            }
+            return failed;
+        }
+        let mut failed: Vec<(usize, String)> = self
+            .sweep(n_chunks, f)
+            .into_iter()
+            .map(|(i, p)| (i, panic_message(&*p)))
+            .collect();
+        failed.sort_unstable_by_key(|&(i, _)| i);
+        failed
+    }
+
+    /// Publish one fork-join job, participate, wait for the barrier,
+    /// and drain any captured chunk panics.
+    fn sweep<'a>(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync + 'a)) -> Vec<ChunkPanic> {
         // SAFETY: see module docs — we block until all chunks are done,
         // and chunk claims are epoch-tagged so no worker can call this
         // closure after the job's barrier has completed.
@@ -140,33 +274,31 @@ impl ThreadPool {
         };
         let tag;
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = relock(&self.shared.state);
             debug_assert!(st.job.is_none(), "run_chunks is not reentrant");
             st.epoch += 1;
             tag = st.epoch & 0xFFFF_FFFF;
             self.shared.done_chunks.store(0, Ordering::SeqCst);
             self.shared.job_panicked.store(false, Ordering::SeqCst);
+            relock(&self.shared.panics).clear();
             self.shared.claim.store(tag << 32, Ordering::SeqCst);
             st.job = Some(Job { f: erased, n_chunks });
             self.shared.work_cv.notify_all();
         }
         // The caller participates.
         while let Some(i) = self.shared.claim_chunk(tag, n_chunks) {
-            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
-                self.shared.job_panicked.store(true, Ordering::SeqCst);
-            }
+            self.shared.run_contained(f, i);
             self.shared.done_chunks.fetch_add(1, Ordering::SeqCst);
         }
         // Wait for stragglers.
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = relock(&self.shared.state);
         while self.shared.done_chunks.load(Ordering::SeqCst) < n_chunks {
-            st = self.shared.done_cv.wait(st).unwrap();
+            st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         st.job = None;
         drop(st);
-        if self.shared.job_panicked.swap(false, Ordering::SeqCst) {
-            panic!("arbb: a worker-pool chunk body panicked (original message on stderr)");
-        }
+        self.shared.job_panicked.store(false, Ordering::SeqCst);
+        std::mem::take(&mut *relock(&self.shared.panics))
     }
 }
 
@@ -175,7 +307,7 @@ fn worker_loop(sh: Arc<Shared>) {
     loop {
         // Wait for a new job (or shutdown).
         let (f, n_chunks, tag) = {
-            let mut st = sh.state.lock().unwrap();
+            let mut st = relock(&sh.state);
             loop {
                 if st.shutdown {
                     return;
@@ -186,9 +318,13 @@ fn worker_loop(sh: Arc<Shared>) {
                         break (job.f, job.n_chunks, st.epoch & 0xFFFF_FFFF);
                     }
                 }
-                st = sh.work_cv.wait(st).unwrap();
+                st = sh.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
+        // Failpoint: kill this worker *before* it claims any chunk (so
+        // the job still completes via its peers) — exercises the
+        // sentinel respawn path without wedging the barrier.
+        faults::fire_panic("pool.worker.die");
         // Pull chunks (epoch-tagged: a stale claim attempt after this
         // job's barrier completed sees a different tag and backs off).
         while let Some(i) = sh.claim_chunk(tag, n_chunks) {
@@ -196,12 +332,10 @@ fn worker_loop(sh: Arc<Shared>) {
             // claimed chunk completed; claims stop at the tag change.
             // A panicking body is contained so this shared worker
             // survives and the barrier still completes.
-            if catch_unwind(AssertUnwindSafe(|| unsafe { (*f)(i) })).is_err() {
-                sh.job_panicked.store(true, Ordering::SeqCst);
-            }
+            sh.run_contained(unsafe { &*f }, i);
             let done = sh.done_chunks.fetch_add(1, Ordering::SeqCst) + 1;
             if done >= n_chunks {
-                let _g = sh.state.lock().unwrap();
+                let _g = relock(&sh.state);
                 sh.done_cv.notify_all();
             }
         }
@@ -260,6 +394,27 @@ impl SharedPool {
         self.inner.run_chunks(n_chunks, f);
     }
 
+    /// [`ThreadPool::run_chunks_collect`] behind the submission lock:
+    /// one serialised sweep, chunk panics returned as data.
+    pub fn run_chunks_collect<'a>(
+        &self,
+        n_chunks: usize,
+        f: &(dyn Fn(usize) + Sync + 'a),
+    ) -> Vec<(usize, String)> {
+        if n_chunks == 0 {
+            return Vec::new();
+        }
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.chunks.fetch_add(n_chunks as u64, Ordering::Relaxed);
+        let _guard = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        self.inner.run_chunks_collect(n_chunks, f)
+    }
+
+    /// Workers lost to a non-chunk panic and replaced since creation.
+    pub fn workers_respawned(&self) -> u64 {
+        self.inner.workers_respawned()
+    }
+
     /// Fork-join sweeps dispatched since creation.
     pub fn jobs_dispatched(&self) -> u64 {
         self.jobs.load(Ordering::Relaxed)
@@ -287,12 +442,15 @@ pub fn shared(size: usize) -> Arc<SharedPool> {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = relock(&self.shared.state);
             st.shutdown = true;
             self.shared.work_cv.notify_all();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        // Drain until empty: a sentinel may push a replacement handle
+        // while we are joining (its respawn raced the shutdown flag).
+        loop {
+            let Some(h) = relock(&self.shared.handles).pop() else { break };
+            let _ = h.join();
         }
     }
 }
@@ -385,21 +543,50 @@ mod tests {
     fn panicking_chunk_body_does_not_wedge_the_pool() {
         let pool = SharedPool::new(3);
         // The panic is contained on the worker, re-raised on the
-        // submitting thread after the barrier…
+        // submitting thread after the barrier — with the original
+        // payload, not a generic wrapper…
         let res = catch_unwind(AssertUnwindSafe(|| {
             pool.run_chunks(8, &|i| {
                 if i == 3 {
-                    panic!("boom");
+                    panic!("boom in chunk {i}");
                 }
             });
         }));
-        assert!(res.is_err(), "panic must be re-raised to the submitter");
+        let payload = res.expect_err("panic must be re-raised to the submitter");
+        assert_eq!(panic_message(&*payload), "boom in chunk 3");
         // …and the pool (workers, barrier, submit lock) stays usable.
         let c = AtomicU64::new(0);
         pool.run_chunks(8, &|_| {
             c.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(c.load(Ordering::SeqCst), 8);
+        assert_eq!(pool.workers_respawned(), 0, "a chunk panic must not cost a worker");
+    }
+
+    #[test]
+    fn collect_variant_returns_panics_as_data() {
+        let pool = SharedPool::new(3);
+        let failed = pool.run_chunks_collect(8, &|i| {
+            if i == 2 || i == 5 {
+                panic!("bad chunk {i}");
+            }
+        });
+        assert_eq!(failed.len(), 2);
+        assert_eq!(failed[0], (2, "bad chunk 2".to_string()));
+        assert_eq!(failed[1], (5, "bad chunk 5".to_string()));
+        // A clean sweep right after returns no failures.
+        assert!(pool.run_chunks_collect(8, &|_| {}).is_empty());
+    }
+
+    #[test]
+    fn collect_variant_inline_path() {
+        let pool = ThreadPool::new(1);
+        let failed = pool.run_chunks_collect(3, &|i| {
+            if i == 1 {
+                panic!("inline boom");
+            }
+        });
+        assert_eq!(failed, vec![(1, "inline boom".to_string())]);
     }
 
     #[test]

@@ -35,6 +35,18 @@ impl Shape {
         }
     }
 
+    /// Total number of elements, or `None` when `rows * cols`
+    /// overflows. Validation paths that accept untrusted shapes (the
+    /// serve submission path) use this so a hostile shape produces a
+    /// rejection instead of an overflow panic.
+    pub fn checked_len(&self) -> Option<usize> {
+        match *self {
+            Shape::Scalar => Some(1),
+            Shape::D1(n) => Some(n),
+            Shape::D2 { rows, cols } => rows.checked_mul(cols),
+        }
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -128,6 +140,14 @@ mod tests {
         assert_eq!(Shape::D2 { rows: 3, cols: 4 }.len(), 12);
         assert_eq!(Shape::D2 { rows: 3, cols: 4 }.rows(), 3);
         assert_eq!(Shape::D2 { rows: 3, cols: 4 }.cols(), 4);
+    }
+
+    #[test]
+    fn checked_len_rejects_overflow() {
+        assert_eq!(Shape::Scalar.checked_len(), Some(1));
+        assert_eq!(Shape::D1(7).checked_len(), Some(7));
+        assert_eq!(Shape::D2 { rows: 3, cols: 4 }.checked_len(), Some(12));
+        assert_eq!(Shape::D2 { rows: usize::MAX, cols: 2 }.checked_len(), None);
     }
 
     #[test]

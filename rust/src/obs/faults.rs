@@ -1,0 +1,328 @@
+//! `faults` — a deterministic fault-injection harness.
+//!
+//! Failpoints are compiled in permanently and named by *site*
+//! (`"pool.chunk.panic"`, `"serve.capture.fail"`, …). Code under test
+//! asks [`fire`] whether the site should trip this time; when no spec
+//! is installed the call is a single relaxed atomic load and a branch,
+//! cheap enough to leave on every hot path (the serve bench measures
+//! the disabled overhead in `BENCH_serve_resilience.json`).
+//!
+//! Triggers are deterministic: a *probability* trigger draws from a
+//! per-site [`XorShift64`] stream seeded from the global seed and the
+//! site name, and an *nth-hit* trigger fires exactly once on the n-th
+//! evaluation. Re-installing the same spec with the same seed replays
+//! the identical fire pattern, which is what makes the chaos CI leg
+//! reproducible.
+//!
+//! Specs are comma-separated `site:trigger` pairs:
+//!
+//! ```text
+//! pool.chunk.panic:0.05,serve.capture.fail:nth=3
+//! ```
+//!
+//! where `trigger` is a probability in `[0, 1]` or `nth=K` (1-based).
+//! The spec comes either from [`ServeConfig`](crate::serve::ServeConfig)
+//! or from the `PALLAS_FAULTS` environment variable (seeded by
+//! `PALLAS_FAULTS_SEED`), read once at first server start.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::XorShift64;
+use crate::{Error, Result};
+
+/// Fast-path switch: `false` means no spec is installed and [`fire`]
+/// returns after one relaxed load.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Installed sites. A `Mutex<Vec<..>>` (not a lock-free map) is fine:
+/// the slow path only runs while a spec is installed, i.e. under chaos
+/// testing, and specs hold a handful of sites.
+static SITES: OnceLock<Mutex<Vec<SiteState>>> = OnceLock::new();
+
+fn sites() -> &'static Mutex<Vec<SiteState>> {
+    SITES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// How a configured site decides to trip.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Fire with this probability per evaluation (deterministic stream).
+    Prob(f64),
+    /// Fire exactly once, on the k-th evaluation (1-based).
+    Nth(u64),
+}
+
+struct SiteState {
+    name: String,
+    trigger: Trigger,
+    rng: XorShift64,
+    hits: u64,
+    fired: u64,
+}
+
+/// One parsed `site:trigger` pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPoint {
+    pub site: String,
+    pub trigger: Trigger,
+}
+
+/// A full parsed fault spec plus the seed for its probability streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub points: Vec<FaultPoint>,
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Parse `"site:prob,site:nth=K"` with an explicit seed.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultSpec> {
+        let mut points = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (site, trig) = part.split_once(':').ok_or_else(|| {
+                Error::Invalid(format!("fault spec '{part}': expected site:trigger"))
+            })?;
+            let trigger = if let Some(nth) = trig.strip_prefix("nth=") {
+                let k: u64 = nth.parse().map_err(|_| {
+                    Error::Invalid(format!("fault spec '{part}': bad nth count '{nth}'"))
+                })?;
+                if k == 0 {
+                    return Err(Error::Invalid(format!("fault spec '{part}': nth is 1-based")));
+                }
+                Trigger::Nth(k)
+            } else {
+                let p: f64 = trig.parse().map_err(|_| {
+                    Error::Invalid(format!("fault spec '{part}': bad probability '{trig}'"))
+                })?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(Error::Invalid(format!(
+                        "fault spec '{part}': probability {p} outside [0, 1]"
+                    )));
+                }
+                Trigger::Prob(p)
+            };
+            points.push(FaultPoint { site: site.trim().to_string(), trigger });
+        }
+        Ok(FaultSpec { points, seed })
+    }
+}
+
+/// FNV-1a, used to derive a per-site seed from the global one so two
+/// sites with the same trigger do not fire in lockstep.
+fn site_hash(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Install a spec, replacing whatever was active. Counters reset.
+pub fn install(spec: &FaultSpec) {
+    let mut table: Vec<SiteState> = spec
+        .points
+        .iter()
+        .map(|p| SiteState {
+            name: p.site.clone(),
+            trigger: p.trigger,
+            rng: XorShift64::new(spec.seed ^ site_hash(&p.site)),
+            hits: 0,
+            fired: 0,
+        })
+        .collect();
+    let mut guard = sites().lock().unwrap_or_else(|e| e.into_inner());
+    std::mem::swap(&mut *guard, &mut table);
+    ACTIVE.store(!guard.is_empty(), Ordering::Release);
+}
+
+/// Parse-and-install convenience used by `ServeConfig` and the env hook.
+pub fn install_str(spec: &str, seed: u64) -> Result<()> {
+    let parsed = FaultSpec::parse(spec, seed)?;
+    install(&parsed);
+    Ok(())
+}
+
+/// Remove every failpoint; [`fire`] returns to its one-load fast path.
+pub fn clear() {
+    let mut guard = sites().lock().unwrap_or_else(|e| e.into_inner());
+    guard.clear();
+    ACTIVE.store(false, Ordering::Release);
+}
+
+/// Whether any spec is currently installed (used by chaos-aware tests).
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Should the failpoint `site` trip this time?
+///
+/// Disabled cost is one relaxed load. With a spec installed, the site
+/// table is scanned under a mutex and the site's deterministic trigger
+/// advances by one step (hit counters advance even when not firing, so
+/// `nth=K` means "the K-th evaluation").
+#[inline]
+pub fn fire(site: &str) -> bool {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: &str) -> bool {
+    let mut guard = sites().lock().unwrap_or_else(|e| e.into_inner());
+    for s in guard.iter_mut() {
+        if s.name == site {
+            s.hits += 1;
+            let trip = match s.trigger {
+                Trigger::Prob(p) => s.rng.next_f64() < p,
+                Trigger::Nth(k) => s.hits == k,
+            };
+            if trip {
+                s.fired += 1;
+            }
+            return trip;
+        }
+    }
+    false
+}
+
+/// [`fire`], but panic with a recognizable message when tripped. The
+/// `"injected fault"` prefix is load-bearing: containment code and
+/// chaos-aware tests use it to tell injected failures from real bugs.
+#[inline]
+pub fn fire_panic(site: &str) {
+    if fire(site) {
+        panic!("injected fault: {site}");
+    }
+}
+
+/// Does an error/panic message originate from [`fire_panic`] or an
+/// injected error path?
+pub fn is_injected(msg: &str) -> bool {
+    msg.contains("injected fault")
+}
+
+/// Per-site counters since the last [`install`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SiteCount {
+    pub site: String,
+    /// Trigger evaluations.
+    pub hits: u64,
+    /// Evaluations that tripped.
+    pub fired: u64,
+}
+
+/// Snapshot of every installed site's counters.
+pub fn counts() -> Vec<SiteCount> {
+    let guard = sites().lock().unwrap_or_else(|e| e.into_inner());
+    guard
+        .iter()
+        .map(|s| SiteCount { site: s.name.clone(), hits: s.hits, fired: s.fired })
+        .collect()
+}
+
+/// Read `PALLAS_FAULTS` / `PALLAS_FAULTS_SEED` and install the spec,
+/// once per process. Called from server start so plain library use
+/// never touches the environment. Returns the parse error, if any, on
+/// the *first* call only.
+pub fn init_from_env() -> Result<()> {
+    static INIT: OnceLock<Result<()>> = OnceLock::new();
+    let r = INIT.get_or_init(|| {
+        let Ok(spec) = std::env::var("PALLAS_FAULTS") else {
+            return Ok(());
+        };
+        if spec.trim().is_empty() {
+            return Ok(());
+        }
+        let seed = std::env::var("PALLAS_FAULTS_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(0x5EED);
+        install_str(&spec, seed)
+    });
+    match r {
+        Ok(()) => Ok(()),
+        Err(e) => Err(Error::Invalid(format!("PALLAS_FAULTS: {e}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests mutate process-global state; serialise them.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_fire_is_false() {
+        let _g = lock();
+        clear();
+        assert!(!enabled());
+        assert!(!fire("pool.chunk.panic"));
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let _g = lock();
+        install(&FaultSpec::parse("x.y:nth=3", 7).unwrap());
+        let pattern: Vec<bool> = (0..6).map(|_| fire("x.y")).collect();
+        assert_eq!(pattern, vec![false, false, true, false, false, false]);
+        let c = counts();
+        assert_eq!(c.len(), 1);
+        assert_eq!((c[0].hits, c[0].fired), (6, 1));
+        clear();
+    }
+
+    #[test]
+    fn probability_stream_is_deterministic() {
+        let _g = lock();
+        install(&FaultSpec::parse("a.b:0.5", 42).unwrap());
+        let first: Vec<bool> = (0..64).map(|_| fire("a.b")).collect();
+        install(&FaultSpec::parse("a.b:0.5", 42).unwrap());
+        let second: Vec<bool> = (0..64).map(|_| fire("a.b")).collect();
+        assert_eq!(first, second, "same seed must replay the same pattern");
+        assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b));
+        install(&FaultSpec::parse("a.b:0.5", 43).unwrap());
+        let third: Vec<bool> = (0..64).map(|_| fire("a.b")).collect();
+        assert_ne!(first, third, "a different seed should differ");
+        clear();
+    }
+
+    #[test]
+    fn unknown_site_never_fires() {
+        let _g = lock();
+        install(&FaultSpec::parse("a.b:1", 1).unwrap());
+        assert!(!fire("c.d"));
+        assert!(fire("a.b"));
+        clear();
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultSpec::parse("noseparator", 0).is_err());
+        assert!(FaultSpec::parse("a:1.5", 0).is_err());
+        assert!(FaultSpec::parse("a:nth=0", 0).is_err());
+        assert!(FaultSpec::parse("a:nth=x", 0).is_err());
+        let ok = FaultSpec::parse("a:0.05, b:nth=3", 9).unwrap();
+        assert_eq!(ok.points.len(), 2);
+        assert_eq!(ok.points[0].trigger, Trigger::Prob(0.05));
+        assert_eq!(ok.points[1].trigger, Trigger::Nth(3));
+    }
+
+    #[test]
+    fn injected_marker_roundtrip() {
+        let _g = lock();
+        install(&FaultSpec::parse("t.p:1", 1).unwrap());
+        let err = std::panic::catch_unwind(|| fire_panic("t.p")).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(is_injected(&msg), "panic message should carry the marker: {msg}");
+        clear();
+    }
+}

@@ -21,13 +21,19 @@
 //!    counts, elements and nanoseconds from inside the tape VM, keyed
 //!    by backend and surfaced per compiled plan — the raw material for
 //!    cost-based plan exploration.
+//! 4. **Fault injection** ([`faults`]): deterministic, compiled-in
+//!    failpoints (seeded probability / nth-hit triggers) that the
+//!    resilience layer and the chaos CI leg drive; a disabled
+//!    failpoint costs one relaxed load.
 
+pub mod faults;
 pub mod hist;
 pub mod profile;
 pub mod registry;
 pub mod trace;
 
+pub use faults::{FaultPoint, FaultSpec, SiteCount, Trigger};
 pub use hist::{HistSnapshot, LogHistogram, MAX_REL_ERROR};
 pub use profile::{LocalBlock, OpClass, PlanProfile, ProfileSnapshot, ProfileTable};
 pub use registry::{Counter, Gauge, MetricsRegistry, MetricsSnapshot, Sample, SampleValue};
-pub use trace::{SpanEvent, TraceRing};
+pub use trace::{Outcome, SpanEvent, TraceRing};

@@ -32,6 +32,40 @@ use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// How a traced request ended: `ok` collapses this to a boolean, the
+/// outcome keeps the resilience mechanisms apart so a trace shows
+/// *which* containment fired (deadline shed vs panic vs quarantine).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Outcome {
+    /// Answered with a result.
+    #[default]
+    Ok,
+    /// Answered with a regular engine/validation error.
+    Error,
+    /// Capture or replay panicked; the panic was contained.
+    Panicked,
+    /// Shed before execution because its deadline had passed.
+    DeadlineShed,
+    /// Executed, but finished past its deadline; result discarded.
+    DeadlineMiss,
+    /// Rejected because its plan is quarantined.
+    Quarantined,
+}
+
+impl Outcome {
+    /// Lowercase label used in the Chrome-trace dump.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Error => "error",
+            Outcome::Panicked => "panicked",
+            Outcome::DeadlineShed => "deadline_shed",
+            Outcome::DeadlineMiss => "deadline_miss",
+            Outcome::Quarantined => "quarantined",
+        }
+    }
+}
+
 /// One request's span: timestamps are nanoseconds since the owning
 /// ring's epoch, monotone in field order.
 #[derive(Debug, Clone, Copy, Default)]
@@ -44,6 +78,8 @@ pub struct SpanEvent {
     pub worker: u32,
     /// Whether the request succeeded.
     pub ok: bool,
+    /// How the request ended (refines `ok`).
+    pub outcome: Outcome,
     /// Whether plan resolution was a cache hit (vs capture+compile).
     pub cache_hit: bool,
     /// Submitted to the queue.
@@ -191,12 +227,13 @@ impl TraceRing {
             format!(
                 "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
                  \"ts\":{:.3},\"dur\":{:.3},\
-                 \"args\":{{\"seq\":{},\"kernel\":{},\"ok\":{}}}}}",
+                 \"args\":{{\"seq\":{},\"kernel\":{},\"ok\":{},\"outcome\":\"{}\"}}}}",
                 t0 as f64 / 1e3,
                 t1.saturating_sub(t0) as f64 / 1e3,
                 ev.seq,
                 ev.kernel,
-                ev.ok
+                ev.ok,
+                ev.outcome.as_str()
             )
         };
         for e in &evs {
@@ -296,6 +333,7 @@ mod tests {
         assert!(j.contains("\"name\":\"plan[hit]\""));
         assert!(j.contains("\"name\":\"replay\""));
         assert!(j.contains("\"name\":\"exec\""));
+        assert!(j.contains("\"outcome\":\"ok\""));
         assert!(j.contains("mxm"));
         assert!(j.ends_with("]}"));
     }

@@ -19,7 +19,7 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::node::{Data, Node, NodeRef, Op};
 use crate::coordinator::ops::RedOp;
@@ -53,6 +53,10 @@ pub struct CacheStats {
     pub evictions: u64,
     pub len: usize,
     pub capacity: usize,
+    /// Keys currently quarantined (backoff not yet elapsed).
+    pub quarantined: usize,
+    /// Times any key entered quarantine since the cache was created.
+    pub quarantine_events: u64,
 }
 
 impl CacheStats {
@@ -72,6 +76,67 @@ struct Entry {
     last_used: u64,
 }
 
+/// Poisoned-plan containment policy: a key that fails `threshold`
+/// consecutive times (capture errors/panics, replay panics) is
+/// quarantined for `backoff * 2^round`, capped at `backoff_cap`. After
+/// the backoff elapses one probe request is re-admitted; if it fails
+/// again the key re-quarantines immediately with a doubled backoff, if
+/// it succeeds the key's health resets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuarantinePolicy {
+    /// Consecutive failures before quarantine. Clamped to at least 1.
+    pub threshold: u32,
+    /// First quarantine duration.
+    pub backoff: Duration,
+    /// Upper bound for the exponential backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for QuarantinePolicy {
+    fn default() -> Self {
+        QuarantinePolicy {
+            threshold: 3,
+            backoff: Duration::from_millis(250),
+            backoff_cap: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Health of one plan key, visible through [`PlanCache::state`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlanState {
+    /// Servable (possibly with a nonzero failure streak below the
+    /// threshold, or on a post-quarantine probation probe).
+    Healthy,
+    /// Rejected without capture/replay work until `until`.
+    Quarantined {
+        /// When the next re-admission probe is allowed.
+        until: Instant,
+        /// Consecutive failures on record.
+        failures: u32,
+    },
+}
+
+/// Dispatcher-side admission decision for a group ([`PlanCache::admission`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Admission {
+    /// Proceed to plan resolution (includes probation probes).
+    Admit,
+    /// Still quarantined: answer without any capture or replay work.
+    Quarantined { failures: u32, retry_in: Duration },
+}
+
+/// Failure-streak bookkeeping for one key. Only keys with a live streak
+/// or an active quarantine are stored; success removes the entry, so
+/// the table stays bounded by the number of *misbehaving* keys.
+#[derive(Debug, Clone, Copy)]
+struct Health {
+    consecutive: u32,
+    /// Completed quarantine rounds — the backoff exponent.
+    rounds: u32,
+    until: Option<Instant>,
+}
+
 /// LRU cache of compiled plans.
 ///
 /// Holds only `Send + Sync` [`CompiledPlan`]s, so the cache itself can
@@ -85,10 +150,18 @@ pub struct PlanCache {
     hits: u64,
     misses: u64,
     evictions: u64,
+    policy: QuarantinePolicy,
+    health: HashMap<PlanKey, Health>,
+    quarantine_events: u64,
 }
 
 impl PlanCache {
     pub fn new(capacity: usize) -> Self {
+        Self::with_policy(capacity, QuarantinePolicy::default())
+    }
+
+    /// A cache with an explicit poisoned-plan containment policy.
+    pub fn with_policy(capacity: usize, policy: QuarantinePolicy) -> Self {
         PlanCache {
             cap: capacity.max(1),
             stamp: 0,
@@ -96,6 +169,9 @@ impl PlanCache {
             hits: 0,
             misses: 0,
             evictions: 0,
+            policy,
+            health: HashMap::new(),
+            quarantine_events: 0,
         }
     }
 
@@ -146,13 +222,108 @@ impl PlanCache {
     }
 
     pub fn stats(&self) -> CacheStats {
+        let now = Instant::now();
         CacheStats {
             hits: self.hits,
             misses: self.misses,
             evictions: self.evictions,
             len: self.entries.len(),
             capacity: self.cap,
+            quarantined: self
+                .health
+                .values()
+                .filter(|h| h.until.is_some_and(|u| u > now))
+                .count(),
+            quarantine_events: self.quarantine_events,
         }
+    }
+
+    // --- poisoned-plan containment ------------------------------------
+
+    /// Dispatcher-side gate, evaluated once per group before any
+    /// capture or replay work. A key whose backoff has elapsed is
+    /// re-admitted *on probation*: this call clears `until` so exactly
+    /// one group proceeds, and the streak is primed so a single further
+    /// failure re-quarantines with a doubled backoff.
+    pub fn admission(&mut self, key: &PlanKey) -> Admission {
+        let threshold = self.policy.threshold.max(1);
+        let Some(h) = self.health.get_mut(key) else {
+            return Admission::Admit;
+        };
+        let Some(until) = h.until else {
+            return Admission::Admit;
+        };
+        let now = Instant::now();
+        if now < until {
+            return Admission::Quarantined {
+                failures: h.consecutive,
+                retry_in: until.saturating_duration_since(now),
+            };
+        }
+        // Backoff elapsed: probation probe.
+        h.until = None;
+        h.consecutive = threshold - 1;
+        Admission::Admit
+    }
+
+    /// Non-mutating quarantine probe for the submission path: while the
+    /// key is quarantined, `(time until re-admission, failure count)`.
+    /// Never starts a probation probe (that is [`PlanCache::admission`]'s
+    /// job, on the dispatcher).
+    pub fn peek_quarantined(&self, key: &PlanKey) -> Option<(Duration, u32)> {
+        let h = self.health.get(key)?;
+        let until = h.until?;
+        let now = Instant::now();
+        if now < until {
+            Some((until.saturating_duration_since(now), h.consecutive))
+        } else {
+            None
+        }
+    }
+
+    /// The key's current containment state.
+    pub fn state(&self, key: &PlanKey) -> PlanState {
+        match self.health.get(key) {
+            Some(Health { until: Some(until), consecutive, .. }) => {
+                PlanState::Quarantined { until: *until, failures: *consecutive }
+            }
+            _ => PlanState::Healthy,
+        }
+    }
+
+    /// Note one plan-level failure (a capture error/panic, or a sweep
+    /// with panicking chunks). On reaching the threshold the key is
+    /// quarantined — its cached entry (possibly the poisoned artifact)
+    /// is dropped, so re-admission recaptures from scratch — with a
+    /// capped exponential backoff. Returns the resulting state.
+    pub fn record_failure(&mut self, key: &PlanKey) -> PlanState {
+        let policy = self.policy;
+        let threshold = policy.threshold.max(1);
+        let h = self
+            .health
+            .entry(key.clone())
+            .or_insert(Health { consecutive: 0, rounds: 0, until: None });
+        h.consecutive += 1;
+        if h.consecutive < threshold {
+            return PlanState::Healthy;
+        }
+        let backoff = policy
+            .backoff
+            .saturating_mul(1u32 << h.rounds.min(16))
+            .min(policy.backoff_cap);
+        let until = Instant::now() + backoff;
+        h.until = Some(until);
+        h.rounds += 1;
+        let failures = h.consecutive;
+        self.quarantine_events += 1;
+        self.entries.remove(key);
+        PlanState::Quarantined { until, failures }
+    }
+
+    /// Note a clean (panic-free) sweep for the key: the failure streak
+    /// and any quarantine history are forgotten.
+    pub fn record_success(&mut self, key: &PlanKey) {
+        self.health.remove(key);
     }
 
     /// Copy out every cached `(key, plan)` pair — the iteration surface
@@ -244,6 +415,15 @@ pub fn capture(ctx: &Context, builder: &KernelFn, key: &PlanKey) -> Result<Arc<C
     let forces_before = ctx.stats(|s| s.forces);
     let out = builder(ctx, &values);
     let root = out.node().clone();
+    // A request-reachable failure mode, not a bug: a builder may return
+    // an i64 value. Reject it here, before the planner/compiler (which
+    // assume an f64 root) ever see it.
+    if root.dtype == DType::I64 {
+        return Err(Error::Invalid(
+            "serving kernels must return an f64 result; this builder's root is an i64 container"
+                .into(),
+        ));
+    }
     if ctx.stats(|s| s.forces) != forces_before {
         return Err(Error::Invalid(
             "kernel builder forced evaluation during capture; serving builders must stay \
@@ -270,7 +450,14 @@ pub fn capture(ctx: &Context, builder: &KernelFn, key: &PlanKey) -> Result<Arc<C
     let want = root
         .data()
         .ok_or_else(|| Error::Invalid("capture verification: root did not materialise".into()))?;
-    let want = want.as_f64();
+    // A request-reachable failure mode, not a bug: a builder may return
+    // an i64 value. Reject it cleanly instead of panicking in `as_f64`.
+    let Data::F64(want) = want else {
+        return Err(Error::Invalid(
+            "serving kernels must return an f64 result; this builder's root is an i64 container"
+                .into(),
+        ));
+    };
     if replay.len() != want.len()
         || replay.iter().zip(want.iter()).any(|(a, b)| !close(*a, *b, 1e-12, 1e-300))
     {
@@ -379,6 +566,79 @@ mod tests {
         assert!(c.get(&ik).is_none());
         let o3 = PlanKey { kernel: 0, args: vec![(DType::F64, Shape::D1(8))], opt: OptLevel::O3 };
         assert!(c.get(&o3).is_none());
+    }
+
+    fn quick_policy() -> QuarantinePolicy {
+        QuarantinePolicy {
+            threshold: 2,
+            backoff: Duration::from_millis(40),
+            backoff_cap: Duration::from_secs(1),
+        }
+    }
+
+    #[test]
+    fn quarantine_trips_at_threshold_and_drops_the_entry() {
+        let mut c = PlanCache::with_policy(4, quick_policy());
+        let k = key(0, 8);
+        c.insert(k.clone(), dummy_plan());
+        assert_eq!(c.record_failure(&k), PlanState::Healthy, "below threshold");
+        assert!(c.contains(&k), "one failure keeps the cached plan");
+        let st = c.record_failure(&k);
+        assert!(matches!(st, PlanState::Quarantined { failures: 2, .. }), "{st:?}");
+        assert!(!c.contains(&k), "quarantine drops the possibly-poisoned plan");
+        assert!(matches!(c.admission(&k), Admission::Quarantined { failures: 2, .. }));
+        let (retry_in, failures) = c.peek_quarantined(&k).expect("peek sees the quarantine");
+        assert_eq!(failures, 2);
+        assert!(retry_in <= Duration::from_millis(40));
+        let s = c.stats();
+        assert_eq!((s.quarantined, s.quarantine_events), (1, 1));
+    }
+
+    #[test]
+    fn probation_readmits_once_and_requarantines_with_doubled_backoff() {
+        let mut c = PlanCache::with_policy(4, quick_policy());
+        let k = key(1, 4);
+        c.record_failure(&k);
+        c.record_failure(&k);
+        std::thread::sleep(Duration::from_millis(50));
+        // Backoff elapsed: exactly one probe is admitted.
+        assert_eq!(c.admission(&k), Admission::Admit);
+        assert_eq!(c.state(&k), PlanState::Healthy, "probe runs un-quarantined");
+        assert!(c.peek_quarantined(&k).is_none());
+        // One more failure on probation re-quarantines immediately,
+        // with the backoff doubled (80 ms > the first round's 40 ms).
+        assert!(matches!(c.record_failure(&k), PlanState::Quarantined { .. }));
+        let (retry_in, _) = c.peek_quarantined(&k).unwrap();
+        assert!(retry_in > Duration::from_millis(40), "{retry_in:?}");
+        assert_eq!(c.stats().quarantine_events, 2);
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let mut c = PlanCache::with_policy(4, quick_policy());
+        let k = key(2, 4);
+        c.record_failure(&k);
+        c.record_success(&k);
+        assert_eq!(c.record_failure(&k), PlanState::Healthy, "streak restarted");
+        assert_eq!(c.stats().quarantine_events, 0);
+    }
+
+    #[test]
+    fn backoff_is_capped() {
+        let mut c = PlanCache::with_policy(
+            4,
+            QuarantinePolicy {
+                threshold: 1,
+                backoff: Duration::from_millis(10),
+                backoff_cap: Duration::from_millis(25),
+            },
+        );
+        let k = key(3, 4);
+        for _ in 0..8 {
+            c.record_failure(&k); // each call past the threshold re-quarantines
+        }
+        let (retry_in, _) = c.peek_quarantined(&k).unwrap();
+        assert!(retry_in <= Duration::from_millis(25), "{retry_in:?}");
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Serving failure model: typed request outcomes and the client retry
+//! policy.
+//!
+//! Every response a server sends is a [`ServeResult`]: either the
+//! result vector or a [`ServeError`] that says *which* containment
+//! mechanism fired — a validation/engine error ([`ServeError::Request`]),
+//! a missed deadline (shed before execution or detected after), a
+//! contained panic with the original payload message, a quarantined
+//! plan, retry-budget exhaustion, or shutdown. Transient rejections
+//! ([`super::SubmitError::QueueFull`] and
+//! [`super::SubmitError::Quarantined`]) hand the argument buffers back
+//! so [`super::Client::call_retry`] can resubmit without copies, paced
+//! by a [`RetryPolicy`].
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::obs::faults;
+use crate::util::XorShift64;
+use crate::Error;
+
+/// Result type every serving response carries.
+pub type ServeResult<T> = std::result::Result<T, ServeError>;
+
+/// Why a request failed. See the module docs of [`crate::serve`] for
+/// the failure model these variants implement.
+#[derive(Debug)]
+pub enum ServeError {
+    /// The request (or its capture / replay) failed with a regular
+    /// engine error: bad argument, capture rejection, invalid index
+    /// data, …
+    Request(Error),
+    /// The request's deadline passed. `executed: false` means the
+    /// dispatcher shed it before any capture or replay work;
+    /// `executed: true` means the sweep ran but finished late, and the
+    /// (stale) result was discarded.
+    DeadlineExceeded {
+        /// Seconds past the deadline when the request was answered.
+        missed_by_s: f64,
+        /// Whether the replay actually ran before the miss was detected.
+        executed: bool,
+    },
+    /// Capture or replay panicked; the panic was contained (dispatcher
+    /// and pool workers keep running) and the original payload message
+    /// preserved.
+    Panicked {
+        /// Name of the kernel whose plan panicked.
+        plan: String,
+        /// The panic payload's message.
+        message: String,
+    },
+    /// The plan for this (kernel, signature) is quarantined after
+    /// repeated failures; the request was rejected without any capture
+    /// or replay work.
+    Quarantined {
+        /// Name of the quarantined kernel.
+        plan: String,
+        /// Consecutive failures that tripped the quarantine.
+        failures: u32,
+        /// Seconds until the next re-admission probe.
+        retry_in_s: f64,
+    },
+    /// [`super::Client::call_retry`] exhausted its attempt budget on
+    /// transient rejections (queue full / quarantine).
+    Overloaded {
+        /// Attempts made before giving up.
+        attempts: u32,
+    },
+    /// The server shut down before answering.
+    Shutdown,
+}
+
+impl ServeError {
+    /// Does this error originate from an injected failpoint
+    /// ([`crate::obs::faults`]) rather than a real failure? Chaos-aware
+    /// tests retry on injected errors and fail hard on real ones.
+    pub fn is_injected(&self) -> bool {
+        match self {
+            ServeError::Request(e) => faults::is_injected(&e.to_string()),
+            ServeError::Panicked { message, .. } => faults::is_injected(message),
+            _ => false,
+        }
+    }
+
+    /// Is this a transient condition worth retrying (quarantine backoff
+    /// or overload), as opposed to a deterministic request error?
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            ServeError::Quarantined { .. } | ServeError::Overloaded { .. }
+        )
+    }
+}
+
+impl Clone for ServeError {
+    fn clone(&self) -> Self {
+        match self {
+            // `Error` holds an `io::Error` in one variant and is not
+            // `Clone`; rebuild it preserving kind and message.
+            ServeError::Request(e) => ServeError::Request(clone_error(e)),
+            ServeError::DeadlineExceeded { missed_by_s, executed } => {
+                ServeError::DeadlineExceeded { missed_by_s: *missed_by_s, executed: *executed }
+            }
+            ServeError::Panicked { plan, message } => {
+                ServeError::Panicked { plan: plan.clone(), message: message.clone() }
+            }
+            ServeError::Quarantined { plan, failures, retry_in_s } => ServeError::Quarantined {
+                plan: plan.clone(),
+                failures: *failures,
+                retry_in_s: *retry_in_s,
+            },
+            ServeError::Overloaded { attempts } => {
+                ServeError::Overloaded { attempts: *attempts }
+            }
+            ServeError::Shutdown => ServeError::Shutdown,
+        }
+    }
+}
+
+fn clone_error(e: &Error) -> Error {
+    match e {
+        Error::Shape(s) => Error::Shape(s.clone()),
+        Error::Invalid(s) => Error::Invalid(s.clone()),
+        Error::Artifact(s) => Error::Artifact(s.clone()),
+        Error::Xla(s) => Error::Xla(s.clone()),
+        Error::Io(e) => Error::Io(std::io::Error::new(e.kind(), e.to_string())),
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Request(e) => write!(f, "{e}"),
+            ServeError::DeadlineExceeded { missed_by_s, executed: false } => {
+                write!(f, "deadline exceeded: shed {:.3} ms past deadline", missed_by_s * 1e3)
+            }
+            ServeError::DeadlineExceeded { missed_by_s, executed: true } => write!(
+                f,
+                "deadline exceeded: finished {:.3} ms late, result discarded",
+                missed_by_s * 1e3
+            ),
+            ServeError::Panicked { plan, message } => {
+                write!(f, "serve: plan '{plan}' panicked: {message}")
+            }
+            ServeError::Quarantined { plan, failures, retry_in_s } => write!(
+                f,
+                "serve: plan '{plan}' quarantined after {failures} consecutive failures \
+                 (re-admission probe in {:.0} ms)",
+                retry_in_s * 1e3
+            ),
+            ServeError::Overloaded { attempts } => {
+                write!(f, "serve: retry budget exhausted after {attempts} attempts")
+            }
+            ServeError::Shutdown => write!(f, "serve: server shut down before responding"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<Error> for ServeError {
+    fn from(e: Error) -> Self {
+        ServeError::Request(e)
+    }
+}
+
+/// Lossy conversion for callers living in crate-`Result` space (`?` in
+/// examples and benches): the variant structure flattens to a message.
+impl From<ServeError> for Error {
+    fn from(e: ServeError) -> Self {
+        match e {
+            ServeError::Request(err) => err,
+            other => Error::Invalid(other.to_string()),
+        }
+    }
+}
+
+/// Client-side pacing for transient rejections (queue backpressure and
+/// quarantined plans): capped exponential backoff with deterministic
+/// jitter. See [`super::Client::call_retry`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total submission attempts before giving up with
+    /// [`ServeError::Overloaded`]. Clamped to at least 1.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt; doubles per attempt.
+    pub backoff: Duration,
+    /// Jitter fraction in `[0, 1]`: each sleep is scaled by a
+    /// deterministic uniform factor in `[1 - jitter, 1 + jitter]`,
+    /// decorrelating retry storms from many clients.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 4, backoff: Duration::from_micros(200), jitter: 0.25 }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before attempt `attempt + 2` (0-based `attempt` is the
+    /// attempt that just failed): `backoff * 2^attempt`, jittered.
+    pub fn backoff_for(&self, attempt: u32, rng: &mut XorShift64) -> Duration {
+        let base = self.backoff.as_secs_f64() * 2f64.powi(attempt.min(24) as i32);
+        let j = self.jitter.clamp(0.0, 1.0);
+        let scale = 1.0 - j + 2.0 * j * rng.next_f64();
+        Duration::from_secs_f64((base * scale).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_covers_variants() {
+        let cases: Vec<(ServeError, &str)> = vec![
+            (ServeError::Request(Error::Invalid("bad arg".into())), "bad arg"),
+            (
+                ServeError::DeadlineExceeded { missed_by_s: 0.002, executed: false },
+                "shed",
+            ),
+            (
+                ServeError::DeadlineExceeded { missed_by_s: 0.002, executed: true },
+                "discarded",
+            ),
+            (
+                ServeError::Panicked { plan: "mxm".into(), message: "boom".into() },
+                "panicked",
+            ),
+            (
+                ServeError::Quarantined { plan: "mxm".into(), failures: 3, retry_in_s: 0.25 },
+                "quarantined",
+            ),
+            (ServeError::Overloaded { attempts: 4 }, "retry budget"),
+            (ServeError::Shutdown, "shut down"),
+        ];
+        for (e, needle) in cases {
+            let cloned = e.clone();
+            assert!(e.to_string().contains(needle), "{e}");
+            assert_eq!(cloned.to_string(), e.to_string());
+        }
+    }
+
+    #[test]
+    fn injected_marker_detection() {
+        let inj = ServeError::Panicked {
+            plan: "k".into(),
+            message: "injected fault: pool.chunk.panic".into(),
+        };
+        assert!(inj.is_injected());
+        let real =
+            ServeError::Panicked { plan: "k".into(), message: "index out of bounds".into() };
+        assert!(!real.is_injected());
+        assert!(ServeError::Request(Error::Invalid("injected fault: x".into())).is_injected());
+        assert!(!ServeError::Shutdown.is_injected());
+    }
+
+    #[test]
+    fn backoff_grows_and_jitters_deterministically() {
+        let p = RetryPolicy { max_attempts: 5, backoff: Duration::from_millis(1), jitter: 0.5 };
+        let mut a = XorShift64::new(9);
+        let mut b = XorShift64::new(9);
+        let s0 = p.backoff_for(0, &mut a);
+        let s3 = p.backoff_for(3, &mut a);
+        // Same seed, same sequence.
+        assert_eq!(s0, p.backoff_for(0, &mut b));
+        // Exponential growth dominates jitter: 2^3 * [0.5, 1.5) vs [0.5, 1.5).
+        assert!(s3 > s0, "{s3:?} vs {s0:?}");
+        // Jitter keeps every sleep within [0.5x, 1.5x) of the base.
+        let base0 = p.backoff.as_secs_f64();
+        let f = s0.as_secs_f64() / base0;
+        assert!((0.5..1.5).contains(&f), "{f}");
+        // Zero jitter is exact.
+        let z = RetryPolicy { jitter: 0.0, ..p };
+        assert_eq!(z.backoff_for(0, &mut a), Duration::from_millis(1));
+    }
+}

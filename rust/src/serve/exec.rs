@@ -804,7 +804,9 @@ pub fn execute_into(cp: &CompiledPlan, args: &[Data], out: &mut Vec<f64>) -> Res
         return prog.invoke_data(args, out);
     }
     cp.replays.fetch_add(1, Ordering::Relaxed);
-    let mut arena = match cp.arenas.lock().unwrap().pop() {
+    // Poison-tolerant: a contained panic elsewhere must not cascade
+    // into every later replay of the same plan.
+    let mut arena = match cp.arenas.lock().unwrap_or_else(|e| e.into_inner()).pop() {
         Some(a) => a,
         None => {
             cp.arenas_created.fetch_add(1, Ordering::Relaxed);
@@ -823,7 +825,7 @@ pub fn execute_into(cp: &CompiledPlan, args: &[Data], out: &mut Vec<f64>) -> Res
     });
     arena.leafbuf.clear();
     arena.ileafbuf.clear();
-    cp.arenas.lock().unwrap().push(arena);
+    cp.arenas.lock().unwrap_or_else(|e| e.into_inner()).push(arena);
     result
 }
 

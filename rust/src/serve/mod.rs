@@ -70,20 +70,51 @@
 //! rejects this. Host-side constants — CSR structure, twiddle tables —
 //! should be bound inside the builder; they are baked into the compiled
 //! plan and shared read-only across requests.
+//!
+//! # Failure model
+//!
+//! A server stays up through every per-request failure mode, and every
+//! response is a typed [`error::ServeError`] that says which
+//! containment fired. **Validation** errors (unknown kernel, shape
+//! mismatches, overflowing shapes) are rejected at submission.
+//! **Panics** in capture or replay — builder bugs, bad index data,
+//! injected faults — are caught at one choke point per layer, their
+//! payload messages preserved ([`error::ServeError::Panicked`]), and a
+//! pool worker that dies is respawned by a sentinel; neither the
+//! dispatcher nor the barrier is ever lost. **Poisoned plans** — a
+//! (kernel, signature) that fails `quarantine_threshold` consecutive
+//! times — are quarantined with capped exponential backoff
+//! ([`cache::QuarantinePolicy`]): requests are rejected without
+//! capture/replay work until a single probation probe re-admits the
+//! key (success resets it, failure re-quarantines with doubled
+//! backoff). **Deadlines** ([`Client::call_within`]) shed expired work
+//! before it costs anything, bound batch formation, order groups
+//! earliest-deadline-first, and discard results that finish late.
+//! **Transient** rejections (queue backpressure, quarantine) hand the
+//! argument buffers back; [`Client::call_retry`] resubmits them under
+//! a jittered-exponential [`error::RetryPolicy`]. All of it is
+//! observable — outcome-tagged trace spans, fault/deadline/quarantine
+//! counters — and deterministically testable via the
+//! [`crate::obs::faults`] failpoint harness
+//! ([`ResilienceConfig::faults`], `PALLAS_FAULTS`).
 
 pub mod cache;
+pub mod error;
 pub mod exec;
 pub mod pool;
 pub mod scheduler;
 pub mod stats;
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::coordinator::node::{Data, NodeRef};
 use crate::coordinator::shape::{DType, Shape};
 use crate::coordinator::{Context, Mat2, OptLevel, Scal, Vec1, VecI64};
+use crate::obs::faults::FaultSpec;
 
-pub use cache::{CacheStats, PlanCache, PlanKey};
+pub use cache::{Admission, CacheStats, PlanCache, PlanKey, PlanState, QuarantinePolicy};
+pub use error::{RetryPolicy, ServeError, ServeResult};
 pub use exec::{ArenaStats, CompiledPlan};
 pub use scheduler::{Client, Server, ServerBuilder, SubmitError, Ticket};
 pub use stats::{KernelStats, Segments, ServeStats};
@@ -156,6 +187,42 @@ pub struct ServeConfig {
     pub grain: usize,
     /// Observability: metrics histograms, trace ring, tape profiling.
     pub obs: ObsConfig,
+    /// Resilience: quarantine policy, deadline slack, fault injection.
+    pub resilience: ResilienceConfig,
+}
+
+/// Resilience configuration: poisoned-plan quarantine, deadline-aware
+/// batching, and the deterministic fault-injection harness. See the
+/// module-level *Failure model* docs.
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Consecutive plan failures (capture errors/panics, panicking
+    /// sweeps) before the plan key is quarantined.
+    pub quarantine_threshold: u32,
+    /// First quarantine duration; doubles per round.
+    pub quarantine_backoff: Duration,
+    /// Cap on the exponential quarantine backoff.
+    pub quarantine_backoff_cap: Duration,
+    /// Batch formation stops coalescing once the nearest queued
+    /// deadline is within this slack — a near-deadline request is never
+    /// held behind further batch formation.
+    pub deadline_slack: Duration,
+    /// Failpoint spec installed at server start (replaces whatever is
+    /// active). `None` leaves the process-wide spec alone (the
+    /// `PALLAS_FAULTS` env hook still applies, once per process).
+    pub faults: Option<FaultSpec>,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            quarantine_threshold: 3,
+            quarantine_backoff: Duration::from_millis(250),
+            quarantine_backoff_cap: Duration::from_secs(30),
+            deadline_slack: Duration::from_micros(500),
+            faults: None,
+        }
+    }
 }
 
 impl Default for ServeConfig {
@@ -170,6 +237,7 @@ impl Default for ServeConfig {
             cse: false,
             grain: 4096,
             obs: ObsConfig::default(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }

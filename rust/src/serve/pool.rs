@@ -19,11 +19,19 @@ pub struct PoolStats {
     pub sweeps: u64,
     /// Chunk tasks executed since the pool was created.
     pub chunks: u64,
+    /// Workers respawned after dying to a panic that escaped chunk
+    /// containment (self-healing; 0 in a healthy pool).
+    pub respawned: u64,
 }
 
 /// Read a pool's counters.
 pub fn stats_of(pool: &SharedPool) -> PoolStats {
-    PoolStats { workers: pool.size(), sweeps: pool.jobs_dispatched(), chunks: pool.chunks_run() }
+    PoolStats {
+        workers: pool.size(),
+        sweeps: pool.jobs_dispatched(),
+        chunks: pool.chunks_run(),
+        respawned: pool.workers_respawned(),
+    }
 }
 
 /// The pool a server with `workers` workers executes batches on
@@ -60,5 +68,8 @@ mod tests {
         assert_eq!(after.workers, 2);
         assert!(after.sweeps >= before.sweeps + 1);
         assert!(after.chunks >= before.chunks + 4);
+        // Contained chunk panics never kill workers, so a healthy pool
+        // shows no respawns.
+        assert!(after.respawned >= before.respawned);
     }
 }

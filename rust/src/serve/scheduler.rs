@@ -1,5 +1,5 @@
 //! Request scheduler: bounded submission queue, batching dispatcher,
-//! backpressure.
+//! backpressure, deadlines and containment.
 //!
 //! Clients submit through a bounded MPSC channel ([`Client::try_submit`]
 //! returns [`SubmitError::QueueFull`] when the queue is at capacity —
@@ -14,6 +14,15 @@
 //! which is where the serving throughput win over per-dispatch
 //! evaluation comes from (see `benches/serve_throughput.rs`).
 //!
+//! Requests may carry a **deadline** ([`Client::submit_by`],
+//! [`Client::call_within`]): already-expired work is shed before any
+//! capture or replay cost, batch formation stops coalescing once the
+//! nearest queued deadline is within the configured slack, groups run
+//! earliest-deadline-first, and a sweep that finishes past a member's
+//! deadline answers it with
+//! [`ServeError::DeadlineExceeded`]` { executed: true }` instead of the
+//! stale result.
+//!
 //! Every request is stamped as it crosses each pipeline stage —
 //! enqueue, dequeue, group formation, plan resolution, response — and
 //! the stamps become a [`Segments`] decomposition recorded into the
@@ -24,25 +33,33 @@
 //! end-to-end latency exactly.
 //!
 //! Failures are contained: builder panics, capture rejections, engine
-//! errors and elemental panics all turn into per-request `Err`
-//! responses; the dispatcher and the pool workers keep running.
+//! errors and elemental panics all turn into typed per-request
+//! [`ServeError`] responses (panic payload messages preserved); the
+//! dispatcher and the pool workers keep running, and a plan that fails
+//! repeatedly is quarantined by the cache's
+//! [`QuarantinePolicy`](super::cache::QuarantinePolicy) so it cannot
+//! poison every batch it appears in.
 
 use std::collections::HashMap;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::engine::pool::panic_message;
 use crate::coordinator::node::Data;
 use crate::coordinator::shape::{DType, Shape};
 use crate::coordinator::{Context, Options, OptLevel};
-use crate::obs::trace::worker_lane;
-use crate::obs::{profile, MetricsSnapshot, ProfileSnapshot, SpanEvent, TraceRing};
+use crate::obs::trace::{worker_lane, Outcome};
+use crate::obs::{faults, profile, MetricsSnapshot, ProfileSnapshot, SpanEvent, TraceRing};
+use crate::util::XorShift64;
 use crate::{Error, Result};
 
-use super::cache::{self, CacheStats, PlanCache, PlanKey};
+use super::cache::{self, Admission, CacheStats, PlanCache, PlanKey, QuarantinePolicy};
+use super::error::{RetryPolicy, ServeError, ServeResult};
 use super::exec::{self, CompiledPlan};
 use super::pool::{self, SharedPool};
 use super::stats::{KernelStats, Segments, ServeStats};
@@ -55,12 +72,25 @@ enum KernelEntry {
     Prog(Box<ProgramFn>),
 }
 
-/// Submission failure modes surfaced to clients.
+/// Poison-tolerant lock: a panic elsewhere must not cascade into every
+/// thread that later touches the same mutex.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Submission failure modes surfaced to clients. The transient variants
+/// hand the argument buffers back so the caller (or
+/// [`Client::call_retry`]) can resubmit without copies.
 pub enum SubmitError {
     /// The bounded queue is at capacity (backpressure). The request's
     /// arguments are handed back so the caller can retry without
     /// copies.
     QueueFull(Vec<Arg>),
+    /// The plan for this (kernel, signature) is quarantined; the
+    /// request was rejected at submission, before queueing. Arguments
+    /// handed back; `retry_in` is the time until the next re-admission
+    /// probe.
+    Quarantined { args: Vec<Arg>, retry_in: Duration, failures: u32 },
     /// The server has shut down.
     Closed,
     /// The request itself is malformed (unknown kernel, bad argument).
@@ -73,6 +103,11 @@ impl fmt::Debug for SubmitError {
             SubmitError::QueueFull(args) => {
                 write!(f, "QueueFull({} args held back)", args.len())
             }
+            SubmitError::Quarantined { args, retry_in, failures } => write!(
+                f,
+                "Quarantined({} args held back, {failures} failures, retry in {retry_in:?})",
+                args.len()
+            ),
             SubmitError::Closed => write!(f, "Closed"),
             SubmitError::Rejected(e) => write!(f, "Rejected({e})"),
         }
@@ -83,6 +118,11 @@ impl fmt::Display for SubmitError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             SubmitError::QueueFull(_) => write!(f, "submission queue full (backpressure)"),
+            SubmitError::Quarantined { failures, retry_in, .. } => write!(
+                f,
+                "plan quarantined after {failures} failures (re-admission in {:.0} ms)",
+                retry_in.as_secs_f64() * 1e3
+            ),
             SubmitError::Closed => write!(f, "server shut down"),
             SubmitError::Rejected(e) => write!(f, "request rejected: {e}"),
         }
@@ -94,7 +134,8 @@ struct Request {
     sig: Vec<(DType, Shape)>,
     args: Vec<Arg>,
     enqueued: Instant,
-    resp: SyncSender<Result<Vec<f64>>>,
+    deadline: Option<Instant>,
+    resp: SyncSender<ServeResult<Vec<f64>>>,
 }
 
 /// A request plus the instant the dispatcher pulled it off the queue
@@ -122,10 +163,20 @@ struct PlanStamps {
 /// State shared between clients and the dispatcher.
 struct Shared {
     names: HashMap<String, usize>,
+    kernel_names: Vec<String>,
     stats: ServeStats,
     cache: Mutex<PlanCache>,
     opt: OptLevel,
     trace: Option<Arc<TraceRing>>,
+    /// Per-call_retry RNG seeds, so concurrent retry loops jitter
+    /// differently (deterministic per loop, decorrelated across loops).
+    retry_salt: AtomicU64,
+}
+
+impl Shared {
+    fn kernel_name(&self, kid: usize) -> String {
+        self.kernel_names.get(kid).cloned().unwrap_or_else(|| format!("#{kid}"))
+    }
 }
 
 /// Handle for submitting requests; cheap to clone, `Send`.
@@ -137,15 +188,13 @@ pub struct Client {
 
 /// A pending response.
 pub struct Ticket {
-    rx: Receiver<Result<Vec<f64>>>,
+    rx: Receiver<ServeResult<Vec<f64>>>,
 }
 
 impl Ticket {
     /// Block until the response arrives.
-    pub fn wait(self) -> Result<Vec<f64>> {
-        self.rx
-            .recv()
-            .map_err(|_| Error::Invalid("serve: server shut down before responding".into()))?
+    pub fn wait(self) -> ServeResult<Vec<f64>> {
+        self.rx.recv().map_err(|_| ServeError::Shutdown)?
     }
 }
 
@@ -154,6 +203,7 @@ impl Client {
         &self,
         kernel: &str,
         args: Vec<Arg>,
+        deadline: Option<Instant>,
     ) -> std::result::Result<(Request, Ticket), SubmitError> {
         let Some(&kid) = self.shared.names.get(kernel) else {
             return Err(SubmitError::Rejected(Error::Invalid(format!(
@@ -161,18 +211,33 @@ impl Client {
             ))));
         };
         for (i, a) in args.iter().enumerate() {
-            if a.len() != a.shape().len() {
+            // `Shape::len` is an unchecked `rows * cols`; a hostile or
+            // corrupted shape must produce a rejection, not an overflow
+            // panic on the submission path.
+            let Some(want) = a.shape().checked_len() else {
+                return Err(SubmitError::Rejected(Error::Invalid(format!(
+                    "serve: argument {i} shape {:?} overflows element count",
+                    a.shape()
+                ))));
+            };
+            if a.len() != want {
                 return Err(SubmitError::Rejected(Error::Invalid(format!(
                     "serve: argument {i} data length {} != shape length {}",
                     a.len(),
-                    a.shape().len()
+                    want
                 ))));
             }
         }
         let sig = args.iter().map(|a| (a.dtype(), a.shape())).collect();
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        let req =
-            Request { kernel: kid, sig, args, enqueued: Instant::now(), resp: resp_tx };
+        let req = Request {
+            kernel: kid,
+            sig,
+            args,
+            enqueued: Instant::now(),
+            deadline,
+            resp: resp_tx,
+        };
         Ok((req, Ticket { rx: resp_rx }))
     }
 
@@ -182,7 +247,29 @@ impl Client {
         kernel: &str,
         args: Vec<Arg>,
     ) -> std::result::Result<Ticket, SubmitError> {
-        let (req, ticket) = self.build_request(kernel, args)?;
+        self.try_submit_by(kernel, args, None)
+    }
+
+    /// Non-blocking submit with an optional deadline. Fails fast —
+    /// handing the argument buffers back — while the plan for this
+    /// (kernel, signature) is quarantined, so callers don't queue work
+    /// the dispatcher would only reject.
+    pub fn try_submit_by(
+        &self,
+        kernel: &str,
+        args: Vec<Arg>,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Ticket, SubmitError> {
+        let (req, ticket) = self.build_request(kernel, args, deadline)?;
+        let key = PlanKey { kernel: req.kernel, args: req.sig.clone(), opt: self.shared.opt };
+        if let Some((retry_in, failures)) = relock(&self.shared.cache).peek_quarantined(&key) {
+            self.shared.stats.inc_quarantined();
+            return Err(SubmitError::Quarantined { args: req.args, retry_in, failures });
+        }
+        if faults::fire("serve.queue.reject") {
+            self.shared.stats.inc_rejected();
+            return Err(SubmitError::QueueFull(req.args));
+        }
         match self.tx.try_send(Msg::Call(req)) {
             Ok(()) => Ok(ticket),
             Err(TrySendError::Full(Msg::Call(r))) => {
@@ -194,26 +281,99 @@ impl Client {
         }
     }
 
-    /// Blocking submit (waits for queue space).
-    pub fn submit(&self, kernel: &str, args: Vec<Arg>) -> Result<Ticket> {
-        let (req, ticket) = self.build_request(kernel, args).map_err(|e| match e {
-            SubmitError::Rejected(err) => err,
-            other => Error::Invalid(other.to_string()),
+    fn submit_inner(
+        &self,
+        kernel: &str,
+        args: Vec<Arg>,
+        deadline: Option<Instant>,
+    ) -> ServeResult<Ticket> {
+        let (req, ticket) = self.build_request(kernel, args, deadline).map_err(|e| match e {
+            SubmitError::Rejected(err) => ServeError::Request(err),
+            SubmitError::Closed => ServeError::Shutdown,
+            other => ServeError::Request(Error::Invalid(other.to_string())),
         })?;
-        self.tx
-            .send(Msg::Call(req))
-            .map_err(|_| Error::Invalid("serve: server shut down".into()))?;
+        self.tx.send(Msg::Call(req)).map_err(|_| ServeError::Shutdown)?;
         Ok(ticket)
     }
 
+    /// Blocking submit (waits for queue space). Kept in crate-`Result`
+    /// space for callers that don't care about the typed failure model.
+    pub fn submit(&self, kernel: &str, args: Vec<Arg>) -> Result<Ticket> {
+        self.submit_inner(kernel, args, None).map_err(Error::from)
+    }
+
+    /// Blocking submit with a deadline: the dispatcher sheds the
+    /// request unexecuted if the deadline passes while it is queued,
+    /// and discards the result if the sweep finishes late.
+    pub fn submit_by(
+        &self,
+        kernel: &str,
+        args: Vec<Arg>,
+        deadline: Instant,
+    ) -> ServeResult<Ticket> {
+        self.submit_inner(kernel, args, Some(deadline))
+    }
+
     /// Submit and wait: the one-line serving call.
-    pub fn call(&self, kernel: &str, args: Vec<Arg>) -> Result<Vec<f64>> {
-        self.submit(kernel, args)?.wait()
+    pub fn call(&self, kernel: &str, args: Vec<Arg>) -> ServeResult<Vec<f64>> {
+        self.submit_inner(kernel, args, None)?.wait()
+    }
+
+    /// [`Client::call`] with an absolute deadline.
+    pub fn call_by(
+        &self,
+        kernel: &str,
+        args: Vec<Arg>,
+        deadline: Instant,
+    ) -> ServeResult<Vec<f64>> {
+        self.submit_inner(kernel, args, Some(deadline))?.wait()
+    }
+
+    /// [`Client::call`] with a latency budget measured from now.
+    pub fn call_within(
+        &self,
+        kernel: &str,
+        args: Vec<Arg>,
+        budget: Duration,
+    ) -> ServeResult<Vec<f64>> {
+        self.call_by(kernel, args, Instant::now() + budget)
+    }
+
+    /// Submit-and-wait with retries on *transient* rejections (queue
+    /// backpressure, quarantined plan), paced by `policy`'s jittered
+    /// exponential backoff. The handed-back argument buffers are reused
+    /// across attempts, so retrying copies nothing. Deterministic
+    /// request errors and server shutdown are returned immediately;
+    /// exhausting the budget returns [`ServeError::Overloaded`].
+    pub fn call_retry(
+        &self,
+        kernel: &str,
+        args: Vec<Arg>,
+        policy: &RetryPolicy,
+    ) -> ServeResult<Vec<f64>> {
+        let max = policy.max_attempts.max(1);
+        let mut rng =
+            XorShift64::new(self.shared.retry_salt.fetch_add(1, Ordering::Relaxed) | 1);
+        let mut args = args;
+        for attempt in 0..max {
+            match self.try_submit(kernel, std::mem::take(&mut args)) {
+                Ok(ticket) => return ticket.wait(),
+                Err(SubmitError::QueueFull(a)) => args = a,
+                Err(SubmitError::Quarantined { args: a, .. }) => args = a,
+                Err(SubmitError::Closed) => return Err(ServeError::Shutdown),
+                Err(SubmitError::Rejected(e)) => return Err(ServeError::Request(e)),
+            }
+            self.shared.stats.inc_retry();
+            if attempt + 1 < max {
+                std::thread::sleep(policy.backoff_for(attempt, &mut rng));
+            }
+        }
+        Err(ServeError::Overloaded { attempts: max })
     }
 
     /// Plan-cache counters.
     pub fn cache_stats(&self) -> CacheStats {
-        self.shared.cache.lock().unwrap().stats()
+        relock(&self.shared.cache).stats()
     }
 
     /// Aggregate `(replays, arenas_created)` over the cached plans: the
@@ -223,7 +383,7 @@ impl Client {
     /// stays flat (every cache-hit dispatch recycles an arena instead
     /// of allocating step outputs).
     pub fn arena_totals(&self) -> (u64, u64) {
-        self.shared.cache.lock().unwrap().arena_totals()
+        relock(&self.shared.cache).arena_totals()
     }
 
     /// Read a kernel's serving stats (lock-free; the stats are
@@ -290,16 +450,11 @@ impl Client {
     /// row per plan-cache entry. A plan's profile accumulates during
     /// its replays while profiling is enabled.
     pub fn plan_profiles(&self) -> Vec<(String, ProfileSnapshot)> {
-        let entries = self.shared.cache.lock().unwrap().entries();
+        let entries = relock(&self.shared.cache).entries();
         entries
             .into_iter()
             .map(|(key, plan)| {
-                let name = self
-                    .shared
-                    .names
-                    .iter()
-                    .find_map(|(n, &v)| if v == key.kernel { Some(n.as_str()) } else { None })
-                    .unwrap_or("?");
+                let name = self.shared.kernel_name(key.kernel);
                 (format!("{name}{:?}", key.args), plan.profile_snapshot())
             })
             .collect()
@@ -348,6 +503,14 @@ impl ServerBuilder {
 
     /// Spawn the dispatcher and return the running server.
     pub fn start(self) -> Server {
+        // Fault injection: the env hook runs once per process; an
+        // explicit spec in the config replaces whatever is installed.
+        if let Err(e) = faults::init_from_env() {
+            eprintln!("serve: ignoring fault spec: {e}");
+        }
+        if let Some(spec) = &self.config.resilience.faults {
+            faults::install(spec);
+        }
         let (tx, rx) = mpsc::sync_channel(self.config.queue_capacity.max(1));
         let names: HashMap<String, usize> =
             self.kernels.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
@@ -366,12 +529,19 @@ impl ServerBuilder {
             // (other servers or benches may rely on it staying up).
             profile::set_enabled(true);
         }
+        let policy = QuarantinePolicy {
+            threshold: self.config.resilience.quarantine_threshold,
+            backoff: self.config.resilience.quarantine_backoff,
+            backoff_cap: self.config.resilience.quarantine_backoff_cap,
+        };
         let shared = Arc::new(Shared {
             names,
             stats: ServeStats::new(&kernel_names, self.config.obs.metrics),
-            cache: Mutex::new(PlanCache::new(self.config.plan_cache_capacity)),
+            kernel_names,
+            cache: Mutex::new(PlanCache::with_policy(self.config.plan_cache_capacity, policy)),
             opt: self.config.opt_level,
             trace,
+            retry_salt: AtomicU64::new(0x9E37_79B9),
         });
         let builders: Vec<KernelEntry> = self.kernels.into_iter().map(|(_, f)| f).collect();
         let cfg = self.config;
@@ -444,6 +614,7 @@ fn dispatcher(
     });
     let pool = pool::for_workers(cfg.workers);
     let max_batch = cfg.max_batch.max(1);
+    let slack = cfg.resilience.deadline_slack;
 
     loop {
         let first = match rx.recv() {
@@ -452,14 +623,29 @@ fn dispatcher(
         };
         let mut shutdown = false;
         let mut batch: Vec<Pending> = Vec::new();
+        let mut nearest: Option<Instant> = None;
+        let push = |batch: &mut Vec<Pending>, nearest: &mut Option<Instant>, r: Request| {
+            if let Some(d) = r.deadline {
+                *nearest = Some(nearest.map_or(d, |n: Instant| n.min(d)));
+            }
+            batch.push(Pending { req: r, dequeued: Instant::now() });
+        };
         match first {
             Msg::Shutdown => shutdown = true,
-            Msg::Call(r) => batch.push(Pending { req: r, dequeued: Instant::now() }),
+            Msg::Call(r) => push(&mut batch, &mut nearest, r),
         }
-        // Coalesce whatever else is already queued, up to max_batch.
+        // Coalesce whatever else is already queued, up to max_batch —
+        // but stop early once the nearest deadline in the batch is
+        // within the slack: a near-deadline request must not wait
+        // behind further batch formation.
         while batch.len() < max_batch {
+            if let Some(d) = nearest {
+                if d.saturating_duration_since(Instant::now()) <= slack {
+                    break;
+                }
+            }
             match rx.try_recv() {
-                Ok(Msg::Call(r)) => batch.push(Pending { req: r, dequeued: Instant::now() }),
+                Ok(Msg::Call(r)) => push(&mut batch, &mut nearest, r),
                 Ok(Msg::Shutdown) => {
                     shutdown = true;
                     break;
@@ -500,29 +686,74 @@ fn process_batch(
     pool: Option<&SharedPool>,
     shared: &Arc<Shared>,
 ) {
-    // Group by (kernel, signature): every group replays one plan.
-    let mut groups: HashMap<PlanKey, Vec<Pending>> = HashMap::new();
+    // Shed work whose deadline already passed in the queue: it costs
+    // nothing past this point, and the client learns immediately.
+    let now = Instant::now();
+    let mut live: Vec<Pending> = Vec::with_capacity(batch.len());
     for p in batch {
+        match p.req.deadline {
+            Some(d) if now >= d => {
+                let stamps =
+                    PlanStamps { plan0: p.dequeued, plan1: p.dequeued, cache_hit: false };
+                let missed = now.saturating_duration_since(d).as_secs_f64();
+                let err = ServeError::DeadlineExceeded { missed_by_s: missed, executed: false };
+                finish(p, stamps, None, Err(err), shared);
+            }
+            _ => live.push(p),
+        }
+    }
+
+    // Group by (kernel, signature): every group replays one plan. The
+    // groups run earliest-deadline-first; deadline-free groups go last.
+    let mut groups: HashMap<PlanKey, Vec<Pending>> = HashMap::new();
+    for p in live {
         let key = PlanKey { kernel: p.req.kernel, args: p.req.sig.clone(), opt: shared.opt };
         groups.entry(key).or_default().push(p);
     }
+    let mut groups: Vec<(PlanKey, Vec<Pending>)> = groups.into_iter().collect();
+    groups.sort_by_key(|(_, reqs)| {
+        let d = reqs.iter().filter_map(|p| p.req.deadline).min();
+        (d.is_none(), d)
+    });
+
     for (key, reqs) in groups {
         // Group formed: the batch-formation segment ends, plan
         // resolution starts.
         let plan0 = Instant::now();
-        let plan = resolve_plan(&key, builders, ctx, shared);
-        match plan {
+
+        // Containment gate: a quarantined plan is answered without any
+        // capture or replay work (an elapsed backoff admits one
+        // probation probe).
+        if let Admission::Quarantined { failures, retry_in } =
+            relock(&shared.cache).admission(&key)
+        {
+            let stamps = PlanStamps { plan0, plan1: plan0, cache_hit: false };
+            let plan_name = shared.kernel_name(key.kernel);
+            for p in reqs {
+                let err = ServeError::Quarantined {
+                    plan: plan_name.clone(),
+                    failures,
+                    retry_in_s: retry_in.as_secs_f64(),
+                };
+                finish(p, stamps, None, Err(err), shared);
+            }
+            continue;
+        }
+
+        match resolve_plan(&key, builders, ctx, shared) {
             Err(e) => {
                 let stamps = PlanStamps { plan0, plan1: Instant::now(), cache_hit: false };
-                let msg = e.to_string();
+                // Capture failures (errors, panics, injected) count
+                // toward the plan's quarantine streak.
+                relock(&shared.cache).record_failure(&key);
                 for p in reqs {
-                    finish(p, stamps, None, Err(Error::Invalid(msg.clone())), shared);
+                    finish(p, stamps, None, Err(e.clone()), shared);
                 }
             }
             Ok((plan, cache_hit)) => {
                 let stamps = PlanStamps { plan0, plan1: Instant::now(), cache_hit };
                 shared.stats.record_batch(key.kernel);
-                execute_group(plan, reqs, stamps, pool, shared);
+                execute_group(&key, plan, reqs, stamps, pool, shared);
             }
         }
     }
@@ -535,28 +766,36 @@ fn resolve_plan(
     builders: &[KernelEntry],
     ctx: &Context,
     shared: &Arc<Shared>,
-) -> Result<(Arc<CompiledPlan>, bool)> {
-    if let Some(p) = shared.cache.lock().unwrap().get(key) {
+) -> ServeResult<(Arc<CompiledPlan>, bool)> {
+    if let Some(p) = relock(&shared.cache).get(key) {
         return Ok((p, true));
     }
-    let builder = builders
-        .get(key.kernel)
-        .ok_or_else(|| Error::Invalid(format!("serve: kernel {} not registered", key.kernel)))?;
+    if faults::fire("serve.capture.fail") {
+        return Err(ServeError::Request(Error::Invalid(
+            "injected fault: serve.capture.fail".into(),
+        )));
+    }
+    let builder = builders.get(key.kernel).ok_or_else(|| {
+        ServeError::Request(Error::Invalid(format!(
+            "serve: kernel {} not registered",
+            key.kernel
+        )))
+    })?;
     // A panicking builder must not take the dispatcher down.
     let captured = catch_unwind(AssertUnwindSafe(|| match builder {
         KernelEntry::Expr(b) => cache::capture(ctx, b, key),
         KernelEntry::Prog(b) => cache::capture_program(b, key),
     }));
     let plan = match captured {
-        Ok(r) => r?,
+        Ok(r) => r.map_err(ServeError::Request)?,
         Err(payload) => {
-            return Err(Error::Invalid(format!(
-                "serve: kernel builder panicked during capture: {}",
-                panic_message(&payload)
-            )))
+            return Err(ServeError::Panicked {
+                plan: shared.kernel_name(key.kernel),
+                message: panic_message(&*payload),
+            })
         }
     };
-    shared.cache.lock().unwrap().insert(key.clone(), plan.clone());
+    relock(&shared.cache).insert(key.clone(), plan.clone());
     Ok((plan, false))
 }
 
@@ -566,23 +805,46 @@ fn resolve_plan(
 /// recycled arena from the plan's stash ([`exec::execute`] →
 /// `execute_into`), so steady-state sweeps allocate only the response
 /// vectors handed back to clients.
+///
+/// Panics anywhere in the sweep — the replay body, or the pool's chunk
+/// harness itself — come back as per-request
+/// [`ServeError::Panicked`] values with the payload message preserved;
+/// a sweep containing any panic counts one failure toward the plan's
+/// quarantine streak, a clean sweep resets it.
 fn execute_group(
+    key: &PlanKey,
     plan: Arc<CompiledPlan>,
     reqs: Vec<Pending>,
     stamps: PlanStamps,
     pool: Option<&SharedPool>,
     shared: &Arc<Shared>,
 ) {
-    let kernel = reqs.first().map_or(0, |p| p.req.kernel);
-    // Split the requests into Send-able argument sets and response ends.
+    let kernel = key.kernel;
+    let plan_name = shared.kernel_name(kernel);
+    // Split the requests into Send-able argument sets and response
+    // ends, shedding anything that expired while earlier groups of
+    // this batch ran.
     let mut metas: Vec<Pending> = Vec::new();
     let mut argsets: Vec<Vec<Data>> = Vec::new();
+    let now = Instant::now();
     for mut p in reqs {
+        if let Some(d) = p.req.deadline {
+            if now >= d {
+                let missed = now.saturating_duration_since(d).as_secs_f64();
+                let err = ServeError::DeadlineExceeded { missed_by_s: missed, executed: false };
+                finish(p, stamps, None, Err(err), shared);
+                continue;
+            }
+        }
         argsets.push(std::mem::take(&mut p.req.args).into_iter().map(Arg::into_data).collect());
         metas.push(p);
     }
     let n = argsets.len();
-    let results: Vec<Mutex<Option<Result<Vec<f64>>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    if n == 0 {
+        return;
+    }
+    let results: Vec<Mutex<Option<ServeResult<Vec<f64>>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
     // When tracing, each request's replay stamps its execution window
     // and worker lane (pre-sized cells: the sweep itself must stay
     // allocation-free).
@@ -593,38 +855,82 @@ fn execute_group(
         let t0 = ring.map_or(0, |r| r.now_ns());
         // An elemental that panics (bad index data) must not kill a
         // pool worker mid-sweep — that would stall the barrier.
-        let out = match catch_unwind(AssertUnwindSafe(|| exec::execute(&plan, &argsets[i]))) {
-            Ok(r) => r,
-            Err(payload) => Err(Error::Invalid(format!(
-                "serve: kernel panicked during execution: {}",
-                panic_message(&payload)
-            ))),
+        let out = match catch_unwind(AssertUnwindSafe(|| {
+            faults::fire_panic("serve.replay.panic");
+            exec::execute(&plan, &argsets[i])
+        })) {
+            Ok(r) => r.map_err(ServeError::Request),
+            Err(payload) => Err(ServeError::Panicked {
+                plan: plan_name.clone(),
+                message: panic_message(&*payload),
+            }),
         };
         if let (Some(r), Some(w)) = (ring, &windows) {
-            *w[i].lock().unwrap() = (t0, r.now_ns(), worker_lane());
+            *relock(&w[i]) = (t0, r.now_ns(), worker_lane());
         }
-        *results[i].lock().unwrap() = Some(out);
+        *relock(&results[i]) = Some(out);
     };
     let sweep0 = Instant::now();
-    match pool {
-        Some(p) if n > 1 => p.run_chunks(n, &body),
+    // Panics that escape `body` — the pool's own chunk harness, or an
+    // injected `pool.chunk.panic` — come back as (chunk, message) data
+    // instead of unwinding into the dispatcher.
+    let escaped: Vec<(usize, String)> = match pool {
+        Some(p) if n > 1 => p.run_chunks_collect(n, &body),
         _ => {
+            let mut v = Vec::new();
             for i in 0..n {
-                body(i);
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| {
+                    faults::fire_panic("pool.chunk.panic");
+                    body(i);
+                })) {
+                    v.push((i, panic_message(&*payload)));
+                }
             }
+            v
         }
-    }
+    };
     // True sweep wall time, once per sweep — the per-request
     // `busy_secs` view books this same wall time for every member.
     shared.stats.record_sweep(kernel, sweep0.elapsed().as_secs_f64());
+    let failmap: HashMap<usize, String> = escaped.into_iter().collect();
     let windows = windows.unwrap_or_default();
+    let done = Instant::now();
+    let mut panicked = 0usize;
     for (i, (pending, cell)) in metas.into_iter().zip(results).enumerate() {
-        let out = cell
+        let mut out = cell
             .into_inner()
-            .unwrap()
-            .unwrap_or_else(|| Err(Error::Invalid("serve: batch sweep lost a result".into())));
-        let exec = windows.get(i).map(|w| *w.lock().unwrap());
+            .unwrap_or_else(|e| e.into_inner())
+            .unwrap_or_else(|| {
+                Err(ServeError::Panicked {
+                    plan: plan_name.clone(),
+                    message: failmap
+                        .get(&i)
+                        .cloned()
+                        .unwrap_or_else(|| "serve: batch sweep lost a result".into()),
+                })
+            });
+        if matches!(out, Err(ServeError::Panicked { .. })) {
+            panicked += 1;
+        }
+        // The sweep ran, but too late for this member: the stale
+        // result is discarded, the client told by how much it missed.
+        if let (Ok(_), Some(d)) = (&out, pending.req.deadline) {
+            if done > d {
+                out = Err(ServeError::DeadlineExceeded {
+                    missed_by_s: done.saturating_duration_since(d).as_secs_f64(),
+                    executed: true,
+                });
+            }
+        }
+        let exec = windows.get(i).map(|w| *relock(w));
         finish(pending, stamps, exec, out, shared);
+    }
+    // Quarantine bookkeeping: one verdict per sweep, not per request.
+    let mut cache = relock(&shared.cache);
+    if panicked > 0 {
+        cache.record_failure(key);
+    } else {
+        cache.record_success(key);
     }
 }
 
@@ -635,12 +941,28 @@ fn finish(
     pending: Pending,
     stamps: PlanStamps,
     exec: Option<(u64, u64, u32)>,
-    out: Result<Vec<f64>>,
+    out: ServeResult<Vec<f64>>,
     shared: &Arc<Shared>,
 ) {
     let Pending { req, dequeued } = pending;
     let done = Instant::now();
     let ok = out.is_ok();
+    let outcome = match &out {
+        Ok(_) => Outcome::Ok,
+        Err(ServeError::Panicked { .. }) => Outcome::Panicked,
+        Err(ServeError::DeadlineExceeded { executed: false, .. }) => Outcome::DeadlineShed,
+        Err(ServeError::DeadlineExceeded { executed: true, .. }) => Outcome::DeadlineMiss,
+        Err(ServeError::Quarantined { .. }) => Outcome::Quarantined,
+        Err(_) => Outcome::Error,
+    };
+    match &out {
+        Err(ServeError::DeadlineExceeded { executed, missed_by_s }) => {
+            shared.stats.record_deadline(*executed, *missed_by_s);
+        }
+        Err(ServeError::Panicked { .. }) => shared.stats.inc_panicked(),
+        Err(ServeError::Quarantined { .. }) => shared.stats.inc_quarantined(),
+        _ => {}
+    }
     // The receiver may have given up; stats still count the completion.
     let _ = req.resp.try_send(out);
     let seg = Segments {
@@ -664,6 +986,7 @@ fn finish(
             seq: 0, // assigned by the ring
             worker,
             ok,
+            outcome,
             cache_hit: stamps.cache_hit,
             t_enq: since(req.enqueued),
             t_deq: since(dequeued),
@@ -673,15 +996,5 @@ fn finish(
             t_exec1,
             t_done: now,
         });
-    }
-}
-
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "<non-string panic payload>".to_string()
     }
 }

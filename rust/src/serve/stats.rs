@@ -175,6 +175,12 @@ pub struct ServeStats {
     cache_miss_ns: Arc<LogHistogram>,
     replay_ns: Arc<LogHistogram>,
     e2e_ns: Arc<LogHistogram>,
+    deadline_shed_total: Arc<Counter>,
+    deadline_miss_total: Arc<Counter>,
+    deadline_miss_ns: Arc<LogHistogram>,
+    panicked_total: Arc<Counter>,
+    quarantined_total: Arc<Counter>,
+    retries_total: Arc<Counter>,
     uptime_g: Arc<Gauge>,
     throughput_g: Arc<Gauge>,
     cache_hits_g: Arc<Gauge>,
@@ -182,6 +188,8 @@ pub struct ServeStats {
     cache_hit_rate_g: Arc<Gauge>,
     cache_evictions_g: Arc<Gauge>,
     cache_len_g: Arc<Gauge>,
+    quarantined_g: Arc<Gauge>,
+    quarantine_events_g: Arc<Gauge>,
 }
 
 impl ServeStats {
@@ -252,6 +260,36 @@ impl ServeStats {
                 "",
                 "end-to-end request latency, nanoseconds",
             ),
+            deadline_shed_total: registry.counter(
+                "arbb_serve_deadline_shed_total",
+                "",
+                "requests shed before execution because their deadline had passed",
+            ),
+            deadline_miss_total: registry.counter(
+                "arbb_serve_deadline_miss_total",
+                "",
+                "requests that executed but finished past their deadline",
+            ),
+            deadline_miss_ns: registry.histogram(
+                "arbb_serve_deadline_miss_ns",
+                "",
+                "how far past the deadline expired requests were answered, nanoseconds",
+            ),
+            panicked_total: registry.counter(
+                "arbb_serve_panicked_total",
+                "",
+                "requests answered with a contained capture/replay panic",
+            ),
+            quarantined_total: registry.counter(
+                "arbb_serve_quarantined_total",
+                "",
+                "requests rejected because their plan is quarantined",
+            ),
+            retries_total: registry.counter(
+                "arbb_serve_retries_total",
+                "",
+                "client resubmissions after transient rejections (call_retry)",
+            ),
             uptime_g: registry.gauge("arbb_serve_uptime_secs", "", "seconds since server start"),
             throughput_g: registry.gauge(
                 "arbb_serve_throughput_rps",
@@ -271,6 +309,16 @@ impl ServeStats {
                 "plan-cache LRU evictions",
             ),
             cache_len_g: registry.gauge("arbb_plan_cache_entries", "", "cached plans"),
+            quarantined_g: registry.gauge(
+                "arbb_plan_cache_quarantined",
+                "",
+                "plan keys currently quarantined",
+            ),
+            quarantine_events_g: registry.gauge(
+                "arbb_plan_cache_quarantine_events",
+                "",
+                "times any plan key entered quarantine",
+            ),
             registry,
         }
     }
@@ -330,6 +378,60 @@ impl ServeStats {
         self.rejected.load(Ordering::Relaxed)
     }
 
+    /// Count one deadline failure: shed pre-execution
+    /// (`executed = false`) or executed-but-late. The miss histogram
+    /// records how far past the deadline the request was answered.
+    pub fn record_deadline(&self, executed: bool, missed_by_s: f64) {
+        if executed {
+            self.deadline_miss_total.inc();
+        } else {
+            self.deadline_shed_total.inc();
+        }
+        if self.metrics {
+            self.deadline_miss_ns.record_secs(missed_by_s.max(0.0));
+        }
+    }
+
+    /// Count one contained capture/replay panic answer.
+    pub fn inc_panicked(&self) {
+        self.panicked_total.inc();
+    }
+
+    /// Count one quarantine rejection (at submission or dispatch).
+    pub fn inc_quarantined(&self) {
+        self.quarantined_total.inc();
+    }
+
+    /// Count one client retry after a transient rejection.
+    pub fn inc_retry(&self) {
+        self.retries_total.inc();
+    }
+
+    /// Requests shed unexecuted because their deadline had passed.
+    pub fn deadline_shed(&self) -> u64 {
+        self.deadline_shed_total.get()
+    }
+
+    /// Requests that executed but finished past their deadline.
+    pub fn deadline_missed(&self) -> u64 {
+        self.deadline_miss_total.get()
+    }
+
+    /// Requests answered with a contained panic.
+    pub fn panicked(&self) -> u64 {
+        self.panicked_total.get()
+    }
+
+    /// Requests rejected on a quarantined plan.
+    pub fn quarantined(&self) -> u64 {
+        self.quarantined_total.get()
+    }
+
+    /// Client resubmissions recorded by `call_retry`.
+    pub fn retries(&self) -> u64 {
+        self.retries_total.get()
+    }
+
     pub fn kernel(&self, ix: usize) -> Option<&KernelStats> {
         self.kernels.get(ix)
     }
@@ -369,6 +471,19 @@ impl ServeStats {
         self.cache_hit_rate_g.set(cache.hit_rate());
         self.cache_evictions_g.set(cache.evictions as f64);
         self.cache_len_g.set(cache.len as f64);
+        self.quarantined_g.set(cache.quarantined as f64);
+        self.quarantine_events_g.set(cache.quarantine_events as f64);
+        // Installed failpoints surface as per-site gauges, so a chaos
+        // run's metrics page shows exactly which faults were injected.
+        for c in crate::obs::faults::counts() {
+            let label = format!("site=\"{}\"", c.site);
+            self.registry
+                .gauge("arbb_fault_hits", &label, "failpoint trigger evaluations")
+                .set(c.hits as f64);
+            self.registry
+                .gauge("arbb_fault_fired", &label, "failpoint evaluations that tripped")
+                .set(c.fired as f64);
+        }
         self.registry.snapshot()
     }
 
@@ -395,6 +510,20 @@ impl ServeStats {
             cache.len,
             cache.capacity
         ));
+        let (shed, late, pan, quar, retries) = (
+            self.deadline_shed(),
+            self.deadline_missed(),
+            self.panicked(),
+            self.quarantined(),
+            self.retries(),
+        );
+        if shed + late + pan + quar + retries + cache.quarantine_events > 0 {
+            out.push_str(&format!(
+                "   resilience: {shed} shed, {late} late, {pan} panics contained, {quar} \
+                 quarantine rejections ({} quarantine events, {} active), {retries} retries\n",
+                cache.quarantine_events, cache.quarantined
+            ));
+        }
         out.push_str(&format!(
             "| {:<16} | {:>8} | {:>6} | {:>10} | {:>9} | {:>9} | {:>7} | {:>6} | {:>8} |\n",
             "kernel", "reqs", "errs", "req/s", "p50 ms", "p99 ms", "batch", "busy%", "sweep s"
@@ -497,6 +626,7 @@ mod tests {
             evictions: 0,
             len: 0,
             capacity: 16,
+            ..Default::default()
         });
         let h = snap.hist("arbb_serve_e2e_ns").unwrap();
         assert_eq!(h.count, 10_000);
@@ -515,6 +645,7 @@ mod tests {
             evictions: 0,
             len: 1,
             capacity: 16,
+            ..Default::default()
         };
         let snap = s.snapshot(&cache);
         let sum = |n: &str| snap.hist(n).unwrap().sum;
@@ -548,6 +679,7 @@ mod tests {
             evictions: 0,
             len: 0,
             capacity: 16,
+            ..Default::default()
         });
         assert_eq!(snap.hist("arbb_serve_e2e_ns").unwrap().count, 0);
         assert_eq!(s.kernel(0).unwrap().p50(), 0.0);
@@ -563,10 +695,46 @@ mod tests {
             evictions: 0,
             len: 1,
             capacity: 16,
+            ..Default::default()
         });
         assert!(r.contains("mxm"));
         assert!(r.contains("75.0% hit rate"));
         assert!(r.contains("busy%"));
         assert!(r.contains("sweep s"));
+        // A clean server shows no resilience line...
+        assert!(!r.contains("resilience:"));
+    }
+
+    #[test]
+    fn resilience_counters_and_report_line() {
+        let s = ServeStats::new(&["k".into()], true);
+        s.record_deadline(false, 1e-3);
+        s.record_deadline(false, 2e-3);
+        s.record_deadline(true, 5e-3);
+        s.inc_panicked();
+        s.inc_quarantined();
+        s.inc_retry();
+        s.inc_retry();
+        assert_eq!(s.deadline_shed(), 2);
+        assert_eq!(s.deadline_missed(), 1);
+        assert_eq!(s.panicked(), 1);
+        assert_eq!(s.quarantined(), 1);
+        assert_eq!(s.retries(), 2);
+        let cache = super::super::cache::CacheStats {
+            quarantined: 1,
+            quarantine_events: 3,
+            capacity: 16,
+            ..Default::default()
+        };
+        let snap = s.snapshot(&cache);
+        assert_eq!(snap.hist("arbb_serve_deadline_miss_ns").unwrap().count, 3);
+        let page = snap.to_prometheus();
+        assert!(page.contains("arbb_serve_deadline_shed_total 2"));
+        assert!(page.contains("arbb_serve_panicked_total 1"));
+        assert!(page.contains("arbb_plan_cache_quarantined 1"));
+        assert!(page.contains("arbb_plan_cache_quarantine_events 3"));
+        let r = s.report(&cache);
+        assert!(r.contains("resilience: 2 shed, 1 late, 1 panics contained"), "{r}");
+        assert!(r.contains("2 retries"), "{r}");
     }
 }

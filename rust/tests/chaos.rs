@@ -1,0 +1,285 @@
+//! Chaos suite: drives the deterministic fault-injection harness
+//! (`arbb_rs::obs::faults`) through real servers and pools, proving
+//! the containment properties the resilience layer promises:
+//!
+//! * an injected chunk-panic rate leaves every fault-free request
+//!   bit-identical and never costs a pool worker;
+//! * a worker killed outside chunk containment is respawned;
+//! * repeated capture failures quarantine the plan, and it heals once
+//!   the fault clears;
+//! * injected queue rejections hand the argument buffers back and
+//!   `call_retry` rides them out;
+//! * the same spec + seed replays the same fire pattern.
+//!
+//! Failpoints are process-global, so every test serialises on one
+//! mutex and clears the spec on exit (panic included) via a drop
+//! guard. Under the chaos CI leg this binary additionally runs with
+//! `PALLAS_FAULTS` set; each test installs its own spec on top, so the
+//! env spec only covers the window before the first install.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use arbb_rs::coordinator::engine::pool::ThreadPool;
+use arbb_rs::obs::faults::{self, FaultSpec};
+use arbb_rs::serve::{
+    Arg, ResilienceConfig, RetryPolicy, ServeConfig, ServeError, Server, SubmitError, Value,
+};
+
+/// Serialises the whole suite (faults are process-global) and clears
+/// the installed spec when the test ends, pass or fail.
+struct Chaos(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Chaos {
+    /// Take the suite lock without installing anything (for tests whose
+    /// server config installs the spec itself).
+    fn bare() -> Chaos {
+        static GUARD: Mutex<()> = Mutex::new(());
+        Chaos(GUARD.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Take the lock and install `spec` with `seed`.
+    fn install(spec: &str, seed: u64) -> Chaos {
+        let g = Chaos::bare();
+        faults::install(&FaultSpec::parse(spec, seed).unwrap());
+        g
+    }
+}
+
+impl Drop for Chaos {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+/// Config whose quarantine threshold is effectively infinite, so chunk
+/// panic streaks never quarantine the plan under sustained injection.
+fn no_quarantine(workers: usize, faults: Option<FaultSpec>) -> ServeConfig {
+    ServeConfig {
+        workers,
+        resilience: ResilienceConfig {
+            quarantine_threshold: u32::MAX,
+            faults,
+            ..ResilienceConfig::default()
+        },
+        ..ServeConfig::serial()
+    }
+}
+
+#[test]
+fn injected_chunk_panics_are_contained_and_fault_free_requests_are_bit_identical() {
+    let _chaos = Chaos::bare();
+    let spec = FaultSpec::parse("pool.chunk.panic:0.05", 42).unwrap();
+    let server = Server::builder(no_quarantine(4, Some(spec)))
+        .kernel("axpy", |_ctx, p| {
+            let x = p[0].vec1();
+            let y = p[1].vec1();
+            Value::Vec(&x.scale(2.0) + &y)
+        })
+        .start();
+    let client = server.client();
+
+    // Concurrent submitters so batches coalesce and sweeps actually fan
+    // out over the pool (the containment path under test).
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 50;
+    let injected = Arc::new(AtomicU64::new(0));
+    let succeeded = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let client = client.clone();
+            let injected = injected.clone();
+            let succeeded = succeeded.clone();
+            s.spawn(move || {
+                for k in 0..PER_THREAD {
+                    let base = (t * PER_THREAD + k) as f64;
+                    let x = vec![base, base + 1.0, base + 2.0];
+                    let y = vec![0.5, 0.25, 0.125];
+                    let want: Vec<f64> =
+                        x.iter().zip(&y).map(|(a, b)| 2.0 * a + b).collect();
+                    match client.call("axpy", vec![Arg::vec(x), Arg::vec(y)]) {
+                        Ok(got) => {
+                            // Bit-identical: injection must never skew a
+                            // request it did not kill.
+                            assert_eq!(got, want, "request {t}/{k} result skewed");
+                            succeeded.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(e) => {
+                            assert!(
+                                e.is_injected(),
+                                "only injected failures expected, got: {e}"
+                            );
+                            injected.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let total = (THREADS * PER_THREAD) as u64;
+    let inj = injected.load(Ordering::SeqCst);
+    let ok = succeeded.load(Ordering::SeqCst);
+    assert_eq!(inj + ok, total, "every request must be answered exactly once");
+    assert!(inj > 0, "a 5% rate over {total} requests must fire at least once");
+    assert!(ok > 0, "most requests must survive a 5% rate");
+    let hits = faults::counts()
+        .into_iter()
+        .find(|c| c.site == "pool.chunk.panic")
+        .expect("site must be installed");
+    // At least one trigger evaluation per request (capture-time engine
+    // sweeps may add more, and one capture-time fire can fail a whole
+    // group, so only the lower bounds are exact).
+    assert!(hits.hits >= total, "one trigger evaluation per request, got {hits:?}");
+    assert!(hits.fired > 0 && hits.fired <= hits.hits, "counters consistent: {hits:?}");
+
+    // Containment held: no pool worker was lost to a contained chunk
+    // panic, and with the spec cleared the same server serves
+    // fault-free, bit-identically.
+    let pool = arbb_rs::serve::pool::shared(4);
+    assert_eq!(pool.workers_respawned(), 0, "chunk panics must never cost a worker");
+    faults::clear();
+    for k in 0..50 {
+        let x = vec![k as f64; 8];
+        let y = vec![1.0; 8];
+        let want = vec![2.0 * k as f64 + 1.0; 8];
+        assert_eq!(client.call("axpy", vec![Arg::vec(x), Arg::vec(y)]).unwrap(), want);
+    }
+    assert_eq!(client.cache_stats().quarantine_events, 0);
+}
+
+#[test]
+fn a_worker_killed_outside_chunk_containment_is_respawned() {
+    let _chaos = Chaos::install("pool.worker.die:nth=1", 1);
+    // Private pool (not the interned registry): this test costs a
+    // worker thread on purpose and must not perturb the serving pools.
+    let pool = ThreadPool::new(3);
+    let counter = AtomicU64::new(0);
+    // Chunk bodies dawdle so the parked workers reliably wake into the
+    // job; the first worker to pick one up dies *before* claiming any
+    // chunk, so its peers and the submitting thread still finish every
+    // sweep. (The failpoint only fires on a worker's first evaluation;
+    // if a sweep completes submitter-only before any worker woke, the
+    // next sweep gives them another chance.)
+    let body = |_: usize| {
+        counter.fetch_add(1, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_micros(200));
+    };
+    let mut sweeps = 0u64;
+    let t0 = Instant::now();
+    while pool.workers_respawned() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "sentinel never respawned the worker ({sweeps} sweeps)"
+        );
+        pool.run_chunks(16, &body);
+        sweeps += 1;
+        // The sentinel runs during the dead thread's unwind; give it a
+        // beat before concluding it has not fired yet.
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(pool.workers_respawned(), 1, "exactly one worker died (nth=1)");
+    assert_eq!(
+        counter.load(Ordering::SeqCst),
+        sweeps * 16,
+        "every chunk of every sweep ran exactly once despite the death"
+    );
+
+    // Pool is whole again: a clean sweep runs with the full complement.
+    faults::clear();
+    pool.run_chunks(16, &body);
+    assert_eq!(counter.load(Ordering::SeqCst), (sweeps + 1) * 16);
+}
+
+#[test]
+fn repeated_capture_failures_quarantine_then_heal_once_the_fault_clears() {
+    let _chaos = Chaos::bare();
+    let spec = FaultSpec::parse("serve.capture.fail:1.0", 7).unwrap();
+    let cfg = ServeConfig {
+        resilience: ResilienceConfig {
+            quarantine_threshold: 3,
+            quarantine_backoff: Duration::from_millis(60),
+            quarantine_backoff_cap: Duration::from_secs(2),
+            faults: Some(spec),
+            ..ResilienceConfig::default()
+        },
+        ..ServeConfig::serial()
+    };
+    let server = Server::builder(cfg)
+        .kernel("scale", |_ctx, p| Value::Vec(p[0].vec1().scale(3.0)))
+        .start();
+    let client = server.client();
+    let args = || vec![Arg::vec(vec![1.0, 2.0])];
+
+    // Every capture attempt fails injected; the third lands the plan in
+    // quarantine.
+    for i in 0..3 {
+        let err = client.call("scale", args()).unwrap_err();
+        assert!(err.is_injected(), "call {i}: expected injected capture failure, got {err}");
+    }
+    let err = client.call("scale", args()).unwrap_err();
+    match &err {
+        ServeError::Quarantined { failures, .. } => assert_eq!(*failures, 3),
+        other => panic!("expected Quarantined after 3 failures, got {other}"),
+    }
+    assert_eq!(client.cache_stats().quarantine_events, 1);
+
+    // Fault cleared + backoff elapsed: the probation probe captures for
+    // real and the plan serves.
+    faults::clear();
+    std::thread::sleep(Duration::from_millis(80));
+    let out = client.call("scale", args()).unwrap();
+    assert_eq!(out, vec![3.0, 6.0]);
+    assert_eq!(client.cache_stats().quarantined, 0, "healed plan must leave quarantine");
+}
+
+#[test]
+fn injected_queue_rejection_hands_args_back_and_call_retry_rides_it_out() {
+    let _chaos = Chaos::bare();
+    let spec = FaultSpec::parse("serve.queue.reject:nth=1", 1).unwrap();
+    let server = Server::builder(no_quarantine(1, Some(spec)))
+        .kernel("neg", |_ctx, p| Value::Vec(p[0].vec1().scale(-1.0)))
+        .start();
+    let client = server.client();
+
+    // First submission trips the synthetic QueueFull; the argument
+    // buffers come back untouched.
+    match client.try_submit("neg", vec![Arg::vec(vec![1.0, 2.0, 3.0])]) {
+        Err(SubmitError::QueueFull(args)) => {
+            assert_eq!(args.len(), 1);
+            assert_eq!(args[0].len(), 3, "handed-back buffer must be intact");
+        }
+        other => panic!("expected injected QueueFull, got {other:?}"),
+    }
+    // The nth trigger is spent: the next submission goes through.
+    assert_eq!(client.call("neg", vec![Arg::vec(vec![4.0])]).unwrap(), vec![-4.0]);
+
+    // Same again, but let the retry loop absorb the rejection.
+    faults::install(&FaultSpec::parse("serve.queue.reject:nth=1", 1).unwrap());
+    let policy = RetryPolicy {
+        max_attempts: 4,
+        backoff: Duration::from_micros(200),
+        jitter: 0.25,
+    };
+    let out = client.call_retry("neg", vec![Arg::vec(vec![5.0, 6.0])], &policy).unwrap();
+    assert_eq!(out, vec![-5.0, -6.0]);
+}
+
+#[test]
+fn same_spec_and_seed_replay_the_same_outcome_pattern() {
+    let _chaos = Chaos::bare();
+    let run = || -> Vec<bool> {
+        let spec = FaultSpec::parse("pool.chunk.panic:0.3", 99).unwrap();
+        let server = Server::builder(no_quarantine(1, Some(spec)))
+            .kernel("inc", |_ctx, p| Value::Vec(p[0].vec1().scale(2.0)))
+            .start();
+        let client = server.client();
+        (0..40)
+            .map(|k| client.call("inc", vec![Arg::vec(vec![k as f64])]).is_ok())
+            .collect()
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "identical spec + seed must replay identical outcomes");
+    assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b), "0.3 should mix outcomes");
+}

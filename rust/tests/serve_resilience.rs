@@ -1,0 +1,318 @@
+//! Resilience integration tests: deadlines, panic quarantine,
+//! poisoned-plan containment and typed rejection of malformed requests.
+//!
+//! Everything here runs against real servers with no fault injection
+//! installed — the deterministic failpoint harness has its own suite
+//! (`tests/chaos.rs`, self-serialised because faults are
+//! process-global). These tests only use failure modes that are
+//! deterministic by construction: panicking builders, expired
+//! deadlines, malformed arguments.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use arbb_rs::coordinator::shape::Shape;
+use arbb_rs::serve::{
+    Arg, ResilienceConfig, RetryPolicy, ServeConfig, ServeError, Server, SubmitError, Value,
+};
+
+/// Serial config with a fast quarantine policy so lifecycle tests don't
+/// sleep for the production default 250 ms backoff.
+fn quick_cfg(threshold: u32, backoff_ms: u64) -> ServeConfig {
+    ServeConfig {
+        resilience: ResilienceConfig {
+            quarantine_threshold: threshold,
+            quarantine_backoff: Duration::from_millis(backoff_ms),
+            quarantine_backoff_cap: Duration::from_secs(2),
+            ..ResilienceConfig::default()
+        },
+        ..ServeConfig::serial()
+    }
+}
+
+#[test]
+fn expired_deadline_is_shed_without_execution() {
+    let server = Server::builder(ServeConfig::serial())
+        .kernel("double", |_ctx, p| Value::Vec(p[0].vec1().scale(2.0)))
+        .start();
+    let client = server.client();
+    // Warm the plan so the shed path is exercised on a cache-hit batch.
+    let out = client.call("double", vec![Arg::vec(vec![1.0, 2.0])]).unwrap();
+    assert_eq!(out, vec![2.0, 4.0]);
+
+    // A deadline of "now" has always passed by the time the dispatcher
+    // pulls the request: it must be shed before any replay work.
+    let err = client
+        .call_by("double", vec![Arg::vec(vec![1.0, 2.0])], Instant::now())
+        .unwrap_err();
+    match err {
+        ServeError::DeadlineExceeded { executed, missed_by_s } => {
+            assert!(!executed, "expired-on-arrival work must be shed, not run");
+            assert!(missed_by_s >= 0.0);
+        }
+        other => panic!("expected DeadlineExceeded, got {other}"),
+    }
+    let prom = client.metrics_prometheus();
+    assert!(
+        prom.contains("arbb_serve_deadline_shed_total 1"),
+        "shed counter missing:\n{prom}"
+    );
+
+    // A generous budget never trips the deadline machinery.
+    let out = client
+        .call_within("double", vec![Arg::vec(vec![3.0])], Duration::from_secs(60))
+        .unwrap();
+    assert_eq!(out, vec![6.0]);
+}
+
+#[test]
+fn hopeless_deadline_on_large_request_is_a_typed_miss() {
+    let server = Server::builder(ServeConfig::serial())
+        .kernel("triple", |_ctx, p| Value::Vec(p[0].vec1().scale(3.0)))
+        .start();
+    let client = server.client();
+    let n = 1 << 22;
+    // Warm the plan at this signature so only replay time is in play.
+    client.call("triple", vec![Arg::vec(vec![1.0; n])]).unwrap();
+
+    // 50 µs is far below the multi-millisecond replay of a 4M-element
+    // sweep: depending on dispatch timing this is either shed before
+    // the sweep or discarded after it, but it is always a typed
+    // deadline error — never a stale success.
+    let err = client
+        .call_within("triple", vec![Arg::vec(vec![1.0; n])], Duration::from_micros(50))
+        .unwrap_err();
+    assert!(
+        matches!(err, ServeError::DeadlineExceeded { .. }),
+        "expected DeadlineExceeded, got {err}"
+    );
+}
+
+#[test]
+fn quarantine_trips_heals_and_reports() {
+    let hits = Arc::new(AtomicU32::new(0));
+    let h = hits.clone();
+    let server = Server::builder(quick_cfg(2, 80))
+        .kernel("flaky", move |_ctx, p| {
+            // First two captures panic (a builder bug that "gets
+            // fixed"); later captures succeed.
+            if h.fetch_add(1, Ordering::SeqCst) < 2 {
+                panic!("flaky capture bug");
+            }
+            Value::Vec(p[0].vec1().scale(2.0))
+        })
+        .start();
+    let client = server.client();
+    let args = || vec![Arg::vec(vec![1.0, 2.0])];
+
+    // Two panicking captures: payload message preserved both times.
+    for _ in 0..2 {
+        let err = client.call("flaky", args()).unwrap_err();
+        match &err {
+            ServeError::Panicked { plan, message } => {
+                assert_eq!(plan, "flaky");
+                assert!(message.contains("flaky capture bug"), "message: {message}");
+            }
+            other => panic!("expected Panicked, got {other}"),
+        }
+    }
+
+    // Streak reached the threshold: the plan is quarantined — the
+    // dispatcher answers without running the builder again...
+    let err = client.call("flaky", args()).unwrap_err();
+    match &err {
+        ServeError::Quarantined { plan, failures, retry_in_s } => {
+            assert_eq!(plan, "flaky");
+            assert_eq!(*failures, 2);
+            assert!(*retry_in_s > 0.0);
+        }
+        other => panic!("expected Quarantined, got {other}"),
+    }
+    assert_eq!(hits.load(Ordering::SeqCst), 2, "quarantine must not re-run the builder");
+
+    // ...and submission fails fast, handing the argument buffers back.
+    match client.try_submit("flaky", args()) {
+        Err(SubmitError::Quarantined { args, failures, .. }) => {
+            assert_eq!(args.len(), 1);
+            assert_eq!(failures, 2);
+        }
+        other => panic!("expected submission-side quarantine, got {other:?}"),
+    }
+
+    // After the backoff elapses, one probation probe re-admits the key;
+    // the now-healthy builder captures and the plan serves again.
+    std::thread::sleep(Duration::from_millis(120));
+    let out = client.call("flaky", args()).unwrap();
+    assert_eq!(out, vec![2.0, 4.0]);
+    let out = client.call("flaky", args()).unwrap();
+    assert_eq!(out, vec![2.0, 4.0]);
+
+    let cs = client.cache_stats();
+    assert_eq!(cs.quarantine_events, 1);
+    assert_eq!(cs.quarantined, 0, "healed plan must leave quarantine");
+    let prom = client.metrics_prometheus();
+    assert!(prom.contains("arbb_serve_panicked_total 2"), "prom:\n{prom}");
+}
+
+#[test]
+fn failed_probation_requarantines_with_longer_backoff() {
+    let server = Server::builder(quick_cfg(1, 60))
+        .kernel("doomed", |_ctx, _p| -> Value { panic!("always broken") })
+        .start();
+    let client = server.client();
+    let args = || vec![Arg::vec(vec![1.0])];
+
+    // First failure trips the threshold-1 quarantine immediately.
+    let err = client.call("doomed", args()).unwrap_err();
+    assert!(matches!(err, ServeError::Panicked { .. }), "got {err}");
+    let first = match client.call("doomed", args()).unwrap_err() {
+        ServeError::Quarantined { retry_in_s, .. } => retry_in_s,
+        other => panic!("expected Quarantined, got {other}"),
+    };
+
+    // Probation probe fails -> re-quarantined with doubled backoff.
+    std::thread::sleep(Duration::from_millis(80));
+    let err = client.call("doomed", args()).unwrap_err();
+    assert!(matches!(err, ServeError::Panicked { .. }), "probe should run: {err}");
+    let second = match client.call("doomed", args()).unwrap_err() {
+        ServeError::Quarantined { retry_in_s, .. } => retry_in_s,
+        other => panic!("expected re-quarantine, got {other}"),
+    };
+    assert!(
+        second > first,
+        "backoff must grow after a failed probe: {first}s -> {second}s"
+    );
+    assert_eq!(client.cache_stats().quarantine_events, 2);
+}
+
+#[test]
+fn call_retry_rides_out_a_quarantine_window() {
+    let hits = Arc::new(AtomicU32::new(0));
+    let h = hits.clone();
+    let server = Server::builder(quick_cfg(1, 50))
+        .kernel("once_bad", move |_ctx, p| {
+            if h.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("transient capture bug");
+            }
+            Value::Vec(p[0].vec1().scale(5.0))
+        })
+        .start();
+    let client = server.client();
+
+    let err = client.call("once_bad", vec![Arg::vec(vec![1.0])]).unwrap_err();
+    assert!(matches!(err, ServeError::Panicked { .. }), "got {err}");
+
+    // The plan is quarantined for ~50 ms; a jittered-exponential retry
+    // loop keeps handing the same buffers back in until the probation
+    // probe admits it.
+    let policy = RetryPolicy {
+        max_attempts: 8,
+        backoff: Duration::from_millis(25),
+        jitter: 0.25,
+    };
+    let out = client.call_retry("once_bad", vec![Arg::vec(vec![2.0])], &policy).unwrap();
+    assert_eq!(out, vec![10.0]);
+    let prom = client.metrics_prometheus();
+    let retries: u64 = prom
+        .lines()
+        .find(|l| l.starts_with("arbb_serve_retries_total"))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    assert!(retries >= 1, "retry loop must have recorded attempts:\n{prom}");
+}
+
+#[test]
+fn malformed_requests_are_rejected_with_typed_errors() {
+    let server = Server::builder(ServeConfig::serial())
+        .kernel("id", |_ctx, p| Value::Vec(p[0].vec1().scale(1.0)))
+        .start();
+    let client = server.client();
+
+    // Shape whose element count overflows usize: must be a rejection,
+    // not an overflow panic on the submission path.
+    let evil = Arg::F64 {
+        data: vec![1.0; 4],
+        shape: Shape::D2 { rows: usize::MAX, cols: 2 },
+    };
+    let err = client.call("id", vec![evil]).unwrap_err();
+    match &err {
+        ServeError::Request(e) => assert!(e.to_string().contains("overflows"), "got {e}"),
+        other => panic!("expected Request rejection, got {other}"),
+    }
+
+    // Data length disagreeing with the declared shape.
+    let short = Arg::F64 { data: vec![1.0; 3], shape: Shape::D1(5) };
+    let err = client.call("id", vec![short]).unwrap_err();
+    match &err {
+        ServeError::Request(e) => {
+            assert!(e.to_string().contains("data length"), "got {e}")
+        }
+        other => panic!("expected Request rejection, got {other}"),
+    }
+
+    // Unknown kernel, via the non-blocking path: args are not consumed
+    // by the queue.
+    match client.try_submit("no_such", vec![Arg::vec(vec![1.0])]) {
+        Err(SubmitError::Rejected(e)) => {
+            assert!(e.to_string().contains("unknown kernel"), "got {e}")
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+
+    // The server is unharmed by any of the above.
+    let out = client.call("id", vec![Arg::vec(vec![7.0])]).unwrap();
+    assert_eq!(out, vec![7.0]);
+}
+
+#[test]
+fn out_of_range_gather_index_is_a_clean_error_not_a_panic() {
+    let server = Server::builder(ServeConfig::serial())
+        .kernel("permute", |_ctx, p| {
+            let x = p[0].vec1();
+            let ix = p[1].ints();
+            Value::Vec(x.gather(&ix))
+        })
+        .start();
+    let client = server.client();
+    let data = || Arg::vec(vec![10.0, 20.0, 30.0, 40.0]);
+
+    let ok = client.call("permute", vec![data(), Arg::ints(vec![3, 2, 1, 0])]).unwrap();
+    assert_eq!(ok, vec![40.0, 30.0, 20.0, 10.0]);
+
+    // A request-supplied index table pointing outside the source must
+    // be range-checked into an Invalid error before the unsafe tape
+    // loop ever sees it.
+    let err = client
+        .call("permute", vec![data(), Arg::ints(vec![0, 1, 2, 99])])
+        .unwrap_err();
+    assert!(
+        matches!(err, ServeError::Request(_)),
+        "expected a clean request error, got {err}"
+    );
+
+    // A deterministic *request* error is not a plan failure: the plan
+    // is not quarantined and keeps serving in-range requests.
+    let ok = client.call("permute", vec![data(), Arg::ints(vec![0, 0, 0, 0])]).unwrap();
+    assert_eq!(ok, vec![10.0; 4]);
+    assert_eq!(client.cache_stats().quarantine_events, 0);
+}
+
+#[test]
+fn i64_rooted_builders_are_rejected_at_capture() {
+    // A builder whose root is an i64 container: capture verification
+    // must reject it cleanly (serving results are f64), and the error
+    // must not quarantine-spiral into Panicked.
+    let server = Server::builder(ServeConfig::serial())
+        .kernel("introot", |_ctx, p| Value::Ints(p[0].ints()))
+        .start();
+    let client = server.client();
+    let err = client.call("introot", vec![Arg::ints(vec![1, 2, 3])]).unwrap_err();
+    match &err {
+        ServeError::Request(e) => {
+            assert!(e.to_string().contains("i64"), "got {e}")
+        }
+        other => panic!("expected Request rejection, got {other}"),
+    }
+}
