@@ -20,6 +20,7 @@
 //! | JIT vectorization (SSE/AVX per ISA) | [`super::engine::backend`] dispatch: scalar reference / AVX2, detected at runtime, bit-identical by contract |
 //! | perf instrumentation (VTune timelines in the paper's figures) | [`crate::obs`]: metrics registry + request trace spans ([`crate::obs::TraceRing`]) + per-opcode tape profiles ([`crate::obs::profile`]) |
 //! | C++ exceptions out of `arbb::call` (§2: errors surface at the call site) | typed per-request errors: [`crate::Error`] from eager forces, [`crate::serve::ServeError`] from serving (deadline / panic / quarantine containment), faults injectable via [`crate::obs::faults`] |
+//! | TBB-backed runtime scheduler, thread/core affinity (§2: many-core scaling without user threading code) | [`crate::serve`] sharded dispatcher: plan-affine routing to per-shard queues, idle-shard work stealing, per-shard interned pool slices, cost-aware batch formation ([`crate::serve::ServeConfig::shards`]) |
 //!
 //! ArBB's `_for`/`_while` describe *serial* control flow whose body is
 //! captured. This reproduction offers both cost models. On the eager

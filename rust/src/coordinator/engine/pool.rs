@@ -426,17 +426,30 @@ impl SharedPool {
     }
 }
 
-/// Registry of shared pools, interned by worker count.
-static POOLS: OnceLock<Mutex<HashMap<usize, Arc<SharedPool>>>> = OnceLock::new();
+/// Registry of shared pools, interned by `(label, worker count)`.
+///
+/// Label 0 is the process-default slice every O3 context and
+/// single-shard server attaches to; the sharded serve scheduler interns
+/// one slice per shard (label = shard index + 1) so each shard's sweeps
+/// run on a disjoint set of long-lived workers and a hot plan's arenas
+/// stay first-touched by the same threads.
+static POOLS: OnceLock<Mutex<HashMap<(usize, usize), Arc<SharedPool>>>> = OnceLock::new();
 
 /// The process-wide shared pool for `size` workers. The first caller
 /// spawns the threads; everyone after that reuses them — per-dispatch
 /// pool spawn/join is gone entirely.
 pub fn shared(size: usize) -> Arc<SharedPool> {
+    shared_labeled(0, size)
+}
+
+/// The process-wide shared pool for `(label, size)`. Distinct labels of
+/// the same size are distinct pools with their own threads; `shared`
+/// is label 0.
+pub fn shared_labeled(label: usize, size: usize) -> Arc<SharedPool> {
     let size = size.max(1);
     let pools = POOLS.get_or_init(|| Mutex::new(HashMap::new()));
     let mut map = pools.lock().unwrap();
-    map.entry(size).or_insert_with(|| Arc::new(SharedPool::new(size))).clone()
+    map.entry((label, size)).or_insert_with(|| Arc::new(SharedPool::new(size))).clone()
 }
 
 impl Drop for ThreadPool {
@@ -597,6 +610,16 @@ mod tests {
         let c = shared(3);
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(shared(0).size(), 1, "size clamps to at least 1");
+    }
+
+    #[test]
+    fn labeled_registry_interns_by_label_and_size() {
+        let base = shared(2);
+        assert!(Arc::ptr_eq(&base, &shared_labeled(0, 2)), "label 0 is the default registry");
+        let s1 = shared_labeled(7, 2);
+        assert!(!Arc::ptr_eq(&base, &s1), "labels are distinct pools");
+        assert!(Arc::ptr_eq(&s1, &shared_labeled(7, 2)));
+        assert_eq!(shared_labeled(7, 0).size(), 1);
     }
 
     /// Helper to smuggle a raw pointer into a Sync closure.

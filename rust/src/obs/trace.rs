@@ -76,6 +76,10 @@ pub struct SpanEvent {
     pub seq: u64,
     /// Pool-worker lane the replay ran on (see [`worker_lane`]).
     pub worker: u32,
+    /// Scheduler shard whose dispatcher executed the request (0 for
+    /// single-shard servers). With plan-affinity routing this is the
+    /// plan's home shard unless the request was stolen.
+    pub shard: u32,
     /// Whether the request succeeded.
     pub ok: bool,
     /// How the request ended (refines `ok`).
@@ -186,7 +190,10 @@ impl TraceRing {
     /// segments (`queue`, `batch`, `plan[hit]`/`plan[miss]`, `replay`)
     /// land on process 1 with one lane per kernel; per-worker replay
     /// execution windows land on process 2 with one lane per pool
-    /// worker. Timestamps are microseconds, as the format requires.
+    /// worker; per-shard dispatch windows (dequeue to response) land on
+    /// process 3 with one lane per scheduler shard, so a sharded
+    /// server's per-shard occupancy and steals are visible on the same
+    /// timeline. Timestamps are microseconds, as the format requires.
     pub fn chrome_json(&self) -> String {
         let evs = self.events();
         let mut out = String::from("{\"traceEvents\":[");
@@ -212,6 +219,13 @@ impl TraceRing {
              \"args\":{\"name\":\"replay exec (lane = pool worker)\"}}"
                 .to_string(),
         );
+        push(
+            &mut out,
+            &mut first,
+            "{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":3,\
+             \"args\":{\"name\":\"dispatch (lane = scheduler shard)\"}}"
+                .to_string(),
+        );
         for (k, name) in self.names.iter().enumerate() {
             push(
                 &mut out,
@@ -227,11 +241,13 @@ impl TraceRing {
             format!(
                 "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
                  \"ts\":{:.3},\"dur\":{:.3},\
-                 \"args\":{{\"seq\":{},\"kernel\":{},\"ok\":{},\"outcome\":\"{}\"}}}}",
+                 \"args\":{{\"seq\":{},\"kernel\":{},\"shard\":{},\"ok\":{},\
+                 \"outcome\":\"{}\"}}}}",
                 t0 as f64 / 1e3,
                 t1.saturating_sub(t0) as f64 / 1e3,
                 ev.seq,
                 ev.kernel,
+                ev.shard,
                 ev.ok,
                 ev.outcome.as_str()
             )
@@ -246,6 +262,7 @@ impl TraceRing {
             if e.t_exec1 > e.t_exec0 {
                 push(&mut out, &mut first, dur("exec", 2, e.worker as u64, e.t_exec0, e.t_exec1, e));
             }
+            push(&mut out, &mut first, dur("dispatch", 3, e.shard as u64, e.t_deq, e.t_done, e));
         }
         out.push_str("]}");
         out
@@ -333,6 +350,8 @@ mod tests {
         assert!(j.contains("\"name\":\"plan[hit]\""));
         assert!(j.contains("\"name\":\"replay\""));
         assert!(j.contains("\"name\":\"exec\""));
+        assert!(j.contains("\"name\":\"dispatch\""));
+        assert!(j.contains("scheduler shard"));
         assert!(j.contains("\"outcome\":\"ok\""));
         assert!(j.contains("mxm"));
         assert!(j.ends_with("]}"));

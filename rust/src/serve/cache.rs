@@ -271,7 +271,28 @@ impl PlanCache {
     /// Never starts a probation probe (that is [`PlanCache::admission`]'s
     /// job, on the dispatcher).
     pub fn peek_quarantined(&self, key: &PlanKey) -> Option<(Duration, u32)> {
-        let h = self.health.get(key)?;
+        self.peek_quarantined_parts(key.kernel, &key.args, key.opt)
+    }
+
+    /// [`PlanCache::peek_quarantined`] against the key's *fields*, so
+    /// the hot submission path needn't clone a signature `Vec` just to
+    /// probe. The health table holds only misbehaving keys (success
+    /// removes the entry), so the linear scan is over a tiny — normally
+    /// empty — map.
+    pub fn peek_quarantined_parts(
+        &self,
+        kernel: usize,
+        args: &[(DType, Shape)],
+        opt: OptLevel,
+    ) -> Option<(Duration, u32)> {
+        if self.health.is_empty() {
+            return None;
+        }
+        let h = self
+            .health
+            .iter()
+            .find(|(k, _)| k.kernel == kernel && k.opt == opt && k.args == args)
+            .map(|(_, h)| h)?;
         let until = h.until?;
         let now = Instant::now();
         if now < until {

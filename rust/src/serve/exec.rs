@@ -30,6 +30,17 @@
 //! [`CompiledPlan`]: replaying it touches no `Rc`, no `RefCell` and no
 //! node storage, so any number of pool workers can execute the same
 //! cached plan on different requests at once.
+//!
+//! Under the sharded scheduler (see [`super::scheduler`]), plan-affine
+//! routing keeps all replays of a hot plan on one shard, and each shard
+//! sweeps on its own interned pool slice. The arena stash is therefore
+//! effectively shard-local in steady state: arenas are recycled by the
+//! same dispatcher thread and re-touched by the same pool workers that
+//! first faulted their pages in, so slot buffers stay warm in that
+//! slice's caches. A *stolen* request replays on the thief's slice
+//! against the same `CompiledPlan` — correctness is unaffected (the
+//! stash is a plain `Mutex` and plans are `Sync`), only locality is
+//! traded for latency, which is why the queues steal bulk work first.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

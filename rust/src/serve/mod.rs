@@ -19,12 +19,20 @@
 //!    `(kernel id, argument shapes, OptLevel)` with LRU eviction
 //!    ([`cache::PlanCache`]). A cache hit performs zero capture and
 //!    zero optimiser-pass work.
-//! 3. **Requests are queued, batched and swept.** A bounded MPSC queue
-//!    feeds a dispatcher that coalesces same-plan requests and executes
-//!    each group as a single fork-join sweep on the persistent shared
-//!    worker pool ([`pool`]) — one barrier per batch instead of one per
-//!    step per request. [`Client::try_submit`] returns
-//!    [`SubmitError::QueueFull`] under backpressure.
+//! 3. **Requests are routed, queued, batched and swept.** The
+//!    scheduler is sharded ([`ServeConfig::shards`], `PALLAS_SHARDS`):
+//!    each request hashes its plan-cache key to a **home shard** whose
+//!    bounded two-lane queue (deadline requests ride express) feeds a
+//!    dispatcher thread with its own slice of the persistent worker
+//!    pool ([`pool`]) — so a hot plan's replay arenas stay warm on one
+//!    shard, and idle shards steal cold bulk work from the deepest
+//!    peer. Each dispatcher coalesces same-plan requests cost-aware
+//!    (cheap kernels batch aggressively, expensive ones are cut short
+//!    near deadlines) and executes each group as a single fork-join
+//!    sweep — one barrier per batch instead of one per step per
+//!    request. [`Client::try_submit`] returns
+//!    [`SubmitError::QueueFull`] under backpressure, and responses ride
+//!    recycled slots so steady-state submission is allocation-free.
 //! 4. **Serving stats are first-class.** Throughput, p50/p99 latency,
 //!    batch sizes and cache hit rates per kernel ([`stats`]), rendered
 //!    in the same style as [`crate::bench::harness`] reports — and
@@ -116,13 +124,13 @@ use crate::obs::faults::FaultSpec;
 pub use cache::{Admission, CacheStats, PlanCache, PlanKey, PlanState, QuarantinePolicy};
 pub use error::{RetryPolicy, ServeError, ServeResult};
 pub use exec::{ArenaStats, CompiledPlan};
-pub use scheduler::{Client, Server, ServerBuilder, SubmitError, Ticket};
-pub use stats::{KernelStats, Segments, ServeStats};
+pub use scheduler::{Client, SchedulerStats, Server, ServerBuilder, SubmitError, Ticket};
+pub use stats::{KernelStats, Lane, Segments, ServeStats, ShardStats};
 
 /// A kernel builder: constructs the expression DAG for one request
 /// signature from placeholder parameter containers. Runs on the
 /// dispatcher thread; must be capture-pure (lazy).
-pub type KernelFn = dyn Fn(&Context, &[Value]) -> Value + Send;
+pub type KernelFn = dyn Fn(&Context, &[Value]) -> Value + Send + Sync;
 
 /// A whole-kernel program builder ([`ServerBuilder::program`]): given a
 /// request signature, captures a multi-step
@@ -133,8 +141,9 @@ pub type KernelFn = dyn Fn(&Context, &[Value]) -> Value + Send;
 /// with zero heap allocations, extending the single-step zero-alloc
 /// guarantee of [`exec::execute_into`] to whole programs. Program
 /// parameters are 1-D f64 containers.
-pub type ProgramFn =
-    dyn Fn(&[(DType, Shape)]) -> crate::Result<crate::coordinator::program::Program> + Send;
+pub type ProgramFn = dyn Fn(&[(DType, Shape)]) -> crate::Result<crate::coordinator::program::Program>
+    + Send
+    + Sync;
 
 /// Observability configuration (see [`crate::obs`]).
 #[derive(Debug, Clone)]
@@ -167,8 +176,15 @@ impl Default for ObsConfig {
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Worker threads in the shared pool that batch sweeps fan out
-    /// over (1 = run requests inline on the dispatcher).
+    /// over (1 = run requests inline on the dispatcher). With multiple
+    /// shards the workers are split evenly into per-shard pool slices.
     pub workers: usize,
+    /// Scheduler shards: dispatcher threads, each with its own bounded
+    /// queue and pool slice. Requests are routed to a home shard by
+    /// hashing their plan-cache key (plan affinity); idle shards steal.
+    /// `0` = auto: `PALLAS_SHARDS` if set, else physical-core-derived.
+    /// `1` degenerates to the single-queue scheduler.
+    pub shards: usize,
     /// Optimisation level recorded in plan-cache keys and used for
     /// capture-time verification runs.
     pub opt_level: OptLevel,
@@ -229,6 +245,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             workers: pool::default_workers(),
+            shards: 0,
             opt_level: OptLevel::O3,
             queue_capacity: 256,
             max_batch: 32,
@@ -246,7 +263,27 @@ impl ServeConfig {
     /// Single-worker, serial configuration (useful for tests and as the
     /// no-batching comparison point in benches).
     pub fn serial() -> Self {
-        ServeConfig { workers: 1, opt_level: OptLevel::O2, ..Default::default() }
+        ServeConfig { workers: 1, shards: 1, opt_level: OptLevel::O2, ..Default::default() }
+    }
+
+    /// Resolve the scheduler shard count. An explicit `shards` wins
+    /// outright (tests that assert sharded behaviour survive a
+    /// `PALLAS_SHARDS=1` CI leg); `0` consults `PALLAS_SHARDS`, then
+    /// derives from physical cores (half the logical count), capped at
+    /// the worker count so no shard is left without a pool slice.
+    pub fn effective_shards(&self) -> usize {
+        if self.shards > 0 {
+            return self.shards;
+        }
+        if let Ok(s) = std::env::var("PALLAS_SHARDS") {
+            if let Ok(n) = s.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        let logical = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (logical / 2).max(1).min(self.workers.max(1))
     }
 }
 

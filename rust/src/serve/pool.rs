@@ -6,7 +6,7 @@
 //! batch sweeps and every O3 context in the process share one set of
 //! long-lived threads — there is no per-dispatch spawn/join anywhere.
 
-pub use crate::coordinator::engine::pool::{shared, SharedPool};
+pub use crate::coordinator::engine::pool::{shared, shared_labeled, SharedPool};
 
 use std::sync::Arc;
 
@@ -44,6 +44,21 @@ pub fn for_workers(workers: usize) -> Option<Arc<SharedPool>> {
     }
 }
 
+/// The pool slice scheduler shard `shard` sweeps on: an interned pool
+/// keyed by `(shard label, workers_per_shard)`, so each shard's sweeps
+/// always land on the same threads (first-touch locality — a shard's
+/// plans, arenas and argument pages stay warm on its own slice).
+/// `None` when the slice is a single worker (the shard dispatcher runs
+/// requests inline). Label 0 is the process-default pool; shard `i`
+/// uses label `i + 1`.
+pub fn for_shard(shard: usize, workers_per_shard: usize) -> Option<Arc<SharedPool>> {
+    if workers_per_shard > 1 {
+        Some(shared_labeled(shard + 1, workers_per_shard))
+    } else {
+        None
+    }
+}
+
 /// Default worker count: one per available hardware thread.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -57,6 +72,18 @@ mod tests {
     fn single_worker_has_no_pool() {
         assert!(for_workers(1).is_none());
         assert!(for_workers(0).is_none());
+        assert!(for_shard(0, 1).is_none());
+    }
+
+    #[test]
+    fn shard_slices_are_distinct_and_interned() {
+        let a = for_shard(5, 2).unwrap();
+        let b = for_shard(6, 2).unwrap();
+        let a2 = for_shard(5, 2).unwrap();
+        // Same shard re-attaches to the same slice; different shards
+        // get different slices even at the same size.
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert!(!Arc::ptr_eq(&a, &b));
     }
 
     #[test]

@@ -1,25 +1,47 @@
-//! Request scheduler: bounded submission queue, batching dispatcher,
-//! backpressure, deadlines and containment.
+//! Sharded request scheduler: plan-affine routing, bounded per-shard
+//! queues with priority lanes, idle-shard work stealing, cost-aware
+//! batch formation, backpressure, deadlines and containment.
 //!
-//! Clients submit through a bounded MPSC channel ([`Client::try_submit`]
-//! returns [`SubmitError::QueueFull`] when the queue is at capacity —
-//! callers shed or retry). A single dispatcher thread owns the capture
-//! context and the registered builders; it drains up to
-//! `max_batch` queued requests at a time, groups them by
-//! `(kernel, signature)`, resolves each group's [`CompiledPlan`] through
-//! the plan cache, and executes the whole group as **one fork-join
-//! sweep** on the shared worker pool — request `r` is chunk `r` of the
-//! sweep. Coalescing same-plan requests this way amortises both the
-//! dispatch round-trip and the fork-join barrier across the batch,
-//! which is where the serving throughput win over per-dispatch
-//! evaluation comes from (see `benches/serve_throughput.rs`).
+//! The dispatcher is **sharded**: `ServeConfig::shards` (default
+//! physical-core-derived, `PALLAS_SHARDS` overridable) dispatcher
+//! threads each own a bounded two-lane queue and a slice of the shared
+//! worker pool. A request is routed to its **home shard** by hashing
+//! its plan-cache key (kernel, signature, opt level) — so every request
+//! that replays one plan lands on one shard, keeping that plan's
+//! recycled `ReplayArena`s and its pool slice's pages warm
+//! (first-touch locality). A shard that runs dry **steals** a batch
+//! from the deepest other queue, so skewed tenant mixes don't strand
+//! cores; steals take cold bulk work first and leave express work home.
+//!
+//! Each shard queue has two **priority lanes**: requests carrying a
+//! deadline ride the express lane and are popped before any bulk work.
+//! Batch formation is **cost-aware**: the dispatcher batches same-plan
+//! requests up to `max_batch`, but consults the per-kernel ns/request
+//! EWMA ([`ServeStats::est_cost_ns`]) and stops coalescing once the
+//! estimated sweep cost of the batch would push the nearest queued
+//! deadline within the configured slack — cheap spmv-class kernels
+//! batch aggressively, expensive dgemm-class batches are cut short.
+//! With one shard the scheduler degenerates to exactly the old
+//! single-queue behaviour.
+//!
+//! Each popped batch is grouped by `(kernel, signature)`; each group
+//! resolves its [`CompiledPlan`] through the plan cache and executes as
+//! **one fork-join sweep** on the shard's pool slice — request `r` is
+//! chunk `r` of the sweep. Coalescing same-plan requests amortises both
+//! the dispatch round-trip and the fork-join barrier across the batch
+//! (see `benches/serve_throughput.rs`).
+//!
+//! Responses ride **recycled slots** from a free list
+//! ([`SlotPool`]) instead of a fresh channel per request, so
+//! steady-state submission is allocation-free (proved by
+//! `tests/serve_alloc.rs`).
 //!
 //! Requests may carry a **deadline** ([`Client::submit_by`],
 //! [`Client::call_within`]): already-expired work is shed before any
 //! capture or replay cost, batch formation stops coalescing once the
-//! nearest queued deadline is within the configured slack, groups run
-//! earliest-deadline-first, and a sweep that finishes past a member's
-//! deadline answers it with
+//! nearest queued deadline is within slack plus the batch's estimated
+//! cost, groups run earliest-deadline-first, and a sweep that finishes
+//! past a member's deadline answers it with
 //! [`ServeError::DeadlineExceeded`]` { executed: true }` instead of the
 //! stale result.
 //!
@@ -27,25 +49,28 @@
 //! enqueue, dequeue, group formation, plan resolution, response — and
 //! the stamps become a [`Segments`] decomposition recorded into the
 //! lock-free [`ServeStats`] (and, when a trace ring is configured, a
-//! [`SpanEvent`] dumpable as Chrome trace JSON via
-//! [`Client::trace_chrome_json`]). The segments share their endpoint
-//! stamps, so queue-wait + batch-formation + cache + replay equals
-//! end-to-end latency exactly.
+//! [`SpanEvent`] carrying the executing shard, dumpable as Chrome
+//! trace JSON via [`Client::trace_chrome_json`] with one lane per
+//! shard). The segments share their endpoint stamps, so queue-wait +
+//! batch-formation + cache + replay equals end-to-end latency exactly.
 //!
 //! Failures are contained: builder panics, capture rejections, engine
 //! errors and elemental panics all turn into typed per-request
 //! [`ServeError`] responses (panic payload messages preserved); the
-//! dispatcher and the pool workers keep running, and a plan that fails
-//! repeatedly is quarantined by the cache's
+//! shard dispatchers and the pool workers keep running — a worker that
+//! panics mid-steal is respawned by its pool's sentinel and the stolen
+//! batch is still answered — and a plan that fails repeatedly is
+//! quarantined by the cache's
 //! [`QuarantinePolicy`](super::cache::QuarantinePolicy) so it cannot
 //! poison every batch it appears in.
 
-use std::collections::HashMap;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
+use std::hash::{Hash, Hasher};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
-use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -62,8 +87,13 @@ use super::cache::{self, Admission, CacheStats, PlanCache, PlanKey, QuarantinePo
 use super::error::{RetryPolicy, ServeError, ServeResult};
 use super::exec::{self, CompiledPlan};
 use super::pool::{self, SharedPool};
-use super::stats::{KernelStats, Segments, ServeStats};
+use super::stats::{KernelStats, Lane, Segments, ServeStats};
 use super::{Arg, KernelFn, ProgramFn, ServeConfig, Value};
+
+/// Idle-shard backoff bounds (µs): a dry shard sleeps between steal
+/// scans, doubling from the floor to the ceiling.
+const IDLE_MIN_US: u64 = 100;
+const IDLE_MAX_US: u64 = 2_000;
 
 /// A registered kernel: an expression builder (captured through the
 /// coordinator DSL) or a whole-kernel program builder.
@@ -82,9 +112,9 @@ fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// hand the argument buffers back so the caller (or
 /// [`Client::call_retry`]) can resubmit without copies.
 pub enum SubmitError {
-    /// The bounded queue is at capacity (backpressure). The request's
-    /// arguments are handed back so the caller can retry without
-    /// copies.
+    /// The home shard's bounded queue is at capacity (backpressure).
+    /// The request's arguments are handed back so the caller can retry
+    /// without copies.
     QueueFull(Vec<Arg>),
     /// The plan for this (kernel, signature) is quarantined; the
     /// request was rejected at submission, before queueing. Arguments
@@ -129,25 +159,341 @@ impl fmt::Display for SubmitError {
     }
 }
 
+// ---------------------------------------------------------------------
+// argument signatures (allocation-free for small arities)
+// ---------------------------------------------------------------------
+
+/// Maximum argument arity stored inline (no heap) in a [`Sig`].
+const SIG_INLINE: usize = 8;
+
+/// A request's argument signature. Kernels with up to [`SIG_INLINE`]
+/// arguments — every registered kernel in practice — keep their
+/// signature in a fixed inline array, so building one on the submit
+/// path allocates nothing; wider signatures fall back to a `Vec`.
+enum Sig {
+    Inline { n: u8, a: [(DType, Shape); SIG_INLINE] },
+    Heap(Vec<(DType, Shape)>),
+}
+
+impl Sig {
+    fn from_args(args: &[Arg]) -> Sig {
+        if args.len() <= SIG_INLINE {
+            let mut a = [(DType::F64, Shape::Scalar); SIG_INLINE];
+            for (i, arg) in args.iter().enumerate() {
+                a[i] = (arg.dtype(), arg.shape());
+            }
+            Sig::Inline { n: args.len() as u8, a }
+        } else {
+            Sig::Heap(args.iter().map(|x| (x.dtype(), x.shape())).collect())
+        }
+    }
+
+    fn as_slice(&self) -> &[(DType, Shape)] {
+        match self {
+            Sig::Inline { n, a } => &a[..*n as usize],
+            Sig::Heap(v) => v,
+        }
+    }
+
+    fn to_vec(&self) -> Vec<(DType, Shape)> {
+        self.as_slice().to_vec()
+    }
+}
+
+// ---------------------------------------------------------------------
+// recycled response slots (allocation-free steady-state submit)
+// ---------------------------------------------------------------------
+
+/// A reusable one-shot response cell: the dispatcher `put`s exactly
+/// once, the client takes and recycles the slot back to the pool.
+struct RespSlot {
+    val: Mutex<Option<ServeResult<Vec<f64>>>>,
+    cv: Condvar,
+}
+
+impl RespSlot {
+    fn new() -> RespSlot {
+        RespSlot { val: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    /// Write-once: a second put on an unanswered slot is dropped (the
+    /// first answer wins; the slot is reset on recycle).
+    fn put(&self, v: ServeResult<Vec<f64>>) {
+        let mut g = relock(&self.val);
+        if g.is_none() {
+            *g = Some(v);
+            self.cv.notify_all();
+        }
+    }
+
+    fn take_blocking(&self) -> ServeResult<Vec<f64>> {
+        let mut g = relock(&self.val);
+        loop {
+            if let Some(v) = g.take() {
+                return v;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Free list of response slots. `acquire` pops a recycled slot (no
+/// allocation once warm); `recycle` clears and returns it. The list is
+/// pre-sized at server start and never grows past its capacity, so
+/// recycling never allocates either.
+struct SlotPool {
+    free: Mutex<Vec<Arc<RespSlot>>>,
+}
+
+impl SlotPool {
+    fn with_capacity(cap: usize) -> SlotPool {
+        SlotPool { free: Mutex::new(Vec::with_capacity(cap.max(1))) }
+    }
+
+    fn acquire(&self) -> Arc<RespSlot> {
+        relock(&self.free).pop().unwrap_or_else(|| Arc::new(RespSlot::new()))
+    }
+
+    fn recycle(&self, slot: Arc<RespSlot>) {
+        *relock(&slot.val) = None;
+        let mut free = relock(&self.free);
+        if free.len() < free.capacity() {
+            free.push(slot);
+        }
+        // Past capacity the slot is simply dropped — the pool is sized
+        // to the whole queue, so this only happens for tickets
+        // abandoned and re-acquired in unusual interleavings.
+    }
+}
+
+/// The dispatcher's end of a response slot. Guarantees exactly one
+/// answer: if a request is dropped unanswered (dispatcher unwinding on
+/// shutdown), the drop guard answers [`ServeError::Shutdown`] so the
+/// waiting client never hangs.
+struct Responder {
+    slot: Arc<RespSlot>,
+    sent: bool,
+}
+
+impl Responder {
+    fn send(&mut self, v: ServeResult<Vec<f64>>) {
+        if !self.sent {
+            self.sent = true;
+            self.slot.put(v);
+        }
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if !self.sent {
+            self.slot.put(Err(ServeError::Shutdown));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// requests and shard queues
+// ---------------------------------------------------------------------
+
 struct Request {
     kernel: usize,
-    sig: Vec<(DType, Shape)>,
+    sig: Sig,
     args: Vec<Arg>,
     enqueued: Instant,
     deadline: Option<Instant>,
-    resp: SyncSender<ServeResult<Vec<f64>>>,
+    /// Shard this request's plan hashes to (affinity routing target).
+    home: u32,
+    /// Priority lane: deadline-carrying requests ride express.
+    lane: Lane,
+    resp: Responder,
 }
 
-/// A request plus the instant the dispatcher pulled it off the queue
+/// A request plus the instant a dispatcher pulled it off a queue
 /// (end of its queue-wait segment).
 struct Pending {
     req: Request,
     dequeued: Instant,
 }
 
-enum Msg {
-    Call(Request),
-    Shutdown,
+enum PushOutcome {
+    Pushed,
+    Full(Request),
+    Closed(Request),
+}
+
+struct LaneState {
+    express: VecDeque<Request>,
+    bulk: VecDeque<Request>,
+    closed: bool,
+}
+
+impl LaneState {
+    fn len(&self) -> usize {
+        self.express.len() + self.bulk.len()
+    }
+}
+
+/// One shard's bounded two-lane queue. The express lane (deadline
+/// requests) is always drained before bulk. `depth` mirrors the queued
+/// count as a lock-free atomic so peers can pick steal victims without
+/// taking every queue's lock.
+struct ShardQueue {
+    state: Mutex<LaneState>,
+    work_cv: Condvar,
+    space_cv: Condvar,
+    cap: usize,
+    depth: AtomicUsize,
+}
+
+impl ShardQueue {
+    fn new(cap: usize) -> ShardQueue {
+        let cap = cap.max(1);
+        ShardQueue {
+            // Lanes pre-allocated at capacity: pushes on the submit
+            // path never grow the deques.
+            state: Mutex::new(LaneState {
+                express: VecDeque::with_capacity(cap),
+                bulk: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            cap,
+            depth: AtomicUsize::new(0),
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    fn try_push(&self, req: Request) -> PushOutcome {
+        let mut st = relock(&self.state);
+        if st.closed {
+            return PushOutcome::Closed(req);
+        }
+        if st.len() >= self.cap {
+            return PushOutcome::Full(req);
+        }
+        match req.lane {
+            Lane::Express => st.express.push_back(req),
+            Lane::Bulk => st.bulk.push_back(req),
+        }
+        self.depth.store(st.len(), Ordering::Relaxed);
+        drop(st);
+        self.work_cv.notify_one();
+        PushOutcome::Pushed
+    }
+
+    /// Blocking push: waits for queue space; `Err` hands the request
+    /// back when the queue closed while waiting.
+    fn push_blocking(&self, req: Request) -> std::result::Result<(), Request> {
+        let mut st = relock(&self.state);
+        while !st.closed && st.len() >= self.cap {
+            st = self.space_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.closed {
+            return Err(req);
+        }
+        match req.lane {
+            Lane::Express => st.express.push_back(req),
+            Lane::Bulk => st.bulk.push_back(req),
+        }
+        self.depth.store(st.len(), Ordering::Relaxed);
+        drop(st);
+        self.work_cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `max_batch` requests — express lane first — with
+    /// cost-aware coalescing: before each additional pop, if the
+    /// estimated sweep cost of what's already batched would push the
+    /// nearest batched deadline within `slack`, stop (the near-deadline
+    /// request must not wait behind more batch formation). Returns the
+    /// popped batch stamped as [`Pending`], and whether the queue is
+    /// closed **and** fully drained (the dispatcher's exit signal).
+    fn pop_batch(
+        &self,
+        max_batch: usize,
+        slack: Duration,
+        stats: &ServeStats,
+    ) -> (Vec<Pending>, bool) {
+        let mut st = relock(&self.state);
+        let mut out: Vec<Pending> = Vec::new();
+        let mut nearest: Option<Instant> = None;
+        let mut est_ns: u64 = 0;
+        let now = Instant::now();
+        while out.len() < max_batch {
+            if !out.is_empty() {
+                if let Some(d) = nearest {
+                    let budget = slack + Duration::from_nanos(est_ns);
+                    if d.saturating_duration_since(Instant::now()) <= budget {
+                        break;
+                    }
+                }
+            }
+            let Some(r) = st.express.pop_front().or_else(|| st.bulk.pop_front()) else {
+                break;
+            };
+            if let Some(d) = r.deadline {
+                nearest = Some(nearest.map_or(d, |n: Instant| n.min(d)));
+            }
+            est_ns = est_ns.saturating_add(stats.est_cost_ns(r.kernel));
+            out.push(Pending { req: r, dequeued: now });
+        }
+        self.depth.store(st.len(), Ordering::Relaxed);
+        let drained = st.closed && st.len() == 0;
+        drop(st);
+        if !out.is_empty() {
+            self.space_cv.notify_all();
+        }
+        (out, drained)
+    }
+
+    /// Steal up to `max` requests for an idle peer: **bulk first** (cold
+    /// throughput work migrates; express work stays home for affinity
+    /// and latency), express only when bulk is dry.
+    fn steal(&self, max: usize) -> Vec<Request> {
+        let mut st = relock(&self.state);
+        let mut out = Vec::new();
+        while out.len() < max {
+            let Some(r) = st.bulk.pop_front().or_else(|| st.express.pop_front()) else {
+                break;
+            };
+            out.push(r);
+        }
+        self.depth.store(st.len(), Ordering::Relaxed);
+        drop(st);
+        if !out.is_empty() {
+            self.space_cv.notify_all();
+        }
+        out
+    }
+
+    /// Park until work arrives or the queue closes. `None` waits
+    /// indefinitely (single-shard servers have nothing to steal, so
+    /// there is nothing to poll for).
+    fn wait_for_work(&self, timeout: Option<Duration>) {
+        let st = relock(&self.state);
+        if st.len() > 0 || st.closed {
+            return;
+        }
+        match timeout {
+            Some(t) => {
+                let _ = self.work_cv.wait_timeout(st, t).map(|(g, _)| g);
+            }
+            None => {
+                let _ = self.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+
+    fn close(&self) {
+        relock(&self.state).closed = true;
+        self.work_cv.notify_all();
+        self.space_cv.notify_all();
+    }
 }
 
 /// Group-level pipeline stamps shared by every request in one
@@ -160,7 +506,7 @@ struct PlanStamps {
     cache_hit: bool,
 }
 
-/// State shared between clients and the dispatcher.
+/// State shared between clients and the shard dispatchers.
 struct Shared {
     names: HashMap<String, usize>,
     kernel_names: Vec<String>,
@@ -168,6 +514,10 @@ struct Shared {
     cache: Mutex<PlanCache>,
     opt: OptLevel,
     trace: Option<Arc<TraceRing>>,
+    /// One bounded two-lane queue per scheduler shard.
+    queues: Vec<Arc<ShardQueue>>,
+    /// Recycled response slots (steady-state submit allocates nothing).
+    slots: SlotPool,
     /// Per-call_retry RNG seeds, so concurrent retry loops jitter
     /// differently (deterministic per loop, decorrelated across loops).
     retry_salt: AtomicU64,
@@ -179,26 +529,83 @@ impl Shared {
     }
 }
 
+/// Live per-shard scheduler state: shard layout, steal/affinity
+/// totals, per-lane shed counts and current queue depths.
+#[derive(Debug, Clone)]
+pub struct SchedulerStats {
+    /// Scheduler shards (dispatcher threads).
+    pub shards: usize,
+    /// Pool workers each shard's sweeps fan out over.
+    pub workers_per_shard: usize,
+    /// Requests executed by a shard that stole them from a peer.
+    pub steals: u64,
+    /// Requests executed on their plan's home shard.
+    pub affinity_hits: u64,
+    /// Express-lane requests shed (expired deadlines, rejections).
+    pub shed_express: u64,
+    /// Bulk-lane requests shed.
+    pub shed_bulk: u64,
+    /// Instantaneous queue depth per shard.
+    pub depths: Vec<usize>,
+}
+
 /// Handle for submitting requests; cheap to clone, `Send`.
 #[derive(Clone)]
 pub struct Client {
-    tx: SyncSender<Msg>,
     shared: Arc<Shared>,
 }
 
-/// A pending response.
+/// A pending response backed by a recycled slot. `wait` takes the
+/// answer and returns the slot to the server's free list.
 pub struct Ticket {
-    rx: Receiver<ServeResult<Vec<f64>>>,
+    slot: Arc<RespSlot>,
+    shared: Arc<Shared>,
 }
 
 impl Ticket {
     /// Block until the response arrives.
     pub fn wait(self) -> ServeResult<Vec<f64>> {
-        self.rx.recv().map_err(|_| ServeError::Shutdown)?
+        let Ticket { slot, shared } = self;
+        let v = slot.take_blocking();
+        shared.slots.recycle(slot);
+        v
+    }
+
+    /// Return an unused slot to the pool (failed-submit path).
+    fn recycle(self) {
+        let Ticket { slot, shared } = self;
+        shared.slots.recycle(slot);
     }
 }
 
+/// Undo a failed submission without allocating: suppress the
+/// responder's drop answer, take the argument buffers back for the
+/// caller, and return the response slot to the free list.
+fn reclaim(mut req: Request, ticket: Ticket) -> Vec<Arg> {
+    req.resp.sent = true;
+    let args = std::mem::take(&mut req.args);
+    drop(req);
+    ticket.recycle();
+    args
+}
+
 impl Client {
+    /// Plan-affinity routing: hash the plan-cache key fields to a home
+    /// shard, so every request replaying one plan lands on one shard.
+    fn route(&self, kernel: usize, sig: &Sig) -> u32 {
+        let n = self.shared.queues.len();
+        if n <= 1 {
+            return 0;
+        }
+        let mut h = DefaultHasher::new();
+        kernel.hash(&mut h);
+        self.shared.opt.hash(&mut h);
+        for p in sig.as_slice() {
+            p.hash(&mut h);
+        }
+        (h.finish() % n as u64) as u32
+    }
+
     fn build_request(
         &self,
         kernel: &str,
@@ -228,17 +635,20 @@ impl Client {
                 ))));
             }
         }
-        let sig = args.iter().map(|a| (a.dtype(), a.shape())).collect();
-        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        let sig = Sig::from_args(&args);
+        let home = self.route(kid, &sig);
+        let slot = self.shared.slots.acquire();
         let req = Request {
             kernel: kid,
             sig,
             args,
             enqueued: Instant::now(),
             deadline,
-            resp: resp_tx,
+            home,
+            lane: if deadline.is_some() { Lane::Express } else { Lane::Bulk },
+            resp: Responder { slot: slot.clone(), sent: false },
         };
-        Ok((req, Ticket { rx: resp_rx }))
+        Ok((req, Ticket { slot, shared: self.shared.clone() }))
     }
 
     /// Non-blocking submit; `QueueFull` is the backpressure signal.
@@ -261,23 +671,30 @@ impl Client {
         deadline: Option<Instant>,
     ) -> std::result::Result<Ticket, SubmitError> {
         let (req, ticket) = self.build_request(kernel, args, deadline)?;
-        let key = PlanKey { kernel: req.kernel, args: req.sig.clone(), opt: self.shared.opt };
-        if let Some((retry_in, failures)) = relock(&self.shared.cache).peek_quarantined(&key) {
+        if let Some((retry_in, failures)) = relock(&self.shared.cache).peek_quarantined_parts(
+            req.kernel,
+            req.sig.as_slice(),
+            self.shared.opt,
+        ) {
             self.shared.stats.inc_quarantined();
-            return Err(SubmitError::Quarantined { args: req.args, retry_in, failures });
+            return Err(SubmitError::Quarantined { args: reclaim(req, ticket), retry_in, failures });
         }
         if faults::fire("serve.queue.reject") {
             self.shared.stats.inc_rejected();
-            return Err(SubmitError::QueueFull(req.args));
+            return Err(SubmitError::QueueFull(reclaim(req, ticket)));
         }
-        match self.tx.try_send(Msg::Call(req)) {
-            Ok(()) => Ok(ticket),
-            Err(TrySendError::Full(Msg::Call(r))) => {
+        let q = &self.shared.queues[req.home as usize];
+        match q.try_push(req) {
+            PushOutcome::Pushed => Ok(ticket),
+            PushOutcome::Full(r) => {
                 self.shared.stats.inc_rejected();
-                Err(SubmitError::QueueFull(r.args))
+                self.shared.stats.record_shed(r.lane);
+                Err(SubmitError::QueueFull(reclaim(r, ticket)))
             }
-            Err(TrySendError::Full(Msg::Shutdown)) => unreachable!("we only queue Call here"),
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            PushOutcome::Closed(r) => {
+                reclaim(r, ticket);
+                Err(SubmitError::Closed)
+            }
         }
     }
 
@@ -292,8 +709,14 @@ impl Client {
             SubmitError::Closed => ServeError::Shutdown,
             other => ServeError::Request(Error::Invalid(other.to_string())),
         })?;
-        self.tx.send(Msg::Call(req)).map_err(|_| ServeError::Shutdown)?;
-        Ok(ticket)
+        let q = &self.shared.queues[req.home as usize];
+        match q.push_blocking(req) {
+            Ok(()) => Ok(ticket),
+            Err(r) => {
+                reclaim(r, ticket);
+                Err(ServeError::Shutdown)
+            }
+        }
     }
 
     /// Blocking submit (waits for queue space). Kept in crate-`Result`
@@ -371,6 +794,21 @@ impl Client {
         Err(ServeError::Overloaded { attempts: max })
     }
 
+    /// Live scheduler counters: shard layout, steal and affinity
+    /// totals, per-lane shed counts, instantaneous queue depths.
+    pub fn scheduler_stats(&self) -> SchedulerStats {
+        let (shed_express, shed_bulk) = self.shared.stats.lane_sheds();
+        SchedulerStats {
+            shards: self.shared.queues.len(),
+            workers_per_shard: self.shared.stats.workers_per_shard(),
+            steals: self.shared.stats.steals(),
+            affinity_hits: self.shared.stats.affinity_hits(),
+            shed_express,
+            shed_bulk,
+            depths: self.shared.queues.iter().map(|q| q.depth()).collect(),
+        }
+    }
+
     /// Plan-cache counters.
     pub fn cache_stats(&self) -> CacheStats {
         relock(&self.shared.cache).stats()
@@ -404,15 +842,22 @@ impl Client {
         crate::coordinator::engine::backend::active().name()
     }
 
-    /// Render the serving report (per-kernel table + cache line).
+    /// Render the serving report (per-kernel table + cache and
+    /// scheduler lines).
     pub fn report(&self) -> String {
         let cache = self.cache_stats();
         self.shared.stats.report(&cache)
     }
 
     /// Snapshot every serve metric (counters, gauges, segment
-    /// histograms) with the cache gauges refreshed.
+    /// histograms, per-shard scheduler series) with the cache gauges
+    /// refreshed.
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        // Depth gauges refresh lazily (the dispatch hot path publishes
+        // after each pop; idle shards would otherwise go stale).
+        for (i, q) in self.shared.queues.iter().enumerate() {
+            self.shared.stats.set_shard_depth(i, q.depth());
+        }
         let cache = self.cache_stats();
         self.shared.stats.snapshot(&cache)
     }
@@ -472,13 +917,14 @@ impl ServerBuilder {
         ServerBuilder { config, kernels: Vec::new() }
     }
 
-    /// Register a kernel builder under `name`. The builder runs on the
-    /// dispatcher thread, once per distinct argument signature, against
-    /// placeholder containers; it must stay lazy (capture-pure).
+    /// Register a kernel builder under `name`. The builder runs on a
+    /// shard dispatcher thread, once per distinct argument signature,
+    /// against placeholder containers; it must stay lazy
+    /// (capture-pure).
     pub fn kernel(
         mut self,
         name: &str,
-        f: impl Fn(&Context, &[Value]) -> Value + Send + 'static,
+        f: impl Fn(&Context, &[Value]) -> Value + Send + Sync + 'static,
     ) -> Self {
         self.kernels.push((name.to_string(), KernelEntry::Expr(Box::new(f))));
         self
@@ -495,13 +941,14 @@ impl ServerBuilder {
         name: &str,
         f: impl Fn(&[(DType, Shape)]) -> crate::Result<crate::coordinator::program::Program>
             + Send
+            + Sync
             + 'static,
     ) -> Self {
         self.kernels.push((name.to_string(), KernelEntry::Prog(Box::new(f))));
         self
     }
 
-    /// Spawn the dispatcher and return the running server.
+    /// Spawn the shard dispatchers and return the running server.
     pub fn start(self) -> Server {
         // Fault injection: the env hook runs once per process; an
         // explicit spec in the config replaces whatever is installed.
@@ -511,7 +958,9 @@ impl ServerBuilder {
         if let Some(spec) = &self.config.resilience.faults {
             faults::install(spec);
         }
-        let (tx, rx) = mpsc::sync_channel(self.config.queue_capacity.max(1));
+        let n_shards = self.config.effective_shards();
+        let wps = (self.config.workers.max(1) / n_shards).max(1);
+        let cap = self.config.queue_capacity.max(1);
         let names: HashMap<String, usize> =
             self.kernels.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
         let kernel_names: Vec<String> = self.kernels.iter().map(|(n, _)| n.clone()).collect();
@@ -534,31 +983,45 @@ impl ServerBuilder {
             backoff: self.config.resilience.quarantine_backoff,
             backoff_cap: self.config.resilience.quarantine_backoff_cap,
         };
+        let queues: Vec<Arc<ShardQueue>> =
+            (0..n_shards).map(|_| Arc::new(ShardQueue::new(cap))).collect();
         let shared = Arc::new(Shared {
             names,
-            stats: ServeStats::new(&kernel_names, self.config.obs.metrics),
+            stats: ServeStats::with_shards(&kernel_names, self.config.obs.metrics, n_shards, wps),
             kernel_names,
             cache: Mutex::new(PlanCache::with_policy(self.config.plan_cache_capacity, policy)),
             opt: self.config.opt_level,
             trace,
+            queues,
+            // One slot per queue entry across all shards, plus headroom
+            // for in-flight responses, so recycling never drops a slot
+            // in steady state.
+            slots: SlotPool::with_capacity(n_shards * cap + 64),
             retry_salt: AtomicU64::new(0x9E37_79B9),
         });
-        let builders: Vec<KernelEntry> = self.kernels.into_iter().map(|(_, f)| f).collect();
+        let builders: Arc<Vec<KernelEntry>> =
+            Arc::new(self.kernels.into_iter().map(|(_, f)| f).collect());
         let cfg = self.config;
-        let shared2 = shared.clone();
-        let handle = std::thread::Builder::new()
-            .name("arbb-serve-dispatcher".into())
-            .spawn(move || dispatcher(rx, builders, cfg, shared2))
-            .expect("spawn serve dispatcher");
-        Server { client: Client { tx, shared }, handle: Some(handle) }
+        let handles = (0..n_shards)
+            .map(|shard| {
+                let builders = builders.clone();
+                let cfg = cfg.clone();
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("arbb-serve-shard-{shard}"))
+                    .spawn(move || dispatcher(shard, builders, cfg, shared))
+                    .expect("spawn serve shard dispatcher")
+            })
+            .collect();
+        Server { client: Client { shared }, handles }
     }
 }
 
-/// A running kernel server. Dropping it shuts the dispatcher down
-/// (queued requests are still answered first).
+/// A running kernel server. Dropping it shuts the shard dispatchers
+/// down (queued requests are still answered first).
 pub struct Server {
     client: Client,
-    handle: Option<JoinHandle<()>>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl Server {
@@ -581,28 +1044,32 @@ impl std::ops::Deref for Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        let _ = self.client.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
+        for q in &self.client.shared.queues {
+            q.close();
+        }
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
 // ---------------------------------------------------------------------
-// dispatcher
+// shard dispatcher
 // ---------------------------------------------------------------------
 
 fn dispatcher(
-    rx: Receiver<Msg>,
-    builders: Vec<KernelEntry>,
+    shard: usize,
+    builders: Arc<Vec<KernelEntry>>,
     cfg: ServeConfig,
     shared: Arc<Shared>,
 ) {
+    let n_shards = shared.queues.len();
+    let wps = (cfg.workers.max(1) / n_shards).max(1);
     // The capture context lives on this thread (the DAG is Rc-based);
     // compiled plans that leave it are graph-free and thread-safe.
     let ctx = Context::with_options(Options {
         opt_level: cfg.opt_level,
-        num_workers: cfg.workers,
+        num_workers: wps,
         fusion: cfg.fusion,
         in_place: true,
         cse: cfg.cse,
@@ -612,74 +1079,76 @@ fn dispatcher(
         // (PALLAS_BACKEND override included).
         ..Options::default()
     });
-    let pool = pool::for_workers(cfg.workers);
+    // Each shard sweeps on its own interned pool slice (first-touch:
+    // the slice's workers only ever run this shard's plans, so arena
+    // pages and plan state stay warm per shard). The single-shard
+    // degenerate case keeps the whole pool, exactly as before.
+    let pool = if n_shards == 1 {
+        pool::for_workers(cfg.workers)
+    } else {
+        pool::for_shard(shard, wps)
+    };
     let max_batch = cfg.max_batch.max(1);
     let slack = cfg.resilience.deadline_slack;
+    let q = shared.queues[shard].clone();
+    let mut idle_us = IDLE_MIN_US;
 
     loop {
-        let first = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => break, // every client handle dropped
-        };
-        let mut shutdown = false;
-        let mut batch: Vec<Pending> = Vec::new();
-        let mut nearest: Option<Instant> = None;
-        let push = |batch: &mut Vec<Pending>, nearest: &mut Option<Instant>, r: Request| {
-            if let Some(d) = r.deadline {
-                *nearest = Some(nearest.map_or(d, |n: Instant| n.min(d)));
-            }
-            batch.push(Pending { req: r, dequeued: Instant::now() });
-        };
-        match first {
-            Msg::Shutdown => shutdown = true,
-            Msg::Call(r) => push(&mut batch, &mut nearest, r),
-        }
-        // Coalesce whatever else is already queued, up to max_batch —
-        // but stop early once the nearest deadline in the batch is
-        // within the slack: a near-deadline request must not wait
-        // behind further batch formation.
-        while batch.len() < max_batch {
-            if let Some(d) = nearest {
-                if d.saturating_duration_since(Instant::now()) <= slack {
-                    break;
-                }
-            }
-            match rx.try_recv() {
-                Ok(Msg::Call(r)) => push(&mut batch, &mut nearest, r),
-                Ok(Msg::Shutdown) => {
-                    shutdown = true;
-                    break;
-                }
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-            }
-        }
+        let (batch, drained) = q.pop_batch(max_batch, slack, &shared.stats);
+        shared.stats.set_shard_depth(shard, q.depth());
         if !batch.is_empty() {
-            process_batch(batch, &builders, &ctx, pool.as_deref(), &shared);
-        }
-        if shutdown {
-            // Drain and answer everything still queued, then exit.
-            loop {
-                let mut rest: Vec<Pending> = Vec::new();
-                while rest.len() < max_batch {
-                    match rx.try_recv() {
-                        Ok(Msg::Call(r)) => {
-                            rest.push(Pending { req: r, dequeued: Instant::now() })
-                        }
-                        Ok(Msg::Shutdown) => {}
-                        Err(_) => break,
-                    }
-                }
-                if rest.is_empty() {
-                    break;
-                }
-                process_batch(rest, &builders, &ctx, pool.as_deref(), &shared);
+            idle_us = IDLE_MIN_US;
+            process_batch(shard, batch, &builders, &ctx, pool.as_deref(), &shared);
+            if drained {
+                break;
             }
+            continue;
+        }
+        if drained {
             break;
         }
+        // Dry queue: steal a batch from the deepest peer before
+        // parking. Bulk work migrates first; a stolen batch is
+        // processed here, on this shard's pool slice.
+        if n_shards > 1 {
+            let mut victim = None;
+            let mut best = 0usize;
+            for (j, oq) in shared.queues.iter().enumerate() {
+                if j != shard && oq.depth() > best {
+                    best = oq.depth();
+                    victim = Some(j);
+                }
+            }
+            if let Some(j) = victim {
+                // Take at most half the victim's depth (leave it work)
+                // and at most one batch.
+                let quota = max_batch.min((best + 1) / 2).max(1);
+                let stolen = shared.queues[j].steal(quota);
+                if !stolen.is_empty() {
+                    idle_us = IDLE_MIN_US;
+                    shared.stats.record_steals(shard, stolen.len() as u64);
+                    shared.stats.set_shard_depth(j, shared.queues[j].depth());
+                    let now = Instant::now();
+                    let batch: Vec<Pending> =
+                        stolen.into_iter().map(|req| Pending { req, dequeued: now }).collect();
+                    process_batch(shard, batch, &builders, &ctx, pool.as_deref(), &shared);
+                    continue;
+                }
+            }
+        }
+        // Nothing local, nothing to steal: park. Single-shard servers
+        // park indefinitely (a push always signals); sharded ones wake
+        // periodically to re-scan for steal victims, with exponential
+        // backoff so idle shards don't spin.
+        let timeout =
+            if n_shards == 1 { None } else { Some(Duration::from_micros(idle_us)) };
+        q.wait_for_work(timeout);
+        idle_us = (idle_us * 2).min(IDLE_MAX_US);
     }
 }
 
 fn process_batch(
+    shard: usize,
     batch: Vec<Pending>,
     builders: &[KernelEntry],
     ctx: &Context,
@@ -697,7 +1166,7 @@ fn process_batch(
                     PlanStamps { plan0: p.dequeued, plan1: p.dequeued, cache_hit: false };
                 let missed = now.saturating_duration_since(d).as_secs_f64();
                 let err = ServeError::DeadlineExceeded { missed_by_s: missed, executed: false };
-                finish(p, stamps, None, Err(err), shared);
+                finish(shard, p, stamps, None, Err(err), shared);
             }
             _ => live.push(p),
         }
@@ -707,7 +1176,7 @@ fn process_batch(
     // groups run earliest-deadline-first; deadline-free groups go last.
     let mut groups: HashMap<PlanKey, Vec<Pending>> = HashMap::new();
     for p in live {
-        let key = PlanKey { kernel: p.req.kernel, args: p.req.sig.clone(), opt: shared.opt };
+        let key = PlanKey { kernel: p.req.kernel, args: p.req.sig.to_vec(), opt: shared.opt };
         groups.entry(key).or_default().push(p);
     }
     let mut groups: Vec<(PlanKey, Vec<Pending>)> = groups.into_iter().collect();
@@ -735,7 +1204,7 @@ fn process_batch(
                     failures,
                     retry_in_s: retry_in.as_secs_f64(),
                 };
-                finish(p, stamps, None, Err(err), shared);
+                finish(shard, p, stamps, None, Err(err), shared);
             }
             continue;
         }
@@ -747,13 +1216,13 @@ fn process_batch(
                 // toward the plan's quarantine streak.
                 relock(&shared.cache).record_failure(&key);
                 for p in reqs {
-                    finish(p, stamps, None, Err(e.clone()), shared);
+                    finish(shard, p, stamps, None, Err(e.clone()), shared);
                 }
             }
             Ok((plan, cache_hit)) => {
                 let stamps = PlanStamps { plan0, plan1: Instant::now(), cache_hit };
                 shared.stats.record_batch(key.kernel);
-                execute_group(&key, plan, reqs, stamps, pool, shared);
+                execute_group(shard, &key, plan, reqs, stamps, pool, shared);
             }
         }
     }
@@ -812,6 +1281,7 @@ fn resolve_plan(
 /// a sweep containing any panic counts one failure toward the plan's
 /// quarantine streak, a clean sweep resets it.
 fn execute_group(
+    shard: usize,
     key: &PlanKey,
     plan: Arc<CompiledPlan>,
     reqs: Vec<Pending>,
@@ -832,7 +1302,7 @@ fn execute_group(
             if now >= d {
                 let missed = now.saturating_duration_since(d).as_secs_f64();
                 let err = ServeError::DeadlineExceeded { missed_by_s: missed, executed: false };
-                finish(p, stamps, None, Err(err), shared);
+                finish(shard, p, stamps, None, Err(err), shared);
                 continue;
             }
         }
@@ -890,8 +1360,10 @@ fn execute_group(
         }
     };
     // True sweep wall time, once per sweep — the per-request
-    // `busy_secs` view books this same wall time for every member.
-    shared.stats.record_sweep(kernel, sweep0.elapsed().as_secs_f64());
+    // `busy_secs` view books this same wall time for every member, and
+    // the per-member share feeds the cost EWMA that bounds batch
+    // formation.
+    shared.stats.record_sweep(kernel, sweep0.elapsed().as_secs_f64(), n);
     let failmap: HashMap<usize, String> = escaped.into_iter().collect();
     let windows = windows.unwrap_or_default();
     let done = Instant::now();
@@ -923,7 +1395,7 @@ fn execute_group(
             }
         }
         let exec = windows.get(i).map(|w| *relock(w));
-        finish(pending, stamps, exec, out, shared);
+        finish(shard, pending, stamps, exec, out, shared);
     }
     // Quarantine bookkeeping: one verdict per sweep, not per request.
     let mut cache = relock(&shared.cache);
@@ -935,16 +1407,18 @@ fn execute_group(
 }
 
 /// Answer one request and record its span: stats segments always,
-/// trace ring when configured. The segment boundaries share stamps, so
-/// they sum exactly to end-to-end latency.
+/// affinity/lane-shed scheduler counters, trace ring when configured.
+/// The segment boundaries share stamps, so they sum exactly to
+/// end-to-end latency.
 fn finish(
+    shard: usize,
     pending: Pending,
     stamps: PlanStamps,
     exec: Option<(u64, u64, u32)>,
     out: ServeResult<Vec<f64>>,
     shared: &Arc<Shared>,
 ) {
-    let Pending { req, dequeued } = pending;
+    let Pending { mut req, dequeued } = pending;
     let done = Instant::now();
     let ok = out.is_ok();
     let outcome = match &out {
@@ -958,13 +1432,23 @@ fn finish(
     match &out {
         Err(ServeError::DeadlineExceeded { executed, missed_by_s }) => {
             shared.stats.record_deadline(*executed, *missed_by_s);
+            if !*executed {
+                // Shed before execution: attributed to the lane it
+                // rode (express sheds are the latency-critical ones).
+                shared.stats.record_shed(req.lane);
+            }
         }
         Err(ServeError::Panicked { .. }) => shared.stats.inc_panicked(),
         Err(ServeError::Quarantined { .. }) => shared.stats.inc_quarantined(),
         _ => {}
     }
+    // Affinity accounting: a request answered by its plan's home shard
+    // kept its arenas warm; anything else got here by stealing.
+    if req.home as usize == shard {
+        shared.stats.record_affinity_hit(shard);
+    }
     // The receiver may have given up; stats still count the completion.
-    let _ = req.resp.try_send(out);
+    req.resp.send(out);
     let seg = Segments {
         queue_s: dequeued.saturating_duration_since(req.enqueued).as_secs_f64(),
         batch_s: stamps.plan0.saturating_duration_since(dequeued).as_secs_f64(),
@@ -985,6 +1469,7 @@ fn finish(
             kernel: req.kernel as u32,
             seq: 0, // assigned by the ring
             worker,
+            shard: shard as u32,
             ok,
             outcome,
             cache_hit: stamps.cache_hit,
@@ -996,5 +1481,135 @@ fn finish(
             t_exec1,
             t_done: now,
         });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_request(kernel: usize, lane: Lane, slots: &SlotPool) -> Request {
+        let slot = slots.acquire();
+        Request {
+            kernel,
+            sig: Sig::from_args(&[]),
+            args: Vec::new(),
+            enqueued: Instant::now(),
+            deadline: if lane == Lane::Express { Some(Instant::now()) } else { None },
+            home: 0,
+            lane,
+            resp: Responder { slot, sent: true },
+        }
+    }
+
+    #[test]
+    fn sig_inline_for_small_arities_matches_heap() {
+        let args =
+            vec![Arg::vec(vec![1.0, 2.0]), Arg::scalar(3.0), Arg::mat(vec![0.0; 6], 2, 3)];
+        let s = Sig::from_args(&args);
+        assert!(matches!(s, Sig::Inline { n: 3, .. }));
+        let expect: Vec<(DType, Shape)> =
+            args.iter().map(|a| (a.dtype(), a.shape())).collect();
+        assert_eq!(s.as_slice(), &expect[..]);
+        assert_eq!(s.to_vec(), expect);
+        // Past the inline arity the heap fallback carries everything.
+        let wide: Vec<Arg> = (0..SIG_INLINE + 1).map(|i| Arg::scalar(i as f64)).collect();
+        let w = Sig::from_args(&wide);
+        assert!(matches!(w, Sig::Heap(_)));
+        assert_eq!(w.as_slice().len(), SIG_INLINE + 1);
+    }
+
+    #[test]
+    fn shard_queue_express_lane_pops_first_and_steal_takes_bulk_first() {
+        let slots = SlotPool::with_capacity(16);
+        let stats = ServeStats::new(&["k".into()], false);
+        let q = ShardQueue::new(8);
+        assert!(matches!(q.try_push(dummy_request(0, Lane::Bulk, &slots)), PushOutcome::Pushed));
+        assert!(matches!(
+            q.try_push(dummy_request(0, Lane::Express, &slots)),
+            PushOutcome::Pushed
+        ));
+        assert!(matches!(q.try_push(dummy_request(0, Lane::Bulk, &slots)), PushOutcome::Pushed));
+        assert_eq!(q.depth(), 3);
+        // Steal migrates cold bulk work and leaves express home.
+        let stolen = q.steal(1);
+        assert_eq!(stolen.len(), 1);
+        assert_eq!(stolen[0].lane, Lane::Bulk);
+        // Dispatch pops express before remaining bulk.
+        let (batch, drained) = q.pop_batch(8, Duration::from_micros(500), &stats);
+        assert!(!drained);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].req.lane, Lane::Express);
+        assert_eq!(batch[1].req.lane, Lane::Bulk);
+        assert_eq!(q.depth(), 0);
+        // Closing answers the exit signal once fully drained.
+        q.close();
+        let (batch, drained) = q.pop_batch(8, Duration::from_micros(500), &stats);
+        assert!(batch.is_empty() && drained);
+        assert!(matches!(
+            q.try_push(dummy_request(0, Lane::Bulk, &slots)),
+            PushOutcome::Closed(_)
+        ));
+    }
+
+    #[test]
+    fn shard_queue_capacity_backpressure() {
+        let slots = SlotPool::with_capacity(8);
+        let q = ShardQueue::new(2);
+        assert!(matches!(q.try_push(dummy_request(0, Lane::Bulk, &slots)), PushOutcome::Pushed));
+        assert!(matches!(q.try_push(dummy_request(0, Lane::Bulk, &slots)), PushOutcome::Pushed));
+        assert!(matches!(q.try_push(dummy_request(0, Lane::Bulk, &slots)), PushOutcome::Full(_)));
+    }
+
+    #[test]
+    fn cost_aware_pop_cuts_batch_short_near_deadline() {
+        let slots = SlotPool::with_capacity(32);
+        let stats = ServeStats::new(&["dear".into()], false);
+        // Teach the cost model this kernel costs ~50 ms per member.
+        stats.record_sweep(0, 0.050, 1);
+        assert_eq!(stats.est_cost_ns(0), 50_000_000);
+        let q = ShardQueue::new(16);
+        for _ in 0..8 {
+            let mut r = dummy_request(0, Lane::Express, &slots);
+            // Deadline 80 ms out: after one 50 ms member is batched,
+            // batching a second (est. total 100 ms) would blow it.
+            r.deadline = Some(Instant::now() + Duration::from_millis(80));
+            q.try_push(r);
+        }
+        let (batch, _) = q.pop_batch(16, Duration::from_micros(500), &stats);
+        assert!(
+            batch.len() < 8,
+            "cost-aware formation must cut the batch short, got {}",
+            batch.len()
+        );
+        // Formation always makes progress: the next pop takes at
+        // least one request even under an absurdly wide slack.
+        let (rest, _) = q.pop_batch(16, Duration::from_secs(3600), &stats);
+        assert!(!rest.is_empty());
+    }
+
+    #[test]
+    fn slot_pool_recycles_without_growth() {
+        let slots = SlotPool::with_capacity(2);
+        let a = slots.acquire();
+        let b = slots.acquire();
+        a.put(Ok(vec![1.0]));
+        assert_eq!(a.take_blocking().unwrap(), vec![1.0]);
+        slots.recycle(a);
+        slots.recycle(b);
+        // Recycled slots come back cleared.
+        let c = slots.acquire();
+        c.put(Ok(vec![2.0]));
+        assert_eq!(c.take_blocking().unwrap(), vec![2.0]);
+        assert_eq!(relock(&slots.free).len(), 1);
+    }
+
+    #[test]
+    fn responder_answers_shutdown_when_dropped_unanswered() {
+        let slots = SlotPool::with_capacity(2);
+        let slot = slots.acquire();
+        let r = Responder { slot: slot.clone(), sent: false };
+        drop(r);
+        assert!(matches!(slot.take_blocking(), Err(ServeError::Shutdown)));
     }
 }

@@ -51,6 +51,53 @@ impl Segments {
     }
 }
 
+/// Priority lane a request rides in its shard's queue: requests with a
+/// deadline go express (popped first, never held behind bulk work),
+/// everything else is bulk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Deadline-carrying requests; drained before bulk.
+    Express,
+    /// Deadline-free requests.
+    Bulk,
+}
+
+impl Lane {
+    /// Metric-label spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Lane::Express => "express",
+            Lane::Bulk => "bulk",
+        }
+    }
+}
+
+/// Per-shard scheduler counters: queue depth, steals, affinity hits.
+/// All lock-free; the dispatcher updates them on its hot path.
+#[derive(Debug)]
+pub struct ShardStats {
+    depth: Arc<Gauge>,
+    steals: Arc<Counter>,
+    affinity_hits: Arc<Counter>,
+}
+
+impl ShardStats {
+    /// Last published queue depth of this shard.
+    pub fn depth(&self) -> f64 {
+        self.depth.get()
+    }
+
+    /// Requests this shard's dispatcher stole from other shards.
+    pub fn steals(&self) -> u64 {
+        self.steals.get()
+    }
+
+    /// Requests executed here whose plan's home shard is here.
+    pub fn affinity_hits(&self) -> u64 {
+        self.affinity_hits.get()
+    }
+}
+
 /// Running statistics for one registered kernel. All counters are
 /// relaxed atomics; recording takes `&self` and never allocates.
 #[derive(Debug)]
@@ -66,6 +113,11 @@ pub struct KernelStats {
     /// True wall nanoseconds of batch sweeps, recorded **once per
     /// sweep** regardless of how many requests rode it.
     sweep_ns: AtomicU64,
+    /// EWMA of per-member sweep cost in nanoseconds (sweep wall time /
+    /// batch size), the scheduler's cost model for batch formation:
+    /// cheap spmv-class kernels batch aggressively, expensive
+    /// dgemm-class batches are cut short near a deadline.
+    cost_ns: AtomicU64,
     batches: AtomicU64,
     latency: Arc<LogHistogram>,
 }
@@ -78,6 +130,7 @@ impl KernelStats {
             errors: AtomicU64::new(0),
             busy_ns: AtomicU64::new(0),
             sweep_ns: AtomicU64::new(0),
+            cost_ns: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             latency,
         }
@@ -126,6 +179,12 @@ impl KernelStats {
         self.sweep_ns.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
+    /// Smoothed per-request replay cost estimate, nanoseconds (0 until
+    /// the first sweep completes). Drives cost-aware batch formation.
+    pub fn est_cost_ns(&self) -> u64 {
+        self.cost_ns.load(Ordering::Relaxed)
+    }
+
     /// Latency percentile (0.0..=1.0), seconds, from the histogram.
     pub fn percentile(&self, q: f64) -> f64 {
         self.latency.snapshot().percentile_secs(q)
@@ -157,6 +216,10 @@ impl KernelStats {
 pub struct ServeStats {
     started: Instant,
     kernels: Vec<KernelStats>,
+    /// Per-scheduler-shard counters (one entry per shard).
+    shards: Vec<ShardStats>,
+    /// Pool workers each shard's sweeps fan out over (report line).
+    workers_per_shard: usize,
     rejected: AtomicU64,
     /// Active kernel backend name (plans compile against the
     /// process-wide backend; surfaced so a serving report states which
@@ -181,6 +244,8 @@ pub struct ServeStats {
     panicked_total: Arc<Counter>,
     quarantined_total: Arc<Counter>,
     retries_total: Arc<Counter>,
+    shed_express_total: Arc<Counter>,
+    shed_bulk_total: Arc<Counter>,
     uptime_g: Arc<Gauge>,
     throughput_g: Arc<Gauge>,
     cache_hits_g: Arc<Gauge>,
@@ -195,9 +260,44 @@ pub struct ServeStats {
 impl ServeStats {
     /// Build the stats registry for the given kernels. `metrics`
     /// controls histogram recording (`false` is the measured
-    /// "instrumentation disabled" serve mode).
+    /// "instrumentation disabled" serve mode). Single-shard layout;
+    /// sharded servers use [`ServeStats::with_shards`].
     pub fn new(kernel_names: &[String], metrics: bool) -> Self {
+        Self::with_shards(kernel_names, metrics, 1, 1)
+    }
+
+    /// [`ServeStats::new`] with the scheduler's shard layout, so the
+    /// per-shard depth gauges and steal/affinity counters exist up
+    /// front (metric registration allocates; the record paths do not).
+    pub fn with_shards(
+        kernel_names: &[String],
+        metrics: bool,
+        n_shards: usize,
+        workers_per_shard: usize,
+    ) -> Self {
         let registry = MetricsRegistry::new();
+        let shards = (0..n_shards.max(1))
+            .map(|i| {
+                let label = format!("shard=\"{i}\"");
+                ShardStats {
+                    depth: registry.gauge(
+                        "arbb_serve_shard_queue_depth",
+                        &label,
+                        "requests queued on this scheduler shard",
+                    ),
+                    steals: registry.counter(
+                        "arbb_serve_shard_steals_total",
+                        &label,
+                        "requests this shard stole from other shards' queues",
+                    ),
+                    affinity_hits: registry.counter(
+                        "arbb_serve_shard_affinity_hits_total",
+                        &label,
+                        "requests executed on their plan's home shard",
+                    ),
+                }
+            })
+            .collect();
         let kernels = kernel_names
             .iter()
             .map(|n| {
@@ -212,6 +312,8 @@ impl ServeStats {
         ServeStats {
             started: Instant::now(),
             kernels,
+            shards,
+            workers_per_shard: workers_per_shard.max(1),
             rejected: AtomicU64::new(0),
             backend: crate::coordinator::engine::backend::active().name(),
             metrics,
@@ -290,6 +392,16 @@ impl ServeStats {
                 "",
                 "client resubmissions after transient rejections (call_retry)",
             ),
+            shed_express_total: registry.counter(
+                "arbb_serve_shed_total",
+                "lane=\"express\"",
+                "express-lane requests shed (expired deadlines, queue-full rejections)",
+            ),
+            shed_bulk_total: registry.counter(
+                "arbb_serve_shed_total",
+                "lane=\"bulk\"",
+                "bulk-lane requests shed (queue-full rejections)",
+            ),
             uptime_g: registry.gauge("arbb_serve_uptime_secs", "", "seconds since server start"),
             throughput_g: registry.gauge(
                 "arbb_serve_throughput_rps",
@@ -361,10 +473,84 @@ impl ServeStats {
 
     /// Record a sweep's true wall time, once per sweep (the
     /// per-request `busy_secs` view double-counts it by design).
-    pub fn record_sweep(&self, kernel: usize, secs: f64) {
+    /// `members` is the sweep's batch size; the per-member share feeds
+    /// the kernel's [`KernelStats::est_cost_ns`] EWMA (¾ old + ¼ new,
+    /// integer arithmetic — no float churn on the dispatch path).
+    pub fn record_sweep(&self, kernel: usize, secs: f64, members: usize) {
         if let Some(k) = self.kernels.get(kernel) {
-            k.sweep_ns.fetch_add((secs.max(0.0) * 1e9).round() as u64, Ordering::Relaxed);
+            let ns = (secs.max(0.0) * 1e9).round() as u64;
+            k.sweep_ns.fetch_add(ns, Ordering::Relaxed);
+            let sample = ns / members.max(1) as u64;
+            let old = k.cost_ns.load(Ordering::Relaxed);
+            let new = if old == 0 { sample } else { old - old / 4 + sample / 4 };
+            k.cost_ns.store(new, Ordering::Relaxed);
         }
+    }
+
+    /// The per-request cost estimate for `kernel`, nanoseconds (0 until
+    /// its first sweep).
+    pub fn est_cost_ns(&self, kernel: usize) -> u64 {
+        self.kernels.get(kernel).map_or(0, |k| k.est_cost_ns())
+    }
+
+    /// Per-shard counters for shard `i` (None past the shard count).
+    pub fn shard(&self, i: usize) -> Option<&ShardStats> {
+        self.shards.get(i)
+    }
+
+    /// Scheduler shards this server runs.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Pool workers each shard's sweeps fan out over.
+    pub fn workers_per_shard(&self) -> usize {
+        self.workers_per_shard
+    }
+
+    /// Publish shard `i`'s current queue depth.
+    pub fn set_shard_depth(&self, i: usize, depth: usize) {
+        if let Some(s) = self.shards.get(i) {
+            s.depth.set(depth as f64);
+        }
+    }
+
+    /// Count `n` requests shard `i` stole from other shards' queues.
+    pub fn record_steals(&self, i: usize, n: u64) {
+        if let Some(s) = self.shards.get(i) {
+            s.steals.add(n);
+        }
+    }
+
+    /// Count one request executed on its plan's home shard.
+    pub fn record_affinity_hit(&self, i: usize) {
+        if let Some(s) = self.shards.get(i) {
+            s.affinity_hits.inc();
+        }
+    }
+
+    /// Count one request shed from `lane` (expired deadline or
+    /// queue-full rejection).
+    pub fn record_shed(&self, lane: Lane) {
+        match lane {
+            Lane::Express => self.shed_express_total.inc(),
+            Lane::Bulk => self.shed_bulk_total.inc(),
+        }
+    }
+
+    /// Total requests stolen across shards.
+    pub fn steals(&self) -> u64 {
+        self.shards.iter().map(|s| s.steals.get()).sum()
+    }
+
+    /// Total requests executed on their home shard.
+    pub fn affinity_hits(&self) -> u64 {
+        self.shards.iter().map(|s| s.affinity_hits.get()).sum()
+    }
+
+    /// `(express, bulk)` shed counts.
+    pub fn lane_sheds(&self) -> (u64, u64) {
+        (self.shed_express_total.get(), self.shed_bulk_total.get())
     }
 
     /// Count a queue-full rejection.
@@ -524,6 +710,18 @@ impl ServeStats {
                 cache.quarantine_events, cache.quarantined
             ));
         }
+        if self.shards.len() > 1 {
+            let (hits, steals) = (self.affinity_hits(), self.steals());
+            let routed = hits + steals;
+            let aff = if routed == 0 { 100.0 } else { 100.0 * hits as f64 / routed as f64 };
+            let (se, sb) = self.lane_sheds();
+            out.push_str(&format!(
+                "   scheduler: {} shards x {} workers | {steals} steals | {aff:.1}% affinity | \
+                 lane sheds {se} express / {sb} bulk\n",
+                self.shards.len(),
+                self.workers_per_shard
+            ));
+        }
         out.push_str(&format!(
             "| {:<16} | {:>8} | {:>6} | {:>10} | {:>9} | {:>9} | {:>7} | {:>6} | {:>8} |\n",
             "kernel", "reqs", "errs", "req/s", "p50 ms", "p99 ms", "batch", "busy%", "sweep s"
@@ -597,7 +795,7 @@ mod tests {
         }
         s.record_request(1, &seg(0.5), false);
         s.record_batch(0);
-        s.record_sweep(0, 0.040);
+        s.record_sweep(0, 0.040, 100);
         let k0 = s.kernel(0).unwrap();
         assert_eq!(k0.requests(), 100);
         assert_eq!(k0.errors(), 0);
@@ -736,5 +934,58 @@ mod tests {
         let r = s.report(&cache);
         assert!(r.contains("resilience: 2 shed, 1 late, 1 panics contained"), "{r}");
         assert!(r.contains("2 retries"), "{r}");
+    }
+
+    #[test]
+    fn cost_estimate_ewma_tracks_per_member_sweep_cost() {
+        let s = ServeStats::new(&["cheap".into(), "dear".into()], true);
+        assert_eq!(s.est_cost_ns(0), 0, "no sweeps yet: no estimate");
+        // 4 ms sweep over 8 members = 500 µs each; first sample lands
+        // directly.
+        s.record_sweep(0, 4e-3, 8);
+        assert_eq!(s.est_cost_ns(0), 500_000);
+        // EWMA: ¾·500µs + ¼·100µs = 400µs.
+        s.record_sweep(0, 8e-4, 8);
+        let est = s.est_cost_ns(0);
+        assert!((375_000..=425_000).contains(&est), "{est}");
+        // An expensive kernel's estimate stays separate.
+        s.record_sweep(1, 0.10, 1);
+        assert_eq!(s.est_cost_ns(1), 100_000_000);
+        assert!(s.est_cost_ns(1) > s.est_cost_ns(0));
+    }
+
+    #[test]
+    fn shard_counters_and_report_line() {
+        let s = ServeStats::with_shards(&["k".into()], true, 4, 2);
+        assert_eq!(s.n_shards(), 4);
+        s.set_shard_depth(2, 7);
+        s.record_steals(1, 3);
+        s.record_affinity_hit(0);
+        s.record_affinity_hit(0);
+        s.record_shed(Lane::Express);
+        s.record_shed(Lane::Bulk);
+        s.record_shed(Lane::Bulk);
+        assert_eq!(s.shard(2).unwrap().depth(), 7.0);
+        assert_eq!(s.steals(), 3);
+        assert_eq!(s.affinity_hits(), 2);
+        assert_eq!(s.lane_sheds(), (1, 2));
+        // Out-of-range shard indices are ignored, not panics.
+        s.set_shard_depth(99, 1);
+        s.record_steals(99, 1);
+        let cache = super::super::cache::CacheStats { capacity: 16, ..Default::default() };
+        let snap = s.snapshot(&cache);
+        let page = snap.to_prometheus();
+        assert!(page.contains("arbb_serve_shard_queue_depth{shard=\"2\"} 7"), "{page}");
+        assert!(page.contains("arbb_serve_shard_steals_total{shard=\"1\"} 3"), "{page}");
+        assert!(page.contains("arbb_serve_shard_affinity_hits_total{shard=\"0\"} 2"), "{page}");
+        assert!(page.contains("arbb_serve_shed_total{lane=\"express\"} 1"), "{page}");
+        assert!(page.contains("arbb_serve_shed_total{lane=\"bulk\"} 2"), "{page}");
+        let r = s.report(&cache);
+        assert!(r.contains("scheduler: 4 shards x 2 workers"), "{r}");
+        assert!(r.contains("3 steals"), "{r}");
+        assert!(r.contains("40.0% affinity"), "{r}");
+        // Single-shard servers keep today's report shape.
+        let s1 = ServeStats::new(&["k".into()], true);
+        assert!(!s1.report(&cache).contains("scheduler:"));
     }
 }

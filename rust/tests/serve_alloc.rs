@@ -310,6 +310,65 @@ fn metrics_and_trace_recording_are_allocation_free() {
 }
 
 #[test]
+fn steady_state_submit_is_allocation_free() {
+    // The full client-side round trip — kernel lookup, signature
+    // build, plan-affinity routing, response-slot acquire, queue push,
+    // blocking wait, slot recycle — must not touch the heap once the
+    // server is warm. Arguments themselves allocate, so every measured
+    // request's argument vector is built before the measured region;
+    // the response `Vec<f64>` is allocated on the dispatcher thread,
+    // which this thread's counter does not see, and the recycled slot
+    // free list never grows past its construction-time capacity.
+    use arbb_rs::serve::{Arg, ServeConfig, Server};
+
+    const MEASURED: usize = 10;
+
+    let server = Server::builder(ServeConfig {
+        workers: 1,
+        shards: 1,
+        max_batch: 1,
+        queue_capacity: 16,
+        ..ServeConfig::default()
+    })
+    .kernel("axpy", |_ctx, vals| {
+        let a = vals[0].vec1();
+        let b = vals[1].vec1();
+        Value::Vec(&a.scale(2.0) + &b)
+    })
+    .start();
+    let client = server.client();
+
+    let n = 256;
+    let x = rand_vec(n, 21);
+    let y = rand_vec(n, 22);
+    let want: Vec<f64> = x.iter().zip(&y).map(|(a, b)| 2.0 * a + b).collect();
+    let build_args = || vec![Arg::vec(x.clone()), Arg::vec(y.clone())];
+
+    // Warm: plan captured, response slot minted and recycled, queue
+    // deques at capacity from construction.
+    for _ in 0..20 {
+        let got = client.try_submit("axpy", build_args()).unwrap().wait().unwrap();
+        assert_eq!(got, want);
+    }
+
+    let argsets: Vec<Vec<Arg>> = (0..MEASURED).map(|_| build_args()).collect();
+    let before = allocs();
+    for args in argsets {
+        let ticket = client.try_submit("axpy", args).unwrap();
+        std::hint::black_box(ticket.wait().unwrap());
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "steady-state submit/wait must not allocate on the client thread"
+    );
+
+    // The replies stayed correct through the recycled slots.
+    let got = client.try_submit("axpy", build_args()).unwrap().wait().unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
 fn steady_state_whole_program_cg_replay_is_allocation_free() {
     // A fixed-iteration CG solve as one captured program: spmv + two
     // dots + three vector updates per iteration, 8 iterations, all out

@@ -1,0 +1,270 @@
+//! Sharded-scheduler correctness under skew, stealing and faults.
+//!
+//! Plan-affinity routing sends every request for one (kernel, shape)
+//! to the same home shard, so a single hot plan is the worst case for
+//! a sharded dispatcher: one queue holds all the work while the other
+//! shards idle. These tests drive exactly that shape and prove the
+//! properties the scheduler promises:
+//!
+//! * work stealing drains the hot queue — idle shards take bulk work
+//!   from the deepest peer, and every stolen request completes exactly
+//!   once, bit-identical to the host-computed reference;
+//! * shard counts beyond the machine's core count stay correct (the
+//!   shards are dispatcher threads, not cores);
+//! * an injected replay panic on a shard dispatcher — including while
+//!   it is executing stolen work — is contained by the panic
+//!   quarantine layer: the dispatcher survives, every request is
+//!   answered exactly once (result or injected error), and the server
+//!   heals completely once the fault clears.
+//!
+//! Fault specs are process-global, so every test serialises on a
+//! static mutex and clears the spec on exit via a drop guard (the
+//! same discipline as `tests/chaos.rs`). Under the chaos CI leg this
+//! binary runs with `PALLAS_FAULTS` installed; the stress tests
+//! tolerate those injected failures the way `serve_integration` does,
+//! and the chaos test installs its own spec on top.
+
+use std::sync::{Mutex, MutexGuard};
+
+use arbb_rs::obs::faults::{self, FaultSpec};
+use arbb_rs::serve::{Arg, ResilienceConfig, ServeConfig, Server, Value};
+use arbb_rs::util::XorShift64;
+
+/// Suite lock + spec cleanup for the process-global fault harness.
+struct Chaos(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Chaos {
+    fn bare() -> Chaos {
+        static GUARD: Mutex<()> = Mutex::new(());
+        Chaos(GUARD.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for Chaos {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+/// Explicitly sharded config: one worker per shard, so each shard's
+/// dispatcher replays inline and the test exercises pure scheduler
+/// behaviour (routing, stealing, lanes) rather than pool fan-out.
+fn sharded(shards: usize, spec: Option<FaultSpec>) -> ServeConfig {
+    ServeConfig {
+        workers: shards,
+        shards,
+        max_batch: 8,
+        queue_capacity: 64,
+        resilience: ResilienceConfig {
+            // Injected panic streaks must not flap plans into
+            // quarantine mid-stress; healing is asserted separately.
+            quarantine_threshold: u32::MAX,
+            faults: spec,
+            ..ResilienceConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+/// `((x + y) * x).sqrt()` — a fused chain with an easy host reference.
+fn chain_server(shards: usize, spec: Option<FaultSpec>) -> Server {
+    Server::builder(sharded(shards, spec))
+        .kernel("chain", |_ctx, p| {
+            let x = p[0].vec1();
+            let y = p[1].vec1();
+            Value::Vec((&(&x + &y) * &x).sqrt())
+        })
+        .start()
+}
+
+fn chain_inputs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift64::new(seed);
+    let x: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 1.5)).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 1.5)).collect();
+    let want: Vec<f64> = x.iter().zip(&y).map(|(a, b)| ((a + b) * a).sqrt()).collect();
+    (x, y, want)
+}
+
+#[test]
+fn skewed_load_on_one_plan_is_stolen_and_completes_exactly_once_bit_identical() {
+    // Every request targets ONE kernel at ONE shape, so affinity parks
+    // the entire load on a single home queue out of four. Each round
+    // floods the queue with in-flight tickets before collecting any
+    // response, which keeps the home queue deep while its dispatcher
+    // works — exactly the imbalance the idle shards' stealing must
+    // resolve.
+    const SHARDS: usize = 4;
+    const N: usize = 10_000;
+    const BURST: usize = 48;
+    const ROUNDS: usize = 12;
+
+    let _guard = Chaos::bare();
+    // Chaos CI leg: an env fault spec may be live; injected failures
+    // are tolerated (each still answers its ticket exactly once).
+    let tolerate = faults::enabled();
+
+    let server = chain_server(SHARDS, None);
+    let client = server.client();
+    let mut answered = 0usize;
+
+    for round in 0..ROUNDS {
+        // Randomised skew: fresh input data every request, precomputed
+        // references, all submitted before the first wait.
+        let cases: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = (0..BURST)
+            .map(|i| chain_inputs(N, (round * BURST + i) as u64 + 1))
+            .collect();
+        let tickets: Vec<_> = cases
+            .iter()
+            .map(|(x, y, _)| {
+                client
+                    .submit("chain", vec![Arg::vec(x.clone()), Arg::vec(y.clone())])
+                    .expect("bounded queue holds a full burst")
+            })
+            .collect();
+        for (i, (t, (_, _, want))) in tickets.into_iter().zip(&cases).enumerate() {
+            match t.wait() {
+                Ok(got) => {
+                    assert_eq!(&got, want, "round {round} req {i}: replay skewed the result");
+                }
+                Err(e) => assert!(
+                    tolerate && e.is_injected(),
+                    "round {round} req {i}: unexpected serve error {e}"
+                ),
+            }
+            answered += 1;
+        }
+    }
+
+    assert_eq!(answered, ROUNDS * BURST, "every submission answered exactly once");
+    let sched = client.scheduler_stats();
+    assert_eq!(sched.shards, SHARDS);
+    assert!(
+        sched.steals > 0,
+        "idle shards must steal from the hot home queue (stats: {sched:?})"
+    );
+    assert!(
+        sched.affinity_hits > 0,
+        "the home shard must also serve its own plan (stats: {sched:?})"
+    );
+    assert!(
+        sched.depths.iter().all(|&d| d == 0),
+        "all queues drained at quiescence (stats: {sched:?})"
+    );
+}
+
+#[test]
+fn shard_count_beyond_core_count_stays_bit_identical() {
+    // Shards are dispatcher threads, not cores: an explicit count the
+    // machine cannot back with hardware parallelism must still answer
+    // every request correctly, and explicit counts always win over the
+    // auto heuristic and the env override.
+    let _guard = Chaos::bare();
+    let tolerate = faults::enabled();
+
+    let cfg = sharded(3, None);
+    assert_eq!(cfg.effective_shards(), 3, "explicit shard count is authoritative");
+    let auto = ServeConfig::default();
+    assert!(auto.effective_shards() >= 1, "auto sharding always yields a dispatcher");
+
+    let server = Server::builder(sharded(3, None))
+        .kernel("chain", |_ctx, p| {
+            let x = p[0].vec1();
+            let y = p[1].vec1();
+            Value::Vec((&(&x + &y) * &x).sqrt())
+        })
+        .kernel("scale", |_ctx, p| Value::Vec(p[0].vec1().scale(-1.5)))
+        .start();
+    let client = server.client();
+    // Rides out chaos-leg injected failures; real errors panic.
+    let call_ok = |kernel: &str, args: &dyn Fn() -> Vec<Arg>| -> Vec<f64> {
+        loop {
+            match client.call(kernel, args()) {
+                Ok(v) => return v,
+                Err(e) if tolerate && e.is_injected() => continue,
+                Err(e) => panic!("unexpected serve error: {e}"),
+            }
+        }
+    };
+    for i in 0..60u64 {
+        if i % 3 == 0 {
+            let v: Vec<f64> = (0..16).map(|k| (i * 16 + k) as f64).collect();
+            let want: Vec<f64> = v.iter().map(|a| a * -1.5).collect();
+            assert_eq!(call_ok("scale", &|| vec![Arg::vec(v.clone())]), want);
+        } else {
+            let (x, y, want) = chain_inputs(64, i + 500);
+            let got = call_ok("chain", &|| vec![Arg::vec(x.clone()), Arg::vec(y.clone())]);
+            assert_eq!(got, want, "request {i}");
+        }
+    }
+}
+
+#[test]
+fn injected_replay_panic_mid_steal_is_contained_and_heals() {
+    // Same skewed single-plan flood as the stress test, but with a 15%
+    // replay-panic rate injected into the shard dispatchers. Panics
+    // fire on whichever dispatcher executes the request — home or
+    // thief — so stolen work panics mid-steal too. The panic
+    // containment layer must convert every fire into an injected error
+    // on exactly that request's ticket, lose no dispatcher thread, and
+    // keep every surviving result bit-identical.
+    const SHARDS: usize = 3;
+    const N: usize = 4_000;
+    const BURST: usize = 40;
+    const ROUNDS: usize = 8;
+
+    let _chaos = Chaos::bare();
+    let spec = FaultSpec::parse("serve.replay.panic:0.15", 4242).unwrap();
+    let server = chain_server(SHARDS, Some(spec));
+    let client = server.client();
+
+    let (mut ok, mut injected) = (0u64, 0u64);
+    for round in 0..ROUNDS {
+        let cases: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> = (0..BURST)
+            .map(|i| chain_inputs(N, (round * BURST + i) as u64 + 9_000))
+            .collect();
+        let tickets: Vec<_> = cases
+            .iter()
+            .map(|(x, y, _)| {
+                client
+                    .submit("chain", vec![Arg::vec(x.clone()), Arg::vec(y.clone())])
+                    .expect("submission must survive injected replay panics")
+            })
+            .collect();
+        for (i, (t, (_, _, want))) in tickets.into_iter().zip(&cases).enumerate() {
+            match t.wait() {
+                Ok(got) => {
+                    assert_eq!(&got, want, "round {round} req {i}: surviving result skewed");
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(e.is_injected(), "round {round} req {i}: unexpected error {e}");
+                    injected += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(ok + injected, (ROUNDS * BURST) as u64, "every ticket answered exactly once");
+    assert!(injected > 0, "a 15% rate over {} requests must fire", ROUNDS * BURST);
+    assert!(ok > 0, "most requests must survive a 15% rate");
+    let sched = client.scheduler_stats();
+    assert!(
+        sched.steals > 0,
+        "the faulted phase must include stolen work (stats: {sched:?})"
+    );
+
+    // Heal: spec cleared, the same server — same dispatchers, same
+    // queues, same cached plan — serves a clean flood fault-free.
+    faults::clear();
+    let cases: Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> =
+        (0..BURST).map(|i| chain_inputs(N, i as u64 + 77_000)).collect();
+    let tickets: Vec<_> = cases
+        .iter()
+        .map(|(x, y, _)| {
+            client.submit("chain", vec![Arg::vec(x.clone()), Arg::vec(y.clone())]).unwrap()
+        })
+        .collect();
+    for (t, (_, _, want)) in tickets.into_iter().zip(&cases) {
+        assert_eq!(&t.wait().unwrap(), want, "healed server must serve bit-identically");
+    }
+    assert_eq!(client.cache_stats().quarantine_events, 0, "threshold MAX never quarantines");
+}
