@@ -167,8 +167,8 @@ fn obs_smoke() {
     // ---- off vs off vs metrics, interleaved min-of-rounds. Tape
     //      profiling is process-global once enabled, so the full-stack
     //      server must not exist yet. ----
-    let off = ObsConfig { metrics: false, trace_capacity: 0, tape_profile: false };
-    let metrics_only = ObsConfig { metrics: true, trace_capacity: 0, tape_profile: false };
+    let off = ObsConfig { metrics: false, ..ObsConfig::default() };
+    let metrics_only = ObsConfig::default();
     let (srv_a, srv_b, srv_m) = (triad_server(off), triad_server(off), triad_server(metrics_only));
     let (mut ns_off, mut ns_off_check, mut ns_metrics) =
         (f64::INFINITY, f64::INFINITY, f64::INFINITY);
@@ -182,7 +182,7 @@ fn obs_smoke() {
     // ---- full stack: metrics + trace ring + tape profiling, with the
     //      paper's kernel mix registered so the plan profiles cover the
     //      dense, sparse and captured-program paths. ----
-    let full = ObsConfig { metrics: true, trace_capacity: 4096, tape_profile: true };
+    let full = ObsConfig { trace_capacity: 4096, tape_profile: true, ..ObsConfig::default() };
     let spm = banded_spd(512, 5, 3);
     let spm2 = spm.clone();
     let fft_n = 1024usize;
@@ -642,11 +642,134 @@ fn scaling_smoke() {
     println!("\n# serve_throughput scaling smoke done");
 }
 
+/// Live-plane smoke (runs with `--smoke`, after the scaling pass): the
+/// steady-state request cost of a server with the HTTP scrape plane
+/// bound and ticking (SLO burn windows armed) vs the same server with
+/// no listener, the wall latency of a real `/metrics` scrape over TCP,
+/// and the cost of freezing one flight dump. Emits
+/// `BENCH_obs_plane.json`.
+fn obs_plane_smoke() {
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpStream;
+
+    use arbb_rs::obs::{FlightEventKind, FlightRecorder};
+    use arbb_rs::serve::SloSpec;
+
+    const WARM: usize = 200;
+    const REQS: usize = 2000;
+    const ROUNDS: usize = 3;
+
+    println!("\n# serve_throughput (smoke) — live-observability-plane cost tracking\n");
+
+    let inputs: Vec<(Vec<f64>, Vec<f64>)> = (0..4u64).map(triad_inputs).collect();
+    // Both servers keep metrics on; the "on" server additionally binds
+    // the scrape listener (accept thread + periodic SLO tick) and arms
+    // one generous latency SLO so the burn windows do real work.
+    let lean = |listen: Option<&str>| ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        queue_capacity: 64,
+        obs: ObsConfig {
+            listen_addr: listen.map(str::to_string),
+            slos: if listen.is_some() {
+                vec![SloSpec::new("triad", 50_000_000, 0.01)]
+            } else {
+                Vec::new()
+            },
+            ..ObsConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let triad_server = |cfg: ServeConfig| {
+        Server::builder(cfg)
+            .kernel("triad", |_ctx, p| Value::Vec(triad_expr(&p[0].vec1(), &p[1].vec1())))
+            .start()
+    };
+    let run = |server: &Server| -> f64 {
+        let client = server.client();
+        let call = |i: usize| {
+            let (x, y) = &inputs[i % inputs.len()];
+            let args = vec![Arg::vec(x.clone()), Arg::vec(y.clone())];
+            std::hint::black_box(client.call("triad", args).unwrap());
+        };
+        for i in 0..WARM {
+            call(i);
+        }
+        let t0 = Instant::now();
+        for i in 0..REQS {
+            call(i);
+        }
+        t0.elapsed().as_nanos() as f64 / REQS as f64
+    };
+
+    let srv_off = triad_server(lean(None));
+    let srv_on = triad_server(lean(Some("127.0.0.1:0")));
+    let addr = srv_on.obs_addr().expect("scrape listener bound");
+    let (mut ns_off, mut ns_on) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..ROUNDS {
+        ns_off = ns_off.min(run(&srv_off));
+        ns_on = ns_on.min(run(&srv_on));
+    }
+    let overhead_pct = (ns_on - ns_off) / ns_off * 100.0;
+
+    // A real scrape over TCP against the live server, best of ten.
+    let scrape = || -> f64 {
+        let t0 = Instant::now();
+        let mut s = TcpStream::connect(addr).expect("connect scrape endpoint");
+        write!(s, "GET /metrics HTTP/1.1\r\nHost: bench\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read scrape");
+        assert!(out.contains("arbb_serve_requests_total"), "scrape must carry serve metrics");
+        t0.elapsed().as_secs_f64() * 1e6
+    };
+    let mut scrape_us = f64::INFINITY;
+    for _ in 0..10 {
+        scrape_us = scrape_us.min(scrape());
+    }
+    let bk = srv_on.backend_name();
+    drop((srv_off, srv_on));
+
+    // Flight-recorder primitives measured directly: `record` rides the
+    // request path on anomalies, `freeze` is the anomaly edge and is
+    // allowed to allocate.
+    let flight = FlightRecorder::new(1024);
+    for i in 0..1024u64 {
+        flight.record(FlightEventKind::Steal, 0, 0, i);
+    }
+    let mut freeze_us = f64::INFINITY;
+    for _ in 0..8 {
+        let t0 = Instant::now();
+        flight.freeze("bench freeze", "triad", Vec::new(), vec![0; 4], "[]".to_string());
+        freeze_us = freeze_us.min(t0.elapsed().as_secs_f64() * 1e6);
+    }
+
+    println!("  backend={bk} reqs={REQS} rounds={ROUNDS} (min)");
+    println!("  plane off (no listener)  {ns_off:>9.1} ns/req");
+    println!("  plane on  (listener+SLO) {ns_on:>9.1} ns/req  ({overhead_pct:+.2}%)");
+    println!("  /metrics scrape          {scrape_us:>9.1} us");
+    println!("  flight-dump freeze       {freeze_us:>9.1} us");
+
+    let json = format!(
+        "{{\"bench\":\"obs_plane\",\"backend\":\"{bk}\",\"reqs\":{REQS},\
+         \"triad_n\":{TRIAD_N},\
+         \"obs_off_ns_per_req\":{ns_off:.1},\"obs_on_ns_per_req\":{ns_on:.1},\
+         \"overhead_pct\":{overhead_pct:.3},\
+         \"scrape_latency_us\":{scrape_us:.1},\"flight_freeze_us\":{freeze_us:.2}}}\n"
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_obs_plane.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n  wrote {path}"),
+        Err(e) => println!("\n  could not write {path}: {e}"),
+    }
+    println!("\n# serve_throughput obs-plane smoke done");
+}
+
 fn main() {
     if std::env::args().any(|a| a == "--smoke") {
         obs_smoke();
         resilience_smoke();
         scaling_smoke();
+        obs_plane_smoke();
         return;
     }
     let secs = parse_secs();

@@ -1,0 +1,118 @@
+//! Chaos-leg probe for the live observability plane: a small server
+//! with the scrape endpoints bound on an ephemeral port, driven from a
+//! CI shell by file handshakes while `curl` watches `/healthz` and
+//! `/readyz` flip and recover around an injected quarantine trip.
+//!
+//! Protocol (all paths inside the handshake directory, argv[1],
+//! default `.`):
+//!
+//!  1. the probe writes `obs_addr.txt` once the listener is bound and
+//!     serves healthy warm-up traffic — the shell asserts `/readyz`
+//!     answers 200;
+//!  2. the shell touches `fault.go`; the probe arms a deterministic
+//!     capture failpoint and calls the (still uncaptured) `poison`
+//!     kernel until its plan circuit breaker trips — readiness flips
+//!     to 503 — then touches `tripped.ok`;
+//!  3. the shell watches `/readyz` recover once the quarantine backoff
+//!     elapses, then touches `done.go`; the probe exits 0. The healthy
+//!     `ok` kernel serves cached replays through the whole episode.
+//!
+//! ```sh
+//! cargo run --release --example obs_chaos_probe -- /tmp/obs_probe
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use arbb_rs::obs::faults::{self, FaultSpec};
+use arbb_rs::serve::{Arg, ObsConfig, ResilienceConfig, ServeConfig, ServeError, Server, Value};
+
+/// Handshake timeout: generous for cold CI runners, finite so a broken
+/// driver script fails the job instead of hanging it.
+const HANDSHAKE: Duration = Duration::from_secs(120);
+
+fn wait_for(path: &Path, what: &str) {
+    let deadline = Instant::now() + HANDSHAKE;
+    while !path.exists() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what} ({path:?})");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn main() {
+    let dir = PathBuf::from(std::env::args().nth(1).unwrap_or_else(|| ".".into()));
+    std::fs::create_dir_all(&dir).expect("handshake dir");
+
+    let server = Server::builder(ServeConfig {
+        workers: 1,
+        resilience: ResilienceConfig {
+            quarantine_threshold: 2,
+            quarantine_backoff: Duration::from_secs(3),
+            // Disarm whatever `PALLAS_FAULTS` installed: the chaos job
+            // runs with probabilistic pool faults that could trip the
+            // *healthy* kernel's breaker at random. The probe injects
+            // its own deterministic capture failure in phase 2 instead,
+            // so the readiness flip happens exactly once, on cue.
+            faults: Some(FaultSpec { points: Vec::new(), seed: 0 }),
+            ..ResilienceConfig::default()
+        },
+        obs: ObsConfig {
+            listen_addr: Some("127.0.0.1:0".to_string()),
+            trace_capacity: 256,
+            ..ObsConfig::default()
+        },
+        ..ServeConfig::serial()
+    })
+    .kernel("ok", |_ctx, p| Value::Vec(p[0].vec1().scale(2.0)))
+    .kernel("poison", |_ctx, p| Value::Vec(p[0].vec1().scale(1.0)))
+    .start();
+
+    let addr = server.obs_addr().expect("obs listener bound");
+    let client = server.client();
+    let args = || vec![Arg::vec(vec![1.0; 64])];
+
+    // Phase 1: healthy traffic, then publish the scrape address.
+    for _ in 0..5 {
+        client.call("ok", args()).expect("healthy warm-up call");
+    }
+    std::fs::write(dir.join("obs_addr.txt"), addr.to_string()).expect("write obs_addr.txt");
+    println!("obs_chaos_probe: serving on {addr}, waiting for fault.go");
+
+    // Phase 2: every capture now fails deterministically; the poison
+    // plan (never captured, so never cached) trips its breaker after
+    // two consecutive failures.
+    wait_for(&dir.join("fault.go"), "fault.go");
+    faults::install(&FaultSpec::parse("serve.capture.fail:1.0", 42).expect("failpoint spec"));
+    let mut attempts = 0u32;
+    loop {
+        match client.call("poison", args()) {
+            Err(ServeError::Quarantined { failures, .. }) => {
+                println!("obs_chaos_probe: breaker tripped after {failures} failures");
+                break;
+            }
+            Err(e) => {
+                attempts += 1;
+                assert!(e.is_injected(), "expected the injected capture failure, got {e}");
+                assert!(attempts <= 5, "breaker never tripped");
+            }
+            Ok(_) => panic!("capture failpoint is armed; poison cannot capture"),
+        }
+    }
+    faults::clear();
+    std::fs::write(dir.join("tripped.ok"), "tripped\n").expect("write tripped.ok");
+
+    // Phase 3: keep the healthy tenant replaying its cached plan while
+    // the shell watches `/readyz` recover after the backoff.
+    let done = dir.join("done.go");
+    let deadline = Instant::now() + HANDSHAKE;
+    while !done.exists() {
+        assert!(Instant::now() < deadline, "timed out waiting for done.go");
+        assert_eq!(
+            client.call("ok", args()).expect("healthy kernel during quarantine")[0],
+            2.0,
+            "cached replay must stay correct"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("obs_chaos_probe: done; {} flight dump(s) frozen", client.flight_dumps().len());
+}

@@ -1,0 +1,356 @@
+//! Anomaly-triggered flight recorder.
+//!
+//! A [`FlightRecorder`] keeps an always-on bounded ring of recent
+//! *operational events* — quarantine trips, deadline sheds and misses,
+//! worker panics and respawns, steals, SLO burns — recorded from the
+//! serve hot path with no allocation (the ring is pre-reserved and the
+//! events are `Copy`; recording is one short mutex hold, the same
+//! budget as the trace ring).
+//!
+//! When an anomaly fires (a circuit breaker trips, an SLO burn-rate
+//! alert crosses its threshold), [`FlightRecorder::freeze`] captures a
+//! [`FlightDump`]: the event ring, the offending kernel's recent trace
+//! spans, per-shard queue depths, and the plan cache's breaker states —
+//! the forensic context that is gone by the time a human scrapes
+//! `/metrics`. Dumps are bounded (oldest dropped) and retrievable
+//! through `Client::flight_dumps` or the `/debug/flight` HTTP endpoint.
+//! Freezing allocates; it only runs on anomaly edges, never per
+//! request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::trace::SpanEvent;
+
+/// Kernel index meaning "no specific kernel" in a [`FlightEvent`].
+pub const NO_KERNEL: u32 = u32::MAX;
+
+/// What happened. The `value` field of the event qualifies it (see
+/// each variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlightEventKind {
+    /// A plan's circuit breaker tripped; `value` = consecutive
+    /// failures.
+    QuarantineTrip,
+    /// A request was shed before execution for a hopeless deadline;
+    /// `value` = ns missed by.
+    DeadlineShed,
+    /// A request completed after its deadline; `value` = ns late.
+    DeadlineMiss,
+    /// A kernel panicked during capture or replay.
+    Panic,
+    /// A pool worker died and was respawned; `value` = cumulative
+    /// respawn count.
+    WorkerRespawn,
+    /// A request executed on a shard other than its plan-affine home;
+    /// `value` = the trace-span seq (0 when tracing is off).
+    Steal,
+    /// An SLO burn-rate alert tripped; `value` = fast-window burn
+    /// × 1000.
+    SloBurn,
+}
+
+impl FlightEventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FlightEventKind::QuarantineTrip => "quarantine_trip",
+            FlightEventKind::DeadlineShed => "deadline_shed",
+            FlightEventKind::DeadlineMiss => "deadline_miss",
+            FlightEventKind::Panic => "panic",
+            FlightEventKind::WorkerRespawn => "worker_respawn",
+            FlightEventKind::Steal => "steal",
+            FlightEventKind::SloBurn => "slo_burn",
+        }
+    }
+}
+
+/// One operational event. `Copy` and fixed-size so the ring records
+/// without allocating.
+#[derive(Debug, Clone, Copy)]
+pub struct FlightEvent {
+    /// Nanoseconds since the recorder's epoch.
+    pub t_ns: u64,
+    pub kind: FlightEventKind,
+    /// Kernel index, or [`NO_KERNEL`].
+    pub kernel: u32,
+    /// Shard the event happened on.
+    pub shard: u32,
+    /// Kind-specific qualifier (see [`FlightEventKind`]).
+    pub value: u64,
+}
+
+/// A frozen forensic capture, taken on an anomaly edge.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    /// Freeze time, nanoseconds since the recorder's epoch.
+    pub t_ns: u64,
+    /// Human-readable anomaly description.
+    pub reason: String,
+    /// Offending kernel's name ("" when the anomaly is not
+    /// kernel-specific).
+    pub kernel: String,
+    /// The event ring at freeze time, oldest first.
+    pub events: Vec<FlightEvent>,
+    /// The offending kernel's recent trace spans (all spans when the
+    /// anomaly is not kernel-specific; empty when tracing is off).
+    pub spans: Vec<SpanEvent>,
+    /// Per-shard queue depths at freeze time.
+    pub shard_depths: Vec<usize>,
+    /// Plan-cache breaker states, pre-rendered as a JSON array.
+    pub breakers: String,
+}
+
+struct Ring {
+    /// Pre-reserved to capacity at construction; recording never grows
+    /// it.
+    buf: Vec<FlightEvent>,
+    /// Overwrite cursor once the buffer is full.
+    next: usize,
+}
+
+/// Bounded retained dumps; older incidents age out.
+const MAX_DUMPS: usize = 8;
+
+/// Always-on bounded recorder of operational events with on-anomaly
+/// freeze.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    epoch: Instant,
+    capacity: usize,
+    ring: Mutex<Ring>,
+    recorded: AtomicU64,
+    frozen: AtomicU64,
+    dumps: Mutex<Vec<FlightDump>>,
+}
+
+impl std::fmt::Debug for Ring {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ring").field("len", &self.buf.len()).field("next", &self.next).finish()
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            epoch: Instant::now(),
+            capacity,
+            ring: Mutex::new(Ring { buf: Vec::with_capacity(capacity), next: 0 }),
+            recorded: AtomicU64::new(0),
+            frozen: AtomicU64::new(0),
+            dumps: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Nanoseconds since the recorder's epoch — the timebase of every
+    /// event and dump.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one event. Allocation-free: the ring was reserved at
+    /// construction and the event is `Copy`.
+    pub fn record(&self, kind: FlightEventKind, kernel: u32, shard: u32, value: u64) {
+        let ev = FlightEvent { t_ns: self.now_ns(), kind, kernel, shard, value };
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        if ring.buf.len() < self.capacity {
+            ring.buf.push(ev);
+        } else {
+            let ix = ring.next;
+            ring.buf[ix] = ev;
+            ring.next = (ix + 1) % self.capacity;
+        }
+        drop(ring);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total events recorded (including those the ring has overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Freezes taken.
+    pub fn freezes(&self) -> u64 {
+        self.frozen.load(Ordering::Relaxed)
+    }
+
+    /// Copy of the event ring, oldest first.
+    pub fn events(&self) -> Vec<FlightEvent> {
+        let ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        let mut out = Vec::with_capacity(ring.buf.len());
+        out.extend_from_slice(&ring.buf[ring.next..]);
+        out.extend_from_slice(&ring.buf[..ring.next]);
+        out
+    }
+
+    /// Capture a [`FlightDump`] of the current state. Allocates —
+    /// callers invoke this on anomaly edges only, never per request.
+    /// At most [`MAX_DUMPS`] dumps are retained, oldest dropped.
+    pub fn freeze(
+        &self,
+        reason: &str,
+        kernel: &str,
+        spans: Vec<SpanEvent>,
+        shard_depths: Vec<usize>,
+        breakers: String,
+    ) {
+        let dump = FlightDump {
+            t_ns: self.now_ns(),
+            reason: reason.to_string(),
+            kernel: kernel.to_string(),
+            events: self.events(),
+            spans,
+            shard_depths,
+            breakers,
+        };
+        let mut dumps = self.dumps.lock().unwrap_or_else(|p| p.into_inner());
+        if dumps.len() >= MAX_DUMPS {
+            dumps.remove(0);
+        }
+        dumps.push(dump);
+        drop(dumps);
+        self.frozen.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The retained dumps, oldest first.
+    pub fn dumps(&self) -> Vec<FlightDump> {
+        self.dumps.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Render the retained dumps as JSON (the `/debug/flight` payload).
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let dumps = self.dumps();
+        let mut out = String::with_capacity(256 + dumps.len() * 512);
+        out.push_str("{\"freezes\":");
+        out.push_str(&self.freezes().to_string());
+        out.push_str(",\"events_recorded\":");
+        out.push_str(&self.recorded().to_string());
+        out.push_str(",\"dumps\":[");
+        for (di, d) in dumps.iter().enumerate() {
+            if di > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"t_ns\":{},\"reason\":\"{}\",\"kernel\":\"{}\",\"shard_depths\":[",
+                d.t_ns,
+                esc(&d.reason),
+                esc(&d.kernel)
+            ));
+            for (i, q) in d.shard_depths.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&q.to_string());
+            }
+            out.push_str("],\"breakers\":");
+            out.push_str(if d.breakers.is_empty() { "[]" } else { &d.breakers });
+            out.push_str(",\"events\":[");
+            for (i, e) in d.events.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"t_ns\":{},\"kind\":\"{}\",\"kernel\":{},\"shard\":{},\"value\":{}}}",
+                    e.t_ns,
+                    e.kind.as_str(),
+                    if e.kernel == NO_KERNEL { -1 } else { e.kernel as i64 },
+                    e.shard,
+                    e.value
+                ));
+            }
+            out.push_str("],\"spans\":[");
+            for (i, s) in d.spans.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"seq\":{},\"kernel\":{},\"shard\":{},\"home\":{},\"stolen\":{},\
+                     \"ok\":{},\"cache_hit\":{},\"t_enq\":{},\"t_done\":{}}}",
+                    s.seq,
+                    s.kernel,
+                    s.shard,
+                    s.home,
+                    s.shard != s.home,
+                    s.ok,
+                    s.cache_hit,
+                    s.t_enq,
+                    s.t_done
+                ));
+            }
+            out.push_str("]}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_ordered() {
+        let fr = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            fr.record(FlightEventKind::Steal, 0, (i % 3) as u32, i);
+        }
+        assert_eq!(fr.recorded(), 10);
+        let evs = fr.events();
+        assert_eq!(evs.len(), 4, "ring capacity bounds retention");
+        let vals: Vec<u64> = evs.iter().map(|e| e.value).collect();
+        assert_eq!(vals, vec![6, 7, 8, 9], "oldest events overwritten, order kept");
+        for w in evs.windows(2) {
+            assert!(w[0].t_ns <= w[1].t_ns);
+        }
+    }
+
+    #[test]
+    fn freeze_captures_context_and_is_bounded() {
+        let fr = FlightRecorder::new(16);
+        fr.record(FlightEventKind::Panic, 2, 1, 0);
+        fr.record(FlightEventKind::QuarantineTrip, 2, 1, 3);
+        fr.freeze(
+            "quarantine trip after 3 consecutive failures",
+            "poison",
+            Vec::new(),
+            vec![5, 0],
+            "[{\"kernel\":\"poison\",\"failures\":3,\"quarantined_ms\":60}]".to_string(),
+        );
+        assert_eq!(fr.freezes(), 1);
+        let dumps = fr.dumps();
+        assert_eq!(dumps.len(), 1);
+        let d = &dumps[0];
+        assert_eq!(d.kernel, "poison");
+        assert_eq!(d.shard_depths, vec![5, 0]);
+        assert_eq!(d.events.len(), 2);
+        assert_eq!(d.events[1].kind, FlightEventKind::QuarantineTrip);
+        assert_eq!(d.events[1].value, 3);
+
+        // Dumps are bounded: oldest incidents age out.
+        for i in 0..(MAX_DUMPS + 3) {
+            fr.freeze(&format!("incident {i}"), "", Vec::new(), Vec::new(), String::new());
+        }
+        let dumps = fr.dumps();
+        assert_eq!(dumps.len(), MAX_DUMPS);
+        assert_eq!(dumps.last().unwrap().reason, format!("incident {}", MAX_DUMPS + 2));
+    }
+
+    #[test]
+    fn json_renders_and_escapes() {
+        let fr = FlightRecorder::new(8);
+        fr.record(FlightEventKind::SloBurn, NO_KERNEL, 0, 2500);
+        fr.freeze("burn \"fast\" 2.5x", "k\\1", Vec::new(), vec![1], String::new());
+        let j = fr.to_json();
+        assert!(j.starts_with("{\"freezes\":1"), "{j}");
+        assert!(j.contains("\"reason\":\"burn \\\"fast\\\" 2.5x\""), "{j}");
+        assert!(j.contains("\"kernel\":\"k\\\\1\""), "{j}");
+        assert!(j.contains("\"kind\":\"slo_burn\""), "{j}");
+        assert!(j.contains("\"kernel\":-1"), "NO_KERNEL renders as -1: {j}");
+        assert!(j.contains("\"breakers\":[]"), "{j}");
+        assert!(j.ends_with("]}"), "{j}");
+    }
+}

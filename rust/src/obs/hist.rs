@@ -204,6 +204,37 @@ impl HistSnapshot {
         representative(self.buckets.len() - 1)
     }
 
+    /// Bucket-wise difference `self - baseline`: the samples recorded
+    /// between the two snapshots. Counts and sums subtract saturating
+    /// (concurrent recording can leave a bucket a sample ahead of the
+    /// totals); the exact `min`/`max` of the interval are not
+    /// recoverable from two cumulative snapshots, so the delta's
+    /// extrema are re-derived from its own non-empty buckets (within
+    /// [`MAX_REL_ERROR`] of the true values).
+    pub fn delta_since(&self, baseline: &HistSnapshot) -> HistSnapshot {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .zip(baseline.buckets.iter())
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        let (mut min, mut max) = (u64::MAX, 0u64);
+        for (ix, &c) in buckets.iter().enumerate() {
+            if c > 0 {
+                let (lo, w) = bucket_bounds(ix);
+                min = min.min(lo);
+                max = max.max(lo + (w - 1));
+            }
+        }
+        HistSnapshot {
+            count: self.count.saturating_sub(baseline.count),
+            sum: self.sum.saturating_sub(baseline.sum),
+            min,
+            max,
+            buckets,
+        }
+    }
+
     pub fn p50(&self) -> f64 {
         self.percentile(0.50)
     }
@@ -273,6 +304,28 @@ mod tests {
         assert!((p99 - 990_000.0).abs() <= 990_000.0 * MAX_REL_ERROR, "{p99}");
         // The sum is exact, not quantised.
         assert_eq!(s.sum, (1..=1000u64).map(|i| i * 1000).sum::<u64>());
+    }
+
+    #[test]
+    fn delta_between_snapshots() {
+        let h = LogHistogram::new();
+        h.record(1000);
+        h.record(2000);
+        let base = h.snapshot();
+        h.record(4000);
+        h.record(8000);
+        let d = h.snapshot().delta_since(&base);
+        assert_eq!(d.count, 2);
+        assert_eq!(d.sum, 12_000);
+        // Interval extrema come from the delta's own buckets, so they
+        // carry the usual bucket quantisation.
+        assert!((d.min() as f64 - 4000.0).abs() <= 4000.0 * MAX_REL_ERROR);
+        assert!((d.max() as f64 - 8000.0).abs() <= 8000.0 * MAX_REL_ERROR);
+        // A delta against itself is empty.
+        let s = h.snapshot();
+        let z = s.delta_since(&s);
+        assert!(z.is_empty());
+        assert_eq!((z.min(), z.max()), (0, 0));
     }
 
     #[test]

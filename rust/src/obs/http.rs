@@ -1,0 +1,300 @@
+//! Minimal dependency-free HTTP/1.1 scrape server.
+//!
+//! The repo builds offline with no networking crates, so the live
+//! observability plane speaks just enough HTTP/1.1 over
+//! [`std::net::TcpListener`] for scrapers, `curl`, and browsers: one
+//! accept thread, `GET`-oriented request parsing (start line only, up
+//! to an 8 KiB header block), `Content-Length` + `Connection: close`
+//! responses. That is the whole protocol surface a Prometheus scrape
+//! or a `/healthz` probe needs — anything fancier (keep-alive,
+//! chunking, TLS) belongs behind a real reverse proxy.
+//!
+//! The listener runs non-blocking with a millisecond accept nap so the
+//! server can observe its stop flag without a self-connect, and so the
+//! same thread can drive a periodic *tick* callback — the serve layer
+//! uses the tick to evaluate SLO burn rates and detect worker respawns
+//! without dedicating another thread.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Largest request head (start line + headers) the server reads.
+const MAX_REQUEST: usize = 8 * 1024;
+
+/// Per-connection read/write timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Accept-loop nap when no connection is pending.
+const ACCEPT_NAP: Duration = Duration::from_millis(1);
+
+/// What a handler returns for one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// HTTP status code (200, 404, 405, 503, ...).
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Response { status, content_type: "text/plain; charset=utf-8", body: body.into() }
+    }
+
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        Response { status, content_type: "application/json", body: body.into() }
+    }
+
+    /// Prometheus text exposition format, version 0.0.4.
+    pub fn prometheus(body: impl Into<String>) -> Self {
+        Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: body.into(),
+        }
+    }
+
+    pub fn not_found(what: &str) -> Self {
+        Response::text(404, format!("not found: {what}\n"))
+    }
+
+    pub fn method_not_allowed() -> Self {
+        Response::text(405, "method not allowed\n")
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            503 => "Service Unavailable",
+            _ => "Response",
+        }
+    }
+}
+
+/// Request handler: `(method, path)` → response. The path has its
+/// query string stripped.
+pub type Handler = dyn Fn(&str, &str) -> Response + Send + Sync;
+
+/// A running scrape server. Stops (flag + thread join) on [`stop`]
+/// (idempotent) or drop.
+///
+/// [`stop`]: HttpServer::stop
+#[derive(Debug)]
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `handler` on a background thread. When `tick` is given,
+    /// its callback runs on the accept thread roughly every `period`
+    /// (never concurrently with a request).
+    pub fn start(
+        addr: &str,
+        handler: Arc<Handler>,
+        tick: Option<(Duration, Box<dyn Fn() + Send>)>,
+    ) -> io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("arbb-obs-http".to_string())
+            .spawn(move || serve_loop(listener, handler, tick, stop2))?;
+        Ok(HttpServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves the port when bound to `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept thread and join it. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_loop(
+    listener: TcpListener,
+    handler: Arc<Handler>,
+    tick: Option<(Duration, Box<dyn Fn() + Send>)>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut last_tick = Instant::now();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // A scraper that hangs up mid-request is its problem,
+                // not the server's.
+                let _ = handle_conn(stream, handler.as_ref());
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(ACCEPT_NAP),
+            Err(_) => std::thread::sleep(ACCEPT_NAP),
+        }
+        if let Some((period, f)) = &tick {
+            if last_tick.elapsed() >= *period {
+                f();
+                last_tick = Instant::now();
+            }
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, handler: &Handler) -> io::Result<()> {
+    // The accepted socket may inherit the listener's non-blocking mode
+    // on some platforms; per-connection I/O is blocking with timeouts.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+
+    let mut buf = [0u8; MAX_REQUEST];
+    let mut n = 0usize;
+    loop {
+        if n == buf.len() {
+            break;
+        }
+        let k = stream.read(&mut buf[n..])?;
+        if k == 0 {
+            break;
+        }
+        n += k;
+        if buf[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let start = head.lines().next().unwrap_or("");
+    let mut parts = start.split_whitespace();
+    let resp = match (parts.next(), parts.next()) {
+        (Some(method), Some(target)) if !method.is_empty() => {
+            let path = target.split('?').next().unwrap_or(target);
+            handler(method, path)
+        }
+        _ => Response::text(400, "bad request\n"),
+    };
+    write_response(&mut stream, &resp)
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.reason(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    /// Blocking one-shot GET against `addr`; returns (status, body).
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nAccept: */*\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).expect("read response");
+        let status: u16 = raw
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse().ok())
+            .unwrap_or_else(|| panic!("no status in {raw:?}"));
+        let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    #[test]
+    fn serves_routes_and_404s() {
+        let handler: Arc<Handler> = Arc::new(|method, path| {
+            if method != "GET" {
+                return Response::method_not_allowed();
+            }
+            match path {
+                "/hello" => Response::text(200, "hi\n"),
+                "/json" => Response::json(200, "{\"ok\":true}"),
+                p => Response::not_found(p),
+            }
+        });
+        let server = HttpServer::start("127.0.0.1:0", handler, None).expect("bind");
+        let addr = server.local_addr();
+        assert_ne!(addr.port(), 0, "ephemeral port resolved");
+
+        assert_eq!(get(addr, "/hello"), (200, "hi\n".to_string()));
+        assert_eq!(get(addr, "/json").0, 200);
+        // Query strings are stripped before dispatch.
+        assert_eq!(get(addr, "/hello?verbose=1").0, 200);
+        let (status, body) = get(addr, "/nope");
+        assert_eq!(status, 404);
+        assert!(body.contains("/nope"), "{body}");
+    }
+
+    #[test]
+    fn non_get_is_rejected_by_the_handler() {
+        let handler: Arc<Handler> = Arc::new(|method, _| {
+            if method != "GET" {
+                Response::method_not_allowed()
+            } else {
+                Response::text(200, "ok")
+            }
+        });
+        let server = HttpServer::start("127.0.0.1:0", handler, None).expect("bind");
+        let mut s = TcpStream::connect(server.local_addr()).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405"), "{raw}");
+    }
+
+    #[test]
+    fn tick_runs_between_requests_and_stop_is_idempotent() {
+        let ticks = Arc::new(AtomicU64::new(0));
+        let t2 = Arc::clone(&ticks);
+        let handler: Arc<Handler> = Arc::new(|_, _| Response::text(200, "ok"));
+        let mut server = HttpServer::start(
+            "127.0.0.1:0",
+            handler,
+            Some((
+                Duration::from_millis(5),
+                Box::new(move || {
+                    t2.fetch_add(1, Ordering::Relaxed);
+                }),
+            )),
+        )
+        .expect("bind");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while ticks.load(Ordering::Relaxed) < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(ticks.load(Ordering::Relaxed) >= 3, "tick callback must fire periodically");
+        server.stop();
+        server.stop(); // idempotent; Drop will call it again.
+    }
+}

@@ -1,17 +1,19 @@
 //! `obs` — end-to-end observability: lock-free metrics, pipeline
-//! trace spans and per-opcode tape profiling.
+//! trace spans, per-opcode tape profiling, and a live scrape plane.
 //!
 //! The ArBB paper's entire argument is measured performance; this
 //! module is the measurement substrate the rest of the repo reports
-//! through. Three layers, all compiled in, all cheap when idle:
+//! through. Seven layers, all compiled in, all cheap when idle:
 //!
 //! 1. **Metrics** ([`registry`]): a [`MetricsRegistry`] of named
 //!    counters, gauges and log-bucketed [`LogHistogram`]s. Recording
 //!    is lock-free and allocation-free; [`MetricsRegistry::snapshot`]
-//!    renders as a Prometheus-style text page or JSON — the artifact a
-//!    future HTTP `/metrics` endpoint and the `BENCH_*.json` smokes
-//!    both consume. The histogram ([`hist`]) replaces the serve layer's
-//!    old clone-and-sort percentile window with bounded relative error
+//!    renders as a Prometheus text page or JSON — what the live
+//!    `/metrics` endpoint and the `BENCH_*.json` smokes both consume —
+//!    and [`MetricsRegistry::snapshot_delta`] yields interval deltas
+//!    against a retained baseline without resetting anything. The
+//!    histogram ([`hist`]) replaces the serve layer's old
+//!    clone-and-sort percentile window with bounded relative error
 //!    ([`MAX_REL_ERROR`]).
 //! 2. **Tracing** ([`trace`]): per-request [`SpanEvent`]s decompose
 //!    end-to-end serve latency into queue-wait / batch-formation /
@@ -25,15 +27,32 @@
 //!    failpoints (seeded probability / nth-hit triggers) that the
 //!    resilience layer and the chaos CI leg drive; a disabled
 //!    failpoint costs one relaxed load.
+//! 5. **HTTP scrape plane** ([`http`]): a dependency-free HTTP/1.1
+//!    server over [`std::net::TcpListener`] that the serve layer binds
+//!    when configured, exposing `/metrics`, `/healthz`, `/readyz` and
+//!    the `/debug/*` dumps to curl and Prometheus.
+//! 6. **SLO burn rates** ([`slo`]): per-kernel latency/error
+//!    objectives evaluated over sliding fast/slow windows of interval
+//!    deltas; both-window burns trip alerts.
+//! 7. **Flight recorder** ([`flight`]): an always-on bounded ring of
+//!    operational events (quarantine trips, deadline sheds, respawns,
+//!    steals); anomaly edges freeze forensic [`FlightDump`]s served at
+//!    `/debug/flight`.
 
 pub mod faults;
+pub mod flight;
 pub mod hist;
+pub mod http;
 pub mod profile;
 pub mod registry;
+pub mod slo;
 pub mod trace;
 
 pub use faults::{FaultPoint, FaultSpec, SiteCount, Trigger};
+pub use flight::{FlightDump, FlightEvent, FlightEventKind, FlightRecorder};
 pub use hist::{HistSnapshot, LogHistogram, MAX_REL_ERROR};
+pub use http::{HttpServer, Response};
 pub use profile::{LocalBlock, OpClass, PlanProfile, ProfileSnapshot, ProfileTable};
 pub use registry::{Counter, Gauge, MetricsRegistry, MetricsSnapshot, Sample, SampleValue};
+pub use slo::{SloCounts, SloSpec, SloStatus, SloTracker, SloWindows};
 pub use trace::{Outcome, SpanEvent, TraceRing};

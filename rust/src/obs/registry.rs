@@ -10,7 +10,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::hist::{HistSnapshot, LogHistogram};
+use super::hist::{bucket_bounds, HistSnapshot, LogHistogram};
 
 /// Monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -77,11 +77,15 @@ struct Entry {
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     entries: Mutex<Vec<Entry>>,
+    /// Baseline retained by [`MetricsRegistry::snapshot_delta`] so
+    /// successive calls report per-interval rates without resetting
+    /// any counter out from under other readers.
+    baseline: Mutex<Option<MetricsSnapshot>>,
 }
 
 impl MetricsRegistry {
     pub fn new() -> Self {
-        MetricsRegistry { entries: Mutex::new(Vec::new()) }
+        MetricsRegistry { entries: Mutex::new(Vec::new()), baseline: Mutex::new(None) }
     }
 
     /// Register (or look up) a counter.
@@ -162,6 +166,23 @@ impl MetricsRegistry {
             .collect();
         MetricsSnapshot { samples }
     }
+
+    /// Snapshot the interval since the previous `snapshot_delta` call
+    /// (or since registration, on the first call): counters and
+    /// histograms report only what was recorded in the interval, while
+    /// gauges — levels, not rates — pass through unchanged. The
+    /// underlying metrics are never reset, so cumulative readers
+    /// ([`MetricsRegistry::snapshot`], other scrapers) are unaffected.
+    pub fn snapshot_delta(&self) -> MetricsSnapshot {
+        let now = self.snapshot();
+        let mut base = self.baseline.lock().unwrap();
+        let delta = match base.as_ref() {
+            Some(b) => now.delta_since(b),
+            None => now.clone(),
+        };
+        *base = Some(now);
+        delta
+    }
 }
 
 /// One metric's value inside a [`MetricsSnapshot`].
@@ -207,10 +228,47 @@ impl MetricsSnapshot {
         })
     }
 
+    /// Bucket-wise difference `self - baseline`, matching samples on
+    /// `(name, labels)`. Counters and histograms subtract; gauges —
+    /// levels, not rates — keep their current value. Samples with no
+    /// counterpart in the baseline (registered mid-interval) pass
+    /// through whole.
+    pub fn delta_since(&self, baseline: &MetricsSnapshot) -> MetricsSnapshot {
+        let samples = self
+            .samples
+            .iter()
+            .map(|s| {
+                let prev = baseline
+                    .samples
+                    .iter()
+                    .find(|b| b.name == s.name && b.labels == s.labels);
+                let value = match (&s.value, prev.map(|p| &p.value)) {
+                    (SampleValue::Counter(v), Some(SampleValue::Counter(b))) => {
+                        SampleValue::Counter(v.saturating_sub(*b))
+                    }
+                    (SampleValue::Histogram(h), Some(SampleValue::Histogram(b))) => {
+                        SampleValue::Histogram(h.delta_since(b))
+                    }
+                    (v, _) => v.clone(),
+                };
+                Sample {
+                    name: s.name.clone(),
+                    labels: s.labels.clone(),
+                    help: s.help.clone(),
+                    value,
+                }
+            })
+            .collect();
+        MetricsSnapshot { samples }
+    }
+
     /// Render a Prometheus exposition-format text page. Histograms
-    /// render as summaries (`quantile` labels plus `_sum`/`_count`),
-    /// in their native unit (nanoseconds for the serve latency
-    /// metrics, which carry a `_ns` name suffix).
+    /// render in the native exposition shape: cumulative `le` buckets
+    /// ending in `+Inf`, plus `_sum`/`_count`, in their native unit
+    /// (nanoseconds for the serve latency metrics, which carry a `_ns`
+    /// name suffix). Only populated log-buckets emit a line — the
+    /// cumulative counts stay correct and the page stays tractable
+    /// despite the underlying table's 976 buckets.
     pub fn to_prometheus(&self) -> String {
         let mut out = String::new();
         let mut seen: Vec<&str> = Vec::new();
@@ -220,7 +278,7 @@ impl MetricsSnapshot {
                 let ty = match s.value {
                     SampleValue::Counter(_) => "counter",
                     SampleValue::Gauge(_) => "gauge",
-                    SampleValue::Histogram(_) => "summary",
+                    SampleValue::Histogram(_) => "histogram",
                 };
                 out.push_str(&format!("# HELP {} {}\n", s.name, s.help));
                 out.push_str(&format!("# TYPE {} {}\n", s.name, ty));
@@ -233,19 +291,26 @@ impl MetricsSnapshot {
                     out.push_str(&format!("{}{} {}\n", s.name, brace(&s.labels), fnum(*v)));
                 }
                 SampleValue::Histogram(h) => {
-                    for (q, qs) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                    let bucket_line = |out: &mut String, le: &str, cum: u64| {
                         let labels = if s.labels.is_empty() {
-                            format!("quantile=\"{qs}\"")
+                            format!("le=\"{le}\"")
                         } else {
-                            format!("{},quantile=\"{qs}\"", s.labels)
+                            format!("{},le=\"{le}\"", s.labels)
                         };
-                        out.push_str(&format!(
-                            "{}{{{}}} {}\n",
-                            s.name,
-                            labels,
-                            fnum(h.percentile(q))
-                        ));
+                        out.push_str(&format!("{}_bucket{{{labels}}} {cum}\n", s.name));
+                    };
+                    let mut cum = 0u64;
+                    for (ix, &c) in h.buckets.iter().enumerate() {
+                        if c == 0 {
+                            continue;
+                        }
+                        cum += c;
+                        // The bucket holds [lo, lo+w); its inclusive
+                        // Prometheus upper bound is lo+w-1.
+                        let (lo, w) = bucket_bounds(ix);
+                        bucket_line(&mut out, &format!("{}", lo + (w - 1)), cum);
                     }
+                    bucket_line(&mut out, "+Inf", h.count);
                     out.push_str(&format!("{}_sum{} {}\n", s.name, brace(&s.labels), h.sum));
                     out.push_str(&format!("{}_count{} {}\n", s.name, brace(&s.labels), h.count));
                 }
@@ -353,13 +418,64 @@ mod tests {
     fn prometheus_rendering() {
         let r = MetricsRegistry::new();
         r.counter("reqs_total", "", "total requests").add(7);
-        r.histogram("lat_ns", "kernel=\"k\"", "latency").record(500);
+        let h = r.histogram("lat_ns", "kernel=\"k\"", "latency");
+        h.record(500);
+        h.record(900);
         let page = r.snapshot().to_prometheus();
         assert!(page.contains("# TYPE reqs_total counter"));
         assert!(page.contains("reqs_total 7"));
-        assert!(page.contains("# TYPE lat_ns summary"));
-        assert!(page.contains("lat_ns{kernel=\"k\",quantile=\"0.5\"} 500"));
-        assert!(page.contains("lat_ns_count{kernel=\"k\"} 1"));
+        assert!(page.contains("# TYPE lat_ns histogram"));
+        // 500 lands in log-bucket [496, 512) → inclusive le=511; the
+        // cumulative count through 900's bucket and the +Inf bucket
+        // both reach the total.
+        assert!(page.contains("lat_ns_bucket{kernel=\"k\",le=\"511\"} 1"));
+        assert!(page.contains("lat_ns_bucket{kernel=\"k\",le=\"+Inf\"} 2"));
+        assert!(page.contains("lat_ns_sum{kernel=\"k\"} 1400"));
+        assert!(page.contains("lat_ns_count{kernel=\"k\"} 2"));
+    }
+
+    #[test]
+    fn snapshot_delta_reports_intervals_without_resetting() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("reqs_total", "", "total requests");
+        let g = r.gauge("depth", "", "queue depth");
+        let h = r.histogram("lat_ns", "", "latency");
+        c.add(5);
+        g.set(3.0);
+        h.record(100);
+
+        // First delta covers everything since registration.
+        let d1 = r.snapshot_delta();
+        match d1.get("reqs_total").unwrap().value {
+            SampleValue::Counter(v) => assert_eq!(v, 5),
+            _ => panic!("wrong type"),
+        }
+        assert_eq!(d1.hist("lat_ns").unwrap().count, 1);
+
+        c.add(2);
+        g.set(9.0);
+        h.record(200);
+        h.record(300);
+        let d2 = r.snapshot_delta();
+        match d2.get("reqs_total").unwrap().value {
+            SampleValue::Counter(v) => assert_eq!(v, 2),
+            _ => panic!("wrong type"),
+        }
+        // Gauges are levels: the delta passes the current value through.
+        match d2.get("depth").unwrap().value {
+            SampleValue::Gauge(v) => assert_eq!(v, 9.0),
+            _ => panic!("wrong type"),
+        }
+        let dh = d2.hist("lat_ns").unwrap();
+        assert_eq!((dh.count, dh.sum), (2, 500));
+
+        // Cumulative readers are unaffected by delta scrapes.
+        let full = r.snapshot();
+        assert_eq!(full.hist("lat_ns").unwrap().count, 3);
+        match full.get("reqs_total").unwrap().value {
+            SampleValue::Counter(v) => assert_eq!(v, 7),
+            _ => panic!("wrong type"),
+        }
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! SLO burn-rate tracking over sliding multi-window histories.
+//!
+//! An [`SloSpec`] declares a per-kernel objective: requests slower than
+//! `latency_ns` or answered with an error are *bad*, and at most a
+//! `budget` fraction of requests may be bad. The **burn rate** is how
+//! fast the error budget is being consumed: a burn of 1.0 means bad
+//! requests arrive exactly at budget; 10.0 means the budget burns ten
+//! times too fast.
+//!
+//! Following the multi-window pattern from SRE practice, the
+//! [`SloTracker`] evaluates each objective over **two** sliding windows
+//! ([`SloWindows`]): a fast (1 m-class) window that reacts to sudden
+//! regressions, and a slow (30 m-class) window that filters blips. An
+//! objective *trips* only when **both** windows burn at or above
+//! `trip_burn` — a short spike trips nothing, a sustained regression
+//! trips within the fast window's span.
+//!
+//! The tracker consumes *cumulative* `(total, bad)` counts (exactly
+//! what the serve layer's lock-free counters and latency histograms
+//! provide) and does its own interval differencing against a pruned
+//! frame history, so nothing is ever reset out from under other metric
+//! readers — the same discipline as
+//! [`MetricsRegistry::snapshot_delta`](super::registry::MetricsRegistry::snapshot_delta).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One kernel's service-level objective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    /// Registered kernel name the objective applies to.
+    pub kernel: String,
+    /// Latency threshold, nanoseconds: a request slower than this
+    /// counts against the budget (within histogram bucket resolution,
+    /// [`super::hist::MAX_REL_ERROR`]).
+    pub latency_ns: u64,
+    /// Allowed bad fraction (errors + over-threshold requests), e.g.
+    /// `0.01` for a 99% objective. Clamped to at least `1e-9`.
+    pub budget: f64,
+}
+
+impl SloSpec {
+    /// An objective: at most `budget` of `kernel`'s requests may err or
+    /// exceed `latency_ns`.
+    pub fn new(kernel: &str, latency_ns: u64, budget: f64) -> Self {
+        SloSpec { kernel: kernel.to_string(), latency_ns, budget }
+    }
+}
+
+/// The multi-window burn-rate alerting policy shared by every
+/// objective in a tracker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloWindows {
+    /// Fast window (reacts to sudden regressions).
+    pub fast: Duration,
+    /// Slow window (filters blips; must cover the fast window).
+    pub slow: Duration,
+    /// Trip threshold: the objective trips when **both** windows burn
+    /// at or above this rate.
+    pub trip_burn: f64,
+}
+
+impl Default for SloWindows {
+    fn default() -> Self {
+        SloWindows {
+            fast: Duration::from_secs(60),
+            slow: Duration::from_secs(30 * 60),
+            trip_burn: 2.0,
+        }
+    }
+}
+
+/// Cumulative counts for one objective at one evaluation instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SloCounts {
+    /// Requests completed since the server started.
+    pub total: u64,
+    /// Bad requests (errors + over-latency-threshold) since start.
+    pub bad: u64,
+}
+
+/// One objective's evaluation result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloStatus {
+    /// The objective's kernel name.
+    pub kernel: String,
+    /// Budget burn rate over the fast window (0 when the window saw no
+    /// traffic).
+    pub fast_burn: f64,
+    /// Budget burn rate over the slow window.
+    pub slow_burn: f64,
+    /// Both windows at or above `trip_burn`.
+    pub tripped: bool,
+    /// `tripped` and the previous evaluation was not — the edge the
+    /// flight recorder freezes on (one dump per incident, not one per
+    /// tick).
+    pub newly_tripped: bool,
+}
+
+/// Sliding multi-window burn-rate evaluator over cumulative counts.
+///
+/// Not internally synchronised: callers that evaluate from multiple
+/// threads wrap it in a mutex (the serve layer ticks it from the obs
+/// HTTP thread only).
+#[derive(Debug)]
+pub struct SloTracker {
+    specs: Vec<SloSpec>,
+    windows: SloWindows,
+    /// Timestamped cumulative counts, oldest first. Pruned so the
+    /// front frame is the newest one at or before the slow window's
+    /// start — the baseline every window delta needs.
+    frames: VecDeque<(Instant, Vec<SloCounts>)>,
+    tripped: Vec<bool>,
+}
+
+impl SloTracker {
+    pub fn new(specs: Vec<SloSpec>, windows: SloWindows) -> Self {
+        let n = specs.len();
+        // Seed a zero frame at creation so the first evaluation's
+        // windows cover everything since the tracker went up —
+        // without it, traffic arriving before the first tick would be
+        // folded into the baseline and never burn.
+        let mut frames = VecDeque::new();
+        frames.push_back((Instant::now(), vec![SloCounts::default(); n]));
+        SloTracker { specs, windows, frames, tripped: vec![false; n] }
+    }
+
+    pub fn specs(&self) -> &[SloSpec] {
+        &self.specs
+    }
+
+    pub fn windows(&self) -> SloWindows {
+        self.windows
+    }
+
+    /// Interval delta of objective `i` over the window ending at `now`:
+    /// latest frame minus the newest frame old enough to sit at or
+    /// before the window start (the oldest retained frame early in the
+    /// process's life, when history is shorter than the window).
+    fn window_delta(&self, i: usize, now: Instant, window: Duration) -> SloCounts {
+        let Some((_, latest)) = self.frames.back() else {
+            return SloCounts::default();
+        };
+        let base = self
+            .frames
+            .iter()
+            .rev()
+            .find(|(t, _)| now.saturating_duration_since(*t) >= window)
+            .or_else(|| self.frames.front())
+            .map(|(_, c)| c[i])
+            .unwrap_or_default();
+        SloCounts {
+            total: latest[i].total.saturating_sub(base.total),
+            bad: latest[i].bad.saturating_sub(base.bad),
+        }
+    }
+
+    /// Feed one evaluation: `counts[i]` are the cumulative totals for
+    /// `specs()[i]`. Returns each objective's burn rates and trip
+    /// state. Frames older than the slow window are pruned (the
+    /// history stays bounded by the evaluation cadence × slow window).
+    pub fn observe(&mut self, now: Instant, counts: Vec<SloCounts>) -> Vec<SloStatus> {
+        debug_assert_eq!(counts.len(), self.specs.len());
+        self.frames.push_back((now, counts));
+        // Keep one frame at or before the slow window start as the
+        // baseline; everything older is unreachable by any window.
+        while self.frames.len() >= 2
+            && now.saturating_duration_since(self.frames[1].0) >= self.windows.slow
+        {
+            self.frames.pop_front();
+        }
+        let burn = |d: SloCounts, budget: f64| -> f64 {
+            if d.total == 0 {
+                0.0
+            } else {
+                (d.bad as f64 / d.total as f64) / budget.max(1e-9)
+            }
+        };
+        self.specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let fast_burn = burn(self.window_delta(i, now, self.windows.fast), spec.budget);
+                let slow_burn = burn(self.window_delta(i, now, self.windows.slow), spec.budget);
+                let tripped =
+                    fast_burn >= self.windows.trip_burn && slow_burn >= self.windows.trip_burn;
+                let newly_tripped = tripped && !self.tripped[i];
+                self.tripped[i] = tripped;
+                SloStatus {
+                    kernel: spec.kernel.clone(),
+                    fast_burn,
+                    slow_burn,
+                    tripped,
+                    newly_tripped,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn windows_ms(fast: u64, slow: u64, trip: f64) -> SloWindows {
+        SloWindows {
+            fast: Duration::from_millis(fast),
+            slow: Duration::from_millis(slow),
+            trip_burn: trip,
+        }
+    }
+
+    #[test]
+    fn burn_is_bad_fraction_over_budget() {
+        // 10% budget; 50% of the interval's requests are bad → burn 5.
+        let mut t = SloTracker::new(
+            vec![SloSpec::new("k", 1_000_000, 0.1)],
+            windows_ms(50, 200, 2.0),
+        );
+        let t0 = Instant::now();
+        let s = t.observe(t0, vec![SloCounts { total: 0, bad: 0 }]);
+        assert_eq!((s[0].fast_burn, s[0].slow_burn), (0.0, 0.0), "no interval yet");
+        let s = t.observe(
+            t0 + Duration::from_millis(10),
+            vec![SloCounts { total: 100, bad: 50 }],
+        );
+        assert!((s[0].fast_burn - 5.0).abs() < 1e-12, "{}", s[0].fast_burn);
+        assert!((s[0].slow_burn - 5.0).abs() < 1e-12);
+        assert!(s[0].tripped && s[0].newly_tripped);
+        // Still tripping on the next tick, but no longer *newly*.
+        let s = t.observe(
+            t0 + Duration::from_millis(20),
+            vec![SloCounts { total: 120, bad: 60 }],
+        );
+        assert!(s[0].tripped && !s[0].newly_tripped);
+    }
+
+    #[test]
+    fn short_spike_does_not_trip_when_the_slow_window_absorbs_it() {
+        // Trip needs BOTH windows ≥ 2.0. A burst that is 100% bad over
+        // the fast window but diluted below threshold over the slow
+        // window must not trip.
+        let mut t = SloTracker::new(
+            vec![SloSpec::new("k", 1_000_000, 0.5)],
+            windows_ms(20, 10_000, 2.0),
+        );
+        let t0 = Instant::now();
+        t.observe(t0, vec![SloCounts { total: 10_000, bad: 0 }]);
+        // 25 ms later (the clean frame has aged past the 20 ms fast
+        // window, so it is the fast baseline): 100 more requests, all
+        // bad. Fast burn = 1.0/0.5 = 2.0; slow burn still measures
+        // from the zero seed = (100/10100)/0.5 ≈ 0.02.
+        let s = t.observe(
+            t0 + Duration::from_millis(25),
+            vec![SloCounts { total: 10_100, bad: 100 }],
+        );
+        assert!(s[0].fast_burn >= 2.0, "{}", s[0].fast_burn);
+        assert!(s[0].slow_burn < 2.0, "{}", s[0].slow_burn);
+        assert!(!s[0].tripped, "slow window must veto a blip");
+    }
+
+    #[test]
+    fn fast_window_forgets_old_badness() {
+        let mut t = SloTracker::new(
+            vec![SloSpec::new("k", 1_000_000, 0.1)],
+            windows_ms(30, 1_000, 2.0),
+        );
+        let t0 = Instant::now();
+        t.observe(t0, vec![SloCounts { total: 100, bad: 100 }]);
+        // 50 ms later (past the fast window): plenty of clean traffic.
+        let s = t.observe(
+            t0 + Duration::from_millis(50),
+            vec![SloCounts { total: 300, bad: 100 }],
+        );
+        assert_eq!(s[0].fast_burn, 0.0, "the bad burst left the fast window");
+        assert!(s[0].slow_burn > 0.0, "the slow window still remembers it");
+    }
+
+    #[test]
+    fn trip_state_recovers_and_history_stays_bounded() {
+        let mut t = SloTracker::new(
+            vec![SloSpec::new("k", 1_000_000, 0.1)],
+            windows_ms(10, 40, 1.0),
+        );
+        let t0 = Instant::now();
+        t.observe(t0, vec![SloCounts::default()]);
+        let s = t.observe(
+            t0 + Duration::from_millis(5),
+            vec![SloCounts { total: 10, bad: 10 }],
+        );
+        assert!(s[0].tripped);
+        // Clean traffic for well past the slow window: burns decay to
+        // zero and the trip clears; a later incident is "newly" again.
+        let mut last = None;
+        for ms in 1..30u64 {
+            last = Some(t.observe(
+                t0 + Duration::from_millis(5 + ms * 10),
+                vec![SloCounts { total: 10 + ms * 100, bad: 10 }],
+            ));
+        }
+        let s = last.unwrap();
+        assert!(!s[0].tripped, "{s:?}");
+        assert_eq!(s[0].fast_burn, 0.0);
+        // Pruning kept only frames the slow window can reach.
+        assert!(t.frames.len() <= 8, "history must stay bounded, got {}", t.frames.len());
+        let s = t.observe(
+            t0 + Duration::from_millis(5 + 30 * 10),
+            vec![SloCounts { total: 10_000, bad: 10_000 }],
+        );
+        assert!(s[0].tripped && s[0].newly_tripped, "{s:?}");
+    }
+
+    #[test]
+    fn default_windows_are_one_and_thirty_minute_class() {
+        let w = SloWindows::default();
+        assert_eq!(w.fast, Duration::from_secs(60));
+        assert_eq!(w.slow, Duration::from_secs(1800));
+        assert!(w.trip_burn > 1.0);
+    }
+}

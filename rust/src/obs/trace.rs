@@ -80,6 +80,11 @@ pub struct SpanEvent {
     /// single-shard servers). With plan-affinity routing this is the
     /// plan's home shard unless the request was stolen.
     pub shard: u32,
+    /// Home shard plan-affinity routing assigned at submit time. When
+    /// it differs from `shard`, a peer dispatcher stole and executed
+    /// this request — the Chrome dump marks these spans
+    /// `dispatch[stolen]` so steal storms are visible per shard lane.
+    pub home: u32,
     /// Whether the request succeeded.
     pub ok: bool,
     /// How the request ended (refines `ok`).
@@ -144,11 +149,14 @@ impl TraceRing {
         self.epoch.elapsed().as_nanos() as u64
     }
 
-    /// Record a span (its `seq` is assigned here). Allocation-free:
-    /// pushes into a pre-reserved shard buffer, overwriting the oldest
-    /// span when full.
-    pub fn record(&self, mut ev: SpanEvent) {
-        ev.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+    /// Record a span and return its assigned `seq` (so callers can
+    /// link the span from other telemetry — the steal-mismatch
+    /// exemplar gauge does). Allocation-free: pushes into a
+    /// pre-reserved shard buffer, overwriting the oldest span when
+    /// full.
+    pub fn record(&self, mut ev: SpanEvent) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        ev.seq = seq;
         let ix = ev.worker as usize % self.shards.len();
         let mut s = self.shards[ix].lock().unwrap();
         if s.buf.len() < s.buf.capacity() {
@@ -159,6 +167,7 @@ impl TraceRing {
             s.next = (at + 1) % s.buf.capacity();
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
+        seq
     }
 
     /// Spans currently held (may be less than recorded; see
@@ -241,13 +250,15 @@ impl TraceRing {
             format!(
                 "{{\"name\":\"{name}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
                  \"ts\":{:.3},\"dur\":{:.3},\
-                 \"args\":{{\"seq\":{},\"kernel\":{},\"shard\":{},\"ok\":{},\
-                 \"outcome\":\"{}\"}}}}",
+                 \"args\":{{\"seq\":{},\"kernel\":{},\"shard\":{},\"home\":{},\
+                 \"stolen\":{},\"ok\":{},\"outcome\":\"{}\"}}}}",
                 t0 as f64 / 1e3,
                 t1.saturating_sub(t0) as f64 / 1e3,
                 ev.seq,
                 ev.kernel,
                 ev.shard,
+                ev.home,
+                ev.shard != ev.home,
                 ev.ok,
                 ev.outcome.as_str()
             )
@@ -262,7 +273,8 @@ impl TraceRing {
             if e.t_exec1 > e.t_exec0 {
                 push(&mut out, &mut first, dur("exec", 2, e.worker as u64, e.t_exec0, e.t_exec1, e));
             }
-            push(&mut out, &mut first, dur("dispatch", 3, e.shard as u64, e.t_deq, e.t_done, e));
+            let disp = if e.shard != e.home { "dispatch[stolen]" } else { "dispatch" };
+            push(&mut out, &mut first, dur(disp, 3, e.shard as u64, e.t_deq, e.t_done, e));
         }
         out.push_str("]}");
         out
@@ -355,6 +367,20 @@ mod tests {
         assert!(j.contains("\"outcome\":\"ok\""));
         assert!(j.contains("mxm"));
         assert!(j.ends_with("]}"));
+    }
+
+    #[test]
+    fn stolen_spans_carry_both_shards() {
+        let ring = TraceRing::new(8, 2, vec!["mxm".into()]);
+        // Executed on its home shard: not stolen.
+        ring.record(SpanEvent { shard: 1, home: 1, ..span(0, 100) });
+        // Executed on shard 0 but homed on shard 1: stolen.
+        ring.record(SpanEvent { shard: 0, home: 1, ..span(0, 200) });
+        let j = ring.chrome_json();
+        assert!(j.contains("\"name\":\"dispatch\""), "{j}");
+        assert!(j.contains("\"name\":\"dispatch[stolen]\""), "{j}");
+        assert!(j.contains("\"shard\":0,\"home\":1,\"stolen\":true"), "{j}");
+        assert!(j.contains("\"shard\":1,\"home\":1,\"stolen\":false"), "{j}");
     }
 
     #[test]

@@ -347,6 +347,26 @@ impl PlanCache {
         self.health.remove(key);
     }
 
+    /// Containment snapshot of every key with a live failure streak or
+    /// an active quarantine: `(key, consecutive failures, remaining
+    /// quarantine)` — `None` remaining means a streak that has not
+    /// tripped (or a quarantine already expired). The health table
+    /// holds only misbehaving keys, so this is tiny; the flight
+    /// recorder freezes it as the "breaker states" of a dump.
+    pub fn breaker_states(&self) -> Vec<(PlanKey, u32, Option<Duration>)> {
+        let now = Instant::now();
+        self.health
+            .iter()
+            .map(|(k, h)| {
+                let remaining = h
+                    .until
+                    .map(|u| u.saturating_duration_since(now))
+                    .filter(|d| !d.is_zero());
+                (k.clone(), h.consecutive, remaining)
+            })
+            .collect()
+    }
+
     /// Copy out every cached `(key, plan)` pair — the iteration surface
     /// behind `Client::plan_profiles`, which reads each plan's
     /// per-opcode tape profile.

@@ -105,6 +105,21 @@
 //! counters — and deterministically testable via the
 //! [`crate::obs::faults`] failpoint harness
 //! ([`ResilienceConfig::faults`], `PALLAS_FAULTS`).
+//!
+//! # Live observability plane
+//!
+//! With [`ObsConfig::listen_addr`] set (or `PALLAS_OBS_ADDR` in the
+//! environment) the server binds a dependency-free HTTP scrape
+//! endpoint ([`crate::obs::http`]): `/metrics` (Prometheus text),
+//! `/metrics.json`, `/metrics/delta` (interval deltas),
+//! `/healthz` + `/readyz` (liveness / readiness with shard-queue and
+//! quarantine census), `/debug/trace` (Chrome trace JSON),
+//! `/debug/profile` (tape profile) and `/debug/flight` (the
+//! [`crate::obs::flight`] recorder's anomaly dumps). Per-kernel SLOs
+//! ([`ObsConfig::slos`]) are evaluated on the same thread as
+//! multi-window burn rates; a sustained burn or a resilience anomaly
+//! (quarantine trip, worker respawn) freezes a forensic flight dump
+//! retrievable via [`Client::flight_dumps`].
 
 pub mod cache;
 pub mod error;
@@ -121,6 +136,8 @@ use crate::coordinator::shape::{DType, Shape};
 use crate::coordinator::{Context, Mat2, OptLevel, Scal, Vec1, VecI64};
 use crate::obs::faults::FaultSpec;
 
+pub use crate::obs::flight::{FlightDump, FlightEvent, FlightEventKind};
+pub use crate::obs::slo::{SloSpec, SloStatus, SloWindows};
 pub use cache::{Admission, CacheStats, PlanCache, PlanKey, PlanState, QuarantinePolicy};
 pub use error::{RetryPolicy, ServeError, ServeResult};
 pub use exec::{ArenaStats, CompiledPlan};
@@ -164,11 +181,44 @@ pub struct ObsConfig {
     /// ([`crate::obs::profile`]) when the server starts. The switch is
     /// never turned back off by the server (it is process-wide).
     pub tape_profile: bool,
+    /// Bind the live observability plane (an
+    /// [`HttpServer`](crate::obs::HttpServer)) on this address — e.g.
+    /// `"127.0.0.1:9464"`, or port `0` for an ephemeral port reported
+    /// by [`Server::obs_addr`]. `None` (the default) serves nothing.
+    /// The `PALLAS_OBS_ADDR` environment variable overrides this
+    /// setting. The server panics at start if the bind fails —
+    /// operators asking for a scrape endpoint need to know it is not
+    /// there.
+    pub listen_addr: Option<String>,
+    /// Per-kernel service-level objectives, evaluated every obs tick
+    /// over sliding fast/slow burn-rate windows ([`SloWindows`]) and
+    /// surfaced as `arbb_slo_fast_burn` / `arbb_slo_slow_burn` gauges.
+    /// A both-window trip freezes a flight-recorder dump. Latency
+    /// badness is derived from the per-kernel latency histogram, so it
+    /// needs [`ObsConfig::metrics`] on; with metrics off only errors
+    /// count against the budget.
+    pub slos: Vec<SloSpec>,
+    /// Burn-rate windows and trip threshold shared by every objective
+    /// in [`ObsConfig::slos`].
+    pub slo_windows: SloWindows,
+    /// Capacity (events) of the always-on flight-recorder ring
+    /// ([`crate::obs::flight`]). Recording is allocation-free and a
+    /// few tens of nanoseconds, so this stays on even in lean
+    /// configurations.
+    pub flight_capacity: usize,
 }
 
 impl Default for ObsConfig {
     fn default() -> Self {
-        ObsConfig { metrics: true, trace_capacity: 0, tape_profile: false }
+        ObsConfig {
+            metrics: true,
+            trace_capacity: 0,
+            tape_profile: false,
+            listen_addr: None,
+            slos: Vec::new(),
+            slo_windows: SloWindows::default(),
+            flight_capacity: 1024,
+        }
     }
 }
 

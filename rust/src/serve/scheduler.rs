@@ -78,8 +78,13 @@ use crate::coordinator::engine::pool::panic_message;
 use crate::coordinator::node::Data;
 use crate::coordinator::shape::{DType, Shape};
 use crate::coordinator::{Context, Options, OptLevel};
+use crate::obs::flight::NO_KERNEL;
+use crate::obs::http::{Handler as ObsHandler, HttpServer, Response};
 use crate::obs::trace::{worker_lane, Outcome};
-use crate::obs::{faults, profile, MetricsSnapshot, ProfileSnapshot, SpanEvent, TraceRing};
+use crate::obs::{
+    faults, profile, FlightDump, FlightEventKind, FlightRecorder, MetricsSnapshot,
+    ProfileSnapshot, SpanEvent, TraceRing,
+};
 use crate::util::XorShift64;
 use crate::{Error, Result};
 
@@ -521,6 +526,15 @@ struct Shared {
     /// Per-call_retry RNG seeds, so concurrent retry loops jitter
     /// differently (deterministic per loop, decorrelated across loops).
     retry_salt: AtomicU64,
+    /// Always-on flight recorder: operational events on the hot path
+    /// (allocation-free), forensic dumps frozen on anomaly edges.
+    flight: Arc<FlightRecorder>,
+    /// The interned pool slices the shard sweeps run on (empty when
+    /// every shard runs inline, `workers_per_shard == 1`); read by the
+    /// health census and the obs tick's respawn scan.
+    pools: Vec<Arc<SharedPool>>,
+    /// Pool respawn total the obs tick last reported (edge detection).
+    respawn_seen: AtomicU64,
 }
 
 impl Shared {
@@ -872,6 +886,30 @@ impl Client {
         self.metrics_snapshot().to_json()
     }
 
+    /// An interval-delta metrics snapshot as JSON: counters and
+    /// histograms report growth since the previous delta call (gauges
+    /// stay instantaneous). Served at `/metrics/delta`.
+    pub fn metrics_delta_json(&self) -> String {
+        for (i, q) in self.shared.queues.iter().enumerate() {
+            self.shared.stats.set_shard_depth(i, q.depth());
+        }
+        let cache = self.cache_stats();
+        self.shared.stats.snapshot_delta(&cache).to_json()
+    }
+
+    /// Every flight-recorder dump frozen so far (oldest first), each
+    /// one a bounded capture of the event ring, trace spans, queue
+    /// depths, and breaker states at the moment of an anomaly.
+    pub fn flight_dumps(&self) -> Vec<FlightDump> {
+        self.shared.flight.dumps()
+    }
+
+    /// The flight recorder rendered as JSON: live ring tail plus all
+    /// frozen dumps. Served at `/debug/flight`.
+    pub fn flight_json(&self) -> String {
+        self.shared.flight.to_json()
+    }
+
     /// All spans currently held by the trace ring (empty when tracing
     /// is off — `ObsConfig::trace_capacity` = 0).
     pub fn trace_spans(&self) -> Vec<SpanEvent> {
@@ -985,9 +1023,19 @@ impl ServerBuilder {
         };
         let queues: Vec<Arc<ShardQueue>> =
             (0..n_shards).map(|_| Arc::new(ShardQueue::new(cap))).collect();
+        let mut stats =
+            ServeStats::with_shards(&kernel_names, self.config.obs.metrics, n_shards, wps);
+        stats.set_slos(self.config.obs.slos.clone(), self.config.obs.slo_windows);
+        // The same interned pool slices the dispatchers attach to, so
+        // the health census and respawn scan read the live pools.
+        let pools: Vec<Arc<SharedPool>> = if n_shards == 1 {
+            pool::for_workers(self.config.workers).into_iter().collect()
+        } else {
+            (0..n_shards).filter_map(|s| pool::for_shard(s, wps)).collect()
+        };
         let shared = Arc::new(Shared {
             names,
-            stats: ServeStats::with_shards(&kernel_names, self.config.obs.metrics, n_shards, wps),
+            stats,
             kernel_names,
             cache: Mutex::new(PlanCache::with_policy(self.config.plan_cache_capacity, policy)),
             opt: self.config.opt_level,
@@ -998,11 +1046,14 @@ impl ServerBuilder {
             // in steady state.
             slots: SlotPool::with_capacity(n_shards * cap + 64),
             retry_salt: AtomicU64::new(0x9E37_79B9),
+            flight: Arc::new(FlightRecorder::new(self.config.obs.flight_capacity)),
+            pools,
+            respawn_seen: AtomicU64::new(0),
         });
         let builders: Arc<Vec<KernelEntry>> =
             Arc::new(self.kernels.into_iter().map(|(_, f)| f).collect());
         let cfg = self.config;
-        let handles = (0..n_shards)
+        let handles: Vec<JoinHandle<()>> = (0..n_shards)
             .map(|shard| {
                 let builders = builders.clone();
                 let cfg = cfg.clone();
@@ -1013,7 +1064,26 @@ impl ServerBuilder {
                     .expect("spawn serve shard dispatcher")
             })
             .collect();
-        Server { client: Client { shared }, handles }
+        // Live observability plane: bind the scrape endpoint when asked
+        // for (env wins over config). Failing the bind is fatal by
+        // design — an operator who asked for a scrape endpoint must not
+        // silently run without one.
+        let obs_addr = std::env::var("PALLAS_OBS_ADDR")
+            .ok()
+            .filter(|s| !s.is_empty())
+            .or_else(|| cfg.obs.listen_addr.clone());
+        let obs = obs_addr.map(|addr| {
+            let respond = Client { shared: shared.clone() };
+            let handler: Arc<ObsHandler> =
+                Arc::new(move |method: &str, path: &str| obs_respond(&respond, method, path));
+            let ticker = Client { shared: shared.clone() };
+            let tick: Box<dyn Fn() + Send> = Box::new(move || obs_tick(&ticker));
+            HttpServer::start(&addr, handler, Some((obs_tick_period(), tick)))
+                .unwrap_or_else(|e| {
+                    panic!("serve: cannot bind observability listener on {addr}: {e}")
+                })
+        });
+        Server { client: Client { shared }, handles, obs }
     }
 }
 
@@ -1022,6 +1092,8 @@ impl ServerBuilder {
 pub struct Server {
     client: Client,
     handles: Vec<JoinHandle<()>>,
+    /// The live observability endpoint, when one was configured.
+    obs: Option<HttpServer>,
 }
 
 impl Server {
@@ -1032,6 +1104,13 @@ impl Server {
     /// A cloneable, `Send` submission handle.
     pub fn client(&self) -> Client {
         self.client.clone()
+    }
+
+    /// Bound address of the live observability endpoint — resolves the
+    /// real port when `ObsConfig::listen_addr` asked for port 0. `None`
+    /// when no endpoint was configured.
+    pub fn obs_addr(&self) -> Option<std::net::SocketAddr> {
+        self.obs.as_ref().map(|s| s.local_addr())
     }
 }
 
@@ -1044,6 +1123,11 @@ impl std::ops::Deref for Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
+        // Stop the scrape endpoint before the queues: its handler and
+        // tick hold a Client and must not race shard teardown.
+        if let Some(mut obs) = self.obs.take() {
+            obs.stop();
+        }
         for q in &self.client.shared.queues {
             q.close();
         }
@@ -1214,7 +1298,10 @@ fn process_batch(
                 let stamps = PlanStamps { plan0, plan1: Instant::now(), cache_hit: false };
                 // Capture failures (errors, panics, injected) count
                 // toward the plan's quarantine streak.
-                relock(&shared.cache).record_failure(&key);
+                let verdict = relock(&shared.cache).record_failure(&key);
+                if let cache::PlanState::Quarantined { failures, .. } = verdict {
+                    on_quarantine_trip(shard, &key, failures, shared);
+                }
                 for p in reqs {
                     finish(shard, p, stamps, None, Err(e.clone()), shared);
                 }
@@ -1399,10 +1486,17 @@ fn execute_group(
     }
     // Quarantine bookkeeping: one verdict per sweep, not per request.
     let mut cache = relock(&shared.cache);
-    if panicked > 0 {
-        cache.record_failure(key);
+    let verdict = if panicked > 0 {
+        Some(cache.record_failure(key))
     } else {
         cache.record_success(key);
+        None
+    };
+    drop(cache);
+    // The freeze re-takes the cache lock for breaker states, so the
+    // guard must be gone first.
+    if let Some(cache::PlanState::Quarantined { failures, .. }) = verdict {
+        on_quarantine_trip(shard, key, failures, shared);
     }
 }
 
@@ -1432,20 +1526,29 @@ fn finish(
     match &out {
         Err(ServeError::DeadlineExceeded { executed, missed_by_s }) => {
             shared.stats.record_deadline(*executed, *missed_by_s);
+            let kind = if *executed {
+                FlightEventKind::DeadlineMiss
+            } else {
+                FlightEventKind::DeadlineShed
+            };
+            shared.flight.record(
+                kind,
+                req.kernel as u32,
+                shard as u32,
+                (missed_by_s.max(0.0) * 1e9) as u64,
+            );
             if !*executed {
                 // Shed before execution: attributed to the lane it
                 // rode (express sheds are the latency-critical ones).
                 shared.stats.record_shed(req.lane);
             }
         }
-        Err(ServeError::Panicked { .. }) => shared.stats.inc_panicked(),
+        Err(ServeError::Panicked { .. }) => {
+            shared.stats.inc_panicked();
+            shared.flight.record(FlightEventKind::Panic, req.kernel as u32, shard as u32, 0);
+        }
         Err(ServeError::Quarantined { .. }) => shared.stats.inc_quarantined(),
         _ => {}
-    }
-    // Affinity accounting: a request answered by its plan's home shard
-    // kept its arenas warm; anything else got here by stealing.
-    if req.home as usize == shard {
-        shared.stats.record_affinity_hit(shard);
     }
     // The receiver may have given up; stats still count the completion.
     req.resp.send(out);
@@ -1457,6 +1560,7 @@ fn finish(
         replay_s: done.saturating_duration_since(stamps.plan1).as_secs_f64(),
     };
     shared.stats.record_request(req.kernel, &seg, ok);
+    let mut span_seq = None;
     if let Some(ring) = &shared.trace {
         // Re-express the Instant stamps on the ring's epoch clock by
         // subtracting each stamp's distance from `done`.
@@ -1465,11 +1569,12 @@ fn finish(
             now.saturating_sub(done.saturating_duration_since(t).as_nanos() as u64)
         };
         let (t_exec0, t_exec1, worker) = exec.unwrap_or((0, 0, 0));
-        ring.record(SpanEvent {
+        span_seq = Some(ring.record(SpanEvent {
             kernel: req.kernel as u32,
             seq: 0, // assigned by the ring
             worker,
             shard: shard as u32,
+            home: req.home,
             ok,
             outcome,
             cache_hit: stamps.cache_hit,
@@ -1480,8 +1585,184 @@ fn finish(
             t_exec0,
             t_exec1,
             t_done: now,
-        });
+        }));
     }
+    // Affinity accounting: a request answered by its plan's home shard
+    // kept its arenas warm; anything else got here by stealing.  The
+    // mismatch branch carries the span seq (when tracing is on) as an
+    // exemplar so a scrape can be joined back to the exact span.
+    if req.home as usize == shard {
+        shared.stats.record_affinity_hit(shard);
+    } else {
+        shared.stats.record_steal_mismatch(shard, span_seq);
+        shared.flight.record(
+            FlightEventKind::Steal,
+            req.kernel as u32,
+            shard as u32,
+            span_seq.unwrap_or(0),
+        );
+    }
+}
+
+/// How often the observability listener's accept thread runs the SLO /
+/// respawn tick. Overridable via `PALLAS_OBS_TICK_MS` (tests tighten
+/// it to observe burn gauges quickly).
+fn obs_tick_period() -> Duration {
+    std::env::var("PALLAS_OBS_TICK_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(250))
+}
+
+/// One observability tick: advance the SLO burn-rate windows (freezing
+/// a flight dump on each fresh trip) and scan the pools for worker
+/// respawns since the last tick.
+fn obs_tick(client: &Client) {
+    let shared = &client.shared;
+    for s in shared.stats.slo_tick() {
+        if !s.newly_tripped {
+            continue;
+        }
+        let kid = shared.names.get(&s.kernel).copied();
+        shared.flight.record(
+            FlightEventKind::SloBurn,
+            kid.map_or(NO_KERNEL, |k| k as u32),
+            0,
+            // Milli-burn: 2.5x over budget records as 2500.
+            (s.fast_burn * 1000.0) as u64,
+        );
+        let reason = format!(
+            "slo burn: fast {:.2}x / slow {:.2}x over budget",
+            s.fast_burn, s.slow_burn
+        );
+        freeze_dump(shared, &reason, &s.kernel, kid);
+    }
+    let respawned: u64 = shared.pools.iter().map(|p| p.workers_respawned()).sum();
+    let seen = shared.respawn_seen.swap(respawned, Ordering::Relaxed);
+    if respawned > seen {
+        shared.flight.record(FlightEventKind::WorkerRespawn, NO_KERNEL, 0, respawned);
+    }
+}
+
+/// A plan crossed its failure threshold and entered quarantine: log
+/// the trip on the flight ring and freeze a forensic dump. Callers
+/// must NOT hold the cache lock (the freeze re-takes it for breakers).
+fn on_quarantine_trip(shard: usize, key: &PlanKey, failures: u32, shared: &Arc<Shared>) {
+    shared
+        .flight
+        .record(FlightEventKind::QuarantineTrip, key.kernel as u32, shard as u32, failures as u64);
+    let kernel = shared.kernel_name(key.kernel);
+    let reason = format!("plan quarantined after {failures} consecutive failures");
+    freeze_dump(shared, &reason, &kernel, Some(key.kernel));
+}
+
+/// Freeze a flight dump: the event ring plus trace spans (filtered to
+/// the implicated kernel when known), live queue depths, and the plan
+/// cache's breaker states.
+fn freeze_dump(shared: &Shared, reason: &str, kernel: &str, kernel_ix: Option<usize>) {
+    let spans = match &shared.trace {
+        Some(ring) => {
+            let all = ring.events();
+            match kernel_ix {
+                Some(ix) => all.into_iter().filter(|e| e.kernel as usize == ix).collect(),
+                None => all,
+            }
+        }
+        None => Vec::new(),
+    };
+    let depths: Vec<usize> = shared.queues.iter().map(|q| q.depth()).collect();
+    let breakers = breaker_json(shared);
+    shared.flight.freeze(reason, kernel, spans, depths, breakers);
+}
+
+/// The plan cache's breaker states as a JSON array (one row per
+/// tracked key: kernel name, consecutive failures, remaining
+/// quarantine if any).
+fn breaker_json(shared: &Shared) -> String {
+    let states = relock(&shared.cache).breaker_states();
+    let rows: Vec<String> = states
+        .iter()
+        .map(|(key, failures, remaining)| {
+            let name = shared.kernel_name(key.kernel).replace('\\', "\\\\").replace('"', "\\\"");
+            let q = match remaining {
+                Some(d) => d.as_millis().to_string(),
+                None => "null".to_string(),
+            };
+            format!("{{\"kernel\":\"{name}\",\"failures\":{failures},\"quarantined_ms\":{q}}}")
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+/// Route one HTTP request from the observability listener.
+fn obs_respond(client: &Client, method: &str, path: &str) -> Response {
+    if method != "GET" {
+        return Response::method_not_allowed();
+    }
+    match path {
+        "/metrics" => Response::prometheus(client.metrics_prometheus()),
+        "/metrics.json" => Response::json(200, client.metrics_json()),
+        "/metrics/delta" => Response::json(200, client.metrics_delta_json()),
+        "/healthz" => {
+            // Liveness: answering at all is the signal, so always 200;
+            // the body carries the degraded detail.
+            let (_ready, body) = health_json(client);
+            Response::json(200, body)
+        }
+        "/readyz" => {
+            let (ready, body) = health_json(client);
+            Response::json(if ready { 200 } else { 503 }, body)
+        }
+        "/debug/trace" => match client.trace_chrome_json() {
+            Some(json) => Response::json(200, json),
+            None => Response::not_found("trace ring disabled (ObsConfig::trace_capacity = 0)"),
+        },
+        "/debug/profile" => {
+            let p = client.tape_profile();
+            let body = format!("{{\"backend\":\"{}\",\"classes\":{}}}", p.backend, p.to_json());
+            Response::json(200, body)
+        }
+        "/debug/flight" => Response::json(200, client.flight_json()),
+        other => Response::not_found(other),
+    }
+}
+
+/// Health census: `(ready, body_json)`. Ready means queues open and
+/// under capacity with nothing quarantined; the body reports the
+/// underlying numbers either way.
+fn health_json(client: &Client) -> (bool, String) {
+    let shared = &client.shared;
+    let depths: Vec<usize> = shared.queues.iter().map(|q| q.depth()).collect();
+    let closed = shared.queues.iter().any(|q| relock(&q.state).closed);
+    let cap = shared.queues.first().map(|q| q.cap).unwrap_or(0);
+    let wedged = depths.iter().any(|&d| d >= cap.max(1));
+    let cache = client.cache_stats();
+    let workers: usize = shared.pools.iter().map(|p| p.size()).sum();
+    let respawned: u64 = shared.pools.iter().map(|p| p.workers_respawned()).sum();
+    let ready = !closed && !wedged && cache.quarantined == 0;
+    let status = if ready { "ok" } else { "degraded" };
+    let uptime = shared.flight.now_ns() as f64 / 1e9;
+    let body = format!(
+        concat!(
+            "{{\"status\":\"{}\",\"ready\":{},\"uptime_secs\":{:.3},",
+            "\"shards\":{},\"queue_capacity\":{},\"depths\":{:?},",
+            "\"workers\":{},\"respawned\":{},\"quarantined\":{},",
+            "\"quarantine_events\":{},\"flight_freezes\":{}}}"
+        ),
+        status,
+        ready,
+        uptime,
+        shared.queues.len(),
+        cap,
+        depths,
+        workers,
+        respawned,
+        cache.quarantined,
+        cache.quarantine_events,
+        shared.flight.freezes(),
+    );
+    (ready, body)
 }
 
 #[cfg(test)]

@@ -18,9 +18,11 @@
 //! whole registry as Prometheus text or JSON.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::obs::hist::bucket_index;
+use crate::obs::slo::{SloCounts, SloSpec, SloStatus, SloTracker, SloWindows};
 use crate::obs::{Counter, Gauge, LogHistogram, MetricsRegistry, MetricsSnapshot};
 
 /// Per-request latency decomposition, in seconds. The four segments
@@ -79,6 +81,8 @@ pub struct ShardStats {
     depth: Arc<Gauge>,
     steals: Arc<Counter>,
     affinity_hits: Arc<Counter>,
+    steal_mismatch: Arc<Counter>,
+    steal_last_seq: Arc<Gauge>,
 }
 
 impl ShardStats {
@@ -95,6 +99,15 @@ impl ShardStats {
     /// Requests executed here whose plan's home shard is here.
     pub fn affinity_hits(&self) -> u64 {
         self.affinity_hits.get()
+    }
+
+    /// Requests executed here whose plan's home shard is elsewhere
+    /// (the finish-side view of stealing, attributed to the
+    /// *executing* shard — [`ShardStats::steals`] counts at the
+    /// dequeue site and can differ transiently while stolen work is in
+    /// flight).
+    pub fn steal_mismatches(&self) -> u64 {
+        self.steal_mismatch.get()
     }
 }
 
@@ -255,6 +268,27 @@ pub struct ServeStats {
     cache_len_g: Arc<Gauge>,
     quarantined_g: Arc<Gauge>,
     quarantine_events_g: Arc<Gauge>,
+    /// SLO burn-rate state, present when objectives were declared
+    /// ([`ServeStats::set_slos`]). Behind a mutex because the tracker
+    /// differencing is stateful; only the obs tick thread locks it.
+    slo: Option<Mutex<SloState>>,
+}
+
+/// One declared objective wired to its kernel and burn gauges.
+#[derive(Debug)]
+struct SloTarget {
+    /// Index into `ServeStats::kernels`; `None` when the spec names an
+    /// unregistered kernel (it then only ever reports zero burn).
+    kernel_ix: Option<usize>,
+    latency_ns: u64,
+    fast_g: Arc<Gauge>,
+    slow_g: Arc<Gauge>,
+}
+
+#[derive(Debug)]
+struct SloState {
+    tracker: SloTracker,
+    targets: Vec<SloTarget>,
 }
 
 impl ServeStats {
@@ -294,6 +328,16 @@ impl ServeStats {
                         "arbb_serve_shard_affinity_hits_total",
                         &label,
                         "requests executed on their plan's home shard",
+                    ),
+                    steal_mismatch: registry.counter(
+                        "arbb_serve_shard_steal_mismatch_total",
+                        &label,
+                        "requests executed here whose plan's home shard is elsewhere (stolen)",
+                    ),
+                    steal_last_seq: registry.gauge(
+                        "arbb_serve_shard_steal_last_seq",
+                        &label,
+                        "trace-span seq of the newest stolen request executed here (exemplar)",
                     ),
                 }
             })
@@ -431,8 +475,94 @@ impl ServeStats {
                 "",
                 "times any plan key entered quarantine",
             ),
+            slo: None,
             registry,
         }
+    }
+
+    /// Declare per-kernel SLOs. Registers the per-objective burn-rate
+    /// gauges and arms the sliding-window tracker that
+    /// [`ServeStats::slo_tick`] advances. Call before the stats are
+    /// shared (the server builder does, right after construction).
+    pub fn set_slos(&mut self, specs: Vec<SloSpec>, windows: SloWindows) {
+        if specs.is_empty() {
+            self.slo = None;
+            return;
+        }
+        let targets = specs
+            .iter()
+            .map(|s| {
+                let label = format!("kernel=\"{}\"", s.kernel);
+                SloTarget {
+                    kernel_ix: self.kernels.iter().position(|k| k.name() == s.kernel),
+                    latency_ns: s.latency_ns,
+                    fast_g: self.registry.gauge(
+                        "arbb_slo_fast_burn",
+                        &label,
+                        "SLO budget burn rate over the fast window",
+                    ),
+                    slow_g: self.registry.gauge(
+                        "arbb_slo_slow_burn",
+                        &label,
+                        "SLO budget burn rate over the slow window",
+                    ),
+                }
+            })
+            .collect();
+        self.slo = Some(Mutex::new(SloState { tracker: SloTracker::new(specs, windows), targets }));
+    }
+
+    /// Advance the SLO burn-rate evaluation one tick: sample each
+    /// objective's cumulative `(total, bad)` counts, feed the sliding
+    /// windows, publish the burn gauges, and return the statuses (the
+    /// caller freezes a flight dump on `newly_tripped`). Over-latency
+    /// badness is counted from the kernel's histogram buckets strictly
+    /// above the threshold's bucket, so it over-counts by at most the
+    /// threshold's own bucket (relative width
+    /// [`crate::obs::MAX_REL_ERROR`]); with `metrics` off only errors
+    /// count. No-op (empty) when no objectives were declared.
+    pub fn slo_tick(&self) -> Vec<SloStatus> {
+        let Some(slo) = &self.slo else {
+            return Vec::new();
+        };
+        let mut st = slo.lock().unwrap_or_else(|p| p.into_inner());
+        let counts: Vec<SloCounts> = st
+            .targets
+            .iter()
+            .map(|t| match t.kernel_ix {
+                Some(ix) => {
+                    let k = &self.kernels[ix];
+                    let total = k.requests();
+                    let snap = k.latency.snapshot();
+                    let over: u64 =
+                        snap.buckets[bucket_index(t.latency_ns) + 1..].iter().sum();
+                    SloCounts { total, bad: (k.errors() + over).min(total) }
+                }
+                None => SloCounts::default(),
+            })
+            .collect();
+        let statuses = st.tracker.observe(Instant::now(), counts);
+        for (t, s) in st.targets.iter().zip(&statuses) {
+            t.fast_g.set(s.fast_burn);
+            t.slow_g.set(s.slow_burn);
+        }
+        statuses
+    }
+
+    /// Last published `(kernel, fast, slow)` burn rates per objective
+    /// (empty when none declared). Reads the gauges, so it reflects
+    /// the most recent [`ServeStats::slo_tick`].
+    pub fn slo_burns(&self) -> Vec<(String, f64, f64)> {
+        let Some(slo) = &self.slo else {
+            return Vec::new();
+        };
+        let st = slo.lock().unwrap_or_else(|p| p.into_inner());
+        st.tracker
+            .specs()
+            .iter()
+            .zip(&st.targets)
+            .map(|(spec, t)| (spec.kernel.clone(), t.fast_g.get(), t.slow_g.get()))
+            .collect()
     }
 
     /// Name of the kernel backend serving plans compile against.
@@ -527,6 +657,24 @@ impl ServeStats {
         if let Some(s) = self.shards.get(i) {
             s.affinity_hits.inc();
         }
+    }
+
+    /// Count one stolen request finishing on shard `i` (its home is
+    /// elsewhere). `seq` — the request's trace-span seq, when tracing
+    /// is on — is published as an exemplar gauge linking the counter
+    /// to the span that shows both shards.
+    pub fn record_steal_mismatch(&self, i: usize, seq: Option<u64>) {
+        if let Some(s) = self.shards.get(i) {
+            s.steal_mismatch.inc();
+            if let Some(seq) = seq {
+                s.steal_last_seq.set(seq as f64);
+            }
+        }
+    }
+
+    /// Total stolen requests observed at finish across shards.
+    pub fn steal_mismatches(&self) -> u64 {
+        self.shards.iter().map(|s| s.steal_mismatch.get()).sum()
     }
 
     /// Count one request shed from `lane` (expired deadline or
@@ -650,6 +798,21 @@ impl ServeStats {
     /// [`MetricsSnapshot::to_prometheus`] or
     /// [`MetricsSnapshot::to_json`].
     pub fn snapshot(&self, cache: &super::cache::CacheStats) -> MetricsSnapshot {
+        self.refresh_gauges(cache);
+        self.registry.snapshot()
+    }
+
+    /// [`ServeStats::snapshot`] but as an interval delta against the
+    /// registry's retained baseline
+    /// ([`MetricsRegistry::snapshot_delta`]): counters and histograms
+    /// report only what happened since the previous delta call, gauges
+    /// pass through. Nothing is reset.
+    pub fn snapshot_delta(&self, cache: &super::cache::CacheStats) -> MetricsSnapshot {
+        self.refresh_gauges(cache);
+        self.registry.snapshot_delta()
+    }
+
+    fn refresh_gauges(&self, cache: &super::cache::CacheStats) {
         self.uptime_g.set(self.uptime_secs());
         self.throughput_g.set(self.throughput());
         self.cache_hits_g.set(cache.hits as f64);
@@ -670,7 +833,6 @@ impl ServeStats {
                 .gauge("arbb_fault_fired", &label, "failpoint evaluations that tripped")
                 .set(c.fired as f64);
         }
-        self.registry.snapshot()
     }
 
     /// Render an aligned per-kernel report (bench-harness style).
@@ -709,6 +871,15 @@ impl ServeStats {
                  quarantine rejections ({} quarantine events, {} active), {retries} retries\n",
                 cache.quarantine_events, cache.quarantined
             ));
+        }
+        let burns = self.slo_burns();
+        if !burns.is_empty() {
+            let line = burns
+                .iter()
+                .map(|(k, f, s)| format!("'{k}' fast {f:.2}x / slow {s:.2}x"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            out.push_str(&format!("   slo burn: {line}\n"));
         }
         if self.shards.len() > 1 {
             let (hits, steals) = (self.affinity_hits(), self.steals());
@@ -987,5 +1158,66 @@ mod tests {
         // Single-shard servers keep today's report shape.
         let s1 = ServeStats::new(&["k".into()], true);
         assert!(!s1.report(&cache).contains("scheduler:"));
+    }
+
+    #[test]
+    fn steal_mismatch_counts_at_the_executing_shard_with_exemplar() {
+        let s = ServeStats::with_shards(&["k".into()], true, 2, 1);
+        s.record_steal_mismatch(1, Some(42));
+        s.record_steal_mismatch(1, None);
+        s.record_steal_mismatch(99, Some(7)); // out of range: ignored
+        assert_eq!(s.steal_mismatches(), 2);
+        assert_eq!(s.shard(1).unwrap().steal_mismatches(), 2);
+        assert_eq!(s.shard(0).unwrap().steal_mismatches(), 0);
+        let cache = super::super::cache::CacheStats { capacity: 16, ..Default::default() };
+        let page = s.snapshot(&cache).to_prometheus();
+        assert!(page.contains("arbb_serve_shard_steal_mismatch_total{shard=\"1\"} 2"), "{page}");
+        assert!(page.contains("arbb_serve_shard_steal_last_seq{shard=\"1\"} 42"), "{page}");
+    }
+
+    #[test]
+    fn slo_tick_burns_on_errors_and_latency() {
+        use std::time::Duration;
+        let mut s = ServeStats::new(&["k".into(), "quiet".into()], true);
+        // No objectives: tick is a no-op.
+        assert!(s.slo_tick().is_empty());
+        s.set_slos(
+            vec![
+                SloSpec::new("k", 1_000_000, 0.1), // 1 ms, 10% budget
+                SloSpec::new("ghost", 1_000, 0.1), // unregistered kernel
+            ],
+            SloWindows {
+                fast: Duration::from_millis(10),
+                slow: Duration::from_millis(40),
+                trip_burn: 1.0,
+            },
+        );
+        let st = s.slo_tick();
+        assert_eq!(st.len(), 2);
+        assert!(!st[0].tripped, "no traffic yet");
+        // 10 good fast requests, 5 slow (10 ms >> 1 ms threshold), 5
+        // errors: bad fraction 10/20 = 0.5 → burn 5.0 on both windows
+        // once the slow window's baseline is the pre-traffic frame.
+        for _ in 0..10 {
+            s.record_request(0, &seg(1e-5), true);
+        }
+        for _ in 0..5 {
+            s.record_request(0, &seg(1e-2), true);
+        }
+        for _ in 0..5 {
+            s.record_request(0, &seg(1e-5), false);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        let st = s.slo_tick();
+        assert!((st[0].fast_burn - 5.0).abs() < 1e-9, "{st:?}");
+        assert!(st[0].tripped && st[0].newly_tripped, "{st:?}");
+        assert_eq!(st[1].fast_burn, 0.0, "unregistered kernel never burns");
+        // Burn gauges surface on the metrics page.
+        let cache = super::super::cache::CacheStats { capacity: 16, ..Default::default() };
+        let page = s.snapshot(&cache).to_prometheus();
+        assert!(page.contains("arbb_slo_fast_burn{kernel=\"k\"} 5"), "{page}");
+        // And the report grows an slo line.
+        let r = s.report(&cache);
+        assert!(r.contains("slo burn: 'k' fast 5.00x"), "{r}");
     }
 }

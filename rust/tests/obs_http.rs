@@ -1,0 +1,411 @@
+//! Live observability plane over real TCP: a `serve::Server` with
+//! `ObsConfig::listen_addr` bound to an ephemeral port is scraped with
+//! raw HTTP/1.1 GETs — Prometheus text conformance, JSON snapshots and
+//! interval deltas, health/readiness probes, debug dumps — and the
+//! chaos leg trips a plan quarantine with a poisoned kernel to prove
+//! the readiness probe flips and the flight recorder freezes a dump
+//! naming the offending kernel.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use arbb_rs::obs::FlightEventKind;
+use arbb_rs::serve::{
+    Arg, ObsConfig, ResilienceConfig, ServeConfig, ServeError, Server, SloSpec, Value,
+};
+
+/// Serial single-worker server with the scrape plane bound on an
+/// ephemeral port and the rest of the obs stack on.
+fn plane_config() -> ServeConfig {
+    ServeConfig {
+        workers: 1,
+        obs: ObsConfig {
+            trace_capacity: 1024,
+            listen_addr: Some("127.0.0.1:0".to_string()),
+            ..ObsConfig::default()
+        },
+        ..ServeConfig::serial()
+    }
+}
+
+/// One-shot GET over a raw socket; returns (status, content-type, body).
+fn get(addr: SocketAddr, path: &str) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect scrape endpoint");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nAccept: */*\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let (head, body) =
+        raw.split_once("\r\n\r\n").unwrap_or_else(|| panic!("no header end: {raw:?}"));
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {head:?}"));
+    let ctype = head
+        .lines()
+        .find_map(|l| l.strip_prefix("Content-Type: "))
+        .unwrap_or_default()
+        .to_string();
+    (status, ctype, body.to_string())
+}
+
+fn sq_server() -> Server {
+    Server::builder(plane_config())
+        .kernel("sq", |_ctx, p| {
+            let x = p[0].vec1();
+            Value::Vec(&x * &x)
+        })
+        .start()
+}
+
+/// The whole endpoint surface answers over a real socket while the
+/// server is live, with the right status codes and content types.
+#[test]
+fn scrape_endpoints_serve_a_live_server() {
+    let server = sq_server();
+    let addr = server.obs_addr().expect("listener bound on ephemeral port");
+    assert_ne!(addr.port(), 0);
+    let client = server.client();
+    for _ in 0..20 {
+        client.call("sq", vec![Arg::vec(vec![2.0; 128])]).unwrap();
+    }
+
+    let (status, ctype, page) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(ctype.starts_with("text/plain; version=0.0.4"), "{ctype}");
+    assert!(page.contains("arbb_serve_requests_total 20"), "{page}");
+    assert!(page.contains("# TYPE arbb_serve_latency_ns histogram"), "{page}");
+    assert!(page.contains("arbb_serve_latency_ns_count{kernel=\"sq\"} 20"), "{page}");
+
+    let (status, ctype, json) = get(addr, "/metrics.json");
+    assert_eq!(status, 200);
+    assert_eq!(ctype, "application/json");
+    assert!(json.starts_with("{\"metrics\":[") && json.ends_with("]}"), "{json}");
+
+    // Interval deltas: the first call reports growth since server
+    // start, an immediate second call with no traffic reports zero.
+    let (status, _, d1) = get(addr, "/metrics/delta");
+    assert_eq!(status, 200);
+    assert!(
+        d1.contains("\"name\":\"arbb_serve_requests_total\",\"labels\":\"\",\
+                     \"type\":\"counter\",\"value\":20"),
+        "{d1}"
+    );
+    let (_, _, d2) = get(addr, "/metrics/delta");
+    assert!(
+        d2.contains("\"name\":\"arbb_serve_requests_total\",\"labels\":\"\",\
+                     \"type\":\"counter\",\"value\":0"),
+        "{d2}"
+    );
+
+    let (status, _, health) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert!(health.contains("\"status\":\"ok\"") && health.contains("\"ready\":true"), "{health}");
+    assert!(health.contains("\"quarantined\":0"), "{health}");
+    let (status, _, ready) = get(addr, "/readyz");
+    assert_eq!(status, 200);
+    assert!(ready.contains("\"ready\":true"), "{ready}");
+
+    let (status, _, trace) = get(addr, "/debug/trace");
+    assert_eq!(status, 200);
+    assert!(trace.starts_with("{\"traceEvents\":["), "{trace}");
+    assert!(trace.contains("sq"), "{trace}");
+
+    let (status, _, prof) = get(addr, "/debug/profile");
+    assert_eq!(status, 200);
+    assert!(prof.contains("\"backend\":\"") && prof.contains("\"classes\":"), "{prof}");
+
+    let (status, _, flight) = get(addr, "/debug/flight");
+    assert_eq!(status, 200);
+    assert!(flight.starts_with("{\"freezes\":"), "{flight}");
+    assert!(flight.contains("\"dumps\":["), "{flight}");
+
+    let (status, _, body) = get(addr, "/nope");
+    assert_eq!(status, 404);
+    assert!(body.contains("/nope"), "{body}");
+
+    // Non-GET methods are rejected.
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "POST /metrics HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 405"), "{raw}");
+}
+
+/// A tracing-disabled server still serves the plane; `/debug/trace`
+/// 404s with a pointer at the config knob.
+#[test]
+fn trace_endpoint_404s_when_tracing_is_off() {
+    let server = Server::builder(ServeConfig {
+        workers: 1,
+        obs: ObsConfig {
+            listen_addr: Some("127.0.0.1:0".to_string()),
+            ..ObsConfig::default()
+        },
+        ..ServeConfig::serial()
+    })
+    .kernel("id", |_ctx, p| Value::Vec(p[0].vec1().scale(1.0)))
+    .start();
+    let addr = server.obs_addr().unwrap();
+    let (status, _, body) = get(addr, "/debug/trace");
+    assert_eq!(status, 404);
+    assert!(body.contains("trace_capacity"), "{body}");
+    // The rest of the plane is unaffected.
+    assert_eq!(get(addr, "/metrics").0, 200);
+}
+
+/// Prometheus text-format conformance of the scraped page: every
+/// sample is declared by a preceding `# TYPE`, histogram bucket series
+/// are cumulative and non-decreasing with ascending `le` bounds, and
+/// the `+Inf` bucket equals `_count`.
+#[test]
+fn prometheus_page_is_conformant() {
+    let server = sq_server();
+    let addr = server.obs_addr().unwrap();
+    let client = server.client();
+    // Spread latencies across buckets.
+    for n in [16usize, 256, 4096] {
+        for _ in 0..10 {
+            client.call("sq", vec![Arg::vec(vec![1.5; n])]).unwrap();
+        }
+    }
+    let (status, _, page) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+
+    let mut types: Vec<(String, String)> = Vec::new();
+    // (base name, labels-without-le) -> [(le, cumulative)]
+    let mut buckets: Vec<((String, String), Vec<(f64, u64)>)> = Vec::new();
+    let mut counts: Vec<((String, String), u64)> = Vec::new();
+    for line in page.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE name").to_string();
+            let ty = it.next().expect("TYPE kind").to_string();
+            assert!(
+                matches!(ty.as_str(), "counter" | "gauge" | "histogram"),
+                "unknown type in {line:?}"
+            );
+            types.push((name, ty));
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // Sample line: name[{labels}] value
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        let (name, labels) = match series.split_once('{') {
+            Some((n, l)) => (n.to_string(), l.trim_end_matches('}').to_string()),
+            None => (series.to_string(), String::new()),
+        };
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|b| types.iter().any(|(n, t)| n == b && t == "histogram"))
+            .unwrap_or(&name)
+            .to_string();
+        assert!(
+            types.iter().any(|(n, _)| *n == base),
+            "sample {name:?} has no preceding # TYPE declaration"
+        );
+        if name.ends_with("_bucket") {
+            let (le_part, rest_labels): (Vec<&str>, Vec<&str>) =
+                labels.split(',').partition(|p| p.starts_with("le="));
+            let le_raw = le_part
+                .first()
+                .and_then(|p| p.strip_prefix("le=\""))
+                .and_then(|p| p.strip_suffix('"'))
+                .unwrap_or_else(|| panic!("bucket without le label: {line:?}"));
+            let le = if le_raw == "+Inf" { f64::INFINITY } else { le_raw.parse().unwrap() };
+            let cum: u64 = value.parse().unwrap_or_else(|_| panic!("bad bucket count {line:?}"));
+            let key = (base, rest_labels.join(","));
+            match buckets.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push((le, cum)),
+                None => buckets.push((key, vec![(le, cum)])),
+            }
+        } else if name.ends_with("_count")
+            && types.iter().any(|(n, t)| name == format!("{n}_count") && t == "histogram")
+        {
+            counts.push(((base, labels), value.parse().unwrap()));
+        } else {
+            // Counters must be integers; gauges any finite float.
+            assert!(value.parse::<f64>().map(f64::is_finite).unwrap_or(false), "{line:?}");
+        }
+    }
+    assert!(!buckets.is_empty(), "page must carry histogram buckets:\n{page}");
+    for ((base, labels), series) in &buckets {
+        for w in series.windows(2) {
+            assert!(w[0].0 < w[1].0, "{base}{{{labels}}}: le bounds must ascend: {series:?}");
+            assert!(w[0].1 <= w[1].1, "{base}{{{labels}}}: buckets must be cumulative: {series:?}");
+        }
+        let (last_le, last_cum) = *series.last().unwrap();
+        assert!(last_le.is_infinite(), "{base}{{{labels}}}: final bucket must be +Inf");
+        let count = counts
+            .iter()
+            .find(|((b, l), _)| b == base && l == labels)
+            .unwrap_or_else(|| panic!("{base}{{{labels}}}: missing _count series"))
+            .1;
+        assert_eq!(last_cum, count, "{base}{{{labels}}}: +Inf bucket must equal _count");
+    }
+}
+
+/// An impossible latency objective burns its budget; the tick publishes
+/// the burn gauges on the scraped page and the trip freezes a flight
+/// dump naming the objective.
+#[test]
+fn slo_burn_gauges_surface_on_the_scrape_page() {
+    let server = Server::builder(ServeConfig {
+        workers: 1,
+        obs: ObsConfig {
+            trace_capacity: 256,
+            listen_addr: Some("127.0.0.1:0".to_string()),
+            // 1 ns latency objective at a 5% budget: every request is
+            // over-latency, so the burn rate pins at 20x and trips.
+            slos: vec![SloSpec::new("sq", 1, 0.05)],
+            ..ObsConfig::default()
+        },
+        ..ServeConfig::serial()
+    })
+    .kernel("sq", |_ctx, p| {
+        let x = p[0].vec1();
+        Value::Vec(&x * &x)
+    })
+    .start();
+    let addr = server.obs_addr().unwrap();
+    let client = server.client();
+    for _ in 0..10 {
+        client.call("sq", vec![Arg::vec(vec![2.0; 64])]).unwrap();
+    }
+
+    // The tick runs on the accept thread every ~250 ms; poll the page
+    // until the gauges surface.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let page = loop {
+        let (_, _, page) = get(addr, "/metrics");
+        if page.contains("arbb_slo_fast_burn{kernel=\"sq\"} 20") {
+            break page;
+        }
+        assert!(Instant::now() < deadline, "burn gauge never surfaced:\n{page}");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(page.contains("arbb_slo_slow_burn{kernel=\"sq\"} 20"), "{page}");
+
+    // Burning 20x over budget trips the objective: the flight recorder
+    // froze a dump blaming the kernel, served over the same plane.
+    let (_, _, flight) = get(addr, "/debug/flight");
+    assert!(flight.contains("slo burn"), "{flight}");
+    assert!(flight.contains("\"kernel\":\"sq\""), "{flight}");
+    assert!(flight.contains("\"kind\":\"slo_burn\""), "{flight}");
+    let dumps = client.flight_dumps();
+    assert!(!dumps.is_empty(), "trip must freeze a dump");
+    assert_eq!(dumps[0].kernel, "sq");
+    assert!(dumps[0].reason.contains("slo burn"), "{}", dumps[0].reason);
+    // The report surfaces the published burns too.
+    assert!(client.report().contains("slo burn: 'sq'"), "{}", client.report());
+}
+
+/// Chaos leg: a kernel whose builder panics trips the plan circuit
+/// breaker; readiness flips to 503 while the plan is quarantined, the
+/// flight recorder freezes a dump naming the kernel with its breaker
+/// state and recent spans, healthy kernels keep serving, and readiness
+/// recovers once the backoff elapses.
+#[test]
+fn quarantine_trip_flips_readiness_and_freezes_a_flight_dump() {
+    let server = Server::builder(ServeConfig {
+        workers: 1,
+        resilience: ResilienceConfig {
+            quarantine_threshold: 2,
+            quarantine_backoff: Duration::from_secs(2),
+            ..ResilienceConfig::default()
+        },
+        obs: ObsConfig {
+            trace_capacity: 256,
+            listen_addr: Some("127.0.0.1:0".to_string()),
+            ..ObsConfig::default()
+        },
+        ..ServeConfig::serial()
+    })
+    .kernel("ok", |_ctx, p| Value::Vec(p[0].vec1().scale(2.0)))
+    .kernel("poison", |_ctx, _p| panic!("poisoned builder"))
+    .start();
+    let addr = server.obs_addr().unwrap();
+    let client = server.client();
+    let args = || vec![Arg::vec(vec![1.0, 2.0])];
+    assert_eq!(get(addr, "/readyz").0, 200, "healthy server is ready");
+
+    // Poison until the breaker trips.
+    let mut failures = 0u32;
+    loop {
+        match client.call("poison", args()) {
+            Err(ServeError::Quarantined { failures: f, .. }) => {
+                assert_eq!(f, 2, "tripped at the configured threshold");
+                break;
+            }
+            Err(_) => failures += 1,
+            Ok(_) => panic!("poisoned kernel cannot succeed"),
+        }
+        assert!(failures <= 5, "quarantine never tripped");
+    }
+
+    // Readiness flips while the plan sits in quarantine; liveness does
+    // not (the process is healthy, a tenant is not).
+    let (status, _, body) = get(addr, "/readyz");
+    assert_eq!(status, 503, "{body}");
+    assert!(body.contains("\"status\":\"degraded\""), "{body}");
+    assert!(body.contains("\"quarantined\":1"), "{body}");
+    assert_eq!(get(addr, "/healthz").0, 200);
+
+    // The trip froze a forensic dump naming the kernel: breaker state,
+    // the quarantine-trip event, and the poisoned requests' spans.
+    let dumps = client.flight_dumps();
+    assert!(!dumps.is_empty(), "trip must freeze a dump");
+    let d = dumps.last().unwrap();
+    assert_eq!(d.kernel, "poison");
+    assert!(d.reason.contains("quarantined after 2 consecutive failures"), "{}", d.reason);
+    assert!(d.breakers.contains("\"kernel\":\"poison\"") && d.breakers.contains("\"failures\":2"));
+    assert!(
+        d.events.iter().any(|e| e.kind == FlightEventKind::QuarantineTrip && e.value == 2),
+        "{:?}",
+        d.events
+    );
+    assert!(!d.spans.is_empty(), "dump carries the offending kernel's spans");
+    assert!(d.spans.iter().all(|s| !s.ok), "poisoned spans all failed");
+    let (_, _, flight) = get(addr, "/debug/flight");
+    assert!(flight.contains("\"kind\":\"quarantine_trip\""), "{flight}");
+    assert!(flight.contains("\"kernel\":\"poison\""), "{flight}");
+
+    // Containment: the healthy tenant never noticed.
+    assert_eq!(client.call("ok", args()).unwrap(), vec![2.0, 4.0]);
+
+    // Recovery: the breaker re-admits after backoff and readiness
+    // returns without a restart.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        if get(addr, "/readyz").0 == 200 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "readiness never recovered");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// `PALLAS_OBS_ADDR` overrides the config's listener address.
+#[test]
+fn env_override_binds_the_listener() {
+    // Env mutation is process-global: this test sets it, starts a
+    // server with no configured listener, and unsets it before any
+    // assertion can fail. Other tests in this binary configure
+    // listeners explicitly, so a transient override is harmless.
+    std::env::set_var("PALLAS_OBS_ADDR", "127.0.0.1:0");
+    let server = Server::builder(ServeConfig { workers: 1, ..ServeConfig::serial() })
+        .kernel("id", |_ctx, p| Value::Vec(p[0].vec1().scale(1.0)))
+        .start();
+    std::env::remove_var("PALLAS_OBS_ADDR");
+    let addr = server.obs_addr().expect("env var bound the listener");
+    assert_eq!(get(addr, "/healthz").0, 200);
+}

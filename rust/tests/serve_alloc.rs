@@ -24,7 +24,7 @@ use arbb_rs::coordinator::node::Data;
 use arbb_rs::coordinator::{Context, DType, OptLevel, Shape};
 use arbb_rs::euroben::mod2as::{arbb_spmv2, bind_csr};
 use arbb_rs::euroben::mod2f;
-use arbb_rs::obs::{profile, MetricsRegistry, SpanEvent, TraceRing};
+use arbb_rs::obs::{profile, FlightEventKind, FlightRecorder, MetricsRegistry, SpanEvent, TraceRing};
 use arbb_rs::serve::{cache, exec, KernelFn, PlanKey, ProgramFn, Value};
 use arbb_rs::solvers::cg_capture;
 use arbb_rs::sparse::{banded_spd, random_csr};
@@ -274,12 +274,15 @@ fn steady_state_whole_program_fft_replay_is_allocation_free() {
 #[test]
 fn metrics_and_trace_recording_are_allocation_free() {
     // Drive every obs recording path directly: counters, a log-bucket
-    // histogram and the span ring. Registration and ring construction
-    // may allocate; the per-sample paths must not.
+    // histogram, the span ring and the flight recorder's event ring.
+    // Registration and ring construction may allocate; the per-sample
+    // paths must not (`FlightRecorder::record` rides the dispatcher
+    // hot path on every steal/shed — only `freeze` may allocate).
     let reg = MetricsRegistry::new();
     let reqs = reg.counter("t_requests_total", "", "test counter");
     let lat = reg.histogram("t_latency_ns", "", "test histogram");
     let ring = TraceRing::new(256, 2, vec!["k".to_string()]);
+    let flight = FlightRecorder::new(128);
 
     let before = allocs();
     for i in 0..10_000u64 {
@@ -296,17 +299,21 @@ fn metrics_and_trace_recording_are_allocation_free() {
             t_done: i + 100,
             ..SpanEvent::default()
         });
+        flight.record(FlightEventKind::Steal, (i % 4) as u32, (i % 2) as u32, i);
     }
     assert_eq!(
         allocs() - before,
         0,
-        "metrics counters, histogram samples and trace-ring spans must not allocate"
+        "metrics counters, histogram samples, trace-ring spans and flight events \
+         must not allocate"
     );
     assert_eq!(reqs.get(), 10_000);
     assert_eq!(lat.count(), 10_000);
-    // The ring stayed bounded: capacity held, the rest overwrote.
+    // The rings stayed bounded: capacity held, the rest overwrote.
     assert_eq!(ring.len(), 256);
     assert_eq!(ring.dropped(), 10_000 - 256);
+    assert_eq!(flight.recorded(), 10_000);
+    assert_eq!(flight.events().len(), 128);
 }
 
 #[test]

@@ -10,7 +10,7 @@ use arbb_rs::serve::{Arg, ObsConfig, ServeConfig, Server, Value};
 fn obs_config() -> ServeConfig {
     ServeConfig {
         workers: 1,
-        obs: ObsConfig { metrics: true, trace_capacity: 1024, tape_profile: true },
+        obs: ObsConfig { trace_capacity: 1024, tape_profile: true, ..ObsConfig::default() },
         ..ServeConfig::serial()
     }
 }
@@ -81,8 +81,9 @@ fn prometheus_and_json_render_from_live_server() {
     let page = client.metrics_prometheus();
     assert!(page.contains("# TYPE arbb_serve_requests_total counter"), "{page}");
     assert!(page.contains("arbb_serve_requests_total 5"), "{page}");
-    assert!(page.contains("# TYPE arbb_serve_latency_ns summary"), "{page}");
-    assert!(page.contains("arbb_serve_latency_ns{kernel=\"sq\",quantile=\"0.99\"}"), "{page}");
+    assert!(page.contains("# TYPE arbb_serve_latency_ns histogram"), "{page}");
+    assert!(page.contains("arbb_serve_latency_ns_bucket{kernel=\"sq\",le=\"+Inf\"} 5"), "{page}");
+    assert!(page.contains("arbb_serve_latency_ns_count{kernel=\"sq\"} 5"), "{page}");
     assert!(page.contains("arbb_plan_cache_hit_rate"), "{page}");
 
     let json = client.metrics_json();
