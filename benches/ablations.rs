@@ -21,6 +21,7 @@
 use arbb_rs::bench::{mflops, render_table, time_best, workloads, Series};
 use arbb_rs::coordinator::engine::backend::{self, Backend};
 use arbb_rs::coordinator::engine::eval::{eval_range, Scratch, Tape};
+use arbb_rs::coordinator::engine::tuning::Tuning;
 use arbb_rs::coordinator::ops::RedOp;
 use arbb_rs::coordinator::{Context, Options, OptLevel};
 use arbb_rs::euroben::mod2am::arbb_mxm2b;
@@ -231,7 +232,7 @@ fn main() {
             let ctx = Context::with_options(Options {
                 opt_level: OptLevel::O3,
                 num_workers: 4,
-                grain,
+                tuning: Tuning { grain, ..Default::default() },
                 ..Default::default()
             });
             let a = ctx.bind1(&xs);

@@ -24,9 +24,12 @@
 //! `BENCH_serve_obs.json` — the CI perf-tracking mode. The same flag
 //! then runs the resilience smoke (disarmed-failpoint cost, throughput
 //! and p99 under injected chunk-panic rates, quarantine recovery time),
-//! written to `BENCH_serve_resilience.json`, and finally the scheduler
+//! written to `BENCH_serve_resilience.json`, then the scheduler
 //! scaling smoke (throughput + p99 at 1/2/4/N dispatcher shards),
-//! written to `BENCH_serve_scaling.json`.
+//! written to `BENCH_serve_scaling.json`, and finally the cost-based
+//! planner smoke (cold vs warm-store capture latency, est vs measured
+//! ns/element per decision, the dgemm panel race), written to
+//! `BENCH_planner.json`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -764,12 +767,192 @@ fn obs_plane_smoke() {
     println!("\n# serve_throughput obs-plane smoke done");
 }
 
+/// Planner smoke (runs with `--smoke`, after the live-plane pass): the
+/// cost-based plan explorer end to end. A cold server against a fresh
+/// plan store calibrates, explores and memoizes; the per-kernel first
+/// call is the cold capture latency, and the drift scan feeds replay
+/// profiles back as measured ns/element. A second server restarted onto
+/// the warm store must skip calibration and exploration entirely, which
+/// shows up as the warm capture latency. A direct dgemm panel race then
+/// times the model's chosen row-panel height against the hard-coded
+/// default. Emits `BENCH_planner.json`.
+fn planner_smoke() {
+    use arbb_rs::coordinator::engine::{backend, cost::CostModel, pool};
+    use arbb_rs::coordinator::passes::explore;
+    use arbb_rs::kernels::dgemm_with_panels;
+
+    const WARM: usize = 24;
+    const ROUNDS: usize = 4;
+
+    println!("\n# serve_throughput (smoke) — cost-based planner tracking\n");
+
+    let store = std::env::temp_dir()
+        .join(format!("pallas-planner-smoke-{}.store", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    std::fs::remove_file(&store).ok();
+
+    let spm = banded_spd(512, 5, 3);
+    let build = |path: &str| {
+        let m = spm.clone();
+        Server::builder(ServeConfig {
+            plan_store: Some(path.to_string()),
+            obs: ObsConfig { tape_profile: true, ..ObsConfig::default() },
+            ..ServeConfig::serial()
+        })
+        .kernel("triad", |_ctx, p| Value::Vec(triad_expr(&p[0].vec1(), &p[1].vec1())))
+        .kernel("spmv", move |ctx, p| {
+            let a = mod2as::bind_csr(ctx, &m);
+            Value::Vec(mod2as::arbb_spmv1(ctx, &a, &p[0].vec1()))
+        })
+        .start()
+    };
+    // First call per kernel = capture (+ exploration on a cold store)
+    // latency; the follow-up replays cross the drift scan's trust
+    // threshold so the memo picks up runtime measurements.
+    let first_calls = |server: &Server| -> (f64, f64) {
+        let client = server.client();
+        let (x, y) = triad_inputs(1);
+        let xs = spm.random_x(1);
+        let t0 = Instant::now();
+        client.call("triad", vec![Arg::vec(x.clone()), Arg::vec(y.clone())]).unwrap();
+        let triad_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        client.call("spmv", vec![Arg::vec(xs.clone())]).unwrap();
+        let spmv_s = t0.elapsed().as_secs_f64();
+        for _ in 0..WARM {
+            client.call("triad", vec![Arg::vec(x.clone()), Arg::vec(y.clone())]).unwrap();
+            client.call("spmv", vec![Arg::vec(xs.clone())]).unwrap();
+        }
+        client.planner_tick();
+        (triad_s, spmv_s)
+    };
+
+    let cold = build(&store);
+    let (cold_triad_s, cold_spmv_s) = first_calls(&cold);
+    let cold_st = cold.client().planner_stats().expect("planner is on by default");
+    let decisions = cold.client().planner_decisions();
+    let bk = cold.backend_name();
+    drop(cold);
+
+    let warm = build(&store);
+    let (warm_triad_s, warm_spmv_s) = first_calls(&warm);
+    let warm_st = warm.client().planner_stats().expect("planner is on by default");
+    assert!(warm_st.warm_start, "restart must warm-start from the store");
+    assert_eq!(warm_st.calib_secs, 0.0, "warm start must not re-calibrate");
+    assert_eq!(warm_st.explorations, 0, "warm start must not re-explore");
+    drop(warm);
+    std::fs::remove_file(&store).ok();
+
+    // Direct dgemm panel race: the calibrated model's MC choice vs the
+    // classic default, on the shape + worker count where the default
+    // leaves workers idle (m=256 at MC=128 is two panels).
+    let cm = CostModel::calibrate(backend::active());
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 4);
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let mc_default = 128usize;
+    let (mc_explored, est_explored_s) = explore::explore_dgemm(&cm, m, k, n, workers);
+    let est_default_s = cm.dgemm_secs(m, k, n, mc_default, workers);
+    let p = pool::shared(workers);
+    let a: Vec<f64> = (0..m * k).map(|i| (i % 13) as f64 * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|i| (i % 7) as f64 * 0.5).collect();
+    let time_mc = |mc: usize| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..ROUNDS {
+            let mut c = vec![0.0; m * n];
+            let t0 = Instant::now();
+            dgemm_with_panels(m, k, n, &a, &b, &mut c, false, Some(&*p), mc, 256, 512);
+            best = best.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(&c);
+        }
+        best
+    };
+    let meas_default_s = time_mc(mc_default);
+    let meas_explored_s = time_mc(mc_explored);
+    let speedup = meas_default_s / meas_explored_s;
+
+    println!("  backend={bk} warm_calls={WARM}");
+    println!(
+        "  cold: calib {:.1} ms, {} explorations, triad capture {:.3} ms, spmv capture {:.3} ms",
+        cold_st.calib_secs * 1e3,
+        cold_st.explorations,
+        cold_triad_s * 1e3,
+        cold_spmv_s * 1e3
+    );
+    println!(
+        "  warm: calib {:.1} ms, {} explorations, triad capture {:.3} ms, spmv capture {:.3} ms",
+        warm_st.calib_secs * 1e3,
+        warm_st.explorations,
+        warm_triad_s * 1e3,
+        warm_spmv_s * 1e3
+    );
+    println!("  decisions (est vs measured ns/elem):");
+    let dec_json: Vec<String> = decisions
+        .iter()
+        .map(|d| {
+            let ratio = if d.measured_ns_per_elem > 0.0 {
+                d.est_ns_per_elem / d.measured_ns_per_elem
+            } else {
+                0.0
+            };
+            let flag = if ratio > 0.0 && (0.5..=2.0).contains(&ratio) { "ok" } else { "DRIFT" };
+            println!(
+                "    {:<40} variant={:<24} est={:>8.3} meas={:>8.3} ratio={ratio:.2} [{flag}]",
+                d.key, d.variant, d.est_ns_per_elem, d.measured_ns_per_elem
+            );
+            format!(
+                "{{\"key\":\"{}\",\"variant\":\"{}\",\"est_ns_per_elem\":{:.4},\
+                 \"measured_ns_per_elem\":{:.4},\"ratio\":{ratio:.3},\"generation\":{}}}",
+                d.key, d.variant, d.est_ns_per_elem, d.measured_ns_per_elem, d.generation
+            )
+        })
+        .collect();
+    println!(
+        "  dgemm {m}x{k}x{n} @{workers}w: MC {mc_default} -> {mc_explored}, \
+         est {:.3} -> {:.3} ms, measured {:.3} -> {:.3} ms ({speedup:.2}x)",
+        est_default_s * 1e3,
+        est_explored_s * 1e3,
+        meas_default_s * 1e3,
+        meas_explored_s * 1e3
+    );
+
+    let json = format!(
+        "{{\"bench\":\"planner\",\"backend\":\"{bk}\",\
+         \"cold\":{{\"calib_secs\":{:.6},\"explorations\":{},\"memo_len\":{},\
+         \"triad_capture_s\":{cold_triad_s:.6},\"spmv_capture_s\":{cold_spmv_s:.6}}},\
+         \"warm\":{{\"warm_start\":{},\"calib_secs\":{:.6},\"explorations\":{},\
+         \"memo_hits\":{},\"triad_capture_s\":{warm_triad_s:.6},\
+         \"spmv_capture_s\":{warm_spmv_s:.6}}},\
+         \"decisions\":[{}],\
+         \"dgemm\":{{\"m\":{m},\"k\":{k},\"n\":{n},\"workers\":{workers},\
+         \"mc_default\":{mc_default},\"mc_explored\":{mc_explored},\
+         \"est_default_s\":{est_default_s:.6},\"est_explored_s\":{est_explored_s:.6},\
+         \"meas_default_s\":{meas_default_s:.6},\"meas_explored_s\":{meas_explored_s:.6},\
+         \"speedup\":{speedup:.3}}}}}\n",
+        cold_st.calib_secs,
+        cold_st.explorations,
+        cold_st.memo_len,
+        warm_st.warm_start,
+        warm_st.calib_secs,
+        warm_st.explorations,
+        warm_st.memo_hits,
+        dec_json.join(",")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_planner.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n  wrote {path}"),
+        Err(e) => println!("\n  could not write {path}: {e}"),
+    }
+    println!("\n# serve_throughput planner smoke done");
+}
+
 fn main() {
     if std::env::args().any(|a| a == "--smoke") {
         obs_smoke();
         resilience_smoke();
         scaling_smoke();
         obs_plane_smoke();
+        planner_smoke();
         return;
     }
     let secs = parse_secs();

@@ -1,0 +1,60 @@
+//! Plan-store probe for the CI warm-restart leg: a tiny server whose
+//! plan store comes from `PALLAS_PLAN_STORE` (no explicit path in the
+//! config), serving one explored kernel and printing the planner
+//! counters in a grep-friendly form. The CI leg runs this binary twice
+//! against the same store file: the first run must report a cold start
+//! (calibration plus one exploration), the second a warm start with
+//! zero calibration seconds and zero explorations — the
+//! restart-without-warmup acceptance of the plan-store subsystem.
+//!
+//! ```sh
+//! PALLAS_PLAN_STORE=/tmp/pallas.planstore \
+//!     cargo run --release --example plan_store_probe
+//! ```
+
+use arbb_rs::euroben::mod2as;
+use arbb_rs::serve::{Arg, ObsConfig, ServeConfig, Server, Value};
+use arbb_rs::sparse::banded_spd;
+use arbb_rs::util::assert_allclose;
+
+fn main() {
+    let cfg = ServeConfig {
+        obs: ObsConfig { tape_profile: true, ..ObsConfig::default() },
+        ..ServeConfig::serial()
+    };
+    let store = cfg.effective_plan_store().unwrap_or_else(|| "(none)".into());
+
+    let m = banded_spd(96, 5, 3);
+    let m2 = m.clone();
+    let server = Server::builder(cfg)
+        .kernel("spmv", move |ctx, p| {
+            let a = mod2as::bind_csr(ctx, &m2);
+            Value::Vec(mod2as::arbb_spmv1(ctx, &a, &p[0].vec1()))
+        })
+        .start();
+    let client = server.client();
+
+    // Serve a few shapes-identical requests; the first resolves the
+    // plan (memo hit on a warm store, exploration on a cold one), the
+    // rest are pure replays. Correctness is asserted either way.
+    for seed in 0..3u64 {
+        let x = m.random_x(seed);
+        let want = m.spmv_alloc(&x);
+        let got = client.call("spmv", vec![Arg::vec(x)]).expect("serve spmv");
+        assert_allclose(&got, &want, 1e-11, 1e-12, "probe spmv");
+    }
+
+    let st = client.planner_stats().expect("planner is on by default");
+    println!("store={store}");
+    println!(
+        "planner: warm_start={} calib_secs={:.6} explorations={} memo_hits={} memo_len={} \
+         backend={}",
+        st.warm_start, st.calib_secs, st.explorations, st.memo_hits, st.memo_len, st.backend
+    );
+    for d in client.planner_decisions() {
+        println!(
+            "decision: key={} variant={} est_ns_per_elem={:.4} measured_ns_per_elem={:.4}",
+            d.key, d.variant, d.est_ns_per_elem, d.measured_ns_per_elem
+        );
+    }
+}

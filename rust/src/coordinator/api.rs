@@ -22,6 +22,7 @@
 //! | C++ exceptions out of `arbb::call` (§2: errors surface at the call site) | typed per-request errors: [`crate::Error`] from eager forces, [`crate::serve::ServeError`] from serving (deadline / panic / quarantine containment), faults injectable via [`crate::obs::faults`] |
 //! | TBB-backed runtime scheduler, thread/core affinity (§2: many-core scaling without user threading code) | [`crate::serve`] sharded dispatcher: plan-affine routing to per-shard queues, idle-shard work stealing, per-shard interned pool slices, cost-aware batch formation ([`crate::serve::ServeConfig::shards`]) |
 //! | external measurement harness (§3: the paper's OpenMP/MKL comparisons ran under wall-clock timers and VTune, outside the runtime) | the live observability plane: in-process HTTP scrape endpoints ([`crate::obs::HttpServer`] — `/metrics`, `/healthz`, `/readyz`, `/debug/trace`, `/debug/flight`), per-kernel SLO burn-rate tracking ([`crate::obs::SloTracker`]) and an anomaly-triggered flight recorder ([`crate::obs::FlightRecorder`]), so the latency decompositions the paper measured from outside are served continuously from inside ([`crate::serve::ObsConfig::listen_addr`]) |
+//! | capture-time auto-optimisation (§2: a closure's first `arbb::call` runs the JIT's analysis + code generation once; later calls reuse the result) | the cost-based planner: startup calibration ([`super::engine::cost::CostModel`]), per-`(kernel, shape, backend)` exploration of alternative lowerings scored + probed at capture ([`super::passes::explore`]), winners memoized into the serve plan cache with runtime drift feedback and hot swap, persisted across restarts ([`crate::runtime::PlanStore`], [`crate::serve::ServeConfig::plan_store`]) |
 //!
 //! ArBB's `_for`/`_while` describe *serial* control flow whose body is
 //! captured. This reproduction offers both cost models. On the eager

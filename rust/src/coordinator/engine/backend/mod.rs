@@ -241,15 +241,35 @@ pub fn select(sel: BackendSel) -> &'static dyn Backend {
 /// The process-wide active backend, chosen once at first use:
 /// `PALLAS_BACKEND=scalar` forces the reference kernels (the CI
 /// fallback leg), `PALLAS_BACKEND=avx2` (or `simd`) requests the SIMD
-/// kernels, anything else takes the best detected ISA. A requested but
-/// undetected ISA falls back to scalar rather than faulting.
+/// kernels. An *unrecognised* name is rejected loudly (logged, then the
+/// best detected ISA is used) instead of being silently treated as
+/// auto-detect; a recognised but undetected ISA falls back to scalar
+/// rather than faulting, so a forced-SIMD config stays portable.
 pub fn active() -> &'static dyn Backend {
     static ACTIVE: OnceLock<&'static dyn Backend> = OnceLock::new();
-    *ACTIVE.get_or_init(|| match std::env::var("PALLAS_BACKEND").as_deref() {
-        Ok("scalar") => scalar(),
-        Ok("avx2") | Ok("simd") => simd().unwrap_or_else(scalar),
-        _ => simd().unwrap_or_else(scalar),
+    *ACTIVE.get_or_init(|| match std::env::var("PALLAS_BACKEND") {
+        Ok(name) => match parse_backend(&name) {
+            Ok(BackendSel::Scalar) => scalar(),
+            Ok(BackendSel::Simd) | Ok(BackendSel::Auto) => simd().unwrap_or_else(scalar),
+            Err(why) => {
+                eprintln!("arbb: ignoring PALLAS_BACKEND={name:?}: {why}; auto-detecting");
+                simd().unwrap_or_else(scalar)
+            }
+        },
+        Err(_) => simd().unwrap_or_else(scalar),
     })
+}
+
+/// Strict `PALLAS_BACKEND` parser. Recognised names: `scalar`, `avx2`,
+/// `simd`, `auto`. Anything else is an error naming the valid set (no
+/// silent fallback — [`active`] logs the rejection).
+pub(crate) fn parse_backend(raw: &str) -> std::result::Result<BackendSel, String> {
+    match raw.trim() {
+        "scalar" => Ok(BackendSel::Scalar),
+        "avx2" | "simd" => Ok(BackendSel::Simd),
+        "auto" | "" => Ok(BackendSel::Auto),
+        other => Err(format!("unknown backend {other:?} (expected scalar|avx2|simd|auto)")),
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -426,6 +446,16 @@ mod tests {
     fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
         let mut rng = XorShift64::new(seed);
         (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn backend_env_parser_is_strict() {
+        assert!(matches!(parse_backend("scalar"), Ok(BackendSel::Scalar)));
+        assert!(matches!(parse_backend("avx2"), Ok(BackendSel::Simd)));
+        assert!(matches!(parse_backend(" simd "), Ok(BackendSel::Simd)));
+        assert!(matches!(parse_backend("auto"), Ok(BackendSel::Auto)));
+        assert!(parse_backend("sse9").is_err());
+        assert!(parse_backend("AVX2").is_err());
     }
 
     /// Pairs of backends to cross-check (scalar vs SIMD when present).

@@ -1,0 +1,333 @@
+//! Calibrated per-opcode-class cost model for the plan explorer.
+//!
+//! ArBB's capture-time optimiser chooses lowerings with a machine model
+//! baked into the JIT; here the model is *measured*: at first use (or
+//! when the plan store has no calibration for the active backend) each
+//! [`OpClass`](profile::OpClass) is micro-timed against the real backend
+//! kernels on `BLOCK`-sized buffers, and the resulting ns/element table
+//! scores candidate plans in [`passes::explore`](crate::coordinator::passes::explore).
+//!
+//! The calibration reuses the [`crate::obs::profile`] opcode taxonomy and
+//! accumulator, so estimated costs and runtime [`PlanProfile`]
+//! (crate::obs::profile::PlanProfile) measurements are directly
+//! comparable class by class — that comparison is what drives the
+//! serve-side drift check.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use super::backend::{self, Backend};
+use super::tuning::BLOCK;
+use crate::coordinator::ops::{BinOp, RedOp, UnOp};
+use crate::coordinator::shape::View;
+use crate::obs::profile::{OpClass, ProfileTable, N_CLASSES};
+
+/// Repetitions per primitive during calibration — enough to amortise the
+/// timer, small enough to keep first-use calibration well under a
+/// millisecond per class.
+const REPS: usize = 8;
+
+/// Synthetic segmented workload used to calibrate the three spmv paths:
+/// `SEG_ROWS` segments of `SEG_NNZ` non-zeros each.
+const SEG_ROWS: usize = 128;
+const SEG_NNZ: usize = 16;
+
+/// Floor for a class that calibration could not measure (or that a
+/// loaded store recorded as zero): prevents a zero-cost class from
+/// making every candidate plan look free.
+const FLOOR_NS_PER_ELEM: f64 = 0.05;
+
+/// Measured ns-per-element for every opcode class on one backend.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Backend the constants were measured on (`scalar`, `avx2`, ...).
+    pub backend: &'static str,
+    /// ns/element indexed by `OpClass as usize`.
+    pub ns_per_elem: [f64; N_CLASSES],
+    /// Wall seconds the calibration pass took (0 when loaded from the
+    /// plan store).
+    pub calib_secs: f64,
+}
+
+impl CostModel {
+    /// Rebuild a model from persisted constants (plan-store warm start).
+    pub fn from_parts(backend: &'static str, ns_per_elem: [f64; N_CLASSES]) -> Self {
+        CostModel { backend, ns_per_elem, calib_secs: 0.0 }
+    }
+
+    /// ns/element for one class, floored so estimates never hit zero.
+    #[inline]
+    pub fn ns_for(&self, c: OpClass) -> f64 {
+        self.ns_per_elem[c as usize].max(FLOOR_NS_PER_ELEM)
+    }
+
+    /// Estimated ns/element of a fused tape given its per-class
+    /// instruction histogram (each instruction touches every element of
+    /// the block, so class costs are additive).
+    pub fn tape_ns_per_elem(&self, hist: &[u32; N_CLASSES]) -> f64 {
+        let mut ns = 0.0;
+        for (ix, &count) in hist.iter().enumerate() {
+            if count > 0 {
+                let c = ns_index_class(ix);
+                ns += count as f64 * self.ns_for(c);
+            }
+        }
+        ns
+    }
+
+    /// Estimated ns for a segmented reduction over `nnz` total
+    /// non-zeros on the given path class (`SegBlocked`/`SegFused`/
+    /// `SegRuns`/`SpmvSerial`).
+    pub fn seg_ns(&self, path: OpClass, nnz: usize) -> f64 {
+        nnz as f64 * self.ns_for(path)
+    }
+
+    /// Estimated seconds for an `m x k * k x n` panel-blocked dgemm with
+    /// row-panel height `mc` on `workers` threads. The inner loop is a
+    /// `mul_add` stream over `m*k*n` elements; parallel speedup is
+    /// capped by the number of row panels actually available.
+    pub fn dgemm_secs(&self, m: usize, k: usize, n: usize, mc: usize, workers: usize) -> f64 {
+        let work_ns = (m * k * n) as f64 * self.ns_for(OpClass::MulAdd);
+        let panels = m.div_ceil(mc.max(1)).max(1);
+        let eff = workers.min(panels).max(1) as f64;
+        // Per-panel fork/join + packing overhead: one pass over the
+        // panel's inputs at contiguous-load cost.
+        let over_ns = panels as f64 * (mc.min(m) * k) as f64 * self.ns_for(OpClass::LoadContiguous);
+        work_ns / eff + over_ns
+    }
+
+    /// Measure every class against `bk`'s real kernels.
+    pub fn calibrate(bk: &'static dyn Backend) -> CostModel {
+        let t0 = Instant::now();
+        let table = ProfileTable::new();
+
+        let n = BLOCK;
+        let a: Vec<f64> = (0..n).map(|i| 1.0 + (i % 97) as f64 * 1e-3).collect();
+        let b: Vec<f64> = (0..n).map(|i| 0.5 + (i % 89) as f64 * 1e-3).collect();
+        let ix: Vec<i64> = (0..n).map(|i| ((i * 7) % n) as i64).collect();
+        let mut out = vec![0.0f64; n];
+
+        let mut time = |c: OpClass, elems: usize, f: &mut dyn FnMut()| {
+            f(); // warm-up (page in buffers, prime the branch predictor)
+            let t = Instant::now();
+            for _ in 0..REPS {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as u64;
+            table.record(c, (elems * REPS) as u64, ns.max(1));
+        };
+
+        // ---- loaders -----------------------------------------------
+        time(OpClass::LoadContiguous, n, &mut || {
+            backend::load_contiguous(&a, 0, 0, &mut out);
+            black_box(&out);
+        });
+        time(OpClass::LoadSplat, n, &mut || {
+            out.fill(black_box(1.5));
+            black_box(&out);
+        });
+        let bview = View { base: 0, row_stride: 1, col_stride: 0, out_cols: 64, modulo: None };
+        time(OpClass::LoadBroadcast, n, &mut || {
+            backend::load_broadcast(&a, &bview, 0, &mut out);
+            black_box(&out);
+        });
+        let sview = View { base: 0, row_stride: 64, col_stride: 1, out_cols: 64, modulo: None };
+        time(OpClass::LoadStrided, n, &mut || {
+            backend::load_strided(&a, &sview, 0, &mut out);
+            black_box(&out);
+        });
+        let mview = View { base: 0, row_stride: 0, col_stride: 1, out_cols: n, modulo: Some(64) };
+        time(OpClass::LoadModulo, n, &mut || {
+            backend::load_modulo(&a, &mview, 0, &mut out);
+            black_box(&out);
+        });
+        time(OpClass::LoadGather, n, &mut || {
+            bk.load_gather(&mut out, &a, &ix);
+            black_box(&out);
+        });
+        time(OpClass::LoadConst, n, &mut || {
+            out.fill(black_box(0.0));
+            black_box(&out);
+        });
+        time(OpClass::LoadIota, n, &mut || {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = i as f64;
+            }
+            black_box(&out);
+        });
+
+        // ---- element-wise ------------------------------------------
+        time(OpClass::Bin, n, &mut || {
+            bk.bin_inplace(BinOp::Add, &mut out, &b);
+            black_box(&out);
+        });
+        time(OpClass::BinConst, n, &mut || {
+            bk.bin_scalar_inplace(BinOp::Mul, &mut out, black_box(1.0000001));
+            black_box(&out);
+        });
+        // BinSplat lowers to the same scalar-broadcast kernel.
+        time(OpClass::BinSplat, n, &mut || {
+            bk.bin_scalar_inplace(BinOp::Add, &mut out, black_box(1e-9));
+            black_box(&out);
+        });
+        out.copy_from_slice(&a);
+        time(OpClass::Un, n, &mut || {
+            bk.un_inplace(UnOp::Abs, &mut out);
+            black_box(&out);
+        });
+        time(OpClass::MulAdd, n, &mut || {
+            bk.mul_add(&mut out, &a, &b);
+            black_box(&out);
+        });
+        time(OpClass::MulSub, n, &mut || {
+            bk.mul_sub(&mut out, &a, &b);
+            black_box(&out);
+        });
+        time(OpClass::ScaleAddConst, n, &mut || {
+            bk.scale_add_const(&mut out, black_box(1.0000001), black_box(1e-9));
+            black_box(&out);
+        });
+        time(OpClass::Axpy, n, &mut || {
+            bk.axpy_update(black_box(1e-9), &mut out, &b);
+            black_box(&out);
+        });
+
+        // ---- reductions --------------------------------------------
+        time(OpClass::Fold, n, &mut || {
+            black_box(bk.fold_slice(RedOp::Sum, &a));
+        });
+        time(OpClass::Dot, n, &mut || {
+            bk.mul_streams(&mut out, &a, &b);
+            black_box(bk.fold_slice(RedOp::Sum, &out));
+        });
+
+        // ---- segmented spmv paths ----------------------------------
+        // One synthetic banded matrix, timed through the exact inner
+        // kernels each SegTape path dispatches per row.
+        let nnz = SEG_ROWS * SEG_NNZ;
+        let vals: Vec<f64> = (0..nnz).map(|i| 1.0 + (i % 13) as f64 * 0.01).collect();
+        let x: Vec<f64> = (0..n).map(|i| 0.25 + (i % 31) as f64 * 0.01).collect();
+        // Gathered (scattered) column indices for blocked/fused; the
+        // runs path sees each row as one contiguous stream.
+        let gidx: Vec<i64> = (0..nnz).map(|i| ((i * 11) % n) as i64).collect();
+        let mut rowbuf = vec![0.0f64; SEG_NNZ];
+
+        time(OpClass::SpmvSerial, nnz, &mut || {
+            let mut acc = 0.0;
+            for r in 0..SEG_ROWS {
+                let s = r * SEG_NNZ;
+                acc += backend::spmv_row_serial(&vals, &gidx, &x, s, s + SEG_NNZ);
+            }
+            black_box(acc);
+        });
+        time(OpClass::SegFused, nnz, &mut || {
+            let mut acc = 0.0;
+            for r in 0..SEG_ROWS {
+                let s = r * SEG_NNZ;
+                acc += bk.gather_mul_sum(&vals[s..s + SEG_NNZ], &x, &gidx[s..s + SEG_NNZ]);
+            }
+            black_box(acc);
+        });
+        time(OpClass::SegRuns, nnz, &mut || {
+            let mut acc = 0.0;
+            for r in 0..SEG_ROWS {
+                let s = r * SEG_NNZ;
+                let xs = (r * 29) % (n - SEG_NNZ);
+                bk.mul_streams(&mut rowbuf, &vals[s..s + SEG_NNZ], &x[xs..xs + SEG_NNZ]);
+                acc = bk.fold_segment_chunk(RedOp::Sum, acc, &rowbuf);
+            }
+            black_box(acc);
+        });
+        time(OpClass::SegBlocked, nnz, &mut || {
+            // blocked = tape-fill (gather + multiply) then segment fold
+            let mut acc = 0.0;
+            for r in 0..SEG_ROWS {
+                let s = r * SEG_NNZ;
+                bk.load_gather(&mut rowbuf, &x, &gidx[s..s + SEG_NNZ]);
+                bk.bin_inplace(BinOp::Mul, &mut rowbuf, &vals[s..s + SEG_NNZ]);
+                acc = bk.fold_segment_chunk(RedOp::Sum, acc, &rowbuf);
+            }
+            black_box(acc);
+        });
+
+        let snap = table.snapshot(bk.name());
+        let mut ns_per_elem = [0.0f64; N_CLASSES];
+        for (ix, st) in snap.classes.iter().enumerate() {
+            ns_per_elem[ix] = st.ns_per_elem();
+        }
+        CostModel { backend: bk.name(), ns_per_elem, calib_secs: t0.elapsed().as_secs_f64() }
+    }
+}
+
+/// Recover the `OpClass` for an `as usize` index (histograms are indexed
+/// arrays; this is the inverse used when walking them).
+fn ns_index_class(ix: usize) -> OpClass {
+    use OpClass::*;
+    const ALL: [OpClass; N_CLASSES] = [
+        LoadContiguous,
+        LoadSplat,
+        LoadBroadcast,
+        LoadStrided,
+        LoadModulo,
+        LoadGather,
+        LoadConst,
+        LoadIota,
+        Bin,
+        BinConst,
+        BinSplat,
+        Un,
+        MulAdd,
+        MulSub,
+        ScaleAddConst,
+        Axpy,
+        Fold,
+        SegBlocked,
+        SegFused,
+        SegRuns,
+        SpmvSerial,
+        Dot,
+    ];
+    ALL[ix]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_covers_every_class() {
+        let cm = CostModel::calibrate(backend::select(backend::BackendSel::Scalar));
+        assert_eq!(cm.backend, "scalar");
+        for (ix, &ns) in cm.ns_per_elem.iter().enumerate() {
+            assert!(ns > 0.0, "class {ix} not calibrated");
+            assert!(ns < 1e6, "class {ix} implausible: {ns} ns/elem");
+        }
+        assert!(cm.calib_secs > 0.0);
+    }
+
+    #[test]
+    fn tape_estimate_is_additive() {
+        let mut ns = [1.0f64; N_CLASSES];
+        ns[OpClass::Bin as usize] = 2.0;
+        let cm = CostModel::from_parts("scalar", ns);
+        let mut h = [0u32; N_CLASSES];
+        h[OpClass::Bin as usize] = 3;
+        h[OpClass::LoadContiguous as usize] = 1;
+        assert!((cm.tape_ns_per_elem(&h) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dgemm_model_prefers_smaller_panels_when_underutilised() {
+        // m=256, MC=128 gives only 2 panels for 4 workers; MC=64 gives 4.
+        let cm = CostModel::from_parts("scalar", [1.0; N_CLASSES]);
+        let big = cm.dgemm_secs(256, 256, 256, 128, 4);
+        let small = cm.dgemm_secs(256, 256, 256, 64, 4);
+        assert!(small < big, "MC=64 ({small}) should beat MC=128 ({big})");
+    }
+
+    #[test]
+    fn zero_entries_are_floored() {
+        let cm = CostModel::from_parts("scalar", [0.0; N_CLASSES]);
+        assert!(cm.ns_for(OpClass::Bin) > 0.0);
+    }
+}

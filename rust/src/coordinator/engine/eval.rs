@@ -57,7 +57,10 @@ use super::backend::{self, Backend};
 /// amortises to noise against the ~2048-iteration inner loops. Halving
 /// it doubles dispatch overhead with no locality gain; doubling it
 /// spills deep chains' register files out of L1.
-pub const BLOCK: usize = 2048;
+///
+/// Defined in [`super::tuning`] with the rest of the sizing constants;
+/// re-exported here because the tape VM is its primary consumer.
+pub use super::tuning::BLOCK;
 
 /// Execution-side fused tree: leaves are resolved to concrete buffers.
 /// `Send + Sync` so parallel workers can share it.
@@ -497,6 +500,18 @@ impl TapeProgram {
 
     pub fn instrs(&self) -> &[Instr] {
         &self.instrs
+    }
+
+    /// Per-opcode-class instruction counts — the static shape the
+    /// calibrated cost model ([`super::cost`]) prices: estimated
+    /// ns/elem of one tape pass = Σ count(class) · calibrated
+    /// ns/elem(class).
+    pub fn class_histogram(&self) -> [u32; profile::N_CLASSES] {
+        let mut h = [0u32; profile::N_CLASSES];
+        for ins in &self.instrs {
+            h[class_of(ins) as usize] += 1;
+        }
+        h
     }
 
     /// Execute over output indices `[start, start + out.len())` with
@@ -1238,6 +1253,38 @@ impl SegTape {
     pub fn attach_runs(&mut self, rt: Arc<RunTable>) {
         if self.fused.is_some() {
             self.runs = Some(rt);
+        }
+    }
+
+    /// Force a dispatch path chosen by the plan explorer. All paths are
+    /// bit-identical, so this only changes cost: `Blocked` drops the
+    /// fused superinstruction and any run table, `Fused` drops the run
+    /// table, `Runs`/`Auto` keep whatever is attached. Downgrades
+    /// gracefully: forcing `Fused`/`Runs` when the spmv pattern never
+    /// matched leaves the blocked path in place.
+    pub fn force_path(&mut self, path: super::tuning::SegPath) {
+        use super::tuning::SegPath;
+        match path {
+            SegPath::Auto | SegPath::Runs => {}
+            SegPath::Fused => self.runs = None,
+            SegPath::Blocked => {
+                self.fused = None;
+                self.runs = None;
+            }
+        }
+    }
+
+    /// The dispatch path [`SegTape::run_rows_raw`] will take, as its
+    /// profiling opcode class.
+    pub fn path_class(&self) -> OpClass {
+        if self.fused.is_some() {
+            if self.runs.is_some() {
+                OpClass::SegRuns
+            } else {
+                OpClass::SegFused
+            }
+        } else {
+            OpClass::SegBlocked
         }
     }
 

@@ -10,10 +10,12 @@
 //!    40-core scaling figures on this 1-core testbed (see DESIGN.md §2).
 
 pub mod backend;
+pub mod cost;
 pub mod eval;
 pub mod pool;
 pub mod program;
 pub mod sim;
+pub mod tuning;
 
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -38,10 +40,6 @@ pub enum Mode {
 #[derive(Debug, Clone, Copy)]
 pub struct EngineCfg {
     pub mode: Mode,
-    /// Minimum elements per chunk.
-    pub grain: usize,
-    /// Target chunks per worker (load-balancing slack).
-    pub chunks_per_worker: usize,
     /// Record per-chunk timings for the scaling simulator.
     pub record: bool,
     /// Allow in-place buffer donation.
@@ -50,17 +48,20 @@ pub struct EngineCfg {
     /// [`super::Options::backend`]; all backends are bit-identical by
     /// contract, see [`backend`]).
     pub backend: &'static dyn backend::Backend,
+    /// Every runtime-tunable lowering parameter (grain, chunk fan-out,
+    /// segmented path, panel sizes), consolidated in [`tuning`] so the
+    /// plan explorer varies them in one place.
+    pub tuning: tuning::Tuning,
 }
 
 impl Default for EngineCfg {
     fn default() -> Self {
         EngineCfg {
             mode: Mode::Serial,
-            grain: 4096,
-            chunks_per_worker: 4,
             record: false,
             in_place: true,
             backend: backend::active(),
+            tuning: tuning::Tuning::default(),
         }
     }
 }
@@ -137,10 +138,16 @@ fn make_chunks(total: usize, cfg: &EngineCfg, workers: usize) -> Vec<Chunk> {
     if total == 0 {
         return vec![];
     }
-    let target = workers * cfg.chunks_per_worker;
+    // Below the pooled cutoff a sweep is not worth fanning out at all
+    // (0 = disabled: the grain floor alone decides, the historical
+    // behaviour).
+    if total <= cfg.tuning.pooled_cutoff {
+        return vec![Chunk { start: 0, len: total }];
+    }
+    let target = workers * cfg.tuning.chunks_per_worker;
     let mut size = (total + target - 1) / target.max(1);
-    if size < cfg.grain {
-        size = cfg.grain;
+    if size < cfg.tuning.grain {
+        size = cfg.tuning.grain;
     }
     let mut chunks = Vec::with_capacity((total + size - 1) / size);
     let mut s = 0;
@@ -257,7 +264,7 @@ fn exec_step(
             let fx = Tape::from_ftree_with(tree, cfg.backend)?;
             let mut out = vec![0.0f64; *rows];
             // chunk over output rows
-            let row_grain = (cfg.grain / cols.max(&1)).max(1);
+            let row_grain = (cfg.tuning.grain / cols.max(&1)).max(1);
             let chunks = make_row_chunks(*rows, row_grain, cfg, workers);
             let fpe = tree.flops_per_elem() + 1.0;
             let work_elems = rows * cols;
@@ -276,7 +283,7 @@ fn exec_step(
         Step::ReduceCols { red, tree, rows, cols, .. } => {
             let fx = Tape::from_ftree_with(tree, cfg.backend)?;
             let mut out = vec![red.identity(); *cols];
-            let col_grain = cfg.grain.min(*cols).max(1);
+            let col_grain = cfg.tuning.grain.min(*cols).max(1);
             let chunks = make_row_chunks(*cols, col_grain, cfg, workers);
             let fpe = tree.flops_per_elem() + 1.0;
             let work_elems = rows * cols;
@@ -329,11 +336,11 @@ fn exec_step(
             // panels so the virtual-time simulator can redistribute
             // them over the full 40-thread node model.
             let target = if cfg.record {
-                (workers * cfg.chunks_per_worker).max(40)
+                (workers * cfg.tuning.chunks_per_worker).max(40)
             } else {
-                workers * cfg.chunks_per_worker
+                workers * cfg.tuning.chunks_per_worker
             };
-            let chunks: Vec<Chunk> = crate::sparse::nnz_panels(&segp_arc, target, cfg.grain)
+            let chunks: Vec<Chunk> = crate::sparse::nnz_panels(&segp_arc, target, cfg.tuning.grain)
                 .into_iter()
                 .map(|(start, len)| Chunk { start, len })
                 .collect();
@@ -385,7 +392,7 @@ fn exec_step(
                 flops: fl,
                 bytes: by,
                 chunk_secs,
-                parallelizable: la + lb > cfg.grain,
+                parallelizable: la + lb > cfg.tuning.grain,
             });
             (out, rec)
         }
@@ -573,7 +580,10 @@ fn exec_step(
             drop(op);
             let mut outv = vec![0.0f64; out_len];
             // map grain: elemental calls are much heavier than stream ops
-            let map_cfg = EngineCfg { grain: (cfg.grain / 16).max(64), ..*cfg };
+            let map_cfg = EngineCfg {
+                tuning: tuning::Tuning { grain: (cfg.tuning.grain / 16).max(64), ..cfg.tuning },
+                ..*cfg
+            };
             let chunks = make_chunks(out_len, &map_cfg, workers);
             let optr = OutPtr(outv.as_mut_ptr());
             let f64refs: Vec<&[f64]> = f64s.iter().map(|a| a.as_slice()).collect();
@@ -637,7 +647,7 @@ pub(crate) fn validate_segp(segp: &[i64], rows: usize, nnz: usize) -> crate::Res
 }
 
 fn make_row_chunks(total: usize, grain: usize, cfg: &EngineCfg, workers: usize) -> Vec<Chunk> {
-    let sub = EngineCfg { grain, ..*cfg };
+    let sub = EngineCfg { tuning: tuning::Tuning { grain, ..cfg.tuning }, ..*cfg };
     make_chunks(total, &sub, workers)
 }
 

@@ -1,0 +1,236 @@
+//! Consolidated tuning constants for every lowering the engine and the
+//! serving path choose between.
+//!
+//! Before this module the knobs were scattered: the tape block size
+//! lived in `eval.rs`, dgemm panel heights in `kernels/dgemm.rs`, the
+//! chunk fan-out in `Context::try_force`, the serve batch ceiling in
+//! `ServeConfig`, and the segmented-spmv path choice was implicit in
+//! whether a caller passed `runs_hint`. The plan explorer
+//! ([`crate::coordinator::passes::explore`]) varies these parameters to
+//! enumerate candidate lowerings, so they live in one [`Tuning`] struct
+//! threaded through [`super::EngineCfg`]; the defaults reproduce the
+//! pre-explorer hard-coded behaviour bit for bit.
+
+use crate::{Error, Result};
+
+/// Tape evaluation block length (elements per register lane).
+///
+/// A compile-time constant — the tape register file is laid out as
+/// `n_scratch × BLOCK` lanes — so it is not runtime-explorable; it
+/// lives here so every sizing constant has one home. 2048 elements =
+/// 16 KiB per lane: half of a typical 32 KiB L1D, leaving room for two
+/// streaming operands.
+pub const BLOCK: usize = 2048;
+
+/// Which segmented-reduction path [`super::eval::SegTape`] dispatches.
+///
+/// All three paths are bit-identical by contract (they share the
+/// `RedOp::fold_segment_chunk` association), so forcing one is always
+/// safe — only the per-element cost changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SegPath {
+    /// Capture-time heuristic: fused superinstruction when the spmv
+    /// pattern matches, contiguity runs when the caller hints them,
+    /// blocked tape otherwise (the pre-explorer behaviour).
+    #[default]
+    Auto,
+    /// Force the general blocked tape-fill path.
+    Blocked,
+    /// Force the fused `GatherMulSegSum` superinstruction (falls back
+    /// to blocked when the pattern did not match).
+    Fused,
+    /// Force contiguity-run detection even without a caller hint
+    /// (falls back to fused/blocked when impossible).
+    Runs,
+}
+
+impl SegPath {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SegPath::Auto => "auto",
+            SegPath::Blocked => "blocked",
+            SegPath::Fused => "fused",
+            SegPath::Runs => "runs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SegPath> {
+        match s {
+            "auto" => Ok(SegPath::Auto),
+            "blocked" => Ok(SegPath::Blocked),
+            "fused" => Ok(SegPath::Fused),
+            "runs" => Ok(SegPath::Runs),
+            other => Err(Error::Invalid(format!("unknown seg path {other:?}"))),
+        }
+    }
+}
+
+/// Every runtime-tunable lowering parameter, in one place.
+///
+/// `Default` reproduces the historical hard-coded values exactly; the
+/// explorer produces non-default instances per (kernel, shape,
+/// backend) and the plan store persists them as `k=v` lists
+/// ([`Tuning::to_kv`] / [`Tuning::from_kv`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tuning {
+    /// Minimum elements per pool chunk (was `Options::grain`'s
+    /// hard-coded default).
+    pub grain: usize,
+    /// Target chunks per pool worker — load-balancing slack (was
+    /// hard-coded `4` in `Context::try_force`).
+    pub chunks_per_worker: usize,
+    /// Total elements below which a parallel-mode sweep stays serial
+    /// anyway (`0` = disabled, the historical behaviour: the grain
+    /// floor alone decides).
+    pub pooled_cutoff: usize,
+    /// Segmented-reduction path override.
+    pub seg_path: SegPath,
+    /// dgemm row-panel height (`MC`): rows of A packed per macro-tile.
+    pub dgemm_mc: usize,
+    /// dgemm depth-panel size (`KC`).
+    pub dgemm_kc: usize,
+    /// dgemm column-panel width (`NC`).
+    pub dgemm_nc: usize,
+    /// Serve batch-coalescing ceiling (was `ServeConfig::max_batch`'s
+    /// hard-coded default).
+    pub max_batch: usize,
+    /// Serve batch-coalescing cost budget: a dispatcher stops growing a
+    /// batch when the members' estimated cost exceeds the nearest
+    /// deadline slack plus this many nanoseconds.
+    pub coalesce_budget_ns: u64,
+}
+
+impl Default for Tuning {
+    fn default() -> Self {
+        Tuning {
+            grain: 4096,
+            chunks_per_worker: 4,
+            pooled_cutoff: 0,
+            seg_path: SegPath::Auto,
+            dgemm_mc: 128,
+            dgemm_kc: 256,
+            dgemm_nc: 512,
+            max_batch: 32,
+            coalesce_budget_ns: 0,
+        }
+    }
+}
+
+impl Tuning {
+    /// Serialise as a `k=v,…` list (only the fields that differ from
+    /// default, so stores stay small and forward-readable).
+    pub fn to_kv(&self) -> String {
+        let d = Tuning::default();
+        let mut parts: Vec<String> = Vec::new();
+        if self.grain != d.grain {
+            parts.push(format!("grain={}", self.grain));
+        }
+        if self.chunks_per_worker != d.chunks_per_worker {
+            parts.push(format!("cpw={}", self.chunks_per_worker));
+        }
+        if self.pooled_cutoff != d.pooled_cutoff {
+            parts.push(format!("cutoff={}", self.pooled_cutoff));
+        }
+        if self.seg_path != d.seg_path {
+            parts.push(format!("seg={}", self.seg_path.as_str()));
+        }
+        if self.dgemm_mc != d.dgemm_mc {
+            parts.push(format!("mc={}", self.dgemm_mc));
+        }
+        if self.dgemm_kc != d.dgemm_kc {
+            parts.push(format!("kc={}", self.dgemm_kc));
+        }
+        if self.dgemm_nc != d.dgemm_nc {
+            parts.push(format!("nc={}", self.dgemm_nc));
+        }
+        if self.max_batch != d.max_batch {
+            parts.push(format!("batch={}", self.max_batch));
+        }
+        if self.coalesce_budget_ns != d.coalesce_budget_ns {
+            parts.push(format!("coalesce={}", self.coalesce_budget_ns));
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    /// Parse a `k=v,…` list produced by [`Tuning::to_kv`]; unknown keys
+    /// are a hard error so a corrupted store line cannot silently load
+    /// as defaults.
+    pub fn from_kv(s: &str) -> Result<Tuning> {
+        let mut t = Tuning::default();
+        if s == "-" || s.is_empty() {
+            return Ok(t);
+        }
+        for kv in s.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| Error::Invalid(format!("tuning entry {kv:?} is not k=v")))?;
+            let num = || -> Result<usize> {
+                v.parse().map_err(|_| Error::Invalid(format!("tuning {k}={v:?}: not a number")))
+            };
+            match k {
+                "grain" => t.grain = num()?,
+                "cpw" => t.chunks_per_worker = num()?,
+                "cutoff" => t.pooled_cutoff = num()?,
+                "seg" => t.seg_path = SegPath::parse(v)?,
+                "mc" => t.dgemm_mc = num()?,
+                "kc" => t.dgemm_kc = num()?,
+                "nc" => t.dgemm_nc = num()?,
+                "batch" => t.max_batch = num()?,
+                "coalesce" => t.coalesce_budget_ns = num()? as u64,
+                other => {
+                    return Err(Error::Invalid(format!("unknown tuning key {other:?}")));
+                }
+            }
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_historical_constants() {
+        let t = Tuning::default();
+        assert_eq!(t.grain, 4096);
+        assert_eq!(t.chunks_per_worker, 4);
+        assert_eq!(t.dgemm_mc, 128);
+        assert_eq!(t.dgemm_kc, 256);
+        assert_eq!(t.dgemm_nc, 512);
+        assert_eq!(t.max_batch, 32);
+        assert_eq!(t.seg_path, SegPath::Auto);
+        assert_eq!(t.to_kv(), "-");
+    }
+
+    #[test]
+    fn kv_round_trip() {
+        let t = Tuning {
+            grain: 1024,
+            chunks_per_worker: 8,
+            pooled_cutoff: 9000,
+            seg_path: SegPath::Runs,
+            dgemm_mc: 64,
+            dgemm_kc: 128,
+            dgemm_nc: 256,
+            max_batch: 16,
+            coalesce_budget_ns: 5000,
+        };
+        let kv = t.to_kv();
+        assert_eq!(Tuning::from_kv(&kv).unwrap(), t);
+        assert_eq!(Tuning::from_kv("-").unwrap(), Tuning::default());
+        assert_eq!(Tuning::from_kv("seg=fused").unwrap().seg_path, SegPath::Fused);
+    }
+
+    #[test]
+    fn kv_rejects_garbage() {
+        assert!(Tuning::from_kv("grain=abc").is_err());
+        assert!(Tuning::from_kv("nonsense=1").is_err());
+        assert!(Tuning::from_kv("grain").is_err());
+        assert!(SegPath::parse("speedy").is_err());
+    }
+}

@@ -75,8 +75,12 @@ pub struct Options {
     pub in_place: bool,
     /// Structural CSE over each pending region before planning.
     pub cse: bool,
-    /// Minimum elements per parallel chunk.
-    pub grain: usize,
+    /// Consolidated lowering parameters (chunk grain and fan-out,
+    /// segmented-spmv path, panel sizes) — see
+    /// [`engine::tuning::Tuning`]. The plan explorer varies these per
+    /// (kernel, shape, backend); defaults reproduce the historical
+    /// hard-coded behaviour.
+    pub tuning: engine::tuning::Tuning,
     /// Record per-chunk timings for the scaling simulator.
     pub record: bool,
     /// Kernel backend selection (the vector half of the paper's
@@ -95,7 +99,7 @@ impl Default for Options {
             fusion: true,
             in_place: true,
             cse: false,
-            grain: 4096,
+            tuning: engine::tuning::Tuning::default(),
             record: false,
             backend: BackendSel::Auto,
         }
@@ -242,11 +246,10 @@ impl Context {
                 OptLevel::O2 => Mode::Serial,
                 OptLevel::O3 => Mode::Parallel,
             },
-            grain: opts.grain,
-            chunks_per_worker: 4,
             record: opts.record,
             in_place: opts.in_place,
             backend: engine::backend::select(opts.backend),
+            tuning: opts.tuning,
         };
         // Attach to the shared pool for O3 (interned per worker count;
         // threads persist across dispatches and across contexts).
@@ -295,7 +298,7 @@ mod tests {
             let ctx = Context::parallel(4);
             // Small grain to force multiple chunks even at this size.
             let mut o = ctx.options();
-            o.grain = 256;
+            o.tuning.grain = 256;
             ctx.set_options(o);
             let a = ctx.bind1(&xs);
             ((&a * &a) + &a).to_vec()

@@ -1,0 +1,290 @@
+//! Cost-based plan exploration — the capture-time auto-optimiser.
+//!
+//! ArBB's JIT picks lowerings (fusion, vectorisation strategy, blocking)
+//! at capture time with a machine model baked into the compiler. This
+//! pass reproduces that choice point explicitly: per **(kernel, shape,
+//! backend)** it enumerates the alternative lowerings the engine
+//! actually has —
+//!
+//!  * the three bit-identical segmented-spmv paths (blocked tape /
+//!    fused gather-multiply-sum / contiguity runs),
+//!  * dgemm row-panel granularity (`MC`),
+//!  * the pooled-vs-serial chunking threshold,
+//!  * batch-coalescing cutoffs for the serving scheduler,
+//!
+//! — scores them with the calibrated [`CostModel`] (per-opcode-class
+//! ns/element, measured once per backend at startup), and memoizes the
+//! winner in a [`Memo`]. The serving layer ([`crate::serve`]) probes the
+//! frontrunners on live requests, feeds measured ns/element back into
+//! the memo, and re-explores when measurement drifts ≥2× from the
+//! estimate ([`drifted`]). The memo and the calibration constants
+//! persist across restarts via [`crate::runtime::planstore`].
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::engine::cost::CostModel;
+use crate::coordinator::engine::tuning::SegPath;
+use crate::coordinator::shape::{DType, Shape};
+use crate::obs::profile::OpClass;
+
+/// Measured-vs-estimated drift ratio that triggers re-exploration.
+pub const DRIFT_RATIO: f64 = 2.0;
+
+/// Assumed fork-join dispatch overhead (ns) when deriving the
+/// pooled-vs-serial cutoff. A barrier on the warm shared pool costs on
+/// the order of tens of microseconds end to end; the cutoff only needs
+/// the right order of magnitude to keep tiny containers serial.
+pub const FORK_JOIN_NS: f64 = 20_000.0;
+
+/// Row-panel heights the dgemm exploration considers.
+pub const DGEMM_MC_CANDIDATES: [usize; 4] = [32, 64, 128, 256];
+
+/// Stable, human-readable signature of an argument list — part of the
+/// memo key (shapes change the captured plan, so they key separately).
+pub fn sig_string(args: &[(DType, Shape)]) -> String {
+    let mut s = String::new();
+    for (i, (dt, sh)) in args.iter().enumerate() {
+        if i > 0 {
+            s.push(';');
+        }
+        let d = match dt {
+            DType::F64 => "f",
+            DType::I64 => "i",
+        };
+        match sh {
+            Shape::Scalar => s.push_str(&format!("{d}0")),
+            Shape::D1(n) => s.push_str(&format!("{d}1:{n}")),
+            Shape::D2 { rows, cols } => s.push_str(&format!("{d}2:{rows}x{cols}")),
+        }
+    }
+    if s.is_empty() {
+        s.push('-');
+    }
+    s
+}
+
+/// Memo key: one exploration decision per (kernel, backend, signature).
+pub fn memo_key(kernel: &str, backend: &str, sig: &str) -> String {
+    format!("{kernel}|{backend}|{sig}")
+}
+
+/// One memoized exploration decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoEntry {
+    /// Winning lowering as a [`Tuning`](crate::coordinator::engine::tuning::Tuning)
+    /// `k=v` string (`"-"` = the default lowering).
+    pub variant: String,
+    /// Cost-model estimate for the winner.
+    pub est_ns_per_elem: f64,
+    /// Probe/runtime measurement for the winner (EWMA once serving
+    /// feedback arrives; equals the probe at exploration time).
+    pub measured_ns_per_elem: f64,
+    /// Plan generation this decision produced (bumped on every
+    /// re-exploration hot swap, so stats can prove a swap happened).
+    pub generation: u64,
+    /// Set by the drift check; the next resolution for this key
+    /// re-explores instead of trusting the memo.
+    pub stale: bool,
+}
+
+/// The exploration memo: every decision taken so far, keyed by
+/// [`memo_key`]. `BTreeMap` so persistence ([`crate::runtime::planstore`])
+/// is deterministic.
+#[derive(Debug, Default, Clone)]
+pub struct Memo {
+    pub entries: BTreeMap<String, MemoEntry>,
+}
+
+impl Memo {
+    pub fn get(&self, key: &str) -> Option<&MemoEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn insert(&mut self, key: String, e: MemoEntry) {
+        self.entries.insert(key, e);
+    }
+
+    /// Flag a key for re-exploration (the drift check's side of the
+    /// feedback loop). Returns whether the key existed.
+    pub fn mark_stale(&mut self, key: &str) -> bool {
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.stale = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Has runtime measurement drifted far enough from the estimate to
+/// re-explore? Symmetric: a plan 2× slower *or* 2× faster than modelled
+/// both mean the model's ranking for this key is unreliable.
+pub fn drifted(est_ns_per_elem: f64, measured_ns_per_elem: f64) -> bool {
+    if est_ns_per_elem <= 0.0 || measured_ns_per_elem <= 0.0 {
+        return false;
+    }
+    let r = measured_ns_per_elem / est_ns_per_elem;
+    !(1.0 / DRIFT_RATIO..DRIFT_RATIO).contains(&r)
+}
+
+/// Candidate forced paths for a segmented reduction whose
+/// default-dispatch (best-available) path class is `best`. The default
+/// dispatch prefers runs > fused > blocked; exploration checks whether
+/// the cost model (and the probes) actually agree. `Auto` keeps the
+/// default; forcing never *upgrades* (a path the tape cannot take is a
+/// graceful no-op), so the candidate set shrinks with capability.
+pub fn seg_candidates(best: OpClass) -> Vec<SegPath> {
+    match best {
+        OpClass::SegRuns => vec![SegPath::Auto, SegPath::Fused, SegPath::Blocked],
+        OpClass::SegFused => vec![SegPath::Auto, SegPath::Blocked],
+        _ => vec![SegPath::Auto],
+    }
+}
+
+/// The opcode class a segmented reduction runs as when `forced` is
+/// applied to a tape whose best-available path is `best`.
+pub fn seg_path_class(best: OpClass, forced: SegPath) -> OpClass {
+    match forced {
+        SegPath::Auto => best,
+        SegPath::Runs => {
+            // Runs cannot be forced into existence; only kept.
+            if best == OpClass::SegRuns {
+                OpClass::SegRuns
+            } else {
+                best
+            }
+        }
+        SegPath::Fused => {
+            if best == OpClass::SegBlocked {
+                OpClass::SegBlocked
+            } else {
+                OpClass::SegFused
+            }
+        }
+        SegPath::Blocked => OpClass::SegBlocked,
+    }
+}
+
+/// Explore dgemm row-panel height for an `m x k * k x n` product on
+/// `workers` threads: returns `(MC, estimated seconds)`. Large panels
+/// amortise packing but can leave workers idle (m=256 with MC=128 is
+/// two panels on four workers); the calibrated model scores both
+/// effects.
+pub fn explore_dgemm(
+    cost: &CostModel,
+    m: usize,
+    k: usize,
+    n: usize,
+    workers: usize,
+) -> (usize, f64) {
+    let mut best = (DGEMM_MC_CANDIDATES[0], f64::INFINITY);
+    for &mc in &DGEMM_MC_CANDIDATES {
+        let est = cost.dgemm_secs(m, k, n, mc, workers);
+        if est < best.1 {
+            best = (mc, est);
+        }
+    }
+    best
+}
+
+/// Pooled-vs-serial threshold: containers below this element count run
+/// serially (one chunk) because the estimated element-wise work is
+/// cheaper than a fork-join dispatch.
+pub fn pooled_cutoff(cost: &CostModel) -> usize {
+    (FORK_JOIN_NS / cost.ns_for(OpClass::Bin)) as usize
+}
+
+/// Batch-coalescing cutoff for the serving scheduler: with an estimated
+/// per-request cost and a coalescing latency budget, how many same-plan
+/// requests one dispatch round should absorb. A zero budget means
+/// "uncapped" (the scheduler's deadline slack still applies).
+pub fn batch_cutoff(est_req_ns: f64, budget_ns: u64, max_batch: usize) -> usize {
+    if budget_ns == 0 || est_req_ns <= 0.0 {
+        return max_batch.max(1);
+    }
+    ((budget_ns as f64 / est_req_ns) as usize).clamp(1, max_batch.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::profile::N_CLASSES;
+
+    #[test]
+    fn sig_strings_are_stable_and_distinct() {
+        let a = sig_string(&[(DType::F64, Shape::D1(512)), (DType::I64, Shape::D1(513))]);
+        assert_eq!(a, "f1:512;i1:513");
+        let b = sig_string(&[(DType::F64, Shape::D2 { rows: 4, cols: 8 })]);
+        assert_eq!(b, "f2:4x8");
+        assert_eq!(sig_string(&[]), "-");
+        assert_eq!(sig_string(&[(DType::F64, Shape::Scalar)]), "f0");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn drift_is_symmetric_at_2x() {
+        assert!(!drifted(10.0, 10.0));
+        assert!(!drifted(10.0, 19.9));
+        assert!(drifted(10.0, 20.0));
+        assert!(drifted(10.0, 4.9));
+        assert!(!drifted(10.0, 5.1));
+        assert!(!drifted(0.0, 5.0), "uncalibrated estimates never drift");
+    }
+
+    #[test]
+    fn seg_candidates_shrink_with_capability() {
+        assert_eq!(seg_candidates(OpClass::SegRuns).len(), 3);
+        assert_eq!(seg_candidates(OpClass::SegFused).len(), 2);
+        assert_eq!(seg_candidates(OpClass::SegBlocked), vec![SegPath::Auto]);
+    }
+
+    #[test]
+    fn forcing_never_upgrades_a_path() {
+        assert_eq!(seg_path_class(OpClass::SegFused, SegPath::Runs), OpClass::SegFused);
+        assert_eq!(seg_path_class(OpClass::SegBlocked, SegPath::Fused), OpClass::SegBlocked);
+        assert_eq!(seg_path_class(OpClass::SegRuns, SegPath::Blocked), OpClass::SegBlocked);
+        assert_eq!(seg_path_class(OpClass::SegRuns, SegPath::Auto), OpClass::SegRuns);
+    }
+
+    #[test]
+    fn dgemm_exploration_fixes_worker_underutilisation() {
+        let cost = CostModel::from_parts("scalar", [1.0; N_CLASSES]);
+        let (mc, _) = explore_dgemm(&cost, 256, 256, 256, 4);
+        assert!(mc <= 64, "4 workers need >= 4 panels of m=256, got MC={mc}");
+    }
+
+    #[test]
+    fn batch_cutoff_scales_with_request_cost() {
+        assert_eq!(batch_cutoff(1_000.0, 32_000, 64), 32);
+        assert_eq!(batch_cutoff(100_000.0, 32_000, 64), 1);
+        assert_eq!(batch_cutoff(1.0, 0, 64), 64, "zero budget = uncapped");
+    }
+
+    #[test]
+    fn memo_stale_marking() {
+        let mut m = Memo::default();
+        let k = memo_key("spmv", "scalar", "f1:512");
+        assert!(!m.mark_stale(&k));
+        m.insert(
+            k.clone(),
+            MemoEntry {
+                variant: "seg=runs".into(),
+                est_ns_per_elem: 2.0,
+                measured_ns_per_elem: 2.5,
+                generation: 1,
+                stale: false,
+            },
+        );
+        assert!(m.mark_stale(&k));
+        assert!(m.get(&k).unwrap().stale);
+    }
+}

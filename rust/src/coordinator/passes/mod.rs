@@ -8,8 +8,13 @@
 //! * [`constfold`] — scalar constant folding applied at capture time.
 //! * [`cse`] — structural common-subexpression elimination over a pending
 //!   region (optional; ablated in `benches/ablations.rs`).
+//! * [`explore`] — cost-based plan exploration: enumerates alternative
+//!   lowerings per (kernel, shape, backend), scores them with the
+//!   calibrated cost model and memoizes the winner (the serving layer
+//!   probes, feeds runtime measurements back and persists the memo).
 
 pub mod analyze;
 pub mod constfold;
 pub mod cse;
+pub mod explore;
 pub mod fusion;

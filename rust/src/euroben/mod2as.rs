@@ -177,7 +177,7 @@ mod tests {
         let par = {
             let ctx = Context::parallel(4);
             let mut o = ctx.options();
-            o.grain = 64; // force multiple panels at this size
+            o.tuning.grain = 64; // force multiple panels at this size
             ctx.set_options(o);
             let a = bind_csr(&ctx, &m);
             let xv = ctx.bind1(&x);

@@ -58,7 +58,8 @@ struct CPtr(*mut f64);
 unsafe impl Send for CPtr {}
 unsafe impl Sync for CPtr {}
 
-/// Full-control entry: overwrite or accumulate, serial or pooled.
+/// Full-control entry at the default panel sizes: overwrite or
+/// accumulate, serial or pooled.
 #[allow(clippy::too_many_arguments)]
 pub fn dgemm_with(
     m: usize,
@@ -70,42 +71,73 @@ pub fn dgemm_with(
     accumulate: bool,
     pool: Option<&SharedPool>,
 ) {
+    dgemm_with_panels(m, k, n, a, b, c, accumulate, pool, MC, KC, NC)
+}
+
+/// [`dgemm_with`] with caller-chosen cache-panel sizes — the lowering
+/// knob the planner's `explore_dgemm` turns. The default MC=128 splits a
+/// 256-row matrix into only two `ic` row-panels, leaving half of a
+/// 4-worker pool idle; MC=64 restores full occupancy at the cost of
+/// packing B panels twice as often. Panel sizes need not divide the
+/// problem or the MR×NR register tile: packing pads partial micro-panels
+/// with zeros, so any positive `(mc_blk, kc_blk, nc_blk)` is valid.
+#[allow(clippy::too_many_arguments)]
+pub fn dgemm_with_panels(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    accumulate: bool,
+    pool: Option<&SharedPool>,
+    mc_blk: usize,
+    kc_blk: usize,
+    nc_blk: usize,
+) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
+    assert!(mc_blk > 0 && kc_blk > 0 && nc_blk > 0, "panel sizes must be positive");
     if !accumulate {
         c.fill(0.0);
     }
+    // Packed panels hold whole MR×/NR× micro-panels, so round the block
+    // sizes up before sizing the buffers (at the defaults this is a
+    // no-op: 128, 512 are multiples of 4 and 8).
+    let mc_pad = mc_blk.div_ceil(MR) * MR;
+    let nc_pad = nc_blk.div_ceil(NR) * NR;
     // packed B panel: shared read-only by every ic-panel worker
-    let mut bp = vec![0.0f64; KC * NC];
-    let ic_panels = (m + MC - 1) / MC;
+    let mut bp = vec![0.0f64; kc_blk * nc_pad];
+    let ic_panels = m.div_ceil(mc_blk);
     let pooled = matches!(pool, Some(_) if ic_panels > 1);
     // A panels, allocated once per call: one for the serial path, one
     // per row-panel lane for the pooled path (pack_a fully overwrites a
     // lane, so lanes are reused across every (jc, pc) block).
-    let mut ap = vec![0.0f64; if pooled { ic_panels * MC * KC } else { MC * KC }];
+    let lane = mc_pad * kc_blk;
+    let mut ap = vec![0.0f64; if pooled { ic_panels * lane } else { lane }];
     let cptr = CPtr(c.as_mut_ptr());
     let aptr = CPtr(ap.as_mut_ptr());
 
     let mut jc = 0;
     while jc < n {
-        let nc = NC.min(n - jc);
+        let nc = nc_blk.min(n - jc);
         let mut pc = 0;
         while pc < k {
-            let kc = KC.min(k - pc);
+            let kc = kc_blk.min(k - pc);
             pack_b(&mut bp, b, n, pc, jc, kc, nc);
             match pool {
                 Some(p) if pooled => {
                     let bp_ref: &[f64] = &bp;
                     p.run_chunks(ic_panels, &|pi| {
-                        let ic = pi * MC;
-                        let mc = MC.min(m - ic);
+                        let ic = pi * mc_blk;
+                        let mc = mc_blk.min(m - ic);
                         // SAFETY: lane `pi` of the A-panel buffer and
                         // rows [ic, ic+mc) of C are owned exclusively by
                         // this chunk — lanes/panels are disjoint and the
                         // sweep barrier completes before `bp` repacks.
                         let wap = unsafe {
-                            std::slice::from_raw_parts_mut(aptr.0.add(pi * MC * KC), MC * KC)
+                            std::slice::from_raw_parts_mut(aptr.0.add(pi * lane), lane)
                         };
                         pack_a(wap, a, k, ic, pc, mc, kc);
                         let crows = unsafe {
@@ -117,16 +149,16 @@ pub fn dgemm_with(
                 _ => {
                     let mut ic = 0;
                     while ic < m {
-                        let mc = MC.min(m - ic);
+                        let mc = mc_blk.min(m - ic);
                         pack_a(&mut ap, a, k, ic, pc, mc, kc);
                         macro_kernel(&ap, &bp, c, n, ic, jc, mc, nc, kc);
-                        ic += MC;
+                        ic += mc_blk;
                     }
                 }
             }
-            pc += KC;
+            pc += kc_blk;
         }
-        jc += NC;
+        jc += nc_blk;
     }
 }
 
@@ -339,5 +371,61 @@ mod tests {
     #[test]
     fn flops_formula() {
         assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+
+    #[test]
+    fn default_panels_are_the_classic_entry() {
+        // dgemm_with must stay byte-for-byte the MC/KC/NC lowering.
+        let (m, k, n) = (70, 45, 90);
+        let a = rand_mat(m, k, 31);
+        let b = rand_mat(k, n, 32);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        dgemm(m, k, n, &a, &b, &mut c1);
+        dgemm_with_panels(m, k, n, &a, &b, &mut c2, false, None, MC, KC, NC);
+        assert_allclose(&c1, &c2, 0.0, 0.0, "default panels");
+    }
+
+    #[test]
+    fn explored_panels_match_naive() {
+        // Every MC candidate the planner enumerates, plus deliberately
+        // awkward sizes that don't divide the register tile, the panel
+        // grid, or the problem.
+        let (m, k, n) = (137, 83, 111);
+        let a = rand_mat(m, k, 41);
+        let b = rand_mat(k, n, 42);
+        let mut want = vec![0.0; m * n];
+        dgemm_naive(m, k, n, &a, &b, &mut want);
+        for &(mc, kc, nc) in &[
+            (32usize, 256usize, 512usize),
+            (64, 256, 512),
+            (128, 256, 512),
+            (256, 256, 512),
+            (30, 17, 29),
+            (1, 1, 1),
+            (512, 512, 1024),
+        ] {
+            let mut c = vec![0.0; m * n];
+            dgemm_with_panels(m, k, n, &a, &b, &mut c, false, None, mc, kc, nc);
+            assert_allclose(&c, &want, 1e-12, 1e-12, &format!("panels {mc}/{kc}/{nc}"));
+        }
+    }
+
+    #[test]
+    fn pooled_explored_panels_match_serial() {
+        use crate::coordinator::engine::pool::shared;
+        let pool = shared(4);
+        // MC=64 on a 256-row problem: the shape where the planner's
+        // choice beats the default (4 row-panels for 4 workers instead
+        // of 2). Correctness must be exact vs the serial run at the
+        // same panel sizes.
+        let (m, k, n) = (256, 96, 120);
+        let a = rand_mat(m, k, 51);
+        let b = rand_mat(k, n, 52);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        dgemm_with_panels(m, k, n, &a, &b, &mut c1, false, None, 64, KC, NC);
+        dgemm_with_panels(m, k, n, &a, &b, &mut c2, false, Some(&pool), 64, KC, NC);
+        assert_allclose(&c1, &c2, 0.0, 0.0, "pooled explored panels");
     }
 }

@@ -15,6 +15,8 @@ pub mod dgemm;
 pub mod fft;
 pub mod spmv;
 
-pub use dgemm::{dgemm, dgemm_accumulate, dgemm_naive, dgemm_pooled, dgemm_with, gemm_flops};
+pub use dgemm::{
+    dgemm, dgemm_accumulate, dgemm_naive, dgemm_pooled, dgemm_with, dgemm_with_panels, gemm_flops,
+};
 pub use fft::{fft_planned, plan_for, FftPlan};
 pub use spmv::{spmv_flops, spmv_omp1_body, spmv_omp2_body, spmv_opt, spmv_pooled};

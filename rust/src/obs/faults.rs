@@ -238,16 +238,33 @@ pub fn init_from_env() -> Result<()> {
         if spec.trim().is_empty() {
             return Ok(());
         }
-        let seed = std::env::var("PALLAS_FAULTS_SEED")
-            .ok()
-            .and_then(|s| s.trim().parse::<u64>().ok())
-            .unwrap_or(0x5EED);
+        let seed = match std::env::var("PALLAS_FAULTS_SEED") {
+            Ok(raw) => match parse_seed(&raw) {
+                Ok(s) => s,
+                Err(why) => return Err(why),
+            },
+            Err(_) => 0x5EED,
+        };
         install_str(&spec, seed)
     });
     match r {
         Ok(()) => Ok(()),
         Err(e) => Err(Error::Invalid(format!("PALLAS_FAULTS: {e}"))),
     }
+}
+
+/// Strict `PALLAS_FAULTS_SEED` parser: a u64, decimal or `0x`-prefixed
+/// hex. A malformed seed is a hard error (surfaced by
+/// [`init_from_env`]) rather than a silent fall back to the default —
+/// a chaos run with the wrong seed would otherwise look reproducible
+/// while being anything but.
+pub(crate) fn parse_seed(raw: &str) -> Result<u64> {
+    let t = raw.trim();
+    let parsed = match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => t.parse::<u64>(),
+    };
+    parsed.map_err(|e| Error::Invalid(format!("PALLAS_FAULTS_SEED: {t:?} is not a u64 ({e})")))
 }
 
 #[cfg(test)]
@@ -258,6 +275,15 @@ mod tests {
     fn lock() -> std::sync::MutexGuard<'static, ()> {
         static GUARD: Mutex<()> = Mutex::new(());
         GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn seed_parser_is_strict() {
+        assert_eq!(parse_seed("42").unwrap(), 42);
+        assert_eq!(parse_seed(" 0x5EED ").unwrap(), 0x5EED);
+        assert!(parse_seed("lucky").is_err());
+        assert!(parse_seed("").is_err());
+        assert!(parse_seed("-3").is_err());
     }
 
     #[test]

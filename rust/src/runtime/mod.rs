@@ -21,8 +21,10 @@
 //! half", which is exactly what happens).
 
 pub mod artifact;
+pub mod planstore;
 
 pub use artifact::{Artifact, Manifest};
+pub use planstore::PlanStore;
 
 #[cfg(feature = "pjrt")]
 mod pjrt_backend {

@@ -1,0 +1,280 @@
+//! Persistent plan store: exploration memo + cost-model calibration on
+//! disk, so a restarted server skips calibration, exploration and
+//! warmup entirely.
+//!
+//! The format is a versioned, checksummed TSV (hand-rolled like
+//! [`super::artifact`]'s manifest — the crate is dependency-free):
+//!
+//! ```text
+//! # pallas-plan-store v1
+//! calib\t<backend>\t<ns/elem x N_CLASSES>
+//! plan\t<memo key>\t<variant>\t<est>\t<measured>\t<generation>
+//! checksum\t<fnv1a-64 of every preceding line>
+//! ```
+//!
+//! `f64` fields are written with Rust's shortest-round-trip `Display`,
+//! so a load/save cycle is bit-identical. **Any** defect — missing or
+//! wrong checksum, unknown version, truncated line, malformed number —
+//! fails the whole load: the caller logs the reason and falls back to
+//! fresh exploration (a half-trusted store would silently pin stale
+//! lowerings). The path comes from `ServeConfig::plan_store` or the
+//! `PALLAS_PLAN_STORE` environment variable.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::coordinator::passes::explore::{Memo, MemoEntry};
+use crate::obs::profile::N_CLASSES;
+
+/// Format version tag on the first line.
+const HEADER: &str = "# pallas-plan-store v1";
+
+/// On-disk store contents: per-backend calibration constants plus the
+/// exploration memo.
+#[derive(Debug, Default, Clone)]
+pub struct PlanStore {
+    /// ns/element per opcode class, keyed by backend name.
+    pub calib: BTreeMap<String, [f64; N_CLASSES]>,
+    /// Exploration decisions, keyed by
+    /// [`memo_key`](crate::coordinator::passes::explore::memo_key).
+    pub memo: Memo,
+}
+
+/// FNV-1a 64 over the line bytes (including newlines): cheap, stable,
+/// and plenty to catch truncation and bit rot in a config-sized file.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl PlanStore {
+    /// Serialise to the versioned, checksummed text format.
+    pub fn to_text(&self) -> String {
+        let mut body = String::new();
+        body.push_str(HEADER);
+        body.push('\n');
+        for (backend, ns) in &self.calib {
+            body.push_str("calib\t");
+            body.push_str(backend);
+            for v in ns {
+                let _ = write!(body, "\t{v}");
+            }
+            body.push('\n');
+        }
+        for (key, e) in &self.memo.entries {
+            let _ = writeln!(
+                body,
+                "plan\t{key}\t{variant}\t{est}\t{measured}\t{generation}",
+                variant = e.variant,
+                est = e.est_ns_per_elem,
+                measured = e.measured_ns_per_elem,
+                generation = e.generation,
+            );
+        }
+        let sum = fnv1a(body.as_bytes());
+        let _ = writeln!(body, "checksum\t{sum:016x}");
+        body
+    }
+
+    /// Parse the text format. Every defect is a hard `Err` naming the
+    /// line; the caller treats any error as "start fresh".
+    pub fn from_text(text: &str) -> Result<PlanStore, String> {
+        // The checksum line covers every byte before it.
+        let tail = text
+            .rfind("checksum\t")
+            .ok_or_else(|| "missing checksum line".to_string())?;
+        let (body, sumline) = text.split_at(tail);
+        let want = sumline
+            .trim_end()
+            .strip_prefix("checksum\t")
+            .and_then(|h| u64::from_str_radix(h, 16).ok())
+            .ok_or_else(|| format!("malformed checksum line {sumline:?}"))?;
+        let got = fnv1a(body.as_bytes());
+        if got != want {
+            return Err(format!("checksum mismatch: stored {want:016x}, computed {got:016x}"));
+        }
+        let mut lines = body.lines();
+        match lines.next() {
+            Some(h) if h == HEADER => {}
+            Some(h) => return Err(format!("unsupported version header {h:?}")),
+            None => return Err("empty store".into()),
+        }
+        let mut store = PlanStore::default();
+        for (ix, line) in lines.enumerate() {
+            let lineno = ix + 2;
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            match cols[0] {
+                "calib" => {
+                    if cols.len() != 2 + N_CLASSES {
+                        return Err(format!(
+                            "line {lineno}: calib expects {} columns, found {}",
+                            2 + N_CLASSES,
+                            cols.len()
+                        ));
+                    }
+                    let mut ns = [0.0f64; N_CLASSES];
+                    for (i, raw) in cols[2..].iter().enumerate() {
+                        ns[i] = raw.parse::<f64>().map_err(|e| {
+                            format!("line {lineno}: calib class {i}: {raw:?} is not an f64 ({e})")
+                        })?;
+                        if !ns[i].is_finite() || ns[i] < 0.0 {
+                            return Err(format!(
+                                "line {lineno}: calib class {i}: {raw:?} out of range"
+                            ));
+                        }
+                    }
+                    store.calib.insert(cols[1].to_string(), ns);
+                }
+                "plan" => {
+                    if cols.len() != 6 {
+                        return Err(format!(
+                            "line {lineno}: plan expects 6 columns, found {}",
+                            cols.len()
+                        ));
+                    }
+                    let num = |raw: &str, what: &str| -> Result<f64, String> {
+                        let v = raw.parse::<f64>().map_err(|e| {
+                            format!("line {lineno}: {what}: {raw:?} is not an f64 ({e})")
+                        })?;
+                        if !v.is_finite() || v < 0.0 {
+                            return Err(format!("line {lineno}: {what}: {raw:?} out of range"));
+                        }
+                        Ok(v)
+                    };
+                    let entry = MemoEntry {
+                        variant: cols[2].to_string(),
+                        est_ns_per_elem: num(cols[3], "est")?,
+                        measured_ns_per_elem: num(cols[4], "measured")?,
+                        generation: cols[5].parse::<u64>().map_err(|e| {
+                            format!("line {lineno}: generation: {:?} is not a u64 ({e})", cols[5])
+                        })?,
+                        // Persisted decisions start trusted; runtime
+                        // drift re-flags them if needed.
+                        stale: false,
+                    };
+                    store.memo.insert(cols[1].to_string(), entry);
+                }
+                other => return Err(format!("line {lineno}: unknown record type {other:?}")),
+            }
+        }
+        Ok(store)
+    }
+
+    /// Load from `path`. `Ok(None)` when the file does not exist (first
+    /// run); `Err` for any unreadable or corrupt store.
+    pub fn load(path: impl AsRef<Path>) -> Result<Option<PlanStore>, String> {
+        let path = path.as_ref();
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::from_text(&text).map(Some),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(format!("cannot read {}: {e}", path.display())),
+        }
+    }
+
+    /// Atomically persist to `path` (write-to-temp + rename, so a crash
+    /// mid-save never leaves a torn store for the next start to trip
+    /// over).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_text())
+            .map_err(|e| format!("cannot write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("cannot rename {} -> {}: {e}", tmp.display(), path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PlanStore {
+        let mut s = PlanStore::default();
+        let mut ns = [0.0f64; N_CLASSES];
+        for (i, v) in ns.iter_mut().enumerate() {
+            *v = 0.125 + i as f64 * 0.3; // exact in binary + decimal mix
+        }
+        s.calib.insert("scalar".into(), ns);
+        s.memo.insert(
+            "spmv|scalar|f1:512".into(),
+            MemoEntry {
+                variant: "seg=runs".into(),
+                est_ns_per_elem: 2.0613e-1,
+                measured_ns_per_elem: 0.3333333333333333,
+                generation: 3,
+                stale: true, // must NOT persist as stale
+            },
+        );
+        s
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let s = sample();
+        let text = s.to_text();
+        let back = PlanStore::from_text(&text).unwrap();
+        assert_eq!(back.calib, s.calib);
+        let e = back.memo.get("spmv|scalar|f1:512").unwrap();
+        let orig = s.memo.get("spmv|scalar|f1:512").unwrap();
+        assert_eq!(e.variant, orig.variant);
+        assert_eq!(e.est_ns_per_elem.to_bits(), orig.est_ns_per_elem.to_bits());
+        assert_eq!(e.measured_ns_per_elem.to_bits(), orig.measured_ns_per_elem.to_bits());
+        assert_eq!(e.generation, orig.generation);
+        assert!(!e.stale, "staleness is runtime state, not persisted");
+        // And the re-serialisation is bit-identical text.
+        let mut s2 = s.clone();
+        s2.memo.entries.get_mut("spmv|scalar|f1:512").unwrap().stale = false;
+        assert_eq!(back.to_text(), s2.to_text());
+    }
+
+    #[test]
+    fn corrupt_stores_are_rejected() {
+        let text = sample().to_text();
+        // Flip one byte in the body.
+        let mut bad = text.clone().into_bytes();
+        bad[HEADER.len() + 10] ^= 0x01;
+        let bad = String::from_utf8(bad).unwrap();
+        assert!(PlanStore::from_text(&bad).unwrap_err().contains("checksum"));
+        // Truncate mid-file (checksum line gone).
+        let cut = &text[..text.len() / 2];
+        assert!(PlanStore::from_text(cut).is_err());
+        // Wrong version header.
+        let v2 = text.replace("v1", "v9");
+        assert!(PlanStore::from_text(&v2).is_err());
+        // Garbage entirely.
+        assert!(PlanStore::from_text("hello\nworld\n").is_err());
+        assert!(PlanStore::from_text("").is_err());
+    }
+
+    #[test]
+    fn load_missing_file_is_none_not_error() {
+        let r = PlanStore::load("/nonexistent/dir/plan.store");
+        // Missing *file* is Ok(None); an unreadable path is an Err —
+        // either way, no panic.
+        match r {
+            Ok(None) | Err(_) => {}
+            Ok(Some(_)) => panic!("phantom store"),
+        }
+    }
+
+    #[test]
+    fn save_load_disk_round_trip() {
+        let dir = std::env::temp_dir().join(format!("pallas-planstore-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.store");
+        let s = sample();
+        s.save(&path).unwrap();
+        let back = PlanStore::load(&path).unwrap().expect("saved store loads");
+        assert_eq!(back.calib, s.calib);
+        assert_eq!(back.memo.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

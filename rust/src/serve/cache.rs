@@ -393,7 +393,7 @@ impl PlanCache {
 /// `gather`/`map`. Structural index data (CSR layout, permutations)
 /// should be *baked* — bound inside the builder — not passed as
 /// parameters.
-fn placeholders(key: &PlanKey) -> Vec<Data> {
+pub(crate) fn placeholders(key: &PlanKey) -> Vec<Data> {
     let mut rng = XorShift64::new(0x5eed_0001 ^ (key.kernel as u64).wrapping_mul(0x9e37_79b9));
     key.args
         .iter()
@@ -478,7 +478,10 @@ pub fn capture(ctx: &Context, builder: &KernelFn, key: &PlanKey) -> Result<Arc<C
         passes::cse::cse(&root);
     }
     let p = plan(&root, PlanOptions { fusion: opts.fusion, in_place: opts.in_place });
-    let mut cp = exec::compile(&p, &params, &root)?;
+    // The context's tuning carries the plan explorer's chosen lowering
+    // (segmented path, panel sizes); default tuning reproduces the
+    // historical hard-coded dispatch.
+    let mut cp = exec::compile_with(&p, &params, &root, &opts.tuning)?;
 
     // Verify the compiled replay against the regular engine on the
     // placeholder inputs — catches compile bugs and any capture

@@ -52,6 +52,7 @@ use crate::obs::profile::{self, LocalBlock, OpClass, PlanProfile};
 use crate::coordinator::engine::eval::{
     with_scratch, ILeafBind, Instr, KTree, LeafBind, Scratch, SegTape, TapeProgram, BLOCK,
 };
+use crate::coordinator::engine::tuning::Tuning;
 use crate::coordinator::engine::validate_segp;
 use crate::coordinator::map::{Elemental, MapArgs};
 use crate::coordinator::program::Program;
@@ -275,6 +276,21 @@ pub struct ArenaStats {
     pub arenas_created: u64,
 }
 
+/// Cost-relevant features of one compiled step, consumed by the plan
+/// explorer's estimator ([`crate::coordinator::passes::explore`]).
+#[derive(Debug, Clone)]
+pub enum StepFeature {
+    /// A fused tape pass over `elems` elements with the given
+    /// per-opcode-class instruction histogram.
+    Tape { hist: [u32; profile::N_CLASSES], elems: usize },
+    /// A segmented reduction running as path class `path` over `nnz`
+    /// non-zeros in `rows` segments.
+    Seg { path: OpClass, rows: usize, nnz: usize },
+    /// A step with no class breakdown (map, gather, scatter,
+    /// set-element): modelled as one generic pass over `elems` elements.
+    Opaque { elems: usize },
+}
+
 /// A capture-once / call-many execution plan: fully owned, `Send + Sync`.
 pub struct CompiledPlan {
     pub(crate) params: Vec<ParamSpec>,
@@ -288,6 +304,10 @@ pub struct CompiledPlan {
     /// Wall seconds spent capturing + optimising + compiling (paid once
     /// per cache miss; repeat invocations pay zero of this).
     pub(crate) build_secs: f64,
+    /// Lowering-variant tag: the non-default [`Tuning`] fields this plan
+    /// was compiled under as a `k=v` string (`"-"` = default lowering).
+    /// Written by the plan explorer into `BENCH_planner.json`.
+    pub(crate) variant: String,
     /// Whole-kernel captured program backing this plan, when the kernel
     /// was registered as a program (`ServerBuilder::program`): a replay
     /// dispatches the entire loop nest through
@@ -323,6 +343,65 @@ impl CompiledPlan {
 
     pub fn build_secs(&self) -> f64 {
         self.build_secs
+    }
+
+    /// Lowering-variant tag (`"-"` = default lowering).
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    /// Cost-relevant features of every step, for the plan explorer's
+    /// estimator ([`crate::coordinator::passes::explore`]).
+    pub fn features(&self) -> Vec<StepFeature> {
+        let mut out = Vec::with_capacity(self.steps.len());
+        for s in &self.steps {
+            match s {
+                CStep::Fused { len, kern, .. } | CStep::Accumulate { len, kern, .. } => {
+                    out.push(StepFeature::Tape { hist: kern.prog.class_histogram(), elems: *len })
+                }
+                CStep::ReduceRows { kern, rows, cols, .. }
+                | CStep::ReduceCols { kern, rows, cols, .. } => out.push(StepFeature::Tape {
+                    hist: kern.prog.class_histogram(),
+                    elems: rows * cols,
+                }),
+                CStep::ReduceAll { kern, len, .. } => {
+                    out.push(StepFeature::Tape { hist: kern.prog.class_histogram(), elems: *len })
+                }
+                CStep::SegReduce { kern, rows, nnz, .. } => out.push(StepFeature::Seg {
+                    path: kern.seg.path_class(),
+                    rows: *rows,
+                    nnz: *nnz,
+                }),
+                CStep::Cat { a, la, b, lb, .. } => {
+                    out.push(StepFeature::Tape { hist: a.prog.class_histogram(), elems: *la });
+                    out.push(StepFeature::Tape { hist: b.prog.class_histogram(), elems: *lb });
+                }
+                CStep::ReplaceCol { kern, rows, .. } => {
+                    out.push(StepFeature::Tape { hist: kern.prog.class_histogram(), elems: *rows })
+                }
+                CStep::ReplaceRow { kern, cols, .. } => {
+                    out.push(StepFeature::Tape { hist: kern.prog.class_histogram(), elems: *cols })
+                }
+                CStep::SetElem { .. } => out.push(StepFeature::Opaque { elems: 1 }),
+                CStep::Gather { len, .. } | CStep::Scatter { len, .. } => {
+                    out.push(StepFeature::Opaque { elems: *len })
+                }
+                CStep::Map { len, .. } => out.push(StepFeature::Opaque { elems: *len }),
+            }
+        }
+        out
+    }
+
+    /// Path class, segment count and non-zero count of the first
+    /// segmented-reduction step, if the plan has one — the explorer's
+    /// "is this an spmv-shaped kernel" probe.
+    pub fn seg_info(&self) -> Option<(OpClass, usize, usize)> {
+        self.steps.iter().find_map(|s| match s {
+            CStep::SegReduce { kern, rows, nnz, .. } => {
+                Some((kern.seg.path_class(), *rows, *nnz))
+            }
+            _ => None,
+        })
     }
 
     pub fn arena_stats(&self) -> ArenaStats {
@@ -368,6 +447,7 @@ pub(crate) fn compiled_from_program(prog: Arc<Program>) -> CompiledPlan {
         root: CSrc::Baked(Data::F64(Arc::new(Vec::new()))),
         out_len,
         build_secs: 0.0,
+        variant: "-".to_string(),
         program: Some(prog),
         arenas: Mutex::new(Vec::new()),
         replays: AtomicU64::new(0),
@@ -452,8 +532,23 @@ impl Compiler {
 }
 
 /// Compile `plan` (produced for the DAG rooted at `root`, with the given
-/// parameter placeholder nodes) into a free-standing [`CompiledPlan`].
+/// parameter placeholder nodes) into a free-standing [`CompiledPlan`]
+/// under the default lowering parameters.
 pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<CompiledPlan> {
+    compile_with(plan, params, root, &Tuning::default())
+}
+
+/// [`compile`] with explicit lowering parameters — the plan explorer's
+/// entry point: `tuning.seg_path` forces one of the bit-identical
+/// segmented-reduction paths (a path the tape cannot take degrades
+/// gracefully to the best it can), and the full `Tuning` is recorded as
+/// the plan's [`CompiledPlan::variant`] tag.
+pub fn compile_with(
+    plan: &Plan,
+    params: &[NodeRef],
+    root: &NodeRef,
+    tuning: &Tuning,
+) -> Result<CompiledPlan> {
     let mut c = Compiler {
         param_ix: params.iter().enumerate().map(|(i, p)| (p.id, i)).collect(),
         temp_ix: HashMap::new(),
@@ -520,6 +615,9 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
                         }
                     }
                 }
+                // Plan-explorer override: force one of the bit-identical
+                // paths (Auto keeps the dispatch above).
+                seg.force_path(tuning.seg_path);
                 CStep::SegReduce {
                     out: slot,
                     kern: CSegKernel { seg, binds, ibinds, param_gathers: Vec::new() },
@@ -600,6 +698,7 @@ pub fn compile(plan: &Plan, params: &[NodeRef], root: &NodeRef) -> Result<Compil
         root: root_src,
         out_len: root.shape.len(),
         build_secs: 0.0,
+        variant: tuning.to_kv(),
         program: None,
         arenas: Mutex::new(Vec::new()),
         replays: AtomicU64::new(0),

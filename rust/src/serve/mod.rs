@@ -131,6 +131,7 @@ pub mod stats;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::coordinator::engine::tuning::Tuning;
 use crate::coordinator::node::{Data, NodeRef};
 use crate::coordinator::shape::{DType, Shape};
 use crate::coordinator::{Context, Mat2, OptLevel, Scal, Vec1, VecI64};
@@ -141,7 +142,10 @@ pub use crate::obs::slo::{SloSpec, SloStatus, SloWindows};
 pub use cache::{Admission, CacheStats, PlanCache, PlanKey, PlanState, QuarantinePolicy};
 pub use error::{RetryPolicy, ServeError, ServeResult};
 pub use exec::{ArenaStats, CompiledPlan};
-pub use scheduler::{Client, SchedulerStats, Server, ServerBuilder, SubmitError, Ticket};
+pub use scheduler::{
+    Client, PlanDecision, PlannerStats, SchedulerStats, Server, ServerBuilder, SubmitError,
+    Ticket,
+};
 pub use stats::{KernelStats, Lane, Segments, ServeStats, ShardStats};
 
 /// A kernel builder: constructs the expression DAG for one request
@@ -251,6 +255,27 @@ pub struct ServeConfig {
     pub cse: bool,
     /// Minimum elements per parallel chunk (capture verification runs).
     pub grain: usize,
+    /// Baseline lowering parameters for captured plans (segmented-spmv
+    /// path, panel sizes, pooled cutoff — see
+    /// [`Tuning`]). The plan explorer varies these per (kernel, shape,
+    /// backend) when [`ServeConfig::planner`] is on; `grain` above is
+    /// folded in for backwards compatibility.
+    pub tuning: Tuning,
+    /// Cost-based plan exploration ([`crate::coordinator::passes::explore`]):
+    /// at first capture of each (kernel, shape, backend) the scheduler
+    /// enumerates alternative lowerings, scores them with the calibrated
+    /// [`cost model`](crate::coordinator::engine::cost::CostModel),
+    /// probe-times the frontrunners on the live request and memoizes the
+    /// winner into the plan cache. Runtime profile drift (≥2× between
+    /// measured and estimated ns/element) triggers re-exploration and a
+    /// hot swap.
+    pub planner: bool,
+    /// Plan-store path: persists the exploration memo and calibration
+    /// constants so a restarted server skips calibration, exploration
+    /// and warmup ([`crate::runtime::planstore`]). `None` consults the
+    /// `PALLAS_PLAN_STORE` environment variable; empty disables
+    /// persistence (exploration still runs, in memory only).
+    pub plan_store: Option<String>,
     /// Observability: metrics histograms, trace ring, tape profiling.
     pub obs: ObsConfig,
     /// Resilience: quarantine policy, deadline slack, fault injection.
@@ -303,6 +328,9 @@ impl Default for ServeConfig {
             fusion: true,
             cse: false,
             grain: 4096,
+            tuning: Tuning::default(),
+            planner: true,
+            plan_store: None,
             obs: ObsConfig::default(),
             resilience: ResilienceConfig::default(),
         }
@@ -326,14 +354,38 @@ impl ServeConfig {
             return self.shards;
         }
         if let Ok(s) = std::env::var("PALLAS_SHARDS") {
-            if let Ok(n) = s.trim().parse::<usize>() {
-                if n > 0 {
-                    return n;
+            match parse_shards(&s) {
+                Ok(n) => return n,
+                Err(why) => {
+                    eprintln!("arbb: ignoring PALLAS_SHARDS={s:?}: {why}; deriving from cores");
                 }
             }
         }
         let logical = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         (logical / 2).max(1).min(self.workers.max(1))
+    }
+
+    /// Resolve the plan-store path: an explicit [`ServeConfig::plan_store`]
+    /// wins, else the `PALLAS_PLAN_STORE` environment variable; empty
+    /// strings mean "no persistence".
+    pub fn effective_plan_store(&self) -> Option<String> {
+        let raw = match &self.plan_store {
+            Some(p) => Some(p.clone()),
+            None => std::env::var("PALLAS_PLAN_STORE").ok(),
+        };
+        raw.filter(|p| !p.trim().is_empty())
+    }
+}
+
+/// Strict `PALLAS_SHARDS` parser: a positive integer or an error saying
+/// why the value was rejected (no silent fallback — see
+/// [`ServeConfig::effective_shards`], which logs and then derives from
+/// physical cores).
+pub(crate) fn parse_shards(raw: &str) -> Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err("shard count must be >= 1".into()),
+        Ok(n) => Ok(n),
+        Err(e) => Err(format!("not an unsigned integer ({e})")),
     }
 }
 
@@ -455,6 +507,16 @@ impl Value {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shards_parser_is_strict() {
+        assert_eq!(parse_shards("4"), Ok(4));
+        assert_eq!(parse_shards(" 2 "), Ok(2));
+        assert!(parse_shards("0").is_err());
+        assert!(parse_shards("four").is_err());
+        assert!(parse_shards("").is_err());
+        assert!(parse_shards("-1").is_err());
+    }
 
     #[test]
     fn arg_constructors() {

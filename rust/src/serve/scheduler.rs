@@ -69,28 +69,34 @@ use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::hash::{Hash, Hasher};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::engine::cost::CostModel;
 use crate::coordinator::engine::pool::panic_message;
+use crate::coordinator::engine::tuning::{SegPath, Tuning};
 use crate::coordinator::node::Data;
+use crate::coordinator::passes::explore::{self, MemoEntry};
 use crate::coordinator::shape::{DType, Shape};
 use crate::coordinator::{Context, Options, OptLevel};
 use crate::obs::flight::NO_KERNEL;
 use crate::obs::http::{Handler as ObsHandler, HttpServer, Response};
+use crate::obs::profile::OpClass;
 use crate::obs::trace::{worker_lane, Outcome};
 use crate::obs::{
     faults, profile, FlightDump, FlightEventKind, FlightRecorder, MetricsSnapshot,
     ProfileSnapshot, SpanEvent, TraceRing,
 };
+use crate::runtime::PlanStore;
 use crate::util::XorShift64;
 use crate::{Error, Result};
 
 use super::cache::{self, Admission, CacheStats, PlanCache, PlanKey, QuarantinePolicy};
 use super::error::{RetryPolicy, ServeError, ServeResult};
-use super::exec::{self, CompiledPlan};
+use super::exec::{self, CompiledPlan, StepFeature};
 use super::pool::{self, SharedPool};
 use super::stats::{KernelStats, Lane, Segments, ServeStats};
 use super::{Arg, KernelFn, ProgramFn, ServeConfig, Value};
@@ -511,6 +517,162 @@ struct PlanStamps {
     cache_hit: bool,
 }
 
+/// Probe replays per candidate lowering during exploration (the probe
+/// takes the minimum, so a couple of repetitions suffice).
+const PROBE_REPS: usize = 3;
+
+/// Replays a watched plan must accumulate before its runtime profile is
+/// trusted for the drift check.
+const DRIFT_MIN_REPLAYS: u64 = 8;
+
+/// EWMA weight on the previous measured ns/element when runtime
+/// feedback arrives (new measurement gets the complement).
+const EWMA_OLD: f64 = 0.75;
+
+/// The cost-based plan explorer's serving-side state: the calibrated
+/// cost model, the exploration memo (shared with the persistent
+/// [`PlanStore`]), the watch list the drift scan walks, and the
+/// counters that prove explorations / memo hits / hot swaps happened.
+struct PlannerState {
+    /// Calibrated ns/element per opcode class for the active backend
+    /// (loaded from the plan store on a warm start).
+    cost: CostModel,
+    /// Persistent contents: per-backend calibration plus the memo.
+    store: Mutex<PlanStore>,
+    /// Where to persist; `None` = in-memory exploration only.
+    store_path: Option<PathBuf>,
+    /// Monotone plan-generation counter; bumped on every hot swap so
+    /// stats can prove a swap happened (in-flight replays hold their
+    /// own `Arc` and stay valid regardless).
+    generation: AtomicU64,
+    /// Full explorations run (candidate recapture + probe rounds). A
+    /// warm-store restart keeps this at zero.
+    explorations: AtomicU64,
+    /// Captures that skipped exploration because the memo already held
+    /// a trusted decision.
+    memo_hits: AtomicU64,
+    /// Re-explorations triggered by drift that swapped the cached plan.
+    swaps: AtomicU64,
+    /// Plans under runtime-feedback watch: memo key → the live plan.
+    /// Weak, so cache eviction frees the plan and the scan just skips.
+    watched: Mutex<Vec<(String, Weak<CompiledPlan>)>>,
+    /// Whether the store supplied calibration for the active backend
+    /// (i.e. this start skipped the calibration pass).
+    warm_start: bool,
+}
+
+impl PlannerState {
+    /// Build the planner: load the store if configured and intact,
+    /// reuse its calibration for the active backend, calibrate fresh
+    /// otherwise. A corrupt store is logged and ignored wholesale.
+    fn build(cfg: &ServeConfig) -> PlannerState {
+        let bk = crate::coordinator::engine::backend::active();
+        let store_path = cfg.effective_plan_store().map(PathBuf::from);
+        let mut store = PlanStore::default();
+        if let Some(p) = &store_path {
+            match PlanStore::load(p) {
+                Ok(Some(s)) => store = s,
+                Ok(None) => {}
+                Err(why) => {
+                    eprintln!(
+                        "serve: ignoring plan store {}: {why}; exploring fresh",
+                        p.display()
+                    );
+                }
+            }
+        }
+        let (cost, warm_start) = match store.calib.get(bk.name()) {
+            Some(ns) => (CostModel::from_parts(bk.name(), *ns), true),
+            None => {
+                let c = CostModel::calibrate(bk);
+                store.calib.insert(bk.name().to_string(), c.ns_per_elem);
+                (c, false)
+            }
+        };
+        let generation =
+            store.memo.entries.values().map(|e| e.generation).max().unwrap_or(0);
+        let st = PlannerState {
+            cost,
+            store: Mutex::new(store),
+            store_path,
+            generation: AtomicU64::new(generation),
+            explorations: AtomicU64::new(0),
+            memo_hits: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            watched: Mutex::new(Vec::new()),
+            warm_start,
+        };
+        if !warm_start {
+            // Persist the calibration immediately: even a server that
+            // restarts before serving anything skips it next time.
+            st.persist();
+        }
+        st
+    }
+
+    /// Write the store to disk (no-op without a configured path; a
+    /// failed save is logged, never fatal — the memo still works in
+    /// memory).
+    fn persist(&self) {
+        if let Some(p) = &self.store_path {
+            if let Err(why) = relock(&self.store).save(p) {
+                eprintln!("serve: cannot persist plan store {}: {why}", p.display());
+            }
+        }
+    }
+
+    /// Put a plan under runtime-feedback watch for its memo key
+    /// (replacing any previous generation of the same key).
+    fn watch(&self, memo_key: &str, plan: &Arc<CompiledPlan>) {
+        let mut w = relock(&self.watched);
+        if let Some(slot) = w.iter_mut().find(|(k, _)| k == memo_key) {
+            slot.1 = Arc::downgrade(plan);
+        } else {
+            w.push((memo_key.to_string(), Arc::downgrade(plan)));
+        }
+    }
+}
+
+/// Estimated total ns for one replay of a compiled plan, from its step
+/// features and the calibrated per-class costs. Opaque steps (gather,
+/// scatter, host maps) are booked at generic binary-op cost — they are
+/// invariant across candidate lowerings, so ranking is unaffected.
+fn estimate_plan_ns(cost: &CostModel, plan: &CompiledPlan) -> f64 {
+    let mut ns = 0.0;
+    for f in plan.features() {
+        match f {
+            StepFeature::Tape { hist, elems } => {
+                ns += cost.tape_ns_per_elem(&hist) * elems as f64;
+            }
+            StepFeature::Seg { path, nnz, .. } => ns += cost.seg_ns(path, nnz),
+            StepFeature::Opaque { elems } => {
+                ns += elems as f64 * cost.ns_for(OpClass::Bin);
+            }
+        }
+    }
+    ns
+}
+
+/// Time one replay-path execution of `plan` on placeholder arguments:
+/// minimum of [`PROBE_REPS`] timed `execute_into` runs (the minimum is
+/// the steady-state replay cost; anything above it is noise). An
+/// execution error — or an injected chaos panic — disqualifies the
+/// candidate with `INFINITY`; the default lowering is always candidate
+/// 0, so a disqualified alternative never loses the kernel.
+fn probe_ns(plan: &Arc<CompiledPlan>, args: &[Data]) -> f64 {
+    let mut out = Vec::new();
+    let mut best = f64::INFINITY;
+    for _ in 0..PROBE_REPS {
+        let t = Instant::now();
+        let r = catch_unwind(AssertUnwindSafe(|| exec::execute_into(plan, args, &mut out)));
+        if !matches!(r, Ok(Ok(()))) {
+            return f64::INFINITY;
+        }
+        best = best.min(t.elapsed().as_nanos() as f64);
+    }
+    best
+}
+
 /// State shared between clients and the shard dispatchers.
 struct Shared {
     names: HashMap<String, usize>,
@@ -535,6 +697,9 @@ struct Shared {
     pools: Vec<Arc<SharedPool>>,
     /// Pool respawn total the obs tick last reported (edge detection).
     respawn_seen: AtomicU64,
+    /// Cost-based plan exploration state (`ServeConfig::planner`);
+    /// `None` = every capture takes the default lowering, as before.
+    planner: Option<PlannerState>,
 }
 
 impl Shared {
@@ -856,11 +1021,25 @@ impl Client {
         crate::coordinator::engine::backend::active().name()
     }
 
-    /// Render the serving report (per-kernel table + cache and
-    /// scheduler lines).
+    /// Render the serving report (per-kernel table + cache, scheduler,
+    /// and planner lines).
     pub fn report(&self) -> String {
         let cache = self.cache_stats();
-        self.shared.stats.report(&cache)
+        let mut out = self.shared.stats.report(&cache);
+        if let Some(st) = self.planner_stats() {
+            out.push_str(&format!(
+                "   planner: {} ({:.1} ms calib), {} explorations, {} memo hits, {} swaps, \
+                 gen {}, {} memoized\n",
+                if st.warm_start { "warm start" } else { "cold start" },
+                st.calib_secs * 1e3,
+                st.explorations,
+                st.memo_hits,
+                st.swaps,
+                st.generation,
+                st.memo_len
+            ));
+        }
+        out
     }
 
     /// Snapshot every serve metric (counters, gauges, segment
@@ -942,6 +1121,103 @@ impl Client {
             })
             .collect()
     }
+
+    /// Live plan-explorer counters; `None` when the planner is off
+    /// (`ServeConfig::planner = false`).
+    pub fn planner_stats(&self) -> Option<PlannerStats> {
+        let pl = self.shared.planner.as_ref()?;
+        Some(PlannerStats {
+            explorations: pl.explorations.load(Ordering::Relaxed),
+            memo_hits: pl.memo_hits.load(Ordering::Relaxed),
+            swaps: pl.swaps.load(Ordering::Relaxed),
+            generation: pl.generation.load(Ordering::Relaxed),
+            memo_len: relock(&pl.store).memo.len(),
+            calib_secs: pl.cost.calib_secs,
+            warm_start: pl.warm_start,
+            backend: pl.cost.backend,
+        })
+    }
+
+    /// Every memoized exploration decision, sorted by memo key
+    /// (`kernel|backend|signature`). Empty when the planner is off.
+    pub fn planner_decisions(&self) -> Vec<PlanDecision> {
+        let Some(pl) = &self.shared.planner else { return Vec::new() };
+        relock(&pl.store)
+            .memo
+            .entries
+            .iter()
+            .map(|(k, e)| PlanDecision {
+                key: k.clone(),
+                variant: e.variant.clone(),
+                est_ns_per_elem: e.est_ns_per_elem,
+                measured_ns_per_elem: e.measured_ns_per_elem,
+                generation: e.generation,
+            })
+            .collect()
+    }
+
+    /// Run one planner drift scan now. The obs tick runs this
+    /// periodically when the observability listener is up; tests and
+    /// benches call it directly for determinism.
+    pub fn planner_tick(&self) {
+        planner_scan(&self.shared);
+    }
+
+    /// Flag every memoized decision for `kernel` as stale, forcing a
+    /// re-exploration (and a cache hot swap) at its next resolution —
+    /// the deterministic trigger for what profile drift does
+    /// organically. Returns how many decisions were flagged.
+    pub fn planner_invalidate(&self, kernel: &str) -> usize {
+        let Some(pl) = &self.shared.planner else { return 0 };
+        let prefix = format!("{kernel}|");
+        let mut store = relock(&pl.store);
+        let mut n = 0;
+        for (k, e) in store.memo.entries.iter_mut() {
+            if k.starts_with(&prefix) {
+                e.stale = true;
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+/// Live plan-explorer counters ([`Client::planner_stats`]).
+#[derive(Debug, Clone)]
+pub struct PlannerStats {
+    /// Full explorations run since start (candidate recapture + probe
+    /// rounds). A warm-plan-store restart keeps this at zero.
+    pub explorations: u64,
+    /// Captures that applied a memoized decision without probing.
+    pub memo_hits: u64,
+    /// Drift-triggered re-explorations that hot-swapped a cached plan.
+    pub swaps: u64,
+    /// Current plan generation (bumped once per hot swap).
+    pub generation: u64,
+    /// Decisions currently memoized.
+    pub memo_len: usize,
+    /// Wall seconds the startup calibration took (`0.0` on a warm
+    /// start — the store supplied the constants).
+    pub calib_secs: f64,
+    /// Whether calibration was loaded from the plan store.
+    pub warm_start: bool,
+    /// Backend the cost model is calibrated for.
+    pub backend: &'static str,
+}
+
+/// One memoized exploration decision ([`Client::planner_decisions`]).
+#[derive(Debug, Clone)]
+pub struct PlanDecision {
+    /// `kernel|backend|signature` memo key.
+    pub key: String,
+    /// Winning lowering as a [`Tuning`] `k=v` list (`"-"` = default).
+    pub variant: String,
+    /// Cost-model estimate, ns per output element.
+    pub est_ns_per_elem: f64,
+    /// Probe measurement (then runtime EWMA), ns per output element.
+    pub measured_ns_per_elem: f64,
+    /// Plan generation the decision produced.
+    pub generation: u64,
 }
 
 /// Registration-time kernel list.
@@ -1033,6 +1309,10 @@ impl ServerBuilder {
         } else {
             (0..n_shards).filter_map(|s| pool::for_shard(s, wps)).collect()
         };
+        // Plan explorer: calibrate (or warm-load) the cost model before
+        // the dispatchers start, so first captures can score candidates.
+        let planner =
+            if self.config.planner { Some(PlannerState::build(&self.config)) } else { None };
         let shared = Arc::new(Shared {
             names,
             stats,
@@ -1049,6 +1329,7 @@ impl ServerBuilder {
             flight: Arc::new(FlightRecorder::new(self.config.obs.flight_capacity)),
             pools,
             respawn_seen: AtomicU64::new(0),
+            planner,
         });
         let builders: Arc<Vec<KernelEntry>> =
             Arc::new(self.kernels.into_iter().map(|(_, f)| f).collect());
@@ -1157,7 +1438,7 @@ fn dispatcher(
         fusion: cfg.fusion,
         in_place: true,
         cse: cfg.cse,
-        grain: cfg.grain,
+        tuning: Tuning { grain: cfg.grain, ..cfg.tuning },
         record: false,
         // Serving captures against the process-wide active backend
         // (PALLAS_BACKEND override included).
@@ -1315,7 +1596,9 @@ fn process_batch(
     }
 }
 
-/// Cache lookup; on a miss, capture + compile + verify and insert.
+/// Cache lookup; on a miss, capture + compile + verify (exploring
+/// alternative lowerings when the planner is on) and insert. A cache
+/// hit whose memo entry was drift-flagged re-explores and hot-swaps.
 /// Returns the plan and whether resolution was a cache hit.
 fn resolve_plan(
     key: &PlanKey,
@@ -1324,6 +1607,26 @@ fn resolve_plan(
     shared: &Arc<Shared>,
 ) -> ServeResult<(Arc<CompiledPlan>, bool)> {
     if let Some(p) = relock(&shared.cache).get(key) {
+        // Runtime feedback closing the loop: a drift-flagged memo entry
+        // re-explores and hot-swaps the cached plan. In-flight replays
+        // hold their own Arc and finish on the old generation; a failed
+        // re-exploration keeps the current plan serving.
+        if let Some(pl) = &shared.planner {
+            let mk = plan_memo_key(shared, pl, key);
+            let stale = relock(&pl.store).memo.get(&mk).is_some_and(|e| e.stale);
+            if stale {
+                if let Some(builder) = builders.get(key.kernel) {
+                    if matches!(builder, KernelEntry::Expr(_)) {
+                        if let Ok(swapped) =
+                            explore_key(key, builder, ctx, pl, &mk, true, shared)
+                        {
+                            relock(&shared.cache).insert(key.clone(), swapped.clone());
+                            return Ok((swapped, true));
+                        }
+                    }
+                }
+            }
+        }
         return Ok((p, true));
     }
     if faults::fire("serve.capture.fail") {
@@ -1337,22 +1640,159 @@ fn resolve_plan(
             key.kernel
         )))
     })?;
-    // A panicking builder must not take the dispatcher down.
+    let plan = match &shared.planner {
+        // Program plans replay an opaque captured loop nest: there is
+        // no alternative lowering to enumerate, so they skip
+        // exploration (as does a disabled planner).
+        Some(pl) if matches!(builder, KernelEntry::Expr(_)) => {
+            let mk = plan_memo_key(shared, pl, key);
+            explore_key(key, builder, ctx, pl, &mk, false, shared)?
+        }
+        _ => capture_with(key, builder, ctx, None, shared)?,
+    };
+    relock(&shared.cache).insert(key.clone(), plan.clone());
+    Ok((plan, false))
+}
+
+/// The memo key for a plan-cache key: kernel name, cost-model backend
+/// and the argument-shape signature.
+fn plan_memo_key(shared: &Shared, pl: &PlannerState, key: &PlanKey) -> String {
+    explore::memo_key(
+        &shared.kernel_name(key.kernel),
+        pl.cost.backend,
+        &explore::sig_string(&key.args),
+    )
+}
+
+/// Capture `key` through `builder`, optionally with a candidate
+/// [`Tuning`] temporarily installed in the context (restored after).
+/// A panicking builder must not take the dispatcher down.
+fn capture_with(
+    key: &PlanKey,
+    builder: &KernelEntry,
+    ctx: &Context,
+    tuning: Option<Tuning>,
+    shared: &Arc<Shared>,
+) -> ServeResult<Arc<CompiledPlan>> {
+    let saved = ctx.options();
+    if let Some(t) = tuning {
+        ctx.set_options(Options { tuning: t, ..saved });
+    }
     let captured = catch_unwind(AssertUnwindSafe(|| match builder {
         KernelEntry::Expr(b) => cache::capture(ctx, b, key),
         KernelEntry::Prog(b) => cache::capture_program(b, key),
     }));
-    let plan = match captured {
-        Ok(r) => r.map_err(ServeError::Request)?,
-        Err(payload) => {
-            return Err(ServeError::Panicked {
-                plan: shared.kernel_name(key.kernel),
-                message: panic_message(&*payload),
-            })
+    if tuning.is_some() {
+        ctx.set_options(saved);
+    }
+    match captured {
+        Ok(r) => r.map_err(ServeError::Request),
+        Err(payload) => Err(ServeError::Panicked {
+            plan: shared.kernel_name(key.kernel),
+            message: panic_message(&*payload),
+        }),
+    }
+}
+
+/// Resolve the winning lowering for `key`.
+///
+/// A trusted memo entry short-circuits: the recorded variant is
+/// recaptured directly — no candidate enumeration, no probes (this is
+/// what a warm plan store buys a restarted server). Otherwise a full
+/// exploration runs: capture the default lowering, enumerate the
+/// alternative segmented-reduction paths the tape actually supports
+/// ([`explore::seg_candidates`]), score every candidate with the
+/// calibrated cost model, probe-time each on placeholder arguments
+/// over the real replay path, and memoize (and persist) the fastest.
+/// With `reexplore` the call is a drift-triggered hot swap: the plan
+/// generation is bumped and the swap counted.
+fn explore_key(
+    key: &PlanKey,
+    builder: &KernelEntry,
+    ctx: &Context,
+    pl: &PlannerState,
+    memo_key: &str,
+    reexplore: bool,
+    shared: &Arc<Shared>,
+) -> ServeResult<Arc<CompiledPlan>> {
+    let base = ctx.options().tuning;
+    if !reexplore {
+        let hit = relock(&pl.store).memo.get(memo_key).filter(|e| !e.stale).cloned();
+        if let Some(e) = hit {
+            let plan = match Tuning::from_kv(&e.variant) {
+                Ok(t) => capture_with(key, builder, ctx, Some(t), shared)?,
+                Err(why) => {
+                    // A variant this build no longer parses (downgrade,
+                    // edited store): fall back to the default lowering
+                    // rather than failing the request.
+                    eprintln!(
+                        "serve: ignoring memoized variant {:?} for {memo_key}: {why}",
+                        e.variant
+                    );
+                    capture_with(key, builder, ctx, None, shared)?
+                }
+            };
+            pl.memo_hits.fetch_add(1, Ordering::Relaxed);
+            pl.watch(memo_key, &plan);
+            return Ok(plan);
         }
+    }
+    pl.explorations.fetch_add(1, Ordering::Relaxed);
+    let default_plan = capture_with(key, builder, ctx, None, shared)?;
+    let out_elems = default_plan.out_len().max(1) as f64;
+    // (plan, estimated total ns) per candidate; the default lowering is
+    // always candidate 0, so a failed alternative capture never loses
+    // the kernel.
+    let est_default = estimate_plan_ns(&pl.cost, &default_plan);
+    let mut candidates: Vec<(Arc<CompiledPlan>, f64)> = vec![(default_plan, est_default)];
+    if let Some((best, _rows, _nnz)) = candidates[0].0.seg_info() {
+        for forced in explore::seg_candidates(best) {
+            if forced == SegPath::Auto {
+                continue; // candidate 0 already is the default dispatch
+            }
+            let t = Tuning { seg_path: forced, ..base };
+            if let Ok(p) = capture_with(key, builder, ctx, Some(t), shared) {
+                let est = estimate_plan_ns(&pl.cost, &p);
+                candidates.push((p, est));
+            }
+        }
+    }
+    let mut winner = 0usize;
+    let mut best_ns = f64::INFINITY;
+    if candidates.len() > 1 {
+        // Only a real race gets probed: a single-candidate exploration
+        // keeps its replay accounting untouched (the drift scan seeds
+        // the measurement from runtime feedback instead).
+        let args = cache::placeholders(key);
+        for (i, (p, _)) in candidates.iter().enumerate() {
+            let ns = probe_ns(p, &args);
+            if ns < best_ns {
+                best_ns = ns;
+                winner = i;
+            }
+        }
+    }
+    let (plan, est_total) = candidates.swap_remove(winner);
+    let measured = if best_ns.is_finite() { best_ns / out_elems } else { 0.0 };
+    let generation = if reexplore {
+        pl.swaps.fetch_add(1, Ordering::Relaxed);
+        pl.generation.fetch_add(1, Ordering::Relaxed) + 1
+    } else {
+        pl.generation.load(Ordering::Relaxed)
     };
-    relock(&shared.cache).insert(key.clone(), plan.clone());
-    Ok((plan, false))
+    relock(&pl.store).memo.insert(
+        memo_key.to_string(),
+        MemoEntry {
+            variant: plan.variant().to_string(),
+            est_ns_per_elem: est_total / out_elems,
+            measured_ns_per_elem: measured,
+            generation,
+            stale: false,
+        },
+    );
+    pl.persist();
+    pl.watch(memo_key, &plan);
+    Ok(plan)
 }
 
 /// Execute one same-plan group as a single fork-join sweep: request `r`
@@ -1604,20 +2044,87 @@ fn finish(
     }
 }
 
+/// Runtime-feedback drift scan: walk the watched plans, derive each
+/// one's measured ns/output-element from its accumulated replay
+/// profile, EWMA it into the memo, and flag entries whose measurement
+/// drifted ≥2× from the estimate ([`explore::drifted`]) — the next
+/// resolution of a flagged key re-explores and hot-swaps. Needs tape
+/// profiling on (`ObsConfig::tape_profile`); without it the profiles
+/// are empty and the scan is a no-op.
+fn planner_scan(shared: &Shared) {
+    let Some(pl) = &shared.planner else { return };
+    let measurements: Vec<(String, f64)> = {
+        let watched = relock(&pl.watched);
+        watched
+            .iter()
+            .filter_map(|(k, weak)| {
+                let plan = weak.upgrade()?; // evicted plans drop off
+                let replays = plan.arena_stats().replays;
+                if replays < DRIFT_MIN_REPLAYS {
+                    return None;
+                }
+                let total_ns: u64 =
+                    plan.profile_snapshot().classes.iter().map(|c| c.ns).sum();
+                if total_ns == 0 {
+                    return None; // profiling off
+                }
+                let elems = (replays * plan.out_len().max(1) as u64) as f64;
+                Some((k.clone(), total_ns as f64 / elems))
+            })
+            .collect()
+    };
+    if measurements.is_empty() {
+        return;
+    }
+    let mut store = relock(&pl.store);
+    for (k, measured) in measurements {
+        if let Some(e) = store.memo.entries.get_mut(&k) {
+            // Seed from the first real measurement (a single-candidate
+            // exploration records no probe time); averaging against an
+            // initial zero would spend the first scans below the drift
+            // floor and trip a spurious re-exploration.
+            e.measured_ns_per_elem = if e.measured_ns_per_elem <= 0.0 {
+                measured
+            } else {
+                EWMA_OLD * e.measured_ns_per_elem + (1.0 - EWMA_OLD) * measured
+            };
+            if !e.stale && explore::drifted(e.est_ns_per_elem, e.measured_ns_per_elem) {
+                e.stale = true;
+            }
+        }
+    }
+}
+
 /// How often the observability listener's accept thread runs the SLO /
-/// respawn tick. Overridable via `PALLAS_OBS_TICK_MS` (tests tighten
-/// it to observe burn gauges quickly).
+/// respawn / planner-drift tick. Overridable via `PALLAS_OBS_TICK_MS`
+/// (tests tighten it to observe burn gauges quickly); a malformed
+/// value is rejected loudly, never silently swallowed.
 fn obs_tick_period() -> Duration {
-    std::env::var("PALLAS_OBS_TICK_MS")
-        .ok()
-        .and_then(|v| v.trim().parse::<u64>().ok())
-        .map(Duration::from_millis)
-        .unwrap_or(Duration::from_millis(250))
+    match std::env::var("PALLAS_OBS_TICK_MS") {
+        Ok(raw) => match parse_tick_ms(&raw) {
+            Ok(ms) => Duration::from_millis(ms),
+            Err(why) => {
+                eprintln!("arbb: ignoring PALLAS_OBS_TICK_MS={raw:?}: {why}; using 250ms");
+                Duration::from_millis(250)
+            }
+        },
+        Err(_) => Duration::from_millis(250),
+    }
+}
+
+/// Strict `PALLAS_OBS_TICK_MS` parser: a positive millisecond count or
+/// an error saying why the value was rejected.
+pub(crate) fn parse_tick_ms(raw: &str) -> std::result::Result<u64, String> {
+    match raw.trim().parse::<u64>() {
+        Ok(0) => Err("tick period must be >= 1 ms".into()),
+        Ok(ms) => Ok(ms),
+        Err(e) => Err(format!("not a millisecond count ({e})")),
+    }
 }
 
 /// One observability tick: advance the SLO burn-rate windows (freezing
-/// a flight dump on each fresh trip) and scan the pools for worker
-/// respawns since the last tick.
+/// a flight dump on each fresh trip), scan the pools for worker
+/// respawns since the last tick, and run the planner's drift scan.
 fn obs_tick(client: &Client) {
     let shared = &client.shared;
     for s in shared.stats.slo_tick() {
@@ -1643,6 +2150,7 @@ fn obs_tick(client: &Client) {
     if respawned > seen {
         shared.flight.record(FlightEventKind::WorkerRespawn, NO_KERNEL, 0, respawned);
     }
+    planner_scan(shared);
 }
 
 /// A plan crossed its failure threshold and entered quarantine: log
@@ -1892,5 +2400,16 @@ mod tests {
         let r = Responder { slot: slot.clone(), sent: false };
         drop(r);
         assert!(matches!(slot.take_blocking(), Err(ServeError::Shutdown)));
+    }
+
+    #[test]
+    fn obs_tick_parser_is_strict() {
+        assert_eq!(parse_tick_ms("50"), Ok(50));
+        assert_eq!(parse_tick_ms(" 250 "), Ok(250));
+        assert!(parse_tick_ms("0").is_err());
+        assert!(parse_tick_ms("fast").is_err());
+        assert!(parse_tick_ms("").is_err());
+        assert!(parse_tick_ms("-5").is_err());
+        assert!(parse_tick_ms("1.5").is_err());
     }
 }

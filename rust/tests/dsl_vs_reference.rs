@@ -119,7 +119,7 @@ fn engines_equivalent_on_long_program() {
     let par = run(Options {
         opt_level: OptLevel::O3,
         num_workers: 3,
-        grain: 128,
+        tuning: arbb_rs::coordinator::engine::tuning::Tuning { grain: 128, ..Default::default() },
         ..Default::default()
     });
     let nofuse = run(Options { fusion: false, ..Default::default() });

@@ -1,0 +1,237 @@
+//! End-to-end tests for the cost-based plan explorer: exploration on a
+//! cold start, memoized warm restarts from the persistent plan store
+//! (zero explorations, zero calibration), runtime feedback through the
+//! drift scan, and the drift-triggered hot swap — all with bit-exact
+//! serving results throughout.
+
+use std::time::Duration;
+
+use arbb_rs::serve::{Arg, Client, ObsConfig, ServeConfig, ServeError, Server, Value};
+use arbb_rs::sparse::banded_spd;
+use arbb_rs::util::assert_allclose;
+
+/// Is a fault spec installed (chaos CI leg)? Exact planner accounting
+/// only holds on fault-free runs; correctness must hold regardless.
+fn chaos() -> bool {
+    arbb_rs::obs::faults::enabled()
+}
+
+/// `client.call`, riding out chaos-injected failures (same retry
+/// discipline as `serve_integration.rs`).
+fn call_ok(client: &Client, kernel: &str, args: Vec<Arg>) -> Vec<f64> {
+    for _ in 0..10_000 {
+        match client.call(kernel, args.clone()) {
+            Ok(v) => return v,
+            Err(e) if chaos() && e.is_injected() => continue,
+            Err(ServeError::Quarantined { retry_in_s, .. }) if chaos() => {
+                std::thread::sleep(Duration::from_secs_f64(retry_in_s.clamp(0.001, 0.6)));
+            }
+            Err(e) => panic!("unexpected serve error from '{kernel}': {e}"),
+        }
+    }
+    panic!("chaos retry budget exhausted for '{kernel}'");
+}
+
+/// A per-test temp path for the plan store (tests share one process, so
+/// paths must not collide; the env var is deliberately NOT used here —
+/// that leg is exercised by CI to keep test processes hermetic).
+fn store_path(test: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("pallas-planner-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{test}.store")).to_string_lossy().into_owned()
+}
+
+/// A serial server with the planner on, tape profiling for runtime
+/// feedback, and a baked-structure spmv kernel (the kernel class whose
+/// segmented-reduction lowering the explorer actually races).
+fn spmv_server(store: Option<String>) -> Server {
+    let m = banded_spd(96, 5, 3);
+    let cfg = ServeConfig {
+        workers: 1,
+        plan_store: store,
+        obs: ObsConfig { tape_profile: true, ..ObsConfig::default() },
+        ..ServeConfig::serial()
+    };
+    Server::builder(cfg)
+        .kernel("spmv", move |ctx, params| {
+            let a = arbb_rs::euroben::mod2as::bind_csr(ctx, &m);
+            let x = params[0].vec1();
+            Value::Vec(arbb_rs::euroben::mod2as::arbb_spmv1(ctx, &a, &x))
+        })
+        .start()
+}
+
+/// Reference answers for the same matrix.
+fn reference(seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let m = banded_spd(96, 5, 3);
+    let x = m.random_x(seed);
+    let want = m.spmv_alloc(&x);
+    (x, want)
+}
+
+/// Cold start: the explorer races the segmented lowerings, serves
+/// bit-correct answers, and memoizes exactly one decision for the
+/// (kernel, shape, backend) triple.
+#[test]
+fn cold_start_explores_and_memoizes() {
+    let server = spmv_server(None);
+    let client = server.client();
+    for seed in 0..3 {
+        let (x, want) = reference(seed);
+        let got = call_ok(&client, "spmv", vec![Arg::vec(x)]);
+        assert_allclose(&got, &want, 1e-11, 1e-12, "explored spmv");
+    }
+    let st = client.planner_stats().expect("planner is on by default");
+    assert!(!st.warm_start, "no store configured, so this is a cold start");
+    assert!(st.calib_secs > 0.0, "cold start must calibrate");
+    if !chaos() {
+        assert_eq!(st.explorations, 1, "one exploration for the one (kernel, shape)");
+        assert_eq!(st.memo_len, 1);
+        assert_eq!(st.swaps, 0);
+    }
+    let decisions = client.planner_decisions();
+    assert!(!decisions.is_empty());
+    assert!(decisions[0].key.starts_with("spmv|"), "{}", decisions[0].key);
+    assert!(decisions[0].est_ns_per_elem > 0.0, "{decisions:?}");
+}
+
+/// The tentpole acceptance path: a server restarted onto a warm plan
+/// store reaches steady state with ZERO explorations, ZERO calibration
+/// time, and the memoized lowering — while serving identical answers.
+#[test]
+fn warm_store_restart_skips_calibration_and_exploration() {
+    let path = store_path("warm-restart");
+    let (x, want) = reference(7);
+
+    // Cold run: calibrate, explore, persist.
+    let cold_answer;
+    {
+        let server = spmv_server(Some(path.clone()));
+        let client = server.client();
+        cold_answer = call_ok(&client, "spmv", vec![Arg::vec(x.clone())]);
+        assert_allclose(&cold_answer, &want, 1e-11, 1e-12, "cold serve");
+        let st = client.planner_stats().unwrap();
+        assert!(!st.warm_start);
+        if !chaos() {
+            assert!(st.explorations >= 1);
+        }
+    }
+
+    // Restarted server, same store: warm start end to end.
+    let server = spmv_server(Some(path.clone()));
+    let client = server.client();
+    let st0 = client.planner_stats().unwrap();
+    assert!(st0.warm_start, "store must supply calibration");
+    assert_eq!(st0.calib_secs, 0.0, "warm start must not re-calibrate");
+    if !chaos() {
+        assert!(st0.memo_len >= 1, "memo must come back from disk");
+    }
+    // Steady state: every resolution is a memo hit, never an exploration.
+    for round in 0..10 {
+        let got = call_ok(&client, "spmv", vec![Arg::vec(x.clone())]);
+        assert_eq!(got, cold_answer, "round {round}: warm plan must replay bit-identically");
+    }
+    let st = client.planner_stats().unwrap();
+    assert_eq!(st.explorations, 0, "a warm store means zero exploration re-runs");
+    if !chaos() {
+        assert!(st.memo_hits >= 1, "the capture must have applied the memoized variant");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A corrupt store must be ignored wholesale: the server logs, explores
+/// fresh, and overwrites the store with a clean one.
+#[test]
+fn corrupt_store_falls_back_to_fresh_exploration() {
+    let path = store_path("corrupt-fallback");
+    std::fs::write(&path, "# pallas-plan-store v1\ngarbage without a checksum\n").unwrap();
+    let server = spmv_server(Some(path.clone()));
+    let client = server.client();
+    let st = client.planner_stats().unwrap();
+    assert!(!st.warm_start, "a corrupt store must not warm-start anything");
+    assert!(st.calib_secs > 0.0);
+    let (x, want) = reference(3);
+    let got = call_ok(&client, "spmv", vec![Arg::vec(x)]);
+    assert_allclose(&got, &want, 1e-11, 1e-12, "post-corruption serve");
+    // The store was rewritten clean (calibration persists immediately).
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("checksum\t"), "rewritten store is well-formed: {text}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Runtime feedback: replay profiles flow through the drift scan into
+/// the memo's measured ns/element.
+#[test]
+fn drift_scan_feeds_measurements_into_the_memo() {
+    let server = spmv_server(None);
+    let client = server.client();
+    let (x, want) = reference(1);
+    // Enough replays to cross the scan's trust threshold.
+    for _ in 0..12 {
+        let got = call_ok(&client, "spmv", vec![Arg::vec(x.clone())]);
+        assert_allclose(&got, &want, 1e-11, 1e-12, "feedback serve");
+    }
+    client.planner_tick();
+    if !chaos() {
+        let d = &client.planner_decisions()[0];
+        assert!(
+            d.measured_ns_per_elem > 0.0,
+            "the drift scan must record a runtime measurement: {d:?}"
+        );
+    }
+}
+
+/// The hot-swap loop, triggered deterministically: invalidating a
+/// kernel's decisions forces the next resolution to re-explore and swap
+/// the cached plan, bumping the plan generation — with identical
+/// serving results before and after.
+#[test]
+fn invalidation_triggers_reexploration_and_hot_swap() {
+    let server = spmv_server(None);
+    let client = server.client();
+    let (x, want) = reference(9);
+    let before = call_ok(&client, "spmv", vec![Arg::vec(x.clone())]);
+    assert_allclose(&before, &want, 1e-11, 1e-12, "pre-swap serve");
+
+    let st0 = client.planner_stats().unwrap();
+    let flagged = client.planner_invalidate("spmv");
+    if !chaos() {
+        assert_eq!(flagged, 1, "one decision to flag");
+    }
+    // Next resolution re-explores and hot-swaps. The probe race can
+    // crown a *different* segmented lowering, whose summation order may
+    // differ in the last bits — correctness vs the reference is the
+    // invariant, not bitwise sameness.
+    let after = call_ok(&client, "spmv", vec![Arg::vec(x.clone())]);
+    assert_allclose(&after, &want, 1e-11, 1e-12, "post-swap serve");
+    let st = client.planner_stats().unwrap();
+    if !chaos() {
+        assert!(st.swaps >= 1, "invalidation must produce a hot swap: {st:?}");
+        assert!(st.generation > st0.generation, "the plan generation must bump");
+        let d = &client.planner_decisions()[0];
+        assert_eq!(d.generation, st.generation, "decision records the new generation");
+    }
+}
+
+/// Planner off: no stats, no decisions, serving still works.
+#[test]
+fn planner_can_be_disabled() {
+    let m = banded_spd(64, 5, 3);
+    let m2 = m.clone();
+    let cfg = ServeConfig { workers: 1, planner: false, ..ServeConfig::serial() };
+    let server = Server::builder(cfg)
+        .kernel("spmv", move |ctx, params| {
+            let a = arbb_rs::euroben::mod2as::bind_csr(ctx, &m2);
+            let x = params[0].vec1();
+            Value::Vec(arbb_rs::euroben::mod2as::arbb_spmv1(ctx, &a, &x))
+        })
+        .start();
+    let client = server.client();
+    let x = m.random_x(2);
+    let want = m.spmv_alloc(&x);
+    let got = call_ok(&client, "spmv", vec![Arg::vec(x)]);
+    assert_allclose(&got, &want, 1e-11, 1e-12, "planner-off serve");
+    assert!(client.planner_stats().is_none());
+    assert!(client.planner_decisions().is_empty());
+    assert_eq!(client.planner_invalidate("spmv"), 0);
+}

@@ -1,0 +1,178 @@
+//! File-level property tests for the persistent plan store
+//! (`runtime::planstore`): randomized round-trips must be bit-identical,
+//! and *any* corruption — flipped bytes, truncation, a version bump with
+//! a recomputed checksum — must be a clean `Err`, never a panic and
+//! never a half-loaded store.
+
+use arbb_rs::coordinator::passes::explore::MemoEntry;
+use arbb_rs::obs::profile::N_CLASSES;
+use arbb_rs::runtime::PlanStore;
+use arbb_rs::util::XorShift64;
+
+/// Mirror of the store's FNV-1a 64 (the format doc pins the constants),
+/// used to craft a store whose checksum is *valid* but whose header is
+/// not — proving the version check fires independently of the checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A random printable-ASCII token with no tabs/newlines (the only
+/// characters the TSV format reserves).
+fn token(rng: &mut XorShift64, len: usize) -> String {
+    const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_.|:;=x-";
+    (0..len).map(|_| ALPHA[rng.below(ALPHA.len())] as char).collect()
+}
+
+/// An adversarial non-negative finite f64: mixes integers, tiny and
+/// huge magnitudes, and long mantissas that stress shortest-round-trip
+/// formatting.
+fn rand_ns(rng: &mut XorShift64) -> f64 {
+    match rng.below(4) {
+        0 => rng.below(1000) as f64,
+        1 => rng.next_f64() * 1e-12,
+        2 => rng.next_f64() * 1e9,
+        _ => f64::from_bits(rng.next_u64() & 0x7fef_ffff_ffff_ffff), // finite, ≥ 0
+    }
+}
+
+fn rand_store(rng: &mut XorShift64) -> PlanStore {
+    let mut s = PlanStore::default();
+    for b in 0..1 + rng.below(3) {
+        let mut ns = [0.0f64; N_CLASSES];
+        for v in ns.iter_mut() {
+            *v = rand_ns(rng);
+        }
+        s.calib.insert(format!("backend{b}"), ns);
+    }
+    for _ in 0..rng.below(8) {
+        let key = format!(
+            "{}|{}|{}",
+            token(rng, 1 + rng.below(12)),
+            token(rng, 1 + rng.below(6)),
+            token(rng, 1 + rng.below(16))
+        );
+        s.memo.insert(
+            key,
+            MemoEntry {
+                variant: if rng.below(3) == 0 { "-".into() } else { token(rng, 1 + rng.below(20)) },
+                est_ns_per_elem: rand_ns(rng),
+                measured_ns_per_elem: rand_ns(rng),
+                generation: rng.next_u64() % 1000,
+                stale: rng.below(2) == 0,
+            },
+        );
+    }
+    s
+}
+
+#[test]
+fn randomized_round_trips_are_bit_identical() {
+    let mut rng = XorShift64::new(0x9e3779b97f4a7c15);
+    for case in 0..200 {
+        let s = rand_store(&mut rng);
+        let text = s.to_text();
+        let back = PlanStore::from_text(&text)
+            .unwrap_or_else(|e| panic!("case {case}: round trip failed: {e}"));
+        assert_eq!(back.calib.len(), s.calib.len(), "case {case}");
+        for (backend, ns) in &s.calib {
+            let got = back.calib.get(backend).unwrap_or_else(|| panic!("case {case}: {backend}"));
+            for (i, (a, b)) in ns.iter().zip(got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {case}: calib {backend} class {i}");
+            }
+        }
+        assert_eq!(back.memo.len(), s.memo.len(), "case {case}");
+        for (key, e) in &s.memo.entries {
+            let got = back.memo.get(key).unwrap_or_else(|| panic!("case {case}: key {key}"));
+            assert_eq!(got.variant, e.variant, "case {case}");
+            assert_eq!(got.est_ns_per_elem.to_bits(), e.est_ns_per_elem.to_bits(), "case {case}");
+            assert_eq!(
+                got.measured_ns_per_elem.to_bits(),
+                e.measured_ns_per_elem.to_bits(),
+                "case {case}"
+            );
+            assert_eq!(got.generation, e.generation, "case {case}");
+            assert!(!got.stale, "case {case}: staleness must not persist");
+        }
+        // Serialising the loaded copy reproduces the text byte-for-byte.
+        assert_eq!(back.to_text(), text, "case {case}: text fixpoint");
+    }
+}
+
+#[test]
+fn random_byte_flips_are_rejected_without_panic() {
+    let mut rng = XorShift64::new(7);
+    let text = rand_store(&mut rng).to_text();
+    // Flip bytes of the checksummed body only: edits to the checksum
+    // line itself can be semantically neutral (hex case, trailing
+    // whitespace), but every body flip must trip the FNV check.
+    let body_len = text.rfind("checksum\t").expect("store has a checksum line");
+    for _ in 0..300 {
+        let pos = rng.below(body_len);
+        let mut bytes = text.clone().into_bytes();
+        let mask = 1u8 << rng.below(8);
+        bytes[pos] ^= mask;
+        // A flip that lands outside ASCII may not even be UTF-8 any
+        // more; `read_to_string` would reject that on disk, which is
+        // the same "corrupt store" outcome.
+        let Ok(corrupt) = String::from_utf8(bytes) else { continue };
+        assert!(
+            PlanStore::from_text(&corrupt).is_err(),
+            "flip at byte {pos} (mask {mask:#x}) must be rejected"
+        );
+    }
+}
+
+#[test]
+fn every_truncation_point_is_rejected() {
+    let mut rng = XorShift64::new(11);
+    let text = rand_store(&mut rng).to_text();
+    for cut in 0..text.len() {
+        if !text.is_char_boundary(cut) {
+            continue;
+        }
+        let prefix = &text[..cut];
+        assert!(PlanStore::from_text(prefix).is_err(), "truncation at {cut} must be rejected");
+    }
+}
+
+#[test]
+fn version_bump_with_valid_checksum_is_rejected() {
+    // The checksum is correct, so only the header check can save us.
+    let mut body = String::from("# pallas-plan-store v2\n");
+    let sum = fnv1a(body.as_bytes());
+    body.push_str(&format!("checksum\t{sum:016x}\n"));
+    let err = PlanStore::from_text(&body).unwrap_err();
+    assert!(err.contains("version"), "want a version error, got: {err}");
+}
+
+#[test]
+fn corrupt_file_on_disk_loads_as_err_not_panic() {
+    let dir = std::env::temp_dir().join(format!("pallas-planstore-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.store");
+
+    let mut rng = XorShift64::new(13);
+    let s = rand_store(&mut rng);
+    s.save(&path).unwrap();
+    assert!(PlanStore::load(&path).unwrap().is_some(), "clean store loads");
+
+    // Truncate the file in place to half its size.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut cut = text.len() / 2;
+    while !text.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    std::fs::write(&path, &text[..cut]).unwrap();
+    assert!(PlanStore::load(&path).is_err(), "truncated store is an error");
+
+    // Arbitrary garbage.
+    std::fs::write(&path, b"not a plan store at all\n").unwrap();
+    assert!(PlanStore::load(&path).is_err(), "garbage store is an error");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

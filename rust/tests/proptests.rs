@@ -7,6 +7,7 @@
 //! soundness across virtual views, in-place donation correctness, CSR
 //! structure preservation, FFT linearity.)
 
+use arbb_rs::coordinator::engine::tuning::Tuning;
 use arbb_rs::coordinator::{Context, Options, OptLevel, Vec1};
 use arbb_rs::sparse::random_csr;
 use arbb_rs::util::{assert_allclose, XorShift64};
@@ -169,7 +170,12 @@ fn engines_agree_on_random_programs() {
         let want = eval_host(&g);
         let configs = [
             Options { opt_level: OptLevel::O2, ..Default::default() },
-            Options { opt_level: OptLevel::O3, num_workers: 3, grain: 16, ..Default::default() },
+            Options {
+                opt_level: OptLevel::O3,
+                num_workers: 3,
+                tuning: Tuning { grain: 16, ..Default::default() },
+                ..Default::default()
+            },
             Options { fusion: false, ..Default::default() },
             Options { in_place: false, ..Default::default() },
             Options { cse: true, ..Default::default() },

@@ -1,12 +1,14 @@
 //! Integration tests of the virtual-time scaling simulator against the
 //! paper's qualitative claims (the *shape* expectations of DESIGN.md §4).
 
+use arbb_rs::coordinator::engine::tuning::Tuning;
 use arbb_rs::coordinator::{Context, MachineModel, Options};
 use arbb_rs::euroben::{mod2am, mod2as};
 use arbb_rs::util::XorShift64;
 
 fn recording_ctx() -> Context {
-    Context::with_options(Options { record: true, grain: 1024, ..Default::default() })
+    let tuning = Tuning { grain: 1024, ..Default::default() };
+    Context::with_options(Options { record: true, tuning, ..Default::default() })
 }
 
 fn model() -> MachineModel {

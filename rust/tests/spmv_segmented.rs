@@ -97,7 +97,7 @@ fn check_all_paths(m: &Csr, seed: u64) {
     // Parallel panels never change a row.
     let pctx = Context::parallel(4);
     let mut o = pctx.options();
-    o.grain = 32;
+    o.tuning.grain = 32;
     pctx.set_options(o);
     let pa = bind_csr(&pctx, m);
     let px = pctx.bind1(&x);
